@@ -1,0 +1,124 @@
+//! Figure 7: synchronous vs asynchronous data-parallel training of an MLP
+//! across N virtual devices — replicas compute gradients on shards,
+//! combined synchronously (one averaged update) or applied asynchronously
+//! (one client thread per replica).
+//!
+//!     cargo run --release --example data_parallel -- [replicas] [steps]
+
+use rustflow::models;
+use rustflow::optim::Optimizer;
+use rustflow::replicate;
+use rustflow::{data, GraphBuilder, Session, SessionOptions, Tensor};
+use std::sync::Arc;
+
+fn main() -> rustflow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let replicas: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(4);
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let (dim, classes, per_replica_batch) = (32usize, 10usize, 32usize);
+
+    for mode in ["sync", "async"] {
+        let mut b = GraphBuilder::new();
+        // Shared variables on device 0 (§7: "many replicas … collaborating
+        // to update a set of shared parameters").
+        let (vars, tower_losses) = build_replicated_model(
+            &mut b,
+            replicas,
+            dim,
+            classes,
+            per_replica_batch,
+        )?;
+        let inits: Vec<String> =
+            b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let opt = Optimizer::sgd(0.1);
+
+        let t0 = std::time::Instant::now();
+        let final_loss = match mode {
+            "sync" => {
+                let train = replicate::sync_data_parallel(&mut b, &vars, &tower_losses, &opt)?;
+                let tname = b.graph.node(train).name.clone();
+                let lname = format!("{}:0", b.graph.node(tower_losses[0].node).name);
+                let sess = Session::new(
+                    b.into_graph(),
+                    SessionOptions { devices: replicas, ..Default::default() },
+                );
+                sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+                let mut loss = f32::NAN;
+                for _ in 0..steps {
+                    loss = sess.run(&[], &[&lname], &[&tname])?[0].scalar_value_f32()?;
+                }
+                loss
+            }
+            _ => {
+                let trains =
+                    replicate::async_data_parallel(&mut b, &vars, &tower_losses, &opt)?;
+                let tnames: Vec<String> =
+                    trains.iter().map(|&t| b.graph.node(t).name.clone()).collect();
+                let lname = format!("{}:0", b.graph.node(tower_losses[0].node).name);
+                let sess = Arc::new(Session::new(
+                    b.into_graph(),
+                    SessionOptions { devices: replicas, ..Default::default() },
+                ));
+                sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+                // One client thread per replica (Fig 7 bottom).
+                std::thread::scope(|scope| {
+                    for name in &tnames {
+                        let sess = Arc::clone(&sess);
+                        scope.spawn(move || {
+                            for _ in 0..steps {
+                                sess.run_targets(&[name]).unwrap();
+                            }
+                        });
+                    }
+                });
+                sess.run(&[], &[&lname], &[])?[0].scalar_value_f32()?
+            }
+        };
+        let dt = t0.elapsed();
+        let total_steps = if mode == "sync" { steps } else { steps * replicas };
+        println!(
+            "{mode:>5}: {replicas} replicas, {total_steps} updates in {dt:?} \
+             ({:.1} updates/s), final tower loss {final_loss:.4}",
+            total_steps as f64 / dt.as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn build_replicated_model(
+    b: &mut GraphBuilder,
+    replicas: usize,
+    dim: usize,
+    classes: usize,
+    batch: usize,
+) -> rustflow::Result<(Vec<rustflow::Endpoint>, Vec<rustflow::Endpoint>)> {
+    let vars = b.with_device("/device:cpu:0", |b| -> rustflow::Result<_> {
+        // Dummy input only to create the shared variables; towers re-read them.
+        let x = b.constant(Tensor::zeros(rustflow::DType::F32, vec![1, dim])?);
+        let (_, vars) = models::mlp(b, x, &[dim, 64, classes], 11)?;
+        Ok(vars)
+    })?;
+    // Each tower gets its own data shard as constants.
+    let examples = data::synthetic_classification(replicas * batch, dim, classes, 0.3, 5);
+    let losses = replicate::build_towers(
+        b,
+        replicas,
+        |i| format!("/device:cpu:{i}"),
+        |b, i| {
+            let shard = &examples[i * batch..(i + 1) * batch];
+            let (f, l) = data::batch_tensors(shard)?;
+            let x = b.constant(f);
+            let labels = b.constant(data::one_hot(l.as_i32()?, classes));
+            // Rebuild the forward pass reading the SHARED variables.
+            let mut h = x;
+            let n_layers = vars.len() / 2;
+            for li in 0..n_layers {
+                let mm = b.matmul(h, vars[2 * li]);
+                let pre = b.bias_add(mm, vars[2 * li + 1]);
+                h = if li + 1 < n_layers { b.relu(pre) } else { pre };
+            }
+            models::xent_loss(b, h, labels)
+        },
+    )?;
+    Ok((vars, losses))
+}

@@ -1,0 +1,229 @@
+//! Figure 3 (right): the distributed structure — a master process driving
+//! worker processes over TCP, with §3.3 fault tolerance: periodic health
+//! checks, checkpointing, and restart-recovery.
+//!
+//! Run everything in one command (spawns worker subprocesses):
+//!     cargo run --release --example distributed
+//! Or run roles manually:
+//!     cargo run --release --example distributed -- worker 0 127.0.0.1:4400 127.0.0.1:4401
+//!     cargo run --release --example distributed -- worker 1 127.0.0.1:4400 127.0.0.1:4401
+//!     cargo run --release --example distributed -- master 127.0.0.1:4400 127.0.0.1:4401
+
+use rustflow::distributed::{ClusterSpec, DistMaster, DistMasterOptions, Worker};
+use rustflow::graph::AttrValue;
+use rustflow::optim::Optimizer;
+use rustflow::{models, GraphBuilder, Tensor};
+
+fn main() -> rustflow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("worker") => {
+            let task: usize = args[1].parse().unwrap();
+            let addrs: Vec<String> = args[2..].to_vec();
+            let cluster = ClusterSpec::new(addrs.clone(), 1);
+            let w = Worker::new(task, cluster, 2);
+            w.serve(&addrs[task])?;
+            println!("worker {task} serving on {}", addrs[task]);
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        Some("master") => {
+            let addrs: Vec<String> = args[1..].to_vec();
+            run_master(ClusterSpec::new(addrs, 1))
+        }
+        _ => {
+            // Self-contained demo: spawn two worker subprocesses, then act
+            // as master; kill worker 1 mid-training and recover.
+            let exe = std::env::current_exe().unwrap();
+            let ports = [pick_port(), pick_port()];
+            let addrs: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+            let mut children: Vec<std::process::Child> = (0..2)
+                .map(|t| {
+                    std::process::Command::new(&exe)
+                        .arg("worker")
+                        .arg(t.to_string())
+                        .args(&addrs)
+                        .spawn()
+                        .expect("spawn worker")
+                })
+                .collect();
+            let cluster = ClusterSpec::new(addrs.clone(), 1);
+            wait_healthy(&cluster, 50);
+            let result = run_master_with_failure(cluster, &mut children, &exe, &addrs);
+            for mut c in children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+            result
+        }
+    }
+}
+
+fn build_graph() -> (GraphBuilder, Names) {
+    let mut b = GraphBuilder::new();
+    let ckpt = std::env::temp_dir()
+        .join(format!("rustflow-dist-example-{}.ckpt", std::process::id()))
+        .to_string_lossy()
+        .to_string();
+    // Parameters on worker 0, loss computation on worker 1 (Fig 3: devices
+    // spread over processes).
+    let (x, vars) = b.with_device("/job:worker/task:0", |b| {
+        let x = b.constant(Tensor::fill_f32(vec![16, 8], 0.25));
+        let (_, vars) = models::mlp(b, x, &[8, 16, 4], 21).unwrap();
+        (x, vars)
+    });
+    let _ = x;
+    let loss = b.with_device("/job:worker/task:1", |b| {
+        // Pull the logits across the wire and compute a pseudo-loss.
+        let mut h = b.constant(Tensor::fill_f32(vec![16, 8], 0.25));
+        for li in 0..vars.len() / 2 {
+            let mm = b.matmul(h, vars[2 * li]);
+            let pre = b.bias_add(mm, vars[2 * li + 1]);
+            h = if li + 1 < vars.len() / 2 { b.relu(pre) } else { pre };
+        }
+        let sq = b.square(h);
+        b.reduce_mean(sq, None)
+    });
+    let train = Optimizer::sgd(0.05).minimize(&mut b, loss, &vars).unwrap();
+    // Checkpoint plumbing (§3.3).
+    let var_names: Vec<String> =
+        vars.iter().map(|v| b.graph.node(v.node).name.clone()).collect();
+    let save = b
+        .op(
+            "Save",
+            "save",
+            vars.clone(),
+            vec![
+                ("tensor_names", AttrValue::ListStr(var_names.clone())),
+                ("path", AttrValue::Str(ckpt.clone())),
+            ],
+        )
+        .unwrap();
+    let restore = b
+        .op(
+            "Restore",
+            "restore",
+            vec![],
+            vec![
+                ("tensor_names", AttrValue::ListStr(var_names.clone())),
+                (
+                    "out_types",
+                    AttrValue::ListType(vec![rustflow::DType::F32; vars.len()]),
+                ),
+                ("path", AttrValue::Str(ckpt)),
+            ],
+        )
+        .unwrap();
+    let restore_assigns: Vec<_> = vars
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            b.assign(v, rustflow::Endpoint::new(restore, i)).unwrap()
+        })
+        .collect();
+    let restore_all = b.group("restore_all", restore_assigns);
+    let names = Names {
+        loss: format!("{}:0", b.graph.node(loss.node).name),
+        train: b.graph.node(train).name.clone(),
+        save: b.graph.node(save).name.clone(),
+        restore: b.graph.node(restore_all).name.clone(),
+        inits: b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect(),
+    };
+    (b, names)
+}
+
+struct Names {
+    loss: String,
+    train: String,
+    save: String,
+    restore: String,
+    inits: Vec<String>,
+}
+
+fn run_master(cluster: ClusterSpec) -> rustflow::Result<()> {
+    let (b, names) = build_graph();
+    let master = DistMaster::new(cluster, b.into_graph(), DistMasterOptions::default());
+    master.health_check()?;
+    master.run_targets(&names.inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+    for step in 0..20 {
+        let out = master.run(&[], &[&names.loss], &[&names.train])?;
+        if step % 5 == 0 {
+            println!("step {step}: loss {}", out[0].scalar_value_f32()?);
+        }
+    }
+    master.run_targets(&[&names.save])?;
+    println!("checkpoint saved; done");
+    Ok(())
+}
+
+fn run_master_with_failure(
+    cluster: ClusterSpec,
+    children: &mut [std::process::Child],
+    exe: &std::path::Path,
+    addrs: &[String],
+) -> rustflow::Result<()> {
+    let (b, names) = build_graph();
+    let master = DistMaster::new(cluster.clone(), b.into_graph(), DistMasterOptions::default());
+    master.health_check()?;
+    println!("cluster healthy: {} workers", cluster.num_tasks());
+    master.run_targets(&names.inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+
+    for step in 0..10 {
+        let out = master.run(&[], &[&names.loss], &[&names.train])?;
+        println!("step {step}: loss {:.5}", out[0].scalar_value_f32()?);
+    }
+    master.run_targets(&[&names.save])?;
+    println!("checkpointed at step 10");
+
+    // §3.3 failure injection: kill worker 1.
+    children[1].kill().ok();
+    children[1].wait().ok();
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    match master.health_check() {
+        Err(e) => println!("health check detected failure: {e}"),
+        Ok(()) => println!("WARNING: failure not detected"),
+    }
+    let err = master.run(&[], &[&names.loss], &[&names.train]);
+    println!("step during failure: {:?}", err.err().map(|e| e.code));
+
+    // Restart the worker ("the entire graph execution is aborted and
+    // restarted from scratch" — variables recover from the checkpoint).
+    children[1] = std::process::Command::new(exe)
+        .arg("worker")
+        .arg("1")
+        .args(addrs)
+        .spawn()
+        .expect("respawn worker");
+    wait_healthy(&cluster, 50);
+    master.invalidate(); // handles on the restarted worker are gone
+    master.health_check()?;
+    println!("worker restarted; restoring from checkpoint");
+    master.run_targets(&[&names.restore])?;
+    for step in 10..15 {
+        let out = master.run(&[], &[&names.loss], &[&names.train])?;
+        println!("step {step}: loss {:.5} (post-recovery)", out[0].scalar_value_f32()?);
+    }
+    println!("fault-tolerance demo complete");
+    Ok(())
+}
+
+fn pick_port() -> u16 {
+    std::net::TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap().port()
+}
+
+/// Poll until every worker answers health checks (subprocess startup —
+/// loading libxla_extension takes a moment).
+fn wait_healthy(cluster: &ClusterSpec, tries: usize) {
+    let probe = DistMaster::new(
+        cluster.clone(),
+        GraphBuilder::new().into_graph(),
+        DistMasterOptions::default(),
+    );
+    for _ in 0..tries {
+        if probe.health_check().is_ok() {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+}

@@ -1,0 +1,57 @@
+//! Quickstart: the paper's Figure 1 program, verbatim in the rust front
+//! end — build `relu(W·x + b)`, create a Session, run it 10 times feeding
+//! x, and fetch a cost.
+//!
+//!     cargo run --release --example quickstart
+
+use rustflow::optim::Optimizer;
+use rustflow::{DType, GraphBuilder, Session, SessionOptions, Tensor};
+
+fn main() -> rustflow::Result<()> {
+    // --- Figure 1, line for line -----------------------------------------
+    // b = tf.Variable(tf.zeros([100]))
+    // W = tf.Variable(tf.random_uniform([784,100], -1, 1))
+    // x = tf.placeholder(name="x")
+    // relu = tf.nn.relu(tf.matmul(W, x) + b)
+    // C = [...]
+    let mut g = GraphBuilder::new();
+    let bias = g.variable("b", Tensor::zeros(DType::F32, vec![100, 1])?)?;
+    let w = g.variable_uniform("W", vec![100, 784], -1.0, 1.0, 0)?;
+    let x = g.placeholder("x", DType::F32)?;
+    let wx = g.matmul(w, x);
+    let pre = g.add(wx, bias);
+    let relu = g.relu(pre);
+    // A cost "computed as a function of Relu": mean of squares.
+    let sq = g.square(relu);
+    let cost = g.reduce_mean(sq, None);
+    let cost_name = format!("{}:0", g.graph.node(cost.node).name);
+
+    // Fig 5's addition: [db, dW, dx] = tf.gradients(C, [b, W, x])
+    let grads = rustflow::autodiff::gradients(&mut g, cost, &[bias, w, x])?;
+    println!(
+        "gradient endpoints: db={:?} dW={:?} dx={:?}",
+        grads[0].map(|e| g.graph.node(e.node).name.clone()),
+        grads[1].map(|e| g.graph.node(e.node).name.clone()),
+        grads[2].map(|e| g.graph.node(e.node).name.clone()),
+    );
+    // And one SGD step wired from those gradients (§7's training setup).
+    let train = Optimizer::sgd(0.01).minimize(&mut g, cost, &[w, bias])?;
+    let train_name = g.graph.node(train).name.clone();
+    let inits: Vec<String> = g.init_ops.iter().map(|&i| g.graph.node(i).name.clone()).collect();
+
+    println!("graph has {} nodes", g.graph.len());
+
+    // s = tf.Session()
+    let sess = Session::new(g.into_graph(), SessionOptions::default());
+    sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+
+    // for step in xrange(0, 10): result = s.run(C, feed_dict={x: input})
+    let mut rng = rustflow::util::rng::Pcg32::new(7);
+    for step in 0..10 {
+        let input =
+            Tensor::from_f32(vec![784, 1], (0..784).map(|_| rng.normal() * 0.1).collect())?;
+        let result = sess.run(&[("x", input)], &[&cost_name], &[&train_name])?;
+        println!("{step} {}", result[0].scalar_value_f32()?);
+    }
+    Ok(())
+}

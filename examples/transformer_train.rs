@@ -1,0 +1,54 @@
+//! End-to-end driver (E16): train a transformer language model whose
+//! train step is the AOT-compiled JAX/Pallas artifact (L2+L1), executed by
+//! the rust coordinator through the `XlaCall` op — the full three-layer
+//! stack. L3 owns the data pipeline, variables, step loop, checkpoints,
+//! summaries; Python never runs.
+//!
+//!     make artifacts && cargo run --release --example transformer_train -- [steps] [preset]
+//! presets: tiny (default, ~1M params), small (~8M), base (~25M), 100m
+
+use rustflow::runtime::artifact_dir;
+use rustflow::xla_model::{TransformerConfig, XlaTrainer};
+
+fn main() -> rustflow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(200);
+    let preset = args.get(1).map(|s| s.as_str()).unwrap_or("tiny");
+    let cfg = TransformerConfig::preset(preset)?;
+    println!(
+        "transformer preset {preset}: {} params, seq {}, batch {}, vocab {}",
+        cfg.num_params(),
+        cfg.seq_len,
+        cfg.batch,
+        cfg.vocab
+    );
+    let dir = artifact_dir();
+    let mut trainer = XlaTrainer::new(&dir, &cfg, 42)?;
+    let t0 = std::time::Instant::now();
+    let mut first = None;
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let loss = trainer.train_step()?;
+        first.get_or_insert(loss);
+        losses.push(loss);
+        if step % 20 == 0 || step + 1 == steps {
+            println!("step {step:>4}  loss {loss:.4}");
+        }
+    }
+    let dt = t0.elapsed();
+    let toks = (cfg.batch * cfg.seq_len * steps) as f64;
+    println!(
+        "{steps} steps in {dt:?}  ({:.1} steps/s, {:.0} tokens/s); loss {:.4} -> {:.4}",
+        steps as f64 / dt.as_secs_f64(),
+        toks / dt.as_secs_f64(),
+        first.unwrap(),
+        losses.last().unwrap()
+    );
+    // Loss must trend downward over the run.
+    let head: f32 = losses[..losses.len() / 4].iter().sum::<f32>() / (losses.len() / 4) as f32;
+    let tail: f32 =
+        losses[3 * losses.len() / 4..].iter().sum::<f32>() / (losses.len() - 3 * losses.len() / 4) as f32;
+    println!("mean loss first quarter {head:.4} vs last quarter {tail:.4}");
+    assert!(tail < head, "loss did not decrease");
+    Ok(())
+}

@@ -1,0 +1,95 @@
+"""AOT compiler: lower the L2 programs to HLO *text* artifacts for the
+rust runtime. Run once via `make artifacts`; never on the training path.
+
+HLO text (NOT `.serialize()`): jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_meta(path, cfg, spec):
+    """Plain-text artifact metadata: the rust/python contract."""
+    lines = [
+        f"name={cfg.name}",
+        f"vocab={cfg.vocab}",
+        f"d_model={cfg.d_model}",
+        f"n_layers={cfg.n_layers}",
+        f"n_heads={cfg.n_heads}",
+        f"d_ff={cfg.d_ff}",
+        f"seq_len={cfg.seq_len}",
+        f"batch={cfg.batch}",
+        f"lr={cfg.lr}",
+    ]
+    for name, shape, init in spec:
+        dims = ",".join(str(d) for d in shape)
+        lines.append(f"param {name} {dims} {init}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def build_transformer(out_dir, preset):
+    cfg = model.PRESETS[preset]
+    spec = model.param_spec(cfg)
+    tokens = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len + 1), jnp.int32)
+    params = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s, _ in spec]
+
+    def step(tokens, *params):
+        return model.train_step(cfg, tokens, *params)
+
+    lowered = jax.jit(step).lower(tokens, *params)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"transformer_{preset}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    write_meta(os.path.join(out_dir, f"transformer_{preset}.meta.txt"), cfg, spec)
+    print(f"wrote {hlo_path} ({len(text)} chars, {model.num_params(cfg)} params)")
+
+
+def build_relu_layer(out_dir, m=32, k=64, n=128):
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    b = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(model.relu_layer).lower(x, w, b)
+    path = os.path.join(out_dir, "relu_layer.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    with open(os.path.join(out_dir, "relu_layer.meta.txt"), "w") as f:
+        f.write(f"m={m}\nk={k}\nn={n}\n")
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,small",
+        help="comma-separated transformer presets to build (tiny,small,base,100m)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    build_relu_layer(args.out_dir)
+    for preset in args.presets.split(","):
+        if preset:
+            build_transformer(args.out_dir, preset.strip())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""L1 Pallas kernels: the compute hot-spots of the L2 transformer.
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode lowers them to plain HLO
+that the rust runtime executes. The *structure* is still written for the
+TPU roofline (DESIGN.md §Hardware-Adaptation):
+
+* ``matmul_bias_act`` tiles M×N output blocks sized for the 128×128 MXU,
+  streaming K through VMEM-resident blocks (BlockSpec expresses the
+  HBM↔VMEM schedule the paper's GPU kernels did with threadblocks);
+* ``causal_attention`` keeps one (head, query-block) tile resident and
+  walks key blocks, the standard VMEM-budget decomposition;
+* ``sgd_update`` is a bandwidth-bound elementwise tile loop.
+
+VMEM/MXU estimates for these block shapes are recorded in EXPERIMENTS.md
+§Perf (interpret-mode wallclock is NOT a TPU proxy).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+# ---------------------------------------------------------------------------
+# fused matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+
+_BM, _BN, _BK = 128, 128, 128  # MXU-shaped tiles
+
+
+def _matmul_bias_act_pallas(x, w, b, act="none"):
+    """relu-or-identity(x @ w + b) as a tiled Pallas kernel.
+
+    Shapes must tile evenly by the block size or be smaller than one
+    block; the L2 model picks dimensions accordingly (power-of-two model
+    dims), and the pytest sweep covers ragged fallback via the reference.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn = min(_BM, m), min(_BN, n)
+    if m % bm or n % bn:
+        # Ragged shapes: fall back to one whole-array kernel invocation.
+        bm, bn = m, n
+
+    # Each grid cell owns one (bm, bn) output tile; BlockSpec streams the
+    # matching x-rows and w-columns (full K) into VMEM. K fits VMEM for
+    # every model dimension we build (see §Perf VMEM accounting); a K-loop
+    # with pl.dslice would extend this to unbounded K.
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        out = x_ref[...] @ w_ref[...] + b_ref[...]
+        if act == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+# Reverse-mode support: pallas_call has no automatic VJP, so the kernel
+# carries a custom one. The backward matmuls reuse the pallas kernel
+# itself (zero bias, no activation) — backward is tiled for the MXU too.
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def matmul_bias_act(x, w, b, act="none"):
+    return _matmul_bias_act_pallas(x, w, b, act)
+
+
+def _mba_fwd(x, w, b, act):
+    y = _matmul_bias_act_pallas(x, w, b, act)
+    return y, (x, w, y)
+
+
+def _mba_bwd(act, res, dy):
+    x, w, y = res
+    if act == "relu":
+        dy = dy * (y > 0).astype(dy.dtype)
+    zero_k = jnp.zeros((x.shape[1],), dy.dtype)
+    zero_n = jnp.zeros((w.shape[1],), dy.dtype)
+    dx = _matmul_bias_act_pallas(dy, w.T, zero_k, "none")
+    dw = _matmul_bias_act_pallas(x.T, dy, zero_n, "none")
+    db = dy.sum(axis=0)
+    return dx, dw, db
+
+
+matmul_bias_act.defvjp(_mba_fwd, _mba_bwd)
+
+
+# ---------------------------------------------------------------------------
+# causal attention (single head; L2 vmaps over batch × heads)
+# ---------------------------------------------------------------------------
+
+
+def _causal_attention_pallas(q, k, v):
+    """softmax(q kᵀ / √d + causal mask) v for one head. q,k,v: [S, d]."""
+    s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        qs = q_ref[...]
+        ks = k_ref[...]
+        vs = v_ref[...]
+        scores = (qs @ ks.T) * scale
+        ids = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        jds = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        scores = jnp.where(ids >= jds, scores, jnp.finfo(jnp.float32).min)
+        m = scores.max(axis=-1, keepdims=True)
+        e = jnp.exp(scores - m)
+        p = e / e.sum(axis=-1, keepdims=True)
+        o_ref[...] = p @ vs
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+@jax.custom_vjp
+def causal_attention(q, k, v):
+    return _causal_attention_pallas(q, k, v)
+
+
+def _attn_fwd(q, k, v):
+    return _causal_attention_pallas(q, k, v), (q, k, v)
+
+
+def _attn_bwd(res, dy):
+    # Backward through the mathematically-identical reference (the pallas
+    # forward matches ref to float tolerance, validated by pytest).
+    from . import ref
+
+    q, k, v = res
+    _, vjp = jax.vjp(ref.causal_attention, q, k, v)
+    return vjp(dy)
+
+
+causal_attention.defvjp(_attn_fwd, _attn_bwd)
+
+
+def mha_causal(q, k, v):
+    """Multi-head wrapper: q,k,v [B, H, S, d] -> [B, H, S, d]."""
+    return jax.vmap(jax.vmap(causal_attention))(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# SGD parameter update
+# ---------------------------------------------------------------------------
+
+
+def sgd_update(p, g, lr):
+    """p - lr * g as an elementwise Pallas kernel (any shape)."""
+    flat = p.reshape(-1)
+    gflat = g.reshape(-1)
+
+    def kernel(p_ref, g_ref, o_ref):
+        o_ref[...] = p_ref[...] - lr * g_ref[...]
+
+    out = pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        interpret=True,
+    )(flat, gflat)
+    return out.reshape(p.shape)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(`python/tests/`) sweeps shapes with hypothesis and asserts allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x, w, b, act="none"):
+    """relu-or-identity(x @ w + b)."""
+    y = x @ w + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act != "none":
+        raise ValueError(f"unknown act {act!r}")
+    return y
+
+
+def causal_attention(q, k, v):
+    """Single-head causal attention. q, k, v: [S, d] -> [S, d]."""
+    s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    scores = (q @ k.T) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, jnp.finfo(q.dtype).min)
+    p = jax.nn.softmax(scores, axis=-1)
+    return p @ v
+
+
+def sgd_update(p, g, lr):
+    """p - lr * g."""
+    return p - lr * g
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias

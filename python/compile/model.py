@@ -1,0 +1,167 @@
+"""L2: the transformer LM train step in JAX, calling the L1 Pallas kernels.
+
+This is the "Inception port" analog for the reproduction: the model math
+lives here, is lowered ONCE by aot.py to HLO text, and executes inside the
+rust coordinator via PJRT (`XlaCall`). Python is never on the training
+path.
+
+The step is fully fused: forward, loss, backward, and SGD update in one
+program — `(tokens, *params) -> (loss, *new_params)`.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused, ref
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str = "tiny"
+    vocab: int = 128
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 256
+    seq_len: int = 32
+    batch: int = 8
+    lr: float = 0.1
+    use_pallas: bool = True
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    "tiny": Config(),
+    "small": Config(name="small", vocab=512, d_model=128, n_layers=4, n_heads=4,
+                    d_ff=512, seq_len=64, batch=8, lr=0.05),
+    "base": Config(name="base", vocab=2048, d_model=256, n_layers=8, n_heads=8,
+                   d_ff=1024, seq_len=128, batch=8, lr=0.02),
+    "100m": Config(name="100m", vocab=8192, d_model=768, n_layers=12, n_heads=12,
+                   d_ff=3072, seq_len=128, batch=4, lr=0.01),
+}
+
+
+def param_spec(cfg: Config):
+    """Ordered (name, shape, init) list — the rust/python contract.
+
+    init ∈ {normal, zeros, ones}; rust initializes from this spec (the
+    init *distribution* need not match flax conventions, only be sane).
+    """
+    spec = [
+        ("tok_emb", (cfg.vocab, cfg.d_model), "normal"),
+        ("pos_emb", (cfg.seq_len, cfg.d_model), "normal"),
+    ]
+    for l in range(cfg.n_layers):
+        spec += [
+            (f"l{l}.ln1_scale", (cfg.d_model,), "ones"),
+            (f"l{l}.ln1_bias", (cfg.d_model,), "zeros"),
+            (f"l{l}.wqkv", (cfg.d_model, 3 * cfg.d_model), "normal"),
+            (f"l{l}.wo", (cfg.d_model, cfg.d_model), "normal"),
+            (f"l{l}.ln2_scale", (cfg.d_model,), "ones"),
+            (f"l{l}.ln2_bias", (cfg.d_model,), "zeros"),
+            (f"l{l}.w1", (cfg.d_model, cfg.d_ff), "normal"),
+            (f"l{l}.b1", (cfg.d_ff,), "zeros"),
+            (f"l{l}.w2", (cfg.d_ff, cfg.d_model), "normal"),
+            (f"l{l}.b2", (cfg.d_model,), "zeros"),
+        ]
+    spec += [
+        ("lnf_scale", (cfg.d_model,), "ones"),
+        ("lnf_bias", (cfg.d_model,), "zeros"),
+    ]
+    return spec
+
+
+def num_params(cfg: Config):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s, _ in param_spec(cfg))
+
+
+def init_params(cfg: Config, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape, init in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if init == "normal":
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        elif init == "ones":
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _mlp_block(cfg: Config, x2d, w1, b1, w2, b2):
+    if cfg.use_pallas:
+        h = fused.matmul_bias_act(x2d, w1, b1, act="relu")
+        return fused.matmul_bias_act(h, w2, b2, act="none")
+    h = ref.matmul_bias_act(x2d, w1, b1, act="relu")
+    return ref.matmul_bias_act(h, w2, b2, act="none")
+
+
+def _attention(cfg: Config, q, k, v):
+    if cfg.use_pallas:
+        return fused.mha_causal(q, k, v)
+    return jax.vmap(jax.vmap(ref.causal_attention))(q, k, v)
+
+
+def forward(cfg: Config, params, tokens):
+    """tokens [B, S] int32 -> logits [B, S, V]."""
+    b, s = tokens.shape
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    x = tok_emb[tokens] + pos_emb[None, :s, :]
+    for _ in range(cfg.n_layers):
+        ln1_s, ln1_b = next(it), next(it)
+        wqkv, wo = next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+        # attention block (pre-LN)
+        h = ref.layer_norm(x, ln1_s, ln1_b)
+        qkv = h.reshape(b * s, cfg.d_model) @ wqkv
+        qkv = qkv.reshape(b, s, 3, cfg.n_heads, cfg.d_head)
+        q = qkv[:, :, 0].transpose(0, 2, 1, 3)  # [B, H, S, hd]
+        k = qkv[:, :, 1].transpose(0, 2, 1, 3)
+        v = qkv[:, :, 2].transpose(0, 2, 1, 3)
+        att = _attention(cfg, q, k, v)  # [B, H, S, hd]
+        att = att.transpose(0, 2, 1, 3).reshape(b * s, cfg.d_model)
+        x = x + (att @ wo).reshape(b, s, cfg.d_model)
+        # mlp block
+        h = ref.layer_norm(x, ln2_s, ln2_b).reshape(b * s, cfg.d_model)
+        x = x + _mlp_block(cfg, h, w1, b1, w2, b2).reshape(b, s, cfg.d_model)
+    lnf_s, lnf_b = next(it), next(it)
+    x = ref.layer_norm(x, lnf_s, lnf_b)
+    # untied would add V*D params; tie with the embedding instead.
+    return x @ params[0].T
+
+
+def loss_fn(cfg: Config, params, tokens_with_target):
+    """tokens [B, S+1] -> mean next-token cross entropy."""
+    inputs = tokens_with_target[:, :-1]
+    targets = tokens_with_target[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return nll.mean()
+
+
+def train_step(cfg: Config, tokens_with_target, *params):
+    """One fused SGD step: (loss, *new_params)."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, tokens_with_target))(
+        list(params)
+    )
+    if cfg.use_pallas:
+        new = [fused.sgd_update(p, g, cfg.lr) for p, g in zip(params, grads)]
+    else:
+        new = [ref.sgd_update(p, g, cfg.lr) for p, g in zip(params, grads)]
+    return (loss, *new)
+
+
+def relu_layer(x, w, b):
+    """The Fig-1 hot spot as a standalone artifact: relu(x @ w + b) via the
+    L1 kernel — used by the rust XlaCall unit tests and benches."""
+    return (fused.matmul_bias_act(x, w, b, act="relu"),)

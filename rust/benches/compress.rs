@@ -1,0 +1,39 @@
+//! §5.5 compression benches: codec bandwidth and the wire-size effect.
+
+use rustflow::compress::{bf16_to_f32, f32_to_bf16};
+use rustflow::tensor::codec;
+use rustflow::util::stats;
+use rustflow::Tensor;
+
+fn main() {
+    for n in [1024usize, 1 << 16, 1 << 20] {
+        let t = Tensor::from_f32(vec![n], (0..n).map(|i| (i as f32).sin()).collect()).unwrap();
+        let s = stats::bench(3, 50, || {
+            let c = f32_to_bf16(&t).unwrap();
+            std::hint::black_box(&c);
+        });
+        stats::report_throughput(
+            &format!("compress/f32_to_bf16_{n}"),
+            &s,
+            (n * 4) as f64 / 1e6,
+            "MB",
+        );
+        let c = f32_to_bf16(&t).unwrap();
+        let s = stats::bench(3, 50, || {
+            let d = bf16_to_f32(&c).unwrap();
+            std::hint::black_box(&d);
+        });
+        stats::report_throughput(
+            &format!("compress/bf16_to_f32_{n}"),
+            &s,
+            (n * 2) as f64 / 1e6,
+            "MB",
+        );
+        println!(
+            "compress/wire_bytes_{n}: f32 {} -> bf16 {} ({:.2}x)",
+            codec::encode(&t).len(),
+            codec::encode(&c).len(),
+            codec::encode(&t).len() as f64 / codec::encode(&c).len() as f64
+        );
+    }
+}

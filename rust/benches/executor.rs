@@ -1,0 +1,78 @@
+//! Executor micro-benchmarks: dispatch overhead per node (§3.1's ready
+//! queue), deep chains vs wide fan-outs, and control-flow loop overhead.
+
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
+
+fn main() {
+    // Chain of N cheap nodes: measures per-node dispatch overhead.
+    for n in [100usize, 1000] {
+        let mut b = GraphBuilder::new();
+        let mut x = b.scalar(1.0);
+        for _ in 0..n {
+            x = b.neg(x);
+        }
+        let name = format!("{}:0", b.graph.node(x.node).name);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let s = stats::bench(3, 30, || {
+            sess.run(&[], &[&name], &[]).unwrap();
+        });
+        stats::report_throughput(&format!("executor/chain_{n}"), &s, n as f64, "nodes");
+    }
+    // Wide fan-out (parallelism exposure).
+    {
+        let n = 512usize;
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let outs: Vec<_> = (0..n).map(|_| b.neg(x)).collect();
+        let sum = b.add_n(outs);
+        let name = format!("{}:0", b.graph.node(sum.node).name);
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions { threads_per_device: 4, ..Default::default() },
+        );
+        let s = stats::bench(3, 30, || {
+            sess.run(&[], &[&name], &[]).unwrap();
+        });
+        stats::report_throughput("executor/fanout_512", &s, n as f64, "nodes");
+    }
+    // While loop: per-iteration tag machinery cost (§4.4).
+    for iters in [10usize, 100] {
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        let lim = iters as f32;
+        let exits = b
+            .while_loop(
+                "bench",
+                vec![zero],
+                move |b, v| {
+                    let l = b.scalar(lim);
+                    Ok(b.less(v[0], l))
+                },
+                |b, v| {
+                    let one = b.scalar(1.0);
+                    Ok(vec![b.add(v[0], one)])
+                },
+            )
+            .unwrap();
+        let name = format!("{}:0", b.graph.node(exits[0].node).name);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let s = stats::bench(3, 20, || {
+            let out = sess.run(&[], &[&name], &[]).unwrap();
+            assert_eq!(out[0].scalar_value_f32().unwrap(), lim);
+        });
+        stats::report_throughput(&format!("executor/while_loop_{iters}"), &s, iters as f64, "iters");
+    }
+    // Empty-ish run: session fixed overhead.
+    {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let name = format!("{}:0", b.graph.node(x.node).name);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let s = stats::bench(10, 200, || {
+            sess.run(&[], &[&name], &[]).unwrap();
+        });
+        stats::report("session/run_overhead_1node", &s);
+    }
+    let _ = Tensor::scalar_f32(0.0);
+}

@@ -1,0 +1,59 @@
+//! Partitioning benches (E4 support): Send/Recv insertion cost and the
+//! canonicalization win on transfer counts.
+
+use rustflow::device::DeviceSet;
+use rustflow::partition::{partition, PartitionOptions};
+use rustflow::placement::{place, CostModel};
+use rustflow::util::rng::Pcg32;
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Tensor};
+
+fn cross_device_graph(nodes: usize, devices: usize, seed: u64) -> rustflow::Graph {
+    let mut rng = Pcg32::new(seed);
+    let mut b = GraphBuilder::new();
+    let mut pool = Vec::new();
+    for d in 0..devices {
+        let c = b.with_device(&format!("/device:cpu:{d}"), |b| {
+            b.constant(Tensor::fill_f32(vec![16, 16], 0.1))
+        });
+        pool.push(c);
+    }
+    for i in 0..nodes {
+        let a = pool[rng.index(pool.len())];
+        let c = pool[rng.index(pool.len())];
+        let dev = format!("/device:cpu:{}", i % devices);
+        let v = b.with_device(&dev, |b| if rng.next_below(2) == 0 { b.add(a, c) } else { b.mul(a, c) });
+        pool.push(v);
+    }
+    let ds = DeviceSet::local(devices, 1);
+    place(&mut b.graph, &ds, &CostModel::new()).unwrap();
+    b.graph
+}
+
+fn main() {
+    for (nodes, devices) in [(200usize, 2usize), (200, 4), (2000, 4)] {
+        let g = cross_device_graph(nodes, devices, 3);
+        let s = stats::bench(2, 20, || {
+            partition(&g, &PartitionOptions::default(), "").unwrap();
+        });
+        stats::report_throughput(
+            &format!("partition/{nodes}nodes_{devices}dev"),
+            &s,
+            nodes as f64,
+            "nodes",
+        );
+        let (_, canon) = partition(&g, &PartitionOptions::default(), "").unwrap();
+        let (_, naive) = partition(
+            &g,
+            &PartitionOptions { canonicalize: false, ..Default::default() },
+            "",
+        )
+        .unwrap();
+        println!(
+            "partition/canonicalization_{nodes}_{devices}dev: {} transfers vs naive {} ({:.2}x fewer)",
+            canon.transfers,
+            naive.transfers,
+            naive.transfers as f64 / canon.transfers.max(1) as f64
+        );
+    }
+}

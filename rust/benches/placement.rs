@@ -1,0 +1,58 @@
+//! Placement benches: §3.2.1 greedy simulation cost vs graph size and
+//! device count, and placement quality (estimated makespan).
+
+use rustflow::device::DeviceSet;
+use rustflow::placement::{place, CostModel};
+use rustflow::util::rng::Pcg32;
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Tensor};
+
+fn random_graph(nodes: usize, seed: u64) -> GraphBuilder {
+    let mut rng = Pcg32::new(seed);
+    let mut b = GraphBuilder::new();
+    let mut pool = vec![b.constant(Tensor::fill_f32(vec![32, 32], 0.1))];
+    for _ in 0..nodes {
+        let a = pool[rng.index(pool.len())];
+        let c = pool[rng.index(pool.len())];
+        let v = match rng.next_below(3) {
+            0 => b.matmul(a, c),
+            1 => b.add(a, c),
+            _ => b.tanh(a),
+        };
+        pool.push(v);
+    }
+    b
+}
+
+fn main() {
+    for (nodes, devices) in [(100usize, 2usize), (100, 8), (1000, 2), (1000, 8)] {
+        let ds = DeviceSet::local(devices, 1);
+        let cm = CostModel::new();
+        let s = stats::bench(2, 20, || {
+            let mut b = random_graph(nodes, 7);
+            place(&mut b.graph, &ds, &cm).unwrap();
+        });
+        stats::report_throughput(
+            &format!("placement/{nodes}nodes_{devices}dev"),
+            &s,
+            nodes as f64,
+            "nodes",
+        );
+    }
+    // Quality: makespan of greedy placement vs all-on-one-device.
+    {
+        let mut b = random_graph(300, 11);
+        let cm = CostModel::new();
+        let ds4 = DeviceSet::local(4, 1);
+        let stats4 = place(&mut b.graph, &ds4, &cm).unwrap();
+        let mut b1 = random_graph(300, 11);
+        let ds1 = DeviceSet::local(1, 1);
+        let stats1 = place(&mut b1.graph, &ds1, &cm).unwrap();
+        println!(
+            "placement/quality: est. makespan 1 dev {:.0}us vs 4 dev {:.0}us ({:.2}x)",
+            stats1.estimated_makespan_us,
+            stats4.estimated_makespan_us,
+            stats1.estimated_makespan_us / stats4.estimated_makespan_us
+        );
+    }
+}

@@ -1,0 +1,54 @@
+//! Queue benches (§4.6): FIFO/shuffle throughput and contention.
+
+use rustflow::queue::{dequeue_blocking, enqueue_blocking, QueueImpl};
+use rustflow::util::stats;
+use rustflow::Tensor;
+
+fn main() {
+    for (label, q) in [
+        ("queue/fifo", QueueImpl::fifo(1024, 1)),
+        ("queue/shuffle", QueueImpl::shuffle(1024, 1, 16, 3)),
+    ] {
+        let t = Tensor::fill_f32(vec![64], 0.5);
+        // Pre-fill to keep the shuffle threshold satisfied.
+        for _ in 0..64 {
+            enqueue_blocking(&q, vec![t.clone()]).unwrap();
+        }
+        let s = stats::bench(1000, 100_000, || {
+            enqueue_blocking(&q, vec![t.clone()]).unwrap();
+            dequeue_blocking(&q).unwrap();
+        });
+        stats::report(&format!("{label}/enq_deq_pair"), &s);
+    }
+    // Multi-producer multi-consumer throughput.
+    {
+        let q = QueueImpl::fifo(256, 1);
+        let n_per = 20_000usize;
+        let producers = 4;
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..producers {
+                let q = q.clone();
+                scope.spawn(move || {
+                    let t = Tensor::scalar_f32(1.0);
+                    for _ in 0..n_per {
+                        enqueue_blocking(&q, vec![t.clone()]).unwrap();
+                    }
+                });
+            }
+            for _ in 0..producers {
+                let q = q.clone();
+                scope.spawn(move || {
+                    for _ in 0..n_per {
+                        dequeue_blocking(&q).unwrap();
+                    }
+                });
+            }
+        });
+        let dt = t0.elapsed();
+        println!(
+            "queue/mpmc_4x4                                   {:>14.0} elems/s",
+            (producers * n_per) as f64 / dt.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,62 @@
+//! Rendezvous benches: local handoff latency and throughput (§3.2.2's
+//! data path), plus abort cost.
+
+use rustflow::rendezvous::{recv_blocking, LocalRendezvous, Rendezvous};
+use rustflow::util::stats;
+use rustflow::Tensor;
+use std::sync::Arc;
+
+fn main() {
+    // send-then-recv same thread.
+    {
+        let r = LocalRendezvous::new();
+        let t = Tensor::scalar_f32(1.0);
+        let mut i = 0u64;
+        let s = stats::bench(1000, 100_000, || {
+            let key = format!("k{i}");
+            r.send(&key, t.clone()).unwrap();
+            recv_blocking(&*r, &key).unwrap();
+            i += 1;
+        });
+        stats::report("rendezvous/send_recv_same_thread", &s);
+    }
+    // Cross-thread pipeline throughput.
+    {
+        let r = LocalRendezvous::new();
+        let n = 50_000u64;
+        let t0 = std::time::Instant::now();
+        let r2 = Arc::clone(&r);
+        let producer = std::thread::spawn(move || {
+            let t = Tensor::fill_f32(vec![64], 0.5);
+            for i in 0..n {
+                r2.send(&format!("x{i}"), t.clone()).unwrap();
+            }
+        });
+        for i in 0..n {
+            recv_blocking(&*r, &format!("x{i}")).unwrap();
+        }
+        producer.join().unwrap();
+        let dt = t0.elapsed();
+        println!(
+            "rendezvous/cross_thread_pipeline                 {:>14.0} tensors/s",
+            n as f64 / dt.as_secs_f64()
+        );
+    }
+    // recv-before-send (callback parking) cost.
+    {
+        let r = LocalRendezvous::new();
+        let t = Tensor::scalar_f32(1.0);
+        let mut i = 0u64;
+        let s = stats::bench(1000, 100_000, || {
+            let key = format!("p{i}");
+            let (tx, rx) = std::sync::mpsc::channel();
+            r.recv_async(&key, Box::new(move |res| {
+                let _ = tx.send(res);
+            }));
+            r.send(&key, t.clone()).unwrap();
+            rx.recv().unwrap().unwrap();
+            i += 1;
+        });
+        stats::report("rendezvous/recv_then_send_parked", &s);
+    }
+}

@@ -1,0 +1,70 @@
+//! Session-level benches: MLP train step (the Fig-7 workhorse), feed/fetch
+//! overhead, compile-cache effectiveness.
+
+use rustflow::optim::Optimizer;
+use rustflow::util::stats;
+use rustflow::{data, models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+
+fn main() {
+    // MLP train step end to end.
+    for (dim, hidden) in [(64usize, 128usize), (128, 512)] {
+        let mut b = GraphBuilder::new();
+        let examples = data::synthetic_classification(64, dim, 10, 0.3, 2);
+        let (f, l) = data::batch_tensors(&examples).unwrap();
+        let x = b.constant(f);
+        let y = b.constant(data::one_hot(l.as_i32().unwrap(), 10));
+        let (logits, vars) = models::mlp(&mut b, x, &[dim, hidden, 10], 5).unwrap();
+        let loss = models::xent_loss(&mut b, logits, y).unwrap();
+        let train = Optimizer::sgd(0.1).minimize(&mut b, loss, &vars).unwrap();
+        let tname = b.graph.node(train).name.clone();
+        let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions { threads_per_device: 4, ..Default::default() },
+        );
+        sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        let s = stats::bench(3, 30, || {
+            sess.run_targets(&[&tname]).unwrap();
+        });
+        stats::report(&format!("session/mlp_train_{dim}x{hidden}"), &s);
+    }
+    // Feed/fetch overhead.
+    {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let y = b.neg(x);
+        let name = format!("{}:0", b.graph.node(y.node).name);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let input = Tensor::fill_f32(vec![64, 64], 1.0);
+        let s = stats::bench(10, 200, || {
+            sess.run(&[("x", input.clone())], &[&name], &[]).unwrap();
+        });
+        stats::report("session/feed_fetch_64x64", &s);
+    }
+    // First-run compile cost vs cached step.
+    {
+        let build = || {
+            let mut b = GraphBuilder::new();
+            let x = b.constant(Tensor::fill_f32(vec![32, 32], 0.1));
+            let mut h = x;
+            for _ in 0..50 {
+                h = b.tanh(h);
+            }
+            let name = format!("{}:0", b.graph.node(h.node).name);
+            (b, name)
+        };
+        let s_first = stats::bench(0, 20, || {
+            let (b, name) = build();
+            let sess = Session::new(b.into_graph(), SessionOptions::default());
+            sess.run(&[], &[&name], &[]).unwrap();
+        });
+        stats::report("session/cold_run_50nodes(compile+run)", &s_first);
+        let (b, name) = build();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run(&[], &[&name], &[]).unwrap();
+        let s_cached = stats::bench(5, 50, || {
+            sess.run(&[], &[&name], &[]).unwrap();
+        });
+        stats::report("session/warm_run_50nodes(cached)", &s_cached);
+    }
+}

@@ -1,0 +1,57 @@
+//! XLA-runtime benches: artifact execution latency (the §5.4 "optimized
+//! library" path) vs the native rust kernels for the same computation,
+//! plus transformer train-step throughput per preset.
+
+use rustflow::runtime::{artifact_dir, load_artifact};
+use rustflow::util::rng::Pcg32;
+use rustflow::util::stats;
+use rustflow::xla_model::{TransformerConfig, XlaTrainer};
+use rustflow::Tensor;
+
+fn main() {
+    let relu = artifact_dir().join("relu_layer.hlo.txt");
+    if !relu.exists() {
+        eprintln!("artifacts missing — run `make artifacts` first; skipping xla benches");
+        return;
+    }
+    // relu(x·w+b): XLA artifact vs native kernels.
+    {
+        let exe = load_artifact(&relu).unwrap();
+        let (m, k, n) = (32usize, 64usize, 128usize);
+        let mut rng = Pcg32::new(5);
+        let x = Tensor::from_f32(vec![m, k], (0..m * k).map(|_| rng.normal()).collect()).unwrap();
+        let w =
+            Tensor::from_f32(vec![k, n], (0..k * n).map(|_| rng.normal() * 0.1).collect()).unwrap();
+        let b = Tensor::from_f32(vec![n], (0..n).map(|_| rng.normal() * 0.1).collect()).unwrap();
+        let s = stats::bench(10, 300, || {
+            exe.run(&[x.clone(), w.clone(), b.clone()]).unwrap();
+        });
+        stats::report("xla/relu_layer_32x64x128", &s);
+        let s = stats::bench(10, 300, || {
+            let mm = rustflow::kernels::matrix::matmul(&x, &w, false, false).unwrap();
+            let pre = rustflow::kernels::nn::bias_add(&mm, &b).unwrap();
+            rustflow::kernels::nn::relu(&pre).unwrap();
+        });
+        stats::report("native/relu_layer_32x64x128", &s);
+    }
+    // Transformer train step per preset.
+    for preset in ["tiny", "small"] {
+        match TransformerConfig::preset(preset) {
+            Ok(cfg) => {
+                let mut trainer = XlaTrainer::new(&artifact_dir(), &cfg, 1).unwrap();
+                trainer.train_step().unwrap(); // compile warmup
+                let s = stats::bench(2, 15, || {
+                    trainer.train_step().unwrap();
+                });
+                let toks = (cfg.batch * cfg.seq_len) as f64;
+                stats::report_throughput(
+                    &format!("xla/transformer_{preset}_step ({} params)", cfg.num_params()),
+                    &s,
+                    toks,
+                    "tokens",
+                );
+            }
+            Err(_) => eprintln!("preset {preset} artifact missing; skipped"),
+        }
+    }
+}

@@ -1,0 +1,330 @@
+//! Built-in gradient functions (§4.1: "the newly added node computes the
+//! 'gradient function' for the corresponding operation in the forward
+//! path"). Each receives the forward node (for access to its inputs and
+//! outputs, as the paper allows) and the output gradients.
+//!
+//! Broadcasting ops reduce their gradients back to the operand shapes via
+//! the runtime `SumToShape` op, since shapes are unknown at
+//! graph-construction time.
+
+use super::GradFn;
+#[allow(unused_imports)]
+use crate::error::Result;
+use crate::graph::{AttrValue, Endpoint, NodeId};
+use crate::ops::builder::GraphBuilder;
+use std::collections::HashMap;
+
+fn inputs(b: &GraphBuilder, node: NodeId) -> Vec<Endpoint> {
+    b.graph.node(node).inputs.clone()
+}
+
+fn out(node: NodeId, port: usize) -> Endpoint {
+    Endpoint::new(node, port)
+}
+
+/// g reduced to the shape of `like`.
+fn sum_to(b: &mut GraphBuilder, g: Endpoint, like: Endpoint) -> Endpoint {
+    b.op1("SumToShape", "SumToShape", vec![g, like], vec![]).unwrap()
+}
+
+pub(super) fn install(m: &mut HashMap<&'static str, GradFn>) {
+    m.insert("Add", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(sum_to(b, g, ins[0])), Some(sum_to(b, g, ins[1]))])
+    });
+    m.insert("Sub", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let ng = b.neg(g);
+        Ok(vec![Some(sum_to(b, g, ins[0])), Some(sum_to(b, ng, ins[1]))])
+    });
+    m.insert("Mul", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let ga = b.mul(g, ins[1]);
+        let gb = b.mul(g, ins[0]);
+        Ok(vec![Some(sum_to(b, ga, ins[0])), Some(sum_to(b, gb, ins[1]))])
+    });
+    m.insert("Div", |b, node, gs| {
+        // d(a/b) = g/b, -g·a/b²
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let ga = b.div(g, ins[1]);
+        let b2 = b.square(ins[1]);
+        let a_over_b2 = b.div(ins[0], b2);
+        let gb0 = b.mul(g, a_over_b2);
+        let gb = b.neg(gb0);
+        Ok(vec![Some(sum_to(b, ga, ins[0])), Some(sum_to(b, gb, ins[1]))])
+    });
+    m.insert("Maximum", |b, node, gs| {
+        // Route gradient to the larger operand.
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let take_a = b.op1("GreaterEqual", "ge", vec![ins[0], ins[1]], vec![]).unwrap();
+        let zero = b.zeros_like(g);
+        let ga = b.select(take_a, g, zero);
+        let gb = b.select(take_a, zero, g);
+        Ok(vec![Some(sum_to(b, ga, ins[0])), Some(sum_to(b, gb, ins[1]))])
+    });
+    m.insert("Neg", |b, _node, gs| {
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.neg(g))])
+    });
+    m.insert("Exp", |b, node, gs| {
+        // d exp(x) = g * exp(x) — reuse the forward output (§4.1 allows
+        // gradient functions to consume forward outputs).
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.mul(g, out(node, 0)))])
+    });
+    m.insert("Log", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.div(g, ins[0]))])
+    });
+    m.insert("Sqrt", |b, node, gs| {
+        // d sqrt = g / (2 sqrt(x))
+        let g = gs[0].unwrap();
+        let two = b.scalar(2.0);
+        let denom = b.mul(two, out(node, 0));
+        Ok(vec![Some(b.div(g, denom))])
+    });
+    m.insert("Square", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let two = b.scalar(2.0);
+        let tx = b.mul(two, ins[0]);
+        Ok(vec![Some(b.mul(g, tx))])
+    });
+    m.insert("Tanh", |b, node, gs| {
+        // d tanh = g (1 - tanh²)
+        let g = gs[0].unwrap();
+        let y2 = b.square(out(node, 0));
+        let one = b.scalar(1.0);
+        let d = b.sub(one, y2);
+        Ok(vec![Some(b.mul(g, d))])
+    });
+    m.insert("Sigmoid", |b, node, gs| {
+        // d σ = g σ (1-σ)
+        let g = gs[0].unwrap();
+        let y = out(node, 0);
+        let one = b.scalar(1.0);
+        let om = b.sub(one, y);
+        let d = b.mul(y, om);
+        Ok(vec![Some(b.mul(g, d))])
+    });
+    m.insert("Reciprocal", |b, node, gs| {
+        // d (1/x) = -g / x² = -g·y²
+        let g = gs[0].unwrap();
+        let y2 = b.square(out(node, 0));
+        let gy = b.mul(g, y2);
+        Ok(vec![Some(b.neg(gy))])
+    });
+    m.insert("Abs", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let s = b.op1("Sign", "sign", vec![ins[0]], vec![]).unwrap();
+        Ok(vec![Some(b.mul(g, s))])
+    });
+    m.insert("Identity", |_b, _node, gs| Ok(vec![gs[0]]));
+    m.insert("_Feed", |_b, _node, _gs| Ok(vec![]));
+    m.insert("AddN", |b, node, gs| {
+        let n = inputs(b, node).len();
+        Ok(vec![gs[0]; n])
+    });
+    m.insert("MatMul", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let n = b.graph.node(node);
+        let ta = n.attrs.get("transpose_a").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+        let tb = n.attrs.get("transpose_b").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+        let (a, bb) = (ins[0], ins[1]);
+        let (da, db) = match (ta, tb) {
+            (false, false) => (b.matmul_t(g, bb, false, true), b.matmul_t(a, g, true, false)),
+            (false, true) => (b.matmul_t(g, bb, false, false), b.matmul_t(g, a, true, false)),
+            (true, false) => (b.matmul_t(bb, g, false, true), b.matmul_t(a, g, false, false)),
+            (true, true) => (b.matmul_t(bb, g, true, true), b.matmul_t(g, a, true, true)),
+        };
+        Ok(vec![Some(da), Some(db)])
+    });
+    m.insert("ReLU", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.op1("ReluGrad", "ReluGrad", vec![g, ins[0]], vec![])?)])
+    });
+    m.insert("BiasAdd", |b, node, gs| {
+        let _ = node;
+        let g = gs[0].unwrap();
+        let db = b.op1("BiasAddGrad", "BiasAddGrad", vec![g], vec![])?;
+        Ok(vec![Some(g), Some(db)])
+    });
+    m.insert("Sum", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.op1("BroadcastLike", "bcast", vec![g, ins[0]], vec![])?)])
+    });
+    m.insert("Mean", |b, node, gs| {
+        // d mean = broadcast(g) * (size(out)/size(in))
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let bg = b.op1("BroadcastLike", "bcast", vec![g, ins[0]], vec![])?;
+        let size_in = b.op1("Size", "size_in", vec![ins[0]], vec![])?;
+        let size_out = b.op1("Size", "size_out", vec![out(node, 0)], vec![])?;
+        let fin = b.cast(size_in, crate::tensor::DType::F32);
+        let fout = b.cast(size_out, crate::tensor::DType::F32);
+        let scale = b.div(fout, fin);
+        Ok(vec![Some(b.mul(bg, scale))])
+    });
+    m.insert("SoftmaxCrossEntropyWithLogits", |b, node, gs| {
+        // d loss/d logits = backprop (port 1) scaled by g (per-row). The
+        // labels input gets no gradient.
+        let g = gs[0].unwrap(); // grad of loss vector [batch]
+        let backprop = out(node, 1);
+        // Scale rows: reshape g to [batch,1] and broadcast-multiply.
+        let gcol = b.op1("ExpandDims", "expand", vec![g], vec![("axis", AttrValue::I64(1))])?;
+        let scaled = b.mul(backprop, gcol);
+        Ok(vec![Some(scaled), None])
+    });
+    m.insert("SoftMax", |b, node, gs| {
+        // d softmax: y * (g - sum(g*y, axis=-1, keepdims))
+        let g = gs[0].unwrap();
+        let y = out(node, 0);
+        let gy = b.mul(g, y);
+        let s = b.reduce_sum(gy, Some(vec![-1]));
+        let scol = b.op1("ExpandDims", "expand", vec![s], vec![("axis", AttrValue::I64(-1))])?;
+        let diff = b.sub(g, scol);
+        Ok(vec![Some(b.mul(y, diff))])
+    });
+    m.insert("LogSoftmax", |b, node, gs| {
+        // d logsoftmax = g - softmax(x) * sum(g)
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let sm = b.softmax(ins[0]);
+        let s = b.reduce_sum(g, Some(vec![-1]));
+        let scol = b.op1("ExpandDims", "expand", vec![s], vec![("axis", AttrValue::I64(-1))])?;
+        let scaled = b.mul(sm, scol);
+        Ok(vec![Some(b.sub(g, scaled))])
+    });
+    m.insert("L2Loss", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.mul(g, ins[0]))])
+    });
+    m.insert("Reshape", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        // Reshape back to the input's (runtime) shape.
+        let back = b.op1("ReshapeLike", "unshape", vec![g, ins[0]], vec![])?;
+        Ok(vec![Some(back), None])
+    });
+    m.insert("Transpose", |b, node, gs| {
+        let g = gs[0].unwrap();
+        let n = b.graph.node(node);
+        let perm: Vec<i64> = n
+            .attrs
+            .get("perm")
+            .and_then(|a| a.as_list_i64().ok().map(|s| s.to_vec()))
+            .unwrap_or_default();
+        let inv = if perm.is_empty() {
+            vec![]
+        } else {
+            let mut inv = vec![0i64; perm.len()];
+            for (i, &p) in perm.iter().enumerate() {
+                inv[p as usize] = i as i64;
+            }
+            inv
+        };
+        Ok(vec![Some(b.transpose(g, inv))])
+    });
+    m.insert("Concat", |b, node, gs| {
+        // Split the gradient back along the axis. Requires equal-size
+        // parts (our Split), which covers the library's own uses.
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let n = b.graph.node(node);
+        let axis = n.attrs.get("axis").and_then(|a| a.as_i64().ok()).unwrap_or(0);
+        let parts = b.split(g, axis, ins.len() as i64)?;
+        Ok(parts.into_iter().map(Some).collect())
+    });
+    m.insert("Pack", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let n = b.graph.node(node);
+        let axis = n.attrs.get("axis").and_then(|a| a.as_i64().ok()).unwrap_or(0);
+        let parts = b.split(g, axis, ins.len() as i64)?;
+        // Each part keeps a 1-dim at `axis`: collapse via SumToShape.
+        Ok(parts
+            .into_iter()
+            .zip(ins)
+            .map(|(p, i)| Some(sum_to(b, p, i)))
+            .collect())
+    });
+    m.insert("ExpandDims", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.op1("ReshapeLike", "unexpand", vec![g, ins[0]], vec![])?)])
+    });
+    m.insert("Squeeze", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.op1("ReshapeLike", "unsqueeze", vec![g, ins[0]], vec![])?)])
+    });
+    m.insert("Convolution2D", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let n = b.graph.node(node);
+        let stride = n.attrs.get("stride").and_then(|a| a.as_i64().ok()).unwrap_or(1);
+        let padding = n
+            .attrs
+            .get("padding")
+            .and_then(|a| a.as_str().ok().map(String::from))
+            .unwrap_or_else(|| "SAME".into());
+        let attrs = vec![("stride", stride.into()), ("padding", padding.as_str().into())];
+        let dx = b.op1("Conv2DBackpropInput", "conv_dx", vec![g, ins[1], ins[0]], attrs.clone())?;
+        let df = b.op1("Conv2DBackpropFilter", "conv_df", vec![ins[0], g, ins[1]], attrs)?;
+        Ok(vec![Some(dx), Some(df)])
+    });
+    m.insert("MaxPool", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let argmax = out(node, 1);
+        let dx = b.op1("MaxPoolGrad", "pool_dx", vec![g, argmax, ins[0]], vec![])?;
+        Ok(vec![Some(dx)])
+    });
+    m.insert("Gather", |b, node, gs| {
+        // Dense scatter-add: build via SumToShape over a one-hot matmul is
+        // overkill here; gradient support for Gather is "unimplemented"
+        // like early TF — callers use dense ops in differentiable paths.
+        let _ = (b, node, gs);
+        Ok(vec![None, None])
+    });
+    m.insert("Select", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let zero = b.zeros_like(g);
+        let ga = b.select(ins[0], g, zero);
+        let gb = b.select(ins[0], zero, g);
+        Ok(vec![None, Some(ga), Some(gb)])
+    });
+    m.insert("Cast", |_b, _node, gs| Ok(vec![gs[0]]));
+    m.insert("CheckNumerics", |_b, _node, gs| Ok(vec![gs[0]]));
+    m.insert("Print", |_b, _node, gs| Ok(vec![gs[0]]));
+    m.insert("ZerosLike", |_b, _node, _gs| Ok(vec![None]));
+    m.insert("OnesLike", |_b, _node, _gs| Ok(vec![None]));
+    m.insert("Shape", |_b, _node, _gs| Ok(vec![None]));
+    m.insert("Size", |_b, _node, _gs| Ok(vec![None]));
+    m.insert("Rank", |_b, _node, _gs| Ok(vec![None]));
+    m.insert("Const", |_b, _node, _gs| Ok(vec![]));
+    m.insert("Placeholder", |_b, _node, _gs| Ok(vec![]));
+    m.insert("Variable", |_b, _node, _gs| Ok(vec![]));
+    m.insert("BroadcastLike", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(sum_to(b, g, ins[0])), None])
+    });
+    m.insert("SumToShape", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.op1("BroadcastLike", "bcast", vec![g, ins[0]], vec![])?), None])
+    });
+}

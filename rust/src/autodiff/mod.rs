@@ -1,0 +1,358 @@
+//! Automatic gradient computation (§4.1).
+//!
+//! "When TensorFlow needs to compute the gradient of a tensor C with
+//! respect to some tensor I on which C depends, it first finds the path in
+//! the computation graph from I to C. Then it backtracks from C to I, and
+//! for each operation on the backward path it adds a node to the
+//! TensorFlow graph, composing the partial gradients along the backwards
+//! path using the chain rule. … A gradient function may be registered by
+//! any operation. This function takes as input not only the partial
+//! gradients computed already along the backward path, but also,
+//! optionally, the inputs and outputs of the forward operation."
+//!
+//! Gradients are *graph extension*: `gradients()` appends nodes to the
+//! builder's graph and returns the `dC/dx` endpoints. Unused outputs get
+//! zero gradients ("the first input to O's gradient function is set to 0
+//! since dC/dy1 = 0" — represented as `None` and materialized as
+//! ZerosLike only when a gradient function needs them).
+
+pub mod grad_fns;
+
+use crate::error::{Result, Status};
+use crate::graph::{Endpoint, NodeId};
+use crate::ops::builder::GraphBuilder;
+use once_cell::sync::Lazy;
+use std::collections::{HashMap, HashSet};
+use std::sync::RwLock;
+
+/// A gradient function: given the forward node and the gradients of its
+/// outputs (None = zero), produce gradients for each input (None = no
+/// gradient / not differentiable).
+pub type GradFn = fn(
+    b: &mut GraphBuilder,
+    node: NodeId,
+    grad_outputs: &[Option<Endpoint>],
+) -> Result<Vec<Option<Endpoint>>>;
+
+static GRAD_REGISTRY: Lazy<RwLock<HashMap<&'static str, GradFn>>> = Lazy::new(|| {
+    let mut m = HashMap::new();
+    grad_fns::install(&mut m);
+    RwLock::new(m)
+});
+
+/// Register a gradient function for an op ("a gradient function may be
+/// registered by any operation").
+pub fn register_gradient(op: &'static str, f: GradFn) {
+    GRAD_REGISTRY.write().unwrap().insert(op, f);
+}
+
+pub fn has_gradient(op: &str) -> bool {
+    GRAD_REGISTRY.read().unwrap().contains_key(op)
+}
+
+/// Compute symbolic gradients of (scalar-ish) `y` w.r.t. each of `xs` by
+/// extending the graph. Returns one endpoint per x (None when y does not
+/// depend on x).
+pub fn gradients(
+    b: &mut GraphBuilder,
+    y: Endpoint,
+    xs: &[Endpoint],
+) -> Result<Vec<Option<Endpoint>>> {
+    // Forward-reachable set from each x …
+    let fanout = b.graph.fanout();
+    let mut from_xs: HashSet<NodeId> = HashSet::new();
+    let mut stack: Vec<NodeId> = xs.iter().map(|e| e.node).collect();
+    while let Some(n) = stack.pop() {
+        if !from_xs.insert(n) {
+            continue;
+        }
+        for &(c, _) in &fanout.data[n.0] {
+            stack.push(c);
+        }
+    }
+    // … intersected with the backward-reachable set from y: the nodes on
+    // paths from I to C (§4.1).
+    let to_y = b.graph.reachable_from(&[y.node]);
+    let on_path: HashSet<NodeId> = from_xs.intersection(&to_y).copied().collect();
+    if !on_path.contains(&y.node) {
+        // y independent of all xs.
+        return Ok(xs.iter().map(|_| None).collect());
+    }
+
+    // Accumulated partial gradients per forward endpoint.
+    let mut grads: HashMap<Endpoint, Vec<Endpoint>> = HashMap::new();
+    let seed = b.ones_like(y);
+    grads.insert(y, vec![seed]);
+
+    // Backward pass in reverse topological order over on-path nodes.
+    let order = b.graph.topo_order()?;
+    for &node_id in order.iter().rev() {
+        if !on_path.contains(&node_id) {
+            continue;
+        }
+        let node = b.graph.node(node_id);
+        let op = node.op.clone();
+        let num_outputs = crate::ops::num_outputs(node)?;
+        let inputs = node.inputs.clone();
+        // Collect dC/d(output_port) for every port, summing multiple
+        // contributions with AddN.
+        let mut grad_outputs: Vec<Option<Endpoint>> = Vec::with_capacity(num_outputs);
+        let mut any = false;
+        for port in 0..num_outputs {
+            let ep = Endpoint::new(node_id, port);
+            match grads.get(&ep) {
+                Some(parts) if parts.len() == 1 => {
+                    grad_outputs.push(Some(parts[0]));
+                    any = true;
+                }
+                Some(parts) => {
+                    let sum = b.add_n(parts.clone());
+                    grad_outputs.push(Some(sum));
+                    any = true;
+                }
+                None => grad_outputs.push(None),
+            }
+        }
+        if !any {
+            continue; // no gradient flows through this node
+        }
+        if op == "StopGradient" {
+            continue; // blocks flow by definition
+        }
+        let f = {
+            let reg = GRAD_REGISTRY.read().unwrap();
+            reg.get(op.as_str()).copied()
+        };
+        let f = f.ok_or_else(|| {
+            Status::unimplemented(format!(
+                "no gradient registered for op {op:?} (node {})",
+                b.graph.node(node_id).name
+            ))
+        })?;
+        let input_grads = b.with_scope("gradients", |b| f(b, node_id, &grad_outputs))?;
+        if input_grads.len() != inputs.len() {
+            return Err(Status::internal(format!(
+                "gradient of {op} returned {} grads for {} inputs",
+                input_grads.len(),
+                inputs.len()
+            )));
+        }
+        for (edge, g) in inputs.iter().zip(input_grads) {
+            if let Some(g) = g {
+                // Only accumulate toward nodes on the path (others are
+                // constants w.r.t. xs — keeping their grads would drag in
+                // dead subgraphs).
+                if on_path.contains(&edge.node) {
+                    grads.entry(*edge).or_default().push(g);
+                }
+            }
+        }
+    }
+
+    Ok(xs
+        .iter()
+        .map(|x| match grads.get(x) {
+            Some(parts) if parts.len() == 1 => Some(parts[0]),
+            Some(parts) => Some(b.add_n(parts.clone())),
+            None => None,
+        })
+        .collect())
+}
+
+/// Materialize a possibly-missing output gradient as zeros-like the
+/// forward endpoint (§4.1's "set to 0").
+pub fn grad_or_zeros(b: &mut GraphBuilder, fw: Endpoint, g: Option<Endpoint>) -> Endpoint {
+    match g {
+        Some(g) => g,
+        None => b.zeros_like(fw),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Session, SessionOptions};
+    use crate::tensor::{DType, Tensor};
+
+    /// Numerically check dy/dx at `x0` against the symbolic gradient.
+    fn check_grad(
+        build: impl Fn(&mut GraphBuilder, Endpoint) -> Endpoint,
+        x0: Tensor,
+        tol: f64,
+    ) {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let y = build(&mut b, x);
+        // Reduce to scalar for well-defined FD.
+        let loss = b.reduce_sum(y, None);
+        let g = gradients(&mut b, loss, &[x]).unwrap()[0].expect("x should have grad");
+        let gname = format!("{}:{}", b.graph.node(g.node).name, g.port);
+        let lname = format!("{}:{}", b.graph.node(loss.node).name, loss.port);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+
+        let analytic = sess.run(&[("x", x0.clone())], &[&gname], &[]).unwrap()[0].clone();
+        let eps = 1e-3f32;
+        let base = sess.run(&[("x", x0.clone())], &[&lname], &[]).unwrap()[0]
+            .scalar_value_f32()
+            .unwrap();
+        let xv = x0.as_f32().unwrap().to_vec();
+        for i in 0..xv.len() {
+            let mut pert = xv.clone();
+            pert[i] += eps;
+            let xp = Tensor::from_f32(x0.shape().clone(), pert).unwrap();
+            let lp = sess.run(&[("x", xp)], &[&lname], &[]).unwrap()[0]
+                .scalar_value_f32()
+                .unwrap();
+            let fd = ((lp - base) / eps) as f64;
+            let an = analytic.as_f32().unwrap()[i] as f64;
+            assert!(
+                (fd - an).abs() < tol * (1.0 + an.abs()),
+                "grad[{i}]: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn grad_of_square() {
+        check_grad(|b, x| b.square(x), Tensor::from_f32(vec![3], vec![1., -2., 0.5]).unwrap(), 1e-2);
+    }
+
+    #[test]
+    fn grad_of_chain() {
+        // d/dx sum(exp(2x)) = 2 exp(2x)
+        check_grad(
+            |b, x| {
+                let two = b.scalar(2.0);
+                let m = b.mul(x, two);
+                b.exp(m)
+            },
+            Tensor::from_f32(vec![2], vec![0.1, -0.3]).unwrap(),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_of_tanh_sigmoid() {
+        check_grad(
+            |b, x| {
+                let t = b.tanh(x);
+                b.sigmoid(t)
+            },
+            Tensor::from_f32(vec![3], vec![0.2, -0.7, 1.3]).unwrap(),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_of_matmul_relu() {
+        // The Fig 5 shape: grads through ReLU(W·x + b) — here wrt x.
+        check_grad(
+            |b, x| {
+                let w = b
+                    .constant(Tensor::from_f32(vec![3, 2], vec![0.5, -1., 2., 0.3, 1., 1.]).unwrap());
+                let shape = b.constant(Tensor::from_i64(vec![2], vec![2, 2]).unwrap());
+                let xm = b.op1("Reshape", "r", vec![x, shape], vec![]).unwrap();
+                let mm = b.matmul(w, xm);
+                b.relu(mm)
+            },
+            Tensor::from_f32(vec![4], vec![0.7, -0.2, 0.5, 1.1]).unwrap(),
+            2e-2,
+        );
+    }
+
+    #[test]
+    fn grad_with_broadcast_bias() {
+        // y = sum(x * c + bias) where bias broadcasts: checks SumToShape.
+        check_grad(
+            |b, x| {
+                let c = b.constant(Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+                let prod = b.mul(x, c);
+                let bias = b.constant(Tensor::from_f32(vec![3], vec![1., 1., 1.]).unwrap());
+                b.add(prod, bias)
+            },
+            Tensor::from_f32(vec![2, 3], vec![0.1; 6]).unwrap(),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_div_log() {
+        check_grad(
+            |b, x| {
+                let c = b.scalar(3.0);
+                let d = b.div(c, x);
+                b.log(d)
+            },
+            Tensor::from_f32(vec![2], vec![1.5, 0.7]).unwrap(),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn grad_mean() {
+        check_grad(
+            |b, x| b.reduce_mean(x, None),
+            Tensor::from_f32(vec![4], vec![1., 2., 3., 4.]).unwrap(),
+            1e-2,
+        );
+    }
+
+    #[test]
+    fn independent_returns_none() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let y = b.scalar(5.0);
+        let g = gradients(&mut b, y, &[x]).unwrap();
+        assert!(g[0].is_none());
+    }
+
+    #[test]
+    fn stop_gradient_blocks() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let s = b.stop_gradient(x);
+        let y = b.square(s);
+        let g = gradients(&mut b, y, &[x]).unwrap();
+        assert!(g[0].is_none(), "StopGradient must cut the path");
+    }
+
+    #[test]
+    fn multiple_uses_accumulate() {
+        // y = x*x + x  =>  dy/dx = 2x + 1
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let sq = b.mul(x, x);
+        let y = b.add(sq, x);
+        let g = gradients(&mut b, y, &[x]).unwrap()[0].unwrap();
+        let gname = format!("{}:{}", b.graph.node(g.node).name, g.port);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let out = sess.run(&[("x", Tensor::scalar_f32(3.0))], &[&gname], &[]).unwrap();
+        assert!((out[0].scalar_value_f32().unwrap() - 7.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_xent_gradient() {
+        // Classic: d xent / d logits = softmax(logits) - labels.
+        let mut b = GraphBuilder::new();
+        let logits = b.placeholder("logits", DType::F32).unwrap();
+        let labels = b.constant(Tensor::from_f32(vec![1, 3], vec![0., 1., 0.]).unwrap());
+        let (loss_vec, _) = b.softmax_xent(logits, labels).unwrap();
+        let loss = b.reduce_sum(loss_vec, None);
+        let g = gradients(&mut b, loss, &[logits]).unwrap()[0].unwrap();
+        let gname = format!("{}:{}", b.graph.node(g.node).name, g.port);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let x0 = Tensor::from_f32(vec![1, 3], vec![1., 2., 0.5]).unwrap();
+        let out = sess.run(&[("logits", x0.clone())], &[&gname], &[]).unwrap();
+        let sm = crate::kernels::nn::softmax(&x0).unwrap();
+        let expect: Vec<f32> = sm
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip([0f32, 1., 0.])
+            .map(|(&p, y)| p - y)
+            .collect();
+        for (a, e) in out[0].as_f32().unwrap().iter().zip(expect) {
+            assert!((a - e).abs() < 1e-5);
+        }
+    }
+}

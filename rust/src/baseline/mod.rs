@@ -1,0 +1,171 @@
+//! DistBelief-like baseline (§11: "DistBelief, Project Adam and the
+//! Parameter Server systems all have whole separate parameter server
+//! subsystems devoted to communicating and updating parameter values").
+//!
+//! Used by experiment E10 (the §6 claim: the TensorFlow port of Inception
+//! trained 6× faster than the DistBelief implementation). The baseline
+//! reproduces the architectural costs TensorFlow removed:
+//!
+//! * parameters live in a *separate parameter-server* component; every
+//!   step PULLS full parameter copies and PUSHES full gradients (per
+//!   variable, through a serialize/deserialize boundary — DistBelief's
+//!   process boundary), instead of flowing through the dataflow graph;
+//! * the model is evaluated by a fixed layer-by-layer interpreter with no
+//!   graph-level optimization: no CSE, no fused scheduling, no
+//!   cross-kernel parallelism within a step;
+//! * no canonicalized transfers: each layer's pull is per-consumer.
+//!
+//! The compute kernels are the very same `kernels::` implementations, so
+//! the comparison isolates the *system* design, not the math library.
+
+use crate::data::Example;
+use crate::error::Result;
+use crate::kernels::{math, matrix, nn};
+use crate::tensor::{codec, Tensor};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// The separate parameter-server subsystem. Every access crosses a
+/// serialization boundary, mimicking DistBelief's parameter-server RPCs.
+pub struct ParameterServer {
+    store: Mutex<HashMap<String, Vec<u8>>>,
+    pub bytes_pulled: Mutex<u64>,
+    pub bytes_pushed: Mutex<u64>,
+    lr: f32,
+}
+
+impl ParameterServer {
+    pub fn new(lr: f32) -> ParameterServer {
+        ParameterServer {
+            store: Mutex::new(HashMap::new()),
+            bytes_pulled: Mutex::new(0),
+            bytes_pushed: Mutex::new(0),
+            lr,
+        }
+    }
+
+    pub fn init(&self, name: &str, value: &Tensor) {
+        self.store.lock().unwrap().insert(name.to_string(), codec::encode(value));
+    }
+
+    /// Pull a full parameter copy (deserializing, as across a process
+    /// boundary).
+    pub fn pull(&self, name: &str) -> Result<Tensor> {
+        let bytes = self.store.lock().unwrap().get(name).cloned().ok_or_else(|| {
+            crate::error::Status::not_found(format!("parameter {name:?}"))
+        })?;
+        *self.bytes_pulled.lock().unwrap() += bytes.len() as u64;
+        Ok(codec::decode(&bytes)?.0)
+    }
+
+    /// Push a gradient; the server applies SGD centrally.
+    pub fn push_gradient(&self, name: &str, grad: &Tensor) -> Result<()> {
+        let enc = codec::encode(grad);
+        *self.bytes_pushed.lock().unwrap() += enc.len() as u64;
+        let (grad, _) = codec::decode(&enc)?; // deserialize server-side
+        let mut store = self.store.lock().unwrap();
+        let cur = codec::decode(store.get(name).unwrap())?.0;
+        let gv = grad.as_f32()?;
+        let cv = cur.as_f32()?;
+        let new: Vec<f32> = cv.iter().zip(gv).map(|(&p, &g)| p - self.lr * g).collect();
+        store.insert(name.to_string(), codec::encode(&Tensor::from_f32(cur.shape().clone(), new)?));
+        Ok(())
+    }
+}
+
+/// Layer-by-layer MLP worker: pulls, computes forward + backward with the
+/// shared kernels, pushes gradients.
+pub struct BaselineTrainer {
+    ps: ParameterServer,
+    dims: Vec<usize>,
+}
+
+impl BaselineTrainer {
+    pub fn new(dims: &[usize], lr: f32, seed: u64) -> Result<BaselineTrainer> {
+        let ps = ParameterServer::new(lr);
+        let mut rng = crate::util::rng::Pcg32::new(seed);
+        for (i, pair) in dims.windows(2).enumerate() {
+            let std = (2.0 / pair[0] as f32).sqrt();
+            let w: Vec<f32> =
+                (0..pair[0] * pair[1]).map(|_| rng.normal() * std).collect();
+            ps.init(&format!("w{i}"), &Tensor::from_f32(vec![pair[0], pair[1]], w)?);
+            ps.init(&format!("b{i}"), &Tensor::zeros(crate::tensor::DType::F32, vec![pair[1]])?);
+        }
+        Ok(BaselineTrainer { ps, dims: dims.to_vec() })
+    }
+
+    /// One synchronous step over a batch; returns the loss.
+    pub fn step(&self, batch: &[Example], classes: usize) -> Result<f32> {
+        let (x, labels_i) = crate::data::batch_tensors(batch)?;
+        let labels = crate::data::one_hot(labels_i.as_i32()?, classes);
+        let n_layers = self.dims.len() - 1;
+        // PULL phase: fetch every parameter (full copies, per layer).
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for i in 0..n_layers {
+            ws.push(self.ps.pull(&format!("w{i}"))?);
+            bs.push(self.ps.pull(&format!("b{i}"))?);
+        }
+        // FORWARD, strictly serial layer-by-layer.
+        let mut acts = vec![x.clone()];
+        let mut pres = Vec::new();
+        for i in 0..n_layers {
+            let mm = matrix::matmul(acts.last().unwrap(), &ws[i], false, false)?;
+            let pre = nn::bias_add(&mm, &bs[i])?;
+            pres.push(pre.clone());
+            let a = if i + 1 < n_layers { nn::relu(&pre)? } else { pre };
+            acts.push(a);
+        }
+        let (loss_vec, backprop) = nn::softmax_xent(acts.last().unwrap(), &labels)?;
+        let loss = math::reduce(&loss_vec, "Mean", None)?.scalar_value_f32()?;
+        // BACKWARD.
+        let batch_n = batch.len() as f32;
+        let scale = Tensor::scalar_f32(1.0 / batch_n);
+        let mut delta = math::binary_elementwise(&backprop, &scale, "Mul")?;
+        for i in (0..n_layers).rev() {
+            let dw = matrix::matmul(&acts[i], &delta, true, false)?;
+            let db = nn::bias_add_grad(&delta)?;
+            // PUSH phase: full gradients to the parameter server.
+            self.ps.push_gradient(&format!("w{i}"), &dw)?;
+            self.ps.push_gradient(&format!("b{i}"), &db)?;
+            if i > 0 {
+                let da = matrix::matmul(&delta, &ws[i], false, true)?;
+                delta = nn::relu_grad(&da, &pres[i - 1])?;
+            }
+        }
+        Ok(loss)
+    }
+
+    pub fn wire_bytes(&self) -> (u64, u64) {
+        (*self.ps.bytes_pulled.lock().unwrap(), *self.ps.bytes_pushed.lock().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_converges() {
+        let examples = crate::data::synthetic_classification(64, 16, 4, 0.2, 3);
+        let t = BaselineTrainer::new(&[16, 32, 4], 0.5, 1).unwrap();
+        let first = t.step(&examples, 4).unwrap();
+        let mut last = first;
+        for _ in 0..60 {
+            last = t.step(&examples, 4).unwrap();
+        }
+        assert!(last < first * 0.5, "baseline failed to learn: {first} -> {last}");
+    }
+
+    #[test]
+    fn parameter_traffic_accounted() {
+        let examples = crate::data::synthetic_classification(16, 8, 2, 0.2, 3);
+        let t = BaselineTrainer::new(&[8, 16, 2], 0.1, 1).unwrap();
+        t.step(&examples, 2).unwrap();
+        let (pulled, pushed) = t.wire_bytes();
+        // Every parameter is pulled and every gradient pushed each step.
+        let param_bytes: u64 = (8 * 16 + 16 + 16 * 2 + 2) * 4;
+        assert!(pulled >= param_bytes);
+        assert!(pushed >= param_bytes);
+    }
+}

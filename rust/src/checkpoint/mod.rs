@@ -1,0 +1,190 @@
+//! Checkpointing (Table 1 row 6, §3.3 "Fault tolerance"): "each Variable
+//! node is connected to a Save node … executed periodically … the contents
+//! of the variables are written to persistent storage"; "each Variable is
+//! connected to a Restore node that is only enabled in the first iteration
+//! after a restart".
+//!
+//! File format ("tensor bundle"): magic, count, then per entry a
+//! length-prefixed name + `tensor::codec` payload. Writes go through a
+//! temp file + rename so a crash mid-save never corrupts the latest
+//! checkpoint.
+
+use super::kernels::{Kernel, KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::tensor::{codec, Tensor};
+use byteorder::{ByteOrder, LittleEndian};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"RFLOWCKP";
+
+/// Write a named-tensor bundle atomically.
+pub fn save_bundle(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    let mut cnt = [0u8; 4];
+    LittleEndian::write_u32(&mut cnt, tensors.len() as u32);
+    buf.extend_from_slice(&cnt);
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        let mut len = [0u8; 4];
+        LittleEndian::write_u32(&mut len, nb.len() as u32);
+        buf.extend_from_slice(&len);
+        buf.extend_from_slice(nb);
+        let payload = codec::encode(t);
+        let mut plen = [0u8; 8];
+        LittleEndian::write_u64(&mut plen, payload.len() as u64);
+        buf.extend_from_slice(&plen);
+        buf.extend_from_slice(&payload);
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(&buf)?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read a bundle back.
+pub fn load_bundle(path: &Path) -> Result<HashMap<String, Tensor>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| Status::not_found(format!("checkpoint {path:?}: {e}")))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 12 || &buf[..8] != MAGIC {
+        return Err(Status::invalid_argument(format!("{path:?} is not a rustflow checkpoint")));
+    }
+    let count = LittleEndian::read_u32(&buf[8..12]) as usize;
+    let mut pos = 12;
+    let mut out = HashMap::with_capacity(count);
+    for _ in 0..count {
+        if buf.len() < pos + 4 {
+            return Err(Status::invalid_argument("truncated checkpoint (name len)"));
+        }
+        let nlen = LittleEndian::read_u32(&buf[pos..pos + 4]) as usize;
+        pos += 4;
+        if buf.len() < pos + nlen + 8 {
+            return Err(Status::invalid_argument("truncated checkpoint (name)"));
+        }
+        let name = std::str::from_utf8(&buf[pos..pos + nlen])
+            .map_err(|_| Status::invalid_argument("bad name encoding"))?
+            .to_string();
+        pos += nlen;
+        let plen = LittleEndian::read_u64(&buf[pos..pos + 8]) as usize;
+        pos += 8;
+        if buf.len() < pos + plen {
+            return Err(Status::invalid_argument("truncated checkpoint (payload)"));
+        }
+        let (t, used) = codec::decode(&buf[pos..pos + plen])?;
+        if used != plen {
+            return Err(Status::invalid_argument("checkpoint payload length mismatch"));
+        }
+        pos += plen;
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Register the Save/Restore kernels.
+///
+/// Save: inputs = tensors to save; attrs `tensor_names` (list), `path`.
+/// Restore: no inputs; attrs `tensor_names`, `out_types`, `path`. Outputs
+/// the restored tensors in `tensor_names` order, which the graph Assigns
+/// into the Variables.
+pub(crate) fn register_kernels(r: &mut KernelRegistry) {
+    r.add("Save", |node| {
+        let names: Vec<String> = node.attr("tensor_names")?.as_list_str()?.to_vec();
+        let path = node.attr("path")?.as_str()?.to_string();
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            if ctx.inputs.len() != names.len() {
+                return Err(Status::invalid_argument(format!(
+                    "Save: {} inputs but {} tensor_names",
+                    ctx.inputs.len(),
+                    names.len()
+                )));
+            }
+            let pairs: Vec<(String, Tensor)> =
+                names.iter().cloned().zip(ctx.inputs.iter().cloned()).collect();
+            save_bundle(Path::new(&path), &pairs)?;
+            Ok(vec![])
+        })))
+    });
+
+    r.add("Restore", |node| {
+        let names: Vec<String> = node.attr("tensor_names")?.as_list_str()?.to_vec();
+        let path = node.attr("path")?.as_str()?.to_string();
+        Ok(Kernel::Sync(Box::new(move |_ctx: &mut KernelContext| {
+            let bundle = load_bundle(Path::new(&path))?;
+            names
+                .iter()
+                .map(|n| {
+                    bundle.get(n).cloned().ok_or_else(|| {
+                        Status::not_found(format!("tensor {n:?} not in checkpoint {path:?}"))
+                    })
+                })
+                .collect()
+        })))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rustflow-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let path = tmpdir("rt").join("model.ckpt");
+        let tensors = vec![
+            ("w".to_string(), Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap()),
+            ("b".to_string(), Tensor::from_f32(vec![2], vec![0.5, -0.5]).unwrap()),
+            ("step".to_string(), Tensor::scalar_i64(42)),
+        ];
+        save_bundle(&path, &tensors).unwrap();
+        let loaded = load_bundle(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(&loaded["w"], &tensors[0].1);
+        assert_eq!(&loaded["b"], &tensors[1].1);
+        assert_eq!(loaded["step"].scalar_value_i64().unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_file_is_not_found() {
+        let e = load_bundle(Path::new("/nonexistent/nope.ckpt")).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::NotFound);
+    }
+
+    #[test]
+    fn corrupt_file_rejected() {
+        let path = tmpdir("bad").join("garbage.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load_bundle(&path).is_err());
+    }
+
+    #[test]
+    fn overwrite_is_atomic_replacement() {
+        let path = tmpdir("ow").join("model.ckpt");
+        save_bundle(&path, &[("x".into(), Tensor::scalar_f32(1.0))]).unwrap();
+        save_bundle(&path, &[("x".into(), Tensor::scalar_f32(2.0))]).unwrap();
+        let loaded = load_bundle(&path).unwrap();
+        assert_eq!(loaded["x"].scalar_value_f32().unwrap(), 2.0);
+        // No stray tmp file.
+        assert!(!path.with_extension("tmp").exists());
+    }
+
+    #[test]
+    fn empty_bundle_ok() {
+        let path = tmpdir("empty").join("e.ckpt");
+        save_bundle(&path, &[]).unwrap();
+        assert!(load_bundle(&path).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,90 @@
+//! §5.5 lossy compression for cross-device/cross-machine tensor transfers:
+//! "convert 32-bit floating point representations into a 16-bit floating
+//! point representation (… a 32-bit IEEE 794 float format, but with 16
+//! bits less precision in the mantissa), and then convert back … by just
+//! filling in zeroes for the lost portion of the mantissa".
+//!
+//! That is precisely bf16-by-truncation: keep the upper 16 bits of the f32
+//! (sign + 8 exponent + 7 mantissa bits), zero-fill on decode.
+
+use crate::error::Result;
+use crate::tensor::{Tensor, TensorData};
+
+/// Truncate an f32 tensor to the bf16 wire format (upper 16 bits).
+pub fn f32_to_bf16(t: &Tensor) -> Result<Tensor> {
+    let v = t.as_f32()?;
+    let out: Vec<u16> = v.iter().map(|&x| (x.to_bits() >> 16) as u16).collect();
+    Tensor::new(t.shape().clone(), TensorData::BF16(out))
+}
+
+/// Expand a bf16 wire tensor back to f32 with zero-filled mantissa.
+pub fn bf16_to_f32(t: &Tensor) -> Result<Tensor> {
+    let v = t.as_bf16_raw()?;
+    let out: Vec<f32> = v.iter().map(|&x| f32::from_bits((x as u32) << 16)).collect();
+    Tensor::new(t.shape().clone(), TensorData::F32(out))
+}
+
+/// Worst-case relative error of the truncation: one ulp of a 7-bit
+/// mantissa, i.e. 2^-7 (truncation loses up to a full ulp; rounding would
+/// halve this — the paper explicitly chooses the cheaper truncation).
+pub const MAX_RELATIVE_ERROR: f32 = 1.0 / 128.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let vals: Vec<f32> = vec![
+            0.0, 1.0, -1.0, 3.14159, -2.71828, 1e-20, 1e20, 123456.789, -0.000123,
+        ];
+        let t = Tensor::from_f32(vec![vals.len()], vals.clone()).unwrap();
+        let rt = bf16_to_f32(&f32_to_bf16(&t).unwrap()).unwrap();
+        for (&orig, &back) in vals.iter().zip(rt.as_f32().unwrap()) {
+            if orig == 0.0 {
+                assert_eq!(back, 0.0);
+            } else {
+                let rel = ((orig - back) / orig).abs();
+                assert!(rel <= MAX_RELATIVE_ERROR, "orig={orig} back={back} rel={rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn halves_the_bytes() {
+        let t = Tensor::from_f32(vec![100], vec![1.5; 100]).unwrap();
+        let c = f32_to_bf16(&t).unwrap();
+        assert_eq!(c.size_bytes(), t.size_bytes() / 2);
+    }
+
+    #[test]
+    fn special_values_preserved() {
+        let t = Tensor::from_f32(vec![3], vec![f32::INFINITY, f32::NEG_INFINITY, f32::NAN])
+            .unwrap();
+        let rt = bf16_to_f32(&f32_to_bf16(&t).unwrap()).unwrap();
+        let v = rt.as_f32().unwrap();
+        assert_eq!(v[0], f32::INFINITY);
+        assert_eq!(v[1], f32::NEG_INFINITY);
+        assert!(v[2].is_nan());
+    }
+
+    #[test]
+    fn exact_for_small_integers() {
+        // Integers up to 2^7 are exactly representable in 7 mantissa bits…
+        for i in 0..=128 {
+            let t = Tensor::scalar_f32(i as f32);
+            let rt = bf16_to_f32(&f32_to_bf16(&t).unwrap()).unwrap();
+            assert_eq!(rt.scalar_value_f32().unwrap(), i as f32);
+        }
+    }
+
+    #[test]
+    fn truncation_not_rounding() {
+        // The paper says truncate (cheaper than probabilistic rounding):
+        // 1.0 + 2^-9 truncates back to 1.0.
+        let x = 1.0f32 + 2f32.powi(-9);
+        let t = Tensor::scalar_f32(x);
+        let rt = bf16_to_f32(&f32_to_bf16(&t).unwrap()).unwrap();
+        assert_eq!(rt.scalar_value_f32().unwrap(), 1.0);
+    }
+}

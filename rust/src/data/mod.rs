@@ -1,0 +1,254 @@
+//! Input operations (§4.5): "special input operation nodes in the graph,
+//! which are typically configured with a set of filenames, and which yield
+//! a tensor containing one or more examples from the data stored in that
+//! set of files each time they are executed."
+//!
+//! The record file format is a simple length-prefixed example container
+//! (features f32 vector + i32 label). `RecordInput` reads round-robin over
+//! its file list and emits `(features[batch,dim], labels[batch])`.
+//! `synthetic` generates MNIST-like datasets for the examples and benches
+//! (the image has no real datasets; see DESIGN.md substitutions).
+
+use crate::error::{Result, Status};
+use crate::kernels::{Kernel, KernelContext, KernelRegistry};
+use crate::tensor::{Shape, Tensor, TensorData};
+use crate::util::rng::Pcg32;
+use byteorder::{ByteOrder, LittleEndian};
+use std::io::{Read, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+const MAGIC: &[u8; 8] = b"RFLOWREC";
+
+/// One labelled example.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub features: Vec<f32>,
+    pub label: i32,
+}
+
+/// Write examples to a record file.
+pub fn write_records(path: &Path, examples: &[Example]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    let mut cnt = [0u8; 4];
+    LittleEndian::write_u32(&mut cnt, examples.len() as u32);
+    buf.extend_from_slice(&cnt);
+    for ex in examples {
+        let mut dim = [0u8; 4];
+        LittleEndian::write_u32(&mut dim, ex.features.len() as u32);
+        buf.extend_from_slice(&dim);
+        for &f in &ex.features {
+            let mut b = [0u8; 4];
+            LittleEndian::write_f32(&mut b, f);
+            buf.extend_from_slice(&b);
+        }
+        let mut lab = [0u8; 4];
+        LittleEndian::write_i32(&mut lab, ex.label);
+        buf.extend_from_slice(&lab);
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read every example in a record file.
+pub fn read_records(path: &Path) -> Result<Vec<Example>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| Status::not_found(format!("record file {path:?}: {e}")))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < 12 || &buf[..8] != MAGIC {
+        return Err(Status::invalid_argument(format!("{path:?} is not a rustflow record file")));
+    }
+    let count = LittleEndian::read_u32(&buf[8..12]) as usize;
+    let mut pos = 12;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if buf.len() < pos + 4 {
+            return Err(Status::invalid_argument("truncated record file"));
+        }
+        let dim = LittleEndian::read_u32(&buf[pos..pos + 4]) as usize;
+        pos += 4;
+        if buf.len() < pos + dim * 4 + 4 {
+            return Err(Status::invalid_argument("truncated record file"));
+        }
+        let mut features = Vec::with_capacity(dim);
+        for i in 0..dim {
+            features.push(LittleEndian::read_f32(&buf[pos + 4 * i..]));
+        }
+        pos += dim * 4;
+        let label = LittleEndian::read_i32(&buf[pos..pos + 4]);
+        pos += 4;
+        out.push(Example { features, label });
+    }
+    Ok(out)
+}
+
+/// Synthetic MNIST-like dataset: class-conditional Gaussian blobs in
+/// `dim`-dimensional space. Learnable but not trivially separable (blob
+/// centers drawn at unit norm, per-pixel noise sigma configurable).
+pub fn synthetic_classification(
+    n: usize,
+    dim: usize,
+    classes: usize,
+    noise: f32,
+    seed: u64,
+) -> Vec<Example> {
+    let mut rng = Pcg32::new(seed);
+    // Class centers.
+    let centers: Vec<Vec<f32>> = (0..classes)
+        .map(|_| {
+            let v: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-6);
+            v.into_iter().map(|x| x / norm).collect()
+        })
+        .collect();
+    (0..n)
+        .map(|i| {
+            let label = (i % classes) as i32;
+            let c = &centers[label as usize];
+            let features: Vec<f32> = c.iter().map(|&m| m + noise * rng.normal()).collect();
+            Example { features, label }
+        })
+        .collect()
+}
+
+/// One-hot encode labels into [batch, classes] f32.
+pub fn one_hot(labels: &[i32], classes: usize) -> Tensor {
+    let mut out = vec![0f32; labels.len() * classes];
+    for (i, &l) in labels.iter().enumerate() {
+        out[i * classes + l as usize] = 1.0;
+    }
+    Tensor::new(Shape(vec![labels.len(), classes]), TensorData::F32(out)).unwrap()
+}
+
+/// Batch a slice of examples into (features, labels) tensors.
+pub fn batch_tensors(examples: &[Example]) -> Result<(Tensor, Tensor)> {
+    if examples.is_empty() {
+        return Err(Status::invalid_argument("empty batch"));
+    }
+    let dim = examples[0].features.len();
+    let mut feats = Vec::with_capacity(examples.len() * dim);
+    let mut labels = Vec::with_capacity(examples.len());
+    for ex in examples {
+        if ex.features.len() != dim {
+            return Err(Status::invalid_argument("ragged example dimensions"));
+        }
+        feats.extend_from_slice(&ex.features);
+        labels.push(ex.label);
+    }
+    Ok((
+        Tensor::new(Shape(vec![examples.len(), dim]), TensorData::F32(feats))?,
+        Tensor::new(Shape(vec![examples.len()]), TensorData::I32(labels))?,
+    ))
+}
+
+/// RecordInput kernel: round-robin batches over a file list, wrapping at
+/// EOF (stateful op; §4.5 — "data read directly from the underlying
+/// storage system into the memory of the machine that will perform
+/// subsequent processing").
+pub(crate) fn register_kernels(r: &mut KernelRegistry) {
+    r.add("RecordInput", |node| {
+        let files: Vec<String> = node.attr("files")?.as_list_str()?.to_vec();
+        let batch = node.attr_opt("batch_size").and_then(|a| a.as_i64().ok()).unwrap_or(32) as usize;
+        // Lazy-load on first execution; cursor is kernel state.
+        struct State {
+            examples: Vec<Example>,
+            cursor: usize,
+        }
+        let state: Mutex<Option<State>> = Mutex::new(None);
+        Ok(Kernel::Sync(Box::new(move |_ctx: &mut KernelContext| {
+            let mut guard = state.lock().unwrap();
+            if guard.is_none() {
+                let mut all = Vec::new();
+                for f in &files {
+                    all.extend(read_records(Path::new(f))?);
+                }
+                if all.is_empty() {
+                    return Err(Status::out_of_range("RecordInput: no examples in files"));
+                }
+                *guard = Some(State { examples: all, cursor: 0 });
+            }
+            let st = guard.as_mut().unwrap();
+            let mut batch_ex = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                batch_ex.push(st.examples[st.cursor].clone());
+                st.cursor = (st.cursor + 1) % st.examples.len();
+            }
+            let (f, l) = batch_tensors(&batch_ex)?;
+            Ok(vec![f, l])
+        })))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rustflow-rec-{tag}-{}.rec", std::process::id()))
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let path = tmp("rt");
+        let examples = vec![
+            Example { features: vec![1., 2., 3.], label: 0 },
+            Example { features: vec![4., 5., 6.], label: 1 },
+        ];
+        write_records(&path, &examples).unwrap();
+        let back = read_records(&path).unwrap();
+        assert_eq!(back, examples);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic_and_labeled() {
+        let a = synthetic_classification(100, 8, 10, 0.1, 7);
+        let b = synthetic_classification(100, 8, 10, 0.1, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        // Labels round-robin over classes.
+        assert!(a.iter().enumerate().all(|(i, e)| e.label == (i % 10) as i32));
+    }
+
+    #[test]
+    fn synthetic_classes_separated() {
+        // With tiny noise, same-class examples are closer than cross-class.
+        let ex = synthetic_classification(40, 16, 2, 0.01, 3);
+        let d = |a: &Example, b: &Example| -> f32 {
+            a.features.iter().zip(&b.features).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let same = d(&ex[0], &ex[2]); // both class 0
+        let cross = d(&ex[0], &ex[1]); // class 0 vs 1
+        assert!(same < cross);
+    }
+
+    #[test]
+    fn one_hot_encoding() {
+        let t = one_hot(&[1, 0, 2], 3);
+        assert_eq!(t.shape().dims(), &[3, 3]);
+        assert_eq!(t.as_f32().unwrap(), &[0., 1., 0., 1., 0., 0., 0., 0., 1.]);
+    }
+
+    #[test]
+    fn batch_tensors_shapes() {
+        let ex = synthetic_classification(6, 4, 3, 0.1, 1);
+        let (f, l) = batch_tensors(&ex).unwrap();
+        assert_eq!(f.shape().dims(), &[6, 4]);
+        assert_eq!(l.shape().dims(), &[6]);
+        assert_eq!(l.as_i32().unwrap(), &[0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn ragged_batch_rejected() {
+        let ex = vec![
+            Example { features: vec![1.], label: 0 },
+            Example { features: vec![1., 2.], label: 1 },
+        ];
+        assert!(batch_tensors(&ex).is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Devices (§3 "Devices"): "each device has a device type and a name …
+//! composed of pieces that identify the device's type, the device's index
+//! within the worker, and, in our distributed setting, an identification
+//! of the job and task of the worker".
+//!
+//! This testbed has one physical CPU; heterogeneity is reproduced with
+//! *virtual devices*: each device gets its own kernel thread pool and
+//! allocator statistics, and the §3.2.1 cost model assigns per-device-type
+//! relative speeds so the placement problem stays non-trivial.
+
+pub mod spec;
+
+pub use spec::{DeviceSpec, PartialDeviceSpec};
+
+use crate::error::{Result, Status};
+use crate::util::threadpool::ThreadPool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Allocator statistics per device ("each device object is responsible for
+/// managing allocation and deallocation of device memory"). Tensors are
+/// host Vecs here, so the stats track logical tensor bytes registered by
+/// the executor — which is exactly what the §5.2 peak-memory experiment
+/// measures.
+#[derive(Debug, Default)]
+pub struct AllocatorStats {
+    live_bytes: AtomicU64,
+    peak_bytes: AtomicU64,
+    total_allocs: AtomicU64,
+}
+
+impl AllocatorStats {
+    pub fn alloc(&self, bytes: usize) {
+        self.total_allocs.fetch_add(1, Ordering::Relaxed);
+        let live = self.live_bytes.fetch_add(bytes as u64, Ordering::Relaxed) + bytes as u64;
+        self.peak_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+
+    pub fn dealloc(&self, bytes: usize) {
+        self.live_bytes.fetch_sub(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn live_bytes(&self) -> u64 {
+        self.live_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn total_allocs(&self) -> u64 {
+        self.total_allocs.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak_bytes.store(self.live_bytes.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// A computational device: name + kernel execution pool + allocator stats.
+pub struct Device {
+    pub spec: DeviceSpec,
+    pub pool: ThreadPool,
+    pub stats: AllocatorStats,
+}
+
+impl Device {
+    pub fn new(spec: DeviceSpec, threads: usize) -> Device {
+        let name = format!("dev-{}-{}", spec.device_type, spec.index);
+        Device { spec, pool: ThreadPool::new(threads, &name), stats: AllocatorStats::default() }
+    }
+
+    pub fn name(&self) -> String {
+        self.spec.to_string()
+    }
+
+    pub fn device_type(&self) -> &str {
+        &self.spec.device_type
+    }
+}
+
+impl std::fmt::Debug for Device {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Device({})", self.spec)
+    }
+}
+
+/// The set of devices managed by one worker process ("each worker process
+/// [is] responsible for arbitrating access to one or more computational
+/// devices").
+#[derive(Debug, Clone, Default)]
+pub struct DeviceSet {
+    devices: Vec<Arc<Device>>,
+}
+
+impl DeviceSet {
+    pub fn new(devices: Vec<Arc<Device>>) -> DeviceSet {
+        DeviceSet { devices }
+    }
+
+    /// A local single-process device set: `/job:localhost/task:0/device:cpu:i`.
+    pub fn local(num_devices: usize, threads_per_device: usize) -> DeviceSet {
+        let devices = (0..num_devices)
+            .map(|i| {
+                Arc::new(Device::new(
+                    DeviceSpec::local_cpu(i),
+                    threads_per_device,
+                ))
+            })
+            .collect();
+        DeviceSet { devices }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn devices(&self) -> &[Arc<Device>] {
+        &self.devices
+    }
+
+    pub fn get(&self, i: usize) -> &Arc<Device> {
+        &self.devices[i]
+    }
+
+    pub fn find_by_name(&self, name: &str) -> Result<Arc<Device>> {
+        let spec = DeviceSpec::parse(name)?;
+        self.devices
+            .iter()
+            .find(|d| d.spec == spec)
+            .cloned()
+            .ok_or_else(|| Status::not_found(format!("device {name:?} not in device set")))
+    }
+
+    /// Devices matching a partial constraint (§4.3), e.g.
+    /// "/job:worker/task:17" matches all of that task's devices.
+    pub fn matching(&self, partial: &PartialDeviceSpec) -> Vec<Arc<Device>> {
+        self.devices.iter().filter(|d| partial.matches(&d.spec)).cloned().collect()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.devices.iter().map(|d| d.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_device_set() {
+        let ds = DeviceSet::local(3, 2);
+        assert_eq!(ds.len(), 3);
+        assert_eq!(ds.get(0).name(), "/job:localhost/task:0/device:cpu:0");
+        assert!(ds.find_by_name("/job:localhost/task:0/device:cpu:2").is_ok());
+        assert!(ds.find_by_name("/job:localhost/task:0/device:cpu:9").is_err());
+    }
+
+    #[test]
+    fn matching_partial() {
+        let ds = DeviceSet::local(4, 1);
+        let p = PartialDeviceSpec::parse("/device:cpu:1").unwrap();
+        let m = ds.matching(&p);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].spec.index, 1);
+        let all = PartialDeviceSpec::parse("/job:localhost").unwrap();
+        assert_eq!(ds.matching(&all).len(), 4);
+    }
+
+    #[test]
+    fn allocator_stats_track_peak() {
+        let s = AllocatorStats::default();
+        s.alloc(100);
+        s.alloc(50);
+        s.dealloc(100);
+        s.alloc(10);
+        assert_eq!(s.live_bytes(), 60);
+        assert_eq!(s.peak_bytes(), 150);
+        assert_eq!(s.total_allocs(), 3);
+        s.reset_peak();
+        assert_eq!(s.peak_bytes(), 60);
+    }
+}

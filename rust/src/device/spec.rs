@@ -1,0 +1,219 @@
+//! Device names, e.g. `/job:worker/task:17/device:gpu:3` or
+//! `/job:localhost/task:0/device:cpu:0` (§3 "Devices"), and partial
+//! constraint specs like `/job:worker/task:17` or `/device:gpu:*` (§4.3).
+
+use crate::error::{Result, Status};
+
+/// A fully-qualified device name.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DeviceSpec {
+    pub job: String,
+    pub task: usize,
+    pub device_type: String, // lowercase, e.g. "cpu"
+    pub index: usize,
+}
+
+impl DeviceSpec {
+    pub fn new(job: &str, task: usize, device_type: &str, index: usize) -> DeviceSpec {
+        DeviceSpec {
+            job: job.to_string(),
+            task,
+            device_type: device_type.to_lowercase(),
+            index,
+        }
+    }
+
+    pub fn local_cpu(index: usize) -> DeviceSpec {
+        DeviceSpec::new("localhost", 0, "cpu", index)
+    }
+
+    pub fn worker_cpu(task: usize, index: usize) -> DeviceSpec {
+        DeviceSpec::new("worker", task, "cpu", index)
+    }
+
+    /// Parse a full device name. All four components required.
+    pub fn parse(s: &str) -> Result<DeviceSpec> {
+        let p = PartialDeviceSpec::parse(s)?;
+        match (p.job, p.task, p.device_type, p.index) {
+            (Some(job), Some(task), Some(device_type), Some(index)) => {
+                Ok(DeviceSpec { job, task, device_type, index })
+            }
+            _ => Err(Status::invalid_argument(format!("device name {s:?} is not fully specified"))),
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "/job:{}/task:{}/device:{}:{}", self.job, self.task, self.device_type, self.index)
+    }
+}
+
+/// A partial device constraint: any subset of the components.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PartialDeviceSpec {
+    pub job: Option<String>,
+    pub task: Option<usize>,
+    pub device_type: Option<String>,
+    pub index: Option<usize>,
+}
+
+impl PartialDeviceSpec {
+    pub fn any() -> PartialDeviceSpec {
+        PartialDeviceSpec::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.job.is_none() && self.task.is_none() && self.device_type.is_none() && self.index.is_none()
+    }
+
+    /// Parse specs like "/job:worker/task:17", "/device:gpu:3",
+    /// "/job:ps/device:cpu:0", "" (matches anything).
+    pub fn parse(s: &str) -> Result<PartialDeviceSpec> {
+        let mut out = PartialDeviceSpec::default();
+        if s.is_empty() {
+            return Ok(out);
+        }
+        let bad = || Status::invalid_argument(format!("malformed device spec {s:?}"));
+        for part in s.split('/') {
+            if part.is_empty() {
+                continue;
+            }
+            let mut it = part.splitn(2, ':');
+            let key = it.next().ok_or_else(bad)?;
+            let value = it.next().ok_or_else(bad)?;
+            match key {
+                "job" => out.job = Some(value.to_string()),
+                "task" | "replica" => {
+                    out.task = Some(value.parse().map_err(|_| bad())?);
+                }
+                "device" => {
+                    // "device:cpu:0" or "device:cpu" or "device:cpu:*"
+                    let mut dv = value.splitn(2, ':');
+                    let ty = dv.next().ok_or_else(bad)?;
+                    out.device_type = Some(ty.to_lowercase());
+                    if let Some(idx) = dv.next() {
+                        if idx != "*" {
+                            out.index = Some(idx.parse().map_err(|_| bad())?);
+                        }
+                    }
+                }
+                // Legacy bare "cpu:0" / "gpu:1" form.
+                "cpu" | "gpu" | "tpu" => {
+                    out.device_type = Some(key.to_string());
+                    if value != "*" {
+                        out.index = Some(value.parse().map_err(|_| bad())?);
+                    }
+                }
+                _ => return Err(bad()),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn matches(&self, spec: &DeviceSpec) -> bool {
+        self.job.as_ref().map_or(true, |j| *j == spec.job)
+            && self.task.map_or(true, |t| t == spec.task)
+            && self.device_type.as_ref().map_or(true, |d| *d == spec.device_type)
+            && self.index.map_or(true, |i| i == spec.index)
+    }
+
+    /// Merge two constraints; error when they conflict (used when a node's
+    /// requested device meets its colocation group's constraint, §4.3).
+    pub fn merge(&self, other: &PartialDeviceSpec) -> Result<PartialDeviceSpec> {
+        fn combine<T: Clone + PartialEq + std::fmt::Debug>(
+            a: &Option<T>,
+            b: &Option<T>,
+        ) -> Result<Option<T>> {
+            match (a, b) {
+                (Some(x), Some(y)) if x != y => Err(Status::invalid_argument(format!(
+                    "conflicting device constraints: {x:?} vs {y:?}"
+                ))),
+                (Some(x), _) => Ok(Some(x.clone())),
+                (None, y) => Ok(y.clone()),
+            }
+        }
+        Ok(PartialDeviceSpec {
+            job: combine(&self.job, &other.job)?,
+            task: combine(&self.task, &other.task)?,
+            device_type: combine(&self.device_type, &other.device_type)?,
+            index: combine(&self.index, &other.index)?,
+        })
+    }
+}
+
+impl std::fmt::Display for PartialDeviceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if let Some(j) = &self.job {
+            write!(f, "/job:{j}")?;
+        }
+        if let Some(t) = self.task {
+            write!(f, "/task:{t}")?;
+        }
+        if let Some(d) = &self.device_type {
+            write!(f, "/device:{d}")?;
+            if let Some(i) = self.index {
+                write!(f, ":{i}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full() {
+        let s = DeviceSpec::parse("/job:worker/task:17/device:gpu:3").unwrap();
+        assert_eq!(s, DeviceSpec::new("worker", 17, "gpu", 3));
+        assert_eq!(s.to_string(), "/job:worker/task:17/device:gpu:3");
+    }
+
+    #[test]
+    fn parse_paper_examples() {
+        // Both example names from §3 "Devices".
+        assert!(DeviceSpec::parse("/job:localhost/task:0/device:cpu:0").is_ok());
+        assert!(DeviceSpec::parse("/job:worker/task:17/device:cpu:3").is_ok());
+    }
+
+    #[test]
+    fn parse_partial() {
+        let p = PartialDeviceSpec::parse("/job:worker/task:17").unwrap();
+        assert_eq!(p.job.as_deref(), Some("worker"));
+        assert_eq!(p.task, Some(17));
+        assert!(p.device_type.is_none());
+        let q = PartialDeviceSpec::parse("/device:gpu:*").unwrap();
+        assert_eq!(q.device_type.as_deref(), Some("gpu"));
+        assert!(q.index.is_none());
+        assert!(PartialDeviceSpec::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(PartialDeviceSpec::parse("/bogus:1").is_err());
+        assert!(PartialDeviceSpec::parse("/task:x").is_err());
+        assert!(DeviceSpec::parse("/job:worker").is_err()); // not full
+    }
+
+    #[test]
+    fn matching() {
+        let d = DeviceSpec::new("worker", 2, "cpu", 1);
+        assert!(PartialDeviceSpec::parse("/job:worker").unwrap().matches(&d));
+        assert!(PartialDeviceSpec::parse("/device:cpu:1").unwrap().matches(&d));
+        assert!(!PartialDeviceSpec::parse("/device:cpu:0").unwrap().matches(&d));
+        assert!(!PartialDeviceSpec::parse("/job:ps").unwrap().matches(&d));
+        assert!(PartialDeviceSpec::any().matches(&d));
+    }
+
+    #[test]
+    fn merge_constraints() {
+        let a = PartialDeviceSpec::parse("/job:worker").unwrap();
+        let b = PartialDeviceSpec::parse("/device:cpu:0").unwrap();
+        let m = a.merge(&b).unwrap();
+        assert!(m.matches(&DeviceSpec::new("worker", 5, "cpu", 0)));
+        let c = PartialDeviceSpec::parse("/job:ps").unwrap();
+        assert!(a.merge(&c).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! The master (§3): receives the client's graph through the Session-like
+//! interface, places it over every worker's devices, ships partitions, and
+//! per step "issue[s] a single Run request per graph execution to each
+//! worker that has any nodes for the graph". Also runs the §3.3 health
+//! checks.
+
+use super::proto::{self, RegisterGraph, RunPartition, RunReply};
+use super::ClusterSpec;
+use crate::device::{Device, DeviceSet, DeviceSpec};
+use crate::error::{Result, Status};
+use crate::graph::Graph;
+use crate::partition::{partition, PartitionOptions};
+use crate::passes;
+use crate::placement::{place, CostModel};
+use crate::session::prune_for_run;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+#[derive(Clone)]
+pub struct DistMasterOptions {
+    pub enable_cse: bool,
+    pub enable_recv_scheduling: bool,
+    pub partition: PartitionOptions,
+    pub cost_model: CostModel,
+}
+
+impl Default for DistMasterOptions {
+    fn default() -> Self {
+        DistMasterOptions {
+            enable_cse: true,
+            enable_recv_scheduling: true,
+            partition: PartitionOptions::default(),
+            cost_model: CostModel::new(),
+        }
+    }
+}
+
+struct CachedStep {
+    /// (task, handle) per registered partition.
+    partitions: Vec<(usize, u64)>,
+    feed_keys: Vec<String>,
+    fetch_keys: Vec<String>,
+}
+
+/// Client-facing distributed session.
+pub struct DistMaster {
+    cluster: ClusterSpec,
+    graph: Mutex<Graph>,
+    options: DistMasterOptions,
+    /// Placement metadata mirror of the remote devices (no kernels run on
+    /// these Device objects).
+    device_mirror: DeviceSet,
+    next_step: AtomicU64,
+    cache: Mutex<HashMap<String, Arc<CachedStep>>>,
+}
+
+impl DistMaster {
+    pub fn new(cluster: ClusterSpec, graph: Graph, options: DistMasterOptions) -> DistMaster {
+        let mut devices = Vec::new();
+        for t in 0..cluster.num_tasks() {
+            for d in 0..cluster.devices_per_worker {
+                devices.push(Arc::new(Device::new(DeviceSpec::worker_cpu(t, d), 1)));
+            }
+        }
+        DistMaster {
+            cluster,
+            graph: Mutex::new(graph),
+            options,
+            device_mirror: DeviceSet::new(devices),
+            next_step: AtomicU64::new(1),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// §3.3 health checks: ping every worker.
+    pub fn health_check(&self) -> Result<()> {
+        for (t, addr) in self.cluster.workers.iter().enumerate() {
+            let (msg, _) = proto::rpc(addr, proto::MSG_HEALTH, b"")
+                .map_err(|e| Status::unavailable(format!("worker task {t} unreachable: {}", e.message)))?;
+            if msg != proto::MSG_HEALTH_OK {
+                return Err(Status::unavailable(format!("worker task {t} unhealthy")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop cached registrations (after a worker restart the handles are
+    /// gone; the next run re-places and re-registers).
+    pub fn invalidate(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    pub fn run_targets(&self, targets: &[&str]) -> Result<()> {
+        self.run(&[], &[], targets)?;
+        Ok(())
+    }
+
+    pub fn run(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+        targets: &[&str],
+    ) -> Result<Vec<Tensor>> {
+        let signature = {
+            let mut s = String::new();
+            for (k, _) in feeds {
+                s.push_str(k);
+                s.push(';');
+            }
+            s.push('|');
+            for f in fetches {
+                s.push_str(f);
+                s.push(';');
+            }
+            s.push('|');
+            for t in targets {
+                s.push_str(t);
+                s.push(';');
+            }
+            s
+        };
+        let cached = {
+            let c = self.cache.lock().unwrap();
+            c.get(&signature).cloned()
+        };
+        let cached = match cached {
+            Some(c) => c,
+            None => {
+                let built = Arc::new(self.build_step(feeds, fetches, targets)?);
+                self.cache.lock().unwrap().insert(signature, Arc::clone(&built));
+                built
+            }
+        };
+
+        let step_id = self.next_step.fetch_add(1, Ordering::SeqCst);
+        let feed_map: Vec<(String, Tensor)> = feeds
+            .iter()
+            .zip(&cached.feed_keys)
+            .map(|((_, t), k)| (k.clone(), t.clone()))
+            .collect();
+
+        // One Run request per partition, concurrently.
+        let replies: Vec<Result<RunReply>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = cached
+                .partitions
+                .iter()
+                .map(|&(task, handle)| {
+                    let addr = self.cluster.addr_of(task).to_string();
+                    let feeds = feed_map.clone();
+                    scope.spawn(move || -> Result<RunReply> {
+                        let msg = RunPartition { handle, step_id, feeds };
+                        let (t, payload) =
+                            proto::rpc(&addr, proto::MSG_RUN_PARTITION, &msg.encode())?;
+                        if t != proto::MSG_RUN_REPLY {
+                            return Err(Status::internal(format!("unexpected reply {t}")));
+                        }
+                        RunReply::decode(&payload)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rpc thread panicked")).collect()
+        });
+
+        let mut fetched: HashMap<String, Tensor> = HashMap::new();
+        let mut first_error: Option<Status> = None;
+        for reply in replies {
+            match reply {
+                Ok(r) => {
+                    if let Err(e) = r.status {
+                        first_error.get_or_insert(e);
+                    }
+                    fetched.extend(r.fetches);
+                }
+                Err(e) => {
+                    first_error.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_error {
+            return Err(e);
+        }
+        cached
+            .fetch_keys
+            .iter()
+            .map(|k| {
+                fetched
+                    .remove(k)
+                    .ok_or_else(|| Status::internal(format!("fetch {k:?} missing from replies")))
+            })
+            .collect()
+    }
+
+    fn build_step(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+        targets: &[&str],
+    ) -> Result<CachedStep> {
+        let full = self.graph.lock().unwrap().clone();
+        let (pruned, feed_keys, fetch_keys) = prune_for_run(
+            &full,
+            &feeds.iter().map(|(k, _)| *k).collect::<Vec<_>>(),
+            fetches,
+            targets,
+        )?;
+        let pruned = if self.options.enable_cse {
+            passes::common_subexpression_elimination(&pruned)?.0
+        } else {
+            pruned
+        };
+        let mut placed = pruned;
+        place(&mut placed, &self.device_mirror, &self.options.cost_model)?;
+        // Rendezvous keys carry %STEP%, substituted per step by the
+        // Send/Recv kernels — one registration serves every step.
+        let (mut parts, _stats) = partition(&placed, &self.options.partition, "%STEP%;")?;
+        if self.options.enable_recv_scheduling {
+            passes::schedule_recvs_global(&mut parts, &self.options.cost_model)?;
+        }
+        let mut partitions = Vec::with_capacity(parts.len());
+        for p in &parts {
+            let task = ClusterSpec::task_of_device(&p.device)?;
+            let msg = RegisterGraph { graph: p.graph.clone() };
+            let (t, payload) =
+                proto::rpc(self.cluster.addr_of(task), proto::MSG_REGISTER_GRAPH, &msg.encode())?;
+            if t != proto::MSG_REGISTER_REPLY {
+                return Err(Status::internal(format!("unexpected register reply {t}")));
+            }
+            if payload.first() != Some(&255) || payload.len() < 9 {
+                return Err(Status::internal(format!(
+                    "register failed on task {task}: {}",
+                    String::from_utf8_lossy(&payload[1..])
+                )));
+            }
+            let handle = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+            partitions.push((task, handle));
+        }
+        Ok(CachedStep { partitions, feed_keys, fetch_keys })
+    }
+}

@@ -1,0 +1,56 @@
+//! Distributed execution (§3.3): a master process drives worker processes
+//! over TCP. "The distributed implementation shares most of the code with
+//! the local implementation, but extends it with support for an
+//! environment where the client, the master, and the workers can all be in
+//! different processes on different machines."
+//!
+//! - the master places the client graph over every worker's devices,
+//!   partitions it, registers each per-device partition with its worker,
+//!   and per step "issue[s] a single Run request … to each worker that has
+//!   any nodes for the graph";
+//! - workers execute partitions with their local executors; cross-worker
+//!   Send/Recv pairs pull tensors directly worker↔worker through
+//!   [`RemoteRendezvous`] (the master is NOT on the data path);
+//! - fault tolerance: "(a) an error in a communication between a Send and
+//!   Receive node pair, and (b) periodic health-checks from the master
+//!   process to every worker process" — both are surfaced as `Unavailable`
+//!   / `Aborted` run errors, and training loops recover by restoring
+//!   variables from the latest checkpoint (see `examples/distributed.rs`
+//!   and experiment E17).
+
+pub mod master;
+pub mod proto;
+pub mod rendezvous;
+pub mod worker;
+
+pub use master::{DistMaster, DistMasterOptions};
+pub use rendezvous::RemoteRendezvous;
+pub use worker::Worker;
+
+/// Addresses of every worker task; task index = position.
+/// Device names are `/job:worker/task:<i>/device:cpu:<j>`.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub workers: Vec<String>,
+    pub devices_per_worker: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(workers: Vec<String>, devices_per_worker: usize) -> ClusterSpec {
+        ClusterSpec { workers, devices_per_worker: devices_per_worker.max(1) }
+    }
+
+    pub fn num_tasks(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn addr_of(&self, task: usize) -> &str {
+        &self.workers[task]
+    }
+
+    /// Parse the task index out of a device name.
+    pub fn task_of_device(device: &str) -> crate::error::Result<usize> {
+        let spec = crate::device::DeviceSpec::parse(device)?;
+        Ok(spec.task)
+    }
+}

@@ -1,0 +1,304 @@
+//! Wire protocol between master ⇄ worker and worker ⇄ worker (§3.3).
+//! Length-prefixed frames over TCP; payloads reuse the graph/tensor
+//! codecs. ("Send/Receive node pairs that communicate across worker
+//! processes use remote communication mechanisms such as TCP or RDMA.")
+
+use crate::error::{Code, Result, Status};
+use crate::graph::Graph;
+use crate::tensor::{codec, Tensor};
+use byteorder::{ByteOrder, LittleEndian};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+pub const MSG_REGISTER_GRAPH: u8 = 1;
+pub const MSG_REGISTER_REPLY: u8 = 2;
+pub const MSG_RUN_PARTITION: u8 = 3;
+pub const MSG_RUN_REPLY: u8 = 4;
+pub const MSG_RECV_TENSOR: u8 = 5;
+pub const MSG_TENSOR_REPLY: u8 = 6;
+pub const MSG_HEALTH: u8 = 7;
+pub const MSG_HEALTH_OK: u8 = 8;
+pub const MSG_SHUTDOWN: u8 = 9;
+pub const MSG_RESET: u8 = 10;
+
+/// Write one frame: u32 length, u8 type, payload.
+pub fn write_frame(stream: &mut TcpStream, msg_type: u8, payload: &[u8]) -> Result<()> {
+    let mut header = [0u8; 5];
+    LittleEndian::write_u32(&mut header, payload.len() as u32 + 1);
+    header[4] = msg_type;
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame.
+pub fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header)?;
+    let len = LittleEndian::read_u32(&header) as usize;
+    if len == 0 {
+        return Err(Status::unavailable("empty frame"));
+    }
+    let msg_type = header[4];
+    let mut payload = vec![0u8; len - 1];
+    stream.read_exact(&mut payload)?;
+    Ok((msg_type, payload))
+}
+
+// ---- message payloads -------------------------------------------------------
+
+pub struct RegisterGraph {
+    pub graph: Graph,
+}
+
+impl RegisterGraph {
+    pub fn encode(&self) -> Vec<u8> {
+        crate::graph::serde::encode_graph(&self.graph)
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RegisterGraph> {
+        Ok(RegisterGraph { graph: crate::graph::serde::decode_graph(buf)? })
+    }
+}
+
+pub struct RunPartition {
+    pub handle: u64,
+    pub step_id: u64,
+    pub feeds: Vec<(String, Tensor)>,
+}
+
+impl RunPartition {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut b = [0u8; 8];
+        LittleEndian::write_u64(&mut b, self.handle);
+        out.extend_from_slice(&b);
+        LittleEndian::write_u64(&mut b, self.step_id);
+        out.extend_from_slice(&b);
+        encode_tensor_map(&mut out, &self.feeds);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RunPartition> {
+        if buf.len() < 16 {
+            return Err(Status::invalid_argument("short RunPartition"));
+        }
+        let handle = LittleEndian::read_u64(&buf[0..8]);
+        let step_id = LittleEndian::read_u64(&buf[8..16]);
+        let mut pos = 16;
+        let feeds = decode_tensor_map(buf, &mut pos)?;
+        Ok(RunPartition { handle, step_id, feeds })
+    }
+}
+
+pub struct RunReply {
+    pub status: Result<()>,
+    pub fetches: Vec<(String, Tensor)>,
+}
+
+impl RunReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_status(&mut out, &self.status);
+        encode_tensor_map(&mut out, &self.fetches);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<RunReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        let fetches = decode_tensor_map(buf, &mut pos)?;
+        Ok(RunReply { status, fetches })
+    }
+}
+
+pub struct TensorReply {
+    pub status: Result<Tensor>,
+}
+
+impl TensorReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match &self.status {
+            Ok(t) => {
+                encode_status(&mut out, &Ok(()));
+                out.extend(codec::encode(t));
+            }
+            Err(e) => encode_status(&mut out, &Err(e.clone())),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<TensorReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        match status {
+            Ok(()) => {
+                let (t, _) = codec::decode(&buf[pos..])?;
+                Ok(TensorReply { status: Ok(t) })
+            }
+            Err(e) => Ok(TensorReply { status: Err(e) }),
+        }
+    }
+}
+
+fn encode_status(out: &mut Vec<u8>, s: &Result<()>) {
+    match s {
+        Ok(()) => {
+            out.push(255);
+        }
+        Err(e) => {
+            out.push(e.code.as_u8());
+            let msg = e.message.as_bytes();
+            let mut b = [0u8; 4];
+            LittleEndian::write_u32(&mut b, msg.len() as u32);
+            out.extend_from_slice(&b);
+            out.extend_from_slice(msg);
+        }
+    }
+}
+
+fn decode_status(buf: &[u8], pos: &mut usize) -> Result<Result<()>> {
+    if buf.len() <= *pos {
+        return Err(Status::invalid_argument("short status"));
+    }
+    let code = buf[*pos];
+    *pos += 1;
+    if code == 255 {
+        return Ok(Ok(()));
+    }
+    if buf.len() < *pos + 4 {
+        return Err(Status::invalid_argument("short status message"));
+    }
+    let len = LittleEndian::read_u32(&buf[*pos..]) as usize;
+    *pos += 4;
+    if buf.len() < *pos + len {
+        return Err(Status::invalid_argument("short status message body"));
+    }
+    let msg = String::from_utf8_lossy(&buf[*pos..*pos + len]).to_string();
+    *pos += len;
+    Ok(Err(Status::new(Code::from_u8(code), msg)))
+}
+
+fn encode_tensor_map(out: &mut Vec<u8>, m: &[(String, Tensor)]) {
+    let mut b = [0u8; 4];
+    LittleEndian::write_u32(&mut b, m.len() as u32);
+    out.extend_from_slice(&b);
+    for (k, t) in m {
+        LittleEndian::write_u32(&mut b, k.len() as u32);
+        out.extend_from_slice(&b);
+        out.extend_from_slice(k.as_bytes());
+        let payload = codec::encode(t);
+        let mut l = [0u8; 8];
+        LittleEndian::write_u64(&mut l, payload.len() as u64);
+        out.extend_from_slice(&l);
+        out.extend_from_slice(&payload);
+    }
+}
+
+fn decode_tensor_map(buf: &[u8], pos: &mut usize) -> Result<Vec<(String, Tensor)>> {
+    if buf.len() < *pos + 4 {
+        return Err(Status::invalid_argument("short tensor map"));
+    }
+    let n = LittleEndian::read_u32(&buf[*pos..]) as usize;
+    *pos += 4;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        if buf.len() < *pos + 4 {
+            return Err(Status::invalid_argument("short tensor map key"));
+        }
+        let klen = LittleEndian::read_u32(&buf[*pos..]) as usize;
+        *pos += 4;
+        let key = String::from_utf8_lossy(&buf[*pos..*pos + klen]).to_string();
+        *pos += klen;
+        let plen = LittleEndian::read_u64(&buf[*pos..]) as usize;
+        *pos += 8;
+        let (t, used) = codec::decode(&buf[*pos..*pos + plen])?;
+        if used != plen {
+            return Err(Status::invalid_argument("tensor map payload mismatch"));
+        }
+        *pos += plen;
+        out.push((key, t));
+    }
+    Ok(out)
+}
+
+/// One-shot RPC helper: connect, send, await reply.
+pub fn rpc(addr: &str, msg_type: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    write_frame(&mut stream, msg_type, payload)?;
+    read_frame(&mut stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_partition_roundtrip() {
+        let msg = RunPartition {
+            handle: 7,
+            step_id: 42,
+            feeds: vec![
+                ("feed;x:0".into(), Tensor::scalar_f32(1.5)),
+                ("feed;y:0".into(), Tensor::from_i64(vec![2], vec![1, 2]).unwrap()),
+            ],
+        };
+        let dec = RunPartition::decode(&msg.encode()).unwrap();
+        assert_eq!(dec.handle, 7);
+        assert_eq!(dec.step_id, 42);
+        assert_eq!(dec.feeds.len(), 2);
+        assert_eq!(dec.feeds[0].0, "feed;x:0");
+        assert_eq!(dec.feeds[1].1.as_i64().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn run_reply_roundtrip_ok_and_err() {
+        let ok = RunReply {
+            status: Ok(()),
+            fetches: vec![("loss:0".into(), Tensor::scalar_f32(0.5))],
+        };
+        let dec = RunReply::decode(&ok.encode()).unwrap();
+        assert!(dec.status.is_ok());
+        assert_eq!(dec.fetches[0].1.scalar_value_f32().unwrap(), 0.5);
+
+        let err = RunReply {
+            status: Err(Status::aborted("worker lost")),
+            fetches: vec![],
+        };
+        let dec = RunReply::decode(&err.encode()).unwrap();
+        let e = dec.status.unwrap_err();
+        assert_eq!(e.code, Code::Aborted);
+        assert_eq!(e.message, "worker lost");
+    }
+
+    #[test]
+    fn tensor_reply_roundtrip() {
+        let r = TensorReply { status: Ok(Tensor::from_f32(vec![3], vec![1., 2., 3.]).unwrap()) };
+        let dec = TensorReply::decode(&r.encode()).unwrap();
+        assert_eq!(dec.status.unwrap().as_f32().unwrap(), &[1., 2., 3.]);
+        let e = TensorReply { status: Err(Status::not_found("no key")) };
+        let dec = TensorReply::decode(&e.encode()).unwrap();
+        assert_eq!(dec.status.unwrap_err().code, Code::NotFound);
+    }
+
+    #[test]
+    fn frames_over_localhost() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let (t, p) = read_frame(&mut s).unwrap();
+            assert_eq!(t, MSG_HEALTH);
+            assert_eq!(p, b"ping");
+            write_frame(&mut s, MSG_HEALTH_OK, b"pong").unwrap();
+        });
+        let (t, p) = rpc(&addr.to_string(), MSG_HEALTH, b"ping").unwrap();
+        assert_eq!(t, MSG_HEALTH_OK);
+        assert_eq!(p, b"pong");
+        server.join().unwrap();
+    }
+}

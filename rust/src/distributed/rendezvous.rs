@@ -1,0 +1,132 @@
+//! Worker-side rendezvous for the distributed runtime.
+//!
+//! Send deposits locally (the producer side owns the tensor, §3.2.2);
+//! Recv inspects the key's source device: local keys resolve in-process,
+//! remote keys issue a `RecvTensor` RPC to the producing worker — data
+//! flows worker↔worker, never through the master.
+//!
+//! `StepRendezvous` overlays a per-step table (feeds) on the long-lived
+//! worker rendezvous, so `feed;…` keys never collide across steps.
+
+use super::proto;
+use super::ClusterSpec;
+use crate::error::{Result, Status};
+use crate::rendezvous::{LocalRendezvous, RecvDone, Rendezvous};
+use crate::tensor::Tensor;
+use std::sync::Arc;
+
+pub struct RemoteRendezvous {
+    local: Arc<LocalRendezvous>,
+    cluster: ClusterSpec,
+    my_task: usize,
+}
+
+impl RemoteRendezvous {
+    pub fn new(cluster: ClusterSpec, my_task: usize) -> Arc<RemoteRendezvous> {
+        Arc::new(RemoteRendezvous { local: LocalRendezvous::new(), cluster, my_task })
+    }
+
+    pub fn local(&self) -> &Arc<LocalRendezvous> {
+        &self.local
+    }
+
+    /// Keys are `stepPrefix…;src_device;dst_device;tensor;frame`. The
+    /// source device is the component before the dst device.
+    fn src_task(&self, key: &str) -> Result<usize> {
+        let parts: Vec<&str> = key.split(';').collect();
+        // Find the first component that parses as a device name.
+        for p in &parts {
+            if p.starts_with("/job:") {
+                return ClusterSpec::task_of_device(p);
+            }
+        }
+        Err(Status::invalid_argument(format!("rendezvous key {key:?} has no source device")))
+    }
+}
+
+impl Rendezvous for RemoteRendezvous {
+    fn send(&self, key: &str, value: Tensor) -> Result<()> {
+        self.local.send(key, value)
+    }
+
+    fn recv_async(&self, key: &str, done: RecvDone) {
+        match self.src_task(key) {
+            Ok(task) if task == self.my_task => self.local.recv_async(key, done),
+            Ok(task) => {
+                // Pull from the remote worker on a waiter thread (the RPC
+                // blocks server-side until the producer's Send runs).
+                let addr = self.cluster.addr_of(task).to_string();
+                let key = key.to_string();
+                std::thread::spawn(move || {
+                    let result = (|| -> Result<Tensor> {
+                        let (t, payload) =
+                            proto::rpc(&addr, proto::MSG_RECV_TENSOR, key.as_bytes())?;
+                        if t != proto::MSG_TENSOR_REPLY {
+                            return Err(Status::internal(format!("unexpected reply type {t}")));
+                        }
+                        proto::TensorReply::decode(&payload)?.status
+                    })();
+                    done(result);
+                });
+            }
+            Err(e) => done(Err(e)),
+        }
+    }
+
+    fn abort(&self, status: Status) {
+        self.local.abort(status);
+    }
+
+    fn try_recv(&self, key: &str) -> Option<Tensor> {
+        self.local.try_recv(key)
+    }
+}
+
+/// Per-step overlay: feeds resolve in the step table, everything else in
+/// the worker-global rendezvous.
+pub struct StepRendezvous {
+    pub step: Arc<LocalRendezvous>,
+    pub global: Arc<dyn Rendezvous>,
+}
+
+impl StepRendezvous {
+    pub fn new(global: Arc<dyn Rendezvous>) -> Arc<StepRendezvous> {
+        Arc::new(StepRendezvous { step: LocalRendezvous::new(), global })
+    }
+
+    fn is_step_key(key: &str) -> bool {
+        key.starts_with("feed;")
+    }
+}
+
+impl Rendezvous for StepRendezvous {
+    fn send(&self, key: &str, value: Tensor) -> Result<()> {
+        if Self::is_step_key(key) {
+            self.step.send(key, value)
+        } else {
+            self.global.send(key, value)
+        }
+    }
+
+    fn recv_async(&self, key: &str, done: RecvDone) {
+        if Self::is_step_key(key) {
+            self.step.recv_async(key, done)
+        } else {
+            self.global.recv_async(key, done)
+        }
+    }
+
+    fn abort(&self, status: Status) {
+        self.step.abort(status.clone());
+        // Do NOT abort the global rendezvous here: other steps/partitions
+        // may be healthy. Step-level cancellation handles the rest.
+    }
+
+    fn try_recv(&self, key: &str) -> Option<Tensor> {
+        if Self::is_step_key(key) {
+            self.step.try_recv(key)
+        } else {
+            self.global.try_recv(key)
+        }
+    }
+}

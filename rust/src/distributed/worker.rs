@@ -1,0 +1,194 @@
+//! The worker process (§3): "one or more worker processes, with each
+//! worker process responsible for arbitrating access to one or more
+//! computational devices … and for executing graph nodes on those devices
+//! as instructed by the master."
+//!
+//! Thread-per-connection TCP server handling RegisterGraph / RunPartition
+//! / RecvTensor (worker↔worker pulls) / Health / Reset / Shutdown.
+
+use super::proto::{self, RegisterGraph, RunPartition, RunReply, TensorReply};
+use super::rendezvous::{RemoteRendezvous, StepRendezvous};
+use super::ClusterSpec;
+use crate::device::DeviceSet;
+use crate::error::{Result, Status};
+use crate::executor::{CompiledGraph, Executor, RunContext};
+use crate::kernels::StepState;
+use crate::rendezvous::{recv_blocking, Rendezvous};
+use crate::resources::ResourceMgr;
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub struct Worker {
+    pub task: usize,
+    cluster: ClusterSpec,
+    devices: DeviceSet,
+    resources: Arc<ResourceMgr>,
+    rendezvous: Arc<RemoteRendezvous>,
+    graphs: Mutex<HashMap<u64, Arc<CompiledGraph>>>,
+    next_handle: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl Worker {
+    pub fn new(task: usize, cluster: ClusterSpec, threads_per_device: usize) -> Arc<Worker> {
+        let devices = DeviceSet::new(
+            (0..cluster.devices_per_worker)
+                .map(|i| {
+                    Arc::new(crate::device::Device::new(
+                        crate::device::DeviceSpec::worker_cpu(task, i),
+                        threads_per_device,
+                    ))
+                })
+                .collect(),
+        );
+        let rendezvous = RemoteRendezvous::new(cluster.clone(), task);
+        Arc::new(Worker {
+            task,
+            cluster,
+            devices,
+            resources: ResourceMgr::new(),
+            rendezvous,
+            graphs: Mutex::new(HashMap::new()),
+            next_handle: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    pub fn resources(&self) -> &Arc<ResourceMgr> {
+        &self.resources
+    }
+
+    /// Serve on `addr` (must match the cluster spec's entry for this
+    /// task). Returns once the listener is bound; serving continues on
+    /// background threads until `Shutdown` arrives.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> Result<std::net::SocketAddr> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Status::unavailable(format!("bind {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        let worker = Arc::clone(self);
+        std::thread::Builder::new()
+            .name(format!("worker-{}-accept", self.task))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if worker.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let w = Arc::clone(&worker);
+                            std::thread::spawn(move || {
+                                let _ = w.handle_connection(stream);
+                            });
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn worker accept thread");
+        Ok(local)
+    }
+
+    fn handle_connection(self: &Arc<Self>, mut stream: TcpStream) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        let (msg_type, payload) = proto::read_frame(&mut stream)?;
+        match msg_type {
+            proto::MSG_REGISTER_GRAPH => {
+                let reply = match self.register(&payload) {
+                    Ok(handle) => {
+                        let mut out = vec![255u8];
+                        out.extend_from_slice(&handle.to_le_bytes());
+                        out
+                    }
+                    Err(e) => {
+                        let mut out = vec![e.code.as_u8()];
+                        out.extend_from_slice(e.message.as_bytes());
+                        out
+                    }
+                };
+                proto::write_frame(&mut stream, proto::MSG_REGISTER_REPLY, &reply)
+            }
+            proto::MSG_RUN_PARTITION => {
+                let reply = self.run_partition(&payload);
+                proto::write_frame(&mut stream, proto::MSG_RUN_REPLY, &reply.encode())
+            }
+            proto::MSG_RECV_TENSOR => {
+                let key = String::from_utf8_lossy(&payload).to_string();
+                // Blocks this handler thread until the producer's Send
+                // deposits the tensor (§3.2.2 synchronization).
+                let status = recv_blocking(&*self.rendezvous, &key);
+                proto::write_frame(
+                    &mut stream,
+                    proto::MSG_TENSOR_REPLY,
+                    &TensorReply { status }.encode(),
+                )
+            }
+            proto::MSG_HEALTH => proto::write_frame(&mut stream, proto::MSG_HEALTH_OK, b""),
+            proto::MSG_RESET => {
+                let name = String::from_utf8_lossy(&payload).to_string();
+                self.resources.reset_container(&name);
+                proto::write_frame(&mut stream, proto::MSG_HEALTH_OK, b"")
+            }
+            proto::MSG_SHUTDOWN => {
+                self.shutdown.store(true, Ordering::SeqCst);
+                proto::write_frame(&mut stream, proto::MSG_HEALTH_OK, b"")
+            }
+            other => Err(Status::invalid_argument(format!("unknown message type {other}"))),
+        }
+    }
+
+    fn register(&self, payload: &[u8]) -> Result<u64> {
+        let msg = RegisterGraph::decode(payload)?;
+        // Every node of a partition is placed on one of this worker's
+        // devices; find it.
+        let device_name = msg
+            .graph
+            .nodes
+            .first()
+            .and_then(|n| n.assigned_device.clone())
+            .ok_or_else(|| Status::invalid_argument("empty or unplaced partition"))?;
+        let device = self.devices.find_by_name(&device_name)?;
+        let compiled = CompiledGraph::compile(&msg.graph, device)?;
+        let handle = self.next_handle.fetch_add(1, Ordering::SeqCst);
+        self.graphs.lock().unwrap().insert(handle, compiled);
+        Ok(handle)
+    }
+
+    fn run_partition(self: &Arc<Self>, payload: &[u8]) -> RunReply {
+        let run = match RunPartition::decode(payload) {
+            Ok(r) => r,
+            Err(e) => return RunReply { status: Err(e), fetches: vec![] },
+        };
+        let compiled = match self.graphs.lock().unwrap().get(&run.handle) {
+            Some(c) => Arc::clone(c),
+            None => {
+                return RunReply {
+                    status: Err(Status::not_found(format!("graph handle {}", run.handle))),
+                    fetches: vec![],
+                }
+            }
+        };
+        let step = StepState::new(run.step_id);
+        let rendezvous = StepRendezvous::new(self.rendezvous.clone() as Arc<dyn Rendezvous>);
+        for (key, tensor) in run.feeds {
+            if let Err(e) = rendezvous.send(&key, tensor) {
+                return RunReply { status: Err(e), fetches: vec![] };
+            }
+        }
+        let ctx = RunContext {
+            resources: Arc::clone(&self.resources),
+            rendezvous: rendezvous as Arc<dyn Rendezvous>,
+            step: Arc::clone(&step),
+            trace: None,
+        };
+        let status = Executor::new(compiled).run(ctx);
+        let fetches = step.take_fetches().into_iter().collect();
+        RunReply { status, fetches }
+    }
+
+    /// Cluster spec this worker serves in (test support).
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+}

@@ -1,0 +1,188 @@
+//! Error type shared by every RustFlow subsystem.
+//!
+//! Mirrors TensorFlow's `tensorflow::Status`: a small closed set of codes
+//! plus a human-readable message. The distributed runtime ships these codes
+//! over the wire, so they must stay stable (see `distributed::proto`).
+
+use thiserror::Error;
+
+/// Status codes, a subset of TF's `error::Code` that this implementation
+/// actually produces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Code {
+    InvalidArgument,
+    NotFound,
+    AlreadyExists,
+    FailedPrecondition,
+    OutOfRange,
+    Unimplemented,
+    Internal,
+    Unavailable,
+    Aborted,
+    Cancelled,
+    DeadlineExceeded,
+    ResourceExhausted,
+}
+
+impl Code {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Code::InvalidArgument => 0,
+            Code::NotFound => 1,
+            Code::AlreadyExists => 2,
+            Code::FailedPrecondition => 3,
+            Code::OutOfRange => 4,
+            Code::Unimplemented => 5,
+            Code::Internal => 6,
+            Code::Unavailable => 7,
+            Code::Aborted => 8,
+            Code::Cancelled => 9,
+            Code::DeadlineExceeded => 10,
+            Code::ResourceExhausted => 11,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Code {
+        match v {
+            0 => Code::InvalidArgument,
+            1 => Code::NotFound,
+            2 => Code::AlreadyExists,
+            3 => Code::FailedPrecondition,
+            4 => Code::OutOfRange,
+            5 => Code::Unimplemented,
+            7 => Code::Unavailable,
+            8 => Code::Aborted,
+            9 => Code::Cancelled,
+            10 => Code::DeadlineExceeded,
+            11 => Code::ResourceExhausted,
+            _ => Code::Internal,
+        }
+    }
+}
+
+/// The error type used throughout RustFlow.
+#[derive(Debug, Clone, Error)]
+#[error("{code:?}: {message}")]
+pub struct Status {
+    pub code: Code,
+    pub message: String,
+}
+
+impl Status {
+    pub fn new(code: Code, message: impl Into<String>) -> Self {
+        Status { code, message: message.into() }
+    }
+    pub fn invalid_argument(m: impl Into<String>) -> Self {
+        Status::new(Code::InvalidArgument, m)
+    }
+    pub fn not_found(m: impl Into<String>) -> Self {
+        Status::new(Code::NotFound, m)
+    }
+    pub fn already_exists(m: impl Into<String>) -> Self {
+        Status::new(Code::AlreadyExists, m)
+    }
+    pub fn failed_precondition(m: impl Into<String>) -> Self {
+        Status::new(Code::FailedPrecondition, m)
+    }
+    pub fn out_of_range(m: impl Into<String>) -> Self {
+        Status::new(Code::OutOfRange, m)
+    }
+    pub fn unimplemented(m: impl Into<String>) -> Self {
+        Status::new(Code::Unimplemented, m)
+    }
+    pub fn internal(m: impl Into<String>) -> Self {
+        Status::new(Code::Internal, m)
+    }
+    pub fn unavailable(m: impl Into<String>) -> Self {
+        Status::new(Code::Unavailable, m)
+    }
+    pub fn aborted(m: impl Into<String>) -> Self {
+        Status::new(Code::Aborted, m)
+    }
+    pub fn cancelled(m: impl Into<String>) -> Self {
+        Status::new(Code::Cancelled, m)
+    }
+    pub fn resource_exhausted(m: impl Into<String>) -> Self {
+        Status::new(Code::ResourceExhausted, m)
+    }
+}
+
+impl From<std::io::Error> for Status {
+    fn from(e: std::io::Error) -> Self {
+        Status::unavailable(format!("io error: {e}"))
+    }
+}
+
+impl From<anyhow::Error> for Status {
+    fn from(e: anyhow::Error) -> Self {
+        Status::internal(format!("{e:#}"))
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Status>;
+
+/// `bail!`-style helper macros.
+#[macro_export]
+macro_rules! rf_bail {
+    ($code:ident, $($arg:tt)*) => {
+        return Err($crate::error::Status::new(
+            $crate::error::Code::$code,
+            format!($($arg)*),
+        ))
+    };
+}
+
+#[macro_export]
+macro_rules! rf_ensure {
+    ($cond:expr, $code:ident, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::rf_bail!($code, $($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn code_roundtrip() {
+        for c in [
+            Code::InvalidArgument,
+            Code::NotFound,
+            Code::AlreadyExists,
+            Code::FailedPrecondition,
+            Code::OutOfRange,
+            Code::Unimplemented,
+            Code::Internal,
+            Code::Unavailable,
+            Code::Aborted,
+            Code::Cancelled,
+            Code::DeadlineExceeded,
+            Code::ResourceExhausted,
+        ] {
+            assert_eq!(Code::from_u8(c.as_u8()), c);
+        }
+    }
+
+    #[test]
+    fn display_contains_code_and_message() {
+        let s = Status::invalid_argument("bad shape");
+        let d = format!("{s}");
+        assert!(d.contains("InvalidArgument"));
+        assert!(d.contains("bad shape"));
+    }
+
+    fn ensure_helper(x: i32) -> Result<i32> {
+        rf_ensure!(x > 0, InvalidArgument, "x must be positive, got {}", x);
+        Ok(x)
+    }
+
+    #[test]
+    fn ensure_macro() {
+        assert!(ensure_helper(3).is_ok());
+        let e = ensure_helper(-1).unwrap_err();
+        assert_eq!(e.code, Code::InvalidArgument);
+        assert!(e.message.contains("-1"));
+    }
+}

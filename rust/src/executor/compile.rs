@@ -1,0 +1,463 @@
+//! Graph → executable form: kernel instantiation, fanout lists, pending
+//! counts, frame assignment (§4.4), and resource-ref resolution.
+
+use crate::device::Device;
+use crate::error::{Result, Status};
+use crate::graph::{Endpoint, Graph, NodeId};
+use crate::kernels::{create_kernel, Kernel, NodeInfo};
+use crate::ops;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Executor-special node kinds (§4.4 primitives execute inside the
+/// executor's tag machinery, not as kernels).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NodeKind {
+    Normal,
+    Switch,
+    Merge,
+    /// Carries the target (child) frame index.
+    Enter { frame: u32 },
+    Exit,
+    NextIteration,
+}
+
+/// One frame definition (§4.4: "execution state is represented by a
+/// frame"). Frame 0 is the root graph.
+pub struct FrameDef {
+    pub name: String,
+    pub parent: u32,
+    /// Nesting depth == tag length for nodes of this frame (root: 0).
+    pub depth: usize,
+    pub nodes: Vec<NodeId>,
+    pub local_index: HashMap<NodeId, usize>,
+    /// Initial pending count per frame-local node.
+    pub node_deps: Vec<u32>,
+    pub num_input_slots: usize,
+    pub input_slot_offset: HashMap<NodeId, usize>,
+    /// Loop-invariant data edges entering this frame from ancestor frames:
+    /// (producer, port, consumer, slot).
+    pub invariant_in_edges: Vec<(NodeId, usize, NodeId, usize)>,
+    /// Same for control edges: (producer, consumer).
+    pub invariant_control_edges: Vec<(NodeId, NodeId)>,
+}
+
+pub struct CompiledNode {
+    pub info: Arc<NodeInfo>,
+    pub kernel: Option<Kernel>,
+    pub inputs: Vec<Endpoint>,
+    pub control_inputs: Vec<NodeId>,
+    /// out_edges[port] = [(consumer, consumer input slot)].
+    pub out_edges: Vec<Vec<(NodeId, usize)>>,
+    pub control_out: Vec<NodeId>,
+    pub num_outputs: usize,
+    pub kind: NodeKind,
+    pub frame: u32,
+    pub frame_depth: usize,
+    pub num_deps: u32,
+    /// Any consumer living in a deeper frame (loop-invariant capture)?
+    pub has_invariant_consumers: bool,
+    /// For Merge: number of inputs that are NOT NextIteration back-edges
+    /// (the dead-fire threshold — a Merge is dead once all non-back-edge
+    /// inputs arrived dead).
+    pub merge_non_backedge: u32,
+}
+
+pub struct CompiledGraph {
+    pub nodes: Vec<CompiledNode>,
+    pub frames: Vec<FrameDef>,
+    pub device: Arc<Device>,
+}
+
+impl CompiledGraph {
+    pub fn frame_of_tag(&self, tag: &super::Tag) -> u32 {
+        tag.last().map(|&(f, _)| f).unwrap_or(0)
+    }
+
+    /// Compile a (single-device) graph for execution on `device`.
+    pub fn compile(graph: &Graph, device: Arc<Device>) -> Result<Arc<CompiledGraph>> {
+        graph.topo_order()?; // validates acyclicity (mod NextIteration)
+
+        // ---- frame assignment -------------------------------------------
+        // frame[node]: Enter's consumers live in the child frame; Exit's
+        // consumers in the parent; everything else inherits the deepest
+        // input frame. Source nodes live in the root frame.
+        let mut frames: Vec<FrameDef> = vec![FrameDef {
+            name: "<root>".into(),
+            parent: 0,
+            depth: 0,
+            nodes: vec![],
+            local_index: HashMap::new(),
+            node_deps: vec![],
+            num_input_slots: 0,
+            input_slot_offset: HashMap::new(),
+            invariant_in_edges: vec![],
+            invariant_control_edges: vec![],
+        }];
+        let mut frame_by_key: HashMap<(u32, String), u32> = HashMap::new();
+        let mut node_frame: Vec<u32> = vec![0; graph.len()];
+
+        // Iterate until stable (graphs are shallow; Enter/Exit chains make
+        // one or two passes enough, but loop to fixpoint for safety).
+        for _ in 0..graph.len().max(2) {
+            let mut changed = false;
+            for id in graph.ids() {
+                let n = graph.node(id);
+                // Producer-side view: output frame of a producer p.
+                let mut deepest: u32 = 0;
+                for e in n
+                    .inputs
+                    .iter()
+                    .map(|e| e.node)
+                    .chain(n.control_inputs.iter().copied())
+                {
+                    let p = graph.node(e);
+                    let pf = node_frame[e.0];
+                    let out_frame = match p.op.as_str() {
+                        "Enter" => {
+                            let fname = p.attr("frame_name")?.as_str()?.to_string();
+                            *frame_by_key.entry((pf, fname.clone())).or_insert_with(|| {
+                                let idx = frames.len() as u32;
+                                frames.push(FrameDef {
+                                    name: fname,
+                                    parent: pf,
+                                    depth: frames[pf as usize].depth + 1,
+                                    nodes: vec![],
+                                    local_index: HashMap::new(),
+                                    node_deps: vec![],
+                                    num_input_slots: 0,
+                                    input_slot_offset: HashMap::new(),
+                                    invariant_in_edges: vec![],
+                                    invariant_control_edges: vec![],
+                                });
+                                idx
+                            })
+                        }
+                        "Exit" => frames[pf as usize].parent,
+                        _ => pf,
+                    };
+                    if frames[out_frame as usize].depth > frames[deepest as usize].depth {
+                        deepest = out_frame;
+                    }
+                }
+                if node_frame[id.0] != deepest {
+                    node_frame[id.0] = deepest;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+
+        // ---- per-node compilation ----------------------------------------
+        let fanout = graph.fanout();
+        // Variables read only through ref-edges (Assign/Apply*/…, slot 0)
+        // must not dereference their (possibly uninitialized) value: TF's
+        // Variable op hands out a ref, and only real reads check
+        // initialization. Mark them so the kernel returns a sentinel.
+        let mut ref_only: Vec<bool> = vec![false; graph.len()];
+        for id in graph.ids() {
+            if graph.node(id).op == "Variable" {
+                let consumers = &fanout.data[id.0];
+                ref_only[id.0] = !consumers.is_empty()
+                    && consumers.iter().all(|&(c, slot)| {
+                        slot == 0 && ref_input_ops(&graph.node(c).op)
+                    });
+            }
+        }
+        let mut nodes: Vec<CompiledNode> = Vec::with_capacity(graph.len());
+        for id in graph.ids() {
+            let n = graph.node(id);
+            let kind = match n.op.as_str() {
+                "Switch" => NodeKind::Switch,
+                "Merge" => NodeKind::Merge,
+                "Enter" => {
+                    let fname = n.attr("frame_name")?.as_str()?.to_string();
+                    let pf = node_frame[id.0];
+                    let child = *frame_by_key.get(&(pf, fname.clone())).ok_or_else(|| {
+                        Status::internal(format!("Enter {} frame {fname:?} unresolved", n.name))
+                    })?;
+                    NodeKind::Enter { frame: child }
+                }
+                "Exit" => NodeKind::Exit,
+                "NextIteration" => NodeKind::NextIteration,
+                _ => NodeKind::Normal,
+            };
+
+            // Resource-ref resolution: ops whose input 0 must be a direct
+            // edge from a Variable / queue node.
+            let ref_resource = if ref_input_ops(&n.op) {
+                let producer = n.inputs.first().ok_or_else(|| {
+                    Status::invalid_argument(format!("{}: ref op missing input 0", n.name))
+                })?;
+                let p = graph.node(producer.node);
+                if !matches!(p.op.as_str(), "Variable" | "FIFOQueue" | "RandomShuffleQueue") {
+                    return Err(Status::invalid_argument(format!(
+                        "{}: input 0 must come directly from a Variable/queue node, got {} ({})",
+                        n.name, p.name, p.op
+                    )));
+                }
+                Some(p.name.clone())
+            } else if n.op == "Variable" {
+                Some(n.name.clone())
+            } else {
+                None
+            };
+
+            let container = n
+                .attrs
+                .get("container")
+                .and_then(|a| a.as_str().ok().map(String::from))
+                .unwrap_or_default();
+
+            let mut attrs = n.attrs.clone();
+            if ref_only[id.0] {
+                attrs.insert("_ref_only".to_string(), crate::graph::AttrValue::Bool(true));
+            }
+            let info = Arc::new(NodeInfo {
+                name: n.name.clone(),
+                op: n.op.clone(),
+                attrs,
+                ref_resource,
+                container,
+                device_name: n.assigned_device.clone().unwrap_or_else(|| device.name()),
+            });
+
+            let kernel = if kind == NodeKind::Normal {
+                Some(create_kernel(&info, device.device_type())?)
+            } else {
+                None
+            };
+
+            let num_outputs = ops::num_outputs(n)?;
+            let frame = node_frame[id.0];
+            let mut out_edges = vec![Vec::new(); num_outputs.max(1)];
+            for &(consumer, slot) in &fanout.data[id.0] {
+                let port = graph.node(consumer).inputs[slot].port;
+                if port >= out_edges.len() {
+                    return Err(Status::invalid_argument(format!(
+                        "{}: consumer {} reads port {port}, node has {num_outputs} outputs",
+                        n.name,
+                        graph.node(consumer).name
+                    )));
+                }
+                out_edges[port].push((consumer, slot));
+            }
+
+            let merge_non_backedge = if kind == NodeKind::Merge {
+                n.inputs
+                    .iter()
+                    .filter(|e| graph.node(e.node).op != "NextIteration")
+                    .count() as u32
+            } else {
+                0
+            };
+            nodes.push(CompiledNode {
+                info,
+                kernel,
+                inputs: n.inputs.clone(),
+                control_inputs: n.control_inputs.clone(),
+                out_edges,
+                control_out: fanout.control[id.0].clone(),
+                num_outputs,
+                kind,
+                frame,
+                frame_depth: frames[frame as usize].depth,
+                num_deps: (n.inputs.len() + n.control_inputs.len()) as u32,
+                has_invariant_consumers: false, // fixed below
+                merge_non_backedge,
+            });
+        }
+
+        // ---- frame membership, slots, invariant edges ----------------------
+        for (i, cn) in nodes.iter().enumerate() {
+            let f = &mut frames[cn.frame as usize];
+            let local = f.nodes.len();
+            f.nodes.push(NodeId(i));
+            f.local_index.insert(NodeId(i), local);
+            f.node_deps.push(cn.num_deps);
+            f.input_slot_offset.insert(NodeId(i), f.num_input_slots);
+            f.num_input_slots += cn.inputs.len();
+        }
+
+        // Classify cross-frame edges.
+        let is_ancestor = |anc: u32, mut f: u32, frames: &Vec<FrameDef>| -> bool {
+            loop {
+                if f == anc {
+                    return true;
+                }
+                if f == 0 {
+                    return false;
+                }
+                f = frames[f as usize].parent;
+            }
+        };
+        let mut invariant_flags = vec![false; nodes.len()];
+        for (i, cn) in nodes.iter().enumerate() {
+            let pid = NodeId(i);
+            let retagging =
+                matches!(cn.kind, NodeKind::Enter { .. } | NodeKind::Exit | NodeKind::NextIteration);
+            for (port, edges) in cn.out_edges.iter().enumerate() {
+                for &(consumer, slot) in edges {
+                    let cf = nodes[consumer.0].frame;
+                    if cf == cn.frame || retagging {
+                        // Retagging consistency checks.
+                        if let NodeKind::Enter { frame } = cn.kind {
+                            if cf != frame {
+                                return Err(Status::invalid_argument(format!(
+                                    "Enter {} output consumed outside its frame",
+                                    cn.info.name
+                                )));
+                            }
+                        }
+                        continue;
+                    }
+                    if is_ancestor(cn.frame, cf, &frames) {
+                        invariant_flags[i] = true;
+                        frames[cf as usize]
+                            .invariant_in_edges
+                            .push((pid, port, consumer, slot));
+                    } else {
+                        return Err(Status::invalid_argument(format!(
+                            "edge {} -> {} crosses frames illegally (use Enter/Exit)",
+                            cn.info.name, nodes[consumer.0].info.name
+                        )));
+                    }
+                }
+            }
+            for &consumer in &cn.control_out {
+                let cf = nodes[consumer.0].frame;
+                if cf == cn.frame || retagging {
+                    continue;
+                }
+                if is_ancestor(cn.frame, cf, &frames) {
+                    invariant_flags[i] = true;
+                    frames[cf as usize].invariant_control_edges.push((pid, consumer));
+                } else {
+                    return Err(Status::invalid_argument(format!(
+                        "control edge {} -> {} crosses frames illegally",
+                        cn.info.name, nodes[consumer.0].info.name
+                    )));
+                }
+            }
+        }
+        for (i, flag) in invariant_flags.into_iter().enumerate() {
+            nodes[i].has_invariant_consumers = flag;
+        }
+
+        Ok(Arc::new(CompiledGraph { nodes, frames, device }))
+    }
+}
+
+/// Ops whose input 0 is a resource reference.
+fn ref_input_ops(op: &str) -> bool {
+    matches!(
+        op,
+        "Assign"
+            | "AssignAdd"
+            | "AssignSub"
+            | "CountUpTo"
+            | "ApplyGradientDescent"
+            | "ApplyMomentum"
+            | "ApplyAdagrad"
+            | "ApplyAdam"
+            | "Enqueue"
+            | "Dequeue"
+            | "QueueClose"
+            | "QueueSize"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::Tensor;
+
+    fn device() -> Arc<Device> {
+        Arc::new(Device::new(crate::device::DeviceSpec::local_cpu(0), 2))
+    }
+
+    #[test]
+    fn compile_simple_graph() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(2.0);
+        let y = b.scalar(3.0);
+        let _z = b.mul(x, y);
+        let cg = CompiledGraph::compile(&b.graph, device()).unwrap();
+        assert_eq!(cg.nodes.len(), 3);
+        assert_eq!(cg.frames.len(), 1);
+        assert_eq!(cg.nodes[2].num_deps, 2);
+        assert_eq!(cg.nodes[0].out_edges[0], vec![(NodeId(2), 0)]);
+    }
+
+    #[test]
+    fn compile_while_loop_frames() {
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        b.while_loop(
+            "f",
+            vec![zero],
+            |b, v| {
+                let ten = b.scalar(10.0);
+                Ok(b.less(v[0], ten))
+            },
+            |b, v| {
+                let one = b.scalar(1.0);
+                Ok(vec![b.add(v[0], one)])
+            },
+        )
+        .unwrap();
+        let cg = CompiledGraph::compile(&b.graph, device()).unwrap();
+        assert_eq!(cg.frames.len(), 2, "root + loop frame");
+        // The loop-body consts (10.0, 1.0) live in root but feed the loop:
+        // they must be flagged as invariant producers.
+        assert!(cg.nodes.iter().any(|n| n.has_invariant_consumers));
+        assert!(!cg.frames[1].invariant_in_edges.is_empty());
+        // Merge/Switch/Enter/Exit/NextIteration classified.
+        assert!(cg.nodes.iter().any(|n| matches!(n.kind, NodeKind::Merge)));
+        assert!(cg.nodes.iter().any(|n| matches!(n.kind, NodeKind::Enter { .. })));
+    }
+
+    #[test]
+    fn ref_resolution_requires_direct_edge() {
+        let mut b = GraphBuilder::new();
+        let v = b.variable("v", Tensor::scalar_f32(0.0)).unwrap();
+        let ident = b.identity(v);
+        let one = b.scalar(1.0);
+        // Assign through an Identity: must be rejected at compile.
+        b.op("Assign", "bad_assign", vec![ident, one], vec![]).unwrap();
+        let err = match CompiledGraph::compile(&b.graph, device()) {
+            Err(e) => e,
+            Ok(_) => panic!("expected compile error"),
+        };
+        assert!(err.message.contains("directly"));
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        use crate::graph::Node;
+        let mut g = Graph::new();
+        crate::ops::register_op(crate::ops::OpDef {
+            name: "OpWithNoKernel",
+            category: crate::ops::Category::ElementWise,
+            arity: crate::ops::Arity::Exact(0),
+            num_outputs: |_| Ok(1),
+            stateful: false,
+            is_async: false,
+        })
+        .ok();
+        g.add(Node {
+            name: "n".into(),
+            op: "OpWithNoKernel".into(),
+            inputs: vec![],
+            control_inputs: vec![],
+            attrs: Default::default(),
+            requested_device: String::new(),
+            assigned_device: None,
+        })
+        .unwrap();
+        assert!(CompiledGraph::compile(&g, device()).is_err());
+    }
+}

@@ -1,0 +1,573 @@
+//! The dataflow executor.
+//!
+//! §3.1 single-device execution: "we keep track of a count per node of the
+//! number of dependencies of that node that have not yet been executed.
+//! Once this count drops to zero, the node is eligible for execution and
+//! is added to a ready queue … delegating execution of the kernel for a
+//! node to the device object."
+//!
+//! §4.4 control flow: "the TensorFlow runtime implements a notion of tags
+//! and frames conceptually similar to the MIT Tagged-Token machine. Each
+//! iteration of a loop is uniquely identified by a tag, and its execution
+//! state is represented by a frame. An input can enter an iteration
+//! whenever it becomes available; thus, multiple iterations can be
+//! executed concurrently." Executions are tagged with the full frame path
+//! `[(frame, iter), …]`; Switch routes live/dead tokens, Merge fires on
+//! its first live input, Enter/Exit/NextIteration retag deliveries into
+//! child/parent/next-iteration state, and values captured from ancestor
+//! frames are delivered as loop invariants.
+//!
+//! §5.3 asynchronous kernels (Recv, Enqueue, Dequeue, MutexAcquire)
+//! complete via continuation so blocked I/O never parks a pool thread.
+
+pub mod compile;
+
+pub use compile::{CompiledGraph, CompiledNode, FrameDef, NodeKind};
+
+use crate::error::{Result, Status};
+use crate::graph::NodeId;
+use crate::kernels::{DoneFn, Kernel, KernelContext, StepState};
+use crate::rendezvous::Rendezvous;
+use crate::resources::ResourceMgr;
+use crate::tensor::Tensor;
+use crate::tracing_tools::TraceCollector;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A live-or-dead token (§4.4: untaken Switch branches propagate dead
+/// tokens so downstream subgraphs are skipped).
+#[derive(Debug, Clone)]
+pub enum Entry {
+    Live(Tensor),
+    Dead,
+}
+
+impl Entry {
+    pub fn is_dead(&self) -> bool {
+        matches!(self, Entry::Dead)
+    }
+}
+
+/// Execution tag: the frame path, one (frame def, iteration) per nesting
+/// level. Root graph = empty path.
+pub type Tag = Vec<(u32, u64)>;
+
+/// Everything a single `run` needs besides the compiled graph.
+pub struct RunContext {
+    pub resources: Arc<ResourceMgr>,
+    pub rendezvous: Arc<dyn Rendezvous>,
+    pub step: Arc<StepState>,
+    pub trace: Option<Arc<TraceCollector>>,
+}
+
+#[derive(Default, Clone)]
+struct MergeState {
+    fired: bool,
+    arrived: u32,
+    live: Option<(usize, Tensor)>,
+    control_remaining: u32,
+    initialized: bool,
+}
+
+/// State of one (frame instance, iteration).
+struct IterState {
+    pending: Vec<u32>,
+    any_dead: Vec<bool>,
+    inputs: Vec<Option<Tensor>>,
+    merge: HashMap<usize, MergeState>,
+    scheduled: Vec<bool>,
+}
+
+struct RunState {
+    iters: HashMap<Tag, IterState>,
+    /// Loop-invariant captures: (producer, port, producer tag) → entry.
+    /// Port `usize::MAX` encodes the control-edge liveness of the producer.
+    invariants: HashMap<(NodeId, usize, Tag), Entry>,
+    outstanding: u64,
+    first_error: Option<Status>,
+}
+
+struct ScheduledNode {
+    node: NodeId,
+    tag: Tag,
+    inputs: Vec<Tensor>,
+}
+
+enum Delivery {
+    Data { consumer: NodeId, slot: usize, tag: Tag, entry: Entry },
+    Control { consumer: NodeId, tag: Tag, dead: bool },
+}
+
+struct Inner {
+    graph: Arc<CompiledGraph>,
+    ctx: RunContext,
+    state: Mutex<RunState>,
+    done_cond: Condvar,
+}
+
+/// Executes a compiled per-device subgraph.
+pub struct Executor {
+    graph: Arc<CompiledGraph>,
+}
+
+impl Executor {
+    pub fn new(graph: Arc<CompiledGraph>) -> Executor {
+        Executor { graph }
+    }
+
+    pub fn graph(&self) -> &Arc<CompiledGraph> {
+        &self.graph
+    }
+
+    /// Run the subgraph to completion (§3.1). Returns the first error;
+    /// fetched tensors land in `ctx.step`.
+    pub fn run(&self, ctx: RunContext) -> Result<()> {
+        let inner = Arc::new(Inner {
+            graph: Arc::clone(&self.graph),
+            ctx,
+            state: Mutex::new(RunState {
+                iters: HashMap::new(),
+                invariants: HashMap::new(),
+                outstanding: 0,
+                first_error: None,
+            }),
+            done_cond: Condvar::new(),
+        });
+
+        // Seed: every zero-dependency (root-frame) node.
+        let ready = {
+            let mut st = inner.state.lock().unwrap();
+            inner.ensure_iter(&mut st, &Tag::new(), &mut Vec::new());
+            let ready: Vec<ScheduledNode> = inner
+                .graph
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.num_deps == 0 && !matches!(n.kind, NodeKind::Merge))
+                .map(|(i, _)| ScheduledNode { node: NodeId(i), tag: Tag::new(), inputs: vec![] })
+                .collect();
+            st.outstanding += ready.len() as u64;
+            ready
+        };
+        if ready.is_empty() {
+            return Ok(()); // empty graph
+        }
+        for s in ready {
+            Inner::dispatch(&inner, s);
+        }
+
+        let mut st = inner.state.lock().unwrap();
+        while st.outstanding > 0 {
+            st = inner.done_cond.wait(st).unwrap();
+        }
+        match st.first_error.take() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+enum Action {
+    None,
+    Schedule(Vec<Tensor>),
+    DeadPropagate,
+    MergeFire(Vec<Entry>),
+}
+
+impl Inner {
+    /// Create the iteration state for `tag` if absent, queueing deliveries
+    /// of any already-known invariants into it.
+    fn ensure_iter(&self, st: &mut RunState, tag: &Tag, queue: &mut Vec<Delivery>) {
+        if st.iters.contains_key(tag) {
+            return;
+        }
+        let frame_idx = self.graph.frame_of_tag(tag);
+        let f = &self.graph.frames[frame_idx as usize];
+        st.iters.insert(
+            tag.clone(),
+            IterState {
+                pending: f.node_deps.clone(),
+                any_dead: vec![false; f.nodes.len()],
+                inputs: vec![None; f.num_input_slots],
+                merge: HashMap::new(),
+                scheduled: vec![false; f.nodes.len()],
+            },
+        );
+        for &(producer, port, consumer, slot) in &f.invariant_in_edges {
+            let p_depth = self.graph.nodes[producer.0].frame_depth;
+            let p_tag: Tag = tag[..p_depth].to_vec();
+            if let Some(entry) = st.invariants.get(&(producer, port, p_tag)) {
+                queue.push(Delivery::Data { consumer, slot, tag: tag.clone(), entry: entry.clone() });
+            }
+        }
+        for &(producer, consumer) in &f.invariant_control_edges {
+            let p_depth = self.graph.nodes[producer.0].frame_depth;
+            let p_tag: Tag = tag[..p_depth].to_vec();
+            if let Some(entry) = st.invariants.get(&(producer, usize::MAX, p_tag)) {
+                queue.push(Delivery::Control { consumer, tag: tag.clone(), dead: entry.is_dead() });
+            }
+        }
+    }
+
+    /// Apply one delivery to the target iteration state; decide follow-up.
+    fn apply_delivery(&self, st: &mut RunState, d: &Delivery) -> (NodeId, Tag, Action) {
+        let (consumer, tag) = match d {
+            Delivery::Data { consumer, tag, .. } => (*consumer, tag.clone()),
+            Delivery::Control { consumer, tag, .. } => (*consumer, tag.clone()),
+        };
+        let node = &self.graph.nodes[consumer.0];
+        let frame = &self.graph.frames[node.frame as usize];
+        let local = frame.local_index[&consumer];
+        let iter = st.iters.get_mut(&tag).expect("iter state exists");
+
+        if matches!(node.kind, NodeKind::Merge) {
+            let ms = iter.merge.entry(local).or_default();
+            if !ms.initialized {
+                ms.control_remaining = node.control_inputs.len() as u32;
+                ms.initialized = true;
+            }
+            match d {
+                Delivery::Data { entry, slot, .. } => {
+                    ms.arrived += 1;
+                    if let Entry::Live(t) = entry {
+                        if ms.live.is_none() {
+                            ms.live = Some((*slot, t.clone()));
+                        }
+                    }
+                }
+                Delivery::Control { .. } => {
+                    ms.control_remaining = ms.control_remaining.saturating_sub(1);
+                }
+            }
+            if !ms.fired && ms.control_remaining == 0 {
+                if let Some((slot, value)) = ms.live.clone() {
+                    ms.fired = true;
+                    return (
+                        consumer,
+                        tag,
+                        Action::MergeFire(vec![
+                            Entry::Live(value),
+                            Entry::Live(Tensor::scalar_i32(slot as i32)),
+                        ]),
+                    );
+                } else if ms.arrived >= node.merge_non_backedge {
+                    // All non-back-edge inputs arrived dead: the merge is
+                    // dead (back-edges can never deliver live tokens into a
+                    // dead loop).
+                    ms.fired = true;
+                    return (consumer, tag, Action::DeadPropagate);
+                }
+            }
+            return (consumer, tag, Action::None);
+        }
+
+        match d {
+            Delivery::Data { entry, slot, .. } => {
+                let off = frame.input_slot_offset[&consumer] + slot;
+                match entry {
+                    Entry::Live(t) => iter.inputs[off] = Some(t.clone()),
+                    Entry::Dead => iter.any_dead[local] = true,
+                }
+            }
+            Delivery::Control { dead, .. } => {
+                if *dead {
+                    iter.any_dead[local] = true;
+                }
+            }
+        }
+        iter.pending[local] -= 1;
+        if iter.pending[local] == 0 && !iter.scheduled[local] {
+            iter.scheduled[local] = true;
+            if iter.any_dead[local] {
+                return (consumer, tag, Action::DeadPropagate);
+            }
+            let off = frame.input_slot_offset[&consumer];
+            let inputs: Vec<Tensor> = (0..node.inputs.len())
+                .map(|s| iter.inputs[off + s].take().expect("live input present"))
+                .collect();
+            return (consumer, tag, Action::Schedule(inputs));
+        }
+        (consumer, tag, Action::None)
+    }
+
+    /// Propagate a node's completion (live outputs, or deadness) into new
+    /// deliveries, honoring retagging and loop-invariant capture.
+    fn propagate(
+        &self,
+        st: &mut RunState,
+        node_id: NodeId,
+        tag: &Tag,
+        outputs: Option<Vec<Entry>>, // None = all-dead
+        queue: &mut Vec<Delivery>,
+    ) {
+        let node = &self.graph.nodes[node_id.0];
+        let is_dead = outputs.is_none();
+        // Dead tokens flowing out of a loop (Exit) or around its back edge
+        // (NextIteration) are dropped: exactly one live Exit fires per loop
+        // variable, and dead back-edges would cycle forever. (TF equivalent:
+        // dead exits are held in the frame and the iteration stops.)
+        if is_dead && matches!(node.kind, NodeKind::Exit | NodeKind::NextIteration) {
+            return;
+        }
+        let entries: Vec<Entry> = match outputs {
+            Some(e) => e,
+            None => vec![Entry::Dead; node.num_outputs.max(1)],
+        };
+        let retagging =
+            matches!(node.kind, NodeKind::Enter { .. } | NodeKind::Exit | NodeKind::NextIteration);
+        let out_tag = || -> Tag {
+            match node.kind {
+                NodeKind::Enter { frame } => {
+                    let mut t = tag.clone();
+                    t.push((frame, 0));
+                    t
+                }
+                NodeKind::Exit => tag[..tag.len() - 1].to_vec(),
+                NodeKind::NextIteration => {
+                    let mut t = tag.clone();
+                    t.last_mut().unwrap().1 += 1;
+                    t
+                }
+                _ => tag.clone(),
+            }
+        };
+
+        if node.has_invariant_consumers {
+            // Record for future iteration states…
+            for (port, entry) in entries.iter().enumerate() {
+                st.invariants.insert((node_id, port, tag.clone()), entry.clone());
+            }
+            st.invariants.insert(
+                (node_id, usize::MAX, tag.clone()),
+                if is_dead { Entry::Dead } else { Entry::Live(Tensor::scalar_bool(true)) },
+            );
+        }
+
+        for (port, edges) in node.out_edges.iter().enumerate() {
+            let entry = entries.get(port).cloned().unwrap_or(Entry::Dead);
+            for &(consumer, slot) in edges {
+                let cframe = self.graph.nodes[consumer.0].frame;
+                if cframe == node.frame || retagging {
+                    queue.push(Delivery::Data { consumer, slot, tag: out_tag(), entry: entry.clone() });
+                } else {
+                    // Invariant: deliver to every existing deeper iteration
+                    // of the consumer's frame under this producer tag.
+                    let cdepth = self.graph.nodes[consumer.0].frame_depth;
+                    let targets: Vec<Tag> = st
+                        .iters
+                        .keys()
+                        .filter(|t| {
+                            t.len() == cdepth
+                                && t.starts_with(tag)
+                                && self.graph.frame_of_tag(t) == cframe
+                        })
+                        .cloned()
+                        .collect();
+                    for t in targets {
+                        queue.push(Delivery::Data {
+                            consumer,
+                            slot,
+                            tag: t,
+                            entry: entry.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        for &consumer in &node.control_out {
+            let cframe = self.graph.nodes[consumer.0].frame;
+            if cframe == node.frame || retagging {
+                queue.push(Delivery::Control { consumer, tag: out_tag(), dead: is_dead });
+            } else {
+                let cdepth = self.graph.nodes[consumer.0].frame_depth;
+                let targets: Vec<Tag> = st
+                    .iters
+                    .keys()
+                    .filter(|t| {
+                        t.len() == cdepth && t.starts_with(tag) && self.graph.frame_of_tag(t) == cframe
+                    })
+                    .cloned()
+                    .collect();
+                for t in targets {
+                    queue.push(Delivery::Control { consumer, tag: t, dead: is_dead });
+                }
+            }
+        }
+    }
+
+    /// Drain the delivery queue to quiescence; returns newly-ready nodes.
+    fn drain(&self, st: &mut RunState, mut queue: Vec<Delivery>) -> Vec<ScheduledNode> {
+        let mut ready = Vec::new();
+        while let Some(d) = queue.pop() {
+            let tag = match &d {
+                Delivery::Data { tag, .. } | Delivery::Control { tag, .. } => tag.clone(),
+            };
+            self.ensure_iter(st, &tag, &mut queue);
+            let (node, tag, action) = self.apply_delivery(st, &d);
+            match action {
+                Action::None => {}
+                Action::Schedule(inputs) => ready.push(ScheduledNode { node, tag, inputs }),
+                Action::DeadPropagate => self.propagate(st, node, &tag, None, &mut queue),
+                Action::MergeFire(entries) => self.propagate(st, node, &tag, Some(entries), &mut queue),
+            }
+        }
+        st.outstanding += ready.len() as u64;
+        ready
+    }
+
+    fn dispatch(self: &Arc<Self>, s: ScheduledNode) {
+        let inner = Arc::clone(self);
+        self.graph.device.pool.execute(move || {
+            inner.execute_chain(s);
+        });
+    }
+
+    /// Perf (§Perf L3 iteration 2): run follow-up work inline instead of
+    /// round-tripping every ready node through the pool queue — a serial
+    /// chain executes on one thread; only genuine fan-out is dispatched.
+    fn execute_chain(self: &Arc<Self>, first: ScheduledNode) {
+        let mut cur = Some(first);
+        while let Some(s) = cur.take() {
+            let mut followups = self.execute_node(s).into_iter();
+            cur = followups.next();
+            for rest in followups {
+                self.dispatch(rest);
+            }
+        }
+    }
+
+    /// Execute one node; returns ready follow-ups for sync completions
+    /// (async kernels dispatch their follow-ups from the continuation).
+    fn execute_node(self: &Arc<Self>, s: ScheduledNode) -> Vec<ScheduledNode> {
+        let graph = Arc::clone(&self.graph);
+        let node = &graph.nodes[s.node.0];
+
+        if self.ctx.step.is_cancelled() {
+            return self.finish(s.node, s.tag, Err(self
+                .ctx
+                .step
+                .cancel_status()
+                .unwrap_or_else(|| Status::cancelled("step cancelled"))), true);
+        }
+
+        let trace_span =
+            self.ctx.trace.as_ref().map(|t| t.begin(&node.info.name, &node.info.op, &graph.device.name()));
+
+        match &node.kind {
+            NodeKind::Switch => {
+                let result = (|| -> Result<Vec<Entry>> {
+                    let data = s.inputs[0].clone();
+                    let pred = s.inputs[1].scalar_value_bool()?;
+                    Ok(if pred {
+                        vec![Entry::Dead, Entry::Live(data)] // port 1 = true
+                    } else {
+                        vec![Entry::Live(data), Entry::Dead] // port 0 = false
+                    })
+                })();
+                if let Some(sp) = trace_span {
+                    sp.end();
+                }
+                match result {
+                    Ok(entries) => self.finish_entries(s.node, s.tag, entries),
+                    Err(e) => self.finish(s.node, s.tag, Err(e), false),
+                }
+            }
+            NodeKind::Enter { .. } | NodeKind::Exit | NodeKind::NextIteration => {
+                if let Some(sp) = trace_span {
+                    sp.end();
+                }
+                self.finish_entries(s.node, s.tag, vec![Entry::Live(s.inputs[0].clone())])
+            }
+            NodeKind::Merge => unreachable!("merge fires inside drain()"),
+            NodeKind::Normal => {
+                let kernel = node.kernel.as_ref().expect("normal node has kernel");
+                let mut kctx = KernelContext {
+                    inputs: s.inputs,
+                    node: Arc::clone(&node.info),
+                    device: Arc::clone(&graph.device),
+                    resources: Arc::clone(&self.ctx.resources),
+                    rendezvous: Arc::clone(&self.ctx.rendezvous),
+                    step: Arc::clone(&self.ctx.step),
+                };
+                match kernel {
+                    Kernel::Sync(f) => {
+                        let result = f(&mut kctx);
+                        if let Some(sp) = trace_span {
+                            sp.end();
+                        }
+                        if let Ok(outs) = &result {
+                            for t in outs {
+                                graph.device.stats.alloc(t.size_bytes());
+                            }
+                        }
+                        self.finish(s.node, s.tag, result, false)
+                    }
+                    Kernel::Async(f) => {
+                        let inner = Arc::clone(self);
+                        let node_id = s.node;
+                        let tag = s.tag;
+                        let done: DoneFn = Box::new(move |result| {
+                            if let Some(sp) = trace_span {
+                                sp.end();
+                            }
+                            if let Ok(outs) = &result {
+                                for t in outs {
+                                    inner.graph.device.stats.alloc(t.size_bytes());
+                                }
+                            }
+                            // Continuations run on arbitrary threads
+                            // (rendezvous/queue callbacks): dispatch all.
+                            for next in inner.finish(node_id, tag, result, false) {
+                                inner.dispatch(next);
+                            }
+                        });
+                        f(kctx, done);
+                        Vec::new()
+                    }
+                }
+            }
+        }
+    }
+
+    fn finish(
+        self: &Arc<Self>,
+        node: NodeId,
+        tag: Tag,
+        result: Result<Vec<Tensor>>,
+        was_cancelled: bool,
+    ) -> Vec<ScheduledNode> {
+        match result {
+            Ok(outs) => self.finish_entries(node, tag, outs.into_iter().map(Entry::Live).collect()),
+            Err(e) => {
+                if !was_cancelled {
+                    self.ctx.step.cancel(e.clone());
+                    self.ctx.rendezvous.abort(Status::aborted(format!(
+                        "step aborted: {}",
+                        e.message
+                    )));
+                }
+                let mut st = self.state.lock().unwrap();
+                if st.first_error.is_none() && !was_cancelled {
+                    st.first_error = Some(e);
+                }
+                st.outstanding -= 1;
+                if st.outstanding == 0 {
+                    self.done_cond.notify_all();
+                }
+                Vec::new()
+            }
+        }
+    }
+
+    fn finish_entries(self: &Arc<Self>, node_id: NodeId, tag: Tag, entries: Vec<Entry>) -> Vec<ScheduledNode> {
+        let mut st = self.state.lock().unwrap();
+        let mut queue = Vec::new();
+        self.propagate(&mut st, node_id, &tag, Some(entries), &mut queue);
+        let ready = self.drain(&mut st, queue);
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            self.done_cond.notify_all();
+        }
+        ready
+    }
+}

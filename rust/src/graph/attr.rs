@@ -1,0 +1,201 @@
+//! Node attributes (§2 "Operations and Kernels": "an operation can have
+//! attributes, and all attributes must be provided or inferred at
+//! graph-construction time"). The common use is type polymorphism (`T`),
+//! plus shapes, artifact paths (`XlaCall`), queue capacities, etc.
+
+use crate::error::{Result, Status};
+use crate::tensor::{DType, Shape, Tensor};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttrValue {
+    I64(i64),
+    F32(f32),
+    Bool(bool),
+    Str(String),
+    Type(DType),
+    Shape(Shape),
+    Tensor(Tensor),
+    ListI64(Vec<i64>),
+    ListStr(Vec<String>),
+    ListType(Vec<DType>),
+    ListShape(Vec<Shape>),
+}
+
+impl AttrValue {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            AttrValue::I64(_) => "int",
+            AttrValue::F32(_) => "float",
+            AttrValue::Bool(_) => "bool",
+            AttrValue::Str(_) => "string",
+            AttrValue::Type(_) => "type",
+            AttrValue::Shape(_) => "shape",
+            AttrValue::Tensor(_) => "tensor",
+            AttrValue::ListI64(_) => "list(int)",
+            AttrValue::ListStr(_) => "list(string)",
+            AttrValue::ListType(_) => "list(type)",
+            AttrValue::ListShape(_) => "list(shape)",
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            AttrValue::I64(v) => Ok(*v),
+            other => Err(Status::invalid_argument(format!("attr is {}, want int", other.kind()))),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<f32> {
+        match self {
+            AttrValue::F32(v) => Ok(*v),
+            other => Err(Status::invalid_argument(format!("attr is {}, want float", other.kind()))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            AttrValue::Bool(v) => Ok(*v),
+            other => Err(Status::invalid_argument(format!("attr is {}, want bool", other.kind()))),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            AttrValue::Str(v) => Ok(v),
+            other => {
+                Err(Status::invalid_argument(format!("attr is {}, want string", other.kind())))
+            }
+        }
+    }
+
+    pub fn as_type(&self) -> Result<DType> {
+        match self {
+            AttrValue::Type(v) => Ok(*v),
+            other => Err(Status::invalid_argument(format!("attr is {}, want type", other.kind()))),
+        }
+    }
+
+    pub fn as_shape(&self) -> Result<&Shape> {
+        match self {
+            AttrValue::Shape(v) => Ok(v),
+            other => Err(Status::invalid_argument(format!("attr is {}, want shape", other.kind()))),
+        }
+    }
+
+    pub fn as_tensor(&self) -> Result<&Tensor> {
+        match self {
+            AttrValue::Tensor(v) => Ok(v),
+            other => {
+                Err(Status::invalid_argument(format!("attr is {}, want tensor", other.kind())))
+            }
+        }
+    }
+
+    pub fn as_list_i64(&self) -> Result<&[i64]> {
+        match self {
+            AttrValue::ListI64(v) => Ok(v),
+            other => {
+                Err(Status::invalid_argument(format!("attr is {}, want list(int)", other.kind())))
+            }
+        }
+    }
+
+    pub fn as_list_str(&self) -> Result<&[String]> {
+        match self {
+            AttrValue::ListStr(v) => Ok(v),
+            other => Err(Status::invalid_argument(format!(
+                "attr is {}, want list(string)",
+                other.kind()
+            ))),
+        }
+    }
+
+    pub fn as_list_type(&self) -> Result<&[DType]> {
+        match self {
+            AttrValue::ListType(v) => Ok(v),
+            other => Err(Status::invalid_argument(format!(
+                "attr is {}, want list(type)",
+                other.kind()
+            ))),
+        }
+    }
+
+    pub fn as_list_shape(&self) -> Result<&[Shape]> {
+        match self {
+            AttrValue::ListShape(v) => Ok(v),
+            other => Err(Status::invalid_argument(format!(
+                "attr is {}, want list(shape)",
+                other.kind()
+            ))),
+        }
+    }
+}
+
+impl From<i64> for AttrValue {
+    fn from(v: i64) -> Self {
+        AttrValue::I64(v)
+    }
+}
+impl From<f32> for AttrValue {
+    fn from(v: f32) -> Self {
+        AttrValue::F32(v)
+    }
+}
+impl From<bool> for AttrValue {
+    fn from(v: bool) -> Self {
+        AttrValue::Bool(v)
+    }
+}
+impl From<&str> for AttrValue {
+    fn from(v: &str) -> Self {
+        AttrValue::Str(v.to_string())
+    }
+}
+impl From<String> for AttrValue {
+    fn from(v: String) -> Self {
+        AttrValue::Str(v)
+    }
+}
+impl From<DType> for AttrValue {
+    fn from(v: DType) -> Self {
+        AttrValue::Type(v)
+    }
+}
+impl From<Shape> for AttrValue {
+    fn from(v: Shape) -> Self {
+        AttrValue::Shape(v)
+    }
+}
+impl From<Tensor> for AttrValue {
+    fn from(v: Tensor) -> Self {
+        AttrValue::Tensor(v)
+    }
+}
+impl From<Vec<i64>> for AttrValue {
+    fn from(v: Vec<i64>) -> Self {
+        AttrValue::ListI64(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_accessors() {
+        assert_eq!(AttrValue::from(3i64).as_i64().unwrap(), 3);
+        assert_eq!(AttrValue::from(2.5f32).as_f32().unwrap(), 2.5);
+        assert_eq!(AttrValue::from(true).as_bool().unwrap(), true);
+        assert_eq!(AttrValue::from("x").as_str().unwrap(), "x");
+        assert_eq!(AttrValue::from(DType::F32).as_type().unwrap(), DType::F32);
+        assert!(AttrValue::from(3i64).as_str().is_err());
+        assert!(AttrValue::from("x").as_i64().is_err());
+    }
+
+    #[test]
+    fn tensor_attr() {
+        let t = Tensor::scalar_f32(1.0);
+        let a = AttrValue::from(t.clone());
+        assert_eq!(a.as_tensor().unwrap(), &t);
+    }
+}

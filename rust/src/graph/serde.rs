@@ -1,0 +1,369 @@
+//! Binary GraphDef codec: the master ships placed partitions to workers
+//! (§3.3 distributed execution), so graphs must round-trip over the wire.
+//! Little-endian, length-prefixed strings, tensor payloads via
+//! `tensor::codec`.
+
+use super::{AttrValue, Endpoint, Graph, Node, NodeId};
+use crate::error::{Result, Status};
+use crate::tensor::{codec, DType, Shape};
+use byteorder::{ByteOrder, LittleEndian};
+
+pub fn encode_graph(g: &Graph) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u32(&mut out, g.len() as u32);
+    for n in &g.nodes {
+        put_str(&mut out, &n.name);
+        put_str(&mut out, &n.op);
+        put_u32(&mut out, n.inputs.len() as u32);
+        for e in &n.inputs {
+            put_u32(&mut out, e.node.0 as u32);
+            put_u32(&mut out, e.port as u32);
+        }
+        put_u32(&mut out, n.control_inputs.len() as u32);
+        for c in &n.control_inputs {
+            put_u32(&mut out, c.0 as u32);
+        }
+        put_str(&mut out, &n.requested_device);
+        put_str(&mut out, n.assigned_device.as_deref().unwrap_or(""));
+        put_u32(&mut out, n.attrs.len() as u32);
+        for (k, v) in &n.attrs {
+            put_str(&mut out, k);
+            encode_attr(&mut out, v);
+        }
+    }
+    out
+}
+
+pub fn decode_graph(buf: &[u8]) -> Result<Graph> {
+    let mut pos = 0usize;
+    let n = get_u32(buf, &mut pos)? as usize;
+    let mut g = Graph::new();
+    // Two-pass construction is unnecessary: ids are indices and encode
+    // preserves order; but forward references (loop back-edges) mean we
+    // must bypass `add` validation and build directly.
+    let mut nodes = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = get_str(buf, &mut pos)?;
+        let op = get_str(buf, &mut pos)?;
+        let ni = get_u32(buf, &mut pos)? as usize;
+        let mut inputs = Vec::with_capacity(ni);
+        for _ in 0..ni {
+            let node = get_u32(buf, &mut pos)? as usize;
+            let port = get_u32(buf, &mut pos)? as usize;
+            inputs.push(Endpoint::new(NodeId(node), port));
+        }
+        let nc = get_u32(buf, &mut pos)? as usize;
+        let mut control_inputs = Vec::with_capacity(nc);
+        for _ in 0..nc {
+            control_inputs.push(NodeId(get_u32(buf, &mut pos)? as usize));
+        }
+        let requested_device = get_str(buf, &mut pos)?;
+        let assigned = get_str(buf, &mut pos)?;
+        let na = get_u32(buf, &mut pos)? as usize;
+        let mut attrs = std::collections::BTreeMap::new();
+        for _ in 0..na {
+            let k = get_str(buf, &mut pos)?;
+            let v = decode_attr(buf, &mut pos)?;
+            attrs.insert(k, v);
+        }
+        nodes.push(Node {
+            name,
+            op,
+            inputs,
+            control_inputs,
+            attrs,
+            requested_device,
+            assigned_device: if assigned.is_empty() { None } else { Some(assigned) },
+        });
+    }
+    for node in nodes {
+        g.add_unchecked(node);
+    }
+    Ok(g)
+}
+
+fn encode_attr(out: &mut Vec<u8>, v: &AttrValue) {
+    match v {
+        AttrValue::I64(x) => {
+            out.push(0);
+            put_i64(out, *x);
+        }
+        AttrValue::F32(x) => {
+            out.push(1);
+            let mut b = [0u8; 4];
+            LittleEndian::write_f32(&mut b, *x);
+            out.extend_from_slice(&b);
+        }
+        AttrValue::Bool(x) => {
+            out.push(2);
+            out.push(*x as u8);
+        }
+        AttrValue::Str(s) => {
+            out.push(3);
+            put_str(out, s);
+        }
+        AttrValue::Type(d) => {
+            out.push(4);
+            out.push(d.as_u8());
+        }
+        AttrValue::Shape(s) => {
+            out.push(5);
+            put_u32(out, s.rank() as u32);
+            for &d in s.dims() {
+                put_i64(out, d as i64);
+            }
+        }
+        AttrValue::Tensor(t) => {
+            out.push(6);
+            let payload = codec::encode(t);
+            put_u32(out, payload.len() as u32);
+            out.extend_from_slice(&payload);
+        }
+        AttrValue::ListI64(xs) => {
+            out.push(7);
+            put_u32(out, xs.len() as u32);
+            for &x in xs {
+                put_i64(out, x);
+            }
+        }
+        AttrValue::ListStr(xs) => {
+            out.push(8);
+            put_u32(out, xs.len() as u32);
+            for x in xs {
+                put_str(out, x);
+            }
+        }
+        AttrValue::ListType(xs) => {
+            out.push(9);
+            put_u32(out, xs.len() as u32);
+            for x in xs {
+                out.push(x.as_u8());
+            }
+        }
+        AttrValue::ListShape(xs) => {
+            out.push(10);
+            put_u32(out, xs.len() as u32);
+            for s in xs {
+                put_u32(out, s.rank() as u32);
+                for &d in s.dims() {
+                    put_i64(out, d as i64);
+                }
+            }
+        }
+    }
+}
+
+fn decode_attr(buf: &[u8], pos: &mut usize) -> Result<AttrValue> {
+    let tag = get_u8(buf, pos)?;
+    Ok(match tag {
+        0 => AttrValue::I64(get_i64(buf, pos)?),
+        1 => {
+            need(buf, *pos, 4)?;
+            let v = LittleEndian::read_f32(&buf[*pos..]);
+            *pos += 4;
+            AttrValue::F32(v)
+        }
+        2 => AttrValue::Bool(get_u8(buf, pos)? != 0),
+        3 => AttrValue::Str(get_str(buf, pos)?),
+        4 => AttrValue::Type(DType::from_u8(get_u8(buf, pos)?)?),
+        5 => {
+            let rank = get_u32(buf, pos)? as usize;
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                dims.push(get_i64(buf, pos)? as usize);
+            }
+            AttrValue::Shape(Shape(dims))
+        }
+        6 => {
+            let len = get_u32(buf, pos)? as usize;
+            need(buf, *pos, len)?;
+            let (t, used) = codec::decode(&buf[*pos..*pos + len])?;
+            if used != len {
+                return Err(Status::invalid_argument("attr tensor length mismatch"));
+            }
+            *pos += len;
+            AttrValue::Tensor(t)
+        }
+        7 => {
+            let n = get_u32(buf, pos)? as usize;
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(get_i64(buf, pos)?);
+            }
+            AttrValue::ListI64(xs)
+        }
+        8 => {
+            let n = get_u32(buf, pos)? as usize;
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(get_str(buf, pos)?);
+            }
+            AttrValue::ListStr(xs)
+        }
+        9 => {
+            let n = get_u32(buf, pos)? as usize;
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                xs.push(DType::from_u8(get_u8(buf, pos)?)?);
+            }
+            AttrValue::ListType(xs)
+        }
+        10 => {
+            let n = get_u32(buf, pos)? as usize;
+            let mut xs = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rank = get_u32(buf, pos)? as usize;
+                let mut dims = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    dims.push(get_i64(buf, pos)? as usize);
+                }
+                xs.push(Shape(dims));
+            }
+            AttrValue::ListShape(xs)
+        }
+        other => return Err(Status::invalid_argument(format!("unknown attr tag {other}"))),
+    })
+}
+
+// ---- primitives -----------------------------------------------------------
+
+fn need(buf: &[u8], pos: usize, n: usize) -> Result<()> {
+    if buf.len() < pos + n {
+        return Err(Status::invalid_argument("truncated graph encoding"));
+    }
+    Ok(())
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    let mut b = [0u8; 4];
+    LittleEndian::write_u32(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    let mut b = [0u8; 8];
+    LittleEndian::write_i64(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    need(buf, *pos, 1)?;
+    let v = buf[*pos];
+    *pos += 1;
+    Ok(v)
+}
+
+fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    need(buf, *pos, 4)?;
+    let v = LittleEndian::read_u32(&buf[*pos..]);
+    *pos += 4;
+    Ok(v)
+}
+
+fn get_i64(buf: &[u8], pos: &mut usize) -> Result<i64> {
+    need(buf, *pos, 8)?;
+    let v = LittleEndian::read_i64(&buf[*pos..]);
+    *pos += 8;
+    Ok(v)
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_u32(buf, pos)? as usize;
+    need(buf, *pos, len)?;
+    let s = std::str::from_utf8(&buf[*pos..*pos + len])
+        .map_err(|_| Status::invalid_argument("invalid utf8 string"))?
+        .to_string();
+    *pos += len;
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(2.0);
+        let y = b.with_device("/device:cpu:1", |b| b.neg(x));
+        b.graph.node_mut(y.node).assigned_device = Some("/job:w/task:0/device:cpu:1".into());
+        let enc = encode_graph(&b.graph);
+        let dec = decode_graph(&enc).unwrap();
+        assert_eq!(dec.len(), b.graph.len());
+        let yn = dec.find("Neg").unwrap();
+        assert_eq!(dec.node(yn).requested_device, "/device:cpu:1");
+        assert_eq!(dec.node(yn).assigned_device.as_deref(), Some("/job:w/task:0/device:cpu:1"));
+        assert_eq!(dec.node(yn).inputs[0].node, x.node);
+    }
+
+    #[test]
+    fn roundtrip_all_attr_kinds() {
+        let mut b = GraphBuilder::new();
+        let id = b
+            .op(
+                "NoOp",
+                "attrs",
+                vec![],
+                vec![
+                    ("i", AttrValue::I64(-5)),
+                    ("f", AttrValue::F32(1.5)),
+                    ("b", AttrValue::Bool(true)),
+                    ("s", AttrValue::Str("hello".into())),
+                    ("t", AttrValue::Type(DType::I64)),
+                    ("sh", AttrValue::Shape(Shape(vec![2, 3]))),
+                    ("tv", AttrValue::Tensor(Tensor::from_f32(vec![2], vec![1., 2.]).unwrap())),
+                    ("li", AttrValue::ListI64(vec![1, 2, 3])),
+                    ("ls", AttrValue::ListStr(vec!["a".into(), "b".into()])),
+                    ("lt", AttrValue::ListType(vec![DType::F32, DType::Bool])),
+                    ("lsh", AttrValue::ListShape(vec![Shape(vec![1]), Shape(vec![])])),
+                ],
+            )
+            .unwrap();
+        let enc = encode_graph(&b.graph);
+        let dec = decode_graph(&enc).unwrap();
+        let n = dec.node(id);
+        assert_eq!(n.attrs.len(), 11);
+        assert_eq!(n.attrs["i"].as_i64().unwrap(), -5);
+        assert_eq!(n.attrs["tv"].as_tensor().unwrap().as_f32().unwrap(), &[1., 2.]);
+        assert_eq!(n.attrs["lsh"].as_list_shape().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn roundtrip_loop_graph() {
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        b.while_loop(
+            "f",
+            vec![zero],
+            |b, v| {
+                let lim = b.scalar(3.0);
+                Ok(b.less(v[0], lim))
+            },
+            |b, v| {
+                let one = b.scalar(1.0);
+                Ok(vec![b.add(v[0], one)])
+            },
+        )
+        .unwrap();
+        let enc = encode_graph(&b.graph);
+        let dec = decode_graph(&enc).unwrap();
+        assert_eq!(dec.len(), b.graph.len());
+        assert!(dec.topo_order().is_ok());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(decode_graph(&[1, 2, 3]).is_err());
+        let mut b = GraphBuilder::new();
+        b.scalar(1.0);
+        let enc = encode_graph(&b.graph);
+        assert!(decode_graph(&enc[..enc.len() - 2]).is_err());
+    }
+}

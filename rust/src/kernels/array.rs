@@ -1,0 +1,593 @@
+//! Array operations (Table 1 row 2): Const, Identity, Concat, Slice,
+//! Split, Rank, Shape, Size, Reshape, Shuffle, Fill, Gather, Transpose,
+//! Pack/Unpack, Tile, ExpandDims, Squeeze, random init ops, Print.
+
+use super::{Kernel, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::tensor::{DType, Shape, Tensor, TensorData};
+use crate::util::rng::Pcg32;
+use std::sync::Mutex;
+
+// ---------------------------------------------------------------------------
+// pure helpers (reused by gradients and other kernels)
+// ---------------------------------------------------------------------------
+
+/// Concatenate along `axis`. All inputs must agree on other dims.
+pub fn concat(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
+    if xs.is_empty() {
+        return Err(Status::invalid_argument("Concat of zero tensors"));
+    }
+    let rank = xs[0].shape().rank();
+    let axis = normalize_axis(axis, rank)?;
+    let mut out_dims = xs[0].shape().dims().to_vec();
+    let mut axis_total = 0;
+    for x in xs {
+        if x.shape().rank() != rank {
+            return Err(Status::invalid_argument("Concat: rank mismatch"));
+        }
+        for d in 0..rank {
+            if d != axis && x.shape().dims()[d] != out_dims[d] {
+                return Err(Status::invalid_argument(format!(
+                    "Concat: dim {d} mismatch: {} vs {}",
+                    x.shape().dims()[d],
+                    out_dims[d]
+                )));
+            }
+        }
+        axis_total += x.shape().dims()[axis];
+    }
+    out_dims[axis] = axis_total;
+    let outer: usize = out_dims[..axis].iter().product::<usize>().max(1);
+    let inner: usize = out_dims[axis + 1..].iter().product::<usize>().max(1);
+    let mut out: Vec<f32> = Vec::with_capacity(out_dims.iter().product());
+    for o in 0..outer {
+        for x in xs {
+            let v = x.as_f32()?;
+            let ax = x.shape().dims()[axis];
+            out.extend_from_slice(&v[o * ax * inner..(o + 1) * ax * inner]);
+        }
+    }
+    Tensor::new(Shape(out_dims), TensorData::F32(out))
+}
+
+/// Slice: out[i] = in[begin + i], sizes from `size` (-1 ⇒ to end).
+pub fn slice(x: &Tensor, begin: &[i64], size: &[i64]) -> Result<Tensor> {
+    let rank = x.shape().rank();
+    if begin.len() != rank || size.len() != rank {
+        return Err(Status::invalid_argument("Slice: begin/size must have input rank"));
+    }
+    let dims = x.shape().dims();
+    let mut out_dims = Vec::with_capacity(rank);
+    for d in 0..rank {
+        let b = begin[d] as usize;
+        let s = if size[d] < 0 { dims[d] - b } else { size[d] as usize };
+        if b + s > dims[d] {
+            return Err(Status::invalid_argument(format!(
+                "Slice: begin {b} + size {s} > dim {} at axis {d}",
+                dims[d]
+            )));
+        }
+        out_dims.push(s);
+    }
+    let out_shape = Shape(out_dims.clone());
+    let v = x.as_f32()?;
+    let strides = x.shape().strides();
+    let mut out = Vec::with_capacity(out_shape.num_elements());
+    let mut idx = vec![0usize; rank];
+    for _ in 0..out_shape.num_elements() {
+        let mut off = 0;
+        for d in 0..rank {
+            off += (begin[d] as usize + idx[d]) * strides[d];
+        }
+        out.push(v[off]);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < out_dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Tensor::new(out_shape, TensorData::F32(out))
+}
+
+/// Split into `num` equal parts along `axis`.
+pub fn split(x: &Tensor, axis: i64, num: usize) -> Result<Vec<Tensor>> {
+    let rank = x.shape().rank();
+    let axis_u = normalize_axis(axis, rank)?;
+    let dims = x.shape().dims();
+    if dims[axis_u] % num != 0 {
+        return Err(Status::invalid_argument(format!(
+            "Split: dim {} not divisible by {num}",
+            dims[axis_u]
+        )));
+    }
+    let part = dims[axis_u] / num;
+    let mut outs = Vec::with_capacity(num);
+    for i in 0..num {
+        let mut begin = vec![0i64; rank];
+        let mut size: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+        begin[axis_u] = (i * part) as i64;
+        size[axis_u] = part as i64;
+        outs.push(slice(x, &begin, &size)?);
+    }
+    Ok(outs)
+}
+
+/// Transpose by permutation (empty perm ⇒ reverse dims).
+pub fn transpose(x: &Tensor, perm: &[i64]) -> Result<Tensor> {
+    let rank = x.shape().rank();
+    let perm: Vec<usize> = if perm.is_empty() {
+        (0..rank).rev().collect()
+    } else {
+        if perm.len() != rank {
+            return Err(Status::invalid_argument("Transpose: perm length != rank"));
+        }
+        perm.iter().map(|&p| p as usize).collect()
+    };
+    let dims = x.shape().dims();
+    let out_dims: Vec<usize> = perm.iter().map(|&p| dims[p]).collect();
+    let in_strides = x.shape().strides();
+    let out_shape = Shape(out_dims.clone());
+    let v = x.as_f32()?;
+    let mut out = Vec::with_capacity(v.len());
+    let mut idx = vec![0usize; rank];
+    for _ in 0..v.len() {
+        let mut off = 0;
+        for d in 0..rank {
+            off += idx[d] * in_strides[perm[d]];
+        }
+        out.push(v[off]);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < out_dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Tensor::new(out_shape, TensorData::F32(out))
+}
+
+/// Gather rows: out[i, …] = params[indices[i], …].
+pub fn gather(params: &Tensor, indices: &Tensor) -> Result<Tensor> {
+    let idx = indices.as_i64()?;
+    let dims = params.shape().dims();
+    if dims.is_empty() {
+        return Err(Status::invalid_argument("Gather: params must have rank >= 1"));
+    }
+    let row: usize = dims[1..].iter().product::<usize>().max(1);
+    let v = params.as_f32()?;
+    let mut out = Vec::with_capacity(idx.len() * row);
+    for &i in idx {
+        let i = i as usize;
+        if i >= dims[0] {
+            return Err(Status::out_of_range(format!("Gather: index {i} >= {}", dims[0])));
+        }
+        out.extend_from_slice(&v[i * row..(i + 1) * row]);
+    }
+    let mut out_dims = indices.shape().dims().to_vec();
+    out_dims.extend_from_slice(&dims[1..]);
+    Tensor::new(Shape(out_dims), TensorData::F32(out))
+}
+
+/// Tile by per-axis multiples.
+pub fn tile(x: &Tensor, multiples: &[i64]) -> Result<Tensor> {
+    let rank = x.shape().rank();
+    if multiples.len() != rank {
+        return Err(Status::invalid_argument("Tile: multiples length != rank"));
+    }
+    let dims = x.shape().dims();
+    let out_dims: Vec<usize> =
+        dims.iter().zip(multiples).map(|(&d, &m)| d * m as usize).collect();
+    let out_shape = Shape(out_dims.clone());
+    let v = x.as_f32()?;
+    let strides = x.shape().strides();
+    let mut out = Vec::with_capacity(out_shape.num_elements());
+    let mut idx = vec![0usize; rank];
+    for _ in 0..out_shape.num_elements() {
+        let mut off = 0;
+        for d in 0..rank {
+            off += (idx[d] % dims[d]) * strides[d];
+        }
+        out.push(v[off]);
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < out_dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Tensor::new(out_shape, TensorData::F32(out))
+}
+
+/// Stack along a new axis.
+pub fn pack(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
+    if xs.is_empty() {
+        return Err(Status::invalid_argument("Pack of zero tensors"));
+    }
+    let base = xs[0].shape().clone();
+    for x in xs {
+        if x.shape() != &base {
+            return Err(Status::invalid_argument("Pack: shape mismatch"));
+        }
+    }
+    let rank = base.rank() + 1;
+    let axis = normalize_axis(axis, rank)?;
+    // Reshape each to have a 1-dim at `axis`, then concat.
+    let mut with_axis = base.dims().to_vec();
+    with_axis.insert(axis, 1);
+    let reshaped: Vec<Tensor> =
+        xs.iter().map(|x| x.reshape(with_axis.clone())).collect::<Result<_>>()?;
+    let refs: Vec<&Tensor> = reshaped.iter().collect();
+    concat(&refs, axis as i64)
+}
+
+fn normalize_axis(axis: i64, rank: usize) -> Result<usize> {
+    let a = if axis < 0 { axis + rank as i64 } else { axis };
+    if a < 0 || a as usize >= rank.max(1) {
+        return Err(Status::invalid_argument(format!("axis {axis} out of range for rank {rank}")));
+    }
+    Ok(a as usize)
+}
+
+/// Broadcast `x` up to `shape`.
+pub fn broadcast_to(x: &Tensor, shape: &Shape) -> Result<Tensor> {
+    let ones = Tensor::fill_f32(shape.clone(), 0.0);
+    crate::kernels::math::binary_elementwise(x, &ones, "Add")
+}
+
+/// Sum `grad` down to `target` shape (inverse of broadcasting): sum over
+/// leading extra dims and over dims where target has size 1.
+pub fn sum_to_shape(grad: &Tensor, target: &Shape) -> Result<Tensor> {
+    if grad.shape() == target {
+        return Ok(grad.clone());
+    }
+    let grank = grad.shape().rank();
+    let trank = target.rank();
+    if trank > grank {
+        return Err(Status::invalid_argument(format!(
+            "SumToShape: target {target} has higher rank than grad {}",
+            grad.shape()
+        )));
+    }
+    // Axes to reduce: leading extra dims + dims where target is 1.
+    let mut axes: Vec<i64> = (0..grank - trank).map(|d| d as i64).collect();
+    for d in 0..trank {
+        if target.dims()[d] == 1 && grad.shape().dims()[grank - trank + d] != 1 {
+            axes.push((grank - trank + d) as i64);
+        }
+    }
+    let reduced = crate::kernels::math::reduce(grad, "Sum", Some(&axes))?;
+    reduced.reshape(target.clone())
+}
+
+// ---------------------------------------------------------------------------
+// registration
+// ---------------------------------------------------------------------------
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    // Const precomputes its value at kernel-build time.
+    r.add("Const", |node| {
+        let value = node.attr("value")?.as_tensor()?.clone();
+        Ok(Kernel::Sync(Box::new(move |_ctx| Ok(vec![value.clone()]))))
+    });
+    r.add_sync("Identity", |ctx| Ok(vec![ctx.input(0)?.clone()]));
+    r.add_sync("StopGradient", |ctx| Ok(vec![ctx.input(0)?.clone()]));
+    // Placeholder must always be fed; reaching its kernel means it wasn't.
+    r.add("Placeholder", |node| {
+        let name = node.name.clone();
+        Ok(Kernel::Sync(Box::new(move |_ctx| {
+            Err(Status::invalid_argument(format!(
+                "placeholder {name:?} was not fed (pass it in Run's inputs)"
+            )))
+        })))
+    });
+    r.add_sync("Rank", |ctx| {
+        Ok(vec![Tensor::scalar_i32(ctx.input(0)?.shape().rank() as i32)])
+    });
+    r.add_sync("Shape", |ctx| {
+        let dims: Vec<i64> = ctx.input(0)?.shape().dims().iter().map(|&d| d as i64).collect();
+        Ok(vec![Tensor::from_i64(vec![dims.len()], dims)?])
+    });
+    r.add_sync("Size", |ctx| {
+        Ok(vec![Tensor::scalar_i64(ctx.input(0)?.num_elements() as i64)])
+    });
+    r.add_sync("Reshape", |ctx| {
+        let shape_t = ctx.input(1)?;
+        let dims_i = shape_t.as_i64()?;
+        let in_n = ctx.input(0)?.num_elements();
+        // One dim may be -1 (inferred).
+        let known: i64 = dims_i.iter().filter(|&&d| d >= 0).product();
+        let dims: Vec<usize> = dims_i
+            .iter()
+            .map(|&d| if d < 0 { in_n / known.max(1) as usize } else { d as usize })
+            .collect();
+        Ok(vec![ctx.input(0)?.reshape(dims)?])
+    });
+    r.add_sync("Concat", |ctx| {
+        let axis = ctx.node.attr("axis")?.as_i64()?;
+        let refs: Vec<&Tensor> = ctx.inputs.iter().collect();
+        Ok(vec![concat(&refs, axis)?])
+    });
+    r.add_sync("Slice", |ctx| {
+        let begin = ctx.node.attr("begin")?.as_list_i64()?.to_vec();
+        let size = ctx.node.attr("size")?.as_list_i64()?.to_vec();
+        Ok(vec![slice(ctx.input(0)?, &begin, &size)?])
+    });
+    r.add_sync("Split", |ctx| {
+        let axis = ctx.node.attr("axis")?.as_i64()?;
+        let num = ctx.node.attr("num_split")?.as_i64()? as usize;
+        split(ctx.input(0)?, axis, num)
+    });
+    r.add_sync("Transpose", |ctx| {
+        let perm = ctx
+            .node
+            .attr_opt("perm")
+            .map(|a| a.as_list_i64().map(|s| s.to_vec()))
+            .transpose()?
+            .unwrap_or_default();
+        Ok(vec![transpose(ctx.input(0)?, &perm)?])
+    });
+    r.add_sync("Gather", |ctx| {
+        Ok(vec![gather(ctx.input(0)?, ctx.input(1)?)?])
+    });
+    r.add_sync("Tile", |ctx| {
+        let m = ctx.node.attr("multiples")?.as_list_i64()?.to_vec();
+        Ok(vec![tile(ctx.input(0)?, &m)?])
+    });
+    r.add_sync("Pack", |ctx| {
+        let axis = ctx.node.attr_opt("axis").map(|a| a.as_i64()).transpose()?.unwrap_or(0);
+        let refs: Vec<&Tensor> = ctx.inputs.iter().collect();
+        Ok(vec![pack(&refs, axis)?])
+    });
+    r.add_sync("Unpack", |ctx| {
+        let n = ctx.node.attr("N")?.as_i64()? as usize;
+        let parts = split(ctx.input(0)?, 0, n)?;
+        // Drop the leading 1-dim of each part.
+        parts
+            .into_iter()
+            .map(|p| {
+                let dims = p.shape().dims()[1..].to_vec();
+                p.reshape(dims)
+            })
+            .collect()
+    });
+    r.add_sync("ExpandDims", |ctx| {
+        let axis = ctx.node.attr("axis")?.as_i64()?;
+        let x = ctx.input(0)?;
+        let mut dims = x.shape().dims().to_vec();
+        let a = if axis < 0 { (axis + 1 + dims.len() as i64) as usize } else { axis as usize };
+        dims.insert(a.min(dims.len()), 1);
+        Ok(vec![x.reshape(dims)?])
+    });
+    r.add_sync("Squeeze", |ctx| {
+        let x = ctx.input(0)?;
+        let dims: Vec<usize> = x.shape().dims().iter().copied().filter(|&d| d != 1).collect();
+        Ok(vec![x.reshape(dims)?])
+    });
+    r.add_sync("ZerosLike", |ctx| {
+        let x = ctx.input(0)?;
+        Ok(vec![Tensor::zeros(x.dtype(), x.shape().clone())?])
+    });
+    r.add_sync("OnesLike", |ctx| {
+        let x = ctx.input(0)?;
+        let n = x.num_elements();
+        Ok(vec![match x.dtype() {
+            DType::F32 => Tensor::from_f32(x.shape().clone(), vec![1.0; n])?,
+            DType::F64 => Tensor::from_f64(x.shape().clone(), vec![1.0; n])?,
+            DType::I32 => Tensor::from_i32(x.shape().clone(), vec![1; n])?,
+            DType::I64 => Tensor::from_i64(x.shape().clone(), vec![1; n])?,
+            d => return Err(Status::unimplemented(format!("OnesLike for {d}"))),
+        }])
+    });
+    r.add_sync("Fill", |ctx| {
+        let dims: Vec<usize> = ctx.input(0)?.as_i64()?.iter().map(|&d| d as usize).collect();
+        let v = ctx.input(1)?.scalar_value_f32()?;
+        Ok(vec![Tensor::fill_f32(dims, v)])
+    });
+    // Gradient helpers (§4.1): shapes are runtime values here.
+    r.add_sync("SumToShape", |ctx| {
+        // Reduce `grad` (input 0) down to the shape of `like` (input 1) by
+        // summing over broadcast dimensions — the reverse of numpy
+        // broadcasting.
+        let grad = ctx.input(0)?;
+        let like = ctx.input(1)?;
+        Ok(vec![sum_to_shape(grad, like.shape())?])
+    });
+    r.add_sync("BroadcastLike", |ctx| {
+        let x = ctx.input(0)?;
+        let like = ctx.input(1)?;
+        Ok(vec![broadcast_to(x, like.shape())?])
+    });
+    r.add_sync("ReshapeLike", |ctx| {
+        let x = ctx.input(0)?;
+        let like = ctx.input(1)?;
+        Ok(vec![x.reshape(like.shape().clone())?])
+    });
+    r.add_sync("BroadcastTo", |ctx| {
+        let shape = ctx.node.attr("shape")?.as_shape()?.clone();
+        Ok(vec![broadcast_to(ctx.input(0)?, &shape)?])
+    });
+    // Shuffle: random permutation of rows (axis 0), seeded per node.
+    r.add("Shuffle", |node| {
+        let seed = node.attr_opt("seed").and_then(|a| a.as_i64().ok()).unwrap_or(0) as u64;
+        // Perturb the seed so a Shuffle with seed=0 is uncorrelated with a
+        // RandomUniform with seed=0.
+        let rng = Mutex::new(Pcg32::new(seed ^ 0x9E37_79B9));
+        Ok(Kernel::Sync(Box::new(move |ctx| {
+            let x = ctx.input(0)?;
+            let dims = x.shape().dims();
+            if dims.is_empty() {
+                return Ok(vec![x.clone()]);
+            }
+            let rows = dims[0];
+            let row: usize = dims[1..].iter().product::<usize>().max(1);
+            let v = x.as_f32()?;
+            let mut order: Vec<usize> = (0..rows).collect();
+            rng.lock().unwrap().shuffle(&mut order);
+            let mut out = Vec::with_capacity(v.len());
+            for r_i in order {
+                out.extend_from_slice(&v[r_i * row..(r_i + 1) * row]);
+            }
+            Ok(vec![Tensor::new(x.shape().clone(), TensorData::F32(out))?])
+        })))
+    });
+    r.add("RandomUniform", |node| {
+        let shape = node.attr("shape")?.as_shape()?.clone();
+        let lo = node.attr_opt("lo").and_then(|a| a.as_f32().ok()).unwrap_or(0.0);
+        let hi = node.attr_opt("hi").and_then(|a| a.as_f32().ok()).unwrap_or(1.0);
+        let seed = node.attr_opt("seed").and_then(|a| a.as_i64().ok()).unwrap_or(0) as u64;
+        let rng = Mutex::new(Pcg32::new(seed));
+        Ok(Kernel::Sync(Box::new(move |_ctx| {
+            let mut rng = rng.lock().unwrap();
+            let v: Vec<f32> = (0..shape.num_elements()).map(|_| rng.uniform(lo, hi)).collect();
+            Ok(vec![Tensor::from_f32(shape.clone(), v)?])
+        })))
+    });
+    r.add("RandomStandardNormal", |node| {
+        let shape = node.attr("shape")?.as_shape()?.clone();
+        let seed = node.attr_opt("seed").and_then(|a| a.as_i64().ok()).unwrap_or(0) as u64;
+        let rng = Mutex::new(Pcg32::new(seed));
+        Ok(Kernel::Sync(Box::new(move |_ctx| {
+            let mut rng = rng.lock().unwrap();
+            let v: Vec<f32> = (0..shape.num_elements()).map(|_| rng.normal()).collect();
+            Ok(vec![Tensor::from_f32(shape.clone(), v)?])
+        })))
+    });
+    r.add_sync("Print", |ctx| {
+        let t = ctx.input(0)?;
+        let preview: String = match t.as_f32() {
+            Ok(v) => format!("{:?}", &v[..v.len().min(8)]),
+            Err(_) => format!("{t}"),
+        };
+        eprintln!("[rustflow Print {}] {t} {preview}", ctx.node.name);
+        Ok(vec![t.clone()])
+    });
+    // LoopCond is a plain identity over a bool (§4.4 marker op).
+    r.add_sync("LoopCond", |ctx| Ok(vec![ctx.input(0)?.clone()]));
+    r.add_sync("NoOp", |_ctx| Ok(vec![]));
+    r.add_sync("ControlTrigger", |_ctx| Ok(vec![]));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(shape, v).unwrap()
+    }
+
+    #[test]
+    fn concat_axis0_and_1() {
+        let a = t(vec![1, 2], vec![1., 2.]);
+        let b = t(vec![1, 2], vec![3., 4.]);
+        let c0 = concat(&[&a, &b], 0).unwrap();
+        assert_eq!(c0.shape().dims(), &[2, 2]);
+        assert_eq!(c0.as_f32().unwrap(), &[1., 2., 3., 4.]);
+        let c1 = concat(&[&a, &b], 1).unwrap();
+        assert_eq!(c1.shape().dims(), &[1, 4]);
+        assert_eq!(c1.as_f32().unwrap(), &[1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn concat_mismatch_rejected() {
+        let a = t(vec![1, 2], vec![1., 2.]);
+        let b = t(vec![1, 3], vec![3., 4., 5.]);
+        assert!(concat(&[&a, &b], 0).is_err());
+    }
+
+    #[test]
+    fn slice_basic() {
+        let x = t(vec![3, 3], (0..9).map(|i| i as f32).collect());
+        let s = slice(&x, &[1, 0], &[2, 2]).unwrap();
+        assert_eq!(s.shape().dims(), &[2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[3., 4., 6., 7.]);
+        // -1 size = to end
+        let s2 = slice(&x, &[0, 1], &[-1, -1]).unwrap();
+        assert_eq!(s2.shape().dims(), &[3, 2]);
+    }
+
+    #[test]
+    fn slice_out_of_bounds() {
+        let x = t(vec![2, 2], vec![0.; 4]);
+        assert!(slice(&x, &[1, 0], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn split_even() {
+        let x = t(vec![4, 2], (0..8).map(|i| i as f32).collect());
+        let parts = split(&x, 0, 2).unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].as_f32().unwrap(), &[0., 1., 2., 3.]);
+        assert_eq!(parts[1].as_f32().unwrap(), &[4., 5., 6., 7.]);
+        assert!(split(&x, 0, 3).is_err());
+    }
+
+    #[test]
+    fn split_then_concat_roundtrip() {
+        let x = t(vec![2, 6], (0..12).map(|i| i as f32).collect());
+        let parts = split(&x, 1, 3).unwrap();
+        let refs: Vec<&Tensor> = parts.iter().collect();
+        let back = concat(&refs, 1).unwrap();
+        assert_eq!(back.as_f32().unwrap(), x.as_f32().unwrap());
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let x = t(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let y = transpose(&x, &[1, 0]).unwrap();
+        assert_eq!(y.shape().dims(), &[3, 2]);
+        assert_eq!(y.as_f32().unwrap(), &[1., 4., 2., 5., 3., 6.]);
+        // default perm = reverse
+        let z = transpose(&x, &[]).unwrap();
+        assert_eq!(z.as_f32().unwrap(), y.as_f32().unwrap());
+    }
+
+    #[test]
+    fn transpose_3d() {
+        let x = t(vec![2, 1, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let y = transpose(&x, &[2, 1, 0]).unwrap();
+        assert_eq!(y.shape().dims(), &[3, 1, 2]);
+        assert_eq!(y.as_f32().unwrap(), &[1., 4., 2., 5., 3., 6.]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let p = t(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let i = Tensor::from_i64(vec![2], vec![2, 0]).unwrap();
+        let g = gather(&p, &i).unwrap();
+        assert_eq!(g.shape().dims(), &[2, 2]);
+        assert_eq!(g.as_f32().unwrap(), &[5., 6., 1., 2.]);
+        let bad = Tensor::from_i64(vec![1], vec![9]).unwrap();
+        assert!(gather(&p, &bad).is_err());
+    }
+
+    #[test]
+    fn tile_2d() {
+        let x = t(vec![1, 2], vec![1., 2.]);
+        let y = tile(&x, &[2, 2]).unwrap();
+        assert_eq!(y.shape().dims(), &[2, 4]);
+        assert_eq!(y.as_f32().unwrap(), &[1., 2., 1., 2., 1., 2., 1., 2.]);
+    }
+
+    #[test]
+    fn pack_stacks() {
+        let a = t(vec![2], vec![1., 2.]);
+        let b = t(vec![2], vec![3., 4.]);
+        let p = pack(&[&a, &b], 0).unwrap();
+        assert_eq!(p.shape().dims(), &[2, 2]);
+        assert_eq!(p.as_f32().unwrap(), &[1., 2., 3., 4.]);
+        let p1 = pack(&[&a, &b], 1).unwrap();
+        assert_eq!(p1.shape().dims(), &[2, 2]);
+        assert_eq!(p1.as_f32().unwrap(), &[1., 3., 2., 4.]);
+    }
+
+    #[test]
+    fn broadcast_to_shape() {
+        let x = t(vec![1, 3], vec![1., 2., 3.]);
+        let y = broadcast_to(&x, &Shape(vec![2, 3])).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[1., 2., 3., 1., 2., 3.]);
+    }
+}

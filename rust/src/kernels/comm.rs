@@ -1,0 +1,90 @@
+//! Communication kernels: `_Send`/`_Recv` pairs inserted by the §3.2.2
+//! partitioner, plus `_Feed`/`_Fetch` inserted by §4.2 partial execution.
+//!
+//! `_Recv` is the canonical asynchronous kernel (§5.3): it registers a
+//! continuation with the rendezvous and returns immediately.
+//!
+//! §5.5 lossy compression: when a Send node carries `compress=true` (set
+//! by the partitioner for cross-worker edges), the f32 payload is
+//! truncated to bf16 before the rendezvous and re-expanded (zero-filled
+//! mantissa, exactly the paper's scheme) by the matching Recv.
+
+use super::{DoneFn, Kernel, KernelContext, KernelRegistry};
+use crate::compress;
+use crate::error::Status;
+use crate::tensor::{DType, Tensor};
+
+/// Distributed keys carry a `%STEP%` placeholder (one registered partition
+/// serves every step); substitute the live step id.
+fn resolve_key(key: &str, step_id: u64) -> String {
+    if key.contains("%STEP%") {
+        key.replace("%STEP%", &format!("step:{step_id}"))
+    } else {
+        key.to_string()
+    }
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    // _Send(tensor). Attrs: key (rendezvous key), compress (bool).
+    r.add("_Send", |node| {
+        let key = node.attr("key")?.as_str()?.to_string();
+        let compress_wire =
+            node.attr_opt("compress").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let mut t = ctx.input(0)?.clone();
+            if compress_wire && t.dtype() == DType::F32 {
+                t = compress::f32_to_bf16(&t)?;
+            }
+            let key = resolve_key(&key, ctx.step.step_id);
+            ctx.rendezvous.send(&key, t)?;
+            Ok(vec![])
+        })))
+    });
+
+    // _Recv() -> tensor. Attrs: key.
+    r.add("_Recv", |node| {
+        let key = node.attr("key")?.as_str()?.to_string();
+        Ok(Kernel::Async(Box::new(move |ctx: KernelContext, done: DoneFn| {
+            let key = resolve_key(&key, ctx.step.step_id);
+            ctx.rendezvous.recv_async(
+                &key,
+                Box::new(move |res| {
+                    done(res.and_then(|t| {
+                        // Transparently decompress bf16 wire tensors.
+                        let t = if t.dtype() == DType::BF16 {
+                            compress::bf16_to_f32(&t)?
+                        } else {
+                            t
+                        };
+                        Ok(vec![t])
+                    }))
+                }),
+            );
+        })))
+    });
+
+    // _Feed() -> tensor: reads a pre-populated feed from the step
+    // rendezvous ("specially-initialized entries in a Rendezvous object
+    // used for the Run call", §4.2).
+    r.add("_Feed", |node| {
+        let key = node.attr("key")?.as_str()?.to_string();
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            ctx.rendezvous
+                .try_recv(&key)
+                .map(|t| vec![t])
+                .ok_or_else(|| Status::internal(format!("feed {key:?} missing from rendezvous")))
+        })))
+    });
+
+    // _Fetch(tensor): stores into the step's fetch map under attr "name".
+    r.add("_Fetch", |node| {
+        let name = node.attr("name")?.as_str()?.to_string();
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            ctx.step.put_fetch(&name, ctx.input(0)?.clone());
+            Ok(vec![])
+        })))
+    });
+}
+
+#[allow(dead_code)]
+fn _t(_: &Tensor) {}

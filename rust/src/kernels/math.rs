@@ -1,0 +1,659 @@
+//! Element-wise mathematical operations (Table 1 row 1) and reductions:
+//! binary ops with full numpy-style broadcasting, unary ops, comparisons,
+//! Select, AddN, Cast, CheckNumerics.
+
+use super::{Kernel, KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::tensor::{Shape, Tensor, TensorData};
+
+// ---------------------------------------------------------------------------
+// broadcasting machinery
+// ---------------------------------------------------------------------------
+
+/// Iterate the broadcast of two shapes, calling `f(ai, bi)` with element
+/// indices into `a` and `b` for every output element, in row-major order.
+/// Fast paths: same-shape, scalar lhs/rhs.
+fn broadcast_index_map(a: &Shape, b: &Shape) -> Result<(Shape, Vec<(usize, usize)>)> {
+    let out = a.broadcast(b)?;
+    let n = out.num_elements();
+    let rank = out.rank();
+    let a_strides = padded_strides(a, rank);
+    let b_strides = padded_strides(b, rank);
+    let out_dims = out.dims();
+    let mut map = Vec::with_capacity(n);
+    let mut idx = vec![0usize; rank];
+    for _ in 0..n {
+        let mut ai = 0;
+        let mut bi = 0;
+        for d in 0..rank {
+            ai += idx[d] * a_strides[d];
+            bi += idx[d] * b_strides[d];
+        }
+        map.push((ai, bi));
+        // increment multi-index
+        for d in (0..rank).rev() {
+            idx[d] += 1;
+            if idx[d] < out_dims[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok((out, map))
+}
+
+/// Strides of `s` when right-aligned into `rank` dims, with stride 0 for
+/// broadcast (size-1 or missing) dimensions.
+fn padded_strides(s: &Shape, rank: usize) -> Vec<usize> {
+    let strides = s.strides();
+    let offset = rank - s.rank();
+    let mut out = vec![0usize; rank];
+    for d in 0..s.rank() {
+        out[offset + d] = if s.dims()[d] == 1 { 0 } else { strides[d] };
+    }
+    out
+}
+
+macro_rules! apply_binary {
+    ($a:expr, $b:expr, $out_shape:expr, $map:expr, $f:expr) => {{
+        let mut out = Vec::with_capacity($map.len());
+        for &(ai, bi) in $map.iter() {
+            out.push($f($a[ai], $b[bi]));
+        }
+        Tensor::new($out_shape, out.into())
+    }};
+}
+
+impl From<Vec<f32>> for TensorData {
+    fn from(v: Vec<f32>) -> Self {
+        TensorData::F32(v)
+    }
+}
+impl From<Vec<f64>> for TensorData {
+    fn from(v: Vec<f64>) -> Self {
+        TensorData::F64(v)
+    }
+}
+impl From<Vec<i32>> for TensorData {
+    fn from(v: Vec<i32>) -> Self {
+        TensorData::I32(v)
+    }
+}
+impl From<Vec<i64>> for TensorData {
+    fn from(v: Vec<i64>) -> Self {
+        TensorData::I64(v)
+    }
+}
+impl From<Vec<bool>> for TensorData {
+    fn from(v: Vec<bool>) -> Self {
+        TensorData::Bool(v)
+    }
+}
+
+/// Arithmetic binary op with broadcasting, dispatched on dtype.
+/// Exposed publicly: AssignAdd/AssignSub and optimizer kernels reuse it.
+pub fn binary_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
+    if a.dtype() != b.dtype() {
+        return Err(Status::invalid_argument(format!(
+            "{op}: dtype mismatch {} vs {}",
+            a.dtype(),
+            b.dtype()
+        )));
+    }
+    // Fast path: identical shapes, no index map needed.
+    if a.shape() == b.shape() {
+        return match (a.data(), b.data()) {
+            (TensorData::F32(x), TensorData::F32(y)) => {
+                let f = f32_binop(op)?;
+                Tensor::new(a.shape().clone(), x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect::<Vec<f32>>().into())
+            }
+            (TensorData::F64(x), TensorData::F64(y)) => {
+                let f = f64_binop(op)?;
+                Tensor::new(a.shape().clone(), x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect::<Vec<f64>>().into())
+            }
+            (TensorData::I32(x), TensorData::I32(y)) => {
+                let f = i64_binop(op)?;
+                Tensor::new(a.shape().clone(), x.iter().zip(y).map(|(&p, &q)| f(p as i64, q as i64) as i32).collect::<Vec<i32>>().into())
+            }
+            (TensorData::I64(x), TensorData::I64(y)) => {
+                let f = i64_binop(op)?;
+                Tensor::new(a.shape().clone(), x.iter().zip(y).map(|(&p, &q)| f(p, q)).collect::<Vec<i64>>().into())
+            }
+            _ => Err(Status::unimplemented(format!("{op} for dtype {}", a.dtype()))),
+        };
+    }
+    let (out_shape, map) = broadcast_index_map(a.shape(), b.shape())?;
+    match (a.data(), b.data()) {
+        (TensorData::F32(x), TensorData::F32(y)) => {
+            let f = f32_binop(op)?;
+            apply_binary!(x, y, out_shape, map, f)
+        }
+        (TensorData::F64(x), TensorData::F64(y)) => {
+            let f = f64_binop(op)?;
+            apply_binary!(x, y, out_shape, map, f)
+        }
+        (TensorData::I32(x), TensorData::I32(y)) => {
+            let f = i64_binop(op)?;
+            let g = |p: i32, q: i32| f(p as i64, q as i64) as i32;
+            apply_binary!(x, y, out_shape, map, g)
+        }
+        (TensorData::I64(x), TensorData::I64(y)) => {
+            let f = i64_binop(op)?;
+            apply_binary!(x, y, out_shape, map, f)
+        }
+        _ => Err(Status::unimplemented(format!("{op} for dtype {}", a.dtype()))),
+    }
+}
+
+fn f32_binop(op: &str) -> Result<fn(f32, f32) -> f32> {
+    Ok(match op {
+        "Add" => |a, b| a + b,
+        "Sub" => |a, b| a - b,
+        "Mul" => |a, b| a * b,
+        "Div" => |a, b| a / b,
+        "Maximum" => f32::max,
+        "Minimum" => f32::min,
+        "Pow" => f32::powf,
+        _ => return Err(Status::unimplemented(format!("f32 binop {op}"))),
+    })
+}
+
+fn f64_binop(op: &str) -> Result<fn(f64, f64) -> f64> {
+    Ok(match op {
+        "Add" => |a, b| a + b,
+        "Sub" => |a, b| a - b,
+        "Mul" => |a, b| a * b,
+        "Div" => |a, b| a / b,
+        "Maximum" => f64::max,
+        "Minimum" => f64::min,
+        "Pow" => f64::powf,
+        _ => return Err(Status::unimplemented(format!("f64 binop {op}"))),
+    })
+}
+
+fn i64_binop(op: &str) -> Result<fn(i64, i64) -> i64> {
+    Ok(match op {
+        "Add" => |a, b| a.wrapping_add(b),
+        "Sub" => |a, b| a.wrapping_sub(b),
+        "Mul" => |a, b| a.wrapping_mul(b),
+        "Div" => |a, b| if b == 0 { 0 } else { a / b },
+        "Maximum" => |a, b| a.max(b),
+        "Minimum" => |a, b| a.min(b),
+        _ => return Err(Status::unimplemented(format!("i64 binop {op}"))),
+    })
+}
+
+/// Comparison / logical binary op → Bool tensor, with broadcasting.
+pub fn compare_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
+    if a.dtype() != b.dtype() {
+        return Err(Status::invalid_argument(format!(
+            "{op}: dtype mismatch {} vs {}",
+            a.dtype(),
+            b.dtype()
+        )));
+    }
+    let (out_shape, map) = broadcast_index_map(a.shape(), b.shape())?;
+    fn cmp<T: PartialOrd + PartialEq + Copy>(
+        x: &[T],
+        y: &[T],
+        map: &[(usize, usize)],
+        op: &str,
+    ) -> Result<Vec<bool>> {
+        let f: fn(T, T) -> bool = match op {
+            "Greater" => |a, b| a > b,
+            "Less" => |a, b| a < b,
+            "Equal" => |a, b| a == b,
+            "NotEqual" => |a, b| a != b,
+            "GreaterEqual" => |a, b| a >= b,
+            "LessEqual" => |a, b| a <= b,
+            _ => return Err(Status::unimplemented(format!("comparison {op}"))),
+        };
+        Ok(map.iter().map(|&(ai, bi)| f(x[ai], y[bi])).collect())
+    }
+    let out = match (a.data(), b.data()) {
+        (TensorData::F32(x), TensorData::F32(y)) => cmp(x, y, &map, op)?,
+        (TensorData::F64(x), TensorData::F64(y)) => cmp(x, y, &map, op)?,
+        (TensorData::I32(x), TensorData::I32(y)) => cmp(x, y, &map, op)?,
+        (TensorData::I64(x), TensorData::I64(y)) => cmp(x, y, &map, op)?,
+        (TensorData::Bool(x), TensorData::Bool(y)) => {
+            let f: fn(bool, bool) -> bool = match op {
+                "Equal" => |a, b| a == b,
+                "NotEqual" => |a, b| a != b,
+                "LogicalAnd" => |a, b| a && b,
+                "LogicalOr" => |a, b| a || b,
+                _ => return Err(Status::unimplemented(format!("bool comparison {op}"))),
+            };
+            map.iter().map(|&(ai, bi)| f(x[ai], y[bi])).collect()
+        }
+        _ => return Err(Status::unimplemented(format!("{op} for dtype {}", a.dtype()))),
+    };
+    Tensor::new(out_shape, TensorData::Bool(out))
+}
+
+/// Unary elementwise op.
+pub fn unary_elementwise(a: &Tensor, op: &str) -> Result<Tensor> {
+    match a.data() {
+        TensorData::F32(x) => {
+            let f: fn(f32) -> f32 = match op {
+                "Neg" => |v| -v,
+                "Exp" => f32::exp,
+                "Log" => f32::ln,
+                "Sqrt" => f32::sqrt,
+                "Rsqrt" => |v| 1.0 / v.sqrt(),
+                "Abs" => f32::abs,
+                "Sign" => f32::signum,
+                "Square" => |v| v * v,
+                "Tanh" => f32::tanh,
+                "Reciprocal" => |v| 1.0 / v,
+                _ => return Err(Status::unimplemented(format!("f32 unary {op}"))),
+            };
+            Tensor::new(a.shape().clone(), TensorData::F32(x.iter().map(|&v| f(v)).collect()))
+        }
+        TensorData::F64(x) => {
+            let f: fn(f64) -> f64 = match op {
+                "Neg" => |v| -v,
+                "Exp" => f64::exp,
+                "Log" => f64::ln,
+                "Sqrt" => f64::sqrt,
+                "Rsqrt" => |v| 1.0 / v.sqrt(),
+                "Abs" => f64::abs,
+                "Sign" => f64::signum,
+                "Square" => |v| v * v,
+                "Tanh" => f64::tanh,
+                "Reciprocal" => |v| 1.0 / v,
+                _ => return Err(Status::unimplemented(format!("f64 unary {op}"))),
+            };
+            Tensor::new(a.shape().clone(), TensorData::F64(x.iter().map(|&v| f(v)).collect()))
+        }
+        TensorData::I32(x) => {
+            let f: fn(i32) -> i32 = match op {
+                "Neg" => |v| -v,
+                "Abs" => i32::abs,
+                "Sign" => i32::signum,
+                "Square" => |v| v * v,
+                _ => return Err(Status::unimplemented(format!("i32 unary {op}"))),
+            };
+            Tensor::new(a.shape().clone(), TensorData::I32(x.iter().map(|&v| f(v)).collect()))
+        }
+        TensorData::Bool(x) if op == "LogicalNot" => {
+            Tensor::new(a.shape().clone(), TensorData::Bool(x.iter().map(|&v| !v).collect()))
+        }
+        _ => Err(Status::unimplemented(format!("{op} for dtype {}", a.dtype()))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reductions
+// ---------------------------------------------------------------------------
+
+/// Reduce over `axes` (empty/None ⇒ all axes), keep_dims=false.
+pub fn reduce(a: &Tensor, op: &str, axes: Option<&[i64]>) -> Result<Tensor> {
+    let rank = a.shape().rank();
+    let axes: Vec<usize> = match axes {
+        None => (0..rank).collect(),
+        Some(ax) if ax.is_empty() => (0..rank).collect(),
+        Some(ax) => {
+            let mut v = Vec::with_capacity(ax.len());
+            for &x in ax {
+                let x = if x < 0 { x + rank as i64 } else { x };
+                if x < 0 || x as usize >= rank {
+                    return Err(Status::invalid_argument(format!(
+                        "{op}: axis {x} out of range for rank {rank}"
+                    )));
+                }
+                v.push(x as usize);
+            }
+            v.sort();
+            v.dedup();
+            v
+        }
+    };
+    let x = a.as_f32()?; // reductions implemented for f32 (the training dtype)
+    let in_dims = a.shape().dims().to_vec();
+    let out_dims: Vec<usize> =
+        (0..rank).filter(|d| !axes.contains(d)).map(|d| in_dims[d]).collect();
+    let out_shape = Shape(out_dims.clone());
+    let out_n = out_shape.num_elements();
+    let reduce_n: usize = axes.iter().map(|&d| in_dims[d]).product::<usize>().max(1);
+
+    // accumulate
+    let init = match op {
+        "Sum" | "Mean" => 0.0f64,
+        "Prod" => 1.0,
+        "Max" => f64::NEG_INFINITY,
+        "Min" => f64::INFINITY,
+        _ => return Err(Status::unimplemented(format!("reduction {op}"))),
+    };
+    let mut acc = vec![init; out_n];
+    let in_strides = a.shape().strides();
+    let kept: Vec<usize> = (0..rank).filter(|d| !axes.contains(d)).collect();
+    // out strides for mapping input index -> output slot
+    let out_strides = out_shape.strides();
+    let mut idx = vec![0usize; rank];
+    for i in 0..a.num_elements() {
+        // compute multi-index of i
+        let mut rem = i;
+        for d in 0..rank {
+            idx[d] = rem / in_strides[d];
+            rem %= in_strides[d];
+        }
+        let mut oi = 0;
+        for (k, &d) in kept.iter().enumerate() {
+            oi += idx[d] * out_strides[k];
+        }
+        let v = x[i] as f64;
+        acc[oi] = match op {
+            "Sum" | "Mean" => acc[oi] + v,
+            "Prod" => acc[oi] * v,
+            "Max" => acc[oi].max(v),
+            "Min" => acc[oi].min(v),
+            _ => unreachable!(),
+        };
+    }
+    if op == "Mean" {
+        for v in &mut acc {
+            *v /= reduce_n as f64;
+        }
+    }
+    Tensor::new(out_shape, TensorData::F32(acc.into_iter().map(|v| v as f32).collect()))
+}
+
+/// ArgMax along `axis` → I64 tensor.
+pub fn argmax(a: &Tensor, axis: i64) -> Result<Tensor> {
+    let rank = a.shape().rank() as i64;
+    let axis = if axis < 0 { axis + rank } else { axis };
+    if axis < 0 || axis >= rank {
+        return Err(Status::invalid_argument(format!("ArgMax: axis {axis} out of range")));
+    }
+    let axis = axis as usize;
+    let x = a.as_f32()?;
+    let dims = a.shape().dims();
+    let out_dims: Vec<usize> =
+        dims.iter().enumerate().filter(|&(d, _)| d != axis).map(|(_, &s)| s).collect();
+    let out_shape = Shape(out_dims);
+    let mut out = Vec::with_capacity(out_shape.num_elements());
+    let outer: usize = dims[..axis].iter().product();
+    let inner: usize = dims[axis + 1..].iter().product();
+    let outer = outer.max(1);
+    let inner = inner.max(1);
+    for o in 0..outer {
+        for i in 0..inner {
+            let mut best = f32::NEG_INFINITY;
+            let mut best_k = 0i64;
+            for k in 0..dims[axis] {
+                let v = x[o * dims[axis] * inner + k * inner + i];
+                if v > best {
+                    best = v;
+                    best_k = k as i64;
+                }
+            }
+            out.push(best_k);
+        }
+    }
+    Tensor::new(out_shape, TensorData::I64(out))
+}
+
+/// Select(cond, a, b): elementwise cond ? a : b (shapes must match; cond
+/// may broadcast).
+pub fn select(cond: &Tensor, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.shape() != b.shape() || a.dtype() != b.dtype() {
+        return Err(Status::invalid_argument("Select: a and b must match in shape and dtype"));
+    }
+    let c = cond.as_bool()?;
+    let n = a.num_elements();
+    let pick = |i: usize| -> bool {
+        if c.len() == 1 {
+            c[0]
+        } else {
+            c[i % c.len()]
+        }
+    };
+    if c.len() != 1 && c.len() != n {
+        return Err(Status::invalid_argument(format!(
+            "Select: cond has {} elements, operands have {n}",
+            c.len()
+        )));
+    }
+    match (a.data(), b.data()) {
+        (TensorData::F32(x), TensorData::F32(y)) => Tensor::new(
+            a.shape().clone(),
+            TensorData::F32((0..n).map(|i| if pick(i) { x[i] } else { y[i] }).collect()),
+        ),
+        (TensorData::I64(x), TensorData::I64(y)) => Tensor::new(
+            a.shape().clone(),
+            TensorData::I64((0..n).map(|i| if pick(i) { x[i] } else { y[i] }).collect()),
+        ),
+        _ => Err(Status::unimplemented(format!("Select for dtype {}", a.dtype()))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registration
+// ---------------------------------------------------------------------------
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    for op in ["Add", "Sub", "Mul", "Div", "Maximum", "Minimum", "Pow"] {
+        let name = op.to_string();
+        r.add(op, move |_| {
+            let name = name.clone();
+            Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+                Ok(vec![binary_elementwise(ctx.input(0)?, ctx.input(1)?, &name)?])
+            })))
+        });
+    }
+    for op in [
+        "Neg", "Exp", "Log", "Sqrt", "Rsqrt", "Abs", "Sign", "Square", "Tanh", "Reciprocal",
+        "LogicalNot",
+    ] {
+        let name = op.to_string();
+        r.add(op, move |_| {
+            let name = name.clone();
+            Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+                Ok(vec![unary_elementwise(ctx.input(0)?, &name)?])
+            })))
+        });
+    }
+    for op in
+        ["Greater", "Less", "Equal", "NotEqual", "GreaterEqual", "LessEqual", "LogicalAnd", "LogicalOr"]
+    {
+        let name = op.to_string();
+        r.add(op, move |_| {
+            let name = name.clone();
+            Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+                Ok(vec![compare_elementwise(ctx.input(0)?, ctx.input(1)?, &name)?])
+            })))
+        });
+    }
+    for op in ["Sum", "Mean", "Max", "Min", "Prod"] {
+        let name = op.to_string();
+        r.add(op, move |_| {
+            let name = name.clone();
+            Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+                let axes = match ctx.node.attr_opt("axes") {
+                    Some(a) => Some(a.as_list_i64()?.to_vec()),
+                    None => None,
+                };
+                Ok(vec![reduce(ctx.input(0)?, &name, axes.as_deref())?])
+            })))
+        });
+    }
+    r.add_sync("ArgMax", |ctx| {
+        let axis = ctx.node.attr_opt("axis").map(|a| a.as_i64()).transpose()?.unwrap_or(-1);
+        Ok(vec![argmax(ctx.input(0)?, axis)?])
+    });
+    r.add_sync("Select", |ctx| {
+        Ok(vec![select(ctx.input(0)?, ctx.input(1)?, ctx.input(2)?)?])
+    });
+    r.add_sync("AddN", |ctx| {
+        let mut acc = ctx.input(0)?.clone();
+        for i in 1..ctx.inputs.len() {
+            acc = binary_elementwise(&acc, ctx.input(i)?, "Add")?;
+        }
+        Ok(vec![acc])
+    });
+    r.add_sync("Cast", |ctx| {
+        let to = ctx.node.attr("DstT")?.as_type()?;
+        Ok(vec![ctx.input(0)?.cast(to)?])
+    });
+    r.add_sync("CheckNumerics", |ctx| {
+        let t = ctx.input(0)?;
+        if t.has_non_finite() {
+            let msg = ctx
+                .node
+                .attr_opt("message")
+                .and_then(|a| a.as_str().ok().map(String::from))
+                .unwrap_or_default();
+            return Err(Status::invalid_argument(format!(
+                "CheckNumerics({}): tensor contains Inf or NaN. {msg}",
+                ctx.node.name
+            )));
+        }
+        Ok(vec![t.clone()])
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(shape, v).unwrap()
+    }
+
+    #[test]
+    fn add_same_shape() {
+        let r = binary_elementwise(&t(vec![2], vec![1., 2.]), &t(vec![2], vec![3., 4.]), "Add")
+            .unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[4., 6.]);
+    }
+
+    #[test]
+    fn broadcast_scalar() {
+        let r =
+            binary_elementwise(&t(vec![2, 2], vec![1., 2., 3., 4.]), &Tensor::scalar_f32(10.0), "Mul")
+                .unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[10., 20., 30., 40.]);
+        assert_eq!(r.shape().dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn broadcast_row_and_col() {
+        // [2,1] + [3] -> [2,3]
+        let a = t(vec![2, 1], vec![10., 20.]);
+        let b = t(vec![3], vec![1., 2., 3.]);
+        let r = binary_elementwise(&a, &b, "Add").unwrap();
+        assert_eq!(r.shape().dims(), &[2, 3]);
+        assert_eq!(r.as_f32().unwrap(), &[11., 12., 13., 21., 22., 23.]);
+    }
+
+    #[test]
+    fn broadcast_bias_add_pattern() {
+        // [2,3] + [3]: the Wx+b pattern of Fig 1.
+        let a = t(vec![2, 3], vec![0., 0., 0., 1., 1., 1.]);
+        let b = t(vec![3], vec![5., 6., 7.]);
+        let r = binary_elementwise(&a, &b, "Add").unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[5., 6., 7., 6., 7., 8.]);
+    }
+
+    #[test]
+    fn incompatible_broadcast_rejected() {
+        let a = t(vec![2, 3], vec![0.; 6]);
+        let b = t(vec![4], vec![0.; 4]);
+        assert!(binary_elementwise(&a, &b, "Add").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let a = t(vec![1], vec![1.0]);
+        let b = Tensor::from_i32(vec![1], vec![1]).unwrap();
+        assert!(binary_elementwise(&a, &b, "Add").is_err());
+    }
+
+    #[test]
+    fn integer_arithmetic() {
+        let a = Tensor::from_i64(vec![3], vec![10, 20, 30]).unwrap();
+        let b = Tensor::from_i64(vec![3], vec![3, 5, 0]).unwrap();
+        let r = binary_elementwise(&a, &b, "Div").unwrap();
+        assert_eq!(r.as_i64().unwrap(), &[3, 4, 0]); // div-by-zero -> 0
+    }
+
+    #[test]
+    fn unary_ops() {
+        let a = t(vec![3], vec![1., 4., 9.]);
+        assert_eq!(unary_elementwise(&a, "Sqrt").unwrap().as_f32().unwrap(), &[1., 2., 3.]);
+        assert_eq!(unary_elementwise(&a, "Neg").unwrap().as_f32().unwrap(), &[-1., -4., -9.]);
+        assert_eq!(unary_elementwise(&a, "Square").unwrap().as_f32().unwrap(), &[1., 16., 81.]);
+        let e = unary_elementwise(&t(vec![1], vec![0.0]), "Exp").unwrap();
+        assert!((e.as_f32().unwrap()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comparisons() {
+        let a = t(vec![3], vec![1., 2., 3.]);
+        let b = t(vec![3], vec![2., 2., 2.]);
+        assert_eq!(
+            compare_elementwise(&a, &b, "Greater").unwrap().as_bool().unwrap(),
+            &[false, false, true]
+        );
+        assert_eq!(
+            compare_elementwise(&a, &b, "Equal").unwrap().as_bool().unwrap(),
+            &[false, true, false]
+        );
+        assert_eq!(
+            compare_elementwise(&a, &b, "LessEqual").unwrap().as_bool().unwrap(),
+            &[true, true, false]
+        );
+    }
+
+    #[test]
+    fn reduce_all() {
+        let a = t(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(reduce(&a, "Sum", None).unwrap().scalar_value_f32().unwrap(), 21.0);
+        assert_eq!(reduce(&a, "Mean", None).unwrap().scalar_value_f32().unwrap(), 3.5);
+        assert_eq!(reduce(&a, "Max", None).unwrap().scalar_value_f32().unwrap(), 6.0);
+        assert_eq!(reduce(&a, "Min", None).unwrap().scalar_value_f32().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn reduce_axis() {
+        let a = t(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let rows = reduce(&a, "Sum", Some(&[1])).unwrap();
+        assert_eq!(rows.shape().dims(), &[2]);
+        assert_eq!(rows.as_f32().unwrap(), &[6., 15.]);
+        let cols = reduce(&a, "Sum", Some(&[0])).unwrap();
+        assert_eq!(cols.as_f32().unwrap(), &[5., 7., 9.]);
+        // negative axis
+        let rows2 = reduce(&a, "Sum", Some(&[-1])).unwrap();
+        assert_eq!(rows2.as_f32().unwrap(), &[6., 15.]);
+    }
+
+    #[test]
+    fn reduce_mean_axis() {
+        let a = t(vec![2, 2], vec![1., 3., 5., 7.]);
+        let m = reduce(&a, "Mean", Some(&[0])).unwrap();
+        assert_eq!(m.as_f32().unwrap(), &[3., 5.]);
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let a = t(vec![2, 3], vec![1., 9., 3., 7., 5., 6.]);
+        let am = argmax(&a, 1).unwrap();
+        assert_eq!(am.as_i64().unwrap(), &[1, 0]);
+        assert_eq!(am.shape().dims(), &[2]);
+        let am0 = argmax(&a, 0).unwrap();
+        assert_eq!(am0.as_i64().unwrap(), &[1, 0, 1]);
+    }
+
+    #[test]
+    fn select_elementwise() {
+        let c = Tensor::from_bool(vec![3], vec![true, false, true]).unwrap();
+        let a = t(vec![3], vec![1., 2., 3.]);
+        let b = t(vec![3], vec![10., 20., 30.]);
+        let r = select(&c, &a, &b).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[1., 20., 3.]);
+        // scalar cond
+        let c1 = Tensor::scalar_bool(false);
+        let r1 = select(&c1, &a, &b).unwrap();
+        assert_eq!(r1.as_f32().unwrap(), &[10., 20., 30.]);
+    }
+}

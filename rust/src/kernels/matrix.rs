@@ -1,0 +1,322 @@
+//! Matrix operations (Table 1 row 3): MatMul (with transpose flags),
+//! BatchMatMul, MatrixInverse (Gauss–Jordan), MatrixDeterminant (LU).
+//!
+//! The f32 matmul is the L3 fallback path; the *fast* path for model math
+//! is the `XlaCall` op running AOT-compiled XLA (§5.4 "optimized libraries
+//! for kernel implementations"). This kernel is still tuned (blocked
+//! k-loop, transpose-aware layouts) because baselines and small graphs use
+//! it heavily.
+
+use super::{KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::tensor::{Shape, Tensor, TensorData};
+
+/// C[m,n] = A·B with optional logical transposes. Row-major.
+pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+    let (ar, ac) = dims2(a, "MatMul lhs")?;
+    let (br, bc) = dims2(b, "MatMul rhs")?;
+    let (m, k) = if ta { (ac, ar) } else { (ar, ac) };
+    let (k2, n) = if tb { (bc, br) } else { (br, bc) };
+    if k != k2 {
+        return Err(Status::invalid_argument(format!(
+            "MatMul: inner dims mismatch {k} vs {k2} (a={ar}x{ac} ta={ta}, b={br}x{bc} tb={tb})"
+        )));
+    }
+    let av = a.as_f32()?;
+    let bv = b.as_f32()?;
+    let mut out = vec![0f32; m * n];
+    match (ta, tb) {
+        (false, false) => {
+            // ikj loop: streams B rows, vectorizes the inner j loop.
+            for i in 0..m {
+                for kk in 0..k {
+                    let aik = av[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bv[kk * n..(kk + 1) * n];
+                    let crow = &mut out[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        (false, true) => {
+            // B is [n, k] logically transposed: dot products over contiguous rows.
+            for i in 0..m {
+                let arow = &av[i * k..(i + 1) * k];
+                for j in 0..n {
+                    let brow = &bv[j * k..(j + 1) * k];
+                    let mut s = 0f32;
+                    for kk in 0..k {
+                        s += arow[kk] * brow[kk];
+                    }
+                    out[i * n + j] = s;
+                }
+            }
+        }
+        (true, false) => {
+            // A is [k, m] logically transposed.
+            for kk in 0..k {
+                let arow = &av[kk * m..(kk + 1) * m];
+                let brow = &bv[kk * n..(kk + 1) * n];
+                for i in 0..m {
+                    let aik = arow[i];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut out[i * n..(i + 1) * n];
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        (true, true) => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0f32;
+                    for kk in 0..k {
+                        s += av[kk * m + i] * bv[j * k + kk];
+                    }
+                    out[i * n + j] = s;
+                }
+            }
+        }
+    }
+    Tensor::new(Shape(vec![m, n]), TensorData::F32(out))
+}
+
+/// Batched matmul over leading dim: [b,m,k] x [b,k,n] -> [b,m,n].
+pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let ad = a.shape().dims();
+    let bd = b.shape().dims();
+    if ad.len() != 3 || bd.len() != 3 || ad[0] != bd[0] || ad[2] != bd[1] {
+        return Err(Status::invalid_argument(format!(
+            "BatchMatMul: incompatible shapes {} x {}",
+            a.shape(),
+            b.shape()
+        )));
+    }
+    let (bs, m, k, n) = (ad[0], ad[1], ad[2], bd[2]);
+    let av = a.as_f32()?;
+    let bv = b.as_f32()?;
+    let mut out = vec![0f32; bs * m * n];
+    for bi in 0..bs {
+        let ao = bi * m * k;
+        let bo = bi * k * n;
+        let co = bi * m * n;
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = av[ao + i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out[co + i * n + j] += aik * bv[bo + kk * n + j];
+                }
+            }
+        }
+    }
+    Tensor::new(Shape(vec![bs, m, n]), TensorData::F32(out))
+}
+
+/// Gauss–Jordan inverse with partial pivoting.
+pub fn matrix_inverse(x: &Tensor) -> Result<Tensor> {
+    let (n, n2) = dims2(x, "MatrixInverse")?;
+    if n != n2 {
+        return Err(Status::invalid_argument("MatrixInverse: matrix must be square"));
+    }
+    let v = x.as_f32()?;
+    let mut a: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+    let mut inv: Vec<f64> = vec![0.0; n * n];
+    for i in 0..n {
+        inv[i * n + i] = 1.0;
+    }
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row * n + col].abs() > a[piv * n + col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return Err(Status::invalid_argument("MatrixInverse: singular matrix"));
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+                inv.swap(col * n + j, piv * n + j);
+            }
+        }
+        let d = a[col * n + col];
+        for j in 0..n {
+            a[col * n + j] /= d;
+            inv[col * n + j] /= d;
+        }
+        for row in 0..n {
+            if row == col {
+                continue;
+            }
+            let f = a[row * n + col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                a[row * n + j] -= f * a[col * n + j];
+                inv[row * n + j] -= f * inv[col * n + j];
+            }
+        }
+    }
+    Tensor::new(Shape(vec![n, n]), TensorData::F32(inv.into_iter().map(|x| x as f32).collect()))
+}
+
+/// Determinant via LU with partial pivoting.
+pub fn matrix_determinant(x: &Tensor) -> Result<Tensor> {
+    let (n, n2) = dims2(x, "MatrixDeterminant")?;
+    if n != n2 {
+        return Err(Status::invalid_argument("MatrixDeterminant: matrix must be square"));
+    }
+    let v = x.as_f32()?;
+    let mut a: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+    let mut det = 1.0f64;
+    for col in 0..n {
+        let mut piv = col;
+        for row in col + 1..n {
+            if a[row * n + col].abs() > a[piv * n + col].abs() {
+                piv = row;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-14 {
+            return Ok(Tensor::scalar_f32(0.0));
+        }
+        if piv != col {
+            for j in 0..n {
+                a.swap(col * n + j, piv * n + j);
+            }
+            det = -det;
+        }
+        det *= a[col * n + col];
+        for row in col + 1..n {
+            let f = a[row * n + col] / a[col * n + col];
+            for j in col..n {
+                a[row * n + j] -= f * a[col * n + j];
+            }
+        }
+    }
+    Ok(Tensor::scalar_f32(det as f32))
+}
+
+fn dims2(t: &Tensor, what: &str) -> Result<(usize, usize)> {
+    let d = t.shape().dims();
+    if d.len() != 2 {
+        return Err(Status::invalid_argument(format!("{what}: expected rank 2, got {}", t.shape())));
+    }
+    Ok((d[0], d[1]))
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    r.add_sync("MatMul", |ctx: &mut KernelContext| {
+        let ta = ctx.node.attr_opt("transpose_a").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+        let tb = ctx.node.attr_opt("transpose_b").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+        Ok(vec![matmul(ctx.input(0)?, ctx.input(1)?, ta, tb)?])
+    });
+    r.add_sync("BatchMatMul", |ctx| {
+        Ok(vec![batch_matmul(ctx.input(0)?, ctx.input(1)?)?])
+    });
+    r.add_sync("MatrixInverse", |ctx| Ok(vec![matrix_inverse(ctx.input(0)?)?]));
+    r.add_sync("MatrixDeterminant", |ctx| Ok(vec![matrix_determinant(ctx.input(0)?)?]));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(shape, v).unwrap()
+    }
+
+    #[test]
+    fn matmul_2x2() {
+        let a = t(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = t(vec![2, 2], vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b, false, false).unwrap();
+        assert_eq!(c.as_f32().unwrap(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        let a = t(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = t(vec![3, 1], vec![1., 1., 1.]);
+        let c = matmul(&a, &b, false, false).unwrap();
+        assert_eq!(c.shape().dims(), &[2, 1]);
+        assert_eq!(c.as_f32().unwrap(), &[6., 15.]);
+    }
+
+    #[test]
+    fn matmul_transposes_agree() {
+        // Compare every transpose flag combo against explicit transposition.
+        let a = t(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = t(vec![3, 4], (0..12).map(|i| i as f32).collect());
+        let base = matmul(&a, &b, false, false).unwrap();
+        let at = crate::kernels::array::transpose(&a, &[1, 0]).unwrap();
+        let bt = crate::kernels::array::transpose(&b, &[1, 0]).unwrap();
+        assert!(matmul(&at, &b, true, false).unwrap().allclose(&base, 1e-6, 1e-6));
+        assert!(matmul(&a, &bt, false, true).unwrap().allclose(&base, 1e-6, 1e-6));
+        assert!(matmul(&at, &bt, true, true).unwrap().allclose(&base, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_shape_mismatch() {
+        let a = t(vec![2, 3], vec![0.; 6]);
+        let b = t(vec![2, 2], vec![0.; 4]);
+        assert!(matmul(&a, &b, false, false).is_err());
+    }
+
+    #[test]
+    fn batch_matmul_basic() {
+        let a = t(vec![2, 1, 2], vec![1., 2., 3., 4.]);
+        let b = t(vec![2, 2, 1], vec![1., 1., 2., 2.]);
+        let c = batch_matmul(&a, &b).unwrap();
+        assert_eq!(c.shape().dims(), &[2, 1, 1]);
+        assert_eq!(c.as_f32().unwrap(), &[3., 14.]);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let a = t(vec![2, 2], vec![4., 7., 2., 6.]);
+        let inv = matrix_inverse(&a).unwrap();
+        let prod = matmul(&a, &inv, false, false).unwrap();
+        let eye = t(vec![2, 2], vec![1., 0., 0., 1.]);
+        assert!(prod.allclose(&eye, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn inverse_singular_rejected() {
+        let a = t(vec![2, 2], vec![1., 2., 2., 4.]);
+        assert!(matrix_inverse(&a).is_err());
+    }
+
+    #[test]
+    fn determinant_values() {
+        let a = t(vec![2, 2], vec![4., 7., 2., 6.]);
+        let d = matrix_determinant(&a).unwrap().scalar_value_f32().unwrap();
+        assert!((d - 10.0).abs() < 1e-4);
+        let sing = t(vec![2, 2], vec![1., 2., 2., 4.]);
+        assert_eq!(matrix_determinant(&sing).unwrap().scalar_value_f32().unwrap(), 0.0);
+        // 3x3 with known det = -306
+        let m = t(vec![3, 3], vec![6., 1., 1., 4., -2., 5., 2., 8., 7.]);
+        let d3 = matrix_determinant(&m).unwrap().scalar_value_f32().unwrap();
+        assert!((d3 + 306.0).abs() < 1e-2, "{d3}");
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = t(vec![3, 3], (0..9).map(|i| i as f32).collect());
+        let eye = t(vec![3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]);
+        let c = matmul(&a, &eye, false, false).unwrap();
+        assert_eq!(c.as_f32().unwrap(), a.as_f32().unwrap());
+    }
+}

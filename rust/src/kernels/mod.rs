@@ -1,0 +1,276 @@
+//! Kernels: device-specific implementations of operations (§2 "a kernel is
+//! a particular implementation of an operation that can be run on a
+//! particular type of device"), plus the kernel registration mechanism and
+//! the execution context handed to each kernel invocation.
+//!
+//! Two kernel flavours, exactly §5.3: synchronous kernels return their
+//! outputs from `compute`; asynchronous kernels (Receive, Enqueue,
+//! Dequeue, MutexAcquire) are "passed a continuation that should be
+//! invoked when the kernel's execution is complete", so blocked I/O never
+//! ties up an executor thread.
+
+pub mod array;
+pub mod comm;
+pub mod math;
+pub mod matrix;
+pub mod nn;
+pub mod queue_ops;
+pub mod state;
+pub mod summary;
+
+use crate::device::Device;
+#[allow(unused_imports)]
+use crate::error::{Result, Status};
+use crate::graph::AttrValue;
+use crate::rendezvous::Rendezvous;
+use crate::resources::ResourceMgr;
+use crate::tensor::Tensor;
+use once_cell::sync::Lazy;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// Static description of a node, precomputed when an executable graph is
+/// built: attrs plus resolved resource references (which Variable/queue
+/// node a ref-input points at).
+#[derive(Debug, Clone)]
+pub struct NodeInfo {
+    pub name: String,
+    pub op: String,
+    pub attrs: BTreeMap<String, AttrValue>,
+    /// For ops whose input 0 is a resource ref (Assign, Apply*, Enqueue…):
+    /// the name of the producing Variable / queue node — the resource key.
+    pub ref_resource: Option<String>,
+    /// Container the resource lives in (attr "container", default "").
+    pub container: String,
+    /// Device this node was placed on (full name).
+    pub device_name: String,
+}
+
+impl NodeInfo {
+    pub fn attr(&self, name: &str) -> Result<&AttrValue> {
+        self.attrs
+            .get(name)
+            .ok_or_else(|| Status::invalid_argument(format!("node {}: missing attr {name}", self.name)))
+    }
+
+    pub fn attr_opt(&self, name: &str) -> Option<&AttrValue> {
+        self.attrs.get(name)
+    }
+
+    pub fn ref_resource(&self) -> Result<&str> {
+        self.ref_resource
+            .as_deref()
+            .ok_or_else(|| Status::internal(format!("node {}: unresolved resource ref", self.name)))
+    }
+}
+
+/// Per-Run cancellation + fetch collection, shared by all partitions of a
+/// step.
+#[derive(Default)]
+pub struct StepState {
+    pub step_id: u64,
+    fetches: Mutex<HashMap<String, Tensor>>,
+    cancelled: AtomicBool,
+    cancel_status: Mutex<Option<Status>>,
+    cancel_cond: Condvar,
+}
+
+impl StepState {
+    pub fn new(step_id: u64) -> Arc<StepState> {
+        Arc::new(StepState { step_id, ..Default::default() })
+    }
+
+    pub fn put_fetch(&self, name: &str, t: Tensor) {
+        self.fetches.lock().unwrap().insert(name.to_string(), t);
+    }
+
+    pub fn take_fetches(&self) -> HashMap<String, Tensor> {
+        std::mem::take(&mut *self.fetches.lock().unwrap())
+    }
+
+    /// First cancellation wins; later calls are ignored.
+    pub fn cancel(&self, status: Status) {
+        let mut s = self.cancel_status.lock().unwrap();
+        if s.is_none() {
+            *s = Some(status);
+            self.cancelled.store(true, Ordering::SeqCst);
+            self.cancel_cond.notify_all();
+        }
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    pub fn cancel_status(&self) -> Option<Status> {
+        self.cancel_status.lock().unwrap().clone()
+    }
+}
+
+/// Everything a kernel invocation may touch. Owned (Arc-based) so async
+/// kernels can carry it into their continuation.
+pub struct KernelContext {
+    pub inputs: Vec<Tensor>,
+    pub node: Arc<NodeInfo>,
+    pub device: Arc<Device>,
+    pub resources: Arc<ResourceMgr>,
+    pub rendezvous: Arc<dyn Rendezvous>,
+    pub step: Arc<StepState>,
+}
+
+impl KernelContext {
+    pub fn input(&self, i: usize) -> Result<&Tensor> {
+        self.inputs
+            .get(i)
+            .ok_or_else(|| Status::internal(format!("node {}: missing input {i}", self.node.name)))
+    }
+
+    /// The container holding this node's resources.
+    pub fn container(&self) -> Arc<crate::resources::Container> {
+        self.resources.container(&self.node.container)
+    }
+}
+
+pub type DoneFn = Box<dyn FnOnce(Result<Vec<Tensor>>) + Send>;
+pub type SyncFn = Box<dyn Fn(&mut KernelContext) -> Result<Vec<Tensor>> + Send + Sync>;
+pub type AsyncFn = Box<dyn Fn(KernelContext, DoneFn) + Send + Sync>;
+
+/// An instantiated kernel, bound to one node.
+pub enum Kernel {
+    Sync(SyncFn),
+    Async(AsyncFn),
+}
+
+impl Kernel {
+    pub fn is_async(&self) -> bool {
+        matches!(self, Kernel::Async(_))
+    }
+}
+
+/// Kernel factory: builds a kernel instance for a node (may precompute
+/// from attrs).
+pub type KernelFactory = Arc<dyn Fn(&NodeInfo) -> Result<Kernel> + Send + Sync>;
+
+pub(crate) struct KernelRegistry {
+    /// (op name, device type) -> factory.
+    factories: HashMap<(String, String), KernelFactory>,
+}
+
+static REGISTRY: Lazy<RwLock<KernelRegistry>> = Lazy::new(|| {
+    let mut r = KernelRegistry { factories: HashMap::new() };
+    install_cpu_kernels(&mut r);
+    RwLock::new(r)
+});
+
+/// Register a kernel for (op, device_type). Later registrations replace
+/// earlier ones (lets tests/extensions override built-ins).
+pub fn register_kernel(op: &str, device_type: &str, factory: KernelFactory) {
+    REGISTRY
+        .write()
+        .unwrap()
+        .factories
+        .insert((op.to_string(), device_type.to_lowercase()), factory);
+}
+
+/// Instantiate the kernel for `node` on a device of type `device_type`.
+pub fn create_kernel(node: &NodeInfo, device_type: &str) -> Result<Kernel> {
+    let reg = REGISTRY.read().unwrap();
+    let factory = reg
+        .factories
+        .get(&(node.op.clone(), device_type.to_lowercase()))
+        .ok_or_else(|| {
+            Status::not_found(format!(
+                "no kernel for op {:?} on device type {:?}",
+                node.op, device_type
+            ))
+        })?;
+    factory(node)
+}
+
+/// Does a kernel exist for (op, device_type)? The §3.2.1 placement
+/// feasibility test ("a device may not be feasible if the device does not
+/// provide a kernel that implements the particular operation").
+pub fn has_kernel(op: &str, device_type: &str) -> bool {
+    // Control-flow ops execute inside the executor itself, on any device.
+    if matches!(op, "Switch" | "Merge" | "Enter" | "Exit" | "NextIteration") {
+        return true;
+    }
+    REGISTRY
+        .read()
+        .unwrap()
+        .factories
+        .contains_key(&(op.to_string(), device_type.to_lowercase()))
+}
+
+fn install_cpu_kernels(r: &mut KernelRegistry) {
+    math::register(r);
+    array::register(r);
+    matrix::register(r);
+    nn::register(r);
+    state::register(r);
+    queue_ops::register(r);
+    comm::register(r);
+    summary::register(r);
+    crate::checkpoint::register_kernels(r);
+    crate::data::register_kernels(r);
+    crate::runtime::register_kernels(r);
+}
+
+impl KernelRegistry {
+    /// Register a CPU-device kernel factory (module-internal registration
+    /// path; external code uses [`register_kernel`]).
+    pub(crate) fn add(
+        &mut self,
+        op: &str,
+        factory: impl Fn(&NodeInfo) -> Result<Kernel> + Send + Sync + 'static,
+    ) {
+        self.factories.insert((op.to_string(), "cpu".to_string()), Arc::new(factory));
+    }
+
+    /// Register a *sync* kernel given just the compute fn.
+    pub(crate) fn add_sync(
+        &mut self,
+        op: &str,
+        f: impl Fn(&mut KernelContext) -> Result<Vec<Tensor>> + Send + Sync + Clone + 'static,
+    ) {
+        self.add(op, move |_node| {
+            let f = f.clone();
+            Ok(Kernel::Sync(Box::new(move |ctx| f(ctx))))
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_core_kernels() {
+        for op in ["Add", "MatMul", "Const", "ReLU", "Variable", "Assign", "_Send", "_Recv"] {
+            assert!(has_kernel(op, "cpu"), "missing cpu kernel for {op}");
+        }
+        assert!(!has_kernel("Add", "tpu"));
+        assert!(has_kernel("Switch", "anything")); // executor-internal
+    }
+
+    #[test]
+    fn step_state_cancel_once() {
+        let s = StepState::new(1);
+        assert!(!s.is_cancelled());
+        s.cancel(Status::aborted("first"));
+        s.cancel(Status::internal("second"));
+        assert!(s.is_cancelled());
+        assert_eq!(s.cancel_status().unwrap().message, "first");
+    }
+
+    #[test]
+    fn step_state_fetches() {
+        let s = StepState::new(1);
+        s.put_fetch("a:0", Tensor::scalar_f32(1.0));
+        s.put_fetch("b:0", Tensor::scalar_f32(2.0));
+        let f = s.take_fetches();
+        assert_eq!(f.len(), 2);
+        assert!(s.take_fetches().is_empty());
+    }
+}

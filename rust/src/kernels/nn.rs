@@ -1,0 +1,614 @@
+//! Neural-net building blocks (Table 1 row 5): ReLU, Sigmoid, SoftMax,
+//! Convolution2D, MaxPool, BiasAdd, the fused softmax cross-entropy, and
+//! their gradient kernels (registered as ops so the §4.1 autodiff can
+//! reference them).
+
+use super::{KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::tensor::{Shape, Tensor, TensorData};
+
+pub fn relu(x: &Tensor) -> Result<Tensor> {
+    let v = x.as_f32()?;
+    Tensor::new(x.shape().clone(), TensorData::F32(v.iter().map(|&a| a.max(0.0)).collect()))
+}
+
+/// dx = dy * (features > 0)
+pub fn relu_grad(dy: &Tensor, features: &Tensor) -> Result<Tensor> {
+    let g = dy.as_f32()?;
+    let f = features.as_f32()?;
+    if g.len() != f.len() {
+        return Err(Status::invalid_argument("ReluGrad: size mismatch"));
+    }
+    Tensor::new(
+        dy.shape().clone(),
+        TensorData::F32(g.iter().zip(f).map(|(&gi, &fi)| if fi > 0.0 { gi } else { 0.0 }).collect()),
+    )
+}
+
+pub fn sigmoid(x: &Tensor) -> Result<Tensor> {
+    let v = x.as_f32()?;
+    Tensor::new(
+        x.shape().clone(),
+        TensorData::F32(v.iter().map(|&a| 1.0 / (1.0 + (-a).exp())).collect()),
+    )
+}
+
+/// Row softmax over the last axis of a 2-D tensor (numerically stable).
+pub fn softmax(x: &Tensor) -> Result<Tensor> {
+    let (rows, cols) = rank2(x, "SoftMax")?;
+    let v = x.as_f32()?;
+    let mut out = vec![0f32; v.len()];
+    for r in 0..rows {
+        let row = &v[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0f32;
+        for c in 0..cols {
+            let e = (row[c] - m).exp();
+            out[r * cols + c] = e;
+            sum += e;
+        }
+        for c in 0..cols {
+            out[r * cols + c] /= sum;
+        }
+    }
+    Tensor::new(x.shape().clone(), TensorData::F32(out))
+}
+
+pub fn log_softmax(x: &Tensor) -> Result<Tensor> {
+    let (rows, cols) = rank2(x, "LogSoftmax")?;
+    let v = x.as_f32()?;
+    let mut out = vec![0f32; v.len()];
+    for r in 0..rows {
+        let row = &v[r * cols..(r + 1) * cols];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = row.iter().map(|&a| (a - m).exp()).sum::<f32>().ln() + m;
+        for c in 0..cols {
+            out[r * cols + c] = row[c] - lse;
+        }
+    }
+    Tensor::new(x.shape().clone(), TensorData::F32(out))
+}
+
+/// BiasAdd: add a [C] bias over the last axis.
+pub fn bias_add(x: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let bd = b.shape().dims();
+    if bd.len() != 1 {
+        return Err(Status::invalid_argument("BiasAdd: bias must be rank 1"));
+    }
+    let c = bd[0];
+    let xd = x.shape().dims();
+    if xd.last() != Some(&c) {
+        return Err(Status::invalid_argument(format!(
+            "BiasAdd: last dim {} != bias size {c}",
+            xd.last().copied().unwrap_or(0)
+        )));
+    }
+    let xv = x.as_f32()?;
+    let bv = b.as_f32()?;
+    let mut out = Vec::with_capacity(xv.len());
+    for (i, &v) in xv.iter().enumerate() {
+        out.push(v + bv[i % c]);
+    }
+    Tensor::new(x.shape().clone(), TensorData::F32(out))
+}
+
+/// Gradient of BiasAdd wrt bias: sum over all but last axis.
+pub fn bias_add_grad(dy: &Tensor) -> Result<Tensor> {
+    let xd = dy.shape().dims();
+    let c = *xd.last().ok_or_else(|| Status::invalid_argument("BiasAddGrad: rank 0"))?;
+    let v = dy.as_f32()?;
+    let mut out = vec![0f32; c];
+    for (i, &g) in v.iter().enumerate() {
+        out[i % c] += g;
+    }
+    Tensor::new(Shape(vec![c]), TensorData::F32(out))
+}
+
+/// Fused softmax cross entropy: returns (loss[batch], backprop[batch,classes])
+/// where backprop = softmax(logits) - labels (labels are one-hot/probabilities).
+pub fn softmax_xent(logits: &Tensor, labels: &Tensor) -> Result<(Tensor, Tensor)> {
+    let (rows, cols) = rank2(logits, "SoftmaxCrossEntropyWithLogits")?;
+    if logits.shape() != labels.shape() {
+        return Err(Status::invalid_argument("xent: logits and labels shapes differ"));
+    }
+    let lsm = log_softmax(logits)?;
+    let lsm_v = lsm.as_f32()?;
+    let lab = labels.as_f32()?;
+    let mut loss = vec![0f32; rows];
+    let mut backprop = vec![0f32; rows * cols];
+    for r in 0..rows {
+        let mut l = 0f32;
+        for c in 0..cols {
+            let i = r * cols + c;
+            l -= lab[i] * lsm_v[i];
+            backprop[i] = lsm_v[i].exp() - lab[i];
+        }
+        loss[r] = l;
+    }
+    Ok((
+        Tensor::new(Shape(vec![rows]), TensorData::F32(loss))?,
+        Tensor::new(Shape(vec![rows, cols]), TensorData::F32(backprop))?,
+    ))
+}
+
+/// Padding mode for conv/pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+impl Padding {
+    pub fn parse(s: &str) -> Result<Padding> {
+        match s.to_uppercase().as_str() {
+            "SAME" => Ok(Padding::Same),
+            "VALID" => Ok(Padding::Valid),
+            other => Err(Status::invalid_argument(format!("unknown padding {other:?}"))),
+        }
+    }
+
+    fn out_dim(&self, input: usize, filter: usize, stride: usize) -> usize {
+        match self {
+            Padding::Same => input.div_ceil(stride),
+            Padding::Valid => (input - filter) / stride + 1,
+        }
+    }
+
+    /// Total padding before the first window element.
+    fn pad_before(&self, input: usize, filter: usize, stride: usize) -> i64 {
+        match self {
+            Padding::Valid => 0,
+            Padding::Same => {
+                let out = self.out_dim(input, filter, stride);
+                let total = ((out - 1) * stride + filter).saturating_sub(input) as i64;
+                total / 2
+            }
+        }
+    }
+}
+
+/// Direct 2-D convolution. x: NHWC, filter: [kh, kw, in_c, out_c].
+pub fn conv2d(x: &Tensor, filter: &Tensor, stride: usize, padding: Padding) -> Result<Tensor> {
+    let xd = x.shape().dims();
+    let fd = filter.shape().dims();
+    if xd.len() != 4 || fd.len() != 4 {
+        return Err(Status::invalid_argument("Conv2D: x must be NHWC, filter [kh,kw,ic,oc]"));
+    }
+    let (n, h, w, ic) = (xd[0], xd[1], xd[2], xd[3]);
+    let (kh, kw, fic, oc) = (fd[0], fd[1], fd[2], fd[3]);
+    if ic != fic {
+        return Err(Status::invalid_argument(format!("Conv2D: channels {ic} != filter {fic}")));
+    }
+    let oh = padding.out_dim(h, kh, stride);
+    let ow = padding.out_dim(w, kw, stride);
+    let ph = padding.pad_before(h, kh, stride);
+    let pw = padding.pad_before(w, kw, stride);
+    let xv = x.as_f32()?;
+    let fv = filter.as_f32()?;
+    let mut out = vec![0f32; n * oh * ow * oc];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kh {
+                    let iy = oy as i64 * stride as i64 + ky as i64 - ph;
+                    if iy < 0 || iy >= h as i64 {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = ox as i64 * stride as i64 + kx as i64 - pw;
+                        if ix < 0 || ix >= w as i64 {
+                            continue;
+                        }
+                        let x_base = ((b * h + iy as usize) * w + ix as usize) * ic;
+                        let f_base = (ky * kw + kx) * ic * oc;
+                        let o_base = ((b * oh + oy) * ow + ox) * oc;
+                        for ci in 0..ic {
+                            let xi = xv[x_base + ci];
+                            if xi == 0.0 {
+                                continue;
+                            }
+                            let fo = f_base + ci * oc;
+                            for co in 0..oc {
+                                out[o_base + co] += xi * fv[fo + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(Shape(vec![n, oh, ow, oc]), TensorData::F32(out))
+}
+
+/// MaxPool over kxk windows; returns (output, flat argmax indices).
+pub fn max_pool(x: &Tensor, k: usize, stride: usize, padding: Padding) -> Result<(Tensor, Tensor)> {
+    let xd = x.shape().dims();
+    if xd.len() != 4 {
+        return Err(Status::invalid_argument("MaxPool: x must be NHWC"));
+    }
+    let (n, h, w, c) = (xd[0], xd[1], xd[2], xd[3]);
+    let oh = padding.out_dim(h, k, stride);
+    let ow = padding.out_dim(w, k, stride);
+    let ph = padding.pad_before(h, k, stride);
+    let pw = padding.pad_before(w, k, stride);
+    let xv = x.as_f32()?;
+    let mut out = vec![f32::NEG_INFINITY; n * oh * ow * c];
+    let mut arg = vec![0i64; n * oh * ow * c];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..k {
+                    let iy = oy as i64 * stride as i64 + ky as i64 - ph;
+                    if iy < 0 || iy >= h as i64 {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = ox as i64 * stride as i64 + kx as i64 - pw;
+                        if ix < 0 || ix >= w as i64 {
+                            continue;
+                        }
+                        let x_base = ((b * h + iy as usize) * w + ix as usize) * c;
+                        let o_base = ((b * oh + oy) * ow + ox) * c;
+                        for ci in 0..c {
+                            let v = xv[x_base + ci];
+                            if v > out[o_base + ci] {
+                                out[o_base + ci] = v;
+                                arg[o_base + ci] = (x_base + ci) as i64;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok((
+        Tensor::new(Shape(vec![n, oh, ow, c]), TensorData::F32(out))?,
+        Tensor::new(Shape(vec![n, oh, ow, c]), TensorData::I64(arg))?,
+    ))
+}
+
+/// Scatter pooled gradients back through the argmax indices.
+pub fn max_pool_grad(dy: &Tensor, argmax: &Tensor, input_shape: &Shape) -> Result<Tensor> {
+    let g = dy.as_f32()?;
+    let a = argmax.as_i64()?;
+    let mut out = vec![0f32; input_shape.num_elements()];
+    for (i, &gi) in g.iter().enumerate() {
+        let idx = a[i] as usize;
+        if idx >= out.len() {
+            return Err(Status::invalid_argument("MaxPoolGrad: argmax out of range"));
+        }
+        out[idx] += gi;
+    }
+    Tensor::new(input_shape.clone(), TensorData::F32(out))
+}
+
+/// Conv2D gradient wrt input (direct, full correlation with flipped filter).
+pub fn conv2d_backprop_input(
+    dy: &Tensor,
+    filter: &Tensor,
+    input_shape: &Shape,
+    stride: usize,
+    padding: Padding,
+) -> Result<Tensor> {
+    let id = input_shape.dims();
+    let fd = filter.shape().dims();
+    let dyd = dy.shape().dims();
+    let (n, h, w, ic) = (id[0], id[1], id[2], id[3]);
+    let (kh, kw, _fic, oc) = (fd[0], fd[1], fd[2], fd[3]);
+    let (oh, ow) = (dyd[1], dyd[2]);
+    let ph = padding.pad_before(h, kh, stride);
+    let pw = padding.pad_before(w, kw, stride);
+    let gv = dy.as_f32()?;
+    let fv = filter.as_f32()?;
+    let mut out = vec![0f32; input_shape.num_elements()];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kh {
+                    let iy = oy as i64 * stride as i64 + ky as i64 - ph;
+                    if iy < 0 || iy >= h as i64 {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = ox as i64 * stride as i64 + kx as i64 - pw;
+                        if ix < 0 || ix >= w as i64 {
+                            continue;
+                        }
+                        let x_base = ((b * h + iy as usize) * w + ix as usize) * ic;
+                        let f_base = (ky * kw + kx) * ic * oc;
+                        let g_base = ((b * oh + oy) * ow + ox) * oc;
+                        for ci in 0..ic {
+                            let mut s = 0f32;
+                            let fo = f_base + ci * oc;
+                            for co in 0..oc {
+                                s += gv[g_base + co] * fv[fo + co];
+                            }
+                            out[x_base + ci] += s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(input_shape.clone(), TensorData::F32(out))
+}
+
+/// Conv2D gradient wrt filter.
+pub fn conv2d_backprop_filter(
+    x: &Tensor,
+    dy: &Tensor,
+    filter_shape: &Shape,
+    stride: usize,
+    padding: Padding,
+) -> Result<Tensor> {
+    let xd = x.shape().dims();
+    let fd = filter_shape.dims();
+    let dyd = dy.shape().dims();
+    let (n, h, w, ic) = (xd[0], xd[1], xd[2], xd[3]);
+    let (kh, kw, _fic, oc) = (fd[0], fd[1], fd[2], fd[3]);
+    let (oh, ow) = (dyd[1], dyd[2]);
+    let ph = padding.pad_before(h, kh, stride);
+    let pw = padding.pad_before(w, kw, stride);
+    let xv = x.as_f32()?;
+    let gv = dy.as_f32()?;
+    let mut out = vec![0f32; filter_shape.num_elements()];
+    for b in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ky in 0..kh {
+                    let iy = oy as i64 * stride as i64 + ky as i64 - ph;
+                    if iy < 0 || iy >= h as i64 {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = ox as i64 * stride as i64 + kx as i64 - pw;
+                        if ix < 0 || ix >= w as i64 {
+                            continue;
+                        }
+                        let x_base = ((b * h + iy as usize) * w + ix as usize) * ic;
+                        let f_base = (ky * kw + kx) * ic * oc;
+                        let g_base = ((b * oh + oy) * ow + ox) * oc;
+                        for ci in 0..ic {
+                            let xi = xv[x_base + ci];
+                            if xi == 0.0 {
+                                continue;
+                            }
+                            let fo = f_base + ci * oc;
+                            for co in 0..oc {
+                                out[fo + co] += xi * gv[g_base + co];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(filter_shape.clone(), TensorData::F32(out))
+}
+
+fn rank2(t: &Tensor, what: &str) -> Result<(usize, usize)> {
+    let d = t.shape().dims();
+    match d.len() {
+        2 => Ok((d[0], d[1])),
+        1 => Ok((1, d[0])),
+        _ => Err(Status::invalid_argument(format!("{what}: expected rank 1/2, got {}", t.shape()))),
+    }
+}
+
+fn conv_attrs(ctx: &KernelContext) -> Result<(usize, Padding)> {
+    let stride =
+        ctx.node.attr_opt("stride").map(|a| a.as_i64()).transpose()?.unwrap_or(1) as usize;
+    let padding = Padding::parse(
+        ctx.node.attr_opt("padding").map(|a| a.as_str()).transpose()?.unwrap_or("SAME"),
+    )?;
+    Ok((stride, padding))
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    r.add_sync("ReLU", |ctx| Ok(vec![relu(ctx.input(0)?)?]));
+    r.add_sync("ReluGrad", |ctx| Ok(vec![relu_grad(ctx.input(0)?, ctx.input(1)?)?]));
+    r.add_sync("Sigmoid", |ctx| Ok(vec![sigmoid(ctx.input(0)?)?]));
+    r.add_sync("SoftMax", |ctx| Ok(vec![softmax(ctx.input(0)?)?]));
+    r.add_sync("LogSoftmax", |ctx| Ok(vec![log_softmax(ctx.input(0)?)?]));
+    r.add_sync("BiasAdd", |ctx| Ok(vec![bias_add(ctx.input(0)?, ctx.input(1)?)?]));
+    r.add_sync("BiasAddGrad", |ctx| Ok(vec![bias_add_grad(ctx.input(0)?)?]));
+    r.add_sync("SoftmaxCrossEntropyWithLogits", |ctx| {
+        let (loss, backprop) = softmax_xent(ctx.input(0)?, ctx.input(1)?)?;
+        Ok(vec![loss, backprop])
+    });
+    r.add_sync("L2Loss", |ctx| {
+        let v = ctx.input(0)?.as_f32()?;
+        let s: f64 = v.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        Ok(vec![Tensor::scalar_f32((s / 2.0) as f32)])
+    });
+    r.add_sync("Convolution2D", |ctx| {
+        let (stride, padding) = conv_attrs(ctx)?;
+        Ok(vec![conv2d(ctx.input(0)?, ctx.input(1)?, stride, padding)?])
+    });
+    r.add_sync("Conv2DBackpropInput", |ctx| {
+        // inputs: (dy, filter, original-input-for-shape)
+        let (stride, padding) = conv_attrs(ctx)?;
+        let shape = ctx.input(2)?.shape().clone();
+        Ok(vec![conv2d_backprop_input(ctx.input(0)?, ctx.input(1)?, &shape, stride, padding)?])
+    });
+    r.add_sync("Conv2DBackpropFilter", |ctx| {
+        // inputs: (x, dy, original-filter-for-shape)
+        let (stride, padding) = conv_attrs(ctx)?;
+        let shape = ctx.input(2)?.shape().clone();
+        Ok(vec![conv2d_backprop_filter(ctx.input(0)?, ctx.input(1)?, &shape, stride, padding)?])
+    });
+    r.add_sync("MaxPool", |ctx| {
+        let k = ctx.node.attr_opt("ksize").map(|a| a.as_i64()).transpose()?.unwrap_or(2) as usize;
+        let (stride, padding) = conv_attrs(ctx)?;
+        let (out, arg) = max_pool(ctx.input(0)?, k, stride, padding)?;
+        Ok(vec![out, arg])
+    });
+    r.add_sync("MaxPoolGrad", |ctx| {
+        // inputs: dy, argmax, original input (for shape)
+        let shape = ctx.input(2)?.shape().clone();
+        Ok(vec![max_pool_grad(ctx.input(0)?, ctx.input(1)?, &shape)?])
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(shape, v).unwrap()
+    }
+
+    #[test]
+    fn relu_and_grad() {
+        let x = t(vec![4], vec![-1., 0., 2., -3.]);
+        assert_eq!(relu(&x).unwrap().as_f32().unwrap(), &[0., 0., 2., 0.]);
+        let dy = t(vec![4], vec![1., 1., 1., 1.]);
+        assert_eq!(relu_grad(&dy, &x).unwrap().as_f32().unwrap(), &[0., 0., 1., 0.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = t(vec![2, 3], vec![1., 2., 3., 1000., 1000., 1000.]);
+        let s = softmax(&x).unwrap();
+        let v = s.as_f32().unwrap();
+        for r in 0..2 {
+            let sum: f32 = v[r * 3..(r + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // large-logit row must not produce NaN (stability check)
+        assert!(!s.has_non_finite());
+        assert!((v[3] - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_matches_softmax() {
+        let x = t(vec![1, 4], vec![0.5, -1., 2., 0.]);
+        let ls = log_softmax(&x).unwrap();
+        let s = softmax(&x).unwrap();
+        for (a, b) in ls.as_f32().unwrap().iter().zip(s.as_f32().unwrap()) {
+            assert!((a.exp() - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn bias_add_and_grad() {
+        let x = t(vec![2, 3], vec![0., 0., 0., 1., 1., 1.]);
+        let b = t(vec![3], vec![1., 2., 3.]);
+        let y = bias_add(&x, &b).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[1., 2., 3., 2., 3., 4.]);
+        let g = bias_add_grad(&y).unwrap();
+        assert_eq!(g.as_f32().unwrap(), &[3., 5., 7.]);
+    }
+
+    #[test]
+    fn xent_loss_and_backprop() {
+        // Perfect prediction -> loss near 0; backprop = p - y.
+        let logits = t(vec![1, 3], vec![10., 0., 0.]);
+        let labels = t(vec![1, 3], vec![1., 0., 0.]);
+        let (loss, bp) = softmax_xent(&logits, &labels).unwrap();
+        assert!(loss.as_f32().unwrap()[0] < 1e-3);
+        let p = softmax(&logits).unwrap();
+        for (b, (pi, yi)) in bp
+            .as_f32()
+            .unwrap()
+            .iter()
+            .zip(p.as_f32().unwrap().iter().zip(labels.as_f32().unwrap()))
+        {
+            assert!((b - (pi - yi)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn xent_uniform() {
+        let logits = t(vec![1, 4], vec![0., 0., 0., 0.]);
+        let labels = t(vec![1, 4], vec![0.25; 4]);
+        let (loss, _) = softmax_xent(&logits, &labels).unwrap();
+        assert!((loss.as_f32().unwrap()[0] - (4f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn conv2d_identity_filter() {
+        // 1x1 filter with weight 1 == identity.
+        let x = t(vec![1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        let f = t(vec![1, 1, 1, 1], vec![1.]);
+        let y = conv2d(&x, &f, 1, Padding::Same).unwrap();
+        assert_eq!(y.as_f32().unwrap(), x.as_f32().unwrap());
+    }
+
+    #[test]
+    fn conv2d_valid_sum_filter() {
+        // 2x2 all-ones filter, VALID: each output = sum of 2x2 window.
+        let x = t(vec![1, 3, 3, 1], (1..=9).map(|i| i as f32).collect());
+        let f = t(vec![2, 2, 1, 1], vec![1.; 4]);
+        let y = conv2d(&x, &f, 1, Padding::Valid).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 2, 2, 1]);
+        assert_eq!(y.as_f32().unwrap(), &[12., 16., 24., 28.]);
+    }
+
+    #[test]
+    fn conv2d_same_pads() {
+        let x = t(vec![1, 2, 2, 1], vec![1., 1., 1., 1.]);
+        let f = t(vec![3, 3, 1, 1], vec![1.; 9]);
+        let y = conv2d(&x, &f, 1, Padding::Same).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 2, 2, 1]);
+        // Every output sees all four ones.
+        assert_eq!(y.as_f32().unwrap(), &[4., 4., 4., 4.]);
+    }
+
+    #[test]
+    fn conv2d_stride2_shape() {
+        let x = t(vec![1, 4, 4, 1], vec![0.; 16]);
+        let f = t(vec![2, 2, 1, 1], vec![0.; 4]);
+        let y = conv2d(&x, &f, 2, Padding::Valid).unwrap();
+        assert_eq!(y.shape().dims(), &[1, 2, 2, 1]);
+    }
+
+    #[test]
+    fn maxpool_and_grad() {
+        let x = t(vec![1, 2, 2, 1], vec![1., 5., 3., 2.]);
+        let (y, arg) = max_pool(&x, 2, 2, Padding::Valid).unwrap();
+        assert_eq!(y.as_f32().unwrap(), &[5.]);
+        let dy = t(vec![1, 1, 1, 1], vec![10.]);
+        let dx = max_pool_grad(&dy, &arg, x.shape()).unwrap();
+        assert_eq!(dx.as_f32().unwrap(), &[0., 10., 0., 0.]);
+    }
+
+    #[test]
+    fn conv_grads_match_finite_difference() {
+        // Tiny conv; check d(sum(y))/dx and /df via FD.
+        let x = t(vec![1, 3, 3, 1], (0..9).map(|i| (i as f32) * 0.1).collect());
+        let f = t(vec![2, 2, 1, 1], vec![0.5, -0.2, 0.3, 0.8]);
+        let stride = 1;
+        let pad = Padding::Valid;
+        let y = conv2d(&x, &f, stride, pad).unwrap();
+        let dy = Tensor::fill_f32(y.shape().clone(), 1.0);
+        let dx = conv2d_backprop_input(&dy, &f, x.shape(), stride, pad).unwrap();
+        let df = conv2d_backprop_filter(&x, &dy, f.shape(), stride, pad).unwrap();
+        let eps = 1e-3;
+        let sum = |t: &Tensor| -> f32 { t.as_f32().unwrap().iter().sum() };
+        // FD wrt one x element
+        for check_idx in [0, 4, 8] {
+            let mut xv = x.as_f32().unwrap().to_vec();
+            xv[check_idx] += eps;
+            let x2 = t(vec![1, 3, 3, 1], xv);
+            let fd = (sum(&conv2d(&x2, &f, stride, pad).unwrap()) - sum(&y)) / eps;
+            assert!(
+                (fd - dx.as_f32().unwrap()[check_idx]).abs() < 1e-2,
+                "dx[{check_idx}]: fd={fd} analytic={}",
+                dx.as_f32().unwrap()[check_idx]
+            );
+        }
+        // FD wrt one filter element
+        for check_idx in [0, 3] {
+            let mut fv = f.as_f32().unwrap().to_vec();
+            fv[check_idx] += eps;
+            let f2 = t(vec![2, 2, 1, 1], fv);
+            let fd = (sum(&conv2d(&x, &f2, stride, pad).unwrap()) - sum(&y)) / eps;
+            assert!(
+                (fd - df.as_f32().unwrap()[check_idx]).abs() < 1e-2,
+                "df[{check_idx}]: fd={fd} analytic={}",
+                df.as_f32().unwrap()[check_idx]
+            );
+        }
+    }
+}

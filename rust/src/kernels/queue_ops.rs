@@ -1,0 +1,101 @@
+//! Queue op kernels (§4.6, Table 1 row 7). The queue *resource* lives in
+//! `crate::queue`; these kernels wire it into the graph. Enqueue and
+//! Dequeue are asynchronous kernels (§5.3): when the queue is full/empty
+//! they park a continuation instead of blocking an executor thread.
+
+use super::{DoneFn, Kernel, KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::queue::QueueImpl;
+use crate::tensor::Tensor;
+
+/// Build the (capacity, component count, seed…) from queue-node attrs and
+/// get-or-create the resource. Queue resource key = queue node name.
+fn queue_from_node(ctx: &KernelContext, queue_node: &str) -> Result<crate::queue::QueueRef> {
+    ctx.container().lookup_queue(queue_node)
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    // The queue ops output a string handle naming the resource; running
+    // them creates the queue in the node's container.
+    r.add("FIFOQueue", |node| {
+        let name = node.name.clone();
+        let capacity =
+            node.attr_opt("capacity").and_then(|a| a.as_i64().ok()).unwrap_or(32) as usize;
+        let components = node
+            .attr_opt("component_types")
+            .and_then(|a| a.as_list_type().ok().map(|l| l.len()))
+            .unwrap_or(1);
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let name = name.clone();
+            ctx.container().queue_or_create(&name, || QueueImpl::fifo(capacity, components));
+            Ok(vec![Tensor::scalar_str(name)])
+        })))
+    });
+
+    r.add("RandomShuffleQueue", |node| {
+        let name = node.name.clone();
+        let capacity =
+            node.attr_opt("capacity").and_then(|a| a.as_i64().ok()).unwrap_or(1024) as usize;
+        let components = node
+            .attr_opt("component_types")
+            .and_then(|a| a.as_list_type().ok().map(|l| l.len()))
+            .unwrap_or(1);
+        let min_after =
+            node.attr_opt("min_after_dequeue").and_then(|a| a.as_i64().ok()).unwrap_or(0) as usize;
+        let seed = node.attr_opt("seed").and_then(|a| a.as_i64().ok()).unwrap_or(0) as u64;
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let name = name.clone();
+            ctx.container()
+                .queue_or_create(&name, || QueueImpl::shuffle(capacity, components, min_after, seed));
+            Ok(vec![Tensor::scalar_str(name)])
+        })))
+    });
+
+    // Enqueue(queue_ref, components...) — async.
+    r.add("Enqueue", |node| {
+        let queue_node = node.ref_resource()?.to_string();
+        Ok(Kernel::Async(Box::new(move |ctx: KernelContext, done: DoneFn| {
+            let q = match queue_from_node(&ctx, &queue_node) {
+                Ok(q) => q,
+                Err(e) => return done(Err(e)),
+            };
+            let element: Vec<Tensor> = ctx.inputs[1..].to_vec();
+            q.enqueue_async(element, Box::new(move |res| done(res.map(|_| vec![]))));
+        })))
+    });
+
+    // Dequeue(queue_ref) -> components — async.
+    r.add("Dequeue", |node| {
+        let queue_node = node.ref_resource()?.to_string();
+        Ok(Kernel::Async(Box::new(move |ctx: KernelContext, done: DoneFn| {
+            let q = match queue_from_node(&ctx, &queue_node) {
+                Ok(q) => q,
+                Err(e) => return done(Err(e)),
+            };
+            q.dequeue_async(Box::new(move |res| done(res)));
+        })))
+    });
+
+    r.add("QueueClose", |node| {
+        let queue_node = node.ref_resource()?.to_string();
+        let cancel = node
+            .attr_opt("cancel_pending_enqueues")
+            .and_then(|a| a.as_bool().ok())
+            .unwrap_or(false);
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            queue_from_node(ctx, &queue_node)?.close(cancel);
+            Ok(vec![])
+        })))
+    });
+
+    r.add("QueueSize", |node| {
+        let queue_node = node.ref_resource()?.to_string();
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let q = queue_from_node(ctx, &queue_node)?;
+            Ok(vec![Tensor::scalar_i32(q.size() as i32)])
+        })))
+    });
+}
+
+#[allow(dead_code)]
+fn _state_check(_: &Status) {}

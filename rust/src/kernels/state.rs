@@ -1,0 +1,226 @@
+//! Stateful operations (Table 1 row 4): Variable / Assign / AssignAdd /
+//! AssignSub (§2 "Variables"), CountUpTo, and the optimizer apply ops
+//! (ApplyGradientDescent/Momentum/Adagrad/Adam) whose read-modify-write is
+//! atomic per variable — §6 lesson 4 is about the races you get otherwise.
+//!
+//! A Variable node's backing store is resolved through the node's
+//! container (§4.7): resource key = the Variable node's name (TF's
+//! `shared_name` default).
+
+use super::{KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::kernels::math::binary_elementwise;
+use crate::tensor::{Tensor, TensorData};
+
+/// Resolve the variable state for a ref-input op.
+fn var_of(ctx: &KernelContext) -> Result<(std::sync::Arc<crate::resources::VariableState>, String)> {
+    let name = ctx.node.ref_resource()?.to_string();
+    Ok((ctx.container().variable(&name), name))
+}
+
+/// elementwise a*s + b*t for f32 (s,t scalars) — optimizer helper.
+fn axpby(a: &Tensor, s: f32, b: &Tensor, t: f32) -> Result<Tensor> {
+    let av = a.as_f32()?;
+    let bv = b.as_f32()?;
+    if av.len() != bv.len() {
+        return Err(Status::invalid_argument("axpby: length mismatch"));
+    }
+    Tensor::new(
+        a.shape().clone(),
+        TensorData::F32(av.iter().zip(bv).map(|(&x, &y)| x * s + y * t).collect()),
+    )
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    // Variable: read the current value ("returns a handle to a persistent
+    // mutable tensor"); the "handle" is the value itself plus the executor's
+    // ref-resolution of downstream Assign-like consumers.
+    r.add("Variable", |node| {
+        let name = node.name.clone();
+        // Consumers are all ref-ops (Assign etc.): hand out a ref sentinel
+        // without dereferencing — TF's Variable op never reads its buffer;
+        // only real value-reads check initialization.
+        let ref_only = node.attr_opt("_ref_only").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+        let dtype = node.attr_opt("T").and_then(|a| a.as_type().ok()).unwrap_or(crate::tensor::DType::F32);
+        Ok(super::Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let v = ctx.container().variable(&name);
+            if ref_only {
+                return Ok(vec![v
+                    .read(&name)
+                    .unwrap_or(Tensor::zeros(dtype, vec![0])?)]);
+            }
+            Ok(vec![v.read(&name)?])
+        })))
+    });
+
+    r.add_sync("Assign", |ctx| {
+        let (var, _) = var_of(ctx)?;
+        let value = ctx.input(1)?.clone();
+        var.assign(value.clone());
+        Ok(vec![value])
+    });
+
+    r.add_sync("AssignAdd", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        Ok(vec![var.assign_add(&name, ctx.input(1)?)?])
+    });
+
+    r.add_sync("AssignSub", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        Ok(vec![var.assign_sub(&name, ctx.input(1)?)?])
+    });
+
+    // CountUpTo: increment a scalar variable, error at the limit (used by
+    // epoch-limited input pipelines).
+    r.add_sync("CountUpTo", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        let limit = ctx.node.attr("limit")?.as_i64()?;
+        let old = var.update(&name, |cur| {
+            let c = cur.scalar_value_i64()?;
+            if c >= limit {
+                return Err(Status::out_of_range(format!("CountUpTo: reached limit {limit}")));
+            }
+            Ok(Tensor::scalar_i64(c + 1))
+        })?;
+        let prev = old.scalar_value_i64()? - 1;
+        Ok(vec![Tensor::scalar_i64(prev)])
+    });
+
+    // var -= lr * grad. Inputs: (var_ref, lr, grad).
+    r.add_sync("ApplyGradientDescent", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        let lr = ctx.input(1)?.scalar_value_f32()?;
+        let grad = ctx.input(2)?;
+        Ok(vec![var.update(&name, |cur| axpby(cur, 1.0, grad, -lr))?])
+    });
+
+    // accum = momentum*accum + grad; var -= lr*accum.
+    // Inputs: (var_ref, lr, grad, momentum). Slot: "<var>/Momentum".
+    r.add_sync("ApplyMomentum", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        let lr = ctx.input(1)?.scalar_value_f32()?;
+        let grad = ctx.input(2)?.clone();
+        let momentum = ctx.input(3)?.scalar_value_f32()?;
+        let slot = ctx.container().variable(&format!("{name}/Momentum"));
+        let accum = slot.update_or_init(
+            || Tensor::zeros(grad.dtype(), grad.shape().clone()),
+            |acc| axpby(acc, momentum, &grad, 1.0),
+        )?;
+        Ok(vec![var.update(&name, |cur| axpby(cur, 1.0, &accum, -lr))?])
+    });
+
+    // accum += grad^2; var -= lr * grad / sqrt(accum + eps).
+    // Inputs: (var_ref, lr, grad). Slot: "<var>/Adagrad".
+    r.add_sync("ApplyAdagrad", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        let lr = ctx.input(1)?.scalar_value_f32()?;
+        let grad = ctx.input(2)?.clone();
+        let slot = ctx.container().variable(&format!("{name}/Adagrad"));
+        let g2 = binary_elementwise(&grad, &grad, "Mul")?;
+        let accum = slot.update_or_init(
+            || Tensor::zeros(grad.dtype(), grad.shape().clone()),
+            |acc| binary_elementwise(acc, &g2, "Add"),
+        )?;
+        Ok(vec![var.update(&name, |cur| {
+            let cv = cur.as_f32()?;
+            let gv = grad.as_f32()?;
+            let av = accum.as_f32()?;
+            let out: Vec<f32> = cv
+                .iter()
+                .zip(gv.iter().zip(av))
+                .map(|(&c, (&g, &a))| c - lr * g / (a + 1e-8).sqrt())
+                .collect();
+            Tensor::new(cur.shape().clone(), TensorData::F32(out))
+        })?])
+    });
+
+    // Adam. Inputs: (var_ref, lr, grad, beta_power_t (precomputed scale), step?)…
+    // We keep the wire simple: inputs (var_ref, lr, grad, beta1, beta2);
+    // slots m and v; the bias-correction step count is a slot scalar.
+    r.add_sync("ApplyAdam", |ctx| {
+        let (var, name) = var_of(ctx)?;
+        let lr = ctx.input(1)?.scalar_value_f32()?;
+        let grad = ctx.input(2)?.clone();
+        let beta1 = ctx.input(3)?.scalar_value_f32()?;
+        let beta2 = ctx.input(4)?.scalar_value_f32()?;
+        let eps = 1e-8f32;
+        let c = ctx.container();
+        let m_slot = c.variable(&format!("{name}/Adam/m"));
+        let v_slot = c.variable(&format!("{name}/Adam/v"));
+        let t_slot = c.variable(&format!("{name}/Adam/t"));
+        let t = t_slot
+            .update_or_init(|| Ok(Tensor::scalar_f32(0.0)), |cur| {
+                Ok(Tensor::scalar_f32(cur.scalar_value_f32()? + 1.0))
+            })?
+            .scalar_value_f32()?;
+        let m = m_slot.update_or_init(
+            || Tensor::zeros(grad.dtype(), grad.shape().clone()),
+            |m| axpby(m, beta1, &grad, 1.0 - beta1),
+        )?;
+        let g2 = binary_elementwise(&grad, &grad, "Mul")?;
+        let v = v_slot.update_or_init(
+            || Tensor::zeros(grad.dtype(), grad.shape().clone()),
+            |v| axpby(v, beta2, &g2, 1.0 - beta2),
+        )?;
+        let bc1 = 1.0 - beta1.powf(t);
+        let bc2 = 1.0 - beta2.powf(t);
+        Ok(vec![var.update(&name, |cur| {
+            let cv = cur.as_f32()?;
+            let mv = m.as_f32()?;
+            let vv = v.as_f32()?;
+            let out: Vec<f32> = cv
+                .iter()
+                .zip(mv.iter().zip(vv))
+                .map(|(&c, (&mi, &vi))| {
+                    let mhat = mi / bc1;
+                    let vhat = vi / bc2;
+                    c - lr * mhat / (vhat.sqrt() + eps)
+                })
+                .collect();
+            Tensor::new(cur.shape().clone(), TensorData::F32(out))
+        })?])
+    });
+
+    // Mutex ops (resource key = node name for Acquire; attr "mutex" names a
+    // shared mutex across nodes).
+    r.add("MutexAcquire", |node| {
+        let key = node
+            .attr_opt("mutex")
+            .and_then(|a| a.as_str().ok().map(String::from))
+            .unwrap_or_else(|| node.name.clone());
+        Ok(super::Kernel::Async(Box::new(move |ctx: KernelContext, done: super::DoneFn| {
+            let m = ctx.container().mutex(&key);
+            // Acquire may block: run on a detached waiter thread rather
+            // than the device pool (cheap at the rates mutex ops run).
+            std::thread::spawn(move || {
+                m.acquire();
+                done(Ok(vec![]));
+            });
+        })))
+    });
+    r.add("MutexRelease", |node| {
+        let key = node
+            .attr_opt("mutex")
+            .and_then(|a| a.as_str().ok().map(String::from))
+            .unwrap_or_else(|| node.name.clone());
+        Ok(super::Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            ctx.container().mutex(&key).release()?;
+            Ok(vec![])
+        })))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    // Kernel-level behaviour is exercised through the executor integration
+    // tests (rust/tests/); the pure helpers are tested here.
+    use super::*;
+
+    #[test]
+    fn axpby_math() {
+        let a = Tensor::from_f32(vec![2], vec![1., 2.]).unwrap();
+        let b = Tensor::from_f32(vec![2], vec![10., 20.]).unwrap();
+        let r = axpby(&a, 2.0, &b, 0.5).unwrap();
+        assert_eq!(r.as_f32().unwrap(), &[7., 14.]);
+    }
+}

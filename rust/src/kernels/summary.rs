@@ -1,0 +1,69 @@
+//! Summary op kernels (§9.1): Scalar/Histogram summaries encode a small
+//! JSON record into a string tensor; `MergeSummary` concatenates records.
+//! The client writes fetched summary tensors to an event log that the
+//! TensorBoard-analog (`crate::summary`) renders.
+
+use super::{KernelContext, KernelRegistry};
+use crate::tensor::{Shape, Tensor, TensorData};
+use crate::util::json::Json;
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    r.add("ScalarSummary", |node| {
+        let tag = node
+            .attr_opt("tag")
+            .and_then(|a| a.as_str().ok().map(String::from))
+            .unwrap_or_else(|| node.name.clone());
+        Ok(super::Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let v = ctx.input(0)?.cast(crate::tensor::DType::F32)?.scalar_value_f32()?;
+            let j = Json::obj().set("type", "scalar").set("tag", tag.clone()).set("value", v);
+            Ok(vec![Tensor::scalar_str(j.render())])
+        })))
+    });
+
+    r.add("HistogramSummary", |node| {
+        let tag = node
+            .attr_opt("tag")
+            .and_then(|a| a.as_str().ok().map(String::from))
+            .unwrap_or_else(|| node.name.clone());
+        Ok(super::Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            let v = ctx.input(0)?.as_f32()?;
+            let (min, max, sum, sum_sq) = v.iter().fold(
+                (f64::INFINITY, f64::NEG_INFINITY, 0f64, 0f64),
+                |(mn, mx, s, s2), &x| {
+                    let x = x as f64;
+                    (mn.min(x), mx.max(x), s + x, s2 + x * x)
+                },
+            );
+            // 20 equal-width buckets.
+            let nb = 20usize;
+            let width = if max > min { (max - min) / nb as f64 } else { 1.0 };
+            let mut buckets = vec![0u64; nb];
+            for &x in v {
+                let b = (((x as f64 - min) / width) as usize).min(nb - 1);
+                buckets[b] += 1;
+            }
+            let mut bucket_json = Json::arr();
+            for b in buckets {
+                bucket_json.push(b as i64);
+            }
+            let j = Json::obj()
+                .set("type", "histogram")
+                .set("tag", tag.clone())
+                .set("min", min)
+                .set("max", max)
+                .set("sum", sum)
+                .set("sum_sq", sum_sq)
+                .set("count", v.len())
+                .set("buckets", bucket_json);
+            Ok(vec![Tensor::scalar_str(j.render())])
+        })))
+    });
+
+    r.add_sync("MergeSummary", |ctx| {
+        let mut records = Vec::new();
+        for t in &ctx.inputs {
+            records.extend(t.as_str_slice()?.iter().cloned());
+        }
+        Ok(vec![Tensor::new(Shape::vector(records.len()), TensorData::Str(records))?])
+    });
+}

@@ -1,0 +1,50 @@
+//! # RustFlow
+//!
+//! A reproduction of *TensorFlow: Large-Scale Machine Learning on
+//! Heterogeneous Distributed Systems* (Abadi et al., 2015/2016 whitepaper)
+//! as a rust dataflow-execution engine whose numeric hot paths are
+//! AOT-compiled JAX/Pallas programs executed through PJRT.
+//!
+//! Layering (see DESIGN.md):
+//! * L3 — this crate: graphs, sessions, executors, placement, Send/Recv
+//!   partitioning, distributed master/worker, queues, autodiff,
+//!   checkpointing, optimizations, tooling.
+//! * L2 — `python/compile/model.py`: JAX train-step lowered to HLO text.
+//! * L1 — `python/compile/kernels/`: Pallas kernels inside the L2 program.
+//! * Bridge — [`runtime`]: loads `artifacts/*.hlo.txt` and exposes them to
+//!   graphs as the `XlaCall` op.
+
+pub mod autodiff;
+pub mod baseline;
+pub mod checkpoint;
+pub mod compress;
+pub mod data;
+pub mod device;
+pub mod distributed;
+pub mod error;
+pub mod executor;
+pub mod graph;
+pub mod kernels;
+pub mod ops;
+pub mod optim;
+pub mod partition;
+pub mod passes;
+pub mod placement;
+pub mod models;
+pub mod queue;
+pub mod replicate;
+pub mod runtime;
+pub mod session;
+pub mod summary;
+pub mod xla_model;
+pub mod rendezvous;
+pub mod resources;
+pub mod tensor;
+pub mod tracing_tools;
+pub mod util;
+
+pub use error::{Result, Status};
+pub use graph::{Endpoint, Graph, NodeId};
+pub use ops::builder::GraphBuilder;
+pub use session::{Session, SessionOptions};
+pub use tensor::{DType, Shape, Tensor};

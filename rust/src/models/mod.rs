@@ -1,0 +1,199 @@
+//! Model builders shared by examples, experiments, and benches: MLP
+//! classifiers (the §6 "start small" workflow), an LSTM (Fig 8's
+//! model-parallel workload), and a deep tower for the §6 Inception-port
+//! analog.
+
+use crate::error::Result;
+use crate::graph::Endpoint;
+use crate::ops::builder::GraphBuilder;
+use crate::tensor::{DType, Tensor};
+
+/// An MLP classifier head: returns (logits, variables).
+pub fn mlp(
+    b: &mut GraphBuilder,
+    x: Endpoint,
+    dims: &[usize], // e.g. [input, hidden…, classes]
+    seed: u64,
+) -> Result<(Endpoint, Vec<Endpoint>)> {
+    let mut vars = Vec::new();
+    let mut h = x;
+    for (i, pair) in dims.windows(2).enumerate() {
+        let (fan_in, fan_out) = (pair[0], pair[1]);
+        let std = (2.0 / fan_in as f32).sqrt();
+        let w = b.variable_normal(&format!("w{i}"), vec![fan_in, fan_out], std, seed + i as u64)?;
+        let bias = b.variable(&format!("b{i}"), Tensor::zeros(DType::F32, vec![fan_out])?)?;
+        vars.push(w);
+        vars.push(bias);
+        let mm = b.matmul(h, w);
+        let pre = b.bias_add(mm, bias);
+        h = if i + 2 < dims.len() { b.relu(pre) } else { pre };
+    }
+    Ok((h, vars))
+}
+
+/// Mean softmax cross-entropy loss over one-hot labels.
+pub fn xent_loss(b: &mut GraphBuilder, logits: Endpoint, labels: Endpoint) -> Result<Endpoint> {
+    let (loss_vec, _) = b.softmax_xent(logits, labels)?;
+    Ok(b.reduce_mean(loss_vec, None))
+}
+
+/// One LSTM cell step: (h, c) = lstm(x, h, c) with fused 4-gate weights.
+/// x: [batch, in], h/c: [batch, hidden], w: [in+hidden, 4*hidden],
+/// bias: [4*hidden].
+pub fn lstm_cell(
+    b: &mut GraphBuilder,
+    x: Endpoint,
+    h: Endpoint,
+    c: Endpoint,
+    w: Endpoint,
+    bias: Endpoint,
+) -> Result<(Endpoint, Endpoint)> {
+    let xh = b.concat(vec![x, h], 1);
+    let gates0 = b.matmul(xh, w);
+    let gates = b.bias_add(gates0, bias);
+    let parts = b.split(gates, 1, 4)?;
+    let i = b.sigmoid(parts[0]);
+    let f = b.sigmoid(parts[1]);
+    let o = b.sigmoid(parts[2]);
+    let g = b.tanh(parts[3]);
+    let fc = b.mul(f, c);
+    let ig = b.mul(i, g);
+    let c_new = b.add(fc, ig);
+    let c_act = b.tanh(c_new);
+    let h_new = b.mul(o, c_act);
+    Ok((h_new, c_new))
+}
+
+/// LSTM layer variables: (w, bias).
+pub fn lstm_vars(
+    b: &mut GraphBuilder,
+    name: &str,
+    input: usize,
+    hidden: usize,
+    seed: u64,
+) -> Result<(Endpoint, Endpoint)> {
+    let std = (1.0 / (input + hidden) as f32).sqrt();
+    let w = b.variable_normal(&format!("{name}/w"), vec![input + hidden, 4 * hidden], std, seed)?;
+    let bias = b.variable(&format!("{name}/b"), Tensor::zeros(DType::F32, vec![4 * hidden])?)?;
+    Ok((w, bias))
+}
+
+/// A deep stacked-LSTM unrolled over `seq_len` steps, each layer optionally
+/// pinned to a device (the Fig 8 model-parallel pattern: "different
+/// portions of the model computation are done on different computational
+/// devices simultaneously"). Returns (final top-layer h, variables).
+pub fn stacked_lstm(
+    b: &mut GraphBuilder,
+    inputs: &[Endpoint], // seq of [batch, in]
+    batch: usize,
+    input_dim: usize,
+    hidden: usize,
+    layers: usize,
+    device_of_layer: Option<&dyn Fn(usize) -> String>,
+    seed: u64,
+) -> Result<(Endpoint, Vec<Endpoint>)> {
+    let mut vars = Vec::new();
+    let mut layer_params = Vec::new();
+    for l in 0..layers {
+        let in_dim = if l == 0 { input_dim } else { hidden };
+        let (w, bias) = match device_of_layer {
+            Some(f) => b.with_device(&f(l), |b| lstm_vars(b, &format!("lstm{l}"), in_dim, hidden, seed + l as u64))?,
+            None => lstm_vars(b, &format!("lstm{l}"), in_dim, hidden, seed + l as u64)?,
+        };
+        vars.push(w);
+        vars.push(bias);
+        layer_params.push((w, bias));
+    }
+    let zeros = Tensor::zeros(DType::F32, vec![batch, hidden])?;
+    let mut h: Vec<Endpoint> = (0..layers).map(|_| b.constant(zeros.clone())).collect();
+    let mut c: Vec<Endpoint> = (0..layers).map(|_| b.constant(zeros.clone())).collect();
+    let mut top = h[0];
+    for &x_t in inputs {
+        let mut layer_in = x_t;
+        for l in 0..layers {
+            let (w, bias) = layer_params[l];
+            let step = |b: &mut GraphBuilder| lstm_cell(b, layer_in, h[l], c[l], w, bias);
+            let (h_new, c_new) = match device_of_layer {
+                Some(f) => b.with_device(&f(l), step)?,
+                None => step(b)?,
+            };
+            h[l] = h_new;
+            c[l] = c_new;
+            layer_in = h_new;
+        }
+        top = layer_in;
+    }
+    Ok((top, vars))
+}
+
+/// The §6 Inception-port analog: a deep MLP tower (many layers of matmul +
+/// bias + relu) — enough depth and parameter volume to make engine
+/// overheads and transfer costs visible, runnable on CPU.
+pub fn deep_tower(
+    b: &mut GraphBuilder,
+    x: Endpoint,
+    input: usize,
+    width: usize,
+    depth: usize,
+    classes: usize,
+    seed: u64,
+) -> Result<(Endpoint, Vec<Endpoint>)> {
+    let mut dims = vec![input];
+    dims.extend(std::iter::repeat(width).take(depth));
+    dims.push(classes);
+    mlp(b, x, &dims, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Session, SessionOptions};
+
+    #[test]
+    fn mlp_shapes() {
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::zeros(DType::F32, vec![8, 16]).unwrap());
+        let (logits, vars) = mlp(&mut b, x, &[16, 32, 10], 1).unwrap();
+        assert_eq!(vars.len(), 4);
+        let name = format!("{}:0", b.graph.node(logits.node).name);
+        let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        let out = sess.run(&[], &[&name], &[]).unwrap();
+        assert_eq!(out[0].shape().dims(), &[8, 10]);
+    }
+
+    #[test]
+    fn lstm_step_runs_and_is_bounded() {
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::fill_f32(vec![2, 4], 0.5));
+        let h0 = b.constant(Tensor::zeros(DType::F32, vec![2, 8]).unwrap());
+        let c0 = b.constant(Tensor::zeros(DType::F32, vec![2, 8]).unwrap());
+        let (w, bias) = lstm_vars(&mut b, "cell", 4, 8, 3).unwrap();
+        let (h1, c1) = lstm_cell(&mut b, x, h0, c0, w, bias).unwrap();
+        let hname = format!("{}:0", b.graph.node(h1.node).name);
+        let cname = format!("{}:0", b.graph.node(c1.node).name);
+        let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        let out = sess.run(&[], &[&hname, &cname], &[]).unwrap();
+        assert_eq!(out[0].shape().dims(), &[2, 8]);
+        // h = o * tanh(c) is bounded in (-1, 1).
+        assert!(out[0].as_f32().unwrap().iter().all(|v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn stacked_lstm_unrolls() {
+        let mut b = GraphBuilder::new();
+        let xs: Vec<Endpoint> =
+            (0..3).map(|_| b.constant(Tensor::fill_f32(vec![2, 4], 0.1))).collect();
+        let (top, vars) = stacked_lstm(&mut b, &xs, 2, 4, 8, 2, None, 5).unwrap();
+        assert_eq!(vars.len(), 4);
+        let name = format!("{}:0", b.graph.node(top.node).name);
+        let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        let out = sess.run(&[], &[&name], &[]).unwrap();
+        assert_eq!(out[0].shape().dims(), &[2, 8]);
+    }
+}

@@ -1,0 +1,575 @@
+//! Graph-construction front end — the analog of the paper's Python client
+//! (Fig 1). Builds `Graph`s node by node with validation against the op
+//! registry, name/device scoping, and convenience methods for the common
+//! ops. The `Session` consumes the finished graph (§2 "Sessions").
+
+use super::validate_node;
+use crate::error::Result;
+use crate::graph::{AttrValue, Endpoint, Graph, Node, NodeId};
+use crate::tensor::{DType, Shape, Tensor};
+
+/// Fluent graph builder.
+#[derive(Default)]
+pub struct GraphBuilder {
+    pub graph: Graph,
+    /// Name-scope stack, joined with '/'.
+    scope: Vec<String>,
+    /// Device-scope stack; innermost wins.
+    device_stack: Vec<String>,
+    /// Initialization ops (Assign of initial values into Variables);
+    /// run once via `Session::run(targets=init_ops)`.
+    pub init_ops: Vec<NodeId>,
+}
+
+impl GraphBuilder {
+    pub fn new() -> GraphBuilder {
+        GraphBuilder::default()
+    }
+
+    pub fn into_graph(self) -> Graph {
+        self.graph
+    }
+
+    // ---- scoping --------------------------------------------------------
+
+    /// Run `f` inside a name scope (`scope/op_name`).
+    pub fn with_scope<T>(&mut self, scope: &str, f: impl FnOnce(&mut Self) -> T) -> T {
+        self.scope.push(scope.to_string());
+        let out = f(self);
+        self.scope.pop();
+        out
+    }
+
+    /// Run `f` with a device constraint applied to created nodes (§4.3
+    /// "only place this node on …").
+    pub fn with_device<T>(&mut self, device: &str, f: impl FnOnce(&mut Self) -> T) -> T {
+        self.device_stack.push(device.to_string());
+        let out = f(self);
+        self.device_stack.pop();
+        out
+    }
+
+    fn scoped_name(&self, hint: &str) -> String {
+        let base = if self.scope.is_empty() {
+            hint.to_string()
+        } else {
+            format!("{}/{hint}", self.scope.join("/"))
+        };
+        self.graph.unique_name(&base)
+    }
+
+    // ---- core op insertion ----------------------------------------------
+
+    /// Add a node running `op` over `inputs` with `attrs`; name is
+    /// `hint` made unique under the current scope.
+    pub fn op(
+        &mut self,
+        op: &str,
+        hint: &str,
+        inputs: Vec<Endpoint>,
+        attrs: Vec<(&str, AttrValue)>,
+    ) -> Result<NodeId> {
+        let node = Node {
+            name: self.scoped_name(hint),
+            op: op.to_string(),
+            inputs,
+            control_inputs: vec![],
+            attrs: attrs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+            requested_device: self.device_stack.last().cloned().unwrap_or_default(),
+            assigned_device: None,
+        };
+        validate_node(&node)?;
+        self.graph.add(node)
+    }
+
+    /// Same as `op` but returns output 0 as an endpoint.
+    pub fn op1(
+        &mut self,
+        op: &str,
+        hint: &str,
+        inputs: Vec<Endpoint>,
+        attrs: Vec<(&str, AttrValue)>,
+    ) -> Result<Endpoint> {
+        Ok(self.op(op, hint, inputs, attrs)?.into())
+    }
+
+    /// Add a control dependency edge (§2 "control dependencies ... enforce
+    /// happens before relationships").
+    pub fn add_control_input(&mut self, node: NodeId, dep: NodeId) {
+        let n = self.graph.node_mut(node);
+        if !n.control_inputs.contains(&dep) {
+            n.control_inputs.push(dep);
+        }
+    }
+
+    /// Colocation constraint (§4.3 "Colocate this node with the node named
+    /// variable13"): stored as attr `_class = ["loc:@target"]`, TF-style.
+    pub fn colocate(&mut self, node: NodeId, with: NodeId) {
+        let target = self.graph.node(with).name.clone();
+        let n = self.graph.node_mut(node);
+        n.attrs
+            .insert("_class".to_string(), AttrValue::ListStr(vec![format!("loc:@{target}")]));
+    }
+
+    // ---- sources ----------------------------------------------------------
+
+    pub fn constant(&mut self, t: Tensor) -> Endpoint {
+        let dt = t.dtype();
+        self.op1("Const", "Const", vec![], vec![("value", t.into()), ("T", dt.into())])
+            .expect("Const is always valid")
+    }
+
+    pub fn constant_f32(&mut self, shape: impl Into<Shape>, v: Vec<f32>) -> Result<Endpoint> {
+        Ok(self.constant(Tensor::from_f32(shape, v)?))
+    }
+
+    pub fn scalar(&mut self, v: f32) -> Endpoint {
+        self.constant(Tensor::scalar_f32(v))
+    }
+
+    pub fn placeholder(&mut self, name: &str, dtype: DType) -> Result<Endpoint> {
+        self.op1("Placeholder", name, vec![], vec![("T", dtype.into())])
+    }
+
+    /// A variable with an initial-value tensor: creates the Variable node,
+    /// plus `Const(init) -> Assign` recorded in `init_ops` (the client runs
+    /// those once, as in TF's `initialize_all_variables`).
+    pub fn variable(&mut self, name: &str, init: Tensor) -> Result<Endpoint> {
+        let dt = init.dtype();
+        let shape = init.shape().clone();
+        let var = self.op(
+            "Variable",
+            name,
+            vec![],
+            vec![("T", dt.into()), ("shape", shape.into())],
+        )?;
+        let init_const = self.constant(init);
+        let assign = self.op(
+            "Assign",
+            &format!("{name}/init"),
+            vec![var.into(), init_const],
+            vec![("T", dt.into())],
+        )?;
+        // Initializer must live with the variable.
+        self.colocate(assign, var);
+        if let Some(cid) = Some(init_const.node) {
+            self.colocate(cid, var);
+        }
+        self.init_ops.push(assign);
+        Ok(var.into())
+    }
+
+    /// Variable initialized from a random-normal draw scaled by `stddev`.
+    pub fn variable_normal(
+        &mut self,
+        name: &str,
+        shape: impl Into<Shape>,
+        stddev: f32,
+        seed: u64,
+    ) -> Result<Endpoint> {
+        let shape = shape.into();
+        let mut rng = crate::util::rng::Pcg32::new(seed);
+        let v: Vec<f32> = (0..shape.num_elements()).map(|_| rng.normal() * stddev).collect();
+        self.variable(name, Tensor::from_f32(shape, v)?)
+    }
+
+    /// Variable initialized uniformly in [lo, hi) (Fig 1's
+    /// `tf.random_uniform([784,100],-1,1)`).
+    pub fn variable_uniform(
+        &mut self,
+        name: &str,
+        shape: impl Into<Shape>,
+        lo: f32,
+        hi: f32,
+        seed: u64,
+    ) -> Result<Endpoint> {
+        let shape = shape.into();
+        let mut rng = crate::util::rng::Pcg32::new(seed);
+        let v: Vec<f32> = (0..shape.num_elements()).map(|_| rng.uniform(lo, hi)).collect();
+        self.variable(name, Tensor::from_f32(shape, v)?)
+    }
+
+    // ---- elementwise ------------------------------------------------------
+
+    pub fn add(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Add", "Add", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn sub(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Sub", "Sub", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn mul(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Mul", "Mul", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn div(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Div", "Div", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn neg(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Neg", "Neg", vec![a], vec![]).unwrap()
+    }
+
+    pub fn exp(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Exp", "Exp", vec![a], vec![]).unwrap()
+    }
+
+    pub fn log(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Log", "Log", vec![a], vec![]).unwrap()
+    }
+
+    pub fn square(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Square", "Square", vec![a], vec![]).unwrap()
+    }
+
+    pub fn sqrt(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Sqrt", "Sqrt", vec![a], vec![]).unwrap()
+    }
+
+    pub fn tanh(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Tanh", "Tanh", vec![a], vec![]).unwrap()
+    }
+
+    pub fn add_n(&mut self, xs: Vec<Endpoint>) -> Endpoint {
+        self.op1("AddN", "AddN", xs, vec![]).unwrap()
+    }
+
+    pub fn greater(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Greater", "Greater", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn less(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Less", "Less", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn equal(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Equal", "Equal", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn select(&mut self, cond: Endpoint, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("Select", "Select", vec![cond, a, b], vec![]).unwrap()
+    }
+
+    pub fn cast(&mut self, a: Endpoint, to: DType) -> Endpoint {
+        self.op1("Cast", "Cast", vec![a], vec![("DstT", to.into())]).unwrap()
+    }
+
+    // ---- reductions ---------------------------------------------------------
+
+    /// Sum over all axes (axes attr absent) or given axes.
+    pub fn reduce_sum(&mut self, a: Endpoint, axes: Option<Vec<i64>>) -> Endpoint {
+        let attrs = match axes {
+            Some(ax) => vec![("axes", AttrValue::ListI64(ax))],
+            None => vec![],
+        };
+        self.op1("Sum", "Sum", vec![a], attrs).unwrap()
+    }
+
+    pub fn reduce_mean(&mut self, a: Endpoint, axes: Option<Vec<i64>>) -> Endpoint {
+        let attrs = match axes {
+            Some(ax) => vec![("axes", AttrValue::ListI64(ax))],
+            None => vec![],
+        };
+        self.op1("Mean", "Mean", vec![a], attrs).unwrap()
+    }
+
+    pub fn argmax(&mut self, a: Endpoint, axis: i64) -> Endpoint {
+        self.op1("ArgMax", "ArgMax", vec![a], vec![("axis", axis.into())]).unwrap()
+    }
+
+    // ---- array ---------------------------------------------------------------
+
+    pub fn identity(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Identity", "Identity", vec![a], vec![]).unwrap()
+    }
+
+    pub fn reshape_to(&mut self, a: Endpoint, shape: Vec<i64>) -> Endpoint {
+        let shape_t = self.constant(Tensor::from_i64(vec![shape.len()], shape).unwrap());
+        self.op1("Reshape", "Reshape", vec![a, shape_t], vec![]).unwrap()
+    }
+
+    pub fn concat(&mut self, xs: Vec<Endpoint>, axis: i64) -> Endpoint {
+        self.op1("Concat", "Concat", xs, vec![("axis", axis.into())]).unwrap()
+    }
+
+    pub fn slice(&mut self, a: Endpoint, begin: Vec<i64>, size: Vec<i64>) -> Endpoint {
+        self.op1(
+            "Slice",
+            "Slice",
+            vec![a],
+            vec![("begin", AttrValue::ListI64(begin)), ("size", AttrValue::ListI64(size))],
+        )
+        .unwrap()
+    }
+
+    pub fn split(&mut self, a: Endpoint, axis: i64, num_split: i64) -> Result<Vec<Endpoint>> {
+        let id = self.op(
+            "Split",
+            "Split",
+            vec![a],
+            vec![("axis", axis.into()), ("num_split", num_split.into())],
+        )?;
+        Ok((0..num_split as usize).map(|p| Endpoint::new(id, p)).collect())
+    }
+
+    pub fn transpose(&mut self, a: Endpoint, perm: Vec<i64>) -> Endpoint {
+        self.op1("Transpose", "Transpose", vec![a], vec![("perm", AttrValue::ListI64(perm))])
+            .unwrap()
+    }
+
+    pub fn zeros_like(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("ZerosLike", "ZerosLike", vec![a], vec![]).unwrap()
+    }
+
+    pub fn ones_like(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("OnesLike", "OnesLike", vec![a], vec![]).unwrap()
+    }
+
+    pub fn stop_gradient(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("StopGradient", "StopGradient", vec![a], vec![]).unwrap()
+    }
+
+    pub fn pack(&mut self, xs: Vec<Endpoint>, axis: i64) -> Endpoint {
+        self.op1("Pack", "Pack", xs, vec![("axis", axis.into())]).unwrap()
+    }
+
+    // ---- matrix / nn -----------------------------------------------------------
+
+    pub fn matmul(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("MatMul", "MatMul", vec![a, b], vec![]).unwrap()
+    }
+
+    pub fn matmul_t(
+        &mut self,
+        a: Endpoint,
+        b: Endpoint,
+        transpose_a: bool,
+        transpose_b: bool,
+    ) -> Endpoint {
+        self.op1(
+            "MatMul",
+            "MatMul",
+            vec![a, b],
+            vec![("transpose_a", transpose_a.into()), ("transpose_b", transpose_b.into())],
+        )
+        .unwrap()
+    }
+
+    pub fn relu(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("ReLU", "ReLU", vec![a], vec![]).unwrap()
+    }
+
+    pub fn sigmoid(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("Sigmoid", "Sigmoid", vec![a], vec![]).unwrap()
+    }
+
+    pub fn softmax(&mut self, a: Endpoint) -> Endpoint {
+        self.op1("SoftMax", "SoftMax", vec![a], vec![]).unwrap()
+    }
+
+    pub fn bias_add(&mut self, a: Endpoint, b: Endpoint) -> Endpoint {
+        self.op1("BiasAdd", "BiasAdd", vec![a, b], vec![]).unwrap()
+    }
+
+    /// (loss[batch], backprop[batch, classes])
+    pub fn softmax_xent(&mut self, logits: Endpoint, labels: Endpoint) -> Result<(Endpoint, Endpoint)> {
+        let id = self.op("SoftmaxCrossEntropyWithLogits", "xent", vec![logits, labels], vec![])?;
+        Ok((Endpoint::new(id, 0), Endpoint::new(id, 1)))
+    }
+
+    // ---- state --------------------------------------------------------------
+
+    pub fn assign(&mut self, var: Endpoint, value: Endpoint) -> Result<NodeId> {
+        self.op("Assign", "Assign", vec![var, value], vec![])
+    }
+
+    pub fn assign_add(&mut self, var: Endpoint, value: Endpoint) -> Result<NodeId> {
+        self.op("AssignAdd", "AssignAdd", vec![var, value], vec![])
+    }
+
+    // ---- control flow (§4.4) --------------------------------------------------
+
+    pub fn switch(&mut self, data: Endpoint, pred: Endpoint) -> Result<(Endpoint, Endpoint)> {
+        let id = self.op("Switch", "Switch", vec![data, pred], vec![])?;
+        Ok((Endpoint::new(id, 0), Endpoint::new(id, 1))) // (false, true)
+    }
+
+    pub fn merge(&mut self, xs: Vec<Endpoint>) -> Result<(Endpoint, Endpoint)> {
+        let id = self.op("Merge", "Merge", xs, vec![])?;
+        Ok((Endpoint::new(id, 0), Endpoint::new(id, 1))) // (value, index)
+    }
+
+    pub fn enter(&mut self, data: Endpoint, frame: &str) -> Result<Endpoint> {
+        self.op1("Enter", "Enter", vec![data], vec![("frame_name", frame.into())])
+    }
+
+    pub fn exit(&mut self, data: Endpoint) -> Result<Endpoint> {
+        self.op1("Exit", "Exit", vec![data], vec![])
+    }
+
+    pub fn next_iteration(&mut self, data: Endpoint) -> Result<Endpoint> {
+        self.op1("NextIteration", "NextIteration", vec![data], vec![])
+    }
+
+    pub fn loop_cond(&mut self, pred: Endpoint) -> Result<Endpoint> {
+        self.op1("LoopCond", "LoopCond", vec![pred], vec![])
+    }
+
+    pub fn no_op(&mut self, hint: &str) -> NodeId {
+        self.op("NoOp", hint, vec![], vec![]).unwrap()
+    }
+
+    /// Group: a NoOp with control deps on all of `deps` (like tf.group).
+    pub fn group(&mut self, hint: &str, deps: Vec<NodeId>) -> NodeId {
+        let id = self.no_op(hint);
+        for d in deps {
+            self.add_control_input(id, d);
+        }
+        id
+    }
+
+    /// Build a while-loop: `body` maps loop vars to next values while
+    /// `cond` is true (§4.4's Enter/Merge/Switch/NextIteration/Exit
+    /// pattern, compiled exactly as the paper describes).
+    pub fn while_loop(
+        &mut self,
+        frame: &str,
+        init: Vec<Endpoint>,
+        cond: impl FnOnce(&mut Self, &[Endpoint]) -> Result<Endpoint>,
+        body: impl FnOnce(&mut Self, &[Endpoint]) -> Result<Vec<Endpoint>>,
+    ) -> Result<Vec<Endpoint>> {
+        // Enter each loop variable into the frame.
+        let enters: Vec<Endpoint> =
+            init.iter().map(|&e| self.enter(e, frame)).collect::<Result<_>>()?;
+        // Merge(Enter, NextIteration) — NextIteration edge patched below.
+        let merges: Vec<NodeId> = enters
+            .iter()
+            .map(|&e| self.op("Merge", "Merge", vec![e], vec![]))
+            .collect::<Result<_>>()?;
+        let merge_vals: Vec<Endpoint> = merges.iter().map(|&m| Endpoint::new(m, 0)).collect();
+        // Loop condition on merged values.
+        let pred = cond(self, &merge_vals)?;
+        let pred = self.loop_cond(pred)?;
+        // Switch each var on the condition: true side continues, false exits.
+        let mut next_inputs = Vec::new();
+        let mut exits = Vec::new();
+        for &mv in &merge_vals {
+            let (f, t) = self.switch(mv, pred)?;
+            exits.push(self.exit(f)?);
+            next_inputs.push(t);
+        }
+        // Body on the true side.
+        let next_vals = body(self, &next_inputs)?;
+        crate::rf_ensure!(
+            next_vals.len() == init.len(),
+            InvalidArgument,
+            "while_loop body returned {} values, expected {}",
+            next_vals.len(),
+            init.len()
+        );
+        // NextIteration feeds back into each Merge.
+        for (&m, &nv) in merges.iter().zip(&next_vals) {
+            let ni = self.next_iteration(nv)?;
+            self.graph.node_mut(m).inputs.push(ni);
+        }
+        Ok(exits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_graph_builds() {
+        // The paper's Fig 1: relu(W x + b) over [784,100].
+        let mut b = GraphBuilder::new();
+        let w = b.variable_uniform("W", vec![100, 784], -1.0, 1.0, 1).unwrap();
+        let bias = b.variable("b", Tensor::zeros(DType::F32, vec![100, 1]).unwrap()).unwrap();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let wx = b.matmul(w, x);
+        let pre = b.add(wx, bias);
+        let _relu = b.relu(pre);
+        assert!(b.graph.find("W").is_some());
+        assert!(b.graph.find("x").is_some());
+        assert_eq!(b.init_ops.len(), 2);
+        // MatMul consumes W and x.
+        let mm = b.graph.find("MatMul").unwrap();
+        assert_eq!(b.graph.node(mm).op, "MatMul");
+    }
+
+    #[test]
+    fn scoping_prefixes_names() {
+        let mut b = GraphBuilder::new();
+        let c = b.with_scope("layer1", |b| b.scalar(1.0));
+        assert!(b.graph.node(c.node).name.starts_with("layer1/"));
+    }
+
+    #[test]
+    fn device_scope_sets_constraint() {
+        let mut b = GraphBuilder::new();
+        let c = b.with_device("/device:cpu:1", |b| b.scalar(1.0));
+        assert_eq!(b.graph.node(c.node).requested_device, "/device:cpu:1");
+        let d = b.scalar(2.0);
+        assert_eq!(b.graph.node(d.node).requested_device, "");
+    }
+
+    #[test]
+    fn unique_naming() {
+        let mut b = GraphBuilder::new();
+        let a = b.scalar(1.0);
+        let c = b.scalar(2.0);
+        assert_ne!(b.graph.node(a.node).name, b.graph.node(c.node).name);
+    }
+
+    #[test]
+    fn colocation_attr() {
+        let mut b = GraphBuilder::new();
+        let v = b.variable("v", Tensor::scalar_f32(0.0)).unwrap();
+        let c = b.scalar(1.0);
+        b.colocate(c.node, v.node);
+        let cls = b.graph.node(c.node).attr("_class").unwrap().as_list_str().unwrap().to_vec();
+        assert_eq!(cls, vec!["loc:@v".to_string()]);
+    }
+
+    #[test]
+    fn while_loop_shape() {
+        // while (i < 10) i += 1
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        let exits = b
+            .while_loop(
+                "loop",
+                vec![zero],
+                |b, vars| {
+                    let ten = b.scalar(10.0);
+                    Ok(b.less(vars[0], ten))
+                },
+                |b, vars| {
+                    let one = b.scalar(1.0);
+                    Ok(vec![b.add(vars[0], one)])
+                },
+            )
+            .unwrap();
+        assert_eq!(exits.len(), 1);
+        // Graph must be topo-sortable (back edge via NextIteration allowed).
+        assert!(b.graph.topo_order().is_ok());
+        // And contain the five §4.4 primitives.
+        for op in ["Enter", "Merge", "Switch", "Exit", "NextIteration", "LoopCond"] {
+            assert!(
+                b.graph.nodes.iter().any(|n| n.op == op),
+                "missing control-flow op {op}"
+            );
+        }
+    }
+
+    #[test]
+    fn group_builds_control_deps() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let y = b.scalar(2.0);
+        let g = b.group("init", vec![x.node, y.node]);
+        assert_eq!(b.graph.node(g).control_inputs.len(), 2);
+    }
+}

@@ -1,0 +1,420 @@
+//! The operation registry (§2 "Operations and Kernels"): an *operation* is
+//! an abstract computation with a name, attrs, and a signature; a *kernel*
+//! (see `crate::kernels`) is a device-specific implementation. "A
+//! TensorFlow binary defines the sets of operations and kernels available
+//! via a registration mechanism, and this set can be extended" — here the
+//! registries are process-global `once_cell` maps with `register_op` /
+//! `register_kernel` entry points, and the built-in set is installed on
+//! first use.
+
+pub mod builder;
+
+use crate::error::{Result, Status};
+use crate::graph::Node;
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+/// Table-1 operation categories. Used by the op-coverage test (E2) and the
+/// cost model's static heuristics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    ElementWise,
+    Array,
+    Matrix,
+    Stateful,
+    NeuralNet,
+    Checkpointing,
+    QueueSync,
+    ControlFlow,
+    Internal,
+}
+
+/// Number of data inputs an op accepts.
+#[derive(Debug, Clone, Copy)]
+pub enum Arity {
+    Exact(usize),
+    AtLeast(usize),
+    Range(usize, usize),
+}
+
+impl Arity {
+    pub fn check(&self, n: usize) -> bool {
+        match *self {
+            Arity::Exact(k) => n == k,
+            Arity::AtLeast(k) => n >= k,
+            Arity::Range(a, b) => n >= a && n <= b,
+        }
+    }
+}
+
+/// Definition of an operation.
+#[derive(Clone)]
+pub struct OpDef {
+    pub name: &'static str,
+    pub category: Category,
+    pub arity: Arity,
+    /// Output count, possibly attr-dependent (e.g. Split's `num_split`).
+    pub num_outputs: fn(&Node) -> Result<usize>,
+    /// Stateful ops are never deduplicated by CSE (§5.1) and pin their
+    /// placement (variables stay put across steps).
+    pub stateful: bool,
+    /// Ops whose kernel completes via continuation (§5.3): Recv, queue ops.
+    pub is_async: bool,
+}
+
+fn fixed<const N: usize>(_: &Node) -> Result<usize> {
+    Ok(N)
+}
+
+fn outputs_from_attr_num_split(n: &Node) -> Result<usize> {
+    Ok(n.attr("num_split")?.as_i64()? as usize)
+}
+
+fn outputs_from_component_types(n: &Node) -> Result<usize> {
+    Ok(n.attr("component_types")?.as_list_type()?.len())
+}
+
+fn outputs_from_out_types(n: &Node) -> Result<usize> {
+    Ok(n.attr("out_types")?.as_list_type()?.len())
+}
+
+fn outputs_from_attr_n(n: &Node) -> Result<usize> {
+    Ok(n.attr("N")?.as_i64()? as usize)
+}
+
+struct Registry {
+    ops: HashMap<&'static str, OpDef>,
+}
+
+static REGISTRY: Lazy<RwLock<Registry>> = Lazy::new(|| {
+    let mut r = Registry { ops: HashMap::new() };
+    install_builtin(&mut r);
+    RwLock::new(r)
+});
+
+/// Register an additional op (the paper's "extended by linking in
+/// additional operation definitions/registrations").
+pub fn register_op(def: OpDef) -> Result<()> {
+    let mut r = REGISTRY.write().unwrap();
+    if r.ops.contains_key(def.name) {
+        return Err(Status::already_exists(format!("op {} already registered", def.name)));
+    }
+    r.ops.insert(def.name, def);
+    Ok(())
+}
+
+/// Look up an op definition.
+pub fn lookup(name: &str) -> Result<OpDef> {
+    let r = REGISTRY.read().unwrap();
+    r.ops
+        .get(name)
+        .cloned()
+        .ok_or_else(|| Status::not_found(format!("op {name:?} is not registered")))
+}
+
+pub fn is_registered(name: &str) -> bool {
+    REGISTRY.read().unwrap().ops.contains_key(name)
+}
+
+/// All registered op names (op-coverage test support).
+pub fn all_ops() -> Vec<(String, Category)> {
+    let r = REGISTRY.read().unwrap();
+    r.ops.values().map(|d| (d.name.to_string(), d.category)).collect()
+}
+
+/// Validate a node against its op definition: op exists, arity matches,
+/// attr-dependent output count computable.
+pub fn validate_node(node: &Node) -> Result<()> {
+    let def = lookup(&node.op)?;
+    if !def.arity.check(node.inputs.len()) {
+        return Err(Status::invalid_argument(format!(
+            "node {:?}: op {} got {} inputs, arity {:?}",
+            node.name,
+            node.op,
+            node.inputs.len(),
+            def.arity
+        )));
+    }
+    (def.num_outputs)(node)?;
+    Ok(())
+}
+
+/// Output count for a node.
+pub fn num_outputs(node: &Node) -> Result<usize> {
+    (lookup(&node.op)?.num_outputs)(node)
+}
+
+macro_rules! op {
+    ($r:expr, $name:literal, $cat:ident, $arity:expr, $outs:expr) => {
+        op!($r, $name, $cat, $arity, $outs, stateful = false, is_async = false)
+    };
+    ($r:expr, $name:literal, $cat:ident, $arity:expr, $outs:expr, stateful = $st:literal) => {
+        op!($r, $name, $cat, $arity, $outs, stateful = $st, is_async = false)
+    };
+    ($r:expr, $name:literal, $cat:ident, $arity:expr, $outs:expr, stateful = $st:literal, is_async = $as:literal) => {
+        $r.ops.insert(
+            $name,
+            OpDef {
+                name: $name,
+                category: Category::$cat,
+                arity: $arity,
+                num_outputs: $outs,
+                stateful: $st,
+                is_async: $as,
+            },
+        );
+    };
+}
+
+fn install_builtin(r: &mut Registry) {
+    use Arity::*;
+
+    // --- Element-wise mathematical operations (Table 1 row 1) ---
+    for name in ["Add", "Sub", "Mul", "Div", "Maximum", "Minimum", "Pow"] {
+        r.ops.insert(
+            name,
+            OpDef {
+                name: Box::leak(name.to_string().into_boxed_str()),
+                category: Category::ElementWise,
+                arity: Exact(2),
+                num_outputs: fixed::<1>,
+                stateful: false,
+                is_async: false,
+            },
+        );
+    }
+    for name in ["Neg", "Exp", "Log", "Sqrt", "Rsqrt", "Abs", "Sign", "Square", "Tanh", "Reciprocal"] {
+        r.ops.insert(
+            name,
+            OpDef {
+                name: Box::leak(name.to_string().into_boxed_str()),
+                category: Category::ElementWise,
+                arity: Exact(1),
+                num_outputs: fixed::<1>,
+                stateful: false,
+                is_async: false,
+            },
+        );
+    }
+    for name in ["Greater", "Less", "Equal", "GreaterEqual", "LessEqual", "NotEqual", "LogicalAnd", "LogicalOr"] {
+        r.ops.insert(
+            name,
+            OpDef {
+                name: Box::leak(name.to_string().into_boxed_str()),
+                category: Category::ElementWise,
+                arity: Exact(2),
+                num_outputs: fixed::<1>,
+                stateful: false,
+                is_async: false,
+            },
+        );
+    }
+    op!(r, "LogicalNot", ElementWise, Exact(1), fixed::<1>);
+    op!(r, "Select", ElementWise, Exact(3), fixed::<1>);
+    op!(r, "AddN", ElementWise, AtLeast(1), fixed::<1>);
+    op!(r, "Cast", ElementWise, Exact(1), fixed::<1>);
+    op!(r, "CheckNumerics", ElementWise, Exact(1), fixed::<1>);
+
+    // --- Array operations (Table 1 row 2) ---
+    op!(r, "Const", Array, Exact(0), fixed::<1>);
+    op!(r, "Identity", Array, Exact(1), fixed::<1>);
+    op!(r, "Placeholder", Array, Exact(0), fixed::<1>);
+    op!(r, "Concat", Array, AtLeast(2), fixed::<1>); // inputs: tensors...; attr axis
+    op!(r, "Slice", Array, Exact(1), fixed::<1>); // attrs begin, size
+    op!(r, "Split", Array, Exact(1), outputs_from_attr_num_split);
+    op!(r, "Rank", Array, Exact(1), fixed::<1>);
+    op!(r, "Shape", Array, Exact(1), fixed::<1>);
+    op!(r, "Size", Array, Exact(1), fixed::<1>);
+    op!(r, "Reshape", Array, Exact(2), fixed::<1>);
+    op!(r, "Shuffle", Array, Exact(1), fixed::<1>); // random permutation along axis 0
+    op!(r, "ZerosLike", Array, Exact(1), fixed::<1>);
+    op!(r, "OnesLike", Array, Exact(1), fixed::<1>);
+    op!(r, "Fill", Array, Exact(2), fixed::<1>);
+    op!(r, "Gather", Array, Exact(2), fixed::<1>);
+    op!(r, "Transpose", Array, Exact(1), fixed::<1>); // attr perm
+    op!(r, "Pack", Array, AtLeast(1), fixed::<1>);
+    op!(r, "Unpack", Array, Exact(1), outputs_from_attr_n);
+    op!(r, "Tile", Array, Exact(1), fixed::<1>); // attr multiples
+    // Gradient helpers (§4.1): runtime-shaped broadcast/reduction, since
+    // shapes are not known at graph-construction time.
+    op!(r, "SumToShape", Array, Exact(2), fixed::<1>); // (grad, like)
+    op!(r, "BroadcastLike", Array, Exact(2), fixed::<1>); // (x, like)
+    op!(r, "ReshapeLike", Array, Exact(2), fixed::<1>); // (x, like)
+    op!(r, "ExpandDims", Array, Exact(1), fixed::<1>); // attr axis
+    op!(r, "Squeeze", Array, Exact(1), fixed::<1>);
+    op!(r, "StopGradient", Array, Exact(1), fixed::<1>);
+    op!(r, "BroadcastTo", Array, Exact(1), fixed::<1>); // attr shape
+    for name in ["RandomUniform", "RandomStandardNormal"] {
+        r.ops.insert(
+            name,
+            OpDef {
+                name: Box::leak(name.to_string().into_boxed_str()),
+                category: Category::Array,
+                arity: Exact(0),
+                num_outputs: fixed::<1>,
+                stateful: true, // random state
+                is_async: false,
+            },
+        );
+    }
+
+    // --- Reductions (element-wise family in Table 1's "...") ---
+    for name in ["Sum", "Mean", "Max", "Min", "Prod", "ArgMax"] {
+        r.ops.insert(
+            name,
+            OpDef {
+                name: Box::leak(name.to_string().into_boxed_str()),
+                category: Category::ElementWise,
+                arity: Exact(1),
+                num_outputs: fixed::<1>,
+                stateful: false,
+                is_async: false,
+            },
+        );
+    }
+
+    // --- Matrix operations (Table 1 row 3) ---
+    op!(r, "MatMul", Matrix, Exact(2), fixed::<1>); // attrs transpose_a/b
+    op!(r, "MatrixInverse", Matrix, Exact(1), fixed::<1>);
+    op!(r, "MatrixDeterminant", Matrix, Exact(1), fixed::<1>);
+    op!(r, "BatchMatMul", Matrix, Exact(2), fixed::<1>);
+
+    // --- Stateful operations (Table 1 row 4) ---
+    op!(r, "Variable", Stateful, Exact(0), fixed::<1>, stateful = true);
+    op!(r, "Assign", Stateful, Exact(2), fixed::<1>, stateful = true);
+    op!(r, "AssignAdd", Stateful, Exact(2), fixed::<1>, stateful = true);
+    op!(r, "AssignSub", Stateful, Exact(2), fixed::<1>, stateful = true);
+    op!(r, "CountUpTo", Stateful, Exact(1), fixed::<1>, stateful = true);
+    // Optimizer apply ops (§4.1 / §7 idioms). Input 0 is the variable ref.
+    op!(r, "ApplyGradientDescent", Stateful, Exact(3), fixed::<1>, stateful = true);
+    op!(r, "ApplyMomentum", Stateful, Exact(4), fixed::<1>, stateful = true);
+    op!(r, "ApplyAdagrad", Stateful, Exact(3), fixed::<1>, stateful = true);
+    op!(r, "ApplyAdam", Stateful, Exact(5), fixed::<1>, stateful = true);
+
+    // --- Neural-net building blocks (Table 1 row 5) ---
+    op!(r, "ReLU", NeuralNet, Exact(1), fixed::<1>);
+    op!(r, "ReluGrad", NeuralNet, Exact(2), fixed::<1>);
+    op!(r, "Sigmoid", NeuralNet, Exact(1), fixed::<1>);
+    op!(r, "SoftMax", NeuralNet, Exact(1), fixed::<1>);
+    op!(r, "LogSoftmax", NeuralNet, Exact(1), fixed::<1>);
+    op!(r, "BiasAdd", NeuralNet, Exact(2), fixed::<1>);
+    op!(r, "BiasAddGrad", NeuralNet, Exact(1), fixed::<1>);
+    op!(r, "Convolution2D", NeuralNet, Exact(2), fixed::<1>); // NHWC; attrs strides, padding
+    op!(r, "Conv2DBackpropInput", NeuralNet, Exact(3), fixed::<1>); // (dy, filter, x-for-shape)
+    op!(r, "Conv2DBackpropFilter", NeuralNet, Exact(3), fixed::<1>); // (x, dy, filter-for-shape)
+    op!(r, "MaxPool", NeuralNet, Exact(1), fixed::<2>); // (output, argmax)
+    op!(r, "MaxPoolGrad", NeuralNet, Exact(3), fixed::<1>);
+    op!(r, "SoftmaxCrossEntropyWithLogits", NeuralNet, Exact(2), fixed::<2>); // (loss, backprop)
+    op!(r, "L2Loss", NeuralNet, Exact(1), fixed::<1>);
+
+    // --- Checkpointing operations (Table 1 row 6) ---
+    op!(r, "Save", Checkpointing, AtLeast(1), fixed::<0>, stateful = true);
+    op!(r, "Restore", Checkpointing, Exact(0), outputs_from_out_types, stateful = true);
+
+    // --- Queue and synchronization operations (Table 1 row 7) ---
+    op!(r, "FIFOQueue", QueueSync, Exact(0), fixed::<1>, stateful = true);
+    op!(r, "RandomShuffleQueue", QueueSync, Exact(0), fixed::<1>, stateful = true);
+    op!(r, "Enqueue", QueueSync, AtLeast(2), fixed::<0>, stateful = true, is_async = true);
+    op!(r, "Dequeue", QueueSync, Exact(1), outputs_from_component_types, stateful = true, is_async = true);
+    op!(r, "QueueClose", QueueSync, Exact(1), fixed::<0>, stateful = true);
+    op!(r, "QueueSize", QueueSync, Exact(1), fixed::<1>, stateful = true);
+    op!(r, "MutexAcquire", QueueSync, Exact(0), fixed::<0>, stateful = true, is_async = true);
+    op!(r, "MutexRelease", QueueSync, Exact(0), fixed::<0>, stateful = true);
+
+    // --- Control flow operations (Table 1 row 8, §4.4) ---
+    op!(r, "Merge", ControlFlow, AtLeast(1), fixed::<2>); // (value, value_index)
+    op!(r, "Switch", ControlFlow, Exact(2), fixed::<2>); // (output_false, output_true)
+    op!(r, "Enter", ControlFlow, Exact(1), fixed::<1>); // attr frame_name
+    op!(r, "Exit", ControlFlow, Exact(1), fixed::<1>);
+    op!(r, "NextIteration", ControlFlow, Exact(1), fixed::<1>);
+    op!(r, "LoopCond", ControlFlow, Exact(1), fixed::<1>);
+    op!(r, "NoOp", ControlFlow, Exact(0), fixed::<0>);
+    op!(r, "ControlTrigger", ControlFlow, Exact(0), fixed::<0>);
+
+    // --- Input (§4.5) and summaries (§9.1) ---
+    op!(r, "RecordInput", Array, Exact(0), fixed::<2>, stateful = true); // (features, labels)
+    op!(r, "ScalarSummary", Array, Exact(1), fixed::<1>);
+    op!(r, "HistogramSummary", Array, Exact(1), fixed::<1>);
+    op!(r, "MergeSummary", Array, AtLeast(1), fixed::<1>);
+    op!(r, "Print", Array, AtLeast(1), fixed::<1>, stateful = true);
+
+    // --- Internal: communication (§3.2.2), feeds/fetches (§4.2), XLA (§5.4) ---
+    op!(r, "_Send", Internal, Exact(1), fixed::<0>, stateful = true);
+    op!(r, "_Recv", Internal, Exact(0), fixed::<1>, stateful = true, is_async = true);
+    op!(r, "_Feed", Internal, Exact(0), fixed::<1>, stateful = true);
+    op!(r, "_Fetch", Internal, Exact(1), fixed::<0>, stateful = true);
+    op!(r, "XlaCall", Internal, AtLeast(0), outputs_from_out_types);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AttrValue, Node};
+    use std::collections::BTreeMap;
+
+    fn node(op: &str, n_inputs: usize) -> Node {
+        Node {
+            name: "n".into(),
+            op: op.into(),
+            inputs: vec![crate::graph::Endpoint::new(crate::graph::NodeId(0), 0); n_inputs],
+            control_inputs: vec![],
+            attrs: BTreeMap::new(),
+            requested_device: String::new(),
+            assigned_device: None,
+        }
+    }
+
+    #[test]
+    fn lookup_builtin() {
+        assert!(lookup("MatMul").is_ok());
+        assert!(lookup("Nonexistent").is_err());
+        assert!(is_registered("Add"));
+    }
+
+    #[test]
+    fn arity_validation() {
+        assert!(validate_node(&node("Add", 2)).is_ok());
+        assert!(validate_node(&node("Add", 1)).is_err());
+        assert!(validate_node(&node("AddN", 3)).is_ok());
+        assert!(validate_node(&node("AddN", 0)).is_err());
+    }
+
+    #[test]
+    fn attr_dependent_outputs() {
+        let mut n = node("Split", 1);
+        n.attrs.insert("num_split".into(), AttrValue::I64(4));
+        assert_eq!(num_outputs(&n).unwrap(), 4);
+        let bad = node("Split", 1);
+        assert!(num_outputs(&bad).is_err());
+    }
+
+    #[test]
+    fn stateful_flags() {
+        assert!(lookup("Variable").unwrap().stateful);
+        assert!(lookup("Assign").unwrap().stateful);
+        assert!(!lookup("Add").unwrap().stateful);
+    }
+
+    #[test]
+    fn async_flags() {
+        assert!(lookup("_Recv").unwrap().is_async);
+        assert!(lookup("Dequeue").unwrap().is_async);
+        assert!(!lookup("MatMul").unwrap().is_async);
+    }
+
+    #[test]
+    fn user_registration() {
+        let def = OpDef {
+            name: "MyCustomOp",
+            category: Category::ElementWise,
+            arity: Arity::Exact(1),
+            num_outputs: fixed::<1>,
+            stateful: false,
+            is_async: false,
+        };
+        register_op(def.clone()).unwrap();
+        assert!(is_registered("MyCustomOp"));
+        assert!(register_op(def).is_err()); // duplicate
+    }
+}

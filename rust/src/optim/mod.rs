@@ -1,0 +1,166 @@
+//! Optimizers as graph builders (§4.1 + §7): `minimize(loss, vars)`
+//! extends the graph with `gradients()` and one Apply* op per variable,
+//! grouped under a single train NoOp — the "Update" nodes of Fig 7.
+
+use crate::autodiff::gradients;
+use crate::error::{Result, Status};
+use crate::graph::{Endpoint, NodeId};
+use crate::ops::builder::GraphBuilder;
+
+/// Optimizer algorithm + hyperparameters.
+#[derive(Debug, Clone)]
+pub enum Optimizer {
+    Sgd { lr: f32 },
+    Momentum { lr: f32, momentum: f32 },
+    Adagrad { lr: f32 },
+    Adam { lr: f32, beta1: f32, beta2: f32 },
+}
+
+impl Optimizer {
+    pub fn sgd(lr: f32) -> Optimizer {
+        Optimizer::Sgd { lr }
+    }
+
+    pub fn momentum(lr: f32, momentum: f32) -> Optimizer {
+        Optimizer::Momentum { lr, momentum }
+    }
+
+    pub fn adagrad(lr: f32) -> Optimizer {
+        Optimizer::Adagrad { lr }
+    }
+
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer::Adam { lr, beta1: 0.9, beta2: 0.999 }
+    }
+
+    /// Add one Apply node updating `var` with `grad`.
+    pub fn apply(&self, b: &mut GraphBuilder, var: Endpoint, grad: Endpoint) -> Result<NodeId> {
+        match *self {
+            Optimizer::Sgd { lr } => {
+                let lr = b.scalar(lr);
+                b.op("ApplyGradientDescent", "sgd_update", vec![var, lr, grad], vec![])
+            }
+            Optimizer::Momentum { lr, momentum } => {
+                let lr = b.scalar(lr);
+                let mom = b.scalar(momentum);
+                b.op("ApplyMomentum", "momentum_update", vec![var, lr, grad, mom], vec![])
+            }
+            Optimizer::Adagrad { lr } => {
+                let lr = b.scalar(lr);
+                b.op("ApplyAdagrad", "adagrad_update", vec![var, lr, grad], vec![])
+            }
+            Optimizer::Adam { lr, beta1, beta2 } => {
+                let lr = b.scalar(lr);
+                let b1 = b.scalar(beta1);
+                let b2 = b.scalar(beta2);
+                b.op("ApplyAdam", "adam_update", vec![var, lr, grad, b1, b2], vec![])
+            }
+        }
+    }
+
+    /// `minimize`: gradients of `loss` w.r.t. `vars`, one apply per var,
+    /// all grouped under a returned train op.
+    pub fn minimize(
+        &self,
+        b: &mut GraphBuilder,
+        loss: Endpoint,
+        vars: &[Endpoint],
+    ) -> Result<NodeId> {
+        let grads = gradients(b, loss, vars)?;
+        let mut updates = Vec::with_capacity(vars.len());
+        for (var, grad) in vars.iter().zip(grads) {
+            let grad = grad.ok_or_else(|| {
+                Status::invalid_argument(format!(
+                    "loss does not depend on variable {:?}",
+                    b.graph.node(var.node).name
+                ))
+            })?;
+            let upd = self.apply(b, *var, grad)?;
+            // Keep the update on the variable's device (§4.3 colocation of
+            // parameter state) — already enforced by ref-edge colocation.
+            updates.push(upd);
+        }
+        Ok(b.group("train", updates))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Session, SessionOptions};
+    use crate::tensor::Tensor;
+
+    /// Minimize (w - 3)^2 and check convergence to w = 3.
+    fn converges(opt: Optimizer, steps: usize, tol: f32) {
+        let mut b = GraphBuilder::new();
+        let w = b.variable("w", Tensor::scalar_f32(0.0)).unwrap();
+        let three = b.scalar(3.0);
+        let diff = b.sub(w, three);
+        let loss = b.square(diff);
+        let train = opt.minimize(&mut b, loss, &[w]).unwrap();
+        let train_name = b.graph.node(train).name.clone();
+        let init: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&init.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        for _ in 0..steps {
+            sess.run_targets(&[&train_name]).unwrap();
+        }
+        let out = sess.run(&[], &["w"], &[]).unwrap();
+        let w_final = out[0].scalar_value_f32().unwrap();
+        assert!((w_final - 3.0).abs() < tol, "{opt:?} converged to {w_final}, want 3.0");
+    }
+
+    #[test]
+    fn sgd_converges() {
+        converges(Optimizer::sgd(0.1), 100, 1e-3);
+    }
+
+    #[test]
+    fn momentum_converges() {
+        converges(Optimizer::momentum(0.05, 0.9), 200, 1e-2);
+    }
+
+    #[test]
+    fn adagrad_converges() {
+        converges(Optimizer::adagrad(0.9), 400, 5e-2);
+    }
+
+    #[test]
+    fn adam_converges() {
+        converges(Optimizer::adam(0.1), 400, 1e-2);
+    }
+
+    #[test]
+    fn minimize_rejects_unrelated_variable() {
+        let mut b = GraphBuilder::new();
+        let w = b.variable("w", Tensor::scalar_f32(0.0)).unwrap();
+        let loss = b.scalar(1.0);
+        assert!(Optimizer::sgd(0.1).minimize(&mut b, loss, &[w]).is_err());
+    }
+
+    #[test]
+    fn multi_variable_linear_regression() {
+        // y = a*x + c fit to y = 2x + 1 over fixed points.
+        let mut b = GraphBuilder::new();
+        let a = b.variable("a", Tensor::scalar_f32(0.0)).unwrap();
+        let c = b.variable("c", Tensor::scalar_f32(0.0)).unwrap();
+        let xs = b.constant(Tensor::from_f32(vec![4], vec![0., 1., 2., 3.]).unwrap());
+        let ys = b.constant(Tensor::from_f32(vec![4], vec![1., 3., 5., 7.]).unwrap());
+        let ax = b.mul(a, xs);
+        let pred = b.add(ax, c);
+        let err = b.sub(pred, ys);
+        let sq = b.square(err);
+        let loss = b.reduce_mean(sq, None);
+        let train = Optimizer::sgd(0.05).minimize(&mut b, loss, &[a, c]).unwrap();
+        let train_name = b.graph.node(train).name.clone();
+        let init: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&init.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        for _ in 0..500 {
+            sess.run_targets(&[&train_name]).unwrap();
+        }
+        let out = sess.run(&[], &["a", "c"], &[]).unwrap();
+        assert!((out[0].scalar_value_f32().unwrap() - 2.0).abs() < 0.05);
+        assert!((out[1].scalar_value_f32().unwrap() - 1.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,407 @@
+//! Graph partitioning + Send/Recv insertion (§3.2.2).
+//!
+//! "Once the node placement has been computed, the graph is partitioned
+//! into a set of subgraphs, one per device. Any cross-device edge from x
+//! to y is removed and replaced by an edge from x to a new Send node in
+//! x's subgraph and an edge from a corresponding Receive node to y …
+//! we canonicalize all users of a particular tensor on a particular device
+//! to use a single Receive node … This ensures that the data for the
+//! needed tensor is only transmitted once between a source device →
+//! destination device pair."
+//!
+//! Cross-device *control* edges become a dummy-tensor Send/Recv pair whose
+//! Recv feeds the consumer as a control input — the "necessary
+//! synchronization between different workers and devices" that lets the
+//! master issue a single Run per worker (§3.2.2 last paragraph).
+
+use crate::error::{Result, Status};
+use crate::graph::{AttrValue, Endpoint, Graph, Node, NodeId};
+use crate::rendezvous::make_key;
+use crate::tensor::Tensor;
+use std::collections::{BTreeMap, HashMap};
+
+/// Partitioning options.
+#[derive(Debug, Clone)]
+pub struct PartitionOptions {
+    /// §3.2.2 canonicalization: one Recv per (tensor, dst device). Exposed
+    /// as a switch so experiment E4 can measure its effect.
+    pub canonicalize: bool,
+    /// §5.5: compress f32 payloads to bf16 on cross-*task* edges.
+    pub compress_cross_task: bool,
+    /// Compress on every cross-device edge (for the E13 ablation).
+    pub compress_all: bool,
+}
+
+impl Default for PartitionOptions {
+    fn default() -> Self {
+        PartitionOptions { canonicalize: true, compress_cross_task: true, compress_all: false }
+    }
+}
+
+/// Statistics about a partitioning (consumed by E4/E13).
+#[derive(Debug, Default, Clone)]
+pub struct PartitionStats {
+    pub num_partitions: usize,
+    pub send_nodes: usize,
+    pub recv_nodes: usize,
+    /// Logical cross-device tensor transfers (== recv count).
+    pub transfers: usize,
+    pub compressed_transfers: usize,
+}
+
+/// One device's partition.
+pub struct Partition {
+    pub device: String,
+    pub graph: Graph,
+}
+
+fn task_of(device: &str) -> &str {
+    match device.find("/device:") {
+        Some(i) => &device[..i],
+        None => device,
+    }
+}
+
+/// Split a placed graph into per-device partitions with Send/Recv pairs.
+/// `step_prefix` namespaces rendezvous keys (distributed runs pass
+/// "step:<id>"; local runs use a fresh rendezvous per step and pass "").
+pub fn partition(
+    graph: &Graph,
+    options: &PartitionOptions,
+    step_prefix: &str,
+) -> Result<(Vec<Partition>, PartitionStats)> {
+    // Group nodes by device.
+    let mut device_names: Vec<String> = Vec::new();
+    let mut node_device: Vec<usize> = Vec::with_capacity(graph.len());
+    {
+        let mut index: HashMap<&str, usize> = HashMap::new();
+        for id in graph.ids() {
+            let dev = graph.node(id).assigned_device.as_deref().ok_or_else(|| {
+                Status::failed_precondition(format!(
+                    "partition: node {:?} has no assigned device (run placement first)",
+                    graph.node(id).name
+                ))
+            })?;
+            let di = *index.entry(dev).or_insert_with(|| {
+                device_names.push(dev.to_string());
+                device_names.len() - 1
+            });
+            node_device.push(di);
+        }
+    }
+
+    let mut parts: Vec<Graph> = device_names.iter().map(|_| Graph::new()).collect();
+    // old node -> (partition, new id)
+    let mut remap: HashMap<NodeId, (usize, NodeId)> = HashMap::new();
+    // Canonicalized recv: (src node, port, dst partition) -> recv endpoint.
+    let mut recv_cache: HashMap<(NodeId, usize, usize), Endpoint> = HashMap::new();
+    // Canonicalized control recv: (src node, dst partition) -> recv node.
+    let mut ctrl_recv_cache: HashMap<(NodeId, usize), NodeId> = HashMap::new();
+    let mut stats = PartitionStats { num_partitions: parts.len(), ..Default::default() };
+
+    let order = graph.topo_order()?;
+    for id in order {
+        let node = graph.node(id);
+        let dst_part = node_device[id.0];
+        let dst_dev = &device_names[dst_part];
+
+        // Resolve inputs, inserting Send/Recv for cross-device edges.
+        // Loop back-edges (Merge ← NextIteration) reference nodes not yet
+        // remapped; they are truncated here and patched after the main
+        // loop (loop frames are colocated, so the patch is device-local).
+        let mut new_inputs = Vec::with_capacity(node.inputs.len());
+        for e in &node.inputs {
+            if !remap.contains_key(&e.node) {
+                break;
+            }
+            let (src_part, src_new) = remap[&e.node];
+            if src_part == dst_part {
+                new_inputs.push(Endpoint::new(src_new, e.port));
+                continue;
+            }
+            let cache_key = (e.node, e.port, dst_part);
+            if options.canonicalize {
+                if let Some(&recv) = recv_cache.get(&cache_key) {
+                    new_inputs.push(recv);
+                    continue;
+                }
+            }
+            let src_dev = &device_names[src_part];
+            let compress = options.compress_all
+                || (options.compress_cross_task && task_of(src_dev) != task_of(dst_dev));
+            let tensor_name = format!("{}:{}", graph.node(e.node).name, e.port);
+            // Non-canonical duplicates need distinct keys.
+            let dup = if options.canonicalize {
+                String::new()
+            } else {
+                format!("#{}", stats.transfers)
+            };
+            let key =
+                format!("{step_prefix}{}", make_key(src_dev, dst_dev, &format!("{tensor_name}{dup}"), "0:0"));
+            // Send on the source partition.
+            let send_name = parts[src_part].unique_name(&format!("_send/{tensor_name}{dup}"));
+            parts[src_part].add(Node {
+                name: send_name,
+                op: "_Send".into(),
+                inputs: vec![Endpoint::new(src_new, e.port)],
+                control_inputs: vec![],
+                attrs: send_attrs(&key, compress),
+                requested_device: String::new(),
+                assigned_device: Some(src_dev.clone()),
+            })?;
+            stats.send_nodes += 1;
+            // Recv on the destination partition.
+            let recv_name = parts[dst_part].unique_name(&format!("_recv/{tensor_name}{dup}"));
+            let recv_id = parts[dst_part].add(Node {
+                name: recv_name,
+                op: "_Recv".into(),
+                inputs: vec![],
+                control_inputs: vec![],
+                attrs: recv_attrs(&key),
+                requested_device: String::new(),
+                assigned_device: Some(dst_dev.clone()),
+            })?;
+            stats.recv_nodes += 1;
+            stats.transfers += 1;
+            if compress {
+                stats.compressed_transfers += 1;
+            }
+            let recv_ep = Endpoint::new(recv_id, 0);
+            if options.canonicalize {
+                recv_cache.insert(cache_key, recv_ep);
+            }
+            new_inputs.push(recv_ep);
+        }
+
+        // Control inputs: same-device stay control edges; cross-device get
+        // a dummy-tensor Send/Recv carrying the happens-before.
+        let mut new_controls = Vec::new();
+        for c in &node.control_inputs {
+            let (src_part, src_new) = remap[c];
+            if src_part == dst_part {
+                new_controls.push(src_new);
+                continue;
+            }
+            let cache_key = (*c, dst_part);
+            if options.canonicalize {
+                if let Some(&recv) = ctrl_recv_cache.get(&cache_key) {
+                    new_controls.push(recv);
+                    continue;
+                }
+            }
+            let src_dev = &device_names[src_part];
+            let tensor_name = format!("^{}", graph.node(*c).name);
+            let key = format!("{step_prefix}{}", make_key(src_dev, dst_dev, &tensor_name, "0:0"));
+            // Dummy const on the source, control-gated by the src node.
+            let dummy_name = parts[src_part].unique_name(&format!("_ctrl_dummy/{}", graph.node(*c).name));
+            let dummy_id = parts[src_part].add(Node {
+                name: dummy_name,
+                op: "Const".into(),
+                inputs: vec![],
+                control_inputs: vec![src_new],
+                attrs: {
+                    let mut a = BTreeMap::new();
+                    a.insert("value".to_string(), AttrValue::Tensor(Tensor::scalar_f32(0.0)));
+                    a
+                },
+                requested_device: String::new(),
+                assigned_device: Some(src_dev.clone()),
+            })?;
+            let send_name = parts[src_part].unique_name(&format!("_send{tensor_name}"));
+            parts[src_part].add(Node {
+                name: send_name,
+                op: "_Send".into(),
+                inputs: vec![Endpoint::new(dummy_id, 0)],
+                control_inputs: vec![],
+                attrs: send_attrs(&key, false),
+                requested_device: String::new(),
+                assigned_device: Some(src_dev.clone()),
+            })?;
+            stats.send_nodes += 1;
+            let recv_name = parts[dst_part].unique_name(&format!("_recv{tensor_name}"));
+            let recv_id = parts[dst_part].add(Node {
+                name: recv_name,
+                op: "_Recv".into(),
+                inputs: vec![],
+                control_inputs: vec![],
+                attrs: recv_attrs(&key),
+                requested_device: String::new(),
+                assigned_device: Some(dst_dev.clone()),
+            })?;
+            stats.recv_nodes += 1;
+            stats.transfers += 1;
+            if options.canonicalize {
+                ctrl_recv_cache.insert(cache_key, recv_id);
+            }
+            new_controls.push(recv_id);
+        }
+
+        let new_id = parts[dst_part].add(Node {
+            name: node.name.clone(),
+            op: node.op.clone(),
+            inputs: new_inputs,
+            control_inputs: new_controls,
+            attrs: node.attrs.clone(),
+            requested_device: node.requested_device.clone(),
+            assigned_device: node.assigned_device.clone(),
+        })?;
+        remap.insert(id, (dst_part, new_id));
+    }
+
+    // Patch NextIteration back-edges (skipped by topo order): Merge nodes
+    // may reference NextIteration inputs that were added later.
+    for id in graph.ids() {
+        let node = graph.node(id);
+        let (part, new_id) = remap[&id];
+        if node.inputs.len() != parts[part].node(new_id).inputs.len() {
+            // Rebuild the full input list: loop frames are colocated, so
+            // all inputs are local now.
+            let rebuilt: Vec<Endpoint> = node
+                .inputs
+                .iter()
+                .map(|e| {
+                    let (sp, sn) = remap[&e.node];
+                    debug_assert_eq!(sp, part, "loop back-edge must be device-local");
+                    Endpoint::new(sn, e.port)
+                })
+                .collect();
+            parts[part].node_mut(new_id).inputs = rebuilt;
+        }
+    }
+
+    Ok((
+        device_names
+            .into_iter()
+            .zip(parts)
+            .map(|(device, graph)| Partition { device, graph })
+            .collect(),
+        stats,
+    ))
+}
+
+fn send_attrs(key: &str, compress: bool) -> BTreeMap<String, AttrValue> {
+    let mut a = BTreeMap::new();
+    a.insert("key".to_string(), AttrValue::Str(key.to_string()));
+    if compress {
+        a.insert("compress".to_string(), AttrValue::Bool(true));
+    }
+    a
+}
+
+fn recv_attrs(key: &str) -> BTreeMap<String, AttrValue> {
+    let mut a = BTreeMap::new();
+    a.insert("key".to_string(), AttrValue::Str(key.to_string()));
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceSet;
+    use crate::ops::builder::GraphBuilder;
+    use crate::placement::{place, CostModel};
+
+    fn two_device_graph() -> Graph {
+        // Figure 4's shape: x on dev0; consumers b, c on dev1.
+        let mut b = GraphBuilder::new();
+        let x = b.with_device("/device:cpu:0", |b| b.scalar(1.0));
+        let w = b.with_device("/device:cpu:0", |b| b.scalar(2.0));
+        let _a = b.with_device("/device:cpu:0", |b| b.mul(w, x));
+        let y = b.with_device("/device:cpu:1", |b| b.add(x, x)); // consumer 1
+        let _z = b.with_device("/device:cpu:1", |b| b.mul(x, y)); // consumer 2
+        let devices = DeviceSet::local(2, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        b.graph
+    }
+
+    #[test]
+    fn canonicalization_single_transfer_per_pair() {
+        // Fig 4: b and c both read x on the other device — with
+        // canonicalization, x is transmitted ONCE.
+        let g = two_device_graph();
+        let (parts, stats) = partition(&g, &PartitionOptions::default(), "").unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(stats.transfers, 1, "canonicalized: one transfer for x");
+        assert_eq!(stats.send_nodes, 1);
+        assert_eq!(stats.recv_nodes, 1);
+    }
+
+    #[test]
+    fn naive_mode_duplicates_transfers() {
+        let g = two_device_graph();
+        let opts = PartitionOptions { canonicalize: false, ..Default::default() };
+        let (_, stats) = partition(&g, &opts, "").unwrap();
+        assert_eq!(stats.transfers, 3, "naive: one per consumer edge (x→Add twice, x→Mul)");
+    }
+
+    #[test]
+    fn single_device_graph_unchanged() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let y = b.scalar(2.0);
+        b.add(x, y);
+        let devices = DeviceSet::local(1, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        let (parts, stats) = partition(&b.graph, &PartitionOptions::default(), "").unwrap();
+        assert_eq!(parts.len(), 1);
+        assert_eq!(stats.transfers, 0);
+        assert_eq!(parts[0].graph.len(), 3);
+    }
+
+    #[test]
+    fn cross_device_control_edge_becomes_send_recv() {
+        let mut b = GraphBuilder::new();
+        let x = b.with_device("/device:cpu:0", |b| b.scalar(1.0));
+        let y = b.with_device("/device:cpu:1", |b| b.scalar(2.0));
+        b.add_control_input(y.node, x.node);
+        let devices = DeviceSet::local(2, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        let (parts, stats) = partition(&b.graph, &PartitionOptions::default(), "").unwrap();
+        assert_eq!(stats.transfers, 1);
+        // dst partition's y must have a control input on the recv node.
+        let dst = parts.iter().find(|p| p.device.ends_with("cpu:1")).unwrap();
+        let yn = dst.graph.find("Const_1").or(dst.graph.find("Const")).unwrap();
+        assert!(!dst.graph.node(yn).control_inputs.is_empty());
+    }
+
+    #[test]
+    fn compression_flag_set_on_cross_task_edges() {
+        // Build a graph placed across two *tasks*.
+        let mut b = GraphBuilder::new();
+        let x = b.with_device("/job:worker/task:0", |b| b.scalar(1.0));
+        let _y = b.with_device("/job:worker/task:1", |b| b.identity(x));
+        use crate::device::{Device, DeviceSpec};
+        use std::sync::Arc;
+        let devices = DeviceSet::new(vec![
+            Arc::new(Device::new(DeviceSpec::worker_cpu(0, 0), 1)),
+            Arc::new(Device::new(DeviceSpec::worker_cpu(1, 0), 1)),
+        ]);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        let (parts, stats) = partition(&b.graph, &PartitionOptions::default(), "").unwrap();
+        assert_eq!(stats.transfers, 1);
+        assert_eq!(stats.compressed_transfers, 1);
+        // The Send node carries compress=true.
+        let src = parts.iter().find(|p| p.device.contains("task:0")).unwrap();
+        let send = src.graph.nodes.iter().find(|n| n.op == "_Send").unwrap();
+        assert!(send.attrs.get("compress").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn same_task_edges_not_compressed_by_default() {
+        let g = two_device_graph();
+        let (_, stats) = partition(&g, &PartitionOptions::default(), "").unwrap();
+        assert_eq!(stats.compressed_transfers, 0);
+    }
+
+    #[test]
+    fn step_prefix_namespaces_keys() {
+        let g = two_device_graph();
+        let (parts, _) = partition(&g, &PartitionOptions::default(), "step:7;").unwrap();
+        let send = parts
+            .iter()
+            .flat_map(|p| p.graph.nodes.iter())
+            .find(|n| n.op == "_Send")
+            .unwrap();
+        assert!(send.attrs.get("key").unwrap().as_str().unwrap().starts_with("step:7;"));
+    }
+}

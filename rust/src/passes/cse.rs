@@ -1,0 +1,232 @@
+//! §5.1 Common subexpression elimination: "a common subexpression pass
+//! similar to the algorithm described by Click that runs over the
+//! computation graph and canonicalizes multiple copies of operations with
+//! identical inputs and operation types to just a single one of these
+//! nodes, and redirects graph edges appropriately."
+//!
+//! Value-numbering over topological order. Stateful ops (Variables, queue
+//! ops, random ops, Send/Recv) are never merged; nodes with device
+//! constraints merge only with nodes constrained identically.
+
+use crate::error::Result;
+use crate::graph::{AttrValue, Graph, NodeId};
+use crate::ops;
+use std::collections::HashMap;
+
+/// Statistics from one CSE run.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct CseStats {
+    pub nodes_before: usize,
+    pub nodes_removed: usize,
+}
+
+/// Run CSE in place: rewrites edges toward canonical nodes and drops the
+/// duplicates. Returns the rewritten graph (pruning removes the dead
+/// copies) and stats.
+pub fn common_subexpression_elimination(graph: &Graph) -> Result<(Graph, CseStats)> {
+    let order = graph.topo_order()?;
+    // canonical[n] = representative for n.
+    let mut canonical: Vec<NodeId> = graph.ids().collect();
+    // value number key -> representative
+    let mut table: HashMap<String, NodeId> = HashMap::new();
+
+    for id in &order {
+        let id = *id;
+        let n = graph.node(id);
+        let stateful = ops::lookup(&n.op).map(|d| d.stateful).unwrap_or(true);
+        if stateful || n.op == "Placeholder" || n.op.starts_with('_') {
+            continue;
+        }
+        // Key: op + canonicalized inputs + attrs + device constraint.
+        let mut key = String::with_capacity(64);
+        key.push_str(&n.op);
+        key.push('(');
+        for e in &n.inputs {
+            key.push_str(&format!("{}:{},", canonical[e.node.0].0, e.port));
+        }
+        key.push(')');
+        for c in &n.control_inputs {
+            key.push_str(&format!("^{},", canonical[c.0].0));
+        }
+        key.push('[');
+        for (k, v) in &n.attrs {
+            key.push_str(k);
+            key.push('=');
+            attr_fingerprint(v, &mut key);
+            key.push(',');
+        }
+        key.push(']');
+        key.push('@');
+        key.push_str(&n.requested_device);
+
+        match table.get(&key) {
+            Some(&rep) => canonical[id.0] = rep,
+            None => {
+                table.insert(key, id);
+            }
+        }
+    }
+
+    // Rewrite a copy of the graph with edges pointing at representatives,
+    // then prune unreachable duplicates.
+    let mut rewritten = graph.clone();
+    for id in rewritten.ids().collect::<Vec<_>>() {
+        let inputs: Vec<_> = rewritten
+            .node(id)
+            .inputs
+            .iter()
+            .map(|e| crate::graph::Endpoint::new(canonical[e.node.0], e.port))
+            .collect();
+        let controls: Vec<_> =
+            rewritten.node(id).control_inputs.iter().map(|c| canonical[c.0]).collect();
+        let n = rewritten.node_mut(id);
+        n.inputs = inputs;
+        n.control_inputs = controls;
+    }
+    // Keep only nodes that are their own canonical representative.
+    let keep: std::collections::HashSet<NodeId> =
+        graph.ids().filter(|id| canonical[id.0] == *id).collect();
+    let removed = graph.len() - keep.len();
+    let (pruned, _) = rewritten.subgraph(&keep);
+    Ok((pruned, CseStats { nodes_before: graph.len(), nodes_removed: removed }))
+}
+
+fn attr_fingerprint(v: &AttrValue, out: &mut String) {
+    use std::fmt::Write;
+    match v {
+        AttrValue::I64(x) => {
+            let _ = write!(out, "i{x}");
+        }
+        AttrValue::F32(x) => {
+            let _ = write!(out, "f{}", x.to_bits());
+        }
+        AttrValue::Bool(x) => {
+            let _ = write!(out, "b{x}");
+        }
+        AttrValue::Str(s) => {
+            let _ = write!(out, "s{s}");
+        }
+        AttrValue::Type(t) => {
+            let _ = write!(out, "t{t}");
+        }
+        AttrValue::Shape(s) => {
+            let _ = write!(out, "S{s}");
+        }
+        AttrValue::Tensor(t) => {
+            // Fingerprint contents: constants with equal values merge.
+            let _ = write!(out, "T{}{}", t.dtype(), t.shape());
+            if let Ok(v) = t.as_f32() {
+                for x in v.iter().take(64) {
+                    let _ = write!(out, ",{}", x.to_bits());
+                }
+                let _ = write!(out, ";n{}", v.len());
+            } else {
+                // Non-f32 constants: conservative — unique key.
+                let _ = write!(out, "?{:p}", t.data() as *const _);
+            }
+        }
+        AttrValue::ListI64(xs) => {
+            let _ = write!(out, "LI{xs:?}");
+        }
+        AttrValue::ListStr(xs) => {
+            let _ = write!(out, "LS{xs:?}");
+        }
+        AttrValue::ListType(xs) => {
+            let _ = write!(out, "LT{xs:?}");
+        }
+        AttrValue::ListShape(xs) => {
+            let _ = write!(out, "Lh{}", xs.len());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn merges_identical_subexpressions() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", crate::tensor::DType::F32).unwrap();
+        // Two layers of abstraction both computed x*x (the paper's
+        // motivating case: redundancy from layered client code).
+        let sq1 = b.mul(x, x);
+        let sq2 = b.mul(x, x);
+        let _ = b.add(sq1, sq2);
+        let (g, stats) = common_subexpression_elimination(&b.graph).unwrap();
+        assert_eq!(stats.nodes_removed, 1);
+        assert_eq!(g.len(), b.graph.len() - 1);
+        // Add must now read the same Mul twice.
+        let add = g.nodes.iter().find(|n| n.op == "Add").unwrap();
+        assert_eq!(add.inputs[0].node, add.inputs[1].node);
+    }
+
+    #[test]
+    fn cascading_merges() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", crate::tensor::DType::F32).unwrap();
+        // Duplicate chains: neg(neg(x)) twice -> should collapse fully.
+        let a1 = b.neg(x);
+        let a2 = b.neg(a1);
+        let b1 = b.neg(x);
+        let b2 = b.neg(b1);
+        let _ = b.add(a2, b2);
+        let (_, stats) = common_subexpression_elimination(&b.graph).unwrap();
+        assert_eq!(stats.nodes_removed, 2);
+    }
+
+    #[test]
+    fn identical_constants_merge() {
+        let mut b = GraphBuilder::new();
+        let c1 = b.scalar(3.0);
+        let c2 = b.scalar(3.0);
+        let c3 = b.scalar(4.0);
+        let s = b.add(c1, c2);
+        let _ = b.add(s, c3);
+        let (_, stats) = common_subexpression_elimination(&b.graph).unwrap();
+        assert_eq!(stats.nodes_removed, 1); // only the duplicate 3.0
+    }
+
+    #[test]
+    fn stateful_ops_never_merged() {
+        let mut b = GraphBuilder::new();
+        let v1 = b.variable("v1", Tensor::scalar_f32(0.0)).unwrap();
+        let v2 = b.variable("v2", Tensor::scalar_f32(0.0)).unwrap();
+        let _ = b.add(v1, v2);
+        let before = b.graph.len();
+        let (g, stats) = common_subexpression_elimination(&b.graph).unwrap();
+        // The two identical init constants (0.0) may merge; Variables and
+        // Assigns must not.
+        assert_eq!(
+            g.nodes.iter().filter(|n| n.op == "Variable").count(),
+            2,
+            "variables merged!"
+        );
+        assert_eq!(g.nodes.iter().filter(|n| n.op == "Assign").count(), 2);
+        assert!(stats.nodes_removed <= before - 6);
+    }
+
+    #[test]
+    fn different_attrs_not_merged() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", crate::tensor::DType::F32).unwrap();
+        let t1 = b.matmul_t(x, x, false, false);
+        let t2 = b.matmul_t(x, x, true, false);
+        let _ = b.add(t1, t2);
+        let (_, stats) = common_subexpression_elimination(&b.graph).unwrap();
+        assert_eq!(stats.nodes_removed, 0);
+    }
+
+    #[test]
+    fn different_device_constraints_not_merged() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", crate::tensor::DType::F32).unwrap();
+        let a = b.with_device("/device:cpu:0", |b| b.neg(x));
+        let c = b.with_device("/device:cpu:1", |b| b.neg(x));
+        let _ = b.add(a, c);
+        let (_, stats) = common_subexpression_elimination(&b.graph).unwrap();
+        assert_eq!(stats.nodes_removed, 0);
+    }
+}

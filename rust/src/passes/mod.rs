@@ -1,0 +1,7 @@
+//! Graph optimization passes (§5).
+
+pub mod cse;
+pub mod schedule;
+
+pub use cse::common_subexpression_elimination;
+pub use schedule::{schedule_recvs, schedule_recvs_global};

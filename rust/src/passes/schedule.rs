@@ -1,0 +1,401 @@
+//! §5.2 Receive-node scheduling: "if no precautions are taken, [Receive]
+//! nodes may start much earlier than necessary, possibly all at once when
+//! execution starts. By performing an as-soon-as-possible/as-late-as-
+//! possible (ASAP/ALAP) calculation … we analyze the critical paths of
+//! graphs, in order to estimate when to start the Receive nodes. We then
+//! insert control edges with the aim of delaying the start of these nodes
+//! until just before their results are needed."
+//!
+//! Implementation: compute ASAP and ALAP times over the (partitioned,
+//! per-device) graph using the cost model; for each Recv with slack
+//! (ALAP − ASAP > 0), pick a *gate*: a node whose completion time is
+//! closest to (but not after) the Recv's ALAP start, and add a control
+//! edge gate → Recv. Delaying the Recv shortens the window its tensor is
+//! resident, cutting peak memory (experiment E12 measures this).
+
+use crate::error::Result;
+use crate::graph::{Graph, NodeId};
+use crate::placement::CostModel;
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct ScheduleStats {
+    pub recvs_considered: usize,
+    pub control_edges_added: usize,
+}
+
+/// Schedule every partition's Recvs *globally*: gating decisions must see
+/// the cross-partition Send→Recv pairing, or a gate can wait (through the
+/// other device) on a tensor sent after the gated Recv — distributed
+/// deadlock. Builds the combined dependency graph, then gates each Recv on
+/// a same-partition node that is provably not downstream globally.
+pub fn schedule_recvs_global(
+    parts: &mut [crate::partition::Partition],
+    cost: &CostModel,
+) -> Result<ScheduleStats> {
+    // ---- combined graph: nodes of all partitions + send→recv edges ------
+    let offsets: Vec<usize> = parts
+        .iter()
+        .scan(0usize, |acc, p| {
+            let o = *acc;
+            *acc += p.graph.len();
+            Some(o)
+        })
+        .collect();
+    let total: usize = parts.iter().map(|p| p.graph.len()).sum();
+    // preds/succs in combined index space.
+    let mut succs: Vec<Vec<usize>> = vec![Vec::new(); total];
+    let mut key_send: HashMap<String, usize> = HashMap::new();
+    let mut key_recv: HashMap<String, usize> = HashMap::new();
+    for (pi, p) in parts.iter().enumerate() {
+        let off = offsets[pi];
+        for id in p.graph.ids() {
+            let n = p.graph.node(id);
+            for e in &n.inputs {
+                if p.graph.node(e.node).op != "NextIteration" {
+                    succs[off + e.node.0].push(off + id.0);
+                }
+            }
+            for c in &n.control_inputs {
+                if p.graph.node(*c).op != "NextIteration" {
+                    succs[off + c.0].push(off + id.0);
+                }
+            }
+            if n.op == "_Send" {
+                key_send.insert(n.attr("key")?.as_str()?.to_string(), off + id.0);
+            } else if n.op == "_Recv" {
+                key_recv.insert(n.attr("key")?.as_str()?.to_string(), off + id.0);
+            }
+        }
+    }
+    for (key, &s) in &key_send {
+        if let Some(&r) = key_recv.get(key) {
+            succs[s].push(r);
+        }
+    }
+
+    let mut stats = ScheduleStats::default();
+    // Per-partition ASAP finish estimates (cheap, local).
+    for pi in 0..parts.len() {
+        let recvs: Vec<NodeId> = parts[pi]
+            .graph
+            .ids()
+            .filter(|&id| parts[pi].graph.node(id).op == "_Recv")
+            .collect();
+        if recvs.is_empty() {
+            continue;
+        }
+        let order = parts[pi].graph.topo_order()?;
+        let devices: Vec<String> = parts[pi]
+            .graph
+            .ids()
+            .map(|id| parts[pi].graph.node(id).assigned_device.clone().unwrap_or_default())
+            .collect();
+        let mut asap = vec![0f64; parts[pi].graph.len()];
+        for &id in &order {
+            let n = parts[pi].graph.node(id);
+            let ready = n
+                .inputs
+                .iter()
+                .map(|e| e.node)
+                .chain(n.control_inputs.iter().copied())
+                .map(|p| asap[p.0])
+                .fold(0f64, f64::max);
+            asap[id.0] = ready + cost.node_cost_us(n, &devices[id.0]);
+        }
+        let makespan = asap.iter().cloned().fold(0f64, f64::max);
+        let fanout = parts[pi].graph.fanout();
+        let mut alap = vec![makespan; parts[pi].graph.len()];
+        for &id in order.iter().rev() {
+            let ss: Vec<NodeId> = fanout.data[id.0]
+                .iter()
+                .map(|&(c, _)| c)
+                .chain(fanout.control[id.0].iter().copied())
+                .collect();
+            if !ss.is_empty() {
+                alap[id.0] = ss
+                    .iter()
+                    .map(|s| alap[s.0] - cost.node_cost_us(parts[pi].graph.node(*s), &devices[s.0]))
+                    .fold(f64::INFINITY, f64::min);
+            }
+        }
+        for recv in recvs {
+            stats.recvs_considered += 1;
+            let rcost = cost.node_cost_us(parts[pi].graph.node(recv), &devices[recv.0]);
+            let slack = (alap[recv.0] - rcost) - (asap[recv.0] - rcost);
+            if slack <= 1.0 {
+                continue;
+            }
+            // Global downstream set of this recv over the combined graph
+            // (including edges added in previous iterations).
+            let gidx = offsets[pi] + recv.0;
+            let mut downstream = std::collections::HashSet::new();
+            let mut stack = vec![gidx];
+            while let Some(cur) = stack.pop() {
+                if !downstream.insert(cur) {
+                    continue;
+                }
+                for &s in &succs[cur] {
+                    stack.push(s);
+                }
+            }
+            // Best same-partition gate: latest ASAP finish ≤ recv's ALAP
+            // start, not globally downstream of the recv.
+            let alap_start = alap[recv.0] - rcost;
+            let mut best: Option<(f64, NodeId)> = None;
+            for id in parts[pi].graph.ids() {
+                if id == recv
+                    || parts[pi].graph.node(id).op == "_Recv"
+                    || downstream.contains(&(offsets[pi] + id.0))
+                {
+                    continue;
+                }
+                let f = asap[id.0];
+                if f <= alap_start && f > asap[recv.0] - rcost {
+                    match best {
+                        Some((bf, _)) if bf >= f => {}
+                        _ => best = Some((f, id)),
+                    }
+                }
+            }
+            if let Some((_, gate)) = best {
+                let node = parts[pi].graph.node_mut(recv);
+                if !node.control_inputs.contains(&gate) {
+                    node.control_inputs.push(gate);
+                    succs[offsets[pi] + gate.0].push(gidx);
+                    stats.control_edges_added += 1;
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Add delaying control edges to `_Recv` nodes in a per-device partition
+/// (single-partition variant; safe only when no other partition exists —
+/// the session/master call [`schedule_recvs_global`]).
+pub fn schedule_recvs(graph: &mut Graph, cost: &CostModel) -> Result<ScheduleStats> {
+    let order = graph.topo_order()?;
+    let n = graph.len();
+    let devices: Vec<String> = graph
+        .ids()
+        .map(|id| graph.node(id).assigned_device.clone().unwrap_or_default())
+        .collect();
+    let device = |id: NodeId| -> &str { &devices[id.0] };
+
+    // ASAP: earliest start respecting deps.
+    let mut asap_finish = vec![0f64; n];
+    for &id in &order {
+        let node = graph.node(id);
+        let ready = node
+            .inputs
+            .iter()
+            .map(|e| e.node)
+            .chain(node.control_inputs.iter().copied())
+            .map(|p| asap_finish[p.0])
+            .fold(0f64, f64::max);
+        asap_finish[id.0] = ready + cost.node_cost_us(node, &device(id));
+    }
+    let makespan = asap_finish.iter().cloned().fold(0f64, f64::max);
+
+    // ALAP: latest finish that doesn't stretch the makespan.
+    let fanout = graph.fanout();
+    let mut alap_finish = vec![makespan; n];
+    for &id in order.iter().rev() {
+        let node = graph.node(id);
+        let succs: Vec<NodeId> = fanout.data[id.0]
+            .iter()
+            .map(|&(c, _)| c)
+            .chain(fanout.control[id.0].iter().copied())
+            .collect();
+        if !succs.is_empty() {
+            let latest = succs
+                .iter()
+                .map(|s| alap_finish[s.0] - cost.node_cost_us(graph.node(*s), &device(*s)))
+                .fold(f64::INFINITY, f64::min);
+            alap_finish[id.0] = latest;
+        }
+        let _ = node;
+    }
+
+    let mut stats = ScheduleStats::default();
+    // For each Recv with slack, gate it on the latest-finishing node whose
+    // ASAP finish ≤ the Recv's ALAP start (avoiding cycles: gate must not
+    // be downstream of the Recv).
+    let recvs: Vec<NodeId> =
+        graph.ids().filter(|&id| graph.node(id).op == "_Recv").collect();
+    for recv in recvs {
+        stats.recvs_considered += 1;
+        let recv_cost = cost.node_cost_us(graph.node(recv), &device(recv));
+        let alap_start = alap_finish[recv.0] - recv_cost;
+        let slack = alap_start - (asap_finish[recv.0] - recv_cost);
+        if slack <= 1.0 {
+            continue; // on the critical path; leave it alone
+        }
+        // Downstream set of recv, recomputed against the CURRENT graph —
+        // control edges added for earlier recvs create new paths, and a
+        // stale fanout here can produce gating cycles.
+        let cur_fanout = graph.fanout();
+        let mut downstream = std::collections::HashSet::new();
+        let mut stack = vec![recv];
+        while let Some(cur) = stack.pop() {
+            if !downstream.insert(cur) {
+                continue;
+            }
+            for &(c, _) in &cur_fanout.data[cur.0] {
+                stack.push(c);
+            }
+            for &c in &cur_fanout.control[cur.0] {
+                stack.push(c);
+            }
+        }
+        let mut best: Option<(f64, NodeId)> = None;
+        for id in graph.ids() {
+            if downstream.contains(&id) || id == recv || graph.node(id).op == "_Recv" {
+                continue;
+            }
+            let f = asap_finish[id.0];
+            if f <= alap_start {
+                match best {
+                    Some((bf, _)) if bf >= f => {}
+                    _ => best = Some((f, id)),
+                }
+            }
+        }
+        if let Some((gate_finish, gate)) = best {
+            // Only useful if the gate actually delays the recv.
+            if gate_finish > asap_finish[recv.0] - recv_cost {
+                let node = graph.node_mut(recv);
+                if !node.control_inputs.contains(&gate) {
+                    node.control_inputs.push(gate);
+                    stats.control_edges_added += 1;
+                }
+            }
+        }
+    }
+    Ok(stats)
+}
+
+/// Estimate peak resident tensor bytes of a partition under a serial
+/// schedule — the measurable that §5.2 optimizes. Used by E12 to compare
+/// ASAP (no pass) vs scheduled graphs.
+pub fn estimate_peak_memory(graph: &Graph, cost: &CostModel) -> Result<f64> {
+    let order = graph.topo_order()?;
+    let fanout = graph.fanout();
+    // Last consumer position of each node's outputs.
+    let pos: HashMap<NodeId, usize> = order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+    let mut last_use: Vec<usize> = graph
+        .ids()
+        .map(|id| {
+            fanout.data[id.0]
+                .iter()
+                .map(|&(c, _)| pos[&c])
+                .max()
+                .unwrap_or(pos[&id])
+        })
+        .collect();
+    // _Recv values materialize at their schedule position; with added
+    // control edges the topo order naturally places them later.
+    let mut live = 0f64;
+    let mut peak = 0f64;
+    let mut expiring: HashMap<usize, Vec<NodeId>> = HashMap::new();
+    for (i, &id) in order.iter().enumerate() {
+        live += cost.output_bytes(graph.node(id));
+        peak = peak.max(live);
+        let lu = last_use[id.0].max(i);
+        expiring.entry(lu).or_default().push(id);
+        if let Some(done) = expiring.remove(&i) {
+            for d in done {
+                live -= cost.output_bytes(graph.node(d));
+            }
+        }
+        last_use[id.0] = lu;
+    }
+    Ok(peak)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{AttrValue, Node};
+    use std::collections::BTreeMap;
+
+    /// Build a partition-like graph: N recvs feeding a serial chain, so
+    /// early recvs have large slack.
+    fn recv_chain(n: usize) -> Graph {
+        let mut g = Graph::new();
+        let mut prev: Option<NodeId> = None;
+        for i in 0..n {
+            let recv = g
+                .add(Node {
+                    name: format!("_recv/x{i}"),
+                    op: "_Recv".into(),
+                    inputs: vec![],
+                    control_inputs: vec![],
+                    attrs: {
+                        let mut a = BTreeMap::new();
+                        a.insert("key".into(), AttrValue::Str(format!("k{i}")));
+                        a
+                    },
+                    requested_device: String::new(),
+                    assigned_device: Some("/d0".into()),
+                })
+                .unwrap();
+            let inputs = match prev {
+                Some(p) => vec![crate::graph::Endpoint::new(p, 0), recv.into()],
+                None => vec![recv.into(), recv.into()],
+            };
+            let step = g
+                .add(Node {
+                    name: format!("mm{i}"),
+                    op: "MatMul".into(),
+                    inputs,
+                    control_inputs: vec![],
+                    attrs: BTreeMap::new(),
+                    requested_device: String::new(),
+                    assigned_device: Some("/d0".into()),
+                })
+                .unwrap();
+            prev = Some(step);
+        }
+        g
+    }
+
+    #[test]
+    fn late_recvs_get_gated() {
+        let mut g = recv_chain(6);
+        let cost = CostModel::new();
+        let stats = schedule_recvs(&mut g, &cost).unwrap();
+        assert_eq!(stats.recvs_considered, 6);
+        assert!(
+            stats.control_edges_added >= 3,
+            "later recvs have slack and should be delayed: {stats:?}"
+        );
+        // Graph must remain acyclic.
+        assert!(g.topo_order().is_ok());
+    }
+
+    #[test]
+    fn scheduling_reduces_estimated_peak_memory() {
+        let baseline = recv_chain(8);
+        let cost = CostModel::new();
+        let peak_before = estimate_peak_memory(&baseline, &cost).unwrap();
+        let mut scheduled = recv_chain(8);
+        schedule_recvs(&mut scheduled, &cost).unwrap();
+        let peak_after = estimate_peak_memory(&scheduled, &cost).unwrap();
+        assert!(
+            peak_after <= peak_before,
+            "peak {peak_after} should not exceed ASAP peak {peak_before}"
+        );
+    }
+
+    #[test]
+    fn no_recvs_no_changes() {
+        let mut b = crate::ops::builder::GraphBuilder::new();
+        let x = b.scalar(1.0);
+        b.neg(x);
+        let stats = schedule_recvs(&mut b.graph, &CostModel::new()).unwrap();
+        assert_eq!(stats.recvs_considered, 0);
+        assert_eq!(stats.control_edges_added, 0);
+    }
+}

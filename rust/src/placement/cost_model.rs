@@ -1,0 +1,233 @@
+//! The placement cost model (§3.2.1): "estimates of the sizes (in bytes)
+//! of the input and output tensors for each graph node, along with
+//! estimates of the computation time required for each node … either
+//! statically estimated based on heuristics associated with different
+//! operation types, or measured based on an actual set of placement
+//! decisions for earlier executions of the graph."
+//!
+//! Both modes are implemented: `static` heuristics per Table-1 category,
+//! and `update_from_trace` which folds real kernel timings from the §9.2
+//! tracer back into the model.
+
+use crate::graph::{Graph, Node, NodeId};
+use crate::ops::Category;
+use crate::tracing_tools::Event;
+use std::collections::HashMap;
+
+/// Relative per-device-type speeds and link parameters. On this testbed
+/// all devices are CPU threads, so heterogeneity is *configured*: the
+/// Fig-8 model-parallel experiment, e.g., gives devices distinct speeds to
+/// reproduce a CPU+GPU mix.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Multiplier on compute cost per device name (smaller = faster).
+    device_speed: HashMap<String, f64>,
+    /// Fallback speed for unlisted devices.
+    default_speed: f64,
+    /// Per-device-pair (latency µs, µs per KB). Same-device = free.
+    link_latency_us: f64,
+    link_us_per_kb: f64,
+    /// Cross-task links are slower (TCP vs in-memory).
+    cross_task_latency_us: f64,
+    cross_task_us_per_kb: f64,
+    /// Measured execution times, µs, keyed by node name (overrides
+    /// heuristics — the paper's "measured" mode).
+    measured_us: HashMap<String, f64>,
+    /// Estimated output bytes per node name (measured mode).
+    measured_bytes: HashMap<String, f64>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            device_speed: HashMap::new(),
+            default_speed: 1.0,
+            link_latency_us: 2.0,
+            link_us_per_kb: 0.05,
+            cross_task_latency_us: 100.0,
+            cross_task_us_per_kb: 1.0,
+            measured_us: HashMap::new(),
+            measured_bytes: HashMap::new(),
+        }
+    }
+}
+
+impl CostModel {
+    pub fn new() -> CostModel {
+        CostModel::default()
+    }
+
+    /// Configure a device's relative speed (0.5 = 2× faster than default).
+    pub fn set_device_speed(&mut self, device: &str, speed: f64) {
+        self.device_speed.insert(device.to_string(), speed);
+    }
+
+    pub fn device_speed(&self, device: &str) -> f64 {
+        self.device_speed.get(device).copied().unwrap_or(self.default_speed)
+    }
+
+    /// Static heuristic cost in µs for one node (before device speed).
+    pub fn static_node_cost_us(&self, node: &Node) -> f64 {
+        let category = crate::ops::lookup(&node.op).map(|d| d.category).unwrap_or(Category::Internal);
+        match node.op.as_str() {
+            "MatMul" | "BatchMatMul" => 200.0,
+            "Convolution2D" | "Conv2DBackpropInput" | "Conv2DBackpropFilter" => 500.0,
+            "XlaCall" => 1000.0,
+            "MatrixInverse" | "MatrixDeterminant" => 150.0,
+            "SoftmaxCrossEntropyWithLogits" | "SoftMax" | "LogSoftmax" => 30.0,
+            _ => match category {
+                Category::ElementWise | Category::NeuralNet => 10.0,
+                Category::Array => 5.0,
+                Category::Matrix => 100.0,
+                Category::Stateful => 5.0,
+                Category::Checkpointing => 1000.0,
+                Category::QueueSync => 5.0,
+                Category::ControlFlow | Category::Internal => 1.0,
+            },
+        }
+    }
+
+    /// Cost of running `node` on `device`, µs. Measured value wins.
+    pub fn node_cost_us(&self, node: &Node, device: &str) -> f64 {
+        let base = self
+            .measured_us
+            .get(&node.name)
+            .copied()
+            .unwrap_or_else(|| self.static_node_cost_us(node));
+        base * self.device_speed(device)
+    }
+
+    /// Estimated output bytes of a node (for transfer costs).
+    pub fn output_bytes(&self, node: &Node) -> f64 {
+        if let Some(&b) = self.measured_bytes.get(&node.name) {
+            return b;
+        }
+        // Const/Variable: the attr tensor/shape tells us exactly.
+        if let Some(v) = node.attrs.get("value").and_then(|a| a.as_tensor().ok()) {
+            return v.size_bytes() as f64;
+        }
+        if let Some(s) = node.attrs.get("shape").and_then(|a| a.as_shape().ok()) {
+            return (s.num_elements() * 4) as f64;
+        }
+        4096.0 // order-of-magnitude default
+    }
+
+    /// Transfer cost in µs of moving `bytes` from `src` to `dst` device.
+    pub fn transfer_cost_us(&self, bytes: f64, src: &str, dst: &str) -> f64 {
+        if src == dst {
+            return 0.0;
+        }
+        let cross_task = task_of(src) != task_of(dst);
+        let (lat, per_kb) = if cross_task {
+            (self.cross_task_latency_us, self.cross_task_us_per_kb)
+        } else {
+            (self.link_latency_us, self.link_us_per_kb)
+        };
+        lat + per_kb * bytes / 1024.0
+    }
+
+    /// Fold measured kernel timings back in (§3.2.1 "measured based on an
+    /// actual set of placement decisions for earlier executions").
+    pub fn update_from_trace(&mut self, events: &[Event]) {
+        // Average duration per node name.
+        let mut sums: HashMap<&str, (f64, f64)> = HashMap::new();
+        for ev in events {
+            let e = sums.entry(&ev.name).or_default();
+            e.0 += ev.dur_us as f64;
+            e.1 += 1.0;
+        }
+        for (name, (total, n)) in sums {
+            self.measured_us.insert(name.to_string(), total / n);
+        }
+    }
+
+    /// Record a measured output size.
+    pub fn record_output_bytes(&mut self, node_name: &str, bytes: f64) {
+        self.measured_bytes.insert(node_name.to_string(), bytes);
+    }
+
+    pub fn has_measurements(&self) -> bool {
+        !self.measured_us.is_empty()
+    }
+
+    /// Estimated serial cost of a whole graph on one device (bench helper).
+    pub fn graph_cost_us(&self, graph: &Graph, device: &str) -> f64 {
+        graph.ids().map(|id: NodeId| self.node_cost_us(graph.node(id), device)).sum()
+    }
+}
+
+/// "/job:w/task:3/device:cpu:0" -> "/job:w/task:3"
+fn task_of(device: &str) -> &str {
+    match device.find("/device:") {
+        Some(i) => &device[..i],
+        None => device,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+
+    #[test]
+    fn static_costs_ordered_sensibly() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let mm = b.matmul(x, x);
+        let add = b.add(x, x);
+        let cm = CostModel::new();
+        let g = &b.graph;
+        assert!(
+            cm.static_node_cost_us(g.node(mm.node)) > cm.static_node_cost_us(g.node(add.node))
+        );
+    }
+
+    #[test]
+    fn device_speed_scales_cost() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let mm = b.matmul(x, x);
+        let mut cm = CostModel::new();
+        cm.set_device_speed("/fast", 0.25);
+        let n = b.graph.node(mm.node);
+        assert!(cm.node_cost_us(n, "/fast") < cm.node_cost_us(n, "/other"));
+    }
+
+    #[test]
+    fn transfer_costs() {
+        let cm = CostModel::new();
+        let same = cm.transfer_cost_us(1e6, "/job:a/task:0/device:cpu:0", "/job:a/task:0/device:cpu:0");
+        assert_eq!(same, 0.0);
+        let local = cm.transfer_cost_us(1e6, "/job:a/task:0/device:cpu:0", "/job:a/task:0/device:cpu:1");
+        let remote = cm.transfer_cost_us(1e6, "/job:a/task:0/device:cpu:0", "/job:a/task:1/device:cpu:0");
+        assert!(local > 0.0);
+        assert!(remote > local, "cross-task must cost more: {remote} vs {local}");
+    }
+
+    #[test]
+    fn measured_overrides_static() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let mm = b.matmul(x, x);
+        let name = b.graph.node(mm.node).name.clone();
+        let mut cm = CostModel::new();
+        cm.update_from_trace(&[Event {
+            name: name.clone(),
+            op: "MatMul".into(),
+            device: "d".into(),
+            thread: 0,
+            start_us: 0,
+            dur_us: 12345,
+        }]);
+        assert!(cm.has_measurements());
+        assert_eq!(cm.node_cost_us(b.graph.node(mm.node), "/d"), 12345.0);
+    }
+
+    #[test]
+    fn const_output_bytes_exact() {
+        let mut b = GraphBuilder::new();
+        let c = b.constant(crate::tensor::Tensor::from_f32(vec![10, 10], vec![0.0; 100]).unwrap());
+        let cm = CostModel::new();
+        assert_eq!(cm.output_bytes(b.graph.node(c.node)), 400.0);
+    }
+}

@@ -1,0 +1,382 @@
+//! Node placement (§3.2.1 + §4.3).
+//!
+//! "The placement algorithm first runs a simulated execution of the graph
+//! … For each node that is reached in this traversal, the set of feasible
+//! devices is considered … For nodes with multiple feasible devices, the
+//! placement algorithm uses a greedy heuristic that examines the effects
+//! on the completion time of the node of placing the node on each possible
+//! device. … The device where the node's operation would finish the
+//! soonest is selected."
+//!
+//! §4.3 constraints: partial device specs per node, plus colocation via
+//! union-find ("we first compute the feasible set of devices for each
+//! node, and then use union-find on the graph of colocation constraints to
+//! compute the graph components that must be placed together").
+
+pub mod cost_model;
+
+pub use cost_model::CostModel;
+
+use crate::device::{DeviceSet, PartialDeviceSpec};
+use crate::error::{Result, Status};
+use crate::graph::Graph;
+#[allow(unused_imports)]
+use crate::graph::NodeId;
+use crate::kernels::has_kernel;
+use std::collections::HashMap;
+
+/// Union-find over node indices.
+pub struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n).collect() }
+    }
+
+    pub fn find(&mut self, x: usize) -> usize {
+        if self.parent[x] != x {
+            let root = self.find(self.parent[x]);
+            self.parent[x] = root;
+        }
+        self.parent[x]
+    }
+
+    pub fn union(&mut self, a: usize, b: usize) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra != rb {
+            self.parent[rb] = ra;
+        }
+    }
+}
+
+/// Ops that must be colocated with the resource produced by their input 0
+/// (variable/queue refs cannot cross device boundaries).
+fn ref_colocated(op: &str) -> bool {
+    matches!(
+        op,
+        "Assign"
+            | "AssignAdd"
+            | "AssignSub"
+            | "CountUpTo"
+            | "ApplyGradientDescent"
+            | "ApplyMomentum"
+            | "ApplyAdagrad"
+            | "ApplyAdam"
+            | "Enqueue"
+            | "Dequeue"
+            | "QueueClose"
+            | "QueueSize"
+    )
+}
+
+/// Compute colocation groups (§4.3): explicit `_class=loc:@x` constraints,
+/// ref edges, and whole loop frames (this implementation colocates each
+/// control-flow frame on one device; see DESIGN.md §limitations — the
+/// paper's distributed-loop control nodes are not reproduced).
+pub fn colocation_groups(graph: &Graph) -> Result<UnionFind> {
+    let mut uf = UnionFind::new(graph.len());
+    // loc:@ constraints.
+    for id in graph.ids() {
+        let n = graph.node(id);
+        if let Some(classes) = n.attrs.get("_class").and_then(|a| a.as_list_str().ok()) {
+            for c in classes {
+                if let Some(target) = c.strip_prefix("loc:@") {
+                    let t = graph.must_find(target)?;
+                    uf.union(id.0, t.0);
+                }
+            }
+        }
+        // Ref edges.
+        if ref_colocated(&n.op) {
+            if let Some(first) = n.inputs.first() {
+                uf.union(id.0, first.node.0);
+            }
+        }
+    }
+    // Loop frames: every node reachable inside an Enter..Exit region is
+    // glued to its Enter. Frame membership ~ the executor's assignment;
+    // here the cheap approximation: union across every edge that does NOT
+    // cross a frame boundary op — equivalently, union each Enter with its
+    // consumers transitively until Exit.
+    for id in graph.ids() {
+        let n = graph.node(id);
+        if n.op == "Enter" {
+            // BFS forward until Exit nodes.
+            let mut stack = vec![id];
+            let fanout = graph.fanout();
+            let mut seen = std::collections::HashSet::new();
+            while let Some(cur) = stack.pop() {
+                if !seen.insert(cur) {
+                    continue;
+                }
+                uf.union(id.0, cur.0);
+                if graph.node(cur).op == "Exit" {
+                    continue;
+                }
+                for &(consumer, _) in &fanout.data[cur.0] {
+                    stack.push(consumer);
+                }
+                for &consumer in &fanout.control[cur.0] {
+                    stack.push(consumer);
+                }
+            }
+        }
+    }
+    Ok(uf)
+}
+
+/// Statistics returned by the placer (consumed by benches/experiments).
+#[derive(Debug, Default, Clone)]
+pub struct PlacementStats {
+    pub groups: usize,
+    pub per_device: HashMap<String, usize>,
+    pub estimated_makespan_us: f64,
+}
+
+/// Run placement: writes `assigned_device` into every node of `graph`.
+pub fn place(graph: &mut Graph, devices: &DeviceSet, cost: &CostModel) -> Result<PlacementStats> {
+    if devices.is_empty() {
+        return Err(Status::invalid_argument("placement with empty device set"));
+    }
+    let mut uf = colocation_groups(graph)?;
+
+    // Per-group merged constraint + feasible devices.
+    let mut group_constraint: HashMap<usize, PartialDeviceSpec> = HashMap::new();
+    for id in graph.ids() {
+        let n = graph.node(id);
+        let root = uf.find(id.0);
+        let spec = PartialDeviceSpec::parse(&n.requested_device)?;
+        let entry = group_constraint.entry(root).or_insert_with(PartialDeviceSpec::any);
+        *entry = entry.merge(&spec).map_err(|e| {
+            Status::invalid_argument(format!(
+                "conflicting device constraints in colocation group of {:?}: {}",
+                n.name, e.message
+            ))
+        })?;
+    }
+
+    let mut group_feasible: HashMap<usize, Vec<usize>> = HashMap::new();
+    for id in graph.ids() {
+        let root = uf.find(id.0);
+        group_feasible.entry(root).or_insert_with(|| {
+            let spec = &group_constraint[&root];
+            (0..devices.len())
+                .filter(|&d| spec.matches(&devices.get(d).spec))
+                .collect()
+        });
+    }
+    // Kernel feasibility per member (§3.2.1 "a device may not be feasible
+    // if the device does not provide a kernel").
+    for id in graph.ids() {
+        let n = graph.node(id);
+        let root = uf.find(id.0);
+        let feas = group_feasible.get_mut(&root).unwrap();
+        feas.retain(|&d| has_kernel(&n.op, devices.get(d).device_type()));
+        if feas.is_empty() {
+            return Err(Status::invalid_argument(format!(
+                "no feasible device for node {:?} (op {}, constraint {})",
+                n.name, n.op, group_constraint[&root]
+            )));
+        }
+    }
+
+    // ---- greedy simulated execution -----------------------------------
+    let order = graph.topo_order()?;
+    let mut device_free = vec![0f64; devices.len()];
+    let mut finish: Vec<f64> = vec![0.0; graph.len()];
+    let mut group_device: HashMap<usize, usize> = HashMap::new();
+    let mut assigned: Vec<usize> = vec![usize::MAX; graph.len()];
+
+    for id in order {
+        let root = uf.find(id.0);
+        let candidates: Vec<usize> = match group_device.get(&root) {
+            Some(&d) => vec![d], // group already pinned
+            None => group_feasible[&root].clone(),
+        };
+        let node = graph.node(id);
+        let mut best = (f64::INFINITY, candidates[0]);
+        for &d in &candidates {
+            let dname = devices.get(d).name();
+            // Inputs-ready time including §3.2.1 communication costs.
+            let mut ready = 0f64;
+            for e in node.inputs.iter().map(|e| e.node).chain(node.control_inputs.iter().copied())
+            {
+                let src = assigned[e.0];
+                if src == usize::MAX {
+                    continue; // NextIteration back-edge
+                }
+                let t = finish[e.0]
+                    + cost.transfer_cost_us(
+                        cost.output_bytes(graph.node(e)),
+                        &devices.get(src).name(),
+                        &dname,
+                    );
+                ready = ready.max(t);
+            }
+            let completion =
+                device_free[d].max(ready) + cost.node_cost_us(node, &dname);
+            if completion < best.0 {
+                best = (completion, d);
+            }
+        }
+        let (completion, d) = best;
+        assigned[id.0] = d;
+        group_device.insert(root, d);
+        device_free[d] = completion;
+        finish[id.0] = completion;
+    }
+
+    // Write back and collect stats.
+    let mut stats = PlacementStats {
+        groups: group_feasible.len(),
+        per_device: HashMap::new(),
+        estimated_makespan_us: device_free.iter().cloned().fold(0.0, f64::max),
+    };
+    for id in graph.ids() {
+        let name = devices.get(assigned[id.0]).name();
+        *stats.per_device.entry(name.clone()).or_default() += 1;
+        graph.node_mut(id).assigned_device = Some(name);
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn union_find_groups() {
+        let mut uf = UnionFind::new(5);
+        uf.union(0, 1);
+        uf.union(3, 4);
+        assert_eq!(uf.find(0), uf.find(1));
+        assert_ne!(uf.find(1), uf.find(3));
+        uf.union(1, 3);
+        assert_eq!(uf.find(0), uf.find(4));
+    }
+
+    #[test]
+    fn places_all_nodes() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let y = b.scalar(2.0);
+        let _ = b.add(x, y);
+        let devices = DeviceSet::local(2, 1);
+        let stats = place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        assert!(b.graph.nodes.iter().all(|n| n.assigned_device.is_some()));
+        assert_eq!(stats.per_device.values().sum::<usize>(), 3);
+    }
+
+    #[test]
+    fn respects_device_constraint() {
+        let mut b = GraphBuilder::new();
+        let x = b.with_device("/device:cpu:1", |b| b.scalar(1.0));
+        let devices = DeviceSet::local(3, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        assert_eq!(
+            b.graph.node(x.node).assigned_device.as_deref().unwrap(),
+            "/job:localhost/task:0/device:cpu:1"
+        );
+    }
+
+    #[test]
+    fn variable_and_assign_colocated() {
+        let mut b = GraphBuilder::new();
+        let v = b.with_device("/device:cpu:1", |b| {
+            b.variable("v", Tensor::scalar_f32(0.0)).unwrap()
+        });
+        let one = b.scalar(1.0);
+        let asn = b.assign_add(v, one).unwrap();
+        let devices = DeviceSet::local(4, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        let vd = b.graph.node(v.node).assigned_device.clone().unwrap();
+        let ad = b.graph.node(asn).assigned_device.clone().unwrap();
+        assert_eq!(vd, ad);
+        assert!(vd.ends_with("cpu:1"));
+    }
+
+    #[test]
+    fn colocate_attr_respected() {
+        let mut b = GraphBuilder::new();
+        let anchor = b.with_device("/device:cpu:2", |b| b.scalar(1.0));
+        let other = b.scalar(2.0);
+        b.colocate(other.node, anchor.node);
+        let devices = DeviceSet::local(3, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        assert_eq!(
+            b.graph.node(other.node).assigned_device,
+            b.graph.node(anchor.node).assigned_device
+        );
+    }
+
+    #[test]
+    fn conflicting_constraints_rejected() {
+        let mut b = GraphBuilder::new();
+        let a = b.with_device("/device:cpu:0", |b| b.scalar(1.0));
+        let c = b.with_device("/device:cpu:1", |b| b.scalar(2.0));
+        b.colocate(a.node, c.node);
+        let devices = DeviceSet::local(2, 1);
+        assert!(place(&mut b.graph, &devices, &CostModel::new()).is_err());
+    }
+
+    #[test]
+    fn infeasible_constraint_rejected() {
+        let mut b = GraphBuilder::new();
+        b.with_device("/device:gpu:0", |b| b.scalar(1.0));
+        let devices = DeviceSet::local(2, 1); // cpu only
+        assert!(place(&mut b.graph, &devices, &CostModel::new()).is_err());
+    }
+
+    #[test]
+    fn parallel_branches_spread_across_devices() {
+        // Two expensive independent chains + cheap merge: the greedy
+        // simulation should use both devices.
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::from_f32(vec![64, 64], vec![0.1; 4096]).unwrap());
+        let mut l = x;
+        let mut r = x;
+        for _ in 0..4 {
+            l = b.matmul(l, l);
+            r = b.matmul(r, r);
+        }
+        let _out = b.add(l, r);
+        let devices = DeviceSet::local(2, 1);
+        let stats = place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        assert_eq!(stats.per_device.len(), 2, "both devices should be used: {stats:?}");
+    }
+
+    #[test]
+    fn loop_frame_is_colocated() {
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        b.while_loop(
+            "w",
+            vec![zero],
+            |b, v| {
+                let lim = b.scalar(5.0);
+                Ok(b.less(v[0], lim))
+            },
+            |b, v| {
+                let one = b.scalar(1.0);
+                Ok(vec![b.add(v[0], one)])
+            },
+        )
+        .unwrap();
+        let devices = DeviceSet::local(4, 1);
+        place(&mut b.graph, &devices, &CostModel::new()).unwrap();
+        // All control-flow nodes on one device.
+        let loop_devices: std::collections::HashSet<String> = b
+            .graph
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op.as_str(), "Merge" | "Switch" | "Exit" | "NextIteration"))
+            .map(|n| n.assigned_device.clone().unwrap())
+            .collect();
+        assert_eq!(loop_devices.len(), 1, "loop must live on one device");
+    }
+}

@@ -1,0 +1,381 @@
+//! Queues (§4.6): "they allow different portions of the graph to execute
+//! asynchronously … and to hand off data through Enqueue and Dequeue
+//! operations. Enqueue operations can block until space becomes available,
+//! and Dequeue operations can block until a desired minimum number of
+//! elements are available."
+//!
+//! Blocking is expressed continuation-style: the Enqueue/Dequeue *kernels*
+//! are asynchronous (§5.3), so a blocked queue op parks a callback here
+//! instead of tying up an executor thread.
+//!
+//! Two implementations, as in the paper: a FIFO queue and a
+//! `RandomShuffleQueue` ("randomly shuffles its elements within a large
+//! in-memory buffer").
+
+use crate::error::{Result, Status};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// An element is a tuple of tensors (one per queue component).
+pub type Element = Vec<Tensor>;
+
+pub type EnqueueDone = Box<dyn FnOnce(Result<()>) + Send>;
+pub type DequeueDone = Box<dyn FnOnce(Result<Element>) + Send>;
+
+/// Shared handle to a queue resource.
+pub type QueueRef = Arc<dyn TensorQueue>;
+
+pub trait TensorQueue: Send + Sync {
+    fn enqueue_async(&self, element: Element, done: EnqueueDone);
+    fn dequeue_async(&self, done: DequeueDone);
+    /// Close the queue: pending and future enqueues fail; dequeues drain
+    /// the remaining elements then fail with `OutOfRange` (TF semantics).
+    fn close(&self, cancel_pending: bool);
+    fn size(&self) -> usize;
+    fn is_closed(&self) -> bool;
+    fn num_components(&self) -> usize;
+}
+
+enum Discipline {
+    Fifo,
+    /// min_after_dequeue + PRNG (§4.6 shuffling queue).
+    Shuffle { min_after_dequeue: usize, rng: Pcg32 },
+}
+
+struct State {
+    buf: VecDeque<Element>,
+    closed: bool,
+    discipline: Discipline,
+    pending_enqueues: VecDeque<(Element, EnqueueDone)>,
+    pending_dequeues: VecDeque<DequeueDone>,
+}
+
+pub struct QueueImpl {
+    capacity: usize,
+    components: usize,
+    state: Mutex<State>,
+}
+
+impl QueueImpl {
+    pub fn fifo(capacity: usize, components: usize) -> QueueRef {
+        Arc::new(QueueImpl {
+            capacity: capacity.max(1),
+            components,
+            state: Mutex::new(State {
+                buf: VecDeque::new(),
+                closed: false,
+                discipline: Discipline::Fifo,
+                pending_enqueues: VecDeque::new(),
+                pending_dequeues: VecDeque::new(),
+            }),
+        })
+    }
+
+    pub fn shuffle(
+        capacity: usize,
+        components: usize,
+        min_after_dequeue: usize,
+        seed: u64,
+    ) -> QueueRef {
+        Arc::new(QueueImpl {
+            capacity: capacity.max(1),
+            components,
+            state: Mutex::new(State {
+                buf: VecDeque::new(),
+                closed: false,
+                discipline: Discipline::Shuffle { min_after_dequeue, rng: Pcg32::new(seed) },
+                pending_enqueues: VecDeque::new(),
+                pending_dequeues: VecDeque::new(),
+            }),
+        })
+    }
+
+    /// Pop one element according to the discipline. Caller holds the lock
+    /// and has checked availability.
+    fn pop(state: &mut State) -> Element {
+        match &mut state.discipline {
+            Discipline::Fifo => state.buf.pop_front().expect("checked non-empty"),
+            Discipline::Shuffle { rng, .. } => {
+                let i = rng.index(state.buf.len());
+                state.buf.swap_remove_back(i).expect("checked non-empty")
+            }
+        }
+    }
+
+    /// Can a dequeue proceed right now?
+    fn dequeue_ready(state: &State) -> bool {
+        if state.buf.is_empty() {
+            return false;
+        }
+        match &state.discipline {
+            Discipline::Fifo => true,
+            Discipline::Shuffle { min_after_dequeue, .. } => {
+                // Keep the buffer above the shuffle threshold unless closed
+                // (after close we drain everything).
+                state.closed || state.buf.len() > *min_after_dequeue
+            }
+        }
+    }
+
+    /// Fire any work that can now proceed. Callbacks run outside the lock.
+    fn pump(&self) {
+        let mut fired: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+        {
+            let mut s = self.state.lock().unwrap();
+            loop {
+                let mut progressed = false;
+                // Admit pending enqueues while there is space.
+                while s.buf.len() < self.capacity {
+                    match s.pending_enqueues.pop_front() {
+                        Some((el, done)) => {
+                            s.buf.push_back(el);
+                            fired.push(Box::new(move || done(Ok(()))));
+                            progressed = true;
+                        }
+                        None => break,
+                    }
+                }
+                // Serve pending dequeues while elements are available.
+                while !s.pending_dequeues.is_empty() && Self::dequeue_ready(&s) {
+                    let done = s.pending_dequeues.pop_front().unwrap();
+                    let el = Self::pop(&mut s);
+                    fired.push(Box::new(move || done(Ok(el))));
+                    progressed = true;
+                }
+                // Closed and drained: fail the rest.
+                if s.closed && s.buf.is_empty() {
+                    while let Some(done) = s.pending_dequeues.pop_front() {
+                        fired.push(Box::new(move || {
+                            done(Err(Status::out_of_range("queue is closed and empty")))
+                        }));
+                        progressed = true;
+                    }
+                }
+                if !progressed {
+                    break;
+                }
+            }
+        }
+        for f in fired {
+            f();
+        }
+    }
+}
+
+impl TensorQueue for QueueImpl {
+    fn enqueue_async(&self, element: Element, done: EnqueueDone) {
+        if element.len() != self.components {
+            done(Err(Status::invalid_argument(format!(
+                "enqueue of {}-component element into {}-component queue",
+                element.len(),
+                self.components
+            ))));
+            return;
+        }
+        {
+            let mut s = self.state.lock().unwrap();
+            if s.closed {
+                drop(s);
+                done(Err(Status::aborted("enqueue on closed queue")));
+                return;
+            }
+            s.pending_enqueues.push_back((element, done));
+        }
+        self.pump();
+    }
+
+    fn dequeue_async(&self, done: DequeueDone) {
+        {
+            let mut s = self.state.lock().unwrap();
+            s.pending_dequeues.push_back(done);
+        }
+        self.pump();
+    }
+
+    fn close(&self, cancel_pending: bool) {
+        let mut cancelled: Vec<Box<dyn FnOnce() + Send>> = Vec::new();
+        {
+            let mut s = self.state.lock().unwrap();
+            s.closed = true;
+            // Pending enqueues always fail on close.
+            while let Some((_, done)) = s.pending_enqueues.pop_front() {
+                cancelled.push(Box::new(move || done(Err(Status::aborted("queue closed")))));
+            }
+            if cancel_pending {
+                s.buf.clear();
+            }
+        }
+        for f in cancelled {
+            f();
+        }
+        self.pump();
+    }
+
+    fn size(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    fn num_components(&self) -> usize {
+        self.components
+    }
+}
+
+// ---- synchronous convenience wrappers (tests, input pipelines) -----------
+
+/// Blocking enqueue (convenience for host code; kernels use the async API).
+pub fn enqueue_blocking(q: &QueueRef, element: Element) -> Result<()> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    q.enqueue_async(element, Box::new(move |r| {
+        let _ = tx.send(r);
+    }));
+    rx.recv().map_err(|_| Status::internal("queue dropped callback"))?
+}
+
+/// Blocking dequeue.
+pub fn dequeue_blocking(q: &QueueRef) -> Result<Element> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    q.dequeue_async(Box::new(move |r| {
+        let _ = tx.send(r);
+    }));
+    rx.recv().map_err(|_| Status::internal("queue dropped callback"))?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn elem(v: f32) -> Element {
+        vec![Tensor::scalar_f32(v)]
+    }
+
+    #[test]
+    fn fifo_order() {
+        let q = QueueImpl::fifo(10, 1);
+        for i in 0..5 {
+            enqueue_blocking(&q, elem(i as f32)).unwrap();
+        }
+        for i in 0..5 {
+            let e = dequeue_blocking(&q).unwrap();
+            assert_eq!(e[0].scalar_value_f32().unwrap(), i as f32);
+        }
+    }
+
+    #[test]
+    fn enqueue_blocks_when_full() {
+        let q = QueueImpl::fifo(2, 1);
+        enqueue_blocking(&q, elem(0.0)).unwrap();
+        enqueue_blocking(&q, elem(1.0)).unwrap();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        q.enqueue_async(
+            elem(2.0),
+            Box::new(move |r| {
+                r.unwrap();
+                f2.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        // Still parked.
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        assert_eq!(q.size(), 2);
+        // Dequeue frees a slot; the parked enqueue completes.
+        dequeue_blocking(&q).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        assert_eq!(q.size(), 2);
+    }
+
+    #[test]
+    fn dequeue_blocks_until_data() {
+        let q = QueueImpl::fifo(4, 1);
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        q.dequeue_async(Box::new(move |r| {
+            assert_eq!(r.unwrap()[0].scalar_value_f32().unwrap(), 7.0);
+            f2.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        enqueue_blocking(&q, elem(7.0)).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn close_fails_pending_dequeues_after_drain() {
+        let q = QueueImpl::fifo(4, 1);
+        enqueue_blocking(&q, elem(1.0)).unwrap();
+        q.close(false);
+        // One element drains fine…
+        assert!(dequeue_blocking(&q).is_ok());
+        // …then OutOfRange, like TF.
+        let e = dequeue_blocking(&q).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::OutOfRange);
+        // Enqueue after close aborts.
+        let e = enqueue_blocking(&q, elem(2.0)).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::Aborted);
+    }
+
+    #[test]
+    fn shuffle_queue_randomizes() {
+        let q = QueueImpl::shuffle(200, 1, 0, 42);
+        for i in 0..100 {
+            enqueue_blocking(&q, elem(i as f32)).unwrap();
+        }
+        q.close(false);
+        let mut out = Vec::new();
+        for _ in 0..100 {
+            out.push(dequeue_blocking(&q).unwrap()[0].scalar_value_f32().unwrap());
+        }
+        let sorted: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        assert_ne!(out, sorted, "shuffle queue returned FIFO order");
+        let mut copy = out.clone();
+        copy.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(copy, sorted, "shuffle queue lost/duplicated elements");
+    }
+
+    #[test]
+    fn shuffle_respects_min_after_dequeue() {
+        let q = QueueImpl::shuffle(100, 1, 5, 1);
+        for i in 0..6 {
+            enqueue_blocking(&q, elem(i as f32)).unwrap();
+        }
+        // 6 elements, min_after=5: exactly one dequeue can proceed.
+        assert!(dequeue_blocking(&q).is_ok());
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f2 = Arc::clone(&fired);
+        q.dequeue_async(Box::new(move |_| {
+            f2.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(fired.load(Ordering::SeqCst), 0, "dequeue should park below threshold");
+        enqueue_blocking(&q, elem(9.0)).unwrap(); // back above threshold
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn component_count_checked() {
+        let q = QueueImpl::fifo(4, 2);
+        let e = enqueue_blocking(&q, elem(1.0)).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::InvalidArgument);
+    }
+
+    #[test]
+    fn producer_consumer_threads() {
+        let q = QueueImpl::fifo(8, 1);
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..500 {
+                enqueue_blocking(&q2, elem(i as f32)).unwrap();
+            }
+        });
+        let mut sum = 0.0;
+        for _ in 0..500 {
+            sum += dequeue_blocking(&q).unwrap()[0].scalar_value_f32().unwrap();
+        }
+        producer.join().unwrap();
+        assert_eq!(sum, (0..500).sum::<i32>() as f32);
+    }
+}

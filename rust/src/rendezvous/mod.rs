@@ -1,0 +1,269 @@
+//! The Rendezvous: the key-indexed tensor mailbox Send/Recv pairs use to
+//! transfer data across devices (§3.2.2) and, in the distributed runtime,
+//! across machines (§3.3). Feeds are also delivered through a
+//! specially-initialized rendezvous (§4.2: "a Rendezvous object used for
+//! the Run call").
+//!
+//! Keys name a logical tensor transfer once per step:
+//! `src_device;dst_device;tensor_name;frame_iter` — producing the §3.2.2
+//! guarantee that a tensor crosses a device pair once per (step,
+//! frame-iteration).
+
+use crate::error::{Result, Status};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+pub type RecvDone = Box<dyn FnOnce(Result<Tensor>) + Send>;
+
+/// Compose the canonical rendezvous key.
+pub fn make_key(src_device: &str, dst_device: &str, tensor_name: &str, frame_iter: &str) -> String {
+    format!("{src_device};{dst_device};{tensor_name};{frame_iter}")
+}
+
+/// Abstract rendezvous: local for intra-process transfers, remote-backed
+/// in the distributed worker.
+pub trait Rendezvous: Send + Sync {
+    /// Deposit a tensor. Each key may be sent at most once per step.
+    fn send(&self, key: &str, value: Tensor) -> Result<()>;
+    /// Asynchronously receive; `done` fires when the tensor arrives (§5.3
+    /// Receive is the canonical asynchronous kernel).
+    fn recv_async(&self, key: &str, done: RecvDone);
+    /// Abort every pending and future operation with `status` — the §3.3
+    /// failure path ("an error in a communication between a Send and
+    /// Receive node pair" cancels the step).
+    fn abort(&self, status: Status);
+    /// Synchronous probe (used for pre-populated feeds).
+    fn try_recv(&self, key: &str) -> Option<Tensor>;
+}
+
+enum Slot {
+    /// Value arrived, no receiver yet.
+    Value(Tensor),
+    /// Receivers arrived, no value yet.
+    Waiters(Vec<RecvDone>),
+}
+
+#[derive(Default)]
+struct LocalState {
+    slots: HashMap<String, Slot>,
+    aborted: Option<Status>,
+}
+
+/// In-process rendezvous; one per step (plus one long-lived instance per
+/// worker for cross-step distributed traffic).
+#[derive(Default)]
+pub struct LocalRendezvous {
+    state: Mutex<LocalState>,
+}
+
+impl LocalRendezvous {
+    pub fn new() -> Arc<LocalRendezvous> {
+        Arc::new(LocalRendezvous::default())
+    }
+
+    /// Number of undelivered tensors parked in the table (test/debug).
+    pub fn pending_values(&self) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .slots
+            .values()
+            .filter(|s| matches!(s, Slot::Value(_)))
+            .count()
+    }
+}
+
+impl Rendezvous for LocalRendezvous {
+    fn send(&self, key: &str, value: Tensor) -> Result<()> {
+        let waiters = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(status) = &st.aborted {
+                return Err(status.clone());
+            }
+            match st.slots.remove(key) {
+                None => {
+                    st.slots.insert(key.to_string(), Slot::Value(value));
+                    return Ok(());
+                }
+                Some(Slot::Value(_)) => {
+                    // Restore and fail: duplicate send is a graph bug.
+                    return Err(Status::internal(format!("duplicate send for key {key:?}")));
+                }
+                Some(Slot::Waiters(w)) => (w, value),
+            }
+        };
+        let (waiters, value) = waiters;
+        let mut it = waiters.into_iter();
+        if let Some(first) = it.next() {
+            for w in it {
+                w(Ok(value.clone()));
+            }
+            first(Ok(value));
+        }
+        Ok(())
+    }
+
+    fn recv_async(&self, key: &str, done: RecvDone) {
+        let value = {
+            let mut st = self.state.lock().unwrap();
+            if let Some(status) = &st.aborted {
+                let status = status.clone();
+                drop(st);
+                done(Err(status));
+                return;
+            }
+            match st.slots.remove(key) {
+                Some(Slot::Value(v)) => v,
+                Some(Slot::Waiters(mut w)) => {
+                    w.push(done);
+                    st.slots.insert(key.to_string(), Slot::Waiters(w));
+                    return;
+                }
+                None => {
+                    st.slots.insert(key.to_string(), Slot::Waiters(vec![done]));
+                    return;
+                }
+            }
+        };
+        done(Ok(value));
+    }
+
+    fn abort(&self, status: Status) {
+        let waiters: Vec<RecvDone> = {
+            let mut st = self.state.lock().unwrap();
+            st.aborted = Some(status.clone());
+            st.slots
+                .drain()
+                .filter_map(|(_, slot)| match slot {
+                    Slot::Waiters(w) => Some(w),
+                    Slot::Value(_) => None,
+                })
+                .flatten()
+                .collect()
+        };
+        for w in waiters {
+            w(Err(status.clone()));
+        }
+    }
+
+    fn try_recv(&self, key: &str) -> Option<Tensor> {
+        let mut st = self.state.lock().unwrap();
+        match st.slots.remove(key) {
+            Some(Slot::Value(v)) => Some(v),
+            Some(other) => {
+                st.slots.insert(key.to_string(), other);
+                None
+            }
+            None => None,
+        }
+    }
+}
+
+/// Blocking receive helper for host-side code and tests.
+pub fn recv_blocking(r: &dyn Rendezvous, key: &str) -> Result<Tensor> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    r.recv_async(key, Box::new(move |res| {
+        let _ = tx.send(res);
+    }));
+    rx.recv().map_err(|_| Status::internal("rendezvous dropped callback"))?
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn send_then_recv() {
+        let r = LocalRendezvous::new();
+        r.send("k", Tensor::scalar_f32(5.0)).unwrap();
+        let t = recv_blocking(&*r, "k").unwrap();
+        assert_eq!(t.scalar_value_f32().unwrap(), 5.0);
+    }
+
+    #[test]
+    fn recv_then_send() {
+        let r = LocalRendezvous::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        r.recv_async(
+            "k",
+            Box::new(move |res| {
+                assert_eq!(res.unwrap().scalar_value_f32().unwrap(), 9.0);
+                f.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        r.send("k", Tensor::scalar_f32(9.0)).unwrap();
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn duplicate_send_rejected() {
+        let r = LocalRendezvous::new();
+        r.send("k", Tensor::scalar_f32(1.0)).unwrap();
+        assert!(r.send("k", Tensor::scalar_f32(2.0)).is_err());
+    }
+
+    #[test]
+    fn keys_are_independent() {
+        let r = LocalRendezvous::new();
+        r.send("a", Tensor::scalar_f32(1.0)).unwrap();
+        r.send("b", Tensor::scalar_f32(2.0)).unwrap();
+        assert_eq!(recv_blocking(&*r, "b").unwrap().scalar_value_f32().unwrap(), 2.0);
+        assert_eq!(recv_blocking(&*r, "a").unwrap().scalar_value_f32().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn abort_fails_pending_and_future() {
+        let r = LocalRendezvous::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let f = Arc::clone(&fired);
+        r.recv_async(
+            "k",
+            Box::new(move |res| {
+                assert_eq!(res.unwrap_err().code, crate::error::Code::Aborted);
+                f.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        r.abort(Status::aborted("worker died"));
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        // Future ops also fail.
+        assert!(r.send("x", Tensor::scalar_f32(0.0)).is_err());
+        assert!(recv_blocking(&*r, "y").is_err());
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let r = LocalRendezvous::new();
+        assert!(r.try_recv("k").is_none());
+        r.send("k", Tensor::scalar_f32(3.0)).unwrap();
+        assert!(r.try_recv("k").is_some());
+        assert!(r.try_recv("k").is_none()); // consumed
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let r = LocalRendezvous::new();
+        let r2 = Arc::clone(&r);
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                r2.send(&format!("k{i}"), Tensor::scalar_f32(i as f32)).unwrap();
+            }
+        });
+        for i in 0..100 {
+            let t = recv_blocking(&*r, &format!("k{i}")).unwrap();
+            assert_eq!(t.scalar_value_f32().unwrap(), i as f32);
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn key_format() {
+        assert_eq!(
+            make_key("/job:a/task:0/device:cpu:0", "/job:a/task:0/device:cpu:1", "x:0", "0:0"),
+            "/job:a/task:0/device:cpu:0;/job:a/task:0/device:cpu:1;x:0;0:0"
+        );
+    }
+}

@@ -1,0 +1,163 @@
+//! §7 "Common Programming Idioms": data-parallel training (synchronous and
+//! asynchronous, Fig 7), model-parallel placement helpers (Fig 8), and
+//! concurrent-steps support (Fig 9 — a runtime pattern: N client threads
+//! driving the same training subgraph).
+
+use crate::autodiff::gradients;
+use crate::error::{Result, Status};
+use crate::graph::{Endpoint, NodeId};
+use crate::optim::Optimizer;
+use crate::ops::builder::GraphBuilder;
+
+/// Synchronous data parallelism (Fig 7 top): towers each compute the
+/// gradient for their shard; gradients are averaged and applied once — "in
+/// order to behave exactly as if we were running the sequential SGD
+/// algorithm with a batch size of" n×b.
+pub fn sync_data_parallel(
+    b: &mut GraphBuilder,
+    vars: &[Endpoint],
+    tower_losses: &[Endpoint],
+    opt: &Optimizer,
+) -> Result<NodeId> {
+    if tower_losses.is_empty() {
+        return Err(Status::invalid_argument("no towers"));
+    }
+    let n = tower_losses.len();
+    let mut per_var: Vec<Vec<Endpoint>> = vec![Vec::with_capacity(n); vars.len()];
+    for &loss in tower_losses {
+        let gs = gradients(b, loss, vars)?;
+        for (i, g) in gs.into_iter().enumerate() {
+            per_var[i].push(g.ok_or_else(|| {
+                Status::invalid_argument(format!(
+                    "tower loss does not depend on variable {:?}",
+                    b.graph.node(vars[i].node).name
+                ))
+            })?);
+        }
+    }
+    let scale = b.scalar(1.0 / n as f32);
+    let mut updates = Vec::with_capacity(vars.len());
+    for (var, grads) in vars.iter().zip(per_var) {
+        let summed = if grads.len() == 1 { grads[0] } else { b.add_n(grads) };
+        let mean = b.mul(summed, scale);
+        updates.push(opt.apply(b, *var, mean)?);
+    }
+    Ok(b.group("sync_train", updates))
+}
+
+/// Asynchronous data parallelism (Fig 7 bottom): "each one of these
+/// replicas also applies the parameter updates … asynchronously. In this
+/// configuration, there is one client thread for each of the graph
+/// replicas." Returns one train op per tower; drive each from its own
+/// thread.
+pub fn async_data_parallel(
+    b: &mut GraphBuilder,
+    vars: &[Endpoint],
+    tower_losses: &[Endpoint],
+    opt: &Optimizer,
+) -> Result<Vec<NodeId>> {
+    let mut train_ops = Vec::with_capacity(tower_losses.len());
+    for (t, &loss) in tower_losses.iter().enumerate() {
+        let gs = gradients(b, loss, vars)?;
+        let mut updates = Vec::with_capacity(vars.len());
+        for (var, g) in vars.iter().zip(gs) {
+            let g = g.ok_or_else(|| Status::invalid_argument("tower loss independent of var"))?;
+            updates.push(opt.apply(b, *var, g)?);
+        }
+        train_ops.push(b.group(&format!("async_train_{t}"), updates));
+    }
+    Ok(train_ops)
+}
+
+/// Build `n` towers, each under a device scope produced by `device_of`
+/// (model replication across devices; the variables stay wherever the
+/// caller created them).
+pub fn build_towers<T>(
+    b: &mut GraphBuilder,
+    n: usize,
+    device_of: impl Fn(usize) -> String,
+    mut tower_fn: impl FnMut(&mut GraphBuilder, usize) -> Result<T>,
+) -> Result<Vec<T>> {
+    (0..n)
+        .map(|i| {
+            let dev = device_of(i);
+            b.with_device(&dev, |b| b.with_scope(&format!("tower_{i}"), |b| tower_fn(b, i)))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Session, SessionOptions};
+    use crate::tensor::Tensor;
+
+    /// Shared quadratic losses: each tower sees a different target; the
+    /// sync optimum is the mean of targets.
+    fn quadratic_towers(n: usize) -> (GraphBuilder, Endpoint, Vec<Endpoint>, Vec<String>) {
+        let mut b = GraphBuilder::new();
+        let w = b.variable("w", Tensor::scalar_f32(0.0)).unwrap();
+        let losses = (0..n)
+            .map(|i| {
+                let target = b.scalar(i as f32);
+                let d = b.sub(w, target);
+                b.square(d)
+            })
+            .collect();
+        let inits = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        (b, w, losses, inits)
+    }
+
+    #[test]
+    fn sync_converges_to_mean_target() {
+        let (mut b, w, losses, inits) = quadratic_towers(4); // targets 0..3, mean 1.5
+        let train = sync_data_parallel(&mut b, &[w], &losses, &Optimizer::sgd(0.1)).unwrap();
+        let tname = b.graph.node(train).name.clone();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        for _ in 0..100 {
+            sess.run_targets(&[&tname]).unwrap();
+        }
+        let wv = sess.run(&[], &["w"], &[]).unwrap()[0].scalar_value_f32().unwrap();
+        assert!((wv - 1.5).abs() < 1e-2, "sync data-parallel converged to {wv}, want 1.5");
+    }
+
+    #[test]
+    fn async_converges_with_concurrent_clients() {
+        let (mut b, w, losses, inits) = quadratic_towers(4);
+        let trains = async_data_parallel(&mut b, &[w], &losses, &Optimizer::sgd(0.02)).unwrap();
+        let tnames: Vec<String> = trains.iter().map(|&t| b.graph.node(t).name.clone()).collect();
+        let sess = std::sync::Arc::new(Session::new(
+            b.into_graph(),
+            SessionOptions { devices: 2, ..Default::default() },
+        ));
+        sess.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+        // One client thread per replica (Fig 7 bottom).
+        std::thread::scope(|scope| {
+            for name in &tnames {
+                let sess = std::sync::Arc::clone(&sess);
+                scope.spawn(move || {
+                    for _ in 0..100 {
+                        sess.run_targets(&[name]).unwrap();
+                    }
+                });
+            }
+        });
+        let wv = sess.run(&[], &["w"], &[]).unwrap()[0].scalar_value_f32().unwrap();
+        // Async converges near the mean, tolerating staleness noise.
+        assert!((wv - 1.5).abs() < 0.5, "async data-parallel ended at {wv}, want ≈1.5");
+    }
+
+    #[test]
+    fn towers_get_device_scopes() {
+        let mut b = GraphBuilder::new();
+        let outs = build_towers(&mut b, 3, |i| format!("/device:cpu:{i}"), |b, i| {
+            Ok(b.scalar(i as f32))
+        })
+        .unwrap();
+        for (i, e) in outs.iter().enumerate() {
+            assert_eq!(b.graph.node(e.node).requested_device, format!("/device:cpu:{i}"));
+            assert!(b.graph.node(e.node).name.starts_with(&format!("tower_{i}/")));
+        }
+    }
+}

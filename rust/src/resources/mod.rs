@@ -1,0 +1,299 @@
+//! Long-lived mutable state: Variables live in *Containers* (§4.7 — "the
+//! backing store for a Variable lives in a container. The default
+//! container is one that persists until the process terminates … a
+//! container can be reset by clearing it of its contents entirely"), and
+//! so do queues and mutexes (§4.6, Table 1 row 7).
+//!
+//! One `ResourceMgr` exists per worker process; it is shared by every
+//! Session/step, which is what lets "completely disjoint computation
+//! graphs associated with different Sessions" share state (§4.7).
+
+use crate::error::{Result, Status};
+use crate::queue::QueueRef;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+
+/// The mutable storage behind one Variable node.
+#[derive(Debug, Default)]
+pub struct VariableState {
+    value: Mutex<Option<Tensor>>,
+}
+
+impl VariableState {
+    /// Read the current value; `FailedPrecondition` when uninitialized
+    /// (TF's "attempting to use uninitialized value" error).
+    pub fn read(&self, name: &str) -> Result<Tensor> {
+        self.value
+            .lock()
+            .unwrap()
+            .clone()
+            .ok_or_else(|| {
+                Status::failed_precondition(format!("attempting to use uninitialized variable {name:?}"))
+            })
+    }
+
+    pub fn is_initialized(&self) -> bool {
+        self.value.lock().unwrap().is_some()
+    }
+
+    pub fn assign(&self, t: Tensor) {
+        *self.value.lock().unwrap() = Some(t);
+    }
+
+    /// value += delta (the paper's AssignAdd, "equivalent to +=").
+    pub fn assign_add(&self, name: &str, delta: &Tensor) -> Result<Tensor> {
+        let mut guard = self.value.lock().unwrap();
+        let cur = guard.as_ref().ok_or_else(|| {
+            Status::failed_precondition(format!("AssignAdd on uninitialized variable {name:?}"))
+        })?;
+        let new = crate::kernels::math::binary_elementwise(cur, delta, "Add")?;
+        *guard = Some(new.clone());
+        Ok(new)
+    }
+
+    pub fn assign_sub(&self, name: &str, delta: &Tensor) -> Result<Tensor> {
+        let mut guard = self.value.lock().unwrap();
+        let cur = guard.as_ref().ok_or_else(|| {
+            Status::failed_precondition(format!("AssignSub on uninitialized variable {name:?}"))
+        })?;
+        let new = crate::kernels::math::binary_elementwise(cur, delta, "Sub")?;
+        *guard = Some(new.clone());
+        Ok(new)
+    }
+
+    /// Run `f` over the variable under its lock (optimizer apply ops need
+    /// read-modify-write atomicity; §6 lesson 4 is about exactly the bugs
+    /// you get without this).
+    pub fn update(&self, name: &str, f: impl FnOnce(&Tensor) -> Result<Tensor>) -> Result<Tensor> {
+        let mut guard = self.value.lock().unwrap();
+        let cur = guard.as_ref().ok_or_else(|| {
+            Status::failed_precondition(format!("update of uninitialized variable {name:?}"))
+        })?;
+        let new = f(cur)?;
+        *guard = Some(new.clone());
+        Ok(new)
+    }
+
+    /// Like `update` but initializes from `init` when empty (Adam/Adagrad
+    /// slot variables).
+    pub fn update_or_init(
+        &self,
+        init: impl FnOnce() -> Result<Tensor>,
+        f: impl FnOnce(&Tensor) -> Result<Tensor>,
+    ) -> Result<Tensor> {
+        let mut guard = self.value.lock().unwrap();
+        let cur = match guard.as_ref() {
+            Some(t) => t.clone(),
+            None => init()?,
+        };
+        let new = f(&cur)?;
+        *guard = Some(new.clone());
+        Ok(new)
+    }
+}
+
+/// A simple cooperative mutex resource (Table 1: MutexAcquire/MutexRelease).
+#[derive(Debug, Default)]
+pub struct MutexState {
+    locked: Mutex<bool>,
+    cond: Condvar,
+}
+
+impl MutexState {
+    pub fn acquire(&self) {
+        let mut locked = self.locked.lock().unwrap();
+        while *locked {
+            locked = self.cond.wait(locked).unwrap();
+        }
+        *locked = true;
+    }
+
+    pub fn try_acquire(&self) -> bool {
+        let mut locked = self.locked.lock().unwrap();
+        if *locked {
+            false
+        } else {
+            *locked = true;
+            true
+        }
+    }
+
+    pub fn release(&self) -> Result<()> {
+        let mut locked = self.locked.lock().unwrap();
+        if !*locked {
+            return Err(Status::failed_precondition("MutexRelease of unheld mutex"));
+        }
+        *locked = false;
+        self.cond.notify_one();
+        Ok(())
+    }
+}
+
+/// One named container of resources (§4.7).
+#[derive(Default)]
+pub struct Container {
+    vars: RwLock<HashMap<String, Arc<VariableState>>>,
+    queues: RwLock<HashMap<String, QueueRef>>,
+    mutexes: RwLock<HashMap<String, Arc<MutexState>>>,
+}
+
+impl Container {
+    /// Get-or-create the variable slot named `name`.
+    pub fn variable(&self, name: &str) -> Arc<VariableState> {
+        if let Some(v) = self.vars.read().unwrap().get(name) {
+            return Arc::clone(v);
+        }
+        let mut w = self.vars.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    pub fn lookup_variable(&self, name: &str) -> Option<Arc<VariableState>> {
+        self.vars.read().unwrap().get(name).cloned()
+    }
+
+    pub fn variable_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.vars.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Get-or-create a queue; `make` runs only on first touch.
+    pub fn queue_or_create(&self, name: &str, make: impl FnOnce() -> QueueRef) -> QueueRef {
+        if let Some(q) = self.queues.read().unwrap().get(name) {
+            return q.clone();
+        }
+        let mut w = self.queues.write().unwrap();
+        w.entry(name.to_string()).or_insert_with(make).clone()
+    }
+
+    pub fn lookup_queue(&self, name: &str) -> Result<QueueRef> {
+        self.queues
+            .read()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Status::not_found(format!("queue {name:?} not found (did its queue op run?)")))
+    }
+
+    pub fn mutex(&self, name: &str) -> Arc<MutexState> {
+        if let Some(m) = self.mutexes.read().unwrap().get(name) {
+            return Arc::clone(m);
+        }
+        let mut w = self.mutexes.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    /// §4.7: reset = clear contents entirely.
+    pub fn reset(&self) {
+        self.vars.write().unwrap().clear();
+        self.queues.write().unwrap().clear();
+        self.mutexes.write().unwrap().clear();
+    }
+}
+
+/// All containers of one worker process. The default container is "".
+#[derive(Default)]
+pub struct ResourceMgr {
+    containers: RwLock<HashMap<String, Arc<Container>>>,
+}
+
+impl ResourceMgr {
+    pub fn new() -> Arc<ResourceMgr> {
+        Arc::new(ResourceMgr::default())
+    }
+
+    pub fn container(&self, name: &str) -> Arc<Container> {
+        if let Some(c) = self.containers.read().unwrap().get(name) {
+            return Arc::clone(c);
+        }
+        let mut w = self.containers.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    pub fn default_container(&self) -> Arc<Container> {
+        self.container("")
+    }
+
+    pub fn reset_container(&self, name: &str) {
+        if let Some(c) = self.containers.read().unwrap().get(name) {
+            c.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn uninitialized_variable_errors() {
+        let c = Container::default();
+        let v = c.variable("w");
+        assert!(!v.is_initialized());
+        let e = v.read("w").unwrap_err();
+        assert_eq!(e.code, crate::error::Code::FailedPrecondition);
+    }
+
+    #[test]
+    fn assign_then_read() {
+        let c = Container::default();
+        let v = c.variable("w");
+        v.assign(Tensor::scalar_f32(3.0));
+        assert_eq!(v.read("w").unwrap().scalar_value_f32().unwrap(), 3.0);
+        // Same slot returned for same name.
+        let v2 = c.variable("w");
+        assert_eq!(v2.read("w").unwrap().scalar_value_f32().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn containers_isolate_and_reset() {
+        let mgr = ResourceMgr::new();
+        mgr.container("a").variable("x").assign(Tensor::scalar_f32(1.0));
+        mgr.container("b").variable("x").assign(Tensor::scalar_f32(2.0));
+        assert_eq!(
+            mgr.container("a").variable("x").read("x").unwrap().scalar_value_f32().unwrap(),
+            1.0
+        );
+        mgr.reset_container("a");
+        assert!(!mgr.container("a").variable("x").is_initialized());
+        // Container b untouched.
+        assert!(mgr.container("b").variable("x").is_initialized());
+    }
+
+    #[test]
+    fn mutex_acquire_release() {
+        let c = Container::default();
+        let m = c.mutex("mu");
+        assert!(m.try_acquire());
+        assert!(!m.try_acquire());
+        m.release().unwrap();
+        assert!(m.try_acquire());
+        m.release().unwrap();
+        assert!(m.release().is_err());
+    }
+
+    #[test]
+    fn mutex_blocks_across_threads() {
+        let c = Arc::new(Container::default());
+        let m = c.mutex("mu");
+        m.acquire();
+        let m2 = Arc::clone(&m);
+        let h = std::thread::spawn(move || {
+            m2.acquire(); // blocks until main releases
+            m2.release().unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        m.release().unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn variable_names_sorted() {
+        let c = Container::default();
+        c.variable("b").assign(Tensor::scalar_f32(0.0));
+        c.variable("a").assign(Tensor::scalar_f32(0.0));
+        assert_eq!(c.variable_names(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

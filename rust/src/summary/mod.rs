@@ -1,0 +1,136 @@
+//! TensorBoard analog (§9.1): an event-file writer for Summary-op output
+//! plus a renderer of time-series statistics. Summary ops (kernels in
+//! `kernels::summary`) emit JSON records as string tensors; the client
+//! fetches them periodically and appends them here, tagged with wall time
+//! and step ("the client driver program writes the summary data to a log
+//! file associated with the model training").
+
+use crate::error::Result;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Appends summary records to an events file (one JSON object per line —
+/// readable by anything, renderable by `summarize`).
+pub struct SummaryWriter {
+    path: PathBuf,
+    file: std::fs::File,
+}
+
+impl SummaryWriter {
+    pub fn create(path: &Path) -> Result<SummaryWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::File::create(path)?;
+        Ok(SummaryWriter { path: path.to_path_buf(), file })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Write every record of a fetched summary tensor under `step`.
+    pub fn add_summary(&mut self, step: u64, summary: &Tensor) -> Result<()> {
+        let wall = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_secs_f64();
+        for record in summary.as_str_slice()? {
+            // Wrap the kernel-emitted record with step/time envelope.
+            let line = Json::obj()
+                .set("step", step)
+                .set("wall_time", wall)
+                .set("summary", Json::Str(record.clone()));
+            writeln!(self.file, "{}", line.render())?;
+        }
+        Ok(())
+    }
+
+    /// Convenience: log a bare scalar without a Summary op.
+    pub fn add_scalar(&mut self, step: u64, tag: &str, value: f64) -> Result<()> {
+        let wall = SystemTime::now().duration_since(UNIX_EPOCH).unwrap_or_default().as_secs_f64();
+        let inner = Json::obj().set("type", "scalar").set("tag", tag).set("value", value);
+        let line = Json::obj()
+            .set("step", step)
+            .set("wall_time", wall)
+            .set("summary", Json::Str(inner.render()));
+        writeln!(self.file, "{}", line.render())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Rough text rendering of an events file: per-tag series (step, value) —
+/// the §9.1 "display this summary information and how it changes over
+/// time", minus the pixels.
+pub fn summarize(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = String::new();
+    let mut count = 0;
+    for line in text.lines() {
+        // Cheap field scrape (records are our own writer's output).
+        let step = scrape(line, "\"step\":").unwrap_or_default();
+        if let Some(tag_pos) = line.find("\\\"tag\\\":\\\"") {
+            let rest = &line[tag_pos + 10..];
+            let tag = &rest[..rest.find('\\').unwrap_or(0)];
+            let value = scrape(line, "\\\"value\\\":").unwrap_or_default();
+            out.push_str(&format!("step {step:>8}  {tag:<24} {value}\n"));
+            count += 1;
+        }
+    }
+    out.push_str(&format!("{count} scalar records\n"));
+    Ok(out)
+}
+
+fn scrape(line: &str, key: &str) -> Option<String> {
+    let pos = line.find(key)? + key.len();
+    let rest = &line[pos..];
+    let end = rest.find([',', '}', '\\']).unwrap_or(rest.len());
+    Some(rest[..end].trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Shape, TensorData};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("rustflow-events-{tag}-{}.log", std::process::id()))
+    }
+
+    #[test]
+    fn writes_and_summarizes() {
+        let path = tmp("basic");
+        let mut w = SummaryWriter::create(&path).unwrap();
+        for step in 0..5 {
+            w.add_scalar(step, "loss", 1.0 / (step + 1) as f64).unwrap();
+        }
+        w.flush().unwrap();
+        let text = summarize(&path).unwrap();
+        assert!(text.contains("loss"));
+        assert!(text.contains("5 scalar records"));
+    }
+
+    #[test]
+    fn accepts_summary_tensors() {
+        let path = tmp("tensor");
+        let mut w = SummaryWriter::create(&path).unwrap();
+        let t = Tensor::new(
+            Shape::vector(2),
+            TensorData::Str(vec![
+                r#"{"type":"scalar","tag":"acc","value":0.9}"#.into(),
+                r#"{"type":"histogram","tag":"w","min":0,"max":1}"#.into(),
+            ]),
+        )
+        .unwrap();
+        w.add_summary(3, &t).unwrap();
+        w.flush().unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content.lines().count(), 2);
+        assert!(content.contains("\"step\":3"));
+    }
+}

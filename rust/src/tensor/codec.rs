@@ -1,0 +1,229 @@
+//! Binary tensor wire/disk format, shared by the checkpoint bundle (§3.3
+//! Fault Tolerance), the distributed rendezvous (§3.3), and the §5.5 lossy
+//! compression path.
+//!
+//! Layout (little endian):
+//!   u8  dtype
+//!   u8  rank
+//!   u64 × rank dims
+//!   u64 payload element count
+//!   payload (for Str: per-element u32 length + utf8 bytes)
+
+use super::{DType, Shape, Tensor, TensorData};
+use crate::error::{Result, Status};
+use byteorder::{ByteOrder, LittleEndian};
+
+pub fn encode(t: &Tensor) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + t.size_bytes());
+    out.push(t.dtype().as_u8());
+    out.push(t.shape().rank() as u8);
+    for &d in t.shape().dims() {
+        let mut b = [0u8; 8];
+        LittleEndian::write_u64(&mut b, d as u64);
+        out.extend_from_slice(&b);
+    }
+    let n = t.num_elements() as u64;
+    let mut b = [0u8; 8];
+    LittleEndian::write_u64(&mut b, n);
+    out.extend_from_slice(&b);
+    match t.data() {
+        TensorData::F32(v) => {
+            for &x in v {
+                let mut b = [0u8; 4];
+                LittleEndian::write_f32(&mut b, x);
+                out.extend_from_slice(&b);
+            }
+        }
+        TensorData::F64(v) => {
+            for &x in v {
+                let mut b = [0u8; 8];
+                LittleEndian::write_f64(&mut b, x);
+                out.extend_from_slice(&b);
+            }
+        }
+        TensorData::I32(v) => {
+            for &x in v {
+                let mut b = [0u8; 4];
+                LittleEndian::write_i32(&mut b, x);
+                out.extend_from_slice(&b);
+            }
+        }
+        TensorData::I64(v) => {
+            for &x in v {
+                let mut b = [0u8; 8];
+                LittleEndian::write_i64(&mut b, x);
+                out.extend_from_slice(&b);
+            }
+        }
+        TensorData::U8(v) => out.extend_from_slice(v),
+        TensorData::Bool(v) => out.extend(v.iter().map(|&b| b as u8)),
+        TensorData::Str(v) => {
+            for s in v {
+                let mut b = [0u8; 4];
+                LittleEndian::write_u32(&mut b, s.len() as u32);
+                out.extend_from_slice(&b);
+                out.extend_from_slice(s.as_bytes());
+            }
+        }
+        TensorData::BF16(v) => {
+            for &x in v {
+                let mut b = [0u8; 2];
+                LittleEndian::write_u16(&mut b, x);
+                out.extend_from_slice(&b);
+            }
+        }
+    }
+    out
+}
+
+/// Decode a tensor; returns (tensor, bytes consumed).
+pub fn decode(buf: &[u8]) -> Result<(Tensor, usize)> {
+    let need = |n: usize, at: usize| -> Result<()> {
+        if buf.len() < at + n {
+            return Err(Status::invalid_argument("truncated tensor encoding"));
+        }
+        Ok(())
+    };
+    need(2, 0)?;
+    let dtype = DType::from_u8(buf[0])?;
+    let rank = buf[1] as usize;
+    let mut pos = 2;
+    need(8 * rank + 8, pos)?;
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(LittleEndian::read_u64(&buf[pos..pos + 8]) as usize);
+        pos += 8;
+    }
+    let n = LittleEndian::read_u64(&buf[pos..pos + 8]) as usize;
+    pos += 8;
+    let shape = Shape(dims);
+    if shape.num_elements() != n {
+        return Err(Status::invalid_argument("tensor encoding: shape/count mismatch"));
+    }
+    let data = match dtype {
+        DType::F32 => {
+            need(4 * n, pos)?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(LittleEndian::read_f32(&buf[pos + 4 * i..]));
+            }
+            pos += 4 * n;
+            TensorData::F32(v)
+        }
+        DType::F64 => {
+            need(8 * n, pos)?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(LittleEndian::read_f64(&buf[pos + 8 * i..]));
+            }
+            pos += 8 * n;
+            TensorData::F64(v)
+        }
+        DType::I32 => {
+            need(4 * n, pos)?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(LittleEndian::read_i32(&buf[pos + 4 * i..]));
+            }
+            pos += 4 * n;
+            TensorData::I32(v)
+        }
+        DType::I64 => {
+            need(8 * n, pos)?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(LittleEndian::read_i64(&buf[pos + 8 * i..]));
+            }
+            pos += 8 * n;
+            TensorData::I64(v)
+        }
+        DType::U8 => {
+            need(n, pos)?;
+            let v = buf[pos..pos + n].to_vec();
+            pos += n;
+            TensorData::U8(v)
+        }
+        DType::Bool => {
+            need(n, pos)?;
+            let v = buf[pos..pos + n].iter().map(|&b| b != 0).collect();
+            pos += n;
+            TensorData::Bool(v)
+        }
+        DType::Str => {
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                need(4, pos)?;
+                let len = LittleEndian::read_u32(&buf[pos..pos + 4]) as usize;
+                pos += 4;
+                need(len, pos)?;
+                let s = std::str::from_utf8(&buf[pos..pos + len])
+                    .map_err(|_| Status::invalid_argument("invalid utf8 in string tensor"))?;
+                v.push(s.to_string());
+                pos += len;
+            }
+            TensorData::Str(v)
+        }
+        DType::BF16 => {
+            need(2 * n, pos)?;
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(LittleEndian::read_u16(&buf[pos + 2 * i..]));
+            }
+            pos += 2 * n;
+            TensorData::BF16(v)
+        }
+    };
+    Ok((Tensor::new(shape, data)?, pos))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(t: &Tensor) {
+        let enc = encode(t);
+        let (dec, used) = decode(&enc).unwrap();
+        assert_eq!(used, enc.len());
+        assert_eq!(&dec, t);
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        roundtrip(&Tensor::from_f32(vec![2, 3], vec![1., -2., 3.5, 0., 5., 6.]).unwrap());
+        roundtrip(&Tensor::from_f64(vec![2], vec![1.5, -0.25]).unwrap());
+        roundtrip(&Tensor::from_i32(vec![3], vec![-1, 0, i32::MAX]).unwrap());
+        roundtrip(&Tensor::from_i64(vec![1], vec![i64::MIN]).unwrap());
+        roundtrip(&Tensor::new(Shape::vector(3), TensorData::U8(vec![0, 128, 255])).unwrap());
+        roundtrip(&Tensor::from_bool(vec![2], vec![true, false]).unwrap());
+        roundtrip(
+            &Tensor::new(
+                Shape::vector(2),
+                TensorData::Str(vec!["hello".into(), "wörld".into()]),
+            )
+            .unwrap(),
+        );
+        roundtrip(&Tensor::new(Shape::vector(2), TensorData::BF16(vec![0x3f80, 0x4000])).unwrap());
+        roundtrip(&Tensor::scalar_f32(42.0));
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let enc = encode(&Tensor::from_f32(vec![4], vec![1., 2., 3., 4.]).unwrap());
+        for cut in [0, 1, 5, enc.len() - 1] {
+            assert!(decode(&enc[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn two_tensors_back_to_back() {
+        let a = Tensor::scalar_i32(7);
+        let b = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let mut buf = encode(&a);
+        buf.extend(encode(&b));
+        let (da, used) = decode(&buf).unwrap();
+        let (db, used2) = decode(&buf[used..]).unwrap();
+        assert_eq!(da, a);
+        assert_eq!(db, b);
+        assert_eq!(used + used2, buf.len());
+    }
+}

@@ -1,0 +1,132 @@
+//! Tensor element types (§3 "Tensors": "signed and unsigned integers
+//! ranging in size from 8 bits to 64 bits, IEEE float and double types,
+//! a complex number type, and a string type"). We implement the subset the
+//! rest of the system exercises; the registry rejects ops instantiated at
+//! unsupported types with `Unimplemented`, the same behaviour a TF binary
+//! without a registered kernel exhibits.
+
+use crate::error::{Result, Status};
+
+/// Element type of a tensor. Order is wire-format-stable (checkpoints and
+/// the distributed proto encode `as_u8`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F64,
+    I32,
+    I64,
+    U8,
+    Bool,
+    Str,
+    /// Truncated 16-bit float used by the §5.5 lossy wire compression.
+    /// Never a kernel compute type — it exists only inside Send/Recv.
+    BF16,
+}
+
+impl DType {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::F64 => 1,
+            DType::I32 => 2,
+            DType::I64 => 3,
+            DType::U8 => 4,
+            DType::Bool => 5,
+            DType::Str => 6,
+            DType::BF16 => 7,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<DType> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::F64,
+            2 => DType::I32,
+            3 => DType::I64,
+            4 => DType::U8,
+            5 => DType::Bool,
+            6 => DType::Str,
+            7 => DType::BF16,
+            _ => return Err(Status::invalid_argument(format!("unknown dtype byte {v}"))),
+        })
+    }
+
+    /// Bytes per element (strings report their pointer-free estimate of 16;
+    /// the cost model only needs an order of magnitude there).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::U8 | DType::Bool => 1,
+            DType::Str => 16,
+            DType::BF16 => 2,
+        }
+    }
+
+    pub fn is_floating(self) -> bool {
+        matches!(self, DType::F32 | DType::F64 | DType::BF16)
+    }
+
+    pub fn is_integer(self) -> bool {
+        matches!(self, DType::I32 | DType::I64 | DType::U8)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::F64 => "float64",
+            DType::I32 => "int32",
+            DType::I64 => "int64",
+            DType::U8 => "uint8",
+            DType::Bool => "bool",
+            DType::Str => "string",
+            DType::BF16 => "bfloat16",
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [DType; 8] = [
+        DType::F32,
+        DType::F64,
+        DType::I32,
+        DType::I64,
+        DType::U8,
+        DType::Bool,
+        DType::Str,
+        DType::BF16,
+    ];
+
+    #[test]
+    fn byte_roundtrip() {
+        for d in ALL {
+            assert_eq!(DType::from_u8(d.as_u8()).unwrap(), d);
+        }
+        assert!(DType::from_u8(200).is_err());
+    }
+
+    #[test]
+    fn classification() {
+        assert!(DType::F32.is_floating());
+        assert!(!DType::F32.is_integer());
+        assert!(DType::I64.is_integer());
+        assert!(!DType::Str.is_floating());
+        assert!(!DType::Bool.is_integer());
+    }
+
+    #[test]
+    fn sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::Bool.size_bytes(), 1);
+    }
+}

@@ -1,0 +1,472 @@
+//! The tensor substrate (paper §3 "Tensors"): a typed, multidimensional
+//! array whose backing store is reference counted ("Tensor backing store
+//! buffers are reference counted and are deallocated when no references
+//! remain") — here an `Arc<TensorData>`, so tensor clones and Send/Recv
+//! handoffs never copy element data.
+
+pub mod codec;
+pub mod dtype;
+pub mod shape;
+
+pub use dtype::DType;
+pub use shape::Shape;
+
+use crate::error::{Result, Status};
+use std::sync::Arc;
+
+/// Type-erased element storage. One variant per supported `DType`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+    Bool(Vec<bool>),
+    Str(Vec<String>),
+    /// Raw bf16 payload (upper 16 bits of an f32), §5.5 wire format only.
+    BF16(Vec<u16>),
+}
+
+impl TensorData {
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::F64(_) => DType::F64,
+            TensorData::I32(_) => DType::I32,
+            TensorData::I64(_) => DType::I64,
+            TensorData::U8(_) => DType::U8,
+            TensorData::Bool(_) => DType::Bool,
+            TensorData::Str(_) => DType::Str,
+            TensorData::BF16(_) => DType::BF16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::F64(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::I64(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+            TensorData::Bool(v) => v.len(),
+            TensorData::Str(v) => v.len(),
+            TensorData::BF16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A typed, multidimensional array with shared backing store.
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    shape: Shape,
+    data: Arc<TensorData>,
+}
+
+impl Tensor {
+    // ---- constructors -------------------------------------------------
+
+    pub fn new(shape: impl Into<Shape>, data: TensorData) -> Result<Tensor> {
+        let shape = shape.into();
+        if shape.num_elements() != data.len() {
+            return Err(Status::invalid_argument(format!(
+                "shape {shape} needs {} elements, data has {}",
+                shape.num_elements(),
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data: Arc::new(data) })
+    }
+
+    pub fn from_f32(shape: impl Into<Shape>, v: Vec<f32>) -> Result<Tensor> {
+        Tensor::new(shape, TensorData::F32(v))
+    }
+
+    pub fn from_f64(shape: impl Into<Shape>, v: Vec<f64>) -> Result<Tensor> {
+        Tensor::new(shape, TensorData::F64(v))
+    }
+
+    pub fn from_i32(shape: impl Into<Shape>, v: Vec<i32>) -> Result<Tensor> {
+        Tensor::new(shape, TensorData::I32(v))
+    }
+
+    pub fn from_i64(shape: impl Into<Shape>, v: Vec<i64>) -> Result<Tensor> {
+        Tensor::new(shape, TensorData::I64(v))
+    }
+
+    pub fn from_bool(shape: impl Into<Shape>, v: Vec<bool>) -> Result<Tensor> {
+        Tensor::new(shape, TensorData::Bool(v))
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(Shape::scalar(), vec![v]).unwrap()
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::from_i32(Shape::scalar(), vec![v]).unwrap()
+    }
+
+    pub fn scalar_i64(v: i64) -> Tensor {
+        Tensor::from_i64(Shape::scalar(), vec![v]).unwrap()
+    }
+
+    pub fn scalar_bool(v: bool) -> Tensor {
+        Tensor::from_bool(Shape::scalar(), vec![v]).unwrap()
+    }
+
+    pub fn scalar_str(v: impl Into<String>) -> Tensor {
+        Tensor::new(Shape::scalar(), TensorData::Str(vec![v.into()])).unwrap()
+    }
+
+    /// All-zeros tensor of the given dtype/shape.
+    pub fn zeros(dtype: DType, shape: impl Into<Shape>) -> Result<Tensor> {
+        let shape = shape.into();
+        let n = shape.num_elements();
+        let data = match dtype {
+            DType::F32 => TensorData::F32(vec![0.0; n]),
+            DType::F64 => TensorData::F64(vec![0.0; n]),
+            DType::I32 => TensorData::I32(vec![0; n]),
+            DType::I64 => TensorData::I64(vec![0; n]),
+            DType::U8 => TensorData::U8(vec![0; n]),
+            DType::Bool => TensorData::Bool(vec![false; n]),
+            DType::Str => TensorData::Str(vec![String::new(); n]),
+            DType::BF16 => TensorData::BF16(vec![0; n]),
+        };
+        Tensor::new(shape, data)
+    }
+
+    /// Constant-filled f32 tensor.
+    pub fn fill_f32(shape: impl Into<Shape>, v: f32) -> Tensor {
+        let shape = shape.into();
+        let n = shape.num_elements();
+        Tensor::from_f32(shape, vec![v; n]).unwrap()
+    }
+
+    // ---- accessors -----------------------------------------------------
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.num_elements()
+    }
+
+    /// Approximate size in bytes (what the §3.2.1 cost model and §5.5
+    /// compression accounting use).
+    pub fn size_bytes(&self) -> usize {
+        match &*self.data {
+            TensorData::Str(v) => v.iter().map(|s| s.len() + 8).sum(),
+            d => d.len() * d.dtype().size_bytes(),
+        }
+    }
+
+    pub fn data(&self) -> &TensorData {
+        &self.data
+    }
+
+    /// Number of outstanding references to the backing store.
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.data)
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &*self.data {
+            TensorData::F32(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected float32, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<&[f64]> {
+        match &*self.data {
+            TensorData::F64(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected float64, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &*self.data {
+            TensorData::I32(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected int32, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<&[i64]> {
+        match &*self.data {
+            TensorData::I64(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected int64, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &*self.data {
+            TensorData::U8(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected uint8, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<&[bool]> {
+        match &*self.data {
+            TensorData::Bool(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected bool, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_str_slice(&self) -> Result<&[String]> {
+        match &*self.data {
+            TensorData::Str(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected string, got {}", d.dtype()))),
+        }
+    }
+
+    pub fn as_bf16_raw(&self) -> Result<&[u16]> {
+        match &*self.data {
+            TensorData::BF16(v) => Ok(v),
+            d => Err(Status::invalid_argument(format!("expected bfloat16, got {}", d.dtype()))),
+        }
+    }
+
+    /// Scalar extraction helpers.
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(Status::invalid_argument(format!(
+                "expected scalar, got shape {}",
+                self.shape
+            )));
+        }
+        Ok(v[0])
+    }
+
+    pub fn scalar_value_bool(&self) -> Result<bool> {
+        let v = self.as_bool()?;
+        if v.len() != 1 {
+            return Err(Status::invalid_argument(format!(
+                "expected scalar, got shape {}",
+                self.shape
+            )));
+        }
+        Ok(v[0])
+    }
+
+    pub fn scalar_value_i32(&self) -> Result<i32> {
+        let v = self.as_i32()?;
+        if v.len() != 1 {
+            return Err(Status::invalid_argument(format!(
+                "expected scalar, got shape {}",
+                self.shape
+            )));
+        }
+        Ok(v[0])
+    }
+
+    pub fn scalar_value_i64(&self) -> Result<i64> {
+        let v = self.as_i64()?;
+        if v.len() != 1 {
+            return Err(Status::invalid_argument(format!(
+                "expected scalar, got shape {}",
+                self.shape
+            )));
+        }
+        Ok(v[0])
+    }
+
+    // ---- transformations ------------------------------------------------
+
+    /// Reshape: shares the backing store (no copy).
+    pub fn reshape(&self, shape: impl Into<Shape>) -> Result<Tensor> {
+        let shape = shape.into();
+        self.shape.check_same_elements(&shape)?;
+        Ok(Tensor { shape, data: Arc::clone(&self.data) })
+    }
+
+    /// Cast between numeric dtypes (copies).
+    pub fn cast(&self, to: DType) -> Result<Tensor> {
+        if to == self.dtype() {
+            return Ok(self.clone());
+        }
+        let f64s: Vec<f64> = match &*self.data {
+            TensorData::F32(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::F64(v) => v.clone(),
+            TensorData::I32(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::I64(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::U8(v) => v.iter().map(|&x| x as f64).collect(),
+            TensorData::Bool(v) => v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect(),
+            TensorData::Str(_) | TensorData::BF16(_) => {
+                return Err(Status::unimplemented(format!(
+                    "cast from {} to {to}",
+                    self.dtype()
+                )))
+            }
+        };
+        let data = match to {
+            DType::F32 => TensorData::F32(f64s.iter().map(|&x| x as f32).collect()),
+            DType::F64 => TensorData::F64(f64s),
+            DType::I32 => TensorData::I32(f64s.iter().map(|&x| x as i32).collect()),
+            DType::I64 => TensorData::I64(f64s.iter().map(|&x| x as i64).collect()),
+            DType::U8 => TensorData::U8(f64s.iter().map(|&x| x as u8).collect()),
+            DType::Bool => TensorData::Bool(f64s.iter().map(|&x| x != 0.0).collect()),
+            DType::Str | DType::BF16 => {
+                return Err(Status::unimplemented(format!(
+                    "cast from {} to {to}",
+                    self.dtype()
+                )))
+            }
+        };
+        Tensor::new(self.shape.clone(), data)
+    }
+
+    /// Elementwise approximate equality for tests: exact for non-floats.
+    pub fn allclose(&self, other: &Tensor, atol: f64, rtol: f64) -> bool {
+        if self.shape != other.shape || self.dtype() != other.dtype() {
+            return false;
+        }
+        match (&*self.data, &*other.data) {
+            (TensorData::F32(a), TensorData::F32(b)) => a
+                .iter()
+                .zip(b)
+                .all(|(&x, &y)| close(x as f64, y as f64, atol, rtol)),
+            (TensorData::F64(a), TensorData::F64(b)) => {
+                a.iter().zip(b).all(|(&x, &y)| close(x, y, atol, rtol))
+            }
+            (a, b) => a == b,
+        }
+    }
+
+    /// Any non-finite float elements? (§6 lesson 5 "guard against
+    /// numerical errors" — the CheckNumerics op uses this.)
+    pub fn has_non_finite(&self) -> bool {
+        match &*self.data {
+            TensorData::F32(v) => v.iter().any(|x| !x.is_finite()),
+            TensorData::F64(v) => v.iter().any(|x| !x.is_finite()),
+            _ => false,
+        }
+    }
+}
+
+fn close(x: f64, y: f64, atol: f64, rtol: f64) -> bool {
+    if x.is_nan() && y.is_nan() {
+        return true;
+    }
+    (x - y).abs() <= atol + rtol * y.abs()
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Self) -> bool {
+        self.shape == other.shape && self.data == other.data
+    }
+}
+
+impl std::fmt::Display for Tensor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tensor<{} {}>", self.dtype(), self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.dtype(), DType::F32);
+        assert_eq!(t.num_elements(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(Tensor::from_f32(vec![2, 2], vec![1., 2., 3.]).is_err());
+    }
+
+    #[test]
+    fn reshape_shares_buffer() {
+        let t = Tensor::from_f32(vec![2, 3], vec![0.0; 6]).unwrap();
+        let r = t.reshape(vec![3, 2]).unwrap();
+        assert_eq!(r.shape(), &Shape(vec![3, 2]));
+        assert_eq!(t.ref_count(), 2);
+        assert!(t.reshape(vec![5]).is_err());
+    }
+
+    #[test]
+    fn clone_is_refcounted() {
+        let t = Tensor::from_f32(vec![4], vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(t.ref_count(), 1);
+        let u = t.clone();
+        assert_eq!(t.ref_count(), 2);
+        drop(u);
+        assert_eq!(t.ref_count(), 1);
+    }
+
+    #[test]
+    fn cast_roundtrip() {
+        let t = Tensor::from_i32(vec![3], vec![1, 2, 3]).unwrap();
+        let f = t.cast(DType::F32).unwrap();
+        assert_eq!(f.as_f32().unwrap(), &[1.0, 2.0, 3.0]);
+        let back = f.cast(DType::I32).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[1, 2, 3]);
+        let b = t.cast(DType::Bool).unwrap();
+        assert_eq!(b.as_bool().unwrap(), &[true, true, true]);
+    }
+
+    #[test]
+    fn zeros_all_dtypes() {
+        for d in [DType::F32, DType::F64, DType::I32, DType::I64, DType::U8, DType::Bool] {
+            let t = Tensor::zeros(d, vec![2, 2]).unwrap();
+            assert_eq!(t.dtype(), d);
+            assert_eq!(t.num_elements(), 4);
+        }
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2], vec![1.0 + 1e-7, 2.0 - 1e-7]).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        let c = Tensor::from_f32(vec![2], vec![1.1, 2.0]).unwrap();
+        assert!(!a.allclose(&c, 1e-5, 1e-5));
+        // Shape mismatch
+        let d = Tensor::from_f32(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        assert!(!a.allclose(&d, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn non_finite_detection() {
+        let t = Tensor::from_f32(vec![2], vec![1.0, f32::NAN]).unwrap();
+        assert!(t.has_non_finite());
+        let u = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(!u.has_non_finite());
+        let inf = Tensor::from_f32(vec![1], vec![f32::INFINITY]).unwrap();
+        assert!(inf.has_non_finite());
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        assert_eq!(Tensor::scalar_f32(3.5).scalar_value_f32().unwrap(), 3.5);
+        assert_eq!(Tensor::scalar_bool(true).scalar_value_bool().unwrap(), true);
+        assert_eq!(Tensor::scalar_i64(-7).scalar_value_i64().unwrap(), -7);
+        let v = Tensor::from_f32(vec![2], vec![1., 2.]).unwrap();
+        assert!(v.scalar_value_f32().is_err());
+    }
+
+    #[test]
+    fn string_tensor_size() {
+        let t = Tensor::new(
+            Shape::vector(2),
+            TensorData::Str(vec!["ab".into(), "cdef".into()]),
+        )
+        .unwrap();
+        assert_eq!(t.size_bytes(), 2 + 8 + 4 + 8);
+    }
+}

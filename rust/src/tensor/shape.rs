@@ -1,0 +1,162 @@
+//! Tensor shapes: arbitrary rank, row-major.
+//!
+//! Shapes here are always fully known at runtime (graph-construction-time
+//! inference may carry unknown dims, represented by `None` in
+//! `ops::shape_fn::PartialShape`).
+
+use crate::error::{Result, Status};
+
+/// A fully-defined shape.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn scalar() -> Shape {
+        Shape(vec![])
+    }
+
+    pub fn vector(n: usize) -> Shape {
+        Shape(vec![n])
+    }
+
+    pub fn matrix(r: usize, c: usize) -> Shape {
+        Shape(vec![r, c])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    pub fn is_scalar(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Row-major strides in elements.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut strides = vec![0; self.0.len()];
+        let mut acc = 1;
+        for i in (0..self.0.len()).rev() {
+            strides[i] = acc;
+            acc *= self.0[i];
+        }
+        strides
+    }
+
+    /// Validate that `other` has the same number of elements (for Reshape).
+    pub fn check_same_elements(&self, other: &Shape) -> Result<()> {
+        if self.num_elements() != other.num_elements() {
+            return Err(Status::invalid_argument(format!(
+                "cannot reshape {self} ({} elements) to {other} ({} elements)",
+                self.num_elements(),
+                other.num_elements()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Numpy-style broadcast of two shapes; error if incompatible.
+    pub fn broadcast(&self, other: &Shape) -> Result<Shape> {
+        let rank = self.rank().max(other.rank());
+        let mut out = vec![0usize; rank];
+        for i in 0..rank {
+            let a = if i < rank - self.rank() { 1 } else { self.0[i - (rank - self.rank())] };
+            let b = if i < rank - other.rank() { 1 } else { other.0[i - (rank - other.rank())] };
+            out[i] = if a == b {
+                a
+            } else if a == 1 {
+                b
+            } else if b == 1 {
+                a
+            } else {
+                return Err(Status::invalid_argument(format!(
+                    "shapes {self} and {other} are not broadcast-compatible"
+                )));
+            };
+        }
+        Ok(Shape(out))
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Shape {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Shape {
+        Shape(v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basics() {
+        let s = Shape::matrix(3, 4);
+        assert_eq!(s.rank(), 2);
+        assert_eq!(s.num_elements(), 12);
+        assert_eq!(s.strides(), vec![4, 1]);
+        assert!(Shape::scalar().is_scalar());
+        assert_eq!(Shape::scalar().num_elements(), 1);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::matrix(3, 4).to_string(), "[3,4]");
+        assert_eq!(Shape::scalar().to_string(), "[]");
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        let a = Shape(vec![4, 1]);
+        let b = Shape(vec![3]);
+        assert_eq!(a.broadcast(&b).unwrap(), Shape(vec![4, 3]));
+        let c = Shape(vec![2, 3]);
+        assert_eq!(c.broadcast(&Shape::scalar()).unwrap(), c);
+        assert!(Shape(vec![2, 3]).broadcast(&Shape(vec![4])).is_err());
+        assert_eq!(
+            Shape(vec![5, 1, 7]).broadcast(&Shape(vec![5, 6, 1])).unwrap(),
+            Shape(vec![5, 6, 7])
+        );
+    }
+
+    #[test]
+    fn reshape_check() {
+        assert!(Shape(vec![2, 6]).check_same_elements(&Shape(vec![3, 4])).is_ok());
+        assert!(Shape(vec![2, 6]).check_same_elements(&Shape(vec![5])).is_err());
+    }
+
+    #[test]
+    fn strides_high_rank() {
+        let s = Shape(vec![2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+    }
+}

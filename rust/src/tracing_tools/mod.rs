@@ -1,0 +1,204 @@
+//! EEG analog (§9.2): "collect and visualize very fine-grained information
+//! about the exact ordering and performance characteristics of the
+//! execution of TensorFlow graphs … reconstruct the execution of a
+//! distributed training step with microsecond-level details."
+//!
+//! The executor begins/ends a span per kernel invocation; spans carry the
+//! node name, op, device, thread, and µs timestamps. Export is
+//! chrome://tracing "trace event" JSON (the modern equivalent of the
+//! paper's EEG viewer) plus a text summary of where time went.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One completed kernel span.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub name: String,
+    pub op: String,
+    pub device: String,
+    pub thread: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// Collects events for one (or more) steps.
+pub struct TraceCollector {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+    next_thread_id: AtomicU64,
+}
+
+thread_local! {
+    static THREAD_ID: std::cell::Cell<u64> = const { std::cell::Cell::new(u64::MAX) };
+}
+
+impl TraceCollector {
+    pub fn new() -> Arc<TraceCollector> {
+        Arc::new(TraceCollector {
+            epoch: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            next_thread_id: AtomicU64::new(1),
+        })
+    }
+
+    fn thread_id(&self) -> u64 {
+        THREAD_ID.with(|c| {
+            if c.get() == u64::MAX {
+                c.set(self.next_thread_id.fetch_add(1, Ordering::Relaxed));
+            }
+            c.get()
+        })
+    }
+
+    /// Begin a span; returned guard records the event on `end()`.
+    pub fn begin(self: &Arc<Self>, name: &str, op: &str, device: &str) -> Span {
+        Span {
+            collector: Arc::clone(self),
+            name: name.to_string(),
+            op: op.to_string(),
+            device: device.to_string(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn record(&self, ev: Event) {
+        self.events.lock().unwrap().push(ev);
+    }
+
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Render chrome://tracing JSON ("trace event format", array form).
+    pub fn to_chrome_trace(&self) -> String {
+        let mut arr = Json::arr();
+        for ev in self.events.lock().unwrap().iter() {
+            arr.push(
+                Json::obj()
+                    .set("name", ev.name.clone())
+                    .set("cat", ev.op.clone())
+                    .set("ph", "X")
+                    .set("ts", ev.start_us)
+                    .set("dur", ev.dur_us.max(1))
+                    .set("pid", ev.device.clone())
+                    .set("tid", ev.thread),
+            );
+        }
+        arr.render()
+    }
+
+    /// Text summary: total µs per op, descending — the "appropriate detail
+    /// level" overview of §9.2.
+    pub fn summary(&self) -> String {
+        use std::collections::HashMap;
+        let mut per_op: HashMap<String, (u64, u64)> = HashMap::new();
+        for ev in self.events.lock().unwrap().iter() {
+            let e = per_op.entry(ev.op.clone()).or_default();
+            e.0 += ev.dur_us;
+            e.1 += 1;
+        }
+        let mut rows: Vec<(String, u64, u64)> =
+            per_op.into_iter().map(|(op, (us, n))| (op, us, n)).collect();
+        rows.sort_by(|a, b| b.1.cmp(&a.1));
+        let mut out = String::from("op                              total_us      count\n");
+        for (op, us, n) in rows {
+            out.push_str(&format!("{op:<30} {us:>10} {n:>10}\n"));
+        }
+        out
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// Span guard (explicit `end()`, so async kernels can carry it into their
+/// continuation).
+pub struct Span {
+    collector: Arc<TraceCollector>,
+    name: String,
+    op: String,
+    device: String,
+    start: Instant,
+}
+
+impl Span {
+    pub fn end(self) {
+        let start_us = self.start.duration_since(self.collector.epoch).as_micros() as u64;
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        let thread = self.collector.thread_id();
+        self.collector.record(Event {
+            name: self.name,
+            op: self.op,
+            device: self.device,
+            thread,
+            start_us,
+            dur_us,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_record_events() {
+        let c = TraceCollector::new();
+        let s = c.begin("MatMul_1", "MatMul", "/device:cpu:0");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        s.end();
+        let evs = c.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].op, "MatMul");
+        assert!(evs[0].dur_us >= 1000);
+    }
+
+    #[test]
+    fn chrome_trace_is_json_array() {
+        let c = TraceCollector::new();
+        c.begin("a", "Add", "d0").end();
+        c.begin("b", "Mul", "d1").end();
+        let j = c.to_chrome_trace();
+        assert!(j.starts_with('['));
+        assert!(j.ends_with(']'));
+        assert!(j.contains("\"ph\":\"X\""));
+        assert!(j.contains("\"pid\":\"d1\""));
+    }
+
+    #[test]
+    fn summary_aggregates_per_op() {
+        let c = TraceCollector::new();
+        c.begin("a1", "Add", "d").end();
+        c.begin("a2", "Add", "d").end();
+        c.begin("m", "MatMul", "d").end();
+        let s = c.summary();
+        assert!(s.contains("Add"));
+        assert!(s.contains("MatMul"));
+    }
+
+    #[test]
+    fn threads_get_distinct_ids() {
+        let c = TraceCollector::new();
+        let c2 = Arc::clone(&c);
+        c.begin("main", "Op", "d").end();
+        std::thread::spawn(move || {
+            c2.begin("other", "Op", "d").end();
+        })
+        .join()
+        .unwrap();
+        let evs = c.events();
+        assert_ne!(evs[0].thread, evs[1].thread);
+    }
+}

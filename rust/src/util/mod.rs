@@ -1,0 +1,6 @@
+//! Shared utilities: PRNG, JSON writer, thread pool, bench stats.
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

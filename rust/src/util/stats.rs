@@ -1,0 +1,130 @@
+//! Timing statistics used by the bench harness (`rust/benches/*`) and the
+//! experiment drivers. The image carries no `criterion`, so `cargo bench`
+//! targets use `harness = false` with this module: warmup, timed
+//! iterations, then mean / p50 / p95 / p99 over per-iteration samples.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics over a set of duration samples.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub total: Duration,
+}
+
+impl Summary {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Summary {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| -> Duration {
+            let idx = ((samples.len() as f64 - 1.0) * p).round() as usize;
+            samples[idx]
+        };
+        Summary {
+            iters: samples.len(),
+            mean: total / samples.len() as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: samples[0],
+            max: *samples.last().unwrap(),
+            total,
+        }
+    }
+
+    /// Throughput in items/sec given `items` processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` for `warmup` untimed and `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    Summary::from_samples(samples)
+}
+
+/// Bench with a time budget instead of a fixed iteration count.
+pub fn bench_for<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.is_empty() {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 1_000_000 {
+            break;
+        }
+    }
+    Summary::from_samples(samples)
+}
+
+/// Render one bench row, criterion-ish.
+pub fn report(name: &str, s: &Summary) {
+    println!(
+        "{name:<48} mean {:>12?}  p50 {:>12?}  p95 {:>12?}  p99 {:>12?}  ({} iters)",
+        s.mean, s.p50, s.p95, s.p99, s.iters
+    );
+}
+
+/// Render one bench row with a throughput column.
+pub fn report_throughput(name: &str, s: &Summary, items_per_iter: f64, unit: &str) {
+    println!(
+        "{name:<48} mean {:>12?}  p50 {:>12?}  {:>14.1} {unit}/s  ({} iters)",
+        s.mean,
+        s.p50,
+        s.throughput(items_per_iter),
+        s.iters
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = Summary::from_samples(samples);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(s.iters, 100);
+        assert_eq!(s.min, Duration::from_micros(1));
+        assert_eq!(s.max, Duration::from_micros(100));
+    }
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut count = 0;
+        let s = bench(2, 10, || {
+            count += 1;
+        });
+        assert_eq!(count, 12);
+        assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let s = bench(0, 5, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.throughput(100.0) > 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! A small fixed-size thread pool.
+//!
+//! Each RustFlow device owns one of these for kernel execution (the paper's
+//! per-device "arranging for the execution of kernels", §3 Devices), and the
+//! distributed worker uses one for serving RPCs. No work stealing: a shared
+//! injector queue with a condvar — profiling (EXPERIMENTS.md §Perf) showed
+//! the executor's dispatch overhead dominates long before queue contention
+//! does at the device counts we simulate.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Task>>,
+    cond: Condvar,
+    shutdown: AtomicBool,
+    in_flight: AtomicUsize,
+    idle_cond: Condvar,
+    idle_mutex: Mutex<()>,
+}
+
+/// Fixed-size thread pool. Dropping the pool joins all workers.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize, name: &str) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            cond: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle_cond: Condvar::new(),
+            idle_mutex: Mutex::new(()),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let shared = Arc::clone(&shared);
+            let handle = std::thread::Builder::new()
+                .name(format!("{name}-{i}"))
+                .spawn(move || worker_loop(shared))
+                .expect("spawn threadpool worker");
+            workers.push(handle);
+        }
+        ThreadPool { shared, workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Enqueue a task for execution.
+    pub fn execute(&self, task: impl FnOnce() + Send + 'static) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push_back(Box::new(task));
+        }
+        self.shared.cond.notify_one();
+    }
+
+    /// Block until every enqueued task has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_mutex.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle_cond.wait(guard).unwrap();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.cond.wait(q).unwrap();
+            }
+        };
+        task();
+        if shared.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _guard = shared.idle_mutex.lock().unwrap();
+            shared.idle_cond.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.cond.notify_all();
+        let me = std::thread::current().id();
+        for w in self.workers.drain(..) {
+            // The pool can be dropped *from* one of its own workers (the
+            // last Arc to the owning Device released inside an async-kernel
+            // continuation). Joining yourself is EDEADLK; detach instead —
+            // the shutdown flag makes the worker exit on its own.
+            if w.thread().id() == me {
+                continue;
+            }
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = ThreadPool::new(4, "test");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn wait_idle_with_no_tasks_returns() {
+        let pool = ThreadPool::new(2, "test");
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn tasks_can_enqueue_tasks() {
+        let pool = Arc::new(ThreadPool::new(2, "test"));
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool2 = Arc::clone(&pool);
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                for _ in 0..10 {
+                    let c = Arc::clone(&c);
+                    pool2.execute(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            });
+        }
+        // Spin until nested tasks finish (wait_idle covers them because
+        // in_flight is bumped before enqueue).
+        while counter.load(Ordering::SeqCst) < 10 {
+            std::thread::yield_now();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(3, "drop");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        drop(pool);
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+}

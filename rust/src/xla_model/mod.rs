@@ -1,0 +1,264 @@
+//! L3 driver for the AOT transformer train-step artifact: parses the
+//! artifact metadata (the rust/python contract emitted by aot.py),
+//! initializes parameters, generates synthetic token streams, and steps
+//! the model by executing the XLA program — the E16 end-to-end path.
+
+use crate::error::{Result, Status};
+use crate::runtime::{load_artifact, XlaExecutable};
+use crate::tensor::{Shape, Tensor, TensorData};
+use crate::util::rng::Pcg32;
+use std::path::Path;
+use std::sync::Arc;
+
+/// Parsed transformer artifact metadata.
+#[derive(Debug, Clone)]
+pub struct TransformerConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub params: Vec<(String, Shape, String)>, // (name, shape, init)
+}
+
+impl TransformerConfig {
+    /// Load the `.meta.txt` written next to the artifact.
+    pub fn load(meta_path: &Path) -> Result<TransformerConfig> {
+        let text = std::fs::read_to_string(meta_path)
+            .map_err(|e| Status::not_found(format!("{meta_path:?}: {e}")))?;
+        let mut cfg = TransformerConfig {
+            name: String::new(),
+            vocab: 0,
+            d_model: 0,
+            n_layers: 0,
+            n_heads: 0,
+            d_ff: 0,
+            seq_len: 0,
+            batch: 0,
+            lr: 0.0,
+            params: Vec::new(),
+        };
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("param ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().ok_or_else(|| Status::invalid_argument("bad param line"))?;
+                let dims = it.next().ok_or_else(|| Status::invalid_argument("bad param dims"))?;
+                let init = it.next().unwrap_or("normal");
+                let shape = Shape(
+                    dims.split(',')
+                        .filter(|s| !s.is_empty())
+                        .map(|s| s.parse::<usize>())
+                        .collect::<std::result::Result<Vec<_>, _>>()
+                        .map_err(|_| Status::invalid_argument(format!("bad dims {dims:?}")))?,
+                );
+                cfg.params.push((name.to_string(), shape, init.to_string()));
+            } else if let Some((k, v)) = line.split_once('=') {
+                match k {
+                    "name" => cfg.name = v.to_string(),
+                    "vocab" => cfg.vocab = v.parse().unwrap_or(0),
+                    "d_model" => cfg.d_model = v.parse().unwrap_or(0),
+                    "n_layers" => cfg.n_layers = v.parse().unwrap_or(0),
+                    "n_heads" => cfg.n_heads = v.parse().unwrap_or(0),
+                    "d_ff" => cfg.d_ff = v.parse().unwrap_or(0),
+                    "seq_len" => cfg.seq_len = v.parse().unwrap_or(0),
+                    "batch" => cfg.batch = v.parse().unwrap_or(0),
+                    "lr" => cfg.lr = v.parse().unwrap_or(0.0),
+                    _ => {}
+                }
+            }
+        }
+        if cfg.vocab == 0 || cfg.params.is_empty() {
+            return Err(Status::invalid_argument(format!("incomplete meta {meta_path:?}")));
+        }
+        Ok(cfg)
+    }
+
+    /// Load a preset's metadata from the artifact directory.
+    pub fn preset(name: &str) -> Result<TransformerConfig> {
+        let dir = crate::runtime::artifact_dir();
+        TransformerConfig::load(&dir.join(format!("transformer_{name}.meta.txt")))
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|(_, s, _)| s.num_elements()).sum()
+    }
+
+    pub fn hlo_path(&self, dir: &Path) -> std::path::PathBuf {
+        dir.join(format!("transformer_{}.hlo.txt", self.name))
+    }
+}
+
+/// Synthetic token stream with learnable structure: a noisy deterministic
+/// successor map (90% `next = succ[cur]`, 10% uniform noise). A capable LM
+/// approaches H = 0.1·ln(V) + H(0.9) ≈ low loss quickly — enough signal
+/// for the loss-decreases validation (real corpora are a data gate; see
+/// DESIGN.md substitutions).
+pub struct TokenGen {
+    succ: Vec<u32>,
+    rng: Pcg32,
+    vocab: usize,
+}
+
+impl TokenGen {
+    pub fn new(vocab: usize, seed: u64) -> TokenGen {
+        let mut rng = Pcg32::new(seed);
+        let mut succ: Vec<u32> = (0..vocab as u32).collect();
+        rng.shuffle(&mut succ);
+        TokenGen { succ, rng: Pcg32::new(seed ^ 0xDEAD), vocab }
+    }
+
+    /// Sample a [batch, seq+1] i32 token tensor.
+    pub fn batch(&mut self, batch: usize, seq_plus_one: usize) -> Tensor {
+        let mut out = Vec::with_capacity(batch * seq_plus_one);
+        for _ in 0..batch {
+            let mut cur = self.rng.next_below(self.vocab as u32);
+            out.push(cur as i32);
+            for _ in 1..seq_plus_one {
+                cur = if self.rng.next_f32() < 0.9 {
+                    self.succ[cur as usize]
+                } else {
+                    self.rng.next_below(self.vocab as u32)
+                };
+                out.push(cur as i32);
+            }
+        }
+        Tensor::new(Shape(vec![batch, seq_plus_one]), TensorData::I32(out)).unwrap()
+    }
+}
+
+/// Owns the executable + parameter state; one `train_step` = one XLA
+/// execution of the fused fwd/bwd/update program.
+pub struct XlaTrainer {
+    pub cfg: TransformerConfig,
+    exe: Arc<XlaExecutable>,
+    pub params: Vec<Tensor>,
+    gen: TokenGen,
+}
+
+impl XlaTrainer {
+    pub fn new(artifact_dir: &Path, cfg: &TransformerConfig, seed: u64) -> Result<XlaTrainer> {
+        let exe = load_artifact(&cfg.hlo_path(artifact_dir))?;
+        let mut rng = Pcg32::new(seed);
+        let params = cfg
+            .params
+            .iter()
+            .map(|(_, shape, init)| {
+                let n = shape.num_elements();
+                let data = match init.as_str() {
+                    "ones" => vec![1.0f32; n],
+                    "zeros" => vec![0.0; n],
+                    _ => (0..n).map(|_| rng.normal() * 0.02).collect(),
+                };
+                Tensor::from_f32(shape.clone(), data)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(XlaTrainer {
+            cfg: cfg.clone(),
+            exe,
+            params,
+            gen: TokenGen::new(cfg.vocab, seed ^ 0xBEEF),
+        })
+    }
+
+    /// Run one fused train step; returns the loss.
+    pub fn train_step(&mut self) -> Result<f32> {
+        let tokens = self.gen.batch(self.cfg.batch, self.cfg.seq_len + 1);
+        self.train_step_on(tokens)
+    }
+
+    /// Step on a caller-provided token batch (the distributed/data-parallel
+    /// drivers shard data themselves).
+    pub fn train_step_on(&mut self, tokens: Tensor) -> Result<f32> {
+        let mut inputs = Vec::with_capacity(1 + self.params.len());
+        inputs.push(tokens);
+        inputs.extend(self.params.iter().cloned());
+        let mut outputs = self.exe.run(&inputs)?;
+        if outputs.len() != 1 + self.params.len() {
+            return Err(Status::internal(format!(
+                "train step returned {} outputs, expected {}",
+                outputs.len(),
+                1 + self.params.len()
+            )));
+        }
+        let loss = outputs.remove(0).scalar_value_f32()?;
+        self.params = outputs;
+        Ok(loss)
+    }
+
+    /// Checkpoint the parameters (reuses the §3.3 bundle format).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let named: Vec<(String, Tensor)> = self
+            .cfg
+            .params
+            .iter()
+            .zip(&self.params)
+            .map(|((n, _, _), t)| (n.clone(), t.clone()))
+            .collect();
+        crate::checkpoint::save_bundle(path, &named)
+    }
+
+    pub fn restore(&mut self, path: &Path) -> Result<()> {
+        let bundle = crate::checkpoint::load_bundle(path)?;
+        for ((name, _, _), slot) in self.cfg.params.iter().zip(self.params.iter_mut()) {
+            *slot = bundle
+                .get(name)
+                .cloned()
+                .ok_or_else(|| Status::not_found(format!("param {name:?} not in checkpoint")))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_gen_learnable_structure() {
+        let mut g = TokenGen::new(64, 1);
+        let t = g.batch(4, 33);
+        assert_eq!(t.shape().dims(), &[4, 33]);
+        let v = t.as_i32().unwrap();
+        assert!(v.iter().all(|&x| (0..64).contains(&x)));
+        // Successor structure: most transitions follow the map.
+        let g2 = TokenGen::new(64, 1);
+        let mut follows = 0;
+        let mut total = 0;
+        for row in 0..4 {
+            for i in 0..32 {
+                let cur = v[row * 33 + i] as usize;
+                let next = v[row * 33 + i + 1] as u32;
+                total += 1;
+                if g2.succ[cur] == next {
+                    follows += 1;
+                }
+            }
+        }
+        assert!(follows * 10 >= total * 7, "{follows}/{total} transitions follow the map");
+    }
+
+    #[test]
+    fn meta_parse_roundtrip() {
+        let dir = std::env::temp_dir();
+        let p = dir.join(format!("rustflow-meta-{}.txt", std::process::id()));
+        std::fs::write(
+            &p,
+            "name=tiny\nvocab=128\nd_model=64\nn_layers=2\nn_heads=2\nd_ff=256\nseq_len=32\nbatch=8\nlr=0.1\nparam tok_emb 128,64 normal\nparam b1 256 zeros\n",
+        )
+        .unwrap();
+        let cfg = TransformerConfig::load(&p).unwrap();
+        assert_eq!(cfg.vocab, 128);
+        assert_eq!(cfg.params.len(), 2);
+        assert_eq!(cfg.params[0].1.dims(), &[128, 64]);
+        assert_eq!(cfg.params[1].2, "zeros");
+        assert_eq!(cfg.num_params(), 128 * 64 + 256);
+    }
+}

@@ -1,0 +1,114 @@
+//! The three-layer stack end to end: rust coordinator (L3) executing
+//! AOT-compiled JAX (L2) containing Pallas kernels (L1) via PJRT.
+//! Requires `make artifacts`.
+
+use rustflow::graph::AttrValue;
+use rustflow::runtime::{artifact_dir, load_artifact};
+use rustflow::xla_model::{TransformerConfig, XlaTrainer};
+use rustflow::{DType, GraphBuilder, Session, SessionOptions, Tensor};
+
+fn relu_artifact() -> std::path::PathBuf {
+    artifact_dir().join("relu_layer.hlo.txt")
+}
+
+#[test]
+fn relu_layer_artifact_matches_cpu_kernels() {
+    // The same relu(x·w + b) computed by (a) the Pallas-kernel XLA
+    // artifact and (b) rustflow's own CPU kernels must agree.
+    let exe = load_artifact(&relu_artifact()).expect("run `make artifacts`");
+    let (m, k, n) = (32usize, 64usize, 128usize);
+    let mut rng = rustflow::util::rng::Pcg32::new(5);
+    let x = Tensor::from_f32(vec![m, k], (0..m * k).map(|_| rng.normal()).collect()).unwrap();
+    let w = Tensor::from_f32(vec![k, n], (0..k * n).map(|_| rng.normal() * 0.1).collect()).unwrap();
+    let b = Tensor::from_f32(vec![n], (0..n).map(|_| rng.normal() * 0.1).collect()).unwrap();
+    let xla_out = exe.run(&[x.clone(), w.clone(), b.clone()]).unwrap().remove(0);
+
+    let mm = rustflow::kernels::matrix::matmul(&x, &w, false, false).unwrap();
+    let pre = rustflow::kernels::nn::bias_add(&mm, &b).unwrap();
+    let cpu_out = rustflow::kernels::nn::relu(&pre).unwrap();
+    assert!(
+        xla_out.allclose(&cpu_out, 1e-4, 1e-4),
+        "XLA artifact and native kernels disagree"
+    );
+}
+
+#[test]
+fn xla_call_op_inside_a_graph() {
+    // §5.4 as a graph node: XlaCall participates in a dataflow graph like
+    // any other op.
+    let exe_path = relu_artifact();
+    load_artifact(&exe_path).expect("run `make artifacts`");
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let w = b.constant(Tensor::fill_f32(vec![64, 128], 0.01));
+    let bias = b.constant(Tensor::fill_f32(vec![128], -0.5));
+    let call = b
+        .op(
+            "XlaCall",
+            "relu_layer",
+            vec![x, w, bias],
+            vec![
+                ("path", AttrValue::Str(exe_path.to_string_lossy().into())),
+                ("out_types", AttrValue::ListType(vec![DType::F32])),
+            ],
+        )
+        .unwrap();
+    let out = rustflow::Endpoint::new(call, 0);
+    let s = b.reduce_sum(out, None);
+    let sname = format!("{}:0", b.graph.node(s.node).name);
+    let sess = Session::new(b.into_graph(), SessionOptions::default());
+    let x_val = Tensor::fill_f32(vec![32, 64], 1.0);
+    let got = sess.run(&[("x", x_val)], &[&sname], &[]).unwrap();
+    // relu(1·0.01·64 - 0.5) = relu(0.14) = 0.14 per element, 32*128 elements.
+    let expect = 0.14f32 * 32.0 * 128.0;
+    let v = got[0].scalar_value_f32().unwrap();
+    assert!((v - expect).abs() / expect < 1e-3, "got {v}, want {expect}");
+}
+
+#[test]
+fn transformer_trainer_loss_decreases() {
+    let cfg = TransformerConfig::preset("tiny").expect("run `make artifacts`");
+    assert!(cfg.num_params() > 50_000);
+    let mut trainer = XlaTrainer::new(&artifact_dir(), &cfg, 7).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        losses.push(trainer.train_step().unwrap());
+    }
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    // Initial loss ≈ ln(vocab) for random init.
+    assert!((first - (cfg.vocab as f32).ln()).abs() < 1.0, "initial loss {first}");
+    assert!(last < first * 0.9, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn transformer_checkpoint_roundtrip() {
+    let cfg = TransformerConfig::preset("tiny").expect("run `make artifacts`");
+    let mut trainer = XlaTrainer::new(&artifact_dir(), &cfg, 11).unwrap();
+    for _ in 0..3 {
+        trainer.train_step().unwrap();
+    }
+    let snapshot: Vec<Tensor> = trainer.params.clone();
+    let path = std::env::temp_dir().join(format!("rf-xla-ckpt-{}.ckpt", std::process::id()));
+    trainer.save(&path).unwrap();
+    for _ in 0..3 {
+        trainer.train_step().unwrap();
+    }
+    assert!(!trainer.params[0].allclose(&snapshot[0], 1e-7, 1e-7), "params should have moved");
+    trainer.restore(&path).unwrap();
+    for (a, b) in trainer.params.iter().zip(&snapshot) {
+        assert!(a.allclose(b, 0.0, 0.0), "restore must be exact");
+    }
+}
+
+#[test]
+fn trainer_deterministic_given_seed() {
+    let cfg = TransformerConfig::preset("tiny").expect("run `make artifacts`");
+    let mut a = XlaTrainer::new(&artifact_dir(), &cfg, 3).unwrap();
+    let mut b = XlaTrainer::new(&artifact_dir(), &cfg, 3).unwrap();
+    for _ in 0..3 {
+        let la = a.train_step().unwrap();
+        let lb = b.train_step().unwrap();
+        assert_eq!(la, lb, "same seed must reproduce the loss trajectory");
+    }
+}

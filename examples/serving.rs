@@ -1,0 +1,106 @@
+//! Inference serving with dynamic batching: N client threads hammer one
+//! ModelServer with single-row MLP inference requests, first with
+//! batching disabled (every request is its own Session step) and then
+//! with the dynamic batcher coalescing concurrent requests into shared
+//! steps. Prints throughput, latency percentiles, and the mean batch
+//! size actually achieved.
+//!
+//!     cargo run --release --example serving -- [clients] [requests-per-client]
+
+use rustflow::serving::{BatchConfig, ModelServer};
+use rustflow::util::stats::Summary;
+use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> rustflow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(250);
+    let (dim, hidden, classes) = (64usize, 256usize, 10usize);
+
+    // ---- the served model: a 2-layer MLP classifier ----------------------
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32)?;
+    let (logits, _vars) = models::mlp(&mut b, x, &[dim, hidden, classes], 7)?;
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> =
+        b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let session = Arc::new(Session::new(
+        b.into_graph(),
+        SessionOptions { threads_per_device: 4, ..Default::default() },
+    ));
+    session.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())?;
+
+    println!(
+        "serving a {dim}->{hidden}->{classes} MLP to {clients} clients x {per_client} requests\n"
+    );
+    let configs = [
+        ("unbatched (max_batch=1)", BatchConfig::unbatched()),
+        (
+            "dynamic batching (max_batch=32, delay=2ms)",
+            BatchConfig {
+                max_batch_size: 32,
+                max_batch_delay: Duration::from_millis(2),
+                queue_capacity: 4096,
+                ..BatchConfig::default()
+            },
+        ),
+    ];
+    for (label, config) in configs {
+        let server = Arc::new(ModelServer::with_session(Arc::clone(&session), config));
+        let (rps, latency) = drive(&server, clients, per_client, dim, classes, &fetch);
+        let stats = server.stats();
+        println!("{label}:");
+        println!("  {rps:10.0} requests/sec");
+        println!(
+            "  latency p50 {:?}  p95 {:?}  p99 {:?}",
+            latency.p50, latency.p95, latency.p99
+        );
+        println!(
+            "  {} requests -> {} steps (mean batch {:.1} rows)\n",
+            stats.requests,
+            stats.batches,
+            stats.mean_batch_rows()
+        );
+        server.shutdown();
+    }
+    Ok(())
+}
+
+/// Run the client fleet; returns (requests/sec, latency summary).
+fn drive(
+    server: &Arc<ModelServer>,
+    clients: usize,
+    per_client: usize,
+    dim: usize,
+    classes: usize,
+    fetch: &str,
+) -> (f64, Summary) {
+    let start = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let server = Arc::clone(server);
+        let fetch = fetch.to_string();
+        handles.push(std::thread::spawn(move || {
+            let mut latencies = Vec::with_capacity(per_client);
+            for i in 0..per_client {
+                let row: Vec<f32> =
+                    (0..dim).map(|j| ((c * per_client + i + j) % 17) as f32 * 0.1).collect();
+                let input = Tensor::from_f32(vec![1, dim], row).unwrap();
+                let t = Instant::now();
+                let out = server.run(&[("x", input)], &[&fetch]).unwrap();
+                latencies.push(t.elapsed());
+                assert_eq!(out[0].shape().dims(), &[1, classes]);
+            }
+            latencies
+        }));
+    }
+    let mut all = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        all.extend(h.join().expect("client thread panicked"));
+    }
+    let elapsed = start.elapsed();
+    let total = (clients * per_client) as f64;
+    (total / elapsed.as_secs_f64(), Summary::from_samples(all))
+}

@@ -1,0 +1,93 @@
+//! Serving throughput: requests/sec vs. dynamic-batch size at several
+//! client concurrencies. The acceptance-criterion row is batch=32 vs
+//! batch=1 at 8 concurrent clients — batching amortizes the per-step
+//! overhead (dispatch, executor wakeup) over every row in the batch, so
+//! throughput should rise with max_batch_size while per-request latency
+//! stays bounded by max_batch_delay.
+//!
+//!     cargo bench --bench serving
+
+use rustflow::serving::{BatchConfig, ModelServer};
+use rustflow::util::stats::Summary;
+use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() {
+    // Small per-row compute so the fixed per-step overhead (dispatch,
+    // executor wakeup) is the dominant cost — the thing batching
+    // amortizes. Scale dims up to see the compute-bound regime instead.
+    let (dim, hidden, classes) = (32usize, 128usize, 10usize);
+    let per_client = 200usize;
+
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let (logits, _vars) = models::mlp(&mut b, x, &[dim, hidden, classes], 7).unwrap();
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> =
+        b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let session = Arc::new(Session::new(
+        b.into_graph(),
+        SessionOptions { threads_per_device: 4, ..Default::default() },
+    ));
+    session
+        .run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+        .unwrap();
+
+    println!(
+        "{:<40} {:>12} {:>12} {:>12} {:>10}",
+        "config", "req/s", "p50", "p95", "mean batch"
+    );
+    for clients in [8usize, 16] {
+        for max_batch in [1usize, 8, 32] {
+            let config = BatchConfig {
+                max_batch_size: max_batch,
+                max_batch_delay: Duration::from_millis(2),
+                queue_capacity: 4096,
+                ..BatchConfig::default()
+            };
+            let server = Arc::new(ModelServer::with_session(Arc::clone(&session), config));
+            // Warmup: compile the cached step and settle the lane thread.
+            server
+                .run(&[("x", Tensor::fill_f32(vec![1, dim], 0.5))], &[&fetch])
+                .unwrap();
+
+            let start = Instant::now();
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let server = Arc::clone(&server);
+                let fetch = fetch.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut latencies = Vec::with_capacity(per_client);
+                    for i in 0..per_client {
+                        let v = ((c + 1) * (i + 1) % 13) as f32 * 0.1;
+                        let input = Tensor::fill_f32(vec![1, dim], v);
+                        let t = Instant::now();
+                        let out = server.run(&[("x", input)], &[&fetch]).unwrap();
+                        latencies.push(t.elapsed());
+                        std::hint::black_box(out);
+                    }
+                    latencies
+                }));
+            }
+            let mut all = Vec::with_capacity(clients * per_client);
+            for h in handles {
+                all.extend(h.join().expect("client thread panicked"));
+            }
+            let elapsed = start.elapsed();
+            let summary = Summary::from_samples(all);
+            let rps = (clients * per_client) as f64 / elapsed.as_secs_f64();
+            let stats = server.stats();
+            println!(
+                "{:<40} {:>12.0} {:>12?} {:>12?} {:>10.1}",
+                format!("clients={clients} max_batch={max_batch}"),
+                rps,
+                summary.p50,
+                summary.p95,
+                stats.mean_batch_rows()
+            );
+            server.shutdown();
+        }
+        println!();
+    }
+}

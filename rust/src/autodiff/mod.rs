@@ -21,7 +21,7 @@ pub mod grad_fns;
 use crate::error::{Result, Status};
 use crate::graph::{Endpoint, NodeId};
 use crate::ops::builder::GraphBuilder;
-use once_cell::sync::Lazy;
+use std::sync::LazyLock as Lazy;
 use std::collections::{HashMap, HashSet};
 use std::sync::RwLock;
 

@@ -12,7 +12,7 @@
 use super::kernels::{Kernel, KernelContext, KernelRegistry};
 use crate::error::{Result, Status};
 use crate::tensor::{codec, Tensor};
-use byteorder::{ByteOrder, LittleEndian};
+use crate::util::byteorder::LittleEndian;
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::Path;

@@ -13,7 +13,7 @@ use crate::error::{Result, Status};
 use crate::kernels::{Kernel, KernelContext, KernelRegistry};
 use crate::tensor::{Shape, Tensor, TensorData};
 use crate::util::rng::Pcg32;
-use byteorder::{ByteOrder, LittleEndian};
+use crate::util::byteorder::LittleEndian;
 use std::io::{Read, Write};
 use std::path::Path;
 use std::sync::Mutex;

@@ -6,7 +6,7 @@
 use crate::error::{Code, Result, Status};
 use crate::graph::Graph;
 use crate::tensor::{codec, Tensor};
-use byteorder::{ByteOrder, LittleEndian};
+use crate::util::byteorder::LittleEndian;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 

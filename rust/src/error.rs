@@ -4,8 +4,6 @@
 //! plus a human-readable message. The distributed runtime ships these codes
 //! over the wire, so they must stay stable (see `distributed::proto`).
 
-use thiserror::Error;
-
 /// Status codes, a subset of TF's `error::Code` that this implementation
 /// actually produces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -61,12 +59,19 @@ impl Code {
 }
 
 /// The error type used throughout RustFlow.
-#[derive(Debug, Clone, Error)]
-#[error("{code:?}: {message}")]
+#[derive(Debug, Clone)]
 pub struct Status {
     pub code: Code,
     pub message: String,
 }
+
+impl std::fmt::Display for Status {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for Status {}
 
 impl Status {
     pub fn new(code: Code, message: impl Into<String>) -> Self {
@@ -110,12 +115,6 @@ impl Status {
 impl From<std::io::Error> for Status {
     fn from(e: std::io::Error) -> Self {
         Status::unavailable(format!("io error: {e}"))
-    }
-}
-
-impl From<anyhow::Error> for Status {
-    fn from(e: anyhow::Error) -> Self {
-        Status::internal(format!("{e:#}"))
     }
 }
 

@@ -6,7 +6,7 @@
 use super::{AttrValue, Endpoint, Graph, Node, NodeId};
 use crate::error::{Result, Status};
 use crate::tensor::{codec, DType, Shape};
-use byteorder::{ByteOrder, LittleEndian};
+use crate::util::byteorder::LittleEndian;
 
 pub fn encode_graph(g: &Graph) -> Vec<u8> {
     let mut out = Vec::new();

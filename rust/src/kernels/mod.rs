@@ -25,7 +25,7 @@ use crate::graph::AttrValue;
 use crate::rendezvous::Rendezvous;
 use crate::resources::ResourceMgr;
 use crate::tensor::Tensor;
-use once_cell::sync::Lazy;
+use std::sync::LazyLock as Lazy;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};

@@ -6,6 +6,8 @@
 //! AOT-compiled JAX/Pallas programs executed through PJRT.
 //!
 //! Layering (see DESIGN.md):
+//! * L4 — [`serving`]: an inference front end over a Session — bounded
+//!   admission, dynamic request batching, per-request handles.
 //! * L3 — this crate: graphs, sessions, executors, placement, Send/Recv
 //!   partitioning, distributed master/worker, queues, autodiff,
 //!   checkpointing, optimizations, tooling.
@@ -13,6 +15,8 @@
 //! * L1 — `python/compile/kernels/`: Pallas kernels inside the L2 program.
 //! * Bridge — [`runtime`]: loads `artifacts/*.hlo.txt` and exposes them to
 //!   graphs as the `XlaCall` op.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod autodiff;
 pub mod baseline;
@@ -34,6 +38,7 @@ pub mod models;
 pub mod queue;
 pub mod replicate;
 pub mod runtime;
+pub mod serving;
 pub mod session;
 pub mod summary;
 pub mod xla_model;

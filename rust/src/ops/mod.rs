@@ -3,7 +3,7 @@
 //! (see `crate::kernels`) is a device-specific implementation. "A
 //! TensorFlow binary defines the sets of operations and kernels available
 //! via a registration mechanism, and this set can be extended" — here the
-//! registries are process-global `once_cell` maps with `register_op` /
+//! registries are process-global `LazyLock` maps with `register_op` /
 //! `register_kernel` entry points, and the built-in set is installed on
 //! first use.
 
@@ -11,7 +11,7 @@ pub mod builder;
 
 use crate::error::{Result, Status};
 use crate::graph::Node;
-use once_cell::sync::Lazy;
+use std::sync::LazyLock as Lazy;
 use std::collections::HashMap;
 use std::sync::RwLock;
 

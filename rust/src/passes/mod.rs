@@ -1,4 +1,19 @@
-//! Graph optimization passes (§5).
+//! Graph optimization passes (§5 "Optimizations").
+//!
+//! Passes run inside `Session::build_step`, after pruning and before
+//! placement/partitioning, so they see exactly the subgraph a Run will
+//! execute and their cost is paid once per cached signature:
+//!
+//! * [`cse`] — §5.1 common subexpression elimination over the pruned
+//!   graph (Click's GVN-style hashing of op, inputs, and attrs).
+//! * [`schedule`] — §5.2 Recv scheduling: delay the start of Recv ops
+//!   until just before their consumers need them, bounding peak memory
+//!   on the receiving device instead of pulling every tensor eagerly.
+//!
+//! Each pass is pure graph→graph (plus stats), so they compose and are
+//! individually ablatable — `SessionOptions::enable_cse` /
+//! `enable_recv_scheduling` gate them, and the ablation benches flip
+//! those flags to measure each pass's contribution.
 
 pub mod cse;
 pub mod schedule;

@@ -1,0 +1,168 @@
+//! The real PJRT bridge (`--features xla`): compiles HLO-text artifacts
+//! on a PJRT CPU client and executes them with rustflow tensors in/out.
+
+use crate::error::{Result, Status};
+use crate::kernels::{Kernel, KernelRegistry};
+use crate::tensor::{Shape, Tensor, TensorData};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::LazyLock as Lazy;
+use std::sync::{Arc, Mutex};
+
+/// A compiled XLA executable plus conversion helpers.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+// xla_extension's PJRT CPU client is thread-safe; the crate just doesn't
+// mark the wrappers Send/Sync.
+unsafe impl Send for XlaExecutable {}
+unsafe impl Sync for XlaExecutable {}
+
+struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<XlaExecutable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+static RUNTIME: Lazy<std::result::Result<Runtime, String>> = Lazy::new(|| {
+    let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT cpu client: {e}"))?;
+    Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+});
+
+fn runtime() -> Result<&'static Runtime> {
+    RUNTIME.as_ref().map_err(|e| Status::unavailable(e.clone()))
+}
+
+/// Load (or fetch from cache) an HLO-text artifact and compile it on the
+/// PJRT CPU client. Compilation happens once per path per process.
+pub fn load_artifact(path: &Path) -> Result<Arc<XlaExecutable>> {
+    let rt = runtime()?;
+    if let Some(exe) = rt.cache.lock().unwrap().get(path) {
+        return Ok(Arc::clone(exe));
+    }
+    if !path.exists() {
+        return Err(Status::not_found(format!(
+            "artifact {path:?} not found — run `make artifacts` first"
+        )));
+    }
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().ok_or_else(|| Status::invalid_argument("non-utf8 path"))?,
+    )
+    .map_err(|e| Status::invalid_argument(format!("parse {path:?}: {e}")))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = rt
+        .client
+        .compile(&comp)
+        .map_err(|e| Status::internal(format!("compile {path:?}: {e}")))?;
+    let wrapped = Arc::new(XlaExecutable { exe, path: path.to_path_buf() });
+    rt.cache.lock().unwrap().insert(path.to_path_buf(), Arc::clone(&wrapped));
+    Ok(wrapped)
+}
+
+impl XlaExecutable {
+    /// Execute with rustflow tensors in/out. The artifact must be lowered
+    /// with `return_tuple=True` (aot.py does), so outputs decompose.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(tensor_to_literal).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Status::internal(format!("execute {:?}: {e}", self.path)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Status::internal(format!("readback: {e}")))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| Status::internal(format!("untuple: {e}")))?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().dims().iter().map(|&d| d as i64).collect();
+    let lit = match t.data() {
+        TensorData::F32(v) => xla::Literal::vec1(v),
+        TensorData::F64(v) => xla::Literal::vec1(v),
+        TensorData::I32(v) => xla::Literal::vec1(v),
+        TensorData::I64(v) => xla::Literal::vec1(v),
+        other => {
+            return Err(Status::unimplemented(format!(
+                "XlaCall input dtype {}",
+                other.dtype()
+            )))
+        }
+    };
+    lit.reshape(&dims).map_err(|e| Status::internal(format!("literal reshape: {e}")))
+}
+
+pub fn literal_to_tensor(l: &xla::Literal) -> Result<Tensor> {
+    let shape = l
+        .array_shape()
+        .map_err(|e| Status::internal(format!("literal shape: {e}")))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = l.ty().map_err(|e| Status::internal(format!("literal type: {e}")))?;
+    let data = match ty {
+        xla::ElementType::F32 => TensorData::F32(
+            l.to_vec::<f32>().map_err(|e| Status::internal(format!("to_vec: {e}")))?,
+        ),
+        xla::ElementType::F64 => TensorData::F64(
+            l.to_vec::<f64>().map_err(|e| Status::internal(format!("to_vec: {e}")))?,
+        ),
+        xla::ElementType::S32 => TensorData::I32(
+            l.to_vec::<i32>().map_err(|e| Status::internal(format!("to_vec: {e}")))?,
+        ),
+        xla::ElementType::S64 => TensorData::I64(
+            l.to_vec::<i64>().map_err(|e| Status::internal(format!("to_vec: {e}")))?,
+        ),
+        xla::ElementType::Pred => {
+            let v = l.to_vec::<u8>().map_err(|e| Status::internal(format!("to_vec: {e}")))?;
+            TensorData::Bool(v.into_iter().map(|b| b != 0).collect())
+        }
+        other => {
+            return Err(Status::unimplemented(format!("XlaCall output type {other:?}")))
+        }
+    };
+    Tensor::new(Shape(dims), data)
+}
+
+/// Register the XlaCall kernel: attrs `path` (artifact file) and
+/// `out_types` (output dtypes, for graph metadata).
+pub(crate) fn register_kernels(r: &mut KernelRegistry) {
+    r.add("XlaCall", |node| {
+        let path = PathBuf::from(node.attr("path")?.as_str()?);
+        // Compile lazily on first execution (kernel instantiation happens
+        // at graph-compile time, possibly before artifacts are built).
+        let exe: Mutex<Option<Arc<XlaExecutable>>> = Mutex::new(None);
+        Ok(Kernel::Sync(Box::new(move |ctx| {
+            let exe = {
+                let mut guard = exe.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some(load_artifact(&path)?);
+                }
+                Arc::clone(guard.as_ref().unwrap())
+            };
+            exe.run(&ctx.inputs)
+        })))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let l = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&l).unwrap();
+        assert_eq!(back, t);
+        let ti = Tensor::from_i32(vec![2], vec![7, -1]).unwrap();
+        let back = literal_to_tensor(&tensor_to_literal(&ti).unwrap()).unwrap();
+        assert_eq!(back, ti);
+    }
+}

@@ -1,0 +1,76 @@
+//! The no-PJRT stub (default build, no `xla` feature): the same API
+//! surface as the real bridge, failing with `Unavailable` at execution
+//! time. Graph construction, placement, and partitioning of `XlaCall`
+//! nodes all work; only running one needs the real runtime.
+
+use crate::error::{Result, Status};
+use crate::kernels::{Kernel, KernelRegistry};
+use crate::tensor::Tensor;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn unavailable(what: &str) -> Status {
+    Status::unavailable(format!(
+        "{what} requires the PJRT bridge: rebuild with `--features xla` \
+         (needs the vendored xla_extension crate)"
+    ))
+}
+
+/// Stub executable: holds the artifact path, cannot run.
+pub struct XlaExecutable {
+    pub path: PathBuf,
+}
+
+impl XlaExecutable {
+    pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Err(unavailable(&format!("executing artifact {:?}", self.path)))
+    }
+}
+
+/// Mirrors the real loader's error contract: a missing file is still
+/// `NotFound` (so "run `make artifacts`" diagnostics stay accurate);
+/// an existing artifact fails with `Unavailable` because nothing here
+/// can compile it.
+pub fn load_artifact(path: &Path) -> Result<Arc<XlaExecutable>> {
+    if !path.exists() {
+        return Err(Status::not_found(format!(
+            "artifact {path:?} not found — run `make artifacts` first"
+        )));
+    }
+    Err(unavailable(&format!("compiling artifact {path:?}")))
+}
+
+/// XlaCall still registers so graphs containing it build and place; the
+/// kernel fails at execution time.
+pub(crate) fn register_kernels(r: &mut KernelRegistry) {
+    r.add("XlaCall", |node| {
+        let path = PathBuf::from(node.attr("path")?.as_str()?);
+        Ok(Kernel::Sync(Box::new(move |_ctx| {
+            Err(unavailable(&format!("XlaCall({path:?})")))
+        })))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_not_found() {
+        let e = match load_artifact(Path::new("/nonexistent/foo.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert_eq!(e.code, crate::error::Code::NotFound);
+    }
+
+    #[test]
+    fn existing_file_is_unavailable_without_pjrt() {
+        let p = std::env::temp_dir().join(format!("rf-stub-{}.hlo.txt", std::process::id()));
+        std::fs::write(&p, "HloModule m").unwrap();
+        let e = load_artifact(&p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(e.code, crate::error::Code::Unavailable);
+        assert!(e.message.contains("--features xla"));
+    }
+}

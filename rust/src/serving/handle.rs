@@ -1,0 +1,131 @@
+//! Per-request completion: a tiny blocking future shared between the
+//! client thread and the lane's scheduler thread.
+
+use crate::error::{Result, Status};
+use crate::tensor::Tensor;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Shared completion slot: `None` until the scheduler fulfills it.
+pub(crate) struct ResponseSlot {
+    state: Mutex<Option<Result<Vec<Tensor>>>>,
+    cond: Condvar,
+}
+
+impl ResponseSlot {
+    pub(crate) fn new() -> Arc<ResponseSlot> {
+        Arc::new(ResponseSlot { state: Mutex::new(None), cond: Condvar::new() })
+    }
+
+    /// First fulfillment wins; later calls are ignored (a request is
+    /// fulfilled exactly once on the happy path, and a second time only
+    /// by the drop-cancellation guard).
+    pub(crate) fn fulfill(&self, result: Result<Vec<Tensor>>) {
+        let mut s = self.state.lock().unwrap();
+        if s.is_none() {
+            *s = Some(result);
+            self.cond.notify_all();
+        }
+    }
+
+    fn take_blocking(&self) -> Result<Vec<Tensor>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = s.take() {
+                return r;
+            }
+            s = self.cond.wait(s).unwrap();
+        }
+    }
+
+    fn is_ready(&self) -> bool {
+        self.state.lock().unwrap().is_some()
+    }
+}
+
+/// The client's handle to one in-flight request: returned by
+/// [`crate::serving::ModelServer::submit`], redeemed with [`ResponseHandle::wait`].
+pub struct ResponseHandle {
+    slot: Arc<ResponseSlot>,
+}
+
+impl ResponseHandle {
+    pub(crate) fn new(slot: Arc<ResponseSlot>) -> ResponseHandle {
+        ResponseHandle { slot }
+    }
+
+    /// Block until the request completes; returns the fetched tensors in
+    /// the order the fetches were submitted.
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        self.slot.take_blocking()
+    }
+
+    /// Has the scheduler fulfilled this request yet? (Non-blocking poll.)
+    pub fn is_ready(&self) -> bool {
+        self.slot.is_ready()
+    }
+}
+
+/// One admitted request, queued in a lane until the scheduler batches it.
+pub(crate) struct PendingRequest {
+    /// Feed tensors, in the lane's feed-name order. Every tensor carries
+    /// the request's row count on axis 0.
+    pub(crate) feeds: Vec<Tensor>,
+    /// Rows this request contributes to a batch (axis-0 extent).
+    pub(crate) rows: usize,
+    pub(crate) slot: Arc<ResponseSlot>,
+}
+
+impl Drop for PendingRequest {
+    /// A request dropped unfulfilled (server shut down with work still
+    /// queued, scheduler panicked) must not strand its client: deliver
+    /// `Cancelled` instead of hanging `wait()` forever. `fulfill` is
+    /// first-write-wins, so this is a no-op after normal completion.
+    fn drop(&mut self) {
+        self.slot.fulfill(Err(Status::cancelled("request dropped before execution")));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fulfill_then_wait() {
+        let slot = ResponseSlot::new();
+        let h = ResponseHandle::new(Arc::clone(&slot));
+        assert!(!h.is_ready());
+        slot.fulfill(Ok(vec![Tensor::scalar_f32(1.0)]));
+        assert!(h.is_ready());
+        let out = h.wait().unwrap();
+        assert_eq!(out[0].scalar_value_f32().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn wait_blocks_until_fulfilled() {
+        let slot = ResponseSlot::new();
+        let h = ResponseHandle::new(Arc::clone(&slot));
+        let t = std::thread::spawn(move || h.wait().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        slot.fulfill(Ok(vec![Tensor::scalar_f32(2.0)]));
+        assert_eq!(t.join().unwrap()[0].scalar_value_f32().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn first_fulfill_wins() {
+        let slot = ResponseSlot::new();
+        let h = ResponseHandle::new(Arc::clone(&slot));
+        slot.fulfill(Err(Status::internal("first")));
+        slot.fulfill(Ok(vec![]));
+        assert_eq!(h.wait().unwrap_err().message, "first");
+    }
+
+    #[test]
+    fn dropped_request_cancels_client() {
+        let slot = ResponseSlot::new();
+        let h = ResponseHandle::new(Arc::clone(&slot));
+        let req = PendingRequest { feeds: vec![], rows: 1, slot };
+        drop(req);
+        let e = h.wait().unwrap_err();
+        assert_eq!(e.code, crate::error::Code::Cancelled);
+    }
+}

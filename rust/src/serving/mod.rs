@@ -1,0 +1,131 @@
+//! Inference serving with dynamic request batching.
+//!
+//! The paper's §3 partial-execution model — feed/fetch subgraphs pruned,
+//! compiled, and *cached per run signature* — is exactly the substrate an
+//! inference service needs: a server sets up a [`crate::Session`] once and
+//! then executes the same small subgraph millions of times. The OSDI
+//! follow-up (TensorFlow: A system for large-scale machine learning,
+//! §Serving) adds the observation that makes it fast in production:
+//! many concurrent *small* client requests should be coalesced into one
+//! *large* device step, because a step's fixed overhead (dispatch,
+//! executor wakeup, kernel launch) is amortized over every row in the
+//! batch.
+//!
+//! This module provides that layer on top of `Session`:
+//!
+//! * [`ModelServer`] — owns a `Session`, admits requests from any number
+//!   of client threads through a bounded queue
+//!   ([`crate::util::bounded::Bounded`], giving backpressure when the
+//!   service is saturated), and groups requests by their
+//!   `(feeds, fetches)` signature into per-signature *lanes*.
+//! * The **batch scheduler** — one scheduler thread per lane pops the
+//!   first pending request, greedily drains every request already
+//!   queued (up to [`BatchConfig::max_batch_size`] rows), and lets a
+//!   *lone* request linger up to [`BatchConfig::max_batch_delay`] for a
+//!   batch-mate. Feed tensors are packed along axis 0 with
+//!   [`crate::Tensor::concat_rows`], the batch runs as a single
+//!   `Session::run`, and each fetch is unpacked back per request with
+//!   [`crate::Tensor::split_rows`].
+//! * [`ResponseHandle`] — a per-request future: `submit` returns
+//!   immediately and the client blocks (or polls) on the handle.
+//!
+//! Requirements on the served graph: every feed and every fetch must
+//! carry the batch dimension on axis 0 (the usual convention for
+//! inference graphs — `[batch, features…]` in, `[batch, logits…]` out).
+//! A fetch that reduces away the batch axis (e.g. a scalar mean) is
+//! reported as an error to every request in the batch rather than
+//! silently mis-split.
+//!
+//! ```no_run
+//! use rustflow::serving::{BatchConfig, ModelServer};
+//! use rustflow::{GraphBuilder, Session, SessionOptions, Tensor, DType};
+//!
+//! let mut b = GraphBuilder::new();
+//! let x = b.placeholder("x", DType::F32).unwrap();
+//! let w = b.constant(Tensor::fill_f32(vec![4, 2], 0.5));
+//! let y = b.matmul(x, w);
+//! let fetch = format!("{}:0", b.graph.node(y.node).name);
+//! let server = ModelServer::new(
+//!     Session::new(b.into_graph(), SessionOptions::default()),
+//!     BatchConfig::default(),
+//! );
+//! // Any number of client threads:
+//! let handle = server
+//!     .submit(&[("x", Tensor::fill_f32(vec![1, 4], 1.0))], &[&fetch])
+//!     .unwrap();
+//! let outputs = handle.wait().unwrap();
+//! assert_eq!(outputs[0].shape().dims(), &[1, 2]);
+//! ```
+
+mod handle;
+mod server;
+
+pub use handle::ResponseHandle;
+pub use server::ModelServer;
+
+use std::time::Duration;
+
+/// Dynamic-batching policy for one [`ModelServer`].
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Close a batch once this many rows have accumulated. `1` disables
+    /// batching: every request runs as its own step (the baseline the
+    /// serving bench compares against).
+    pub max_batch_size: usize,
+    /// Maximum extra latency the scheduler may add waiting for a
+    /// batch-mate when a batch holds a single request and the queue is
+    /// empty. Batches that already coalesced ≥ 2 requests run as soon as
+    /// the queue drains — waiting out the delay there would stall
+    /// closed-loop clients that can never fill `max_batch_size`.
+    pub max_batch_delay: Duration,
+    /// Admission-queue capacity per lane, in requests. `submit` blocks
+    /// (backpressure) and `try_submit` fails with `ResourceExhausted`
+    /// once a lane is this far behind.
+    pub queue_capacity: usize,
+    /// Maximum number of lanes (distinct `(feeds, fetches)` signatures).
+    /// Each lane owns a scheduler thread and a queue, so signature churn
+    /// must not grow them without bound: requests for a new signature
+    /// beyond this cap fail with `ResourceExhausted`.
+    pub max_lanes: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        BatchConfig {
+            max_batch_size: 32,
+            max_batch_delay: Duration::from_millis(2),
+            queue_capacity: 1024,
+            max_lanes: 64,
+        }
+    }
+}
+
+impl BatchConfig {
+    /// Batching disabled: every request is its own step.
+    pub fn unbatched() -> Self {
+        BatchConfig { max_batch_size: 1, ..Default::default() }
+    }
+}
+
+/// Snapshot of a server's counters (monotonic since construction).
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    /// Requests admitted (successfully submitted).
+    pub requests: u64,
+    /// Session steps executed on behalf of those requests.
+    pub batches: u64,
+    /// Total rows across all executed batches.
+    pub rows: u64,
+}
+
+impl ServingStats {
+    /// Mean rows per device step — the batching win. 1.0 means no
+    /// coalescing happened.
+    pub fn mean_batch_rows(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.batches as f64
+        }
+    }
+}

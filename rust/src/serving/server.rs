@@ -1,0 +1,656 @@
+//! The model server and its per-signature batch scheduler threads.
+
+use super::handle::{PendingRequest, ResponseHandle, ResponseSlot};
+use super::{BatchConfig, ServingStats};
+use crate::error::{Result, Status};
+use crate::session::Session;
+use crate::tensor::Tensor;
+use crate::util::bounded::{Bounded, Pop};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One (feeds, fetches) signature's admission queue. The paper caches one
+/// compiled step per signature; a lane is the serving-side mirror of that
+/// cache entry, so every batch the lane forms hits the same cached
+/// executable.
+struct Lane {
+    feed_names: Vec<String>,
+    fetch_names: Vec<String>,
+    queue: Bounded<PendingRequest>,
+}
+
+#[derive(Default)]
+struct Counters {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    rows: AtomicU64,
+}
+
+/// A multi-threaded inference front end over one [`Session`].
+///
+/// Clients call [`ModelServer::submit`] (async, returns a
+/// [`ResponseHandle`]) or [`ModelServer::run`] (blocking) from any number
+/// of threads. Requests with the same `(feeds, fetches)` signature share a
+/// lane whose scheduler thread coalesces them into batched steps according
+/// to the [`BatchConfig`].
+pub struct ModelServer {
+    session: Arc<Session>,
+    config: BatchConfig,
+    lanes: Mutex<HashMap<String, Arc<Lane>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    counters: Arc<Counters>,
+    shutting_down: AtomicBool,
+}
+
+impl ModelServer {
+    pub fn new(session: Session, config: BatchConfig) -> ModelServer {
+        ModelServer::with_session(Arc::new(session), config)
+    }
+
+    pub fn with_session(session: Arc<Session>, config: BatchConfig) -> ModelServer {
+        ModelServer {
+            session,
+            config,
+            lanes: Mutex::new(HashMap::new()),
+            workers: Mutex::new(Vec::new()),
+            counters: Arc::new(Counters::default()),
+            shutting_down: AtomicBool::new(false),
+        }
+    }
+
+    /// The underlying session (e.g. to run init ops before serving, or to
+    /// compare served results against direct `run` calls).
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    pub fn config(&self) -> &BatchConfig {
+        &self.config
+    }
+
+    /// Submit a request; blocks only if the lane's admission queue is
+    /// full (backpressure). Every feed tensor must carry this request's
+    /// row count on axis 0.
+    pub fn submit(&self, feeds: &[(&str, Tensor)], fetches: &[&str]) -> Result<ResponseHandle> {
+        self.admit(feeds, fetches, true)
+    }
+
+    /// Like [`ModelServer::submit`] but never blocks: fails with
+    /// `ResourceExhausted` when the lane is saturated (load shedding).
+    pub fn try_submit(&self, feeds: &[(&str, Tensor)], fetches: &[&str]) -> Result<ResponseHandle> {
+        self.admit(feeds, fetches, false)
+    }
+
+    /// Blocking convenience: submit and wait for completion.
+    pub fn run(&self, feeds: &[(&str, Tensor)], fetches: &[&str]) -> Result<Vec<Tensor>> {
+        self.submit(feeds, fetches)?.wait()
+    }
+
+    pub fn stats(&self) -> ServingStats {
+        ServingStats {
+            requests: self.counters.requests.load(Ordering::Relaxed),
+            batches: self.counters.batches.load(Ordering::Relaxed),
+            rows: self.counters.rows.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting requests, drain the lanes, and join the scheduler
+    /// threads. Requests already admitted are executed; requests admitted
+    /// concurrently with shutdown may be cancelled. Idempotent.
+    pub fn shutdown(&self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for lane in self.lanes.lock().unwrap().values() {
+            lane.queue.close();
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+
+    fn admit(
+        &self,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+        block: bool,
+    ) -> Result<ResponseHandle> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(Status::unavailable("model server is shutting down"));
+        }
+        if feeds.is_empty() {
+            return Err(Status::invalid_argument(
+                "serving request needs at least one feed (the batch axis comes from feeds)",
+            ));
+        }
+        if fetches.is_empty() {
+            return Err(Status::invalid_argument("serving request needs at least one fetch"));
+        }
+        let rows = feeds[0].1.shape().dims().first().copied().ok_or_else(|| {
+            Status::invalid_argument(format!(
+                "feed {:?} is a scalar; serving feeds need a batch axis (axis 0)",
+                feeds[0].0
+            ))
+        })?;
+        for (name, t) in feeds {
+            let r = t.shape().dims().first().copied().ok_or_else(|| {
+                Status::invalid_argument(format!(
+                    "feed {name:?} is a scalar; serving feeds need a batch axis (axis 0)"
+                ))
+            })?;
+            if r != rows {
+                return Err(Status::invalid_argument(format!(
+                    "feed {name:?} has {r} rows but feed {:?} has {rows}; \
+                     all feeds of one request must agree on axis 0",
+                    feeds[0].0
+                )));
+            }
+        }
+        if rows == 0 {
+            return Err(Status::invalid_argument("serving request with zero rows"));
+        }
+
+        let lane = self.lane_for(feeds, fetches)?;
+        let slot = ResponseSlot::new();
+        let request = PendingRequest {
+            feeds: feeds.iter().map(|(_, t)| t.clone()).collect(),
+            rows,
+            slot: Arc::clone(&slot),
+        };
+        if block {
+            lane.queue.push(request)?;
+        } else {
+            lane.queue.try_push(request)?;
+        }
+        self.counters.requests.fetch_add(1, Ordering::Relaxed);
+        Ok(ResponseHandle::new(slot))
+    }
+
+    /// Get or lazily create the lane (and its scheduler thread) for a
+    /// request signature.
+    fn lane_for(&self, feeds: &[(&str, Tensor)], fetches: &[&str]) -> Result<Arc<Lane>> {
+        // Same key the session cache uses (with no targets), so one lane
+        // maps to exactly one cached compiled step.
+        let feed_names: Vec<&str> = feeds.iter().map(|(n, _)| *n).collect();
+        let key = crate::session::run_signature(&feed_names, fetches, &[]);
+
+        let mut lanes = self.lanes.lock().unwrap();
+        // Re-check the flag under the lanes lock: shutdown() sets it and
+        // then closes/joins everything it finds in `lanes`, so a lane
+        // created after that sweep would live (and accept work) forever.
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(Status::unavailable("model server is shutting down"));
+        }
+        if let Some(lane) = lanes.get(&key) {
+            return Ok(Arc::clone(lane));
+        }
+        if lanes.len() >= self.config.max_lanes {
+            return Err(Status::resource_exhausted(format!(
+                "lane limit reached ({} signatures); refusing a new (feeds, fetches) \
+                 signature — each lane owns a scheduler thread",
+                self.config.max_lanes
+            )));
+        }
+        let lane = Arc::new(Lane {
+            feed_names: feeds.iter().map(|(n, _)| n.to_string()).collect(),
+            fetch_names: fetches.iter().map(|f| f.to_string()).collect(),
+            queue: Bounded::new(self.config.queue_capacity),
+        });
+        lanes.insert(key, Arc::clone(&lane));
+
+        let session = Arc::clone(&self.session);
+        let counters = Arc::clone(&self.counters);
+        let config = self.config.clone();
+        let worker_lane = Arc::clone(&lane);
+        let handle = std::thread::Builder::new()
+            .name(format!("serving-lane-{}", lanes.len()))
+            .spawn(move || scheduler_loop(session, worker_lane, counters, config))
+            .expect("failed to spawn serving scheduler thread");
+        self.workers.lock().unwrap().push(handle);
+        Ok(lane)
+    }
+}
+
+impl Drop for ModelServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Closes and drains the lane's queue when the scheduler exits — on
+/// panic unwind too. Without this, a scheduler that dies mid-flight
+/// (poisoned mutex, kernel bug) would strand queued clients in `wait()`
+/// forever; with it they get `Cancelled` (via `PendingRequest::drop`)
+/// and new submits fail with `Unavailable`.
+struct LaneGuard(Arc<Lane>);
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        self.0.queue.close();
+        while let Pop::Item(r) = self.0.queue.try_pop() {
+            drop(r);
+        }
+    }
+}
+
+/// One lane's scheduler: form batches (first request opens the batch;
+/// the greedy drain, the row budget, or a lone request's linger deadline
+/// closes it), execute, fulfill.
+fn scheduler_loop(
+    session: Arc<Session>,
+    lane: Arc<Lane>,
+    counters: Arc<Counters>,
+    config: BatchConfig,
+) {
+    let _guard = LaneGuard(Arc::clone(&lane));
+    // A request that would overflow the current batch is carried into the
+    // next one rather than split or dropped.
+    let mut carry: Option<PendingRequest> = None;
+    loop {
+        let first = match carry.take().or_else(|| lane.queue.pop()) {
+            Some(r) => r,
+            None => break, // queue closed and drained
+        };
+        let mut rows = first.rows;
+        let mut batch = vec![first];
+        if config.max_batch_size > 1 && rows < config.max_batch_size {
+            let deadline = Instant::now() + config.max_batch_delay;
+            'fill: loop {
+                // Greedily drain everything already queued: concurrent
+                // clients coalesce without paying any added latency.
+                loop {
+                    if rows >= config.max_batch_size {
+                        break 'fill;
+                    }
+                    match lane.queue.try_pop() {
+                        Pop::Item(r) => {
+                            if rows + r.rows > config.max_batch_size
+                                || !compatible(&batch[0], &r)
+                            {
+                                carry = Some(r);
+                                break 'fill;
+                            }
+                            rows += r.rows;
+                            batch.push(r);
+                        }
+                        Pop::TimedOut => break, // empty right now
+                        Pop::Closed => break 'fill,
+                    }
+                }
+                // Queue is empty. A batch that already has company runs
+                // immediately — waiting out the full delay would stall
+                // closed-loop clients that can never fill max_batch_size.
+                // Only a lone request lingers for a batch-mate.
+                if batch.len() > 1 {
+                    break;
+                }
+                match lane.queue.pop_deadline(deadline) {
+                    Pop::Item(r) => {
+                        if rows + r.rows > config.max_batch_size || !compatible(&batch[0], &r) {
+                            carry = Some(r);
+                            break;
+                        }
+                        rows += r.rows;
+                        batch.push(r);
+                        // Loop back to drain whatever arrived with it.
+                    }
+                    Pop::TimedOut | Pop::Closed => break,
+                }
+            }
+        }
+        // Count the step before fulfilling its requests: a client that
+        // returns from wait() and immediately reads stats() must see the
+        // step that produced its answer.
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        counters.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        execute_batch(&session, &lane, batch, rows);
+    }
+}
+
+/// Run one batch as a single session step and fulfill every member.
+fn execute_batch(session: &Session, lane: &Lane, batch: Vec<PendingRequest>, total_rows: usize) {
+    match run_batch(session, lane, &batch, total_rows) {
+        Ok(per_request) => {
+            for (req, outs) in batch.iter().zip(per_request) {
+                req.slot.fulfill(Ok(outs));
+            }
+        }
+        Err(e) => {
+            for req in &batch {
+                req.slot.fulfill(Err(e.clone()));
+            }
+        }
+    }
+}
+
+/// Can two requests share a batch? Only if every feed agrees on dtype and
+/// trailing dims — `concat_rows` would fail otherwise, failing innocent
+/// batch-mates along with the malformed request. Incompatible requests
+/// are carried into their own batch instead, so a bad shape always fails
+/// alone against the graph.
+fn compatible(a: &PendingRequest, b: &PendingRequest) -> bool {
+    a.feeds.len() == b.feeds.len()
+        && a.feeds.iter().zip(&b.feeds).all(|(x, y)| {
+            x.dtype() == y.dtype() && x.shape().dims()[1..] == y.shape().dims()[1..]
+        })
+}
+
+/// Pack feeds along axis 0, run, split fetches back per request.
+fn run_batch(
+    session: &Session,
+    lane: &Lane,
+    batch: &[PendingRequest],
+    total_rows: usize,
+) -> Result<Vec<Vec<Tensor>>> {
+    let fetch_strs: Vec<&str> = lane.fetch_names.iter().map(String::as_str).collect();
+
+    // §3 partial execution does the heavy lifting: the same cached
+    // compiled step serves every batch size, because feed shapes are not
+    // part of the run signature.
+    let packed: Vec<Tensor> = if batch.len() == 1 {
+        batch[0].feeds.clone()
+    } else {
+        let mut packed = Vec::with_capacity(lane.feed_names.len());
+        for i in 0..lane.feed_names.len() {
+            let parts: Vec<Tensor> = batch.iter().map(|r| r.feeds[i].clone()).collect();
+            packed.push(Tensor::concat_rows(&parts)?);
+        }
+        packed
+    };
+    let feeds: Vec<(&str, Tensor)> =
+        lane.feed_names.iter().map(String::as_str).zip(packed).collect();
+    let outs = session.run(&feeds, &fetch_strs, &[])?;
+
+    // Enforce the batch-axis contract on every fetch, even for
+    // single-request steps, so a graph that reduces away axis 0 fails the
+    // same way at every batch size.
+    for (name, out) in lane.fetch_names.iter().zip(&outs) {
+        let ok = out.shape().dims().first() == Some(&total_rows);
+        if !ok {
+            return Err(Status::internal(format!(
+                "fetch {name:?} does not preserve the batch axis: batch has {total_rows} rows \
+                 but the fetched tensor has shape {}",
+                out.shape()
+            )));
+        }
+    }
+
+    if batch.len() == 1 {
+        return Ok(vec![outs]);
+    }
+    let row_counts: Vec<usize> = batch.iter().map(|r| r.rows).collect();
+    let mut per_request: Vec<Vec<Tensor>> = (0..batch.len()).map(|_| Vec::new()).collect();
+    for out in &outs {
+        for (ri, part) in out.split_rows(&row_counts)?.into_iter().enumerate() {
+            per_request[ri].push(part);
+        }
+    }
+    Ok(per_request)
+}
+
+/// The whole serving stack must be shareable across client threads.
+#[allow(dead_code)]
+fn assert_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<Session>();
+    check::<ModelServer>();
+    check::<ResponseHandle>();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::session::SessionOptions;
+    use crate::tensor::DType;
+    use std::time::Duration;
+
+    /// y = x * z elementwise, both fed with shape [rows, 1].
+    fn product_server(config: BatchConfig) -> (ModelServer, String) {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let z = b.placeholder("z", DType::F32).unwrap();
+        let y = b.mul(x, z);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        let server = ModelServer::new(Session::new(b.into_graph(), SessionOptions::default()), config);
+        (server, fetch)
+    }
+
+    fn col(vals: &[f32]) -> Tensor {
+        Tensor::from_f32(vec![vals.len(), 1], vals.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let (server, fetch) = product_server(BatchConfig::default());
+        let out = server
+            .run(&[("x", col(&[2.0, 3.0])), ("z", col(&[10.0, 10.0]))], &[&fetch])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[20.0, 30.0]);
+        let s = server.stats();
+        assert_eq!((s.requests, s.batches, s.rows), (1, 1, 2));
+    }
+
+    #[test]
+    fn submitted_requests_coalesce_into_one_step() {
+        let (server, fetch) = product_server(BatchConfig {
+            max_batch_size: 16,
+            max_batch_delay: Duration::from_millis(200),
+            queue_capacity: 64,
+            ..BatchConfig::default()
+        });
+        // Submit 8 one-row requests up front, then redeem the handles:
+        // they all land inside the first batch's 200ms window.
+        let handles: Vec<(f32, ResponseHandle)> = (0..8)
+            .map(|i| {
+                let v = i as f32 + 1.0;
+                let h = server
+                    .submit(&[("x", col(&[v])), ("z", col(&[100.0]))], &[&fetch])
+                    .unwrap();
+                (v, h)
+            })
+            .collect();
+        for (v, h) in handles {
+            let out = h.wait().unwrap();
+            assert_eq!(out[0].as_f32().unwrap(), &[v * 100.0], "cross-talk for request {v}");
+        }
+        let s = server.stats();
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.rows, 8);
+        assert!(s.batches <= 4, "expected coalescing, got {} batches for 8 requests", s.batches);
+        assert!(s.mean_batch_rows() >= 2.0);
+    }
+
+    #[test]
+    fn oversize_request_is_carried_not_split() {
+        let (server, fetch) = product_server(BatchConfig {
+            max_batch_size: 4,
+            max_batch_delay: Duration::from_millis(50),
+            queue_capacity: 64,
+            ..BatchConfig::default()
+        });
+        // 3 + 3 rows cannot share a 4-row batch; both must still complete.
+        let h1 = server
+            .submit(&[("x", col(&[1.0, 2.0, 3.0])), ("z", col(&[2.0, 2.0, 2.0]))], &[&fetch])
+            .unwrap();
+        let h2 = server
+            .submit(&[("x", col(&[4.0, 5.0, 6.0])), ("z", col(&[3.0, 3.0, 3.0]))], &[&fetch])
+            .unwrap();
+        assert_eq!(h1.wait().unwrap()[0].as_f32().unwrap(), &[2.0, 4.0, 6.0]);
+        assert_eq!(h2.wait().unwrap()[0].as_f32().unwrap(), &[12.0, 15.0, 18.0]);
+        assert_eq!(server.stats().batches, 2);
+    }
+
+    #[test]
+    fn mismatched_feed_rows_rejected() {
+        let (server, fetch) = product_server(BatchConfig::default());
+        let e = server
+            .submit(&[("x", col(&[1.0, 2.0])), ("z", col(&[1.0]))], &[&fetch])
+            .unwrap_err();
+        assert_eq!(e.code, crate::error::Code::InvalidArgument);
+        // Scalar feeds carry no batch axis.
+        let e = server
+            .submit(&[("x", Tensor::scalar_f32(1.0)), ("z", Tensor::scalar_f32(1.0))], &[&fetch])
+            .unwrap_err();
+        assert_eq!(e.code, crate::error::Code::InvalidArgument);
+    }
+
+    #[test]
+    fn incompatible_shapes_never_share_a_batch() {
+        // y = x · W with W [4,2]: a [1,5] request is malformed for the
+        // graph. It must fail alone — requests whose feeds disagree on
+        // trailing dims or dtype are placed in separate batches, so the
+        // malformed one cannot poison its well-formed neighbours.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let w = b.constant(Tensor::from_f32(vec![4, 2], vec![1.0; 8]).unwrap());
+        let y = b.matmul(x, w);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        let server = ModelServer::new(
+            Session::new(b.into_graph(), SessionOptions::default()),
+            BatchConfig {
+                max_batch_size: 8,
+                max_batch_delay: Duration::from_millis(100),
+                queue_capacity: 64,
+                ..BatchConfig::default()
+            },
+        );
+        let good1 = server
+            .submit(&[("x", Tensor::from_f32(vec![1, 4], vec![1.0; 4]).unwrap())], &[&fetch])
+            .unwrap();
+        let bad = server
+            .submit(&[("x", Tensor::from_f32(vec![1, 5], vec![0.0; 5]).unwrap())], &[&fetch])
+            .unwrap();
+        let good2 = server
+            .submit(&[("x", Tensor::from_f32(vec![1, 4], vec![2.0; 4]).unwrap())], &[&fetch])
+            .unwrap();
+        assert_eq!(good1.wait().unwrap()[0].as_f32().unwrap(), &[4.0, 4.0]);
+        assert!(bad.wait().is_err(), "malformed shape must fail");
+        assert_eq!(good2.wait().unwrap()[0].as_f32().unwrap(), &[8.0, 8.0]);
+    }
+
+    #[test]
+    fn fetch_that_loses_batch_axis_errors() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let m = b.reduce_mean(x, None);
+        let fetch = format!("{}:0", b.graph.node(m.node).name);
+        let server = ModelServer::new(
+            Session::new(b.into_graph(), SessionOptions::default()),
+            BatchConfig::default(),
+        );
+        let e = server.run(&[("x", col(&[1.0, 2.0]))], &[&fetch]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::Internal);
+        assert!(e.message.contains("batch axis"), "unexpected message: {}", e.message);
+    }
+
+    #[test]
+    fn kernel_error_propagates_to_every_request() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let checked = b.op1("CheckNumerics", "check", vec![x], vec![]).unwrap();
+        let fetch = format!("{}:0", b.graph.node(checked.node).name);
+        let server = ModelServer::new(
+            Session::new(b.into_graph(), SessionOptions::default()),
+            BatchConfig {
+                max_batch_size: 8,
+                max_batch_delay: Duration::from_millis(100),
+                queue_capacity: 64,
+                ..BatchConfig::default()
+            },
+        );
+        let h1 = server.submit(&[("x", col(&[1.0]))], &[&fetch]).unwrap();
+        let h2 = server.submit(&[("x", col(&[f32::NAN]))], &[&fetch]).unwrap();
+        // The NaN poisons whichever batch it lands in; both requests get
+        // a definite answer (no hangs), and the NaN one is an error.
+        let r1 = h1.wait();
+        let r2 = h2.wait();
+        assert!(r2.is_err());
+        match r1 {
+            Ok(out) => assert_eq!(out[0].as_f32().unwrap(), &[1.0]),
+            Err(e) => assert_eq!(e.code, crate::error::Code::InvalidArgument),
+        }
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let (server, fetch) = product_server(BatchConfig::default());
+        server.run(&[("x", col(&[1.0])), ("z", col(&[1.0]))], &[&fetch]).unwrap();
+        server.shutdown();
+        let e = server
+            .submit(&[("x", col(&[1.0])), ("z", col(&[1.0]))], &[&fetch])
+            .unwrap_err();
+        assert_eq!(e.code, crate::error::Code::Unavailable);
+        // Idempotent.
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_first_request_does_not_brick_the_lane() {
+        // y = x · W with W fixed [4,2]: the graph itself constrains the
+        // trailing feed dims, unlike the elementwise product graph.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let w = b.constant(Tensor::from_f32(vec![4, 2], vec![1.0; 8]).unwrap());
+        let y = b.matmul(x, w);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        let server = ModelServer::new(
+            Session::new(b.into_graph(), SessionOptions::default()),
+            BatchConfig::default(),
+        );
+        // The first request has bogus trailing dims [5] and fails in the
+        // matmul kernel…
+        let bad = Tensor::from_f32(vec![1, 5], vec![0.0; 5]).unwrap();
+        assert!(server.run(&[("x", bad)], &[&fetch]).is_err());
+        // …and leaves no per-lane shape state behind, so later valid
+        // clients are unaffected.
+        let good = Tensor::from_f32(vec![1, 4], vec![1.0; 4]).unwrap();
+        let out = server.run(&[("x", good)], &[&fetch]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn lane_limit_sheds_new_signatures() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let two = b.scalar(2.0);
+        let three = b.scalar(3.0);
+        let y2 = b.mul(x, two);
+        let y3 = b.mul(x, three);
+        let f2 = format!("{}:0", b.graph.node(y2.node).name);
+        let f3 = format!("{}:0", b.graph.node(y3.node).name);
+        let server = ModelServer::new(
+            Session::new(b.into_graph(), SessionOptions::default()),
+            BatchConfig { max_lanes: 1, ..BatchConfig::default() },
+        );
+        // First signature claims the only lane; it keeps working.
+        server.run(&[("x", col(&[1.0]))], &[&f2]).unwrap();
+        // A second signature is shed instead of spawning another thread.
+        let e = server.run(&[("x", col(&[1.0]))], &[&f3]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::ResourceExhausted);
+        server.run(&[("x", col(&[5.0]))], &[&f2]).unwrap();
+    }
+
+    #[test]
+    fn distinct_signatures_get_distinct_lanes() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let two = b.scalar(2.0);
+        let three = b.scalar(3.0);
+        let y2 = b.mul(x, two);
+        let y3 = b.mul(x, three);
+        let f2 = format!("{}:0", b.graph.node(y2.node).name);
+        let f3 = format!("{}:0", b.graph.node(y3.node).name);
+        let server = ModelServer::new(
+            Session::new(b.into_graph(), SessionOptions::default()),
+            BatchConfig::default(),
+        );
+        let out2 = server.run(&[("x", col(&[5.0]))], &[&f2]).unwrap();
+        let out3 = server.run(&[("x", col(&[5.0]))], &[&f3]).unwrap();
+        assert_eq!(out2[0].as_f32().unwrap(), &[10.0]);
+        assert_eq!(out3[0].as_f32().unwrap(), &[15.0]);
+        assert_eq!(server.stats().requests, 2);
+    }
+}

@@ -67,8 +67,39 @@ struct CachedStep {
     pub partition: PartitionStats,
 }
 
+/// Cache key for one Run signature. Feed *names* only — values vary per
+/// call; shapes are deliberately not part of the signature, which is what
+/// lets one cached step serve every batch size (see `crate::serving`,
+/// whose lanes key on the same string so each lane mirrors one cache
+/// entry). Components are length-prefixed so names containing the
+/// separators cannot make two distinct signatures collide onto one entry
+/// (`["a;b"]` vs `["a", "b"]`).
+pub(crate) fn run_signature(feeds: &[&str], fetches: &[&str], targets: &[&str]) -> String {
+    let mut s = String::new();
+    let section = |names: &[&str], s: &mut String| {
+        for k in names {
+            s.push_str(&k.len().to_string());
+            s.push(':');
+            s.push_str(k);
+            s.push(';');
+        }
+        s.push('|');
+    };
+    section(feeds, &mut s);
+    section(fetches, &mut s);
+    section(targets, &mut s);
+    s
+}
+
 /// The client's handle to the runtime (§3 "client … uses the Session
 /// interface to communicate with the master").
+///
+/// `Session` is `Send + Sync`: `run` takes `&self` and any number of
+/// threads may call it concurrently (§7 Fig 9's concurrent-steps idiom,
+/// and the substrate for `crate::serving`). Each call gets its own step
+/// id, its own `StepState`, and its own per-step rendezvous, so concurrent
+/// steps never observe each other's feeds or fetches; shared state
+/// (variables in the `ResourceMgr`, queues) is deliberately cross-step.
 pub struct Session {
     graph: Mutex<Graph>,
     devices: DeviceSet,
@@ -136,24 +167,8 @@ impl Session {
         fetches: &[&str],
         targets: &[&str],
     ) -> Result<Vec<Tensor>> {
-        let signature = {
-            let mut s = String::new();
-            for (k, _) in feeds {
-                s.push_str(k);
-                s.push(';');
-            }
-            s.push('|');
-            for f in fetches {
-                s.push_str(f);
-                s.push(';');
-            }
-            s.push('|');
-            for t in targets {
-                s.push_str(t);
-                s.push(';');
-            }
-            s
-        };
+        let feed_names: Vec<&str> = feeds.iter().map(|(k, _)| *k).collect();
+        let signature = run_signature(&feed_names, fetches, targets);
 
         let cached = {
             let cache = self.cache.lock().unwrap();
@@ -162,9 +177,18 @@ impl Session {
         let cached = match cached {
             Some(c) => c,
             None => {
+                // Compile outside the cache lock so a slow build does not
+                // stall unrelated steps. Two threads racing on the same
+                // new signature both compile; the first insert wins and
+                // the loser adopts it, so later runs all share one entry.
                 let built = Arc::new(self.build_step(feeds, fetches, targets)?);
-                self.cache.lock().unwrap().insert(signature, Arc::clone(&built));
-                built
+                Arc::clone(
+                    self.cache
+                        .lock()
+                        .unwrap()
+                        .entry(signature)
+                        .or_insert(built),
+                )
             }
         };
 
@@ -241,25 +265,10 @@ impl Session {
         fetches: &[&str],
         targets: &[&str],
     ) -> Option<(PlacementStats, PartitionStats)> {
-        let mut s = String::new();
-        for k in feeds {
-            s.push_str(k);
-            s.push(';');
-        }
-        s.push('|');
-        for f in fetches {
-            s.push_str(f);
-            s.push(';');
-        }
-        s.push('|');
-        for t in targets {
-            s.push_str(t);
-            s.push(';');
-        }
         self.cache
             .lock()
             .unwrap()
-            .get(&s)
+            .get(&run_signature(feeds, fetches, targets))
             .map(|c| (c.placement.clone(), c.partition.clone()))
     }
 

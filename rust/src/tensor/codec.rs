@@ -11,7 +11,7 @@
 
 use super::{DType, Shape, Tensor, TensorData};
 use crate::error::{Result, Status};
-use byteorder::{ByteOrder, LittleEndian};
+use crate::util::byteorder::LittleEndian;
 
 pub fn encode(t: &Tensor) -> Vec<u8> {
     let mut out = Vec::with_capacity(16 + t.size_bytes());

@@ -341,6 +341,110 @@ impl Tensor {
         }
     }
 
+    // ---- batching (serving) --------------------------------------------
+    //
+    // The inference-serving layer (`crate::serving`) coalesces many small
+    // client requests into one device step by packing their feed tensors
+    // along axis 0 and unpacking fetch tensors back per request. These
+    // helpers are the pack/unpack primitives; they copy element data once.
+
+    /// Stack `parts` along a new leading axis: n tensors of shape `S`
+    /// become one tensor of shape `[n, S…]`. All parts must share dtype
+    /// and shape.
+    pub fn stack(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            return Err(Status::invalid_argument("stack of zero tensors"));
+        }
+        for p in &parts[1..] {
+            if p.shape() != parts[0].shape() {
+                return Err(Status::invalid_argument(format!(
+                    "stack of mismatched shapes {} and {}",
+                    parts[0].shape(),
+                    p.shape()
+                )));
+            }
+        }
+        let mut dims = vec![parts.len()];
+        dims.extend_from_slice(parts[0].shape().dims());
+        let data = concat_data(parts)?;
+        Tensor::new(dims, data)
+    }
+
+    /// Concatenate along the existing axis 0: tensors of shapes
+    /// `[r_i, S…]` become one tensor of shape `[Σr_i, S…]`. All parts
+    /// must share dtype, rank ≥ 1, and trailing dims.
+    pub fn concat_rows(parts: &[Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            return Err(Status::invalid_argument("concat of zero tensors"));
+        }
+        let mut rows = 0usize;
+        for p in parts {
+            if p.shape().is_scalar() {
+                return Err(Status::invalid_argument(
+                    "concat_rows needs rank >= 1 (no batch axis on a scalar)",
+                ));
+            }
+            if p.shape().dims()[1..] != parts[0].shape().dims()[1..] {
+                return Err(Status::invalid_argument(format!(
+                    "concat_rows of mismatched trailing dims: {} vs {}",
+                    parts[0].shape(),
+                    p.shape()
+                )));
+            }
+            rows += p.shape().dim(0);
+        }
+        let mut dims = vec![rows];
+        dims.extend_from_slice(&parts[0].shape().dims()[1..]);
+        let data = concat_data(parts)?;
+        Tensor::new(dims, data)
+    }
+
+    /// Inverse of [`Tensor::concat_rows`]: split axis 0 into chunks of
+    /// `rows[i]` rows each. `rows` must sum to `dim(0)`.
+    pub fn split_rows(&self, rows: &[usize]) -> Result<Vec<Tensor>> {
+        if self.shape.is_scalar() {
+            return Err(Status::invalid_argument(format!(
+                "split_rows on scalar tensor {self}"
+            )));
+        }
+        let total: usize = rows.iter().sum();
+        if total != self.shape.dim(0) {
+            return Err(Status::invalid_argument(format!(
+                "split_rows sizes sum to {total} but tensor has {} rows",
+                self.shape.dim(0)
+            )));
+        }
+        let row_size: usize = self.shape.dims()[1..].iter().product();
+        let mut out = Vec::with_capacity(rows.len());
+        let mut start = 0usize;
+        for &r in rows {
+            let mut dims = vec![r];
+            dims.extend_from_slice(&self.shape.dims()[1..]);
+            let data = slice_data(&self.data, start * row_size, r * row_size);
+            out.push(Tensor::new(dims, data)?);
+            start += r;
+        }
+        Ok(out)
+    }
+
+    /// Inverse of [`Tensor::stack`]: split axis 0 into `dim(0)` tensors
+    /// of the trailing shape.
+    pub fn unstack(&self) -> Result<Vec<Tensor>> {
+        if self.shape.is_scalar() {
+            return Err(Status::invalid_argument(format!(
+                "unstack on scalar tensor {self}"
+            )));
+        }
+        let trailing: Vec<usize> = self.shape.dims()[1..].to_vec();
+        let row_size: usize = trailing.iter().product();
+        (0..self.shape.dim(0))
+            .map(|i| {
+                let data = slice_data(&self.data, i * row_size, row_size);
+                Tensor::new(trailing.clone(), data)
+            })
+            .collect()
+    }
+
     /// Any non-finite float elements? (§6 lesson 5 "guard against
     /// numerical errors" — the CheckNumerics op uses this.)
     pub fn has_non_finite(&self) -> bool {
@@ -349,6 +453,52 @@ impl Tensor {
             TensorData::F64(v) => v.iter().any(|x| !x.is_finite()),
             _ => false,
         }
+    }
+}
+
+/// Concatenate the element storage of `parts` (dtypes must all match).
+fn concat_data(parts: &[Tensor]) -> Result<TensorData> {
+    macro_rules! cat {
+        ($variant:ident) => {{
+            let mut out = Vec::with_capacity(parts.iter().map(|p| p.num_elements()).sum());
+            for p in parts {
+                match &*p.data {
+                    TensorData::$variant(v) => out.extend_from_slice(v),
+                    other => {
+                        return Err(Status::invalid_argument(format!(
+                            "cannot batch {} tensor with {} tensor",
+                            other.dtype(),
+                            parts[0].dtype()
+                        )))
+                    }
+                }
+            }
+            TensorData::$variant(out)
+        }};
+    }
+    Ok(match &*parts[0].data {
+        TensorData::F32(_) => cat!(F32),
+        TensorData::F64(_) => cat!(F64),
+        TensorData::I32(_) => cat!(I32),
+        TensorData::I64(_) => cat!(I64),
+        TensorData::U8(_) => cat!(U8),
+        TensorData::Bool(_) => cat!(Bool),
+        TensorData::Str(_) => cat!(Str),
+        TensorData::BF16(_) => cat!(BF16),
+    })
+}
+
+/// Copy `len` elements starting at `start` out of `data`.
+fn slice_data(data: &TensorData, start: usize, len: usize) -> TensorData {
+    match data {
+        TensorData::F32(v) => TensorData::F32(v[start..start + len].to_vec()),
+        TensorData::F64(v) => TensorData::F64(v[start..start + len].to_vec()),
+        TensorData::I32(v) => TensorData::I32(v[start..start + len].to_vec()),
+        TensorData::I64(v) => TensorData::I64(v[start..start + len].to_vec()),
+        TensorData::U8(v) => TensorData::U8(v[start..start + len].to_vec()),
+        TensorData::Bool(v) => TensorData::Bool(v[start..start + len].to_vec()),
+        TensorData::Str(v) => TensorData::Str(v[start..start + len].to_vec()),
+        TensorData::BF16(v) => TensorData::BF16(v[start..start + len].to_vec()),
     }
 }
 
@@ -458,6 +608,57 @@ mod tests {
         assert_eq!(Tensor::scalar_i64(-7).scalar_value_i64().unwrap(), -7);
         let v = Tensor::from_f32(vec![2], vec![1., 2.]).unwrap();
         assert!(v.scalar_value_f32().is_err());
+    }
+
+    #[test]
+    fn stack_and_unstack_roundtrip() {
+        let a = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_f32(vec![2], vec![3.0, 4.0]).unwrap();
+        let s = Tensor::stack(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(s.shape().dims(), &[2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        let parts = s.unstack().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+        // Shape mismatch rejected.
+        let c = Tensor::from_f32(vec![3], vec![0.0; 3]).unwrap();
+        assert!(Tensor::stack(&[a, c]).is_err());
+        assert!(Tensor::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn concat_and_split_rows_roundtrip() {
+        let a = Tensor::from_f32(vec![1, 3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::from_f32(vec![2, 3], vec![4.0, 5.0, 6.0, 7.0, 8.0, 9.0]).unwrap();
+        let cat = Tensor::concat_rows(&[a.clone(), b.clone()]).unwrap();
+        assert_eq!(cat.shape().dims(), &[3, 3]);
+        let parts = cat.split_rows(&[1, 2]).unwrap();
+        assert_eq!(parts[0], a);
+        assert_eq!(parts[1], b);
+        // Row counts must cover the tensor.
+        assert!(cat.split_rows(&[1, 1]).is_err());
+        // Trailing-dim mismatch rejected.
+        let c = Tensor::from_f32(vec![1, 2], vec![0.0; 2]).unwrap();
+        assert!(Tensor::concat_rows(&[a.clone(), c]).is_err());
+        // Scalars have no batch axis.
+        assert!(Tensor::concat_rows(&[Tensor::scalar_f32(1.0)]).is_err());
+        assert!(Tensor::scalar_f32(1.0).split_rows(&[1]).is_err());
+        // Dtype mismatch rejected.
+        let i = Tensor::from_i32(vec![1, 3], vec![1, 2, 3]).unwrap();
+        assert!(Tensor::concat_rows(&[a, i]).is_err());
+    }
+
+    #[test]
+    fn concat_rows_non_f32_dtypes() {
+        let a = Tensor::from_i64(vec![2], vec![1, 2]).unwrap();
+        let b = Tensor::from_i64(vec![1], vec![3]).unwrap();
+        let cat = Tensor::concat_rows(&[a, b]).unwrap();
+        assert_eq!(cat.as_i64().unwrap(), &[1, 2, 3]);
+        let s = Tensor::new(Shape::vector(2), TensorData::Str(vec!["x".into(), "y".into()]))
+            .unwrap();
+        let parts = s.split_rows(&[1, 1]).unwrap();
+        assert_eq!(parts[1].as_str_slice().unwrap(), &["y".to_string()]);
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! A bounded multi-producer/multi-consumer queue with blocking push
+//! (backpressure), non-blocking try-push (load shedding), and
+//! deadline-aware pop — the admission-control primitive under
+//! [`crate::serving`]'s batch scheduler.
+//!
+//! Unlike [`crate::queue`] (graph-level tensor queues whose Enqueue/Dequeue
+//! kernels park *continuations*), this is a plain host-side channel for
+//! arbitrary `T`: callers are real threads that can afford to block.
+
+use crate::error::{Result, Status};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Outcome of a deadline-bounded pop.
+pub enum Pop<T> {
+    /// An item arrived before the deadline.
+    Item(T),
+    /// The deadline passed with the queue still empty.
+    TimedOut,
+    /// The queue is closed and fully drained; no item will ever arrive.
+    Closed,
+}
+
+struct State<T> {
+    buf: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded blocking MPMC queue. `push` blocks while full (backpressure),
+/// `try_push` fails fast with `ResourceExhausted`, `pop` blocks while
+/// empty, and `pop_deadline` gives up at an `Instant`. After `close`,
+/// pushes fail with `Unavailable` and pops drain the remaining items
+/// before reporting closure.
+pub struct Bounded<T> {
+    capacity: usize,
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Bounded<T> {
+    pub fn new(capacity: usize) -> Bounded<T> {
+        Bounded {
+            capacity: capacity.max(1),
+            state: Mutex::new(State { buf: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Blocking push: waits while the queue is at capacity.
+    pub fn push(&self, item: T) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        while s.buf.len() >= self.capacity && !s.closed {
+            s = self.not_full.wait(s).unwrap();
+        }
+        if s.closed {
+            return Err(Status::unavailable("queue is closed"));
+        }
+        s.buf.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Non-blocking push: `ResourceExhausted` when full, `Unavailable`
+    /// when closed.
+    pub fn try_push(&self, item: T) -> Result<()> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(Status::unavailable("queue is closed"));
+        }
+        if s.buf.len() >= self.capacity {
+            return Err(Status::resource_exhausted(format!(
+                "queue is full ({} items)",
+                self.capacity
+            )));
+        }
+        s.buf.push_back(item);
+        drop(s);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.buf.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.not_empty.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking pop: `TimedOut` means "empty right now".
+    pub fn try_pop(&self) -> Pop<T> {
+        self.pop_deadline(Instant::now())
+    }
+
+    /// Pop with a deadline: blocks until an item arrives, the queue
+    /// closes, or `deadline` passes.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.buf.pop_front() {
+                drop(s);
+                self.not_full.notify_one();
+                return Pop::Item(item);
+            }
+            if s.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Close the queue: wakes all waiters. Already-buffered items remain
+    /// poppable; new pushes fail.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_roundtrip() {
+        let q = Bounded::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_backpressure() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        let e = q.try_push(3).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::ResourceExhausted);
+        q.pop();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn push_blocks_until_space() {
+        let q = Arc::new(Bounded::new(1));
+        q.push(1).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.push(2).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.len(), 1, "second push should still be parked");
+        assert_eq!(q.pop(), Some(1));
+        t.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let q = Bounded::new(4);
+        match q.try_pop() {
+            Pop::TimedOut => {}
+            _ => panic!("expected empty"),
+        }
+        q.push(5).unwrap();
+        match q.try_pop() {
+            Pop::Item(5) => {}
+            _ => panic!("expected item"),
+        }
+        q.close();
+        match q.try_pop() {
+            Pop::Closed => {}
+            _ => panic!("expected closed"),
+        }
+    }
+
+    #[test]
+    fn pop_deadline_times_out() {
+        let q: Bounded<i32> = Bounded::new(4);
+        let t = Instant::now();
+        match q.pop_deadline(t + Duration::from_millis(25)) {
+            Pop::TimedOut => {}
+            _ => panic!("expected timeout"),
+        }
+        assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_drains_then_reports_closed() {
+        let q = Bounded::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.push(8).is_err());
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        match q.pop_deadline(Instant::now() + Duration::from_millis(5)) {
+            Pop::Closed => {}
+            _ => panic!("expected closed"),
+        }
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q: Arc<Bounded<i32>> = Arc::new(Bounded::new(4));
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn many_producers_one_consumer() {
+        let q = Arc::new(Bounded::new(8));
+        let mut handles = Vec::new();
+        for p in 0..4 {
+            let q = Arc::clone(&q);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    q.push(p * 100 + i).unwrap();
+                }
+            }));
+        }
+        let mut seen = Vec::new();
+        for _ in 0..400 {
+            seen.push(q.pop().unwrap());
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        seen.sort();
+        assert_eq!(seen, (0..400).collect::<Vec<_>>());
+    }
+}

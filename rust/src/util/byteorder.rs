@@ -1,0 +1,79 @@
+//! Little-endian byte packing, shared by every on-disk and on-wire format
+//! (`tensor::codec`, `graph::serde`, `checkpoint`, `data`,
+//! `distributed::proto`).
+//!
+//! Drop-in subset of the `byteorder` crate's `LittleEndian` API so the
+//! crate builds with no external dependencies: reads take a slice at least
+//! as long as the value, writes fill the first `size_of::<T>()` bytes.
+//! Both panic on short buffers, exactly like the original.
+
+/// Little-endian reader/writer. All methods are associated functions, used
+/// as `LittleEndian::read_u32(&buf[pos..])`.
+pub struct LittleEndian;
+
+macro_rules! impl_le {
+    ($($read:ident / $write:ident => $ty:ty),* $(,)?) => {
+        impl LittleEndian {
+            $(
+                pub fn $read(buf: &[u8]) -> $ty {
+                    const N: usize = std::mem::size_of::<$ty>();
+                    let mut bytes = [0u8; N];
+                    bytes.copy_from_slice(&buf[..N]);
+                    <$ty>::from_le_bytes(bytes)
+                }
+
+                pub fn $write(buf: &mut [u8], v: $ty) {
+                    const N: usize = std::mem::size_of::<$ty>();
+                    buf[..N].copy_from_slice(&v.to_le_bytes());
+                }
+            )*
+        }
+    };
+}
+
+impl_le! {
+    read_u16 / write_u16 => u16,
+    read_u32 / write_u32 => u32,
+    read_u64 / write_u64 => u64,
+    read_i32 / write_i32 => i32,
+    read_i64 / write_i64 => i64,
+    read_f32 / write_f32 => f32,
+    read_f64 / write_f64 => f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut b = [0u8; 8];
+        LittleEndian::write_u16(&mut b, 0xBEEF);
+        assert_eq!(LittleEndian::read_u16(&b), 0xBEEF);
+        LittleEndian::write_u32(&mut b, 0xDEAD_BEEF);
+        assert_eq!(LittleEndian::read_u32(&b), 0xDEAD_BEEF);
+        LittleEndian::write_u64(&mut b, u64::MAX - 7);
+        assert_eq!(LittleEndian::read_u64(&b), u64::MAX - 7);
+        LittleEndian::write_i32(&mut b, -42);
+        assert_eq!(LittleEndian::read_i32(&b), -42);
+        LittleEndian::write_i64(&mut b, i64::MIN + 1);
+        assert_eq!(LittleEndian::read_i64(&b), i64::MIN + 1);
+        LittleEndian::write_f32(&mut b, 3.25);
+        assert_eq!(LittleEndian::read_f32(&b), 3.25);
+        LittleEndian::write_f64(&mut b, -0.5);
+        assert_eq!(LittleEndian::read_f64(&b), -0.5);
+    }
+
+    #[test]
+    fn little_endian_layout() {
+        let mut b = [0u8; 4];
+        LittleEndian::write_u32(&mut b, 0x0102_0304);
+        assert_eq!(b, [0x04, 0x03, 0x02, 0x01]);
+    }
+
+    #[test]
+    fn reads_ignore_trailing_bytes() {
+        let b = [0x01, 0x00, 0xFF, 0xFF, 0xFF];
+        assert_eq!(LittleEndian::read_u16(&b), 1);
+    }
+}

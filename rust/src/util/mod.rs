@@ -1,5 +1,8 @@
-//! Shared utilities: PRNG, JSON writer, thread pool, bench stats.
+//! Shared utilities: PRNG, JSON writer, thread pool, bench stats,
+//! little-endian byte packing, and a bounded MPMC channel.
 
+pub mod bounded;
+pub mod byteorder;
 pub mod json;
 pub mod rng;
 pub mod stats;

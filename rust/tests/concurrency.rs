@@ -1,0 +1,136 @@
+//! Concurrent-execution integration tests: many client threads driving
+//! one Session (§7 Fig 9's concurrent-steps idiom) and the serving layer
+//! built on top of it. The invariant under test is per-step isolation —
+//! every Run gets its own step state and per-step rendezvous, so feeds
+//! and fetches never leak between concurrent steps sharing one cached
+//! executable.
+
+use rustflow::serving::{BatchConfig, ModelServer};
+use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn concurrent_runs_share_one_cached_step_without_cross_talk() {
+    // y = x * 3, one signature, hammered from 8 threads.
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let three = b.scalar(3.0);
+    let y = b.mul(x, three);
+    let yname = format!("{}:0", b.graph.node(y.node).name);
+    let sess = Arc::new(Session::new(b.into_graph(), SessionOptions::default()));
+
+    // Warm the cache so every thread hits the same compiled step.
+    sess.run(&[("x", Tensor::scalar_f32(1.0))], &[&yname], &[]).unwrap();
+
+    let mut handles = Vec::new();
+    for t in 0..8u32 {
+        let sess = Arc::clone(&sess);
+        let yname = yname.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..100u32 {
+                let v = (t * 1000 + i) as f32;
+                let out = sess.run(&[("x", Tensor::scalar_f32(v))], &[&yname], &[]).unwrap();
+                let got = out[0].scalar_value_f32().unwrap();
+                assert_eq!(got, 3.0 * v, "thread {t} iteration {i}: fed {v}, got {got}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+    // The signature was compiled once and reused (cache hit path).
+    assert!(sess.step_stats(&["x"], &[&yname], &[]).is_some());
+}
+
+#[test]
+fn concurrent_runs_with_shared_variable_state() {
+    // Concurrent increments of one variable: per-step isolation must not
+    // extend to *resources* — all steps see the same counter, and every
+    // increment lands (AssignAdd holds the variable lock per apply).
+    let mut b = GraphBuilder::new();
+    let v = b.variable("counter", Tensor::scalar_f32(0.0)).unwrap();
+    let one = b.scalar(1.0);
+    let inc = b.assign_add(v, one).unwrap();
+    let init_name = b.graph.node(b.init_ops[0]).name.clone();
+    let inc_name = b.graph.node(inc).name.clone();
+    let sess = Arc::new(Session::new(b.into_graph(), SessionOptions::default()));
+    sess.run_targets(&[&init_name]).unwrap();
+
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let sess = Arc::clone(&sess);
+        let inc_name = inc_name.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..25 {
+                sess.run_targets(&[&inc_name]).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+    let out = sess.run(&[], &["counter"], &[]).unwrap();
+    assert_eq!(out[0].scalar_value_f32().unwrap(), 100.0);
+}
+
+#[test]
+fn served_batched_results_match_direct_session_runs() {
+    // An MLP served with aggressive batching must return, per request,
+    // exactly what a direct unbatched Session::run returns.
+    let (dim, hidden, classes) = (16usize, 32usize, 4usize);
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let (logits, _vars) = models::mlp(&mut b, x, &[dim, hidden, classes], 11).unwrap();
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> =
+        b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let session = Arc::new(Session::new(b.into_graph(), SessionOptions::default()));
+    session.run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+
+    let server = Arc::new(ModelServer::with_session(
+        Arc::clone(&session),
+        BatchConfig {
+            max_batch_size: 16,
+            max_batch_delay: Duration::from_millis(5),
+            queue_capacity: 256,
+            ..BatchConfig::default()
+        },
+    ));
+
+    // Deterministic per-request inputs with varying row counts 1..=3.
+    let make_input = move |c: usize, i: usize| -> Tensor {
+        let rows = 1 + (c + i) % 3;
+        let data: Vec<f32> =
+            (0..rows * dim).map(|k| ((c * 31 + i * 7 + k) % 23) as f32 * 0.05).collect();
+        Tensor::from_f32(vec![rows, dim], data).unwrap()
+    };
+
+    let mut handles = Vec::new();
+    for c in 0..6usize {
+        let server = Arc::clone(&server);
+        let session = Arc::clone(&session);
+        let fetch = fetch.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..20usize {
+                let input = make_input(c, i);
+                let served =
+                    server.run(&[("x", input.clone())], &[&fetch]).unwrap();
+                let direct = session.run(&[("x", input)], &[&fetch]).unwrap();
+                assert_eq!(served.len(), 1);
+                assert_eq!(served[0].shape(), direct[0].shape(), "client {c} request {i}");
+                assert!(
+                    served[0].allclose(&direct[0], 1e-5, 1e-5),
+                    "client {c} request {i}: served result diverged from direct run"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 120);
+    assert!(stats.batches >= 1);
+    server.shutdown();
+}

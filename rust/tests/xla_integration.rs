@@ -11,11 +11,35 @@ fn relu_artifact() -> std::path::PathBuf {
     artifact_dir().join("relu_layer.hlo.txt")
 }
 
+/// The XLA stack needs two opt-ins: `make artifacts` (produces the HLO
+/// files) and `--features xla` (the PJRT bridge; the default build uses a
+/// stub that cannot execute). Tests skip rather than fail when either is
+/// missing, and assert fully when both are present.
+/// Only genuine absence skips — `NotFound` (no artifacts) or
+/// `Unavailable` (stub build). Any other error in an xla-enabled build
+/// (HLO parse failure, compile failure, …) is a real regression and
+/// must fail the test.
+macro_rules! require_xla {
+    ($e:expr) => {
+        match $e {
+            Ok(v) => v,
+            Err(e)
+                if e.code == rustflow::error::Code::NotFound
+                    || e.code == rustflow::error::Code::Unavailable =>
+            {
+                eprintln!("skipping (XLA stack unavailable: {e})");
+                return;
+            }
+            Err(e) => panic!("XLA stack present but broken: {e}"),
+        }
+    };
+}
+
 #[test]
 fn relu_layer_artifact_matches_cpu_kernels() {
     // The same relu(x·w + b) computed by (a) the Pallas-kernel XLA
     // artifact and (b) rustflow's own CPU kernels must agree.
-    let exe = load_artifact(&relu_artifact()).expect("run `make artifacts`");
+    let exe = require_xla!(load_artifact(&relu_artifact()));
     let (m, k, n) = (32usize, 64usize, 128usize);
     let mut rng = rustflow::util::rng::Pcg32::new(5);
     let x = Tensor::from_f32(vec![m, k], (0..m * k).map(|_| rng.normal()).collect()).unwrap();
@@ -37,7 +61,7 @@ fn xla_call_op_inside_a_graph() {
     // §5.4 as a graph node: XlaCall participates in a dataflow graph like
     // any other op.
     let exe_path = relu_artifact();
-    load_artifact(&exe_path).expect("run `make artifacts`");
+    require_xla!(load_artifact(&exe_path));
     let mut b = GraphBuilder::new();
     let x = b.placeholder("x", DType::F32).unwrap();
     let w = b.constant(Tensor::fill_f32(vec![64, 128], 0.01));
@@ -67,9 +91,9 @@ fn xla_call_op_inside_a_graph() {
 
 #[test]
 fn transformer_trainer_loss_decreases() {
-    let cfg = TransformerConfig::preset("tiny").expect("run `make artifacts`");
+    let cfg = require_xla!(TransformerConfig::preset("tiny"));
     assert!(cfg.num_params() > 50_000);
-    let mut trainer = XlaTrainer::new(&artifact_dir(), &cfg, 7).unwrap();
+    let mut trainer = require_xla!(XlaTrainer::new(&artifact_dir(), &cfg, 7));
     let mut losses = Vec::new();
     for _ in 0..30 {
         losses.push(trainer.train_step().unwrap());
@@ -83,8 +107,8 @@ fn transformer_trainer_loss_decreases() {
 
 #[test]
 fn transformer_checkpoint_roundtrip() {
-    let cfg = TransformerConfig::preset("tiny").expect("run `make artifacts`");
-    let mut trainer = XlaTrainer::new(&artifact_dir(), &cfg, 11).unwrap();
+    let cfg = require_xla!(TransformerConfig::preset("tiny"));
+    let mut trainer = require_xla!(XlaTrainer::new(&artifact_dir(), &cfg, 11));
     for _ in 0..3 {
         trainer.train_step().unwrap();
     }
@@ -103,9 +127,9 @@ fn transformer_checkpoint_roundtrip() {
 
 #[test]
 fn trainer_deterministic_given_seed() {
-    let cfg = TransformerConfig::preset("tiny").expect("run `make artifacts`");
-    let mut a = XlaTrainer::new(&artifact_dir(), &cfg, 3).unwrap();
-    let mut b = XlaTrainer::new(&artifact_dir(), &cfg, 3).unwrap();
+    let cfg = require_xla!(TransformerConfig::preset("tiny"));
+    let mut a = require_xla!(XlaTrainer::new(&artifact_dir(), &cfg, 3));
+    let mut b = require_xla!(XlaTrainer::new(&artifact_dir(), &cfg, 3));
     for _ in 0..3 {
         let la = a.train_step().unwrap();
         let lb = b.train_step().unwrap();

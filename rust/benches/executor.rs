@@ -4,6 +4,18 @@
 use rustflow::util::stats;
 use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
 
+/// These are *executor* micro-benches: the §5 optimizer would fold or fuse
+/// the toy graphs away and leave nothing to dispatch, so it stays off.
+fn raw_executor_options() -> SessionOptions {
+    SessionOptions {
+        enable_constant_folding: false,
+        enable_arithmetic_simplification: false,
+        enable_cse: false,
+        enable_elementwise_fusion: false,
+        ..Default::default()
+    }
+}
+
 fn main() {
     // Chain of N cheap nodes: measures per-node dispatch overhead.
     for n in [100usize, 1000] {
@@ -13,7 +25,7 @@ fn main() {
             x = b.neg(x);
         }
         let name = format!("{}:0", b.graph.node(x.node).name);
-        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let sess = Session::new(b.into_graph(), raw_executor_options());
         let s = stats::bench(3, 30, || {
             sess.run(&[], &[&name], &[]).unwrap();
         });
@@ -29,7 +41,7 @@ fn main() {
         let name = format!("{}:0", b.graph.node(sum.node).name);
         let sess = Session::new(
             b.into_graph(),
-            SessionOptions { threads_per_device: 4, ..Default::default() },
+            SessionOptions { threads_per_device: 4, ..raw_executor_options() },
         );
         let s = stats::bench(3, 30, || {
             sess.run(&[], &[&name], &[]).unwrap();
@@ -56,7 +68,7 @@ fn main() {
             )
             .unwrap();
         let name = format!("{}:0", b.graph.node(exits[0].node).name);
-        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let sess = Session::new(b.into_graph(), raw_executor_options());
         let s = stats::bench(3, 20, || {
             let out = sess.run(&[], &[&name], &[]).unwrap();
             assert_eq!(out[0].scalar_value_f32().unwrap(), lim);
@@ -68,7 +80,7 @@ fn main() {
         let mut b = GraphBuilder::new();
         let x = b.scalar(1.0);
         let name = format!("{}:0", b.graph.node(x.node).name);
-        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let sess = Session::new(b.into_graph(), raw_executor_options());
         let s = stats::bench(10, 200, || {
             sess.run(&[], &[&name], &[]).unwrap();
         });

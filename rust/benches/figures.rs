@@ -353,9 +353,16 @@ fn sec5_cse() {
     for enable in [false, true] {
         let (b, name) = build();
         let nodes_before = b.graph.len();
+        // Folding off: the towers are const-rooted and would collapse
+        // identically with or without CSE.
         let sess = Session::new(
             b.into_graph(),
-            SessionOptions { enable_cse: enable, trace: true, ..Default::default() },
+            SessionOptions {
+                enable_cse: enable,
+                trace: true,
+                enable_constant_folding: false,
+                ..Default::default()
+            },
         );
         let s = stats::bench(2, 20, || {
             sess.run(&[], &[&name], &[]).unwrap();
@@ -423,9 +430,15 @@ fn sec5_recv_scheduling() {
             "recv_scheduling={enable:<5} est. peak resident bytes {peak:>12.0} (+{edges} control edges)"
         );
         // And the end-to-end step still runs correctly.
+        // Folding off so the cross-device Recvs being scheduled stay real.
         let sess = Session::new(
             b.into_graph(),
-            SessionOptions { devices: 2, enable_recv_scheduling: enable, ..Default::default() },
+            SessionOptions {
+                devices: 2,
+                enable_recv_scheduling: enable,
+                enable_constant_folding: false,
+                ..Default::default()
+            },
         );
         sess.run(&[], &[&name], &[]).unwrap();
     }

@@ -1,0 +1,110 @@
+//! §5 optimizer ablation bench: one deep elementwise-chain model run with
+//! every pass combination that matters, reporting per-config step latency
+//! and the full-pipeline speedup over passes-disabled (the acceptance bar
+//! is ≥1.3×). Also writes the machine-readable `BENCH_optimizer.json`
+//! (path overridable via `BENCH_OPTIMIZER_JSON`; `scripts/bench.sh` points
+//! it at the repo root) — the start of the perf trajectory.
+
+use rustflow::util::json::Json;
+use rustflow::util::stats;
+use rustflow::{DType, GraphBuilder, Session, SessionOptions, Tensor};
+
+/// A deep elementwise chain over a fed vector, salted with the patterns
+/// each pass eats: `*1`/`+0` identities (simplification), a const subtree
+/// (folding), and long fusable runs (fusion). Every op is elementwise, so
+/// passes-off cost ≈ N kernel launches + N intermediate tensors.
+fn chain_model(depth: usize) -> (GraphBuilder, String) {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let one = b.scalar(1.0);
+    let zero = b.scalar(0.0);
+    let half = b.scalar(0.5);
+    let c = {
+        let c1 = b.scalar(3.0);
+        let c2 = b.scalar(2.0);
+        let p = b.mul(c1, c2);
+        b.sqrt(p) // const subtree → folds to one literal
+    };
+    let mut h = x;
+    for i in 0..depth {
+        h = match i % 6 {
+            0 => b.mul(h, half),
+            1 => b.add(h, c),
+            2 => b.neg(h),
+            3 => b.mul(h, one),
+            4 => b.add(h, zero),
+            _ => b.op1("Abs", "Abs", vec![h], vec![]).unwrap(),
+        };
+    }
+    let name = format!("{}:0", b.graph.node(h.node).name);
+    (b, name)
+}
+
+fn options(fold: bool, simplify: bool, cse: bool, fuse: bool) -> SessionOptions {
+    SessionOptions {
+        enable_constant_folding: fold,
+        enable_arithmetic_simplification: simplify,
+        enable_cse: cse,
+        enable_elementwise_fusion: fuse,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let depth = 96usize;
+    let elements = 1usize << 16; // 256 KiB per intermediate at f32
+    let input = Tensor::fill_f32(vec![elements], 0.25);
+    let configs: &[(&str, bool, bool, bool, bool)] = &[
+        ("all_off", false, false, false, false),
+        ("fold_only", true, false, false, false),
+        ("simplify_only", false, true, false, false),
+        ("cse_only", false, false, true, false),
+        ("fuse_only", false, false, false, true),
+        ("full", true, true, true, true),
+    ];
+
+    let mut results = Json::arr();
+    let mut mean_us_of = std::collections::HashMap::new();
+    for &(name, fold, simplify, cse, fuse) in configs {
+        let (b, oname) = chain_model(depth);
+        let sess = Session::new(b.into_graph(), options(fold, simplify, cse, fuse));
+        // First run compiles (and optimizes); keep it out of the samples.
+        let first = sess.run(&[("x", input.clone())], &[&oname], &[]).unwrap();
+        assert!(first[0].as_f32().unwrap()[0].is_finite());
+        let s = stats::bench(5, 40, || {
+            sess.run(&[("x", input.clone())], &[&oname], &[]).unwrap();
+        });
+        stats::report(&format!("optimizer/chain{depth}x{elements}/{name}"), &s);
+        let mean_us = s.mean.as_secs_f64() * 1e6;
+        mean_us_of.insert(name, mean_us);
+        let row = Json::obj()
+            .set("config", name)
+            .set("mean_us", mean_us)
+            .set("p50_us", s.p50.as_secs_f64() * 1e6)
+            .set("p95_us", s.p95.as_secs_f64() * 1e6)
+            .set("iters", s.iters as i64);
+        results.push(row);
+    }
+
+    let speedup = mean_us_of["all_off"] / mean_us_of["full"];
+    println!("optimizer/chain{depth}x{elements}: full pipeline {speedup:.2}x vs passes-off");
+
+    // Cross-check the acceptance criterion here too so a perf regression
+    // fails loudly when the bench is run, not just in the JSON.
+    assert!(
+        speedup >= 1.3,
+        "full optimizer pipeline must be >= 1.3x over passes-off, got {speedup:.2}x"
+    );
+
+    let out = Json::obj()
+        .set("bench", "optimizer_ablation")
+        .set("model", "deep-elementwise-chain")
+        .set("depth", depth as i64)
+        .set("elements", elements as i64)
+        .set("results", results)
+        .set("speedup_full_vs_off", speedup);
+    let path = std::env::var("BENCH_OPTIMIZER_JSON")
+        .unwrap_or_else(|_| "BENCH_optimizer.json".to_string());
+    std::fs::write(&path, out.render() + "\n").expect("write bench json");
+    println!("wrote {path}");
+}

@@ -359,6 +359,41 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_fused_elementwise_attrs() {
+        // Regression: the optimizer's FusedElementwise nodes must survive
+        // the wire (masters ship optimized partitions to workers). The
+        // `ops` step list and `T` must round-trip exactly, and the decoded
+        // steps must parse back to the same program.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let c = b.scalar(2.0);
+        let id = b
+            .op(
+                "FusedElementwise",
+                "fused",
+                vec![x, c],
+                vec![
+                    (
+                        "ops",
+                        AttrValue::ListStr(vec!["Mul,r,1".into(), "Neg".into(), "Tanh".into()]),
+                    ),
+                    ("T", AttrValue::Type(DType::F32)),
+                ],
+            )
+            .unwrap();
+        let enc = encode_graph(&b.graph);
+        let dec = decode_graph(&enc).unwrap();
+        let n = dec.node(id);
+        assert_eq!(n.op, "FusedElementwise");
+        assert_eq!(n.attrs["ops"], b.graph.node(id).attrs["ops"]);
+        assert_eq!(n.attrs["T"].as_type().unwrap(), DType::F32);
+        assert_eq!(n.inputs.len(), 2);
+        let steps = crate::kernels::fused::parse_steps(&n.attrs["ops"]).unwrap();
+        assert_eq!(steps.len(), 3);
+        assert_eq!(steps[0].arg, Some(1));
+    }
+
+    #[test]
     fn garbage_rejected() {
         assert!(decode_graph(&[1, 2, 3]).is_err());
         let mut b = GraphBuilder::new();

@@ -65,14 +65,28 @@ pub(super) fn register(r: &mut KernelRegistry) {
 
     // _Feed() -> tensor: reads a pre-populated feed from the step
     // rendezvous ("specially-initialized entries in a Rendezvous object
-    // used for the Run call", §4.2).
+    // used for the Run call", §4.2). When the fed endpoint declared a
+    // dtype (attr `T`, copied from the producer by prune_for_run), the fed
+    // tensor must match it — the §5 optimizer's dtype reasoning relies on
+    // the declaration, so a mis-typed feed has to fail identically whether
+    // or not the passes rewrote its consumers away.
     r.add("_Feed", |node| {
         let key = node.attr("key")?.as_str()?.to_string();
+        let declared = node.attr_opt("T").and_then(|a| a.as_type().ok());
         Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
-            ctx.rendezvous
+            let t = ctx
+                .rendezvous
                 .try_recv(&key)
-                .map(|t| vec![t])
-                .ok_or_else(|| Status::internal(format!("feed {key:?} missing from rendezvous")))
+                .ok_or_else(|| Status::internal(format!("feed {key:?} missing from rendezvous")))?;
+            if let Some(want) = declared {
+                if t.dtype() != want {
+                    return Err(Status::invalid_argument(format!(
+                        "feed {key:?}: fed tensor is {}, graph declares {want}",
+                        t.dtype()
+                    )));
+                }
+            }
+            Ok(vec![t])
         })))
     });
 

@@ -1,0 +1,359 @@
+//! The `FusedElementwise` kernel: executes a recorded sequence of unary and
+//! binary elementwise operations in a single pass over the data.
+//!
+//! Nodes of this op are produced at build time by the §5 optimizer's
+//! elementwise-chain fusion pass (`passes::fuse`), never by clients. The
+//! node's input 0 is the chain's primary operand; inputs 1.. are the
+//! external ("extra") operands of the binary steps; the `ops` attr records
+//! one step per original node:
+//!
+//! * `"Tanh"` — unary step: `acc = Tanh(acc)`.
+//! * `"Mul,r,2"` — binary step, extra on the *right*: `acc = acc * inputs[2]`.
+//! * `"Sub,l,3"` — binary step, extra on the *left*: `acc = inputs[3] - acc`.
+//!
+//! Fast path (the point of fusion): when the primary operand is `f32` and
+//! every extra is `f32` and either scalar or exactly primary-shaped, the
+//! whole program runs element-at-a-time into one output buffer — zero
+//! intermediate tensor allocations, using the *same* scalar functions as
+//! the standalone kernels so fused and unfused graphs agree exactly.
+//! Otherwise (other dtypes, broadcast shapes) the kernel falls back to
+//! applying the steps sequentially through `unary_elementwise` /
+//! `binary_elementwise`, which is always correct but allocates one
+//! intermediate per step; teaching the fast path about broadcast shapes is
+//! a ROADMAP open item.
+
+use super::{Kernel, KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::graph::AttrValue;
+use crate::kernels::math;
+use crate::kernels::nn;
+use crate::tensor::{DType, Tensor, TensorData};
+
+/// One step of a fused program, parsed from the `ops` attr.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Step {
+    pub op: String,
+    /// Binary steps: true = accumulator is the left operand.
+    pub acc_left: bool,
+    /// Binary steps: index into the node's inputs for the extra operand.
+    pub arg: Option<usize>,
+}
+
+/// Parse the `ops` attr (`list(string)`) into steps. See module docs for
+/// the entry grammar.
+pub fn parse_steps(attr: &AttrValue) -> Result<Vec<Step>> {
+    let entries = attr.as_list_str()?;
+    if entries.is_empty() {
+        return Err(Status::invalid_argument("FusedElementwise: empty ops attr"));
+    }
+    entries
+        .iter()
+        .map(|entry| {
+            let mut parts = entry.split(',');
+            let op = parts.next().unwrap_or("").to_string();
+            match (parts.next(), parts.next(), parts.next()) {
+                (None, ..) => Ok(Step { op, acc_left: true, arg: None }),
+                (Some(side), Some(idx), None) => {
+                    let acc_left = match side {
+                        "r" => true,
+                        "l" => false,
+                        other => {
+                            return Err(Status::invalid_argument(format!(
+                                "FusedElementwise: bad side {other:?} in step {entry:?}"
+                            )))
+                        }
+                    };
+                    let arg: usize = idx.parse().map_err(|_| {
+                        Status::invalid_argument(format!(
+                            "FusedElementwise: bad arg index in step {entry:?}"
+                        ))
+                    })?;
+                    if arg == 0 {
+                        return Err(Status::invalid_argument(
+                            "FusedElementwise: extra operand cannot be input 0 (the primary)",
+                        ));
+                    }
+                    Ok(Step { op, acc_left, arg: Some(arg) })
+                }
+                _ => Err(Status::invalid_argument(format!(
+                    "FusedElementwise: malformed step {entry:?}"
+                ))),
+            }
+        })
+        .collect()
+}
+
+/// Render steps back into the attr form (used by the fusion pass).
+pub fn steps_to_attr(steps: &[Step]) -> AttrValue {
+    AttrValue::ListStr(
+        steps
+            .iter()
+            .map(|s| match s.arg {
+                None => s.op.clone(),
+                Some(k) => format!("{},{},{k}", s.op, if s.acc_left { "r" } else { "l" }),
+            })
+            .collect(),
+    )
+}
+
+/// Scalar f32 function for a unary step. ReLU/Sigmoid are the very
+/// functions `kernels::nn` maps over tensors; everything else comes from
+/// `kernels::math` — shared either way, so fused and unfused agree by
+/// construction.
+fn scalar_unary(op: &str) -> Result<fn(f32) -> f32> {
+    Ok(match op {
+        "ReLU" => nn::f32_relu,
+        "Sigmoid" => nn::f32_sigmoid,
+        _ => math::f32_unary(op)?,
+    })
+}
+
+/// Apply one unary step to a whole tensor (fallback path).
+fn apply_unary(t: &Tensor, op: &str) -> Result<Tensor> {
+    match op {
+        "ReLU" => nn::relu(t),
+        "Sigmoid" => nn::sigmoid(t),
+        _ => math::unary_elementwise(t, op),
+    }
+}
+
+/// A step with its functions resolved, ready to interpret.
+enum Compiled<'a> {
+    Unary(fn(f32) -> f32),
+    /// (fn, acc_left, extra values, extra is scalar)
+    Binary(fn(f32, f32) -> f32, bool, &'a [f32], bool),
+}
+
+fn compute(steps: &[Step], ctx: &KernelContext) -> Result<Tensor> {
+    let primary = ctx.input(0)?;
+
+    // Fast path: f32 primary, every extra f32 and either primary-shaped or
+    // single-element with rank ≤ primary's. The rank bound matters: a [1]
+    // extra against a rank-0 primary broadcasts the *output* up to [1]
+    // under the standalone kernels, which the primary-shaped fast-path
+    // output would silently miss.
+    let fast = primary.dtype() == DType::F32
+        && steps.iter().all(|s| match s.arg {
+            None => true,
+            Some(k) => ctx.inputs.get(k).is_some_and(|t| {
+                t.dtype() == DType::F32
+                    && ((t.num_elements() == 1
+                        && t.shape().rank() <= primary.shape().rank())
+                        || t.shape() == primary.shape())
+            }),
+        });
+    if fast {
+        let mut prog: Vec<Compiled> = Vec::with_capacity(steps.len());
+        for s in steps {
+            match s.arg {
+                None => prog.push(Compiled::Unary(scalar_unary(&s.op)?)),
+                Some(k) => {
+                    let extra = ctx.input(k)?;
+                    prog.push(Compiled::Binary(
+                        math::f32_binop(&s.op)?,
+                        s.acc_left,
+                        extra.as_f32()?,
+                        extra.num_elements() == 1,
+                    ));
+                }
+            }
+        }
+        let x = primary.as_f32()?;
+        let mut out = Vec::with_capacity(x.len());
+        for (i, &v) in x.iter().enumerate() {
+            let mut acc = v;
+            for step in &prog {
+                acc = match *step {
+                    Compiled::Unary(f) => f(acc),
+                    Compiled::Binary(f, acc_left, ys, scalar) => {
+                        let y = if scalar { ys[0] } else { ys[i] };
+                        if acc_left {
+                            f(acc, y)
+                        } else {
+                            f(y, acc)
+                        }
+                    }
+                };
+            }
+            out.push(acc);
+        }
+        return Tensor::new(primary.shape().clone(), TensorData::F32(out));
+    }
+
+    // Fallback: sequential application — correct for every dtype/shape the
+    // standalone kernels support, at the cost of per-step intermediates.
+    let mut acc = primary.clone();
+    for s in steps {
+        acc = match s.arg {
+            None => apply_unary(&acc, &s.op)?,
+            Some(k) => {
+                let extra = ctx.input(k)?;
+                if s.acc_left {
+                    math::binary_elementwise(&acc, extra, &s.op)?
+                } else {
+                    math::binary_elementwise(extra, &acc, &s.op)?
+                }
+            }
+        };
+    }
+    Ok(acc)
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    r.add("FusedElementwise", |node| {
+        let steps = parse_steps(node.attr("ops")?)?;
+        // Fail at compile time (not step time) on unknown ops.
+        for s in &steps {
+            match s.arg {
+                None => {
+                    scalar_unary(&s.op)?;
+                }
+                Some(_) => {
+                    math::f32_binop(&s.op)?;
+                }
+            }
+        }
+        Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
+            Ok(vec![compute(&steps, ctx)?])
+        })))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceSpec};
+    use crate::kernels::NodeInfo;
+    use crate::rendezvous::{LocalRendezvous, Rendezvous};
+    use crate::resources::ResourceMgr;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    fn ctx_with(inputs: Vec<Tensor>) -> KernelContext {
+        KernelContext {
+            inputs,
+            node: Arc::new(NodeInfo {
+                name: "fused".into(),
+                op: "FusedElementwise".into(),
+                attrs: BTreeMap::new(),
+                ref_resource: None,
+                container: String::new(),
+                device_name: "d".into(),
+            }),
+            device: Arc::new(Device::new(DeviceSpec::local_cpu(0), 1)),
+            resources: ResourceMgr::new(),
+            rendezvous: LocalRendezvous::new() as Arc<dyn Rendezvous>,
+            step: crate::kernels::StepState::new(0),
+        }
+    }
+
+    fn t(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
+        Tensor::from_f32(shape, v).unwrap()
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let attr = AttrValue::ListStr(vec!["Neg".into(), "Mul,r,1".into(), "Sub,l,2".into()]);
+        let steps = parse_steps(&attr).unwrap();
+        assert_eq!(steps.len(), 3);
+        assert_eq!(steps[0], Step { op: "Neg".into(), acc_left: true, arg: None });
+        assert_eq!(steps[1], Step { op: "Mul".into(), acc_left: true, arg: Some(1) });
+        assert_eq!(steps[2], Step { op: "Sub".into(), acc_left: false, arg: Some(2) });
+        assert_eq!(steps_to_attr(&steps), attr);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_steps(&AttrValue::ListStr(vec![])).is_err());
+        assert!(parse_steps(&AttrValue::ListStr(vec!["Mul,x,1".into()])).is_err());
+        assert!(parse_steps(&AttrValue::ListStr(vec!["Mul,r,zero".into()])).is_err());
+        assert!(parse_steps(&AttrValue::ListStr(vec!["Mul,r,0".into()])).is_err());
+        assert!(parse_steps(&AttrValue::ListStr(vec!["Mul,r,1,2".into()])).is_err());
+    }
+
+    #[test]
+    fn fast_path_matches_sequential() {
+        // acc = relu((x * 2 - y)) elementwise over [4].
+        let steps = vec![
+            Step { op: "Mul".into(), acc_left: true, arg: Some(1) },
+            Step { op: "Sub".into(), acc_left: true, arg: Some(2) },
+            Step { op: "ReLU".into(), acc_left: true, arg: None },
+        ];
+        let x = t(vec![4], vec![-1.0, 0.5, 2.0, 3.0]);
+        let two = Tensor::scalar_f32(2.0);
+        let y = t(vec![4], vec![0.0, 2.0, 1.0, -1.0]);
+        let ctx = ctx_with(vec![x.clone(), two, y.clone()]);
+        let out = compute(&steps, &ctx).unwrap();
+        let xv = x.as_f32().unwrap();
+        let yv = y.as_f32().unwrap();
+        for i in 0..4 {
+            assert_eq!(out.as_f32().unwrap()[i], (xv[i] * 2.0 - yv[i]).max(0.0));
+        }
+    }
+
+    #[test]
+    fn acc_side_respected() {
+        // acc = 10 - x (extra on the left).
+        let steps = vec![Step { op: "Sub".into(), acc_left: false, arg: Some(1) }];
+        let ctx = ctx_with(vec![t(vec![2], vec![1.0, 4.0]), Tensor::scalar_f32(10.0)]);
+        let out = compute(&steps, &ctx).unwrap();
+        assert_eq!(out.as_f32().unwrap(), &[9.0, 6.0]);
+    }
+
+    #[test]
+    fn broadcast_extra_falls_back_correctly() {
+        // Extra [2,1] against primary [2]: not primary-shaped → fallback,
+        // which must agree with the standalone broadcasting kernel.
+        let steps = vec![Step { op: "Add".into(), acc_left: true, arg: Some(1) }];
+        let x = t(vec![2], vec![1.0, 2.0]);
+        let col = t(vec![2, 1], vec![10.0, 20.0]);
+        let ctx = ctx_with(vec![x.clone(), col.clone()]);
+        let out = compute(&steps, &ctx).unwrap();
+        let expect = math::binary_elementwise(&x, &col, "Add").unwrap();
+        assert_eq!(out.shape(), expect.shape());
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+    }
+
+    #[test]
+    fn rank_raising_scalar_extra_falls_back() {
+        // Extra [1] against a rank-0 primary: unfused broadcasting yields
+        // shape [1], so the primary-shaped fast path must not engage.
+        let steps = vec![Step { op: "Add".into(), acc_left: true, arg: Some(1) }];
+        let x = Tensor::scalar_f32(2.0);
+        let e = t(vec![1], vec![3.0]);
+        let ctx = ctx_with(vec![x.clone(), e.clone()]);
+        let out = compute(&steps, &ctx).unwrap();
+        let expect = math::binary_elementwise(&x, &e, "Add").unwrap();
+        assert_eq!(out.shape(), expect.shape());
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+    }
+
+    #[test]
+    fn non_f32_falls_back() {
+        let steps = vec![
+            Step { op: "Neg".into(), acc_left: true, arg: None },
+            Step { op: "Abs".into(), acc_left: true, arg: None },
+        ];
+        let x = Tensor::from_i32(vec![3], vec![-1, 2, -3]).unwrap();
+        let ctx = ctx_with(vec![x]);
+        let out = compute(&steps, &ctx).unwrap();
+        assert_eq!(out.as_i32().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn unknown_op_rejected_at_kernel_build() {
+        let node = NodeInfo {
+            name: "fused".into(),
+            op: "FusedElementwise".into(),
+            attrs: {
+                let mut a = BTreeMap::new();
+                a.insert("ops".to_string(), AttrValue::ListStr(vec!["NotAnOp".into()]));
+                a
+            },
+            ref_resource: None,
+            container: String::new(),
+            device_name: "d".into(),
+        };
+        assert!(crate::kernels::create_kernel(&node, "cpu").is_err());
+    }
+}

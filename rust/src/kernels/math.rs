@@ -145,7 +145,9 @@ pub fn binary_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
     }
 }
 
-fn f32_binop(op: &str) -> Result<fn(f32, f32) -> f32> {
+/// Scalar f32 binary function for `op` (shared with `kernels::fused`,
+/// which interprets recorded op sequences element-by-element).
+pub(crate) fn f32_binop(op: &str) -> Result<fn(f32, f32) -> f32> {
     Ok(match op {
         "Add" => |a, b| a + b,
         "Sub" => |a, b| a - b,
@@ -230,23 +232,28 @@ pub fn compare_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
     Tensor::new(out_shape, TensorData::Bool(out))
 }
 
+/// Scalar f32 unary function for `op` (shared with `kernels::fused`).
+pub(crate) fn f32_unary(op: &str) -> Result<fn(f32) -> f32> {
+    Ok(match op {
+        "Neg" => |v| -v,
+        "Exp" => f32::exp,
+        "Log" => f32::ln,
+        "Sqrt" => f32::sqrt,
+        "Rsqrt" => |v| 1.0 / v.sqrt(),
+        "Abs" => f32::abs,
+        "Sign" => f32::signum,
+        "Square" => |v| v * v,
+        "Tanh" => f32::tanh,
+        "Reciprocal" => |v| 1.0 / v,
+        _ => return Err(Status::unimplemented(format!("f32 unary {op}"))),
+    })
+}
+
 /// Unary elementwise op.
 pub fn unary_elementwise(a: &Tensor, op: &str) -> Result<Tensor> {
     match a.data() {
         TensorData::F32(x) => {
-            let f: fn(f32) -> f32 = match op {
-                "Neg" => |v| -v,
-                "Exp" => f32::exp,
-                "Log" => f32::ln,
-                "Sqrt" => f32::sqrt,
-                "Rsqrt" => |v| 1.0 / v.sqrt(),
-                "Abs" => f32::abs,
-                "Sign" => f32::signum,
-                "Square" => |v| v * v,
-                "Tanh" => f32::tanh,
-                "Reciprocal" => |v| 1.0 / v,
-                _ => return Err(Status::unimplemented(format!("f32 unary {op}"))),
-            };
+            let f = f32_unary(op)?;
             Tensor::new(a.shape().clone(), TensorData::F32(x.iter().map(|&v| f(v)).collect()))
         }
         TensorData::F64(x) => {

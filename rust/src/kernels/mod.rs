@@ -11,6 +11,7 @@
 
 pub mod array;
 pub mod comm;
+pub mod fused;
 pub mod math;
 pub mod matrix;
 pub mod nn;
@@ -206,6 +207,7 @@ pub fn has_kernel(op: &str, device_type: &str) -> bool {
 fn install_cpu_kernels(r: &mut KernelRegistry) {
     math::register(r);
     array::register(r);
+    fused::register(r);
     matrix::register(r);
     nn::register(r);
     state::register(r);

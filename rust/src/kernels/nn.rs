@@ -7,9 +7,20 @@ use super::{KernelContext, KernelRegistry};
 use crate::error::{Result, Status};
 use crate::tensor::{Shape, Tensor, TensorData};
 
+/// Scalar ReLU, shared with the fused-elementwise interpreter
+/// (`kernels::fused`) so fused and unfused graphs agree exactly.
+pub(crate) fn f32_relu(v: f32) -> f32 {
+    v.max(0.0)
+}
+
+/// Scalar sigmoid, shared with `kernels::fused` for the same reason.
+pub(crate) fn f32_sigmoid(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
 pub fn relu(x: &Tensor) -> Result<Tensor> {
     let v = x.as_f32()?;
-    Tensor::new(x.shape().clone(), TensorData::F32(v.iter().map(|&a| a.max(0.0)).collect()))
+    Tensor::new(x.shape().clone(), TensorData::F32(v.iter().map(|&a| f32_relu(a)).collect()))
 }
 
 /// dx = dy * (features > 0)
@@ -29,7 +40,7 @@ pub fn sigmoid(x: &Tensor) -> Result<Tensor> {
     let v = x.as_f32()?;
     Tensor::new(
         x.shape().clone(),
-        TensorData::F32(v.iter().map(|&a| 1.0 / (1.0 + (-a).exp())).collect()),
+        TensorData::F32(v.iter().map(|&a| f32_sigmoid(a)).collect()),
     )
 }
 

@@ -215,6 +215,10 @@ fn install_builtin(r: &mut Registry) {
     op!(r, "AddN", ElementWise, AtLeast(1), fixed::<1>);
     op!(r, "Cast", ElementWise, Exact(1), fixed::<1>);
     op!(r, "CheckNumerics", ElementWise, Exact(1), fixed::<1>);
+    // Produced by the §5 optimizer's fusion pass (`passes::fuse`), never
+    // by clients: input 0 is the chain's primary operand, inputs 1.. the
+    // binary steps' extra operands, attr `ops` the recorded op sequence.
+    op!(r, "FusedElementwise", ElementWise, AtLeast(1), fixed::<1>);
 
     // --- Array operations (Table 1 row 2) ---
     op!(r, "Const", Array, Exact(0), fixed::<1>);

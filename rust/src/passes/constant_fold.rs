@@ -1,0 +1,356 @@
+//! §5 constant folding: find maximal Const-rooted subgraphs of the pruned
+//! step graph and evaluate them at build time — reusing the existing
+//! single-device executor as the evaluator, so a folded value is computed
+//! by exactly the kernels that would have computed it at step time — then
+//! replace each folded endpoint with a `Const` node.
+//!
+//! A node is *foldable* when it is pure (stateless, non-control-flow,
+//! non-internal), has a CPU kernel, carries no control edges in either
+//! direction, and every data input is foldable. `Const` is the base case.
+//! Control-flow ops are never foldable, so folding cannot cross a
+//! `Switch`/`Merge` boundary — dead branches stay dead and are never
+//! evaluated at build time (the §4.4 tests pin this down).
+//!
+//! Fail-open contract: if build-time evaluation errors (a kernel that
+//! would also error at step time, e.g. a divide in an op that rejects the
+//! value), the graph is returned unchanged and the error surfaces at run
+//! time exactly as without the pass.
+
+use crate::device::{Device, DeviceSpec};
+use crate::error::Result;
+use crate::executor::{CompiledGraph, Executor, RunContext};
+use crate::graph::{AttrValue, Endpoint, Graph, Node, NodeId};
+use crate::kernels::{has_kernel, StepState};
+use crate::ops::{self, Category};
+use crate::rendezvous::{LocalRendezvous, Rendezvous};
+use crate::resources::ResourceMgr;
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::Arc;
+
+/// Statistics from one constant-folding run.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct FoldStats {
+    pub nodes_before: usize,
+    /// (node, port) endpoints replaced by Const nodes.
+    pub endpoints_folded: usize,
+    /// Nodes dropped because every consumer now reads a folded Const.
+    pub nodes_removed: usize,
+    /// Endpoints evaluated but left in place (result over the size cap).
+    pub skipped_large: usize,
+}
+
+/// Folded tensors above this size stay unmaterialized: baking a huge
+/// literal into the graph trades step-time compute for resident memory
+/// and serialized-graph bloat.
+pub const MAX_FOLDED_BYTES: usize = 8 << 20;
+
+/// Ops that are registered stateless but must not be folded anyway:
+/// `Shuffle` keeps RNG state inside its kernel instance (folding would
+/// freeze one permutation), and `CheckNumerics` exists to fail at step
+/// time with a step-time message.
+fn denylisted(op: &str) -> bool {
+    matches!(op, "Shuffle" | "CheckNumerics")
+}
+
+fn fold_key(i: usize) -> String {
+    format!("fold:{i}")
+}
+
+/// Run constant folding over `graph`. Pure graph→graph; see module docs.
+pub fn constant_folding(graph: &Graph) -> Result<(Graph, FoldStats)> {
+    let mut stats = FoldStats { nodes_before: graph.len(), ..Default::default() };
+    let order = graph.topo_order()?;
+    let fanout = graph.fanout();
+
+    // ---- foldability (propagates forward from Const roots) --------------
+    let mut foldable = vec![false; graph.len()];
+    for &id in &order {
+        let n = graph.node(id);
+        let def = match ops::lookup(&n.op) {
+            Ok(d) => d,
+            Err(_) => continue, // unknown op: not foldable
+        };
+        let pure = !def.stateful
+            && !matches!(
+                def.category,
+                Category::ControlFlow
+                    | Category::Internal
+                    | Category::QueueSync
+                    | Category::Checkpointing
+            )
+            && n.op != "Placeholder"
+            && !n.op.starts_with('_')
+            && !denylisted(&n.op)
+            && has_kernel(&n.op, "cpu")
+            && n.control_inputs.is_empty()
+            && fanout.control[id.0].is_empty();
+        foldable[id.0] = pure && n.inputs.iter().all(|e| foldable[e.node.0]);
+    }
+
+    // ---- fold frontier: foldable endpoints read by non-foldable nodes ---
+    let mut frontier: Vec<(NodeId, usize)> = Vec::new();
+    let mut seen: HashSet<(NodeId, usize)> = HashSet::new();
+    for id in graph.ids() {
+        if !foldable[id.0] || graph.node(id).op == "Const" {
+            continue;
+        }
+        for &(consumer, slot) in &fanout.data[id.0] {
+            if foldable[consumer.0] {
+                continue;
+            }
+            let port = graph.node(consumer).inputs[slot].port;
+            if seen.insert((id, port)) {
+                frontier.push((id, port));
+            }
+        }
+    }
+    if frontier.is_empty() {
+        return Ok((graph.clone(), stats));
+    }
+
+    // ---- build the evaluation graph: the foldable closure + fetches -----
+    let mut needed: HashSet<NodeId> = HashSet::new();
+    let mut stack: Vec<NodeId> = frontier.iter().map(|&(id, _)| id).collect();
+    while let Some(id) = stack.pop() {
+        if !needed.insert(id) {
+            continue;
+        }
+        for e in &graph.node(id).inputs {
+            stack.push(e.node);
+        }
+    }
+    // Topological order so every input is materialized before its consumer
+    // (plain id order is not guaranteed backward-referencing).
+    let mut eval = Graph::new();
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+    for &id in &order {
+        if !needed.contains(&id) {
+            continue;
+        }
+        let old = graph.node(id);
+        let node = Node {
+            name: old.name.clone(),
+            op: old.op.clone(),
+            inputs: old.inputs.iter().map(|e| Endpoint::new(remap[&e.node], e.port)).collect(),
+            control_inputs: vec![],
+            attrs: old.attrs.clone(),
+            requested_device: String::new(),
+            assigned_device: None,
+        };
+        remap.insert(id, eval.add(node)?);
+    }
+    for (i, &(id, port)) in frontier.iter().enumerate() {
+        let mut attrs = BTreeMap::new();
+        attrs.insert("name".to_string(), AttrValue::Str(fold_key(i)));
+        eval.add(Node {
+            name: format!("_fold_fetch_{i}"),
+            op: "_Fetch".into(),
+            inputs: vec![Endpoint::new(remap[&id], port)],
+            control_inputs: vec![],
+            attrs,
+            requested_device: String::new(),
+            assigned_device: None,
+        })?;
+    }
+
+    // ---- evaluate with the single-device executor ------------------------
+    let device = Arc::new(Device::new(DeviceSpec::local_cpu(0), 1));
+    let compiled = match CompiledGraph::compile(&eval, device) {
+        Ok(c) => c,
+        Err(_) => return Ok((graph.clone(), stats)), // fail open
+    };
+    let step = StepState::new(0);
+    let ctx = RunContext {
+        resources: ResourceMgr::new(),
+        rendezvous: LocalRendezvous::new() as Arc<dyn Rendezvous>,
+        step: Arc::clone(&step),
+        trace: None,
+    };
+    if Executor::new(compiled).run(ctx).is_err() {
+        return Ok((graph.clone(), stats)); // fail open: error surfaces at run time
+    }
+    let mut values = step.take_fetches();
+
+    // ---- substitute Const nodes and redirect consumers -------------------
+    let mut rewritten = graph.clone();
+    let mut replacement: HashMap<(NodeId, usize), NodeId> = HashMap::new();
+    for (i, &(id, port)) in frontier.iter().enumerate() {
+        let Some(value) = values.remove(&fold_key(i)) else { continue };
+        if value.size_bytes() > MAX_FOLDED_BYTES {
+            stats.skipped_large += 1;
+            continue;
+        }
+        let name = rewritten.unique_name(&format!("{}/folded_{port}", graph.node(id).name));
+        let dtype = value.dtype();
+        let mut attrs = BTreeMap::new();
+        attrs.insert("value".to_string(), AttrValue::Tensor(value));
+        attrs.insert("T".to_string(), AttrValue::Type(dtype));
+        let const_id = rewritten.add(Node {
+            name,
+            op: "Const".into(),
+            inputs: vec![],
+            control_inputs: vec![],
+            attrs,
+            requested_device: graph.node(id).requested_device.clone(),
+            assigned_device: None,
+        })?;
+        replacement.insert((id, port), const_id);
+        stats.endpoints_folded += 1;
+    }
+    if replacement.is_empty() {
+        return Ok((graph.clone(), stats));
+    }
+    for cid in graph.ids() {
+        if foldable[cid.0] {
+            continue; // only non-foldable consumers are redirected
+        }
+        let new_inputs: Vec<Endpoint> = rewritten
+            .node(cid)
+            .inputs
+            .iter()
+            .map(|e| match replacement.get(&(e.node, e.port)) {
+                Some(&c) => Endpoint::new(c, 0),
+                None => *e,
+            })
+            .collect();
+        rewritten.node_mut(cid).inputs = new_inputs;
+    }
+
+    // ---- prune foldable nodes nothing reads anymore ----------------------
+    // Roots: every non-foldable node (they can only lose edges *into* the
+    // foldable set, never consumers), the new Consts, and foldable nodes
+    // with no consumers at all (pure targets run for their own sake).
+    let mut roots: Vec<NodeId> = Vec::new();
+    for id in graph.ids() {
+        let sink = fanout.data[id.0].is_empty() && fanout.control[id.0].is_empty();
+        if !foldable[id.0] || sink {
+            roots.push(id);
+        }
+    }
+    roots.extend((graph.len()..rewritten.len()).map(NodeId));
+    let keep = rewritten.reachable_from(&roots);
+    stats.nodes_removed = rewritten.len() - keep.len();
+    let (out, _) = rewritten.subgraph(&keep);
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::{DType, Tensor};
+
+    #[test]
+    fn folds_const_subgraph_feeding_placeholder_math() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let two = b.scalar(2.0);
+        let three = b.scalar(3.0);
+        let six = b.mul(two, three);
+        let neg = b.neg(six);
+        let _y = b.add(x, neg); // frontier: Neg's output feeds Add via x-side graph
+        let (g, stats) = constant_folding(&b.graph).unwrap();
+        assert_eq!(stats.endpoints_folded, 1);
+        // Mul and Neg (and the now-dead consts) are gone; a folded Const
+        // carrying -6 feeds Add.
+        assert!(g.nodes.iter().all(|n| n.op != "Mul" && n.op != "Neg"));
+        let add = g.nodes.iter().find(|n| n.op == "Add").unwrap();
+        let folded = g.node(add.inputs[1].node);
+        assert_eq!(folded.op, "Const");
+        assert_eq!(
+            folded.attrs["value"].as_tensor().unwrap().scalar_value_f32().unwrap(),
+            -6.0
+        );
+    }
+
+    #[test]
+    fn pure_const_only_frontier_is_noop() {
+        // Consts feeding a non-foldable op directly: nothing to fold.
+        let mut b = GraphBuilder::new();
+        let c = b.scalar(1.0);
+        let p = b.constant(Tensor::scalar_bool(true));
+        let _sw = b.switch(c, p).unwrap();
+        let before = b.graph.len();
+        let (g, stats) = constant_folding(&b.graph).unwrap();
+        assert_eq!(stats.endpoints_folded, 0);
+        assert_eq!(g.len(), before);
+    }
+
+    #[test]
+    fn does_not_fold_across_switch() {
+        // Ops downstream of Switch are not const-rooted even when every
+        // other input is Const — dead branches must stay unevaluated.
+        let mut b = GraphBuilder::new();
+        let c = b.scalar(5.0);
+        let p = b.constant(Tensor::scalar_bool(false));
+        let (f_side, t_side) = b.switch(c, p).unwrap();
+        let ten = b.scalar(10.0);
+        let t_out = b.mul(t_side, ten);
+        let one = b.scalar(1.0);
+        let f_out = b.add(f_side, one);
+        let _ = b.merge(vec![f_out, t_out]).unwrap();
+        let (g, stats) = constant_folding(&b.graph).unwrap();
+        assert_eq!(stats.endpoints_folded, 0);
+        assert!(g.nodes.iter().any(|n| n.op == "Mul"), "dead branch rewritten");
+    }
+
+    #[test]
+    fn stateful_and_random_ops_block_folding() {
+        let mut b = GraphBuilder::new();
+        let v = b.variable("v", Tensor::scalar_f32(1.0)).unwrap();
+        let two = b.scalar(2.0);
+        let _ = b.mul(v, two); // Variable input: not foldable
+        let r = b
+            .op1(
+                "RandomUniform",
+                "r",
+                vec![],
+                vec![("shape", AttrValue::Shape(crate::tensor::Shape(vec![2])))],
+            )
+            .unwrap();
+        let _ = b.neg(r); // RandomUniform is stateful: not foldable
+        let (_, stats) = constant_folding(&b.graph).unwrap();
+        assert_eq!(stats.endpoints_folded, 0);
+    }
+
+    #[test]
+    fn control_edges_block_folding() {
+        let mut b = GraphBuilder::new();
+        let a = b.scalar(1.0);
+        let c = b.scalar(2.0);
+        let s = b.add(a, c);
+        let trigger = b.no_op("trigger");
+        b.add_control_input(s.node, trigger);
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let _ = b.mul(x, s);
+        let (_, stats) = constant_folding(&b.graph).unwrap();
+        assert_eq!(stats.endpoints_folded, 0, "node with control input folded");
+    }
+
+    #[test]
+    fn multi_output_foldable_ports() {
+        // Split a const into two ports; a placeholder consumer reads both.
+        let mut b = GraphBuilder::new();
+        let c = b.constant(Tensor::from_f32(vec![4], vec![1., 2., 3., 4.]).unwrap());
+        let parts = b.split(c, 0, 2).unwrap();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let s = b.add(parts[0], x);
+        let _ = b.add(parts[1], s);
+        let (g, stats) = constant_folding(&b.graph).unwrap();
+        assert_eq!(stats.endpoints_folded, 2);
+        assert!(g.nodes.iter().all(|n| n.op != "Split"));
+        let consts: Vec<&Node> =
+            g.nodes.iter().filter(|n| n.name.contains("folded")).collect();
+        assert_eq!(consts.len(), 2);
+    }
+
+    #[test]
+    fn zero_consumer_pure_target_survives() {
+        // A pure node run purely as a target must not be deleted.
+        let mut b = GraphBuilder::new();
+        let c = b.scalar(3.0);
+        let _target = b.neg(c);
+        let (g, _) = constant_folding(&b.graph).unwrap();
+        assert!(g.nodes.iter().any(|n| n.op == "Neg"));
+    }
+}

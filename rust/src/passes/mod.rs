@@ -1,22 +1,240 @@
-//! Graph optimization passes (§5 "Optimizations").
+//! Graph optimization passes (§5 "Optimizations") and the [`PassManager`]
+//! that pipelines them.
 //!
-//! Passes run inside `Session::build_step`, after pruning and before
-//! placement/partitioning, so they see exactly the subgraph a Run will
-//! execute and their cost is paid once per cached signature:
+//! Build-time passes are pure graph→graph rewrites (plus stats) that run
+//! inside `Session::build_step` between pruning and placement, so they see
+//! exactly the subgraph a Run will execute and their cost is paid once per
+//! cached step signature:
 //!
-//! * [`cse`] — §5.1 common subexpression elimination over the pruned
-//!   graph (Click's GVN-style hashing of op, inputs, and attrs).
-//! * [`schedule`] — §5.2 Recv scheduling: delay the start of Recv ops
-//!   until just before their consumers need them, bounding peak memory
-//!   on the receiving device instead of pulling every tensor eagerly.
+//! * [`constant_fold`] — evaluate maximal Const-rooted subgraphs at build
+//!   time with the single-device executor and replace them with Const
+//!   nodes.
+//! * [`simplify`] — arithmetic identities: `x*1`, `x+0`, `x-0`, `x/1`,
+//!   `x^1`, double `Neg`/`Transpose`, Identity-chain collapse.
+//! * [`cse`] — §5.1 common subexpression elimination (Click's GVN-style
+//!   hashing of op, inputs, and attrs).
+//! * [`fuse`] — collapse linear elementwise chains into single
+//!   `FusedElementwise` nodes executed in one pass over the data.
 //!
-//! Each pass is pure graph→graph (plus stats), so they compose and are
-//! individually ablatable — `SessionOptions::enable_cse` /
-//! `enable_recv_scheduling` gate them, and the ablation benches flip
-//! those flags to measure each pass's contribution.
+//! The standard order is **fold → simplify → cse → fuse**: folding first
+//! materializes const subtrees (including identities buried inside them),
+//! simplification then strips identities around non-const values and
+//! shortens chains, CSE dedups what is left (including freshly folded
+//! equal constants), and fusion runs last because a `FusedElementwise`
+//! node would otherwise hide its members from the pattern-matching passes.
+//! Every pass preserves three invariants: rewrites never cross control
+//! flow (`Switch`/`Merge`/frames), never touch stateful ops, and never
+//! drop a node that carries control edges.
+//!
+//! [`schedule`] — §5.2 Recv scheduling — is *not* a PassManager pass: it
+//! runs after placement/partitioning (it needs the Send/Recv pairing), and
+//! stays gated by `SessionOptions::enable_recv_scheduling`.
+//!
+//! Each pipeline pass is individually gated by `SessionOptions`
+//! (`enable_constant_folding`, `enable_arithmetic_simplification`,
+//! `enable_cse`, `enable_elementwise_fusion`); `benches/optimizer.rs`
+//! flips those flags to measure each pass's contribution, and
+//! `tests/optimizer.rs` proves every flag combination semantics-preserving.
 
+pub mod constant_fold;
 pub mod cse;
+pub mod fuse;
 pub mod schedule;
+pub mod simplify;
 
+pub use constant_fold::{constant_folding, FoldStats};
 pub use cse::common_subexpression_elimination;
+pub use fuse::{fuse_elementwise_chains, FuseStats};
 pub use schedule::{schedule_recvs, schedule_recvs_global};
+pub use simplify::{arithmetic_simplification, SimplifyStats};
+
+use crate::error::Result;
+use crate::graph::Graph;
+
+/// Uniform record of one pass execution inside a [`PassManager`] run.
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    pub name: String,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    /// Pass-specific rewrite count: folded endpoints, simplified nodes,
+    /// CSE-removed duplicates, fused chains.
+    pub rewrites: usize,
+}
+
+/// Per-pass reports for one pipeline run (one per cached step signature).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    pub passes: Vec<PassReport>,
+}
+
+impl PipelineStats {
+    /// The report for a pass by name, if it ran.
+    pub fn report(&self, name: &str) -> Option<&PassReport> {
+        self.passes.iter().find(|p| p.name == name)
+    }
+
+    pub fn total_rewrites(&self) -> usize {
+        self.passes.iter().map(|p| p.rewrites).sum()
+    }
+}
+
+/// A pure graph→graph rewrite returning the new graph and a rewrite count.
+pub type PassFn = Box<dyn Fn(&Graph) -> Result<(Graph, usize)> + Send + Sync>;
+
+/// Runs an ordered list of pure passes over a graph, collecting per-pass
+/// stats. Registration order is execution order; because every pass is
+/// graph→graph, any subset composes (the ablation property the benches
+/// and equivalence tests rely on).
+#[derive(Default)]
+pub struct PassManager {
+    passes: Vec<(String, PassFn)>,
+}
+
+impl PassManager {
+    pub fn new() -> PassManager {
+        PassManager::default()
+    }
+
+    /// Append a pass under `name` (builder style).
+    pub fn register(mut self, name: &str, pass: PassFn) -> PassManager {
+        self.passes.push((name.to_string(), pass));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// The standard build-step pipeline with per-pass ablation flags, in
+    /// the canonical fold → simplify → cse → fuse order (module docs
+    /// explain why).
+    pub fn standard(fold: bool, simplify: bool, cse: bool, fuse: bool) -> PassManager {
+        let mut pm = PassManager::new();
+        if fold {
+            pm = pm.register(
+                "constant_folding",
+                Box::new(|g| {
+                    let (g, s) = constant_folding(g)?;
+                    Ok((g, s.endpoints_folded))
+                }),
+            );
+        }
+        if simplify {
+            pm = pm.register(
+                "arithmetic_simplification",
+                Box::new(|g| {
+                    let (g, s) = arithmetic_simplification(g)?;
+                    Ok((g, s.rewrites))
+                }),
+            );
+        }
+        if cse {
+            pm = pm.register(
+                "cse",
+                Box::new(|g| {
+                    let (g, s) = common_subexpression_elimination(g)?;
+                    Ok((g, s.nodes_removed))
+                }),
+            );
+        }
+        if fuse {
+            pm = pm.register(
+                "elementwise_fusion",
+                Box::new(|g| {
+                    let (g, s) = fuse_elementwise_chains(g)?;
+                    Ok((g, s.chains_fused))
+                }),
+            );
+        }
+        pm
+    }
+
+    /// Run every registered pass in order.
+    pub fn run(&self, graph: &Graph) -> Result<(Graph, PipelineStats)> {
+        let mut current = graph.clone();
+        let mut stats = PipelineStats::default();
+        for (name, pass) in &self.passes {
+            let nodes_before = current.len();
+            let (next, rewrites) = pass(&current)?;
+            stats.passes.push(PassReport {
+                name: name.clone(),
+                nodes_before,
+                nodes_after: next.len(),
+                rewrites,
+            });
+            current = next;
+        }
+        Ok((current, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::DType;
+
+    #[test]
+    fn empty_manager_is_identity() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let _ = b.neg(x);
+        let (g, stats) = PassManager::new().run(&b.graph).unwrap();
+        assert_eq!(g.len(), b.graph.len());
+        assert!(stats.passes.is_empty());
+        assert_eq!(stats.total_rewrites(), 0);
+    }
+
+    #[test]
+    fn standard_pipeline_reports_every_enabled_pass() {
+        let pm = PassManager::standard(true, true, true, true);
+        assert_eq!(pm.len(), 4);
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one = b.scalar(1.0);
+        let m = b.mul(x, one); // simplification fodder
+        let c1 = b.scalar(2.0);
+        let c2 = b.scalar(3.0);
+        let c = b.mul(c1, c2); // folding fodder
+        let a = b.add(m, c);
+        let t = b.tanh(a);
+        let _sink = b.neg(t); // fusion fodder (Add→Tanh→Neg chain)
+        let (g, stats) = pm.run(&b.graph).unwrap();
+        for name in ["constant_folding", "arithmetic_simplification", "cse", "elementwise_fusion"]
+        {
+            assert!(stats.report(name).is_some(), "missing report for {name}");
+        }
+        assert!(stats.report("constant_folding").unwrap().rewrites >= 1);
+        assert!(stats.report("arithmetic_simplification").unwrap().rewrites >= 1);
+        assert!(stats.report("elementwise_fusion").unwrap().rewrites >= 1);
+        assert!(g.len() < b.graph.len());
+        assert!(g.nodes.iter().any(|n| n.op == "FusedElementwise"));
+    }
+
+    #[test]
+    fn subsets_compose() {
+        // Any single pass runs standalone on the same graph.
+        let build = || {
+            let mut b = GraphBuilder::new();
+            let x = b.placeholder("x", DType::F32).unwrap();
+            let one = b.scalar(1.0);
+            let m = b.mul(x, one);
+            let t = b.tanh(m);
+            let _ = b.neg(t);
+            b
+        };
+        for (fold, simplify, cse, fuse) in
+            [(true, false, false, false), (false, true, false, false), (false, false, true, false), (false, false, false, true)]
+        {
+            let b = build();
+            let pm = PassManager::standard(fold, simplify, cse, fuse);
+            assert_eq!(pm.len(), 1);
+            pm.run(&b.graph).unwrap();
+        }
+    }
+}

@@ -1,0 +1,498 @@
+//! §5 arithmetic simplification: rewrite identities that cost a kernel
+//! launch and a tensor allocation but change nothing —
+//!
+//! * `Identity(x)` / `StopGradient(x)` → `x` (chains collapse transitively),
+//! * `x + 0`, `0 + x`, `x - 0` → `x`,
+//! * `x * 1`, `1 * x`, `x / 1`, `x ^ 1` → `x`,
+//! * `Neg(Neg(x))` → `x`,
+//! * `Transpose(x, identity-perm)` → `x` and
+//!   `Transpose(Transpose(x, p1), p2)` → `x` when `p1 ∘ p2` is the identity
+//!   (two default/empty perms both reverse, so they always cancel).
+//!
+//! The scalar-identity rules only fire on rank-0 `Const` operands whose
+//! dtype provably matches the surviving operand's (traced backward through
+//! dtype-preserving ops): a rank≥1 constant of ones could *broadcast* `x`
+//! to a larger shape, and a wrong-dtype operand would have
+//! failed at run time — neither is an identity. One knowing deviation from
+//! IEEE 754: `x + 0` forwards `x` even though `-0.0 + 0.0` is `+0.0`, so a
+//! signed-zero input keeps its sign (the same choice TF's Grappler and
+//! LLVM's `nsz` make; exactness everywhere else is bit-for-bit). Nodes
+//! carrying control edges (either direction) are
+//! left alone — bypassing them would drop happens-before constraints.
+//! Everything is resolved through a replacement map in one topological
+//! sweep, so nested patterns (`Neg(Neg(Neg(Neg(x))))`, `(x*1)+0`)
+//! collapse fully in a single run.
+
+use crate::error::Result;
+use crate::graph::{AttrValue, Endpoint, Graph, NodeId};
+use crate::tensor::TensorData;
+use std::collections::HashMap;
+
+/// Statistics from one simplification run.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct SimplifyStats {
+    pub nodes_before: usize,
+    /// Nodes rewritten to forward one of their inputs.
+    pub rewrites: usize,
+    /// Nodes dropped as dead after rewriting.
+    pub nodes_removed: usize,
+}
+
+/// Follow the replacement map to a final endpoint. Replacements are only
+/// ever recorded for single-output nodes, hence the port-0 guard.
+fn resolve(replacement: &HashMap<NodeId, Endpoint>, mut e: Endpoint) -> Endpoint {
+    while e.port == 0 {
+        match replacement.get(&e.node) {
+            Some(&r) => e = r,
+            None => break,
+        }
+    }
+    e
+}
+
+/// Best-effort static dtype of the value flowing on `e`: follow
+/// dtype-preserving ops backward until a node that declares its output
+/// dtype (a Const's value tensor or a `T` attr — Placeholder, Variable,
+/// and `_Feed` carry one). `None` means unknown, which keeps the identity
+/// rewrites conservative.
+fn static_dtype(graph: &Graph, mut e: Endpoint) -> Option<crate::tensor::DType> {
+    for _ in 0..=graph.len() {
+        let n = graph.node(e.node);
+        if let Some(AttrValue::Tensor(t)) = n.attrs.get("value") {
+            return Some(t.dtype());
+        }
+        if let Some(dt) = n.attrs.get("T").and_then(|a| a.as_type().ok()) {
+            return Some(dt);
+        }
+        if n.op == "Merge" && e.port != 0 {
+            return None; // port 1 is the i32 value_index, not the data
+        }
+        match n.op.as_str() {
+            "Add" | "Sub" | "Mul" | "Div" | "Maximum" | "Minimum" | "Pow" | "Neg" | "Exp"
+            | "Log" | "Sqrt" | "Rsqrt" | "Abs" | "Sign" | "Square" | "Tanh" | "Reciprocal"
+            | "Identity" | "StopGradient" | "AddN" | "ReLU" | "Sigmoid" | "Transpose"
+            | "Reshape" | "Concat" | "Slice" | "Tile" | "BiasAdd" | "FusedElementwise"
+            | "Switch" | "Merge" | "Enter" | "Exit" | "NextIteration" | "LoopCond"
+                if !n.inputs.is_empty() =>
+            {
+                e = n.inputs[0];
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// Is `cand` a rank-0 Const carrying the value `want`, whose dtype
+/// *provably* matches the value flowing on `other`? The dtype condition
+/// keeps the rewrite semantics-preserving both ways: a wrong-dtype operand
+/// fails in `binary_elementwise` at run time, and removing the op must not
+/// silently make that graph succeed — so when `other`'s dtype cannot be
+/// inferred, the rewrite does not fire.
+fn scalar_identity(graph: &Graph, cand: Endpoint, other: Endpoint, want: f64) -> bool {
+    if cand.port != 0 {
+        return false;
+    }
+    let n = graph.node(cand.node);
+    if n.op != "Const" {
+        return false;
+    }
+    let Some(AttrValue::Tensor(t)) = n.attrs.get("value") else { return false };
+    if t.shape().rank() != 0 {
+        return false;
+    }
+    if static_dtype(graph, other) != Some(t.dtype()) {
+        return false;
+    }
+    match t.data() {
+        TensorData::F32(v) => v[0] == want as f32,
+        TensorData::F64(v) => v[0] == want,
+        TensorData::I32(v) => f64::from(v[0]) == want,
+        TensorData::I64(v) => v[0] as f64 == want,
+        _ => false,
+    }
+}
+
+/// Is `e` a Const of a float dtype? (Guard for rewrites that are only
+/// runnable — hence only identities — over floats, like `Pow`.)
+fn is_float_const(graph: &Graph, e: Endpoint) -> bool {
+    let n = graph.node(e.node);
+    matches!(
+        n.attrs.get("value"),
+        Some(AttrValue::Tensor(t)) if matches!(t.data(), TensorData::F32(_) | TensorData::F64(_))
+    )
+}
+
+fn perm_of(graph: &Graph, id: NodeId) -> Vec<i64> {
+    graph
+        .node(id)
+        .attrs
+        .get("perm")
+        .and_then(|a| a.as_list_i64().ok())
+        .map(|s| s.to_vec())
+        .unwrap_or_default()
+}
+
+/// Does applying `inner` then `outer` return every dimension to its place?
+/// Empty perm means "reverse", which is self-inverse at every rank.
+fn perms_cancel(inner: &[i64], outer: &[i64]) -> bool {
+    if inner.is_empty() && outer.is_empty() {
+        return true;
+    }
+    if inner.is_empty() || outer.is_empty() || inner.len() != outer.len() {
+        return false; // mixed empty/explicit: rank unknown at build time
+    }
+    outer.iter().enumerate().all(|(j, &oj)| {
+        (0..inner.len() as i64).contains(&oj) && inner[oj as usize] == j as i64
+    })
+}
+
+fn is_identity_perm(perm: &[i64]) -> bool {
+    !perm.is_empty() && perm.iter().enumerate().all(|(i, &p)| p == i as i64)
+}
+
+/// Run arithmetic simplification over `graph`. Pure graph→graph.
+pub fn arithmetic_simplification(graph: &Graph) -> Result<(Graph, SimplifyStats)> {
+    let mut stats = SimplifyStats { nodes_before: graph.len(), ..Default::default() };
+    let order = graph.topo_order()?;
+    let fanout = graph.fanout();
+    let mut replacement: HashMap<NodeId, Endpoint> = HashMap::new();
+
+    for &id in &order {
+        let n = graph.node(id);
+        if !n.control_inputs.is_empty() || !fanout.control[id.0].is_empty() {
+            continue;
+        }
+        // Never rewrite a sink: a target node run for effect anchors its
+        // subtree (which may reach stateful ops), and bypassing it would
+        // prune that subtree away.
+        if fanout.data[id.0].is_empty() {
+            continue;
+        }
+        let target: Option<Endpoint> = match n.op.as_str() {
+            "Identity" | "StopGradient" => Some(resolve(&replacement, n.inputs[0])),
+            "Neg" => {
+                let src = resolve(&replacement, n.inputs[0]);
+                let p = graph.node(src.node);
+                if src.port == 0 && p.op == "Neg" && p.control_inputs.is_empty() {
+                    Some(resolve(&replacement, p.inputs[0]))
+                } else {
+                    None
+                }
+            }
+            "Transpose" => {
+                let perm = perm_of(graph, id);
+                let src = resolve(&replacement, n.inputs[0]);
+                if is_identity_perm(&perm) {
+                    Some(src)
+                } else {
+                    let p = graph.node(src.node);
+                    if src.port == 0 && p.op == "Transpose" && p.control_inputs.is_empty() {
+                        let inner = perm_of(graph, src.node);
+                        if perms_cancel(&inner, &perm) {
+                            Some(resolve(&replacement, p.inputs[0]))
+                        } else {
+                            None
+                        }
+                    } else {
+                        None
+                    }
+                }
+            }
+            "Add" => {
+                let a = resolve(&replacement, n.inputs[0]);
+                let b = resolve(&replacement, n.inputs[1]);
+                if scalar_identity(graph, b, a, 0.0) {
+                    Some(a)
+                } else if scalar_identity(graph, a, b, 0.0) {
+                    Some(b)
+                } else {
+                    None
+                }
+            }
+            "Sub" => {
+                let a = resolve(&replacement, n.inputs[0]);
+                let b = resolve(&replacement, n.inputs[1]);
+                if scalar_identity(graph, b, a, 0.0) {
+                    Some(a)
+                } else {
+                    None
+                }
+            }
+            "Mul" => {
+                let a = resolve(&replacement, n.inputs[0]);
+                let b = resolve(&replacement, n.inputs[1]);
+                if scalar_identity(graph, b, a, 1.0) {
+                    Some(a)
+                } else if scalar_identity(graph, a, b, 1.0) {
+                    Some(b)
+                } else {
+                    None
+                }
+            }
+            "Div" => {
+                let a = resolve(&replacement, n.inputs[0]);
+                let b = resolve(&replacement, n.inputs[1]);
+                if scalar_identity(graph, b, a, 1.0) {
+                    Some(a)
+                } else {
+                    None
+                }
+            }
+            "Pow" => {
+                let a = resolve(&replacement, n.inputs[0]);
+                let b = resolve(&replacement, n.inputs[1]);
+                // Pow kernels exist only for floats; an integer Pow errors
+                // at run time and must not be legalized away.
+                if scalar_identity(graph, b, a, 1.0) && is_float_const(graph, b) {
+                    Some(a)
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        if let Some(t) = target {
+            replacement.insert(id, t);
+            stats.rewrites += 1;
+        }
+    }
+
+    if replacement.is_empty() {
+        return Ok((graph.clone(), stats));
+    }
+
+    let mut rewritten = graph.clone();
+    for id in rewritten.ids().collect::<Vec<_>>() {
+        let new_inputs: Vec<Endpoint> =
+            rewritten.node(id).inputs.iter().map(|&e| resolve(&replacement, e)).collect();
+        rewritten.node_mut(id).inputs = new_inputs;
+    }
+
+    // Prune from the graph's true sinks (no consumers at all) that were not
+    // themselves rewritten away; bypassed nodes and their now-exclusive
+    // operands (e.g. the scalar 1) fall out.
+    let roots: Vec<NodeId> = graph
+        .ids()
+        .filter(|id| {
+            fanout.data[id.0].is_empty()
+                && fanout.control[id.0].is_empty()
+                && !replacement.contains_key(id)
+        })
+        .collect();
+    let keep = rewritten.reachable_from(&roots);
+    stats.nodes_removed = rewritten.len() - keep.len();
+    let (out, _) = rewritten.subgraph(&keep);
+    Ok((out, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::{DType, Tensor};
+
+    fn simplified(b: &GraphBuilder) -> (Graph, SimplifyStats) {
+        arithmetic_simplification(&b.graph).unwrap()
+    }
+
+    #[test]
+    fn mul_one_add_zero_collapse() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one = b.scalar(1.0);
+        let zero = b.scalar(0.0);
+        let m = b.mul(x, one);
+        let a = b.add(m, zero);
+        let _sink = b.neg(a);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 2);
+        let neg = g.nodes.iter().find(|n| n.op == "Neg").unwrap();
+        assert_eq!(g.node(neg.inputs[0].node).op, "Placeholder");
+        // The bypassed ops and the dead scalars are gone.
+        assert!(g.nodes.iter().all(|n| n.op != "Mul" && n.op != "Add"));
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn sub_zero_div_one_pow_one() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one = b.scalar(1.0);
+        let zero = b.scalar(0.0);
+        let s = b.sub(x, zero);
+        let d = b.div(s, one);
+        let p = b.op1("Pow", "Pow", vec![d, one], vec![]).unwrap();
+        let _sink = b.neg(p);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 3);
+        let neg = g.nodes.iter().find(|n| n.op == "Neg").unwrap();
+        assert_eq!(g.node(neg.inputs[0].node).op, "Placeholder");
+    }
+
+    #[test]
+    fn zero_minus_x_not_rewritten() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let zero = b.scalar(0.0);
+        let s = b.sub(zero, x); // 0 - x = -x, NOT x
+        let _sink = b.neg(s);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+        assert!(g.nodes.iter().any(|n| n.op == "Sub"));
+    }
+
+    #[test]
+    fn wrong_dtype_identity_not_rewritten() {
+        // Mul(x_f32, Const 1_i32) errors at run time (dtype mismatch); the
+        // pass must not silently legalize it by removing the Mul.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one_i32 = b.constant(Tensor::scalar_i32(1));
+        let m = b.op1("Mul", "Mul", vec![x, one_i32], vec![]).unwrap();
+        let _sink = b.neg(m);
+        let (_, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+    }
+
+    #[test]
+    fn integer_pow_one_not_rewritten() {
+        // Pow has no integer kernel; Pow(x_i32, 1_i32) errors at run time
+        // and must not be legalized away.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::I32).unwrap();
+        let one = b.constant(Tensor::scalar_i32(1));
+        let p = b.op1("Pow", "Pow", vec![x, one], vec![]).unwrap();
+        let _sink = b.op1("Abs", "Abs", vec![p], vec![]).unwrap();
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+        assert!(g.nodes.iter().any(|n| n.op == "Pow"));
+    }
+
+    #[test]
+    fn f64_identities_simplify_and_f32_const_against_f64_does_not() {
+        // x_f64 * 1.0_f32 would error at run time → kept (the default-F32
+        // trap: the const matches F32, but the operand provably is not).
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F64).unwrap();
+        let one_f32 = b.scalar(1.0);
+        let m = b.op1("Mul", "Mul", vec![x, one_f32], vec![]).unwrap();
+        let _sink = b.neg(m);
+        let (_, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+        // x_f64 * 1.0_f64 is a true identity → simplified, traced through
+        // a dtype-preserving Tanh in between.
+        let mut b2 = GraphBuilder::new();
+        let x2 = b2.placeholder("x", DType::F64).unwrap();
+        let t2 = b2.tanh(x2);
+        let one_f64 = b2.constant(
+            Tensor::new(crate::tensor::Shape::scalar(), TensorData::F64(vec![1.0])).unwrap(),
+        );
+        let m2 = b2.op1("Mul", "Mul", vec![t2, one_f64], vec![]).unwrap();
+        let _sink2 = b2.neg(m2);
+        let (_, s2) = simplified(&b2);
+        assert_eq!(s2.rewrites, 1);
+    }
+
+    #[test]
+    fn rank1_ones_not_an_identity() {
+        // x * ones([3]) broadcasts a scalar x; must not be rewritten.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let ones = b.constant(Tensor::from_f32(vec![3], vec![1., 1., 1.]).unwrap());
+        let m = b.mul(x, ones);
+        let _sink = b.neg(m);
+        let (_, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+    }
+
+    #[test]
+    fn identity_chains_and_double_neg() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let i1 = b.identity(x);
+        let i2 = b.identity(i1);
+        let n1 = b.neg(i2);
+        let n2 = b.neg(n1);
+        let n3 = b.neg(n2);
+        let n4 = b.neg(n3);
+        let _sink = b.tanh(n4);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 4, "2 identities + 2 double-neg pairs");
+        let tanh = g.nodes.iter().find(|n| n.op == "Tanh").unwrap();
+        assert_eq!(g.node(tanh.inputs[0].node).op, "Placeholder");
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn transpose_pairs_cancel() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let t1 = b.transpose(x, vec![1, 0]);
+        let t2 = b.transpose(t1, vec![1, 0]);
+        let _sink = b.neg(t2);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 1);
+        assert!(g.nodes.iter().all(|n| n.op != "Transpose"));
+        // Non-cancelling perms stay.
+        let mut b2 = GraphBuilder::new();
+        let y = b2.placeholder("y", DType::F32).unwrap();
+        let u1 = b2.transpose(y, vec![1, 2, 0]);
+        let u2 = b2.transpose(u1, vec![1, 2, 0]);
+        let _sink = b2.neg(u2);
+        let (_, s2) = simplified(&b2);
+        assert_eq!(s2.rewrites, 0);
+        // Default (reverse) perms always cancel.
+        let mut b3 = GraphBuilder::new();
+        let z = b3.placeholder("z", DType::F32).unwrap();
+        let v1 = b3.transpose(z, vec![]);
+        let v2 = b3.transpose(v1, vec![]);
+        let _sink = b3.neg(v2);
+        let (_, s3) = simplified(&b3);
+        assert_eq!(s3.rewrites, 1);
+    }
+
+    #[test]
+    fn sink_identity_anchoring_stateful_subtree_not_bypassed() {
+        // run_targets(Identity(AssignAdd(v, 1))): bypassing the sink
+        // Identity would prune the AssignAdd and lose the side effect.
+        let mut b = GraphBuilder::new();
+        let v = b.variable("v", Tensor::scalar_f32(0.0)).unwrap();
+        let one = b.scalar(1.0);
+        let upd = b.assign_add(v, one).unwrap();
+        let _target = b.identity(Endpoint::new(upd, 0));
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+        assert!(g.nodes.iter().any(|n| n.op == "AssignAdd"));
+        assert!(g.nodes.iter().any(|n| n.op == "Identity"));
+    }
+
+    #[test]
+    fn control_edges_block_rewrites() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one = b.scalar(1.0);
+        let m = b.mul(x, one);
+        let trigger = b.no_op("trigger");
+        b.add_control_input(m.node, trigger);
+        let _sink = b.neg(m);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 0);
+        assert!(g.nodes.iter().any(|n| n.op == "Mul"));
+    }
+
+    #[test]
+    fn shared_operand_survives() {
+        // The scalar 1 is also consumed elsewhere: only the Mul dies.
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one = b.scalar(1.0);
+        let m = b.mul(x, one);
+        let kept = b.add(one, one);
+        let _sink = b.add(m, kept);
+        let (g, stats) = simplified(&b);
+        assert_eq!(stats.rewrites, 1);
+        assert!(g.nodes.iter().any(|n| n.op == "Const"), "shared const dropped");
+        assert!(g.nodes.iter().all(|n| n.op != "Mul"));
+    }
+}

@@ -71,6 +71,13 @@ impl CostModel {
         let category = crate::ops::lookup(&node.op).map(|d| d.category).unwrap_or(Category::Internal);
         match node.op.as_str() {
             "MatMul" | "BatchMatMul" => 200.0,
+            // One fused launch doing k elementwise steps in one data pass:
+            // cheaper than k separate 10µs launches, pricier than one.
+            "FusedElementwise" => {
+                let steps =
+                    node.attrs.get("ops").and_then(|a| a.as_list_str().ok()).map_or(1, |s| s.len());
+                5.0 + 3.0 * steps as f64
+            }
             "Convolution2D" | "Conv2DBackpropInput" | "Conv2DBackpropFilter" => 500.0,
             "XlaCall" => 1000.0,
             "MatrixInverse" | "MatrixDeterminant" => 150.0,

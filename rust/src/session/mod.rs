@@ -32,8 +32,14 @@ use std::sync::{Arc, Mutex};
 pub struct SessionOptions {
     pub devices: usize,
     pub threads_per_device: usize,
+    /// §5 build-time constant folding on pruned graphs.
+    pub enable_constant_folding: bool,
+    /// §5 arithmetic-identity simplification on pruned graphs.
+    pub enable_arithmetic_simplification: bool,
     /// §5.1 CSE pass on pruned graphs.
     pub enable_cse: bool,
+    /// §5 elementwise-chain fusion on pruned graphs.
+    pub enable_elementwise_fusion: bool,
     /// §5.2 Recv scheduling pass on partitions.
     pub enable_recv_scheduling: bool,
     pub partition: PartitionOptions,
@@ -47,7 +53,10 @@ impl Default for SessionOptions {
         SessionOptions {
             devices: 1,
             threads_per_device: 2,
+            enable_constant_folding: true,
+            enable_arithmetic_simplification: true,
             enable_cse: true,
+            enable_elementwise_fusion: true,
             enable_recv_scheduling: true,
             partition: PartitionOptions::default(),
             cost_model: CostModel::new(),
@@ -65,6 +74,8 @@ struct CachedStep {
     feed_keys: Vec<String>,
     pub placement: PlacementStats,
     pub partition: PartitionStats,
+    /// Per-pass reports from the §5 optimizer pipeline.
+    pub optimizer: passes::PipelineStats,
 }
 
 /// Cache key for one Run signature. Feed *names* only — values vary per
@@ -258,6 +269,21 @@ impl Session {
         self.last_trace.lock().unwrap().clone()
     }
 
+    /// Per-pass optimizer reports of the cached step for a signature (the
+    /// §5 ablation benches and equivalence tests read these).
+    pub fn optimizer_stats(
+        &self,
+        feeds: &[&str],
+        fetches: &[&str],
+        targets: &[&str],
+    ) -> Option<passes::PipelineStats> {
+        self.cache
+            .lock()
+            .unwrap()
+            .get(&run_signature(feeds, fetches, targets))
+            .map(|c| c.optimizer.clone())
+    }
+
     /// Stats of the cached step for a signature (experiments use this).
     pub fn step_stats(
         &self,
@@ -272,8 +298,10 @@ impl Session {
             .map(|c| (c.placement.clone(), c.partition.clone()))
     }
 
-    /// Build (prune → rewrite feeds/fetches → CSE → place → partition →
-    /// schedule → compile) one step.
+    /// Build (prune → rewrite feeds/fetches → optimizer pipeline → place →
+    /// partition → schedule → compile) one step. The optimizer pipeline is
+    /// `passes::PassManager::standard` (fold → simplify → cse → fuse), with
+    /// each pass gated by its `SessionOptions` flag.
     fn build_step(
         &self,
         feeds: &[(&str, Tensor)],
@@ -284,12 +312,13 @@ impl Session {
         let (pruned, feed_keys, fetch_keys) =
             prune_for_run(&full, &feeds.iter().map(|(k, _)| *k).collect::<Vec<_>>(), fetches, targets)?;
 
-        let pruned = if self.options.enable_cse {
-            let (g, _stats) = passes::common_subexpression_elimination(&pruned)?;
-            g
-        } else {
-            pruned
-        };
+        let pipeline = passes::PassManager::standard(
+            self.options.enable_constant_folding,
+            self.options.enable_arithmetic_simplification,
+            self.options.enable_cse,
+            self.options.enable_elementwise_fusion,
+        );
+        let (pruned, optimizer) = pipeline.run(&pruned)?;
 
         let mut placed = pruned;
         let placement = place(&mut placed, &self.devices, &self.options.cost_model)?;
@@ -307,7 +336,14 @@ impl Session {
             })
             .collect::<Result<Vec<_>>>()?;
 
-        Ok(CachedStep { executors, fetch_keys, feed_keys, placement, partition: partition_stats })
+        Ok(CachedStep {
+            executors,
+            fetch_keys,
+            feed_keys,
+            placement,
+            partition: partition_stats,
+            optimizer,
+        })
     }
 }
 
@@ -339,6 +375,11 @@ pub fn prune_for_run(
             attrs: {
                 let mut a = BTreeMap::new();
                 a.insert("key".to_string(), AttrValue::Str(key));
+                // Carry the fed endpoint's declared dtype: build-time
+                // passes (simplify's dtype guard) read it; kernels don't.
+                if let Some(t) = g.node(src).attr_opt("T") {
+                    a.insert("T".to_string(), t.clone());
+                }
                 a
             },
             requested_device: g.node(src).requested_device.clone(),
@@ -664,6 +705,59 @@ mod tests {
         sess.run_targets(&[&enq_name]).unwrap();
         let out = sess.run(&[], &[&deq_name], &[]).unwrap();
         assert_eq!(out[0].scalar_value_f32().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn optimizer_pipeline_runs_in_build_step() {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let c1 = b.scalar(2.0);
+        let c2 = b.scalar(3.0);
+        let c = b.mul(c1, c2); // folds to 6
+        let one = b.scalar(1.0);
+        let m = b.mul(x, one); // simplifies to x
+        let a = b.add(m, c);
+        let t = b.tanh(a); // Add→Tanh fuses
+        let name = format!("{}:0", b.graph.node(t.node).name);
+        let sess = session_of(b, 1);
+        let out = sess.run(&[("x", Tensor::scalar_f32(4.0))], &[&name], &[]).unwrap();
+        assert!((out[0].scalar_value_f32().unwrap() - 10.0f32.tanh()).abs() < 1e-6);
+        let stats = sess.optimizer_stats(&["x"], &[&name], &[]).unwrap();
+        assert!(stats.report("constant_folding").unwrap().rewrites >= 1);
+        assert!(stats.report("arithmetic_simplification").unwrap().rewrites >= 1);
+        assert!(stats.report("elementwise_fusion").unwrap().rewrites >= 1);
+    }
+
+    #[test]
+    fn optimizer_disabled_matches_enabled() {
+        let build = || {
+            let mut b = GraphBuilder::new();
+            let x = b.placeholder("x", DType::F32).unwrap();
+            let zero = b.scalar(0.0);
+            let c = b.scalar(2.5);
+            let cc = b.mul(c, c);
+            let s = b.add(x, zero);
+            let m = b.mul(s, cc);
+            let t = b.tanh(m);
+            let name = format!("{}:0", b.graph.node(t.node).name);
+            (b, name)
+        };
+        let run = |opts: SessionOptions| {
+            let (b, name) = build();
+            Session::new(b.into_graph(), opts)
+                .run(&[("x", Tensor::from_f32(vec![3], vec![0.5, -1.0, 2.0]).unwrap())], &[&name], &[])
+                .unwrap()
+                .remove(0)
+        };
+        let on = run(SessionOptions::default());
+        let off = run(SessionOptions {
+            enable_constant_folding: false,
+            enable_arithmetic_simplification: false,
+            enable_cse: false,
+            enable_elementwise_fusion: false,
+            ..Default::default()
+        });
+        assert!(on.allclose(&off, 1e-6, 1e-6));
     }
 
     #[test]

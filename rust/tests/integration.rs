@@ -96,9 +96,16 @@ fn trace_covers_multi_device_step() {
     }
     let out = b.add(l, r);
     let name = format!("{}:0", b.graph.node(out.node).name);
+    // Constant folding off: this graph is const-rooted, and the test wants
+    // the *kernels* to run across devices, not a folded literal.
     let sess = Session::new(
         b.into_graph(),
-        SessionOptions { devices: 2, trace: true, ..Default::default() },
+        SessionOptions {
+            devices: 2,
+            trace: true,
+            enable_constant_folding: false,
+            ..Default::default()
+        },
     );
     sess.run(&[], &[&name], &[]).unwrap();
     let trace = sess.last_trace().unwrap();
@@ -133,9 +140,16 @@ fn cse_ablation_reduces_execution() {
     };
     let run = |enable_cse: bool| -> usize {
         let (b, name) = build();
+        // Folding off: the towers are const-rooted and would otherwise
+        // collapse identically with or without CSE.
         let sess = Session::new(
             b.into_graph(),
-            SessionOptions { enable_cse, trace: true, ..Default::default() },
+            SessionOptions {
+                enable_cse,
+                trace: true,
+                enable_constant_folding: false,
+                ..Default::default()
+            },
         );
         let r = sess.run(&[], &[&name], &[]).unwrap();
         assert!(r[0].as_f32().unwrap()[0].is_finite());
@@ -271,14 +285,18 @@ fn property_random_graphs_device_count_invariant() {
             let name = format!("{}:0", b.graph.node(out.node).name);
             (b, name)
         };
+        // Folding off: the graphs are const-rooted, and the invariant under
+        // test is that *partitioned execution* agrees across device counts.
+        let no_fold =
+            || SessionOptions { enable_constant_folding: false, ..Default::default() };
         let (b1, n1) = build(&mut rng);
-        let r1 = Session::new(b1.into_graph(), SessionOptions::default())
+        let r1 = Session::new(b1.into_graph(), no_fold())
             .run(&[], &[&n1], &[])
             .unwrap();
         let (b3, n3) = build(&mut rng);
         let r3 = Session::new(
             b3.into_graph(),
-            SessionOptions { devices: 3, ..Default::default() },
+            SessionOptions { devices: 3, ..no_fold() },
         )
         .run(&[], &[&n3], &[])
         .unwrap();
@@ -316,9 +334,15 @@ fn property_cse_preserves_semantics() {
         };
         let run = |enable_cse: bool| {
             let (b, name) = build();
+            // Folding off so the CSE ablation is not vacuous on these
+            // const-rooted graphs.
             Session::new(
                 b.into_graph(),
-                SessionOptions { enable_cse, ..Default::default() },
+                SessionOptions {
+                    enable_cse,
+                    enable_constant_folding: false,
+                    ..Default::default()
+                },
             )
             .run(&[], &[&name], &[])
             .unwrap()

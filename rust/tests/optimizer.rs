@@ -1,0 +1,300 @@
+//! Optimizer-subsystem integration tests (§5): every pass and every
+//! combination of passes must preserve `Session::run` results — exactly
+//! for folding/simplification/CSE, to 1e-6 for fusion — including graphs
+//! with control flow and dead Switch branches the passes must not rewrite
+//! across. Running all 2³ ablation combinations also proves the per-pass
+//! flags independent.
+
+use rustflow::graph::AttrValue;
+use rustflow::util::rng::Pcg32;
+use rustflow::{DType, Endpoint, GraphBuilder, Session, SessionOptions, Tensor};
+
+fn opts(fold: bool, simplify: bool, fuse: bool) -> SessionOptions {
+    SessionOptions {
+        enable_constant_folding: fold,
+        enable_arithmetic_simplification: simplify,
+        enable_elementwise_fusion: fuse,
+        // CSE predates this subsystem and has its own ablation tests; off
+        // here so node-count assertions see only the new passes.
+        enable_cse: false,
+        ..Default::default()
+    }
+}
+
+/// A randomized graph mixing everything the passes care about: a fed
+/// placeholder, const subtrees (folding), scalar identities (simplify),
+/// elementwise chains (fusion), and shared fan-out.
+fn random_model(seed: u64) -> (GraphBuilder, String) {
+    let mut rng = Pcg32::new(seed * 31 + 7);
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let one = b.scalar(1.0);
+    let zero = b.scalar(0.0);
+    let c0 = b.scalar(rng.uniform(0.5, 1.5));
+    let cc = b.mul(c0, c0); // const subtree for folding
+    let mut pool: Vec<Endpoint> = vec![x, cc];
+    for _ in 0..14 {
+        let a = pool[rng.index(pool.len())];
+        let v = match rng.next_below(8) {
+            0 => b.add(a, zero),
+            1 => b.mul(a, one),
+            2 => b.neg(a),
+            3 => {
+                let n = b.neg(a);
+                b.neg(n)
+            }
+            4 => b.tanh(a),
+            5 => b.identity(a),
+            6 => {
+                let d = pool[rng.index(pool.len())];
+                b.add(a, d)
+            }
+            _ => {
+                let s = b.scalar(rng.uniform(-1.0, 1.0));
+                b.mul(a, s)
+            }
+        };
+        pool.push(v);
+    }
+    let out = b.add_n(pool[2..].to_vec());
+    let name = format!("{}:0", b.graph.node(out.node).name);
+    (b, name)
+}
+
+fn run_model(seed: u64, options: SessionOptions) -> Tensor {
+    let (b, name) = random_model(seed);
+    let mut rng = Pcg32::with_stream(seed, 999);
+    let feed = Tensor::from_f32(vec![8], (0..8).map(|_| rng.uniform(-2.0, 2.0)).collect())
+        .unwrap();
+    Session::new(b.into_graph(), options)
+        .run(&[("x", feed)], &[&name], &[])
+        .unwrap()
+        .remove(0)
+}
+
+#[test]
+fn randomized_equivalence_across_all_flag_combinations() {
+    for seed in 0..6u64 {
+        let baseline = run_model(seed, opts(false, false, false));
+        for fold in [false, true] {
+            for simplify in [false, true] {
+                for fuse in [false, true] {
+                    let out = run_model(seed, opts(fold, simplify, fuse));
+                    if fuse {
+                        assert!(
+                            baseline.allclose(&out, 1e-6, 1e-6),
+                            "seed {seed} fold={fold} simplify={simplify} fuse={fuse}: diverged"
+                        );
+                    } else {
+                        // Folding evaluates with the same kernels and
+                        // simplification only removes exact identities:
+                        // results must agree exactly.
+                        assert_eq!(
+                            baseline.as_f32().unwrap(),
+                            out.as_f32().unwrap(),
+                            "seed {seed} fold={fold} simplify={simplify}: not bit-exact"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn each_pass_actually_fires_on_its_pattern() {
+    // One graph carrying all three patterns, so the per-pass reports prove
+    // each flag drives exactly its own pass.
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let c2 = b.scalar(2.0);
+    let c3 = b.scalar(3.0);
+    let cc = b.mul(c2, c3); // folding: const subtree
+    let one = b.scalar(1.0);
+    let m = b.mul(x, one); // simplification: x*1
+    let a = b.add(m, cc);
+    let t = b.tanh(a);
+    let n = b.neg(t); // fusion: Add→Tanh→Neg chain once simplified
+    let name = format!("{}:0", b.graph.node(n.node).name);
+    let sess = Session::new(b.into_graph(), opts(true, true, true));
+    let out = sess.run(&[("x", Tensor::scalar_f32(0.5))], &[&name], &[]).unwrap();
+    assert!((out[0].scalar_value_f32().unwrap() - (-(6.5f32.tanh()))).abs() < 1e-6);
+    let stats = sess.optimizer_stats(&["x"], &[&name], &[]).unwrap();
+    assert!(stats.report("constant_folding").unwrap().rewrites >= 1, "{stats:?}");
+    assert!(stats.report("arithmetic_simplification").unwrap().rewrites >= 1, "{stats:?}");
+    assert!(stats.report("elementwise_fusion").unwrap().rewrites >= 1, "{stats:?}");
+    assert!(stats.report("cse").is_none(), "cse disabled but reported");
+}
+
+#[test]
+fn dead_switch_branch_not_rewritten_or_evaluated() {
+    // if pred: x*10 else x+1 — with pred=false the true branch is dead.
+    // The optimizer must neither evaluate it at build time nor change
+    // which branch executes.
+    for (pred, expect) in [(true, 50.0f32), (false, 6.0)] {
+        let build = || {
+            let mut b = GraphBuilder::new();
+            let x = b.scalar(5.0);
+            let p = b.constant(Tensor::scalar_bool(pred));
+            let (f_side, t_side) = b.switch(x, p).unwrap();
+            let ten = b.scalar(10.0);
+            let one = b.scalar(1.0);
+            let t_out = b.mul(t_side, ten);
+            let f_out = b.add(f_side, one);
+            let (merged, _) = b.merge(vec![f_out, t_out]).unwrap();
+            let name = format!("{}:0", b.graph.node(merged.node).name);
+            (b, name)
+        };
+        for options in [opts(true, true, true), opts(false, false, false)] {
+            let (b, name) = build();
+            let sess = Session::new(b.into_graph(), options);
+            let out = sess.run(&[], &[&name], &[]).unwrap();
+            assert_eq!(out[0].scalar_value_f32().unwrap(), expect, "pred={pred}");
+        }
+    }
+}
+
+#[test]
+fn while_loop_agrees_under_optimization() {
+    // while (i < 10) i = (i + 1) * 1 — the body carries a simplifiable
+    // multiply and a fusable chain; loop structure must survive.
+    let build = || {
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        let exits = b
+            .while_loop(
+                "loop",
+                vec![zero],
+                |b, v| {
+                    let lim = b.scalar(10.0);
+                    Ok(b.less(v[0], lim))
+                },
+                |b, v| {
+                    let one = b.scalar(1.0);
+                    let inc = b.add(v[0], one);
+                    Ok(vec![b.mul(inc, one)])
+                },
+            )
+            .unwrap();
+        let name = format!("{}:0", b.graph.node(exits[0].node).name);
+        (b, name)
+    };
+    for options in [opts(true, true, true), opts(false, false, false)] {
+        let (b, name) = build();
+        let out = Session::new(b.into_graph(), options).run(&[], &[&name], &[]).unwrap();
+        assert_eq!(out[0].scalar_value_f32().unwrap(), 10.0);
+    }
+}
+
+#[test]
+fn fusion_handles_broadcast_extras_via_fallback() {
+    // A chain whose binary extra is a row vector against a matrix primary:
+    // the fused kernel's fast path does not apply, the fallback must.
+    let build = || {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let row = b.constant(Tensor::from_f32(vec![3], vec![1.0, 2.0, 3.0]).unwrap());
+        let a = b.add(x, row);
+        let t = b.tanh(a);
+        let n = b.neg(t);
+        let name = format!("{}:0", b.graph.node(n.node).name);
+        (b, name)
+    };
+    let feed = Tensor::from_f32(vec![2, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]).unwrap();
+    let run = |options: SessionOptions| {
+        let (b, name) = build();
+        Session::new(b.into_graph(), options)
+            .run(&[("x", feed.clone())], &[&name], &[])
+            .unwrap()
+            .remove(0)
+    };
+    let fused = run(opts(false, false, true));
+    let plain = run(opts(false, false, false));
+    assert_eq!(fused.shape(), plain.shape());
+    assert!(fused.allclose(&plain, 1e-6, 1e-6));
+}
+
+#[test]
+fn folding_shrinks_step_graph_and_caches_once() {
+    // A deep const tower folds to one Const; the optimizer stats record it
+    // and the cached step keeps serving the folded value.
+    let mut b = GraphBuilder::new();
+    let mut c = b.scalar(1.0);
+    for _ in 0..20 {
+        let h = b.scalar(0.5);
+        c = b.add(c, h);
+    }
+    let name = format!("{}:0", b.graph.node(c.node).name);
+    let sess = Session::new(b.into_graph(), opts(true, false, false));
+    for _ in 0..3 {
+        let out = sess.run(&[], &[&name], &[]).unwrap();
+        assert_eq!(out[0].scalar_value_f32().unwrap(), 11.0);
+    }
+    let stats = sess.optimizer_stats(&[], &[&name], &[]).unwrap();
+    let fold = stats.report("constant_folding").unwrap();
+    assert_eq!(fold.rewrites, 1, "one frontier endpoint (the tower root)");
+    assert!(fold.nodes_after < fold.nodes_before, "{fold:?}");
+}
+
+#[test]
+fn feeds_are_never_folded() {
+    // A fed tensor flows through _Feed (stateful); folding must not bake
+    // the first fed value into the cached step.
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let two = b.scalar(2.0);
+    let y = b.mul(x, two);
+    let name = format!("{}:0", b.graph.node(y.node).name);
+    let sess = Session::new(b.into_graph(), opts(true, true, true));
+    let r1 = sess.run(&[("x", Tensor::scalar_f32(3.0))], &[&name], &[]).unwrap();
+    assert_eq!(r1[0].scalar_value_f32().unwrap(), 6.0);
+    let r2 = sess.run(&[("x", Tensor::scalar_f32(5.0))], &[&name], &[]).unwrap();
+    assert_eq!(r2[0].scalar_value_f32().unwrap(), 10.0);
+}
+
+#[test]
+fn mistyped_feed_fails_identically_with_and_without_passes() {
+    // x is declared F32; feeding F64 must error whether the optimizer
+    // bypassed x's consumers (the _Feed dtype check) or the Mul kernel
+    // rejects the mismatch itself.
+    let build = || {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let one = b.scalar(1.0);
+        let m = b.mul(x, one);
+        let n = b.neg(m);
+        let name = format!("{}:0", b.graph.node(n.node).name);
+        (b, name)
+    };
+    let feed = Tensor::from_f64(vec![2], vec![1.0, 2.0]).unwrap();
+    for options in [opts(true, true, true), opts(false, false, false)] {
+        let (b, name) = build();
+        let err = Session::new(b.into_graph(), options)
+            .run(&[("x", feed.clone())], &[&name], &[])
+            .unwrap_err();
+        assert_eq!(err.code, rustflow::error::Code::InvalidArgument);
+    }
+}
+
+#[test]
+fn fused_graph_roundtrips_through_wire_format() {
+    // Optimize → serialize → deserialize → run: what a master would ship.
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let c = b.scalar(0.5);
+    let m = b.mul(x, c);
+    let t = b.tanh(m);
+    let n = b.neg(t);
+    let name = format!("{}:0", b.graph.node(n.node).name);
+    let (pruned, _, _) =
+        rustflow::session::prune_for_run(&b.graph, &[], &[&name], &[]).unwrap();
+    let (fused, stats) = rustflow::passes::fuse_elementwise_chains(&pruned).unwrap();
+    assert_eq!(stats.chains_fused, 1);
+    let wire = rustflow::graph::serde::encode_graph(&fused);
+    let decoded = rustflow::graph::serde::decode_graph(&wire).unwrap();
+    let fused_node = decoded.nodes.iter().find(|n| n.op == "FusedElementwise").unwrap();
+    assert_eq!(
+        fused_node.attrs["ops"],
+        AttrValue::ListStr(vec!["Mul,r,1".into(), "Tanh".into(), "Neg".into()])
+    );
+}

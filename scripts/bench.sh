@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Perf trajectory, as one command: runs the §5 optimizer ablation bench and
+# the serving throughput bench, and writes BENCH_optimizer.json at the repo
+# root (machine-readable; one file per tracked benchmark family).
+#
+#   scripts/bench.sh
+#
+# The optimizer bench also asserts the acceptance bar (full pipeline
+# ≥ 1.3x over passes-disabled), so this script fails on a perf regression.
+set -eu
+cd "$(dirname "$0")/.."
+
+export BENCH_OPTIMIZER_JSON="$(pwd)/BENCH_optimizer.json"
+
+echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
+cargo bench --bench optimizer
+
+echo "== cargo bench --bench serving"
+cargo bench --bench serving
+
+echo "bench: OK"

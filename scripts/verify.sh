@@ -1,34 +1,26 @@
 #!/usr/bin/env bash
 # Tier-1 verification gate, as one command:
 #
-#   scripts/verify.sh            # fmt + clippy advisory, build + test gating
-#   STRICT=1 scripts/verify.sh   # fmt + clippy also gate
+#   scripts/verify.sh
 #
-# `cargo build --release && cargo test -q` is the hard gate (ROADMAP
-# "Tier-1 verify"). fmt/clippy run first and report, but only fail the
-# script under STRICT=1, and are skipped when the component is not
-# installed (offline toolchains often carry neither).
+# Gates, in order: cargo fmt --check, cargo clippy -D warnings, then the
+# ROADMAP tier-1 pair `cargo build --release && cargo test -q`. fmt/clippy
+# are skipped (with a notice) when the component is not installed —
+# offline toolchains often carry neither — but fail the script when they
+# are present and unhappy.
 set -u
 cd "$(dirname "$0")/.."
 
-soft_fail=0
-
 if cargo fmt --version >/dev/null 2>&1; then
   echo "== cargo fmt --check"
-  if ! cargo fmt --all -- --check; then
-    echo "fmt: NOT CLEAN"
-    soft_fail=1
-  fi
+  cargo fmt --all -- --check || exit 1
 else
   echo "== cargo fmt --check (skipped: rustfmt not installed)"
 fi
 
 if cargo clippy --version >/dev/null 2>&1; then
-  echo "== cargo clippy"
-  if ! cargo clippy --workspace --all-targets; then
-    echo "clippy: FAILED"
-    soft_fail=1
-  fi
+  echo "== cargo clippy -D warnings"
+  cargo clippy --workspace --all-targets -- -D warnings || exit 1
 else
   echo "== cargo clippy (skipped: clippy not installed)"
 fi
@@ -39,8 +31,4 @@ cargo build --release || exit 1
 echo "== cargo test -q"
 cargo test -q || exit 1
 
-if [ "${STRICT:-0}" != "0" ] && [ "$soft_fail" != "0" ]; then
-  echo "verify: build+test passed but fmt/clippy failed under STRICT=1"
-  exit 1
-fi
 echo "verify: OK"

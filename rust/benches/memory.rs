@@ -1,0 +1,162 @@
+//! Step-memory-planner bench: steps/sec and *real* heap bytes allocated
+//! per step with planning on vs off, measured by a counting global
+//! allocator — the §9.2 "find the allocation hot spots" number, made a
+//! regression gate. The model is a deep elementwise/matmul stack (matmul
+//! breaks fusion chains, so plenty of intermediates survive the
+//! optimizer), const-rooted so shapes are static (folding pinned off, the
+//! established idiom for const-rooted benches); a fed variant reports the
+//! dynamic-slot path. Asserts the ISSUE acceptance bar: planning-on
+//! allocates ≥ 2× fewer heap bytes per step than planning-off, with
+//! identical results (1e-6; fusion is enabled). Writes
+//! `BENCH_memory.json` (path via `BENCH_MEMORY_JSON`; `scripts/bench.sh`
+//! points it at the repo root).
+
+use rustflow::util::json::Json;
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counts every byte the process allocates (alloc + realloc growth).
+struct CountingAlloc;
+
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(new_size.saturating_sub(layout.size()) as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+const DIM: usize = 64;
+const DEPTH: usize = 24;
+
+/// h ← Tanh(MatMul(h, W_l) + B_l), repeated. Const-rooted (static shapes)
+/// unless `fed`, in which case x comes from a feed (dynamic slots).
+fn stack_model(fed: bool) -> (GraphBuilder, String) {
+    let mut b = GraphBuilder::new();
+    let x = if fed {
+        b.placeholder("x", rustflow::DType::F32).unwrap()
+    } else {
+        b.constant(Tensor::fill_f32(vec![DIM, DIM], 0.01))
+    };
+    let mut h = x;
+    for l in 0..DEPTH {
+        let w = b.constant(Tensor::fill_f32(vec![DIM, DIM], 0.02 + l as f32 * 1e-4));
+        let bias = b.constant(Tensor::fill_f32(vec![DIM, DIM], 0.001));
+        let mm = b.matmul(h, w);
+        let a = b.add(mm, bias);
+        h = b.tanh(a);
+    }
+    let name = format!("{}:0", b.graph.node(h.node).name);
+    (b, name)
+}
+
+fn options(planning: bool) -> SessionOptions {
+    SessionOptions {
+        enable_memory_planning: planning,
+        // Const-rooted: folding would evaluate the whole stack at build
+        // time; pin it off so the bench measures run-time execution.
+        enable_constant_folding: false,
+        ..Default::default()
+    }
+}
+
+struct Measured {
+    mean_us: f64,
+    bytes_per_step: f64,
+    out: Tensor,
+}
+
+fn measure(fed: bool, planning: bool) -> Measured {
+    let (b, name) = stack_model(fed);
+    let sess = Session::new(b.into_graph(), options(planning));
+    let feed = Tensor::fill_f32(vec![DIM, DIM], 0.01);
+    let run = |sess: &Session| -> Tensor {
+        let feeds: Vec<(&str, Tensor)> =
+            if fed { vec![("x", feed.clone())] } else { vec![] };
+        sess.run(&feeds, &[&name], &[]).unwrap().remove(0)
+    };
+    // Warm: compile the step and fill the arena pool.
+    let out = run(&sess);
+    for _ in 0..3 {
+        run(&sess);
+    }
+    // Bytes: count across a fixed batch of steps.
+    let steps = 30u64;
+    let before = ALLOCATED_BYTES.load(Ordering::Relaxed);
+    for _ in 0..steps {
+        run(&sess);
+    }
+    let bytes_per_step =
+        (ALLOCATED_BYTES.load(Ordering::Relaxed) - before) as f64 / steps as f64;
+    // Time separately (the counter's overhead is symmetric anyway).
+    let s = stats::bench(5, 30, || {
+        run(&sess);
+    });
+    Measured { mean_us: s.mean.as_secs_f64() * 1e6, bytes_per_step, out }
+}
+
+fn main() {
+    let mut results = Json::arr();
+    let mut summary: Vec<(String, f64, f64)> = Vec::new();
+    for (label, fed) in [("static", false), ("fed", true)] {
+        let on = measure(fed, true);
+        let off = measure(fed, false);
+        assert!(
+            on.out.allclose(&off.out, 1e-6, 1e-6),
+            "{label}: planning changed results"
+        );
+        let bytes_ratio = off.bytes_per_step / on.bytes_per_step.max(1.0);
+        let speedup = off.mean_us / on.mean_us;
+        println!(
+            "memory/{label}{DEPTH}x{DIM}: planning-on {:.0} B/step vs off {:.0} B/step \
+             ({bytes_ratio:.2}x fewer), {:.0}us vs {:.0}us ({speedup:.2}x)",
+            on.bytes_per_step, off.bytes_per_step, on.mean_us, off.mean_us
+        );
+        results.push(
+            Json::obj()
+                .set("model", label)
+                .set("depth", DEPTH as i64)
+                .set("dim", DIM as i64)
+                .set("bytes_per_step_on", on.bytes_per_step)
+                .set("bytes_per_step_off", off.bytes_per_step)
+                .set("bytes_ratio_off_over_on", bytes_ratio)
+                .set("mean_us_on", on.mean_us)
+                .set("mean_us_off", off.mean_us)
+                .set("speedup_on_vs_off", speedup),
+        );
+        summary.push((label.to_string(), bytes_ratio, speedup));
+    }
+
+    // Acceptance bar (ISSUE 3): ≥ 2× fewer heap bytes per step on the
+    // deep elementwise/matmul graph with planning on.
+    let static_ratio = summary.iter().find(|(l, ..)| l == "static").unwrap().1;
+    assert!(
+        static_ratio >= 2.0,
+        "memory planning must cut heap bytes/step by >= 2x on the static stack, got {static_ratio:.2}x"
+    );
+
+    let out = Json::obj()
+        .set("bench", "memory_planner")
+        .set("model", "matmul-bias-tanh-stack")
+        .set("results", results)
+        .set("bytes_ratio_static", static_ratio);
+    let path = std::env::var("BENCH_MEMORY_JSON")
+        .unwrap_or_else(|_| "BENCH_memory.json".to_string());
+    std::fs::write(&path, out.render() + "\n").expect("write bench json");
+    println!("wrote {path}");
+}

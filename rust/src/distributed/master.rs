@@ -20,7 +20,16 @@ use std::sync::{Arc, Mutex};
 
 #[derive(Clone)]
 pub struct DistMasterOptions {
+    /// §5 build-time constant folding on pruned graphs.
+    pub enable_constant_folding: bool,
+    /// §5 arithmetic-identity simplification on pruned graphs.
+    pub enable_arithmetic_simplification: bool,
+    /// §5.1 CSE pass on pruned graphs.
     pub enable_cse: bool,
+    /// §5 elementwise-chain fusion — workers deserialize and execute
+    /// `FusedElementwise` nodes like any other op, so the master runs the
+    /// same full pipeline as a local `Session`.
+    pub enable_elementwise_fusion: bool,
     pub enable_recv_scheduling: bool,
     pub partition: PartitionOptions,
     pub cost_model: CostModel,
@@ -29,7 +38,10 @@ pub struct DistMasterOptions {
 impl Default for DistMasterOptions {
     fn default() -> Self {
         DistMasterOptions {
+            enable_constant_folding: true,
+            enable_arithmetic_simplification: true,
             enable_cse: true,
+            enable_elementwise_fusion: true,
             enable_recv_scheduling: true,
             partition: PartitionOptions::default(),
             cost_model: CostModel::new(),
@@ -209,11 +221,16 @@ impl DistMaster {
             fetches,
             targets,
         )?;
-        let pruned = if self.options.enable_cse {
-            passes::common_subexpression_elimination(&pruned)?.0
-        } else {
-            pruned
-        };
+        // The full §5 pipeline (fold → simplify → cse → fuse), same flags
+        // and order as `Session::build_step` — the pruned graph the
+        // workers execute is the optimized one.
+        let pipeline = passes::PassManager::standard(
+            self.options.enable_constant_folding,
+            self.options.enable_arithmetic_simplification,
+            self.options.enable_cse,
+            self.options.enable_elementwise_fusion,
+        );
+        let (pruned, _pipeline_stats) = pipeline.run(&pruned)?;
         let mut placed = pruned;
         place(&mut placed, &self.device_mirror, &self.options.cost_model)?;
         // Rendezvous keys carry %STEP%, substituted per step by the

@@ -5,6 +5,7 @@ use crate::device::Device;
 use crate::error::{Result, Status};
 use crate::graph::{Endpoint, Graph, NodeId};
 use crate::kernels::{create_kernel, Kernel, NodeInfo};
+use crate::memory::{ArenaPool, MemoryPlan};
 use crate::ops;
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -67,6 +68,12 @@ pub struct CompiledGraph {
     pub nodes: Vec<CompiledNode>,
     pub frames: Vec<FrameDef>,
     pub device: Arc<Device>,
+    /// Step memory plan (`crate::memory`), when planning was requested.
+    pub plan: Option<Arc<MemoryPlan>>,
+    /// Arena pool backing the plan: one arena per in-flight step of this
+    /// compiled graph, pooled across steps so buffers survive between runs
+    /// of the same cached signature.
+    pub arena_pool: Option<Arc<ArenaPool>>,
 }
 
 impl CompiledGraph {
@@ -74,8 +81,19 @@ impl CompiledGraph {
         tag.last().map(|&(f, _)| f).unwrap_or(0)
     }
 
-    /// Compile a (single-device) graph for execution on `device`.
+    /// Compile a (single-device) graph for execution on `device`, without
+    /// a memory plan (build-time evaluation, distributed workers, tests).
     pub fn compile(graph: &Graph, device: Arc<Device>) -> Result<Arc<CompiledGraph>> {
+        CompiledGraph::compile_planned(graph, device, false)
+    }
+
+    /// Compile with an optional step memory plan (`Session::build_step`
+    /// passes `SessionOptions::enable_memory_planning` here).
+    pub fn compile_planned(
+        graph: &Graph,
+        device: Arc<Device>,
+        enable_memory_planning: bool,
+    ) -> Result<Arc<CompiledGraph>> {
         graph.topo_order()?; // validates acyclicity (mod NextIteration)
 
         // ---- frame assignment -------------------------------------------
@@ -346,7 +364,16 @@ impl CompiledGraph {
             nodes[i].has_invariant_consumers = flag;
         }
 
-        Ok(Arc::new(CompiledGraph { nodes, frames, device }))
+        // ---- step memory plan (crate::memory) ---------------------------
+        let (plan, arena_pool) = if enable_memory_planning {
+            let plan = crate::memory::plan_partition(graph, &nodes)?;
+            let pool = ArenaPool::new(plan.num_slots());
+            (Some(Arc::new(plan)), Some(pool))
+        } else {
+            (None, None)
+        };
+
+        Ok(Arc::new(CompiledGraph { nodes, frames, device, plan, arena_pool }))
     }
 }
 
@@ -418,6 +445,59 @@ mod tests {
         // Merge/Switch/Enter/Exit/NextIteration classified.
         assert!(cg.nodes.iter().any(|n| matches!(n.kind, NodeKind::Merge)));
         assert!(cg.nodes.iter().any(|n| matches!(n.kind, NodeKind::Enter { .. })));
+    }
+
+    #[test]
+    fn memory_plan_packs_chain_into_few_slots() {
+        // Const → Neg → Tanh → Square → Abs: disjoint intervals share
+        // slots, the Const and the unconsumed tail are pinned/planned per
+        // the liveness rules.
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::from_f32(vec![16], vec![0.1; 16]).unwrap());
+        let a = b.neg(x);
+        let t = b.tanh(a);
+        let s = b.square(t);
+        let _tail = b.op1("Abs", "abs", vec![s], vec![]).unwrap();
+        let cg = CompiledGraph::compile_planned(&b.graph, device(), true).unwrap();
+        let plan = cg.plan.as_ref().expect("planning on");
+        assert!(cg.arena_pool.is_some());
+        assert!(plan.stats.planned_static >= 3, "{:?}", plan.stats);
+        assert!(
+            plan.stats.arena_bytes < plan.stats.naive_bytes,
+            "chain must pack: {:?}",
+            plan.stats
+        );
+        assert!(plan.stats.forward_candidates >= 3, "{:?}", plan.stats);
+        // Const output (node 0) is pinned; chain nodes have slots.
+        assert_eq!(plan.out_slot(0, 0), None);
+        assert!(plan.out_slot(1, 0).is_some());
+        // Tanh may overwrite Neg's dying output.
+        assert!(plan.input_forwardable(2, 0));
+    }
+
+    #[test]
+    fn memory_plan_pins_fanout_consumers_from_forwarding() {
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::from_f32(vec![4], vec![1.0; 4]).unwrap());
+        let a = b.neg(x); // two consumers below
+        let _u = b.tanh(a);
+        let _v = b.square(a);
+        let cg = CompiledGraph::compile_planned(&b.graph, device(), true).unwrap();
+        let plan = cg.plan.as_ref().unwrap();
+        // a is planned, but neither consumer may forward it (2 reads).
+        assert!(plan.out_slot(1, 0).is_some());
+        assert!(!plan.input_forwardable(2, 0));
+        assert!(!plan.input_forwardable(3, 0));
+    }
+
+    #[test]
+    fn memory_plan_disabled_yields_none() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        b.neg(x);
+        let cg = CompiledGraph::compile_planned(&b.graph, device(), false).unwrap();
+        assert!(cg.plan.is_none());
+        assert!(cg.arena_pool.is_none());
     }
 
     #[test]

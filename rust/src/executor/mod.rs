@@ -103,6 +103,9 @@ struct Inner {
     ctx: RunContext,
     state: Mutex<RunState>,
     done_cond: Condvar,
+    /// This step's arena (checked out of `graph.arena_pool` for the
+    /// duration of the run; concurrent steps get distinct arenas).
+    arena: Option<Arc<crate::memory::StepArena>>,
 }
 
 /// Executes a compiled per-device subgraph.
@@ -122,6 +125,10 @@ impl Executor {
     /// Run the subgraph to completion (§3.1). Returns the first error;
     /// fetched tensors land in `ctx.step`.
     pub fn run(&self, ctx: RunContext) -> Result<()> {
+        // One arena per step: buffers released during this run pool in its
+        // slots, and the arena itself returns to the compiled graph's pool
+        // at the end so the *next* step reuses the same storage.
+        let arena = self.graph.arena_pool.as_ref().map(|p| p.checkout());
         let inner = Arc::new(Inner {
             graph: Arc::clone(&self.graph),
             ctx,
@@ -132,8 +139,29 @@ impl Executor {
                 first_error: None,
             }),
             done_cond: Condvar::new(),
+            arena: arena.clone(),
         });
 
+        let result = Inner::run_to_completion(&inner);
+
+        if let (Some(pool), Some(arena)) = (self.graph.arena_pool.as_ref(), arena) {
+            pool.checkin(arena);
+        }
+        result
+    }
+}
+
+enum Action {
+    None,
+    Schedule(Vec<Tensor>),
+    DeadPropagate,
+    MergeFire(Vec<Entry>),
+}
+
+impl Inner {
+    /// The seed-dispatch-wait loop (body of [`Executor::run`], split out
+    /// so the arena check-in runs on every exit path).
+    fn run_to_completion(inner: &Arc<Inner>) -> Result<()> {
         // Seed: every zero-dependency (root-frame) node.
         let ready = {
             let mut st = inner.state.lock().unwrap();
@@ -153,7 +181,7 @@ impl Executor {
             return Ok(()); // empty graph
         }
         for s in ready {
-            Inner::dispatch(&inner, s);
+            Inner::dispatch(inner, s);
         }
 
         let mut st = inner.state.lock().unwrap();
@@ -165,16 +193,7 @@ impl Executor {
             None => Ok(()),
         }
     }
-}
 
-enum Action {
-    None,
-    Schedule(Vec<Tensor>),
-    DeadPropagate,
-    MergeFire(Vec<Entry>),
-}
-
-impl Inner {
     /// Create the iteration state for `tag` if absent, queueing deliveries
     /// of any already-known invariants into it.
     fn ensure_iter(&self, st: &mut RunState, tag: &Tag, queue: &mut Vec<Delivery>) {
@@ -481,6 +500,16 @@ impl Inner {
             NodeKind::Merge => unreachable!("merge fires inside drain()"),
             NodeKind::Normal => {
                 let kernel = node.kernel.as_ref().expect("normal node has kernel");
+                // Bind the step memory plan (arena slots + forwarding
+                // marks) for this node, when planning is on.
+                let mem = match (&self.arena, &graph.plan) {
+                    (Some(arena), Some(plan)) => Some(crate::kernels::NodeMemory {
+                        arena: Arc::clone(arena),
+                        plan: Arc::clone(plan),
+                        node: s.node.0,
+                    }),
+                    _ => None,
+                };
                 let mut kctx = KernelContext {
                     inputs: s.inputs,
                     node: Arc::clone(&node.info),
@@ -488,6 +517,7 @@ impl Inner {
                     resources: Arc::clone(&self.ctx.resources),
                     rendezvous: Arc::clone(&self.ctx.rendezvous),
                     step: Arc::clone(&self.ctx.step),
+                    mem,
                 };
                 match kernel {
                     Kernel::Sync(f) => {

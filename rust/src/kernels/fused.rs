@@ -12,22 +12,30 @@
 //! * `"Sub,l,3"` — binary step, extra on the *left*: `acc = inputs[3] - acc`.
 //!
 //! Fast path (the point of fusion): when the primary operand is `f32` and
-//! every extra is `f32` and either scalar or exactly primary-shaped, the
-//! whole program runs element-at-a-time into one output buffer — zero
+//! every extra is `f32` and either scalar, exactly primary-shaped, or
+//! row-major-broadcastable *up to* the primary's shape (every
+//! right-aligned dim 1 or equal — the bias-row / column-vector patterns),
+//! the whole program runs element-at-a-time into one output buffer — zero
 //! intermediate tensor allocations, using the *same* scalar functions as
 //! the standalone kernels so fused and unfused graphs agree exactly.
-//! Otherwise (other dtypes, broadcast shapes) the kernel falls back to
-//! applying the steps sequentially through `unary_elementwise` /
+//! Broadcast extras read through right-aligned zero strides, so the
+//! zero-intermediate property survives broadcasting. Otherwise (other
+//! dtypes, rank-raising or output-shape-changing extras) the kernel falls
+//! back to applying the steps sequentially through `unary_elementwise` /
 //! `binary_elementwise`, which is always correct but allocates one
-//! intermediate per step; teaching the fast path about broadcast shapes is
-//! a ROADMAP open item.
+//! intermediate per step.
+//!
+//! The fast path is also memory-planned: the output is written in place
+//! over the primary when the step plan forwards it
+//! (`KernelContext::take_forward_f32`), else into the node's arena slot —
+//! fused chains stay zero-intermediate *and* allocation-free.
 
 use super::{Kernel, KernelContext, KernelRegistry};
 use crate::error::{Result, Status};
 use crate::graph::AttrValue;
 use crate::kernels::math;
 use crate::kernels::nn;
-use crate::tensor::{DType, Tensor, TensorData};
+use crate::tensor::{DType, Shape, Tensor, TensorData};
 
 /// One step of a fused program, parsed from the `ops` attr.
 #[derive(Debug, Clone, PartialEq)]
@@ -117,57 +125,124 @@ fn apply_unary(t: &Tensor, op: &str) -> Result<Tensor> {
     }
 }
 
+/// How the fast path reads one extra operand.
+enum ExtraKind {
+    Scalar,
+    /// Exactly primary-shaped: index with the output index.
+    Same,
+    /// Right-aligned broadcast up to the primary shape: index through
+    /// zero strides on the broadcast dims.
+    Strided(Vec<usize>),
+}
+
 /// A step with its functions resolved, ready to interpret.
 enum Compiled<'a> {
     Unary(fn(f32) -> f32),
-    /// (fn, acc_left, extra values, extra is scalar)
-    Binary(fn(f32, f32) -> f32, bool, &'a [f32], bool),
+    Binary(fn(f32, f32) -> f32, bool, &'a [f32], ExtraKind),
 }
 
-fn compute(steps: &[Step], ctx: &KernelContext) -> Result<Tensor> {
-    let primary = ctx.input(0)?;
+/// Does `extra` broadcast *up to exactly* the primary shape under
+/// right-aligned row-major rules? (Rank ≤ primary's and every aligned dim
+/// 1 or equal — so the output stays primary-shaped, which is what keeps
+/// the fast path sound.)
+fn broadcastable_to_primary(primary: &Shape, extra: &Shape) -> bool {
+    if extra.rank() > primary.rank() {
+        return false;
+    }
+    let offset = primary.rank() - extra.rank();
+    extra
+        .dims()
+        .iter()
+        .enumerate()
+        .all(|(d, &e)| e == 1 || e == primary.dims()[offset + d])
+}
 
-    // Fast path: f32 primary, every extra f32 and either primary-shaped or
-    // single-element with rank ≤ primary's. The rank bound matters: a [1]
+/// Right-aligned strides of `extra` into the primary's index space, with
+/// stride 0 on broadcast (size-1 or missing) dims.
+fn primary_space_strides(primary: &Shape, extra: &Shape) -> Vec<usize> {
+    let strides = extra.strides();
+    let offset = primary.rank() - extra.rank();
+    let mut out = vec![0usize; primary.rank()];
+    for d in 0..extra.rank() {
+        out[offset + d] = if extra.dims()[d] == 1 { 0 } else { strides[d] };
+    }
+    out
+}
+
+fn compute(steps: &[Step], ctx: &mut KernelContext) -> Result<Tensor> {
+    // Fast path: f32 primary, every extra f32 and either single-element
+    // with rank ≤ primary's, primary-shaped, or right-aligned
+    // broadcastable up to the primary. The rank bound matters: a [1]
     // extra against a rank-0 primary broadcasts the *output* up to [1]
     // under the standalone kernels, which the primary-shaped fast-path
     // output would silently miss.
-    let fast = primary.dtype() == DType::F32
-        && steps.iter().all(|s| match s.arg {
-            None => true,
-            Some(k) => ctx.inputs.get(k).is_some_and(|t| {
-                t.dtype() == DType::F32
-                    && ((t.num_elements() == 1
-                        && t.shape().rank() <= primary.shape().rank())
-                        || t.shape() == primary.shape())
-            }),
-        });
+    let (fast, primary_shape) = {
+        let primary = ctx.input(0)?;
+        let shape = primary.shape().clone();
+        let fast = primary.dtype() == DType::F32
+            && steps.iter().all(|s| match s.arg {
+                None => true,
+                Some(k) => ctx.inputs.get(k).is_some_and(|t| {
+                    t.dtype() == DType::F32
+                        && ((t.num_elements() == 1 && t.shape().rank() <= shape.rank())
+                            || broadcastable_to_primary(&shape, t.shape()))
+                }),
+            });
+        (fast, shape)
+    };
     if fast {
+        let n = primary_shape.num_elements();
+        // In-place forwarding: the output aliases the primary's storage
+        // when the plan marks it dying here and we hold the only ref.
+        // (Extras are distinct tensors — a shared endpoint would have
+        // refcount ≥ 2 and refuse the steal — so reading them while
+        // mutating the primary is sound.)
+        let forwarded = ctx.take_forward_f32(0);
         let mut prog: Vec<Compiled> = Vec::with_capacity(steps.len());
+        let mut any_strided = false;
         for s in steps {
             match s.arg {
                 None => prog.push(Compiled::Unary(scalar_unary(&s.op)?)),
                 Some(k) => {
                     let extra = ctx.input(k)?;
+                    let kind = if extra.num_elements() == 1 {
+                        ExtraKind::Scalar
+                    } else if extra.shape() == &primary_shape {
+                        ExtraKind::Same
+                    } else {
+                        any_strided = true;
+                        ExtraKind::Strided(primary_space_strides(&primary_shape, extra.shape()))
+                    };
                     prog.push(Compiled::Binary(
                         math::f32_binop(&s.op)?,
                         s.acc_left,
                         extra.as_f32()?,
-                        extra.num_elements() == 1,
+                        kind,
                     ));
                 }
             }
         }
-        let x = primary.as_f32()?;
-        let mut out = Vec::with_capacity(x.len());
-        for (i, &v) in x.iter().enumerate() {
-            let mut acc = v;
+        // Multi-index over the primary dims, maintained only when some
+        // extra actually needs strided reads.
+        let dims = primary_shape.dims().to_vec();
+        let mut idx = vec![0usize; dims.len()];
+        let run_prog = |i: usize, idx: &[usize], mut acc: f32| -> f32 {
             for step in &prog {
-                acc = match *step {
+                acc = match step {
                     Compiled::Unary(f) => f(acc),
-                    Compiled::Binary(f, acc_left, ys, scalar) => {
-                        let y = if scalar { ys[0] } else { ys[i] };
-                        if acc_left {
+                    Compiled::Binary(f, acc_left, ys, kind) => {
+                        let y = match kind {
+                            ExtraKind::Scalar => ys[0],
+                            ExtraKind::Same => ys[i],
+                            ExtraKind::Strided(strides) => {
+                                let mut off = 0usize;
+                                for (d, &s) in strides.iter().enumerate() {
+                                    off += idx[d] * s;
+                                }
+                                ys[off]
+                            }
+                        };
+                        if *acc_left {
                             f(acc, y)
                         } else {
                             f(y, acc)
@@ -175,14 +250,46 @@ fn compute(steps: &[Step], ctx: &KernelContext) -> Result<Tensor> {
                     }
                 };
             }
-            out.push(acc);
+            acc
+        };
+        let bump = |idx: &mut [usize]| {
+            for d in (0..idx.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < dims[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        };
+        match forwarded {
+            Some(mut fw) => {
+                for i in 0..n {
+                    fw.vec[i] = run_prog(i, &idx, fw.vec[i]);
+                    if any_strided {
+                        bump(&mut idx);
+                    }
+                }
+                drop(prog); // release the borrows of ctx.inputs
+                return fw.into_tensor();
+            }
+            None => {
+                let mut out = ctx.alloc_f32(0, n);
+                let x = ctx.input(0)?.as_f32()?;
+                for (i, &v) in x.iter().enumerate() {
+                    out.push(run_prog(i, &idx, v));
+                    if any_strided {
+                        bump(&mut idx);
+                    }
+                }
+                drop(prog);
+                return ctx.make_output(0, primary_shape, TensorData::F32(out));
+            }
         }
-        return Tensor::new(primary.shape().clone(), TensorData::F32(out));
     }
 
     // Fallback: sequential application — correct for every dtype/shape the
     // standalone kernels support, at the cost of per-step intermediates.
-    let mut acc = primary.clone();
+    let mut acc = ctx.input(0)?.clone();
     for s in steps {
         acc = match s.arg {
             None => apply_unary(&acc, &s.op)?,
@@ -232,6 +339,7 @@ mod tests {
     fn ctx_with(inputs: Vec<Tensor>) -> KernelContext {
         KernelContext {
             inputs,
+            mem: None,
             node: Arc::new(NodeInfo {
                 name: "fused".into(),
                 op: "FusedElementwise".into(),
@@ -282,8 +390,8 @@ mod tests {
         let x = t(vec![4], vec![-1.0, 0.5, 2.0, 3.0]);
         let two = Tensor::scalar_f32(2.0);
         let y = t(vec![4], vec![0.0, 2.0, 1.0, -1.0]);
-        let ctx = ctx_with(vec![x.clone(), two, y.clone()]);
-        let out = compute(&steps, &ctx).unwrap();
+        let mut ctx = ctx_with(vec![x.clone(), two, y.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
         let xv = x.as_f32().unwrap();
         let yv = y.as_f32().unwrap();
         for i in 0..4 {
@@ -295,8 +403,8 @@ mod tests {
     fn acc_side_respected() {
         // acc = 10 - x (extra on the left).
         let steps = vec![Step { op: "Sub".into(), acc_left: false, arg: Some(1) }];
-        let ctx = ctx_with(vec![t(vec![2], vec![1.0, 4.0]), Tensor::scalar_f32(10.0)]);
-        let out = compute(&steps, &ctx).unwrap();
+        let mut ctx = ctx_with(vec![t(vec![2], vec![1.0, 4.0]), Tensor::scalar_f32(10.0)]);
+        let out = compute(&steps, &mut ctx).unwrap();
         assert_eq!(out.as_f32().unwrap(), &[9.0, 6.0]);
     }
 
@@ -307,9 +415,56 @@ mod tests {
         let steps = vec![Step { op: "Add".into(), acc_left: true, arg: Some(1) }];
         let x = t(vec![2], vec![1.0, 2.0]);
         let col = t(vec![2, 1], vec![10.0, 20.0]);
-        let ctx = ctx_with(vec![x.clone(), col.clone()]);
-        let out = compute(&steps, &ctx).unwrap();
+        let mut ctx = ctx_with(vec![x.clone(), col.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
         let expect = math::binary_elementwise(&x, &col, "Add").unwrap();
+        assert_eq!(out.shape(), expect.shape());
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+    }
+
+    #[test]
+    fn row_broadcast_extra_takes_fast_path_and_matches() {
+        // Extra [3] against primary [2,3] (the bias-add pattern): handled
+        // by the strided fast path; must match the standalone kernels.
+        let steps = vec![
+            Step { op: "Add".into(), acc_left: true, arg: Some(1) },
+            Step { op: "Tanh".into(), acc_left: true, arg: None },
+        ];
+        let x = t(vec![2, 3], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6]);
+        let row = t(vec![3], vec![10.0, 20.0, 30.0]);
+        let mut ctx = ctx_with(vec![x.clone(), row.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
+        let expect =
+            math::unary_elementwise(&math::binary_elementwise(&x, &row, "Add").unwrap(), "Tanh")
+                .unwrap();
+        assert_eq!(out.shape(), expect.shape());
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+    }
+
+    #[test]
+    fn column_broadcast_extra_takes_fast_path_and_matches() {
+        // Extra [2,1] against primary [2,3]: same rank, dim-1 broadcast.
+        let steps = vec![Step { op: "Mul".into(), acc_left: false, arg: Some(1) }];
+        let x = t(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let col = t(vec![2, 1], vec![10.0, 100.0]);
+        let mut ctx = ctx_with(vec![x.clone(), col.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
+        let expect = math::binary_elementwise(&col, &x, "Mul").unwrap();
+        assert_eq!(out.shape(), expect.shape());
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+    }
+
+    #[test]
+    fn output_growing_extra_still_falls_back() {
+        // Extra [2,3] against primary [3]: the output outgrows the
+        // primary, which the fast path cannot represent — fallback, and
+        // the result must match full broadcasting.
+        let steps = vec![Step { op: "Add".into(), acc_left: true, arg: Some(1) }];
+        let x = t(vec![3], vec![1.0, 2.0, 3.0]);
+        let big = t(vec![2, 3], vec![10.0, 20.0, 30.0, 40.0, 50.0, 60.0]);
+        let mut ctx = ctx_with(vec![x.clone(), big.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
+        let expect = math::binary_elementwise(&x, &big, "Add").unwrap();
         assert_eq!(out.shape(), expect.shape());
         assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
     }
@@ -321,8 +476,8 @@ mod tests {
         let steps = vec![Step { op: "Add".into(), acc_left: true, arg: Some(1) }];
         let x = Tensor::scalar_f32(2.0);
         let e = t(vec![1], vec![3.0]);
-        let ctx = ctx_with(vec![x.clone(), e.clone()]);
-        let out = compute(&steps, &ctx).unwrap();
+        let mut ctx = ctx_with(vec![x.clone(), e.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
         let expect = math::binary_elementwise(&x, &e, "Add").unwrap();
         assert_eq!(out.shape(), expect.shape());
         assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
@@ -335,8 +490,8 @@ mod tests {
             Step { op: "Abs".into(), acc_left: true, arg: None },
         ];
         let x = Tensor::from_i32(vec![3], vec![-1, 2, -3]).unwrap();
-        let ctx = ctx_with(vec![x]);
-        let out = compute(&steps, &ctx).unwrap();
+        let mut ctx = ctx_with(vec![x]);
+        let out = compute(&steps, &mut ctx).unwrap();
         assert_eq!(out.as_i32().unwrap(), &[1, 2, 3]);
     }
 

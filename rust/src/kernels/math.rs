@@ -4,7 +4,7 @@
 
 use super::{Kernel, KernelContext, KernelRegistry};
 use crate::error::{Result, Status};
-use crate::tensor::{Shape, Tensor, TensorData};
+use crate::tensor::{DType, Shape, Tensor, TensorData};
 
 // ---------------------------------------------------------------------------
 // broadcasting machinery
@@ -183,6 +183,137 @@ fn i64_binop(op: &str) -> Result<fn(i64, i64) -> i64> {
         "Minimum" => |a, b| a.min(b),
         _ => return Err(Status::unimplemented(format!("i64 binop {op}"))),
     })
+}
+
+/// Operand geometry the planned binary fast path handles without a
+/// broadcast index map.
+enum BinKind {
+    /// Identical shapes: lock-step iteration, either side forwardable.
+    Same,
+    /// Rhs is a single element (and does not raise the output's rank):
+    /// output is lhs-shaped, lhs forwardable.
+    ScalarRhs,
+    /// Mirror image of `ScalarRhs`.
+    ScalarLhs,
+}
+
+/// The memory-planned kernel body for binary elementwise ops: on the
+/// same-shape and scalar-operand f32 paths, write the result in place
+/// over whichever operand the plan lets this node forward
+/// (`KernelContext::take_forward_f32`), else into the port's arena slot
+/// (`alloc_f32`). General broadcasting falls through to
+/// [`binary_elementwise`] (heap).
+pub fn binary_elementwise_planned(ctx: &mut KernelContext, op: &str) -> Result<Tensor> {
+    let kind = {
+        let a = ctx.input(0)?;
+        let b = ctx.input(1)?;
+        if a.dtype() != DType::F32 || b.dtype() != DType::F32 {
+            None
+        } else if a.shape() == b.shape() {
+            Some(BinKind::Same)
+        } else if b.num_elements() == 1 && b.shape().rank() <= a.shape().rank() {
+            // The rank bound keeps a [1] rhs from silently flattening a
+            // rank-0 lhs's broadcast to shape [1] (cf. kernels::fused).
+            Some(BinKind::ScalarRhs)
+        } else if a.num_elements() == 1 && a.shape().rank() <= b.shape().rank() {
+            Some(BinKind::ScalarLhs)
+        } else {
+            None
+        }
+    };
+    let Some(kind) = kind else {
+        return binary_elementwise(ctx.input(0)?, ctx.input(1)?, op);
+    };
+    let f = f32_binop(op)?;
+    match kind {
+        BinKind::Same => {
+            // In-place over the lhs (acc = f(acc, b))…
+            if let Some(mut fw) = ctx.take_forward_f32(0) {
+                let b = ctx.input(1)?.as_f32()?;
+                for (x, &y) in fw.vec.iter_mut().zip(b) {
+                    *x = f(*x, y);
+                }
+                return fw.into_tensor();
+            }
+            // …or over the rhs (acc = f(a, acc)).
+            if let Some(mut fw) = ctx.take_forward_f32(1) {
+                let a = ctx.input(0)?.as_f32()?;
+                for (&x, y) in a.iter().zip(fw.vec.iter_mut()) {
+                    *y = f(x, *y);
+                }
+                return fw.into_tensor();
+            }
+            let shape = ctx.input(0)?.shape().clone();
+            let mut out = ctx.alloc_f32(0, shape.num_elements());
+            {
+                let x = ctx.input(0)?.as_f32()?;
+                let y = ctx.input(1)?.as_f32()?;
+                for (&p, &q) in x.iter().zip(y) {
+                    out.push(f(p, q));
+                }
+            }
+            ctx.make_output(0, shape, TensorData::F32(out))
+        }
+        BinKind::ScalarRhs => {
+            let y = ctx.input(1)?.as_f32()?[0];
+            if let Some(mut fw) = ctx.take_forward_f32(0) {
+                for x in fw.vec.iter_mut() {
+                    *x = f(*x, y);
+                }
+                return fw.into_tensor();
+            }
+            let shape = ctx.input(0)?.shape().clone();
+            let mut out = ctx.alloc_f32(0, shape.num_elements());
+            for &v in ctx.input(0)?.as_f32()? {
+                out.push(f(v, y));
+            }
+            ctx.make_output(0, shape, TensorData::F32(out))
+        }
+        BinKind::ScalarLhs => {
+            let x = ctx.input(0)?.as_f32()?[0];
+            if let Some(mut fw) = ctx.take_forward_f32(1) {
+                for y in fw.vec.iter_mut() {
+                    *y = f(x, *y);
+                }
+                return fw.into_tensor();
+            }
+            let shape = ctx.input(1)?.shape().clone();
+            let mut out = ctx.alloc_f32(0, shape.num_elements());
+            for &v in ctx.input(1)?.as_f32()? {
+                out.push(f(x, v));
+            }
+            ctx.make_output(0, shape, TensorData::F32(out))
+        }
+    }
+}
+
+/// Memory-planned map of a scalar f32 function over input 0: in place
+/// over a dying input when the plan and refcount allow, else into the
+/// port's arena slot. Shared by the unary math kernels and
+/// `kernels::nn`'s ReLU/Sigmoid, so the forwarding/alloc contract lives
+/// in one place.
+pub(crate) fn planned_unary_map(ctx: &mut KernelContext, f: fn(f32) -> f32) -> Result<Tensor> {
+    if let Some(mut fw) = ctx.take_forward_f32(0) {
+        for x in fw.vec.iter_mut() {
+            *x = f(*x);
+        }
+        return fw.into_tensor();
+    }
+    let shape = ctx.input(0)?.shape().clone();
+    let mut out = ctx.alloc_f32(0, shape.num_elements());
+    for &v in ctx.input(0)?.as_f32()? {
+        out.push(f(v));
+    }
+    ctx.make_output(0, shape, TensorData::F32(out))
+}
+
+/// Memory-planned unary elementwise: in place over a dying f32 input, or
+/// into the arena slot; non-f32 falls through to [`unary_elementwise`].
+pub fn unary_elementwise_planned(ctx: &mut KernelContext, op: &str) -> Result<Tensor> {
+    if ctx.input(0)?.dtype() != DType::F32 {
+        return unary_elementwise(ctx.input(0)?, op);
+    }
+    planned_unary_map(ctx, f32_unary(op)?)
 }
 
 /// Comparison / logical binary op → Bool tensor, with broadcasting.
@@ -444,22 +575,22 @@ pub(super) fn register(r: &mut KernelRegistry) {
         r.add(op, move |_| {
             let name = name.clone();
             Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
-                Ok(vec![binary_elementwise(ctx.input(0)?, ctx.input(1)?, &name)?])
+                Ok(vec![binary_elementwise_planned(ctx, &name)?])
             })))
         });
     }
     for op in [
         "Neg", "Exp", "Log", "Sqrt", "Rsqrt", "Abs", "Sign", "Square", "Tanh", "Reciprocal",
-        "LogicalNot",
     ] {
         let name = op.to_string();
         r.add(op, move |_| {
             let name = name.clone();
             Ok(Kernel::Sync(Box::new(move |ctx: &mut KernelContext| {
-                Ok(vec![unary_elementwise(ctx.input(0)?, &name)?])
+                Ok(vec![unary_elementwise_planned(ctx, &name)?])
             })))
         });
     }
+    r.add_sync("LogicalNot", |ctx| Ok(vec![unary_elementwise(ctx.input(0)?, "LogicalNot")?]));
     for op in
         ["Greater", "Less", "Equal", "NotEqual", "GreaterEqual", "LessEqual", "LogicalAnd", "LogicalOr"]
     {

@@ -11,8 +11,8 @@ use super::{KernelContext, KernelRegistry};
 use crate::error::{Result, Status};
 use crate::tensor::{Shape, Tensor, TensorData};
 
-/// C[m,n] = A·B with optional logical transposes. Row-major.
-pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+/// Resolve the (m, k, n) problem dims of `a`·`b` under transposes.
+fn matmul_dims(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<(usize, usize, usize)> {
     let (ar, ac) = dims2(a, "MatMul lhs")?;
     let (br, bc) = dims2(b, "MatMul rhs")?;
     let (m, k) = if ta { (ac, ar) } else { (ar, ac) };
@@ -22,9 +22,23 @@ pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
             "MatMul: inner dims mismatch {k} vs {k2} (a={ar}x{ac} ta={ta}, b={br}x{bc} tb={tb})"
         )));
     }
-    let av = a.as_f32()?;
-    let bv = b.as_f32()?;
+    Ok((m, k, n))
+}
+
+/// C[m,n] = A·B with optional logical transposes. Row-major.
+pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+    let (m, k, n) = matmul_dims(a, b, ta, tb)?;
     let mut out = vec![0f32; m * n];
+    matmul_impl(a.as_f32()?, b.as_f32()?, m, k, n, ta, tb, &mut out);
+    Tensor::new(Shape(vec![m, n]), TensorData::F32(out))
+}
+
+/// The four-layout multiply into caller-provided storage
+/// (`out.len() == m*n`, zeroed) — dims come pre-resolved from
+/// [`matmul_dims`] so they are validated exactly once per invocation.
+#[allow(clippy::too_many_arguments)]
+fn matmul_impl(av: &[f32], bv: &[f32], m: usize, k: usize, n: usize, ta: bool, tb: bool, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), m * n);
     match (ta, tb) {
         (false, false) => {
             // ikj loop: streams B rows, vectorizes the inner j loop.
@@ -85,7 +99,6 @@ pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
             }
         }
     }
-    Tensor::new(Shape(vec![m, n]), TensorData::F32(out))
 }
 
 /// Batched matmul over leading dim: [b,m,k] x [b,k,n] -> [b,m,n].
@@ -221,7 +234,11 @@ pub(super) fn register(r: &mut KernelRegistry) {
     r.add_sync("MatMul", |ctx: &mut KernelContext| {
         let ta = ctx.node.attr_opt("transpose_a").and_then(|a| a.as_bool().ok()).unwrap_or(false);
         let tb = ctx.node.attr_opt("transpose_b").and_then(|a| a.as_bool().ok()).unwrap_or(false);
-        Ok(vec![matmul(ctx.input(0)?, ctx.input(1)?, ta, tb)?])
+        // Memory-planned: accumulate into the port's arena slot.
+        let (m, k, n) = matmul_dims(ctx.input(0)?, ctx.input(1)?, ta, tb)?;
+        let mut out = ctx.alloc_f32_zeroed(0, m * n);
+        matmul_impl(ctx.input(0)?.as_f32()?, ctx.input(1)?.as_f32()?, m, k, n, ta, tb, &mut out);
+        Ok(vec![ctx.make_output(0, Shape(vec![m, n]), TensorData::F32(out))?])
     });
     r.add_sync("BatchMatMul", |ctx| {
         Ok(vec![batch_matmul(ctx.input(0)?, ctx.input(1)?)?])

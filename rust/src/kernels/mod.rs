@@ -23,11 +23,12 @@ use crate::device::Device;
 #[allow(unused_imports)]
 use crate::error::{Result, Status};
 use crate::graph::AttrValue;
+use crate::memory::{MemoryPlan, StepArena};
 use crate::rendezvous::Rendezvous;
 use crate::resources::ResourceMgr;
-use crate::tensor::Tensor;
+use crate::tensor::{BufRecycler, DType, Shape, Tensor, TensorBuffer, TensorData};
 use std::sync::LazyLock as Lazy;
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 
@@ -109,6 +110,49 @@ impl StepState {
     }
 }
 
+/// This node's binding into the step's memory plan: which arena slots its
+/// outputs land in and which inputs may be overwritten in place. `None` on
+/// `KernelContext::mem` when planning is off or the partition has no plan.
+pub struct NodeMemory {
+    pub arena: Arc<StepArena>,
+    pub plan: Arc<MemoryPlan>,
+    /// Compiled-graph index of the node this invocation executes.
+    pub node: usize,
+}
+
+impl NodeMemory {
+    fn out_slot(&self, port: usize) -> Option<u32> {
+        self.plan.out_slot(self.node, port)
+    }
+
+    fn forwardable(&self, slot: usize) -> bool {
+        self.plan.input_forwardable(self.node, slot)
+    }
+}
+
+/// An input stolen for in-place reuse by [`KernelContext::take_forward_f32`]:
+/// unique f32 storage (mutate freely) plus the recycler that keeps it
+/// flowing back to its arena slot.
+pub struct ForwardedF32 {
+    pub shape: Shape,
+    pub vec: Vec<f32>,
+    recycler: Option<Arc<dyn BufRecycler>>,
+}
+
+impl ForwardedF32 {
+    /// Rewrap the (now mutated) storage as the kernel's output tensor.
+    pub fn into_tensor(self) -> Result<Tensor> {
+        Tensor::with_buffer(
+            self.shape,
+            TensorBuffer::from_parts(TensorData::F32(self.vec), self.recycler),
+        )
+    }
+}
+
+/// Stand-in left in `inputs[i]` after a forward steals the real tensor
+/// (cloning is just an Arc bump).
+static FORWARD_PLACEHOLDER: Lazy<Tensor> = Lazy::new(|| Tensor::scalar_f32(0.0));
+
 /// Everything a kernel invocation may touch. Owned (Arc-based) so async
 /// kernels can carry it into their continuation.
 pub struct KernelContext {
@@ -118,18 +162,111 @@ pub struct KernelContext {
     pub resources: Arc<ResourceMgr>,
     pub rendezvous: Arc<dyn Rendezvous>,
     pub step: Arc<StepState>,
+    /// Step-memory-plan binding (None ⇒ every output heap-allocates).
+    pub mem: Option<NodeMemory>,
 }
 
 impl KernelContext {
     pub fn input(&self, i: usize) -> Result<&Tensor> {
-        self.inputs
+        let t = self
+            .inputs
             .get(i)
-            .ok_or_else(|| Status::internal(format!("node {}: missing input {i}", self.node.name)))
+            .ok_or_else(|| Status::internal(format!("node {}: missing input {i}", self.node.name)))?;
+        // A forwarded input's storage now belongs to the output being
+        // built; reading the stand-in would silently compute on 0.0, so
+        // fail loudly instead (kernel-author bug, not a user error).
+        if std::ptr::eq(t.data(), FORWARD_PLACEHOLDER.data()) {
+            return Err(Status::internal(format!(
+                "node {}: input {i} was forwarded in place and can no longer be read",
+                self.node.name
+            )));
+        }
+        Ok(t)
     }
 
     /// The container holding this node's resources.
     pub fn container(&self) -> Arc<crate::resources::Container> {
         self.resources.container(&self.node.container)
+    }
+
+    // ---- step-memory-plan hooks (opt-in per kernel; see crate::memory) --
+
+    /// An output Vec for an f32 result of `n` elements at `port`: checked
+    /// out of the step arena when the plan assigned the port a slot, fresh
+    /// otherwise. Returned empty with capacity ≥ `n`; push exactly `n`
+    /// elements, then wrap with [`KernelContext::make_output`].
+    pub fn alloc_f32(&self, port: usize, n: usize) -> Vec<f32> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => m.arena.checkout_f32(slot as usize, n),
+            None => Vec::with_capacity(n),
+        }
+    }
+
+    /// Like [`KernelContext::alloc_f32`] but zero-filled to `len == n`,
+    /// for kernels that write by index (MatMul).
+    pub fn alloc_f32_zeroed(&self, port: usize, n: usize) -> Vec<f32> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => m.arena.checkout_f32_zeroed(slot as usize, n),
+            None => vec![0.0; n],
+        }
+    }
+
+    /// Wrap `data` as the output tensor for `port`, attaching the arena
+    /// slot's recycler when the port is planned so the storage returns to
+    /// the pool at last drop. Pass storage from `alloc_f32*` here; heap
+    /// data is also fine (it just won't recycle).
+    pub fn make_output(
+        &self,
+        port: usize,
+        shape: impl Into<Shape>,
+        data: TensorData,
+    ) -> Result<Tensor> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => Tensor::with_buffer(
+                shape,
+                TensorBuffer::recycled(data, m.arena.recycler(slot as usize)),
+            ),
+            None => Tensor::new(shape, data),
+        }
+    }
+
+    /// In-place forwarding: steal input `i`'s f32 storage when the plan
+    /// marks this node as the input's last use *and* this invocation holds
+    /// the only reference to it. Mutate the returned Vec and return
+    /// [`ForwardedF32::into_tensor`] as the output — the output then
+    /// aliases the input's slot instead of taking a new one. Returns
+    /// `None` (inputs untouched) in every other case.
+    pub fn take_forward_f32(&mut self, i: usize) -> Option<ForwardedF32> {
+        let m = self.mem.as_ref()?;
+        if !m.forwardable(i) {
+            return None;
+        }
+        {
+            let t = self.inputs.get(i)?;
+            if t.dtype() != DType::F32 || t.ref_count() != 1 {
+                return None;
+            }
+        }
+        let t = std::mem::replace(&mut self.inputs[i], FORWARD_PLACEHOLDER.clone());
+        match t.try_into_parts() {
+            Ok((shape, TensorData::F32(vec), recycler)) => {
+                if let Some(m) = &self.mem {
+                    m.arena.counters().note_forward(vec.len() * 4);
+                }
+                Some(ForwardedF32 { shape, vec, recycler })
+            }
+            Ok((shape, data, recycler)) => {
+                // Unreachable (dtype checked above), but restore anyway.
+                self.inputs[i] =
+                    Tensor::with_buffer(shape, TensorBuffer::from_parts(data, recycler))
+                        .expect("restoring stolen input");
+                None
+            }
+            Err(t) => {
+                self.inputs[i] = t;
+                None
+            }
+        }
     }
 }
 
@@ -204,6 +341,38 @@ pub fn has_kernel(op: &str, device_type: &str) -> bool {
         .contains_key(&(op.to_string(), device_type.to_lowercase()))
 }
 
+/// Ops whose kernels may write their result over a dying input's storage
+/// (the memory planner's in-place forwarding, layer 3): elementwise math
+/// and `FusedElementwise`. The contract for membership: output shape ==
+/// the forwarded input's shape, every output element depends only on
+/// already-read values, and the kernel actually routes through
+/// `KernelContext::take_forward_f32` (which adds the refcount-1 runtime
+/// guard). Identity-like pass-throughs (`Identity`, `StopGradient`,
+/// `CheckNumerics`) are deliberately *not* members: they return the input
+/// tensor by clone, which already shares storage zero-copy — listing them
+/// would only inflate `forward_candidates` with forwards no kernel takes.
+static FORWARDING_SAFE: Lazy<RwLock<HashSet<&'static str>>> = Lazy::new(|| {
+    RwLock::new(HashSet::from([
+        // binary elementwise (same-shape / scalar-operand fast paths)
+        "Add", "Sub", "Mul", "Div", "Maximum", "Minimum", "Pow",
+        // unary elementwise
+        "Neg", "Exp", "Log", "Sqrt", "Rsqrt", "Abs", "Sign", "Square", "Tanh", "Reciprocal",
+        "ReLU", "Sigmoid",
+        // fused chains (primary operand only)
+        "FusedElementwise",
+    ]))
+});
+
+/// Register `op` as forwarding-safe (extensions adding in-place kernels).
+pub fn register_forwarding_safe(op: &'static str) {
+    FORWARDING_SAFE.write().unwrap().insert(op);
+}
+
+/// May the memory plan mark this op's inputs for in-place forwarding?
+pub fn is_forwarding_safe(op: &str) -> bool {
+    FORWARDING_SAFE.read().unwrap().contains(op)
+}
+
 fn install_cpu_kernels(r: &mut KernelRegistry) {
     math::register(r);
     array::register(r);
@@ -254,6 +423,21 @@ mod tests {
         }
         assert!(!has_kernel("Add", "tpu"));
         assert!(has_kernel("Switch", "anything")); // executor-internal
+    }
+
+    #[test]
+    fn forwarding_registry_defaults_and_extension() {
+        for op in ["Add", "Neg", "Tanh", "FusedElementwise", "ReLU", "Sigmoid"] {
+            assert!(is_forwarding_safe(op), "{op} should be forwarding-safe");
+        }
+        // Shape-changing / stateful ops are not, and neither are the
+        // Identity-likes (their clone pass-through is already zero-copy).
+        for op in ["MatMul", "Sum", "Concat", "Variable", "Assign", "_Fetch", "Switch", "Identity"]
+        {
+            assert!(!is_forwarding_safe(op), "{op} must not be forwarding-safe");
+        }
+        register_forwarding_safe("MyInPlaceOp");
+        assert!(is_forwarding_safe("MyInPlaceOp"));
     }
 
     #[test]

@@ -416,9 +416,14 @@ fn conv_attrs(ctx: &KernelContext) -> Result<(usize, Padding)> {
 }
 
 pub(super) fn register(r: &mut KernelRegistry) {
-    r.add_sync("ReLU", |ctx| Ok(vec![relu(ctx.input(0)?)?]));
+    // ReLU/Sigmoid go through the shared memory-planned map
+    // (`math::planned_unary_map`) with the same scalar functions the
+    // fused interpreter uses, so planned/unplanned/fused all agree.
+    r.add_sync("ReLU", |ctx| Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_relu)?]));
     r.add_sync("ReluGrad", |ctx| Ok(vec![relu_grad(ctx.input(0)?, ctx.input(1)?)?]));
-    r.add_sync("Sigmoid", |ctx| Ok(vec![sigmoid(ctx.input(0)?)?]));
+    r.add_sync("Sigmoid", |ctx| {
+        Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_sigmoid)?])
+    });
     r.add_sync("SoftMax", |ctx| Ok(vec![softmax(ctx.input(0)?)?]));
     r.add_sync("LogSoftmax", |ctx| Ok(vec![log_softmax(ctx.input(0)?)?]));
     r.add_sync("BiasAdd", |ctx| Ok(vec![bias_add(ctx.input(0)?, ctx.input(1)?)?]));

@@ -29,6 +29,7 @@ pub mod error;
 pub mod executor;
 pub mod graph;
 pub mod kernels;
+pub mod memory;
 pub mod ops;
 pub mod optim;
 pub mod partition;

@@ -1,0 +1,326 @@
+//! The step arena: pooled, slot-structured tensor storage executed against
+//! a [`MemoryPlan`](crate::memory::MemoryPlan).
+//!
+//! A [`StepArena`] holds one storage pool per plan *slot*. Kernels check
+//! storage out of their assigned slot ([`StepArena::checkout_f32`]),
+//! write their result into it, and wrap it in a `Tensor` whose
+//! [`TensorBuffer`](crate::tensor::TensorBuffer) carries the slot's
+//! recycler — when the last reference to that tensor drops, the storage
+//! lands back in the slot, ready for the next tenant (a later node of this
+//! step, or the same node next step).
+//!
+//! Reuse is therefore *refcount-driven*: the plan only decides which
+//! endpoints share a slot. If a slot's storage is still referenced when
+//! the next tenant arrives (out-of-order dataflow execution, an escaped
+//! fetch), checkout simply falls back to a fresh allocation — a miss, not
+//! a bug. Nothing ever aliases: the `Mutex<Option<…>>` hand-off gives each
+//! tenant unique ownership of the `Vec`.
+//!
+//! Arenas are pooled per compiled step by [`ArenaPool`]; each `Run`
+//! checks out a whole arena for the duration of the step, so concurrent
+//! steps of one cached signature never share one (asserted at checkout).
+
+use crate::tensor::{BufRecycler, TensorData};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Monotonic counters shared by every arena of one [`ArenaPool`] — the
+/// runtime half of the step's memory report (the static half is
+/// `MemoryPlanStats`).
+#[derive(Debug, Default)]
+pub struct MemCounters {
+    arenas_created: AtomicU64,
+    checkouts: AtomicU64,
+    reuse_hits: AtomicU64,
+    reuse_misses: AtomicU64,
+    bytes_reused: AtomicU64,
+    bytes_fresh: AtomicU64,
+    forwards_taken: AtomicU64,
+    bytes_forwarded: AtomicU64,
+}
+
+/// Point-in-time copy of [`MemCounters`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemSnapshot {
+    /// Distinct arenas ever built for this pool (≥ the max number of
+    /// concurrent steps observed).
+    pub arenas_created: u64,
+    /// Steps that checked an arena out.
+    pub checkouts: u64,
+    /// Slot checkouts served from pooled storage (no heap allocation).
+    pub reuse_hits: u64,
+    /// Slot checkouts that had to allocate fresh storage.
+    pub reuse_misses: u64,
+    pub bytes_reused: u64,
+    pub bytes_fresh: u64,
+    /// In-place kernel forwards taken (output aliased its dying input).
+    pub forwards_taken: u64,
+    pub bytes_forwarded: u64,
+}
+
+impl MemCounters {
+    pub fn snapshot(&self) -> MemSnapshot {
+        MemSnapshot {
+            arenas_created: self.arenas_created.load(Ordering::Relaxed),
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            reuse_hits: self.reuse_hits.load(Ordering::Relaxed),
+            reuse_misses: self.reuse_misses.load(Ordering::Relaxed),
+            bytes_reused: self.bytes_reused.load(Ordering::Relaxed),
+            bytes_fresh: self.bytes_fresh.load(Ordering::Relaxed),
+            forwards_taken: self.forwards_taken.load(Ordering::Relaxed),
+            bytes_forwarded: self.bytes_forwarded.load(Ordering::Relaxed),
+        }
+    }
+
+    pub(crate) fn note_forward(&self, bytes: usize) {
+        self.forwards_taken.fetch_add(1, Ordering::Relaxed);
+        self.bytes_forwarded.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+}
+
+/// One slot's pooled storage plus its shared recycler handle.
+struct Slot {
+    pooled: Mutex<Option<TensorData>>,
+    recycler: Arc<SlotRecycler>,
+}
+
+/// Returns storage to `slot` of `arena` when a tensor's last reference
+/// drops. Holds the arena weakly so an abandoned arena (pool dropped,
+/// escaped fetch outliving the session) frees instead of leaking a cycle.
+struct SlotRecycler {
+    arena: Weak<StepArena>,
+    slot: usize,
+}
+
+impl BufRecycler for SlotRecycler {
+    fn recycle(&self, data: TensorData) {
+        if let Some(arena) = self.arena.upgrade() {
+            let mut pooled = arena.slots[self.slot].pooled.lock().unwrap();
+            if pooled.is_none() {
+                *pooled = Some(data);
+            }
+        }
+    }
+}
+
+/// Slot-structured storage for one executing step.
+pub struct StepArena {
+    slots: Vec<Slot>,
+    counters: Arc<MemCounters>,
+    /// Guard: a pooled arena must never serve two steps at once.
+    in_use: AtomicBool,
+}
+
+impl StepArena {
+    pub fn new(num_slots: usize, counters: Arc<MemCounters>) -> Arc<StepArena> {
+        counters.arenas_created.fetch_add(1, Ordering::Relaxed);
+        Arc::new_cyclic(|weak: &Weak<StepArena>| StepArena {
+            slots: (0..num_slots)
+                .map(|slot| Slot {
+                    pooled: Mutex::new(None),
+                    recycler: Arc::new(SlotRecycler { arena: weak.clone(), slot }),
+                })
+                .collect(),
+            counters,
+            in_use: AtomicBool::new(false),
+        })
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn counters(&self) -> &Arc<MemCounters> {
+        &self.counters
+    }
+
+    /// Check out `slot`'s storage for an f32 result of `n` elements.
+    /// Returns an *empty* Vec with capacity ≥ `n` (callers push exactly
+    /// `n` elements) — pooled when the slot holds suitable storage, fresh
+    /// otherwise.
+    pub fn checkout_f32(&self, slot: usize, n: usize) -> Vec<f32> {
+        let taken = self.slots[slot].pooled.lock().unwrap().take();
+        match taken {
+            Some(TensorData::F32(mut v)) if v.capacity() >= n => {
+                self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_reused.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            _ => {
+                // Empty slot, wrong dtype, or too small: allocate. (A
+                // mismatched pooled Vec is dropped; the slot re-learns its
+                // size from what comes back.)
+                self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_fresh.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                Vec::with_capacity(n)
+            }
+        }
+    }
+
+    /// Like [`StepArena::checkout_f32`] but returned with `len == n`, all
+    /// zeros (for index-written kernels like MatMul).
+    pub fn checkout_f32_zeroed(&self, slot: usize, n: usize) -> Vec<f32> {
+        let mut v = self.checkout_f32(slot, n);
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// The recycler to attach to tensors built over `slot`'s storage.
+    pub fn recycler(&self, slot: usize) -> Arc<dyn BufRecycler> {
+        Arc::clone(&self.slots[slot].recycler) as Arc<dyn BufRecycler>
+    }
+
+    fn begin_step(&self) {
+        assert!(
+            !self.in_use.swap(true, Ordering::SeqCst),
+            "StepArena checked out by two concurrent steps"
+        );
+    }
+
+    fn end_step(&self) {
+        self.in_use.store(false, Ordering::SeqCst);
+    }
+}
+
+impl std::fmt::Debug for StepArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "StepArena({} slots)", self.slots.len())
+    }
+}
+
+/// How many idle arenas a pool keeps; beyond this, returned arenas are
+/// dropped (their pooled storage with them). Bounds memory held by a
+/// signature that once saw a concurrency burst.
+const MAX_POOLED_ARENAS: usize = 8;
+
+/// Per-compiled-step pool of [`StepArena`]s. One arena serves exactly one
+/// in-flight step; concurrent steps get distinct arenas.
+#[derive(Debug)]
+pub struct ArenaPool {
+    num_slots: usize,
+    free: Mutex<Vec<Arc<StepArena>>>,
+    counters: Arc<MemCounters>,
+}
+
+impl ArenaPool {
+    pub fn new(num_slots: usize) -> Arc<ArenaPool> {
+        Arc::new(ArenaPool {
+            num_slots,
+            free: Mutex::new(Vec::new()),
+            counters: Arc::new(MemCounters::default()),
+        })
+    }
+
+    pub fn counters(&self) -> &Arc<MemCounters> {
+        &self.counters
+    }
+
+    /// An arena for one step. Exclusive until [`ArenaPool::checkin`].
+    pub fn checkout(&self) -> Arc<StepArena> {
+        self.counters.checkouts.fetch_add(1, Ordering::Relaxed);
+        let pooled = self.free.lock().unwrap().pop();
+        let arena =
+            pooled.unwrap_or_else(|| StepArena::new(self.num_slots, Arc::clone(&self.counters)));
+        arena.begin_step();
+        arena
+    }
+
+    /// Return a step's arena. Storage the step's tensors have already
+    /// released is retained in the slots; late drops (escaped fetches)
+    /// refill slots whenever they happen.
+    pub fn checkin(&self, arena: Arc<StepArena>) {
+        arena.end_step();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < MAX_POOLED_ARENAS {
+            free.push(arena);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Tensor, TensorBuffer};
+
+    #[test]
+    fn checkout_reuses_recycled_storage() {
+        let pool = ArenaPool::new(2);
+        let arena = pool.checkout();
+        let v = arena.checkout_f32(0, 8);
+        assert_eq!(v.len(), 0);
+        assert!(v.capacity() >= 8);
+        // First checkout is a miss.
+        assert_eq!(pool.counters().snapshot().reuse_misses, 1);
+        // Wrap as a tensor, drop it: storage returns to slot 0.
+        let mut v = v;
+        v.resize(8, 1.5);
+        let t = Tensor::with_buffer(
+            vec![8],
+            TensorBuffer::recycled(TensorData::F32(v), arena.recycler(0)),
+        )
+        .unwrap();
+        drop(t);
+        let v2 = arena.checkout_f32(0, 8);
+        assert!(v2.capacity() >= 8);
+        let snap = pool.counters().snapshot();
+        assert_eq!(snap.reuse_hits, 1);
+        assert_eq!(snap.bytes_reused, 32);
+    }
+
+    #[test]
+    fn live_reference_forces_fresh_allocation() {
+        let pool = ArenaPool::new(1);
+        let arena = pool.checkout();
+        let mut v = arena.checkout_f32(0, 4);
+        v.resize(4, 0.0);
+        let t = Tensor::with_buffer(
+            vec![4],
+            TensorBuffer::recycled(TensorData::F32(v), arena.recycler(0)),
+        )
+        .unwrap();
+        let held = t.clone();
+        drop(t); // one reference still live: no recycle yet
+        let _fresh = arena.checkout_f32(0, 4);
+        assert_eq!(pool.counters().snapshot().reuse_hits, 0);
+        drop(held); // now it lands back in the slot
+        let _reused = arena.checkout_f32(0, 4);
+        assert_eq!(pool.counters().snapshot().reuse_hits, 1);
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_arenas() {
+        let pool = ArenaPool::new(1);
+        let a = pool.checkout();
+        let b = pool.checkout();
+        assert!(!Arc::ptr_eq(&a, &b), "two in-flight steps must not share an arena");
+        pool.checkin(a);
+        pool.checkin(b);
+        // After checkin, pooled arenas are recycled.
+        let c = pool.checkout();
+        pool.checkin(c);
+        assert_eq!(pool.counters().snapshot().arenas_created, 2);
+    }
+
+    #[test]
+    fn dtype_mismatch_falls_back_to_fresh() {
+        let pool = ArenaPool::new(1);
+        let arena = pool.checkout();
+        // Hand back i32 storage into the slot.
+        arena.recycler(0).recycle(TensorData::I32(vec![1, 2, 3]));
+        let v = arena.checkout_f32(0, 2);
+        assert!(v.capacity() >= 2);
+        assert_eq!(pool.counters().snapshot().reuse_hits, 0);
+    }
+
+    #[test]
+    fn abandoned_arena_recycler_is_harmless() {
+        let pool = ArenaPool::new(1);
+        let arena = pool.checkout();
+        let recycler = arena.recycler(0);
+        pool.checkin(arena);
+        drop(pool);
+        // Arena is gone (weak upgrade fails): recycle is a no-op drop.
+        recycler.recycle(TensorData::F32(vec![0.0; 4]));
+    }
+}

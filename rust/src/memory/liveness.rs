@@ -1,0 +1,225 @@
+//! Liveness analysis over a compiled per-device partition (tentpole layer
+//! 1): first-def/last-use intervals per tensor endpoint, plus the pinning
+//! rules that decide which endpoints the planner may manage at all.
+//!
+//! Intervals are positions in a memory-aware serial order of the
+//! partition graph (`passes::schedule::lifetime_shrinking_order`). The
+//! real executor is dataflow-concurrent, so this order is a *schedule
+//! estimate*, not a contract — the arena degrades interval violations to
+//! allocation misses (see `memory::arena`), never to aliasing.
+//!
+//! Pinned (unplannable) endpoints, per the §5 rules:
+//! * control flow — Switch/Merge/Enter/Exit/NextIteration producers,
+//!   anything outside the root frame, loop-invariant captures, and
+//!   producers feeding any of those: their tokens cross iteration state
+//!   the serial order cannot see;
+//! * stateful/variable-backed tensors — `Variable`, `Assign*`/`Apply*`,
+//!   queue ops, `_Send`/`_Recv`, `_Feed` (feeds), plus endpoints
+//!   *consumed* by a stateful op — `_Fetch` (fetches) and `_Send` make a
+//!   tensor escape the step, `Assign` makes it the variable's backing
+//!   store;
+//! * `Const` — its storage is shared with the node's attr across steps.
+
+use crate::error::Result;
+use crate::executor::compile::{CompiledNode, NodeKind};
+use crate::graph::Graph;
+use crate::ops;
+use crate::tensor::{DType, Shape};
+
+/// Per-endpoint facts, indexed `[node][port]`.
+pub struct Liveness {
+    /// Serial schedule estimate used for the intervals.
+    pub pos: Vec<usize>,
+    /// May the planner manage this endpoint's storage?
+    pub plannable: Vec<Vec<bool>>,
+    /// Position of the endpoint's last consumer (== producer position for
+    /// unconsumed outputs).
+    pub last_use: Vec<Vec<usize>>,
+    /// Total (consumer, slot) pairs reading the endpoint.
+    pub consumers: Vec<Vec<usize>>,
+    /// Statically inferred (shape, dtype), where derivable from Const
+    /// roots; `None` = dynamic (known only at run time).
+    pub static_info: Vec<Vec<Option<(Shape, DType)>>>,
+}
+
+impl Liveness {
+    /// Statically known f32 byte size of an endpoint, if any.
+    pub fn static_bytes(&self, node: usize, port: usize) -> Option<usize> {
+        match &self.static_info[node][port] {
+            Some((shape, DType::F32)) => Some(shape.num_elements() * 4),
+            _ => None,
+        }
+    }
+}
+
+/// Is `op`'s output storage pinned by the stateful rule? (Unregistered ops
+/// are conservatively pinned.)
+fn stateful_op(op: &str) -> bool {
+    ops::lookup(op).map(|d| d.stateful).unwrap_or(true)
+}
+
+/// Run the analysis. `nodes` must be the compiled view of `graph` (same
+/// indexing), so frames and node kinds are already resolved.
+pub fn analyze(graph: &Graph, nodes: &[CompiledNode]) -> Result<Liveness> {
+    let order = crate::passes::schedule::lifetime_shrinking_order(graph)?;
+    let mut pos = vec![0usize; nodes.len()];
+    for (i, &id) in order.iter().enumerate() {
+        pos[id.0] = i;
+    }
+
+    let static_info = infer_static_info(graph, nodes, &order);
+
+    let mut plannable: Vec<Vec<bool>> = Vec::with_capacity(nodes.len());
+    let mut last_use: Vec<Vec<usize>> = Vec::with_capacity(nodes.len());
+    let mut consumers: Vec<Vec<usize>> = Vec::with_capacity(nodes.len());
+    for (i, cn) in nodes.iter().enumerate() {
+        let op = cn.info.op.as_str();
+        let producer_ok = matches!(cn.kind, NodeKind::Normal)
+            && cn.frame == 0
+            && !cn.has_invariant_consumers
+            && !stateful_op(op)
+            && op != "Const";
+        // Endpoints *known* to be non-f32 stay on the heap (the kernels'
+        // arena paths are f32-only, so a slot would sit permanently dead);
+        // unknown dtypes may still turn out f32 and get dynamic slots.
+        let known_non_f32 = |port: usize| {
+            matches!(static_info[i].get(port), Some(Some((_, d))) if *d != DType::F32)
+        };
+        let mut node_plan = Vec::with_capacity(cn.out_edges.len());
+        let mut node_last = Vec::with_capacity(cn.out_edges.len());
+        let mut node_cons = Vec::with_capacity(cn.out_edges.len());
+        for (port, edges) in cn.out_edges.iter().enumerate() {
+            let mut ok = producer_ok && !known_non_f32(port);
+            let mut last = pos[i];
+            for &(consumer, _slot) in edges {
+                let c = &nodes[consumer.0];
+                // Consumers that retag, capture, escape, or persist the
+                // tensor pin it (control flow, other frames, _Fetch/_Send,
+                // Assign-family, queue ops).
+                if !matches!(c.kind, NodeKind::Normal)
+                    || c.frame != 0
+                    || stateful_op(&c.info.op)
+                {
+                    ok = false;
+                }
+                last = last.max(pos[consumer.0]);
+            }
+            node_plan.push(ok);
+            node_last.push(last);
+            node_cons.push(edges.len());
+        }
+        plannable.push(node_plan);
+        last_use.push(node_last);
+        consumers.push(node_cons);
+    }
+
+    Ok(Liveness { pos, plannable, last_use, consumers, static_info })
+}
+
+/// Forward static shape/dtype inference from Const roots through the ops
+/// whose output geometry is a pure function of input geometry. Fed or
+/// otherwise-dynamic endpoints stay `None` — the plan gives them
+/// capacity-pooled *dynamic* slots instead of byte-exact offsets.
+fn infer_static_info(
+    graph: &Graph,
+    nodes: &[CompiledNode],
+    order: &[crate::graph::NodeId],
+) -> Vec<Vec<Option<(Shape, DType)>>> {
+    let mut info: Vec<Vec<Option<(Shape, DType)>>> =
+        nodes.iter().map(|cn| vec![None; cn.out_edges.len().max(1)]).collect();
+    fn input_info(
+        nodes: &[CompiledNode],
+        info: &[Vec<Option<(Shape, DType)>>],
+        i: usize,
+        slot: usize,
+    ) -> Option<(Shape, DType)> {
+        nodes[i]
+            .inputs
+            .get(slot)
+            .and_then(|e| info[e.node.0].get(e.port).cloned().flatten())
+    }
+    for &id in order {
+        let i = id.0;
+        let n = graph.node(id);
+        let out: Option<(Shape, DType)> = match n.op.as_str() {
+            "Const" => n
+                .attr_opt("value")
+                .and_then(|a| a.as_tensor().ok())
+                .map(|t| (t.shape().clone(), t.dtype())),
+            // Shape-preserving unary ops.
+            "Neg" | "Exp" | "Log" | "Sqrt" | "Rsqrt" | "Abs" | "Sign" | "Square" | "Tanh"
+            | "Reciprocal" | "ReLU" | "Sigmoid" | "Identity" | "StopGradient"
+            | "CheckNumerics" => input_info(nodes, &info, i, 0),
+            "Cast" => match (input_info(nodes, &info, i, 0), n.attr_opt("DstT")) {
+                (Some((shape, _)), Some(a)) => a.as_type().ok().map(|d| (shape, d)),
+                _ => None,
+            },
+            "Add" | "Sub" | "Mul" | "Div" | "Maximum" | "Minimum" | "Pow" => {
+                match (input_info(nodes, &info, i, 0), input_info(nodes, &info, i, 1)) {
+                    (Some((a, d)), Some((b, _))) => a.broadcast(&b).ok().map(|s| (s, d)),
+                    _ => None,
+                }
+            }
+            // AddN broadcasts across all inputs (its kernel folds through
+            // binary Add), so the output is the broadcast of every input.
+            "AddN" => {
+                let mut acc = input_info(nodes, &info, i, 0);
+                for slot in 1..nodes[i].inputs.len() {
+                    acc = match (acc, input_info(nodes, &info, i, slot)) {
+                        (Some((a, d)), Some((b, _))) => {
+                            a.broadcast(&b).ok().map(|s| (s, d))
+                        }
+                        _ => None,
+                    };
+                }
+                acc
+            }
+            "Select" => input_info(nodes, &info, i, 1),
+            // Comparisons/logical ops produce Bool — inferred so the
+            // planner can *pin* them (non-f32 endpoints stay on the heap).
+            "Greater" | "Less" | "Equal" | "NotEqual" | "GreaterEqual" | "LessEqual"
+            | "LogicalAnd" | "LogicalOr" => {
+                match (input_info(nodes, &info, i, 0), input_info(nodes, &info, i, 1)) {
+                    (Some((a, _)), Some((b, _))) => {
+                        a.broadcast(&b).ok().map(|s| (s, DType::Bool))
+                    }
+                    _ => None,
+                }
+            }
+            "LogicalNot" => {
+                input_info(nodes, &info, i, 0).map(|(s, _)| (s, DType::Bool))
+            }
+            "FusedElementwise" => {
+                // Output is primary-shaped when every extra broadcasts up
+                // to (a prefix-compatible subset of) the primary.
+                input_info(nodes, &info, i, 0).filter(|(primary, _)| {
+                    (1..nodes[i].inputs.len()).all(|slot| {
+                        input_info(nodes, &info, i, slot).is_some_and(|(extra, d)| {
+                            d == DType::F32
+                                && primary.broadcast(&extra).map(|s| &s == primary).unwrap_or(false)
+                        })
+                    })
+                })
+            }
+            "MatMul" => {
+                let ta = n.attr_opt("transpose_a").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+                let tb = n.attr_opt("transpose_b").and_then(|a| a.as_bool().ok()).unwrap_or(false);
+                match (input_info(nodes, &info, i, 0), input_info(nodes, &info, i, 1)) {
+                    (Some((a, d)), Some((b, _))) if a.rank() == 2 && b.rank() == 2 => {
+                        let m = if ta { a.dim(1) } else { a.dim(0) };
+                        let n_ = if tb { b.dim(0) } else { b.dim(1) };
+                        Some((Shape(vec![m, n_]), d))
+                    }
+                    _ => None,
+                }
+            }
+            _ => None,
+        };
+        if let Some(v) = out {
+            if !info[i].is_empty() {
+                info[i][0] = Some(v);
+            }
+        }
+    }
+    info
+}

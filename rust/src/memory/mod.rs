@@ -1,0 +1,57 @@
+//! The step memory planner (whitepaper §5, §9): turn a compiled step into
+//! a static memory plan and execute against it, so a cached serving step
+//! stops paying the allocator for every intermediate of every node of
+//! every run.
+//!
+//! The whitepaper credits much of TensorFlow's single-step speed to
+//! memory-aware execution — §5.2 schedules Receive nodes to shrink tensor
+//! residency, and the §9.2 EEG traces were used to find allocation hot
+//! spots; the OSDI'16 follow-up describes the production runtime's planned
+//! buffer reuse and in-place kernels. This module is that subsystem for
+//! our runtime, in three layers:
+//!
+//! 1. **[`liveness`]** — first-def/last-use intervals per tensor endpoint
+//!    over the post-optimizer, post-placement partition graph, with feeds,
+//!    fetches, control flow, and stateful/variable-backed tensors pinned
+//!    as unplannable.
+//! 2. **[`plan`] + [`arena`]** — a first-fit-by-offset assignment of
+//!    planned endpoints into one per-device step arena ([`MemoryPlan`]),
+//!    executed by pooled slot storage ([`StepArena`] / [`ArenaPool`])
+//!    handed to kernels through `KernelContext`. Tensors over arena
+//!    storage are ordinary `Tensor`s whose
+//!    [`TensorBuffer`](crate::tensor::TensorBuffer) returns the storage to
+//!    its slot on last drop.
+//! 3. **in-place forwarding** — when a planned input's interval ends at a
+//!    node, the plan read exactly one use, and the kernel is registered
+//!    forwarding-safe (`kernels::is_forwarding_safe` — elementwise math
+//!    and `FusedElementwise`; Identity-likes already pass through
+//!    zero-copy), the kernel writes
+//!    its result over the input's storage instead of taking a new buffer
+//!    (`KernelContext::take_forward_f32`), guarded by refcount 1 at run
+//!    time.
+//!
+//! The plan is computed once in `Session::build_step` (gated by
+//! `SessionOptions::enable_memory_planning`, default on), cached with the
+//! step, and reported as [`MemoryPlanStats`] + [`MemSnapshot`] via
+//! `Session::memory_stats` beside `optimizer_stats`. Correctness never
+//! depends on the plan: slot checkout falls back to a fresh heap
+//! allocation whenever pooled storage is still referenced, and forwarding
+//! requires unique ownership — a wrong interval costs a miss, not a value.
+
+pub mod arena;
+pub mod liveness;
+pub mod plan;
+
+pub use arena::{ArenaPool, MemCounters, MemSnapshot, StepArena};
+pub use plan::{plan_partition, MemoryPlan, MemoryPlanStats};
+
+/// One executor's memory report: the build-time plan stats plus the
+/// runtime arena counters accumulated across every run of the cached
+/// step. Returned by `Session::memory_stats`.
+#[derive(Debug, Clone)]
+pub struct MemoryReport {
+    /// Device the partition runs on.
+    pub device: String,
+    pub plan: MemoryPlanStats,
+    pub runtime: MemSnapshot,
+}

@@ -1,0 +1,191 @@
+//! The static memory plan (tentpole layer 2): assign plannable endpoints
+//! to arena *slots* by first-fit-by-offset over their liveness intervals,
+//! and mark the inputs eligible for in-place kernel forwarding (layer 3).
+//!
+//! Endpoints with statically known f32 shapes get byte-exact *static*
+//! slots: the classic first-fit-by-offset packing — walk existing slots in
+//! arena-offset order, take the first one that is free over the endpoint's
+//! interval and large enough, else append a new slot at the arena's
+//! current end. `arena_bytes` (the packed footprint) vs `naive_bytes`
+//! (one allocation per endpoint, what the unplanned executor does) is the
+//! headline stat. Endpoints that are plannable but dynamically shaped
+//! (anything downstream of a feed) get *dynamic* slots: the same interval
+//! packing with sizes unknown — their pooled buffers grow to the
+//! high-water mark at run time. Everything else stays on the heap.
+
+use crate::error::Result;
+use crate::executor::compile::CompiledNode;
+use crate::graph::Graph;
+use crate::kernels::is_forwarding_safe;
+use crate::memory::liveness;
+
+/// `MemoryPlanStats`: the build-time report surfaced beside
+/// `Session::optimizer_stats` (runtime counters live in
+/// [`MemSnapshot`](crate::memory::MemSnapshot)).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryPlanStats {
+    /// Endpoints assigned byte-exact static slots.
+    pub planned_static: usize,
+    /// Endpoints assigned capacity-pooled dynamic slots.
+    pub planned_dynamic: usize,
+    /// Endpoints pinned to the heap (feeds, fetches, control flow,
+    /// stateful, non-f32).
+    pub unplanned: usize,
+    pub num_slots: usize,
+    /// Packed footprint of the static slots.
+    pub arena_bytes: usize,
+    /// Sum of static endpoint sizes (the naive one-buffer-per-endpoint
+    /// cost the packing is measured against).
+    pub naive_bytes: usize,
+    /// Input slots marked eligible for in-place forwarding.
+    pub forward_candidates: usize,
+}
+
+/// The per-partition plan, computed once per cached step and shared by
+/// every run of it.
+#[derive(Debug, Default)]
+pub struct MemoryPlan {
+    /// `[node][port]` → arena slot, `None` = heap.
+    out_slots: Vec<Vec<Option<u32>>>,
+    /// `[node][input slot]` → may alias the input's storage in place.
+    forward_inputs: Vec<Vec<bool>>,
+    pub stats: MemoryPlanStats,
+}
+
+impl MemoryPlan {
+    /// Total arena slots (static + dynamic) the plan assigns.
+    pub fn num_slots(&self) -> usize {
+        self.stats.num_slots
+    }
+
+    pub fn out_slot(&self, node: usize, port: usize) -> Option<u32> {
+        self.out_slots.get(node).and_then(|p| p.get(port)).copied().flatten()
+    }
+
+    pub fn input_forwardable(&self, node: usize, slot: usize) -> bool {
+        self.forward_inputs.get(node).and_then(|f| f.get(slot)).copied().unwrap_or(false)
+    }
+}
+
+/// A slot under assignment: free again once `free_after` has executed.
+/// Slots live in creation order, which *is* offset order (each new slot
+/// starts at the running `arena_end`), so index order == offset order.
+struct SlotState {
+    size: usize,
+    free_after: usize,
+}
+
+/// Compute the plan for one compiled partition. `nodes` must index the
+/// same graph (as produced inside `CompiledGraph::compile`).
+pub fn plan_partition(graph: &Graph, nodes: &[CompiledNode]) -> Result<MemoryPlan> {
+    let lv = liveness::analyze(graph, nodes)?;
+    let mut stats = MemoryPlanStats::default();
+    let mut out_slots: Vec<Vec<Option<u32>>> =
+        nodes.iter().map(|cn| vec![None; cn.out_edges.len()]).collect();
+
+    // Endpoints in def order — the first-fit scan must see tenants in the
+    // order the schedule estimate creates them.
+    let mut endpoints: Vec<(usize, usize)> = Vec::new();
+    for (i, cn) in nodes.iter().enumerate() {
+        for port in 0..cn.out_edges.len() {
+            if lv.plannable[i][port] {
+                endpoints.push((i, port));
+            } else {
+                stats.unplanned += 1;
+            }
+        }
+    }
+    endpoints.sort_by_key(|&(i, _)| lv.pos[i]);
+
+    let mut static_slots: Vec<SlotState> = Vec::new();
+    let mut dynamic_slots: Vec<SlotState> = Vec::new();
+    let mut arena_end = 0usize;
+    for &(i, port) in &endpoints {
+        let def = lv.pos[i];
+        let last = lv.last_use[i][port];
+        match lv.static_bytes(i, port) {
+            Some(bytes) => {
+                stats.planned_static += 1;
+                stats.naive_bytes += bytes;
+                // First fit by offset: slots are appended in offset order,
+                // so a linear scan visits lowest offsets first.
+                let k = match static_slots
+                    .iter()
+                    .position(|s| s.free_after < def && s.size >= bytes)
+                {
+                    Some(k) => {
+                        static_slots[k].free_after = last;
+                        k
+                    }
+                    None => {
+                        static_slots.push(SlotState { size: bytes, free_after: last });
+                        arena_end += bytes;
+                        static_slots.len() - 1
+                    }
+                };
+                out_slots[i][port] = Some(k as u32);
+            }
+            None => {
+                stats.planned_dynamic += 1;
+                let k = match dynamic_slots.iter().position(|s| s.free_after < def) {
+                    Some(k) => {
+                        dynamic_slots[k].free_after = last;
+                        k
+                    }
+                    None => {
+                        dynamic_slots.push(SlotState { size: 0, free_after: last });
+                        dynamic_slots.len() - 1
+                    }
+                };
+                // Dynamic slots are numbered after every static slot (the
+                // static count is final only once all endpoints are seen,
+                // so park them high and renumber below).
+                out_slots[i][port] = Some(u32::MAX - k as u32);
+            }
+        }
+    }
+    // Renumber dynamic slots into [num_static, num_static + num_dynamic).
+    let num_static = static_slots.len();
+    for row in &mut out_slots {
+        for s in row.iter_mut() {
+            if let Some(v) = *s {
+                if v > u32::MAX / 2 {
+                    *s = Some(num_static as u32 + (u32::MAX - v));
+                }
+            }
+        }
+    }
+    stats.num_slots = num_static + dynamic_slots.len();
+    stats.arena_bytes = arena_end;
+
+    // ---- in-place forwarding marks (layer 3) ----------------------------
+    // An input may be written in place when: its endpoint is planned, this
+    // node is its interval's end, it is the *only* read of the endpoint
+    // (two reads by one node mean two live aliases), and the kernel is
+    // registered forwarding-safe. The executor still requires refcount 1
+    // at run time, so these marks are candidates, never promises.
+    let mut forward_inputs: Vec<Vec<bool>> =
+        nodes.iter().map(|cn| vec![false; cn.inputs.len()]).collect();
+    for (i, cn) in nodes.iter().enumerate() {
+        if !is_forwarding_safe(&cn.info.op) {
+            continue;
+        }
+        for (slot, e) in cn.inputs.iter().enumerate() {
+            let planned = out_slots
+                .get(e.node.0)
+                .and_then(|p| p.get(e.port))
+                .copied()
+                .flatten()
+                .is_some();
+            if planned
+                && lv.last_use[e.node.0][e.port] == lv.pos[i]
+                && lv.consumers[e.node.0][e.port] == 1
+            {
+                forward_inputs[i][slot] = true;
+                stats.forward_candidates += 1;
+            }
+        }
+    }
+
+    Ok(MemoryPlan { out_slots, forward_inputs, stats })
+}

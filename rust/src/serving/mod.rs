@@ -36,6 +36,14 @@
 //! reported as an error to every request in the batch rather than
 //! silently mis-split.
 //!
+//! Because every batch a lane forms replays one cached `Session` step,
+//! lanes also inherit the step memory planner (`crate::memory`,
+//! `SessionOptions::enable_memory_planning`): the cached step's arena
+//! pool is reused across batched steps of the same signature, so after
+//! warmup a lane's intermediates come out of pooled slots (dynamic
+//! slots grow to the high-water batch size) instead of the allocator.
+//! [`ModelServer::memory_stats`] exposes the per-lane reuse counters.
+//!
 //! ```no_run
 //! use rustflow::serving::{BatchConfig, ModelServer};
 //! use rustflow::{GraphBuilder, Session, SessionOptions, Tensor, DType};

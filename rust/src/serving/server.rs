@@ -97,6 +97,21 @@ impl ModelServer {
         }
     }
 
+    /// Memory reports of one lane's cached step (`Session::memory_stats`
+    /// for the lane's `(feeds, fetches)` signature). Every batch a lane
+    /// forms runs the same cached executable, so its step arenas are
+    /// reused across batched steps — after warmup, `runtime.reuse_hits`
+    /// should dominate `reuse_misses` even though batch sizes vary (the
+    /// planner's dynamic slots grow to the high-water batch). `None`
+    /// until the lane has executed its first batch.
+    pub fn memory_stats(
+        &self,
+        feeds: &[&str],
+        fetches: &[&str],
+    ) -> Option<Vec<crate::memory::MemoryReport>> {
+        self.session.memory_stats(feeds, fetches, &[])
+    }
+
     /// Stop accepting requests, drain the lanes, and join the scheduler
     /// threads. Requests already admitted are executed; requests admitted
     /// concurrently with shutdown may be cancelled. Idempotent.

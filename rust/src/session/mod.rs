@@ -42,6 +42,10 @@ pub struct SessionOptions {
     pub enable_elementwise_fusion: bool,
     /// §5.2 Recv scheduling pass on partitions.
     pub enable_recv_scheduling: bool,
+    /// §5/§9 step memory planner (`crate::memory`): liveness-based arena
+    /// buffer reuse and in-place kernel forwarding, planned once per
+    /// cached step.
+    pub enable_memory_planning: bool,
     pub partition: PartitionOptions,
     pub cost_model: CostModel,
     /// Collect §9.2 traces for every step.
@@ -58,6 +62,7 @@ impl Default for SessionOptions {
             enable_cse: true,
             enable_elementwise_fusion: true,
             enable_recv_scheduling: true,
+            enable_memory_planning: true,
             partition: PartitionOptions::default(),
             cost_model: CostModel::new(),
             trace: false,
@@ -284,6 +289,37 @@ impl Session {
             .map(|c| c.optimizer.clone())
     }
 
+    /// Memory reports of the cached step for a signature, one per
+    /// partition executor: the build-time `MemoryPlanStats` beside the
+    /// runtime arena counters accumulated over every run so far. `None`
+    /// when the signature is not cached; empty plan stats when
+    /// `enable_memory_planning` is off.
+    pub fn memory_stats(
+        &self,
+        feeds: &[&str],
+        fetches: &[&str],
+        targets: &[&str],
+    ) -> Option<Vec<crate::memory::MemoryReport>> {
+        self.cache
+            .lock()
+            .unwrap()
+            .get(&run_signature(feeds, fetches, targets))
+            .map(|c| {
+                c.executors
+                    .iter()
+                    .map(|cg| crate::memory::MemoryReport {
+                        device: cg.device.name(),
+                        plan: cg.plan.as_ref().map(|p| p.stats.clone()).unwrap_or_default(),
+                        runtime: cg
+                            .arena_pool
+                            .as_ref()
+                            .map(|p| p.counters().snapshot())
+                            .unwrap_or_default(),
+                    })
+                    .collect()
+            })
+    }
+
     /// Stats of the cached step for a signature (experiments use this).
     pub fn step_stats(
         &self,
@@ -332,7 +368,11 @@ impl Session {
             .into_iter()
             .map(|p| {
                 let device = self.devices.find_by_name(&p.device)?;
-                CompiledGraph::compile(&p.graph, device)
+                CompiledGraph::compile_planned(
+                    &p.graph,
+                    device,
+                    self.options.enable_memory_planning,
+                )
             })
             .collect::<Result<Vec<_>>>()?;
 

@@ -1,0 +1,164 @@
+//! The refcounted tensor backing store, factored out of [`Tensor`](crate::tensor::Tensor) so the
+//! step memory planner (`crate::memory`) can recycle element storage.
+//!
+//! A [`TensorBuffer`] is an `Arc<TensorData>` plus an optional *recycler*
+//! hook. Plain tensors (`TensorBuffer::owned`) behave exactly as before:
+//! clones share the store, and the store is freed when the last clone
+//! drops. Arena-backed tensors (`TensorBuffer::recycled`) instead hand
+//! their storage back to the step arena slot they were carved from when
+//! the last reference drops, so the next step (or a later node of the same
+//! step) reuses the allocation instead of hitting the heap. Either way a
+//! `Tensor` is a zero-copy view; kernels never need to know which kind
+//! they were given.
+//!
+//! Recycling is driven purely by the refcount: storage returns to its slot
+//! only once *no* reference remains, so a tensor that escapes the step (a
+//! fetch held by a client, a queued element) simply delays reuse — it can
+//! never be observed changing underneath a live view.
+
+use super::TensorData;
+use std::sync::Arc;
+
+/// Destination for storage whose last reference dropped. Implemented by
+/// the step arena's slots (`crate::memory::StepArena`).
+pub trait BufRecycler: Send + Sync {
+    fn recycle(&self, data: TensorData);
+}
+
+/// Refcounted element storage with an optional return-to-arena hook.
+pub struct TensorBuffer {
+    /// `Some` until drop (taken in `Drop`/`try_take`).
+    data: Option<Arc<TensorData>>,
+    recycler: Option<Arc<dyn BufRecycler>>,
+}
+
+impl TensorBuffer {
+    /// Plain heap-owned storage (the default everywhere).
+    pub fn owned(data: TensorData) -> TensorBuffer {
+        TensorBuffer { data: Some(Arc::new(data)), recycler: None }
+    }
+
+    /// Storage that returns to `recycler` when the last reference drops.
+    pub fn recycled(data: TensorData, recycler: Arc<dyn BufRecycler>) -> TensorBuffer {
+        TensorBuffer { data: Some(Arc::new(data)), recycler: Some(recycler) }
+    }
+
+    /// Rebuild from parts taken by [`TensorBuffer::try_take`] (the
+    /// in-place-forwarding path re-wraps mutated storage this way,
+    /// preserving the recycler).
+    pub fn from_parts(data: TensorData, recycler: Option<Arc<dyn BufRecycler>>) -> TensorBuffer {
+        TensorBuffer { data: Some(Arc::new(data)), recycler }
+    }
+
+    pub fn data(&self) -> &TensorData {
+        self.data.as_ref().expect("TensorBuffer accessed after take")
+    }
+
+    /// Outstanding references to the backing store.
+    pub fn strong_count(&self) -> usize {
+        self.data.as_ref().map(Arc::strong_count).unwrap_or(0)
+    }
+
+    pub fn recycler(&self) -> Option<&Arc<dyn BufRecycler>> {
+        self.recycler.as_ref()
+    }
+
+    /// Take unique ownership of the storage (plus the recycler, so a
+    /// rebuilt buffer keeps returning to its slot). Fails — returning the
+    /// buffer unchanged — when any other reference exists, which makes
+    /// in-place mutation of the extracted storage safe by construction.
+    pub fn try_take(
+        mut self,
+    ) -> std::result::Result<(TensorData, Option<Arc<dyn BufRecycler>>), TensorBuffer> {
+        let arc = self.data.take().expect("TensorBuffer accessed after take");
+        match Arc::try_unwrap(arc) {
+            Ok(owned) => Ok((owned, self.recycler.take())),
+            Err(shared) => {
+                self.data = Some(shared);
+                Err(self)
+            }
+        }
+    }
+}
+
+impl Clone for TensorBuffer {
+    fn clone(&self) -> TensorBuffer {
+        TensorBuffer { data: self.data.clone(), recycler: self.recycler.clone() }
+    }
+}
+
+impl Drop for TensorBuffer {
+    fn drop(&mut self) {
+        if let (Some(arc), Some(recycler)) = (self.data.take(), self.recycler.take()) {
+            if let Ok(owned) = Arc::try_unwrap(arc) {
+                recycler.recycle(owned);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for TensorBuffer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TensorBuffer")
+            .field("data", &self.data)
+            .field("recycled", &self.recycler.is_some())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[derive(Default)]
+    struct Sink {
+        got: Mutex<Vec<TensorData>>,
+    }
+
+    impl BufRecycler for Sink {
+        fn recycle(&self, data: TensorData) {
+            self.got.lock().unwrap().push(data);
+        }
+    }
+
+    #[test]
+    fn owned_buffer_never_recycles() {
+        let b = TensorBuffer::owned(TensorData::F32(vec![1.0, 2.0]));
+        assert_eq!(b.strong_count(), 1);
+        let c = b.clone();
+        assert_eq!(b.strong_count(), 2);
+        drop(c);
+        drop(b); // no panic, nothing to observe
+    }
+
+    #[test]
+    fn recycled_buffer_returns_on_last_drop() {
+        let sink = Arc::new(Sink::default());
+        let b = TensorBuffer::recycled(TensorData::F32(vec![7.0; 4]), sink.clone());
+        let c = b.clone();
+        drop(b);
+        assert!(sink.got.lock().unwrap().is_empty(), "recycled while a clone was live");
+        drop(c);
+        let got = sink.got.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], TensorData::F32(vec![7.0; 4]));
+    }
+
+    #[test]
+    fn try_take_requires_unique_ownership() {
+        let sink = Arc::new(Sink::default());
+        let b = TensorBuffer::recycled(TensorData::F32(vec![1.0]), sink.clone());
+        let c = b.clone();
+        let b = b.try_take().expect_err("shared buffer must not be takeable");
+        drop(c);
+        let (data, recycler) = b.try_take().expect("unique now");
+        assert_eq!(data, TensorData::F32(vec![1.0]));
+        assert!(recycler.is_some());
+        // Nothing was recycled: ownership moved out instead.
+        assert!(sink.got.lock().unwrap().is_empty());
+        // Rebuilding from parts restores the recycler chain.
+        drop(TensorBuffer::from_parts(data, recycler));
+        assert_eq!(sink.got.lock().unwrap().len(), 1);
+    }
+}

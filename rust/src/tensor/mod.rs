@@ -4,10 +4,12 @@
 //! remain") — here an `Arc<TensorData>`, so tensor clones and Send/Recv
 //! handoffs never copy element data.
 
+pub mod buffer;
 pub mod codec;
 pub mod dtype;
 pub mod shape;
 
+pub use buffer::{BufRecycler, TensorBuffer};
 pub use dtype::DType;
 pub use shape::Shape;
 
@@ -64,22 +66,28 @@ impl TensorData {
 #[derive(Debug, Clone)]
 pub struct Tensor {
     shape: Shape,
-    data: Arc<TensorData>,
+    buf: TensorBuffer,
 }
 
 impl Tensor {
     // ---- constructors -------------------------------------------------
 
     pub fn new(shape: impl Into<Shape>, data: TensorData) -> Result<Tensor> {
+        Tensor::with_buffer(shape, TensorBuffer::owned(data))
+    }
+
+    /// Construct over an existing buffer (possibly arena-recycled; see
+    /// [`TensorBuffer`]). The shape must match the element count.
+    pub fn with_buffer(shape: impl Into<Shape>, buf: TensorBuffer) -> Result<Tensor> {
         let shape = shape.into();
-        if shape.num_elements() != data.len() {
+        if shape.num_elements() != buf.data().len() {
             return Err(Status::invalid_argument(format!(
                 "shape {shape} needs {} elements, data has {}",
                 shape.num_elements(),
-                data.len()
+                buf.data().len()
             )));
         }
-        Ok(Tensor { shape, data: Arc::new(data) })
+        Ok(Tensor { shape, buf })
     }
 
     pub fn from_f32(shape: impl Into<Shape>, v: Vec<f32>) -> Result<Tensor> {
@@ -153,7 +161,7 @@ impl Tensor {
     }
 
     pub fn dtype(&self) -> DType {
-        self.data.dtype()
+        self.data().dtype()
     }
 
     pub fn num_elements(&self) -> usize {
@@ -163,72 +171,86 @@ impl Tensor {
     /// Approximate size in bytes (what the §3.2.1 cost model and §5.5
     /// compression accounting use).
     pub fn size_bytes(&self) -> usize {
-        match &*self.data {
+        match self.data() {
             TensorData::Str(v) => v.iter().map(|s| s.len() + 8).sum(),
             d => d.len() * d.dtype().size_bytes(),
         }
     }
 
     pub fn data(&self) -> &TensorData {
-        &self.data
+        self.buf.data()
     }
 
     /// Number of outstanding references to the backing store.
     pub fn ref_count(&self) -> usize {
-        Arc::strong_count(&self.data)
+        self.buf.strong_count()
+    }
+
+    /// Take unique ownership of shape, storage, and recycler hook. Fails
+    /// (returning `self` unchanged) when any other reference to the
+    /// backing store exists — the guard that makes the executor's in-place
+    /// kernel forwarding safe.
+    pub fn try_into_parts(
+        self,
+    ) -> std::result::Result<(Shape, TensorData, Option<Arc<dyn BufRecycler>>), Tensor> {
+        let Tensor { shape, buf } = self;
+        match buf.try_take() {
+            Ok((data, recycler)) => Ok((shape, data, recycler)),
+            Err(buf) => Err(Tensor { shape, buf }),
+        }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
-        match &*self.data {
+        match self.data() {
             TensorData::F32(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected float32, got {}", d.dtype()))),
         }
     }
 
     pub fn as_f64(&self) -> Result<&[f64]> {
-        match &*self.data {
+        match self.data() {
             TensorData::F64(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected float64, got {}", d.dtype()))),
         }
     }
 
     pub fn as_i32(&self) -> Result<&[i32]> {
-        match &*self.data {
+        match self.data() {
             TensorData::I32(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected int32, got {}", d.dtype()))),
         }
     }
 
     pub fn as_i64(&self) -> Result<&[i64]> {
-        match &*self.data {
+        match self.data() {
             TensorData::I64(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected int64, got {}", d.dtype()))),
         }
     }
 
     pub fn as_u8(&self) -> Result<&[u8]> {
-        match &*self.data {
+        match self.data() {
             TensorData::U8(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected uint8, got {}", d.dtype()))),
         }
     }
 
     pub fn as_bool(&self) -> Result<&[bool]> {
-        match &*self.data {
+        match self.data() {
             TensorData::Bool(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected bool, got {}", d.dtype()))),
         }
     }
 
     pub fn as_str_slice(&self) -> Result<&[String]> {
-        match &*self.data {
+        match self.data() {
             TensorData::Str(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected string, got {}", d.dtype()))),
         }
     }
 
     pub fn as_bf16_raw(&self) -> Result<&[u16]> {
-        match &*self.data {
+        match self.data() {
             TensorData::BF16(v) => Ok(v),
             d => Err(Status::invalid_argument(format!("expected bfloat16, got {}", d.dtype()))),
         }
@@ -285,7 +307,7 @@ impl Tensor {
     pub fn reshape(&self, shape: impl Into<Shape>) -> Result<Tensor> {
         let shape = shape.into();
         self.shape.check_same_elements(&shape)?;
-        Ok(Tensor { shape, data: Arc::clone(&self.data) })
+        Ok(Tensor { shape, buf: self.buf.clone() })
     }
 
     /// Cast between numeric dtypes (copies).
@@ -293,7 +315,7 @@ impl Tensor {
         if to == self.dtype() {
             return Ok(self.clone());
         }
-        let f64s: Vec<f64> = match &*self.data {
+        let f64s: Vec<f64> = match self.data() {
             TensorData::F32(v) => v.iter().map(|&x| x as f64).collect(),
             TensorData::F64(v) => v.clone(),
             TensorData::I32(v) => v.iter().map(|&x| x as f64).collect(),
@@ -329,7 +351,7 @@ impl Tensor {
         if self.shape != other.shape || self.dtype() != other.dtype() {
             return false;
         }
-        match (&*self.data, &*other.data) {
+        match (self.data(), other.data()) {
             (TensorData::F32(a), TensorData::F32(b)) => a
                 .iter()
                 .zip(b)
@@ -420,7 +442,7 @@ impl Tensor {
         for &r in rows {
             let mut dims = vec![r];
             dims.extend_from_slice(&self.shape.dims()[1..]);
-            let data = slice_data(&self.data, start * row_size, r * row_size);
+            let data = slice_data(self.data(), start * row_size, r * row_size);
             out.push(Tensor::new(dims, data)?);
             start += r;
         }
@@ -439,7 +461,7 @@ impl Tensor {
         let row_size: usize = trailing.iter().product();
         (0..self.shape.dim(0))
             .map(|i| {
-                let data = slice_data(&self.data, i * row_size, row_size);
+                let data = slice_data(self.data(), i * row_size, row_size);
                 Tensor::new(trailing.clone(), data)
             })
             .collect()
@@ -448,7 +470,7 @@ impl Tensor {
     /// Any non-finite float elements? (§6 lesson 5 "guard against
     /// numerical errors" — the CheckNumerics op uses this.)
     pub fn has_non_finite(&self) -> bool {
-        match &*self.data {
+        match self.data() {
             TensorData::F32(v) => v.iter().any(|x| !x.is_finite()),
             TensorData::F64(v) => v.iter().any(|x| !x.is_finite()),
             _ => false,
@@ -462,7 +484,7 @@ fn concat_data(parts: &[Tensor]) -> Result<TensorData> {
         ($variant:ident) => {{
             let mut out = Vec::with_capacity(parts.iter().map(|p| p.num_elements()).sum());
             for p in parts {
-                match &*p.data {
+                match p.data() {
                     TensorData::$variant(v) => out.extend_from_slice(v),
                     other => {
                         return Err(Status::invalid_argument(format!(
@@ -476,7 +498,7 @@ fn concat_data(parts: &[Tensor]) -> Result<TensorData> {
             TensorData::$variant(out)
         }};
     }
-    Ok(match &*parts[0].data {
+    Ok(match parts[0].data() {
         TensorData::F32(_) => cat!(F32),
         TensorData::F64(_) => cat!(F64),
         TensorData::I32(_) => cat!(I32),
@@ -511,7 +533,7 @@ fn close(x: f64, y: f64, atol: f64, rtol: f64) -> bool {
 
 impl PartialEq for Tensor {
     fn eq(&self, other: &Self) -> bool {
-        self.shape == other.shape && self.data == other.data
+        self.shape == other.shape && self.data() == other.data()
     }
 }
 

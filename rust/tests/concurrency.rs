@@ -134,3 +134,68 @@ fn served_batched_results_match_direct_session_runs() {
     assert!(stats.batches >= 1);
     server.shutdown();
 }
+
+#[test]
+fn concurrent_planned_steps_never_share_an_arena() {
+    // Memory planning on (the default), many concurrent steps of one
+    // cached signature. The arena pool asserts at checkout that no arena
+    // serves two in-flight steps at once — a violation panics the step
+    // and fails this test — and every result must match the sequential
+    // expectation (shared arenas would corrupt intermediates).
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let c = b.scalar(0.5);
+    let mut h = x;
+    for _ in 0..8 {
+        let m = b.mul(h, c);
+        h = b.tanh(m);
+    }
+    let name = format!("{}:0", b.graph.node(h.node).name);
+    let sess = Arc::new(Session::new(
+        b.into_graph(),
+        SessionOptions { enable_elementwise_fusion: false, ..Default::default() },
+    ));
+    let expect_of = |v: f32| -> f32 {
+        let mut h = v;
+        for _ in 0..8 {
+            h = (h * 0.5).tanh();
+        }
+        h
+    };
+    sess.run(&[("x", Tensor::fill_f32(vec![64], 1.0))], &[&name], &[]).unwrap();
+
+    let mut handles = Vec::new();
+    for t in 0..8u32 {
+        let sess = Arc::clone(&sess);
+        let name = name.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..50u32 {
+                let v = ((t * 50 + i) % 17) as f32 * 0.1;
+                let out = sess
+                    .run(&[("x", Tensor::fill_f32(vec![64], v))], &[&name], &[])
+                    .unwrap();
+                let got = out[0].as_f32().unwrap();
+                let want = expect_of(v);
+                assert!(
+                    got.iter().all(|&g| g == want),
+                    "thread {t} iteration {i}: corrupted step output"
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked");
+    }
+    let reports = sess.memory_stats(&["x"], &[&name], &[]).expect("cached step");
+    let r = &reports[0];
+    assert_eq!(r.runtime.checkouts, 401, "one arena checkout per run");
+    assert!(
+        r.runtime.arenas_created >= 1,
+        "pool must have built at least one arena: {:?}",
+        r.runtime
+    );
+    // Concurrency bursts are served by distinct arenas, never by handing
+    // one arena to two steps (that would have panicked above); the pool
+    // grows only as far as the burst needed.
+    assert!(r.runtime.arenas_created <= r.runtime.checkouts);
+}

@@ -40,7 +40,12 @@ fn distributed_constant_math() {
     // The multiply forces a cross-worker tensor transfer.
     let z = b.with_device("/job:worker/task:1", |b| b.mul(x, y));
     let zname = format!("{}:0", b.graph.node(z.node).name);
-    let master = DistMaster::new(cluster, b.into_graph(), DistMasterOptions::default());
+    // Const-rooted on purpose: pin folding off so the multiply really runs
+    // on worker 1 and the Send/Recv + %STEP% paths are exercised (the
+    // established idiom for const-rooted graphs whose intent is transfer).
+    let mut opts = DistMasterOptions::default();
+    opts.enable_constant_folding = false;
+    let master = DistMaster::new(cluster, b.into_graph(), opts);
     master.health_check().unwrap();
     let out = master.run(&[], &[&zname], &[]).unwrap();
     assert_eq!(out[0].scalar_value_f32().unwrap(), 42.0);
@@ -78,9 +83,11 @@ fn distributed_matches_local() {
     let mut bd = GraphBuilder::new();
     name = build(&mut bd);
     // Disable §5.5 lossy wire compression for the exact comparison (its
-    // accuracy impact is measured separately in E13).
+    // accuracy impact is measured separately in E13), and pin folding off:
+    // the chain is const-rooted, and the point is to run it *on workers*.
     let mut opts = DistMasterOptions::default();
     opts.partition.compress_cross_task = false;
+    opts.enable_constant_folding = false;
     let master = DistMaster::new(cluster, bd.into_graph(), opts);
     let dist = master.run(&[], &[&name], &[]).unwrap();
     assert!(local[0].allclose(&dist[0], 1e-4, 1e-4), "local vs distributed numerics differ");

@@ -1,0 +1,370 @@
+//! Step-memory-planner integration tests (`rustflow::memory`): planning
+//! on and off must be *result-identical* across the same graph families
+//! the optimizer equivalence suite uses — randomized elementwise/fan-out
+//! graphs, dead Switch branches, while loops, and feed/fetch aliasing
+//! hazards — because the planner only changes where bytes live, never
+//! what kernels compute. Exact equality is asserted on unfused paths and
+//! 1e-6 closeness where fusion is enabled, and the plan/runtime stats are
+//! checked to prove the arena actually engaged (reuse hits, in-place
+//! forwards, packed footprint below the naive sum).
+
+use rustflow::util::rng::Pcg32;
+use rustflow::{DType, Endpoint, GraphBuilder, Session, SessionOptions, Tensor};
+
+fn opts(planning: bool, fuse: bool) -> SessionOptions {
+    SessionOptions {
+        enable_memory_planning: planning,
+        enable_elementwise_fusion: fuse,
+        ..Default::default()
+    }
+}
+
+/// A randomized graph mixing what the planner cares about: a fed
+/// placeholder (dynamic shapes), const subtrees, elementwise chains
+/// (forwarding fodder), shared fan-out (refcount > 1), and Identity
+/// pass-throughs (storage aliasing).
+fn random_model(seed: u64) -> (GraphBuilder, String) {
+    let mut rng = Pcg32::new(seed * 77 + 13);
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let c0 = b.scalar(rng.uniform(0.5, 1.5));
+    let mut pool: Vec<Endpoint> = vec![x, c0];
+    for _ in 0..16 {
+        let a = pool[rng.index(pool.len())];
+        let v = match rng.next_below(7) {
+            0 => b.neg(a),
+            1 => b.tanh(a),
+            2 => b.relu(a),
+            3 => b.identity(a),
+            4 => {
+                let d = pool[rng.index(pool.len())];
+                b.add(a, d)
+            }
+            5 => {
+                let d = pool[rng.index(pool.len())];
+                b.mul(a, d)
+            }
+            _ => {
+                let s = b.scalar(rng.uniform(-1.0, 1.0));
+                b.sub(a, s)
+            }
+        };
+        pool.push(v);
+    }
+    let out = b.add_n(pool[2..].to_vec());
+    let name = format!("{}:0", b.graph.node(out.node).name);
+    (b, name)
+}
+
+fn run_model(seed: u64, options: SessionOptions, steps: usize) -> Vec<Tensor> {
+    let (b, name) = random_model(seed);
+    let sess = Session::new(b.into_graph(), options);
+    let mut rng = Pcg32::with_stream(seed, 4242);
+    (0..steps)
+        .map(|_| {
+            let feed =
+                Tensor::from_f32(vec![6], (0..6).map(|_| rng.uniform(-2.0, 2.0)).collect())
+                    .unwrap();
+            sess.run(&[("x", feed)], &[&name], &[]).unwrap().remove(0)
+        })
+        .collect()
+}
+
+#[test]
+fn randomized_equivalence_planning_on_vs_off() {
+    for seed in 0..6u64 {
+        for fuse in [false, true] {
+            // Several steps per session so arena reuse (not just the cold
+            // first step) is covered by the comparison.
+            let off = run_model(seed, opts(false, fuse), 4);
+            let on = run_model(seed, opts(true, fuse), 4);
+            for (i, (a, b)) in off.iter().zip(&on).enumerate() {
+                if fuse {
+                    assert!(
+                        a.allclose(b, 1e-6, 1e-6),
+                        "seed {seed} fuse={fuse} step {i}: diverged"
+                    );
+                } else {
+                    assert_eq!(
+                        a.as_f32().unwrap(),
+                        b.as_f32().unwrap(),
+                        "seed {seed} step {i}: planning changed unfused results"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dead_switch_branch_unaffected_by_planning() {
+    for (pred, expect) in [(true, 50.0f32), (false, 6.0)] {
+        for planning in [false, true] {
+            let mut b = GraphBuilder::new();
+            let x = b.scalar(5.0);
+            let p = b.constant(Tensor::scalar_bool(pred));
+            let (f_side, t_side) = b.switch(x, p).unwrap();
+            let ten = b.scalar(10.0);
+            let one = b.scalar(1.0);
+            let t_out = b.mul(t_side, ten);
+            let f_out = b.add(f_side, one);
+            let (merged, _) = b.merge(vec![f_out, t_out]).unwrap();
+            let name = format!("{}:0", b.graph.node(merged.node).name);
+            let sess = Session::new(b.into_graph(), opts(planning, true));
+            for _ in 0..3 {
+                let out = sess.run(&[], &[&name], &[]).unwrap();
+                assert_eq!(
+                    out[0].scalar_value_f32().unwrap(),
+                    expect,
+                    "pred={pred} planning={planning}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn while_loop_unaffected_by_planning() {
+    for planning in [false, true] {
+        let mut b = GraphBuilder::new();
+        let zero = b.scalar(0.0);
+        let exits = b
+            .while_loop(
+                "loop",
+                vec![zero],
+                |b, v| {
+                    let lim = b.scalar(10.0);
+                    Ok(b.less(v[0], lim))
+                },
+                |b, v| {
+                    let one = b.scalar(1.0);
+                    let inc = b.add(v[0], one);
+                    Ok(vec![b.mul(inc, one)])
+                },
+            )
+            .unwrap();
+        let name = format!("{}:0", b.graph.node(exits[0].node).name);
+        let sess = Session::new(b.into_graph(), opts(planning, true));
+        for _ in 0..2 {
+            let out = sess.run(&[], &[&name], &[]).unwrap();
+            assert_eq!(out[0].scalar_value_f32().unwrap(), 10.0, "planning={planning}");
+        }
+    }
+}
+
+#[test]
+fn feed_and_fetch_aliasing_hazards() {
+    // Fetch a fed tensor, fetch an intermediate that is also consumed
+    // downstream, and fetch the final value — all in one signature. The
+    // fetched intermediate must keep its value even though its consumer
+    // (a forwarding-safe op) runs after the fetch is recorded.
+    for planning in [false, true] {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let two = b.scalar(2.0);
+        let m = b.mul(x, two);
+        let t = b.tanh(m);
+        let mname = format!("{}:0", b.graph.node(m.node).name);
+        let tname = format!("{}:0", b.graph.node(t.node).name);
+        let sess = Session::new(b.into_graph(), opts(planning, false));
+        for step in 0..3 {
+            let feed = Tensor::from_f32(vec![4], vec![0.5 + step as f32, -1.0, 2.0, 0.0]).unwrap();
+            let out = sess.run(&[("x", feed.clone())], &["x", &mname, &tname], &[]).unwrap();
+            assert_eq!(out[0].as_f32().unwrap(), feed.as_f32().unwrap(), "fed fetch");
+            let m_expect: Vec<f32> = feed.as_f32().unwrap().iter().map(|v| v * 2.0).collect();
+            assert_eq!(out[1].as_f32().unwrap(), m_expect, "intermediate fetch, planning={planning}");
+            let t_expect: Vec<f32> = m_expect.iter().map(|v| v.tanh()).collect();
+            assert_eq!(out[2].as_f32().unwrap(), t_expect, "final fetch");
+        }
+    }
+}
+
+#[test]
+fn fan_out_values_survive_in_place_forwarding() {
+    // `a` feeds two forwarding-safe consumers: neither may mutate it in
+    // place (refcount > 1 at run time; consumer count > 1 in the plan).
+    for planning in [false, true] {
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::from_f32(vec![8], (0..8).map(|i| i as f32 - 3.5).collect()).unwrap());
+        let c = b.scalar(1.5);
+        let a = b.mul(x, c);
+        let n1 = b.neg(a);
+        let n2 = b.tanh(a);
+        let s = b.add(n1, n2);
+        let name = format!("{}:0", b.graph.node(s.node).name);
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions {
+                enable_memory_planning: planning,
+                enable_constant_folding: false, // keep the graph live at run time
+                ..Default::default()
+            },
+        );
+        let first = sess.run(&[], &[&name], &[]).unwrap();
+        for _ in 0..3 {
+            let again = sess.run(&[], &[&name], &[]).unwrap();
+            assert_eq!(
+                first[0].as_f32().unwrap(),
+                again[0].as_f32().unwrap(),
+                "planning={planning}: repeated runs diverged (buffer corruption)"
+            );
+        }
+    }
+}
+
+#[test]
+fn const_storage_never_mutated() {
+    // Neg is forwarding-safe, but its Const input is pinned (and shared
+    // with the node's attr): ten runs must all see the same constant.
+    let mut b = GraphBuilder::new();
+    let c = b.constant(Tensor::from_f32(vec![4], vec![1.0, -2.0, 3.0, -4.0]).unwrap());
+    let y = b.neg(c);
+    let name = format!("{}:0", b.graph.node(y.node).name);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { enable_constant_folding: false, ..Default::default() },
+    );
+    for _ in 0..10 {
+        let out = sess.run(&[], &[&name], &[]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[-1.0, 2.0, -3.0, 4.0]);
+    }
+}
+
+/// A deep const-rooted elementwise chain (static shapes throughout, so
+/// the planner's byte-exact static slots and forwarding all engage).
+fn static_chain(depth: usize, elements: usize) -> (GraphBuilder, String) {
+    let mut b = GraphBuilder::new();
+    let x = b.constant(Tensor::fill_f32(vec![elements], 0.25));
+    let c = b.scalar(1.01);
+    let mut h = x;
+    for i in 0..depth {
+        h = match i % 3 {
+            0 => b.mul(h, c),
+            1 => b.tanh(h),
+            _ => b.relu(h),
+        };
+    }
+    let name = format!("{}:0", b.graph.node(h.node).name);
+    (b, name)
+}
+
+#[test]
+fn plan_stats_show_packing_and_runtime_reuse() {
+    let (b, name) = static_chain(12, 1024);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions {
+            enable_memory_planning: true,
+            // Keep the chain alive at run time and as separate nodes.
+            enable_constant_folding: false,
+            enable_elementwise_fusion: false,
+            ..Default::default()
+        },
+    );
+    let first = sess.run(&[], &[&name], &[]).unwrap();
+    for _ in 0..3 {
+        let out = sess.run(&[], &[&name], &[]).unwrap();
+        assert_eq!(first[0].as_f32().unwrap(), out[0].as_f32().unwrap());
+    }
+    let reports = sess.memory_stats(&[], &[&name], &[]).expect("cached step");
+    assert_eq!(reports.len(), 1);
+    let r = &reports[0];
+    assert!(r.plan.planned_static >= 8, "chain endpoints should be planned: {:?}", r.plan);
+    assert!(
+        r.plan.arena_bytes < r.plan.naive_bytes,
+        "interval packing must beat one-buffer-per-endpoint: {:?}",
+        r.plan
+    );
+    assert!(r.plan.forward_candidates >= 1, "chain should forward in place: {:?}", r.plan);
+    assert!(
+        r.runtime.forwards_taken + r.runtime.reuse_hits > 0,
+        "warm steps should reuse arena storage or forward: {:?}",
+        r.runtime
+    );
+    assert_eq!(r.runtime.checkouts, 4, "one arena checkout per run");
+}
+
+#[test]
+fn dynamic_slots_pool_fed_graphs() {
+    // Everything downstream of a feed has unknown static shape: those
+    // endpoints get dynamic slots whose buffers still pool across steps.
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let c = b.scalar(0.5);
+    let mut h = x;
+    for _ in 0..6 {
+        let m = b.mul(h, c);
+        h = b.tanh(m);
+    }
+    let name = format!("{}:0", b.graph.node(h.node).name);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { enable_elementwise_fusion: false, ..Default::default() },
+    );
+    let feed = Tensor::fill_f32(vec![256], 1.0);
+    for _ in 0..4 {
+        sess.run(&[("x", feed.clone())], &[&name], &[]).unwrap();
+    }
+    let reports = sess.memory_stats(&["x"], &[&name], &[]).expect("cached step");
+    let r = &reports[0];
+    assert!(r.plan.planned_dynamic >= 6, "fed chain should use dynamic slots: {:?}", r.plan);
+    assert!(
+        r.runtime.forwards_taken + r.runtime.reuse_hits > 0,
+        "dynamic slots should still reuse storage across steps: {:?}",
+        r.runtime
+    );
+}
+
+#[test]
+fn multi_device_planning_matches_single_device() {
+    let build = || {
+        let mut b = GraphBuilder::new();
+        let x = b.constant(
+            Tensor::from_f32(vec![4, 4], (0..16).map(|i| i as f32 * 0.1).collect()).unwrap(),
+        );
+        let mut l = x;
+        let mut r = x;
+        for _ in 0..3 {
+            l = b.matmul(l, l);
+            r = b.matmul(r, x);
+        }
+        let out = b.add(l, r);
+        let name = format!("{}:0", b.graph.node(out.node).name);
+        (b, name)
+    };
+    let run = |devices: usize, planning: bool| {
+        let (b, name) = build();
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions {
+                devices,
+                enable_memory_planning: planning,
+                enable_constant_folding: false,
+                ..Default::default()
+            },
+        );
+        sess.run(&[], &[&name], &[]).unwrap().remove(0)
+    };
+    let base = run(1, false);
+    for (devices, planning) in [(1, true), (3, true), (3, false)] {
+        let out = run(devices, planning);
+        assert!(
+            base.allclose(&out, 1e-4, 1e-4),
+            "devices={devices} planning={planning} diverged"
+        );
+    }
+}
+
+#[test]
+fn planning_off_reports_empty_plan() {
+    let (b, name) = static_chain(4, 16);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { enable_memory_planning: false, ..Default::default() },
+    );
+    sess.run(&[], &[&name], &[]).unwrap();
+    let reports = sess.memory_stats(&[], &[&name], &[]).expect("cached step");
+    assert_eq!(reports[0].plan.planned_static, 0);
+    assert_eq!(reports[0].plan.num_slots, 0);
+    assert_eq!(reports[0].runtime.checkouts, 0);
+}

@@ -1,19 +1,26 @@
 #!/usr/bin/env bash
-# Perf trajectory, as one command: runs the §5 optimizer ablation bench and
-# the serving throughput bench, and writes BENCH_optimizer.json at the repo
-# root (machine-readable; one file per tracked benchmark family).
+# Perf trajectory, as one command: runs the §5 optimizer ablation bench,
+# the step-memory-planner bench, and the serving throughput bench, and
+# writes BENCH_optimizer.json + BENCH_memory.json at the repo root
+# (machine-readable; one file per tracked benchmark family).
 #
 #   scripts/bench.sh
 #
-# The optimizer bench also asserts the acceptance bar (full pipeline
-# ≥ 1.3x over passes-disabled), so this script fails on a perf regression.
+# The optimizer bench asserts its acceptance bar (full pipeline ≥ 1.3x
+# over passes-disabled) and the memory bench asserts planning-on
+# allocates ≥ 2x fewer heap bytes per step than planning-off, so this
+# script fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
 export BENCH_OPTIMIZER_JSON="$(pwd)/BENCH_optimizer.json"
+export BENCH_MEMORY_JSON="$(pwd)/BENCH_memory.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
+
+echo "== cargo bench --bench memory (writes $BENCH_MEMORY_JSON)"
+cargo bench --bench memory
 
 echo "== cargo bench --bench serving"
 cargo bench --bench serving

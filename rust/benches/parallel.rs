@@ -1,0 +1,167 @@
+//! Intra-op parallelism bench: GFLOP/s on a large MatMul and steps/sec
+//! on a fused matmul/bias/tanh stack, at 1 vs 4 intra-op threads, plus
+//! the old serial ikj kernel as the no-regression baseline for the
+//! 1-thread blocked kernel. Writes `BENCH_parallel.json` (path via
+//! `BENCH_PARALLEL_JSON`; `scripts/bench.sh` points it at the repo
+//! root).
+//!
+//! Acceptance bar (ISSUE 4): ≥ 2× matmul throughput at 4 intra-op
+//! threads vs 1 — asserted only when the machine actually has ≥ 4 CPUs
+//! (recorded as `assert_skipped` otherwise), and 1-thread blocked must
+//! not regress below 0.7× the old serial kernel.
+
+use rustflow::device::ComputePool;
+use rustflow::kernels::matrix;
+use rustflow::util::json::Json;
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
+use std::time::Duration;
+
+const DIM: usize = 448; // large-matmul size (2·DIM³ ≈ 180 MFLOP/step)
+
+fn filled(r: usize, c: usize, seed: u32) -> Tensor {
+    let v: Vec<f32> = (0..r * c)
+        .map(|i| {
+            let h = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+            ((h % 1000) as f32) * 0.002 - 1.0
+        })
+        .collect();
+    Tensor::from_f32(vec![r, c], v).unwrap()
+}
+
+/// The pre-refactor serial kernel body (ikj with zero-skip), kept here
+/// verbatim as the regression baseline for the blocked 1-thread kernel.
+fn naive_ikj(av: &[f32], bv: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = av[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bv[kk * n..(kk + 1) * n];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// GFLOP/s of `f` where one call is a DIM³ multiply.
+fn gflops(mut f: impl FnMut()) -> f64 {
+    let s = stats::bench_for(1, Duration::from_secs(2), || f());
+    let flops = 2.0 * (DIM as f64).powi(3);
+    flops / s.mean.as_secs_f64() / 1e9
+}
+
+/// Steps/sec through a Session running a fused matmul/bias/tanh stack.
+fn stack_steps_per_sec(intra: usize) -> (f64, Tensor) {
+    let dim = 256usize;
+    let depth = 6usize;
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+    let mut h = x;
+    for l in 0..depth as u32 {
+        let w = b.constant(filled(dim, dim, 100 + l));
+        let bias = b.constant(filled(1, dim, 200 + l));
+        let mm = b.matmul(h, w);
+        let s = b.add(mm, bias);
+        h = b.tanh(s);
+    }
+    let fetch = format!("{}:0", b.graph.node(h.node).name);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { intra_op_threads: intra, ..Default::default() },
+    );
+    let feed = filled(dim, dim, 7);
+    let run = || sess.run(&[("x", feed.clone())], &[&fetch], &[]).unwrap().remove(0);
+    let out = run(); // warm: compile + fill arena pool
+    let s = stats::bench_for(3, Duration::from_secs(2), || {
+        run();
+    });
+    (1.0 / s.mean.as_secs_f64(), out)
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let a = filled(DIM, DIM, 1);
+    let b = filled(DIM, DIM, 2);
+
+    // Old serial kernel (the baseline), raw loop over raw slices.
+    let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+    let mut scratch = vec![0f32; DIM * DIM];
+    let naive = gflops(|| {
+        scratch.iter_mut().for_each(|v| *v = 0.0);
+        naive_ikj(av, bv, DIM, DIM, DIM, &mut scratch);
+    });
+
+    // New blocked kernel at 1 and 4 intra-op threads.
+    let pool1 = ComputePool::serial();
+    let pool4 = ComputePool::new(4, "bench-intra");
+    let out1 = matrix::matmul_with_pool(&pool1, &a, &b, false, false).unwrap();
+    let out4 = matrix::matmul_with_pool(&pool4, &a, &b, false, false).unwrap();
+    assert_eq!(
+        out1.as_f32().unwrap(),
+        out4.as_f32().unwrap(),
+        "1-thread and 4-thread matmul must be bit-identical"
+    );
+    let g1 = gflops(|| {
+        matrix::matmul_with_pool(&pool1, &a, &b, false, false).unwrap();
+    });
+    let g4 = gflops(|| {
+        matrix::matmul_with_pool(&pool4, &a, &b, false, false).unwrap();
+    });
+    let speedup = g4 / g1;
+    let vs_naive = g1 / naive;
+    println!(
+        "parallel/matmul {DIM}x{DIM}x{DIM}: naive {naive:.2} GFLOP/s, blocked@1 {g1:.2}, \
+         blocked@4 {g4:.2} ({speedup:.2}x vs 1t, {vs_naive:.2}x vs naive), {cores} cores"
+    );
+
+    // Whole-step throughput on the fused stack.
+    let (sps1, stack_out1) = stack_steps_per_sec(1);
+    let (sps4, stack_out4) = stack_steps_per_sec(4);
+    assert_eq!(
+        stack_out1.as_f32().unwrap(),
+        stack_out4.as_f32().unwrap(),
+        "stack results must be bit-identical across intra-op widths"
+    );
+    let stack_speedup = sps4 / sps1;
+    println!(
+        "parallel/stack 6x256 fused: {sps1:.1} steps/s @1t, {sps4:.1} steps/s @4t \
+         ({stack_speedup:.2}x)"
+    );
+
+    // Acceptance bars.
+    let assert_skipped = cores < 4;
+    if assert_skipped {
+        println!("note: {cores} cores < 4 — skipping the >=2x speedup assertion");
+    } else {
+        assert!(
+            speedup >= 2.0,
+            "4 intra-op threads must give >= 2x matmul throughput, got {speedup:.2}x"
+        );
+    }
+    assert!(
+        vs_naive >= 0.7,
+        "blocked 1-thread kernel regressed vs the old serial kernel: {vs_naive:.2}x"
+    );
+
+    let out = Json::obj()
+        .set("bench", "intra_op_parallelism")
+        .set("matmul_dim", DIM as i64)
+        .set("cores", cores as i64)
+        .set("naive_serial_gflops", naive)
+        .set("blocked_gflops_1t", g1)
+        .set("blocked_gflops_4t", g4)
+        .set("matmul_speedup_4t_vs_1t", speedup)
+        .set("blocked_1t_vs_naive", vs_naive)
+        .set("stack_steps_per_sec_1t", sps1)
+        .set("stack_steps_per_sec_4t", sps4)
+        .set("stack_speedup_4t_vs_1t", stack_speedup)
+        .set("assert_skipped", assert_skipped);
+    let path = std::env::var("BENCH_PARALLEL_JSON")
+        .unwrap_or_else(|_| "BENCH_parallel.json".to_string());
+    std::fs::write(&path, out.render() + "\n").expect("write bench json");
+    println!("wrote {path}");
+}

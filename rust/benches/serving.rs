@@ -28,7 +28,9 @@ fn main() {
         b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
     let session = Arc::new(Session::new(
         b.into_graph(),
-        SessionOptions { threads_per_device: 4, ..Default::default() },
+        // intra_op_threads: a formed batch is one large step — let its
+        // MatMul row panels fan out across the device's compute pool.
+        SessionOptions { threads_per_device: 4, intra_op_threads: 4, ..Default::default() },
     ));
     session
         .run_targets(&inits.iter().map(|s| s.as_str()).collect::<Vec<_>>())

@@ -1,0 +1,482 @@
+//! The intra-op compute pool: data parallelism *inside* one kernel.
+//!
+//! Each [`crate::device::Device`] owns two pools with distinct jobs, the
+//! split the OSDI'16 follow-up paper exposes as the inter-op/intra-op
+//! runtime knob: the inter-op [`crate::util::threadpool::ThreadPool`]
+//! dispatches *ready nodes* (§3.1), while this pool splits *one kernel's
+//! element loop* across cores — the role Eigen's internal threading plays
+//! for real TensorFlow's CPU kernels.
+//!
+//! Design points:
+//!
+//! * **Deterministic contiguous chunks.** [`ComputePool::parallel_for`]
+//!   splits `0..total` into contiguous ranges and every output element is
+//!   produced by exactly one chunk with a fixed per-element operation
+//!   order, so kernel results are bit-identical for every thread count
+//!   (the determinism contract the parallel kernels and
+//!   `tests/parallel.rs` rely on).
+//! * **Small work runs inline.** When `total × cost_per_item` is under
+//!   [`INLINE_WORK`] the caller's closure runs on the calling thread —
+//!   small tensors never pay queueing or wakeup latency.
+//! * **Lazy workers.** A pool of capacity `t` spawns its `t - 1` worker
+//!   threads on first above-threshold job, so sessions that never run a
+//!   large kernel cost nothing. The submitting thread always works too.
+//! * **Panics propagate.** A panic in a worker chunk is caught, carried
+//!   back, and re-raised on the submitting thread after every chunk has
+//!   finished — the executor converts it into a `Status` instead of
+//!   hanging the step (see `executor`'s kernel `catch_unwind`).
+
+use std::any::Any;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::ops::Range;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Work (in `total × cost_per_item` units, roughly scalar flops) below
+/// which `parallel_for` runs inline on the calling thread.
+pub const INLINE_WORK: usize = 32 * 1024;
+
+/// Target chunk count per configured thread (over-decomposition for load
+/// balance when chunks are cheap enough to split this far).
+const CHUNKS_PER_THREAD: usize = 4;
+
+/// Minimum work per chunk, so synchronization stays amortized even when
+/// `total` is huge and per-item cost tiny.
+const MIN_CHUNK_WORK: usize = 16 * 1024;
+
+thread_local! {
+    /// Set inside intra-op workers: nested `parallel_for` calls run
+    /// inline instead of re-entering the queue (no deadlock, no
+    /// oversubscription).
+    static IN_INTRA_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_intra_worker() -> bool {
+    IN_INTRA_WORKER.with(|c| c.get())
+}
+
+/// One submitted `parallel_for`: a lifetime-erased chunk closure plus the
+/// claim/completion state every participating thread shares.
+struct Job {
+    /// The caller's closure, as a raw pointer so the `Job` may harmlessly
+    /// outlive the `parallel_for` frame (exhausted-job husks linger in
+    /// the queue and in worker-held Arcs; a dangling *reference* there
+    /// would be a validity violation, a dangling raw pointer is not).
+    /// Dereferenced only inside the claim window — chunk index <
+    /// `num_chunks` — and the submitting frame blocks until
+    /// `pending == 0`, so every dereference happens while the closure is
+    /// alive.
+    task: *const (dyn Fn(Range<usize>) + Sync),
+    total: usize,
+    chunk: usize,
+    num_chunks: usize,
+    /// Next unclaimed chunk index (may run past `num_chunks`; claims
+    /// beyond the end are no-ops).
+    next: AtomicUsize,
+    /// Chunks not yet finished; 0 ⇒ the job is complete.
+    pending: AtomicUsize,
+    /// First panic payload from any chunk, re-raised on the submitter.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    done_mutex: Mutex<()>,
+    done_cond: Condvar,
+}
+
+// Safety: `task` is only dereferenced under the claim-window discipline
+// documented on the field; every other field is already Send + Sync.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Inner {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    cond: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A device's intra-op pool. `threads` counts the calling thread, so a
+/// pool of 1 is fully serial (and [`ComputePool::serial`] builds that
+/// without any queue state at all).
+pub struct ComputePool {
+    threads: usize,
+    inner: Option<Arc<Inner>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    name: String,
+}
+
+impl ComputePool {
+    /// A pool of `threads` total lanes named `name` (worker threads are
+    /// `{name}-{i}`). Workers spawn lazily on first parallel job.
+    pub fn new(threads: usize, name: &str) -> ComputePool {
+        let threads = threads.max(1);
+        let inner = (threads > 1).then(|| {
+            Arc::new(Inner {
+                queue: Mutex::new(VecDeque::new()),
+                cond: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+            })
+        });
+        ComputePool { threads, inner, workers: Mutex::new(Vec::new()), name: name.to_string() }
+    }
+
+    /// A zero-state serial pool: every `parallel_for` runs inline. Free
+    /// kernel functions use this so they need no device.
+    pub fn serial() -> ComputePool {
+        ComputePool { threads: 1, inner: None, workers: Mutex::new(Vec::new()), name: String::new() }
+    }
+
+    /// Configured parallelism (including the calling thread).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Would a `parallel_for(total, cost_per_item, …)` issued right now
+    /// fan out to workers (true) or run inline on the calling thread
+    /// (false)? Lets kernels pick a cheaper serial fill strategy (e.g.
+    /// push-fill instead of zero-fill-then-overwrite) when no chunking
+    /// will happen.
+    pub fn would_parallelize(&self, total: usize, cost_per_item: usize) -> bool {
+        self.inner.is_some()
+            && total > 1
+            && total.saturating_mul(cost_per_item.max(1)) >= INLINE_WORK
+            && !in_intra_worker()
+    }
+
+    /// Run `f` over every index in `0..total`, split into deterministic
+    /// contiguous chunks executed across the pool (the calling thread
+    /// included). `cost_per_item` is the approximate scalar-op cost of
+    /// one item and drives both the inline threshold and the chunk
+    /// grain. Blocks until every chunk has finished; a panic in any
+    /// chunk is re-raised here once the rest have completed.
+    pub fn parallel_for<F>(&self, total: usize, cost_per_item: usize, f: F)
+    where
+        F: Fn(Range<usize>) + Sync,
+    {
+        let inner = match &self.inner {
+            Some(inner) if self.would_parallelize(total, cost_per_item) => inner,
+            _ => {
+                f(0..total);
+                return;
+            }
+        };
+        let min_chunk = (MIN_CHUNK_WORK / cost_per_item.max(1)).max(1);
+        let chunk = total.div_ceil(self.threads * CHUNKS_PER_THREAD).max(min_chunk);
+        let num_chunks = total.div_ceil(chunk);
+        if num_chunks <= 1 {
+            f(0..total);
+            return;
+        }
+        self.ensure_workers(inner);
+
+        // Erase the closure's lifetime into a raw pointer so workers can
+        // hold it (see the `Job::task` safety comment: dereferences only
+        // happen before this frame returns, while `f` is alive).
+        let task: *const (dyn Fn(Range<usize>) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(Range<usize>) + Sync),
+                *const (dyn Fn(Range<usize>) + Sync),
+            >(&f)
+        };
+        let job = Arc::new(Job {
+            task,
+            total,
+            chunk,
+            num_chunks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(num_chunks),
+            panic: Mutex::new(None),
+            done_mutex: Mutex::new(()),
+            done_cond: Condvar::new(),
+        });
+        {
+            let mut q = inner.queue.lock().unwrap();
+            q.push_back(Arc::clone(&job));
+        }
+        inner.cond.notify_all();
+
+        // The submitter claims chunks like any worker, then waits out the
+        // stragglers.
+        run_chunks(&job);
+        {
+            let mut g = job.done_mutex.lock().unwrap();
+            while job.pending.load(Ordering::Acquire) != 0 {
+                g = job.done_cond.wait(g).unwrap();
+            }
+        }
+        if let Some(p) = job.panic.lock().unwrap().take() {
+            resume_unwind(p);
+        }
+    }
+
+    /// [`ComputePool::parallel_for`] over `total` items where each item
+    /// owns `out.len() / total` consecutive elements of `out`: the
+    /// closure receives the item range plus the matching disjoint
+    /// `&mut` view (row panels of a matmul output, rows of a softmax,
+    /// element chunks when the width is 1). `out.len()` must be a
+    /// multiple of `total`.
+    pub fn parallel_for_mut<T, F>(&self, total: usize, cost_per_item: usize, out: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(Range<usize>, &mut [T]) + Sync,
+    {
+        if total == 0 {
+            return;
+        }
+        assert!(
+            out.len() % total == 0,
+            "parallel_for_mut: out.len() {} is not a multiple of total {total}",
+            out.len(),
+        );
+        let width = out.len() / total;
+        let ptr = SendPtr(out.as_mut_ptr());
+        self.parallel_for(total, cost_per_item, move |r: Range<usize>| {
+            // Safety: chunks are disjoint contiguous item ranges, each
+            // item owns `width` consecutive elements, and the caller's
+            // exclusive borrow of `out` spans the whole parallel_for
+            // call (which blocks until every chunk completes).
+            let view =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(r.start * width), r.len() * width) };
+            f(r, view);
+        });
+    }
+
+    /// Spawn any not-yet-started workers (capacity minus the caller).
+    fn ensure_workers(&self, inner: &Arc<Inner>) {
+        let mut ws = match self.workers.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        while ws.len() + 1 < self.threads {
+            let inner = Arc::clone(inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("{}-{}", self.name, ws.len()))
+                .spawn(move || worker_loop(inner))
+                .expect("spawn intra-op worker");
+            ws.push(handle);
+        }
+    }
+}
+
+impl std::fmt::Debug for ComputePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ComputePool(threads={})", self.threads)
+    }
+}
+
+impl Drop for ComputePool {
+    fn drop(&mut self) {
+        if let Some(inner) = &self.inner {
+            inner.shutdown.store(true, Ordering::SeqCst);
+            inner.cond.notify_all();
+            let me = std::thread::current().id();
+            let ws = match self.workers.get_mut() {
+                Ok(v) => std::mem::take(v),
+                Err(p) => std::mem::take(p.into_inner()),
+            };
+            for w in ws {
+                // Never join yourself (a device dropped from its own
+                // worker); the shutdown flag lets the thread exit alone.
+                if w.thread().id() == me {
+                    continue;
+                }
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+/// Claim and run chunks of `job` until none remain.
+fn run_chunks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.num_chunks {
+            return;
+        }
+        let start = i * job.chunk;
+        let end = job.total.min(start + job.chunk);
+        // Safety: we hold a claimed chunk (i < num_chunks), so the
+        // submitting frame — and the closure — are still alive (it blocks
+        // until this chunk's `pending` decrement below).
+        let task = unsafe { &*job.task };
+        if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(start..end))) {
+            let mut slot = job.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+        }
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _g = job.done_mutex.lock().unwrap();
+            job.done_cond.notify_all();
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    IN_INTRA_WORKER.with(|c| c.set(true));
+    loop {
+        let job = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                // Exhausted jobs at the front are husks: every chunk is
+                // claimed (maybe still running elsewhere) — drop them.
+                while q
+                    .front()
+                    .is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.num_chunks)
+                {
+                    q.pop_front();
+                }
+                if let Some(j) = q.front() {
+                    break Arc::clone(j);
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = inner.cond.wait(q).unwrap();
+            }
+        };
+        run_chunks(&job);
+    }
+}
+
+/// Raw-pointer wrapper that lets disjoint chunk views cross threads.
+#[derive(Clone, Copy)]
+struct SendPtr<T>(*mut T);
+// Safety: only ever dereferenced through disjoint ranges while the
+// caller's exclusive borrow is alive (see `parallel_for_mut`).
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = ComputePool::new(4, "test-cover");
+        let n = 100_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(n, 64, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn small_work_runs_inline_on_caller() {
+        let pool = ComputePool::new(4, "test-inline");
+        let caller = std::thread::current().id();
+        let same_thread = std::sync::Mutex::new(true);
+        pool.parallel_for(8, 1, |_r| {
+            if std::thread::current().id() != caller {
+                *same_thread.lock().unwrap() = false;
+            }
+        });
+        assert!(*same_thread.lock().unwrap());
+        // And no workers were ever spawned for it.
+        assert!(pool.workers.lock().unwrap().is_empty());
+    }
+
+    #[test]
+    fn parallel_for_mut_views_are_disjoint_and_complete() {
+        let pool = ComputePool::new(4, "test-mut");
+        let total = 10_000;
+        let width = 7;
+        let mut out = vec![0u64; total * width];
+        pool.parallel_for_mut(total, 64, &mut out, |r, view| {
+            assert_eq!(view.len(), r.len() * width);
+            for (j, v) in view.iter_mut().enumerate() {
+                *v = (r.start * width + j) as u64;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn chunking_independent_of_results() {
+        // Same deterministic function under 1, 2, 8 threads → same bytes.
+        let compute = |threads: usize| -> Vec<f32> {
+            let pool = ComputePool::new(threads, "test-det");
+            let n = 65_536;
+            let mut out = vec![0f32; n];
+            pool.parallel_for_mut(n, 8, &mut out, |r, view| {
+                for (j, v) in view.iter_mut().enumerate() {
+                    let i = r.start + j;
+                    *v = ((i as f32) * 0.001).sin();
+                }
+            });
+            out
+        };
+        let a = compute(1);
+        assert_eq!(a, compute(2));
+        assert_eq!(a, compute(8));
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_submitter() {
+        let pool = ComputePool::new(4, "test-panic");
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.parallel_for(1 << 16, 64, |_r| panic!("chunk boom"));
+        }));
+        let p = r.expect_err("panic must propagate");
+        let msg = p.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "chunk boom");
+        // The pool stays usable afterwards.
+        let sum = AtomicU64::new(0);
+        pool.parallel_for(1 << 16, 64, |r| {
+            sum.fetch_add(r.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 1 << 16);
+    }
+
+    #[test]
+    fn nested_parallel_for_runs_inline() {
+        let pool = Arc::new(ComputePool::new(4, "test-nested"));
+        let inner_pool = Arc::clone(&pool);
+        let count = AtomicU64::new(0);
+        pool.parallel_for(1 << 16, 64, |r| {
+            // A nested call from a worker must not deadlock.
+            inner_pool.parallel_for(4, 20_000, |rr| {
+                count.fetch_add(rr.len() as u64, Ordering::Relaxed);
+            });
+            let _ = r;
+        });
+        assert!(count.load(Ordering::Relaxed) > 0);
+    }
+
+    #[test]
+    fn serial_pool_is_inline_always() {
+        let pool = ComputePool::serial();
+        let caller = std::thread::current().id();
+        let ok = std::sync::Mutex::new(true);
+        pool.parallel_for(1 << 20, 64, |_r| {
+            if std::thread::current().id() != caller {
+                *ok.lock().unwrap() = false;
+            }
+        });
+        assert!(*ok.lock().unwrap());
+    }
+
+    #[test]
+    fn concurrent_jobs_from_many_threads() {
+        let pool = Arc::new(ComputePool::new(4, "test-concurrent"));
+        std::thread::scope(|s| {
+            for t in 0..6 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    let sum = AtomicU64::new(0);
+                    pool.parallel_for(40_000, 8, |r| {
+                        sum.fetch_add(r.map(|i| i as u64).sum::<u64>(), Ordering::Relaxed);
+                    });
+                    let n = 40_000u64;
+                    assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2, "thread {t}");
+                });
+            }
+        });
+    }
+}

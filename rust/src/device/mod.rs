@@ -8,8 +8,10 @@
 //! allocator statistics, and the §3.2.1 cost model assigns per-device-type
 //! relative speeds so the placement problem stays non-trivial.
 
+pub mod compute_pool;
 pub mod spec;
 
+pub use compute_pool::ComputePool;
 pub use spec::{DeviceSpec, PartialDeviceSpec};
 
 use crate::error::{Result, Status};
@@ -57,17 +59,40 @@ impl AllocatorStats {
     }
 }
 
-/// A computational device: name + kernel execution pool + allocator stats.
+/// A computational device: name + two thread pools + allocator stats.
+///
+/// The pools split exactly as the OSDI'16 runtime knob does: `pool` is
+/// the *inter-op* pool dispatching ready nodes (§3.1), `compute` is the
+/// *intra-op* pool a single kernel's `parallel_for` fans out over —
+/// distinct so a long node never starves kernel-internal data
+/// parallelism and vice versa.
 pub struct Device {
     pub spec: DeviceSpec,
+    /// Inter-op: executes ready graph nodes.
     pub pool: ThreadPool,
+    /// Intra-op: data parallelism inside one kernel (`parallel_for`).
+    pub compute: ComputePool,
     pub stats: AllocatorStats,
 }
 
 impl Device {
+    /// A device with `threads` inter-op threads and serial kernels
+    /// (intra-op parallelism of 1).
     pub fn new(spec: DeviceSpec, threads: usize) -> Device {
+        Device::with_intra_op(spec, threads, 1)
+    }
+
+    /// A device with `threads` inter-op threads and an intra-op compute
+    /// pool of `intra_op_threads` lanes (workers spawn lazily on first
+    /// large kernel).
+    pub fn with_intra_op(spec: DeviceSpec, threads: usize, intra_op_threads: usize) -> Device {
         let name = format!("dev-{}-{}", spec.device_type, spec.index);
-        Device { spec, pool: ThreadPool::new(threads, &name), stats: AllocatorStats::default() }
+        Device {
+            spec,
+            pool: ThreadPool::new(threads, &name),
+            compute: ComputePool::new(intra_op_threads, &format!("{name}-intra")),
+            stats: AllocatorStats::default(),
+        }
     }
 
     pub fn name(&self) -> String {
@@ -100,11 +125,22 @@ impl DeviceSet {
 
     /// A local single-process device set: `/job:localhost/task:0/device:cpu:i`.
     pub fn local(num_devices: usize, threads_per_device: usize) -> DeviceSet {
+        DeviceSet::local_with_intra_op(num_devices, threads_per_device, 1)
+    }
+
+    /// [`DeviceSet::local`] with each device's intra-op compute pool
+    /// sized to `intra_op_threads` (`SessionOptions::intra_op_threads`).
+    pub fn local_with_intra_op(
+        num_devices: usize,
+        threads_per_device: usize,
+        intra_op_threads: usize,
+    ) -> DeviceSet {
         let devices = (0..num_devices)
             .map(|i| {
-                Arc::new(Device::new(
+                Arc::new(Device::with_intra_op(
                     DeviceSpec::local_cpu(i),
                     threads_per_device,
+                    intra_op_threads,
                 ))
             })
             .collect();
@@ -169,6 +205,16 @@ mod tests {
         assert_eq!(m[0].spec.index, 1);
         let all = PartialDeviceSpec::parse("/job:localhost").unwrap();
         assert_eq!(ds.matching(&all).len(), 4);
+    }
+
+    #[test]
+    fn intra_op_pool_sized_by_constructor() {
+        let d = Device::new(DeviceSpec::local_cpu(0), 2);
+        assert_eq!(d.compute.threads(), 1);
+        let d4 = Device::with_intra_op(DeviceSpec::local_cpu(1), 2, 4);
+        assert_eq!(d4.compute.threads(), 4);
+        let ds = DeviceSet::local_with_intra_op(2, 1, 3);
+        assert!(ds.devices().iter().all(|d| d.compute.threads() == 3));
     }
 
     #[test]

@@ -158,6 +158,15 @@ enum Action {
     MergeFire(Vec<Entry>),
 }
 
+/// Best-effort text of a caught panic payload (`panic!("…")` carries a
+/// `&str` or `String`; anything else is opaque).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&'static str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
 impl Inner {
     /// The seed-dispatch-wait loop (body of [`Executor::run`], split out
     /// so the arena check-in runs on every exit path).
@@ -521,7 +530,22 @@ impl Inner {
                 };
                 match kernel {
                     Kernel::Sync(f) => {
-                        let result = f(&mut kctx);
+                        // A panicking kernel (including a panic raised in
+                        // an intra-op `parallel_for` worker, which the
+                        // compute pool re-raises here) must fail the step
+                        // with a Status — not strand `outstanding` and
+                        // hang the run, nor abort the process.
+                        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || f(&mut kctx),
+                        ))
+                        .unwrap_or_else(|p| {
+                            Err(Status::internal(format!(
+                                "kernel {} ({}) panicked: {}",
+                                node.info.name,
+                                node.info.op,
+                                panic_message(p.as_ref())
+                            )))
+                        });
                         if let Some(sp) = trace_span {
                             sp.end();
                         }

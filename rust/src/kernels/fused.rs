@@ -225,7 +225,6 @@ fn compute(steps: &[Step], ctx: &mut KernelContext) -> Result<Tensor> {
         // Multi-index over the primary dims, maintained only when some
         // extra actually needs strided reads.
         let dims = primary_shape.dims().to_vec();
-        let mut idx = vec![0usize; dims.len()];
         let run_prog = |i: usize, idx: &[usize], mut acc: f32| -> f32 {
             for step in &prog {
                 acc = match step {
@@ -261,26 +260,67 @@ fn compute(steps: &[Step], ctx: &mut KernelContext) -> Result<Tensor> {
                 idx[d] = 0;
             }
         };
+        // Row-major multi-index of linear element `i` (each parallel
+        // chunk seeds its own counter at its start element, then bumps —
+        // so chunked and serial interpretation read identical extras).
+        let unravel = |mut i: usize| -> Vec<usize> {
+            let mut idx = vec![0usize; dims.len()];
+            for d in (0..dims.len()).rev() {
+                if dims[d] > 0 {
+                    idx[d] = i % dims[d];
+                    i /= dims[d];
+                }
+            }
+            idx
+        };
+        // Whole-program cost per element: the steps plus the strided
+        // index bookkeeping when present.
+        let cost = prog.len().saturating_mul(2).max(1)
+            + if any_strided { dims.len() } else { 0 };
         match forwarded {
             Some(mut fw) => {
-                for i in 0..n {
-                    fw.vec[i] = run_prog(i, &idx, fw.vec[i]);
-                    if any_strided {
-                        bump(&mut idx);
+                ctx.device.compute.parallel_for_mut(n, cost, &mut fw.vec, |r, xs| {
+                    let mut idx = if any_strided { unravel(r.start) } else { Vec::new() };
+                    for (j, x) in xs.iter_mut().enumerate() {
+                        *x = run_prog(r.start + j, &idx, *x);
+                        if any_strided {
+                            bump(&mut idx);
+                        }
                     }
-                }
+                });
                 drop(prog); // release the borrows of ctx.inputs
                 return fw.into_tensor();
             }
             None => {
-                let mut out = ctx.alloc_f32(0, n);
-                let x = ctx.input(0)?.as_f32()?;
-                for (i, &v) in x.iter().enumerate() {
-                    out.push(run_prog(i, &idx, v));
-                    if any_strided {
-                        bump(&mut idx);
+                let out = {
+                    let x = ctx.input(0)?.as_f32()?;
+                    if !ctx.device.compute.would_parallelize(n, cost) {
+                        // Inline: push-fill, no zeroing pass.
+                        let mut out = ctx.alloc_f32(0, n);
+                        let mut idx = vec![0usize; dims.len()];
+                        for (i, &v) in x.iter().enumerate() {
+                            out.push(run_prog(i, &idx, v));
+                            if any_strided {
+                                bump(&mut idx);
+                            }
+                        }
+                        out
+                    } else {
+                        let mut out = ctx.alloc_f32_zeroed(0, n);
+                        ctx.device.compute.parallel_for_mut(n, cost, &mut out, |r, os| {
+                            let mut idx =
+                                if any_strided { unravel(r.start) } else { Vec::new() };
+                            for (j, o) in os.iter_mut().enumerate() {
+                                let i = r.start + j;
+                                *o = run_prog(i, &idx, x[i]);
+                                if any_strided {
+                                    bump(&mut idx);
+                                }
+                            }
+                        });
+                        out
                     }
-                }
+                };
                 drop(prog);
                 return ctx.make_output(0, primary_shape, TensorData::F32(out));
             }

@@ -3,12 +3,77 @@
 //! Select, AddN, Cast, CheckNumerics.
 
 use super::{Kernel, KernelContext, KernelRegistry};
+use crate::device::ComputePool;
 use crate::error::{Result, Status};
 use crate::tensor::{DType, Shape, Tensor, TensorData};
+use std::collections::HashMap;
+use std::sync::{Arc, LazyLock as Lazy, Mutex};
 
 // ---------------------------------------------------------------------------
 // broadcasting machinery
 // ---------------------------------------------------------------------------
+
+/// A materialized broadcast: the output shape plus, per output element,
+/// the element indices to read from each operand.
+pub(crate) struct BroadcastMap {
+    pub out: Shape,
+    pub map: Vec<(usize, usize)>,
+}
+
+/// Process-wide pool of broadcast index maps keyed by the operand shape
+/// pair. A cached step re-runs the same shapes every step, so the map —
+/// formerly the biggest per-step allocation left on the general-broadcast
+/// path — is built once and shared read-only.
+static BROADCAST_MAPS: Lazy<Mutex<HashMap<(Shape, Shape), Arc<BroadcastMap>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Entry cap; eviction is a wholesale clear (a cold map is just a
+/// rebuild, never a correctness issue).
+const MAX_CACHED_MAPS: usize = 64;
+
+/// Maps bigger than this many output elements are never cached — they
+/// would pin large allocations for shapes that may never recur.
+const MAX_CACHED_MAP_ELEMS: usize = 1 << 20;
+
+/// Byte-ish budget across the whole cache (total cached index pairs, at
+/// 16 B each ⇒ ≤ 64 MiB resident) — the entry cap alone would let 64
+/// maximal maps pin ~1 GiB for the process lifetime.
+const MAX_CACHED_MAP_TOTAL_ELEMS: usize = 1 << 22;
+
+/// The pooled lookup of [`broadcast_index_map`].
+fn cached_broadcast_map(a: &Shape, b: &Shape) -> Result<Arc<BroadcastMap>> {
+    let key = (a.clone(), b.clone());
+    if let Some(m) = BROADCAST_MAPS.lock().unwrap().get(&key) {
+        return Ok(Arc::clone(m));
+    }
+    let (out, map) = broadcast_index_map(a, b)?;
+    let entry = Arc::new(BroadcastMap { out, map });
+    if entry.map.len() <= MAX_CACHED_MAP_ELEMS {
+        let mut cache = BROADCAST_MAPS.lock().unwrap();
+        let mut total: usize = cache.values().map(|m| m.map.len()).sum();
+        // Evict largest-first until both caps hold — never wholesale, so
+        // a working set over budget sheds its biggest maps while hot
+        // small shapes stay cached.
+        while cache.len() >= MAX_CACHED_MAPS
+            || total.saturating_add(entry.map.len()) > MAX_CACHED_MAP_TOTAL_ELEMS
+        {
+            let victim = cache
+                .iter()
+                .max_by_key(|(_, m)| m.map.len())
+                .map(|(k2, _)| k2.clone());
+            match victim {
+                Some(v) => {
+                    if let Some(e) = cache.remove(&v) {
+                        total -= e.map.len();
+                    }
+                }
+                None => break,
+            }
+        }
+        cache.insert(key, Arc::clone(&entry));
+    }
+    Ok(entry)
+}
 
 /// Iterate the broadcast of two shapes, calling `f(ai, bi)` with element
 /// indices into `a` and `b` for every output element, in row-major order.
@@ -122,7 +187,8 @@ pub fn binary_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
             _ => Err(Status::unimplemented(format!("{op} for dtype {}", a.dtype()))),
         };
     }
-    let (out_shape, map) = broadcast_index_map(a.shape(), b.shape())?;
+    let bm = cached_broadcast_map(a.shape(), b.shape())?;
+    let (out_shape, map) = (bm.out.clone(), &bm.map);
     match (a.data(), b.data()) {
         (TensorData::F32(x), TensorData::F32(y)) => {
             let f = f32_binop(op)?;
@@ -197,11 +263,62 @@ enum BinKind {
     ScalarLhs,
 }
 
+/// Approximate per-element cost of an f32 binary op, in scalar-op units
+/// (drives the intra-op inline threshold and chunk grain).
+pub(crate) fn f32_binop_cost(op: &str) -> usize {
+    match op {
+        "Div" => 4,
+        "Pow" => 16,
+        _ => 1,
+    }
+}
+
+/// Approximate per-element cost of an f32 unary op.
+pub(crate) fn f32_unary_cost(op: &str) -> usize {
+    match op {
+        "Neg" | "Abs" | "Sign" | "Square" => 1,
+        // Exp, Log, Sqrt, Rsqrt, Tanh, Reciprocal: transcendental/divide.
+        _ => 8,
+    }
+}
+
+/// Fill the planned f32 output for `port` with `g(i)` over `0..n`.
+/// When the pool would run inline anyway, push-fill into an
+/// `alloc_f32` buffer (one write per element, no zeroing pass); when it
+/// will actually fan out, zero-fill (`alloc_f32_zeroed`) and overwrite
+/// through disjoint chunk views. Chunking never changes `g`'s
+/// per-element evaluation, so both strategies produce identical bytes.
+pub(crate) fn planned_fill(
+    ctx: &KernelContext,
+    port: usize,
+    n: usize,
+    cost: usize,
+    g: impl Fn(usize) -> f32 + Sync,
+) -> Vec<f32> {
+    let pool = &ctx.device.compute;
+    if !pool.would_parallelize(n, cost) {
+        let mut out = ctx.alloc_f32(port, n);
+        for i in 0..n {
+            out.push(g(i));
+        }
+        return out;
+    }
+    let mut out = ctx.alloc_f32_zeroed(port, n);
+    pool.parallel_for_mut(n, cost, &mut out, |r, os| {
+        for (j, o) in os.iter_mut().enumerate() {
+            *o = g(r.start + j);
+        }
+    });
+    out
+}
+
 /// The memory-planned kernel body for binary elementwise ops: on the
 /// same-shape and scalar-operand f32 paths, write the result in place
 /// over whichever operand the plan lets this node forward
 /// (`KernelContext::take_forward_f32`), else into the port's arena slot
-/// (`alloc_f32`). General broadcasting falls through to
+/// (`alloc_f32_zeroed`); element chunks run on the device's intra-op
+/// pool. General f32 broadcasting goes through the pooled index map into
+/// the arena ([`binary_broadcast_planned`]); other dtypes fall through to
 /// [`binary_elementwise`] (heap).
 pub fn binary_elementwise_planned(ctx: &mut KernelContext, op: &str) -> Result<Tensor> {
     let kind = {
@@ -222,88 +339,129 @@ pub fn binary_elementwise_planned(ctx: &mut KernelContext, op: &str) -> Result<T
         }
     };
     let Some(kind) = kind else {
-        return binary_elementwise(ctx.input(0)?, ctx.input(1)?, op);
+        return binary_broadcast_planned(ctx, op);
     };
     let f = f32_binop(op)?;
+    let cost = f32_binop_cost(op);
     match kind {
         BinKind::Same => {
             // In-place over the lhs (acc = f(acc, b))…
             if let Some(mut fw) = ctx.take_forward_f32(0) {
                 let b = ctx.input(1)?.as_f32()?;
-                for (x, &y) in fw.vec.iter_mut().zip(b) {
-                    *x = f(*x, y);
-                }
+                ctx.device.compute.parallel_for_mut(fw.vec.len(), cost, &mut fw.vec, |r, xs| {
+                    for (x, &y) in xs.iter_mut().zip(&b[r.start..r.end]) {
+                        *x = f(*x, y);
+                    }
+                });
                 return fw.into_tensor();
             }
             // …or over the rhs (acc = f(a, acc)).
             if let Some(mut fw) = ctx.take_forward_f32(1) {
                 let a = ctx.input(0)?.as_f32()?;
-                for (&x, y) in a.iter().zip(fw.vec.iter_mut()) {
-                    *y = f(x, *y);
-                }
+                ctx.device.compute.parallel_for_mut(fw.vec.len(), cost, &mut fw.vec, |r, ys| {
+                    for (&x, y) in a[r.start..r.end].iter().zip(ys.iter_mut()) {
+                        *y = f(x, *y);
+                    }
+                });
                 return fw.into_tensor();
             }
             let shape = ctx.input(0)?.shape().clone();
-            let mut out = ctx.alloc_f32(0, shape.num_elements());
-            {
+            let out = {
                 let x = ctx.input(0)?.as_f32()?;
                 let y = ctx.input(1)?.as_f32()?;
-                for (&p, &q) in x.iter().zip(y) {
-                    out.push(f(p, q));
-                }
-            }
+                planned_fill(ctx, 0, shape.num_elements(), cost, |i| f(x[i], y[i]))
+            };
             ctx.make_output(0, shape, TensorData::F32(out))
         }
         BinKind::ScalarRhs => {
             let y = ctx.input(1)?.as_f32()?[0];
             if let Some(mut fw) = ctx.take_forward_f32(0) {
-                for x in fw.vec.iter_mut() {
-                    *x = f(*x, y);
-                }
+                ctx.device.compute.parallel_for_mut(fw.vec.len(), cost, &mut fw.vec, |_r, xs| {
+                    for x in xs.iter_mut() {
+                        *x = f(*x, y);
+                    }
+                });
                 return fw.into_tensor();
             }
             let shape = ctx.input(0)?.shape().clone();
-            let mut out = ctx.alloc_f32(0, shape.num_elements());
-            for &v in ctx.input(0)?.as_f32()? {
-                out.push(f(v, y));
-            }
+            let out = {
+                let x = ctx.input(0)?.as_f32()?;
+                planned_fill(ctx, 0, shape.num_elements(), cost, |i| f(x[i], y))
+            };
             ctx.make_output(0, shape, TensorData::F32(out))
         }
         BinKind::ScalarLhs => {
             let x = ctx.input(0)?.as_f32()?[0];
             if let Some(mut fw) = ctx.take_forward_f32(1) {
-                for y in fw.vec.iter_mut() {
-                    *y = f(x, *y);
-                }
+                ctx.device.compute.parallel_for_mut(fw.vec.len(), cost, &mut fw.vec, |_r, ys| {
+                    for y in ys.iter_mut() {
+                        *y = f(x, *y);
+                    }
+                });
                 return fw.into_tensor();
             }
             let shape = ctx.input(1)?.shape().clone();
-            let mut out = ctx.alloc_f32(0, shape.num_elements());
-            for &v in ctx.input(1)?.as_f32()? {
-                out.push(f(x, v));
-            }
+            let out = {
+                let y = ctx.input(1)?.as_f32()?;
+                planned_fill(ctx, 0, shape.num_elements(), cost, |i| f(x, y[i]))
+            };
             ctx.make_output(0, shape, TensorData::F32(out))
         }
     }
 }
 
+/// The general-broadcast arm of [`binary_elementwise_planned`]: for f32
+/// operands the pooled index map (`cached_broadcast_map`) drives chunked
+/// parallel gather-compute into the node's arena slot — no per-step map
+/// rebuild, no heap output. Non-f32 keeps the classic heap path.
+fn binary_broadcast_planned(ctx: &mut KernelContext, op: &str) -> Result<Tensor> {
+    let (shape_a, shape_b) = {
+        let a = ctx.input(0)?;
+        let b = ctx.input(1)?;
+        if a.dtype() != DType::F32 || b.dtype() != DType::F32 {
+            return binary_elementwise(a, b, op);
+        }
+        (a.shape().clone(), b.shape().clone())
+    };
+    let f = f32_binop(op)?;
+    let bm = cached_broadcast_map(&shape_a, &shape_b)?;
+    let out = {
+        let x = ctx.input(0)?.as_f32()?;
+        let y = ctx.input(1)?.as_f32()?;
+        let map = &bm.map;
+        let cost = f32_binop_cost(op) + 1;
+        planned_fill(ctx, 0, bm.out.num_elements(), cost, |i| {
+            let (ai, bi) = map[i];
+            f(x[ai], y[bi])
+        })
+    };
+    ctx.make_output(0, bm.out.clone(), TensorData::F32(out))
+}
+
 /// Memory-planned map of a scalar f32 function over input 0: in place
 /// over a dying input when the plan and refcount allow, else into the
-/// port's arena slot. Shared by the unary math kernels and
-/// `kernels::nn`'s ReLU/Sigmoid, so the forwarding/alloc contract lives
-/// in one place.
-pub(crate) fn planned_unary_map(ctx: &mut KernelContext, f: fn(f32) -> f32) -> Result<Tensor> {
+/// port's arena slot; element chunks run on the device's intra-op pool
+/// (`cost` in scalar-op units drives its inline threshold). Shared by
+/// the unary math kernels and `kernels::nn`'s ReLU/Sigmoid, so the
+/// forwarding/alloc/parallelism contract lives in one place.
+pub(crate) fn planned_unary_map(
+    ctx: &mut KernelContext,
+    f: fn(f32) -> f32,
+    cost: usize,
+) -> Result<Tensor> {
     if let Some(mut fw) = ctx.take_forward_f32(0) {
-        for x in fw.vec.iter_mut() {
-            *x = f(*x);
-        }
+        ctx.device.compute.parallel_for_mut(fw.vec.len(), cost, &mut fw.vec, |_r, xs| {
+            for x in xs.iter_mut() {
+                *x = f(*x);
+            }
+        });
         return fw.into_tensor();
     }
     let shape = ctx.input(0)?.shape().clone();
-    let mut out = ctx.alloc_f32(0, shape.num_elements());
-    for &v in ctx.input(0)?.as_f32()? {
-        out.push(f(v));
-    }
+    let out = {
+        let x = ctx.input(0)?.as_f32()?;
+        planned_fill(ctx, 0, shape.num_elements(), cost, |i| f(x[i]))
+    };
     ctx.make_output(0, shape, TensorData::F32(out))
 }
 
@@ -313,7 +471,29 @@ pub fn unary_elementwise_planned(ctx: &mut KernelContext, op: &str) -> Result<Te
     if ctx.input(0)?.dtype() != DType::F32 {
         return unary_elementwise(ctx.input(0)?, op);
     }
-    planned_unary_map(ctx, f32_unary(op)?)
+    planned_unary_map(ctx, f32_unary(op)?, f32_unary_cost(op))
+}
+
+/// How a comparison pairs its operand elements. The same-shape and
+/// single-element fast paths avoid touching the broadcast-map cache —
+/// an Equal over two big same-shape tensors needs no index map at all.
+#[derive(Clone, Copy)]
+enum PairIx<'m> {
+    Same,
+    ScalarRhs,
+    ScalarLhs,
+    Map(&'m [(usize, usize)]),
+}
+
+impl PairIx<'_> {
+    fn at(self, i: usize) -> (usize, usize) {
+        match self {
+            PairIx::Same => (i, i),
+            PairIx::ScalarRhs => (i, 0),
+            PairIx::ScalarLhs => (0, i),
+            PairIx::Map(m) => m[i],
+        }
+    }
 }
 
 /// Comparison / logical binary op → Bool tensor, with broadcasting.
@@ -325,11 +505,26 @@ pub fn compare_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
             b.dtype()
         )));
     }
-    let (out_shape, map) = broadcast_index_map(a.shape(), b.shape())?;
+    // Fast pairings first (the rank bounds mirror BinKind: a [1] operand
+    // against a lower-rank one grows the output, which only the general
+    // map represents); the pooled map is the general fallback.
+    let bm;
+    let (out_shape, ix) = if a.shape() == b.shape() {
+        (a.shape().clone(), PairIx::Same)
+    } else if b.num_elements() == 1 && b.shape().rank() <= a.shape().rank() {
+        (a.shape().clone(), PairIx::ScalarRhs)
+    } else if a.num_elements() == 1 && a.shape().rank() <= b.shape().rank() {
+        (b.shape().clone(), PairIx::ScalarLhs)
+    } else {
+        bm = cached_broadcast_map(a.shape(), b.shape())?;
+        (bm.out.clone(), PairIx::Map(&bm.map))
+    };
+    let n = out_shape.num_elements();
     fn cmp<T: PartialOrd + PartialEq + Copy>(
         x: &[T],
         y: &[T],
-        map: &[(usize, usize)],
+        n: usize,
+        ix: PairIx<'_>,
         op: &str,
     ) -> Result<Vec<bool>> {
         let f: fn(T, T) -> bool = match op {
@@ -341,13 +536,18 @@ pub fn compare_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
             "LessEqual" => |a, b| a <= b,
             _ => return Err(Status::unimplemented(format!("comparison {op}"))),
         };
-        Ok(map.iter().map(|&(ai, bi)| f(x[ai], y[bi])).collect())
+        Ok((0..n)
+            .map(|i| {
+                let (ai, bi) = ix.at(i);
+                f(x[ai], y[bi])
+            })
+            .collect())
     }
     let out = match (a.data(), b.data()) {
-        (TensorData::F32(x), TensorData::F32(y)) => cmp(x, y, &map, op)?,
-        (TensorData::F64(x), TensorData::F64(y)) => cmp(x, y, &map, op)?,
-        (TensorData::I32(x), TensorData::I32(y)) => cmp(x, y, &map, op)?,
-        (TensorData::I64(x), TensorData::I64(y)) => cmp(x, y, &map, op)?,
+        (TensorData::F32(x), TensorData::F32(y)) => cmp(x, y, n, ix, op)?,
+        (TensorData::F64(x), TensorData::F64(y)) => cmp(x, y, n, ix, op)?,
+        (TensorData::I32(x), TensorData::I32(y)) => cmp(x, y, n, ix, op)?,
+        (TensorData::I64(x), TensorData::I64(y)) => cmp(x, y, n, ix, op)?,
         (TensorData::Bool(x), TensorData::Bool(y)) => {
             let f: fn(bool, bool) -> bool = match op {
                 "Equal" => |a, b| a == b,
@@ -356,7 +556,12 @@ pub fn compare_elementwise(a: &Tensor, b: &Tensor, op: &str) -> Result<Tensor> {
                 "LogicalOr" => |a, b| a || b,
                 _ => return Err(Status::unimplemented(format!("bool comparison {op}"))),
             };
-            map.iter().map(|&(ai, bi)| f(x[ai], y[bi])).collect()
+            (0..n)
+                .map(|i| {
+                    let (ai, bi) = ix.at(i);
+                    f(x[ai], y[bi])
+                })
+                .collect()
         }
         _ => return Err(Status::unimplemented(format!("{op} for dtype {}", a.dtype()))),
     };
@@ -424,9 +629,54 @@ pub fn unary_elementwise(a: &Tensor, op: &str) -> Result<Tensor> {
 // reductions
 // ---------------------------------------------------------------------------
 
-/// Reduce over `axes` (empty/None ⇒ all axes), keep_dims=false.
-pub fn reduce(a: &Tensor, op: &str, axes: Option<&[i64]>) -> Result<Tensor> {
-    let rank = a.shape().rank();
+/// The accumulation kind of a reduction op.
+#[derive(Clone, Copy, PartialEq)]
+enum RedKind {
+    Sum,
+    Mean,
+    Prod,
+    Max,
+    Min,
+}
+
+impl RedKind {
+    fn parse(op: &str) -> Result<RedKind> {
+        Ok(match op {
+            "Sum" => RedKind::Sum,
+            "Mean" => RedKind::Mean,
+            "Prod" => RedKind::Prod,
+            "Max" => RedKind::Max,
+            "Min" => RedKind::Min,
+            _ => return Err(Status::unimplemented(format!("reduction {op}"))),
+        })
+    }
+
+    fn init(self) -> f64 {
+        match self {
+            RedKind::Sum | RedKind::Mean => 0.0,
+            RedKind::Prod => 1.0,
+            RedKind::Max => f64::NEG_INFINITY,
+            RedKind::Min => f64::INFINITY,
+        }
+    }
+}
+
+/// Validated reduction geometry shared by the serial and planned paths.
+struct ReducePlan {
+    kind: RedKind,
+    out_shape: Shape,
+    /// Input dims/strides of the kept axes, in kept (= output) order.
+    kept_dims: Vec<usize>,
+    kept_strides: Vec<usize>,
+    /// Input dims/strides of the reduced axes, in axis order.
+    red_dims: Vec<usize>,
+    red_strides: Vec<usize>,
+    reduce_n: usize,
+}
+
+fn reduce_plan(shape: &Shape, op: &str, axes: Option<&[i64]>) -> Result<ReducePlan> {
+    let kind = RedKind::parse(op)?;
+    let rank = shape.rank();
     let axes: Vec<usize> = match axes {
         None => (0..rank).collect(),
         Some(ax) if ax.is_empty() => (0..rank).collect(),
@@ -446,54 +696,93 @@ pub fn reduce(a: &Tensor, op: &str, axes: Option<&[i64]>) -> Result<Tensor> {
             v
         }
     };
-    let x = a.as_f32()?; // reductions implemented for f32 (the training dtype)
-    let in_dims = a.shape().dims().to_vec();
-    let out_dims: Vec<usize> =
-        (0..rank).filter(|d| !axes.contains(d)).map(|d| in_dims[d]).collect();
-    let out_shape = Shape(out_dims.clone());
-    let out_n = out_shape.num_elements();
-    let reduce_n: usize = axes.iter().map(|&d| in_dims[d]).product::<usize>().max(1);
-
-    // accumulate
-    let init = match op {
-        "Sum" | "Mean" => 0.0f64,
-        "Prod" => 1.0,
-        "Max" => f64::NEG_INFINITY,
-        "Min" => f64::INFINITY,
-        _ => return Err(Status::unimplemented(format!("reduction {op}"))),
-    };
-    let mut acc = vec![init; out_n];
-    let in_strides = a.shape().strides();
+    let in_dims = shape.dims();
+    let in_strides = shape.strides();
     let kept: Vec<usize> = (0..rank).filter(|d| !axes.contains(d)).collect();
-    // out strides for mapping input index -> output slot
-    let out_strides = out_shape.strides();
-    let mut idx = vec![0usize; rank];
-    for i in 0..a.num_elements() {
-        // compute multi-index of i
-        let mut rem = i;
-        for d in 0..rank {
-            idx[d] = rem / in_strides[d];
-            rem %= in_strides[d];
+    Ok(ReducePlan {
+        kind,
+        out_shape: Shape(kept.iter().map(|&d| in_dims[d]).collect()),
+        kept_dims: kept.iter().map(|&d| in_dims[d]).collect(),
+        kept_strides: kept.iter().map(|&d| in_strides[d]).collect(),
+        red_dims: axes.iter().map(|&d| in_dims[d]).collect(),
+        red_strides: axes.iter().map(|&d| in_strides[d]).collect(),
+        // True product: 0 when a reduced dim is empty (outputs then keep
+        // their init value, matching a serial sweep of zero elements).
+        reduce_n: axes.iter().map(|&d| in_dims[d]).product::<usize>(),
+    })
+}
+
+/// The reduction body: each output element gathers its reduce-space
+/// contributions in row-major order (exactly the sub-order a serial
+/// row-major sweep of the input delivers to that slot), accumulating in
+/// f64 — so every output is bit-identical to serial execution no matter
+/// how `pool` chunks the output range.
+fn reduce_into(pool: &ComputePool, x: &[f32], plan: &ReducePlan, out: &mut [f32]) {
+    let kind = plan.kind;
+    let init = kind.init();
+    let cost = plan.reduce_n.saturating_mul(2).max(1);
+    pool.parallel_for_mut(out.len(), cost, out, |r, os| {
+        // Mixed-radix counter over the reduce space; a full sweep wraps
+        // both the digits and the offset back to zero, so one counter
+        // serves every output element in the chunk.
+        let mut ridx = vec![0usize; plan.red_dims.len()];
+        let mut off = 0usize;
+        for (oi_rel, o) in os.iter_mut().enumerate() {
+            let oi = r.start + oi_rel;
+            // Unravel oi over the kept dims → base input offset.
+            let mut rem = oi;
+            let mut base = 0usize;
+            for d in (0..plan.kept_dims.len()).rev() {
+                base += (rem % plan.kept_dims[d]) * plan.kept_strides[d];
+                rem /= plan.kept_dims[d];
+            }
+            let mut acc = init;
+            for _ in 0..plan.reduce_n {
+                let v = x[base + off] as f64;
+                acc = match kind {
+                    RedKind::Sum | RedKind::Mean => acc + v,
+                    RedKind::Prod => acc * v,
+                    RedKind::Max => acc.max(v),
+                    RedKind::Min => acc.min(v),
+                };
+                for d in (0..ridx.len()).rev() {
+                    ridx[d] += 1;
+                    off += plan.red_strides[d];
+                    if ridx[d] < plan.red_dims[d] {
+                        break;
+                    }
+                    off -= plan.red_strides[d] * plan.red_dims[d];
+                    ridx[d] = 0;
+                }
+            }
+            if kind == RedKind::Mean {
+                acc /= plan.reduce_n.max(1) as f64;
+            }
+            *o = acc as f32;
         }
-        let mut oi = 0;
-        for (k, &d) in kept.iter().enumerate() {
-            oi += idx[d] * out_strides[k];
-        }
-        let v = x[i] as f64;
-        acc[oi] = match op {
-            "Sum" | "Mean" => acc[oi] + v,
-            "Prod" => acc[oi] * v,
-            "Max" => acc[oi].max(v),
-            "Min" => acc[oi].min(v),
-            _ => unreachable!(),
-        };
+    });
+}
+
+/// Reduce over `axes` (empty/None ⇒ all axes), keep_dims=false. Serial
+/// heap-allocating convenience; the kernel path is [`reduce_planned`].
+pub fn reduce(a: &Tensor, op: &str, axes: Option<&[i64]>) -> Result<Tensor> {
+    let plan = reduce_plan(a.shape(), op, axes)?;
+    let x = a.as_f32()?; // reductions implemented for f32 (the training dtype)
+    let mut out = vec![0f32; plan.out_shape.num_elements()];
+    reduce_into(&ComputePool::serial(), x, &plan, &mut out);
+    Tensor::new(plan.out_shape.clone(), TensorData::F32(out))
+}
+
+/// Memory-planned [`reduce`]: the output lands in the node's arena slot
+/// and output chunks run on the device's intra-op pool.
+pub(crate) fn reduce_planned(ctx: &KernelContext, op: &str, axes: Option<&[i64]>) -> Result<Tensor> {
+    let plan = reduce_plan(ctx.input(0)?.shape(), op, axes)?;
+    let mut out = ctx.alloc_f32_zeroed(0, plan.out_shape.num_elements());
+    {
+        let x = ctx.input(0)?.as_f32()?;
+        reduce_into(&ctx.device.compute, x, &plan, &mut out);
     }
-    if op == "Mean" {
-        for v in &mut acc {
-            *v /= reduce_n as f64;
-        }
-    }
-    Tensor::new(out_shape, TensorData::F32(acc.into_iter().map(|v| v as f32).collect()))
+    ctx.make_output(0, plan.out_shape.clone(), TensorData::F32(out))
 }
 
 /// ArgMax along `axis` → I64 tensor.
@@ -611,7 +900,7 @@ pub(super) fn register(r: &mut KernelRegistry) {
                     Some(a) => Some(a.as_list_i64()?.to_vec()),
                     None => None,
                 };
-                Ok(vec![reduce(ctx.input(0)?, &name, axes.as_deref())?])
+                Ok(vec![reduce_planned(ctx, &name, axes.as_deref())?])
             })))
         });
     }
@@ -763,6 +1052,33 @@ mod tests {
         // negative axis
         let rows2 = reduce(&a, "Sum", Some(&[-1])).unwrap();
         assert_eq!(rows2.as_f32().unwrap(), &[6., 15.]);
+    }
+
+    #[test]
+    fn reduce_rank3_middle_axis_and_ops() {
+        // Non-trailing axes exercise the strided gather of the rewritten
+        // reduction (the parallel per-output form).
+        let v: Vec<f32> = (0..24).map(|i| (i as f32) * 0.5 - 3.0).collect();
+        let a = t(vec![2, 3, 4], v.clone());
+        let s = reduce(&a, "Sum", Some(&[1])).unwrap();
+        assert_eq!(s.shape().dims(), &[2, 4]);
+        // Manual check of one slot: out[0,1] = a[0,0,1]+a[0,1,1]+a[0,2,1].
+        assert_eq!(s.as_f32().unwrap()[1], v[1] + v[5] + v[9]);
+        let m = reduce(&a, "Max", Some(&[0, 2])).unwrap();
+        assert_eq!(m.shape().dims(), &[3]);
+        assert_eq!(m.as_f32().unwrap()[0], v[15]); // max over a[:,0,:]
+        let p = reduce(&t(vec![2, 2], vec![2., 3., 4., 5.]), "Prod", Some(&[0])).unwrap();
+        assert_eq!(p.as_f32().unwrap(), &[8., 15.]);
+    }
+
+    #[test]
+    fn broadcast_map_is_pooled() {
+        let a = Shape(vec![3, 1]);
+        let b = Shape(vec![4]);
+        let m1 = cached_broadcast_map(&a, &b).unwrap();
+        let m2 = cached_broadcast_map(&a, &b).unwrap();
+        assert!(Arc::ptr_eq(&m1, &m2));
+        assert_eq!(m1.out.dims(), &[3, 4]);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! it heavily.
 
 use super::{KernelContext, KernelRegistry};
+use crate::device::ComputePool;
 use crate::error::{Result, Status};
 use crate::tensor::{Shape, Tensor, TensorData};
 
@@ -25,84 +26,197 @@ fn matmul_dims(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<(usize, usi
     Ok((m, k, n))
 }
 
-/// C[m,n] = A·B with optional logical transposes. Row-major.
+/// C[m,n] = A·B with optional logical transposes. Row-major. Serial
+/// convenience over [`matmul_with_pool`] (baselines and tests).
 pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
+    matmul_with_pool(&ComputePool::serial(), a, b, ta, tb)
+}
+
+/// [`matmul`] running its row-panel loop on `pool` (the kernel path uses
+/// the device's intra-op pool; `benches/parallel.rs` drives this
+/// directly). Results are bit-identical for every pool size.
+pub fn matmul_with_pool(
+    pool: &ComputePool,
+    a: &Tensor,
+    b: &Tensor,
+    ta: bool,
+    tb: bool,
+) -> Result<Tensor> {
     let (m, k, n) = matmul_dims(a, b, ta, tb)?;
     let mut out = vec![0f32; m * n];
-    matmul_impl(a.as_f32()?, b.as_f32()?, m, k, n, ta, tb, &mut out);
+    matmul_impl(pool, a.as_f32()?, b.as_f32()?, m, k, n, ta, tb, &mut out);
     Tensor::new(Shape(vec![m, n]), TensorData::F32(out))
 }
+
+/// k-dimension tile: one B panel of `KC × n_tile` f32s stays hot in L2
+/// while a chunk's rows stream over it.
+const KC: usize = 128;
+/// j-dimension tile for the (ff)/(tf) axpy forms: bounds the C/B row
+/// segments the inner loop touches so they fit L1.
+const NC: usize = 512;
 
 /// The four-layout multiply into caller-provided storage
 /// (`out.len() == m*n`, zeroed) — dims come pre-resolved from
 /// [`matmul_dims`] so they are validated exactly once per invocation.
+///
+/// Cache-blocked and intra-op parallel: the outer loop over C's row
+/// panels runs on `pool.parallel_for_mut` (disjoint `&mut` row views),
+/// with k (and where it pays, j) tiled inside each panel. Every C[i,j]
+/// accumulates its k-contributions in ascending-k order no matter how
+/// rows are chunked, so results are bit-identical across thread counts.
 #[allow(clippy::too_many_arguments)]
-fn matmul_impl(av: &[f32], bv: &[f32], m: usize, k: usize, n: usize, ta: bool, tb: bool, out: &mut [f32]) {
+fn matmul_impl(
+    pool: &ComputePool,
+    av: &[f32],
+    bv: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    tb: bool,
+    out: &mut [f32],
+) {
     debug_assert_eq!(out.len(), m * n);
+    // Matvec row case (batch-1 inference: [1,k]·[k,n]): a single output
+    // row gives the row-panel loop nothing to split, so distribute the
+    // output *columns* instead. With m == 1, A is k contiguous values
+    // whichever way it is transposed, and B reads collapse to two
+    // layouts.
+    if m == 1 {
+        let col_cost = 2usize.saturating_mul(k).max(1);
+        if tb {
+            // B is [n, k]: out[j] = dot(a, B[j, :]), both contiguous.
+            pool.parallel_for_mut(n, col_cost, out, |cols, c| {
+                for (j_rel, cj) in c.iter_mut().enumerate() {
+                    let brow = &bv[(cols.start + j_rel) * k..(cols.start + j_rel + 1) * k];
+                    let mut s = 0f32;
+                    for kk in 0..k {
+                        s += av[kk] * brow[kk];
+                    }
+                    *cj = s;
+                }
+            });
+        } else {
+            // B is [k, n]: out[j] += a[kk]·B[kk, j], k ascending per
+            // column chunk — bit-identical at any chunking.
+            pool.parallel_for_mut(n, col_cost, out, |cols, c| {
+                for kk in 0..k {
+                    let aik = av[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bv[kk * n + cols.start..kk * n + cols.end];
+                    for (cj, &bj) in c.iter_mut().zip(brow) {
+                        *cj += aik * bj;
+                    }
+                }
+            });
+        }
+        return;
+    }
+    // One output row costs ~2kn flops; this drives chunking + the
+    // small-matrix inline path.
+    let row_cost = 2usize.saturating_mul(k).saturating_mul(n).max(1);
     match (ta, tb) {
         (false, false) => {
-            // ikj loop: streams B rows, vectorizes the inner j loop.
-            for i in 0..m {
-                for kk in 0..k {
-                    let aik = av[i * k + kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bv[kk * n..(kk + 1) * n];
-                    let crow = &mut out[i * n..(i + 1) * n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
+            // Blocked ikj: for each k-tile, stream the panel's rows over
+            // the resident B tile, vectorizing the inner j loop.
+            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
+                let r0 = rows.start;
+                for kb in (0..k).step_by(KC) {
+                    let kend = (kb + KC).min(k);
+                    for jb in (0..n).step_by(NC) {
+                        let jend = (jb + NC).min(n);
+                        for i in rows.clone() {
+                            let crow = &mut c[(i - r0) * n + jb..(i - r0) * n + jend];
+                            for kk in kb..kend {
+                                let aik = av[i * k + kk];
+                                if aik == 0.0 {
+                                    continue;
+                                }
+                                let brow = &bv[kk * n + jb..kk * n + jend];
+                                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                                    *cj += aik * bj;
+                                }
+                            }
+                        }
                     }
                 }
-            }
+            });
         }
         (false, true) => {
-            // B is [n, k] logically transposed: dot products over contiguous rows.
-            for i in 0..m {
-                let arow = &av[i * k..(i + 1) * k];
-                for j in 0..n {
-                    let brow = &bv[j * k..(j + 1) * k];
-                    let mut s = 0f32;
-                    for kk in 0..k {
-                        s += arow[kk] * brow[kk];
+            // B is [n, k] logically transposed: dot products over
+            // contiguous rows — already cache-friendly, so only the row
+            // panels are distributed.
+            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
+                let r0 = rows.start;
+                for i in rows.clone() {
+                    let arow = &av[i * k..(i + 1) * k];
+                    let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+                    for (j, cj) in crow.iter_mut().enumerate() {
+                        let brow = &bv[j * k..(j + 1) * k];
+                        let mut s = 0f32;
+                        for kk in 0..k {
+                            s += arow[kk] * brow[kk];
+                        }
+                        *cj = s;
                     }
-                    out[i * n + j] = s;
                 }
-            }
+            });
         }
         (true, false) => {
-            // A is [k, m] logically transposed.
-            for kk in 0..k {
-                let arow = &av[kk * m..(kk + 1) * m];
-                let brow = &bv[kk * n..(kk + 1) * n];
-                for i in 0..m {
-                    let aik = arow[i];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let crow = &mut out[i * n..(i + 1) * n];
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
+            // A is [k, m] logically transposed: k-tiled axpy over the
+            // panel's rows (A is read a row per kk, B a row per kk).
+            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
+                let r0 = rows.start;
+                for kb in (0..k).step_by(KC) {
+                    let kend = (kb + KC).min(k);
+                    for jb in (0..n).step_by(NC) {
+                        let jend = (jb + NC).min(n);
+                        for i in rows.clone() {
+                            let crow = &mut c[(i - r0) * n + jb..(i - r0) * n + jend];
+                            for kk in kb..kend {
+                                let aik = av[kk * m + i];
+                                if aik == 0.0 {
+                                    continue;
+                                }
+                                let brow = &bv[kk * n + jb..kk * n + jend];
+                                for (cj, &bj) in crow.iter_mut().zip(brow) {
+                                    *cj += aik * bj;
+                                }
+                            }
+                        }
                     }
                 }
-            }
+            });
         }
         (true, true) => {
-            for i in 0..m {
-                for j in 0..n {
-                    let mut s = 0f32;
-                    for kk in 0..k {
-                        s += av[kk * m + i] * bv[j * k + kk];
+            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
+                let r0 = rows.start;
+                for i in rows.clone() {
+                    for j in 0..n {
+                        let mut s = 0f32;
+                        for kk in 0..k {
+                            s += av[kk * m + i] * bv[j * k + kk];
+                        }
+                        c[(i - r0) * n + j] = s;
                     }
-                    out[i * n + j] = s;
                 }
-            }
+            });
         }
     }
 }
 
 /// Batched matmul over leading dim: [b,m,k] x [b,k,n] -> [b,m,n].
+/// Serial convenience over [`batch_matmul_with_pool`].
 pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    batch_matmul_with_pool(&ComputePool::serial(), a, b)
+}
+
+/// [`batch_matmul`] distributing the batch entries over `pool` (each
+/// batch element is an independent multiply writing a disjoint `m×n`
+/// slab, so chunking cannot change any result bit).
+pub fn batch_matmul_with_pool(pool: &ComputePool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let ad = a.shape().dims();
     let bd = b.shape().dims();
     if ad.len() != 3 || bd.len() != 3 || ad[0] != bd[0] || ad[2] != bd[1] {
@@ -116,22 +230,26 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let av = a.as_f32()?;
     let bv = b.as_f32()?;
     let mut out = vec![0f32; bs * m * n];
-    for bi in 0..bs {
-        let ao = bi * m * k;
-        let bo = bi * k * n;
-        let co = bi * m * n;
-        for i in 0..m {
-            for kk in 0..k {
-                let aik = av[ao + i * k + kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                for j in 0..n {
-                    out[co + i * n + j] += aik * bv[bo + kk * n + j];
+    let batch_cost = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n).max(1);
+    pool.parallel_for_mut(bs, batch_cost, &mut out, |batches, c| {
+        let b0 = batches.start;
+        for bi in batches.clone() {
+            let ao = bi * m * k;
+            let bo = bi * k * n;
+            let co = (bi - b0) * m * n;
+            for i in 0..m {
+                for kk in 0..k {
+                    let aik = av[ao + i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    for j in 0..n {
+                        c[co + i * n + j] += aik * bv[bo + kk * n + j];
+                    }
                 }
             }
         }
-    }
+    });
     Tensor::new(Shape(vec![bs, m, n]), TensorData::F32(out))
 }
 
@@ -234,14 +352,25 @@ pub(super) fn register(r: &mut KernelRegistry) {
     r.add_sync("MatMul", |ctx: &mut KernelContext| {
         let ta = ctx.node.attr_opt("transpose_a").and_then(|a| a.as_bool().ok()).unwrap_or(false);
         let tb = ctx.node.attr_opt("transpose_b").and_then(|a| a.as_bool().ok()).unwrap_or(false);
-        // Memory-planned: accumulate into the port's arena slot.
+        // Memory-planned: accumulate into the port's arena slot, row
+        // panels distributed over the device's intra-op pool.
         let (m, k, n) = matmul_dims(ctx.input(0)?, ctx.input(1)?, ta, tb)?;
         let mut out = ctx.alloc_f32_zeroed(0, m * n);
-        matmul_impl(ctx.input(0)?.as_f32()?, ctx.input(1)?.as_f32()?, m, k, n, ta, tb, &mut out);
+        matmul_impl(
+            &ctx.device.compute,
+            ctx.input(0)?.as_f32()?,
+            ctx.input(1)?.as_f32()?,
+            m,
+            k,
+            n,
+            ta,
+            tb,
+            &mut out,
+        );
         Ok(vec![ctx.make_output(0, Shape(vec![m, n]), TensorData::F32(out))?])
     });
     r.add_sync("BatchMatMul", |ctx| {
-        Ok(vec![batch_matmul(ctx.input(0)?, ctx.input(1)?)?])
+        Ok(vec![batch_matmul_with_pool(&ctx.device.compute, ctx.input(0)?, ctx.input(1)?)?])
     });
     r.add_sync("MatrixInverse", |ctx| Ok(vec![matrix_inverse(ctx.input(0)?)?]));
     r.add_sync("MatrixDeterminant", |ctx| Ok(vec![matrix_determinant(ctx.input(0)?)?]));
@@ -327,6 +456,45 @@ mod tests {
         let m = t(vec![3, 3], vec![6., 1., 1., 4., -2., 5., 2., 8., 7.]);
         let d3 = matrix_determinant(&m).unwrap().scalar_value_f32().unwrap();
         assert!((d3 + 306.0).abs() < 1e-2, "{d3}");
+    }
+
+    #[test]
+    fn matmul_bit_identical_across_pool_sizes() {
+        // Odd, non-tile-multiple dims; every transpose combo; pools of
+        // 1/2/4/8 must agree bit for bit (the determinism contract).
+        let fill = |r: usize, c: usize, seed: u32| -> Tensor {
+            let v: Vec<f32> = (0..r * c)
+                .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 * 0.013 - 6.5)
+                .collect();
+            t(vec![r, c], v)
+        };
+        // (m=1, …) exercises the matvec column-split path.
+        for (m, k, n) in [(67, 131, 45), (1, 131, 4096)] {
+            for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {
+                let a = if ta { fill(k, m, 1) } else { fill(m, k, 1) };
+                let b = if tb { fill(n, k, 2) } else { fill(k, n, 2) };
+                let base = matmul_with_pool(&ComputePool::serial(), &a, &b, ta, tb).unwrap();
+                for threads in [2, 4, 8] {
+                    let pool = ComputePool::new(threads, "test-mm");
+                    let got = matmul_with_pool(&pool, &a, &b, ta, tb).unwrap();
+                    assert_eq!(
+                        got.as_f32().unwrap(),
+                        base.as_f32().unwrap(),
+                        "m={m} ta={ta} tb={tb} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_matmul_bit_identical_across_pool_sizes() {
+        let a = t(vec![5, 17, 23], (0..5 * 17 * 23).map(|i| (i % 97) as f32 * 0.07 - 3.0).collect());
+        let b = t(vec![5, 23, 11], (0..5 * 23 * 11).map(|i| (i % 89) as f32 * 0.05 - 2.0).collect());
+        let base = batch_matmul(&a, &b).unwrap();
+        let pool = ComputePool::new(4, "test-bmm");
+        let got = batch_matmul_with_pool(&pool, &a, &b).unwrap();
+        assert_eq!(got.as_f32().unwrap(), base.as_f32().unwrap());
     }
 
     #[test]

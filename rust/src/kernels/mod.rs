@@ -189,6 +189,20 @@ impl KernelContext {
         self.resources.container(&self.node.container)
     }
 
+    // ---- intra-op parallelism (the device's compute pool) ---------------
+
+    /// Run `f` over `0..total` in deterministic contiguous chunks on this
+    /// device's intra-op compute pool — inline on the calling thread when
+    /// `total × cost_per_item` is small, so tiny tensors never pay
+    /// synchronization. See [`crate::device::ComputePool::parallel_for`]
+    /// for the determinism and panic contract.
+    pub fn parallel_for<F>(&self, total: usize, cost_per_item: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        self.device.compute.parallel_for(total, cost_per_item, f)
+    }
+
     // ---- step-memory-plan hooks (opt-in per kernel; see crate::memory) --
 
     /// An output Vec for an f32 result of `n` elements at `port`: checked

@@ -4,8 +4,13 @@
 //! reference them).
 
 use super::{KernelContext, KernelRegistry};
+use crate::device::ComputePool;
 use crate::error::{Result, Status};
 use crate::tensor::{Shape, Tensor, TensorData};
+
+/// Approximate per-element scalar-op cost of a softmax row pass (exp +
+/// max + normalize), driving the intra-op inline threshold.
+const SOFTMAX_ELEM_COST: usize = 16;
 
 /// Scalar ReLU, shared with the fused-elementwise interpreter
 /// (`kernels::fused`) so fused and unfused graphs agree exactly.
@@ -44,40 +49,85 @@ pub fn sigmoid(x: &Tensor) -> Result<Tensor> {
     )
 }
 
+/// The softmax row body: rows are independent and each is computed with
+/// a fixed operation order, so distributing rows over `pool` is
+/// bit-identical to serial for every thread count.
+fn softmax_rows(pool: &ComputePool, v: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    pool.parallel_for_mut(rows, cols.saturating_mul(SOFTMAX_ELEM_COST).max(1), out, |rr, o| {
+        for (ri, r) in rr.enumerate() {
+            let row = &v[r * cols..(r + 1) * cols];
+            let orow = &mut o[ri * cols..(ri + 1) * cols];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0f32;
+            for c in 0..cols {
+                let e = (row[c] - m).exp();
+                orow[c] = e;
+                sum += e;
+            }
+            for oc in orow.iter_mut() {
+                *oc /= sum;
+            }
+        }
+    });
+}
+
+/// The log-softmax row body (see [`softmax_rows`] for the parallelism
+/// contract).
+fn log_softmax_rows(pool: &ComputePool, v: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    pool.parallel_for_mut(rows, cols.saturating_mul(SOFTMAX_ELEM_COST).max(1), out, |rr, o| {
+        for (ri, r) in rr.enumerate() {
+            let row = &v[r * cols..(r + 1) * cols];
+            let orow = &mut o[ri * cols..(ri + 1) * cols];
+            let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let lse = row.iter().map(|&a| (a - m).exp()).sum::<f32>().ln() + m;
+            for (oc, &rc) in orow.iter_mut().zip(row) {
+                *oc = rc - lse;
+            }
+        }
+    });
+}
+
 /// Row softmax over the last axis of a 2-D tensor (numerically stable).
+/// Serial heap convenience; the kernel path is [`softmax_planned`].
 pub fn softmax(x: &Tensor) -> Result<Tensor> {
     let (rows, cols) = rank2(x, "SoftMax")?;
     let v = x.as_f32()?;
     let mut out = vec![0f32; v.len()];
-    for r in 0..rows {
-        let row = &v[r * cols..(r + 1) * cols];
-        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut sum = 0f32;
-        for c in 0..cols {
-            let e = (row[c] - m).exp();
-            out[r * cols + c] = e;
-            sum += e;
-        }
-        for c in 0..cols {
-            out[r * cols + c] /= sum;
-        }
-    }
+    softmax_rows(&ComputePool::serial(), v, rows, cols, &mut out);
     Tensor::new(x.shape().clone(), TensorData::F32(out))
+}
+
+/// Memory-planned [`softmax`]: output in the node's arena slot, rows
+/// distributed over the device's intra-op pool.
+pub(crate) fn softmax_planned(ctx: &KernelContext) -> Result<Tensor> {
+    let (rows, cols) = rank2(ctx.input(0)?, "SoftMax")?;
+    let shape = ctx.input(0)?.shape().clone();
+    let mut out = ctx.alloc_f32_zeroed(0, rows * cols);
+    {
+        let v = ctx.input(0)?.as_f32()?;
+        softmax_rows(&ctx.device.compute, v, rows, cols, &mut out);
+    }
+    ctx.make_output(0, shape, TensorData::F32(out))
 }
 
 pub fn log_softmax(x: &Tensor) -> Result<Tensor> {
     let (rows, cols) = rank2(x, "LogSoftmax")?;
     let v = x.as_f32()?;
     let mut out = vec![0f32; v.len()];
-    for r in 0..rows {
-        let row = &v[r * cols..(r + 1) * cols];
-        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let lse = row.iter().map(|&a| (a - m).exp()).sum::<f32>().ln() + m;
-        for c in 0..cols {
-            out[r * cols + c] = row[c] - lse;
-        }
-    }
+    log_softmax_rows(&ComputePool::serial(), v, rows, cols, &mut out);
     Tensor::new(x.shape().clone(), TensorData::F32(out))
+}
+
+/// Memory-planned [`log_softmax`] (see [`softmax_planned`]).
+pub(crate) fn log_softmax_planned(ctx: &KernelContext) -> Result<Tensor> {
+    let (rows, cols) = rank2(ctx.input(0)?, "LogSoftmax")?;
+    let shape = ctx.input(0)?.shape().clone();
+    let mut out = ctx.alloc_f32_zeroed(0, rows * cols);
+    {
+        let v = ctx.input(0)?.as_f32()?;
+        log_softmax_rows(&ctx.device.compute, v, rows, cols, &mut out);
+    }
+    ctx.make_output(0, shape, TensorData::F32(out))
 }
 
 /// BiasAdd: add a [C] bias over the last axis.
@@ -419,13 +469,15 @@ pub(super) fn register(r: &mut KernelRegistry) {
     // ReLU/Sigmoid go through the shared memory-planned map
     // (`math::planned_unary_map`) with the same scalar functions the
     // fused interpreter uses, so planned/unplanned/fused all agree.
-    r.add_sync("ReLU", |ctx| Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_relu)?]));
+    r.add_sync("ReLU", |ctx| {
+        Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_relu, 1)?])
+    });
     r.add_sync("ReluGrad", |ctx| Ok(vec![relu_grad(ctx.input(0)?, ctx.input(1)?)?]));
     r.add_sync("Sigmoid", |ctx| {
-        Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_sigmoid)?])
+        Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_sigmoid, 12)?])
     });
-    r.add_sync("SoftMax", |ctx| Ok(vec![softmax(ctx.input(0)?)?]));
-    r.add_sync("LogSoftmax", |ctx| Ok(vec![log_softmax(ctx.input(0)?)?]));
+    r.add_sync("SoftMax", |ctx| Ok(vec![softmax_planned(ctx)?]));
+    r.add_sync("LogSoftmax", |ctx| Ok(vec![log_softmax_planned(ctx)?]));
     r.add_sync("BiasAdd", |ctx| Ok(vec![bias_add(ctx.input(0)?, ctx.input(1)?)?]));
     r.add_sync("BiasAddGrad", |ctx| Ok(vec![bias_add_grad(ctx.input(0)?)?]));
     r.add_sync("SoftmaxCrossEntropyWithLogits", |ctx| {

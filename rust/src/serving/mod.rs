@@ -44,6 +44,15 @@
 //! slots grow to the high-water batch size) instead of the allocator.
 //! [`ModelServer::memory_stats`] exposes the per-lane reuse counters.
 //!
+//! Batching also composes with *intra-op* parallelism
+//! (`SessionOptions::intra_op_threads`, `crate::device::ComputePool`):
+//! coalescing requests is exactly what turns many tiny kernels — each
+//! below the `parallel_for` inline threshold — into one large batched
+//! MatMul/activation whose row panels fan out across the device's
+//! compute pool. Size `intra_op_threads` to the cores you want a single
+//! batch to use; results are bit-identical at every setting, so the
+//! knob is pure throughput tuning.
+//!
 //! ```no_run
 //! use rustflow::serving::{BatchConfig, ModelServer};
 //! use rustflow::{GraphBuilder, Session, SessionOptions, Tensor, DType};

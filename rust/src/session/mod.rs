@@ -31,7 +31,15 @@ use std::sync::{Arc, Mutex};
 #[derive(Clone)]
 pub struct SessionOptions {
     pub devices: usize,
+    /// Inter-op parallelism: threads per device dispatching ready nodes.
     pub threads_per_device: usize,
+    /// Intra-op parallelism: lanes in each device's compute pool, which
+    /// `parallel_for` fans a single large kernel out over (the OSDI'16
+    /// inter-op/intra-op split). 1 ⇒ fully serial kernels. Results are
+    /// bit-identical for every setting (the pool's determinism
+    /// contract), and workers spawn lazily, so raising this only costs
+    /// threads once a large kernel actually runs.
+    pub intra_op_threads: usize,
     /// §5 build-time constant folding on pruned graphs.
     pub enable_constant_folding: bool,
     /// §5 arithmetic-identity simplification on pruned graphs.
@@ -57,6 +65,7 @@ impl Default for SessionOptions {
         SessionOptions {
             devices: 1,
             threads_per_device: 2,
+            intra_op_threads: 2,
             enable_constant_folding: true,
             enable_arithmetic_simplification: true,
             enable_cse: true,
@@ -129,7 +138,11 @@ pub struct Session {
 
 impl Session {
     pub fn new(graph: Graph, options: SessionOptions) -> Session {
-        let devices = DeviceSet::local(options.devices, options.threads_per_device);
+        let devices = DeviceSet::local_with_intra_op(
+            options.devices,
+            options.threads_per_device,
+            options.intra_op_threads,
+        );
         Session::with_devices(graph, devices, options)
     }
 

@@ -1,0 +1,227 @@
+//! Intra-op parallelism contract tests: kernel results must be
+//! *bit-identical* for every `SessionOptions::intra_op_threads` setting
+//! (the `ComputePool` determinism contract — deterministic contiguous
+//! chunks, each output element computed by exactly one chunk with a
+//! fixed operation order), and a panic in an intra-op worker must fail
+//! the step with a `Status` instead of hanging the executor or aborting
+//! the process.
+
+use rustflow::graph::Node;
+use rustflow::kernels::{register_kernel, Kernel, KernelContext};
+use rustflow::ops::{register_op, Arity, Category, OpDef};
+use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
+use std::sync::Arc;
+
+/// Deterministic pseudo-random fill (no RNG dependency; same bytes on
+/// every run and platform).
+fn fill(n: usize, seed: u32) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u32).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 2000) as f32) * 0.013 - 13.0
+        })
+        .collect()
+}
+
+/// Build + run the same graph at the given intra-op width, returning the
+/// fetched tensors' raw f32 data.
+fn run_with_intra(
+    intra: usize,
+    build: impl FnOnce(&mut GraphBuilder) -> Vec<String>,
+    feeds: &[(&str, Tensor)],
+) -> Vec<Vec<f32>> {
+    let mut b = GraphBuilder::new();
+    let fetches = build(&mut b);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { intra_op_threads: intra, ..Default::default() },
+    );
+    let fetch_refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+    let out = sess.run(feeds, &fetch_refs, &[]).unwrap();
+    out.iter().map(|t| t.as_f32().unwrap().to_vec()).collect()
+}
+
+/// Assert the graph fetches identical bytes at 1/2/4/8 intra-op threads.
+fn assert_bit_identical(
+    build: impl Fn(&mut GraphBuilder) -> Vec<String>,
+    feeds: &[(&str, Tensor)],
+    what: &str,
+) {
+    let base = run_with_intra(1, &build, feeds);
+    for threads in [2usize, 4, 8] {
+        let got = run_with_intra(threads, &build, feeds);
+        assert_eq!(got.len(), base.len());
+        for (i, (g, b)) in got.iter().zip(&base).enumerate() {
+            assert_eq!(g, b, "{what}: fetch {i} differs at intra_op_threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn matmul_bit_identical_all_transposes_odd_dims() {
+    // Non-multiple-of-tile dims (KC=128/NC=512 tiles never divide these)
+    // and every transpose-flag combination, fed so nothing folds away.
+    let (m, k, n) = (97usize, 131usize, 43usize);
+    for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {
+        let a_dims = if ta { vec![k, m] } else { vec![m, k] };
+        let b_dims = if tb { vec![n, k] } else { vec![k, n] };
+        let a = Tensor::from_f32(a_dims, fill(m * k, 1)).unwrap();
+        let feeds = [("a", a)];
+        let build = |b: &mut GraphBuilder| {
+            let x = b.placeholder("a", rustflow::DType::F32).unwrap();
+            let w = b.constant(Tensor::from_f32(b_dims.clone(), fill(k * n, 2)).unwrap());
+            let mm = b.matmul_t(x, w, ta, tb);
+            vec![format!("{}:0", b.graph.node(mm.node).name)]
+        };
+        assert_bit_identical(build, &feeds, &format!("matmul ta={ta} tb={tb}"));
+    }
+}
+
+#[test]
+fn fused_broadcast_chain_bit_identical() {
+    // tanh(x * scale + row_bias): fuses into one FusedElementwise with a
+    // scalar extra and a row-broadcast ([cols] vs [rows, cols]) extra —
+    // the strided fast path, chunked mid-tensor by the pool.
+    let (rows, cols) = (150usize, 271usize);
+    let x = Tensor::from_f32(vec![rows, cols], fill(rows * cols, 3)).unwrap();
+    let feeds = [("x", x)];
+    let build = |b: &mut GraphBuilder| {
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let scale = b.scalar(1.7);
+        let bias = b.constant(Tensor::from_f32(vec![cols], fill(cols, 4)).unwrap());
+        let m = b.mul(x, scale);
+        let s = b.add(m, bias);
+        let t = b.tanh(s);
+        vec![format!("{}:0", b.graph.node(t.node).name)]
+    };
+    assert_bit_identical(build, &feeds, "fused broadcast chain");
+}
+
+#[test]
+fn softmax_and_reductions_bit_identical() {
+    let (rows, cols) = (307usize, 157usize);
+    let x = Tensor::from_f32(vec![rows, cols], fill(rows * cols, 5)).unwrap();
+    let feeds = [("x", x)];
+    let build = |b: &mut GraphBuilder| {
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let sm = b.softmax(x);
+        let row_sum = b.reduce_sum(x, Some(vec![1])); // trailing axis
+        let col_mean = b.reduce_mean(x, Some(vec![0])); // leading (strided) axis
+        let total = b.reduce_sum(x, None); // full reduce (scalar)
+        [sm, row_sum, col_mean, total]
+            .iter()
+            .map(|e| format!("{}:0", b.graph.node(e.node).name))
+            .collect()
+    };
+    assert_bit_identical(build, &feeds, "softmax + reductions");
+}
+
+#[test]
+fn general_broadcast_binary_bit_identical() {
+    // [rows,1] * [1,cols]: neither the same-shape nor the scalar fast
+    // path — the pooled general-broadcast index map, run in parallel.
+    let (rows, cols) = (211usize, 173usize);
+    let col = Tensor::from_f32(vec![rows, 1], fill(rows, 6)).unwrap();
+    let feeds = [("c", col)];
+    let build = |b: &mut GraphBuilder| {
+        let c = b.placeholder("c", rustflow::DType::F32).unwrap();
+        let row = b.constant(Tensor::from_f32(vec![1, cols], fill(cols, 7)).unwrap());
+        let m = b.mul(c, row);
+        vec![format!("{}:0", b.graph.node(m.node).name)]
+    };
+    assert_bit_identical(build, &feeds, "general broadcast binary");
+}
+
+#[test]
+fn deep_mlp_step_bit_identical() {
+    // A whole model step (matmul → bias-add → tanh stack, then softmax
+    // and a mean loss): the composition must stay deterministic too.
+    let dim = 96usize;
+    let x = Tensor::from_f32(vec![dim, dim], fill(dim * dim, 8)).unwrap();
+    let feeds = [("x", x)];
+    let build = |b: &mut GraphBuilder| {
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let mut h = x;
+        for l in 0..4 {
+            let w = b.constant(Tensor::from_f32(vec![dim, dim], fill(dim * dim, 20 + l)).unwrap());
+            let bias = b.constant(Tensor::from_f32(vec![dim], fill(dim, 40 + l)).unwrap());
+            let mm = b.matmul(h, w);
+            let s = b.add(mm, bias);
+            h = b.tanh(s);
+        }
+        let sm = b.softmax(h);
+        let loss = b.reduce_mean(sm, None);
+        vec![
+            format!("{}:0", b.graph.node(sm.node).name),
+            format!("{}:0", b.graph.node(loss.node).name),
+        ]
+    };
+    assert_bit_identical(build, &feeds, "deep mlp step");
+}
+
+fn one_output(_: &Node) -> rustflow::Result<usize> {
+    Ok(1)
+}
+
+/// Register the panicking test op (op def + CPU kernel) once.
+fn install_panic_op() {
+    // Ignore AlreadyExists when several tests in this binary race here.
+    let _ = register_op(OpDef {
+        name: "TestPanicOp",
+        category: Category::ElementWise,
+        arity: Arity::Exact(1),
+        num_outputs: one_output,
+        stateful: false,
+        is_async: false,
+    });
+    register_kernel(
+        "TestPanicOp",
+        "cpu",
+        Arc::new(|_node: &rustflow::kernels::NodeInfo| {
+            Ok(Kernel::Sync(Box::new(|ctx: &mut KernelContext| {
+                // Large enough to clear the inline threshold so the panic
+                // really fires inside pool workers when intra > 1 (and on
+                // the calling thread when intra == 1 — both must become a
+                // Status, not a hang or abort).
+                ctx.parallel_for(1 << 16, 64, |_r| panic!("boom in intra-op worker"));
+                Ok(vec![ctx.input(0)?.clone()])
+            })))
+        }),
+    );
+}
+
+#[test]
+fn panic_in_worker_fails_step_with_status() {
+    install_panic_op();
+    for intra in [1usize, 4] {
+        let mut b = GraphBuilder::new();
+        let x = b.constant(Tensor::fill_f32(vec![8], 1.0));
+        let p = b.op1("TestPanicOp", "panic_node", vec![x], vec![]).unwrap();
+        let fetch = format!("{}:0", b.graph.node(p.node).name);
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions {
+                intra_op_threads: intra,
+                // Keep the panicking op out of build-time constant
+                // folding: the step, not the optimizer, must hit it.
+                enable_constant_folding: false,
+                ..Default::default()
+            },
+        );
+        let err = sess.run(&[], &[&fetch], &[]).unwrap_err();
+        assert_eq!(err.code, rustflow::error::Code::Internal, "intra={intra}: {err:?}");
+        assert!(err.message.contains("panicked"), "intra={intra}: {}", err.message);
+        assert!(err.message.contains("boom in intra-op worker"), "intra={intra}");
+        // The session (and process) stay healthy: a fresh run of an
+        // unrelated graph still works.
+        let mut b2 = GraphBuilder::new();
+        let y = b2.scalar(2.0);
+        let z = b2.square(y);
+        let zname = b2.graph.node(z.node).name.clone();
+        let s2 = Session::new(
+            b2.into_graph(),
+            SessionOptions { intra_op_threads: intra, ..Default::default() },
+        );
+        assert_eq!(s2.run(&[], &[&zname], &[]).unwrap()[0].scalar_value_f32().unwrap(), 4.0);
+    }
+}

@@ -1,26 +1,33 @@
 #!/usr/bin/env bash
 # Perf trajectory, as one command: runs the §5 optimizer ablation bench,
-# the step-memory-planner bench, and the serving throughput bench, and
-# writes BENCH_optimizer.json + BENCH_memory.json at the repo root
+# the step-memory-planner bench, the intra-op parallelism bench, and the
+# serving throughput bench, and writes BENCH_optimizer.json +
+# BENCH_memory.json + BENCH_parallel.json at the repo root
 # (machine-readable; one file per tracked benchmark family).
 #
 #   scripts/bench.sh
 #
 # The optimizer bench asserts its acceptance bar (full pipeline ≥ 1.3x
-# over passes-disabled) and the memory bench asserts planning-on
-# allocates ≥ 2x fewer heap bytes per step than planning-off, so this
-# script fails on a perf regression.
+# over passes-disabled), the memory bench asserts planning-on allocates
+# ≥ 2x fewer heap bytes per step than planning-off, and the parallel
+# bench asserts ≥ 2x matmul throughput at 4 intra-op threads (when the
+# machine has ≥ 4 cores) with no 1-thread regression, so this script
+# fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
 export BENCH_OPTIMIZER_JSON="$(pwd)/BENCH_optimizer.json"
 export BENCH_MEMORY_JSON="$(pwd)/BENCH_memory.json"
+export BENCH_PARALLEL_JSON="$(pwd)/BENCH_parallel.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
 
 echo "== cargo bench --bench memory (writes $BENCH_MEMORY_JSON)"
 cargo bench --bench memory
+
+echo "== cargo bench --bench parallel (writes $BENCH_PARALLEL_JSON)"
+cargo bench --bench parallel
 
 echo "== cargo bench --bench serving"
 cargo bench --bench serving

@@ -9,7 +9,7 @@
 //!     cargo run --release --example distributed -- worker 1 127.0.0.1:4400 127.0.0.1:4401
 //!     cargo run --release --example distributed -- master 127.0.0.1:4400 127.0.0.1:4401
 
-use rustflow::distributed::{ClusterSpec, DistMaster, DistMasterOptions, Worker};
+use rustflow::distributed::{ClusterSpec, DistMaster, DistMasterOptions, Worker, WorkerOptions};
 use rustflow::graph::AttrValue;
 use rustflow::optim::Optimizer;
 use rustflow::{models, GraphBuilder, Tensor};
@@ -21,7 +21,9 @@ fn main() -> rustflow::Result<()> {
             let task: usize = args[1].parse().unwrap();
             let addrs: Vec<String> = args[2..].to_vec();
             let cluster = ClusterSpec::new(addrs.clone(), 1);
-            let w = Worker::new(task, cluster, 2);
+            // Remote partitions parallelize large kernels too: size the
+            // per-device intra-op pools (mirror of SessionOptions).
+            let w = Worker::with_options(task, cluster, WorkerOptions::default());
             w.serve(&addrs[task])?;
             println!("worker {task} serving on {}", addrs[task]);
             loop {

@@ -1,0 +1,172 @@
+//! The model hub end to end: export two versions of an MLP classifier as
+//! GraphDef + checkpoint artifacts, start the TCP serving front end, load
+//! v1, hammer it from concurrent network clients, hot-swap to v2 mid
+//! traffic (zero dropped or failed in-flight requests), then print
+//! per-version stats with latency percentiles and demonstrate that a
+//! version pinned to the retired v1 fails fast with NotFound.
+//!
+//!     cargo run --release --example modelhub -- [clients] [requests-per-client]
+
+use rustflow::serving::{
+    BatchConfig, ManagerOptions, ModelManager, ModelSpec, NetClient, NetServer, WarmupRequest,
+};
+use rustflow::{checkpoint, graph, models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DIM: usize = 64;
+const HIDDEN: usize = 256;
+const CLASSES: usize = 10;
+
+fn main() -> rustflow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let clients: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let per_client: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let dir = std::env::temp_dir().join(format!("rustflow-modelhub-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    // ---- offline: "train" and export two model versions -------------------
+    // (Different seeds stand in for two training runs; the artifacts are
+    // exactly what a training job would ship: GraphDef + checkpoint.)
+    let v1 = export_version(&dir, "v1", 7)?;
+    let v2 = export_version(&dir, "v2", 42)?;
+    println!("exported artifacts under {}", dir.display());
+
+    // ---- serving side ------------------------------------------------------
+    let manager = Arc::new(ModelManager::new(ManagerOptions {
+        session: SessionOptions {
+            threads_per_device: 4,
+            intra_op_threads: 2,
+            ..Default::default()
+        },
+        batch: BatchConfig {
+            max_batch_size: 32,
+            max_batch_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            ..BatchConfig::default()
+        },
+    }));
+    let server = NetServer::serve(Arc::clone(&manager), "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+    println!("model hub serving on {addr}");
+
+    manager.deploy("mnist", 1, &v1.spec)?;
+    println!("deployed mnist v1 (live: {:?})", manager.live_version("mnist"));
+
+    // ---- traffic: concurrent TCP clients, hot-swap in the middle -----------
+    let fetch = v1.fetch.clone();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let fetch = fetch.clone();
+        handles.push(std::thread::spawn(move || -> (u64, u64) {
+            let mut client = NetClient::connect(&addr).expect("connect");
+            let (mut ok, mut failed) = (0u64, 0u64);
+            for i in 0..per_client {
+                let row: Vec<f32> =
+                    (0..DIM).map(|j| ((c * per_client + i + j) % 17) as f32 * 0.1).collect();
+                let input = Tensor::from_f32(vec![1, DIM], row).unwrap();
+                match client.predict("mnist", None, &[("x", input)], &[&fetch]) {
+                    Ok(out) => {
+                        assert_eq!(out[0].shape().dims(), &[1, CLASSES]);
+                        ok += 1;
+                    }
+                    Err(_) => failed += 1,
+                }
+            }
+            (ok, failed)
+        }));
+    }
+
+    // Let traffic build, then hot-swap: v2 loads, restores, warms, and
+    // atomically replaces v1; v1 drains its in-flight batches and retires.
+    std::thread::sleep(Duration::from_millis(150));
+    println!("hot-swapping to v2 under load…");
+    manager.deploy("mnist", 2, &v2.spec)?;
+    println!("swap complete (live: {:?})", manager.live_version("mnist"));
+
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for h in handles {
+        let (o, f) = h.join().expect("client thread panicked");
+        ok += o;
+        failed += f;
+    }
+    println!("\n{ok} requests served, {failed} failed across the hot-swap");
+    assert_eq!(failed, 0, "a hot-swap must not fail in-flight requests");
+
+    // ---- per-version stats --------------------------------------------------
+    println!("\nper-version stats:");
+    println!(
+        "{:<8} {:>4} {:<9} {:>9} {:>7} {:>11} {:>10} {:>10}",
+        "model", "ver", "state", "requests", "errors", "mean batch", "p50", "p99"
+    );
+    for s in manager.stats() {
+        println!(
+            "{:<8} {:>4} {:<9} {:>9} {:>7} {:>11.1} {:>10.2?} {:>10.2?}",
+            s.model,
+            s.version,
+            s.state.to_string(),
+            s.requests,
+            s.errors,
+            s.batch.mean_batch_rows(),
+            s.latency.p50,
+            s.latency.p99,
+        );
+    }
+
+    // ---- retired versions fail fast -----------------------------------------
+    let mut client = NetClient::connect(&addr)?;
+    let probe = Tensor::fill_f32(vec![1, DIM], 0.5);
+    let pinned = client.predict("mnist", Some(1), &[("x", probe)], &[&fetch]);
+    println!(
+        "\npinned request to retired v1: {}",
+        pinned.expect_err("v1 is retired; the pin must fail")
+    );
+
+    server.shutdown();
+    manager.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+struct ExportedVersion {
+    spec: ModelSpec,
+    fetch: String,
+}
+
+/// "Train" (initialize) one version and export its artifacts: the
+/// GraphDef and a checkpoint bundle of the variables' values.
+fn export_version(dir: &Path, tag: &str, seed: u64) -> rustflow::Result<ExportedVersion> {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32)?;
+    let (logits, vars) = models::mlp(&mut b, x, &[DIM, HIDDEN, CLASSES], seed)?;
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let var_names: Vec<String> = vars.iter().map(|v| b.graph.node(v.node).name.clone()).collect();
+
+    let graph_path: PathBuf = dir.join(format!("{tag}.graphdef"));
+    graph::serde::write_graphdef(&graph_path, &b.graph)?;
+
+    let sess = Session::new(b.into_graph(), SessionOptions::default());
+    sess.run_targets(&inits.iter().map(String::as_str).collect::<Vec<_>>())?;
+    let values =
+        sess.run(&[], &var_names.iter().map(String::as_str).collect::<Vec<_>>(), &[])?;
+    let pairs: Vec<(String, Tensor)> = var_names.into_iter().zip(values).collect();
+    let checkpoint_path = dir.join(format!("{tag}.ckpt"));
+    checkpoint::save_bundle(&checkpoint_path, &pairs)?;
+
+    Ok(ExportedVersion {
+        spec: ModelSpec {
+            graph_path,
+            checkpoint_path: Some(checkpoint_path),
+            init_targets: vec![],
+            warmup: vec![WarmupRequest {
+                feeds: vec![("x".to_string(), Tensor::fill_f32(vec![1, DIM], 0.1))],
+                fetches: vec![fetch.clone()],
+            }],
+        },
+        fetch,
+    })
+}

@@ -1,0 +1,235 @@
+//! Wire-serving throughput: sustained requests/sec over loopback TCP
+//! through the model hub (NetClient → NetServer → ModelManager →
+//! batched Session steps), at 8 and 16 closed-loop clients, with and
+//! without a mid-run hot-swap to a second model version.
+//!
+//! Acceptance bar: the hot-swap is cheap — the worst 200ms throughput
+//! window of the swap run stays within 20% of the no-swap run's median
+//! window (asserted when the machine has ≥ 4 cores; recorded as
+//! `assert_skipped` otherwise, since on tiny machines the deploy thread
+//! itself visibly steals CPU from the clients).
+//!
+//!     cargo bench --bench serving_net
+//!
+//! Writes BENCH_serving_net.json (path from $BENCH_SERVING_NET_JSON,
+//! set by scripts/bench.sh).
+
+use rustflow::serving::{
+    BatchConfig, ManagerOptions, ModelManager, NetClient, NetServer, WarmupRequest,
+};
+use rustflow::util::json::Json;
+use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const DIM: usize = 32;
+const HIDDEN: usize = 128;
+const CLASSES: usize = 10;
+const WINDOW: Duration = Duration::from_millis(200);
+const WINDOWS: usize = 8;
+const WARM: Duration = Duration::from_millis(300);
+
+fn build_session(seed: u64) -> (Arc<Session>, String) {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let (logits, _vars) = models::mlp(&mut b, x, &[DIM, HIDDEN, CLASSES], seed).unwrap();
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let session = Arc::new(Session::new(
+        b.into_graph(),
+        SessionOptions { threads_per_device: 4, intra_op_threads: 2, ..Default::default() },
+    ));
+    session.run_targets(&inits.iter().map(String::as_str).collect::<Vec<_>>()).unwrap();
+    (session, fetch)
+}
+
+fn warmup_for(fetch: &str) -> Vec<WarmupRequest> {
+    vec![WarmupRequest {
+        feeds: vec![("x".to_string(), Tensor::fill_f32(vec![1, DIM], 0.5))],
+        fetches: vec![fetch.to_string()],
+    }]
+}
+
+struct Phase {
+    windows: Vec<f64>,
+    total_rps: f64,
+    mean_batch_rows: f64,
+}
+
+/// One measured run: `clients` closed-loop TCP clients for
+/// WARM + WINDOWS·WINDOW; when `swap`, v2 deploys (build + warm + swap +
+/// drain, on its own thread) as the middle window opens.
+fn run_phase(clients: usize, swap: bool) -> Phase {
+    let manager = Arc::new(ModelManager::new(ManagerOptions {
+        session: SessionOptions::default(), // versions bring their own sessions
+        batch: BatchConfig {
+            max_batch_size: 32,
+            max_batch_delay: Duration::from_millis(2),
+            queue_capacity: 4096,
+            ..BatchConfig::default()
+        },
+    }));
+    let (s1, fetch) = build_session(7);
+    manager.deploy_session("bench", 1, s1, &warmup_for(&fetch)).unwrap();
+    let server = NetServer::serve(Arc::clone(&manager), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let completed = Arc::new(AtomicU64::new(0));
+    let mut client_threads = Vec::new();
+    for c in 0..clients {
+        let addr = addr.clone();
+        let fetch = fetch.clone();
+        let stop = Arc::clone(&stop);
+        let completed = Arc::clone(&completed);
+        client_threads.push(std::thread::spawn(move || {
+            let mut client = NetClient::connect(&addr).expect("connect");
+            let mut i = 0usize;
+            while !stop.load(Ordering::Relaxed) {
+                i += 1;
+                let v = ((c + 1) * i % 13) as f32 * 0.1;
+                let input = Tensor::fill_f32(vec![1, DIM], v);
+                client
+                    .predict("bench", None, &[("x", input)], &[&fetch])
+                    .expect("predict failed (hot-swaps must not fail requests)");
+                completed.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+    }
+
+    std::thread::sleep(WARM);
+    let bench_start = Instant::now();
+    let start_count = completed.load(Ordering::Relaxed);
+    let mut windows = Vec::with_capacity(WINDOWS);
+    let mut swap_thread = None;
+    for w in 0..WINDOWS {
+        if swap && w == WINDOWS / 2 {
+            let manager = Arc::clone(&manager);
+            let fetch = fetch.clone();
+            swap_thread = Some(std::thread::spawn(move || {
+                let (s2, fetch2) = build_session(13);
+                assert_eq!(fetch2, fetch);
+                manager.deploy_session("bench", 2, s2, &warmup_for(&fetch)).unwrap();
+            }));
+        }
+        let before = completed.load(Ordering::Relaxed);
+        let t = Instant::now();
+        std::thread::sleep(WINDOW);
+        let n = completed.load(Ordering::Relaxed) - before;
+        windows.push(n as f64 / t.elapsed().as_secs_f64());
+    }
+    let bench_count = completed.load(Ordering::Relaxed) - start_count;
+    let total = bench_count as f64 / bench_start.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    for t in client_threads {
+        t.join().expect("client thread panicked");
+    }
+    if let Some(t) = swap_thread {
+        t.join().expect("swap thread panicked");
+    }
+    let stats = manager.stats();
+    let (mut batches, mut rows) = (0u64, 0u64);
+    for s in &stats {
+        batches += s.batch.batches;
+        rows += s.batch.rows;
+    }
+    server.shutdown();
+    manager.shutdown();
+    Phase {
+        windows,
+        total_rps: total,
+        mean_batch_rows: if batches == 0 { 0.0 } else { rows as f64 / batches as f64 },
+    }
+}
+
+fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let assertable = cores >= 4;
+    println!(
+        "{:<28} {:>12} {:>14} {:>16} {:>12}",
+        "config", "req/s", "median window", "worst swap win", "mean batch"
+    );
+
+    let mut configs = Json::arr();
+    let mut all_ok = true;
+    for clients in [8usize, 16] {
+        let baseline = run_phase(clients, false);
+        let swap = run_phase(clients, true);
+        let base_median = median(&baseline.windows);
+        let swap_min = swap.windows.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ratio = swap_min / base_median;
+        let ok = ratio >= 0.8;
+        if assertable {
+            all_ok &= ok;
+        }
+        println!(
+            "{:<28} {:>12.0} {:>14.0} {:>16.0} {:>12.1}",
+            format!("clients={clients} (no swap)"),
+            baseline.total_rps,
+            base_median,
+            f64::NAN,
+            baseline.mean_batch_rows,
+        );
+        println!(
+            "{:<28} {:>12.0} {:>14.0} {:>16.0} {:>12.1}",
+            format!("clients={clients} (hot-swap)"),
+            swap.total_rps,
+            median(&swap.windows),
+            swap_min,
+            swap.mean_batch_rows,
+        );
+
+        let to_arr = |xs: &[f64]| {
+            let mut a = Json::arr();
+            for &x in xs {
+                a.push(x);
+            }
+            a
+        };
+        configs.push(
+            Json::obj()
+                .set("clients", clients)
+                .set("baseline_rps", baseline.total_rps)
+                .set("baseline_windows_rps", to_arr(&baseline.windows))
+                .set("baseline_median_window_rps", base_median)
+                .set("swap_rps", swap.total_rps)
+                .set("swap_windows_rps", to_arr(&swap.windows))
+                .set("swap_min_window_rps", swap_min)
+                .set("swap_to_baseline_ratio", ratio)
+                .set("mean_batch_rows_baseline", baseline.mean_batch_rows)
+                .set("mean_batch_rows_swap", swap.mean_batch_rows)
+                .set("ok", ok),
+        );
+    }
+
+    let out = Json::obj()
+        .set("bench", "serving_net")
+        .set("model", format!("mlp {DIM}x{HIDDEN}x{CLASSES}"))
+        .set("window_ms", WINDOW.as_millis() as u64)
+        .set("windows", WINDOWS)
+        .set("cores", cores)
+        .set("assert_skipped", !assertable)
+        .set("configs", configs);
+    let path = std::env::var("BENCH_SERVING_NET_JSON")
+        .unwrap_or_else(|_| "BENCH_serving_net.json".to_string());
+    std::fs::write(&path, out.render()).expect("write bench json");
+    println!("\nwrote {path}");
+
+    if assertable {
+        assert!(
+            all_ok,
+            "hot-swap cost the serving path more than 20% of a throughput window \
+             (see {path} for per-window rates)"
+        );
+        println!("serving_net: OK (worst swap window within 20% of baseline median)");
+    } else {
+        println!("serving_net: assertion skipped ({cores} cores < 4)");
+    }
+}

@@ -5,16 +5,16 @@
 //! after a restart".
 //!
 //! File format ("tensor bundle"): magic, count, then per entry a
-//! length-prefixed name + `tensor::codec` payload. Writes go through a
-//! temp file + rename so a crash mid-save never corrupts the latest
-//! checkpoint.
+//! length-prefixed name + `tensor::codec` payload. Writes go through
+//! `util::fsutil::atomic_write` (unique temp file + rename) so a crash
+//! mid-save never corrupts the latest checkpoint.
 
 use super::kernels::{Kernel, KernelContext, KernelRegistry};
 use crate::error::{Result, Status};
 use crate::tensor::{codec, Tensor};
 use crate::util::byteorder::LittleEndian;
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"RFLOWCKP";
@@ -38,15 +38,7 @@ pub fn save_bundle(path: &Path, tensors: &[(String, Tensor)]) -> Result<()> {
         buf.extend_from_slice(&plen);
         buf.extend_from_slice(&payload);
     }
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    let tmp = path.with_extension("tmp");
-    let mut f = std::fs::File::create(&tmp)?;
-    f.write_all(&buf)?;
-    f.sync_all()?;
-    std::fs::rename(&tmp, path)?;
-    Ok(())
+    crate::util::fsutil::atomic_write(path, &buf)
 }
 
 /// Read a bundle back.

@@ -25,7 +25,7 @@ pub mod worker;
 
 pub use master::{DistMaster, DistMasterOptions};
 pub use rendezvous::RemoteRendezvous;
-pub use worker::Worker;
+pub use worker::{Worker, WorkerOptions};
 
 /// Addresses of every worker task; task index = position.
 /// Device names are `/job:worker/task:<i>/device:cpu:<j>`.

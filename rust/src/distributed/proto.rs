@@ -2,13 +2,20 @@
 //! Length-prefixed frames over TCP; payloads reuse the graph/tensor
 //! codecs. ("Send/Receive node pairs that communicate across worker
 //! processes use remote communication mechanisms such as TCP or RDMA.")
+//!
+//! The transport itself — framing, status, tensor maps — lives in
+//! [`crate::wire`], shared with the serving front end
+//! (`crate::serving::net`); this module keeps the distributed message
+//! types and their payload layouts.
 
-use crate::error::{Code, Result, Status};
+use crate::error::{Result, Status};
 use crate::graph::Graph;
-use crate::tensor::{codec, Tensor};
-use crate::util::byteorder::LittleEndian;
-use std::io::{Read, Write};
-use std::net::TcpStream;
+use crate::tensor::Tensor;
+use crate::wire::{
+    decode_status, decode_tensor_map, encode_status, encode_tensor_map, get_u64, put_u64,
+};
+
+pub use crate::wire::{read_frame, rpc, write_frame};
 
 pub const MSG_REGISTER_GRAPH: u8 = 1;
 pub const MSG_REGISTER_REPLY: u8 = 2;
@@ -20,31 +27,6 @@ pub const MSG_HEALTH: u8 = 7;
 pub const MSG_HEALTH_OK: u8 = 8;
 pub const MSG_SHUTDOWN: u8 = 9;
 pub const MSG_RESET: u8 = 10;
-
-/// Write one frame: u32 length, u8 type, payload.
-pub fn write_frame(stream: &mut TcpStream, msg_type: u8, payload: &[u8]) -> Result<()> {
-    let mut header = [0u8; 5];
-    LittleEndian::write_u32(&mut header, payload.len() as u32 + 1);
-    header[4] = msg_type;
-    stream.write_all(&header)?;
-    stream.write_all(payload)?;
-    stream.flush()?;
-    Ok(())
-}
-
-/// Read one frame.
-pub fn read_frame(stream: &mut TcpStream) -> Result<(u8, Vec<u8>)> {
-    let mut header = [0u8; 5];
-    stream.read_exact(&mut header)?;
-    let len = LittleEndian::read_u32(&header) as usize;
-    if len == 0 {
-        return Err(Status::unavailable("empty frame"));
-    }
-    let msg_type = header[4];
-    let mut payload = vec![0u8; len - 1];
-    stream.read_exact(&mut payload)?;
-    Ok((msg_type, payload))
-}
 
 // ---- message payloads -------------------------------------------------------
 
@@ -71,22 +53,18 @@ pub struct RunPartition {
 impl RunPartition {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        let mut b = [0u8; 8];
-        LittleEndian::write_u64(&mut b, self.handle);
-        out.extend_from_slice(&b);
-        LittleEndian::write_u64(&mut b, self.step_id);
-        out.extend_from_slice(&b);
+        put_u64(&mut out, self.handle);
+        put_u64(&mut out, self.step_id);
         encode_tensor_map(&mut out, &self.feeds);
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<RunPartition> {
-        if buf.len() < 16 {
-            return Err(Status::invalid_argument("short RunPartition"));
-        }
-        let handle = LittleEndian::read_u64(&buf[0..8]);
-        let step_id = LittleEndian::read_u64(&buf[8..16]);
-        let mut pos = 16;
+        let mut pos = 0;
+        let handle = get_u64(buf, &mut pos)
+            .map_err(|_| Status::invalid_argument("short RunPartition"))?;
+        let step_id = get_u64(buf, &mut pos)
+            .map_err(|_| Status::invalid_argument("short RunPartition"))?;
         let feeds = decode_tensor_map(buf, &mut pos)?;
         Ok(RunPartition { handle, step_id, feeds })
     }
@@ -123,7 +101,7 @@ impl TensorReply {
         match &self.status {
             Ok(t) => {
                 encode_status(&mut out, &Ok(()));
-                out.extend(codec::encode(t));
+                out.extend(crate::tensor::codec::encode(t));
             }
             Err(e) => encode_status(&mut out, &Err(e.clone())),
         }
@@ -135,7 +113,7 @@ impl TensorReply {
         let status = decode_status(buf, &mut pos)?;
         match status {
             Ok(()) => {
-                let (t, _) = codec::decode(&buf[pos..])?;
+                let (t, _) = crate::tensor::codec::decode(&buf[pos..])?;
                 Ok(TensorReply { status: Ok(t) })
             }
             Err(e) => Ok(TensorReply { status: Err(e) }),
@@ -143,99 +121,10 @@ impl TensorReply {
     }
 }
 
-fn encode_status(out: &mut Vec<u8>, s: &Result<()>) {
-    match s {
-        Ok(()) => {
-            out.push(255);
-        }
-        Err(e) => {
-            out.push(e.code.as_u8());
-            let msg = e.message.as_bytes();
-            let mut b = [0u8; 4];
-            LittleEndian::write_u32(&mut b, msg.len() as u32);
-            out.extend_from_slice(&b);
-            out.extend_from_slice(msg);
-        }
-    }
-}
-
-fn decode_status(buf: &[u8], pos: &mut usize) -> Result<Result<()>> {
-    if buf.len() <= *pos {
-        return Err(Status::invalid_argument("short status"));
-    }
-    let code = buf[*pos];
-    *pos += 1;
-    if code == 255 {
-        return Ok(Ok(()));
-    }
-    if buf.len() < *pos + 4 {
-        return Err(Status::invalid_argument("short status message"));
-    }
-    let len = LittleEndian::read_u32(&buf[*pos..]) as usize;
-    *pos += 4;
-    if buf.len() < *pos + len {
-        return Err(Status::invalid_argument("short status message body"));
-    }
-    let msg = String::from_utf8_lossy(&buf[*pos..*pos + len]).to_string();
-    *pos += len;
-    Ok(Err(Status::new(Code::from_u8(code), msg)))
-}
-
-fn encode_tensor_map(out: &mut Vec<u8>, m: &[(String, Tensor)]) {
-    let mut b = [0u8; 4];
-    LittleEndian::write_u32(&mut b, m.len() as u32);
-    out.extend_from_slice(&b);
-    for (k, t) in m {
-        LittleEndian::write_u32(&mut b, k.len() as u32);
-        out.extend_from_slice(&b);
-        out.extend_from_slice(k.as_bytes());
-        let payload = codec::encode(t);
-        let mut l = [0u8; 8];
-        LittleEndian::write_u64(&mut l, payload.len() as u64);
-        out.extend_from_slice(&l);
-        out.extend_from_slice(&payload);
-    }
-}
-
-fn decode_tensor_map(buf: &[u8], pos: &mut usize) -> Result<Vec<(String, Tensor)>> {
-    if buf.len() < *pos + 4 {
-        return Err(Status::invalid_argument("short tensor map"));
-    }
-    let n = LittleEndian::read_u32(&buf[*pos..]) as usize;
-    *pos += 4;
-    let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
-        if buf.len() < *pos + 4 {
-            return Err(Status::invalid_argument("short tensor map key"));
-        }
-        let klen = LittleEndian::read_u32(&buf[*pos..]) as usize;
-        *pos += 4;
-        let key = String::from_utf8_lossy(&buf[*pos..*pos + klen]).to_string();
-        *pos += klen;
-        let plen = LittleEndian::read_u64(&buf[*pos..]) as usize;
-        *pos += 8;
-        let (t, used) = codec::decode(&buf[*pos..*pos + plen])?;
-        if used != plen {
-            return Err(Status::invalid_argument("tensor map payload mismatch"));
-        }
-        *pos += plen;
-        out.push((key, t));
-    }
-    Ok(out)
-}
-
-/// One-shot RPC helper: connect, send, await reply.
-pub fn rpc(addr: &str, msg_type: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
-    let mut stream = TcpStream::connect(addr)
-        .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
-    stream.set_nodelay(true).ok();
-    write_frame(&mut stream, msg_type, payload)?;
-    read_frame(&mut stream)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::error::Code;
 
     #[test]
     fn run_partition_roundtrip() {

@@ -20,6 +20,29 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// Per-worker runtime knobs, the worker-process mirror of the
+/// thread-related `SessionOptions` fields: remote partitions run on this
+/// worker's devices, so both pool sizes plumb through here.
+#[derive(Debug, Clone)]
+pub struct WorkerOptions {
+    /// Inter-op threads per device (mirror of
+    /// `SessionOptions::threads_per_device`).
+    pub threads_per_device: usize,
+    /// Intra-op compute-pool lanes per device (mirror of
+    /// `SessionOptions::intra_op_threads`): how many lanes a single large
+    /// kernel's `parallel_for` fans out over. Results are bit-identical
+    /// at every setting (the pool's determinism contract), and workers
+    /// spawn lazily, so raising this only costs threads once a large
+    /// kernel actually runs on a remote partition.
+    pub intra_op_threads: usize,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions { threads_per_device: 2, intra_op_threads: 2 }
+    }
+}
+
 pub struct Worker {
     pub task: usize,
     cluster: ClusterSpec,
@@ -32,13 +55,25 @@ pub struct Worker {
 }
 
 impl Worker {
+    /// A worker with serial kernels (intra-op parallelism of 1); the
+    /// historical constructor. Use [`Worker::with_options`] to size the
+    /// intra-op pools.
     pub fn new(task: usize, cluster: ClusterSpec, threads_per_device: usize) -> Arc<Worker> {
+        Worker::with_options(
+            task,
+            cluster,
+            WorkerOptions { threads_per_device, intra_op_threads: 1 },
+        )
+    }
+
+    pub fn with_options(task: usize, cluster: ClusterSpec, options: WorkerOptions) -> Arc<Worker> {
         let devices = DeviceSet::new(
             (0..cluster.devices_per_worker)
                 .map(|i| {
-                    Arc::new(crate::device::Device::new(
+                    Arc::new(crate::device::Device::with_intra_op(
                         crate::device::DeviceSpec::worker_cpu(task, i),
-                        threads_per_device,
+                        options.threads_per_device,
+                        options.intra_op_threads.max(1),
                     ))
                 })
                 .collect(),
@@ -58,6 +93,12 @@ impl Worker {
 
     pub fn resources(&self) -> &Arc<ResourceMgr> {
         &self.resources
+    }
+
+    /// This worker's devices (test support; also where the intra-op pool
+    /// sizing is observable).
+    pub fn devices(&self) -> &DeviceSet {
+        &self.devices
     }
 
     /// Serve on `addr` (must match the cluster spec's entry for this

@@ -82,6 +82,35 @@ pub fn decode_graph(buf: &[u8]) -> Result<Graph> {
     Ok(g)
 }
 
+/// Magic prefix of a GraphDef *file* (the in-memory codec above is
+/// headerless — the distributed runtime frames it itself).
+const GRAPHDEF_MAGIC: &[u8; 8] = b"RFLOWGDF";
+
+/// Write a graph to `path` as a GraphDef file: magic + [`encode_graph`]
+/// bytes, via `util::fsutil::atomic_write` (unique temp file + rename)
+/// so a crash mid-write never corrupts a model artifact the serving
+/// layer may be about to load.
+pub fn write_graphdef(path: &std::path::Path, g: &Graph) -> Result<()> {
+    let body = encode_graph(g);
+    let mut buf = Vec::with_capacity(body.len() + GRAPHDEF_MAGIC.len());
+    buf.extend_from_slice(GRAPHDEF_MAGIC);
+    buf.extend_from_slice(&body);
+    crate::util::fsutil::atomic_write(path, &buf)
+}
+
+/// Read a GraphDef file written by [`write_graphdef`].
+pub fn read_graphdef(path: &std::path::Path) -> Result<Graph> {
+    let mut buf = Vec::new();
+    use std::io::Read as _;
+    std::fs::File::open(path)
+        .map_err(|e| Status::not_found(format!("graphdef {path:?}: {e}")))?
+        .read_to_end(&mut buf)?;
+    if buf.len() < GRAPHDEF_MAGIC.len() || &buf[..GRAPHDEF_MAGIC.len()] != GRAPHDEF_MAGIC {
+        return Err(Status::invalid_argument(format!("{path:?} is not a rustflow GraphDef")));
+    }
+    decode_graph(&buf[GRAPHDEF_MAGIC.len()..])
+}
+
 fn encode_attr(out: &mut Vec<u8>, v: &AttrValue) {
     match v {
         AttrValue::I64(x) => {
@@ -301,6 +330,29 @@ mod tests {
         assert_eq!(dec.node(yn).requested_device, "/device:cpu:1");
         assert_eq!(dec.node(yn).assigned_device.as_deref(), Some("/job:w/task:0/device:cpu:1"));
         assert_eq!(dec.node(yn).inputs[0].node, x.node);
+    }
+
+    #[test]
+    fn graphdef_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rustflow-gdf-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("model.graphdef");
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(3.0);
+        b.neg(x);
+        write_graphdef(&path, &b.graph).unwrap();
+        let dec = read_graphdef(&path).unwrap();
+        assert_eq!(dec.len(), b.graph.len());
+        assert!(dec.find("Neg").is_some());
+        // No stray tmp file, and garbage is rejected with a clear error.
+        assert!(!path.with_extension("tmp").exists());
+        let bad = dir.join("garbage.graphdef");
+        std::fs::write(&bad, b"not a graphdef").unwrap();
+        assert!(read_graphdef(&bad).is_err());
+        assert_eq!(
+            read_graphdef(&dir.join("missing.graphdef")).unwrap_err().code,
+            crate::error::Code::NotFound
+        );
     }
 
     #[test]

@@ -12,8 +12,10 @@ use std::sync::Mutex;
 // pure helpers (reused by gradients and other kernels)
 // ---------------------------------------------------------------------------
 
-/// Concatenate along `axis`. All inputs must agree on other dims.
-pub fn concat(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
+/// Validate a Concat call; returns (output shape, normalized axis).
+/// Split out of [`concat`] so the kernel can size an arena buffer
+/// before filling it.
+fn concat_shape(xs: &[&Tensor], axis: i64) -> Result<(Shape, usize)> {
     if xs.is_empty() {
         return Err(Status::invalid_argument("Concat of zero tensors"));
     }
@@ -37,9 +39,19 @@ pub fn concat(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
         axis_total += x.shape().dims()[axis];
     }
     out_dims[axis] = axis_total;
+    Ok((Shape(out_dims), axis))
+}
+
+/// Push the concatenated f32 data into `out` (empty, capacity
+/// pre-sized — possibly an arena checkout).
+fn concat_fill_f32(
+    out: &mut Vec<f32>,
+    xs: &[&Tensor],
+    axis: usize,
+    out_dims: &[usize],
+) -> Result<()> {
     let outer: usize = out_dims[..axis].iter().product::<usize>().max(1);
     let inner: usize = out_dims[axis + 1..].iter().product::<usize>().max(1);
-    let mut out: Vec<f32> = Vec::with_capacity(out_dims.iter().product());
     for o in 0..outer {
         for x in xs {
             let v = x.as_f32()?;
@@ -47,11 +59,20 @@ pub fn concat(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
             out.extend_from_slice(&v[o * ax * inner..(o + 1) * ax * inner]);
         }
     }
-    Tensor::new(Shape(out_dims), TensorData::F32(out))
+    Ok(())
 }
 
-/// Slice: out[i] = in[begin + i], sizes from `size` (-1 ⇒ to end).
-pub fn slice(x: &Tensor, begin: &[i64], size: &[i64]) -> Result<Tensor> {
+/// Concatenate along `axis`. All inputs must agree on other dims.
+pub fn concat(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
+    let (shape, axis) = concat_shape(xs, axis)?;
+    let mut out: Vec<f32> = Vec::with_capacity(shape.num_elements());
+    concat_fill_f32(&mut out, xs, axis, shape.dims())?;
+    Tensor::new(shape, TensorData::F32(out))
+}
+
+/// Validate a Slice call; returns the output shape (with `-1` sizes
+/// resolved to "to end").
+fn slice_shape(x: &Tensor, begin: &[i64], size: &[i64]) -> Result<Shape> {
     let rank = x.shape().rank();
     if begin.len() != rank || size.len() != rank {
         return Err(Status::invalid_argument("Slice: begin/size must have input rank"));
@@ -69,12 +90,17 @@ pub fn slice(x: &Tensor, begin: &[i64], size: &[i64]) -> Result<Tensor> {
         }
         out_dims.push(s);
     }
-    let out_shape = Shape(out_dims.clone());
+    Ok(Shape(out_dims))
+}
+
+/// Push the sliced f32 data into `out` (empty, capacity pre-sized).
+fn slice_fill_f32(out: &mut Vec<f32>, x: &Tensor, begin: &[i64], out_dims: &[usize]) -> Result<()> {
+    let rank = x.shape().rank();
     let v = x.as_f32()?;
     let strides = x.shape().strides();
-    let mut out = Vec::with_capacity(out_shape.num_elements());
+    let n: usize = out_dims.iter().product();
     let mut idx = vec![0usize; rank];
-    for _ in 0..out_shape.num_elements() {
+    for _ in 0..n {
         let mut off = 0;
         for d in 0..rank {
             off += (begin[d] as usize + idx[d]) * strides[d];
@@ -88,6 +114,14 @@ pub fn slice(x: &Tensor, begin: &[i64], size: &[i64]) -> Result<Tensor> {
             idx[d] = 0;
         }
     }
+    Ok(())
+}
+
+/// Slice: out[i] = in[begin + i], sizes from `size` (-1 ⇒ to end).
+pub fn slice(x: &Tensor, begin: &[i64], size: &[i64]) -> Result<Tensor> {
+    let out_shape = slice_shape(x, begin, size)?;
+    let mut out = Vec::with_capacity(out_shape.num_elements());
+    slice_fill_f32(&mut out, x, begin, out_shape.dims())?;
     Tensor::new(out_shape, TensorData::F32(out))
 }
 
@@ -114,8 +148,9 @@ pub fn split(x: &Tensor, axis: i64, num: usize) -> Result<Vec<Tensor>> {
     Ok(outs)
 }
 
-/// Transpose by permutation (empty perm ⇒ reverse dims).
-pub fn transpose(x: &Tensor, perm: &[i64]) -> Result<Tensor> {
+/// Validate a Transpose call; returns (output shape, normalized perm —
+/// empty input perm ⇒ reversed dims).
+fn transpose_shape(x: &Tensor, perm: &[i64]) -> Result<(Shape, Vec<usize>)> {
     let rank = x.shape().rank();
     let perm: Vec<usize> = if perm.is_empty() {
         (0..rank).rev().collect()
@@ -127,10 +162,19 @@ pub fn transpose(x: &Tensor, perm: &[i64]) -> Result<Tensor> {
     };
     let dims = x.shape().dims();
     let out_dims: Vec<usize> = perm.iter().map(|&p| dims[p]).collect();
+    Ok((Shape(out_dims), perm))
+}
+
+/// Push the transposed f32 data into `out` (empty, capacity pre-sized).
+fn transpose_fill_f32(
+    out: &mut Vec<f32>,
+    x: &Tensor,
+    perm: &[usize],
+    out_dims: &[usize],
+) -> Result<()> {
+    let rank = x.shape().rank();
     let in_strides = x.shape().strides();
-    let out_shape = Shape(out_dims.clone());
     let v = x.as_f32()?;
-    let mut out = Vec::with_capacity(v.len());
     let mut idx = vec![0usize; rank];
     for _ in 0..v.len() {
         let mut off = 0;
@@ -146,6 +190,14 @@ pub fn transpose(x: &Tensor, perm: &[i64]) -> Result<Tensor> {
             idx[d] = 0;
         }
     }
+    Ok(())
+}
+
+/// Transpose by permutation (empty perm ⇒ reverse dims).
+pub fn transpose(x: &Tensor, perm: &[i64]) -> Result<Tensor> {
+    let (out_shape, perm) = transpose_shape(x, perm)?;
+    let mut out = Vec::with_capacity(out_shape.num_elements());
+    transpose_fill_f32(&mut out, x, &perm, out_shape.dims())?;
     Tensor::new(out_shape, TensorData::F32(out))
 }
 
@@ -306,15 +358,27 @@ pub(super) fn register(r: &mut KernelRegistry) {
             .collect();
         Ok(vec![ctx.input(0)?.reshape(dims)?])
     });
+    // Concat/Slice/Transpose route their outputs through the step arena
+    // (`alloc_f32`/`make_output`): validate + size first, check the
+    // output storage out of the node's planned slot (fresh Vec when the
+    // plan gave it none), fill, and wrap with the slot's recycler so the
+    // buffer returns to its pool on last drop.
     r.add_sync("Concat", |ctx| {
         let axis = ctx.node.attr("axis")?.as_i64()?;
         let refs: Vec<&Tensor> = ctx.inputs.iter().collect();
-        Ok(vec![concat(&refs, axis)?])
+        let (shape, axis) = concat_shape(&refs, axis)?;
+        let mut out = ctx.alloc_f32(0, shape.num_elements());
+        concat_fill_f32(&mut out, &refs, axis, shape.dims())?;
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
     });
     r.add_sync("Slice", |ctx| {
         let begin = ctx.node.attr("begin")?.as_list_i64()?.to_vec();
         let size = ctx.node.attr("size")?.as_list_i64()?.to_vec();
-        Ok(vec![slice(ctx.input(0)?, &begin, &size)?])
+        let x = ctx.input(0)?;
+        let shape = slice_shape(x, &begin, &size)?;
+        let mut out = ctx.alloc_f32(0, shape.num_elements());
+        slice_fill_f32(&mut out, x, &begin, shape.dims())?;
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
     });
     r.add_sync("Split", |ctx| {
         let axis = ctx.node.attr("axis")?.as_i64()?;
@@ -328,7 +392,11 @@ pub(super) fn register(r: &mut KernelRegistry) {
             .map(|a| a.as_list_i64().map(|s| s.to_vec()))
             .transpose()?
             .unwrap_or_default();
-        Ok(vec![transpose(ctx.input(0)?, &perm)?])
+        let x = ctx.input(0)?;
+        let (shape, perm) = transpose_shape(x, &perm)?;
+        let mut out = ctx.alloc_f32(0, shape.num_elements());
+        transpose_fill_f32(&mut out, x, &perm, shape.dims())?;
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
     });
     r.add_sync("Gather", |ctx| {
         Ok(vec![gather(ctx.input(0)?, ctx.input(1)?)?])

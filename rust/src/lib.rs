@@ -7,7 +7,10 @@
 //!
 //! Layering (see DESIGN.md):
 //! * L4 — [`serving`]: an inference front end over a Session — bounded
-//!   admission, dynamic request batching, per-request handles.
+//!   admission, dynamic request batching, per-request handles; plus the
+//!   model lifecycle manager ([`serving::ModelManager`]: versioned
+//!   models, hot-swap, draining) and a TCP predict front end
+//!   ([`serving::net`] over the shared [`wire`] framing).
 //! * L3 — this crate: graphs, sessions, executors, placement, Send/Recv
 //!   partitioning, distributed master/worker, queues, autodiff,
 //!   checkpointing, optimizations, tooling.
@@ -48,6 +51,7 @@ pub mod resources;
 pub mod tensor;
 pub mod tracing_tools;
 pub mod util;
+pub mod wire;
 
 pub use error::{Result, Status};
 pub use graph::{Endpoint, Graph, NodeId};

@@ -1,0 +1,844 @@
+//! The model lifecycle manager: versioned model loading and atomic
+//! hot-swap serving (the production half of the OSDI'16 serving story —
+//! "deploying machine learning systems into production" needs models to
+//! be *updated* without dropping traffic, not just batched).
+//!
+//! A [`ModelManager`] owns any number of named models, each with
+//! numbered versions. A version is a full serving stack — a
+//! [`crate::Session`] built from a serialized GraphDef
+//! ([`crate::graph::serde::read_graphdef`]) with its variables restored
+//! from a checkpoint bundle ([`crate::checkpoint::load_bundle`]), fronted
+//! by its own [`ModelServer`] (dynamic batching lanes). Versions move
+//! through a fixed state machine:
+//!
+//! ```text
+//! loading → warming → live → draining → retired
+//! ```
+//!
+//! * **loading** — artifacts are being read and the Session built; the
+//!   version is not yet visible to requests (it only appears in the
+//!   version table once its server exists, already `warming`).
+//! * **warming** — optional [`WarmupRequest`]s run through the version's
+//!   own server: they compile the cached step, spin up the batching
+//!   lane, and touch the arena pools, so the first real request never
+//!   pays build cost. A failed warmup retires the version without it
+//!   ever going live — the previous live version keeps serving.
+//! * **live** — the version receives "latest" traffic. Exactly one
+//!   version of a model is live at a time; `live` points at the most
+//!   recent successful deploy (re-deploying an older number is how you
+//!   roll back).
+//! * **draining** — a newer version went live. The old version accepts
+//!   no new requests, but every request admitted before the swap is
+//!   still executed: its `ModelServer` lanes stay alive until their
+//!   queues empty (`ModelServer::shutdown` closes the queues and joins
+//!   the schedulers, which drain everything already admitted).
+//! * **retired** — drained and shut down. Version-pinned requests to a
+//!   retired version fail fast with `NotFound`; they never hang.
+//!
+//! **The zero-loss hot-swap contract.** `submit` resolves the target
+//! version and admits into its server *while holding the model's state
+//! read-lock*; the swap flips `live` under the write-lock and only then
+//! drains the old version. So every request that observed a version as
+//! `live` is admitted to its queues before draining can begin, and the
+//! drain executes everything admitted — a hot-swap under concurrent
+//! load completes every in-flight request, and every request admitted
+//! after the swap returns is answered by the new version.
+
+use super::{BatchConfig, ModelServer, ResponseHandle, ServingStats};
+use crate::checkpoint;
+use crate::error::{Result, Status};
+use crate::graph::Endpoint;
+use crate::session::{Session, SessionOptions};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::stats::{LatencyHistogram, LatencySummary};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Where a version lives in its lifecycle. See the module docs for the
+/// full state machine; transitions only move rightward.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VersionState {
+    Loading,
+    Warming,
+    Live,
+    Draining,
+    Retired,
+}
+
+impl std::fmt::Display for VersionState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            VersionState::Loading => "loading",
+            VersionState::Warming => "warming",
+            VersionState::Live => "live",
+            VersionState::Draining => "draining",
+            VersionState::Retired => "retired",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One request run against a freshly loaded version before it goes live:
+/// compiles the cached step for this `(feeds, fetches)` signature and
+/// exercises the whole lane, so live traffic never pays first-request
+/// build cost. Shapes follow the serving contract (batch axis 0 on every
+/// feed).
+#[derive(Clone)]
+pub struct WarmupRequest {
+    pub feeds: Vec<(String, Tensor)>,
+    pub fetches: Vec<String>,
+}
+
+/// On-disk description of one model version.
+#[derive(Clone, Default)]
+pub struct ModelSpec {
+    /// Serialized graph ([`crate::graph::serde::write_graphdef`]).
+    pub graph_path: PathBuf,
+    /// Checkpoint bundle restored into the graph's Variables
+    /// ([`crate::checkpoint::load_bundle`] + [`restore_variables`]).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Target nodes run once after load, before the checkpoint restore —
+    /// e.g. the graph's variable initializers when a version ships
+    /// without (or with a partial) checkpoint.
+    pub init_targets: Vec<String>,
+    /// Requests run while `warming`; any failure aborts the deploy.
+    pub warmup: Vec<WarmupRequest>,
+}
+
+/// Manager-wide configuration: the template every version's Session and
+/// batching server is built from.
+#[derive(Clone, Default)]
+pub struct ManagerOptions {
+    pub session: SessionOptions,
+    pub batch: BatchConfig,
+}
+
+/// Per-version monotonic counters, shared between the manager and every
+/// outstanding [`ManagedHandle`].
+#[derive(Default)]
+struct VersionCounters {
+    submitted: AtomicU64,
+    ok: AtomicU64,
+    errors: AtomicU64,
+    inflight: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+/// One deployed version: its serving stack plus lifecycle state.
+struct VersionEntry {
+    version: u64,
+    state: Mutex<VersionState>,
+    server: ModelServer,
+    counters: Arc<VersionCounters>,
+}
+
+impl VersionEntry {
+    fn state(&self) -> VersionState {
+        *self.state.lock().unwrap()
+    }
+
+    fn set_state(&self, s: VersionState) {
+        *self.state.lock().unwrap() = s;
+    }
+}
+
+/// Version table of one named model. Lock order (everywhere): the
+/// manager's model map, then a model's `state`, then an entry's `state`.
+struct Model {
+    name: String,
+    state: RwLock<ModelState>,
+}
+
+struct ModelState {
+    versions: BTreeMap<u64, Arc<VersionEntry>>,
+    /// The version "latest" routes to: the most recent successful deploy.
+    live: Option<u64>,
+}
+
+/// Snapshot of one version's counters and lifecycle state.
+#[derive(Debug, Clone)]
+pub struct VersionStats {
+    pub model: String,
+    pub version: u64,
+    pub state: VersionState,
+    /// Is this the version "latest" currently routes to?
+    pub live: bool,
+    /// Requests admitted through the manager.
+    pub requests: u64,
+    pub ok: u64,
+    pub errors: u64,
+    /// Admitted but not yet redeemed by the client.
+    pub inflight: u64,
+    /// The underlying batch scheduler's counters.
+    pub batch: ServingStats,
+    /// Submit→completion latency (p50/p95/p99) of redeemed requests.
+    pub latency: LatencySummary,
+}
+
+/// The client's handle to one in-flight managed request. Redeeming it
+/// with [`ManagedHandle::wait`] records the request's latency and
+/// outcome into the serving version's stats.
+pub struct ManagedHandle {
+    inner: ResponseHandle,
+    start: Instant,
+    counters: Arc<VersionCounters>,
+    _inflight: InflightGuard,
+}
+
+/// Decrements the version's in-flight gauge exactly once — when the
+/// handle is redeemed or dropped, whichever comes first.
+struct InflightGuard(Arc<VersionCounters>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl ManagedHandle {
+    /// Block until the request completes; records latency and outcome.
+    pub fn wait(self) -> Result<Vec<Tensor>> {
+        let ManagedHandle { inner, start, counters, _inflight } = self;
+        let result = inner.wait();
+        counters.latency.record(start.elapsed());
+        match &result {
+            Ok(_) => counters.ok.fetch_add(1, Ordering::Relaxed),
+            Err(_) => counters.errors.fetch_add(1, Ordering::Relaxed),
+        };
+        result
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.inner.is_ready()
+    }
+}
+
+/// A multi-model, multi-version serving hub. See the module docs for
+/// the lifecycle and hot-swap contract; see [`crate::serving::net`] for
+/// the TCP front end that exposes it as a standalone process.
+pub struct ModelManager {
+    options: ManagerOptions,
+    models: RwLock<HashMap<String, Arc<Model>>>,
+    shutting_down: AtomicBool,
+}
+
+impl ModelManager {
+    pub fn new(options: ManagerOptions) -> ModelManager {
+        ModelManager {
+            options,
+            models: RwLock::new(HashMap::new()),
+            shutting_down: AtomicBool::new(false),
+        }
+    }
+
+    pub fn options(&self) -> &ManagerOptions {
+        &self.options
+    }
+
+    /// Deploy a version from on-disk artifacts: read the GraphDef, build
+    /// a Session from the manager's session template, run
+    /// `init_targets`, restore the checkpoint, then hand off to
+    /// [`ModelManager::deploy_session`] for warmup + swap. Blocks until
+    /// the swap is complete and any previous live version has fully
+    /// drained; "latest" traffic keeps flowing to the old version for
+    /// the whole load + warmup.
+    pub fn deploy(&self, model: &str, version: u64, spec: &ModelSpec) -> Result<()> {
+        let annotate = |e: Status, what: &str| {
+            Status::new(e.code, format!("model {model:?} v{version} {what}: {}", e.message))
+        };
+        let graph = crate::graph::serde::read_graphdef(&spec.graph_path)
+            .map_err(|e| annotate(e, "graphdef load failed"))?;
+        let session = Arc::new(Session::new(graph, self.options.session.clone()));
+        if !spec.init_targets.is_empty() {
+            let targets: Vec<&str> = spec.init_targets.iter().map(String::as_str).collect();
+            session.run_targets(&targets).map_err(|e| annotate(e, "init failed"))?;
+        }
+        if let Some(ckpt) = &spec.checkpoint_path {
+            let bundle =
+                checkpoint::load_bundle(ckpt).map_err(|e| annotate(e, "checkpoint load failed"))?;
+            restore_variables(&session, &bundle)
+                .map_err(|e| annotate(e, "checkpoint restore failed"))?;
+        }
+        self.deploy_session(model, version, session, &spec.warmup)
+    }
+
+    /// Deploy a version around an already-built Session (in-process
+    /// serving without artifact files; also the substrate `deploy` ends
+    /// in). Runs `warmup`, then atomically swaps "latest" to this
+    /// version and drains the previous live version to `retired` before
+    /// returning. Fails with `AlreadyExists` if the version number is
+    /// already deployed and not retired.
+    pub fn deploy_session(
+        &self,
+        model: &str,
+        version: u64,
+        session: Arc<Session>,
+        warmup: &[WarmupRequest],
+    ) -> Result<()> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(Status::unavailable("model manager is shutting down"));
+        }
+        if version == 0 {
+            return Err(Status::invalid_argument(
+                "model version numbers start at 1 (0 means \"latest\" on the wire)",
+            ));
+        }
+        let model_arc = {
+            let mut models = self.models.write().unwrap();
+            Arc::clone(models.entry(model.to_string()).or_insert_with(|| {
+                Arc::new(Model {
+                    name: model.to_string(),
+                    state: RwLock::new(ModelState { versions: BTreeMap::new(), live: None }),
+                })
+            }))
+        };
+        let entry = Arc::new(VersionEntry {
+            version,
+            state: Mutex::new(VersionState::Warming),
+            server: ModelServer::with_session(session, self.options.batch.clone()),
+            counters: Arc::new(VersionCounters::default()),
+        });
+        {
+            let mut st = model_arc.state.write().unwrap();
+            if let Some(existing) = st.versions.get(&version) {
+                if existing.state() != VersionState::Retired {
+                    return Err(Status::already_exists(format!(
+                        "model {model:?} version {version} is already deployed ({})",
+                        existing.state()
+                    )));
+                }
+            }
+            // Visible (to stats and pinned requests) as `warming`; a
+            // pinned request to a warming version is told to retry, not
+            // routed.
+            st.versions.insert(version, Arc::clone(&entry));
+        }
+
+        // Warmup runs outside any model lock: "latest" traffic keeps
+        // flowing to the current live version while this one warms.
+        for (i, w) in warmup.iter().enumerate() {
+            let feeds: Vec<(&str, Tensor)> =
+                w.feeds.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+            let fetches: Vec<&str> = w.fetches.iter().map(String::as_str).collect();
+            if let Err(e) = entry.server.run(&feeds, &fetches) {
+                entry.set_state(VersionState::Retired);
+                entry.server.shutdown();
+                return Err(Status::new(
+                    e.code,
+                    format!("model {model:?} v{version} warmup request {i} failed: {}", e.message),
+                ));
+            }
+        }
+
+        // The atomic swap: once the write-lock releases, "latest"
+        // resolves to the new version and the old one admits nothing.
+        let old = {
+            let mut st = model_arc.state.write().unwrap();
+            // Re-check under the write-lock: an undeploy()/shutdown()
+            // during the unlocked warmup window may have retired this
+            // entry already — going live would resurrect a shut-down
+            // server as the routing target.
+            if self.shutting_down.load(Ordering::SeqCst)
+                || entry.state() != VersionState::Warming
+            {
+                drop(st);
+                entry.set_state(VersionState::Retired);
+                entry.server.shutdown();
+                return Err(Status::unavailable(format!(
+                    "model {model:?} v{version} was retired before going live \
+                     (undeployed or manager shut down during warmup)"
+                )));
+            }
+            entry.set_state(VersionState::Live);
+            let old = st.live.replace(version).filter(|&v| v != version);
+            let old = old.and_then(|v| st.versions.get(&v).cloned());
+            if let Some(o) = &old {
+                o.set_state(VersionState::Draining);
+            }
+            old
+        };
+        // Graceful drain, after the swap: every request admitted while
+        // the old version was live is still executed; only then do its
+        // lanes shut down.
+        if let Some(o) = old {
+            o.server.shutdown();
+            o.set_state(VersionState::Retired);
+        }
+        Ok(())
+    }
+
+    /// Retire every version of `model` (draining each live lane) and
+    /// stop routing to it. The version table is kept so pinned requests
+    /// keep failing with `NotFound` rather than "unknown model".
+    pub fn undeploy(&self, model: &str) -> Result<()> {
+        let model_arc = self
+            .models
+            .read()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| Status::not_found(format!("model {model:?} is not deployed")))?;
+        let draining = {
+            let mut st = model_arc.state.write().unwrap();
+            st.live = None;
+            let mut draining = Vec::new();
+            for entry in st.versions.values() {
+                if entry.state() != VersionState::Retired {
+                    entry.set_state(VersionState::Draining);
+                    draining.push(Arc::clone(entry));
+                }
+            }
+            draining
+        };
+        for entry in draining {
+            entry.server.shutdown();
+            entry.set_state(VersionState::Retired);
+        }
+        Ok(())
+    }
+
+    /// Drain and retire everything. Idempotent; new deploys and submits
+    /// fail with `Unavailable` afterwards.
+    pub fn shutdown(&self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        let names: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        for name in names {
+            let _ = self.undeploy(&name);
+        }
+    }
+
+    /// Submit a request to `model`: `version: None` routes to the live
+    /// version ("latest"), `Some(v)` pins version `v` and fails with
+    /// `NotFound` if `v` was never deployed or is already
+    /// draining/retired. Feed/fetch semantics are
+    /// [`ModelServer::submit`]'s (batch axis 0 on every feed).
+    pub fn submit(
+        &self,
+        model: &str,
+        version: Option<u64>,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<ManagedHandle> {
+        if self.shutting_down.load(Ordering::SeqCst) {
+            return Err(Status::unavailable("model manager is shutting down"));
+        }
+        let model_arc = self
+            .models
+            .read()
+            .unwrap()
+            .get(model)
+            .cloned()
+            .ok_or_else(|| Status::not_found(format!("model {model:?} is not deployed")))?;
+        // Hold the model read-lock across resolve + admit: the hot-swap
+        // takes the write-lock, so a request that resolved a live
+        // version is admitted to its queues before draining can start.
+        let st = model_arc.state.read().unwrap();
+        let entry = match version {
+            Some(v) => Arc::clone(st.versions.get(&v).ok_or_else(|| {
+                Status::not_found(format!("model {model:?} has no version {v}"))
+            })?),
+            None => {
+                let v = st.live.ok_or_else(|| {
+                    Status::unavailable(format!("model {model:?} has no live version"))
+                })?;
+                Arc::clone(st.versions.get(&v).expect("live version must be in the table"))
+            }
+        };
+        match entry.state() {
+            VersionState::Live => {}
+            VersionState::Loading | VersionState::Warming => {
+                return Err(Status::unavailable(format!(
+                    "model {model:?} v{} is still warming",
+                    entry.version
+                )));
+            }
+            VersionState::Draining | VersionState::Retired => {
+                return Err(Status::not_found(format!(
+                    "model {model:?} v{} is retired (hot-swapped out)",
+                    entry.version
+                )));
+            }
+        }
+        let start = Instant::now();
+        let inner = entry.server.submit(feeds, fetches)?;
+        entry.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        entry.counters.inflight.fetch_add(1, Ordering::Relaxed);
+        Ok(ManagedHandle {
+            inner,
+            start,
+            counters: Arc::clone(&entry.counters),
+            _inflight: InflightGuard(Arc::clone(&entry.counters)),
+        })
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn run(
+        &self,
+        model: &str,
+        version: Option<u64>,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<Vec<Tensor>> {
+        self.submit(model, version, feeds, fetches)?.wait()
+    }
+
+    /// The version "latest" currently routes to, if any.
+    pub fn live_version(&self, model: &str) -> Option<u64> {
+        let model_arc = self.models.read().unwrap().get(model).cloned()?;
+        let st = model_arc.state.read().unwrap();
+        st.live
+    }
+
+    /// Deployed model names, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.models.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Stats for every version of every model, ordered by model name
+    /// then version number.
+    pub fn stats(&self) -> Vec<VersionStats> {
+        let models: Vec<Arc<Model>> = {
+            let map = self.models.read().unwrap();
+            let mut ms: Vec<Arc<Model>> = map.values().cloned().collect();
+            ms.sort_by(|a, b| a.name.cmp(&b.name));
+            ms
+        };
+        let mut out = Vec::new();
+        for model in models {
+            let st = model.state.read().unwrap();
+            for entry in st.versions.values() {
+                out.push(VersionStats {
+                    model: model.name.clone(),
+                    version: entry.version,
+                    state: entry.state(),
+                    live: st.live == Some(entry.version),
+                    requests: entry.counters.submitted.load(Ordering::Relaxed),
+                    ok: entry.counters.ok.load(Ordering::Relaxed),
+                    errors: entry.counters.errors.load(Ordering::Relaxed),
+                    inflight: entry.counters.inflight.load(Ordering::Relaxed),
+                    batch: entry.server.stats(),
+                    latency: entry.counters.latency.summary(),
+                });
+            }
+        }
+        out
+    }
+
+    /// [`ModelManager::stats`] for one model.
+    pub fn model_stats(&self, model: &str) -> Vec<VersionStats> {
+        self.stats().into_iter().filter(|s| s.model == model).collect()
+    }
+
+    /// Stats rendered as JSON (the TCP front end's stats reply).
+    pub fn stats_json(&self) -> String {
+        let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
+        let mut versions = Json::arr();
+        for s in self.stats() {
+            versions.push(
+                Json::obj()
+                    .set("model", s.model)
+                    .set("version", s.version)
+                    .set("state", s.state.to_string())
+                    .set("live", s.live)
+                    .set("requests", s.requests)
+                    .set("ok", s.ok)
+                    .set("errors", s.errors)
+                    .set("inflight", s.inflight)
+                    .set("batches", s.batch.batches)
+                    .set("mean_batch_rows", s.batch.mean_batch_rows())
+                    .set("latency_ms_p50", ms(s.latency.p50))
+                    .set("latency_ms_p95", ms(s.latency.p95))
+                    .set("latency_ms_p99", ms(s.latency.p99)),
+            );
+        }
+        Json::obj().set("versions", versions).render()
+    }
+}
+
+impl Drop for ModelManager {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Restore a checkpoint bundle into a Session's Variables: extend the
+/// graph with one `Placeholder → Assign` pair per bundled tensor and run
+/// them as a single step, feeding the values. Feeding (rather than
+/// baking `Const` weights into restore nodes) keeps the stored graph
+/// free of a second copy of every weight. Fails with `NotFound` if a
+/// bundled name has no matching `Variable` node.
+pub fn restore_variables(session: &Session, bundle: &HashMap<String, Tensor>) -> Result<()> {
+    if bundle.is_empty() {
+        return Ok(());
+    }
+    let mut names: Vec<&String> = bundle.keys().collect();
+    names.sort();
+    // Validate every name against a snapshot before touching the graph,
+    // so a bad bundle rejects the whole restore without leaving partial
+    // `_restore` plumbing behind.
+    {
+        let snapshot = session.graph_snapshot();
+        for name in &names {
+            let var = snapshot.find(name.as_str()).ok_or_else(|| {
+                Status::not_found(format!(
+                    "checkpoint tensor {name:?} has no matching node in the graph"
+                ))
+            })?;
+            if snapshot.node(var).op != "Variable" {
+                return Err(Status::invalid_argument(format!(
+                    "checkpoint tensor {name:?} maps to op {:?}, expected Variable",
+                    snapshot.node(var).op
+                )));
+            }
+        }
+    }
+    let mut feed_pairs: Vec<(String, Tensor)> = Vec::with_capacity(names.len());
+    let mut target = String::new();
+    session.extend(|b| {
+        let mut assigns = Vec::with_capacity(names.len());
+        for name in &names {
+            let var = b.graph.must_find(name.as_str())?;
+            let t = &bundle[name.as_str()];
+            let ph = b.placeholder(&format!("_restore/{name}/value"), t.dtype())?;
+            feed_pairs.push((b.graph.node(ph.node).name.clone(), t.clone()));
+            assigns.push(b.assign(Endpoint::new(var, 0), ph)?);
+        }
+        let group = b.group("_restore/all", assigns);
+        target = b.graph.node(group).name.clone();
+        Ok(())
+    })?;
+    let feeds: Vec<(&str, Tensor)> =
+        feed_pairs.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+    session.run(&feeds, &[], &[&target])?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::builder::GraphBuilder;
+    use crate::tensor::DType;
+
+    /// y = x * k as a Session (one column feed, one fetch named "Mul:0").
+    fn scale_session(k: f32) -> (Arc<Session>, String) {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let c = b.scalar(k);
+        let y = b.mul(x, c);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        (Arc::new(Session::new(b.into_graph(), SessionOptions::default())), fetch)
+    }
+
+    fn col(vals: &[f32]) -> Tensor {
+        Tensor::from_f32(vec![vals.len(), 1], vals.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn deploy_and_route_latest() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, fetch) = scale_session(2.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        assert_eq!(mgr.live_version("m"), Some(1));
+        let out = mgr.run("m", None, &[("x", col(&[3.0]))], &[&fetch]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[6.0]);
+        // Pinned to the same version works too.
+        let out = mgr.run("m", Some(1), &[("x", col(&[4.0]))], &[&fetch]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[8.0]);
+        let stats = mgr.model_stats("m");
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].requests, 2);
+        assert_eq!(stats[0].ok, 2);
+        assert_eq!(stats[0].latency.count, 2);
+        assert!(stats[0].live);
+    }
+
+    #[test]
+    fn unknown_model_and_version_are_not_found() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let e = mgr.run("ghost", None, &[("x", col(&[1.0]))], &["y:0"]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::NotFound);
+        let (s1, fetch) = scale_session(1.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        let e = mgr.run("m", Some(9), &[("x", col(&[1.0]))], &[&fetch]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::NotFound);
+    }
+
+    #[test]
+    fn swap_retires_old_and_redirects_latest() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, fetch) = scale_session(1.0);
+        let (s2, fetch2) = scale_session(10.0);
+        assert_eq!(fetch, fetch2);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        mgr.deploy_session("m", 2, s2, &[]).unwrap();
+        assert_eq!(mgr.live_version("m"), Some(2));
+        let out = mgr.run("m", None, &[("x", col(&[3.0]))], &[&fetch]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[30.0]);
+        // Pinned to the retired version: NotFound, not a hang.
+        let e = mgr.run("m", Some(1), &[("x", col(&[3.0]))], &[&fetch]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::NotFound);
+        assert!(e.message.contains("retired"), "{}", e.message);
+        let stats = mgr.model_stats("m");
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].state, VersionState::Retired);
+        assert_eq!(stats[1].state, VersionState::Live);
+    }
+
+    #[test]
+    fn duplicate_version_rejected_rollback_allowed() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, _) = scale_session(1.0);
+        let (s1b, _) = scale_session(1.5);
+        let (s2, fetch) = scale_session(2.0);
+        let (s1c, _) = scale_session(3.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        let e = mgr.deploy_session("m", 1, s1b, &[]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::AlreadyExists);
+        mgr.deploy_session("m", 2, s2, &[]).unwrap();
+        // v1 is retired now; re-deploying its number is the rollback path.
+        mgr.deploy_session("m", 1, s1c, &[]).unwrap();
+        assert_eq!(mgr.live_version("m"), Some(1));
+        let out = mgr.run("m", None, &[("x", col(&[2.0]))], &[&fetch]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[6.0]);
+    }
+
+    #[test]
+    fn version_zero_rejected() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, _) = scale_session(1.0);
+        let e = mgr.deploy_session("m", 0, s1, &[]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::InvalidArgument);
+    }
+
+    #[test]
+    fn failed_warmup_keeps_previous_version_live() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, fetch) = scale_session(5.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        let (s2, _) = scale_session(7.0);
+        // Warmup fetches a node that does not exist → deploy fails.
+        let bad = WarmupRequest {
+            feeds: vec![("x".into(), col(&[1.0]))],
+            fetches: vec!["nope:0".into()],
+        };
+        let e = mgr.deploy_session("m", 2, s2, &[bad]).unwrap_err();
+        assert!(e.message.contains("warmup"), "{}", e.message);
+        assert_eq!(mgr.live_version("m"), Some(1));
+        let out = mgr.run("m", None, &[("x", col(&[2.0]))], &[&fetch]).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[10.0]);
+        // The failed version shows as retired in stats.
+        let stats = mgr.model_stats("m");
+        assert_eq!(stats.iter().find(|s| s.version == 2).unwrap().state, VersionState::Retired);
+    }
+
+    #[test]
+    fn undeploy_then_shutdown() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, fetch) = scale_session(1.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        mgr.undeploy("m").unwrap();
+        let e = mgr.run("m", None, &[("x", col(&[1.0]))], &[&fetch]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::Unavailable);
+        let e = mgr.run("m", Some(1), &[("x", col(&[1.0]))], &[&fetch]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::NotFound);
+        mgr.shutdown();
+        let (s2, _) = scale_session(2.0);
+        let e = mgr.deploy_session("m", 2, s2, &[]).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::Unavailable);
+        mgr.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn undeploy_during_warmup_never_resurrects_the_candidate() {
+        // Race an undeploy against a slow-warmup deploy. Whichever side
+        // wins, the invariant is: a version reported live actually
+        // serves; a deploy that lost returns an error and leaves
+        // everything retired — never a live pointer at a shut-down
+        // server.
+        let mgr = Arc::new(ModelManager::new(ManagerOptions::default()));
+        let (s1, fetch) = scale_session(1.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        let (s2, _) = scale_session(2.0);
+        let warmup: Vec<WarmupRequest> = (0..32)
+            .map(|i| WarmupRequest {
+                feeds: vec![("x".to_string(), col(&[i as f32]))],
+                fetches: vec![fetch.clone()],
+            })
+            .collect();
+        let deployer = {
+            let mgr = Arc::clone(&mgr);
+            std::thread::spawn(move || mgr.deploy_session("m", 2, s2, &warmup))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        mgr.undeploy("m").unwrap();
+        let deploy_result = deployer.join().unwrap();
+        match mgr.live_version("m") {
+            // Deploy won the race: v2 swapped in after the undeploy and
+            // must genuinely serve.
+            Some(v) => {
+                assert_eq!(v, 2);
+                assert!(deploy_result.is_ok());
+                let out = mgr.run("m", None, &[("x", col(&[3.0]))], &[&fetch]).unwrap();
+                assert_eq!(out[0].as_f32().unwrap(), &[6.0]);
+            }
+            // Undeploy won — either mid-warmup (deploy errored) or after
+            // the swap (deploy succeeded, then v2 was retired). Either
+            // way nothing may route and every version must be retired.
+            None => {
+                for s in mgr.model_stats("m") {
+                    assert_eq!(s.state, VersionState::Retired, "v{} not retired", s.version);
+                }
+                let e = mgr.run("m", None, &[("x", col(&[1.0]))], &[&fetch]).unwrap_err();
+                assert_eq!(e.code, crate::error::Code::Unavailable);
+            }
+        }
+    }
+
+    #[test]
+    fn stats_json_renders() {
+        let mgr = ModelManager::new(ManagerOptions::default());
+        let (s1, fetch) = scale_session(1.0);
+        mgr.deploy_session("m", 1, s1, &[]).unwrap();
+        mgr.run("m", None, &[("x", col(&[1.0]))], &[&fetch]).unwrap();
+        let j = mgr.stats_json();
+        assert!(j.contains("\"model\":\"m\""), "{j}");
+        assert!(j.contains("\"state\":\"live\""), "{j}");
+    }
+
+    #[test]
+    fn restore_variables_roundtrip() {
+        let mut b = GraphBuilder::new();
+        let v = b.variable("w", Tensor::zeros(DType::F32, vec![2, 2]).unwrap()).unwrap();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let y = b.matmul(x, v);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let mut bundle = HashMap::new();
+        bundle.insert("w".to_string(), Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap());
+        restore_variables(&sess, &bundle).unwrap();
+        let out = sess
+            .run(&[("x", Tensor::from_f32(vec![1, 2], vec![1.0, 1.0]).unwrap())], &[&fetch], &[])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[4.0, 6.0]);
+        // A second restore (new values) also works — extend is repeatable.
+        bundle.insert("w".to_string(), Tensor::from_f32(vec![2, 2], vec![0., 0., 0., 1.]).unwrap());
+        restore_variables(&sess, &bundle).unwrap();
+        let out = sess
+            .run(&[("x", Tensor::from_f32(vec![1, 2], vec![1.0, 1.0]).unwrap())], &[&fetch], &[])
+            .unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[0.0, 1.0]);
+        // Unknown names fail loudly.
+        let mut bad = HashMap::new();
+        bad.insert("ghost".to_string(), Tensor::scalar_f32(1.0));
+        assert_eq!(
+            restore_variables(&sess, &bad).unwrap_err().code,
+            crate::error::Code::NotFound
+        );
+    }
+}

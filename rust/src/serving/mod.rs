@@ -74,10 +74,29 @@
 //! assert_eq!(outputs[0].shape().dims(), &[1, 2]);
 //! ```
 
+//! On top of the single-model `ModelServer`, the **model lifecycle
+//! layer** makes the stack production-shaped (see [`manager`] and
+//! [`net`]):
+//!
+//! * [`ModelManager`] — multiple named models, numbered versions loaded
+//!   from GraphDef + checkpoint artifacts, atomic hot-swap with graceful
+//!   draining (`loading → warming → live → draining → retired`), and
+//!   per-version [`VersionStats`] with latency percentiles.
+//! * [`net`] — a TCP predict front end over the shared [`crate::wire`]
+//!   framing ([`NetServer`] accept loop + blocking [`NetClient`]), so
+//!   the hub runs as a standalone process.
+
 mod handle;
+pub mod manager;
+pub mod net;
 mod server;
 
 pub use handle::ResponseHandle;
+pub use manager::{
+    ManagedHandle, ManagerOptions, ModelManager, ModelSpec, VersionState, VersionStats,
+    WarmupRequest,
+};
+pub use net::{NetClient, NetServer};
 pub use server::ModelServer;
 
 use std::time::Duration;

@@ -1,0 +1,384 @@
+//! The TCP predict front end: exposes a [`ModelManager`] as a standalone
+//! serving process, so clients in other processes (or on other hosts)
+//! reach models over the same length-prefixed frame transport the
+//! distributed runtime uses ([`crate::wire`] — one frame layout, two
+//! protocols).
+//!
+//! A connection is persistent: the client writes any number of request
+//! frames and reads one reply frame per request, in order. The server
+//! runs one handler thread per connection (the same thread-per-connection
+//! model as `distributed::worker`); a handler blocks inside
+//! [`ModelManager::run`], which is exactly the dynamic-batching admission
+//! path — so concurrent connections coalesce into shared batches on the
+//! serving lanes, and per-connection threads are the knob that bounds
+//! concurrent in-flight requests.
+//!
+//! Message types (this protocol's own space, unrelated to
+//! `distributed::proto`'s):
+//!
+//! | type | payload |
+//! |------|---------|
+//! | [`MSG_PREDICT`] | model, version (0 = latest), fetches, feeds |
+//! | [`MSG_PREDICT_REPLY`] | status, fetched tensors in fetch order |
+//! | [`MSG_STATS`] | empty → [`MSG_STATS_REPLY`]: manager stats as JSON |
+//! | [`MSG_PING`] | empty → [`MSG_PONG`]: liveness probe |
+
+use super::manager::ModelManager;
+use crate::error::{Result, Status};
+use crate::tensor::Tensor;
+use crate::wire;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+pub const MSG_PREDICT: u8 = 1;
+pub const MSG_PREDICT_REPLY: u8 = 2;
+pub const MSG_STATS: u8 = 3;
+pub const MSG_STATS_REPLY: u8 = 4;
+pub const MSG_PING: u8 = 5;
+pub const MSG_PONG: u8 = 6;
+
+/// One inference request on the wire.
+pub struct PredictRequest {
+    pub model: String,
+    /// `None` = route to the live version ("latest"); encoded as 0.
+    pub version: Option<u64>,
+    pub feeds: Vec<(String, Tensor)>,
+    pub fetches: Vec<String>,
+}
+
+impl PredictRequest {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        wire::put_str(&mut out, &self.model);
+        wire::put_u64(&mut out, self.version.unwrap_or(0));
+        wire::encode_str_list(&mut out, &self.fetches);
+        wire::encode_tensor_map(&mut out, &self.feeds);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PredictRequest> {
+        let mut pos = 0;
+        let model = wire::get_str(buf, &mut pos)?;
+        let version = match wire::get_u64(buf, &mut pos)? {
+            0 => None,
+            v => Some(v),
+        };
+        let fetches = wire::decode_str_list(buf, &mut pos)?;
+        let feeds = wire::decode_tensor_map(buf, &mut pos)?;
+        Ok(PredictRequest { model, version, feeds, fetches })
+    }
+}
+
+/// The reply: a status plus, on success, one tensor per fetch in request
+/// order (keyed by fetch name).
+pub struct PredictReply {
+    pub status: Result<()>,
+    pub outputs: Vec<(String, Tensor)>,
+}
+
+impl PredictReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        wire::encode_status(&mut out, &self.status);
+        wire::encode_tensor_map(&mut out, &self.outputs);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PredictReply> {
+        let mut pos = 0;
+        let status = wire::decode_status(buf, &mut pos)?;
+        let outputs = wire::decode_tensor_map(buf, &mut pos)?;
+        Ok(PredictReply { status, outputs })
+    }
+}
+
+/// A running TCP front end. Dropping it (or calling
+/// [`NetServer::shutdown`]) stops accepting; established connections
+/// finish their in-flight request and close on their next read.
+pub struct NetServer {
+    addr: SocketAddr,
+    shutting_down: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// the accept loop. Returns once the listener is bound; serving runs
+    /// on background threads.
+    pub fn serve(manager: Arc<ModelManager>, addr: &str) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Status::unavailable(format!("bind {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutting_down);
+        let accept = std::thread::Builder::new()
+            .name("modelhub-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let manager = Arc::clone(&manager);
+                            let flag = Arc::clone(&flag);
+                            let spawned = std::thread::Builder::new()
+                                .name("modelhub-conn".to_string())
+                                .spawn(move || handle_connection(&manager, &flag, stream));
+                            if spawned.is_err() {
+                                // Out of threads: shed the connection (it
+                                // closes, the client sees Unavailable)
+                                // rather than dying.
+                                continue;
+                            }
+                        }
+                        // Transient accept failures (ECONNABORTED, fd
+                        // pressure) must not kill the front end; back off
+                        // briefly and keep accepting. Only the shutdown
+                        // flag ends the loop.
+                        Err(_) => {
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                        }
+                    }
+                }
+            })
+            .expect("spawn modelhub accept thread");
+        Ok(NetServer { addr: local, shutting_down, accept_thread: Mutex::new(Some(accept)) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept loop. Idempotent.
+    pub fn shutdown(&self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection to our own
+        // port; it observes the flag and exits. A wildcard bind address
+        // (0.0.0.0 / ::) is not connectable, so target loopback on the
+        // same port instead.
+        let mut wake_addr = self.addr;
+        if wake_addr.ip().is_unspecified() {
+            wake_addr.set_ip(match wake_addr {
+                SocketAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                SocketAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            });
+        }
+        let woke = TcpStream::connect(wake_addr).is_ok();
+        if let Some(h) = self.accept_thread.lock().unwrap().take() {
+            if woke {
+                let _ = h.join();
+            }
+            // If the wake connection failed (firewalled loopback, etc.)
+            // the accept thread stays parked until the next incoming
+            // connection, at which point it observes the flag and exits;
+            // joining here would block the caller indefinitely.
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// One connection's request loop: read a frame, serve it, reply, repeat
+/// until EOF / transport error / server shutdown.
+fn handle_connection(manager: &ModelManager, shutting_down: &AtomicBool, mut stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    loop {
+        let (msg_type, payload) = match wire::read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return, // client hung up (or sent garbage framing)
+        };
+        if shutting_down.load(Ordering::SeqCst) {
+            // Answer with the reply type the request expects (a ping must
+            // not see a predict frame), then close the connection.
+            let _ = match msg_type {
+                MSG_PING => wire::write_frame(&mut stream, MSG_PONG, b""),
+                MSG_STATS => wire::write_frame(&mut stream, MSG_STATS_REPLY, b"{}"),
+                _ => {
+                    let reply = PredictReply {
+                        status: Err(Status::unavailable("model hub is shutting down")),
+                        outputs: vec![],
+                    };
+                    wire::write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
+                }
+            };
+            return;
+        }
+        let written = match msg_type {
+            MSG_PREDICT => {
+                let reply = serve_predict(manager, &payload);
+                wire::write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
+            }
+            MSG_STATS => {
+                wire::write_frame(&mut stream, MSG_STATS_REPLY, manager.stats_json().as_bytes())
+            }
+            MSG_PING => wire::write_frame(&mut stream, MSG_PONG, b""),
+            other => {
+                let reply = PredictReply {
+                    status: Err(Status::invalid_argument(format!(
+                        "unknown serving message type {other}"
+                    ))),
+                    outputs: vec![],
+                };
+                wire::write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
+            }
+        };
+        if written.is_err() {
+            return;
+        }
+    }
+}
+
+fn serve_predict(manager: &ModelManager, payload: &[u8]) -> PredictReply {
+    let req = match PredictRequest::decode(payload) {
+        Ok(r) => r,
+        Err(e) => return PredictReply { status: Err(e), outputs: vec![] },
+    };
+    let feeds: Vec<(&str, Tensor)> =
+        req.feeds.iter().map(|(n, t)| (n.as_str(), t.clone())).collect();
+    let fetches: Vec<&str> = req.fetches.iter().map(String::as_str).collect();
+    match manager.run(&req.model, req.version, &feeds, &fetches) {
+        Ok(outs) => PredictReply {
+            status: Ok(()),
+            outputs: req.fetches.iter().cloned().zip(outs).collect(),
+        },
+        Err(e) => PredictReply { status: Err(e), outputs: vec![] },
+    }
+}
+
+/// A blocking client for one connection to a [`NetServer`]. Not
+/// `Sync`-shareable by design: one request is in flight per connection
+/// at a time; use one client per thread (they batch together on the
+/// server's lanes anyway).
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        Ok(NetClient { stream })
+    }
+
+    /// One predict round trip; returns the fetched tensors in `fetches`
+    /// order. Server-side failures come back with their original status
+    /// code (`NotFound` for unknown model/version, etc.); transport
+    /// failures surface as `Unavailable`.
+    pub fn predict(
+        &mut self,
+        model: &str,
+        version: Option<u64>,
+        feeds: &[(&str, Tensor)],
+        fetches: &[&str],
+    ) -> Result<Vec<Tensor>> {
+        let req = PredictRequest {
+            model: model.to_string(),
+            version,
+            feeds: feeds.iter().map(|(n, t)| (n.to_string(), t.clone())).collect(),
+            fetches: fetches.iter().map(|s| s.to_string()).collect(),
+        };
+        wire::write_frame(&mut self.stream, MSG_PREDICT, &req.encode())?;
+        let (msg_type, payload) = wire::read_frame(&mut self.stream)?;
+        if msg_type != MSG_PREDICT_REPLY {
+            return Err(Status::internal(format!("unexpected reply type {msg_type}")));
+        }
+        let reply = PredictReply::decode(&payload)?;
+        reply.status?;
+        if reply.outputs.len() != fetches.len() {
+            return Err(Status::internal(format!(
+                "predict reply has {} outputs for {} fetches",
+                reply.outputs.len(),
+                fetches.len()
+            )));
+        }
+        Ok(reply.outputs.into_iter().map(|(_, t)| t).collect())
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        wire::write_frame(&mut self.stream, MSG_PING, b"")?;
+        let (msg_type, _) = wire::read_frame(&mut self.stream)?;
+        if msg_type != MSG_PONG {
+            return Err(Status::internal(format!("unexpected ping reply type {msg_type}")));
+        }
+        Ok(())
+    }
+
+    /// The manager's stats, rendered as JSON by the server.
+    pub fn stats_json(&mut self) -> Result<String> {
+        wire::write_frame(&mut self.stream, MSG_STATS, b"")?;
+        let (msg_type, payload) = wire::read_frame(&mut self.stream)?;
+        if msg_type != MSG_STATS_REPLY {
+            return Err(Status::internal(format!("unexpected stats reply type {msg_type}")));
+        }
+        Ok(String::from_utf8_lossy(&payload).to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Code;
+
+    #[test]
+    fn predict_request_roundtrip() {
+        let req = PredictRequest {
+            model: "mnist".into(),
+            version: Some(3),
+            feeds: vec![("x".into(), Tensor::from_f32(vec![1, 2], vec![1., 2.]).unwrap())],
+            fetches: vec!["logits:0".into()],
+        };
+        let dec = PredictRequest::decode(&req.encode()).unwrap();
+        assert_eq!(dec.model, "mnist");
+        assert_eq!(dec.version, Some(3));
+        assert_eq!(dec.fetches, vec!["logits:0".to_string()]);
+        assert_eq!(dec.feeds[0].1.as_f32().unwrap(), &[1., 2.]);
+
+        let latest = PredictRequest { version: None, ..req };
+        let dec = PredictRequest::decode(&latest.encode()).unwrap();
+        assert_eq!(dec.version, None);
+    }
+
+    #[test]
+    fn predict_reply_roundtrip() {
+        let ok = PredictReply {
+            status: Ok(()),
+            outputs: vec![("y:0".into(), Tensor::scalar_f32(4.0))],
+        };
+        let dec = PredictReply::decode(&ok.encode()).unwrap();
+        assert!(dec.status.is_ok());
+        assert_eq!(dec.outputs[0].1.scalar_value_f32().unwrap(), 4.0);
+
+        let err = PredictReply {
+            status: Err(Status::not_found("model \"ghost\" is not deployed")),
+            outputs: vec![],
+        };
+        let dec = PredictReply::decode(&err.encode()).unwrap();
+        assert_eq!(dec.status.unwrap_err().code, Code::NotFound);
+    }
+
+    #[test]
+    fn truncated_predict_request_rejected() {
+        let req = PredictRequest {
+            model: "m".into(),
+            version: None,
+            feeds: vec![("x".into(), Tensor::scalar_f32(1.0))],
+            fetches: vec!["y:0".into()],
+        };
+        let enc = req.encode();
+        for cut in 0..enc.len() {
+            assert!(PredictRequest::decode(&enc[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+}

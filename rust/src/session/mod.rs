@@ -167,15 +167,19 @@ impl Session {
     }
 
     /// §2 "the Session interface supports an Extend method to augment the
-    /// current graph". Invalidates cached executables.
+    /// current graph". Invalidates cached executables. If `f` errors, the
+    /// graph keeps whatever nodes `f` added before failing (harmless
+    /// orphans — unreachable from any fetch) rather than being lost: the
+    /// builder temporarily takes the graph out of the session, so it must
+    /// be put back on every path.
     pub fn extend(&self, f: impl FnOnce(&mut crate::GraphBuilder) -> Result<()>) -> Result<()> {
         let mut graph = self.graph.lock().unwrap();
         let mut b = crate::GraphBuilder::new();
         b.graph = std::mem::take(&mut graph);
-        f(&mut b)?;
+        let result = f(&mut b);
         *graph = b.graph;
         self.cache.lock().unwrap().clear();
-        Ok(())
+        result
     }
 
     pub fn graph_snapshot(&self) -> Graph {
@@ -358,8 +362,8 @@ impl Session {
         targets: &[&str],
     ) -> Result<CachedStep> {
         let full = self.graph.lock().unwrap().clone();
-        let (pruned, feed_keys, fetch_keys) =
-            prune_for_run(&full, &feeds.iter().map(|(k, _)| *k).collect::<Vec<_>>(), fetches, targets)?;
+        let feed_names: Vec<&str> = feeds.iter().map(|(k, _)| *k).collect();
+        let (pruned, feed_keys, fetch_keys) = prune_for_run(&full, &feed_names, fetches, targets)?;
 
         let pipeline = passes::PassManager::standard(
             self.options.enable_constant_folding,
@@ -568,7 +572,8 @@ mod tests {
         let d = b.placeholder("d", DType::F32).unwrap();
         let _e = b.op1("Neg", "e", vec![d], vec![]).unwrap();
         let fname = b.graph.node(f.node).name.clone();
-        let (pruned, _, _) = prune_for_run(&b.graph, &["b"], &[&format!("{fname}:0")], &[]).unwrap();
+        let (pruned, _, _) =
+            prune_for_run(&b.graph, &["b"], &[&format!("{fname}:0")], &[]).unwrap();
         // d and e are pruned away.
         assert!(pruned.find("d").is_none());
         assert!(pruned.find("e").is_none());
@@ -634,7 +639,8 @@ mod tests {
         // Same graph on 1 and 3 devices must agree (§3.2 correctness).
         let build = || {
             let mut b = GraphBuilder::new();
-            let x = b.constant(Tensor::from_f32(vec![4, 4], (0..16).map(|i| i as f32 * 0.1).collect()).unwrap());
+            let data: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+            let x = b.constant(Tensor::from_f32(vec![4, 4], data).unwrap());
             let mut l = x;
             let mut r = x;
             for _ in 0..3 {
@@ -798,7 +804,11 @@ mod tests {
         let run = |opts: SessionOptions| {
             let (b, name) = build();
             Session::new(b.into_graph(), opts)
-                .run(&[("x", Tensor::from_f32(vec![3], vec![0.5, -1.0, 2.0]).unwrap())], &[&name], &[])
+                .run(
+                    &[("x", Tensor::from_f32(vec![3], vec![0.5, -1.0, 2.0]).unwrap())],
+                    &[&name],
+                    &[],
+                )
                 .unwrap()
                 .remove(0)
         };

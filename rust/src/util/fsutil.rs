@@ -1,0 +1,85 @@
+//! Filesystem helpers shared by the on-disk artifact writers
+//! (`checkpoint` bundles, `graph::serde` GraphDef files).
+
+use crate::error::Result;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide sequence for unique temp names: two concurrent writers
+/// in one directory must never share a temp path (a shared
+/// `foo.tmp`-style name corrupts one artifact when e.g. `v1.graphdef`
+/// and `v1.ckpt` export in parallel).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` atomically: a uniquely named temp file in the
+/// same directory (rename must not cross filesystems), fsync, then
+/// rename over the target — a crash mid-write never corrupts an
+/// existing artifact. Creates missing parent directories.
+pub fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".to_string());
+    let tmp = path.with_file_name(format!(
+        ".{file_name}.tmp.{}.{}",
+        std::process::id(),
+        TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e.into());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rustflow-fsutil-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let path = tmpdir().join("artifact.bin");
+        atomic_write(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        atomic_write(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+    }
+
+    #[test]
+    fn no_temp_residue_and_no_cross_artifact_collision() {
+        let dir = tmpdir();
+        // Same stem, different extensions — the modelhub layout.
+        let a = dir.join("v1.graphdef");
+        let b = dir.join("v1.ckpt");
+        atomic_write(&a, b"graph").unwrap();
+        atomic_write(&b, b"ckpt").unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), b"graph");
+        assert_eq!(std::fs::read(&b).unwrap(), b"ckpt");
+        let residue: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(residue.is_empty(), "temp files left behind: {residue:?}");
+    }
+
+    #[test]
+    fn creates_parent_dirs() {
+        let path = tmpdir().join("deep/nested/artifact.bin");
+        atomic_write(&path, b"x").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"x");
+    }
+}

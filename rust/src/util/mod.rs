@@ -1,8 +1,10 @@
 //! Shared utilities: PRNG, JSON writer, thread pool, bench stats,
-//! little-endian byte packing, and a bounded MPMC channel.
+//! little-endian byte packing, a bounded MPMC channel, and atomic
+//! artifact writes.
 
 pub mod bounded;
 pub mod byteorder;
+pub mod fsutil;
 pub mod json;
 pub mod rng;
 pub mod stats;

@@ -3,6 +3,7 @@
 //! targets use `harness = false` with this module: warmup, timed
 //! iterations, then mean / p50 / p95 / p99 over per-iteration samples.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Summary statistics over a set of duration samples.
@@ -43,6 +44,117 @@ impl Summary {
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean.as_secs_f64()
     }
+}
+
+/// Number of log2 latency buckets: bucket 0 is `< 1µs`, bucket `i ≥ 1`
+/// covers `[2^(i-1), 2^i)` µs, and the last bucket is a catch-all
+/// (`≥ 2^38` µs ≈ 76 hours).
+const LATENCY_BUCKETS: usize = 40;
+
+/// A lock-free streaming latency histogram with power-of-two microsecond
+/// buckets, built for concurrent recorders (the serving layer's
+/// per-model-version stats). Unlike [`Summary`], which post-processes a
+/// vector of samples, this never stores samples: `record` is a couple of
+/// relaxed atomic adds, and quantiles are estimated from the bucket
+/// counts (linear interpolation within a bucket, so estimates carry up
+/// to one bucket — ~2× — of resolution error). Counters are monotonic;
+/// a snapshot taken while recorders are active is approximate but never
+/// tears.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; LATENCY_BUCKETS],
+    count: AtomicU64,
+    sum_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+            max_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Bucket index for a duration of `us` microseconds.
+    fn bucket_of(us: u64) -> usize {
+        if us == 0 {
+            0
+        } else {
+            ((64 - us.leading_zeros()) as usize).min(LATENCY_BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micros.fetch_add(us, Ordering::Relaxed);
+        self.max_micros.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Estimated quantile `q ∈ [0, 1]`; `Duration::ZERO` when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > 0 && cum + c >= rank {
+                let lower = if i == 0 { 0u64 } else { 1u64 << (i - 1) };
+                let upper = 1u64 << i;
+                let frac = (rank - cum) as f64 / c as f64;
+                let us = lower as f64 + frac * (upper - lower) as f64;
+                return Duration::from_micros(us as u64);
+            }
+            cum += c;
+        }
+        Duration::from_micros(self.max_micros.load(Ordering::Relaxed))
+    }
+
+    pub fn summary(&self) -> LatencySummary {
+        let count = self.count();
+        let mean = if count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.sum_micros.load(Ordering::Relaxed) / count)
+        };
+        LatencySummary {
+            count,
+            mean,
+            p50: self.quantile(0.50),
+            p95: self.quantile(0.95),
+            p99: self.quantile(0.99),
+            max: Duration::from_micros(self.max_micros.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Point-in-time view of a [`LatencyHistogram`].
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
 }
 
 /// Run `f` for `warmup` untimed and `iters` timed iterations.
@@ -118,6 +230,52 @@ mod tests {
         });
         assert_eq!(count, 12);
         assert_eq!(s.iters, 10);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered_and_bounded() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.summary();
+        assert_eq!(s.count, 1000);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99, "{s:?}");
+        assert_eq!(s.max, Duration::from_micros(1000));
+        // Log-bucket resolution: estimates are within one power of two.
+        assert!(s.p50 >= Duration::from_micros(256) && s.p50 <= Duration::from_micros(1024));
+        assert!(s.p99 >= Duration::from_micros(512) && s.p99 <= Duration::from_micros(1024));
+        assert!(s.mean >= Duration::from_micros(400) && s.mean <= Duration::from_micros(600));
+    }
+
+    #[test]
+    fn histogram_concurrent_recorders() {
+        let h = std::sync::Arc::new(LatencyHistogram::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = std::sync::Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for us in 0..500u64 {
+                    h.record(Duration::from_micros(us));
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 2000);
+        assert!(h.quantile(1.0) <= Duration::from_micros(512));
+    }
+
+    #[test]
+    fn bucket_of_edges() {
+        assert_eq!(LatencyHistogram::bucket_of(0), 0);
+        assert_eq!(LatencyHistogram::bucket_of(1), 1);
+        assert_eq!(LatencyHistogram::bucket_of(2), 2);
+        assert_eq!(LatencyHistogram::bucket_of(3), 2);
+        assert_eq!(LatencyHistogram::bucket_of(4), 3);
+        assert_eq!(LatencyHistogram::bucket_of(u64::MAX), LATENCY_BUCKETS - 1);
     }
 
     #[test]

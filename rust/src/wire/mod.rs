@@ -1,0 +1,311 @@
+//! Shared wire format: length-prefixed frames plus the little-endian
+//! primitive/status/tensor-map codecs used by every TCP protocol in the
+//! crate.
+//!
+//! Originally these lived inside `distributed::proto` (§3.3 master ⇄
+//! worker traffic). The serving front end (`crate::serving::net`) speaks
+//! the same framing on a different port with its own message-type space,
+//! so the transport layer moved here: one frame layout, two protocols.
+//!
+//! Frame layout (unchanged from the original `distributed::proto`):
+//!
+//! ```text
+//! u32 length (payload bytes + 1, little-endian) | u8 msg_type | payload
+//! ```
+//!
+//! The codec helpers are deliberately defensive: every read is
+//! bounds-checked so a malformed or truncated frame from a misbehaving
+//! peer produces `InvalidArgument`, never a panic — the serving front end
+//! accepts connections from arbitrary clients.
+
+use crate::error::{Code, Result, Status};
+use crate::tensor::{codec, Tensor};
+use crate::util::byteorder::LittleEndian;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// Upper bound on a single frame (1 GiB). Large enough for any tensor
+/// this runtime ships; small enough that a corrupt length prefix cannot
+/// drive an unbounded allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Write one frame: u32 length, u8 type, payload. Generic over the sink
+/// so tests can frame into an in-memory cursor. Oversize payloads are
+/// rejected *before* any bytes hit the stream: a wrapped u32 length (≥
+/// 4 GiB) or a frame the peer's [`read_frame`] would refuse mid-stream
+/// must fail as a status here, not desync the connection there.
+pub fn write_frame<S: Write>(stream: &mut S, msg_type: u8, payload: &[u8]) -> Result<()> {
+    if payload.len() >= MAX_FRAME_BYTES {
+        return Err(Status::invalid_argument(format!(
+            "frame payload of {} bytes exceeds the {MAX_FRAME_BYTES}-byte limit",
+            payload.len()
+        )));
+    }
+    let mut header = [0u8; 5];
+    LittleEndian::write_u32(&mut header, payload.len() as u32 + 1);
+    header[4] = msg_type;
+    stream.write_all(&header)?;
+    stream.write_all(payload)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Read one frame; the inverse of [`write_frame`].
+pub fn read_frame<S: Read>(stream: &mut S) -> Result<(u8, Vec<u8>)> {
+    let mut header = [0u8; 5];
+    stream.read_exact(&mut header)?;
+    let len = LittleEndian::read_u32(&header) as usize;
+    if len == 0 {
+        return Err(Status::unavailable("empty frame"));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(Status::invalid_argument(format!(
+            "frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte limit"
+        )));
+    }
+    let msg_type = header[4];
+    let mut payload = vec![0u8; len - 1];
+    stream.read_exact(&mut payload)?;
+    Ok((msg_type, payload))
+}
+
+/// One-shot RPC helper: connect, send one frame, await one reply frame.
+pub fn rpc(addr: &str, msg_type: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    write_frame(&mut stream, msg_type, payload)?;
+    read_frame(&mut stream)
+}
+
+// ---- primitive payload codecs ----------------------------------------------
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    let mut b = [0u8; 4];
+    LittleEndian::write_u32(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    let mut b = [0u8; 8];
+    LittleEndian::write_u64(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn get_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    if buf.len() < *pos + 4 {
+        return Err(Status::invalid_argument("truncated payload (u32)"));
+    }
+    let v = LittleEndian::read_u32(&buf[*pos..]);
+    *pos += 4;
+    Ok(v)
+}
+
+pub fn get_u64(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    if buf.len() < *pos + 8 {
+        return Err(Status::invalid_argument("truncated payload (u64)"));
+    }
+    let v = LittleEndian::read_u64(&buf[*pos..]);
+    *pos += 8;
+    Ok(v)
+}
+
+pub fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_u32(buf, pos)? as usize;
+    if buf.len() < *pos + len {
+        return Err(Status::invalid_argument("truncated payload (string)"));
+    }
+    let s = String::from_utf8_lossy(&buf[*pos..*pos + len]).to_string();
+    *pos += len;
+    Ok(s)
+}
+
+// ---- status ----------------------------------------------------------------
+
+/// One byte 255 for OK, else the `Code` byte followed by a
+/// length-prefixed message.
+pub fn encode_status(out: &mut Vec<u8>, s: &Result<()>) {
+    match s {
+        Ok(()) => out.push(255),
+        Err(e) => {
+            out.push(e.code.as_u8());
+            put_str(out, &e.message);
+        }
+    }
+}
+
+pub fn decode_status(buf: &[u8], pos: &mut usize) -> Result<Result<()>> {
+    if buf.len() <= *pos {
+        return Err(Status::invalid_argument("truncated payload (status)"));
+    }
+    let code = buf[*pos];
+    *pos += 1;
+    if code == 255 {
+        return Ok(Ok(()));
+    }
+    let msg = get_str(buf, pos)?;
+    Ok(Err(Status::new(Code::from_u8(code), msg)))
+}
+
+// ---- string lists ----------------------------------------------------------
+
+pub fn encode_str_list(out: &mut Vec<u8>, names: &[String]) {
+    put_u32(out, names.len() as u32);
+    for n in names {
+        put_str(out, n);
+    }
+}
+
+pub fn decode_str_list(buf: &[u8], pos: &mut usize) -> Result<Vec<String>> {
+    let n = get_u32(buf, pos)? as usize;
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        out.push(get_str(buf, pos)?);
+    }
+    Ok(out)
+}
+
+// ---- tensor maps -----------------------------------------------------------
+
+/// Named-tensor map: u32 count, then per entry a length-prefixed name and
+/// a u64-length-prefixed `tensor::codec` payload.
+pub fn encode_tensor_map(out: &mut Vec<u8>, m: &[(String, Tensor)]) {
+    put_u32(out, m.len() as u32);
+    for (k, t) in m {
+        put_str(out, k);
+        let payload = codec::encode(t);
+        put_u64(out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+    }
+}
+
+pub fn decode_tensor_map(buf: &[u8], pos: &mut usize) -> Result<Vec<(String, Tensor)>> {
+    let n = get_u32(buf, pos)? as usize;
+    let mut out = Vec::with_capacity(n.min(4096));
+    for _ in 0..n {
+        let key = get_str(buf, pos)?;
+        // Compare in u64 against the remaining bytes: `*pos + plen` on an
+        // attacker-controlled u64 length would wrap (and `as usize`
+        // truncates on 32-bit), bypassing the bounds check.
+        let plen64 = get_u64(buf, pos)?;
+        if plen64 > (buf.len() - *pos) as u64 {
+            return Err(Status::invalid_argument("truncated payload (tensor)"));
+        }
+        let plen = plen64 as usize;
+        let (t, used) = codec::decode(&buf[*pos..*pos + plen])?;
+        if used != plen {
+            return Err(Status::invalid_argument("tensor map payload mismatch"));
+        }
+        *pos += plen;
+        out.push((key, t));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_roundtrip_in_memory() {
+        let mut buf = Cursor::new(Vec::new());
+        write_frame(&mut buf, 7, b"hello").unwrap();
+        write_frame(&mut buf, 9, b"").unwrap();
+        buf.set_position(0);
+        let (t, p) = read_frame(&mut buf).unwrap();
+        assert_eq!((t, p.as_slice()), (7, b"hello".as_slice()));
+        let (t, p) = read_frame(&mut buf).unwrap();
+        assert_eq!((t, p.len()), (9, 0));
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut header = [0u8; 5];
+        LittleEndian::write_u32(&mut header, u32::MAX);
+        header[4] = 1;
+        let mut cur = Cursor::new(header.to_vec());
+        let e = read_frame(&mut cur).unwrap_err();
+        assert_eq!(e.code, Code::InvalidArgument);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 42);
+        put_u64(&mut out, u64::MAX - 1);
+        put_str(&mut out, "model/v1");
+        let mut pos = 0;
+        assert_eq!(get_u32(&out, &mut pos).unwrap(), 42);
+        assert_eq!(get_u64(&out, &mut pos).unwrap(), u64::MAX - 1);
+        assert_eq!(get_str(&out, &mut pos).unwrap(), "model/v1");
+        assert_eq!(pos, out.len());
+    }
+
+    #[test]
+    fn truncated_payloads_error_not_panic() {
+        let mut out = Vec::new();
+        put_str(&mut out, "a long enough name");
+        // Chop the payload mid-string: every prefix must decode to an
+        // error rather than slicing out of bounds.
+        for cut in 0..out.len() {
+            let mut pos = 0;
+            assert!(get_str(&out[..cut], &mut pos).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn status_roundtrip() {
+        let mut out = Vec::new();
+        encode_status(&mut out, &Ok(()));
+        encode_status(&mut out, &Err(Status::not_found("no such model")));
+        let mut pos = 0;
+        assert!(decode_status(&out, &mut pos).unwrap().is_ok());
+        let e = decode_status(&out, &mut pos).unwrap().unwrap_err();
+        assert_eq!(e.code, Code::NotFound);
+        assert_eq!(e.message, "no such model");
+    }
+
+    #[test]
+    fn huge_declared_tensor_length_rejected_not_panicking() {
+        // plen near u64::MAX must fail the bounds check, not wrap it.
+        let mut out = Vec::new();
+        put_u32(&mut out, 1); // one entry
+        put_str(&mut out, "x");
+        put_u64(&mut out, u64::MAX - 5);
+        out.extend_from_slice(&[0u8; 16]);
+        let mut pos = 0;
+        assert!(decode_tensor_map(&out, &mut pos).is_err());
+    }
+
+    #[test]
+    fn tensor_map_roundtrip() {
+        let m = vec![
+            ("x".to_string(), Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap()),
+            ("step".to_string(), Tensor::scalar_i64(9)),
+        ];
+        let mut out = Vec::new();
+        encode_tensor_map(&mut out, &m);
+        let mut pos = 0;
+        let dec = decode_tensor_map(&out, &mut pos).unwrap();
+        assert_eq!(pos, out.len());
+        assert_eq!(dec.len(), 2);
+        assert_eq!(dec[0].0, "x");
+        assert_eq!(dec[0].1.as_f32().unwrap(), &[1., 2., 3., 4.]);
+        assert_eq!(dec[1].1.scalar_value_i64().unwrap(), 9);
+    }
+
+    #[test]
+    fn str_list_roundtrip() {
+        let names = vec!["a:0".to_string(), "b/c:1".to_string()];
+        let mut out = Vec::new();
+        encode_str_list(&mut out, &names);
+        let mut pos = 0;
+        assert_eq!(decode_str_list(&out, &mut pos).unwrap(), names);
+    }
+}

@@ -10,7 +10,10 @@ use rustflow::GraphBuilder;
 
 /// Spin up `n` in-process workers on ephemeral ports; returns the cluster
 /// spec and worker handles.
-fn spawn_cluster(n: usize, devices_per_worker: usize) -> (ClusterSpec, Vec<std::sync::Arc<Worker>>) {
+fn spawn_cluster(
+    n: usize,
+    devices_per_worker: usize,
+) -> (ClusterSpec, Vec<std::sync::Arc<Worker>>) {
     // Bind ephemeral listeners first to learn the addresses.
     let mut addrs = Vec::new();
     let mut listeners = Vec::new();
@@ -227,4 +230,46 @@ fn checkpoint_recovery_after_worker_restart() {
     master.run_targets(&[inc]).unwrap();
     let out = master.run(&[], &["w"], &[]).unwrap();
     assert_eq!(out[0].scalar_value_f32().unwrap(), 6.0, "training continues after recovery");
+}
+
+#[test]
+fn worker_intra_op_pools_sized_and_results_identical() {
+    use rustflow::distributed::WorkerOptions;
+    // Two clusters running the same remote matmul: serial kernels vs
+    // intra-op pools of 4. The pool's determinism contract promises
+    // bit-identical results; the worker config must actually size the
+    // per-device pools.
+    let run_with = |intra_op_threads: usize| -> (Vec<f32>, usize) {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![l.local_addr().unwrap().to_string()];
+        drop(l);
+        let cluster = ClusterSpec::new(addrs.clone(), 1);
+        let w = Worker::with_options(
+            0,
+            cluster.clone(),
+            WorkerOptions { threads_per_device: 2, intra_op_threads },
+        );
+        w.serve(&addrs[0]).unwrap();
+        let pool_threads = w.devices().get(0).compute.threads();
+
+        let mut b = GraphBuilder::new();
+        let x = b.constant(
+            Tensor::from_f32(vec![96, 96], (0..96 * 96).map(|i| (i % 13) as f32 * 0.1).collect())
+                .unwrap(),
+        );
+        let y = b.with_device("/job:worker/task:0", |b| b.matmul(x, x));
+        let yname = format!("{}:0", b.graph.node(y.node).name);
+        // Const-rooted on purpose (transfer-intent idiom): keep the matmul
+        // on the worker so the remote kernel actually uses the pool.
+        let opts =
+            DistMasterOptions { enable_constant_folding: false, ..DistMasterOptions::default() };
+        let master = DistMaster::new(cluster, b.into_graph(), opts);
+        let out = master.run(&[], &[&yname], &[]).unwrap();
+        (out[0].as_f32().unwrap().to_vec(), pool_threads)
+    };
+    let (serial, serial_threads) = run_with(1);
+    let (pooled, pooled_threads) = run_with(4);
+    assert_eq!(serial_threads, 1);
+    assert_eq!(pooled_threads, 4, "WorkerOptions::intra_op_threads must size the device pools");
+    assert_eq!(serial, pooled, "intra-op parallelism must be bit-identical on remote partitions");
 }

@@ -1,0 +1,328 @@
+//! Integration tests for the model lifecycle manager and the TCP predict
+//! front end: artifact round-trips (checkpoint save → GraphDef serialize
+//! → `ModelManager` load → identical outputs), zero-loss hot-swap under
+//! concurrent client load, version-pinning semantics, and the wire path.
+
+use rustflow::serving::{
+    ManagerOptions, ModelManager, ModelSpec, NetClient, NetServer, VersionState, WarmupRequest,
+};
+use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rustflow-lifecycle-{tag}-{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+fn col(vals: &[f32]) -> Tensor {
+    Tensor::from_f32(vec![vals.len(), 1], vals.to_vec()).unwrap()
+}
+
+/// Build an MLP classifier graph; returns (builder, fetch name, init
+/// targets, variable names).
+fn mlp_graph(seed: u64) -> (GraphBuilder, String, Vec<String>, Vec<String>) {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let (logits, vars) = models::mlp(&mut b, x, &[8, 16, 4], seed).unwrap();
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let var_names: Vec<String> = vars.iter().map(|v| b.graph.node(v.node).name.clone()).collect();
+    (b, fetch, inits, var_names)
+}
+
+/// Export one trained model version to disk: GraphDef + checkpoint of
+/// the variables' current values. Returns the spec (no warmup).
+fn export_version(dir: &Path, tag: &str, seed: u64) -> (ModelSpec, String, Vec<Tensor>) {
+    let (b, fetch, inits, var_names) = mlp_graph(seed);
+    let graph = b.graph.clone();
+    let sess = Session::new(b.into_graph(), SessionOptions::default());
+    sess.run_targets(&inits.iter().map(String::as_str).collect::<Vec<_>>()).unwrap();
+    // Fetch the initialized variables and bundle them — the serving-side
+    // checkpoint path (`Save` nodes produce the identical bundle format).
+    let fetch_names: Vec<&str> = var_names.iter().map(String::as_str).collect();
+    let values = sess.run(&[], &fetch_names, &[]).unwrap();
+    let pairs: Vec<(String, Tensor)> = var_names.iter().cloned().zip(values).collect();
+    let ckpt = dir.join(format!("{tag}.ckpt"));
+    rustflow::checkpoint::save_bundle(&ckpt, &pairs).unwrap();
+    let gdf = dir.join(format!("{tag}.graphdef"));
+    rustflow::graph::serde::write_graphdef(&gdf, &graph).unwrap();
+
+    // Reference outputs computed directly, for round-trip comparison.
+    let probe = Tensor::from_f32(vec![2, 8], (0..16).map(|i| i as f32 * 0.1).collect()).unwrap();
+    let direct = sess.run(&[("x", probe.clone())], &[&fetch], &[]).unwrap();
+    let spec = ModelSpec {
+        graph_path: gdf,
+        checkpoint_path: Some(ckpt),
+        init_targets: vec![],
+        warmup: vec![WarmupRequest {
+            feeds: vec![("x".to_string(), probe)],
+            fetches: vec![fetch.clone()],
+        }],
+    };
+    (spec, fetch, direct)
+}
+
+#[test]
+fn checkpoint_graphdef_manager_roundtrip_is_exact() {
+    let dir = tmpdir("roundtrip");
+    let (spec, fetch, direct) = export_version(&dir, "v1", 42);
+    let mgr = ModelManager::new(ManagerOptions::default());
+    mgr.deploy("mlp", 1, &spec).unwrap();
+    assert_eq!(mgr.live_version("mlp"), Some(1));
+
+    // Same probe input the direct session answered: byte-identical f32s
+    // (same kernels, same deterministic execution).
+    let probe = Tensor::from_f32(vec![2, 8], (0..16).map(|i| i as f32 * 0.1).collect()).unwrap();
+    let served = mgr.run("mlp", None, &[("x", probe)], &[&fetch]).unwrap();
+    assert_eq!(served[0].shape().dims(), &[2, 4]);
+    assert_eq!(served[0].as_f32().unwrap(), direct[0].as_f32().unwrap());
+
+    // The warmup request already exercised the lane: stats show it.
+    let stats = mgr.model_stats("mlp");
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].state, VersionState::Live);
+    assert!(stats[0].batch.batches >= 2, "warmup + request should have run");
+}
+
+#[test]
+fn missing_artifacts_fail_cleanly() {
+    let dir = tmpdir("missing");
+    let mgr = ModelManager::new(ManagerOptions::default());
+    let spec = ModelSpec { graph_path: dir.join("nope.graphdef"), ..Default::default() };
+    let e = mgr.deploy("m", 1, &spec).unwrap_err();
+    assert_eq!(e.code, rustflow::error::Code::NotFound);
+    assert!(e.message.contains("graphdef load failed"), "{}", e.message);
+    // A checkpoint naming a variable the graph lacks also fails the deploy.
+    let (mut spec2, _, _) = export_version(&dir, "v1", 1);
+    let bad_ckpt = dir.join("bad.ckpt");
+    rustflow::checkpoint::save_bundle(
+        &bad_ckpt,
+        &[("ghost_var".to_string(), Tensor::scalar_f32(1.0))],
+    )
+    .unwrap();
+    spec2.checkpoint_path = Some(bad_ckpt);
+    let e = mgr.deploy("m", 1, &spec2).unwrap_err();
+    assert!(e.message.contains("checkpoint restore failed"), "{}", e.message);
+    assert_eq!(mgr.live_version("m"), None);
+}
+
+/// The headline guarantee: a hot-swap under concurrent client load loses
+/// zero in-flight requests, and every request submitted after the deploy
+/// returns is answered by the new version.
+#[test]
+fn hot_swap_under_load_loses_nothing() {
+    // v1: y = x * 1; v2: y = x * 2 — responses identify their version.
+    let scale_session = |k: f32| -> (Arc<Session>, String) {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let c = b.scalar(k);
+        let y = b.mul(x, c);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        (Arc::new(Session::new(b.into_graph(), SessionOptions::default())), fetch)
+    };
+    let (s1, fetch) = scale_session(1.0);
+    let (s2, fetch2) = scale_session(2.0);
+    assert_eq!(fetch, fetch2);
+
+    let mgr = Arc::new(ModelManager::new(ManagerOptions::default()));
+    mgr.deploy_session("m", 1, s1, &[]).unwrap();
+
+    let swapped = Arc::new(AtomicBool::new(false));
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for c in 0..4u32 {
+        let mgr = Arc::clone(&mgr);
+        let swapped = Arc::clone(&swapped);
+        let stop = Arc::clone(&stop);
+        let fetch = fetch.clone();
+        clients.push(std::thread::spawn(move || -> (u64, u64, u64) {
+            let (mut v1_answers, mut v2_answers, mut total) = (0u64, 0u64, 0u64);
+            let mut i = 0f32;
+            while !stop.load(Ordering::SeqCst) {
+                i += 1.0;
+                let input = i * (c + 1) as f32;
+                // Sampled *before* submit: if the swap had completed by
+                // then, the answer must come from v2.
+                let after_swap = swapped.load(Ordering::SeqCst);
+                let out = mgr
+                    .run("m", None, &[("x", col(&[input]))], &[&fetch])
+                    .expect("no request may fail across a hot-swap");
+                let y = out[0].as_f32().unwrap()[0];
+                total += 1;
+                if y == input {
+                    v1_answers += 1;
+                } else if y == input * 2.0 {
+                    v2_answers += 1;
+                } else {
+                    panic!("answer {y} for input {input} came from neither version");
+                }
+                if after_swap {
+                    assert_eq!(y, input * 2.0, "post-swap request answered by the old version");
+                }
+            }
+            (v1_answers, v2_answers, total)
+        }));
+    }
+
+    std::thread::sleep(Duration::from_millis(100));
+    mgr.deploy_session("m", 2, s2, &[]).unwrap(); // blocks until v1 drained
+    swapped.store(true, Ordering::SeqCst);
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+
+    let (mut v1_total, mut v2_total, mut total) = (0u64, 0u64, 0u64);
+    for t in clients {
+        let (v1, v2, n) = t.join().expect("client thread panicked");
+        v1_total += v1;
+        v2_total += v2;
+        total += n;
+    }
+    assert!(v1_total > 0, "expected some pre-swap traffic");
+    assert!(v2_total > 0, "expected some post-swap traffic");
+    // Zero lost requests: the managers' per-version counters account for
+    // every client request, all of them OK.
+    let stats = mgr.model_stats("m");
+    let sum_requests: u64 = stats.iter().map(|s| s.requests).sum();
+    let sum_ok: u64 = stats.iter().map(|s| s.ok).sum();
+    let sum_errors: u64 = stats.iter().map(|s| s.errors).sum();
+    assert_eq!(sum_requests, total);
+    assert_eq!(sum_ok, total);
+    assert_eq!(sum_errors, 0);
+    assert_eq!(stats.iter().find(|s| s.version == 1).unwrap().state, VersionState::Retired);
+    assert_eq!(stats.iter().find(|s| s.version == 2).unwrap().state, VersionState::Live);
+
+    // Version-pinned requests to the retired version: NotFound, fast.
+    let e = mgr.run("m", Some(1), &[("x", col(&[1.0]))], &[&fetch]).unwrap_err();
+    assert_eq!(e.code, rustflow::error::Code::NotFound);
+}
+
+#[test]
+fn tcp_front_end_serves_and_hot_swaps() {
+    let dir = tmpdir("tcp");
+    let (spec1, fetch, _) = export_version(&dir, "v1", 7);
+    let (spec2, fetch2, _) = export_version(&dir, "v2", 13);
+    assert_eq!(fetch, fetch2);
+    let mgr = Arc::new(ModelManager::new(ManagerOptions::default()));
+    mgr.deploy("mlp", 1, &spec1).unwrap();
+    let server = NetServer::serve(Arc::clone(&mgr), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+
+    // Round trip over the wire matches the in-process answer.
+    let probe = Tensor::from_f32(vec![1, 8], vec![0.5; 8]).unwrap();
+    let wire_out = client.predict("mlp", None, &[("x", probe.clone())], &[&fetch]).unwrap();
+    let local_out = mgr.run("mlp", None, &[("x", probe.clone())], &[&fetch]).unwrap();
+    assert_eq!(wire_out[0].as_f32().unwrap(), local_out[0].as_f32().unwrap());
+
+    // Unknown model / retired version / malformed feeds keep their codes
+    // across the wire.
+    let e = client.predict("ghost", None, &[("x", probe.clone())], &[&fetch]).unwrap_err();
+    assert_eq!(e.code, rustflow::error::Code::NotFound);
+    let e = client
+        .predict("mlp", None, &[("x", Tensor::scalar_f32(1.0))], &[&fetch])
+        .unwrap_err();
+    assert_eq!(e.code, rustflow::error::Code::InvalidArgument);
+
+    // Hot-swap while clients hammer over TCP: zero failures.
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut clients = Vec::new();
+    for _ in 0..3 {
+        let addr = addr.clone();
+        let stop = Arc::clone(&stop);
+        let fetch = fetch.clone();
+        clients.push(std::thread::spawn(move || -> u64 {
+            let mut c = NetClient::connect(&addr).unwrap();
+            let probe = Tensor::from_f32(vec![1, 8], vec![0.25; 8]).unwrap();
+            let mut n = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                c.predict("mlp", None, &[("x", probe.clone())], &[&fetch])
+                    .expect("wire predict failed during hot-swap");
+                n += 1;
+            }
+            n
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    mgr.deploy("mlp", 2, &spec2).unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = clients.into_iter().map(|t| t.join().unwrap()).sum();
+    assert!(total > 0);
+
+    // v2 answers differ from v1 (different seed) — "latest" now routes to it.
+    let out_v2 = client.predict("mlp", None, &[("x", probe.clone())], &[&fetch]).unwrap();
+    let out_pin1 = client.predict("mlp", Some(1), &[("x", probe)], &[&fetch]);
+    assert_eq!(out_pin1.unwrap_err().code, rustflow::error::Code::NotFound);
+    assert_ne!(out_v2[0].as_f32().unwrap(), wire_out[0].as_f32().unwrap());
+
+    // Stats travel the wire as JSON.
+    let json = client.stats_json().unwrap();
+    assert!(json.contains("\"model\":\"mlp\""), "{json}");
+    assert!(json.contains("\"state\":\"live\""), "{json}");
+
+    server.shutdown();
+    // After shutdown, new connections are refused or die on first read.
+    if let Ok(mut c) = NetClient::connect(&addr) {
+        assert!(c.ping().is_err());
+    }
+    mgr.shutdown();
+}
+
+#[test]
+fn warming_version_never_steals_latest_traffic() {
+    // A deploy whose warmup takes a while must leave "latest" routed to
+    // the old version for its whole duration: run a slow-warmup deploy
+    // from a second thread and assert every concurrent "latest" answer
+    // still comes from v1 until the deploy returns.
+    let scale_session = |k: f32| -> (Arc<Session>, String) {
+        let mut b = GraphBuilder::new();
+        let x = b.placeholder("x", DType::F32).unwrap();
+        let c = b.scalar(k);
+        let y = b.mul(x, c);
+        let fetch = format!("{}:0", b.graph.node(y.node).name);
+        (Arc::new(Session::new(b.into_graph(), SessionOptions::default())), fetch)
+    };
+    let (s1, fetch) = scale_session(1.0);
+    let (s2, _) = scale_session(3.0);
+    let mgr = Arc::new(ModelManager::new(ManagerOptions::default()));
+    mgr.deploy_session("m", 1, s1, &[]).unwrap();
+
+    // 64 warmup requests keep v2 in `warming` for a measurable window.
+    let warmup: Vec<WarmupRequest> = (0..64)
+        .map(|i| WarmupRequest {
+            feeds: vec![("x".to_string(), col(&[i as f32]))],
+            fetches: vec![fetch.clone()],
+        })
+        .collect();
+    let deploy_done = Arc::new(AtomicBool::new(false));
+    let deployer = {
+        let mgr = Arc::clone(&mgr);
+        let done = Arc::clone(&deploy_done);
+        std::thread::spawn(move || {
+            mgr.deploy_session("m", 2, s2, &warmup).unwrap();
+            done.store(true, Ordering::SeqCst);
+        })
+    };
+    let mut saw_v1_during_warmup = false;
+    loop {
+        let before = deploy_done.load(Ordering::SeqCst);
+        let out = mgr.run("m", None, &[("x", col(&[5.0]))], &[&fetch]).unwrap();
+        let y = out[0].as_f32().unwrap()[0];
+        if before {
+            assert_eq!(y, 15.0, "after deploy returned, latest must be v2");
+            break;
+        }
+        assert!(y == 5.0 || y == 15.0, "unexpected answer {y}");
+        if y == 5.0 {
+            saw_v1_during_warmup = true;
+        }
+    }
+    deployer.join().unwrap();
+    assert!(saw_v1_during_warmup, "v1 should have answered while v2 warmed");
+}

@@ -1,24 +1,27 @@
 #!/usr/bin/env bash
 # Perf trajectory, as one command: runs the §5 optimizer ablation bench,
-# the step-memory-planner bench, the intra-op parallelism bench, and the
-# serving throughput bench, and writes BENCH_optimizer.json +
-# BENCH_memory.json + BENCH_parallel.json at the repo root
-# (machine-readable; one file per tracked benchmark family).
+# the step-memory-planner bench, the intra-op parallelism bench, the
+# serving throughput bench, and the wire-serving (model hub) bench, and
+# writes BENCH_optimizer.json + BENCH_memory.json + BENCH_parallel.json +
+# BENCH_serving_net.json at the repo root (machine-readable; one file per
+# tracked benchmark family).
 #
 #   scripts/bench.sh
 #
 # The optimizer bench asserts its acceptance bar (full pipeline ≥ 1.3x
 # over passes-disabled), the memory bench asserts planning-on allocates
-# ≥ 2x fewer heap bytes per step than planning-off, and the parallel
-# bench asserts ≥ 2x matmul throughput at 4 intra-op threads (when the
-# machine has ≥ 4 cores) with no 1-thread regression, so this script
-# fails on a perf regression.
+# ≥ 2x fewer heap bytes per step than planning-off, the parallel bench
+# asserts ≥ 2x matmul throughput at 4 intra-op threads (when the machine
+# has ≥ 4 cores) with no 1-thread regression, and the serving_net bench
+# asserts a mid-run model hot-swap costs < 20% of one throughput window
+# (≥ 4 cores), so this script fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
 export BENCH_OPTIMIZER_JSON="$(pwd)/BENCH_optimizer.json"
 export BENCH_MEMORY_JSON="$(pwd)/BENCH_memory.json"
 export BENCH_PARALLEL_JSON="$(pwd)/BENCH_parallel.json"
+export BENCH_SERVING_NET_JSON="$(pwd)/BENCH_serving_net.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
@@ -31,5 +34,8 @@ cargo bench --bench parallel
 
 echo "== cargo bench --bench serving"
 cargo bench --bench serving
+
+echo "== cargo bench --bench serving_net (writes $BENCH_SERVING_NET_JSON)"
+cargo bench --bench serving_net
 
 echo "bench: OK"

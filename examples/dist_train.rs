@@ -1,0 +1,122 @@
+//! §4.4 / Fig 7 data-parallel distributed training over a parameter
+//! server: replicas own local Sessions computing gradients, a
+//! [`ParamServer`] shard owns the parameters and applies the update —
+//! synchronously (averaged across replicas, bit-identical to one big
+//! batch) and asynchronously (Downpour). Gradients and pulls travel
+//! bf16-compressed (§5.5) where negotiated.
+//!
+//!     cargo run --release --example dist_train -- [replicas] [steps]
+//!
+//! Exits non-zero if training fails to reduce the loss (CI smoke).
+//!
+//! [`ParamServer`]: rustflow::distributed::ParamServer
+
+use rustflow::data;
+use rustflow::distributed::{DistTrainer, DistTrainerOptions, ParamServer, PsOptions};
+use rustflow::models;
+use rustflow::optim::Optimizer;
+use rustflow::{DType, GraphBuilder, SessionOptions};
+
+const DIM: usize = 16;
+const CLASSES: usize = 4;
+const BATCH: usize = 16;
+
+/// A replica's local graph: placeholder-fed MLP + xent loss, gradient-only
+/// (the server owns the update rule).
+fn build_replica(
+) -> rustflow::Result<(GraphBuilder, rustflow::Endpoint, Vec<rustflow::Endpoint>)> {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32)?;
+    let labels = b.placeholder("labels", DType::F32)?;
+    let (logits, vars) = models::mlp(&mut b, x, &[DIM, 32, CLASSES], 11)?;
+    let loss = models::xent_loss(&mut b, logits, labels)?;
+    Ok((b, loss, vars))
+}
+
+/// Train `replicas` threads against one in-process shard; returns
+/// (first-seen loss, last loss, total wire bytes, elapsed).
+fn train(
+    mode: &str,
+    replicas: usize,
+    steps: usize,
+    compress: bool,
+) -> rustflow::Result<(f32, f32, u64, std::time::Duration)> {
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.1),
+        sync_replicas: (mode == "sync").then_some(replicas),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0")?.to_string();
+
+    let examples = data::synthetic_classification(replicas * BATCH * 4, DIM, CLASSES, 0.3, 5);
+    let t0 = std::time::Instant::now();
+    let mut losses: Vec<Vec<f32>> = Vec::new();
+    std::thread::scope(|scope| -> rustflow::Result<()> {
+        let mut handles = Vec::new();
+        for r in 0..replicas {
+            let addr = addr.clone();
+            let examples = &examples;
+            handles.push(scope.spawn(move || -> rustflow::Result<Vec<f32>> {
+                let (b, loss, vars) = build_replica()?;
+                let mut t = DistTrainer::new(
+                    b,
+                    loss,
+                    &vars,
+                    r as u32,
+                    &[addr],
+                    DistTrainerOptions { compress, ..Default::default() },
+                    SessionOptions::default(),
+                )?;
+                t.init_params()?;
+                let shards = replicas * 4;
+                let mut out = Vec::with_capacity(steps);
+                for s in 0..steps {
+                    // Round-robin over this replica's shards of the data.
+                    let shard = (r * 4 + s % 4) % shards;
+                    let batch = &examples[shard * BATCH..(shard + 1) * BATCH];
+                    let (f, l) = data::batch_tensors(batch)?;
+                    let one_hot = data::one_hot(l.as_i32()?, CLASSES);
+                    out.push(t.step(&[("x", f), ("labels", one_hot)])?);
+                }
+                Ok(out)
+            }));
+        }
+        for h in handles {
+            losses.push(h.join().expect("replica thread panicked")?);
+        }
+        Ok(())
+    })?;
+    let dt = t0.elapsed();
+    let bytes = ps.wire_bytes();
+    ps.shutdown();
+    let first = losses[0][0];
+    let last = losses[0][losses[0].len() - 1];
+    Ok((first, last, bytes, dt))
+}
+
+fn main() -> rustflow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let replicas: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+
+    let mut ok = true;
+    for (mode, compress) in [("sync", false), ("async", true)] {
+        let (first, last, bytes, dt) = train(mode, replicas, steps, compress)?;
+        let updates = if mode == "sync" { steps } else { steps * replicas };
+        let improved = last < first;
+        ok &= improved;
+        println!(
+            "{mode:>5} ({}compressed): {replicas} replicas, {updates} updates in {dt:?} \
+             ({:.1} updates/s), {:.1} KiB on the wire, loss {first:.4} -> {last:.4}{}",
+            if compress { "" } else { "un" },
+            updates as f64 / dt.as_secs_f64(),
+            bytes as f64 / 1024.0,
+            if improved { "" } else { "  [NO IMPROVEMENT]" },
+        );
+    }
+    if !ok {
+        eprintln!("distributed training failed to reduce the loss");
+        std::process::exit(1);
+    }
+    Ok(())
+}

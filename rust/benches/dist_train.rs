@@ -1,0 +1,184 @@
+//! Data-parallel distributed training bench (§4.4 + §5.5): steps/sec at
+//! 1/2/4 in-process replicas driving one parameter-server shard over
+//! loopback TCP, and bytes-on-wire with vs without bf16 gradient/param
+//! compression at fixed work.
+//!
+//! Acceptance bar: compression cuts total wire traffic by ≥ 40% while the
+//! run still converges (final loss below the uncompressed run's bar).
+//!
+//!     cargo bench --bench dist_train
+//!
+//! Writes BENCH_dist_train.json (path from $BENCH_DIST_TRAIN_JSON, set by
+//! scripts/bench.sh).
+
+use rustflow::data;
+use rustflow::distributed::{DistTrainer, DistTrainerOptions, ParamServer, PsOptions};
+use rustflow::models;
+use rustflow::optim::Optimizer;
+use rustflow::util::json::Json;
+use rustflow::{DType, GraphBuilder, SessionOptions};
+use std::time::{Duration, Instant};
+
+const DIM: usize = 16;
+const HIDDEN: usize = 32;
+const CLASSES: usize = 4;
+const BATCH: usize = 16;
+
+struct RunOut {
+    updates_per_sec: f64,
+    wire_bytes: u64,
+    first_loss: f32,
+    last_loss: f32,
+    elapsed: Duration,
+}
+
+/// Train `replicas` closed-loop replica threads for `steps` each against a
+/// fresh in-process shard; returns throughput, traffic, and the loss arc.
+fn run(mode: &str, replicas: usize, steps: usize, compress: bool) -> RunOut {
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.1),
+        sync_replicas: (mode == "sync").then_some(replicas),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+    let examples = data::synthetic_classification(replicas * BATCH * 4, DIM, CLASSES, 0.3, 5);
+
+    let t0 = Instant::now();
+    let losses: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..replicas)
+            .map(|r| {
+                let addr = addr.clone();
+                let examples = &examples;
+                scope.spawn(move || {
+                    let mut b = GraphBuilder::new();
+                    let x = b.placeholder("x", DType::F32).unwrap();
+                    let labels = b.placeholder("labels", DType::F32).unwrap();
+                    let (logits, vars) =
+                        models::mlp(&mut b, x, &[DIM, HIDDEN, CLASSES], 11).unwrap();
+                    let loss = models::xent_loss(&mut b, logits, labels).unwrap();
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &vars,
+                        r as u32,
+                        &[addr],
+                        DistTrainerOptions { compress, ..Default::default() },
+                        SessionOptions::default(),
+                    )
+                    .unwrap();
+                    t.init_params().unwrap();
+                    let shards = replicas * 4;
+                    (0..steps)
+                        .map(|s| {
+                            let shard = (r * 4 + s % 4) % shards;
+                            let batch = &examples[shard * BATCH..(shard + 1) * BATCH];
+                            let (f, l) = data::batch_tensors(batch).unwrap();
+                            let one_hot = data::one_hot(l.as_i32().unwrap(), CLASSES);
+                            t.step(&[("x", f), ("labels", one_hot)]).unwrap()
+                        })
+                        .collect::<Vec<f32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
+    });
+    let elapsed = t0.elapsed();
+    let wire_bytes = ps.wire_bytes();
+    ps.shutdown();
+
+    let updates = if mode == "sync" { steps } else { steps * replicas };
+    RunOut {
+        updates_per_sec: updates as f64 / elapsed.as_secs_f64(),
+        wire_bytes,
+        first_loss: losses[0][0],
+        last_loss: losses[0][steps - 1],
+        elapsed,
+    }
+}
+
+fn main() {
+    println!(
+        "{:<34} {:>10} {:>12} {:>10} {:>10}",
+        "config", "updates/s", "wire KiB", "loss[0]", "loss[-1]"
+    );
+    let mut out = Json::obj()
+        .set("bench", "dist_train")
+        .set("model", format!("mlp {DIM}x{HIDDEN}x{CLASSES}"))
+        .set("batch", BATCH);
+
+    // Throughput: asynchronous (Downpour) scaling over replica count.
+    let mut scaling = Json::arr();
+    for replicas in [1usize, 2, 4] {
+        let r = run("async", replicas, 50, true);
+        println!(
+            "{:<34} {:>10.1} {:>12.1} {:>10.4} {:>10.4}",
+            format!("async replicas={replicas} (compressed)"),
+            r.updates_per_sec,
+            r.wire_bytes as f64 / 1024.0,
+            r.first_loss,
+            r.last_loss,
+        );
+        scaling.push(
+            Json::obj()
+                .set("replicas", replicas)
+                .set("updates_per_sec", r.updates_per_sec)
+                .set("wire_bytes", r.wire_bytes)
+                .set("elapsed_ms", r.elapsed.as_millis() as u64)
+                .set("first_loss", r.first_loss as f64)
+                .set("last_loss", r.last_loss as f64),
+        );
+    }
+    out = out.set("async_scaling", scaling);
+
+    // Bytes-on-wire: identical synchronous work, compression off vs on.
+    // Sync mode makes the two runs step-for-step comparable.
+    let (replicas, steps) = (2usize, 60usize);
+    let plain = run("sync", replicas, steps, false);
+    let packed = run("sync", replicas, steps, true);
+    for (label, r) in [("uncompressed", &plain), ("bf16-compressed", &packed)] {
+        println!(
+            "{:<34} {:>10.1} {:>12.1} {:>10.4} {:>10.4}",
+            format!("sync replicas={replicas} ({label})"),
+            r.updates_per_sec,
+            r.wire_bytes as f64 / 1024.0,
+            r.first_loss,
+            r.last_loss,
+        );
+    }
+    let reduction = 1.0 - packed.wire_bytes as f64 / plain.wire_bytes as f64;
+    // "Unchanged convergence": both runs improve, and the compressed run
+    // lands in the uncompressed run's neighborhood.
+    let converged = plain.last_loss < plain.first_loss
+        && packed.last_loss < packed.first_loss
+        && packed.last_loss <= plain.last_loss * 1.25 + 0.05;
+    println!(
+        "compression: {:.1}% fewer bytes on the wire, convergence {}",
+        reduction * 100.0,
+        if converged { "unchanged" } else { "DEGRADED" },
+    );
+    out = out.set(
+        "compression",
+        Json::obj()
+            .set("sync_replicas", replicas)
+            .set("steps", steps)
+            .set("bytes_uncompressed", plain.wire_bytes)
+            .set("bytes_compressed", packed.wire_bytes)
+            .set("reduction", reduction)
+            .set("loss_uncompressed", plain.last_loss as f64)
+            .set("loss_compressed", packed.last_loss as f64)
+            .set("converged", converged),
+    );
+
+    let path = std::env::var("BENCH_DIST_TRAIN_JSON")
+        .unwrap_or_else(|_| "BENCH_dist_train.json".to_string());
+    std::fs::write(&path, out.render()).expect("write bench json");
+    println!("\nwrote {path}");
+
+    assert!(
+        reduction >= 0.40,
+        "bf16 compression must cut wire traffic by >= 40% (got {:.1}%)",
+        reduction * 100.0
+    );
+    assert!(converged, "compressed run failed to match uncompressed convergence");
+    println!("dist_train: OK (wire bytes -{:.1}%, convergence unchanged)", reduction * 100.0);
+}

@@ -78,6 +78,91 @@ mod tests {
         }
     }
 
+    /// One round trip through the wire format.
+    fn roundtrip1(x: f32) -> f32 {
+        let t = Tensor::scalar_f32(x);
+        bf16_to_f32(&f32_to_bf16(&t).unwrap()).unwrap().scalar_value_f32().unwrap()
+    }
+
+    #[test]
+    fn property_random_bit_patterns() {
+        // 200k uniformly random f32 bit patterns: the codec must uphold its
+        // contract on every class of value, not just well-behaved ones.
+        let mut rng = crate::util::rng::Pcg32::new(0x5eed);
+        for _ in 0..200_000 {
+            let bits = rng.next_u32();
+            let x = f32::from_bits(bits);
+            let back = roundtrip1(x);
+            if x.is_nan() {
+                // Truncation may drop a low-bit NaN payload entirely,
+                // decaying the NaN to an infinity of the same sign — the
+                // price of the paper's "just fill in zeroes" scheme. It
+                // must never come back finite.
+                assert!(!back.is_finite(), "NaN {bits:#010x} came back finite: {back}");
+            } else if x.is_infinite() {
+                assert_eq!(back.to_bits(), bits, "infinity not preserved");
+            } else {
+                // Truncation never grows magnitude and never flips sign.
+                assert!(back.abs() <= x.abs(), "magnitude grew: {x} -> {back}");
+                assert_eq!(back.is_sign_negative(), x.is_sign_negative(), "sign flip on {x}");
+                if x != 0.0 && x.abs() >= f32::MIN_POSITIVE {
+                    // Normal values: the documented relative bound.
+                    let rel = ((x - back) / x).abs();
+                    assert!(
+                        rel <= MAX_RELATIVE_ERROR,
+                        "x={x} back={back} rel={rel} exceeds {MAX_RELATIVE_ERROR}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_idempotent() {
+        // A value that already survived one round trip is a fixed point:
+        // the second trip is bit-identical (the compressed lattice is
+        // closed under truncation).
+        let mut rng = crate::util::rng::Pcg32::new(0xfeed);
+        for _ in 0..100_000 {
+            let x = f32::from_bits(rng.next_u32());
+            let once = roundtrip1(x);
+            let twice = roundtrip1(once);
+            assert_eq!(
+                twice.to_bits(),
+                once.to_bits(),
+                "not idempotent: {x} -> {once} -> {twice}"
+            );
+        }
+    }
+
+    #[test]
+    fn signed_zeros_preserved_bitwise() {
+        assert_eq!(roundtrip1(0.0).to_bits(), 0.0f32.to_bits());
+        assert_eq!(roundtrip1(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn denormals_truncate_toward_zero() {
+        // Subnormals keep their (zero) exponent; the surviving top-7
+        // mantissa bits shrink toward zero, never flush to a wrong sign or
+        // a larger magnitude. The relative bound does NOT apply here.
+        let mind = f32::from_bits(1); // smallest positive subnormal
+        assert_eq!(roundtrip1(mind), 0.0);
+        assert!(roundtrip1(-mind).is_sign_negative());
+        let bigd = f32::from_bits(0x007f_ffff); // largest subnormal
+        let back = roundtrip1(bigd);
+        assert!(back > 0.0 && back <= bigd);
+        // A subnormal with payload entirely in the upper mantissa bits is
+        // exact.
+        let hi = f32::from_bits(0x007f_0000);
+        assert_eq!(roundtrip1(hi).to_bits(), hi.to_bits());
+    }
+
+    #[test]
+    fn quiet_nan_stays_nan() {
+        assert!(roundtrip1(f32::NAN).is_nan());
+    }
+
     #[test]
     fn truncation_not_rounding() {
         // The paper says truncate (cheaper than probabilistic rounding):

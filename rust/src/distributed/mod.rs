@@ -17,14 +17,24 @@
 //!   / `Aborted` run errors, and training loops recover by restoring
 //!   variables from the latest checkpoint (see `examples/distributed.rs`
 //!   and experiment E17).
+//!
+//! Data-parallel training (§4.4, Fig 7) layers on top: [`ParamServer`]
+//! shards own the parameters and apply updates (synchronously — averaged
+//! once per step across replicas — or asynchronously), [`DistTrainer`]
+//! drives the replica side (pull → compute → push), and gradients travel
+//! bf16-compressed (§5.5) when both ends negotiate it.
 
 pub mod master;
 pub mod proto;
+pub mod ps;
 pub mod rendezvous;
+pub mod train;
 pub mod worker;
 
 pub use master::{DistMaster, DistMasterOptions};
+pub use ps::{ParamServer, PsClient, PsOptions};
 pub use rendezvous::RemoteRendezvous;
+pub use train::{DistTrainer, DistTrainerOptions};
 pub use worker::{Worker, WorkerOptions};
 
 /// Addresses of every worker task; task index = position.

@@ -12,7 +12,8 @@ use crate::error::{Result, Status};
 use crate::graph::Graph;
 use crate::tensor::Tensor;
 use crate::wire::{
-    decode_status, decode_tensor_map, encode_status, encode_tensor_map, get_u64, put_u64,
+    decode_status, decode_tensor_map, encode_status, encode_tensor_map, get_str, get_tensor,
+    get_u32, get_u64, get_u8, put_str, put_tensor, put_u32, put_u64, put_u8,
 };
 
 pub use crate::wire::{read_frame, rpc, write_frame};
@@ -27,6 +28,29 @@ pub const MSG_HEALTH: u8 = 7;
 pub const MSG_HEALTH_OK: u8 = 8;
 pub const MSG_SHUTDOWN: u8 = 9;
 pub const MSG_RESET: u8 = 10;
+
+// Parameter-server channel (§4.4 data-parallel training): a persistent
+// connection per replica, opened with HELLO (capability negotiation),
+// then any number of INIT/PULL/PUSH/STATS requests, one reply each.
+pub const MSG_PS_HELLO: u8 = 11;
+pub const MSG_PS_HELLO_REPLY: u8 = 12;
+pub const MSG_PS_INIT: u8 = 13;
+pub const MSG_PS_INIT_REPLY: u8 = 14;
+pub const MSG_PS_PULL: u8 = 15;
+pub const MSG_PS_PULL_REPLY: u8 = 16;
+pub const MSG_PS_PUSH: u8 = 17;
+pub const MSG_PS_PUSH_REPLY: u8 = 18;
+pub const MSG_PS_STATS: u8 = 19;
+pub const MSG_PS_STATS_REPLY: u8 = 20;
+
+/// Channel capability flag: §5.5 lossy f32→bf16 truncation on this
+/// channel's tensor payloads. A client *requests* it in HELLO; the server
+/// *grants* the intersection in the reply, and only granted capabilities
+/// may be used — so an uncompressed peer talking to a compressing server
+/// (or vice versa) negotiates down to plain f32 and interoperates.
+/// Tensor payloads are self-describing (the codec carries the dtype), so
+/// a receiver decompresses by dtype, never by assumption.
+pub const CHANNEL_BF16: u32 = 1;
 
 // ---- message payloads -------------------------------------------------------
 
@@ -121,6 +145,190 @@ impl TensorReply {
     }
 }
 
+// ---- parameter-server payloads ---------------------------------------------
+
+/// HELLO: the capability flags a replica requests for this channel.
+pub struct PsHello {
+    pub flags: u32,
+}
+
+impl PsHello {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u32(&mut out, self.flags);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PsHello> {
+        let mut pos = 0;
+        Ok(PsHello { flags: get_u32(buf, &mut pos)? })
+    }
+}
+
+/// HELLO reply: the granted subset of the requested flags.
+pub struct PsHelloReply {
+    pub status: Result<()>,
+    pub flags: u32,
+}
+
+impl PsHelloReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_status(&mut out, &self.status);
+        put_u32(&mut out, self.flags);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PsHelloReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        let flags = get_u32(buf, &mut pos)?;
+        Ok(PsHelloReply { status, flags })
+    }
+}
+
+/// One variable's gradient contribution inside a push.
+pub enum GradEntry {
+    /// The full gradient tensor.
+    Dense(Tensor),
+    /// Row-sparse gradient for embedding-shaped variables: `indices` is
+    /// i64 `[k]` (row numbers into the variable's first dimension),
+    /// `values` is `[k, rest…]` — only the touched rows travel.
+    Sparse { indices: Tensor, values: Tensor },
+}
+
+const GRAD_KIND_DENSE: u8 = 0;
+const GRAD_KIND_SPARSE: u8 = 1;
+
+/// A gradient push: which step's parameters the gradients were computed
+/// against (the staleness token), who pushed, and one entry per variable.
+pub struct GradPush {
+    pub step: u64,
+    pub replica: u32,
+    pub grads: Vec<(String, GradEntry)>,
+}
+
+impl GradPush {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_u64(&mut out, self.step);
+        put_u32(&mut out, self.replica);
+        put_u32(&mut out, self.grads.len() as u32);
+        for (name, entry) in &self.grads {
+            put_str(&mut out, name);
+            match entry {
+                GradEntry::Dense(t) => {
+                    put_u8(&mut out, GRAD_KIND_DENSE);
+                    put_tensor(&mut out, t);
+                }
+                GradEntry::Sparse { indices, values } => {
+                    put_u8(&mut out, GRAD_KIND_SPARSE);
+                    put_tensor(&mut out, indices);
+                    put_tensor(&mut out, values);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<GradPush> {
+        let mut pos = 0;
+        let step = get_u64(buf, &mut pos)?;
+        let replica = get_u32(buf, &mut pos)?;
+        let n = get_u32(buf, &mut pos)? as usize;
+        let mut grads = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let name = get_str(buf, &mut pos)?;
+            let entry = match get_u8(buf, &mut pos)? {
+                GRAD_KIND_DENSE => GradEntry::Dense(get_tensor(buf, &mut pos)?),
+                GRAD_KIND_SPARSE => GradEntry::Sparse {
+                    indices: get_tensor(buf, &mut pos)?,
+                    values: get_tensor(buf, &mut pos)?,
+                },
+                other => {
+                    return Err(Status::invalid_argument(format!(
+                        "unknown gradient entry kind {other}"
+                    )))
+                }
+            };
+            grads.push((name, entry));
+        }
+        Ok(GradPush { step, replica, grads })
+    }
+}
+
+/// Push reply: the server's parameter version after this push was
+/// incorporated (sync: after the whole step's barrier applied).
+pub struct PsPushReply {
+    pub status: Result<()>,
+    pub version: u64,
+}
+
+impl PsPushReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_status(&mut out, &self.status);
+        put_u64(&mut out, self.version);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PsPushReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        let version = get_u64(buf, &mut pos)?;
+        Ok(PsPushReply { status, version })
+    }
+}
+
+/// Pull reply: the shard's current version plus every parameter it holds
+/// (bf16-compressed when the channel negotiated `CHANNEL_BF16`).
+pub struct PsPullReply {
+    pub status: Result<()>,
+    pub version: u64,
+    pub params: Vec<(String, Tensor)>,
+}
+
+impl PsPullReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_status(&mut out, &self.status);
+        put_u64(&mut out, self.version);
+        encode_tensor_map(&mut out, &self.params);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PsPullReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        let version = get_u64(buf, &mut pos)?;
+        let params = decode_tensor_map(buf, &mut pos)?;
+        Ok(PsPullReply { status, version, params })
+    }
+}
+
+/// Init reply: `seeded` is true for the replica whose initial values won
+/// the first-wins race; later initializers get `false` and must pull.
+pub struct PsInitReply {
+    pub status: Result<()>,
+    pub seeded: bool,
+}
+
+impl PsInitReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_status(&mut out, &self.status);
+        put_u8(&mut out, self.seeded as u8);
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<PsInitReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        let seeded = get_u8(buf, &mut pos)? != 0;
+        Ok(PsInitReply { status, seeded })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,6 +380,149 @@ mod tests {
         let e = TensorReply { status: Err(Status::not_found("no key")) };
         let dec = TensorReply::decode(&e.encode()).unwrap();
         assert_eq!(dec.status.unwrap_err().code, Code::NotFound);
+    }
+
+    #[test]
+    fn grad_push_roundtrip_dense_and_sparse() {
+        let msg = GradPush {
+            step: 41,
+            replica: 3,
+            grads: vec![
+                (
+                    "w0".into(),
+                    GradEntry::Dense(Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap()),
+                ),
+                (
+                    "emb".into(),
+                    GradEntry::Sparse {
+                        indices: Tensor::from_i64(vec![2], vec![0, 7]).unwrap(),
+                        values: Tensor::from_f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap(),
+                    },
+                ),
+            ],
+        };
+        let dec = GradPush::decode(&msg.encode()).unwrap();
+        assert_eq!(dec.step, 41);
+        assert_eq!(dec.replica, 3);
+        assert_eq!(dec.grads.len(), 2);
+        match &dec.grads[0].1 {
+            GradEntry::Dense(t) => assert_eq!(t.as_f32().unwrap(), &[1., 2., 3., 4.]),
+            _ => panic!("expected dense"),
+        }
+        match &dec.grads[1].1 {
+            GradEntry::Sparse { indices, values } => {
+                assert_eq!(indices.as_i64().unwrap(), &[0, 7]);
+                assert_eq!(values.shape().dims(), &[2, 3]);
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn ps_replies_roundtrip() {
+        let h = PsHelloReply { status: Ok(()), flags: crate::distributed::proto::CHANNEL_BF16 };
+        let dec = PsHelloReply::decode(&h.encode()).unwrap();
+        assert!(dec.status.is_ok());
+        assert_eq!(dec.flags, CHANNEL_BF16);
+
+        let p = PsPushReply { status: Err(Status::failed_precondition("stale push")), version: 9 };
+        let dec = PsPushReply::decode(&p.encode()).unwrap();
+        assert_eq!(dec.status.unwrap_err().code, Code::FailedPrecondition);
+        assert_eq!(dec.version, 9);
+
+        let pl = PsPullReply {
+            status: Ok(()),
+            version: 4,
+            params: vec![("w".into(), Tensor::scalar_f32(2.5))],
+        };
+        let dec = PsPullReply::decode(&pl.encode()).unwrap();
+        assert_eq!(dec.version, 4);
+        assert_eq!(dec.params[0].1.scalar_value_f32().unwrap(), 2.5);
+
+        let i = PsInitReply { status: Ok(()), seeded: true };
+        assert!(PsInitReply::decode(&i.encode()).unwrap().seeded);
+    }
+
+    /// PR-5-style hostile-frame fuzz: every truncation of a valid
+    /// gradient-push payload must decode to an error, never panic or
+    /// over-read.
+    #[test]
+    fn grad_push_truncation_fuzz() {
+        let msg = GradPush {
+            step: 7,
+            replica: 1,
+            grads: vec![
+                ("a".into(), GradEntry::Dense(Tensor::from_f32(vec![3], vec![1., 2., 3.]).unwrap())),
+                (
+                    "b".into(),
+                    GradEntry::Sparse {
+                        indices: Tensor::from_i64(vec![1], vec![2]).unwrap(),
+                        values: Tensor::from_f32(vec![1, 2], vec![5., 6.]).unwrap(),
+                    },
+                ),
+            ],
+        };
+        let full = msg.encode();
+        for cut in 0..full.len() {
+            assert!(GradPush::decode(&full[..cut]).is_err(), "cut at {cut} decoded");
+        }
+        // And the replies, same treatment.
+        let pull = PsPullReply {
+            status: Ok(()),
+            version: 3,
+            params: vec![("w".into(), Tensor::from_f32(vec![2], vec![1., 2.]).unwrap())],
+        }
+        .encode();
+        for cut in 0..pull.len() {
+            assert!(PsPullReply::decode(&pull[..cut]).is_err(), "pull cut at {cut} decoded");
+        }
+    }
+
+    /// Oversize / corrupt length fields must be rejected by bounds checks,
+    /// not fed to an allocator or a wrapping add.
+    #[test]
+    fn grad_push_hostile_lengths() {
+        // Entry count far beyond the payload.
+        let mut buf = Vec::new();
+        crate::wire::put_u64(&mut buf, 1); // step
+        crate::wire::put_u32(&mut buf, 0); // replica
+        crate::wire::put_u32(&mut buf, u32::MAX); // grads "count"
+        assert!(GradPush::decode(&buf).is_err());
+
+        // Tensor length near u64::MAX inside an entry.
+        let mut buf = Vec::new();
+        crate::wire::put_u64(&mut buf, 1);
+        crate::wire::put_u32(&mut buf, 0);
+        crate::wire::put_u32(&mut buf, 1);
+        crate::wire::put_str(&mut buf, "w");
+        crate::wire::put_u8(&mut buf, 0); // dense
+        crate::wire::put_u64(&mut buf, u64::MAX - 3);
+        buf.extend_from_slice(&[0u8; 32]);
+        assert!(GradPush::decode(&buf).is_err());
+
+        // Unknown entry kind byte.
+        let mut buf = Vec::new();
+        crate::wire::put_u64(&mut buf, 1);
+        crate::wire::put_u32(&mut buf, 0);
+        crate::wire::put_u32(&mut buf, 1);
+        crate::wire::put_str(&mut buf, "w");
+        crate::wire::put_u8(&mut buf, 9); // bogus kind
+        assert!(GradPush::decode(&buf).is_err());
+    }
+
+    /// Random byte soup at every length: decoders must return, not panic.
+    #[test]
+    fn grad_push_random_fuzz() {
+        let mut rng = crate::util::rng::Pcg32::new(0x9517);
+        for len in 0..256usize {
+            let buf: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let _ = GradPush::decode(&buf);
+            let _ = PsPullReply::decode(&buf);
+            let _ = PsPushReply::decode(&buf);
+            let _ = PsHelloReply::decode(&buf);
+            let _ = PsInitReply::decode(&buf);
+            let _ = PsHello::decode(&buf);
+        }
     }
 
     #[test]

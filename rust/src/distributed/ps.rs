@@ -1,0 +1,1057 @@
+//! Parameter-server shards for data-parallel training (§4.4, Fig 7): a
+//! TCP server holding a shard of the model's variables plus the optimizer
+//! slot state for them, applying pushed gradients with
+//! [`Optimizer::apply_dense`] — the same arithmetic, expression for
+//! expression, as the in-graph Apply* kernels, which is what makes the
+//! synchronous mode bit-identical to single-process training.
+//!
+//! Two modes, selected by [`PsOptions::sync_replicas`]:
+//!
+//! - **Synchronous** (`Some(n)`): each step's pushes from all `n` replicas
+//!   meet at a barrier built on the existing [`LocalRendezvous`] (one key
+//!   per `(step, replica)`); an applier thread receives them **in replica
+//!   order**, merges per variable with the same pairwise-add chain the
+//!   in-graph `AddN` uses, scales by `1/n`, applies once, and bumps the
+//!   parameter version. A push blocks until its step is applied, so
+//!   replicas proceed in lockstep — "exactly as if we were running the
+//!   sequential SGD algorithm with a batch size of" n×b.
+//! - **Asynchronous** (`None`): Downpour-style; every push applies
+//!   immediately under the shard lock at full scale, and replicas pull
+//!   whenever they like. Staleness is tolerated by construction.
+//!
+//! Staleness contract (enforced in sync mode): a push carries the version
+//! it pulled. `step < version` → `FailedPrecondition` (stale replica: its
+//! gradient is refused, server state untouched — re-pull and retry).
+//! `step > version` → `InvalidArgument` (a replica from the future is a
+//! protocol bug). Async mode accepts any step: that is its semantics.
+//!
+//! Compression (§5.5) is negotiated per channel in the HELLO exchange
+//! (see [`proto::CHANNEL_BF16`]): pull replies and pushed gradients
+//! travel as bf16 truncations when granted, and tensors self-describe
+//! their dtype, so compressed and uncompressed peers interoperate on the
+//! same server. Embedding-shaped gradients may travel row-sparse
+//! ([`GradEntry::Sparse`]); the server scatters them (SGD only — slot
+//! optimizers would need dense slot reads and are rejected as
+//! `Unimplemented`).
+
+use super::proto::{
+    self, GradEntry, GradPush, PsHello, PsHelloReply, PsInitReply, PsPullReply, PsPushReply,
+    CHANNEL_BF16,
+};
+use crate::compress;
+use crate::error::{Code, Result, Status};
+use crate::kernels::math::binary_elementwise;
+use crate::optim::{Optimizer, SlotMap};
+use crate::rendezvous::{recv_blocking_timeout, LocalRendezvous, Rendezvous};
+use crate::tensor::{DType, Tensor, TensorData};
+use crate::wire;
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Server-side configuration for one parameter-server shard.
+#[derive(Clone)]
+pub struct PsOptions {
+    /// The update rule applied server-side. Must match what the reference
+    /// single-process run would use for trajectory equivalence.
+    pub opt: Optimizer,
+    /// `Some(n)`: synchronous SGD over exactly `n` replicas per step.
+    /// `None`: asynchronous (Downpour) updates.
+    pub sync_replicas: Option<usize>,
+    /// Grant [`CHANNEL_BF16`] to clients that request it.
+    pub allow_compression: bool,
+    /// Synchronous mode only: how long the applier waits for a step's
+    /// missing replicas before declaring the group failed (a replica died
+    /// mid-step; every blocked push then errors out instead of hanging).
+    pub sync_timeout: Duration,
+}
+
+impl Default for PsOptions {
+    fn default() -> Self {
+        PsOptions {
+            opt: Optimizer::sgd(0.01),
+            sync_replicas: None,
+            allow_compression: true,
+            sync_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// Everything guarded by the shard lock. `params` is a BTreeMap so pulls
+/// and sync applies walk variables in one deterministic (sorted) order.
+struct ShardState {
+    params: BTreeMap<String, Tensor>,
+    slots: SlotMap,
+    /// Bumped once per applied step (sync) or per applied push (async).
+    version: u64,
+    initialized: bool,
+    /// Sync mode: a step group failed (timeout / bad blob); every waiter
+    /// and future push observes this instead of hanging.
+    failed: Option<Status>,
+}
+
+/// One parameter-server shard. Construct with [`ParamServer::new`], then
+/// [`ParamServer::serve`]; talk to it with [`PsClient`].
+pub struct ParamServer {
+    options: PsOptions,
+    state: Mutex<ShardState>,
+    /// Signalled after every version bump (and on failure/shutdown).
+    applied: Condvar,
+    /// Sync-mode barrier: encoded pushes parked under
+    /// `psgrad;step:<s>;replica:<r>` until the applier collects them.
+    barrier: Arc<LocalRendezvous>,
+    addr: Mutex<Option<SocketAddr>>,
+    bytes_in: AtomicU64,
+    bytes_out: AtomicU64,
+    pushes: AtomicU64,
+    pulls: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+fn barrier_key(step: u64, replica: u32) -> String {
+    format!("psgrad;step:{step};replica:{replica}")
+}
+
+impl ParamServer {
+    pub fn new(options: PsOptions) -> Arc<ParamServer> {
+        Arc::new(ParamServer {
+            options,
+            state: Mutex::new(ShardState {
+                params: BTreeMap::new(),
+                slots: SlotMap::new(),
+                version: 0,
+                initialized: false,
+                failed: None,
+            }),
+            applied: Condvar::new(),
+            barrier: LocalRendezvous::new(),
+            addr: Mutex::new(None),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            pushes: AtomicU64::new(0),
+            pulls: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// Bind `addr` (`"127.0.0.1:0"` for ephemeral) and serve on background
+    /// threads; in synchronous mode this also starts the applier thread.
+    pub fn serve(self: &Arc<Self>, addr: &str) -> Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Status::unavailable(format!("bind {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        *self.addr.lock().unwrap() = Some(local);
+        let server = Arc::clone(self);
+        std::thread::Builder::new()
+            .name("ps-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if server.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let s = Arc::clone(&server);
+                            std::thread::spawn(move || s.handle_connection(stream));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn ps accept thread");
+        if let Some(n) = self.options.sync_replicas {
+            let server = Arc::clone(self);
+            std::thread::Builder::new()
+                .name("ps-applier".to_string())
+                .spawn(move || server.run_sync_applier(n))
+                .expect("spawn ps applier thread");
+        }
+        Ok(local)
+    }
+
+    /// Stop serving: wakes the applier (via barrier abort), every blocked
+    /// push (via the condvar), and the accept loop (via a loopback poke).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.barrier.abort(Status::aborted("parameter server shut down"));
+        self.applied.notify_all();
+        if let Some(addr) = *self.addr.lock().unwrap() {
+            let _ = TcpStream::connect(addr);
+        }
+    }
+
+    /// Total bytes read + written across all connections (frame headers
+    /// included) — the bench's bytes-on-wire measure.
+    pub fn wire_bytes(&self) -> u64 {
+        self.bytes_in.load(Ordering::SeqCst) + self.bytes_out.load(Ordering::SeqCst)
+    }
+
+    /// Current parameter version (test support).
+    pub fn version(&self) -> u64 {
+        self.state.lock().unwrap().version
+    }
+
+    /// Snapshot of a parameter (test support).
+    pub fn param(&self, name: &str) -> Option<Tensor> {
+        self.state.lock().unwrap().params.get(name).cloned()
+    }
+
+    fn handle_connection(self: Arc<Self>, mut stream: TcpStream) {
+        stream.set_nodelay(true).ok();
+        // Per-channel capabilities, set by HELLO; zero until negotiated.
+        let mut negotiated = 0u32;
+        loop {
+            let (msg_type, payload) = match wire::read_frame(&mut stream) {
+                Ok(f) => f,
+                Err(_) => return, // client hung up (or sent garbage framing)
+            };
+            self.bytes_in.fetch_add(payload.len() as u64 + 5, Ordering::SeqCst);
+            let (reply_type, reply) = match msg_type {
+                proto::MSG_PS_HELLO => {
+                    let granted = match PsHello::decode(&payload) {
+                        Ok(h) if self.options.allow_compression => h.flags & CHANNEL_BF16,
+                        Ok(_) => 0,
+                        Err(e) => {
+                            let r = PsHelloReply { status: Err(e), flags: 0 };
+                            let _ = self.reply(&mut stream, proto::MSG_PS_HELLO_REPLY, &r.encode());
+                            continue;
+                        }
+                    };
+                    negotiated = granted;
+                    let r = PsHelloReply { status: Ok(()), flags: granted };
+                    (proto::MSG_PS_HELLO_REPLY, r.encode())
+                }
+                proto::MSG_PS_INIT => {
+                    let r = match wire::decode_tensor_map(&payload, &mut 0) {
+                        Ok(params) => self.handle_init(params),
+                        Err(e) => PsInitReply { status: Err(e), seeded: false },
+                    };
+                    (proto::MSG_PS_INIT_REPLY, r.encode())
+                }
+                proto::MSG_PS_PULL => {
+                    self.pulls.fetch_add(1, Ordering::SeqCst);
+                    (proto::MSG_PS_PULL_REPLY, self.handle_pull(negotiated).encode())
+                }
+                proto::MSG_PS_PUSH => {
+                    self.pushes.fetch_add(1, Ordering::SeqCst);
+                    let r = match GradPush::decode(&payload) {
+                        Ok(push) => self.handle_push(push),
+                        Err(e) => PsPushReply { status: Err(e), version: 0 },
+                    };
+                    (proto::MSG_PS_PUSH_REPLY, r.encode())
+                }
+                proto::MSG_PS_STATS => (proto::MSG_PS_STATS_REPLY, self.stats_json().into_bytes()),
+                _ => return, // unknown type on a persistent channel: drop it
+            };
+            if self.reply(&mut stream, reply_type, &reply).is_err() {
+                return;
+            }
+        }
+    }
+
+    fn reply(&self, stream: &mut TcpStream, msg_type: u8, payload: &[u8]) -> Result<()> {
+        self.bytes_out.fetch_add(payload.len() as u64 + 5, Ordering::SeqCst);
+        wire::write_frame(stream, msg_type, payload)
+    }
+
+    fn stats_json(&self) -> String {
+        let st = self.state.lock().unwrap();
+        crate::util::json::Json::obj()
+            .set("version", st.version as f64)
+            .set("num_params", st.params.len() as f64)
+            .set("initialized", st.initialized)
+            .set("sync_replicas", self.options.sync_replicas.unwrap_or(0) as f64)
+            .set("pushes", self.pushes.load(Ordering::SeqCst) as f64)
+            .set("pulls", self.pulls.load(Ordering::SeqCst) as f64)
+            .set("bytes_in", self.bytes_in.load(Ordering::SeqCst) as f64)
+            .set("bytes_out", self.bytes_out.load(Ordering::SeqCst) as f64)
+            .render()
+    }
+
+    /// First-wins initialization: the winning replica's values seed the
+    /// shard; everyone else gets `seeded: false` and pulls. An empty map
+    /// is legal (a shard that holds no variables still versions in
+    /// lockstep with the others).
+    fn handle_init(&self, params: Vec<(String, Tensor)>) -> PsInitReply {
+        for (name, t) in &params {
+            if t.dtype() != DType::F32 {
+                return PsInitReply {
+                    status: Err(Status::invalid_argument(format!(
+                        "parameter {name:?} has dtype {}, parameter servers hold f32",
+                        t.dtype()
+                    ))),
+                    seeded: false,
+                };
+            }
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.initialized {
+            return PsInitReply { status: Ok(()), seeded: false };
+        }
+        st.params = params.into_iter().collect();
+        st.initialized = true;
+        PsInitReply { status: Ok(()), seeded: true }
+    }
+
+    fn handle_pull(&self, negotiated: u32) -> PsPullReply {
+        let st = self.state.lock().unwrap();
+        if let Some(f) = &st.failed {
+            return PsPullReply { status: Err(f.clone()), version: st.version, params: vec![] };
+        }
+        if !st.initialized {
+            return PsPullReply {
+                status: Err(Status::failed_precondition("parameter server not initialized")),
+                version: 0,
+                params: vec![],
+            };
+        }
+        let mut params = Vec::with_capacity(st.params.len());
+        for (name, t) in &st.params {
+            let out = if negotiated & CHANNEL_BF16 != 0 {
+                match compress::f32_to_bf16(t) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        return PsPullReply { status: Err(e), version: st.version, params: vec![] }
+                    }
+                }
+            } else {
+                t.clone()
+            };
+            params.push((name.clone(), out));
+        }
+        PsPullReply { status: Ok(()), version: st.version, params }
+    }
+
+    fn handle_push(&self, mut push: GradPush) -> PsPushReply {
+        // Decompress by dtype before validation: the codec self-describes,
+        // so compressed entries from any client are transparently widened.
+        for (_, entry) in push.grads.iter_mut() {
+            if let Err(e) = decompress_entry(entry) {
+                return PsPushReply { status: Err(e), version: 0 };
+            }
+        }
+        match self.options.sync_replicas {
+            None => self.push_async(push),
+            Some(n) => self.push_sync(push, n),
+        }
+    }
+
+    /// Async (Downpour): validate + apply immediately at full scale.
+    fn push_async(&self, push: GradPush) -> PsPushReply {
+        let mut st = self.state.lock().unwrap();
+        if !st.initialized {
+            return PsPushReply {
+                status: Err(Status::failed_precondition("parameter server not initialized")),
+                version: st.version,
+            };
+        }
+        if let Err(e) = validate_push(&st, &self.options.opt, &push) {
+            return PsPushReply { status: Err(e), version: st.version };
+        }
+        if let Err(e) = apply_entries(&mut st, &self.options.opt, &push.grads, 1.0) {
+            return PsPushReply { status: Err(e), version: st.version };
+        }
+        st.version += 1;
+        let version = st.version;
+        drop(st);
+        self.applied.notify_all();
+        PsPushReply { status: Ok(()), version }
+    }
+
+    /// Sync: validate against the *current* version, park the encoded push
+    /// at the barrier, block until the applier has applied this step.
+    fn push_sync(&self, push: GradPush, n: usize) -> PsPushReply {
+        let step = push.step;
+        {
+            let st = self.state.lock().unwrap();
+            if let Some(f) = &st.failed {
+                return PsPushReply { status: Err(f.clone()), version: st.version };
+            }
+            if !st.initialized {
+                return PsPushReply {
+                    status: Err(Status::failed_precondition("parameter server not initialized")),
+                    version: st.version,
+                };
+            }
+            if (push.replica as usize) >= n {
+                return PsPushReply {
+                    status: Err(Status::invalid_argument(format!(
+                        "replica {} out of range for {n} sync replicas",
+                        push.replica
+                    ))),
+                    version: st.version,
+                };
+            }
+            // The staleness contract. A stale push never touches state.
+            if step < st.version {
+                return PsPushReply {
+                    status: Err(Status::failed_precondition(format!(
+                        "stale push for step {step}, server is at version {}; pull and retry",
+                        st.version
+                    ))),
+                    version: st.version,
+                };
+            }
+            if step > st.version {
+                return PsPushReply {
+                    status: Err(Status::invalid_argument(format!(
+                        "push for future step {step}, server is at version {}",
+                        st.version
+                    ))),
+                    version: st.version,
+                };
+            }
+            if let Err(e) = validate_push(&st, &self.options.opt, &push) {
+                return PsPushReply { status: Err(e), version: st.version };
+            }
+        }
+        // Park the (validated, decompressed) push for the applier. A
+        // duplicate (step, replica) key is a client bug surfaced by the
+        // rendezvous' duplicate-send check.
+        let blob = push.encode();
+        let parked = Tensor::new(vec![blob.len()], TensorData::U8(blob));
+        let parked = match parked {
+            Ok(t) => t,
+            Err(e) => return PsPushReply { status: Err(e), version: 0 },
+        };
+        if let Err(e) = self.barrier.send(&barrier_key(step, push.replica), parked) {
+            let status = if e.code == Code::Internal {
+                Status::failed_precondition(format!(
+                    "replica {} already pushed for step {step}",
+                    push.replica
+                ))
+            } else {
+                e
+            };
+            let st = self.state.lock().unwrap();
+            return PsPushReply { status: Err(status), version: st.version };
+        }
+        // Block until the applier finishes this step (or the group fails).
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(f) = &st.failed {
+                return PsPushReply { status: Err(f.clone()), version: st.version };
+            }
+            if st.version > step {
+                return PsPushReply { status: Ok(()), version: st.version };
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return PsPushReply {
+                    status: Err(Status::aborted("parameter server shut down")),
+                    version: st.version,
+                };
+            }
+            let (guard, _) =
+                self.applied.wait_timeout(st, Duration::from_millis(50)).unwrap();
+            st = guard;
+        }
+    }
+
+    /// The sync applier: one iteration per step — receive all `n` pushes
+    /// for the current version **in replica order**, merge + apply, bump.
+    fn run_sync_applier(self: Arc<Self>, n: usize) {
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            let step = self.state.lock().unwrap().version;
+            let mut pushes: Vec<GradPush> = Vec::with_capacity(n);
+            for r in 0..n as u32 {
+                let blob = match recv_blocking_timeout(
+                    &*self.barrier,
+                    &barrier_key(step, r),
+                    self.options.sync_timeout,
+                ) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        if self.shutdown.load(Ordering::SeqCst) || e.code == Code::Aborted {
+                            return;
+                        }
+                        self.fail_group(Status::new(
+                            Code::Aborted,
+                            format!(
+                                "sync step {step}: replica {r} missing after {:?} ({})",
+                                self.options.sync_timeout, e.message
+                            ),
+                        ));
+                        return;
+                    }
+                };
+                let decoded = blob.as_u8().and_then(GradPush::decode);
+                match decoded {
+                    Ok(p) => pushes.push(p),
+                    Err(e) => {
+                        self.fail_group(Status::internal(format!(
+                            "sync step {step}: bad parked push from replica {r}: {e}"
+                        )));
+                        return;
+                    }
+                }
+            }
+            let mut st = self.state.lock().unwrap();
+            let scale = 1.0 / n as f32;
+            if let Err(e) = apply_sync_step(&mut st, &self.options.opt, &pushes, scale) {
+                drop(st);
+                self.fail_group(Status::internal(format!("sync step {step} apply failed: {e}")));
+                return;
+            }
+            st.version = step + 1;
+            drop(st);
+            self.applied.notify_all();
+        }
+    }
+
+    /// Mark the shard failed: every blocked and future operation observes
+    /// the status instead of hanging — §3.3's "abort the entire graph
+    /// execution" failure path, transplanted to the training service.
+    fn fail_group(&self, status: Status) {
+        self.barrier.abort(status.clone());
+        let mut st = self.state.lock().unwrap();
+        st.failed = Some(status);
+        drop(st);
+        self.applied.notify_all();
+    }
+}
+
+/// Widen bf16 wire tensors back to f32 (dtype-driven, so uncompressed
+/// entries pass through untouched).
+fn decompress_entry(entry: &mut GradEntry) -> Result<()> {
+    match entry {
+        GradEntry::Dense(t) => {
+            if t.dtype() == DType::BF16 {
+                *t = compress::bf16_to_f32(t)?;
+            }
+        }
+        GradEntry::Sparse { values, .. } => {
+            if values.dtype() == DType::BF16 {
+                *values = compress::bf16_to_f32(values)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Validate a (decompressed) push against the shard's parameters without
+/// touching any state: unknown names, dtype/shape mismatches, duplicate
+/// entries, malformed or out-of-bounds sparse indices are all rejected
+/// here, *before* a push can reach the barrier or the apply path — a
+/// hostile or buggy replica must never corrupt server state.
+fn validate_push(st: &ShardState, opt: &Optimizer, push: &GradPush) -> Result<()> {
+    let mut seen: HashSet<&str> = HashSet::with_capacity(push.grads.len());
+    for (name, entry) in &push.grads {
+        if !seen.insert(name.as_str()) {
+            return Err(Status::invalid_argument(format!("duplicate gradient for {name:?}")));
+        }
+        let var = st
+            .params
+            .get(name)
+            .ok_or_else(|| Status::not_found(format!("no parameter {name:?} on this shard")))?;
+        match entry {
+            GradEntry::Dense(g) => {
+                if g.dtype() != DType::F32 {
+                    return Err(Status::invalid_argument(format!(
+                        "gradient for {name:?} has dtype {}",
+                        g.dtype()
+                    )));
+                }
+                if g.shape().dims() != var.shape().dims() {
+                    return Err(Status::invalid_argument(format!(
+                        "gradient for {name:?} has shape {:?}, variable is {:?}",
+                        g.shape().dims(),
+                        var.shape().dims()
+                    )));
+                }
+            }
+            GradEntry::Sparse { indices, values } => {
+                if !matches!(opt, Optimizer::Sgd { .. }) {
+                    return Err(Status::unimplemented(
+                        "sparse pushes require plain SGD (slot optimizers need dense state)",
+                    ));
+                }
+                if indices.dtype() != DType::I64 || indices.shape().rank() != 1 {
+                    return Err(Status::invalid_argument(format!(
+                        "sparse indices for {name:?} must be i64 of rank 1"
+                    )));
+                }
+                if values.dtype() != DType::F32 {
+                    return Err(Status::invalid_argument(format!(
+                        "sparse values for {name:?} have dtype {}",
+                        values.dtype()
+                    )));
+                }
+                if var.shape().rank() < 1 || var.num_elements() == 0 {
+                    return Err(Status::invalid_argument(format!(
+                        "variable {name:?} is not sparse-updatable"
+                    )));
+                }
+                let rows = var.shape().dims()[0];
+                let row_len = var.num_elements() / rows;
+                let k = indices.num_elements();
+                if values.num_elements() != k * row_len {
+                    return Err(Status::invalid_argument(format!(
+                        "sparse values for {name:?}: {} elements for {k} rows of {row_len}",
+                        values.num_elements()
+                    )));
+                }
+                for &i in indices.as_i64()? {
+                    if i < 0 || (i as usize) >= rows {
+                        return Err(Status::out_of_range(format!(
+                            "sparse index {i} out of range for {name:?} with {rows} rows"
+                        )));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply one push's entries, each scaled by `scale` (async: 1.0).
+fn apply_entries(
+    st: &mut ShardState,
+    opt: &Optimizer,
+    grads: &[(String, GradEntry)],
+    scale: f32,
+) -> Result<()> {
+    for (name, entry) in grads {
+        let var = st
+            .params
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Status::not_found(format!("no parameter {name:?}")))?;
+        let new = match entry {
+            GradEntry::Dense(g) => {
+                let scaled = binary_elementwise(g, &Tensor::scalar_f32(scale), "Mul")?;
+                opt.apply_dense(name, &var, &scaled, &mut st.slots)?
+            }
+            GradEntry::Sparse { indices, values } => {
+                let lr = match *opt {
+                    Optimizer::Sgd { lr } => lr,
+                    _ => return Err(Status::unimplemented("sparse push requires SGD")),
+                };
+                apply_sparse_sgd(&var, indices, values, lr, scale)?
+            }
+        };
+        st.params.insert(name.clone(), new);
+    }
+    Ok(())
+}
+
+/// Merge + apply one synchronous step. For a variable where every replica
+/// pushed dense, this mirrors the in-graph chain node for node: pairwise
+/// adds in replica order (the `AddN` kernel's accumulation), a scalar
+/// multiply by `1/n` (the `Mul` kernel), then one `apply_dense` (the
+/// `Apply*` kernel) — hence bit-identical trajectories. Variables with
+/// any sparse contribution are applied per replica at scale `1/n` (SGD
+/// linearity makes that equivalent).
+fn apply_sync_step(
+    st: &mut ShardState,
+    opt: &Optimizer,
+    pushes: &[GradPush],
+    scale: f32,
+) -> Result<()> {
+    let mut names: BTreeSet<&str> = BTreeSet::new();
+    for p in pushes {
+        for (name, _) in &p.grads {
+            names.insert(name);
+        }
+    }
+    let scale_t = Tensor::scalar_f32(scale);
+    for name in names {
+        // Contributions in replica order (pushes arrive ordered 0..n).
+        let contributions: Vec<&GradEntry> = pushes
+            .iter()
+            .flat_map(|p| p.grads.iter().filter(|(n, _)| n == name).map(|(_, e)| e))
+            .collect();
+        let all_dense = contributions.iter().all(|e| matches!(e, GradEntry::Dense(_)));
+        if all_dense {
+            let mut iter = contributions.iter().map(|e| match e {
+                GradEntry::Dense(t) => t,
+                GradEntry::Sparse { .. } => unreachable!(),
+            });
+            let first = iter.next().ok_or_else(|| Status::internal("empty contribution"))?;
+            let mut acc = first.clone();
+            for g in iter {
+                acc = binary_elementwise(&acc, g, "Add")?;
+            }
+            let mean = binary_elementwise(&acc, &scale_t, "Mul")?;
+            let var = st
+                .params
+                .get(name)
+                .cloned()
+                .ok_or_else(|| Status::not_found(format!("no parameter {name:?}")))?;
+            let new = opt.apply_dense(name, &var, &mean, &mut st.slots)?;
+            st.params.insert(name.to_string(), new);
+        } else {
+            let lr = match *opt {
+                Optimizer::Sgd { lr } => lr,
+                _ => return Err(Status::unimplemented("sparse push requires SGD")),
+            };
+            for entry in contributions {
+                let var = st
+                    .params
+                    .get(name)
+                    .cloned()
+                    .ok_or_else(|| Status::not_found(format!("no parameter {name:?}")))?;
+                let new = match entry {
+                    GradEntry::Sparse { indices, values } => {
+                        apply_sparse_sgd(&var, indices, values, lr, scale)?
+                    }
+                    GradEntry::Dense(g) => {
+                        let scaled = binary_elementwise(g, &scale_t, "Mul")?;
+                        opt.apply_dense(name, &var, &scaled, &mut st.slots)?
+                    }
+                };
+                st.params.insert(name.to_string(), new);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Row-sparse SGD scatter. Per touched element this computes the same
+/// expression the dense path would (`m = v*scale; out = out*1.0 +
+/// m*(-lr)`), so a sparse push of the nonzero rows matches a dense push
+/// of the same gradient bit for bit (single replica).
+fn apply_sparse_sgd(
+    var: &Tensor,
+    indices: &Tensor,
+    values: &Tensor,
+    lr: f32,
+    scale: f32,
+) -> Result<Tensor> {
+    let mut out = var.as_f32()?.to_vec();
+    let rows = var.shape().dims()[0];
+    let row_len = out.len() / rows;
+    let idx = indices.as_i64()?;
+    let vals = values.as_f32()?;
+    for (k, &r) in idx.iter().enumerate() {
+        let r = r as usize; // bounds were validated before apply
+        for j in 0..row_len {
+            let m = vals[k * row_len + j] * scale;
+            let o = r * row_len + j;
+            out[o] = out[o] * 1.0 + m * (-lr);
+        }
+    }
+    Tensor::new(var.shape().clone(), TensorData::F32(out))
+}
+
+// ---- client ----------------------------------------------------------------
+
+/// A replica's persistent channel to one parameter-server shard.
+pub struct PsClient {
+    stream: Mutex<TcpStream>,
+    negotiated: u32,
+}
+
+impl PsClient {
+    /// Connect and negotiate capabilities. `want_compression` requests
+    /// [`CHANNEL_BF16`]; the server grants or refuses, and only granted
+    /// capabilities are used afterwards.
+    pub fn connect(addr: &str, want_compression: bool) -> Result<PsClient> {
+        let mut stream = TcpStream::connect(addr)
+            .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
+        stream.set_nodelay(true).ok();
+        let hello = PsHello { flags: if want_compression { CHANNEL_BF16 } else { 0 } };
+        wire::write_frame(&mut stream, proto::MSG_PS_HELLO, &hello.encode())?;
+        let (t, payload) = wire::read_frame(&mut stream)?;
+        if t != proto::MSG_PS_HELLO_REPLY {
+            return Err(Status::internal(format!("unexpected reply type {t} to HELLO")));
+        }
+        let reply = PsHelloReply::decode(&payload)?;
+        reply.status?;
+        Ok(PsClient { stream: Mutex::new(stream), negotiated: reply.flags })
+    }
+
+    /// Whether this channel negotiated bf16 compression.
+    pub fn compressed(&self) -> bool {
+        self.negotiated & CHANNEL_BF16 != 0
+    }
+
+    fn call(&self, msg_type: u8, payload: &[u8], want_reply: u8) -> Result<Vec<u8>> {
+        let mut stream = self.stream.lock().unwrap();
+        wire::write_frame(&mut *stream, msg_type, payload)?;
+        let (t, reply) = wire::read_frame(&mut *stream)?;
+        if t != want_reply {
+            return Err(Status::internal(format!(
+                "unexpected reply type {t} to message {msg_type}"
+            )));
+        }
+        Ok(reply)
+    }
+
+    /// Offer initial values; returns whether this client won the
+    /// first-wins seeding race.
+    pub fn init(&self, params: &[(String, Tensor)]) -> Result<bool> {
+        let mut payload = Vec::new();
+        wire::encode_tensor_map(&mut payload, params);
+        let reply = self.call(proto::MSG_PS_INIT, &payload, proto::MSG_PS_INIT_REPLY)?;
+        let r = PsInitReply::decode(&reply)?;
+        r.status?;
+        Ok(r.seeded)
+    }
+
+    /// Fetch the shard's parameters and version. Compressed replies are
+    /// widened back to f32 here (dtype-driven).
+    pub fn pull(&self) -> Result<(u64, Vec<(String, Tensor)>)> {
+        let reply = self.call(proto::MSG_PS_PULL, b"", proto::MSG_PS_PULL_REPLY)?;
+        let r = PsPullReply::decode(&reply)?;
+        r.status?;
+        let mut params = Vec::with_capacity(r.params.len());
+        for (name, t) in r.params {
+            let t = if t.dtype() == DType::BF16 { compress::bf16_to_f32(&t)? } else { t };
+            params.push((name, t));
+        }
+        Ok((r.version, params))
+    }
+
+    /// Push gradients computed against version `step`; compresses f32
+    /// payloads when the channel negotiated it. Returns the server
+    /// version after the push took effect.
+    pub fn push(
+        &self,
+        step: u64,
+        replica: u32,
+        grads: Vec<(String, GradEntry)>,
+    ) -> Result<u64> {
+        let grads = if self.compressed() {
+            grads
+                .into_iter()
+                .map(|(name, entry)| {
+                    let entry = match entry {
+                        GradEntry::Dense(t) if t.dtype() == DType::F32 => {
+                            GradEntry::Dense(compress::f32_to_bf16(&t)?)
+                        }
+                        GradEntry::Sparse { indices, values }
+                            if values.dtype() == DType::F32 =>
+                        {
+                            GradEntry::Sparse { indices, values: compress::f32_to_bf16(&values)? }
+                        }
+                        e => e,
+                    };
+                    Ok((name, entry))
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            grads
+        };
+        let push = GradPush { step, replica, grads };
+        let reply = self.call(proto::MSG_PS_PUSH, &push.encode(), proto::MSG_PS_PUSH_REPLY)?;
+        let r = PsPushReply::decode(&reply)?;
+        r.status?;
+        Ok(r.version)
+    }
+
+    /// Server-side counters as a JSON string.
+    pub fn stats(&self) -> Result<String> {
+        let reply = self.call(proto::MSG_PS_STATS, b"", proto::MSG_PS_STATS_REPLY)?;
+        Ok(String::from_utf8_lossy(&reply).to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn serve_async(opt: Optimizer) -> (Arc<ParamServer>, String) {
+        let ps = ParamServer::new(PsOptions { opt, ..Default::default() });
+        let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+        (ps, addr)
+    }
+
+    #[test]
+    fn init_pull_push_pull() {
+        let (ps, addr) = serve_async(Optimizer::sgd(0.5));
+        let c = PsClient::connect(&addr, false).unwrap();
+        assert!(!c.compressed());
+        let w0 = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        assert!(c.init(&[("w".into(), w0)]).unwrap());
+        let (v, params) = c.pull().unwrap();
+        assert_eq!(v, 0);
+        assert_eq!(params[0].1.as_f32().unwrap(), &[1.0, 2.0]);
+        let g = Tensor::from_f32(vec![2], vec![1.0, -1.0]).unwrap();
+        let v = c.push(0, 0, vec![("w".into(), GradEntry::Dense(g))]).unwrap();
+        assert_eq!(v, 1);
+        let (_, params) = c.pull().unwrap();
+        // w -= 0.5 * g
+        assert_eq!(params[0].1.as_f32().unwrap(), &[0.5, 2.5]);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn second_init_loses_race() {
+        let (ps, addr) = serve_async(Optimizer::sgd(0.1));
+        let a = PsClient::connect(&addr, false).unwrap();
+        let b = PsClient::connect(&addr, false).unwrap();
+        assert!(a.init(&[("w".into(), Tensor::scalar_f32(1.0))]).unwrap());
+        assert!(!b.init(&[("w".into(), Tensor::scalar_f32(9.0))]).unwrap());
+        let (_, params) = b.pull().unwrap();
+        assert_eq!(params[0].1.scalar_value_f32().unwrap(), 1.0);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn pull_before_init_fails() {
+        let (ps, addr) = serve_async(Optimizer::sgd(0.1));
+        let c = PsClient::connect(&addr, false).unwrap();
+        let e = c.pull().unwrap_err();
+        assert_eq!(e.code, Code::FailedPrecondition);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn hostile_pushes_rejected_state_untouched() {
+        let (ps, addr) = serve_async(Optimizer::sgd(0.1));
+        let c = PsClient::connect(&addr, false).unwrap();
+        let w0 = Tensor::from_f32(vec![2, 2], vec![1., 2., 3., 4.]).unwrap();
+        c.init(&[("w".into(), w0.clone())]).unwrap();
+
+        // Unknown variable.
+        let g = Tensor::from_f32(vec![2], vec![1., 1.]).unwrap();
+        let e = c.push(0, 0, vec![("nope".into(), GradEntry::Dense(g))]).unwrap_err();
+        assert_eq!(e.code, Code::NotFound);
+        // Shape mismatch.
+        let g = Tensor::from_f32(vec![3], vec![1., 1., 1.]).unwrap();
+        let e = c.push(0, 0, vec![("w".into(), GradEntry::Dense(g))]).unwrap_err();
+        assert_eq!(e.code, Code::InvalidArgument);
+        // Out-of-bounds sparse row.
+        let e = c
+            .push(
+                0,
+                0,
+                vec![(
+                    "w".into(),
+                    GradEntry::Sparse {
+                        indices: Tensor::from_i64(vec![1], vec![5]).unwrap(),
+                        values: Tensor::from_f32(vec![1, 2], vec![1., 1.]).unwrap(),
+                    },
+                )],
+            )
+            .unwrap_err();
+        assert_eq!(e.code, Code::OutOfRange);
+        // Negative sparse row.
+        let e = c
+            .push(
+                0,
+                0,
+                vec![(
+                    "w".into(),
+                    GradEntry::Sparse {
+                        indices: Tensor::from_i64(vec![1], vec![-1]).unwrap(),
+                        values: Tensor::from_f32(vec![1, 2], vec![1., 1.]).unwrap(),
+                    },
+                )],
+            )
+            .unwrap_err();
+        assert_eq!(e.code, Code::OutOfRange);
+
+        // After all of that, state is bitwise untouched and version 0.
+        assert_eq!(ps.version(), 0);
+        let (v, params) = c.pull().unwrap();
+        assert_eq!(v, 0);
+        let got: Vec<u32> = params[0].1.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = w0.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn sparse_push_requires_sgd() {
+        let (ps, addr) = serve_async(Optimizer::adam(0.01));
+        let c = PsClient::connect(&addr, false).unwrap();
+        c.init(&[("w".into(), Tensor::from_f32(vec![2, 2], vec![0.; 4]).unwrap())]).unwrap();
+        let e = c
+            .push(
+                0,
+                0,
+                vec![(
+                    "w".into(),
+                    GradEntry::Sparse {
+                        indices: Tensor::from_i64(vec![1], vec![0]).unwrap(),
+                        values: Tensor::from_f32(vec![1, 2], vec![1., 1.]).unwrap(),
+                    },
+                )],
+            )
+            .unwrap_err();
+        assert_eq!(e.code, Code::Unimplemented);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn sparse_matches_dense_bitwise_single_replica() {
+        // One server per mode, same initial values, same gradient content:
+        // a sparse push of the nonzero rows must land on exactly the same
+        // bits as a dense push with explicit zero rows.
+        let init = Tensor::from_f32(vec![4, 2], vec![1., -2., 3., 0.5, -0.25, 8., 0.125, 7.])
+            .unwrap();
+        let dense_grad =
+            Tensor::from_f32(vec![4, 2], vec![0., 0., 2.5, -1.5, 0., 0., 0.75, 0.25]).unwrap();
+
+        let (ps_d, addr_d) = serve_async(Optimizer::sgd(0.3));
+        let cd = PsClient::connect(&addr_d, false).unwrap();
+        cd.init(&[("w".into(), init.clone())]).unwrap();
+        cd.push(0, 0, vec![("w".into(), GradEntry::Dense(dense_grad))]).unwrap();
+
+        let (ps_s, addr_s) = serve_async(Optimizer::sgd(0.3));
+        let cs = PsClient::connect(&addr_s, false).unwrap();
+        cs.init(&[("w".into(), init)]).unwrap();
+        cs.push(
+            0,
+            0,
+            vec![(
+                "w".into(),
+                GradEntry::Sparse {
+                    indices: Tensor::from_i64(vec![2], vec![1, 3]).unwrap(),
+                    values: Tensor::from_f32(vec![2, 2], vec![2.5, -1.5, 0.75, 0.25]).unwrap(),
+                },
+            )],
+        )
+        .unwrap();
+
+        let d: Vec<u32> =
+            ps_d.param("w").unwrap().as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+        let s: Vec<u32> =
+            ps_s.param("w").unwrap().as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(d, s);
+        ps_d.shutdown();
+        ps_s.shutdown();
+    }
+
+    #[test]
+    fn compression_negotiated_and_interoperates() {
+        // lr and all values exactly representable so the expected result
+        // is exact in f32 arithmetic.
+        let (ps, addr) = serve_async(Optimizer::sgd(0.25));
+        let plain = PsClient::connect(&addr, false).unwrap();
+        let zipped = PsClient::connect(&addr, true).unwrap();
+        assert!(!plain.compressed());
+        assert!(zipped.compressed());
+        // Values chosen exactly representable in bf16 so both channels
+        // see identical numbers.
+        plain.init(&[("w".into(), Tensor::from_f32(vec![2], vec![1.5, -0.25]).unwrap())]).unwrap();
+        let (_, p1) = plain.pull().unwrap();
+        let (_, p2) = zipped.pull().unwrap();
+        assert_eq!(p1[0].1.as_f32().unwrap(), p2[0].1.as_f32().unwrap());
+        // Compressed push from one client is visible to the plain one.
+        let g = Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap();
+        zipped.push(0, 1, vec![("w".into(), GradEntry::Dense(g))]).unwrap();
+        let (_, p3) = plain.pull().unwrap();
+        assert_eq!(p3[0].1.as_f32().unwrap(), &[1.25, -0.75]);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn refuses_compression_when_disallowed() {
+        let ps = ParamServer::new(PsOptions {
+            opt: Optimizer::sgd(0.1),
+            allow_compression: false,
+            ..Default::default()
+        });
+        let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+        let c = PsClient::connect(&addr, true).unwrap();
+        assert!(!c.compressed(), "server must negotiate compression away");
+        ps.shutdown();
+    }
+}

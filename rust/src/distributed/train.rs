@@ -1,0 +1,329 @@
+//! `DistTrainer`: the replica-side driver for data-parallel training
+//! against parameter-server shards (§4.4, Fig 7). Each replica owns a
+//! local [`Session`] holding the model graph with **gradient-only** train
+//! outputs ([`crate::replicate::tower_gradients`] — no Apply ops; the
+//! update lives on the servers), plus one [`PsClient`] channel per shard.
+//!
+//! A step is pull → assign → compute → push:
+//!
+//! 1. pull every shard's parameters (tracking each shard's version),
+//! 2. write them into the local variables through a grouped Assign subgraph
+//!    fed by `ps_in/<var>` placeholders,
+//! 3. run the graph once, fetching the loss and every gradient,
+//! 4. push the gradients back, tagged with the pulled version — the
+//!    staleness token the synchronous server checks.
+//!
+//! Variables are sharded over the servers by a stable name hash, so every
+//! replica agrees on the layout without coordination. Every shard gets a
+//! push every step (possibly with no entries): that keeps shard versions
+//! in lockstep, which is what lets one `step()` call block on all shards'
+//! sync barriers simultaneously.
+//!
+//! Gradient compression is per-channel (negotiated at connect, see
+//! [`super::proto::CHANNEL_BF16`]); embedding-shaped gradients whose
+//! touched-row fraction is below
+//! [`DistTrainerOptions::sparse_row_threshold`] travel row-sparse when
+//! `sparse_push` is on.
+
+use super::proto::GradEntry;
+use super::ps::PsClient;
+use crate::error::{Result, Status};
+use crate::graph::Endpoint;
+use crate::ops::builder::GraphBuilder;
+use crate::replicate::tower_gradients;
+use crate::session::{Session, SessionOptions};
+use crate::tensor::{DType, Tensor};
+
+/// Replica-side knobs.
+#[derive(Debug, Clone)]
+pub struct DistTrainerOptions {
+    /// Request bf16 channel compression from every shard (§5.5). The
+    /// server may still negotiate it away; training works either way.
+    pub compress: bool,
+    /// Detect row-sparse gradients (embedding updates) and push only the
+    /// touched rows.
+    pub sparse_push: bool,
+    /// Push sparse only when `touched_rows / rows` is at or below this
+    /// fraction (above it, dense is smaller or comparable on the wire).
+    pub sparse_row_threshold: f64,
+}
+
+impl Default for DistTrainerOptions {
+    fn default() -> Self {
+        DistTrainerOptions { compress: true, sparse_push: false, sparse_row_threshold: 0.5 }
+    }
+}
+
+/// Stable shard assignment: FNV-1a over the variable name. Every replica
+/// computes the same layout with no coordination.
+fn shard_of(name: &str, shards: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    (h % shards as u64) as usize
+}
+
+pub struct DistTrainer {
+    sess: Session,
+    replica: u32,
+    clients: Vec<PsClient>,
+    var_names: Vec<String>,
+    /// Shard index per variable, aligned with `var_names`.
+    var_shard: Vec<usize>,
+    loss_fetch: String,
+    grad_fetches: Vec<String>,
+    /// `ps_in/<var>` placeholder names, aligned with `var_names`.
+    assign_feeds: Vec<String>,
+    pull_assign: String,
+    init_ops: Vec<String>,
+    /// Last pulled version per shard — the staleness token for pushes.
+    shard_version: Vec<u64>,
+    options: DistTrainerOptions,
+    steps: u64,
+}
+
+impl DistTrainer {
+    /// Take ownership of a built model (`loss` + its `vars`), extend it
+    /// with gradient fetches and the parameter-injection subgraph, and
+    /// connect to the shard servers. The graph must not already contain
+    /// Apply ops for these variables — the servers own the update.
+    pub fn new(
+        mut b: GraphBuilder,
+        loss: Endpoint,
+        vars: &[Endpoint],
+        replica: u32,
+        ps_addrs: &[String],
+        options: DistTrainerOptions,
+        session_options: SessionOptions,
+    ) -> Result<DistTrainer> {
+        if ps_addrs.is_empty() {
+            return Err(Status::invalid_argument("no parameter-server shards"));
+        }
+        if vars.is_empty() {
+            return Err(Status::invalid_argument("no variables to train"));
+        }
+        let var_names: Vec<String> =
+            vars.iter().map(|v| b.graph.node(v.node).name.clone()).collect();
+        let var_shard: Vec<usize> =
+            var_names.iter().map(|n| shard_of(n, ps_addrs.len())).collect();
+
+        let grads = tower_gradients(&mut b, loss, vars)?;
+        let grad_fetches: Vec<String> = grads
+            .iter()
+            .map(|g| format!("{}:{}", b.graph.node(g.node).name, g.port))
+            .collect();
+        let loss_fetch = format!("{}:{}", b.graph.node(loss.node).name, loss.port);
+
+        // The injection subgraph: one placeholder + Assign per variable,
+        // grouped so a single target runs them all.
+        let mut assign_feeds = Vec::with_capacity(vars.len());
+        let mut assigns = Vec::with_capacity(vars.len());
+        for (var, name) in vars.iter().zip(&var_names) {
+            let ph_name = format!("ps_in/{name}");
+            let ph = b.placeholder(&ph_name, DType::F32)?;
+            assigns.push(b.assign(*var, ph)?);
+            assign_feeds.push(ph_name);
+        }
+        let pull_assign_node = b.group("ps/pull_assign", assigns);
+        let pull_assign = b.graph.node(pull_assign_node).name.clone();
+        let init_ops: Vec<String> =
+            b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+
+        let sess = Session::new(b.into_graph(), session_options);
+        let clients = ps_addrs
+            .iter()
+            .map(|a| PsClient::connect(a, options.compress))
+            .collect::<Result<Vec<_>>>()?;
+        let shard_version = vec![0; clients.len()];
+        Ok(DistTrainer {
+            sess,
+            replica,
+            clients,
+            var_names,
+            var_shard,
+            loss_fetch,
+            grad_fetches,
+            assign_feeds,
+            pull_assign,
+            init_ops,
+            shard_version,
+            options,
+            steps: 0,
+        })
+    }
+
+    /// Run the local initializers and offer the values to every shard
+    /// (first replica wins; later ones pull the winner's values on their
+    /// next step). Returns whether this replica seeded any shard.
+    pub fn init_params(&self) -> Result<bool> {
+        let init_refs: Vec<&str> = self.init_ops.iter().map(String::as_str).collect();
+        self.sess.run_targets(&init_refs)?;
+        let name_refs: Vec<&str> = self.var_names.iter().map(String::as_str).collect();
+        let vals = self.sess.run(&[], &name_refs, &[])?;
+        let mut per_shard: Vec<Vec<(String, Tensor)>> = vec![Vec::new(); self.clients.len()];
+        for ((name, shard), val) in self.var_names.iter().zip(&self.var_shard).zip(vals) {
+            per_shard[*shard].push((name.clone(), val));
+        }
+        let mut seeded = false;
+        for (client, params) in self.clients.iter().zip(&per_shard) {
+            seeded |= client.init(params)?;
+        }
+        Ok(seeded)
+    }
+
+    /// Pull every shard and assign into the local variables.
+    pub fn pull(&mut self) -> Result<()> {
+        let mut feeds: Vec<(String, Tensor)> = Vec::with_capacity(self.var_names.len());
+        for (s, client) in self.clients.iter().enumerate() {
+            let (version, params) = client.pull()?;
+            self.shard_version[s] = version;
+            for (name, t) in params {
+                feeds.push((format!("ps_in/{name}"), t));
+            }
+        }
+        let refs: Vec<(&str, Tensor)> =
+            feeds.iter().map(|(k, t)| (k.as_str(), t.clone())).collect();
+        self.sess.run(&refs, &[], &[self.pull_assign.as_str()])?;
+        Ok(())
+    }
+
+    /// One training step: pull → compute → push. Returns the step's loss
+    /// (computed against the parameters just pulled). In synchronous mode
+    /// this blocks until every replica's push for the step is applied.
+    pub fn step(&mut self, feeds: &[(&str, Tensor)]) -> Result<f32> {
+        self.pull()?;
+        let mut fetches: Vec<&str> = Vec::with_capacity(1 + self.grad_fetches.len());
+        fetches.push(self.loss_fetch.as_str());
+        fetches.extend(self.grad_fetches.iter().map(String::as_str));
+        let out = self.sess.run(feeds, &fetches, &[])?;
+        let loss = out[0].scalar_value_f32()?;
+
+        let mut per_shard: Vec<Vec<(String, GradEntry)>> =
+            vec![Vec::new(); self.clients.len()];
+        for ((name, shard), grad) in
+            self.var_names.iter().zip(&self.var_shard).zip(out.into_iter().skip(1))
+        {
+            let entry = if self.options.sparse_push {
+                match sparsify(&grad, self.options.sparse_row_threshold) {
+                    Some((indices, values)) => GradEntry::Sparse { indices, values },
+                    None => GradEntry::Dense(grad),
+                }
+            } else {
+                GradEntry::Dense(grad)
+            };
+            per_shard[*shard].push((name.clone(), entry));
+        }
+        // Every shard gets a push — empty ones included — so shard
+        // versions advance in lockstep.
+        for (s, grads) in per_shard.into_iter().enumerate() {
+            self.clients[s].push(self.shard_version[s], self.replica, grads)?;
+        }
+        self.steps += 1;
+        Ok(loss)
+    }
+
+    /// Steps completed by this replica.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// The local session (test support: inspect variables between steps).
+    pub fn session(&self) -> &Session {
+        &self.sess
+    }
+
+    /// Whether shard 0's channel negotiated compression.
+    pub fn compressed(&self) -> bool {
+        self.clients.first().map(PsClient::compressed).unwrap_or(false)
+    }
+
+    /// The `ps_in/<var>` placeholder names, aligned with the variables
+    /// (test support).
+    pub fn assign_feeds(&self) -> &[String] {
+        &self.assign_feeds
+    }
+
+    /// Per-shard stats JSON from every server.
+    pub fn shard_stats(&self) -> Result<Vec<String>> {
+        self.clients.iter().map(PsClient::stats).collect()
+    }
+}
+
+/// Row-sparse detection: the touched rows of `g` (first-dimension slices
+/// with any nonzero), as (indices `[k]` i64, values `[k, rest…]`), when
+/// they are few enough to be worth shipping sparse.
+fn sparsify(g: &Tensor, threshold: f64) -> Option<(Tensor, Tensor)> {
+    if g.shape().rank() < 1 {
+        return None;
+    }
+    let rows = g.shape().dims()[0];
+    if rows == 0 {
+        return None;
+    }
+    let v = g.as_f32().ok()?;
+    let row_len = v.len() / rows;
+    let mut idx: Vec<i64> = Vec::new();
+    for r in 0..rows {
+        if v[r * row_len..(r + 1) * row_len].iter().any(|&x| x != 0.0) {
+            idx.push(r as i64);
+        }
+    }
+    if idx.len() == rows || (idx.len() as f64) > threshold * rows as f64 {
+        return None;
+    }
+    let mut vals = Vec::with_capacity(idx.len() * row_len);
+    for &r in &idx {
+        let r = r as usize;
+        vals.extend_from_slice(&v[r * row_len..(r + 1) * row_len]);
+    }
+    let mut vshape = g.shape().dims().to_vec();
+    vshape[0] = idx.len();
+    let indices = Tensor::from_i64(vec![idx.len()], idx).ok()?;
+    let values = Tensor::from_f32(vshape, vals).ok()?;
+    Some((indices, values))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_assignment_is_stable_and_total() {
+        for shards in 1..5 {
+            for name in ["w0", "w1", "bias", "emb/table"] {
+                let s = shard_of(name, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_of(name, shards), "stable");
+            }
+        }
+    }
+
+    #[test]
+    fn sparsify_picks_touched_rows() {
+        let g =
+            Tensor::from_f32(vec![4, 2], vec![0., 0., 1., 2., 0., 0., 0., 0.]).unwrap();
+        let (idx, vals) = sparsify(&g, 0.5).unwrap();
+        assert_eq!(idx.as_i64().unwrap(), &[1]);
+        assert_eq!(vals.shape().dims(), &[1, 2]);
+        assert_eq!(vals.as_f32().unwrap(), &[1., 2.]);
+    }
+
+    #[test]
+    fn sparsify_declines_dense_gradients() {
+        let g = Tensor::from_f32(vec![2, 2], vec![1., 1., 1., 1.]).unwrap();
+        assert!(sparsify(&g, 0.5).is_none());
+        // Scalars can't be row-sparse.
+        assert!(sparsify(&Tensor::scalar_f32(1.0), 0.5).is_none());
+    }
+
+    #[test]
+    fn sparsify_respects_threshold() {
+        // 2 of 4 rows touched: allowed at 0.5, refused below it.
+        let g =
+            Tensor::from_f32(vec![4, 1], vec![1., 0., 2., 0.]).unwrap();
+        assert!(sparsify(&g, 0.5).is_some());
+        assert!(sparsify(&g, 0.25).is_none());
+    }
+}

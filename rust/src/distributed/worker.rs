@@ -33,13 +33,20 @@ pub struct WorkerOptions {
     /// kernel's `parallel_for` fans out over. Results are bit-identical
     /// at every setting (the pool's determinism contract), and workers
     /// spawn lazily, so raising this only costs threads once a large
-    /// kernel actually runs on a remote partition.
+    /// kernel actually runs on a large remote partition.
     pub intra_op_threads: usize,
+    /// Plan step memory for registered partitions (mirror of
+    /// `SessionOptions::enable_memory_planning`): each `RegisterGraph`
+    /// compiles with a liveness-based buffer plan and its own `ArenaPool`,
+    /// keyed by the graph handle the master runs against — the PR-3
+    /// planner, now on by default for remote partitions too. Results are
+    /// identical either way; only allocation traffic changes.
+    pub enable_memory_planning: bool,
 }
 
 impl Default for WorkerOptions {
     fn default() -> Self {
-        WorkerOptions { threads_per_device: 2, intra_op_threads: 2 }
+        WorkerOptions { threads_per_device: 2, intra_op_threads: 2, enable_memory_planning: true }
     }
 }
 
@@ -52,6 +59,7 @@ pub struct Worker {
     graphs: Mutex<HashMap<u64, Arc<CompiledGraph>>>,
     next_handle: AtomicU64,
     shutdown: AtomicBool,
+    options: WorkerOptions,
 }
 
 impl Worker {
@@ -62,7 +70,7 @@ impl Worker {
         Worker::with_options(
             task,
             cluster,
-            WorkerOptions { threads_per_device, intra_op_threads: 1 },
+            WorkerOptions { threads_per_device, intra_op_threads: 1, ..Default::default() },
         )
     }
 
@@ -88,6 +96,7 @@ impl Worker {
             graphs: Mutex::new(HashMap::new()),
             next_handle: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
+            options,
         })
     }
 
@@ -190,7 +199,10 @@ impl Worker {
             .and_then(|n| n.assigned_device.clone())
             .ok_or_else(|| Status::invalid_argument("empty or unplaced partition"))?;
         let device = self.devices.find_by_name(&device_name)?;
-        let compiled = CompiledGraph::compile(&msg.graph, device)?;
+        // Each registered partition gets its own plan + ArenaPool, keyed
+        // by the handle the master's Run requests will name.
+        let compiled =
+            CompiledGraph::compile_planned(&msg.graph, device, self.options.enable_memory_planning)?;
         let handle = self.next_handle.fetch_add(1, Ordering::SeqCst);
         self.graphs.lock().unwrap().insert(handle, compiled);
         Ok(handle)

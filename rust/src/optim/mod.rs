@@ -5,7 +5,31 @@
 use crate::autodiff::gradients;
 use crate::error::{Result, Status};
 use crate::graph::{Endpoint, NodeId};
+use crate::kernels::math::binary_elementwise;
 use crate::ops::builder::GraphBuilder;
+use crate::tensor::{Tensor, TensorData};
+use std::collections::HashMap;
+
+/// Optimizer slot state for [`Optimizer::apply_dense`], keyed exactly like
+/// the kernel container's slot variables (`"<var>/Momentum"`,
+/// `"<var>/Adam/m"`, …) so a parameter server's state is inspectable with
+/// the same names the in-graph kernels would use.
+pub type SlotMap = HashMap<String, Tensor>;
+
+/// elementwise a*s + b*t for f32 — the same arithmetic (same expression,
+/// same iteration order) as the `axpby` helper inside `kernels::state`,
+/// so host-side applies are bit-identical to the Apply* kernels.
+fn axpby(a: &Tensor, s: f32, b: &Tensor, t: f32) -> Result<Tensor> {
+    let av = a.as_f32()?;
+    let bv = b.as_f32()?;
+    if av.len() != bv.len() {
+        return Err(Status::invalid_argument("axpby: length mismatch"));
+    }
+    Tensor::new(
+        a.shape().clone(),
+        TensorData::F32(av.iter().zip(bv).map(|(&x, &y)| x * s + y * t).collect()),
+    )
+}
 
 /// Optimizer algorithm + hyperparameters.
 #[derive(Debug, Clone)]
@@ -54,6 +78,112 @@ impl Optimizer {
                 let b1 = b.scalar(beta1);
                 let b2 = b.scalar(beta2);
                 b.op("ApplyAdam", "adam_update", vec![var, lr, grad, b1, b2], vec![])
+            }
+        }
+    }
+
+    /// Apply one update to a plain tensor, outside any graph: the
+    /// parameter-server path (§4.4) where the variable lives in a
+    /// server-side map instead of a resource container. Mirrors the
+    /// corresponding Apply* kernel in `kernels::state` expression-for-
+    /// expression, so a trajectory driven through `apply_dense` is
+    /// bit-identical to one driven through the in-graph update ops.
+    /// `name` keys the optimizer slots in `slots` with the kernels' slot
+    /// naming; slots are zero-initialized on first use, as the kernels do.
+    pub fn apply_dense(
+        &self,
+        name: &str,
+        var: &Tensor,
+        grad: &Tensor,
+        slots: &mut SlotMap,
+    ) -> Result<Tensor> {
+        if var.num_elements() != grad.num_elements() {
+            return Err(Status::invalid_argument(format!(
+                "apply_dense {name:?}: var has {} elements, grad {}",
+                var.num_elements(),
+                grad.num_elements()
+            )));
+        }
+        match *self {
+            Optimizer::Sgd { lr } => axpby(var, 1.0, grad, -lr),
+            Optimizer::Momentum { lr, momentum } => {
+                let key = format!("{name}/Momentum");
+                let acc = match slots.get(&key) {
+                    Some(a) => axpby(a, momentum, grad, 1.0)?,
+                    None => {
+                        let z = Tensor::zeros(grad.dtype(), grad.shape().clone())?;
+                        axpby(&z, momentum, grad, 1.0)?
+                    }
+                };
+                let out = axpby(var, 1.0, &acc, -lr)?;
+                slots.insert(key, acc);
+                Ok(out)
+            }
+            Optimizer::Adagrad { lr } => {
+                let g2 = binary_elementwise(grad, grad, "Mul")?;
+                let key = format!("{name}/Adagrad");
+                let acc = match slots.get(&key) {
+                    Some(a) => binary_elementwise(a, &g2, "Add")?,
+                    None => {
+                        let z = Tensor::zeros(grad.dtype(), grad.shape().clone())?;
+                        binary_elementwise(&z, &g2, "Add")?
+                    }
+                };
+                let cv = var.as_f32()?;
+                let gv = grad.as_f32()?;
+                let av = acc.as_f32()?;
+                let out: Vec<f32> = cv
+                    .iter()
+                    .zip(gv.iter().zip(av))
+                    .map(|(&c, (&g, &a))| c - lr * g / (a + 1e-8).sqrt())
+                    .collect();
+                let out = Tensor::new(var.shape().clone(), TensorData::F32(out))?;
+                slots.insert(key, acc);
+                Ok(out)
+            }
+            Optimizer::Adam { lr, beta1, beta2 } => {
+                let eps = 1e-8f32;
+                let t_key = format!("{name}/Adam/t");
+                let t = match slots.get(&t_key) {
+                    Some(t) => t.scalar_value_f32()? + 1.0,
+                    None => 1.0,
+                };
+                slots.insert(t_key, Tensor::scalar_f32(t));
+                let m_key = format!("{name}/Adam/m");
+                let m = match slots.get(&m_key) {
+                    Some(m) => axpby(m, beta1, grad, 1.0 - beta1)?,
+                    None => {
+                        let z = Tensor::zeros(grad.dtype(), grad.shape().clone())?;
+                        axpby(&z, beta1, grad, 1.0 - beta1)?
+                    }
+                };
+                let g2 = binary_elementwise(grad, grad, "Mul")?;
+                let v_key = format!("{name}/Adam/v");
+                let v = match slots.get(&v_key) {
+                    Some(v) => axpby(v, beta2, &g2, 1.0 - beta2)?,
+                    None => {
+                        let z = Tensor::zeros(grad.dtype(), grad.shape().clone())?;
+                        axpby(&z, beta2, &g2, 1.0 - beta2)?
+                    }
+                };
+                let bc1 = 1.0 - beta1.powf(t);
+                let bc2 = 1.0 - beta2.powf(t);
+                let cv = var.as_f32()?;
+                let mv = m.as_f32()?;
+                let vv = v.as_f32()?;
+                let out: Vec<f32> = cv
+                    .iter()
+                    .zip(mv.iter().zip(vv))
+                    .map(|(&c, (&mi, &vi))| {
+                        let mhat = mi / bc1;
+                        let vhat = vi / bc2;
+                        c - lr * mhat / (vhat.sqrt() + eps)
+                    })
+                    .collect();
+                let out = Tensor::new(var.shape().clone(), TensorData::F32(out))?;
+                slots.insert(m_key, m);
+                slots.insert(v_key, v);
+                Ok(out)
             }
         }
     }
@@ -128,6 +258,66 @@ mod tests {
     #[test]
     fn adam_converges() {
         converges(Optimizer::adam(0.1), 400, 1e-2);
+    }
+
+    /// apply_dense must walk the exact trajectory of the in-graph Apply*
+    /// kernel: same bits, not merely close.
+    fn apply_dense_matches_kernel(opt: Optimizer, steps: usize) {
+        // In-graph side: w updated by the Apply kernel with a fixed
+        // per-step gradient fed through a placeholder.
+        let mut b = GraphBuilder::new();
+        let init_val = Tensor::from_f32(vec![3], vec![0.5, -1.25, 2.0]).unwrap();
+        let w = b.variable("w", init_val.clone()).unwrap();
+        let g = b.placeholder("g", crate::tensor::DType::F32).unwrap();
+        let upd = opt.apply(&mut b, w, g).unwrap();
+        let upd_name = b.graph.node(upd).name.clone();
+        let init: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run_targets(&init.iter().map(|s| s.as_str()).collect::<Vec<_>>()).unwrap();
+
+        // Host side: the same trajectory through apply_dense.
+        let mut cur = init_val;
+        let mut slots = SlotMap::new();
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        for _ in 0..steps {
+            let gv: Vec<f32> = (0..3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let grad = Tensor::from_f32(vec![3], gv).unwrap();
+            sess.run(&[("g", grad.clone())], &[], &[&upd_name]).unwrap();
+            cur = opt.apply_dense("w", &cur, &grad, &mut slots).unwrap();
+            let kernel_w = sess.run(&[], &["w"], &[]).unwrap();
+            let kbits: Vec<u32> =
+                kernel_w[0].as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+            let hbits: Vec<u32> = cur.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(kbits, hbits, "{opt:?} diverged from the kernel trajectory");
+        }
+    }
+
+    #[test]
+    fn apply_dense_bitwise_matches_sgd() {
+        apply_dense_matches_kernel(Optimizer::sgd(0.1), 20);
+    }
+
+    #[test]
+    fn apply_dense_bitwise_matches_momentum() {
+        apply_dense_matches_kernel(Optimizer::momentum(0.05, 0.9), 20);
+    }
+
+    #[test]
+    fn apply_dense_bitwise_matches_adagrad() {
+        apply_dense_matches_kernel(Optimizer::adagrad(0.5), 20);
+    }
+
+    #[test]
+    fn apply_dense_bitwise_matches_adam() {
+        apply_dense_matches_kernel(Optimizer::adam(0.05), 20);
+    }
+
+    #[test]
+    fn apply_dense_rejects_shape_mismatch() {
+        let var = Tensor::from_f32(vec![2], vec![1., 2.]).unwrap();
+        let grad = Tensor::from_f32(vec![3], vec![1., 2., 3.]).unwrap();
+        let mut slots = SlotMap::new();
+        assert!(Optimizer::sgd(0.1).apply_dense("w", &var, &grad, &mut slots).is_err());
     }
 
     #[test]

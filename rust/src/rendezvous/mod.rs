@@ -169,6 +169,32 @@ pub fn recv_blocking(r: &dyn Rendezvous, key: &str) -> Result<Tensor> {
     rx.recv().map_err(|_| Status::internal("rendezvous dropped callback"))?
 }
 
+/// Blocking receive with a deadline. `DeadlineExceeded` when nothing
+/// arrives within `timeout`; the registered waiter stays parked in the
+/// rendezvous, so a later `send` (or `abort`) still consumes the key —
+/// callers that give up should abort the rendezvous if the key must not
+/// outlive them (the parameter-server sync barrier does exactly that).
+pub fn recv_blocking_timeout(
+    r: &dyn Rendezvous,
+    key: &str,
+    timeout: std::time::Duration,
+) -> Result<Tensor> {
+    let (tx, rx) = std::sync::mpsc::channel();
+    r.recv_async(key, Box::new(move |res| {
+        let _ = tx.send(res);
+    }));
+    match rx.recv_timeout(timeout) {
+        Ok(res) => res,
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => Err(Status::new(
+            crate::error::Code::DeadlineExceeded,
+            format!("rendezvous recv {key:?} timed out after {timeout:?}"),
+        )),
+        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+            Err(Status::internal("rendezvous dropped callback"))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +283,27 @@ mod tests {
             assert_eq!(t.scalar_value_f32().unwrap(), i as f32);
         }
         h.join().unwrap();
+    }
+
+    #[test]
+    fn recv_timeout_then_late_send_still_delivers() {
+        let r = LocalRendezvous::new();
+        let e = recv_blocking_timeout(&*r, "k", std::time::Duration::from_millis(10)).unwrap_err();
+        assert_eq!(e.code, crate::error::Code::DeadlineExceeded);
+        // The waiter stayed parked: the late send is consumed by it, so a
+        // fresh recv on the same key blocks again (times out) rather than
+        // seeing the value twice.
+        r.send("k", Tensor::scalar_f32(1.0)).unwrap();
+        let e2 = recv_blocking_timeout(&*r, "k", std::time::Duration::from_millis(10)).unwrap_err();
+        assert_eq!(e2.code, crate::error::Code::DeadlineExceeded);
+    }
+
+    #[test]
+    fn recv_timeout_immediate_value() {
+        let r = LocalRendezvous::new();
+        r.send("k", Tensor::scalar_f32(4.0)).unwrap();
+        let t = recv_blocking_timeout(&*r, "k", std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(t.scalar_value_f32().unwrap(), 4.0);
     }
 
     #[test]

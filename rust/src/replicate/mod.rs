@@ -45,6 +45,30 @@ pub fn sync_data_parallel(
     Ok(b.group("sync_train", updates))
 }
 
+/// Gradient-only tower (§4.4 parameter-server training): the gradients of
+/// `loss` w.r.t. `vars`, with **no** Apply ops — a replica fetches these
+/// and pushes them to parameter-server shards, where the update happens
+/// (`distributed::train::DistTrainer` drives this). Errors if the loss is
+/// independent of any requested variable, like `Optimizer::minimize`.
+pub fn tower_gradients(
+    b: &mut GraphBuilder,
+    loss: Endpoint,
+    vars: &[Endpoint],
+) -> Result<Vec<Endpoint>> {
+    let gs = gradients(b, loss, vars)?;
+    gs.into_iter()
+        .zip(vars)
+        .map(|(g, var)| {
+            g.ok_or_else(|| {
+                Status::invalid_argument(format!(
+                    "loss does not depend on variable {:?}",
+                    b.graph.node(var.node).name
+                ))
+            })
+        })
+        .collect()
+}
+
 /// Asynchronous data parallelism (Fig 7 bottom): "each one of these
 /// replicas also applies the parameter updates … asynchronously. In this
 /// configuration, there is one client thread for each of the graph

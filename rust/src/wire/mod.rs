@@ -80,6 +80,19 @@ pub fn rpc(addr: &str, msg_type: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
 
 // ---- primitive payload codecs ----------------------------------------------
 
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn get_u8(buf: &[u8], pos: &mut usize) -> Result<u8> {
+    if buf.len() <= *pos {
+        return Err(Status::invalid_argument("truncated payload (u8)"));
+    }
+    let v = buf[*pos];
+    *pos += 1;
+    Ok(v)
+}
+
 pub fn put_u32(out: &mut Vec<u8>, v: u32) {
     let mut b = [0u8; 4];
     LittleEndian::write_u32(&mut b, v);
@@ -170,6 +183,34 @@ pub fn decode_str_list(buf: &[u8], pos: &mut usize) -> Result<Vec<String>> {
     Ok(out)
 }
 
+// ---- single tensors --------------------------------------------------------
+
+/// One u64-length-prefixed `tensor::codec` payload (the same per-entry
+/// layout `encode_tensor_map` uses, reusable for messages that carry
+/// tensors outside a map).
+pub fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    let payload = codec::encode(t);
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(&payload);
+}
+
+pub fn get_tensor(buf: &[u8], pos: &mut usize) -> Result<Tensor> {
+    // Compare in u64 against the remaining bytes: `*pos + plen` on an
+    // attacker-controlled u64 length would wrap (and `as usize` truncates
+    // on 32-bit), bypassing the bounds check.
+    let plen64 = get_u64(buf, pos)?;
+    if plen64 > (buf.len() - *pos) as u64 {
+        return Err(Status::invalid_argument("truncated payload (tensor)"));
+    }
+    let plen = plen64 as usize;
+    let (t, used) = codec::decode(&buf[*pos..*pos + plen])?;
+    if used != plen {
+        return Err(Status::invalid_argument("tensor payload mismatch"));
+    }
+    *pos += plen;
+    Ok(t)
+}
+
 // ---- tensor maps -----------------------------------------------------------
 
 /// Named-tensor map: u32 count, then per entry a length-prefixed name and
@@ -178,9 +219,7 @@ pub fn encode_tensor_map(out: &mut Vec<u8>, m: &[(String, Tensor)]) {
     put_u32(out, m.len() as u32);
     for (k, t) in m {
         put_str(out, k);
-        let payload = codec::encode(t);
-        put_u64(out, payload.len() as u64);
-        out.extend_from_slice(&payload);
+        put_tensor(out, t);
     }
 }
 
@@ -189,19 +228,7 @@ pub fn decode_tensor_map(buf: &[u8], pos: &mut usize) -> Result<Vec<(String, Ten
     let mut out = Vec::with_capacity(n.min(4096));
     for _ in 0..n {
         let key = get_str(buf, pos)?;
-        // Compare in u64 against the remaining bytes: `*pos + plen` on an
-        // attacker-controlled u64 length would wrap (and `as usize`
-        // truncates on 32-bit), bypassing the bounds check.
-        let plen64 = get_u64(buf, pos)?;
-        if plen64 > (buf.len() - *pos) as u64 {
-            return Err(Status::invalid_argument("truncated payload (tensor)"));
-        }
-        let plen = plen64 as usize;
-        let (t, used) = codec::decode(&buf[*pos..*pos + plen])?;
-        if used != plen {
-            return Err(Status::invalid_argument("tensor map payload mismatch"));
-        }
-        *pos += plen;
+        let t = get_tensor(buf, pos)?;
         out.push((key, t));
     }
     Ok(out)
@@ -237,14 +264,17 @@ mod tests {
     #[test]
     fn primitives_roundtrip() {
         let mut out = Vec::new();
+        put_u8(&mut out, 200);
         put_u32(&mut out, 42);
         put_u64(&mut out, u64::MAX - 1);
         put_str(&mut out, "model/v1");
         let mut pos = 0;
+        assert_eq!(get_u8(&out, &mut pos).unwrap(), 200);
         assert_eq!(get_u32(&out, &mut pos).unwrap(), 42);
         assert_eq!(get_u64(&out, &mut pos).unwrap(), u64::MAX - 1);
         assert_eq!(get_str(&out, &mut pos).unwrap(), "model/v1");
         assert_eq!(pos, out.len());
+        assert!(get_u8(&out, &mut pos).is_err());
     }
 
     #[test]

@@ -247,7 +247,7 @@ fn worker_intra_op_pools_sized_and_results_identical() {
         let w = Worker::with_options(
             0,
             cluster.clone(),
-            WorkerOptions { threads_per_device: 2, intra_op_threads },
+            WorkerOptions { threads_per_device: 2, intra_op_threads, ..Default::default() },
         );
         w.serve(&addrs[0]).unwrap();
         let pool_threads = w.devices().get(0).compute.threads();

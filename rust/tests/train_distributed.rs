@@ -1,0 +1,358 @@
+//! Integration tests for §4.4 data-parallel training against parameter
+//! servers: synchronous SGD is **bit-identical** to single-process
+//! training (compression off), asynchronous SGD converges, stale pushes
+//! never corrupt server state, and remote partitions run identically with
+//! planned step memory on or off.
+
+use rustflow::distributed::ps::{ParamServer, PsClient, PsOptions};
+use rustflow::distributed::train::{DistTrainer, DistTrainerOptions};
+use rustflow::distributed::proto::GradEntry;
+use rustflow::error::Code;
+use rustflow::graph::Endpoint;
+use rustflow::optim::Optimizer;
+use rustflow::replicate;
+use rustflow::tensor::Tensor;
+use rustflow::util::rng::Pcg32;
+use rustflow::{GraphBuilder, Session, SessionOptions};
+
+const LR: f32 = 0.25;
+const STEPS: usize = 6;
+const REPLICAS: usize = 2;
+
+/// Deterministic per-(step, replica) training data for the linear model
+/// `pred = w0*x + w1`. Dyadic values so every intermediate is exact-ish;
+/// bitwise equality holds regardless because both sides run the same ops
+/// in the same order.
+fn data(step: usize, replica: usize) -> (f32, f32) {
+    let x = 1.0 + 0.5 * replica as f32 + 0.25 * (step % 8) as f32;
+    let y = 0.5 - 0.25 * replica as f32 + 0.125 * (step % 5) as f32;
+    (x, y)
+}
+
+/// One tower of the model: `loss = (w0*x + w1 - y)^2` over scalar
+/// placeholders named `x`/`y` under the caller's scope.
+fn tower(b: &mut GraphBuilder, w0: Endpoint, w1: Endpoint) -> Endpoint {
+    let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+    let y = b.placeholder("y", rustflow::DType::F32).unwrap();
+    let wx = b.mul(w0, x);
+    let pred = b.add(wx, w1);
+    let d = b.sub(pred, y);
+    b.square(d)
+}
+
+fn vars(b: &mut GraphBuilder) -> (Endpoint, Endpoint) {
+    let w0 = b.variable("w0", Tensor::scalar_f32(0.25)).unwrap();
+    let w1 = b.variable("w1", Tensor::scalar_f32(-0.5)).unwrap();
+    (w0, w1)
+}
+
+/// Fusion stays off on both sides of the equivalence: the elementwise
+/// fusion pass carries a 1e-6 contract, everything else in the pipeline
+/// is exact, and this test demands bitwise equality.
+fn exact_session_options() -> SessionOptions {
+    SessionOptions { enable_elementwise_fusion: false, ..Default::default() }
+}
+
+/// Reference trajectory: both towers in ONE graph, averaged and applied by
+/// `replicate::sync_data_parallel` — the paper's in-graph Fig 7 (top).
+/// Returns (per-step tower-0 losses, final w0, final w1) as raw bits.
+fn reference_trajectory() -> (Vec<u32>, u32, u32) {
+    let mut b = GraphBuilder::new();
+    let (w0, w1) = vars(&mut b);
+    let losses: Vec<Endpoint> = (0..REPLICAS)
+        .map(|r| b.with_scope(&format!("rep{r}"), |b| tower(b, w0, w1)))
+        .collect();
+    let train =
+        replicate::sync_data_parallel(&mut b, &[w0, w1], &losses, &Optimizer::sgd(LR)).unwrap();
+    let tname = b.graph.node(train).name.clone();
+    let loss0 = format!("{}:{}", b.graph.node(losses[0].node).name, losses[0].port);
+    let inits: Vec<String> =
+        b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let sess = Session::new(b.into_graph(), exact_session_options());
+    sess.run_targets(&inits.iter().map(String::as_str).collect::<Vec<_>>()).unwrap();
+    let mut loss_bits = Vec::with_capacity(STEPS);
+    for s in 0..STEPS {
+        let mut feeds = Vec::new();
+        for r in 0..REPLICAS {
+            let (x, y) = data(s, r);
+            feeds.push((format!("rep{r}/x"), Tensor::scalar_f32(x)));
+            feeds.push((format!("rep{r}/y"), Tensor::scalar_f32(y)));
+        }
+        let refs: Vec<(&str, Tensor)> =
+            feeds.iter().map(|(k, t)| (k.as_str(), t.clone())).collect();
+        let out = sess.run(&refs, &[&loss0], &[&tname]).unwrap();
+        loss_bits.push(out[0].scalar_value_f32().unwrap().to_bits());
+    }
+    let w = sess.run(&[], &["w0", "w1"], &[]).unwrap();
+    (
+        loss_bits,
+        w[0].scalar_value_f32().unwrap().to_bits(),
+        w[1].scalar_value_f32().unwrap().to_bits(),
+    )
+}
+
+#[test]
+fn sync_two_replicas_bitwise_match_single_process() {
+    let (ref_losses, ref_w0, ref_w1) = reference_trajectory();
+
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(LR),
+        sync_replicas: Some(REPLICAS),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    // One replica per thread: each owns a single-tower graph + DistTrainer
+    // with compression off (the bitwise contract; bf16 is lossy by design).
+    let losses: Vec<Vec<u32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..REPLICAS)
+            .map(|r| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut b = GraphBuilder::new();
+                    let (w0, w1) = vars(&mut b);
+                    let loss = tower(&mut b, w0, w1);
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &[w0, w1],
+                        r as u32,
+                        &[addr],
+                        DistTrainerOptions { compress: false, ..Default::default() },
+                        exact_session_options(),
+                    )
+                    .unwrap();
+                    t.init_params().unwrap();
+                    (0..STEPS)
+                        .map(|s| {
+                            let (x, y) = data(s, r);
+                            let feeds =
+                                [("x", Tensor::scalar_f32(x)), ("y", Tensor::scalar_f32(y))];
+                            t.step(&feeds).unwrap().to_bits()
+                        })
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(losses[0], ref_losses, "replica-0 loss trajectory must be bit-identical");
+    let w0 = ps.param("w0").unwrap().scalar_value_f32().unwrap().to_bits();
+    let w1 = ps.param("w1").unwrap().scalar_value_f32().unwrap().to_bits();
+    assert_eq!((w0, w1), (ref_w0, ref_w1), "final parameters must be bit-identical");
+    assert_eq!(ps.version(), STEPS as u64, "one version bump per synchronous step");
+    ps.shutdown();
+}
+
+#[test]
+fn async_converges_on_convex_problem_from_fixed_seed() {
+    // Downpour SGD on y = 3x data: each replica draws its own x stream
+    // from a fixed seed; w must land near 3 despite staleness. Replica 0
+    // pushes bf16-compressed, replica 1 uncompressed — interop on one
+    // server.
+    let ps = ParamServer::new(PsOptions { opt: Optimizer::sgd(0.05), ..Default::default() });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    std::thread::scope(|scope| {
+        for r in 0..2u32 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut b = GraphBuilder::new();
+                let w = b.variable("w", Tensor::scalar_f32(0.0)).unwrap();
+                let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+                let y = b.placeholder("y", rustflow::DType::F32).unwrap();
+                let wx = b.mul(w, x);
+                let d = b.sub(wx, y);
+                let loss = b.square(d);
+                let mut t = DistTrainer::new(
+                    b,
+                    loss,
+                    &[w],
+                    r,
+                    &[addr],
+                    DistTrainerOptions { compress: r == 0, ..Default::default() },
+                    SessionOptions::default(),
+                )
+                .unwrap();
+                assert_eq!(t.compressed(), r == 0, "per-channel negotiation");
+                t.init_params().unwrap();
+                let mut rng = Pcg32::new(1000 + r as u64);
+                for _ in 0..80 {
+                    let x = rng.uniform(0.5, 1.5);
+                    let feeds =
+                        [("x", Tensor::scalar_f32(x)), ("y", Tensor::scalar_f32(3.0 * x))];
+                    t.step(&feeds).unwrap();
+                }
+            });
+        }
+    });
+
+    let w = ps.param("w").unwrap().scalar_value_f32().unwrap();
+    assert!((w - 3.0).abs() < 0.1, "async training ended at w={w}, want ≈3");
+    assert_eq!(ps.version(), 160, "one version bump per push in async mode");
+    ps.shutdown();
+}
+
+/// Raw-bytes snapshot of every parameter on the shard.
+fn param_bits(ps: &ParamServer, names: &[&str]) -> Vec<Vec<u32>> {
+    names
+        .iter()
+        .map(|n| {
+            ps.param(n).unwrap().as_f32().unwrap().iter().map(|v| v.to_bits()).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn stale_sync_push_never_corrupts_server_state() {
+    // A single-replica synchronous group: pushes must carry the exact
+    // version they pulled. A worker joining mid-run with stale parameters
+    // gets refused — bitwise-untouched state — then catches up by pulling.
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.5),
+        sync_replicas: Some(1),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    let a = PsClient::connect(&addr, false).unwrap();
+    a.init(&[("w".to_string(), Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap())]).unwrap();
+    let (v0, _) = a.pull().unwrap();
+    assert_eq!(v0, 0);
+    let grad = || {
+        vec![(
+            "w".to_string(),
+            GradEntry::Dense(Tensor::from_f32(vec![2], vec![1.0, -1.0]).unwrap()),
+        )]
+    };
+    // Step 0 applies: w = [1,2] - 0.5*[1,-1] = [0.5, 2.5].
+    assert_eq!(a.push(0, 0, grad()).unwrap(), 1);
+
+    // The late joiner still believes version 0: stale → refused, state
+    // bitwise untouched.
+    let before = param_bits(&ps, &["w"]);
+    let b = PsClient::connect(&addr, false).unwrap();
+    let e = b.push(0, 0, grad()).unwrap_err();
+    assert_eq!(e.code, Code::FailedPrecondition);
+    assert_eq!(param_bits(&ps, &["w"]), before, "stale push must not touch parameters");
+
+    // A push from the future is a protocol bug, also refused untouched.
+    let e = b.push(7, 0, grad()).unwrap_err();
+    assert_eq!(e.code, Code::InvalidArgument);
+    assert_eq!(param_bits(&ps, &["w"]), before);
+
+    // Catch-up: pull the real version, then the push lands.
+    let (v1, params) = b.pull().unwrap();
+    assert_eq!(v1, 1);
+    assert_eq!(params[0].1.as_f32().unwrap(), &[0.5, 2.5]);
+    assert_eq!(b.push(1, 0, grad()).unwrap(), 2);
+    assert_eq!(ps.param("w").unwrap().as_f32().unwrap(), &[0.0, 3.0]);
+    ps.shutdown();
+}
+
+#[test]
+fn async_late_joiner_adopts_seeded_params() {
+    // First replica seeds the shard; a replica joining later (different
+    // local init!) loses the race and trains against the seeded values.
+    let ps = ParamServer::new(PsOptions { opt: Optimizer::sgd(0.1), ..Default::default() });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    let build = |init: f32| {
+        let mut b = GraphBuilder::new();
+        let w = b.variable("w", Tensor::scalar_f32(init)).unwrap();
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let wx = b.mul(w, x);
+        let c = b.scalar(2.0);
+        let d = b.sub(wx, c);
+        let loss = b.square(d);
+        (b, loss, w)
+    };
+
+    // Compression off: this test asserts exact f32 equality between the
+    // server's parameters and what the replicas see.
+    let (b1, loss1, w1) = build(5.0);
+    let mut early = DistTrainer::new(
+        b1,
+        loss1,
+        &[w1],
+        0,
+        &[addr.clone()],
+        DistTrainerOptions { compress: false, ..Default::default() },
+        SessionOptions::default(),
+    )
+    .unwrap();
+    assert!(early.init_params().unwrap(), "first replica seeds the shard");
+    for _ in 0..3 {
+        early.step(&[("x", Tensor::scalar_f32(1.0))]).unwrap();
+    }
+    let server_w = ps.param("w").unwrap().scalar_value_f32().unwrap();
+
+    let (b2, loss2, w2) = build(-9.0); // a would-be-corrupting local init
+    let mut late = DistTrainer::new(
+        b2,
+        loss2,
+        &[w2],
+        1,
+        &[addr],
+        DistTrainerOptions { compress: false, ..Default::default() },
+        SessionOptions::default(),
+    )
+    .unwrap();
+    assert!(!late.init_params().unwrap(), "late joiner must lose the seeding race");
+    assert_eq!(
+        ps.param("w").unwrap().scalar_value_f32().unwrap(),
+        server_w,
+        "late init must not overwrite trained parameters"
+    );
+    late.pull().unwrap();
+    let local = late.session().run(&[], &["w"], &[]).unwrap()[0].scalar_value_f32().unwrap();
+    assert_eq!(local, server_w, "pull adopts the server's parameters");
+    late.step(&[("x", Tensor::scalar_f32(1.0))]).unwrap();
+    assert_eq!(ps.version(), 4, "late replica's push applies");
+    ps.shutdown();
+}
+
+#[test]
+fn worker_planned_memory_is_result_identical() {
+    // Satellite: remote partitions now compile with the PR-3 step-memory
+    // planner by default. Planning must be invisible in the results.
+    use rustflow::distributed::{ClusterSpec, DistMaster, DistMasterOptions, Worker, WorkerOptions};
+
+    let run_with = |enable_memory_planning: bool| -> Vec<f32> {
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![l.local_addr().unwrap().to_string()];
+        drop(l);
+        let cluster = ClusterSpec::new(addrs.clone(), 1);
+        let w = Worker::with_options(
+            0,
+            cluster.clone(),
+            WorkerOptions { enable_memory_planning, ..Default::default() },
+        );
+        w.serve(&addrs[0]).unwrap();
+
+        let mut b = GraphBuilder::new();
+        let x = b.constant(
+            Tensor::from_f32(vec![32, 32], (0..1024).map(|i| (i % 7) as f32 * 0.5).collect())
+                .unwrap(),
+        );
+        let y = b.with_device("/job:worker/task:0", |b| {
+            let m = b.matmul(x, x);
+            let r = b.relu(m);
+            let s = b.add(r, m);
+            b.matmul(s, s)
+        });
+        let yname = format!("{}:0", b.graph.node(y.node).name);
+        // Const-rooted transfer-intent idiom: folding off so the chain
+        // really executes on the worker, through its (planned) arenas.
+        let opts =
+            DistMasterOptions { enable_constant_folding: false, ..DistMasterOptions::default() };
+        let master = DistMaster::new(cluster, b.into_graph(), opts);
+        let out = master.run(&[], &[&yname], &[]).unwrap();
+        out[0].as_f32().unwrap().to_vec()
+    };
+
+    let planned = run_with(true);
+    let unplanned = run_with(false);
+    assert_eq!(planned, unplanned, "planned step memory must not change results");
+}

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # Perf trajectory, as one command: runs the §5 optimizer ablation bench,
 # the step-memory-planner bench, the intra-op parallelism bench, the
-# serving throughput bench, and the wire-serving (model hub) bench, and
-# writes BENCH_optimizer.json + BENCH_memory.json + BENCH_parallel.json +
-# BENCH_serving_net.json at the repo root (machine-readable; one file per
+# serving throughput bench, the wire-serving (model hub) bench, and the
+# distributed-training bench, and writes BENCH_optimizer.json +
+# BENCH_memory.json + BENCH_parallel.json + BENCH_serving_net.json +
+# BENCH_dist_train.json at the repo root (machine-readable; one file per
 # tracked benchmark family).
 #
 #   scripts/bench.sh
@@ -12,9 +13,11 @@
 # over passes-disabled), the memory bench asserts planning-on allocates
 # ≥ 2x fewer heap bytes per step than planning-off, the parallel bench
 # asserts ≥ 2x matmul throughput at 4 intra-op threads (when the machine
-# has ≥ 4 cores) with no 1-thread regression, and the serving_net bench
+# has ≥ 4 cores) with no 1-thread regression, the serving_net bench
 # asserts a mid-run model hot-swap costs < 20% of one throughput window
-# (≥ 4 cores), so this script fails on a perf regression.
+# (≥ 4 cores), and the dist_train bench asserts bf16 gradient/param
+# compression cuts wire bytes ≥ 40% at unchanged convergence, so this
+# script fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
@@ -22,6 +25,7 @@ export BENCH_OPTIMIZER_JSON="$(pwd)/BENCH_optimizer.json"
 export BENCH_MEMORY_JSON="$(pwd)/BENCH_memory.json"
 export BENCH_PARALLEL_JSON="$(pwd)/BENCH_parallel.json"
 export BENCH_SERVING_NET_JSON="$(pwd)/BENCH_serving_net.json"
+export BENCH_DIST_TRAIN_JSON="$(pwd)/BENCH_dist_train.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
@@ -37,5 +41,8 @@ cargo bench --bench serving
 
 echo "== cargo bench --bench serving_net (writes $BENCH_SERVING_NET_JSON)"
 cargo bench --bench serving_net
+
+echo "== cargo bench --bench dist_train (writes $BENCH_DIST_TRAIN_JSON)"
+cargo bench --bench dist_train
 
 echo "bench: OK"

@@ -5,9 +5,12 @@
 //! batch) and asynchronously (Downpour). Gradients and pulls travel
 //! bf16-compressed (§5.5) where negotiated.
 //!
-//!     cargo run --release --example dist_train -- [replicas] [steps]
+//!     cargo run --release --example dist_train -- [replicas] [steps] [trace]
 //!
-//! Exits non-zero if training fails to reduce the loss (CI smoke).
+//! Exits non-zero if training fails to reduce the loss (CI smoke). With a
+//! literal `trace` argument, reruns a short synchronous session with step
+//! tracing on everywhere (§9.2 EEG) and writes the merged replica +
+//! parameter-server timeline to `dist_trace.json` (chrome://tracing).
 //!
 //! [`ParamServer`]: rustflow::distributed::ParamServer
 
@@ -15,6 +18,7 @@ use rustflow::data;
 use rustflow::distributed::{DistTrainer, DistTrainerOptions, ParamServer, PsOptions};
 use rustflow::models;
 use rustflow::optim::Optimizer;
+use rustflow::util::json::Json;
 use rustflow::{DType, GraphBuilder, SessionOptions};
 
 const DIM: usize = 16;
@@ -94,10 +98,88 @@ fn train(
     Ok((first, last, bytes, dt))
 }
 
+/// Tracing smoke: the same sync topology with `trace: true` everywhere,
+/// replica fragments handed to replica 0, whose `merged_trace` pulls the
+/// shard's spans and renders one clock-aligned chrome://tracing JSON.
+fn trace_smoke(replicas: usize, steps: usize) -> rustflow::Result<()> {
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.1),
+        sync_replicas: Some(replicas),
+        trace: true,
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0")?.to_string();
+    let examples = data::synthetic_classification(replicas * BATCH * 4, DIM, CLASSES, 0.3, 5);
+
+    let trainers: Vec<DistTrainer> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..replicas)
+            .map(|r| {
+                let addr = addr.clone();
+                let examples = &examples;
+                scope.spawn(move || -> rustflow::Result<DistTrainer> {
+                    let (b, loss, vars) = build_replica()?;
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &vars,
+                        r as u32,
+                        &[addr],
+                        DistTrainerOptions::default(),
+                        SessionOptions { trace: true, ..Default::default() },
+                    )?;
+                    t.init_params()?;
+                    let shards = replicas * 4;
+                    for s in 0..steps {
+                        let shard = (r * 4 + s % 4) % shards;
+                        let batch = &examples[shard * BATCH..(shard + 1) * BATCH];
+                        let (f, l) = data::batch_tensors(batch)?;
+                        let one_hot = data::one_hot(l.as_i32()?, CLASSES);
+                        t.step(&[("x", f), ("labels", one_hot)])?;
+                    }
+                    Ok(t)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica thread panicked"))
+            .collect::<rustflow::Result<Vec<_>>>()
+    })?;
+    // Let the applier finish recording the final apply span (pushes
+    // unblock on the version bump, a hair before the span ends).
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut it = trainers.into_iter();
+    let lead = it.next().expect("at least one replica");
+    let frags: Vec<_> = it.filter_map(|t| t.take_trace()).collect();
+    let json = lead.merged_trace(frags)?;
+    ps.shutdown();
+
+    let parsed = Json::parse(&json).expect("merged trace parses");
+    let arr = parsed.as_array().expect("merged trace is an event array");
+    let lane = |pid: &str| {
+        arr.iter().filter(|e| e.get("pid").and_then(Json::as_str) == Some(pid)).count()
+    };
+    let (worker_spans, ps_spans) = (lane("replica:0"), lane("ps"));
+    std::fs::write("dist_trace.json", &json).expect("write dist_trace.json");
+    println!(
+        "trace: {} spans ({worker_spans} on replica:0, {ps_spans} on ps) -> dist_trace.json",
+        arr.len(),
+    );
+    if worker_spans == 0 || ps_spans == 0 {
+        eprintln!("merged trace is missing a worker or ps lane");
+        std::process::exit(1);
+    }
+    Ok(())
+}
+
 fn main() -> rustflow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let replicas: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(2);
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60);
+    if args.iter().any(|a| a == "trace") {
+        return trace_smoke(replicas, steps.min(8));
+    }
 
     let mut ok = true;
     for (mode, compress) in [("sync", false), ("async", true)] {

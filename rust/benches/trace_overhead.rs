@@ -1,0 +1,105 @@
+//! Tracing overhead bench (§9.2 EEG): steps/sec through the same fused
+//! matmul/bias/tanh stack with `SessionOptions::trace` off vs on, plus a
+//! many-tiny-ops stack where per-span recording cost is most visible.
+//!
+//! Acceptance bar: the traced run on real kernels stays within 25% of the
+//! untraced run. The untraced path is a branch on an `Option` per node,
+//! so its cost is bounded above by the full trace-on overhead — keeping
+//! that small certifies the production (trace-off) path is unaffected.
+//!
+//!     cargo bench --bench trace_overhead
+//!
+//! Writes BENCH_trace_overhead.json (path from $BENCH_TRACE_OVERHEAD_JSON,
+//! set by scripts/bench.sh).
+
+use rustflow::util::json::Json;
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
+use std::time::Duration;
+
+fn filled(r: usize, c: usize, seed: u32) -> Tensor {
+    let v: Vec<f32> = (0..r * c)
+        .map(|i| {
+            let h = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+            ((h % 1000) as f32) * 0.002 - 1.0
+        })
+        .collect();
+    Tensor::from_f32(vec![r, c], v).unwrap()
+}
+
+/// Steps/sec (and the fetched output for bit-identity checks) through a
+/// `depth`-layer matmul/bias/tanh stack at width `dim`.
+fn stack_steps_per_sec(dim: usize, depth: u32, trace: bool) -> (f64, Tensor) {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+    let mut h = x;
+    for l in 0..depth {
+        let w = b.constant(filled(dim, dim, 100 + l));
+        let bias = b.constant(filled(1, dim, 200 + l));
+        let mm = b.matmul(h, w);
+        let s = b.add(mm, bias);
+        h = b.tanh(s);
+    }
+    let fetch = format!("{}:0", b.graph.node(h.node).name);
+    let sess = Session::new(b.into_graph(), SessionOptions { trace, ..Default::default() });
+    let feed = filled(dim, dim, 7);
+    let run = || sess.run(&[("x", feed.clone())], &[&fetch], &[]).unwrap().remove(0);
+    let out = run(); // warm: compile + fill arena pool
+    let s = stats::bench_for(3, Duration::from_secs(2), || {
+        run();
+    });
+    if trace {
+        let t = sess.last_trace().expect("tracing enabled");
+        assert!(!t.events().is_empty(), "traced run recorded no spans");
+    }
+    (1.0 / s.mean.as_secs_f64(), out)
+}
+
+fn main() {
+    // Real kernels: 6 layers of 256x256 matmul/bias/tanh. Span recording
+    // is amortized over ~180 MFLOP/step, so this is the production shape.
+    let (off, out_off) = stack_steps_per_sec(256, 6, false);
+    let (on, out_on) = stack_steps_per_sec(256, 6, true);
+    assert_eq!(
+        out_off.as_f32().unwrap(),
+        out_on.as_f32().unwrap(),
+        "tracing must not change results"
+    );
+    let overhead = off / on - 1.0;
+    println!(
+        "trace_overhead/stack 6x256: {off:.1} steps/s off, {on:.1} steps/s on \
+         ({:.1}% overhead)",
+        overhead * 100.0
+    );
+
+    // Worst case: 48 layers of 16x16 — hundreds of tiny kernels per step,
+    // so the per-span clock reads dominate. Reported, not asserted.
+    let (tiny_off, _) = stack_steps_per_sec(16, 48, false);
+    let (tiny_on, _) = stack_steps_per_sec(16, 48, true);
+    let tiny_overhead = tiny_off / tiny_on - 1.0;
+    println!(
+        "trace_overhead/tiny 48x16: {tiny_off:.1} steps/s off, {tiny_on:.1} steps/s on \
+         ({:.1}% overhead)",
+        tiny_overhead * 100.0
+    );
+
+    assert!(
+        overhead <= 0.25,
+        "tracing overhead on real kernels must stay within 25%, got {:.1}%",
+        overhead * 100.0
+    );
+
+    let out = Json::obj()
+        .set("bench", "trace_overhead")
+        .set("stack_steps_per_sec_off", off)
+        .set("stack_steps_per_sec_on", on)
+        .set("stack_overhead", overhead)
+        .set("tiny_steps_per_sec_off", tiny_off)
+        .set("tiny_steps_per_sec_on", tiny_on)
+        .set("tiny_overhead", tiny_overhead);
+    let path = std::env::var("BENCH_TRACE_OVERHEAD_JSON")
+        .unwrap_or_else(|_| "BENCH_trace_overhead.json".to_string());
+    std::fs::write(&path, out.render() + "\n").expect("write bench json");
+    println!("wrote {path}");
+    println!("trace_overhead: OK ({:.1}% on real kernels)", overhead * 100.0);
+}

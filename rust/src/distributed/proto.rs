@@ -43,6 +43,43 @@ pub const MSG_PS_PUSH_REPLY: u8 = 18;
 pub const MSG_PS_STATS: u8 = 19;
 pub const MSG_PS_STATS_REPLY: u8 = 20;
 
+// Distributed EEG (§9.2): pull-and-drain one process's trace fragment.
+// Served by both the parameter server and the worker protocol; the
+// master merges fragments (clock-aligned via the HELLO handshake's
+// timestamp exchange) into one cross-process chrome://tracing timeline.
+pub const MSG_TRACE_PULL: u8 = 21;
+pub const MSG_TRACE_REPLY: u8 = 22;
+
+/// Human-readable message name for wire metrics
+/// (`wire/PS_PUSH/bytes_in` beats `wire/MSG_17/bytes_in` in a dump).
+pub fn msg_name(t: u8) -> String {
+    match t {
+        MSG_REGISTER_GRAPH => "REGISTER_GRAPH".into(),
+        MSG_REGISTER_REPLY => "REGISTER_REPLY".into(),
+        MSG_RUN_PARTITION => "RUN_PARTITION".into(),
+        MSG_RUN_REPLY => "RUN_REPLY".into(),
+        MSG_RECV_TENSOR => "RECV_TENSOR".into(),
+        MSG_TENSOR_REPLY => "TENSOR_REPLY".into(),
+        MSG_HEALTH => "HEALTH".into(),
+        MSG_HEALTH_OK => "HEALTH_OK".into(),
+        MSG_SHUTDOWN => "SHUTDOWN".into(),
+        MSG_RESET => "RESET".into(),
+        MSG_PS_HELLO => "PS_HELLO".into(),
+        MSG_PS_HELLO_REPLY => "PS_HELLO_REPLY".into(),
+        MSG_PS_INIT => "PS_INIT".into(),
+        MSG_PS_INIT_REPLY => "PS_INIT_REPLY".into(),
+        MSG_PS_PULL => "PS_PULL".into(),
+        MSG_PS_PULL_REPLY => "PS_PULL_REPLY".into(),
+        MSG_PS_PUSH => "PS_PUSH".into(),
+        MSG_PS_PUSH_REPLY => "PS_PUSH_REPLY".into(),
+        MSG_PS_STATS => "PS_STATS".into(),
+        MSG_PS_STATS_REPLY => "PS_STATS_REPLY".into(),
+        MSG_TRACE_PULL => "TRACE_PULL".into(),
+        MSG_TRACE_REPLY => "TRACE_REPLY".into(),
+        other => crate::wire::raw_msg_name(other),
+    }
+}
+
 /// Channel capability flag: §5.5 lossy f32→bf16 truncation on this
 /// channel's tensor payloads. A client *requests* it in HELLO; the server
 /// *grants* the intersection in the reply, and only granted capabilities
@@ -147,28 +184,42 @@ impl TensorReply {
 
 // ---- parameter-server payloads ---------------------------------------------
 
-/// HELLO: the capability flags a replica requests for this channel.
+/// HELLO: the capability flags a replica requests for this channel, plus
+/// the client's trace-clock reading (µs since its process epoch,
+/// [`crate::tracing_tools::process_now_us`]) taken just before send —
+/// one half of the NTP-style clock-offset exchange that lets the master
+/// align trace fragments from different processes.
 pub struct PsHello {
     pub flags: u32,
+    pub time_us: u64,
 }
 
 impl PsHello {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
         put_u32(&mut out, self.flags);
+        put_u64(&mut out, self.time_us);
         out
     }
 
     pub fn decode(buf: &[u8]) -> Result<PsHello> {
         let mut pos = 0;
-        Ok(PsHello { flags: get_u32(buf, &mut pos)? })
+        let flags = get_u32(buf, &mut pos)?;
+        let time_us = get_u64(buf, &mut pos)?;
+        Ok(PsHello { flags, time_us })
     }
 }
 
-/// HELLO reply: the granted subset of the requested flags.
+/// HELLO reply: the granted subset of the requested flags, plus the
+/// server's trace-clock reading taken while answering. The client
+/// estimates the server-clock offset as
+/// `time_us - (t_send + rtt/2)` — standard one-shot NTP; accuracy is
+/// bounded by rtt asymmetry, which on the LAN links this targets is tens
+/// of µs.
 pub struct PsHelloReply {
     pub status: Result<()>,
     pub flags: u32,
+    pub time_us: u64,
 }
 
 impl PsHelloReply {
@@ -176,6 +227,7 @@ impl PsHelloReply {
         let mut out = Vec::new();
         encode_status(&mut out, &self.status);
         put_u32(&mut out, self.flags);
+        put_u64(&mut out, self.time_us);
         out
     }
 
@@ -183,7 +235,8 @@ impl PsHelloReply {
         let mut pos = 0;
         let status = decode_status(buf, &mut pos)?;
         let flags = get_u32(buf, &mut pos)?;
-        Ok(PsHelloReply { status, flags })
+        let time_us = get_u64(buf, &mut pos)?;
+        Ok(PsHelloReply { status, flags, time_us })
     }
 }
 
@@ -306,6 +359,68 @@ impl PsPullReply {
     }
 }
 
+// ---- trace fragments (§9.2 distributed EEG) --------------------------------
+
+/// `MSG_TRACE_REPLY`: a drained [`TraceFragment`] from the serving
+/// process. The request (`MSG_TRACE_PULL`) carries an empty payload.
+/// Layout: status, process name, dropped count, u32 event count, then
+/// per event name/op/device strings + thread/start_us/dur_us/step u64s.
+pub struct TraceReply {
+    pub status: Result<()>,
+    pub fragment: crate::tracing_tools::TraceFragment,
+}
+
+impl TraceReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        encode_status(&mut out, &self.status);
+        put_str(&mut out, &self.fragment.process);
+        put_u64(&mut out, self.fragment.dropped);
+        put_u32(&mut out, self.fragment.events.len() as u32);
+        for ev in &self.fragment.events {
+            put_str(&mut out, &ev.name);
+            put_str(&mut out, &ev.op);
+            put_str(&mut out, &ev.device);
+            put_u64(&mut out, ev.thread);
+            put_u64(&mut out, ev.start_us);
+            put_u64(&mut out, ev.dur_us);
+            put_u64(&mut out, ev.step);
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<TraceReply> {
+        let mut pos = 0;
+        let status = decode_status(buf, &mut pos)?;
+        let process = get_str(buf, &mut pos)?;
+        let dropped = get_u64(buf, &mut pos)?;
+        let n = get_u32(buf, &mut pos)? as usize;
+        let mut events = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            let name = get_str(buf, &mut pos)?;
+            let op = get_str(buf, &mut pos)?;
+            let device = get_str(buf, &mut pos)?;
+            let thread = get_u64(buf, &mut pos)?;
+            let start_us = get_u64(buf, &mut pos)?;
+            let dur_us = get_u64(buf, &mut pos)?;
+            let step = get_u64(buf, &mut pos)?;
+            events.push(crate::tracing_tools::Event {
+                name,
+                op,
+                device,
+                thread,
+                start_us,
+                dur_us,
+                step,
+            });
+        }
+        Ok(TraceReply {
+            status,
+            fragment: crate::tracing_tools::TraceFragment { process, events, dropped },
+        })
+    }
+}
+
 /// Init reply: `seeded` is true for the replica whose initial values won
 /// the first-wins race; later initializers get `false` and must pull.
 pub struct PsInitReply {
@@ -420,10 +535,15 @@ mod tests {
 
     #[test]
     fn ps_replies_roundtrip() {
-        let h = PsHelloReply { status: Ok(()), flags: crate::distributed::proto::CHANNEL_BF16 };
+        let h = PsHelloReply { status: Ok(()), flags: CHANNEL_BF16, time_us: 123_456 };
         let dec = PsHelloReply::decode(&h.encode()).unwrap();
         assert!(dec.status.is_ok());
         assert_eq!(dec.flags, CHANNEL_BF16);
+        assert_eq!(dec.time_us, 123_456);
+
+        let hello = PsHello { flags: CHANNEL_BF16, time_us: 77 };
+        let dec = PsHello::decode(&hello.encode()).unwrap();
+        assert_eq!((dec.flags, dec.time_us), (CHANNEL_BF16, 77));
 
         let p = PsPushReply { status: Err(Status::failed_precondition("stale push")), version: 9 };
         let dec = PsPushReply::decode(&p.encode()).unwrap();
@@ -522,7 +642,75 @@ mod tests {
             let _ = PsHelloReply::decode(&buf);
             let _ = PsInitReply::decode(&buf);
             let _ = PsHello::decode(&buf);
+            let _ = TraceReply::decode(&buf);
         }
+    }
+
+    #[test]
+    fn trace_reply_roundtrip() {
+        let ev = |name: &str, start: u64| crate::tracing_tools::Event {
+            name: name.to_string(),
+            op: "PsApply".to_string(),
+            device: "/ps".to_string(),
+            thread: 2,
+            start_us: start,
+            dur_us: 15,
+            step: 6,
+        };
+        let msg = TraceReply {
+            status: Ok(()),
+            fragment: crate::tracing_tools::TraceFragment {
+                process: "ps".to_string(),
+                events: vec![ev("recv;r0", 100), ev("apply", 250)],
+                dropped: 3,
+            },
+        };
+        let dec = TraceReply::decode(&msg.encode()).unwrap();
+        assert!(dec.status.is_ok());
+        assert_eq!(dec.fragment, msg.fragment);
+    }
+
+    /// Hostile/truncated `MSG_TRACE` payloads error instead of panic:
+    /// every truncation of a valid reply, an absurd event count, and a
+    /// huge declared string length.
+    #[test]
+    fn trace_reply_hostile_frames() {
+        let msg = TraceReply {
+            status: Ok(()),
+            fragment: crate::tracing_tools::TraceFragment {
+                process: "worker:0".to_string(),
+                events: vec![crate::tracing_tools::Event {
+                    name: "MatMul_1".to_string(),
+                    op: "MatMul".to_string(),
+                    device: "/device:cpu:0".to_string(),
+                    thread: 1,
+                    start_us: 10,
+                    dur_us: 20,
+                    step: 1,
+                }],
+                dropped: 0,
+            },
+        };
+        let full = msg.encode();
+        for cut in 0..full.len() {
+            assert!(TraceReply::decode(&full[..cut]).is_err(), "cut at {cut} decoded");
+        }
+        // Event count claims 4 billion events on a tiny payload.
+        let mut buf = Vec::new();
+        crate::wire::encode_status(&mut buf, &Ok(()));
+        crate::wire::put_str(&mut buf, "ps");
+        crate::wire::put_u64(&mut buf, 0);
+        crate::wire::put_u32(&mut buf, u32::MAX);
+        assert!(TraceReply::decode(&buf).is_err());
+        // String length near u32::MAX inside an event.
+        let mut buf = Vec::new();
+        crate::wire::encode_status(&mut buf, &Ok(()));
+        crate::wire::put_str(&mut buf, "ps");
+        crate::wire::put_u64(&mut buf, 0);
+        crate::wire::put_u32(&mut buf, 1);
+        crate::wire::put_u32(&mut buf, u32::MAX - 1); // event name "length"
+        buf.extend_from_slice(&[0u8; 64]);
+        assert!(TraceReply::decode(&buf).is_err());
     }
 
     #[test]

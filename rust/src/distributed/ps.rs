@@ -33,21 +33,32 @@
 //! ([`GradEntry::Sparse`]); the server scatters them (SGD only — slot
 //! optimizers would need dense slot reads and are rejected as
 //! `Unimplemented`).
+//!
+//! Observability (§9.2): every server owns a [`MetricsRegistry`] — wire
+//! frame/byte counters per message type plus push/pull totals — dumped
+//! whole by `MSG_PS_STATS`. With [`PsOptions::trace`] the server also
+//! records recv → barrier-wait → apply spans (tagged with the push's
+//! step) into a [`TraceCollector`] that clients drain over
+//! `MSG_TRACE_PULL`; the HELLO exchange carries both sides' trace clocks
+//! so the client can estimate the server's clock offset and merge the
+//! fragment onto its own timeline.
 
 use super::proto::{
     self, GradEntry, GradPush, PsHello, PsHelloReply, PsInitReply, PsPullReply, PsPushReply,
-    CHANNEL_BF16,
+    TraceReply, CHANNEL_BF16,
 };
 use crate::compress;
 use crate::error::{Code, Result, Status};
 use crate::kernels::math::binary_elementwise;
+use crate::obs::{Counter, MetricsRegistry};
 use crate::optim::{Optimizer, SlotMap};
 use crate::rendezvous::{recv_blocking_timeout, LocalRendezvous, Rendezvous};
 use crate::tensor::{DType, Tensor, TensorData};
-use crate::wire;
+use crate::tracing_tools::{process_now_us, TraceCollector, TraceFragment};
+use crate::wire::{self, WireMetrics};
 use std::collections::{BTreeMap, BTreeSet, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
@@ -66,6 +77,8 @@ pub struct PsOptions {
     /// missing replicas before declaring the group failed (a replica died
     /// mid-step; every blocked push then errors out instead of hanging).
     pub sync_timeout: Duration,
+    /// Record recv/barrier-wait/apply spans, served over `MSG_TRACE_PULL`.
+    pub trace: bool,
 }
 
 impl Default for PsOptions {
@@ -75,6 +88,7 @@ impl Default for PsOptions {
             sync_replicas: None,
             allow_compression: true,
             sync_timeout: Duration::from_secs(120),
+            trace: false,
         }
     }
 }
@@ -103,10 +117,15 @@ pub struct ParamServer {
     /// `psgrad;step:<s>;replica:<r>` until the applier collects them.
     barrier: Arc<LocalRendezvous>,
     addr: Mutex<Option<SocketAddr>>,
-    bytes_in: AtomicU64,
-    bytes_out: AtomicU64,
-    pushes: AtomicU64,
-    pulls: AtomicU64,
+    /// Per-server metrics (not process-global: two shards in one test
+    /// process must not share counters). Wire frame/byte counters live
+    /// here too, via `wire_metrics`.
+    registry: Arc<MetricsRegistry>,
+    wire_metrics: Arc<WireMetrics>,
+    pushes: Arc<Counter>,
+    pulls: Arc<Counter>,
+    /// Present when [`PsOptions::trace`]: spans drained by `MSG_TRACE_PULL`.
+    trace: Option<Arc<TraceCollector>>,
     shutdown: AtomicBool,
 }
 
@@ -116,6 +135,11 @@ fn barrier_key(step: u64, replica: u32) -> String {
 
 impl ParamServer {
     pub fn new(options: PsOptions) -> Arc<ParamServer> {
+        let registry = MetricsRegistry::new();
+        let wire_metrics = WireMetrics::new(&registry, "wire", proto::msg_name);
+        let pushes = registry.counter("ps/pushes");
+        let pulls = registry.counter("ps/pulls");
+        let trace = options.trace.then(|| TraceCollector::for_step("ps", 0));
         Arc::new(ParamServer {
             options,
             state: Mutex::new(ShardState {
@@ -128,10 +152,11 @@ impl ParamServer {
             applied: Condvar::new(),
             barrier: LocalRendezvous::new(),
             addr: Mutex::new(None),
-            bytes_in: AtomicU64::new(0),
-            bytes_out: AtomicU64::new(0),
-            pushes: AtomicU64::new(0),
-            pulls: AtomicU64::new(0),
+            registry,
+            wire_metrics,
+            pushes,
+            pulls,
+            trace,
             shutdown: AtomicBool::new(false),
         })
     }
@@ -185,7 +210,13 @@ impl ParamServer {
     /// Total bytes read + written across all connections (frame headers
     /// included) — the bench's bytes-on-wire measure.
     pub fn wire_bytes(&self) -> u64 {
-        self.bytes_in.load(Ordering::SeqCst) + self.bytes_out.load(Ordering::SeqCst)
+        self.wire_metrics.total_bytes()
+    }
+
+    /// The server's metrics registry — what `MSG_PS_STATS` dumps under
+    /// `"metrics"`.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
     }
 
     /// Current parameter version (test support).
@@ -203,24 +234,33 @@ impl ParamServer {
         // Per-channel capabilities, set by HELLO; zero until negotiated.
         let mut negotiated = 0u32;
         loop {
-            let (msg_type, payload) = match wire::read_frame(&mut stream) {
+            let (msg_type, payload) = match self.wire_metrics.read_frame(&mut stream) {
                 Ok(f) => f,
                 Err(_) => return, // client hung up (or sent garbage framing)
             };
-            self.bytes_in.fetch_add(payload.len() as u64 + 5, Ordering::SeqCst);
             let (reply_type, reply) = match msg_type {
                 proto::MSG_PS_HELLO => {
                     let granted = match PsHello::decode(&payload) {
                         Ok(h) if self.options.allow_compression => h.flags & CHANNEL_BF16,
                         Ok(_) => 0,
                         Err(e) => {
-                            let r = PsHelloReply { status: Err(e), flags: 0 };
+                            let r = PsHelloReply {
+                                status: Err(e),
+                                flags: 0,
+                                time_us: process_now_us(),
+                            };
                             let _ = self.reply(&mut stream, proto::MSG_PS_HELLO_REPLY, &r.encode());
                             continue;
                         }
                     };
                     negotiated = granted;
-                    let r = PsHelloReply { status: Ok(()), flags: granted };
+                    // `time_us` is our trace clock at (roughly) the moment
+                    // the client's HELLO arrived — its half-RTT anchor.
+                    let r = PsHelloReply {
+                        status: Ok(()),
+                        flags: granted,
+                        time_us: process_now_us(),
+                    };
                     (proto::MSG_PS_HELLO_REPLY, r.encode())
                 }
                 proto::MSG_PS_INIT => {
@@ -231,11 +271,11 @@ impl ParamServer {
                     (proto::MSG_PS_INIT_REPLY, r.encode())
                 }
                 proto::MSG_PS_PULL => {
-                    self.pulls.fetch_add(1, Ordering::SeqCst);
+                    self.pulls.inc();
                     (proto::MSG_PS_PULL_REPLY, self.handle_pull(negotiated).encode())
                 }
                 proto::MSG_PS_PUSH => {
-                    self.pushes.fetch_add(1, Ordering::SeqCst);
+                    self.pushes.inc();
                     let r = match GradPush::decode(&payload) {
                         Ok(push) => self.handle_push(push),
                         Err(e) => PsPushReply { status: Err(e), version: 0 },
@@ -243,6 +283,18 @@ impl ParamServer {
                     (proto::MSG_PS_PUSH_REPLY, r.encode())
                 }
                 proto::MSG_PS_STATS => (proto::MSG_PS_STATS_REPLY, self.stats_json().into_bytes()),
+                proto::MSG_TRACE_PULL => {
+                    let fragment = match &self.trace {
+                        Some(t) => t.take_fragment(),
+                        None => TraceFragment {
+                            process: "ps".to_string(),
+                            events: Vec::new(),
+                            dropped: 0,
+                        },
+                    };
+                    let r = TraceReply { status: Ok(()), fragment };
+                    (proto::MSG_TRACE_REPLY, r.encode())
+                }
                 _ => return, // unknown type on a persistent channel: drop it
             };
             if self.reply(&mut stream, reply_type, &reply).is_err() {
@@ -252,10 +304,12 @@ impl ParamServer {
     }
 
     fn reply(&self, stream: &mut TcpStream, msg_type: u8, payload: &[u8]) -> Result<()> {
-        self.bytes_out.fetch_add(payload.len() as u64 + 5, Ordering::SeqCst);
-        wire::write_frame(stream, msg_type, payload)
+        self.wire_metrics.write_frame(stream, msg_type, payload)
     }
 
+    /// The legacy top-level keys (kept for callers that scrape them) plus
+    /// the full registry dump under `"metrics"` — one uniform surface for
+    /// shard state, push/pull totals, and per-message wire counters.
     fn stats_json(&self) -> String {
         let st = self.state.lock().unwrap();
         crate::util::json::Json::obj()
@@ -263,10 +317,11 @@ impl ParamServer {
             .set("num_params", st.params.len() as f64)
             .set("initialized", st.initialized)
             .set("sync_replicas", self.options.sync_replicas.unwrap_or(0) as f64)
-            .set("pushes", self.pushes.load(Ordering::SeqCst) as f64)
-            .set("pulls", self.pulls.load(Ordering::SeqCst) as f64)
-            .set("bytes_in", self.bytes_in.load(Ordering::SeqCst) as f64)
-            .set("bytes_out", self.bytes_out.load(Ordering::SeqCst) as f64)
+            .set("pushes", self.pushes.get() as f64)
+            .set("pulls", self.pulls.get() as f64)
+            .set("bytes_in", self.wire_metrics.bytes_in() as f64)
+            .set("bytes_out", self.wire_metrics.bytes_out() as f64)
+            .set("metrics", self.registry.to_json())
             .render()
     }
 
@@ -325,12 +380,24 @@ impl ParamServer {
     }
 
     fn handle_push(&self, mut push: GradPush) -> PsPushReply {
+        // The "recv" phase of the EEG trace: widening the wire payload
+        // back to f32 before any state is touched.
+        let recv =
+            self.trace.as_ref().map(|t| t.begin_step("ps/recv", "PsRecv", "ps", push.step));
         // Decompress by dtype before validation: the codec self-describes,
         // so compressed entries from any client are transparently widened.
+        let mut decompress = Ok(());
         for (_, entry) in push.grads.iter_mut() {
-            if let Err(e) = decompress_entry(entry) {
-                return PsPushReply { status: Err(e), version: 0 };
+            decompress = decompress_entry(entry);
+            if decompress.is_err() {
+                break;
             }
+        }
+        if let Some(s) = recv {
+            s.end();
+        }
+        if let Err(e) = decompress {
+            return PsPushReply { status: Err(e), version: 0 };
         }
         match self.options.sync_replicas {
             None => self.push_async(push),
@@ -350,7 +417,13 @@ impl ParamServer {
         if let Err(e) = validate_push(&st, &self.options.opt, &push) {
             return PsPushReply { status: Err(e), version: st.version };
         }
-        if let Err(e) = apply_entries(&mut st, &self.options.opt, &push.grads, 1.0) {
+        let span =
+            self.trace.as_ref().map(|t| t.begin_step("ps/apply", "PsApply", "ps", push.step));
+        let applied = apply_entries(&mut st, &self.options.opt, &push.grads, 1.0);
+        if let Some(s) = span {
+            s.end();
+        }
+        if let Err(e) = applied {
             return PsPushReply { status: Err(e), version: st.version };
         }
         st.version += 1;
@@ -429,6 +502,21 @@ impl ParamServer {
             return PsPushReply { status: Err(status), version: st.version };
         }
         // Block until the applier finishes this step (or the group fails).
+        // The wait is the interesting span: how long this replica sat at
+        // the barrier for its peers is exactly what the EEG shows.
+        let wait = self
+            .trace
+            .as_ref()
+            .map(|t| t.begin_step("ps/barrier_wait", "PsBarrierWait", "ps", step));
+        let reply = self.wait_for_applied(step);
+        if let Some(s) = wait {
+            s.end();
+        }
+        reply
+    }
+
+    /// Park until `step` has been applied, the group failed, or shutdown.
+    fn wait_for_applied(&self, step: u64) -> PsPushReply {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(f) = &st.failed {
@@ -490,15 +578,24 @@ impl ParamServer {
                     }
                 }
             }
+            let span =
+                self.trace.as_ref().map(|t| t.begin_step("ps/apply", "PsApply", "ps", step));
             let mut st = self.state.lock().unwrap();
             let scale = 1.0 / n as f32;
-            if let Err(e) = apply_sync_step(&mut st, &self.options.opt, &pushes, scale) {
-                drop(st);
+            let applied = apply_sync_step(&mut st, &self.options.opt, &pushes, scale);
+            if applied.is_ok() {
+                // Bump under the same lock as the apply: a pull must never
+                // observe new parameters at the old version.
+                st.version = step + 1;
+            }
+            drop(st);
+            if let Some(s) = span {
+                s.end();
+            }
+            if let Err(e) = applied {
                 self.fail_group(Status::internal(format!("sync step {step} apply failed: {e}")));
                 return;
             }
-            st.version = step + 1;
-            drop(st);
             self.applied.notify_all();
         }
     }
@@ -744,30 +841,51 @@ fn apply_sparse_sgd(
 pub struct PsClient {
     stream: Mutex<TcpStream>,
     negotiated: u32,
+    /// Estimated `server_trace_clock − our_trace_clock` in µs (positive:
+    /// the server's clock reads ahead), from the HELLO exchange.
+    clock_offset_us: i64,
 }
 
 impl PsClient {
     /// Connect and negotiate capabilities. `want_compression` requests
     /// [`CHANNEL_BF16`]; the server grants or refuses, and only granted
-    /// capabilities are used afterwards.
+    /// capabilities are used afterwards. The exchange doubles as an
+    /// NTP-style clock probe: we stamp the HELLO with our trace clock,
+    /// the server stamps the reply with its own, and assuming the
+    /// symmetric half of the measured RTT puts the server's stamp at
+    /// `t_send + rtt/2` on our clock.
     pub fn connect(addr: &str, want_compression: bool) -> Result<PsClient> {
         let mut stream = TcpStream::connect(addr)
             .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
         stream.set_nodelay(true).ok();
-        let hello = PsHello { flags: if want_compression { CHANNEL_BF16 } else { 0 } };
+        let t_send = process_now_us();
+        let hello = PsHello {
+            flags: if want_compression { CHANNEL_BF16 } else { 0 },
+            time_us: t_send,
+        };
         wire::write_frame(&mut stream, proto::MSG_PS_HELLO, &hello.encode())?;
         let (t, payload) = wire::read_frame(&mut stream)?;
+        let t_recv = process_now_us();
         if t != proto::MSG_PS_HELLO_REPLY {
             return Err(Status::internal(format!("unexpected reply type {t} to HELLO")));
         }
         let reply = PsHelloReply::decode(&payload)?;
         reply.status?;
-        Ok(PsClient { stream: Mutex::new(stream), negotiated: reply.flags })
+        let rtt = t_recv.saturating_sub(t_send);
+        let clock_offset_us = reply.time_us as i64 - (t_send + rtt / 2) as i64;
+        Ok(PsClient { stream: Mutex::new(stream), negotiated: reply.flags, clock_offset_us })
     }
 
     /// Whether this channel negotiated bf16 compression.
     pub fn compressed(&self) -> bool {
         self.negotiated & CHANNEL_BF16 != 0
+    }
+
+    /// The server's estimated clock offset relative to ours, in µs — the
+    /// value to pair with this server's fragments in
+    /// [`crate::tracing_tools::merge_fragments`].
+    pub fn clock_offset_us(&self) -> i64 {
+        self.clock_offset_us
     }
 
     fn call(&self, msg_type: u8, payload: &[u8], want_reply: u8) -> Result<Vec<u8>> {
@@ -848,6 +966,15 @@ impl PsClient {
     pub fn stats(&self) -> Result<String> {
         let reply = self.call(proto::MSG_PS_STATS, b"", proto::MSG_PS_STATS_REPLY)?;
         Ok(String::from_utf8_lossy(&reply).to_string())
+    }
+
+    /// Drain the server's trace collector. Each event ships exactly once;
+    /// a server that isn't tracing returns an empty fragment.
+    pub fn trace_pull(&self) -> Result<TraceFragment> {
+        let reply = self.call(proto::MSG_TRACE_PULL, b"", proto::MSG_TRACE_REPLY)?;
+        let r = TraceReply::decode(&reply)?;
+        r.status?;
+        Ok(r.fragment)
     }
 }
 
@@ -1039,6 +1166,46 @@ mod tests {
         zipped.push(0, 1, vec![("w".into(), GradEntry::Dense(g))]).unwrap();
         let (_, p3) = plain.pull().unwrap();
         assert_eq!(p3[0].1.as_f32().unwrap(), &[1.25, -0.75]);
+        ps.shutdown();
+    }
+
+    #[test]
+    fn tracing_and_unified_stats() {
+        use crate::util::json::Json;
+        let ps = ParamServer::new(PsOptions {
+            opt: Optimizer::sgd(0.5),
+            trace: true,
+            ..Default::default()
+        });
+        let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+        let c = PsClient::connect(&addr, false).unwrap();
+        // Loopback offset must be tiny (both clocks are the same epoch).
+        assert!(c.clock_offset_us().abs() < 1_000_000, "offset {}", c.clock_offset_us());
+        c.init(&[("w".into(), Tensor::from_f32(vec![2], vec![1.0, 2.0]).unwrap())]).unwrap();
+        let g = Tensor::from_f32(vec![2], vec![1.0, -1.0]).unwrap();
+        c.push(0, 0, vec![("w".into(), GradEntry::Dense(g))]).unwrap();
+        let _ = c.pull().unwrap();
+
+        // MSG_PS_STATS serves the legacy keys AND the registry dump, with
+        // per-message wire counters in it.
+        let stats = c.stats().unwrap();
+        let j = Json::parse(&stats).unwrap();
+        assert_eq!(j.get("pushes").and_then(Json::as_f64), Some(1.0));
+        let m = j.get("metrics").expect("metrics dump present");
+        assert_eq!(m.get("ps/pushes").and_then(Json::as_i64), Some(1));
+        assert_eq!(m.get("wire/PS_PUSH/frames_in").and_then(Json::as_i64), Some(1));
+        assert!(m.get("wire/bytes_in_total").and_then(Json::as_i64).unwrap() > 0);
+        assert_eq!(ps.metrics().counter_value("ps/pulls"), Some(1));
+        assert!(ps.wire_bytes() > 0);
+
+        // The trace pull drains recv + apply spans stamped with step 0.
+        let frag = c.trace_pull().unwrap();
+        assert_eq!(frag.process, "ps");
+        assert!(frag.events.iter().any(|e| e.name == "ps/recv"));
+        assert!(frag.events.iter().any(|e| e.name == "ps/apply"));
+        assert!(frag.events.iter().all(|e| e.step == 0));
+        // Drain semantics: a second pull is empty.
+        assert!(c.trace_pull().unwrap().events.is_empty());
         ps.shutdown();
     }
 

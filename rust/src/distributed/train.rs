@@ -33,6 +33,8 @@ use crate::ops::builder::GraphBuilder;
 use crate::replicate::tower_gradients;
 use crate::session::{Session, SessionOptions};
 use crate::tensor::{DType, Tensor};
+use crate::tracing_tools::{merge_fragments, TraceCollector, TraceFragment};
+use std::sync::Arc;
 
 /// Replica-side knobs.
 #[derive(Debug, Clone)]
@@ -82,6 +84,10 @@ pub struct DistTrainer {
     shard_version: Vec<u64>,
     options: DistTrainerOptions,
     steps: u64,
+    /// Present when the session traces: accumulates pull/compute/push
+    /// phase spans plus the session's per-kernel spans, re-tagged with
+    /// the distributed step number.
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl DistTrainer {
@@ -131,6 +137,11 @@ impl DistTrainer {
         let init_ops: Vec<String> =
             b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
 
+        // The session's trace flag drives replica tracing too: one knob
+        // turns on the whole distributed EEG for this replica.
+        let trace = session_options
+            .trace
+            .then(|| TraceCollector::for_step(&format!("replica:{replica}"), 0));
         let sess = Session::new(b.into_graph(), session_options);
         let clients = ps_addrs
             .iter()
@@ -151,6 +162,7 @@ impl DistTrainer {
             shard_version,
             options,
             steps: 0,
+            trace,
         })
     }
 
@@ -193,11 +205,39 @@ impl DistTrainer {
     /// (computed against the parameters just pulled). In synchronous mode
     /// this blocks until every replica's push for the step is applied.
     pub fn step(&mut self, feeds: &[(&str, Tensor)]) -> Result<f32> {
-        self.pull()?;
+        let step_no = self.steps;
+        let me = format!("replica:{}", self.replica);
+        let span =
+            self.trace.as_ref().map(|t| t.begin_step("replica/pull", "DistPull", &me, step_no));
+        let pulled = self.pull();
+        if let Some(s) = span {
+            s.end();
+        }
+        pulled?;
         let mut fetches: Vec<&str> = Vec::with_capacity(1 + self.grad_fetches.len());
         fetches.push(self.loss_fetch.as_str());
         fetches.extend(self.grad_fetches.iter().map(String::as_str));
-        let out = self.sess.run(feeds, &fetches, &[])?;
+        let span = self
+            .trace
+            .as_ref()
+            .map(|t| t.begin_step("replica/compute", "DistCompute", &me, step_no));
+        let out = self.sess.run(feeds, &fetches, &[]);
+        if let Some(s) = span {
+            s.end();
+        }
+        let out = out?;
+        // Pick up the session's per-kernel spans for the compute run,
+        // re-tagged with the distributed step number (the session counts
+        // its own runs — pull-assign runs included — separately).
+        if let Some(acc) = &self.trace {
+            if let Some(st) = self.sess.last_trace() {
+                let mut evs = st.drain();
+                for e in &mut evs {
+                    e.step = step_no;
+                }
+                acc.absorb(evs);
+            }
+        }
         let loss = out[0].scalar_value_f32()?;
 
         let mut per_shard: Vec<Vec<(String, GradEntry)>> =
@@ -217,9 +257,19 @@ impl DistTrainer {
         }
         // Every shard gets a push — empty ones included — so shard
         // versions advance in lockstep.
+        let span =
+            self.trace.as_ref().map(|t| t.begin_step("replica/push", "DistPush", &me, step_no));
+        let mut pushed = Ok(());
         for (s, grads) in per_shard.into_iter().enumerate() {
-            self.clients[s].push(self.shard_version[s], self.replica, grads)?;
+            pushed = self.clients[s].push(self.shard_version[s], self.replica, grads).map(|_| ());
+            if pushed.is_err() {
+                break;
+            }
         }
+        if let Some(s) = span {
+            s.end();
+        }
+        pushed?;
         self.steps += 1;
         Ok(loss)
     }
@@ -248,6 +298,39 @@ impl DistTrainer {
     /// Per-shard stats JSON from every server.
     pub fn shard_stats(&self) -> Result<Vec<String>> {
         self.clients.iter().map(PsClient::stats).collect()
+    }
+
+    /// Drain this replica's accumulated spans as a fragment (`None` when
+    /// the session was built without `trace`).
+    pub fn take_trace(&self) -> Option<TraceFragment> {
+        self.trace.as_ref().map(|t| t.take_fragment())
+    }
+
+    /// Drain every shard's server-side spans, each paired with that
+    /// channel's estimated clock offset — ready for
+    /// [`crate::tracing_tools::merge_fragments`].
+    pub fn pull_shard_traces(&self) -> Result<Vec<(TraceFragment, i64)>> {
+        self.clients
+            .iter()
+            .map(|c| Ok((c.trace_pull()?, c.clock_offset_us())))
+            .collect()
+    }
+
+    /// One chrome://tracing JSON reconstructing the distributed step(s)
+    /// end to end: this replica's spans, every parameter-server shard's
+    /// (clock-aligned via the HELLO offsets), and any `extra` fragments
+    /// from peer replicas (offset 0 — in-process peers share our trace
+    /// epoch). Drains every collector involved.
+    pub fn merged_trace(&self, extra: Vec<TraceFragment>) -> Result<String> {
+        let mut parts: Vec<(TraceFragment, i64)> = Vec::new();
+        if let Some(own) = self.take_trace() {
+            parts.push((own, 0));
+        }
+        for frag in extra {
+            parts.push((frag, 0));
+        }
+        parts.extend(self.pull_shard_traces()?);
+        Ok(merge_fragments(parts).to_chrome_trace())
     }
 }
 

@@ -6,7 +6,7 @@
 //! Thread-per-connection TCP server handling RegisterGraph / RunPartition
 //! / RecvTensor (worker↔worker pulls) / Health / Reset / Shutdown.
 
-use super::proto::{self, RegisterGraph, RunPartition, RunReply, TensorReply};
+use super::proto::{self, RegisterGraph, RunPartition, RunReply, TensorReply, TraceReply};
 use super::rendezvous::{RemoteRendezvous, StepRendezvous};
 use super::ClusterSpec;
 use crate::device::DeviceSet;
@@ -15,6 +15,7 @@ use crate::executor::{CompiledGraph, Executor, RunContext};
 use crate::kernels::StepState;
 use crate::rendezvous::{recv_blocking, Rendezvous};
 use crate::resources::ResourceMgr;
+use crate::tracing_tools::{TraceCollector, TraceFragment};
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -42,11 +43,19 @@ pub struct WorkerOptions {
     /// planner, now on by default for remote partitions too. Results are
     /// identical either way; only allocation traffic changes.
     pub enable_memory_planning: bool,
+    /// Record per-kernel spans for every partition run (tagged with the
+    /// master's step id), served over `MSG_TRACE_PULL`.
+    pub trace: bool,
 }
 
 impl Default for WorkerOptions {
     fn default() -> Self {
-        WorkerOptions { threads_per_device: 2, intra_op_threads: 2, enable_memory_planning: true }
+        WorkerOptions {
+            threads_per_device: 2,
+            intra_op_threads: 2,
+            enable_memory_planning: true,
+            trace: false,
+        }
     }
 }
 
@@ -60,6 +69,9 @@ pub struct Worker {
     next_handle: AtomicU64,
     shutdown: AtomicBool,
     options: WorkerOptions,
+    /// Present when [`WorkerOptions::trace`]: accumulates every run's
+    /// per-kernel spans until a `MSG_TRACE_PULL` drains them.
+    trace: Option<Arc<TraceCollector>>,
 }
 
 impl Worker {
@@ -87,6 +99,7 @@ impl Worker {
                 .collect(),
         );
         let rendezvous = RemoteRendezvous::new(cluster.clone(), task);
+        let trace = options.trace.then(|| TraceCollector::for_step(&format!("worker:{task}"), 0));
         Arc::new(Worker {
             task,
             cluster,
@@ -97,7 +110,13 @@ impl Worker {
             next_handle: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
             options,
+            trace,
         })
+    }
+
+    /// The worker's span accumulator (when [`WorkerOptions::trace`]).
+    pub fn trace(&self) -> Option<&Arc<TraceCollector>> {
+        self.trace.as_ref()
     }
 
     pub fn resources(&self) -> &Arc<ResourceMgr> {
@@ -184,6 +203,18 @@ impl Worker {
                 self.shutdown.store(true, Ordering::SeqCst);
                 proto::write_frame(&mut stream, proto::MSG_HEALTH_OK, b"")
             }
+            proto::MSG_TRACE_PULL => {
+                let fragment = match &self.trace {
+                    Some(t) => t.take_fragment(),
+                    None => TraceFragment {
+                        process: format!("worker:{}", self.task),
+                        events: Vec::new(),
+                        dropped: 0,
+                    },
+                };
+                let r = TraceReply { status: Ok(()), fragment };
+                proto::write_frame(&mut stream, proto::MSG_TRACE_REPLY, &r.encode())
+            }
             other => Err(Status::invalid_argument(format!("unknown message type {other}"))),
         }
     }
@@ -229,13 +260,24 @@ impl Worker {
                 return RunReply { status: Err(e), fetches: vec![] };
             }
         }
+        // When tracing, each run records into a child collector tagged
+        // with the master's step id, absorbed into the worker's
+        // accumulator afterwards (the executor API takes one collector
+        // per run; the accumulator spans many).
+        let run_trace = self
+            .trace
+            .as_ref()
+            .map(|_| TraceCollector::for_step(&format!("worker:{}", self.task), run.step_id));
         let ctx = RunContext {
             resources: Arc::clone(&self.resources),
             rendezvous: rendezvous as Arc<dyn Rendezvous>,
             step: Arc::clone(&step),
-            trace: None,
+            trace: run_trace.clone(),
         };
         let status = Executor::new(compiled).run(ctx);
+        if let (Some(acc), Some(child)) = (&self.trace, run_trace) {
+            acc.absorb(child.drain());
+        }
         let fetches = step.take_fetches().into_iter().collect();
         RunReply { status, fetches }
     }

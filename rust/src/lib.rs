@@ -33,6 +33,7 @@ pub mod executor;
 pub mod graph;
 pub mod kernels;
 pub mod memory;
+pub mod obs;
 pub mod ops;
 pub mod optim;
 pub mod partition;

@@ -58,6 +58,24 @@ pub struct MemSnapshot {
     pub bytes_forwarded: u64,
 }
 
+impl MemSnapshot {
+    /// Counter deltas since `earlier` (saturating: the counters are
+    /// monotonic, but a snapshot pair taken across pool replacement may
+    /// not be). Used for per-step arena stats in `StepStats`.
+    pub fn delta_since(&self, earlier: &MemSnapshot) -> MemSnapshot {
+        MemSnapshot {
+            arenas_created: self.arenas_created.saturating_sub(earlier.arenas_created),
+            checkouts: self.checkouts.saturating_sub(earlier.checkouts),
+            reuse_hits: self.reuse_hits.saturating_sub(earlier.reuse_hits),
+            reuse_misses: self.reuse_misses.saturating_sub(earlier.reuse_misses),
+            bytes_reused: self.bytes_reused.saturating_sub(earlier.bytes_reused),
+            bytes_fresh: self.bytes_fresh.saturating_sub(earlier.bytes_fresh),
+            forwards_taken: self.forwards_taken.saturating_sub(earlier.forwards_taken),
+            bytes_forwarded: self.bytes_forwarded.saturating_sub(earlier.bytes_forwarded),
+        }
+    }
+}
+
 impl MemCounters {
     pub fn snapshot(&self) -> MemSnapshot {
         MemSnapshot {

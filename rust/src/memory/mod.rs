@@ -48,7 +48,7 @@ pub use plan::{plan_partition, MemoryPlan, MemoryPlanStats};
 /// One executor's memory report: the build-time plan stats plus the
 /// runtime arena counters accumulated across every run of the cached
 /// step. Returned by `Session::memory_stats`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct MemoryReport {
     /// Device the partition runs on.
     pub device: String,

@@ -1,0 +1,302 @@
+//! Unified observability: a process-wide metrics registry.
+//!
+//! Every server in the crate used to grow its own ad-hoc stats — the
+//! parameter server carried four loose `AtomicU64`s, the serving manager
+//! its own `VersionCounters`, the wire layer nothing at all. This module
+//! gives them one shared substrate: named [`Counter`]s, [`Gauge`]s, and
+//! [`LatencyHistogram`]s behind a [`MetricsRegistry`], with a single
+//! JSON/text exporter so `MSG_STATS` and `MSG_PS_STATS` serve the same
+//! shape of dump.
+//!
+//! Hot paths are lock-free: registration (`counter`/`gauge`/`histogram`)
+//! takes the registry lock once and hands back an `Arc` handle; every
+//! subsequent `inc`/`add`/`record` is a relaxed atomic op on that handle.
+//! Callers cache handles, not names.
+//!
+//! Names are slash-separated paths (`"wire/PS_PUSH/bytes_in"`,
+//! `"serving/m/v1/requests"`). The registry imposes no schema beyond
+//! "one kind per name": asking for a `counter` where a `gauge` is
+//! registered returns a detached handle (still functional, never
+//! exported twice) and bumps `obs/kind_conflicts` so the bug is visible
+//! in the dump itself.
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counter. All ops are relaxed atomics.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time signed value (queue depths, in-flight requests).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge::default()
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+/// Named metrics for one exporting scope (one server, usually). The
+/// registry owns the name → metric map; handles returned from
+/// `counter`/`gauge`/`histogram` are `Arc`s the caller keeps, so the
+/// recording path never touches the map again.
+pub struct MetricsRegistry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+    kind_conflicts: Counter,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry { metrics: Mutex::new(BTreeMap::new()), kind_conflicts: Counter::new() }
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    /// Get-or-create the counter `name`. On a kind conflict (the name is
+    /// registered as a gauge/histogram) returns a detached counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Counter(Arc::new(Counter::new())))
+        {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => {
+                self.kind_conflicts.inc();
+                Arc::new(Counter::new())
+            }
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new()))) {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => {
+                self.kind_conflicts.inc();
+                Arc::new(Gauge::new())
+            }
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<LatencyHistogram> {
+        let mut m = self.metrics.lock().unwrap();
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(LatencyHistogram::new())))
+        {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => {
+                self.kind_conflicts.inc();
+                Arc::new(LatencyHistogram::new())
+            }
+        }
+    }
+
+    /// Current value of a registered counter, if any — for tests and the
+    /// odd cold-path read that never cached a handle.
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        match self.metrics.lock().unwrap().get(name)? {
+            Metric::Counter(c) => Some(c.get()),
+            _ => None,
+        }
+    }
+
+    /// Sum of every counter whose name passes `pred` (e.g. all
+    /// `wire/*/bytes_*` counters).
+    pub fn sum_counters(&self, pred: impl Fn(&str) -> bool) -> u64 {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .filter_map(|(name, metric)| match metric {
+                Metric::Counter(c) if pred(name) => Some(c.get()),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// The dump as a [`Json`] object: counters and gauges as integers,
+    /// histograms as `{count, mean_us, p50_us, p95_us, p99_us, max_us}`.
+    /// Keys are sorted (BTreeMap order) so dumps diff cleanly.
+    pub fn to_json(&self) -> Json {
+        let us = |d: std::time::Duration| d.as_micros() as u64;
+        let mut out = Json::obj();
+        let m = self.metrics.lock().unwrap();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => out = out.set(name, c.get()),
+                Metric::Gauge(g) => out = out.set(name, g.get()),
+                Metric::Histogram(h) => {
+                    let s = h.summary();
+                    out = out.set(
+                        name,
+                        Json::obj()
+                            .set("count", s.count)
+                            .set("mean_us", us(s.mean))
+                            .set("p50_us", us(s.p50))
+                            .set("p95_us", us(s.p95))
+                            .set("p99_us", us(s.p99))
+                            .set("max_us", us(s.max)),
+                    );
+                }
+            }
+        }
+        let conflicts = self.kind_conflicts.get();
+        if conflicts > 0 {
+            out = out.set("obs/kind_conflicts", conflicts);
+        }
+        out
+    }
+
+    /// The dump rendered as a JSON string.
+    pub fn export_json(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// The dump as `name value` lines (one metric per line, histograms as
+    /// `name{quantile} value`), for logs and humans.
+    pub fn export_text(&self) -> String {
+        let us = |d: std::time::Duration| d.as_micros() as u64;
+        let mut out = String::new();
+        let m = self.metrics.lock().unwrap();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
+                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", g.get())),
+                Metric::Histogram(h) => {
+                    let s = h.summary();
+                    out.push_str(&format!("{name}{{count}} {}\n", s.count));
+                    out.push_str(&format!("{name}{{mean_us}} {}\n", us(s.mean)));
+                    out.push_str(&format!("{name}{{p50_us}} {}\n", us(s.p50)));
+                    out.push_str(&format!("{name}{{p95_us}} {}\n", us(s.p95)));
+                    out.push_str(&format!("{name}{{p99_us}} {}\n", us(s.p99)));
+                    out.push_str(&format!("{name}{{max_us}} {}\n", us(s.max)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The process-wide default registry: for code without a natural owning
+/// scope. Servers (the parameter server, the model manager) each own
+/// their *own* registry so two instances in one process don't collide.
+pub fn global() -> &'static Arc<MetricsRegistry> {
+    static GLOBAL: OnceLock<Arc<MetricsRegistry>> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn counters_and_gauges_register_once() {
+        let r = MetricsRegistry::new();
+        let c1 = r.counter("a/b");
+        let c2 = r.counter("a/b");
+        c1.add(3);
+        c2.inc();
+        assert_eq!(r.counter_value("a/b"), Some(4));
+        let g = r.gauge("depth");
+        g.set(5);
+        g.sub(2);
+        assert_eq!(g.get(), 3);
+    }
+
+    #[test]
+    fn kind_conflict_returns_detached_handle() {
+        let r = MetricsRegistry::new();
+        let _g = r.gauge("x");
+        let c = r.counter("x"); // wrong kind: detached, never exported
+        c.add(100);
+        assert_eq!(r.counter_value("x"), None);
+        let dump = r.export_json();
+        assert!(dump.contains("\"obs/kind_conflicts\":1"), "{dump}");
+    }
+
+    #[test]
+    fn export_json_parses_and_has_histogram_fields() {
+        let r = MetricsRegistry::new();
+        r.counter("reqs").add(7);
+        r.histogram("lat").record(std::time::Duration::from_micros(250));
+        let j = Json::parse(&r.export_json()).unwrap();
+        assert_eq!(j.get("reqs").and_then(Json::as_i64), Some(7));
+        let lat = j.get("lat").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_i64), Some(1));
+        assert!(lat.get("p50_us").and_then(Json::as_i64).unwrap() >= 128);
+    }
+
+    #[test]
+    fn export_text_lists_every_metric() {
+        let r = MetricsRegistry::new();
+        r.counter("c").inc();
+        r.gauge("g").set(-2);
+        r.histogram("h").record(std::time::Duration::from_micros(10));
+        let t = r.export_text();
+        assert!(t.contains("c 1\n"), "{t}");
+        assert!(t.contains("g -2\n"), "{t}");
+        assert!(t.contains("h{count} 1\n"), "{t}");
+    }
+
+    #[test]
+    fn sum_counters_filters_by_name() {
+        let r = MetricsRegistry::new();
+        r.counter("wire/A/bytes_in").add(10);
+        r.counter("wire/B/bytes_out").add(5);
+        r.counter("other").add(99);
+        assert_eq!(r.sum_counters(|n| n.starts_with("wire/")), 15);
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        global().counter("test/global").add(2);
+        assert!(global().counter_value("test/global").unwrap() >= 2);
+    }
+}

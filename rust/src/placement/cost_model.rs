@@ -148,6 +148,17 @@ impl CostModel {
         }
     }
 
+    /// Fold a step profile in: each node's mean traced duration becomes
+    /// its measured cost. The [`crate::tracing_tools::StepStats`] may come
+    /// from this process's last traced run or from a persisted
+    /// `StepStats::to_json` file (profile-guided placement across runs —
+    /// ROADMAP direction 5).
+    pub fn update_from_step_stats(&mut self, stats: &crate::tracing_tools::StepStats) {
+        for n in &stats.nodes {
+            self.measured_us.insert(n.name.clone(), n.mean_us() as f64);
+        }
+    }
+
     /// Record a measured output size.
     pub fn record_output_bytes(&mut self, node_name: &str, bytes: f64) {
         self.measured_bytes.insert(node_name.to_string(), bytes);
@@ -225,9 +236,33 @@ mod tests {
             thread: 0,
             start_us: 0,
             dur_us: 12345,
+            step: 0,
         }]);
         assert!(cm.has_measurements());
         assert_eq!(cm.node_cost_us(b.graph.node(mm.node), "/d"), 12345.0);
+    }
+
+    #[test]
+    fn step_stats_feed_measured_mode() {
+        use crate::tracing_tools::{Event, StepStats};
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let mm = b.matmul(x, x);
+        let name = b.graph.node(mm.node).name.clone();
+        let ev = |dur: u64| Event {
+            name: name.clone(),
+            op: "MatMul".into(),
+            device: "d".into(),
+            thread: 0,
+            start_us: 0,
+            dur_us: dur,
+            step: 1,
+        };
+        // Two executions of the node in one step: the model takes the mean.
+        let ss = StepStats::from_events(1, &[ev(100), ev(300)], Vec::new());
+        let mut cm = CostModel::new();
+        cm.update_from_step_stats(&ss);
+        assert_eq!(cm.node_cost_us(b.graph.node(mm.node), "/d"), 200.0);
     }
 
     #[test]

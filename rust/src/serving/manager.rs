@@ -48,13 +48,14 @@ use super::{BatchConfig, ModelServer, ResponseHandle, ServingStats};
 use crate::checkpoint;
 use crate::error::{Result, Status};
 use crate::graph::Endpoint;
+use crate::obs::{Counter, Gauge, MetricsRegistry};
 use crate::session::{Session, SessionOptions};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::stats::{LatencyHistogram, LatencySummary};
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
@@ -117,15 +118,31 @@ pub struct ManagerOptions {
     pub batch: BatchConfig,
 }
 
-/// Per-version monotonic counters, shared between the manager and every
-/// outstanding [`ManagedHandle`].
-#[derive(Default)]
+/// Per-version counters, shared between the manager and every
+/// outstanding [`ManagedHandle`]. The handles live in the manager's
+/// [`MetricsRegistry`] under `serving/<model>/v<version>/…`, so the same
+/// numbers surface in both [`VersionStats`] and the registry dump —
+/// one source of truth (a rollback re-deploy reuses the names and keeps
+/// accumulating).
 struct VersionCounters {
-    submitted: AtomicU64,
-    ok: AtomicU64,
-    errors: AtomicU64,
-    inflight: AtomicU64,
-    latency: LatencyHistogram,
+    submitted: Arc<Counter>,
+    ok: Arc<Counter>,
+    errors: Arc<Counter>,
+    inflight: Arc<Gauge>,
+    latency: Arc<LatencyHistogram>,
+}
+
+impl VersionCounters {
+    fn registered(reg: &Arc<MetricsRegistry>, model: &str, version: u64) -> VersionCounters {
+        let p = format!("serving/{model}/v{version}");
+        VersionCounters {
+            submitted: reg.counter(&format!("{p}/requests")),
+            ok: reg.counter(&format!("{p}/ok")),
+            errors: reg.counter(&format!("{p}/errors")),
+            inflight: reg.gauge(&format!("{p}/inflight")),
+            latency: reg.histogram(&format!("{p}/latency")),
+        }
+    }
 }
 
 /// One deployed version: its serving stack plus lifecycle state.
@@ -195,7 +212,7 @@ struct InflightGuard(Arc<VersionCounters>);
 
 impl Drop for InflightGuard {
     fn drop(&mut self) {
-        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+        self.0.inflight.sub(1);
     }
 }
 
@@ -206,8 +223,8 @@ impl ManagedHandle {
         let result = inner.wait();
         counters.latency.record(start.elapsed());
         match &result {
-            Ok(_) => counters.ok.fetch_add(1, Ordering::Relaxed),
-            Err(_) => counters.errors.fetch_add(1, Ordering::Relaxed),
+            Ok(_) => counters.ok.inc(),
+            Err(_) => counters.errors.inc(),
         };
         result
     }
@@ -223,6 +240,9 @@ impl ManagedHandle {
 pub struct ModelManager {
     options: ManagerOptions,
     models: RwLock<HashMap<String, Arc<Model>>>,
+    /// Per-manager (not process-global): two managers in one test process
+    /// must not share `serving/…` counters.
+    registry: Arc<MetricsRegistry>,
     shutting_down: AtomicBool,
 }
 
@@ -231,12 +251,19 @@ impl ModelManager {
         ModelManager {
             options,
             models: RwLock::new(HashMap::new()),
+            registry: MetricsRegistry::new(),
             shutting_down: AtomicBool::new(false),
         }
     }
 
     pub fn options(&self) -> &ManagerOptions {
         &self.options
+    }
+
+    /// The manager's metrics registry (what `stats_json` dumps under
+    /// `"metrics"`; the TCP front end registers its wire counters here).
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
     }
 
     /// Deploy a version from on-disk artifacts: read the GraphDef, build
@@ -300,7 +327,7 @@ impl ModelManager {
             version,
             state: Mutex::new(VersionState::Warming),
             server: ModelServer::with_session(session, self.options.batch.clone()),
-            counters: Arc::new(VersionCounters::default()),
+            counters: Arc::new(VersionCounters::registered(&self.registry, model, version)),
         });
         {
             let mut st = model_arc.state.write().unwrap();
@@ -465,8 +492,8 @@ impl ModelManager {
         }
         let start = Instant::now();
         let inner = entry.server.submit(feeds, fetches)?;
-        entry.counters.submitted.fetch_add(1, Ordering::Relaxed);
-        entry.counters.inflight.fetch_add(1, Ordering::Relaxed);
+        entry.counters.submitted.inc();
+        entry.counters.inflight.add(1);
         Ok(ManagedHandle {
             inner,
             start,
@@ -518,10 +545,10 @@ impl ModelManager {
                     version: entry.version,
                     state: entry.state(),
                     live: st.live == Some(entry.version),
-                    requests: entry.counters.submitted.load(Ordering::Relaxed),
-                    ok: entry.counters.ok.load(Ordering::Relaxed),
-                    errors: entry.counters.errors.load(Ordering::Relaxed),
-                    inflight: entry.counters.inflight.load(Ordering::Relaxed),
+                    requests: entry.counters.submitted.get(),
+                    ok: entry.counters.ok.get(),
+                    errors: entry.counters.errors.get(),
+                    inflight: entry.counters.inflight.get().max(0) as u64,
                     batch: entry.server.stats(),
                     latency: entry.counters.latency.summary(),
                 });
@@ -557,7 +584,11 @@ impl ModelManager {
                     .set("latency_ms_p99", ms(s.latency.p99)),
             );
         }
-        Json::obj().set("versions", versions).render()
+        Json::obj()
+            .set("versions", versions)
+            .set("shutting_down", self.shutting_down.load(Ordering::SeqCst))
+            .set("metrics", self.registry.to_json())
+            .render()
     }
 }
 
@@ -809,6 +840,13 @@ mod tests {
         let j = mgr.stats_json();
         assert!(j.contains("\"model\":\"m\""), "{j}");
         assert!(j.contains("\"state\":\"live\""), "{j}");
+        // The same counters surface in the unified registry dump.
+        let parsed = Json::parse(&j).unwrap();
+        let metrics = parsed.get("metrics").unwrap();
+        assert_eq!(metrics.get("serving/m/v1/requests").and_then(Json::as_i64), Some(1));
+        assert_eq!(metrics.get("serving/m/v1/ok").and_then(Json::as_i64), Some(1));
+        assert_eq!(parsed.get("shutting_down").and_then(Json::as_bool), Some(false));
+        assert_eq!(mgr.metrics().counter_value("serving/m/v1/errors"), Some(0));
     }
 
     #[test]

@@ -26,7 +26,7 @@
 use super::manager::ModelManager;
 use crate::error::{Result, Status};
 use crate::tensor::Tensor;
-use crate::wire;
+use crate::wire::{self, WireMetrics};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -38,6 +38,20 @@ pub const MSG_STATS: u8 = 3;
 pub const MSG_STATS_REPLY: u8 = 4;
 pub const MSG_PING: u8 = 5;
 pub const MSG_PONG: u8 = 6;
+
+/// Human name of a serving message type, for the per-type wire counters
+/// (`wire/PREDICT/frames_in` etc. in the manager's registry).
+pub fn msg_name(t: u8) -> String {
+    match t {
+        MSG_PREDICT => "PREDICT".to_string(),
+        MSG_PREDICT_REPLY => "PREDICT_REPLY".to_string(),
+        MSG_STATS => "STATS".to_string(),
+        MSG_STATS_REPLY => "STATS_REPLY".to_string(),
+        MSG_PING => "PING".to_string(),
+        MSG_PONG => "PONG".to_string(),
+        other => wire::raw_msg_name(other),
+    }
+}
 
 /// One inference request on the wire.
 pub struct PredictRequest {
@@ -113,6 +127,9 @@ impl NetServer {
         let local = listener.local_addr()?;
         let shutting_down = Arc::new(AtomicBool::new(false));
         let flag = Arc::clone(&shutting_down);
+        // Frame/byte accounting lands in the manager's registry, so
+        // MSG_STATS replies include the front end's own wire traffic.
+        let wire_metrics = WireMetrics::new(manager.metrics(), "wire", msg_name);
         let accept = std::thread::Builder::new()
             .name("modelhub-accept".to_string())
             .spawn(move || {
@@ -124,9 +141,10 @@ impl NetServer {
                         Ok(stream) => {
                             let manager = Arc::clone(&manager);
                             let flag = Arc::clone(&flag);
+                            let wm = Arc::clone(&wire_metrics);
                             let spawned = std::thread::Builder::new()
                                 .name("modelhub-conn".to_string())
-                                .spawn(move || handle_connection(&manager, &flag, stream));
+                                .spawn(move || handle_connection(&manager, &flag, &wm, stream));
                             if spawned.is_err() {
                                 // Out of threads: shed the connection (it
                                 // closes, the client sees Unavailable)
@@ -190,25 +208,35 @@ impl Drop for NetServer {
 
 /// One connection's request loop: read a frame, serve it, reply, repeat
 /// until EOF / transport error / server shutdown.
-fn handle_connection(manager: &ModelManager, shutting_down: &AtomicBool, mut stream: TcpStream) {
+fn handle_connection(
+    manager: &ModelManager,
+    shutting_down: &AtomicBool,
+    wm: &WireMetrics,
+    mut stream: TcpStream,
+) {
     stream.set_nodelay(true).ok();
     loop {
-        let (msg_type, payload) = match wire::read_frame(&mut stream) {
+        let (msg_type, payload) = match wm.read_frame(&mut stream) {
             Ok(f) => f,
             Err(_) => return, // client hung up (or sent garbage framing)
         };
         if shutting_down.load(Ordering::SeqCst) {
             // Answer with the reply type the request expects (a ping must
-            // not see a predict frame), then close the connection.
+            // not see a predict frame), then close the connection. Stats
+            // requests get the real dump — it carries the
+            // `"shutting_down":true` marker, which is exactly what a
+            // prober draining the hub wants to see.
             let _ = match msg_type {
-                MSG_PING => wire::write_frame(&mut stream, MSG_PONG, b""),
-                MSG_STATS => wire::write_frame(&mut stream, MSG_STATS_REPLY, b"{}"),
+                MSG_PING => wm.write_frame(&mut stream, MSG_PONG, b""),
+                MSG_STATS => {
+                    wm.write_frame(&mut stream, MSG_STATS_REPLY, manager.stats_json().as_bytes())
+                }
                 _ => {
                     let reply = PredictReply {
                         status: Err(Status::unavailable("model hub is shutting down")),
                         outputs: vec![],
                     };
-                    wire::write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
+                    wm.write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
                 }
             };
             return;
@@ -216,12 +244,12 @@ fn handle_connection(manager: &ModelManager, shutting_down: &AtomicBool, mut str
         let written = match msg_type {
             MSG_PREDICT => {
                 let reply = serve_predict(manager, &payload);
-                wire::write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
+                wm.write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
             }
             MSG_STATS => {
-                wire::write_frame(&mut stream, MSG_STATS_REPLY, manager.stats_json().as_bytes())
+                wm.write_frame(&mut stream, MSG_STATS_REPLY, manager.stats_json().as_bytes())
             }
-            MSG_PING => wire::write_frame(&mut stream, MSG_PONG, b""),
+            MSG_PING => wm.write_frame(&mut stream, MSG_PONG, b""),
             other => {
                 let reply = PredictReply {
                     status: Err(Status::invalid_argument(format!(
@@ -229,7 +257,7 @@ fn handle_connection(manager: &ModelManager, shutting_down: &AtomicBool, mut str
                     ))),
                     outputs: vec![],
                 };
-                wire::write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
+                wm.write_frame(&mut stream, MSG_PREDICT_REPLY, &reply.encode())
             }
         };
         if written.is_err() {

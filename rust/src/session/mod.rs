@@ -22,7 +22,7 @@ use crate::placement::{place, CostModel, PlacementStats};
 use crate::rendezvous::{LocalRendezvous, Rendezvous};
 use crate::resources::ResourceMgr;
 use crate::tensor::Tensor;
-use crate::tracing_tools::TraceCollector;
+use crate::tracing_tools::{StepStats, TraceCollector};
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -134,6 +134,8 @@ pub struct Session {
     cache: Mutex<HashMap<String, Arc<CachedStep>>>,
     /// Trace of the most recent traced step.
     last_trace: Mutex<Option<Arc<TraceCollector>>>,
+    /// Per-node timings + arena deltas of the most recent traced step.
+    last_step_stats: Mutex<Option<Arc<StepStats>>>,
 }
 
 impl Session {
@@ -155,6 +157,7 @@ impl Session {
             next_step: AtomicU64::new(1),
             cache: Mutex::new(HashMap::new()),
             last_trace: Mutex::new(None),
+            last_step_stats: Mutex::new(None),
         }
     }
 
@@ -232,7 +235,24 @@ impl Session {
         for ((_, tensor), key) in feeds.iter().zip(&cached.feed_keys) {
             rendezvous.send(key, tensor.clone())?;
         }
-        let trace = if self.options.trace { Some(TraceCollector::new()) } else { None };
+        let trace = if self.options.trace {
+            Some(TraceCollector::for_step("local", step_id))
+        } else {
+            None
+        };
+        // Arena counters are lifetime totals shared across runs; snapshot
+        // them now so the traced step can report its *delta*.
+        let mem_before: Vec<crate::memory::MemSnapshot> = if trace.is_some() {
+            cached
+                .executors
+                .iter()
+                .map(|cg| {
+                    cg.arena_pool.as_ref().map(|p| p.counters().snapshot()).unwrap_or_default()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
 
         // One executor per partition, running concurrently (§3.2.2: node
         // scheduling is decentralized into the per-device executors).
@@ -268,6 +288,23 @@ impl Session {
             })
         };
         if let Some(t) = trace {
+            let memory = cached
+                .executors
+                .iter()
+                .zip(&mem_before)
+                .map(|(cg, before)| crate::memory::MemoryReport {
+                    device: cg.device.name(),
+                    plan: cg.plan.as_ref().map(|p| p.stats.clone()).unwrap_or_default(),
+                    runtime: cg
+                        .arena_pool
+                        .as_ref()
+                        .map(|p| p.counters().snapshot())
+                        .unwrap_or_default()
+                        .delta_since(before),
+                })
+                .collect();
+            let stats = StepStats::from_events(step_id, &t.events(), memory);
+            *self.last_step_stats.lock().unwrap() = Some(Arc::new(stats));
             *self.last_trace.lock().unwrap() = Some(t);
         }
         if let Some(e) = errors.into_iter().next() {
@@ -289,6 +326,14 @@ impl Session {
     /// Trace of the most recent run (when `options.trace`).
     pub fn last_trace(&self) -> Option<Arc<TraceCollector>> {
         self.last_trace.lock().unwrap().clone()
+    }
+
+    /// Per-node accumulated timings and per-step arena deltas of the most
+    /// recent run (when `options.trace`) — the profile
+    /// [`crate::placement::CostModel::update_from_step_stats`] consumes,
+    /// persistable via [`StepStats::to_json`].
+    pub fn last_step_stats(&self) -> Option<Arc<StepStats>> {
+        self.last_step_stats.lock().unwrap().clone()
     }
 
     /// Per-pass optimizer reports of the cached step for a signature (the
@@ -836,5 +881,17 @@ mod tests {
         sess.run(&[], &[&name], &[]).unwrap();
         let t = sess.last_trace().unwrap();
         assert!(!t.is_empty());
+        // Every event carries the run's step id, and the run distilled a
+        // StepStats with the traced node in it.
+        let ss = sess.last_step_stats().unwrap();
+        assert!(t.events().iter().all(|e| e.step == ss.step_id));
+        assert!(ss.node(&name).is_some(), "fetched node profiled: {:?}", ss.nodes);
+        assert!(!ss.memory.is_empty(), "one memory report per executor");
+        // Roundtrips through its JSON persistence form.
+        let back = crate::tracing_tools::StepStats::from_json(&ss.to_json()).unwrap();
+        assert_eq!(back.nodes, ss.nodes);
+        // A second traced run replaces the profile with the new step id.
+        sess.run(&[], &[&name], &[]).unwrap();
+        assert!(sess.last_step_stats().unwrap().step_id > ss.step_id);
     }
 }

@@ -3,18 +3,75 @@
 //! execution of TensorFlow graphs … reconstruct the execution of a
 //! distributed training step with microsecond-level details."
 //!
-//! The executor begins/ends a span per kernel invocation; spans carry the
-//! node name, op, device, thread, and µs timestamps. Export is
+//! The executor begins/ends a span per kernel invocation; the distributed
+//! layer adds spans for its own phases (replica pull/compute/push, the
+//! parameter server's recv → barrier-wait → apply). Spans carry the node
+//! name, op, device, thread, step id, and µs timestamps. Export is
 //! chrome://tracing "trace event" JSON (the modern equivalent of the
 //! paper's EEG viewer) plus a text summary of where time went.
+//!
+//! **Cross-process reconstruction.** Every collector in a process stamps
+//! events against one process-wide monotonic epoch ([`process_now_us`]),
+//! so events from different collectors in the same process share a
+//! timeline directly. Across processes, each collector carries a
+//! `process` label and ships its events as a [`TraceFragment`] (over
+//! `MSG_TRACE_*` wire messages); the merging side pairs each fragment
+//! with a clock offset estimated during the connection handshake and
+//! [`merge_fragments`] shifts everything onto the merger's timeline —
+//! one chrome://tracing JSON covering a whole distributed step.
+//!
+//! **Bounded memory.** A collector holds at most `cap` events; further
+//! `record`s are counted in `dropped()` instead of growing without limit
+//! (a long-lived server with `trace: true` must not leak).
+//!
+//! **[`StepStats`]** is the profile side of the same data: per-node
+//! accumulated timings (plus the memory planner's per-step arena deltas)
+//! in the exact shape [`crate::placement::CostModel`] consumes — the
+//! bridge from "trace viewed by a human" to "trace fed back into
+//! placement".
 
+use crate::memory::MemoryReport;
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
-/// One completed kernel span.
-#[derive(Debug, Clone)]
+/// Default per-collector event cap (~26 MB of events at ~100 B each).
+pub const DEFAULT_EVENT_CAP: usize = 262_144;
+
+/// The process-wide trace epoch: every collector in this process stamps
+/// events as µs since this instant, so events from different collectors
+/// (the session's, the parameter server's, a replica driver's) are
+/// directly comparable without per-collector re-basing.
+fn process_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// µs since the process trace epoch — the timestamp every span uses, and
+/// the value exchanged in clock-offset handshakes.
+pub fn process_now_us() -> u64 {
+    process_epoch().elapsed().as_micros() as u64
+}
+
+// Thread ids are allocated process-wide (not per collector): a pool
+// thread that outlives many per-run collectors keeps one stable id, and
+// two live collectors can never hand the same id to different threads.
+fn thread_id() -> u64 {
+    static NEXT_THREAD_ID: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static THREAD_ID: std::cell::Cell<u64> = const { std::cell::Cell::new(u64::MAX) };
+    }
+    THREAD_ID.with(|c| {
+        if c.get() == u64::MAX {
+            c.set(NEXT_THREAD_ID.fetch_add(1, Ordering::Relaxed));
+        }
+        c.get()
+    })
+}
+
+/// One completed span.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Event {
     pub name: String,
     pub op: String,
@@ -22,54 +79,124 @@ pub struct Event {
     pub thread: u64,
     pub start_us: u64,
     pub dur_us: u64,
+    /// The distributed step this span belongs to (0 when untracked).
+    pub step: u64,
 }
 
-/// Collects events for one (or more) steps.
+/// Collects events for one (or more) steps, on behalf of one process
+/// role (`"local"`, `"replica:0"`, `"ps"`, `"worker:1"`, …).
 pub struct TraceCollector {
-    epoch: Instant,
+    process: String,
+    step_id: u64,
+    cap: usize,
     events: Mutex<Vec<Event>>,
-    next_thread_id: AtomicU64,
-}
-
-thread_local! {
-    static THREAD_ID: std::cell::Cell<u64> = const { std::cell::Cell::new(u64::MAX) };
+    dropped: AtomicU64,
 }
 
 impl TraceCollector {
     pub fn new() -> Arc<TraceCollector> {
+        TraceCollector::for_step("local", 0)
+    }
+
+    /// A collector whose spans default to `step_id` and whose fragment
+    /// carries `process` identity.
+    pub fn for_step(process: &str, step_id: u64) -> Arc<TraceCollector> {
+        TraceCollector::with_cap(process, step_id, DEFAULT_EVENT_CAP)
+    }
+
+    /// [`TraceCollector::for_step`] with an explicit event cap; events
+    /// past the cap are dropped and counted, never stored.
+    pub fn with_cap(process: &str, step_id: u64, cap: usize) -> Arc<TraceCollector> {
         Arc::new(TraceCollector {
-            epoch: Instant::now(),
+            process: process.to_string(),
+            step_id,
+            cap,
             events: Mutex::new(Vec::new()),
-            next_thread_id: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
         })
     }
 
-    fn thread_id(&self) -> u64 {
-        THREAD_ID.with(|c| {
-            if c.get() == u64::MAX {
-                c.set(self.next_thread_id.fetch_add(1, Ordering::Relaxed));
-            }
-            c.get()
-        })
+    pub fn process(&self) -> &str {
+        &self.process
     }
 
-    /// Begin a span; returned guard records the event on `end()`.
+    pub fn step_id(&self) -> u64 {
+        self.step_id
+    }
+
+    /// Events rejected by the cap so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Begin a span tagged with the collector's default step; the
+    /// returned guard records the event on `end()`.
     pub fn begin(self: &Arc<Self>, name: &str, op: &str, device: &str) -> Span {
+        self.begin_step(name, op, device, self.step_id)
+    }
+
+    /// Begin a span with an explicit step id (long-lived collectors —
+    /// the parameter server's — span many steps).
+    pub fn begin_step(self: &Arc<Self>, name: &str, op: &str, device: &str, step: u64) -> Span {
         Span {
             collector: Arc::clone(self),
             name: name.to_string(),
             op: op.to_string(),
             device: device.to_string(),
+            step,
             start: Instant::now(),
+            start_us: process_now_us(),
         }
     }
 
     pub fn record(&self, ev: Event) {
-        self.events.lock().unwrap().push(ev);
+        let mut evs = self.events.lock().unwrap();
+        if evs.len() < self.cap {
+            evs.push(ev);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Append a batch of already-recorded events (e.g. a per-run child
+    /// collector's), honoring the cap.
+    pub fn absorb(&self, batch: Vec<Event>) {
+        let mut evs = self.events.lock().unwrap();
+        for ev in batch {
+            if evs.len() < self.cap {
+                evs.push(ev);
+            } else {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     pub fn events(&self) -> Vec<Event> {
         self.events.lock().unwrap().clone()
+    }
+
+    /// Take all events, leaving the collector empty (the wire "pull a
+    /// fragment" semantics: each event ships exactly once).
+    pub fn drain(&self) -> Vec<Event> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    /// Snapshot as a fragment (does not drain).
+    pub fn fragment(&self) -> TraceFragment {
+        TraceFragment {
+            process: self.process.clone(),
+            events: self.events(),
+            dropped: self.dropped(),
+        }
+    }
+
+    /// Drain into a fragment (the wire serving path).
+    pub fn take_fragment(&self) -> TraceFragment {
+        TraceFragment {
+            process: self.process.clone(),
+            events: self.drain(),
+            dropped: self.dropped(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -84,16 +211,7 @@ impl TraceCollector {
     pub fn to_chrome_trace(&self) -> String {
         let mut arr = Json::arr();
         for ev in self.events.lock().unwrap().iter() {
-            arr.push(
-                Json::obj()
-                    .set("name", ev.name.clone())
-                    .set("cat", ev.op.clone())
-                    .set("ph", "X")
-                    .set("ts", ev.start_us)
-                    .set("dur", ev.dur_us.max(1))
-                    .set("pid", ev.device.clone())
-                    .set("tid", ev.thread),
-            );
+            arr.push(chrome_event(ev, &ev.device));
         }
         arr.render()
     }
@@ -119,8 +237,20 @@ impl TraceCollector {
     }
 
     pub fn now_us(&self) -> u64 {
-        self.epoch.elapsed().as_micros() as u64
+        process_now_us()
     }
+}
+
+fn chrome_event(ev: &Event, pid: &str) -> Json {
+    Json::obj()
+        .set("name", ev.name.clone())
+        .set("cat", ev.op.clone())
+        .set("ph", "X")
+        .set("ts", ev.start_us)
+        .set("dur", ev.dur_us.max(1))
+        .set("pid", pid)
+        .set("tid", ev.thread)
+        .set("args", Json::obj().set("step", ev.step).set("device", ev.device.clone()))
 }
 
 /// Span guard (explicit `end()`, so async kernels can carry it into their
@@ -130,22 +260,250 @@ pub struct Span {
     name: String,
     op: String,
     device: String,
+    step: u64,
     start: Instant,
+    start_us: u64,
 }
 
 impl Span {
     pub fn end(self) {
-        let start_us = self.start.duration_since(self.collector.epoch).as_micros() as u64;
         let dur_us = self.start.elapsed().as_micros() as u64;
-        let thread = self.collector.thread_id();
+        let thread = thread_id();
         self.collector.record(Event {
             name: self.name,
             op: self.op,
             device: self.device,
             thread,
-            start_us,
+            start_us: self.start_us,
             dur_us,
+            step: self.step,
         });
+    }
+}
+
+// ---- cross-process merge ---------------------------------------------------
+
+/// One process's share of a distributed step trace: what ships over
+/// `MSG_TRACE_PULL` (codec in `distributed::proto`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceFragment {
+    /// The emitting role: `"ps"`, `"replica:0"`, `"worker:1"`, …
+    pub process: String,
+    pub events: Vec<Event>,
+    /// Events that collector rejected at its cap (visible so a merged
+    /// trace can say "this timeline is incomplete").
+    pub dropped: u64,
+}
+
+/// A set of fragments re-based onto one timeline (the merger's clock).
+#[derive(Debug, Clone)]
+pub struct MergedTrace {
+    /// `(process, event)` pairs; `event.start_us` is already aligned.
+    pub events: Vec<(String, Event)>,
+    /// Total dropped-event count across all source fragments.
+    pub dropped: u64,
+}
+
+/// Merge trace fragments from several processes onto one timeline. Each
+/// fragment comes with the offset of *its* clock relative to the
+/// merger's, in µs (positive = that process's clock reads ahead), as
+/// estimated by the connection handshake; the merger's own fragment uses
+/// offset 0. Timestamps are shifted by `-offset`, then the whole
+/// timeline is normalized so the earliest event starts at 0.
+pub fn merge_fragments(parts: Vec<(TraceFragment, i64)>) -> MergedTrace {
+    let mut dropped = 0u64;
+    let mut shifted: Vec<(String, Event, i64)> = Vec::new();
+    for (frag, offset) in parts {
+        dropped += frag.dropped;
+        for ev in frag.events {
+            let ts = ev.start_us as i64 - offset;
+            shifted.push((frag.process.clone(), ev, ts));
+        }
+    }
+    let base = shifted.iter().map(|(_, _, ts)| *ts).min().unwrap_or(0);
+    let mut events: Vec<(String, Event)> = shifted
+        .into_iter()
+        .map(|(process, mut ev, ts)| {
+            ev.start_us = (ts - base).max(0) as u64;
+            (process, ev)
+        })
+        .collect();
+    events.sort_by_key(|(_, ev)| ev.start_us);
+    MergedTrace { events, dropped }
+}
+
+impl MergedTrace {
+    /// chrome://tracing JSON with one `pid` lane per process.
+    pub fn to_chrome_trace(&self) -> String {
+        let mut arr = Json::arr();
+        for (process, ev) in &self.events {
+            arr.push(chrome_event(ev, process));
+        }
+        arr.render()
+    }
+
+    /// Events belonging to `process` (prefix match, so `"replica"`
+    /// matches every replica lane).
+    pub fn events_of(&self, process_prefix: &str) -> Vec<&Event> {
+        self.events
+            .iter()
+            .filter(|(p, _)| p.starts_with(process_prefix))
+            .map(|(_, ev)| ev)
+            .collect()
+    }
+}
+
+// ---- StepStats -------------------------------------------------------------
+
+/// Accumulated timings of one node across a step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeStats {
+    pub name: String,
+    pub op: String,
+    pub device: String,
+    pub total_us: u64,
+    pub count: u64,
+}
+
+impl NodeStats {
+    pub fn mean_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_us / self.count
+        }
+    }
+}
+
+/// Per-step profile: per-node accumulated timings plus the memory
+/// planner's arena-counter deltas for the step. Produced by
+/// `Session::run` when tracing; consumed by
+/// [`crate::placement::CostModel::update_from_step_stats`] (ROADMAP
+/// direction 5) and persistable via [`StepStats::to_json`] /
+/// [`StepStats::from_json`].
+#[derive(Debug, Clone, Default)]
+pub struct StepStats {
+    pub step_id: u64,
+    /// Sorted by `total_us` descending.
+    pub nodes: Vec<NodeStats>,
+    /// One report per partition executor; `runtime` holds the *delta* of
+    /// the arena counters across this step (approximate if other steps
+    /// run concurrently — the counters are shared).
+    pub memory: Vec<MemoryReport>,
+}
+
+impl StepStats {
+    /// Aggregate raw span events (node executions within one step) into
+    /// per-node totals. Control/diagnostic spans carry node names too, so
+    /// everything the trace saw is accounted.
+    pub fn from_events(step_id: u64, events: &[Event], memory: Vec<MemoryReport>) -> StepStats {
+        use std::collections::HashMap;
+        let mut per_node: HashMap<&str, NodeStats> = HashMap::new();
+        for ev in events {
+            let e = per_node.entry(ev.name.as_str()).or_insert_with(|| NodeStats {
+                name: ev.name.clone(),
+                op: ev.op.clone(),
+                device: ev.device.clone(),
+                total_us: 0,
+                count: 0,
+            });
+            e.total_us += ev.dur_us;
+            e.count += 1;
+        }
+        let mut nodes: Vec<NodeStats> = per_node.into_values().collect();
+        nodes.sort_by(|a, b| b.total_us.cmp(&a.total_us).then_with(|| a.name.cmp(&b.name)));
+        StepStats { step_id, nodes, memory }
+    }
+
+    /// Total traced µs across all nodes.
+    pub fn total_us(&self) -> u64 {
+        self.nodes.iter().map(|n| n.total_us).sum()
+    }
+
+    pub fn node(&self, name: &str) -> Option<&NodeStats> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut nodes = Json::arr();
+        for n in &self.nodes {
+            nodes.push(
+                Json::obj()
+                    .set("name", n.name.clone())
+                    .set("op", n.op.clone())
+                    .set("device", n.device.clone())
+                    .set("total_us", n.total_us)
+                    .set("count", n.count),
+            );
+        }
+        let mut memory = Json::arr();
+        for m in &self.memory {
+            memory.push(
+                Json::obj()
+                    .set("device", m.device.clone())
+                    .set("arena_bytes", m.plan.arena_bytes)
+                    .set("naive_bytes", m.plan.naive_bytes)
+                    .set("num_slots", m.plan.num_slots)
+                    .set("planned_static", m.plan.planned_static)
+                    .set("planned_dynamic", m.plan.planned_dynamic)
+                    .set("unplanned", m.plan.unplanned)
+                    .set("forward_candidates", m.plan.forward_candidates)
+                    .set("checkouts", m.runtime.checkouts)
+                    .set("arenas_created", m.runtime.arenas_created)
+                    .set("reuse_hits", m.runtime.reuse_hits)
+                    .set("reuse_misses", m.runtime.reuse_misses)
+                    .set("bytes_reused", m.runtime.bytes_reused)
+                    .set("bytes_fresh", m.runtime.bytes_fresh)
+                    .set("forwards_taken", m.runtime.forwards_taken)
+                    .set("bytes_forwarded", m.runtime.bytes_forwarded),
+            );
+        }
+        Json::obj()
+            .set("step_id", self.step_id)
+            .set("nodes", nodes)
+            .set("memory", memory)
+            .render()
+    }
+
+    /// Parse a persisted [`StepStats::to_json`] dump back (profile files
+    /// survive across processes / sessions for direction-5 replay).
+    pub fn from_json(s: &str) -> Result<StepStats, crate::error::Status> {
+        let bad = |m: String| crate::error::Status::invalid_argument(format!("StepStats: {m}"));
+        let j = Json::parse(s).map_err(bad)?;
+        let u = |v: Option<&Json>| v.and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+        let mut out = StepStats { step_id: u(j.get("step_id")), ..Default::default() };
+        for n in j.get("nodes").and_then(Json::as_array).unwrap_or(&[]) {
+            out.nodes.push(NodeStats {
+                name: n.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+                op: n.get("op").and_then(Json::as_str).unwrap_or("").to_string(),
+                device: n.get("device").and_then(Json::as_str).unwrap_or("").to_string(),
+                total_us: u(n.get("total_us")),
+                count: u(n.get("count")),
+            });
+        }
+        for m in j.get("memory").and_then(Json::as_array).unwrap_or(&[]) {
+            let mut rep = MemoryReport {
+                device: m.get("device").and_then(Json::as_str).unwrap_or("").to_string(),
+                ..Default::default()
+            };
+            rep.plan.arena_bytes = u(m.get("arena_bytes")) as usize;
+            rep.plan.naive_bytes = u(m.get("naive_bytes")) as usize;
+            rep.plan.num_slots = u(m.get("num_slots")) as usize;
+            rep.plan.planned_static = u(m.get("planned_static")) as usize;
+            rep.plan.planned_dynamic = u(m.get("planned_dynamic")) as usize;
+            rep.plan.unplanned = u(m.get("unplanned")) as usize;
+            rep.plan.forward_candidates = u(m.get("forward_candidates")) as usize;
+            rep.runtime.checkouts = u(m.get("checkouts"));
+            rep.runtime.arenas_created = u(m.get("arenas_created"));
+            rep.runtime.reuse_hits = u(m.get("reuse_hits"));
+            rep.runtime.reuse_misses = u(m.get("reuse_misses"));
+            rep.runtime.bytes_reused = u(m.get("bytes_reused"));
+            rep.runtime.bytes_fresh = u(m.get("bytes_fresh"));
+            rep.runtime.forwards_taken = u(m.get("forwards_taken"));
+            rep.runtime.bytes_forwarded = u(m.get("bytes_forwarded"));
+            out.memory.push(rep);
+        }
+        Ok(out)
     }
 }
 
@@ -200,5 +558,112 @@ mod tests {
         .unwrap();
         let evs = c.events();
         assert_ne!(evs[0].thread, evs[1].thread);
+    }
+
+    #[test]
+    fn cap_drops_and_counts() {
+        let c = TraceCollector::with_cap("local", 0, 2);
+        for i in 0..5 {
+            c.begin(&format!("n{i}"), "Op", "d").end();
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.dropped(), 3);
+        // drain resets the buffer but keeps the dropped count (it is a
+        // lifetime total, not a per-fragment one).
+        let frag = c.take_fragment();
+        assert_eq!(frag.events.len(), 2);
+        assert_eq!(frag.dropped, 3);
+        assert!(c.is_empty());
+        c.begin("again", "Op", "d").end();
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn spans_share_the_process_timeline() {
+        // Two collectors created at different times must still agree on
+        // timestamps (both use the process epoch, not their own).
+        let a = TraceCollector::for_step("a", 1);
+        a.begin("first", "Op", "d").end();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = TraceCollector::for_step("b", 1);
+        b.begin("second", "Op", "d").end();
+        let ea = &a.events()[0];
+        let eb = &b.events()[0];
+        assert!(eb.start_us >= ea.start_us + 2000, "{} vs {}", eb.start_us, ea.start_us);
+    }
+
+    #[test]
+    fn begin_step_overrides_collector_step() {
+        let c = TraceCollector::for_step("ps", 7);
+        c.begin("a", "Op", "d").end();
+        c.begin_step("b", "Op", "d", 9).end();
+        let evs = c.events();
+        assert_eq!(evs[0].step, 7);
+        assert_eq!(evs[1].step, 9);
+    }
+
+    #[test]
+    fn merge_aligns_clocks_and_normalizes() {
+        let ev = |start: u64, name: &str, step: u64| Event {
+            name: name.to_string(),
+            op: "Op".to_string(),
+            device: "d".to_string(),
+            thread: 1,
+            start_us: start,
+            dur_us: 10,
+            step,
+        };
+        let local = TraceFragment {
+            process: "replica:0".into(),
+            events: vec![ev(1000, "pull", 3)],
+            dropped: 0,
+        };
+        // The remote clock reads 500µs ahead of ours; its event at
+        // t=1510 remote happened at t=1010 local.
+        let remote = TraceFragment {
+            process: "ps".into(),
+            events: vec![ev(1510, "apply", 3)],
+            dropped: 2,
+        };
+        let merged = merge_fragments(vec![(local, 0), (remote, 500)]);
+        assert_eq!(merged.dropped, 2);
+        assert_eq!(merged.events.len(), 2);
+        // Normalized: earliest at 0, remote re-based to +10µs.
+        assert_eq!(merged.events[0].0, "replica:0");
+        assert_eq!(merged.events[0].1.start_us, 0);
+        assert_eq!(merged.events[1].0, "ps");
+        assert_eq!(merged.events[1].1.start_us, 10);
+        let j = merged.to_chrome_trace();
+        let parsed = Json::parse(&j).unwrap();
+        let arr = parsed.as_array().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("pid").and_then(Json::as_str), Some("ps"));
+        assert_eq!(arr[1].get("args").unwrap().get("step").and_then(Json::as_i64), Some(3));
+        assert_eq!(merged.events_of("ps").len(), 1);
+    }
+
+    #[test]
+    fn step_stats_aggregate_and_roundtrip() {
+        let ev = |name: &str, dur: u64| Event {
+            name: name.to_string(),
+            op: "MatMul".to_string(),
+            device: "/device:cpu:0".to_string(),
+            thread: 1,
+            start_us: 0,
+            dur_us: dur,
+            step: 4,
+        };
+        let ss = StepStats::from_events(4, &[ev("a", 10), ev("b", 50), ev("a", 30)], Vec::new());
+        assert_eq!(ss.step_id, 4);
+        assert_eq!(ss.nodes.len(), 2);
+        assert_eq!(ss.nodes[0].name, "b"); // sorted by total desc
+        assert_eq!(ss.node("a").unwrap().total_us, 40);
+        assert_eq!(ss.node("a").unwrap().count, 2);
+        assert_eq!(ss.node("a").unwrap().mean_us(), 20);
+        assert_eq!(ss.total_us(), 90);
+        let back = StepStats::from_json(&ss.to_json()).unwrap();
+        assert_eq!(back.step_id, 4);
+        assert_eq!(back.nodes, ss.nodes);
+        assert!(StepStats::from_json("not json").is_err());
     }
 }

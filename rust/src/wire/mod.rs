@@ -19,10 +19,12 @@
 //! accepts connections from arbitrary clients.
 
 use crate::error::{Code, Result, Status};
+use crate::obs::{Counter, MetricsRegistry};
 use crate::tensor::{codec, Tensor};
 use crate::util::byteorder::LittleEndian;
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::{Arc, OnceLock};
 
 /// Upper bound on a single frame (1 GiB). Large enough for any tensor
 /// this runtime ships; small enough that a corrupt length prefix cannot
@@ -76,6 +78,119 @@ pub fn rpc(addr: &str, msg_type: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
     stream.set_nodelay(true).ok();
     write_frame(&mut stream, msg_type, payload)?;
     read_frame(&mut stream)
+}
+
+// ---- wire-level metrics ----------------------------------------------------
+
+/// Per-message-type frame/byte counters for both directions.
+struct TypeCounters {
+    frames_in: Arc<Counter>,
+    bytes_in: Arc<Counter>,
+    frames_out: Arc<Counter>,
+    bytes_out: Arc<Counter>,
+}
+
+/// Frame/byte accounting for one endpoint, registered in a
+/// [`MetricsRegistry`] under `{prefix}/{msg_name}/{frames,bytes}_{in,out}`
+/// (plus `{prefix}/bytes_{in,out}_total` rollups). The hot path is
+/// lock-free: per-type counter handles are created once (`OnceLock`) and
+/// every subsequent frame is four relaxed atomic adds. Byte counts
+/// include the 5-byte frame header, so they match what the socket saw.
+///
+/// Servers wrap their streams with [`WireMetrics::read_frame`] /
+/// [`WireMetrics::write_frame`] instead of the free functions; the
+/// protocol passes a `namer` so counters carry message names
+/// (`wire/PS_PUSH/bytes_in`) rather than raw type bytes.
+pub struct WireMetrics {
+    registry: Arc<MetricsRegistry>,
+    prefix: String,
+    namer: fn(u8) -> String,
+    bytes_in_total: Arc<Counter>,
+    bytes_out_total: Arc<Counter>,
+    per_type: [OnceLock<TypeCounters>; 256],
+}
+
+/// Fallback message namer: the raw type byte.
+pub fn raw_msg_name(t: u8) -> String {
+    format!("MSG_{t}")
+}
+
+impl WireMetrics {
+    pub fn new(
+        registry: &Arc<MetricsRegistry>,
+        prefix: &str,
+        namer: fn(u8) -> String,
+    ) -> Arc<WireMetrics> {
+        Arc::new(WireMetrics {
+            registry: Arc::clone(registry),
+            prefix: prefix.to_string(),
+            namer,
+            bytes_in_total: registry.counter(&format!("{prefix}/bytes_in_total")),
+            bytes_out_total: registry.counter(&format!("{prefix}/bytes_out_total")),
+            per_type: std::array::from_fn(|_| OnceLock::new()),
+        })
+    }
+
+    fn counters(&self, msg_type: u8) -> &TypeCounters {
+        self.per_type[msg_type as usize].get_or_init(|| {
+            let name = (self.namer)(msg_type);
+            let path = format!("{}/{name}", self.prefix);
+            TypeCounters {
+                frames_in: self.registry.counter(&format!("{path}/frames_in")),
+                bytes_in: self.registry.counter(&format!("{path}/bytes_in")),
+                frames_out: self.registry.counter(&format!("{path}/frames_out")),
+                bytes_out: self.registry.counter(&format!("{path}/bytes_out")),
+            }
+        })
+    }
+
+    /// Account one received frame of `payload_len` payload bytes.
+    pub fn note_in(&self, msg_type: u8, payload_len: usize) {
+        let c = self.counters(msg_type);
+        c.frames_in.inc();
+        c.bytes_in.add(payload_len as u64 + 5);
+        self.bytes_in_total.add(payload_len as u64 + 5);
+    }
+
+    /// Account one sent frame of `payload_len` payload bytes.
+    pub fn note_out(&self, msg_type: u8, payload_len: usize) {
+        let c = self.counters(msg_type);
+        c.frames_out.inc();
+        c.bytes_out.add(payload_len as u64 + 5);
+        self.bytes_out_total.add(payload_len as u64 + 5);
+    }
+
+    /// [`read_frame`] with accounting.
+    pub fn read_frame<S: Read>(&self, stream: &mut S) -> Result<(u8, Vec<u8>)> {
+        let (msg_type, payload) = read_frame(stream)?;
+        self.note_in(msg_type, payload.len());
+        Ok((msg_type, payload))
+    }
+
+    /// [`write_frame`] with accounting (only successful writes count).
+    pub fn write_frame<S: Write>(
+        &self,
+        stream: &mut S,
+        msg_type: u8,
+        payload: &[u8],
+    ) -> Result<()> {
+        write_frame(stream, msg_type, payload)?;
+        self.note_out(msg_type, payload.len());
+        Ok(())
+    }
+
+    /// Total bytes seen in both directions (header included).
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_in_total.get() + self.bytes_out_total.get()
+    }
+
+    pub fn bytes_in(&self) -> u64 {
+        self.bytes_in_total.get()
+    }
+
+    pub fn bytes_out(&self) -> u64 {
+        self.bytes_out_total.get()
+    }
 }
 
 // ---- primitive payload codecs ----------------------------------------------
@@ -337,5 +452,25 @@ mod tests {
         encode_str_list(&mut out, &names);
         let mut pos = 0;
         assert_eq!(decode_str_list(&out, &mut pos).unwrap(), names);
+    }
+
+    #[test]
+    fn wire_metrics_count_frames_and_bytes_per_type() {
+        let reg = MetricsRegistry::new();
+        let m = WireMetrics::new(&reg, "wire", raw_msg_name);
+        let mut buf = Cursor::new(Vec::new());
+        m.write_frame(&mut buf, 7, b"hello").unwrap();
+        m.write_frame(&mut buf, 9, b"").unwrap();
+        buf.set_position(0);
+        m.read_frame(&mut buf).unwrap();
+        m.read_frame(&mut buf).unwrap();
+        assert_eq!(reg.counter_value("wire/MSG_7/frames_out"), Some(1));
+        assert_eq!(reg.counter_value("wire/MSG_7/bytes_out"), Some(10)); // 5 hdr + 5 payload
+        assert_eq!(reg.counter_value("wire/MSG_9/bytes_in"), Some(5));
+        assert_eq!(m.bytes_in(), m.bytes_out());
+        assert_eq!(m.total_bytes(), 30);
+        // The dump carries every wire counter.
+        let dump = reg.export_json();
+        assert!(dump.contains("\"wire/MSG_9/frames_in\":1"), "{dump}");
     }
 }

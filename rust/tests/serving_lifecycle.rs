@@ -6,6 +6,7 @@
 use rustflow::serving::{
     ManagerOptions, ModelManager, ModelSpec, NetClient, NetServer, VersionState, WarmupRequest,
 };
+use rustflow::util::json::Json;
 use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -261,12 +262,27 @@ fn tcp_front_end_serves_and_hot_swaps() {
     assert_eq!(out_pin1.unwrap_err().code, rustflow::error::Code::NotFound);
     assert_ne!(out_v2[0].as_f32().unwrap(), wire_out[0].as_f32().unwrap());
 
-    // Stats travel the wire as JSON.
+    // Stats travel the wire as JSON, and the unified registry dump rides
+    // along: per-version serving counters plus the front end's own
+    // per-message-type wire counters.
     let json = client.stats_json().unwrap();
     assert!(json.contains("\"model\":\"mlp\""), "{json}");
     assert!(json.contains("\"state\":\"live\""), "{json}");
+    let parsed = Json::parse(&json).unwrap();
+    assert_eq!(parsed.get("shutting_down").and_then(Json::as_bool), Some(false));
+    let metrics = parsed.get("metrics").expect("stats dump carries the registry");
+    let frames_in = metrics.get("wire/PREDICT/frames_in").and_then(Json::as_i64).unwrap();
+    assert!(frames_in > 0, "{json}");
+    assert!(metrics.get("wire/bytes_out_total").and_then(Json::as_i64).unwrap() > 0, "{json}");
+    assert!(metrics.get("serving/mlp/v2/requests").and_then(Json::as_i64).unwrap() > 0, "{json}");
 
     server.shutdown();
+    // A connection established before shutdown still gets real stats —
+    // flagged as shutting down — not an empty placeholder.
+    let json = client.stats_json().unwrap();
+    let parsed = Json::parse(&json).unwrap();
+    assert_eq!(parsed.get("shutting_down").and_then(Json::as_bool), Some(true));
+    assert!(parsed.get("metrics").is_some(), "{json}");
     // After shutdown, new connections are refused or die on first read.
     if let Ok(mut c) = NetClient::connect(&addr) {
         assert!(c.ping().is_err());

@@ -1,0 +1,260 @@
+//! Integration tests for the distributed EEG (§9.2): local chrome-trace
+//! export with intra-op parallelism on, the two-replica acceptance path
+//! (replica + parameter-server spans merged onto one clock-aligned
+//! timeline with consistent step ids), and hostile wire frames on the
+//! `MSG_TRACE_*` path erroring instead of panicking.
+
+use rustflow::distributed::proto;
+use rustflow::distributed::ps::{ParamServer, PsClient, PsOptions};
+use rustflow::distributed::train::{DistTrainer, DistTrainerOptions};
+use rustflow::graph::Endpoint;
+use rustflow::optim::Optimizer;
+use rustflow::tensor::Tensor;
+use rustflow::util::json::Json;
+use rustflow::{wire, GraphBuilder, Session, SessionOptions};
+
+#[test]
+fn local_chrome_trace_parses_and_orders_kernels() {
+    // A dependent chain m → r → f with intra-op lanes on: the chrome
+    // trace must be valid JSON (our own parser), every span must carry
+    // this run's step id, and data dependencies must show up as ordered
+    // spans even with multiple lanes running.
+    let mut b = GraphBuilder::new();
+    let x = b.constant(
+        Tensor::from_f32(vec![64, 64], (0..4096).map(|i| (i % 13) as f32 * 0.25).collect())
+            .unwrap(),
+    );
+    let m = b.matmul(x, x);
+    let r = b.relu(m);
+    let f = b.matmul(r, r);
+    let m_name = b.graph.node(m.node).name.clone();
+    let r_name = b.graph.node(r.node).name.clone();
+    let fetch = format!("{}:0", b.graph.node(f.node).name);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions {
+            trace: true,
+            intra_op_threads: 4,
+            // Keep the const-rooted chain executing as kernels.
+            enable_constant_folding: false,
+            ..Default::default()
+        },
+    );
+    sess.run(&[], &[&fetch], &[]).unwrap();
+
+    let trace = sess.last_trace().expect("tracing enabled");
+    let events = trace.events();
+    let stats = sess.last_step_stats().expect("step stats produced");
+    assert!(events.iter().all(|e| e.step == stats.step_id), "one step id per run");
+    let ev = |name: &str| {
+        events.iter().find(|e| e.name == *name).unwrap_or_else(|| panic!("no span for {name}"))
+    };
+    let (em, er) = (ev(&m_name), ev(&r_name));
+    // relu consumes the matmul: its span cannot begin before the matmul
+    // span ends (±2µs timestamp truncation slack).
+    assert!(
+        er.start_us + 2 >= em.start_us + em.dur_us,
+        "relu at {} before matmul [{}, +{}] ended",
+        er.start_us,
+        em.start_us,
+        em.dur_us
+    );
+
+    let json = trace.to_chrome_trace();
+    let parsed = Json::parse(&json).unwrap();
+    let arr = parsed.as_array().unwrap();
+    assert_eq!(arr.len(), events.len());
+    for e in arr {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(e.get("ts").and_then(Json::as_i64).unwrap() >= 0);
+        assert!(e.get("dur").and_then(Json::as_i64).unwrap() >= 1);
+        let step = e.get("args").unwrap().get("step").and_then(Json::as_i64).unwrap();
+        assert_eq!(step as u64, stats.step_id);
+    }
+}
+
+/// The tower from the training tests: loss = (w0*x + w1 - y)^2.
+fn tower(b: &mut GraphBuilder) -> (Endpoint, Endpoint, Endpoint) {
+    let w0 = b.variable("w0", Tensor::scalar_f32(0.25)).unwrap();
+    let w1 = b.variable("w1", Tensor::scalar_f32(-0.5)).unwrap();
+    let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+    let y = b.placeholder("y", rustflow::DType::F32).unwrap();
+    let wx = b.mul(w0, x);
+    let pred = b.add(wx, w1);
+    let d = b.sub(pred, y);
+    (b.square(d), w0, w1)
+}
+
+#[test]
+fn two_replica_sync_step_merges_into_one_timeline() {
+    // The acceptance path: two synchronous replicas train against a
+    // tracing parameter server; replica 1 hands its fragment to replica
+    // 0, whose `merged_trace` pulls the shard's spans (clock-aligned via
+    // the HELLO offsets) and renders one chrome://tracing JSON with
+    // worker AND ps lanes carrying consistent step ids.
+    const STEPS: u64 = 2;
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.25),
+        sync_replicas: Some(2),
+        trace: true,
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    let trainers: Vec<DistTrainer> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2u32)
+            .map(|r| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut b = GraphBuilder::new();
+                    let (loss, w0, w1) = tower(&mut b);
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &[w0, w1],
+                        r,
+                        &[addr],
+                        DistTrainerOptions { compress: false, ..Default::default() },
+                        SessionOptions { trace: true, ..Default::default() },
+                    )
+                    .unwrap();
+                    t.init_params().unwrap();
+                    for s in 0..STEPS {
+                        let x = 1.0 + 0.5 * r as f32 + 0.25 * s as f32;
+                        let feeds =
+                            [("x", Tensor::scalar_f32(x)), ("y", Tensor::scalar_f32(2.0 * x))];
+                        t.step(&feeds).unwrap();
+                    }
+                    t
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Give the applier a beat to finish recording the final apply span
+    // (pushes unblock on the version bump, a hair before the span ends).
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let mut it = trainers.into_iter();
+    let t0 = it.next().unwrap();
+    let t1 = it.next().unwrap();
+    let frag1 = t1.take_trace().expect("replica 1 traced");
+    let json = t0.merged_trace(vec![frag1]).unwrap();
+
+    let parsed = Json::parse(&json).unwrap();
+    let arr = parsed.as_array().unwrap();
+    // (pid, name, ts, step) per event.
+    let rows: Vec<(String, String, i64, u64)> = arr
+        .iter()
+        .map(|e| {
+            (
+                e.get("pid").and_then(Json::as_str).unwrap().to_string(),
+                e.get("name").and_then(Json::as_str).unwrap().to_string(),
+                e.get("ts").and_then(Json::as_i64).unwrap(),
+                e.get("args").unwrap().get("step").and_then(Json::as_i64).unwrap() as u64,
+            )
+        })
+        .collect();
+
+    // All three lanes present.
+    for pid in ["replica:0", "replica:1", "ps"] {
+        assert!(rows.iter().any(|(p, ..)| p == pid), "no {pid} lane in {json}");
+    }
+    // Each replica lane has the three phase spans for every step, plus
+    // at least one session kernel span re-tagged with the step number.
+    for pid in ["replica:0", "replica:1"] {
+        for step in 0..STEPS {
+            for phase in ["replica/pull", "replica/compute", "replica/push"] {
+                assert!(
+                    rows.iter().any(|(p, n, _, s)| p == pid && n == phase && *s == step),
+                    "{pid} missing {phase} at step {step}"
+                );
+            }
+            assert!(
+                rows.iter().any(|(p, n, _, s)| p == pid
+                    && *s == step
+                    && !n.starts_with("replica/")),
+                "{pid} has no kernel spans at step {step}"
+            );
+        }
+    }
+    // The ps lane shows the sync protocol: recv + barrier-wait for both
+    // steps, and an apply for step 0 at minimum (step 1's span recording
+    // can race the final unblock). Every ps step id is a real step.
+    for step in 0..STEPS {
+        for phase in ["ps/recv", "ps/barrier_wait"] {
+            assert!(
+                rows.iter().any(|(p, n, _, s)| p == "ps" && n == phase && *s == step),
+                "ps missing {phase} at step {step}"
+            );
+        }
+    }
+    assert!(rows.iter().any(|(p, n, _, s)| p == "ps" && n == "ps/apply" && *s == 0));
+    assert!(rows.iter().all(|(p, _, _, s)| p != "ps" || *s < STEPS));
+
+    // One aligned timeline: normalized to 0, everything within a sane
+    // window, and causality holds across processes — step 0's apply
+    // cannot precede the first replica/push of step 0 (5ms slack for the
+    // loopback clock-offset estimate).
+    assert_eq!(rows.iter().map(|(_, _, ts, _)| *ts).min(), Some(0));
+    assert!(rows.iter().all(|(_, _, ts, _)| *ts < 120_000_000), "wild timestamp in {json}");
+    let first_push = rows
+        .iter()
+        .filter(|(_, n, _, s)| n == "replica/push" && *s == 0)
+        .map(|(_, _, ts, _)| *ts)
+        .min()
+        .unwrap();
+    let apply = rows
+        .iter()
+        .filter(|(p, n, _, s)| p == "ps" && n == "ps/apply" && *s == 0)
+        .map(|(_, _, ts, _)| *ts)
+        .min()
+        .unwrap();
+    assert!(apply + 5_000 >= first_push, "apply at {apply} before any push at {first_push}");
+
+    // Everything was drained: a second merge has no replica-0/ps events.
+    let again = t0.merged_trace(vec![]).unwrap();
+    assert_eq!(Json::parse(&again).unwrap().as_array().unwrap().len(), 0);
+    ps.shutdown();
+}
+
+#[test]
+fn hostile_trace_wire_frames_error_not_panic() {
+    // Server side: a garbage frame (truncated header) drops that
+    // connection only — the server keeps serving trace pulls.
+    let ps = ParamServer::new(PsOptions { trace: true, ..Default::default() });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+    {
+        use std::io::Write;
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(&[0xFF, 0xFF, 0x03]).unwrap(); // 3 of 5 header bytes
+    } // dropped mid-frame
+    let c = PsClient::connect(&addr, false).unwrap();
+    let frag = c.trace_pull().unwrap();
+    assert_eq!(frag.process, "ps");
+    ps.shutdown();
+
+    // Client side: a server replying MSG_TRACE_REPLY with a truncated
+    // payload must surface as a decode error from `trace_pull`.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let fake_addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let (t, _) = wire::read_frame(&mut s).unwrap();
+        assert_eq!(t, proto::MSG_PS_HELLO);
+        let hello = proto::PsHelloReply { status: Ok(()), flags: 0, time_us: 0 };
+        wire::write_frame(&mut s, proto::MSG_PS_HELLO_REPLY, &hello.encode()).unwrap();
+        let (t, _) = wire::read_frame(&mut s).unwrap();
+        assert_eq!(t, proto::MSG_TRACE_PULL);
+        // A fragment with a claimed event count but no event bytes.
+        let mut garbage = Vec::new();
+        garbage.push(255u8); // status: Ok
+        wire::put_str(&mut garbage, "ps");
+        wire::put_u64(&mut garbage, 0); // dropped
+        wire::put_u32(&mut garbage, 1000); // 1000 events follow... or not
+        wire::write_frame(&mut s, proto::MSG_TRACE_REPLY, &garbage).unwrap();
+    });
+    let c = PsClient::connect(&fake_addr, false).unwrap();
+    assert!(c.trace_pull().is_err(), "truncated fragment must fail to decode");
+    fake.join().unwrap();
+}

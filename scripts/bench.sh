@@ -2,10 +2,11 @@
 # Perf trajectory, as one command: runs the §5 optimizer ablation bench,
 # the step-memory-planner bench, the intra-op parallelism bench, the
 # serving throughput bench, the wire-serving (model hub) bench, and the
-# distributed-training bench, and writes BENCH_optimizer.json +
-# BENCH_memory.json + BENCH_parallel.json + BENCH_serving_net.json +
-# BENCH_dist_train.json at the repo root (machine-readable; one file per
-# tracked benchmark family).
+# distributed-training bench, and the tracing-overhead bench, and writes
+# BENCH_optimizer.json + BENCH_memory.json + BENCH_parallel.json +
+# BENCH_serving_net.json + BENCH_dist_train.json +
+# BENCH_trace_overhead.json at the repo root (machine-readable; one file
+# per tracked benchmark family).
 #
 #   scripts/bench.sh
 #
@@ -15,9 +16,10 @@
 # asserts ≥ 2x matmul throughput at 4 intra-op threads (when the machine
 # has ≥ 4 cores) with no 1-thread regression, the serving_net bench
 # asserts a mid-run model hot-swap costs < 20% of one throughput window
-# (≥ 4 cores), and the dist_train bench asserts bf16 gradient/param
-# compression cuts wire bytes ≥ 40% at unchanged convergence, so this
-# script fails on a perf regression.
+# (≥ 4 cores), the dist_train bench asserts bf16 gradient/param
+# compression cuts wire bytes ≥ 40% at unchanged convergence, and the
+# trace_overhead bench asserts step tracing costs ≤ 25% on real kernels,
+# so this script fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
@@ -26,6 +28,7 @@ export BENCH_MEMORY_JSON="$(pwd)/BENCH_memory.json"
 export BENCH_PARALLEL_JSON="$(pwd)/BENCH_parallel.json"
 export BENCH_SERVING_NET_JSON="$(pwd)/BENCH_serving_net.json"
 export BENCH_DIST_TRAIN_JSON="$(pwd)/BENCH_dist_train.json"
+export BENCH_TRACE_OVERHEAD_JSON="$(pwd)/BENCH_trace_overhead.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
@@ -44,5 +47,8 @@ cargo bench --bench serving_net
 
 echo "== cargo bench --bench dist_train (writes $BENCH_DIST_TRAIN_JSON)"
 cargo bench --bench dist_train
+
+echo "== cargo bench --bench trace_overhead (writes $BENCH_TRACE_OVERHEAD_JSON)"
+cargo bench --bench trace_overhead
 
 echo "bench: OK"

@@ -1,0 +1,161 @@
+//! Sparse embedding subsystem end to end (§3's embedding idiom, §4.2's
+//! sparse gradients): a mod-sharded table whose lookup differentiates
+//! into per-shard `IndexedSlices`, sampled-softmax skip-gram training,
+//! and two synchronous replicas shipping `GradEntry::Sparse` natively —
+//! the dense `[vocab, dim]` gradient never exists anywhere.
+//!
+//!     cargo run --release --example embeddings -- [steps]
+//!
+//! Exits non-zero if training fails to reduce the loss or the sparse
+//! wire path fails to beat the dense one (CI smoke).
+
+use rustflow::autodiff::gradients;
+use rustflow::distributed::{DistTrainer, DistTrainerOptions, ParamServer, PsOptions};
+use rustflow::optim::Optimizer;
+use rustflow::sparse::{self, ShardedTable};
+use rustflow::tensor::Tensor;
+use rustflow::util::rng::Pcg32;
+use rustflow::{DType, GraphBuilder, SessionOptions};
+
+const VOCAB: usize = 256;
+const DIM: usize = 16;
+const BATCH: usize = 8;
+const NUM_SAMPLED: i64 = 8;
+const REPLICAS: usize = 2;
+
+fn random_table(vocab: usize, dim: usize, scale: f32, seed: u64) -> Tensor {
+    let mut rng = Pcg32::new(seed);
+    let v: Vec<f32> = (0..vocab * dim).map(|_| scale * rng.normal()).collect();
+    Tensor::from_f32(vec![vocab, dim], v).expect("table shape")
+}
+
+/// Part 1: a 4-way mod-sharded table. The lookup is bit-identical to an
+/// unsharded Gather, and its gradient is one IndexedSlices per shard —
+/// indexed by *local* rows, sized by the batch, not the vocabulary.
+fn sharded_demo() -> rustflow::Result<()> {
+    let mut b = GraphBuilder::new();
+    let t = ShardedTable::new(&mut b, "emb", random_table(64, 8, 1.0, 3), 4)?;
+    let ids = sparse::ids_const(&mut b, vec![7, 41, 2, 7, 63, 12]);
+    let rows = t.lookup(&mut b, ids)?;
+    let sq = b.square(rows);
+    let loss = b.reduce_sum(sq, None);
+    let grads = gradients(&mut b, loss, &t.shards)?;
+    print!("sharded: 64x8 table over {} shards; lookup of 6 ids; grads:", t.shards.len());
+    for g in grads.iter() {
+        let g = g.expect("every shard on the gradient path");
+        let s = sparse::as_sparse(&b, g).expect("shard gradient is IndexedSlices");
+        assert_ne!(s.indices, s.values);
+        print!(" sparse");
+    }
+    println!(" (no dense [vocab, dim] tensor exists)");
+    Ok(())
+}
+
+/// A replica's graph: skip-gram with sampled softmax. Both trainable
+/// tensors get sparse gradients — the input table through `Gather`, the
+/// output weights through `SampledSoftmax` (rows = labels + negatives).
+fn build_replica(
+    seed: i64,
+) -> rustflow::Result<(GraphBuilder, rustflow::Endpoint, Vec<rustflow::Endpoint>)> {
+    let mut b = GraphBuilder::new();
+    let emb = b.variable("emb", random_table(VOCAB, DIM, 0.1, 5))?;
+    let w = b.variable("w", random_table(VOCAB, DIM, 0.1, 6))?;
+    let centers = b.placeholder("centers", DType::I64)?;
+    let labels = b.placeholder("labels", DType::I64)?;
+    let rows = b.op1("Gather", "center_emb", vec![emb, centers], vec![])?;
+    let loss_vec = sparse::sampled_softmax(&mut b, rows, w, labels, NUM_SAMPLED, seed)?;
+    let loss = b.reduce_sum(loss_vec, None);
+    Ok((b, loss, vec![emb, w]))
+}
+
+/// Synthetic skip-gram batch: centers drawn from a fixed stream, context
+/// is the next token on a ring.
+fn batch(rng: &mut Pcg32) -> (Tensor, Tensor) {
+    let centers: Vec<i64> = (0..BATCH).map(|_| rng.index(VOCAB) as i64).collect();
+    let labels: Vec<i64> = centers.iter().map(|&c| (c + 1) % VOCAB as i64).collect();
+    (
+        Tensor::from_i64(vec![BATCH], centers).expect("batch shape"),
+        Tensor::from_i64(vec![BATCH], labels).expect("batch shape"),
+    )
+}
+
+/// Part 2+3: two synchronous replicas against one parameter-server
+/// shard; embedding gradients travel as `GradEntry::Sparse` when
+/// `native_sparse` is on, as fetched-dense tensors when off.
+fn train(steps: usize, native_sparse: bool) -> rustflow::Result<(f32, f32, u64)> {
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.1),
+        sync_replicas: Some(REPLICAS),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0")?.to_string();
+    let losses: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..REPLICAS)
+            .map(|r| {
+                let addr = addr.clone();
+                scope.spawn(move || -> rustflow::Result<Vec<f32>> {
+                    let (b, loss, vars) = build_replica(17)?;
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &vars,
+                        r as u32,
+                        &[addr],
+                        DistTrainerOptions {
+                            compress: false,
+                            native_sparse,
+                            ..Default::default()
+                        },
+                        SessionOptions::default(),
+                    )?;
+                    assert_eq!(
+                        t.native_sparse().iter().filter(|&&s| s).count(),
+                        if native_sparse { 2 } else { 0 },
+                        "emb and w both ride the IndexedSlices path iff enabled"
+                    );
+                    t.init_params()?;
+                    let mut rng = Pcg32::new(900 + r as u64);
+                    (0..steps)
+                        .map(|_| {
+                            let (c, l) = batch(&mut rng);
+                            t.step(&[("centers", c), ("labels", l)])
+                        })
+                        .collect()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica thread panicked"))
+            .collect::<rustflow::Result<Vec<_>>>()
+    })?;
+    let bytes = ps.wire_bytes();
+    ps.shutdown();
+    Ok((losses[0][0], losses[0][losses[0].len() - 1], bytes))
+}
+
+fn main() -> rustflow::Result<()> {
+    let steps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    sharded_demo()?;
+
+    let (first, last, sparse_bytes) = train(steps, true)?;
+    let (_, _, dense_bytes) = train(steps, false)?;
+    let improved = last < first;
+    println!(
+        "skip-gram ({VOCAB}-token vocab, {REPLICAS} sync replicas, {steps} steps): \
+         loss {first:.4} -> {last:.4}{}",
+        if improved { "" } else { "  [NO IMPROVEMENT]" },
+    );
+    println!(
+        "wire: {:.1} KiB sparse vs {:.1} KiB dense ({:.1}x)",
+        sparse_bytes as f64 / 1024.0,
+        dense_bytes as f64 / 1024.0,
+        dense_bytes as f64 / sparse_bytes as f64,
+    );
+    if !improved || sparse_bytes >= dense_bytes {
+        eprintln!("embedding smoke failed (improved={improved}, sparse {sparse_bytes} B, dense {dense_bytes} B)");
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! Sparse embedding training bench (§4.2): steps/sec and bytes-on-wire
+//! for 2 synchronous replicas updating a [VOCAB, DIM] embedding table
+//! through one parameter-server shard, native `GradEntry::Sparse`
+//! (IndexedSlices straight off the graph) vs the dense wire path
+//! (densify + full-table push) at fixed work.
+//!
+//! Acceptance bar: with ≤ 10% of rows touched per step, the sparse path
+//! sustains ≥ 2x the dense path's steps/sec (skipped — recorded in the
+//! JSON — when a run touches more rows than that).
+//!
+//!     cargo bench --bench embeddings
+//!
+//! Writes BENCH_embeddings.json (path from $BENCH_EMBEDDINGS_JSON, set
+//! by scripts/bench.sh).
+
+use rustflow::distributed::{DistTrainer, DistTrainerOptions, ParamServer, PsOptions};
+use rustflow::optim::Optimizer;
+use rustflow::util::json::Json;
+use rustflow::{DType, GraphBuilder, SessionOptions};
+use std::time::{Duration, Instant};
+
+const VOCAB: usize = 8192;
+const DIM: usize = 32;
+const BATCH: usize = 64;
+/// Lookups cycle through this many leading rows, so steps revisit rows
+/// and the loss (Σ gathered²) decays — a convergence check, not noise.
+const HOT_ROWS: usize = 512;
+const REPLICAS: usize = 2;
+const STEPS: usize = 20;
+
+struct RunOut {
+    steps_per_sec: f64,
+    wire_bytes: u64,
+    first_loss: f32,
+    last_loss: f32,
+    elapsed: Duration,
+}
+
+/// `BATCH` distinct ids for (step, replica) — replicas touch disjoint
+/// blocks within a step, every block ≤ 10% of the vocabulary.
+fn step_ids(step: usize, replica: usize) -> Vec<i64> {
+    let base = ((step * REPLICAS + replica) * BATCH) % HOT_ROWS;
+    (0..BATCH).map(|k| ((base + k) % HOT_ROWS) as i64).collect()
+}
+
+/// Synchronous 2-replica run over a fresh shard: same graph either way;
+/// `native_sparse` picks which wire form the Gather gradient takes.
+fn run(native_sparse: bool) -> RunOut {
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.25),
+        sync_replicas: Some(REPLICAS),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    let t0 = Instant::now();
+    let losses: Vec<Vec<f32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..REPLICAS)
+            .map(|r| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut b = GraphBuilder::new();
+                    let emb = b
+                        .variable_uniform("emb", vec![VOCAB, DIM], -0.5, 0.5, 9)
+                        .unwrap();
+                    let ids = b.placeholder("ids", DType::I64).unwrap();
+                    let rows =
+                        b.op1("Gather", "lookup", vec![emb, ids], vec![]).unwrap();
+                    let sq = b.square(rows);
+                    let loss = b.reduce_sum(sq, None);
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &[emb],
+                        r as u32,
+                        &[addr],
+                        DistTrainerOptions {
+                            compress: false,
+                            native_sparse,
+                            ..Default::default()
+                        },
+                        SessionOptions::default(),
+                    )
+                    .unwrap();
+                    t.init_params().unwrap();
+                    (0..STEPS)
+                        .map(|s| {
+                            let ids = step_ids(s, r);
+                            let n = ids.len();
+                            let feed =
+                                rustflow::tensor::Tensor::from_i64(vec![n], ids).unwrap();
+                            t.step(&[("ids", feed)]).unwrap()
+                        })
+                        .collect::<Vec<f32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
+    });
+    let elapsed = t0.elapsed();
+    let wire_bytes = ps.wire_bytes();
+    ps.shutdown();
+    RunOut {
+        steps_per_sec: STEPS as f64 / elapsed.as_secs_f64(),
+        wire_bytes,
+        first_loss: losses[0][0],
+        last_loss: losses[0][STEPS - 1],
+        elapsed,
+    }
+}
+
+fn main() {
+    let touched_fraction = BATCH as f64 / VOCAB as f64;
+    println!(
+        "{:<28} {:>10} {:>12} {:>10} {:>10}",
+        "config", "steps/s", "wire KiB", "loss[0]", "loss[-1]"
+    );
+    let sparse = run(true);
+    let dense = run(false);
+    for (label, r) in [("sparse (IndexedSlices)", &sparse), ("dense (densified push)", &dense)] {
+        println!(
+            "{:<28} {:>10.1} {:>12.1} {:>10.2} {:>10.2}",
+            label,
+            r.steps_per_sec,
+            r.wire_bytes as f64 / 1024.0,
+            r.first_loss,
+            r.last_loss,
+        );
+    }
+
+    let speedup = sparse.steps_per_sec / dense.steps_per_sec;
+    let wire_ratio = dense.wire_bytes as f64 / sparse.wire_bytes as f64;
+    let converged = sparse.last_loss < sparse.first_loss && dense.last_loss < dense.first_loss;
+    // The ≥2x bar is only claimed for genuinely sparse updates.
+    let assertable = touched_fraction <= 0.10;
+    println!(
+        "sparse wire path: {speedup:.2}x steps/s, {wire_ratio:.1}x fewer wire bytes \
+         ({:.2}% rows touched/step)",
+        touched_fraction * 100.0
+    );
+
+    let out = Json::obj()
+        .set("bench", "embeddings")
+        .set("table", format!("{VOCAB}x{DIM}"))
+        .set("batch", BATCH)
+        .set("sync_replicas", REPLICAS)
+        .set("steps", STEPS)
+        .set("touched_fraction", touched_fraction)
+        .set("sparse_steps_per_sec", sparse.steps_per_sec)
+        .set("dense_steps_per_sec", dense.steps_per_sec)
+        .set("speedup", speedup)
+        .set("sparse_wire_bytes", sparse.wire_bytes)
+        .set("dense_wire_bytes", dense.wire_bytes)
+        .set("sparse_elapsed_ms", sparse.elapsed.as_millis() as u64)
+        .set("dense_elapsed_ms", dense.elapsed.as_millis() as u64)
+        .set("sparse_last_loss", sparse.last_loss as f64)
+        .set("dense_last_loss", dense.last_loss as f64)
+        .set("converged", converged)
+        .set("assert_skipped", !assertable);
+
+    let path = std::env::var("BENCH_EMBEDDINGS_JSON")
+        .unwrap_or_else(|_| "BENCH_embeddings.json".to_string());
+    std::fs::write(&path, out.render()).expect("write bench json");
+    println!("\nwrote {path}");
+
+    assert!(converged, "both wire paths must reduce the loss");
+    assert!(
+        sparse.wire_bytes < dense.wire_bytes,
+        "sparse pushes must spend fewer bytes than dense ({} vs {})",
+        sparse.wire_bytes,
+        dense.wire_bytes
+    );
+    if assertable {
+        assert!(
+            speedup >= 2.0,
+            "sparse wire path must be >= 2x dense steps/s at {:.2}% touched rows (got {speedup:.2}x)",
+            touched_fraction * 100.0
+        );
+        println!("embeddings: OK ({speedup:.2}x steps/s, {wire_ratio:.1}x fewer wire bytes)");
+    } else {
+        println!(
+            "embeddings: OK ({speedup:.2}x steps/s; >=2x assertion skipped \
+             ({:.0}% rows touched/step > 10%))",
+            touched_fraction * 100.0
+        );
+    }
+}

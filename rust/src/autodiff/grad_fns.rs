@@ -292,11 +292,96 @@ pub(super) fn install(m: &mut HashMap<&'static str, GradFn>) {
         Ok(vec![Some(dx)])
     });
     m.insert("Gather", |b, node, gs| {
-        // Dense scatter-add: build via SumToShape over a one-hot matmul is
-        // overkill here; gradient support for Gather is "unimplemented"
-        // like early TF — callers use dense ops in differentiable paths.
-        let _ = (b, node, gs);
-        Ok(vec![None, None])
+        // d params is an IndexedSlices (§4.2's sparse gradients): rows
+        // `indices` of the params receive the matching rows of g — never
+        // a dense zeros-like of the table. The returned endpoint is a
+        // *lazy* SparseToDense node whose (indices, values) twins are
+        // recorded in `b.sparse_grads`; sparse-aware consumers fetch the
+        // twins and the densify never executes.
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let idx = b.cast(ins[1], crate::tensor::DType::I64);
+        let handle = b.op1("SparseToDense", "gather_grad", vec![idx, g, ins[0]], vec![])?;
+        b.sparse_grads
+            .insert(handle, crate::sparse::IndexedSlices { indices: idx, values: g });
+        Ok(vec![Some(handle), None])
+    });
+    m.insert("UnsortedSegmentSum", |b, node, gs| {
+        // d data[k] = g[segment_ids[k]].
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        Ok(vec![Some(b.op1("Gather", "seg_grad", vec![g, ins[1]], vec![])?), None])
+    });
+    m.insert("ScatterAdd", |b, node, gs| {
+        // out = x + scatter(updates): dx = g, dupdates = g[indices].
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let du = b.op1("Gather", "scatter_grad", vec![g, ins[1]], vec![])?;
+        Ok(vec![Some(g), None, Some(du)])
+    });
+    m.insert("ScatterSub", |b, node, gs| {
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let du = b.op1("Gather", "scatter_grad", vec![g, ins[1]], vec![])?;
+        Ok(vec![Some(g), None, Some(b.neg(du))])
+    });
+    m.insert("DynamicPartition", |b, node, gs| {
+        // Stitch the per-partition gradients back into data order by
+        // partitioning the row ids the same way; partitions nothing was
+        // fetched from densify to zeros so the stitch covers every row.
+        let ins = inputs(b, node);
+        let n_parts = gs.len() as i64;
+        let rows = b.op1("RowIds", "rowids", vec![ins[0]], vec![])?;
+        let id_parts = b.op(
+            "DynamicPartition",
+            "part_rows",
+            vec![rows, ins[1]],
+            vec![("num_partitions", n_parts.into())],
+        )?;
+        let mut stitch_in: Vec<Endpoint> =
+            (0..gs.len()).map(|k| Endpoint::new(id_parts, k)).collect();
+        for (k, gk) in gs.iter().enumerate() {
+            stitch_in.push(crate::autodiff::grad_or_zeros(b, out(node, k), *gk));
+        }
+        let d = b.op1("DynamicStitch", "unpartition", stitch_in, vec![("N", n_parts.into())])?;
+        Ok(vec![Some(d), None])
+    });
+    m.insert("DynamicStitch", |b, node, gs| {
+        // d data_k = g[indices_k]. Exact when the stitch indices are a
+        // permutation (as in sharded lookups); duplicate indices are
+        // last-wins forward, so overwritten rows would be over-credited.
+        let ins = inputs(b, node);
+        let n = ins.len() / 2;
+        let g = gs[0].unwrap();
+        let mut grads: Vec<Option<Endpoint>> = vec![None; n];
+        for &idx in ins.iter().take(n) {
+            grads.push(Some(b.op1("Gather", "stitch_grad", vec![g, idx], vec![])?));
+        }
+        Ok(grads)
+    });
+    m.insert("SampledSoftmax", |b, node, gs| {
+        // Fused grad kernel re-draws the step's negatives and returns
+        // (demb dense, dweights as indices+values). The weights gradient
+        // rides the IndexedSlices path like Gather's.
+        let ins = inputs(b, node);
+        let g = gs[0].unwrap();
+        let n = b.graph.node(node);
+        let num_sampled =
+            n.attrs.get("num_sampled").and_then(|a| a.as_i64().ok()).unwrap_or(1);
+        let seed = n.attrs.get("seed").and_then(|a| a.as_i64().ok()).unwrap_or(0);
+        let gid = b.op(
+            "SampledSoftmaxGrad",
+            "sampled_softmax_grad",
+            vec![ins[0], ins[1], ins[2], g],
+            vec![("num_sampled", num_sampled.into()), ("seed", seed.into())],
+        )?;
+        let demb = Endpoint::new(gid, 0);
+        let idx = Endpoint::new(gid, 1);
+        let vals = Endpoint::new(gid, 2);
+        let handle = b.op1("SparseToDense", "dweights", vec![idx, vals, ins[1]], vec![])?;
+        b.sparse_grads
+            .insert(handle, crate::sparse::IndexedSlices { indices: idx, values: vals });
+        Ok(vec![Some(demb), Some(handle), None])
     });
     m.insert("Select", |b, node, gs| {
         let ins = inputs(b, node);

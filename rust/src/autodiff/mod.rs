@@ -50,6 +50,33 @@ pub fn has_gradient(op: &str) -> bool {
     GRAD_REGISTRY.read().unwrap().contains_key(op)
 }
 
+/// Sum several partial gradients targeting one forward endpoint. When
+/// *every* part is an `IndexedSlices` (per `b.sparse_grads`), the sum
+/// stays sparse: concat the indices and values row-wise (duplicates mean
+/// "sum" downstream) and register a combined lazy densify handle. Any
+/// dense part forces `AddN` over the dense handles.
+fn accumulate(b: &mut GraphBuilder, parts: &[Endpoint]) -> Endpoint {
+    if parts.len() == 1 {
+        return parts[0];
+    }
+    let sparse: Option<Vec<crate::sparse::IndexedSlices>> =
+        parts.iter().map(|p| b.sparse_grads.get(p).copied()).collect();
+    if let Some(slices) = sparse {
+        // Every part is a SparseToDense handle over the same forward
+        // tensor, so part 0's `like` input serves the combined handle.
+        let like = b.graph.node(parts[0].node).inputs[2];
+        let idx = b.concat(slices.iter().map(|s| s.indices).collect(), 0);
+        let vals = b.concat(slices.iter().map(|s| s.values).collect(), 0);
+        let handle = b
+            .op1("SparseToDense", "sparse_accum", vec![idx, vals, like], vec![])
+            .expect("SparseToDense arity is fixed");
+        b.sparse_grads
+            .insert(handle, crate::sparse::IndexedSlices { indices: idx, values: vals });
+        return handle;
+    }
+    b.add_n(parts.to_vec())
+}
+
 /// Compute symbolic gradients of (scalar-ish) `y` w.r.t. each of `xs` by
 /// extending the graph. Returns one endpoint per x (None when y does not
 /// depend on x).
@@ -101,12 +128,8 @@ pub fn gradients(
         for port in 0..num_outputs {
             let ep = Endpoint::new(node_id, port);
             match grads.get(&ep) {
-                Some(parts) if parts.len() == 1 => {
-                    grad_outputs.push(Some(parts[0]));
-                    any = true;
-                }
                 Some(parts) => {
-                    let sum = b.add_n(parts.clone());
+                    let sum = accumulate(b, &parts.clone());
                     grad_outputs.push(Some(sum));
                     any = true;
                 }
@@ -151,11 +174,7 @@ pub fn gradients(
 
     Ok(xs
         .iter()
-        .map(|x| match grads.get(x) {
-            Some(parts) if parts.len() == 1 => Some(parts[0]),
-            Some(parts) => Some(b.add_n(parts.clone())),
-            None => None,
-        })
+        .map(|x| grads.get(x).map(|parts| accumulate(b, &parts.clone())))
         .collect())
 }
 

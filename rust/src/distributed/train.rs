@@ -24,6 +24,13 @@
 //! touched-row fraction is below
 //! [`DistTrainerOptions::sparse_row_threshold`] travel row-sparse when
 //! `sparse_push` is on.
+//!
+//! Gradients that autodiff already produced as `IndexedSlices`
+//! ([`GraphBuilder::sparse_grads`] — the `Gather`/sampled-softmax path)
+//! skip the densify node *and* the sniffer entirely: the trainer fetches
+//! the (indices, values) twins and ships [`GradEntry::Sparse`] natively,
+//! so the dense `[vocab, dim]` gradient never exists anywhere — not in
+//! the executor, not on the wire.
 
 use super::proto::GradEntry;
 use super::ps::PsClient;
@@ -48,11 +55,20 @@ pub struct DistTrainerOptions {
     /// Push sparse only when `touched_rows / rows` is at or below this
     /// fraction (above it, dense is smaller or comparable on the wire).
     pub sparse_row_threshold: f64,
+    /// Ship `IndexedSlices` gradients natively (fetch the twins, never
+    /// densify). Off forces the dense handle path — A/B support for
+    /// measuring what the sparse wire format saves.
+    pub native_sparse: bool,
 }
 
 impl Default for DistTrainerOptions {
     fn default() -> Self {
-        DistTrainerOptions { compress: true, sparse_push: false, sparse_row_threshold: 0.5 }
+        DistTrainerOptions {
+            compress: true,
+            sparse_push: false,
+            sparse_row_threshold: 0.5,
+            native_sparse: true,
+        }
     }
 }
 
@@ -75,7 +91,12 @@ pub struct DistTrainer {
     /// Shard index per variable, aligned with `var_names`.
     var_shard: Vec<usize>,
     loss_fetch: String,
+    /// Flat fetch list: one name per dense gradient, two consecutive
+    /// names (indices, values) per natively-sparse gradient.
     grad_fetches: Vec<String>,
+    /// Per variable: does its gradient ride the native IndexedSlices
+    /// path (two fetches) instead of a dense handle (one fetch)?
+    grad_sparse: Vec<bool>,
     /// `ps_in/<var>` placeholder names, aligned with `var_names`.
     assign_feeds: Vec<String>,
     pull_assign: String,
@@ -116,10 +137,27 @@ impl DistTrainer {
             var_names.iter().map(|n| shard_of(n, ps_addrs.len())).collect();
 
         let grads = tower_gradients(&mut b, loss, vars)?;
-        let grad_fetches: Vec<String> = grads
-            .iter()
-            .map(|g| format!("{}:{}", b.graph.node(g.node).name, g.port))
-            .collect();
+        let fetch_name = |b: &GraphBuilder, e: Endpoint| {
+            format!("{}:{}", b.graph.node(e.node).name, e.port)
+        };
+        // Natively-sparse gradients fetch their (indices, values) twins;
+        // the lazy SparseToDense handle is left unfetched and therefore
+        // never executes.
+        let mut grad_fetches: Vec<String> = Vec::with_capacity(grads.len());
+        let mut grad_sparse: Vec<bool> = Vec::with_capacity(grads.len());
+        for g in &grads {
+            match crate::sparse::as_sparse(&b, *g).filter(|_| options.native_sparse) {
+                Some(s) => {
+                    grad_sparse.push(true);
+                    grad_fetches.push(fetch_name(&b, s.indices));
+                    grad_fetches.push(fetch_name(&b, s.values));
+                }
+                None => {
+                    grad_sparse.push(false);
+                    grad_fetches.push(fetch_name(&b, *g));
+                }
+            }
+        }
         let loss_fetch = format!("{}:{}", b.graph.node(loss.node).name, loss.port);
 
         // The injection subgraph: one placeholder + Assign per variable,
@@ -156,6 +194,7 @@ impl DistTrainer {
             var_shard,
             loss_fetch,
             grad_fetches,
+            grad_sparse,
             assign_feeds,
             pull_assign,
             init_ops,
@@ -242,16 +281,29 @@ impl DistTrainer {
 
         let mut per_shard: Vec<Vec<(String, GradEntry)>> =
             vec![Vec::new(); self.clients.len()];
-        for ((name, shard), grad) in
-            self.var_names.iter().zip(&self.var_shard).zip(out.into_iter().skip(1))
+        let mut it = out.into_iter().skip(1);
+        let mut next = || {
+            it.next().ok_or_else(|| Status::internal("fewer fetch results than gradients"))
+        };
+        for ((name, shard), native_sparse) in
+            self.var_names.iter().zip(&self.var_shard).zip(&self.grad_sparse)
         {
-            let entry = if self.options.sparse_push {
-                match sparsify(&grad, self.options.sparse_row_threshold) {
-                    Some((indices, values)) => GradEntry::Sparse { indices, values },
-                    None => GradEntry::Dense(grad),
-                }
+            let entry = if *native_sparse {
+                // IndexedSlices straight off the graph — no densify, no
+                // sniffing, the wire form is the gradient's own form.
+                let indices = next()?;
+                let values = next()?;
+                GradEntry::Sparse { indices, values }
             } else {
-                GradEntry::Dense(grad)
+                let grad = next()?;
+                if self.options.sparse_push {
+                    match sparsify(&grad, self.options.sparse_row_threshold) {
+                        Some((indices, values)) => GradEntry::Sparse { indices, values },
+                        None => GradEntry::Dense(grad),
+                    }
+                } else {
+                    GradEntry::Dense(grad)
+                }
             };
             per_shard[*shard].push((name.clone(), entry));
         }
@@ -293,6 +345,12 @@ impl DistTrainer {
     /// (test support).
     pub fn assign_feeds(&self) -> &[String] {
         &self.assign_feeds
+    }
+
+    /// Per-variable flags: true where the gradient rides the native
+    /// IndexedSlices wire path (test support).
+    pub fn native_sparse(&self) -> &[bool] {
+        &self.grad_sparse
     }
 
     /// Per-shard stats JSON from every server.

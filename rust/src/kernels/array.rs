@@ -62,6 +62,26 @@ fn concat_fill_f32(
     Ok(())
 }
 
+/// i64 twin of [`concat_fill_f32`], for index tensors (sparse-gradient
+/// accumulation concats IndexedSlices index vectors).
+fn concat_fill_i64(
+    out: &mut Vec<i64>,
+    xs: &[&Tensor],
+    axis: usize,
+    out_dims: &[usize],
+) -> Result<()> {
+    let outer: usize = out_dims[..axis].iter().product::<usize>().max(1);
+    let inner: usize = out_dims[axis + 1..].iter().product::<usize>().max(1);
+    for o in 0..outer {
+        for x in xs {
+            let v = x.as_i64()?;
+            let ax = x.shape().dims()[axis];
+            out.extend_from_slice(&v[o * ax * inner..(o + 1) * ax * inner]);
+        }
+    }
+    Ok(())
+}
+
 /// Concatenate along `axis`. All inputs must agree on other dims.
 pub fn concat(xs: &[&Tensor], axis: i64) -> Result<Tensor> {
     let (shape, axis) = concat_shape(xs, axis)?;
@@ -201,26 +221,62 @@ pub fn transpose(x: &Tensor, perm: &[i64]) -> Result<Tensor> {
     Tensor::new(out_shape, TensorData::F32(out))
 }
 
-/// Gather rows: out[i, …] = params[indices[i], …].
-pub fn gather(params: &Tensor, indices: &Tensor) -> Result<Tensor> {
-    let idx = indices.as_i64()?;
+/// Validate a Gather call; returns (output shape, row length). Indices
+/// may be int32 or int64; any other dtype is `InvalidArgument`.
+fn gather_shape(params: &Tensor, indices: &Tensor) -> Result<(Shape, usize)> {
     let dims = params.shape().dims();
     if dims.is_empty() {
         return Err(Status::invalid_argument("Gather: params must have rank >= 1"));
     }
-    let row: usize = dims[1..].iter().product::<usize>().max(1);
-    let v = params.as_f32()?;
-    let mut out = Vec::with_capacity(idx.len() * row);
-    for &i in idx {
-        let i = i as usize;
-        if i >= dims[0] {
-            return Err(Status::out_of_range(format!("Gather: index {i} >= {}", dims[0])));
-        }
-        out.extend_from_slice(&v[i * row..(i + 1) * row]);
+    if !matches!(indices.dtype(), DType::I32 | DType::I64) {
+        return Err(Status::invalid_argument(format!(
+            "Gather: indices must be int32 or int64, got {}",
+            indices.dtype()
+        )));
     }
+    let row: usize = dims[1..].iter().product::<usize>().max(1);
     let mut out_dims = indices.shape().dims().to_vec();
     out_dims.extend_from_slice(&dims[1..]);
-    Tensor::new(Shape(out_dims), TensorData::F32(out))
+    Ok((Shape(out_dims), row))
+}
+
+/// Push the gathered f32 rows into `out` (empty, capacity pre-sized).
+/// Negative and too-large indices are both `InvalidArgument`.
+fn gather_fill_f32(
+    out: &mut Vec<f32>,
+    params: &Tensor,
+    indices: &Tensor,
+    row: usize,
+) -> Result<()> {
+    let v = params.as_f32()?;
+    let rows = params.shape().dims()[0];
+    let mut push = |i: i64| -> Result<()> {
+        if i < 0 || i as usize >= rows {
+            return Err(Status::invalid_argument(format!(
+                "Gather: index {i} out of range [0, {rows})"
+            )));
+        }
+        let i = i as usize;
+        out.extend_from_slice(&v[i * row..(i + 1) * row]);
+        Ok(())
+    };
+    match indices.data() {
+        TensorData::I64(idx) => idx.iter().try_for_each(|&i| push(i)),
+        TensorData::I32(idx) => idx.iter().try_for_each(|&i| push(i as i64)),
+        d => Err(Status::invalid_argument(format!(
+            "Gather: indices must be int32 or int64, got {}",
+            d.dtype()
+        ))),
+    }
+}
+
+/// Gather rows: out[i, …] = params[indices[i], …]. Indices may be int32
+/// or int64.
+pub fn gather(params: &Tensor, indices: &Tensor) -> Result<Tensor> {
+    let (shape, row) = gather_shape(params, indices)?;
+    let mut out = Vec::with_capacity(shape.num_elements());
+    gather_fill_f32(&mut out, params, indices, row)?;
+    Tensor::new(shape, TensorData::F32(out))
 }
 
 /// Tile by per-axis multiples.
@@ -367,6 +423,13 @@ pub(super) fn register(r: &mut KernelRegistry) {
         let axis = ctx.node.attr("axis")?.as_i64()?;
         let refs: Vec<&Tensor> = ctx.inputs.iter().collect();
         let (shape, axis) = concat_shape(&refs, axis)?;
+        // Dtype dispatch on the first input: f32 data or i64 indices
+        // (sparse-gradient accumulation concats index vectors).
+        if refs[0].dtype() == DType::I64 {
+            let mut out = ctx.alloc_i64(0, shape.num_elements());
+            concat_fill_i64(&mut out, &refs, axis, shape.dims())?;
+            return Ok(vec![ctx.make_output(0, shape, TensorData::I64(out))?]);
+        }
         let mut out = ctx.alloc_f32(0, shape.num_elements());
         concat_fill_f32(&mut out, &refs, axis, shape.dims())?;
         Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
@@ -398,8 +461,15 @@ pub(super) fn register(r: &mut KernelRegistry) {
         transpose_fill_f32(&mut out, x, &perm, shape.dims())?;
         Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
     });
+    // Gather routes through the step arena like Concat: validate + size,
+    // check out the planned slot, fill, wrap with the slot's recycler.
     r.add_sync("Gather", |ctx| {
-        Ok(vec![gather(ctx.input(0)?, ctx.input(1)?)?])
+        let params = ctx.input(0)?;
+        let indices = ctx.input(1)?;
+        let (shape, row) = gather_shape(params, indices)?;
+        let mut out = ctx.alloc_f32(0, shape.num_elements());
+        gather_fill_f32(&mut out, params, indices, row)?;
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
     });
     r.add_sync("Tile", |ctx| {
         let m = ctx.node.attr("multiples")?.as_list_i64()?.to_vec();
@@ -630,6 +700,40 @@ mod tests {
         assert_eq!(g.as_f32().unwrap(), &[5., 6., 1., 2.]);
         let bad = Tensor::from_i64(vec![1], vec![9]).unwrap();
         assert!(gather(&p, &bad).is_err());
+    }
+
+    #[test]
+    fn gather_accepts_i32_indices() {
+        let p = t(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let i32s = Tensor::from_i32(vec![2], vec![2, 0]).unwrap();
+        let i64s = Tensor::from_i64(vec![2], vec![2, 0]).unwrap();
+        let a = gather(&p, &i32s).unwrap();
+        let b = gather(&p, &i64s).unwrap();
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+    }
+
+    #[test]
+    fn gather_hostile_indices_error_not_panic() {
+        use crate::error::Code;
+        let p = t(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        // Negative, out-of-bounds (both dtypes), i64::MIN (usize-cast trap),
+        // and wrong-dtype indices must all fail with InvalidArgument.
+        let hostile = [
+            Tensor::from_i64(vec![1], vec![-1]).unwrap(),
+            Tensor::from_i64(vec![1], vec![3]).unwrap(),
+            Tensor::from_i64(vec![1], vec![i64::MIN]).unwrap(),
+            Tensor::from_i64(vec![1], vec![i64::MAX]).unwrap(),
+            Tensor::from_i32(vec![1], vec![-7]).unwrap(),
+            Tensor::from_i32(vec![2], vec![0, 100]).unwrap(),
+        ];
+        for bad in &hostile {
+            let err = gather(&p, bad).unwrap_err();
+            assert_eq!(err.code, Code::InvalidArgument, "{err:?}");
+        }
+        let fp = Tensor::from_f32(vec![1], vec![0.0]).unwrap();
+        assert_eq!(gather(&p, &fp).unwrap_err().code, Code::InvalidArgument);
+        // Scalar params have no rows to gather.
+        assert!(gather(&Tensor::scalar_f32(1.0), &hostile[1]).is_err());
     }
 
     #[test]

@@ -16,6 +16,7 @@ pub mod math;
 pub mod matrix;
 pub mod nn;
 pub mod queue_ops;
+pub mod sparse;
 pub mod state;
 pub mod summary;
 
@@ -225,6 +226,38 @@ impl KernelContext {
         }
     }
 
+    /// [`KernelContext::alloc_f32`] for i32 outputs (index tensors).
+    pub fn alloc_i32(&self, port: usize, n: usize) -> Vec<i32> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => m.arena.checkout_i32(slot as usize, n),
+            None => Vec::with_capacity(n),
+        }
+    }
+
+    /// [`KernelContext::alloc_f32`] for i64 outputs (index tensors).
+    pub fn alloc_i64(&self, port: usize, n: usize) -> Vec<i64> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => m.arena.checkout_i64(slot as usize, n),
+            None => Vec::with_capacity(n),
+        }
+    }
+
+    /// [`KernelContext::alloc_f32`] for f64 outputs.
+    pub fn alloc_f64(&self, port: usize, n: usize) -> Vec<f64> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => m.arena.checkout_f64(slot as usize, n),
+            None => Vec::with_capacity(n),
+        }
+    }
+
+    /// [`KernelContext::alloc_f32_zeroed`] for f64 outputs.
+    pub fn alloc_f64_zeroed(&self, port: usize, n: usize) -> Vec<f64> {
+        match self.mem.as_ref().and_then(|m| m.out_slot(port).map(|s| (m, s))) {
+            Some((m, slot)) => m.arena.checkout_f64_zeroed(slot as usize, n),
+            None => vec![0.0; n],
+        }
+    }
+
     /// Wrap `data` as the output tensor for `port`, attaching the arena
     /// slot's recycler when the port is planned so the storage returns to
     /// the pool at last drop. Pass storage from `alloc_f32*` here; heap
@@ -393,6 +426,7 @@ fn install_cpu_kernels(r: &mut KernelRegistry) {
     fused::register(r);
     matrix::register(r);
     nn::register(r);
+    sparse::register(r);
     state::register(r);
     queue_ops::register(r);
     comm::register(r);

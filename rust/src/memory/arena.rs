@@ -184,6 +184,67 @@ impl StepArena {
         v
     }
 
+    /// [`StepArena::checkout_f32`] for i32 storage.
+    pub fn checkout_i32(&self, slot: usize, n: usize) -> Vec<i32> {
+        let taken = self.slots[slot].pooled.lock().unwrap().take();
+        match taken {
+            Some(TensorData::I32(mut v)) if v.capacity() >= n => {
+                self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_reused.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            _ => {
+                self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_fresh.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                Vec::with_capacity(n)
+            }
+        }
+    }
+
+    /// [`StepArena::checkout_f32`] for i64 storage.
+    pub fn checkout_i64(&self, slot: usize, n: usize) -> Vec<i64> {
+        let taken = self.slots[slot].pooled.lock().unwrap().take();
+        match taken {
+            Some(TensorData::I64(mut v)) if v.capacity() >= n => {
+                self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_reused.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            _ => {
+                self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_fresh.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                Vec::with_capacity(n)
+            }
+        }
+    }
+
+    /// [`StepArena::checkout_f32`] for f64 storage.
+    pub fn checkout_f64(&self, slot: usize, n: usize) -> Vec<f64> {
+        let taken = self.slots[slot].pooled.lock().unwrap().take();
+        match taken {
+            Some(TensorData::F64(mut v)) if v.capacity() >= n => {
+                self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_reused.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                v.clear();
+                v
+            }
+            _ => {
+                self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
+                self.counters.bytes_fresh.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                Vec::with_capacity(n)
+            }
+        }
+    }
+
+    /// [`StepArena::checkout_f64`] returned zero-filled to `len == n`.
+    pub fn checkout_f64_zeroed(&self, slot: usize, n: usize) -> Vec<f64> {
+        let mut v = self.checkout_f64(slot, n);
+        v.resize(n, 0.0);
+        v
+    }
+
     /// The recycler to attach to tensors built over `slot`'s storage.
     pub fn recycler(&self, slot: usize) -> Arc<dyn BufRecycler> {
         Arc::clone(&self.slots[slot].recycler) as Arc<dyn BufRecycler>

@@ -43,10 +43,16 @@ pub struct Liveness {
 }
 
 impl Liveness {
-    /// Statically known f32 byte size of an endpoint, if any.
+    /// Statically known byte size of an endpoint, for the dtypes the
+    /// arena can pool (f32/f64/i32/i64), if any.
     pub fn static_bytes(&self, node: usize, port: usize) -> Option<usize> {
         match &self.static_info[node][port] {
-            Some((shape, DType::F32)) => Some(shape.num_elements() * 4),
+            Some((shape, DType::F32)) | Some((shape, DType::I32)) => {
+                Some(shape.num_elements() * 4)
+            }
+            Some((shape, DType::F64)) | Some((shape, DType::I64)) => {
+                Some(shape.num_elements() * 8)
+            }
             _ => None,
         }
     }
@@ -79,17 +85,22 @@ pub fn analyze(graph: &Graph, nodes: &[CompiledNode]) -> Result<Liveness> {
             && !cn.has_invariant_consumers
             && !stateful_op(op)
             && op != "Const";
-        // Endpoints *known* to be non-f32 stay on the heap (the kernels'
-        // arena paths are f32-only, so a slot would sit permanently dead);
-        // unknown dtypes may still turn out f32 and get dynamic slots.
-        let known_non_f32 = |port: usize| {
-            matches!(static_info[i].get(port), Some(Some((_, d))) if *d != DType::F32)
+        // Endpoints *known* to be dtypes the arena cannot pool
+        // (Bool/U8/Str/BF16) stay on the heap — a slot there would sit
+        // permanently dead. f32/f64/i32/i64 all have checkout paths now;
+        // unknown dtypes may still turn out poolable and get dynamic slots.
+        let known_unpoolable = |port: usize| {
+            matches!(
+                static_info[i].get(port),
+                Some(Some((_, d)))
+                    if !matches!(d, DType::F32 | DType::F64 | DType::I32 | DType::I64)
+            )
         };
         let mut node_plan = Vec::with_capacity(cn.out_edges.len());
         let mut node_last = Vec::with_capacity(cn.out_edges.len());
         let mut node_cons = Vec::with_capacity(cn.out_edges.len());
         for (port, edges) in cn.out_edges.iter().enumerate() {
-            let mut ok = producer_ok && !known_non_f32(port);
+            let mut ok = producer_ok && !known_unpoolable(port);
             let mut last = pos[i];
             for &(consumer, _slot) in edges {
                 let c = &nodes[consumer.0];

@@ -7,6 +7,7 @@ use super::validate_node;
 use crate::error::Result;
 use crate::graph::{AttrValue, Endpoint, Graph, Node, NodeId};
 use crate::tensor::{DType, Shape, Tensor};
+use std::collections::HashMap;
 
 /// Fluent graph builder.
 #[derive(Default)]
@@ -19,6 +20,13 @@ pub struct GraphBuilder {
     /// Initialization ops (Assign of initial values into Variables);
     /// run once via `Session::run(targets=init_ops)`.
     pub init_ops: Vec<NodeId>,
+    /// Sparse-gradient side table (§4.2 embedding gradients): a gradient
+    /// endpoint that is really an [`IndexedSlices`](crate::sparse::IndexedSlices)
+    /// maps its lazy dense handle (a `SparseToDense` output) to its
+    /// (indices, values) endpoints. Sparse-aware consumers (the
+    /// distributed trainer, `sparse::densify`) fetch those twins and never
+    /// execute the densify node; dense consumers just use the handle.
+    pub sparse_grads: HashMap<Endpoint, crate::sparse::IndexedSlices>,
 }
 
 impl GraphBuilder {

@@ -83,6 +83,10 @@ fn outputs_from_attr_n(n: &Node) -> Result<usize> {
     Ok(n.attr("N")?.as_i64()? as usize)
 }
 
+fn outputs_from_attr_num_partitions(n: &Node) -> Result<usize> {
+    Ok(n.attr("num_partitions")?.as_i64()? as usize)
+}
+
 struct Registry {
     ops: HashMap<&'static str, OpDef>,
 }
@@ -236,6 +240,19 @@ fn install_builtin(r: &mut Registry) {
     op!(r, "OnesLike", Array, Exact(1), fixed::<1>);
     op!(r, "Fill", Array, Exact(2), fixed::<1>);
     op!(r, "Gather", Array, Exact(2), fixed::<1>);
+    // --- Sparse-embedding toolkit (§3 embedding examples, §4.2 sparse
+    // gradients): segment reductions, functional scatters, and the
+    // partition/stitch pair used by sharded lookups. ---
+    op!(r, "UnsortedSegmentSum", Array, Exact(2), fixed::<1>); // (data, segment_ids); attr num_segments
+    op!(r, "ScatterAdd", Array, Exact(3), fixed::<1>); // (x, indices, updates) -> copy with rows +=
+    op!(r, "ScatterSub", Array, Exact(3), fixed::<1>); // (x, indices, updates) -> copy with rows -=
+    op!(r, "DynamicPartition", Array, Exact(2), outputs_from_attr_num_partitions); // (data, partitions)
+    op!(r, "DynamicStitch", Array, AtLeast(2), fixed::<1>); // N index tensors then N data tensors; attr N
+    op!(r, "RowIds", Array, Exact(1), fixed::<1>); // i64 [rows(x)] = 0..rows
+    op!(r, "ModShard", Array, Exact(1), fixed::<2>); // ids -> (ids % shards, ids / shards); attr shards
+    // Lazy densify handle for IndexedSlices gradients (§4.1): only runs
+    // when a dense consumer actually fetches it.
+    op!(r, "SparseToDense", Array, Exact(3), fixed::<1>); // (indices, values, like)
     op!(r, "Transpose", Array, Exact(1), fixed::<1>); // attr perm
     op!(r, "Pack", Array, AtLeast(1), fixed::<1>);
     op!(r, "Unpack", Array, Exact(1), outputs_from_attr_n);
@@ -311,6 +328,11 @@ fn install_builtin(r: &mut Registry) {
     op!(r, "MaxPoolGrad", NeuralNet, Exact(3), fixed::<1>);
     op!(r, "SoftmaxCrossEntropyWithLogits", NeuralNet, Exact(2), fixed::<2>); // (loss, backprop)
     op!(r, "L2Loss", NeuralNet, Exact(1), fixed::<1>);
+    // Sampled softmax (§3 large-vocabulary example): (emb, weights, labels)
+    // with attrs num_sampled + seed; the grad kernel re-draws the same
+    // negatives from Pcg32::new(seed ^ step_id).
+    op!(r, "SampledSoftmax", NeuralNet, Exact(3), fixed::<1>); // loss [batch]
+    op!(r, "SampledSoftmaxGrad", NeuralNet, Exact(4), fixed::<3>); // (demb, dw_indices, dw_values)
 
     // --- Checkpointing operations (Table 1 row 6) ---
     op!(r, "Save", Checkpointing, AtLeast(1), fixed::<0>, stateful = true);

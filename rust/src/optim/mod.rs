@@ -188,6 +188,65 @@ impl Optimizer {
         }
     }
 
+    /// Apply an IndexedSlices gradient to a plain tensor: rows `indices`
+    /// of `var` receive the matching rows of `values` scaled by `scale`,
+    /// per occurrence (duplicates apply repeatedly, in index order).
+    /// Mirrors the parameter server's scatter-SGD expression for
+    /// expression (`out = out * 1.0 + v * scale * (-lr)`), so a replica
+    /// shipping `GradEntry::Sparse` and a host applying `apply_sparse`
+    /// walk bit-identical trajectories. SGD only — slot optimizers would
+    /// need dense slot reads, same as the server-side restriction.
+    pub fn apply_sparse(
+        &self,
+        name: &str,
+        var: &Tensor,
+        indices: &Tensor,
+        values: &Tensor,
+        scale: f32,
+        _slots: &mut SlotMap,
+    ) -> Result<Tensor> {
+        let lr = match *self {
+            Optimizer::Sgd { lr } => lr,
+            _ => {
+                return Err(Status::unimplemented(format!(
+                    "apply_sparse {name:?}: sparse gradients require SGD"
+                )))
+            }
+        };
+        let mut out = var.as_f32()?.to_vec();
+        let dims = var.shape().dims();
+        if dims.is_empty() || dims[0] == 0 {
+            return Err(Status::invalid_argument(format!(
+                "apply_sparse {name:?}: var must have rank >= 1 with rows"
+            )));
+        }
+        let rows = dims[0];
+        let row_len = out.len() / rows;
+        let idx = indices.as_i64()?;
+        let vals = values.as_f32()?;
+        if vals.len() != idx.len() * row_len {
+            return Err(Status::invalid_argument(format!(
+                "apply_sparse {name:?}: {} values for {} indices x row {row_len}",
+                vals.len(),
+                idx.len()
+            )));
+        }
+        for (k, &r) in idx.iter().enumerate() {
+            if r < 0 || r as u64 >= rows as u64 {
+                return Err(Status::invalid_argument(format!(
+                    "apply_sparse {name:?}: index {r} out of range [0, {rows})"
+                )));
+            }
+            let r = r as usize;
+            for j in 0..row_len {
+                let m = vals[k * row_len + j] * scale;
+                let o = r * row_len + j;
+                out[o] = out[o] * 1.0 + m * (-lr);
+            }
+        }
+        Tensor::new(var.shape().clone(), TensorData::F32(out))
+    }
+
     /// `minimize`: gradients of `loss` w.r.t. `vars`, one apply per var,
     /// all grouped under a returned train op.
     pub fn minimize(
@@ -310,6 +369,47 @@ mod tests {
     #[test]
     fn apply_dense_bitwise_matches_adam() {
         apply_dense_matches_kernel(Optimizer::adam(0.05), 20);
+    }
+
+    /// With unique indices, scatter-apply must equal densify-then-apply
+    /// bit for bit (the IndexedSlices parity contract).
+    #[test]
+    fn apply_sparse_bitwise_matches_densified_on_unique_rows() {
+        let opt = Optimizer::sgd(0.1);
+        let var =
+            Tensor::from_f32(vec![4, 2], vec![0.5, -1.0, 2.0, 0.25, -3.5, 1.0, 0.0, 7.0]).unwrap();
+        let idx = Tensor::from_i64(vec![2], vec![3, 1]).unwrap();
+        let vals = Tensor::from_f32(vec![2, 2], vec![0.7, -0.2, 1.1, 0.3]).unwrap();
+        // Densify by hand: rows 3 and 1 receive the value rows.
+        let mut dense = vec![0.0f32; 8];
+        dense[3 * 2..4 * 2].copy_from_slice(&[0.7, -0.2]);
+        dense[1 * 2..2 * 2].copy_from_slice(&[1.1, 0.3]);
+        let dense = Tensor::from_f32(vec![4, 2], dense).unwrap();
+        let mut slots = SlotMap::new();
+        let want = opt.apply_dense("w", &var, &dense, &mut slots).unwrap();
+        let got = opt.apply_sparse("w", &var, &idx, &vals, 1.0, &mut slots).unwrap();
+        let wb: Vec<u32> = want.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+        let gb: Vec<u32> = got.as_f32().unwrap().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(wb, gb);
+    }
+
+    #[test]
+    fn apply_sparse_rejects_non_sgd_and_bad_indices() {
+        let var = Tensor::from_f32(vec![2, 2], vec![1.0; 4]).unwrap();
+        let idx = Tensor::from_i64(vec![1], vec![0]).unwrap();
+        let vals = Tensor::from_f32(vec![1, 2], vec![1.0, 1.0]).unwrap();
+        let mut slots = SlotMap::new();
+        let err = Optimizer::adam(0.1)
+            .apply_sparse("w", &var, &idx, &vals, 1.0, &mut slots)
+            .unwrap_err();
+        assert_eq!(err.code, crate::error::Code::Unimplemented);
+        for bad in [vec![-1i64], vec![2], vec![i64::MIN]] {
+            let idx = Tensor::from_i64(vec![1], bad).unwrap();
+            let err = Optimizer::sgd(0.1)
+                .apply_sparse("w", &var, &idx, &vals, 1.0, &mut slots)
+                .unwrap_err();
+            assert_eq!(err.code, crate::error::Code::InvalidArgument);
+        }
     }
 
     #[test]

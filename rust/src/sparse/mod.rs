@@ -1,0 +1,269 @@
+//! Sparse embedding subsystem (§3's embedding examples, §4.2's sparse
+//! gradients).
+//!
+//! Three pieces:
+//!
+//! * [`IndexedSlices`] — the graph-level sparse-gradient value. The
+//!   gradient of `Gather` w.r.t. its params is "rows `indices` of the
+//!   params receive `values`"; materializing that as a dense zeros-like
+//!   of the table defeats the point of an embedding. Gradient functions
+//!   that produce one return a *lazy dense handle* (a `SparseToDense`
+//!   node) and record the (indices, values) twins in
+//!   [`GraphBuilder::sparse_grads`]. Because the executor only runs
+//!   fetched subgraphs, a sparse-aware consumer (the distributed
+//!   trainer) fetches the twins and the densify node never executes;
+//!   a dense consumer just uses the handle and gets correct values.
+//! * [`ShardedTable`] — a `[vocab, dim]` embedding table mod-sharded
+//!   over `num_shards` variables (shard `j` holds global rows with
+//!   `id % num_shards == j` at local row `id / num_shards`, the
+//!   paper's §4.2 "partitioned across several parameter server tasks").
+//!   [`ShardedTable::lookup`] compiles ids → `ModShard` →
+//!   `DynamicPartition` → per-shard `Gather` → `DynamicStitch`, so each
+//!   shard's gradient is an `IndexedSlices` over *local* rows of that
+//!   shard alone.
+//! * [`sampled_softmax`] — the large-vocabulary loss: one positive
+//!   logit per example plus `num_sampled` shared negatives drawn from
+//!   `Pcg32::new(seed ^ step_id)`, so the forward and gradient kernels
+//!   re-draw identical negatives within a step without a side channel.
+//!
+//! Bitwise-parity contract: applying an `IndexedSlices` gradient
+//! per-row (scatter-SGD) is bit-identical to densify-then-apply *when
+//! each row appears at most once in `indices`*. With duplicates the
+//! dense path sums contributions before the update while the scatter
+//! path applies them per occurrence — equal in exact arithmetic,
+//! different in f32 rounding. Lookups with unique ids per step (and
+//! disjoint rows across replicas) keep the strong contract.
+
+use crate::error::{Result, Status};
+use crate::graph::Endpoint;
+use crate::ops::builder::GraphBuilder;
+use crate::tensor::{DType, Tensor};
+
+/// A sparse gradient: `values` holds `len(indices)` rows destined for
+/// the rows `indices` of some `[rows, …]` tensor. Duplicate indices are
+/// allowed and mean "sum" (densify) / "apply per occurrence" (scatter).
+///
+/// This is the *graph-level* view — two endpoints into the gradient
+/// subgraph. Runtime tensors flow only when a consumer fetches them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IndexedSlices {
+    /// i64 (or i32) index vector, one entry per value row.
+    pub indices: Endpoint,
+    /// f32 values, flat layout `[len(indices), row…]`.
+    pub values: Endpoint,
+}
+
+/// The sparse twin of gradient endpoint `g`, if it has one.
+pub fn as_sparse(b: &GraphBuilder, g: Endpoint) -> Option<IndexedSlices> {
+    b.sparse_grads.get(&g).copied()
+}
+
+/// Rows held by shard `j` of a `vocab`-row table mod-sharded `shards`
+/// ways: `ceil((vocab - j) / shards)`.
+pub fn shard_rows(vocab: usize, shards: usize, j: usize) -> usize {
+    (vocab.saturating_sub(j) + shards - 1) / shards
+}
+
+/// An embedding table mod-sharded into per-shard `Variable`s.
+pub struct ShardedTable {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    /// Per-shard variable endpoints; shard `j` is `[shard_rows(j), dim]`.
+    pub shards: Vec<Endpoint>,
+}
+
+impl ShardedTable {
+    /// Create per-shard variables `{name}/shard{j}` by mod-sharding the
+    /// rows of `init` (`[vocab, dim]`). Sharding a table this way is
+    /// bit-identical to one unsharded variable initialized with `init`:
+    /// the rows are the same f32 words, just re-homed.
+    pub fn new(
+        b: &mut GraphBuilder,
+        name: &str,
+        init: Tensor,
+        num_shards: usize,
+    ) -> Result<ShardedTable> {
+        if num_shards == 0 {
+            return Err(Status::invalid_argument("ShardedTable: num_shards must be >= 1"));
+        }
+        let dims = init.shape().dims();
+        if dims.len() != 2 || dims[1] == 0 {
+            return Err(Status::invalid_argument(format!(
+                "ShardedTable: init must be [vocab, dim>0], got {:?}",
+                dims
+            )));
+        }
+        let (vocab, dim) = (dims[0], dims[1]);
+        let v = init.as_f32()?;
+        let mut shards = Vec::with_capacity(num_shards);
+        for j in 0..num_shards {
+            let mut rows = Vec::with_capacity(shard_rows(vocab, num_shards, j) * dim);
+            let mut r = j;
+            while r < vocab {
+                rows.extend_from_slice(&v[r * dim..(r + 1) * dim]);
+                r += num_shards;
+            }
+            let t = Tensor::from_f32(vec![rows.len() / dim, dim], rows)?;
+            shards.push(b.variable(&format!("{name}/shard{j}"), t)?);
+        }
+        Ok(ShardedTable { name: name.to_string(), vocab, dim, shards })
+    }
+
+    /// Embedding lookup for an i64/i32 id vector: partition ids by
+    /// shard, `Gather` each shard, `DynamicStitch` the rows back into
+    /// id order. Output is `[len(ids), dim]`, bit-identical to
+    /// `Gather(unsharded_table, ids)`.
+    ///
+    /// Differentiating through the result yields one [`IndexedSlices`]
+    /// per shard variable, indexed by that shard's *local* rows.
+    pub fn lookup(&self, b: &mut GraphBuilder, ids: Endpoint) -> Result<Endpoint> {
+        let n = self.shards.len() as i64;
+        b.with_scope(&self.name.clone(), |b| {
+            let ms = b.op("ModShard", "modshard", vec![ids], vec![("shards", n.into())])?;
+            let parts = Endpoint::new(ms, 0);
+            let locals = Endpoint::new(ms, 1);
+            // Row positions 0..len(ids), partitioned the same way, drive
+            // the stitch back into request order.
+            let pos = b.op1("RowIds", "pos", vec![ids], vec![])?;
+            let loc_parts = b.op(
+                "DynamicPartition",
+                "part_locals",
+                vec![locals, parts],
+                vec![("num_partitions", n.into())],
+            )?;
+            let pos_parts = b.op(
+                "DynamicPartition",
+                "part_pos",
+                vec![pos, parts],
+                vec![("num_partitions", n.into())],
+            )?;
+            let mut stitch_in: Vec<Endpoint> =
+                (0..self.shards.len()).map(|j| Endpoint::new(pos_parts, j)).collect();
+            for (j, &shard) in self.shards.iter().enumerate() {
+                stitch_in.push(b.op1(
+                    "Gather",
+                    "shard_gather",
+                    vec![shard, Endpoint::new(loc_parts, j)],
+                    vec![],
+                )?);
+            }
+            b.op1("DynamicStitch", "stitch", stitch_in, vec![("N", n.into())])
+        })
+    }
+}
+
+/// Sampled-softmax loss `[batch]` for `emb [batch, dim]`, `weights
+/// [vocab, dim]`, `labels [batch]` (i64/i32): the per-example softmax
+/// cross-entropy over `1 + num_sampled` logits — the true label's
+/// column plus `num_sampled` negatives shared across the batch,
+/// re-drawn per step from `Pcg32::new(seed ^ step_id)`.
+///
+/// The estimator is biased (uniform sampling with replacement, no
+/// rejection of accidental hits on the true label); it converges to the
+/// full softmax as `num_sampled → vocab`. Differentiating yields a
+/// dense gradient for `emb` and an [`IndexedSlices`] over at most
+/// `batch + num_sampled` rows for `weights`.
+///
+/// Fetch the loss and its gradients in the *same* `Session::run`: the
+/// two kernels agree on negatives only within one step.
+pub fn sampled_softmax(
+    b: &mut GraphBuilder,
+    emb: Endpoint,
+    weights: Endpoint,
+    labels: Endpoint,
+    num_sampled: i64,
+    seed: i64,
+) -> Result<Endpoint> {
+    b.op1(
+        "SampledSoftmax",
+        "sampled_softmax",
+        vec![emb, weights, labels],
+        vec![("num_sampled", num_sampled.into()), ("seed", seed.into())],
+    )
+}
+
+/// Build ids as an i64 constant — the common feed for lookups in tests
+/// and examples.
+pub fn ids_const(b: &mut GraphBuilder, ids: Vec<i64>) -> Endpoint {
+    let n = ids.len();
+    b.constant(Tensor::from_i64(vec![n], ids).expect("vector shape always fits"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{Session, SessionOptions};
+    use crate::util::rng::Pcg32;
+
+    fn random_table(vocab: usize, dim: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let v: Vec<f32> = (0..vocab * dim).map(|_| rng.normal()).collect();
+        Tensor::from_f32(vec![vocab, dim], v).unwrap()
+    }
+
+    fn fetch(b: GraphBuilder, e: Endpoint) -> Tensor {
+        let name = format!("{}:{}", b.graph.node(e.node).name, e.port);
+        let init: Vec<String> =
+            b.init_ops.iter().map(|&id| b.graph.node(id).name.clone()).collect();
+        let sess = Session::new(b.into_graph(), SessionOptions::default());
+        let init_refs: Vec<&str> = init.iter().map(|s| s.as_str()).collect();
+        sess.run_targets(&init_refs).unwrap();
+        sess.run(&[], &[&name], &[]).unwrap().remove(0)
+    }
+
+    #[test]
+    fn shard_rows_partitions_vocab() {
+        for (vocab, shards) in [(10, 3), (7, 7), (5, 8), (100, 1)] {
+            let total: usize = (0..shards).map(|j| shard_rows(vocab, shards, j)).sum();
+            assert_eq!(total, vocab, "vocab {vocab} shards {shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_lookup_matches_unsharded_bitwise() {
+        let table = random_table(11, 4, 99);
+        let ids = vec![3i64, 0, 10, 7, 3, 5];
+
+        let mut b = GraphBuilder::new();
+        let var = b.variable("table", table.clone()).unwrap();
+        let idc = ids_const(&mut b, ids.clone());
+        let dense = b.op1("Gather", "lookup", vec![var, idc], vec![]).unwrap();
+        let want = fetch(b, dense);
+
+        for shards in [1, 2, 3] {
+            let mut b = GraphBuilder::new();
+            let t = ShardedTable::new(&mut b, "emb", table.clone(), shards).unwrap();
+            let idc = ids_const(&mut b, ids.clone());
+            let out = t.lookup(&mut b, idc).unwrap();
+            let got = fetch(b, out);
+            assert_eq!(got.shape().dims(), want.shape().dims(), "{shards} shards");
+            assert_eq!(got.as_f32().unwrap(), want.as_f32().unwrap(), "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn lookup_gradient_is_sparse_per_shard() {
+        let mut b = GraphBuilder::new();
+        let t = ShardedTable::new(&mut b, "emb", random_table(9, 3, 1), 3).unwrap();
+        let idc = ids_const(&mut b, vec![1, 4, 8]);
+        let rows = t.lookup(&mut b, idc).unwrap();
+        let loss = b.reduce_sum(rows, None);
+        let grads = crate::autodiff::gradients(&mut b, loss, &t.shards).unwrap();
+        for (j, g) in grads.iter().enumerate() {
+            let g = g.unwrap_or_else(|| panic!("shard {j} should have a gradient"));
+            let s = as_sparse(&b, g).unwrap_or_else(|| panic!("shard {j} grad should be sparse"));
+            assert_eq!(b.graph.node(g.node).op, "SparseToDense");
+            assert_ne!(s.indices, s.values);
+        }
+    }
+
+    #[test]
+    fn hostile_table_shapes_rejected() {
+        let mut b = GraphBuilder::new();
+        let bad = Tensor::from_f32(vec![6], vec![0.0; 6]).unwrap();
+        assert!(ShardedTable::new(&mut b, "e", bad, 2).is_err(), "rank-1 init");
+        let ok = Tensor::from_f32(vec![3, 2], vec![0.0; 6]).unwrap();
+        assert!(ShardedTable::new(&mut b, "e", ok, 0).is_err(), "zero shards");
+    }
+}

@@ -1,0 +1,305 @@
+//! Integration tests for the sparse embedding subsystem: `Gather`
+//! gradients are `IndexedSlices` whose host densification matches the
+//! lazy `SparseToDense` handle bitwise, mod-sharded lookup is
+//! bit-identical to an unsharded table, two synchronous replicas shipping
+//! `GradEntry::Sparse` natively match the single-process densified
+//! reference bitwise (and spend fewer bytes on the wire than the dense
+//! path), and sampled softmax trains deterministically from a fixed seed.
+
+use rustflow::autodiff::gradients;
+use rustflow::distributed::ps::{ParamServer, PsOptions};
+use rustflow::distributed::train::{DistTrainer, DistTrainerOptions};
+use rustflow::graph::Endpoint;
+use rustflow::optim::Optimizer;
+use rustflow::replicate;
+use rustflow::sparse::{self, ShardedTable};
+use rustflow::tensor::Tensor;
+use rustflow::util::rng::Pcg32;
+use rustflow::{DType, GraphBuilder, Session, SessionOptions};
+
+/// Fusion off on both sides of every equivalence: the fusion pass carries
+/// a 1e-6 contract, and these tests demand bitwise equality.
+fn exact_session_options() -> SessionOptions {
+    SessionOptions { enable_elementwise_fusion: false, ..Default::default() }
+}
+
+fn random_table(vocab: usize, dim: usize, seed: u64) -> Tensor {
+    let mut rng = Pcg32::new(seed);
+    let v: Vec<f32> = (0..vocab * dim).map(|_| rng.normal()).collect();
+    Tensor::from_f32(vec![vocab, dim], v).unwrap()
+}
+
+fn fetch_name(b: &GraphBuilder, e: Endpoint) -> String {
+    format!("{}:{}", b.graph.node(e.node).name, e.port)
+}
+
+/// Build a session, run the graph's initializers, return it.
+fn init_session(b: GraphBuilder) -> Session {
+    let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let sess = Session::new(b.into_graph(), exact_session_options());
+    sess.run_targets(&inits.iter().map(String::as_str).collect::<Vec<_>>()).unwrap();
+    sess
+}
+
+#[test]
+fn gather_grad_twins_densify_to_the_handle_bitwise() {
+    // loss = Σ gather(table, ids)²; the gradient w.r.t. the table is an
+    // IndexedSlices (duplicate id included — duplicates mean "sum").
+    // Fetching the (indices, values) twins and densifying on the host in
+    // occurrence order must be bit-identical to fetching the lazy
+    // SparseToDense handle, which accumulates in the same order.
+    let (vocab, dim) = (8, 3);
+    let ids = vec![5i64, 2, 2, 7];
+    let mut b = GraphBuilder::new();
+    let table = b.variable("table", random_table(vocab, dim, 11)).unwrap();
+    let idc = sparse::ids_const(&mut b, ids.clone());
+    let rows = b.op1("Gather", "lookup", vec![table, idc], vec![]).unwrap();
+    let sq = b.square(rows);
+    let loss = b.reduce_sum(sq, None);
+
+    let g = gradients(&mut b, loss, &[table]).unwrap()[0].expect("table gets a gradient");
+    let s = sparse::as_sparse(&b, g).expect("Gather gradient must be IndexedSlices");
+    assert_eq!(b.graph.node(g.node).op, "SparseToDense", "handle is the lazy densify node");
+
+    let fetches = [fetch_name(&b, g), fetch_name(&b, s.indices), fetch_name(&b, s.values)];
+    let sess = init_session(b);
+    let out = sess
+        .run(&[], &fetches.iter().map(String::as_str).collect::<Vec<_>>(), &[])
+        .unwrap();
+    let dense = out[0].as_f32().unwrap();
+    let idx = out[1].as_i64().unwrap();
+    let vals = out[2].as_f32().unwrap();
+
+    assert_eq!(out[0].shape().dims(), &[vocab, dim], "handle has the table's shape");
+    assert_eq!(idx, ids.as_slice(), "indices are the lookup's ids");
+    assert_eq!(out[2].shape().dims(), &[ids.len(), dim], "one value row per id");
+
+    let mut host = vec![0.0f32; vocab * dim];
+    for (k, &i) in idx.iter().enumerate() {
+        for j in 0..dim {
+            host[i as usize * dim + j] += vals[k * dim + j];
+        }
+    }
+    let dense_bits: Vec<u32> = dense.iter().map(|v| v.to_bits()).collect();
+    let host_bits: Vec<u32> = host.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(dense_bits, host_bits, "host densify == SparseToDense handle, bitwise");
+    // Rows never gathered stay exactly +0.0 — the handle is sparse-backed,
+    // not a dense zeros-like with arithmetic residue.
+    for r in [0usize, 1, 3, 4, 6] {
+        assert!(dense[r * dim..(r + 1) * dim].iter().all(|v| v.to_bits() == 0));
+    }
+}
+
+#[test]
+fn sharded_lookup_is_bit_identical_to_unsharded() {
+    let (vocab, dim) = (16, 5);
+    let table = random_table(vocab, dim, 77);
+    let ids = vec![0i64, 15, 7, 7, 3, 12, 8, 1];
+
+    let mut b = GraphBuilder::new();
+    let var = b.variable("table", table.clone()).unwrap();
+    let idc = sparse::ids_const(&mut b, ids.clone());
+    let dense = b.op1("Gather", "lookup", vec![var, idc], vec![]).unwrap();
+    let name = fetch_name(&b, dense);
+    let want = init_session(b).run(&[], &[&name], &[]).unwrap().remove(0);
+
+    for shards in [1usize, 2, 3, 4] {
+        let mut b = GraphBuilder::new();
+        let t = ShardedTable::new(&mut b, "emb", table.clone(), shards).unwrap();
+        let idc = sparse::ids_const(&mut b, ids.clone());
+        let out = t.lookup(&mut b, idc).unwrap();
+        let name = fetch_name(&b, out);
+        let got = init_session(b).run(&[], &[&name], &[]).unwrap().remove(0);
+        assert_eq!(got.shape().dims(), want.shape().dims(), "{shards} shards");
+        let got_bits: Vec<u32> = got.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+        let want_bits: Vec<u32> = want.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "{shards} shards must match bitwise");
+    }
+}
+
+// ---- 2-replica synchronous training over the native sparse wire ----
+
+const LR: f32 = 0.25;
+const STEPS: usize = 6;
+const REPLICAS: usize = 2;
+const VOCAB: usize = 32;
+const DIM: usize = 4;
+
+/// Replica `r` touches only rows `r*16..r*16+16` — disjoint across
+/// replicas and unique within a step, which is exactly the regime where
+/// scatter-apply is bitwise-equal to densify-then-apply.
+fn step_ids(step: usize, replica: usize) -> Vec<i64> {
+    let base = (replica * 16) as i64;
+    vec![base + (step % 16) as i64, base + ((step + 5) % 16) as i64]
+}
+
+/// One tower: `loss = Σ gather(emb, ids)²` over an i64 `ids` placeholder
+/// under the caller's scope.
+fn embedding_tower(b: &mut GraphBuilder, emb: Endpoint) -> Endpoint {
+    let ids = b.placeholder("ids", DType::I64).unwrap();
+    let rows = b.op1("Gather", "lookup", vec![emb, ids], vec![]).unwrap();
+    let sq = b.square(rows);
+    b.reduce_sum(sq, None)
+}
+
+/// Single-process densified reference: both towers in ONE graph; each
+/// tower's gradient is an IndexedSlices handle, and
+/// `sync_data_parallel`'s `add_n` + in-graph apply *densifies* them —
+/// the Fig 7 (top) baseline the sparse wire path must reproduce.
+/// Returns (per-step tower-0 loss bits, final emb bits).
+fn reference_trajectory() -> (Vec<u32>, Vec<u32>) {
+    let mut b = GraphBuilder::new();
+    let emb = b.variable("emb", random_table(VOCAB, DIM, 42)).unwrap();
+    let losses: Vec<Endpoint> = (0..REPLICAS)
+        .map(|r| b.with_scope(&format!("rep{r}"), |b| embedding_tower(b, emb)))
+        .collect();
+    let train =
+        replicate::sync_data_parallel(&mut b, &[emb], &losses, &Optimizer::sgd(LR)).unwrap();
+    let tname = b.graph.node(train).name.clone();
+    let loss0 = fetch_name(&b, losses[0]);
+    let sess = init_session(b);
+    let mut loss_bits = Vec::with_capacity(STEPS);
+    for s in 0..STEPS {
+        let feeds: Vec<(String, Tensor)> = (0..REPLICAS)
+            .map(|r| {
+                let ids = step_ids(s, r);
+                let n = ids.len();
+                (format!("rep{r}/ids"), Tensor::from_i64(vec![n], ids).unwrap())
+            })
+            .collect();
+        let refs: Vec<(&str, Tensor)> =
+            feeds.iter().map(|(k, t)| (k.as_str(), t.clone())).collect();
+        let out = sess.run(&refs, &[&loss0], &[&tname]).unwrap();
+        loss_bits.push(out[0].scalar_value_f32().unwrap().to_bits());
+    }
+    let emb = sess.run(&[], &["emb"], &[]).unwrap().remove(0);
+    (loss_bits, emb.as_f32().unwrap().iter().map(|v| v.to_bits()).collect())
+}
+
+/// Run the 2-replica synchronous PS training and return (replica-0 loss
+/// bits, final emb bits on the server, total wire bytes).
+fn distributed_run(native_sparse: bool) -> (Vec<u32>, Vec<u32>, u64) {
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(LR),
+        sync_replicas: Some(REPLICAS),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+
+    let losses: Vec<Vec<u32>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..REPLICAS)
+            .map(|r| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut b = GraphBuilder::new();
+                    let emb = b.variable("emb", random_table(VOCAB, DIM, 42)).unwrap();
+                    let loss = embedding_tower(&mut b, emb);
+                    let mut t = DistTrainer::new(
+                        b,
+                        loss,
+                        &[emb],
+                        r as u32,
+                        &[addr],
+                        DistTrainerOptions {
+                            compress: false,
+                            native_sparse,
+                            ..Default::default()
+                        },
+                        exact_session_options(),
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        t.native_sparse(),
+                        &[native_sparse],
+                        "embedding gradient rides the IndexedSlices wire path iff enabled"
+                    );
+                    t.init_params().unwrap();
+                    (0..STEPS)
+                        .map(|s| {
+                            let ids = step_ids(s, r);
+                            let n = ids.len();
+                            let feeds = [("ids", Tensor::from_i64(vec![n], ids).unwrap())];
+                            t.step(&feeds).unwrap().to_bits()
+                        })
+                        .collect::<Vec<u32>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    assert_eq!(ps.version(), STEPS as u64, "one version bump per synchronous step");
+    let emb = ps.param("emb").unwrap();
+    let emb_bits: Vec<u32> = emb.as_f32().unwrap().iter().map(|v| v.to_bits()).collect();
+    let wire = ps.wire_bytes();
+    ps.shutdown();
+    (losses.into_iter().next().unwrap(), emb_bits, wire)
+}
+
+#[test]
+fn sync_sparse_replicas_bitwise_match_densified_reference() {
+    let (ref_losses, ref_emb) = reference_trajectory();
+    let (losses, emb, sparse_wire) = distributed_run(true);
+    assert_eq!(losses, ref_losses, "replica-0 loss trajectory must be bit-identical");
+    assert_eq!(emb, ref_emb, "final embedding must be bit-identical to the dense reference");
+
+    // The dense wire path (same model, native sparse off) reaches the same
+    // parameters — and pays full [VOCAB, DIM] pushes for 2-row updates.
+    let (dense_losses, dense_emb, dense_wire) = distributed_run(false);
+    assert_eq!(dense_losses, ref_losses);
+    assert_eq!(dense_emb, ref_emb, "dense and sparse wire paths agree bitwise");
+    assert!(
+        sparse_wire < dense_wire,
+        "GradEntry::Sparse must spend fewer wire bytes ({sparse_wire}) than dense ({dense_wire})"
+    );
+}
+
+#[test]
+fn sampled_softmax_converges_deterministically() {
+    // Synthetic skip-gram on a 12-token ring (context = center + 1): train
+    // input embeddings + output weights under sampled softmax. Fixed graph
+    // seed + per-run step ids make the whole trajectory a pure function of
+    // the build, so two runs agree bitwise.
+    let (vocab, dim, num_sampled, seed, steps) = (12usize, 4usize, 4i64, 7i64, 120usize);
+    let run = || -> Vec<f32> {
+        let mut b = GraphBuilder::new();
+        let scale = |t: Tensor| {
+            let v: Vec<f32> = t.as_f32().unwrap().iter().map(|x| 0.1 * x).collect();
+            Tensor::from_f32(t.shape().dims().to_vec(), v).unwrap()
+        };
+        let emb = b.variable("emb", scale(random_table(vocab, dim, 5))).unwrap();
+        let w = b.variable("w", scale(random_table(vocab, dim, 6))).unwrap();
+        let centers = sparse::ids_const(&mut b, (0..vocab as i64).collect());
+        let labels = sparse::ids_const(&mut b, (0..vocab as i64).map(|i| (i + 1) % 12).collect());
+        let rows = b.op1("Gather", "center_emb", vec![emb, centers], vec![]).unwrap();
+        let loss_vec = sparse::sampled_softmax(&mut b, rows, w, labels, num_sampled, seed).unwrap();
+        let mean_loss = b.reduce_mean(loss_vec, None);
+        let total = b.reduce_sum(loss_vec, None);
+        let train = Optimizer::sgd(0.2).minimize(&mut b, total, &[emb, w]).unwrap();
+        let tname = b.graph.node(train).name.clone();
+        let lname = fetch_name(&b, mean_loss);
+        let sess = init_session(b);
+        (0..steps)
+            .map(|_| {
+                // Loss and gradient fetched in one run: the kernels re-draw
+                // the same negatives only within a step.
+                let out = sess.run(&[], &[&lname], &[&tname]).unwrap();
+                out[0].scalar_value_f32().unwrap()
+            })
+            .collect()
+    };
+
+    let a = run();
+    assert!(a.iter().all(|l| l.is_finite()), "losses stay finite");
+    let head: f32 = a[..10].iter().sum::<f32>() / 10.0;
+    let tail: f32 = a[steps - 10..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail < 0.9 * head,
+        "sampled softmax must train: first-10 mean {head}, last-10 mean {tail}"
+    );
+
+    let b = run();
+    let a_bits: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+    let b_bits: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(a_bits, b_bits, "fixed seed + step ids make the trajectory deterministic");
+}

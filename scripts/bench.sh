@@ -1,12 +1,12 @@
 #!/usr/bin/env bash
 # Perf trajectory, as one command: runs the §5 optimizer ablation bench,
 # the step-memory-planner bench, the intra-op parallelism bench, the
-# serving throughput bench, the wire-serving (model hub) bench, and the
-# distributed-training bench, and the tracing-overhead bench, and writes
-# BENCH_optimizer.json + BENCH_memory.json + BENCH_parallel.json +
-# BENCH_serving_net.json + BENCH_dist_train.json +
-# BENCH_trace_overhead.json at the repo root (machine-readable; one file
-# per tracked benchmark family).
+# serving throughput bench, the wire-serving (model hub) bench, the
+# distributed-training bench, the tracing-overhead bench, and the sparse
+# embedding bench, and writes BENCH_optimizer.json + BENCH_memory.json +
+# BENCH_parallel.json + BENCH_serving_net.json + BENCH_dist_train.json +
+# BENCH_trace_overhead.json + BENCH_embeddings.json at the repo root
+# (machine-readable; one file per tracked benchmark family).
 #
 #   scripts/bench.sh
 #
@@ -17,9 +17,11 @@
 # has ≥ 4 cores) with no 1-thread regression, the serving_net bench
 # asserts a mid-run model hot-swap costs < 20% of one throughput window
 # (≥ 4 cores), the dist_train bench asserts bf16 gradient/param
-# compression cuts wire bytes ≥ 40% at unchanged convergence, and the
+# compression cuts wire bytes ≥ 40% at unchanged convergence, the
 # trace_overhead bench asserts step tracing costs ≤ 25% on real kernels,
-# so this script fails on a perf regression.
+# and the embeddings bench asserts the native IndexedSlices wire path
+# sustains ≥ 2x dense steps/s at ≤ 10% touched rows, so this script
+# fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
@@ -29,6 +31,7 @@ export BENCH_PARALLEL_JSON="$(pwd)/BENCH_parallel.json"
 export BENCH_SERVING_NET_JSON="$(pwd)/BENCH_serving_net.json"
 export BENCH_DIST_TRAIN_JSON="$(pwd)/BENCH_dist_train.json"
 export BENCH_TRACE_OVERHEAD_JSON="$(pwd)/BENCH_trace_overhead.json"
+export BENCH_EMBEDDINGS_JSON="$(pwd)/BENCH_embeddings.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
@@ -50,5 +53,8 @@ cargo bench --bench dist_train
 
 echo "== cargo bench --bench trace_overhead (writes $BENCH_TRACE_OVERHEAD_JSON)"
 cargo bench --bench trace_overhead
+
+echo "== cargo bench --bench embeddings (writes $BENCH_EMBEDDINGS_JSON)"
+cargo bench --bench embeddings
 
 echo "bench: OK"

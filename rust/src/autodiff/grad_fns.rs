@@ -288,7 +288,24 @@ pub(super) fn install(m: &mut HashMap<&'static str, GradFn>) {
         let ins = inputs(b, node);
         let g = gs[0].unwrap();
         let argmax = out(node, 1);
-        let dx = b.op1("MaxPoolGrad", "pool_dx", vec![g, argmax, ins[0]], vec![])?;
+        // Forward the window geometry (with the forward kernel's
+        // defaults baked in) so MaxPoolGrad can run its parallel
+        // gather form — it reconstructs each input element's covering
+        // windows from ksize/stride/padding.
+        let n = b.graph.node(node);
+        let ksize = n.attrs.get("ksize").and_then(|a| a.as_i64().ok()).unwrap_or(2);
+        let stride = n.attrs.get("stride").and_then(|a| a.as_i64().ok()).unwrap_or(1);
+        let padding = n
+            .attrs
+            .get("padding")
+            .and_then(|a| a.as_str().ok().map(String::from))
+            .unwrap_or_else(|| "SAME".into());
+        let attrs = vec![
+            ("ksize", ksize.into()),
+            ("stride", stride.into()),
+            ("padding", padding.as_str().into()),
+        ];
+        let dx = b.op1("MaxPoolGrad", "pool_dx", vec![g, argmax, ins[0]], attrs)?;
         Ok(vec![Some(dx)])
     });
     m.insert("Gather", |b, node, gs| {

@@ -10,21 +10,37 @@
 //! Design points:
 //!
 //! * **Deterministic contiguous chunks.** [`ComputePool::parallel_for`]
-//!   splits `0..total` into contiguous ranges and every output element is
-//!   produced by exactly one chunk with a fixed per-element operation
-//!   order, so kernel results are bit-identical for every thread count
-//!   (the determinism contract the parallel kernels and
-//!   `tests/parallel.rs` rely on).
+//!   splits `0..total` into contiguous ranges *at submit time* — chunk
+//!   `i` always covers `[i*chunk, min(total, (i+1)*chunk))` — and every
+//!   output element is produced by exactly one chunk with a fixed
+//!   per-element operation order. Which thread runs a chunk is scheduler
+//!   noise; the chunk→output mapping is not. Kernel results are
+//!   bit-identical for every thread count (the determinism contract the
+//!   parallel kernels and `tests/parallel.rs` rely on).
+//! * **Per-worker deques with work stealing.** Each worker owns a chunk
+//!   deque; submitters deal a job's pre-split chunks round-robin across
+//!   the lanes (keeping one share for themselves). A worker drains its
+//!   own deque front-to-back, then steals the *back half* of a victim's
+//!   deque, victims visited in an order randomized from a fixed
+//!   per-worker seed. Many concurrent steps (the serving fan-in case)
+//!   and nested `parallel_for`s stop contending on one injector lock.
 //! * **Small work runs inline.** When `total × cost_per_item` is under
 //!   [`INLINE_WORK`] the caller's closure runs on the calling thread —
 //!   small tensors never pay queueing or wakeup latency.
 //! * **Lazy workers.** A pool of capacity `t` spawns its `t - 1` worker
 //!   threads on first above-threshold job, so sessions that never run a
-//!   large kernel cost nothing. The submitting thread always works too.
-//! * **Panics propagate.** A panic in a worker chunk is caught, carried
-//!   back, and re-raised on the submitting thread after every chunk has
-//!   finished — the executor converts it into a `Status` instead of
-//!   hanging the step (see `executor`'s kernel `catch_unwind`).
+//!   large kernel cost nothing. The submitting thread always works too:
+//!   it runs its dealt share, then claws back whatever of *its own job*
+//!   is still queued before blocking.
+//! * **Panics propagate.** A panic in any chunk — including one running
+//!   on a thief — is caught, carried back, and re-raised on the
+//!   submitting thread after every chunk has finished; the executor
+//!   converts it into a `Status` instead of hanging the step.
+//! * **Pooled kernel scratch.** [`ComputePool::take_scratch_f32`] /
+//!   [`ComputePool::give_scratch_f32`] recycle packing buffers for
+//!   kernel entry points that run outside a planned step (the
+//!   `matmul_with_pool` free functions); in-step kernels use the
+//!   `StepArena` scratch checkout instead.
 
 use std::any::Any;
 use std::cell::Cell;
@@ -34,6 +50,8 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+
+use crate::util::rng::Pcg32;
 
 /// Work (in `total × cost_per_item` units, roughly scalar flops) below
 /// which `parallel_for` runs inline on the calling thread.
@@ -47,9 +65,12 @@ const CHUNKS_PER_THREAD: usize = 4;
 /// `total` is huge and per-item cost tiny.
 const MIN_CHUNK_WORK: usize = 16 * 1024;
 
+/// Scratch vectors retained per pool for out-of-step packing buffers.
+const MAX_POOLED_SCRATCH: usize = 8;
+
 thread_local! {
     /// Set inside intra-op workers: nested `parallel_for` calls run
-    /// inline instead of re-entering the queue (no deadlock, no
+    /// inline instead of re-entering the deques (no deadlock, no
     /// oversubscription).
     static IN_INTRA_WORKER: Cell<bool> = const { Cell::new(false) };
 }
@@ -59,23 +80,16 @@ fn in_intra_worker() -> bool {
 }
 
 /// One submitted `parallel_for`: a lifetime-erased chunk closure plus the
-/// claim/completion state every participating thread shares.
+/// completion state every participating thread shares.
 struct Job {
-    /// The caller's closure, as a raw pointer so the `Job` may harmlessly
-    /// outlive the `parallel_for` frame (exhausted-job husks linger in
-    /// the queue and in worker-held Arcs; a dangling *reference* there
-    /// would be a validity violation, a dangling raw pointer is not).
-    /// Dereferenced only inside the claim window — chunk index <
-    /// `num_chunks` — and the submitting frame blocks until
-    /// `pending == 0`, so every dereference happens while the closure is
-    /// alive.
+    /// The caller's closure, as a raw pointer so `Task`s queued in worker
+    /// deques may hold it without a lifetime (a dangling *reference*
+    /// there would be a validity violation, a dangling raw pointer is
+    /// not). Every `Task` is removed from a deque exactly once, to run;
+    /// `pending` counts un-run tasks and the submitting frame blocks
+    /// until it reaches 0 — so every dereference happens while the
+    /// closure is alive.
     task: *const (dyn Fn(Range<usize>) + Sync),
-    total: usize,
-    chunk: usize,
-    num_chunks: usize,
-    /// Next unclaimed chunk index (may run past `num_chunks`; claims
-    /// beyond the end are no-ops).
-    next: AtomicUsize,
     /// Chunks not yet finished; 0 ⇒ the job is complete.
     pending: AtomicUsize,
     /// First panic payload from any chunk, re-raised on the submitter.
@@ -84,13 +98,31 @@ struct Job {
     done_cond: Condvar,
 }
 
-// Safety: `task` is only dereferenced under the claim-window discipline
-// documented on the field; every other field is already Send + Sync.
+// Safety: `task` is only dereferenced under the one-run-per-task
+// discipline documented on the field; every other field is already
+// Send + Sync.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
+/// One pre-split chunk of a job. The range was fixed at submit time, so
+/// output bytes do not depend on which thread ends up running it.
+struct Task {
+    job: Arc<Job>,
+    range: Range<usize>,
+}
+
+struct WorkerSlot {
+    deque: Mutex<VecDeque<Task>>,
+}
+
 struct Inner {
-    queue: Mutex<VecDeque<Arc<Job>>>,
+    /// One slot per worker thread (`threads - 1` of them).
+    slots: Vec<WorkerSlot>,
+    /// Push epoch: bumped (under this lock) after every chunk deal, so a
+    /// worker that re-checks the deques while holding the lock and then
+    /// waits can never miss a wakeup — the pusher's bump + notify happen
+    /// entirely after the worker's check or entirely before it.
+    signal: Mutex<u64>,
     cond: Condvar,
     shutdown: AtomicBool,
 }
@@ -102,6 +134,7 @@ pub struct ComputePool {
     threads: usize,
     inner: Option<Arc<Inner>>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    scratch: Mutex<Vec<Vec<f32>>>,
     name: String,
 }
 
@@ -112,18 +145,33 @@ impl ComputePool {
         let threads = threads.max(1);
         let inner = (threads > 1).then(|| {
             Arc::new(Inner {
-                queue: Mutex::new(VecDeque::new()),
+                slots: (0..threads - 1)
+                    .map(|_| WorkerSlot { deque: Mutex::new(VecDeque::new()) })
+                    .collect(),
+                signal: Mutex::new(0),
                 cond: Condvar::new(),
                 shutdown: AtomicBool::new(false),
             })
         });
-        ComputePool { threads, inner, workers: Mutex::new(Vec::new()), name: name.to_string() }
+        ComputePool {
+            threads,
+            inner,
+            workers: Mutex::new(Vec::new()),
+            scratch: Mutex::new(Vec::new()),
+            name: name.to_string(),
+        }
     }
 
     /// A zero-state serial pool: every `parallel_for` runs inline. Free
     /// kernel functions use this so they need no device.
     pub fn serial() -> ComputePool {
-        ComputePool { threads: 1, inner: None, workers: Mutex::new(Vec::new()), name: String::new() }
+        ComputePool {
+            threads: 1,
+            inner: None,
+            workers: Mutex::new(Vec::new()),
+            scratch: Mutex::new(Vec::new()),
+            name: String::new(),
+        }
     }
 
     /// Configured parallelism (including the calling thread).
@@ -141,6 +189,40 @@ impl ComputePool {
             && total > 1
             && total.saturating_mul(cost_per_item.max(1)) >= INLINE_WORK
             && !in_intra_worker()
+    }
+
+    /// Check out a scratch `Vec<f32>` with capacity for at least `n`
+    /// elements (length 0). Return it with
+    /// [`ComputePool::give_scratch_f32`] so the next out-of-step matmul
+    /// reuses the allocation instead of paying the allocator.
+    pub fn take_scratch_f32(&self, n: usize) -> Vec<f32> {
+        let mut pool = match self.scratch.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if let Some(pos) = pool.iter().position(|v| v.capacity() >= n) {
+            let mut v = pool.swap_remove(pos);
+            v.clear();
+            return v;
+        }
+        drop(pool);
+        Vec::with_capacity(n)
+    }
+
+    /// Return a scratch vector checked out with
+    /// [`ComputePool::take_scratch_f32`]. Keeps at most
+    /// [`MAX_POOLED_SCRATCH`] vectors; extras are freed.
+    pub fn give_scratch_f32(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut pool = match self.scratch.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if pool.len() < MAX_POOLED_SCRATCH {
+            pool.push(v);
+        }
     }
 
     /// Run `f` over every index in `0..total`, split into deterministic
@@ -169,35 +251,64 @@ impl ComputePool {
         }
         self.ensure_workers(inner);
 
-        // Erase the closure's lifetime into a raw pointer so workers can
-        // hold it (see the `Job::task` safety comment: dereferences only
-        // happen before this frame returns, while `f` is alive).
-        let task: *const (dyn Fn(Range<usize>) + Sync) = unsafe {
-            std::mem::transmute::<
-                &(dyn Fn(Range<usize>) + Sync),
-                *const (dyn Fn(Range<usize>) + Sync),
-            >(&f)
-        };
+        // Erase the closure's lifetime into a raw pointer so queued tasks
+        // can hold it (see the `Job::task` safety comment: dereferences
+        // only happen before this frame returns, while `f` is alive).
+        let task = &f as &(dyn Fn(Range<usize>) + Sync) as *const (dyn Fn(Range<usize>) + Sync);
         let job = Arc::new(Job {
             task,
-            total,
-            chunk,
-            num_chunks,
-            next: AtomicUsize::new(0),
             pending: AtomicUsize::new(num_chunks),
             panic: Mutex::new(None),
             done_mutex: Mutex::new(()),
             done_cond: Condvar::new(),
         });
+
+        // Deal the pre-split chunks round-robin across all lanes: lane 0
+        // is the submitter's local share, lanes 1.. map onto worker
+        // deques. The range of chunk `i` is a pure function of
+        // (i, chunk, total), so scheduling never touches output bytes.
+        let lanes = self.threads;
+        let mut local: Vec<Task> = Vec::new();
+        let mut per_slot: Vec<VecDeque<Task>> =
+            (0..inner.slots.len()).map(|_| VecDeque::new()).collect();
+        for i in 0..num_chunks {
+            let start = i * chunk;
+            let t = Task { job: Arc::clone(&job), range: start..total.min(start + chunk) };
+            match i % lanes {
+                0 => local.push(t),
+                lane => per_slot[lane - 1].push_back(t),
+            }
+        }
+        for (s, mut batch) in per_slot.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let mut q = match inner.slots[s].deque.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            q.append(&mut batch);
+        }
         {
-            let mut q = inner.queue.lock().unwrap();
-            q.push_back(Arc::clone(&job));
+            // Bump the push epoch *after* the deques are filled so any
+            // worker that observed them empty is now either awake or
+            // about to be notified (it re-checks under this lock).
+            let mut epoch = match inner.signal.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            *epoch = epoch.wrapping_add(1);
         }
         inner.cond.notify_all();
 
-        // The submitter claims chunks like any worker, then waits out the
-        // stragglers.
-        run_chunks(&job);
+        // The submitter works too: its dealt share first, then whatever
+        // of *this job* is still sitting in worker deques (idle workers
+        // race it for those; either way the job drains), then it waits
+        // out chunks currently running elsewhere.
+        for t in &local {
+            run_task(t);
+        }
+        steal_own_job(inner, &job);
         {
             let mut g = job.done_mutex.lock().unwrap();
             while job.pending.load(Ordering::Acquire) != 0 {
@@ -241,6 +352,46 @@ impl ComputePool {
         });
     }
 
+    /// Two-output [`ComputePool::parallel_for_mut`]: each item owns
+    /// `out1.len() / total` elements of `out1` *and* `out2.len() / total`
+    /// elements of `out2` (MaxPool's value + argmax planes, the xent
+    /// pair's loss + backprop). Both lengths must be multiples of
+    /// `total`.
+    pub fn parallel_for_mut2<T1, T2, F>(
+        &self,
+        total: usize,
+        cost_per_item: usize,
+        out1: &mut [T1],
+        out2: &mut [T2],
+        f: F,
+    ) where
+        T1: Send,
+        T2: Send,
+        F: Fn(Range<usize>, &mut [T1], &mut [T2]) + Sync,
+    {
+        if total == 0 {
+            return;
+        }
+        assert!(
+            out1.len() % total == 0 && out2.len() % total == 0,
+            "parallel_for_mut2: lengths {} / {} are not multiples of total {total}",
+            out1.len(),
+            out2.len(),
+        );
+        let w1 = out1.len() / total;
+        let w2 = out2.len() / total;
+        let p1 = SendPtr(out1.as_mut_ptr());
+        let p2 = SendPtr(out2.as_mut_ptr());
+        self.parallel_for(total, cost_per_item, move |r: Range<usize>| {
+            // Safety: as in `parallel_for_mut`, per output slice.
+            let v1 =
+                unsafe { std::slice::from_raw_parts_mut(p1.0.add(r.start * w1), r.len() * w1) };
+            let v2 =
+                unsafe { std::slice::from_raw_parts_mut(p2.0.add(r.start * w2), r.len() * w2) };
+            f(r, v1, v2);
+        });
+    }
+
     /// Spawn any not-yet-started workers (capacity minus the caller).
     fn ensure_workers(&self, inner: &Arc<Inner>) {
         let mut ws = match self.workers.lock() {
@@ -249,9 +400,10 @@ impl ComputePool {
         };
         while ws.len() + 1 < self.threads {
             let inner = Arc::clone(inner);
+            let me = ws.len();
             let handle = std::thread::Builder::new()
-                .name(format!("{}-{}", self.name, ws.len()))
-                .spawn(move || worker_loop(inner))
+                .name(format!("{}-{}", self.name, me))
+                .spawn(move || worker_loop(inner, me))
                 .expect("spawn intra-op worker");
             ws.push(handle);
         }
@@ -286,56 +438,147 @@ impl Drop for ComputePool {
     }
 }
 
-/// Claim and run chunks of `job` until none remain.
-fn run_chunks(job: &Job) {
-    loop {
-        let i = job.next.fetch_add(1, Ordering::Relaxed);
-        if i >= job.num_chunks {
-            return;
+/// Run one task's chunk, catching panics into the job and signalling
+/// completion when the last chunk finishes.
+fn run_task(t: &Task) {
+    // Safety: this task was dequeued exactly once and `pending` has not
+    // yet been decremented for it, so the submitting frame — and the
+    // closure — are still alive.
+    let task = unsafe { &*t.job.task };
+    let range = t.range.clone();
+    if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(range))) {
+        let mut slot = t.job.panic.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(p);
         }
-        let start = i * job.chunk;
-        let end = job.total.min(start + job.chunk);
-        // Safety: we hold a claimed chunk (i < num_chunks), so the
-        // submitting frame — and the closure — are still alive (it blocks
-        // until this chunk's `pending` decrement below).
-        let task = unsafe { &*job.task };
-        if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(start..end))) {
-            let mut slot = job.panic.lock().unwrap();
-            if slot.is_none() {
-                *slot = Some(p);
+    }
+    if t.job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+        let _g = t.job.done_mutex.lock().unwrap();
+        t.job.done_cond.notify_all();
+    }
+}
+
+/// Submitter-side clawback: pull every still-queued task of `job` out of
+/// the worker deques and run it here. Sweeps repeat until a full pass
+/// finds nothing, since a thief may move our tasks between slots
+/// mid-sweep; tasks never re-enter a deque after being taken, so this
+/// terminates.
+fn steal_own_job(inner: &Inner, job: &Arc<Job>) {
+    loop {
+        let mut ran = false;
+        for slot in &inner.slots {
+            let mut taken: Vec<Task> = Vec::new();
+            {
+                let mut q = match slot.deque.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                let mut i = 0;
+                while i < q.len() {
+                    if Arc::ptr_eq(&q[i].job, job) {
+                        if let Some(t) = q.remove(i) {
+                            taken.push(t);
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            for t in &taken {
+                run_task(t);
+                ran = true;
             }
         }
-        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
-            let _g = job.done_mutex.lock().unwrap();
-            job.done_cond.notify_all();
+        if !ran {
+            return;
         }
     }
 }
 
-fn worker_loop(inner: Arc<Inner>) {
-    IN_INTRA_WORKER.with(|c| c.set(true));
-    loop {
-        let job = {
-            let mut q = inner.queue.lock().unwrap();
-            loop {
-                // Exhausted jobs at the front are husks: every chunk is
-                // claimed (maybe still running elsewhere) — drop them.
-                while q
-                    .front()
-                    .is_some_and(|j| j.next.load(Ordering::Relaxed) >= j.num_chunks)
-                {
-                    q.pop_front();
-                }
-                if let Some(j) = q.front() {
-                    break Arc::clone(j);
-                }
-                if inner.shutdown.load(Ordering::SeqCst) {
-                    return;
-                }
-                q = inner.cond.wait(q).unwrap();
+fn pop_own(inner: &Inner, me: usize) -> Option<Task> {
+    let mut q = match inner.slots[me].deque.lock() {
+        Ok(g) => g,
+        Err(p) => p.into_inner(),
+    };
+    q.pop_front()
+}
+
+/// Steal the back half of some victim's deque: run the first stolen task
+/// now, queue the rest locally. Victims are visited in an order drawn
+/// from the worker's own seeded RNG so concurrent thieves fan out over
+/// different victims instead of convoying. Returns whether anything ran.
+fn steal_some(inner: &Inner, me: usize, rng: &mut Pcg32) -> bool {
+    let n = inner.slots.len();
+    if n <= 1 {
+        return false;
+    }
+    let start = rng.next_below(n as u32) as usize;
+    for k in 0..n {
+        let victim = (start + k) % n;
+        if victim == me {
+            continue;
+        }
+        let mut stolen = {
+            let mut q = match inner.slots[victim].deque.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            let len = q.len();
+            if len == 0 {
+                continue;
             }
+            q.split_off(len - len.div_ceil(2))
         };
-        run_chunks(&job);
+        let first = stolen.pop_front().expect("stole at least one task");
+        if !stolen.is_empty() {
+            let mut q = match inner.slots[me].deque.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            q.append(&mut stolen);
+        }
+        run_task(&first);
+        return true;
+    }
+    false
+}
+
+fn worker_loop(inner: Arc<Inner>, me: usize) {
+    IN_INTRA_WORKER.with(|c| c.set(true));
+    // Fixed per-worker seed: victim order is reproducible noise, and
+    // output bytes never depend on it (chunk ranges are fixed at submit).
+    let mut rng = Pcg32::with_stream(0x5EED ^ me as u64, me as u64);
+    loop {
+        while let Some(t) = pop_own(&inner, me) {
+            run_task(&t);
+        }
+        if steal_some(&inner, me, &mut rng) {
+            continue;
+        }
+        // Park. Re-check every deque while holding the signal lock:
+        // pushers fill deques first and bump the epoch under this lock
+        // after, so either we see their tasks here, or their
+        // bump + notify happens after we wait — never a lost wakeup.
+        // (Pushers never hold a deque lock while taking the signal lock,
+        // so taking deque locks under it cannot deadlock.)
+        let g = match inner.signal.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if inner.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let any_work = inner.slots.iter().any(|s| {
+            let q = match s.deque.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            !q.is_empty()
+        });
+        if any_work {
+            continue;
+        }
+        let _g = inner.cond.wait(g).unwrap();
     }
 }
 
@@ -398,6 +641,31 @@ mod tests {
     }
 
     #[test]
+    fn parallel_for_mut2_views_are_disjoint_and_complete() {
+        let pool = ComputePool::new(4, "test-mut2");
+        let total = 6_000;
+        let (w1, w2) = (5, 3);
+        let mut a = vec![0u64; total * w1];
+        let mut b = vec![0u64; total * w2];
+        pool.parallel_for_mut2(total, 64, &mut a, &mut b, |r, va, vb| {
+            assert_eq!(va.len(), r.len() * w1);
+            assert_eq!(vb.len(), r.len() * w2);
+            for (j, v) in va.iter_mut().enumerate() {
+                *v = (r.start * w1 + j) as u64;
+            }
+            for (j, v) in vb.iter_mut().enumerate() {
+                *v = 1_000_000 + (r.start * w2 + j) as u64;
+            }
+        });
+        for (i, &v) in a.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+        for (i, &v) in b.iter().enumerate() {
+            assert_eq!(v, 1_000_000 + i as u64);
+        }
+    }
+
+    #[test]
     fn chunking_independent_of_results() {
         // Same deterministic function under 1, 2, 8 threads → same bytes.
         let compute = |threads: usize| -> Vec<f32> {
@@ -432,6 +700,35 @@ mod tests {
             sum.fetch_add(r.len() as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 1 << 16);
+    }
+
+    #[test]
+    fn panic_in_one_job_leaves_concurrent_jobs_intact() {
+        // A panicking job and healthy jobs share the deques; only the
+        // panicking submitter sees the payload (even when the chunk ran
+        // on a thief).
+        let pool = Arc::new(ComputePool::new(4, "test-panic-mix"));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for round in 0..8 {
+                        if t == 0 {
+                            let r = catch_unwind(AssertUnwindSafe(|| {
+                                pool.parallel_for(1 << 16, 64, |_r| panic!("mix boom"));
+                            }));
+                            assert!(r.is_err(), "round {round}");
+                        } else {
+                            let sum = AtomicU64::new(0);
+                            pool.parallel_for(1 << 16, 64, |r| {
+                                sum.fetch_add(r.len() as u64, Ordering::Relaxed);
+                            });
+                            assert_eq!(sum.load(Ordering::Relaxed), 1 << 16, "round {round}");
+                        }
+                    }
+                });
+            }
+        });
     }
 
     #[test]
@@ -478,5 +775,45 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn many_concurrent_small_steps_stress() {
+        // The serving fan-in shape: many submitters, many small jobs,
+        // all racing the same deques. Every job must see every index
+        // exactly once regardless of who stole what.
+        let pool = Arc::new(ComputePool::new(4, "test-stress"));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let pool = Arc::clone(&pool);
+                s.spawn(move || {
+                    for round in 0..50 {
+                        let n = 40_000 + (t * 997 + round * 131) % 5_000;
+                        let sum = AtomicU64::new(0);
+                        pool.parallel_for(n, 8, |r| {
+                            sum.fetch_add(r.map(|i| i as u64).sum::<u64>(), Ordering::Relaxed);
+                        });
+                        let n = n as u64;
+                        assert_eq!(sum.load(Ordering::Relaxed), n * (n - 1) / 2);
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn scratch_pool_recycles_capacity() {
+        let pool = ComputePool::new(2, "test-scratch");
+        let mut v = pool.take_scratch_f32(1024);
+        assert!(v.capacity() >= 1024);
+        assert!(v.is_empty());
+        v.resize(1024, 1.0);
+        let ptr = v.as_ptr();
+        pool.give_scratch_f32(v);
+        let v2 = pool.take_scratch_f32(512);
+        assert!(v2.is_empty());
+        assert!(v2.capacity() >= 512);
+        assert_eq!(v2.as_ptr(), ptr, "smaller request reuses the pooled buffer");
+        pool.give_scratch_f32(v2);
     }
 }

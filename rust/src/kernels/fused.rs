@@ -130,6 +130,10 @@ enum ExtraKind {
     Scalar,
     /// Exactly primary-shaped: index with the output index.
     Same,
+    /// A rank-1 extra spanning the primary's last axis (the bias-row
+    /// pattern `kernels::nn::bias_add` lowers to): index `ys[i % last]`
+    /// directly — no multi-index bookkeeping.
+    LastDim(usize),
     /// Right-aligned broadcast up to the primary shape: index through
     /// zero strides on the broadcast dims.
     Strided(Vec<usize>),
@@ -209,6 +213,13 @@ fn compute(steps: &[Step], ctx: &mut KernelContext) -> Result<Tensor> {
                         ExtraKind::Scalar
                     } else if extra.shape() == &primary_shape {
                         ExtraKind::Same
+                    } else if extra.shape().rank() == 1
+                        && primary_shape.dims().last() == Some(&extra.shape().dims()[0])
+                    {
+                        // Bias-row pattern: a plain modulo beats the
+                        // general strided walk, and — unlike Strided —
+                        // needs no per-element multi-index upkeep.
+                        ExtraKind::LastDim(extra.shape().dims()[0])
                     } else {
                         any_strided = true;
                         ExtraKind::Strided(primary_space_strides(&primary_shape, extra.shape()))
@@ -233,6 +244,7 @@ fn compute(steps: &[Step], ctx: &mut KernelContext) -> Result<Tensor> {
                         let y = match kind {
                             ExtraKind::Scalar => ys[0],
                             ExtraKind::Same => ys[i],
+                            ExtraKind::LastDim(last) => ys[i % last],
                             ExtraKind::Strided(strides) => {
                                 let mut off = 0usize;
                                 for (d, &s) in strides.iter().enumerate() {
@@ -477,6 +489,21 @@ mod tests {
         let expect =
             math::unary_elementwise(&math::binary_elementwise(&x, &row, "Add").unwrap(), "Tanh")
                 .unwrap();
+        assert_eq!(out.shape(), expect.shape());
+        assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
+    }
+
+    #[test]
+    fn last_dim_extra_takes_modulo_path_and_matches() {
+        // Extra [2] against primary [2,3,2]: the LastDim specialization
+        // (plain `i % last` reads, no multi-index upkeep); must match
+        // the standalone broadcasting kernel exactly.
+        let steps = vec![Step { op: "Add".into(), acc_left: true, arg: Some(1) }];
+        let x = t(vec![2, 3, 2], (0..12).map(|i| i as f32 * 0.5).collect());
+        let row = t(vec![2], vec![100.0, -100.0]);
+        let mut ctx = ctx_with(vec![x.clone(), row.clone()]);
+        let out = compute(&steps, &mut ctx).unwrap();
+        let expect = math::binary_elementwise(&x, &row, "Add").unwrap();
         assert_eq!(out.shape(), expect.shape());
         assert_eq!(out.as_f32().unwrap(), expect.as_f32().unwrap());
     }

@@ -1,13 +1,26 @@
 //! Matrix operations (Table 1 row 3): MatMul (with transpose flags),
 //! BatchMatMul, MatrixInverse (Gauss–Jordan), MatrixDeterminant (LU).
 //!
-//! The f32 matmul is the L3 fallback path; the *fast* path for model math
-//! is the `XlaCall` op running AOT-compiled XLA (§5.4 "optimized libraries
-//! for kernel implementations"). This kernel is still tuned (blocked
-//! k-loop, transpose-aware layouts) because baselines and small graphs use
-//! it heavily.
+//! The f32 matmul is a classic panel-packed GEMM: B is repacked into
+//! column panels of [`NR`] (k-major, zero-padded at the right edge), A
+//! into [`MR`]-row micro-panels (k-major, gathered through either
+//! transpose), and an explicit-SIMD microkernel streams both packed
+//! operands linearly, accumulating an `MR × NR` register block over the
+//! *entire* k extent before storing. Packing buffers come from a
+//! [`ScratchSource`]: the step arena inside a planned step (so
+//! steady-state steps reuse one allocation), the compute pool's side pool
+//! for free-function callers.
+//!
+//! **Bit-identity contract.** Every output element accumulates its k
+//! contributions in ascending-k order as `acc = acc + a·b` — one IEEE
+//! mul, one IEEE add per step, no FMA contraction, no horizontal
+//! reductions. SIMD lanes are independent output *columns* (never k), so
+//! the AVX microkernel performs exactly the per-element operation
+//! sequence of [`micro_scalar`], and results are byte-identical across
+//! thread counts, chunkings, and the SIMD/scalar dispatch.
+//! `tests/parallel.rs` asserts all of this.
 
-use super::{KernelContext, KernelRegistry};
+use super::{KernelContext, KernelRegistry, ScratchSource};
 use crate::device::ComputePool;
 use crate::error::{Result, Status};
 use crate::tensor::{Shape, Tensor, TensorData};
@@ -32,9 +45,9 @@ pub fn matmul(a: &Tensor, b: &Tensor, ta: bool, tb: bool) -> Result<Tensor> {
     matmul_with_pool(&ComputePool::serial(), a, b, ta, tb)
 }
 
-/// [`matmul`] running its row-panel loop on `pool` (the kernel path uses
-/// the device's intra-op pool; `benches/parallel.rs` drives this
-/// directly). Results are bit-identical for every pool size.
+/// [`matmul`] running the packed GEMM on `pool` (the kernel path uses the
+/// device's intra-op pool; `benches/parallel.rs` drives this directly).
+/// Results are bit-identical for every pool size.
 pub fn matmul_with_pool(
     pool: &ComputePool,
     a: &Tensor,
@@ -44,29 +57,246 @@ pub fn matmul_with_pool(
 ) -> Result<Tensor> {
     let (m, k, n) = matmul_dims(a, b, ta, tb)?;
     let mut out = vec![0f32; m * n];
-    matmul_impl(pool, a.as_f32()?, b.as_f32()?, m, k, n, ta, tb, &mut out);
+    gemm_into(pool, ScratchSource::Pool(pool), a.as_f32()?, b.as_f32()?, m, k, n, ta, tb, &mut out);
     Tensor::new(Shape(vec![m, n]), TensorData::F32(out))
 }
 
-/// k-dimension tile: one B panel of `KC × n_tile` f32s stays hot in L2
-/// while a chunk's rows stream over it.
-const KC: usize = 128;
-/// j-dimension tile for the (ff)/(tf) axpy forms: bounds the C/B row
-/// segments the inner loop touches so they fit L1.
-const NC: usize = 512;
+/// Microkernel row height: one register block covers `MR` C rows.
+pub(crate) const MR: usize = 4;
+/// Microkernel column width: one 8-lane f32 vector per C row.
+pub(crate) const NR: usize = 8;
 
-/// The four-layout multiply into caller-provided storage
-/// (`out.len() == m*n`, zeroed) — dims come pre-resolved from
-/// [`matmul_dims`] so they are validated exactly once per invocation.
+/// Is the AVX microkernel usable on this machine? Detected once.
+#[cfg(target_arch = "x86_64")]
+fn use_avx() -> bool {
+    static AVX: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVX.get_or_init(|| std::arch::is_x86_feature_detected!("avx"))
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn use_avx() -> bool {
+    false
+}
+
+/// Scalar microkernel: `acc[r][j] += apack[kk·MR+r] · bblock[kk·NR+j]`,
+/// kk ascending. The reference operation sequence the AVX kernel must —
+/// and does — reproduce exactly, per element.
+fn micro_scalar(k: usize, apack: &[f32], bblock: &[f32], acc: &mut [[f32; NR]; MR]) {
+    debug_assert!(apack.len() >= k * MR && bblock.len() >= k * NR);
+    for kk in 0..k {
+        let a = &apack[kk * MR..kk * MR + MR];
+        let b = &bblock[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            for j in 0..NR {
+                acc[r][j] += ar * b[j];
+            }
+        }
+    }
+}
+
+/// AVX microkernel: 4 broadcast-multiply-adds per k step, one 8-lane
+/// vector per C row. `_mm256_add_ps(_mm256_mul_ps(…))` — deliberately
+/// *not* an FMA intrinsic, so each lane performs the same rounded mul
+/// then rounded add as [`micro_scalar`] and the bytes match.
 ///
-/// Cache-blocked and intra-op parallel: the outer loop over C's row
-/// panels runs on `pool.parallel_for_mut` (disjoint `&mut` row views),
-/// with k (and where it pays, j) tiled inside each panel. Every C[i,j]
-/// accumulates its k-contributions in ascending-k order no matter how
-/// rows are chunked, so results are bit-identical across thread counts.
+/// # Safety
+/// Caller must have verified AVX support ([`use_avx`]); slices must hold
+/// at least `k*MR` / `k*NR` elements.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn micro_avx(k: usize, apack: &[f32], bblock: &[f32], acc: &mut [[f32; NR]; MR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(apack.len() >= k * MR && bblock.len() >= k * NR);
+    unsafe {
+        let a = apack.as_ptr();
+        let b = bblock.as_ptr();
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        for kk in 0..k {
+            let bv = _mm256_loadu_ps(b.add(kk * NR));
+            let ap = a.add(kk * MR);
+            c0 = _mm256_add_ps(c0, _mm256_mul_ps(_mm256_set1_ps(*ap), bv));
+            c1 = _mm256_add_ps(c1, _mm256_mul_ps(_mm256_set1_ps(*ap.add(1)), bv));
+            c2 = _mm256_add_ps(c2, _mm256_mul_ps(_mm256_set1_ps(*ap.add(2)), bv));
+            c3 = _mm256_add_ps(c3, _mm256_mul_ps(_mm256_set1_ps(*ap.add(3)), bv));
+        }
+        _mm256_storeu_ps(acc[0].as_mut_ptr(), c0);
+        _mm256_storeu_ps(acc[1].as_mut_ptr(), c1);
+        _mm256_storeu_ps(acc[2].as_mut_ptr(), c2);
+        _mm256_storeu_ps(acc[3].as_mut_ptr(), c3);
+    }
+}
+
+/// Dispatch one microkernel call: AVX when the CPU has it, the
+/// bit-identical scalar loop otherwise.
+#[inline]
+fn micro(k: usize, apack: &[f32], bblock: &[f32], acc: &mut [[f32; NR]; MR]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_avx() {
+        // Safety: AVX presence checked at runtime; lengths asserted in
+        // the kernel.
+        unsafe { micro_avx(k, apack, bblock, acc) };
+        return;
+    }
+    micro_scalar(k, apack, bblock, acc)
+}
+
+/// Pack B (under `tb`) into column panels of [`NR`]: panel `jp` is
+/// `k × NR`, k-major, holding B columns `jp·NR ..` zero-padded at the
+/// right edge. After packing, the microkernel's B reads are perfectly
+/// sequential regardless of the source layout.
+fn pack_b(bv: &[f32], k: usize, n: usize, tb: bool, bpack: &mut Vec<f32>) {
+    let npanels = n.div_ceil(NR);
+    bpack.clear();
+    bpack.resize(npanels * k * NR, 0.0);
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let block = &mut bpack[jp * k * NR..(jp + 1) * k * NR];
+        if tb {
+            // B is [n, k] logically transposed: gather column kk of each
+            // of the panel's rows.
+            for kk in 0..k {
+                for jj in 0..w {
+                    block[kk * NR + jj] = bv[(j0 + jj) * k + kk];
+                }
+            }
+        } else {
+            for kk in 0..k {
+                block[kk * NR..kk * NR + w].copy_from_slice(&bv[kk * n + j0..kk * n + j0 + w]);
+            }
+        }
+    }
+}
+
+/// Pack `h ≤ MR` rows of A starting at `i0` into `apack` (k-major,
+/// [`MR`]-wide; rows `h..MR` keep whatever padding is already there —
+/// their accumulator rows are never stored). Gathers through either
+/// transpose, so the microkernel never strides the source.
+fn pack_a(av: &[f32], m: usize, k: usize, ta: bool, i0: usize, h: usize, apack: &mut [f32]) {
+    debug_assert!(apack.len() >= k * MR);
+    if ta {
+        // A is [k, m] logically transposed: element (i, kk) at kk·m + i.
+        for kk in 0..k {
+            for r in 0..h {
+                apack[kk * MR + r] = av[kk * m + (i0 + r)];
+            }
+        }
+    } else {
+        for kk in 0..k {
+            for r in 0..h {
+                apack[kk * MR + r] = av[(i0 + r) * k + kk];
+            }
+        }
+    }
+}
+
+/// Raw-pointer wrapper for the disjoint output writes of the packed
+/// driver (each row micro-panel owns its C rows exclusively; chunk ranges
+/// never overlap).
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+// Safety: only written through disjoint row panels while the caller's
+// exclusive borrow of the output is alive (the drivers block until every
+// chunk completes).
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// Run row micro-panels `panels` against fully-packed `bpack`, storing
+/// into `out` (an `m × n` row-major matrix at `outp`). The workhorse
+/// shared by the parallel driver (one call per chunk) and the serial
+/// batch path.
 #[allow(clippy::too_many_arguments)]
-fn matmul_impl(
+fn run_panel_range(
+    scratch: ScratchSource<'_>,
+    av: &[f32],
+    bpack: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    ta: bool,
+    panels: std::ops::Range<usize>,
+    outp: OutPtr,
+) {
+    let npanels = n.div_ceil(NR);
+    let mut apack = scratch.take_f32(k * MR);
+    apack.resize(k * MR, 0.0);
+    for p in panels {
+        let i0 = p * MR;
+        let h = MR.min(m - i0);
+        pack_a(av, m, k, ta, i0, h, &mut apack);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let w = NR.min(n - j0);
+            let mut acc = [[0f32; NR]; MR];
+            micro(k, &apack, &bpack[jp * k * NR..(jp + 1) * k * NR], &mut acc);
+            for (r, acc_row) in acc.iter().enumerate().take(h) {
+                // Safety: rows i0..i0+h belong exclusively to panel p,
+                // and panels are disjoint across chunks (see OutPtr).
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(outp.0.add((i0 + r) * n + j0), w)
+                };
+                dst.copy_from_slice(&acc_row[..w]);
+            }
+        }
+    }
+    scratch.give_f32(apack);
+}
+
+/// Contiguous-B matvec chunk for m == 1, tb == false (the batch-1
+/// serving shape [1,k]·[k,n]): k-outer axpy over the chunk's columns,
+/// SIMD across column lanes. Per element this is `c += a[kk]·b[kk,j]`,
+/// kk ascending — the scalar tail and the scalar fallback compute the
+/// identical sequence, so chunking and lane grouping never change bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx")]
+unsafe fn matvec_axpy_avx(av: &[f32], bv: &[f32], k: usize, n: usize, j0: usize, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    unsafe {
+        let w = out.len();
+        let wv = w - w % NR;
+        let op = out.as_mut_ptr();
+        for kk in 0..k {
+            let a = *av.get_unchecked(kk);
+            let avk = _mm256_set1_ps(a);
+            let base = bv.as_ptr().add(kk * n + j0);
+            let mut j = 0;
+            while j < wv {
+                let c = _mm256_loadu_ps(op.add(j));
+                let b = _mm256_loadu_ps(base.add(j));
+                _mm256_storeu_ps(op.add(j), _mm256_add_ps(c, _mm256_mul_ps(avk, b)));
+                j += NR;
+            }
+            for j in wv..w {
+                *op.add(j) += a * *base.add(j);
+            }
+        }
+    }
+}
+
+fn matvec_axpy_scalar(av: &[f32], bv: &[f32], k: usize, n: usize, j0: usize, out: &mut [f32]) {
+    for kk in 0..k {
+        let a = av[kk];
+        let brow = &bv[kk * n + j0..kk * n + j0 + out.len()];
+        for (c, &b) in out.iter_mut().zip(brow) {
+            *c += a * b;
+        }
+    }
+}
+
+/// The full GEMM dispatch into caller-provided storage (`out.len() ==
+/// m*n`; the m>1 packed path overwrites every element, the m==1 paths
+/// require it zeroed) — dims come pre-resolved from [`matmul_dims`] so
+/// they are validated exactly once per invocation. Used by the MatMul
+/// kernel (arena scratch), the free functions (pool scratch), and the
+/// im2col convolution kernels in `kernels::nn`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_into(
     pool: &ComputePool,
+    scratch: ScratchSource<'_>,
     av: &[f32],
     bv: &[f32],
     m: usize,
@@ -77,15 +307,23 @@ fn matmul_impl(
     out: &mut [f32],
 ) {
     debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
     // Matvec row case (batch-1 inference: [1,k]·[k,n]): a single output
-    // row gives the row-panel loop nothing to split, so distribute the
-    // output *columns* instead. With m == 1, A is k contiguous values
-    // whichever way it is transposed, and B reads collapse to two
-    // layouts.
+    // row gives the panel loop nothing to split, and packing B would
+    // cost as much memory traffic as the whole multiply. Distribute the
+    // output *columns* instead, on B's natural layout.
     if m == 1 {
         let col_cost = 2usize.saturating_mul(k).max(1);
         if tb {
-            // B is [n, k]: out[j] = dot(a, B[j, :]), both contiguous.
+            // B is [n, k]: out[j] = dot(a, B[j, :]), both contiguous and
+            // cache-friendly as-is. A k-lane SIMD reduction would change
+            // the summation tree, so this path stays scalar ascending-k.
             pool.parallel_for_mut(n, col_cost, out, |cols, c| {
                 for (j_rel, cj) in c.iter_mut().enumerate() {
                     let brow = &bv[(cols.start + j_rel) * k..(cols.start + j_rel + 1) * k];
@@ -97,114 +335,35 @@ fn matmul_impl(
                 }
             });
         } else {
-            // B is [k, n]: out[j] += a[kk]·B[kk, j], k ascending per
-            // column chunk — bit-identical at any chunking.
+            // B is [k, n]: SIMD axpy across column lanes, kk ascending.
             pool.parallel_for_mut(n, col_cost, out, |cols, c| {
-                for kk in 0..k {
-                    let aik = av[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = &bv[kk * n + cols.start..kk * n + cols.end];
-                    for (cj, &bj) in c.iter_mut().zip(brow) {
-                        *cj += aik * bj;
-                    }
+                #[cfg(target_arch = "x86_64")]
+                if use_avx() {
+                    // Safety: AVX checked; `c` covers columns
+                    // cols.start..cols.end of row kk at kk·n.
+                    unsafe { matvec_axpy_avx(av, bv, k, n, cols.start, c) };
+                    return;
                 }
+                matvec_axpy_scalar(av, bv, k, n, cols.start, c);
             });
         }
         return;
     }
-    // One output row costs ~2kn flops; this drives chunking + the
-    // small-matrix inline path.
-    let row_cost = 2usize.saturating_mul(k).saturating_mul(n).max(1);
-    match (ta, tb) {
-        (false, false) => {
-            // Blocked ikj: for each k-tile, stream the panel's rows over
-            // the resident B tile, vectorizing the inner j loop.
-            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
-                let r0 = rows.start;
-                for kb in (0..k).step_by(KC) {
-                    let kend = (kb + KC).min(k);
-                    for jb in (0..n).step_by(NC) {
-                        let jend = (jb + NC).min(n);
-                        for i in rows.clone() {
-                            let crow = &mut c[(i - r0) * n + jb..(i - r0) * n + jend];
-                            for kk in kb..kend {
-                                let aik = av[i * k + kk];
-                                if aik == 0.0 {
-                                    continue;
-                                }
-                                let brow = &bv[kk * n + jb..kk * n + jend];
-                                for (cj, &bj) in crow.iter_mut().zip(brow) {
-                                    *cj += aik * bj;
-                                }
-                            }
-                        }
-                    }
-                }
-            });
-        }
-        (false, true) => {
-            // B is [n, k] logically transposed: dot products over
-            // contiguous rows — already cache-friendly, so only the row
-            // panels are distributed.
-            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
-                let r0 = rows.start;
-                for i in rows.clone() {
-                    let arow = &av[i * k..(i + 1) * k];
-                    let crow = &mut c[(i - r0) * n..(i - r0 + 1) * n];
-                    for (j, cj) in crow.iter_mut().enumerate() {
-                        let brow = &bv[j * k..(j + 1) * k];
-                        let mut s = 0f32;
-                        for kk in 0..k {
-                            s += arow[kk] * brow[kk];
-                        }
-                        *cj = s;
-                    }
-                }
-            });
-        }
-        (true, false) => {
-            // A is [k, m] logically transposed: k-tiled axpy over the
-            // panel's rows (A is read a row per kk, B a row per kk).
-            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
-                let r0 = rows.start;
-                for kb in (0..k).step_by(KC) {
-                    let kend = (kb + KC).min(k);
-                    for jb in (0..n).step_by(NC) {
-                        let jend = (jb + NC).min(n);
-                        for i in rows.clone() {
-                            let crow = &mut c[(i - r0) * n + jb..(i - r0) * n + jend];
-                            for kk in kb..kend {
-                                let aik = av[kk * m + i];
-                                if aik == 0.0 {
-                                    continue;
-                                }
-                                let brow = &bv[kk * n + jb..kk * n + jend];
-                                for (cj, &bj) in crow.iter_mut().zip(brow) {
-                                    *cj += aik * bj;
-                                }
-                            }
-                        }
-                    }
-                }
-            });
-        }
-        (true, true) => {
-            pool.parallel_for_mut(m, row_cost, out, |rows, c| {
-                let r0 = rows.start;
-                for i in rows.clone() {
-                    for j in 0..n {
-                        let mut s = 0f32;
-                        for kk in 0..k {
-                            s += av[kk * m + i] * bv[j * k + kk];
-                        }
-                        c[(i - r0) * n + j] = s;
-                    }
-                }
-            });
-        }
-    }
+
+    let npanels = n.div_ceil(NR);
+    let mut bpack = scratch.take_f32(npanels * k * NR);
+    pack_b(bv, k, n, tb, &mut bpack);
+    let bpack_ref: &[f32] = &bpack;
+
+    let mpanels = m.div_ceil(MR);
+    // One row micro-panel costs ~2·k·n·MR flops; this drives chunking +
+    // the small-matrix inline path.
+    let panel_cost = 2usize.saturating_mul(k).saturating_mul(n).saturating_mul(MR).max(1);
+    let outp = OutPtr(out.as_mut_ptr());
+    pool.parallel_for(mpanels, panel_cost, |panels| {
+        run_panel_range(scratch, av, bpack_ref, m, k, n, ta, panels, outp);
+    });
+    scratch.give_f32(bpack);
 }
 
 /// Batched matmul over leading dim: [b,m,k] x [b,k,n] -> [b,m,n].
@@ -214,8 +373,10 @@ pub fn batch_matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 }
 
 /// [`batch_matmul`] distributing the batch entries over `pool` (each
-/// batch element is an independent multiply writing a disjoint `m×n`
-/// slab, so chunking cannot change any result bit).
+/// batch element is an independent packed multiply writing a disjoint
+/// `m×n` slab, so chunking cannot change any result bit). Within a
+/// chunk, each element runs the serial packed path — pack B, stream the
+/// row micro-panels — reusing one pair of scratch buffers per chunk.
 pub fn batch_matmul_with_pool(pool: &ComputePool, a: &Tensor, b: &Tensor) -> Result<Tensor> {
     let ad = a.shape().dims();
     let bd = b.shape().dims();
@@ -230,25 +391,38 @@ pub fn batch_matmul_with_pool(pool: &ComputePool, a: &Tensor, b: &Tensor) -> Res
     let av = a.as_f32()?;
     let bv = b.as_f32()?;
     let mut out = vec![0f32; bs * m * n];
+    let scratch = ScratchSource::Pool(pool);
+    let npanels = n.div_ceil(NR);
+    let mpanels = m.div_ceil(MR);
     let batch_cost = 2usize.saturating_mul(m).saturating_mul(k).saturating_mul(n).max(1);
     pool.parallel_for_mut(bs, batch_cost, &mut out, |batches, c| {
+        if m == 0 || n == 0 {
+            return;
+        }
+        let mut bpack = scratch.take_f32(npanels * k * NR);
         let b0 = batches.start;
         for bi in batches.clone() {
-            let ao = bi * m * k;
-            let bo = bi * k * n;
-            let co = (bi - b0) * m * n;
-            for i in 0..m {
-                for kk in 0..k {
-                    let aik = av[ao + i * k + kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    for j in 0..n {
-                        c[co + i * n + j] += aik * bv[bo + kk * n + j];
-                    }
-                }
+            let ael = &av[bi * m * k..(bi + 1) * m * k];
+            let bel = &bv[bi * k * n..(bi + 1) * k * n];
+            let cel = &mut c[(bi - b0) * m * n..(bi - b0 + 1) * m * n];
+            if k == 0 {
+                cel.fill(0.0);
+                continue;
             }
+            pack_b(bel, k, n, false, &mut bpack);
+            run_panel_range(
+                scratch,
+                ael,
+                &bpack,
+                m,
+                k,
+                n,
+                false,
+                0..mpanels,
+                OutPtr(cel.as_mut_ptr()),
+            );
         }
+        scratch.give_f32(bpack);
     });
     Tensor::new(Shape(vec![bs, m, n]), TensorData::F32(out))
 }
@@ -352,12 +526,14 @@ pub(super) fn register(r: &mut KernelRegistry) {
     r.add_sync("MatMul", |ctx: &mut KernelContext| {
         let ta = ctx.node.attr_opt("transpose_a").and_then(|a| a.as_bool().ok()).unwrap_or(false);
         let tb = ctx.node.attr_opt("transpose_b").and_then(|a| a.as_bool().ok()).unwrap_or(false);
-        // Memory-planned: accumulate into the port's arena slot, row
-        // panels distributed over the device's intra-op pool.
+        // Memory-planned output and packing scratch: the result lands in
+        // the port's arena slot, packing panels in the arena's scratch
+        // pool, row micro-panels distributed over the intra-op pool.
         let (m, k, n) = matmul_dims(ctx.input(0)?, ctx.input(1)?, ta, tb)?;
         let mut out = ctx.alloc_f32_zeroed(0, m * n);
-        matmul_impl(
+        gemm_into(
             &ctx.device.compute,
+            ctx.scratch(),
             ctx.input(0)?.as_f32()?,
             ctx.input(1)?.as_f32()?,
             m,
@@ -458,16 +634,50 @@ mod tests {
         assert!((d3 + 306.0).abs() < 1e-2, "{d3}");
     }
 
+    fn fill(r: usize, c: usize, seed: u32) -> Tensor {
+        let v: Vec<f32> = (0..r * c)
+            .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 * 0.013 - 6.5)
+            .collect();
+        t(vec![r, c], v)
+    }
+
+    #[test]
+    fn packed_matches_naive_reference_exactly() {
+        // The packed microkernel accumulates `acc += a·b` with kk
+        // ascending per element — the *same* operation sequence as this
+        // naive triple loop, so equality is exact (bytes), not approx.
+        for (m, k, n) in [(37, 65, 29), (4, 8, 8), (5, 1, 9), (1, 33, 70)] {
+            for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {
+                let a = if ta { fill(k, m, 1) } else { fill(m, k, 1) };
+                let b = if tb { fill(n, k, 2) } else { fill(k, n, 2) };
+                let av = a.as_f32().unwrap();
+                let bv = b.as_f32().unwrap();
+                let mut want = vec![0f32; m * n];
+                for i in 0..m {
+                    for j in 0..n {
+                        let mut s = 0f32;
+                        for kk in 0..k {
+                            let ax = if ta { av[kk * m + i] } else { av[i * k + kk] };
+                            let bx = if tb { bv[j * k + kk] } else { bv[kk * n + j] };
+                            s += ax * bx;
+                        }
+                        want[i * n + j] = s;
+                    }
+                }
+                let got = matmul(&a, &b, ta, tb).unwrap();
+                assert_eq!(
+                    got.as_f32().unwrap(),
+                    &want[..],
+                    "m={m} k={k} n={n} ta={ta} tb={tb}"
+                );
+            }
+        }
+    }
+
     #[test]
     fn matmul_bit_identical_across_pool_sizes() {
         // Odd, non-tile-multiple dims; every transpose combo; pools of
         // 1/2/4/8 must agree bit for bit (the determinism contract).
-        let fill = |r: usize, c: usize, seed: u32| -> Tensor {
-            let v: Vec<f32> = (0..r * c)
-                .map(|i| ((i as u32).wrapping_mul(2654435761).wrapping_add(seed) % 1000) as f32 * 0.013 - 6.5)
-                .collect();
-            t(vec![r, c], v)
-        };
         // (m=1, …) exercises the matvec column-split path.
         for (m, k, n) in [(67, 131, 45), (1, 131, 4096)] {
             for (ta, tb) in [(false, false), (false, true), (true, false), (true, true)] {

@@ -20,7 +20,7 @@ pub mod sparse;
 pub mod state;
 pub mod summary;
 
-use crate::device::Device;
+use crate::device::{ComputePool, Device};
 #[allow(unused_imports)]
 use crate::error::{Result, Status};
 use crate::graph::AttrValue;
@@ -150,6 +150,35 @@ impl ForwardedF32 {
     }
 }
 
+/// Where kernel-internal scratch buffers (GEMM packing panels, im2col
+/// patches) come from and return to: the step arena when the kernel runs
+/// inside a planned step — so steady-state steps reuse one allocation —
+/// or the compute pool's side pool for free-function callers outside a
+/// step.
+#[derive(Clone, Copy)]
+pub enum ScratchSource<'a> {
+    Arena(&'a StepArena),
+    Pool(&'a ComputePool),
+}
+
+impl ScratchSource<'_> {
+    /// An empty `Vec<f32>` with capacity ≥ `n`, pooled where possible.
+    pub fn take_f32(&self, n: usize) -> Vec<f32> {
+        match self {
+            ScratchSource::Arena(a) => a.take_scratch_f32(n),
+            ScratchSource::Pool(p) => p.take_scratch_f32(n),
+        }
+    }
+
+    /// Hand a buffer from [`ScratchSource::take_f32`] back to its pool.
+    pub fn give_f32(&self, v: Vec<f32>) {
+        match self {
+            ScratchSource::Arena(a) => a.give_scratch_f32(v),
+            ScratchSource::Pool(p) => p.give_scratch_f32(v),
+        }
+    }
+}
+
 /// Stand-in left in `inputs[i]` after a forward steals the real tensor
 /// (cloning is just an Arc bump).
 static FORWARD_PLACEHOLDER: Lazy<Tensor> = Lazy::new(|| Tensor::scalar_f32(0.0));
@@ -202,6 +231,15 @@ impl KernelContext {
         F: Fn(std::ops::Range<usize>) + Sync,
     {
         self.device.compute.parallel_for(total, cost_per_item, f)
+    }
+
+    /// The scratch pool for this invocation's internal buffers: the step
+    /// arena when planned, the device compute pool's side pool otherwise.
+    pub fn scratch(&self) -> ScratchSource<'_> {
+        match &self.mem {
+            Some(m) => ScratchSource::Arena(&m.arena),
+            None => ScratchSource::Pool(&self.device.compute),
+        }
     }
 
     // ---- step-memory-plan hooks (opt-in per kernel; see crate::memory) --

@@ -2,10 +2,21 @@
 //! Convolution2D, MaxPool, BiasAdd, the fused softmax cross-entropy, and
 //! their gradient kernels (registered as ops so the §4.1 autodiff can
 //! reference them).
+//!
+//! Every kernel here runs its hot loop through the device's intra-op
+//! pool. The serial direct-loop forms are kept verbatim as reference
+//! implementations: the parallel paths are constructed to replay the
+//! same per-element operation order (im2col column order mirrors the
+//! direct loop's `ky→kx→ci` walk, the col2im/pool-grad gathers visit
+//! windows in the scatter's `oy→ox` order), so outputs are
+//! byte-identical at every thread count and the unit tests assert
+//! exact equality against the references.
 
-use super::{KernelContext, KernelRegistry};
+use super::{KernelContext, KernelRegistry, ScratchSource};
 use crate::device::ComputePool;
 use crate::error::{Result, Status};
+use crate::kernels::math::planned_fill;
+use crate::kernels::matrix::gemm_into;
 use crate::tensor::{Shape, Tensor, TensorData};
 
 /// Approximate per-element scalar-op cost of a softmax row pass (exp +
@@ -130,8 +141,22 @@ pub(crate) fn log_softmax_planned(ctx: &KernelContext) -> Result<Tensor> {
     ctx.make_output(0, shape, TensorData::F32(out))
 }
 
-/// BiasAdd: add a [C] bias over the last axis.
+/// BiasAdd: add a [C] bias over the last axis. Serial reference; the
+/// kernel path is the planned parallel fill in [`register`].
 pub fn bias_add(x: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (_, c) = bias_dims(x, b)?;
+    let xv = x.as_f32()?;
+    let bv = b.as_f32()?;
+    let mut out = Vec::with_capacity(xv.len());
+    for (i, &v) in xv.iter().enumerate() {
+        out.push(v + bv[i % c]);
+    }
+    Tensor::new(x.shape().clone(), TensorData::F32(out))
+}
+
+/// Shared BiasAdd shape validation: bias must be rank 1 and match x's
+/// last axis. Returns (rows, channels).
+fn bias_dims(x: &Tensor, b: &Tensor) -> Result<(usize, usize)> {
     let bd = b.shape().dims();
     if bd.len() != 1 {
         return Err(Status::invalid_argument("BiasAdd: bias must be rank 1"));
@@ -144,16 +169,11 @@ pub fn bias_add(x: &Tensor, b: &Tensor) -> Result<Tensor> {
             xd.last().copied().unwrap_or(0)
         )));
     }
-    let xv = x.as_f32()?;
-    let bv = b.as_f32()?;
-    let mut out = Vec::with_capacity(xv.len());
-    for (i, &v) in xv.iter().enumerate() {
-        out.push(v + bv[i % c]);
-    }
-    Tensor::new(x.shape().clone(), TensorData::F32(out))
+    Ok((if c == 0 { 0 } else { x.num_elements() / c }, c))
 }
 
-/// Gradient of BiasAdd wrt bias: sum over all but last axis.
+/// Gradient of BiasAdd wrt bias: sum over all but last axis. Serial
+/// reference; the kernel path is [`bias_add_grad_into`].
 pub fn bias_add_grad(dy: &Tensor) -> Result<Tensor> {
     let xd = dy.shape().dims();
     let c = *xd.last().ok_or_else(|| Status::invalid_argument("BiasAddGrad: rank 0"))?;
@@ -165,8 +185,27 @@ pub fn bias_add_grad(dy: &Tensor) -> Result<Tensor> {
     Tensor::new(Shape(vec![c]), TensorData::F32(out))
 }
 
+/// BiasAddGrad with channel blocks distributed over `pool`: each
+/// channel sums its column over rows in ascending row order — the same
+/// per-channel order the serial `i % c` scatter produces — so chunking
+/// over channels never changes a sum and the result is bit-identical
+/// to [`bias_add_grad`] at every thread count. A chunk reads a
+/// contiguous `rr`-wide segment of every row, so the access pattern
+/// stays sequential. `out` must be zeroed (`c` elements).
+fn bias_add_grad_into(pool: &ComputePool, gv: &[f32], rows: usize, c: usize, out: &mut [f32]) {
+    pool.parallel_for_mut(c, rows.saturating_mul(2).max(1), out, |rr, os| {
+        for row in 0..rows {
+            let seg = &gv[row * c + rr.start..row * c + rr.end];
+            for (o, &gi) in os.iter_mut().zip(seg) {
+                *o += gi;
+            }
+        }
+    });
+}
+
 /// Fused softmax cross entropy: returns (loss[batch], backprop[batch,classes])
 /// where backprop = softmax(logits) - labels (labels are one-hot/probabilities).
+/// Serial two-step reference; the kernel path is [`softmax_xent_into`].
 pub fn softmax_xent(logits: &Tensor, labels: &Tensor) -> Result<(Tensor, Tensor)> {
     let (rows, cols) = rank2(logits, "SoftmaxCrossEntropyWithLogits")?;
     if logits.shape() != labels.shape() {
@@ -190,6 +229,46 @@ pub fn softmax_xent(logits: &Tensor, labels: &Tensor) -> Result<(Tensor, Tensor)
         Tensor::new(Shape(vec![rows]), TensorData::F32(loss))?,
         Tensor::new(Shape(vec![rows, cols]), TensorData::F32(backprop))?,
     ))
+}
+
+/// The fused xent row body: per row, the same max / sum-exp / lse
+/// sequence as [`log_softmax_rows`], then loss and backprop in one
+/// ascending-column pass — exactly the operation order of
+/// [`softmax_xent`]'s two-step form, minus its intermediate
+/// log-softmax tensor. Rows split over both output planes with
+/// `parallel_for_mut2`, so kernel and reference agree bitwise at
+/// every thread count.
+fn softmax_xent_into(
+    pool: &ComputePool,
+    xv: &[f32],
+    lab: &[f32],
+    rows: usize,
+    cols: usize,
+    loss: &mut [f32],
+    bp: &mut [f32],
+) {
+    pool.parallel_for_mut2(
+        rows,
+        cols.saturating_mul(SOFTMAX_ELEM_COST).max(1),
+        loss,
+        bp,
+        |rr, ls, bs| {
+            for (ri, r) in rr.enumerate() {
+                let row = &xv[r * cols..(r + 1) * cols];
+                let lrow = &lab[r * cols..(r + 1) * cols];
+                let orow = &mut bs[ri * cols..(ri + 1) * cols];
+                let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let lse = row.iter().map(|&a| (a - m).exp()).sum::<f32>().ln() + m;
+                let mut l = 0f32;
+                for ((o, &rc), &lb) in orow.iter_mut().zip(row).zip(lrow) {
+                    let lsm = rc - lse;
+                    l -= lb * lsm;
+                    *o = lsm.exp() - lb;
+                }
+                ls[ri] = l;
+            }
+        },
+    );
 }
 
 /// Padding mode for conv/pool.
@@ -228,7 +307,148 @@ impl Padding {
     }
 }
 
+/// Resolved window geometry shared by the im2col convolution paths and
+/// the pooling kernels (pooling reuses it with `kh = kw = ksize` and
+/// `ic = oc = channels`).
+#[derive(Clone, Copy)]
+struct ConvGeom {
+    n: usize,
+    h: usize,
+    w: usize,
+    ic: usize,
+    kh: usize,
+    kw: usize,
+    oc: usize,
+    oh: usize,
+    ow: usize,
+    stride: usize,
+    ph: usize,
+    pw: usize,
+}
+
+impl ConvGeom {
+    /// Output rows of the im2col matrix (= output spatial positions).
+    fn rows(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    /// Columns of the im2col matrix (= one receptive-field patch).
+    fn patch(&self) -> usize {
+        self.kh * self.kw * self.ic
+    }
+}
+
+fn conv_geom(xd: &[usize], fd: &[usize], stride: usize, padding: Padding) -> Result<ConvGeom> {
+    if xd.len() != 4 || fd.len() != 4 {
+        return Err(Status::invalid_argument("Conv2D: x must be NHWC, filter [kh,kw,ic,oc]"));
+    }
+    let (n, h, w, ic) = (xd[0], xd[1], xd[2], xd[3]);
+    let (kh, kw, fic, oc) = (fd[0], fd[1], fd[2], fd[3]);
+    if ic != fic {
+        return Err(Status::invalid_argument(format!("Conv2D: channels {ic} != filter {fic}")));
+    }
+    Ok(ConvGeom {
+        n,
+        h,
+        w,
+        ic,
+        kh,
+        kw,
+        oc,
+        oh: padding.out_dim(h, kh, stride),
+        ow: padding.out_dim(w, kw, stride),
+        stride,
+        ph: padding.pad_before(h, kh, stride) as usize,
+        pw: padding.pad_before(w, kw, stride) as usize,
+    })
+}
+
+fn pool_geom(xd: &[usize], k: usize, stride: usize, padding: Padding) -> Result<ConvGeom> {
+    if xd.len() != 4 {
+        return Err(Status::invalid_argument("MaxPool: x must be NHWC"));
+    }
+    let (n, h, w, c) = (xd[0], xd[1], xd[2], xd[3]);
+    Ok(ConvGeom {
+        n,
+        h,
+        w,
+        ic: c,
+        kh: k,
+        kw: k,
+        oc: c,
+        oh: padding.out_dim(h, k, stride),
+        ow: padding.out_dim(w, k, stride),
+        stride,
+        ph: padding.pad_before(h, k, stride) as usize,
+        pw: padding.pad_before(w, k, stride) as usize,
+    })
+}
+
+/// Lower NHWC activations to the im2col matrix [n·oh·ow, kh·kw·ic] in
+/// `col` (which must be zeroed — padding positions are never written).
+/// Column index `(ky·kw + kx)·ic + ci` preserves the direct loop's
+/// `ky→kx→ci` walk, so a GEMM summing ascending columns accumulates
+/// each output in the same order as [`conv2d`]'s serial loops (padding
+/// contributes exact `+0.0` terms the direct form skips via its bounds
+/// checks). Rows are independent and split over `pool`.
+fn im2col(pool: &ComputePool, xv: &[f32], g: &ConvGeom, col: &mut [f32]) {
+    let kk = g.patch();
+    pool.parallel_for_mut(g.rows(), kk.max(1), col, |rr, cs| {
+        for (j, row) in rr.enumerate() {
+            let b = row / (g.oh * g.ow);
+            let rem = row % (g.oh * g.ow);
+            let (oy, ox) = (rem / g.ow, rem % g.ow);
+            let dst = &mut cs[j * kk..(j + 1) * kk];
+            for ky in 0..g.kh {
+                let iy = (oy * g.stride + ky) as i64 - g.ph as i64;
+                if iy < 0 || iy >= g.h as i64 {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = (ox * g.stride + kx) as i64 - g.pw as i64;
+                    if ix < 0 || ix >= g.w as i64 {
+                        continue;
+                    }
+                    let src = ((b * g.h + iy as usize) * g.w + ix as usize) * g.ic;
+                    let d0 = (ky * g.kw + kx) * g.ic;
+                    dst[d0..d0 + g.ic].copy_from_slice(&xv[src..src + g.ic]);
+                }
+            }
+        }
+    });
+}
+
+/// The packed-GEMM convolution body: im2col into pool/arena scratch,
+/// then one [rows × patch]·[patch × oc] multiply through [`gemm_into`]
+/// (the filter's natural [kh,kw,ic,oc] layout *is* the [patch, oc]
+/// right-hand side). A 1×1 stride-1 convolution skips the lowering
+/// entirely — the NHWC activations already are the im2col matrix.
+/// `out` must be zeroed (`rows·oc` elements).
+fn conv2d_into(
+    pool: &ComputePool,
+    scratch: ScratchSource<'_>,
+    xv: &[f32],
+    fv: &[f32],
+    g: &ConvGeom,
+    out: &mut [f32],
+) {
+    let rows = g.rows();
+    if g.kh == 1 && g.kw == 1 && g.stride == 1 && g.ph == 0 && g.pw == 0 {
+        gemm_into(pool, scratch, xv, fv, rows, g.ic, g.oc, false, false, out);
+        return;
+    }
+    let kk = g.patch();
+    let mut col = scratch.take_f32(rows * kk);
+    col.resize(rows * kk, 0.0);
+    im2col(pool, xv, g, &mut col);
+    gemm_into(pool, scratch, &col, fv, rows, kk, g.oc, false, false, out);
+    scratch.give_f32(col);
+}
+
 /// Direct 2-D convolution. x: NHWC, filter: [kh, kw, in_c, out_c].
+/// Serial reference implementation (note its zero-input skips); the
+/// Convolution2D kernel and [`conv2d_with`] run the im2col +
+/// packed-GEMM path, which the unit tests hold to exact agreement.
 pub fn conv2d(x: &Tensor, filter: &Tensor, stride: usize, padding: Padding) -> Result<Tensor> {
     let xd = x.shape().dims();
     let fd = filter.shape().dims();
@@ -281,7 +501,26 @@ pub fn conv2d(x: &Tensor, filter: &Tensor, stride: usize, padding: Padding) -> R
     Tensor::new(Shape(vec![n, oh, ow, oc]), TensorData::F32(out))
 }
 
+/// [`conv2d`] on the im2col + packed-GEMM path, distributing both the
+/// lowering and the multiply over `pool` (scratch comes from the
+/// pool's buffer recycler). `benches/parallel.rs` and the parity tests
+/// drive this directly; the Convolution2D kernel runs the same body
+/// with arena scratch into its planned output slot.
+pub fn conv2d_with(
+    pool: &ComputePool,
+    x: &Tensor,
+    filter: &Tensor,
+    stride: usize,
+    padding: Padding,
+) -> Result<Tensor> {
+    let g = conv_geom(x.shape().dims(), filter.shape().dims(), stride, padding)?;
+    let mut out = vec![0f32; g.rows() * g.oc];
+    conv2d_into(pool, ScratchSource::Pool(pool), x.as_f32()?, filter.as_f32()?, &g, &mut out);
+    Tensor::new(Shape(vec![g.n, g.oh, g.ow, g.oc]), TensorData::F32(out))
+}
+
 /// MaxPool over kxk windows; returns (output, flat argmax indices).
+/// Serial reference; the kernel path is [`max_pool_into`].
 pub fn max_pool(x: &Tensor, k: usize, stride: usize, padding: Padding) -> Result<(Tensor, Tensor)> {
     let xd = x.shape().dims();
     if xd.len() != 4 {
@@ -328,7 +567,68 @@ pub fn max_pool(x: &Tensor, k: usize, stride: usize, padding: Padding) -> Result
     ))
 }
 
-/// Scatter pooled gradients back through the argmax indices.
+/// The row body of [`max_pool`]: every output position scans its
+/// window in the serial loop's `ky→kx→ci` order with the same strict
+/// `>` update, so distributing positions over `pool` is bit-identical
+/// (value and argmax planes both) for every thread count. `out` must
+/// be filled with `NEG_INFINITY` and `arg` with 0 — the serial
+/// initial state.
+fn max_pool_into(pool: &ComputePool, xv: &[f32], g: &ConvGeom, out: &mut [f32], arg: &mut [i64]) {
+    let c = g.ic;
+    let cost = g.kh.saturating_mul(g.kw).saturating_mul(c).saturating_mul(2).max(1);
+    pool.parallel_for_mut2(g.rows(), cost, out, arg, |rr, os, ags| {
+        for (j, pos) in rr.enumerate() {
+            let b = pos / (g.oh * g.ow);
+            let rem = pos % (g.oh * g.ow);
+            let (oy, ox) = (rem / g.ow, rem % g.ow);
+            let ob = j * c;
+            for ky in 0..g.kh {
+                let iy = (oy * g.stride + ky) as i64 - g.ph as i64;
+                if iy < 0 || iy >= g.h as i64 {
+                    continue;
+                }
+                for kx in 0..g.kw {
+                    let ix = (ox * g.stride + kx) as i64 - g.pw as i64;
+                    if ix < 0 || ix >= g.w as i64 {
+                        continue;
+                    }
+                    let x_base = ((b * g.h + iy as usize) * g.w + ix as usize) * c;
+                    for ci in 0..c {
+                        let v = xv[x_base + ci];
+                        if v > os[ob + ci] {
+                            os[ob + ci] = v;
+                            ags[ob + ci] = (x_base + ci) as i64;
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// [`max_pool`] with output positions distributed over `pool`.
+pub fn max_pool_with(
+    pool: &ComputePool,
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+) -> Result<(Tensor, Tensor)> {
+    let g = pool_geom(x.shape().dims(), k, stride, padding)?;
+    let len = g.rows() * g.ic;
+    let mut out = vec![f32::NEG_INFINITY; len];
+    let mut arg = vec![0i64; len];
+    max_pool_into(pool, x.as_f32()?, &g, &mut out, &mut arg);
+    Ok((
+        Tensor::new(Shape(vec![g.n, g.oh, g.ow, g.ic]), TensorData::F32(out))?,
+        Tensor::new(Shape(vec![g.n, g.oh, g.ow, g.ic]), TensorData::I64(arg))?,
+    ))
+}
+
+/// Scatter pooled gradients back through the argmax indices. Serial
+/// reference (and the kernel fallback for grad nodes that don't carry
+/// the forward's window attrs); the parallel path is
+/// [`max_pool_grad_into`].
 pub fn max_pool_grad(dy: &Tensor, argmax: &Tensor, input_shape: &Shape) -> Result<Tensor> {
     let g = dy.as_f32()?;
     let a = argmax.as_i64()?;
@@ -343,7 +643,76 @@ pub fn max_pool_grad(dy: &Tensor, argmax: &Tensor, input_shape: &Shape) -> Resul
     Tensor::new(input_shape.clone(), TensorData::F32(out))
 }
 
+/// [`max_pool_grad`] in gather form: each input element sums, over the
+/// pooling windows that cover it — visited in ascending `oy→ox` order,
+/// exactly the order the serial scatter walks the dy plane — the dy
+/// entries whose argmax selected it. For any argmax plane the MaxPool
+/// forward can produce (indices always point inside their own window)
+/// this is bit-identical to the scatter at every thread count. The
+/// caller pre-validates the argmax range; entries that are in range
+/// but point outside every covering window (impossible from the
+/// forward) contribute nothing here, where the scatter would have
+/// honoured them. `out` must be zeroed.
+fn max_pool_grad_into(pool: &ComputePool, gv: &[f32], av: &[i64], g: &ConvGeom, out: &mut [f32]) {
+    let c = g.ic;
+    let windows = (g.kh / g.stride + 1).saturating_mul(g.kw / g.stride + 1);
+    let cost = windows.saturating_mul(c).saturating_mul(2).max(1);
+    pool.parallel_for_mut(g.n * g.h * g.w, cost, out, |rr, os| {
+        for (j, pos) in rr.enumerate() {
+            let b = pos / (g.h * g.w);
+            let rem = pos % (g.h * g.w);
+            let (iy, ix) = (rem / g.w, rem % g.w);
+            let dst = &mut os[j * c..(j + 1) * c];
+            let x_base = pos * c;
+            let py = iy + g.ph;
+            let px = ix + g.pw;
+            let oy_lo = py.saturating_sub(g.kh - 1).div_ceil(g.stride);
+            let oy_hi = (py / g.stride + 1).min(g.oh);
+            let ox_lo = px.saturating_sub(g.kw - 1).div_ceil(g.stride);
+            let ox_hi = (px / g.stride + 1).min(g.ow);
+            for oy in oy_lo..oy_hi {
+                for ox in ox_lo..ox_hi {
+                    let o_base = ((b * g.oh + oy) * g.ow + ox) * c;
+                    for ci in 0..c {
+                        if av[o_base + ci] == (x_base + ci) as i64 {
+                            dst[ci] += gv[o_base + ci];
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// [`max_pool_grad`] on the parallel gather path; needs the forward
+/// window geometry (ksize/stride/padding) to enumerate covering
+/// windows.
+pub fn max_pool_grad_with(
+    pool: &ComputePool,
+    dy: &Tensor,
+    argmax: &Tensor,
+    input_shape: &Shape,
+    k: usize,
+    stride: usize,
+    padding: Padding,
+) -> Result<Tensor> {
+    let g = pool_geom(input_shape.dims(), k, stride, padding)?;
+    let gv = dy.as_f32()?;
+    let av = argmax.as_i64()?;
+    let total = input_shape.num_elements();
+    if gv.len() != g.rows() * g.ic || av.len() != gv.len() {
+        return Err(Status::invalid_argument("MaxPoolGrad: dy/argmax shape mismatch"));
+    }
+    if av.iter().any(|&i| i < 0 || i >= total as i64) {
+        return Err(Status::invalid_argument("MaxPoolGrad: argmax out of range"));
+    }
+    let mut out = vec![0f32; total];
+    max_pool_grad_into(pool, gv, av, &g, &mut out);
+    Tensor::new(input_shape.clone(), TensorData::F32(out))
+}
+
 /// Conv2D gradient wrt input (direct, full correlation with flipped filter).
+/// Serial reference; the kernel path is [`conv2d_backprop_input_into`].
 pub fn conv2d_backprop_input(
     dy: &Tensor,
     filter: &Tensor,
@@ -394,7 +763,90 @@ pub fn conv2d_backprop_input(
     Tensor::new(input_shape.clone(), TensorData::F32(out))
 }
 
-/// Conv2D gradient wrt filter.
+/// Deterministic col2im: each input element gathers its contributing
+/// `dcol` entries in ascending `oy→ox` window order — exactly the
+/// order [`conv2d_backprop_input`]'s serial scatter adds them, with
+/// each entry being the same ascending-`co` dot product (now computed
+/// by the packed GEMM) — so the result is bit-identical to the direct
+/// loop for every thread count. `out` must be zeroed.
+fn col2im_gather(pool: &ComputePool, dcol: &[f32], g: &ConvGeom, out: &mut [f32]) {
+    let kk = g.patch();
+    let windows = (g.kh / g.stride + 1).saturating_mul(g.kw / g.stride + 1);
+    let cost = windows.saturating_mul(g.ic).saturating_mul(2).max(1);
+    pool.parallel_for_mut(g.n * g.h * g.w, cost, out, |rr, os| {
+        for (j, pos) in rr.enumerate() {
+            let b = pos / (g.h * g.w);
+            let rem = pos % (g.h * g.w);
+            let (iy, ix) = (rem / g.w, rem % g.w);
+            let dst = &mut os[j * g.ic..(j + 1) * g.ic];
+            let py = iy + g.ph;
+            let px = ix + g.pw;
+            let oy_lo = py.saturating_sub(g.kh - 1).div_ceil(g.stride);
+            let oy_hi = (py / g.stride + 1).min(g.oh);
+            let ox_lo = px.saturating_sub(g.kw - 1).div_ceil(g.stride);
+            let ox_hi = (px / g.stride + 1).min(g.ow);
+            for oy in oy_lo..oy_hi {
+                let ky = py - oy * g.stride;
+                for ox in ox_lo..ox_hi {
+                    let kx = px - ox * g.stride;
+                    let row = (b * g.oh + oy) * g.ow + ox;
+                    let c0 = row * kk + (ky * g.kw + kx) * g.ic;
+                    for (d, &s) in dst.iter_mut().zip(&dcol[c0..c0 + g.ic]) {
+                        *d += s;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// The packed-GEMM input-gradient body: dcol = dy · filterᵀ (one
+/// [rows × oc]·[oc × patch] multiply on the filter's natural layout),
+/// then the deterministic [`col2im_gather`]. A 1×1 stride-1
+/// convolution needs no gather — dcol *is* dx. `out` must be zeroed
+/// (`n·h·w·ic` elements).
+fn conv2d_backprop_input_into(
+    pool: &ComputePool,
+    scratch: ScratchSource<'_>,
+    gv: &[f32],
+    fv: &[f32],
+    g: &ConvGeom,
+    out: &mut [f32],
+) {
+    let rows = g.rows();
+    if g.kh == 1 && g.kw == 1 && g.stride == 1 && g.ph == 0 && g.pw == 0 {
+        gemm_into(pool, scratch, gv, fv, rows, g.oc, g.ic, false, true, out);
+        return;
+    }
+    let kk = g.patch();
+    let mut dcol = scratch.take_f32(rows * kk);
+    dcol.resize(rows * kk, 0.0);
+    gemm_into(pool, scratch, gv, fv, rows, g.oc, kk, false, true, &mut dcol);
+    col2im_gather(pool, &dcol, g, out);
+    scratch.give_f32(dcol);
+}
+
+/// [`conv2d_backprop_input`] on the packed-GEMM + col2im path.
+pub fn conv2d_backprop_input_with(
+    pool: &ComputePool,
+    dy: &Tensor,
+    filter: &Tensor,
+    input_shape: &Shape,
+    stride: usize,
+    padding: Padding,
+) -> Result<Tensor> {
+    let g = conv_geom(input_shape.dims(), filter.shape().dims(), stride, padding)?;
+    let gv = dy.as_f32()?;
+    if gv.len() != g.rows() * g.oc {
+        return Err(Status::invalid_argument("Conv2DBackpropInput: dy shape mismatch"));
+    }
+    let mut out = vec![0f32; input_shape.num_elements()];
+    conv2d_backprop_input_into(pool, ScratchSource::Pool(pool), gv, filter.as_f32()?, &g, &mut out);
+    Tensor::new(input_shape.clone(), TensorData::F32(out))
+}
+
+/// Conv2D gradient wrt filter. Serial reference (note its zero-input
+/// skips); the kernel path is [`conv2d_backprop_filter_into`].
 pub fn conv2d_backprop_filter(
     x: &Tensor,
     dy: &Tensor,
@@ -447,6 +899,51 @@ pub fn conv2d_backprop_filter(
     Tensor::new(filter_shape.clone(), TensorData::F32(out))
 }
 
+/// The packed-GEMM filter-gradient body: df = im2colᵀ · dy, one
+/// [patch × rows]·[rows × oc] multiply whose ascending-k accumulation
+/// runs over rows = `b→oy→ox` — the serial scatter's outer-loop order.
+/// The 1×1 stride-1 case again uses the activations directly as the
+/// im2col matrix. `out` must be zeroed (`patch·oc` elements).
+fn conv2d_backprop_filter_into(
+    pool: &ComputePool,
+    scratch: ScratchSource<'_>,
+    xv: &[f32],
+    gv: &[f32],
+    g: &ConvGeom,
+    out: &mut [f32],
+) {
+    let rows = g.rows();
+    if g.kh == 1 && g.kw == 1 && g.stride == 1 && g.ph == 0 && g.pw == 0 {
+        gemm_into(pool, scratch, xv, gv, g.ic, rows, g.oc, true, false, out);
+        return;
+    }
+    let kk = g.patch();
+    let mut col = scratch.take_f32(rows * kk);
+    col.resize(rows * kk, 0.0);
+    im2col(pool, xv, g, &mut col);
+    gemm_into(pool, scratch, &col, gv, kk, rows, g.oc, true, false, out);
+    scratch.give_f32(col);
+}
+
+/// [`conv2d_backprop_filter`] on the im2col + packed-GEMM path.
+pub fn conv2d_backprop_filter_with(
+    pool: &ComputePool,
+    x: &Tensor,
+    dy: &Tensor,
+    filter_shape: &Shape,
+    stride: usize,
+    padding: Padding,
+) -> Result<Tensor> {
+    let g = conv_geom(x.shape().dims(), filter_shape.dims(), stride, padding)?;
+    let gv = dy.as_f32()?;
+    if gv.len() != g.rows() * g.oc {
+        return Err(Status::invalid_argument("Conv2DBackpropFilter: dy shape mismatch"));
+    }
+    let mut out = vec![0f32; filter_shape.num_elements()];
+    conv2d_backprop_filter_into(pool, ScratchSource::Pool(pool), x.as_f32()?, gv, &g, &mut out);
+    Tensor::new(filter_shape.clone(), TensorData::F32(out))
+}
+
 fn rank2(t: &Tensor, what: &str) -> Result<(usize, usize)> {
     let d = t.shape().dims();
     match d.len() {
@@ -472,17 +969,66 @@ pub(super) fn register(r: &mut KernelRegistry) {
     r.add_sync("ReLU", |ctx| {
         Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_relu, 1)?])
     });
-    r.add_sync("ReluGrad", |ctx| Ok(vec![relu_grad(ctx.input(0)?, ctx.input(1)?)?]));
+    r.add_sync("ReluGrad", |ctx| {
+        let shape = ctx.input(0)?.shape().clone();
+        if ctx.input(0)?.num_elements() != ctx.input(1)?.num_elements() {
+            return Err(Status::invalid_argument("ReluGrad: size mismatch"));
+        }
+        let out = {
+            let gv = ctx.input(0)?.as_f32()?;
+            let fv = ctx.input(1)?.as_f32()?;
+            planned_fill(ctx, 0, gv.len(), 2, |i| if fv[i] > 0.0 { gv[i] } else { 0.0 })
+        };
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
+    });
     r.add_sync("Sigmoid", |ctx| {
         Ok(vec![crate::kernels::math::planned_unary_map(ctx, f32_sigmoid, 12)?])
     });
     r.add_sync("SoftMax", |ctx| Ok(vec![softmax_planned(ctx)?]));
     r.add_sync("LogSoftmax", |ctx| Ok(vec![log_softmax_planned(ctx)?]));
-    r.add_sync("BiasAdd", |ctx| Ok(vec![bias_add(ctx.input(0)?, ctx.input(1)?)?]));
-    r.add_sync("BiasAddGrad", |ctx| Ok(vec![bias_add_grad(ctx.input(0)?)?]));
+    r.add_sync("BiasAdd", |ctx| {
+        let (shape, c) = {
+            let x = ctx.input(0)?;
+            let (_, c) = bias_dims(x, ctx.input(1)?)?;
+            (x.shape().clone(), c)
+        };
+        let out = {
+            let xv = ctx.input(0)?.as_f32()?;
+            let bv = ctx.input(1)?.as_f32()?;
+            planned_fill(ctx, 0, xv.len(), 2, |i| xv[i] + bv[i % c])
+        };
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
+    });
+    r.add_sync("BiasAddGrad", |ctx| {
+        let (rows, c) = {
+            let dy = ctx.input(0)?;
+            let xd = dy.shape().dims();
+            let c = *xd.last().ok_or_else(|| Status::invalid_argument("BiasAddGrad: rank 0"))?;
+            (if c == 0 { 0 } else { dy.num_elements() / c }, c)
+        };
+        let mut out = ctx.alloc_f32_zeroed(0, c);
+        {
+            let gv = ctx.input(0)?.as_f32()?;
+            bias_add_grad_into(&ctx.device.compute, gv, rows, c, &mut out);
+        }
+        Ok(vec![ctx.make_output(0, Shape(vec![c]), TensorData::F32(out))?])
+    });
     r.add_sync("SoftmaxCrossEntropyWithLogits", |ctx| {
-        let (loss, backprop) = softmax_xent(ctx.input(0)?, ctx.input(1)?)?;
-        Ok(vec![loss, backprop])
+        let (rows, cols) = rank2(ctx.input(0)?, "SoftmaxCrossEntropyWithLogits")?;
+        if ctx.input(0)?.shape() != ctx.input(1)?.shape() {
+            return Err(Status::invalid_argument("xent: logits and labels shapes differ"));
+        }
+        let mut loss = ctx.alloc_f32_zeroed(0, rows);
+        let mut bp = ctx.alloc_f32_zeroed(1, rows * cols);
+        {
+            let xv = ctx.input(0)?.as_f32()?;
+            let lab = ctx.input(1)?.as_f32()?;
+            softmax_xent_into(&ctx.device.compute, xv, lab, rows, cols, &mut loss, &mut bp);
+        }
+        Ok(vec![
+            ctx.make_output(0, Shape(vec![rows]), TensorData::F32(loss))?,
+            ctx.make_output(1, Shape(vec![rows, cols]), TensorData::F32(bp))?,
+        ])
     });
     r.add_sync("L2Loss", |ctx| {
         let v = ctx.input(0)?.as_f32()?;
@@ -491,30 +1037,97 @@ pub(super) fn register(r: &mut KernelRegistry) {
     });
     r.add_sync("Convolution2D", |ctx| {
         let (stride, padding) = conv_attrs(ctx)?;
-        Ok(vec![conv2d(ctx.input(0)?, ctx.input(1)?, stride, padding)?])
+        let g = conv_geom(ctx.input(0)?.shape().dims(), ctx.input(1)?.shape().dims(), stride, padding)?;
+        let mut out = ctx.alloc_f32_zeroed(0, g.rows() * g.oc);
+        {
+            let xv = ctx.input(0)?.as_f32()?;
+            let fv = ctx.input(1)?.as_f32()?;
+            conv2d_into(&ctx.device.compute, ctx.scratch(), xv, fv, &g, &mut out);
+        }
+        Ok(vec![ctx.make_output(0, Shape(vec![g.n, g.oh, g.ow, g.oc]), TensorData::F32(out))?])
     });
     r.add_sync("Conv2DBackpropInput", |ctx| {
         // inputs: (dy, filter, original-input-for-shape)
         let (stride, padding) = conv_attrs(ctx)?;
-        let shape = ctx.input(2)?.shape().clone();
-        Ok(vec![conv2d_backprop_input(ctx.input(0)?, ctx.input(1)?, &shape, stride, padding)?])
+        let input_shape = ctx.input(2)?.shape().clone();
+        let g = conv_geom(input_shape.dims(), ctx.input(1)?.shape().dims(), stride, padding)?;
+        if ctx.input(0)?.num_elements() != g.rows() * g.oc {
+            return Err(Status::invalid_argument("Conv2DBackpropInput: dy shape mismatch"));
+        }
+        let mut out = ctx.alloc_f32_zeroed(0, input_shape.num_elements());
+        {
+            let gv = ctx.input(0)?.as_f32()?;
+            let fv = ctx.input(1)?.as_f32()?;
+            conv2d_backprop_input_into(&ctx.device.compute, ctx.scratch(), gv, fv, &g, &mut out);
+        }
+        Ok(vec![ctx.make_output(0, input_shape, TensorData::F32(out))?])
     });
     r.add_sync("Conv2DBackpropFilter", |ctx| {
         // inputs: (x, dy, original-filter-for-shape)
         let (stride, padding) = conv_attrs(ctx)?;
-        let shape = ctx.input(2)?.shape().clone();
-        Ok(vec![conv2d_backprop_filter(ctx.input(0)?, ctx.input(1)?, &shape, stride, padding)?])
+        let filter_shape = ctx.input(2)?.shape().clone();
+        let g = conv_geom(ctx.input(0)?.shape().dims(), filter_shape.dims(), stride, padding)?;
+        if ctx.input(1)?.num_elements() != g.rows() * g.oc {
+            return Err(Status::invalid_argument("Conv2DBackpropFilter: dy shape mismatch"));
+        }
+        let mut out = ctx.alloc_f32_zeroed(0, filter_shape.num_elements());
+        {
+            let xv = ctx.input(0)?.as_f32()?;
+            let gv = ctx.input(1)?.as_f32()?;
+            conv2d_backprop_filter_into(&ctx.device.compute, ctx.scratch(), xv, gv, &g, &mut out);
+        }
+        Ok(vec![ctx.make_output(0, filter_shape, TensorData::F32(out))?])
     });
     r.add_sync("MaxPool", |ctx| {
         let k = ctx.node.attr_opt("ksize").map(|a| a.as_i64()).transpose()?.unwrap_or(2) as usize;
         let (stride, padding) = conv_attrs(ctx)?;
-        let (out, arg) = max_pool(ctx.input(0)?, k, stride, padding)?;
-        Ok(vec![out, arg])
+        let g = pool_geom(ctx.input(0)?.shape().dims(), k, stride, padding)?;
+        let len = g.rows() * g.ic;
+        let mut out = ctx.alloc_f32(0, len);
+        out.resize(len, f32::NEG_INFINITY);
+        let mut arg = ctx.alloc_i64(1, len);
+        arg.resize(len, 0);
+        {
+            let xv = ctx.input(0)?.as_f32()?;
+            max_pool_into(&ctx.device.compute, xv, &g, &mut out, &mut arg);
+        }
+        let shape = Shape(vec![g.n, g.oh, g.ow, g.ic]);
+        Ok(vec![
+            ctx.make_output(0, shape.clone(), TensorData::F32(out))?,
+            ctx.make_output(1, shape, TensorData::I64(arg))?,
+        ])
     });
     r.add_sync("MaxPoolGrad", |ctx| {
-        // inputs: dy, argmax, original input (for shape)
+        // inputs: dy, argmax, original input (for shape). When the grad
+        // node carries the forward's ksize/stride/padding attrs (the
+        // autodiff copies them), the gather form runs input rows in
+        // parallel; attr-less nodes keep the serial scatter.
         let shape = ctx.input(2)?.shape().clone();
-        Ok(vec![max_pool_grad(ctx.input(0)?, ctx.input(1)?, &shape)?])
+        let k = match ctx.node.attr_opt("ksize") {
+            None => return Ok(vec![max_pool_grad(ctx.input(0)?, ctx.input(1)?, &shape)?]),
+            Some(a) => a.as_i64()? as usize,
+        };
+        let (stride, padding) = conv_attrs(ctx)?;
+        let g = pool_geom(shape.dims(), k, stride, padding)?;
+        let total = shape.num_elements();
+        {
+            let gv = ctx.input(0)?.as_f32()?;
+            let av = ctx.input(1)?.as_i64()?;
+            if gv.len() != g.rows() * g.ic || av.len() != gv.len() {
+                return Err(Status::invalid_argument("MaxPoolGrad: dy/argmax shape mismatch"));
+            }
+            // Same hostile-index contract as the serial scatter.
+            if av.iter().any(|&i| i < 0 || i >= total as i64) {
+                return Err(Status::invalid_argument("MaxPoolGrad: argmax out of range"));
+            }
+        }
+        let mut out = ctx.alloc_f32_zeroed(0, total);
+        {
+            let gv = ctx.input(0)?.as_f32()?;
+            let av = ctx.input(1)?.as_i64()?;
+            max_pool_grad_into(&ctx.device.compute, gv, av, &g, &mut out);
+        }
+        Ok(vec![ctx.make_output(0, shape, TensorData::F32(out))?])
     });
 }
 
@@ -525,6 +1138,37 @@ mod tests {
     fn t(shape: Vec<usize>, v: Vec<f32>) -> Tensor {
         Tensor::from_f32(shape, v).unwrap()
     }
+
+    /// Strictly positive pseudo-random fill: keeps the serial conv
+    /// references' `xi == 0.0` skips from ever firing, so the im2col
+    /// paths (which include padding's exact `+0.0` terms) must match
+    /// them bit for bit.
+    fn fill(n: usize, seed: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| ((((i + seed).wrapping_mul(2654435761)) % 1000) as f32) * 0.013 + 0.05)
+            .collect()
+    }
+
+    /// Signed pseudo-random fill for gradient planes.
+    fn fill_signed(n: usize, seed: usize) -> Vec<f32> {
+        fill(n, seed).into_iter().map(|v| v - 6.5).collect()
+    }
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    const CONV_GEOMS: &[(usize, usize, usize, usize, usize, usize, usize, usize, Padding)] = &[
+        // (n, h, w, ic, kh, kw, oc, stride, padding)
+        (2, 5, 5, 3, 3, 3, 4, 1, Padding::Same),
+        (1, 7, 6, 2, 3, 2, 3, 2, Padding::Valid),
+        (2, 4, 4, 3, 1, 1, 5, 1, Padding::Same), // 1x1 direct (no im2col) path
+        (1, 9, 9, 1, 4, 4, 2, 3, Padding::Same),
+        (1, 3, 3, 2, 3, 3, 2, 1, Padding::Valid), // single output position (m = 1 GEMM)
+    ];
 
     #[test]
     fn relu_and_grad() {
@@ -569,6 +1213,17 @@ mod tests {
     }
 
     #[test]
+    fn bias_add_grad_parallel_matches_serial_exactly() {
+        let pool = ComputePool::new(4, "nn-test");
+        let (rows, c) = (37, 19);
+        let dy = t(vec![rows, c], fill_signed(rows * c, 3));
+        let reference = bias_add_grad(&dy).unwrap();
+        let mut out = vec![0f32; c];
+        bias_add_grad_into(&pool, dy.as_f32().unwrap(), rows, c, &mut out);
+        assert_bits(&out, reference.as_f32().unwrap(), "bias_add_grad");
+    }
+
+    #[test]
     fn xent_loss_and_backprop() {
         // Perfect prediction -> loss near 0; backprop = p - y.
         let logits = t(vec![1, 3], vec![10., 0., 0.]);
@@ -592,6 +1247,28 @@ mod tests {
         let labels = t(vec![1, 4], vec![0.25; 4]);
         let (loss, _) = softmax_xent(&logits, &labels).unwrap();
         assert!((loss.as_f32().unwrap()[0] - (4f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fused_xent_matches_two_step_exactly() {
+        let pool = ComputePool::new(4, "nn-test");
+        let (rows, cols) = (9, 7);
+        let logits = t(vec![rows, cols], fill_signed(rows * cols, 11));
+        let labels = t(vec![rows, cols], fill(rows * cols, 5));
+        let (l0, b0) = softmax_xent(&logits, &labels).unwrap();
+        let mut loss = vec![0f32; rows];
+        let mut bp = vec![0f32; rows * cols];
+        softmax_xent_into(
+            &pool,
+            logits.as_f32().unwrap(),
+            labels.as_f32().unwrap(),
+            rows,
+            cols,
+            &mut loss,
+            &mut bp,
+        );
+        assert_bits(&loss, l0.as_f32().unwrap(), "xent loss");
+        assert_bits(&bp, b0.as_f32().unwrap(), "xent backprop");
     }
 
     #[test]
@@ -632,6 +1309,47 @@ mod tests {
     }
 
     #[test]
+    fn im2col_conv2d_matches_naive_exactly() {
+        for &threads in &[1usize, 4] {
+            let pool = ComputePool::new(threads, "nn-test");
+            for &(n, h, w, ic, kh, kw, oc, stride, pad) in CONV_GEOMS {
+                let x = t(vec![n, h, w, ic], fill(n * h * w * ic, 1));
+                let f = t(vec![kh, kw, ic, oc], fill(kh * kw * ic * oc, 2));
+                let reference = conv2d(&x, &f, stride, pad).unwrap();
+                let packed = conv2d_with(&pool, &x, &f, stride, pad).unwrap();
+                assert_eq!(packed.shape(), reference.shape());
+                assert_bits(
+                    packed.as_f32().unwrap(),
+                    reference.as_f32().unwrap(),
+                    &format!("conv {n}x{h}x{w}x{ic} k{kh}x{kw} s{stride} t{threads}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_conv_backprops_match_naive_exactly() {
+        for &threads in &[1usize, 4] {
+            let pool = ComputePool::new(threads, "nn-test");
+            for &(n, h, w, ic, kh, kw, oc, stride, pad) in CONV_GEOMS {
+                let x = t(vec![n, h, w, ic], fill(n * h * w * ic, 1));
+                let f = t(vec![kh, kw, ic, oc], fill(kh * kw * ic * oc, 2));
+                let y = conv2d(&x, &f, stride, pad).unwrap();
+                let dy = t(y.shape().dims().to_vec(), fill_signed(y.num_elements(), 7));
+                let what = format!("conv-bp {n}x{h}x{w}x{ic} k{kh}x{kw} s{stride} t{threads}");
+
+                let dx_ref = conv2d_backprop_input(&dy, &f, x.shape(), stride, pad).unwrap();
+                let dx = conv2d_backprop_input_with(&pool, &dy, &f, x.shape(), stride, pad).unwrap();
+                assert_bits(dx.as_f32().unwrap(), dx_ref.as_f32().unwrap(), &format!("{what} dx"));
+
+                let df_ref = conv2d_backprop_filter(&x, &dy, f.shape(), stride, pad).unwrap();
+                let df = conv2d_backprop_filter_with(&pool, &x, &dy, f.shape(), stride, pad).unwrap();
+                assert_bits(df.as_f32().unwrap(), df_ref.as_f32().unwrap(), &format!("{what} df"));
+            }
+        }
+    }
+
+    #[test]
     fn maxpool_and_grad() {
         let x = t(vec![1, 2, 2, 1], vec![1., 5., 3., 2.]);
         let (y, arg) = max_pool(&x, 2, 2, Padding::Valid).unwrap();
@@ -639,6 +1357,39 @@ mod tests {
         let dy = t(vec![1, 1, 1, 1], vec![10.]);
         let dx = max_pool_grad(&dy, &arg, x.shape()).unwrap();
         assert_eq!(dx.as_f32().unwrap(), &[0., 10., 0., 0.]);
+    }
+
+    #[test]
+    fn parallel_maxpool_and_grad_match_serial_exactly() {
+        let pool = ComputePool::new(4, "nn-test");
+        // (k, stride, padding); stride < k exercises overlapping windows.
+        for &(k, stride, pad) in
+            &[(2usize, 2usize, Padding::Valid), (3, 2, Padding::Same), (2, 1, Padding::Same)]
+        {
+            let (n, h, w, c) = (2, 6, 5, 3);
+            let x = t(vec![n, h, w, c], fill_signed(n * h * w * c, 13));
+            let (y0, a0) = max_pool(&x, k, stride, pad).unwrap();
+            let (y1, a1) = max_pool_with(&pool, &x, k, stride, pad).unwrap();
+            let what = format!("maxpool k{k} s{stride}");
+            assert_eq!(y1.shape(), y0.shape());
+            assert_bits(y1.as_f32().unwrap(), y0.as_f32().unwrap(), &what);
+            assert_eq!(a1.as_i64().unwrap(), a0.as_i64().unwrap(), "{what} argmax");
+
+            let dy = t(y0.shape().dims().to_vec(), fill_signed(y0.num_elements(), 17));
+            let dx0 = max_pool_grad(&dy, &a0, x.shape()).unwrap();
+            let dx1 = max_pool_grad_with(&pool, &dy, &a1, x.shape(), k, stride, pad).unwrap();
+            assert_bits(dx1.as_f32().unwrap(), dx0.as_f32().unwrap(), &format!("{what} grad"));
+        }
+    }
+
+    #[test]
+    fn max_pool_grad_with_rejects_hostile_argmax() {
+        let pool = ComputePool::new(2, "nn-test");
+        let dy = t(vec![1, 1, 1, 1], vec![1.0]);
+        let arg = Tensor::new(Shape(vec![1, 1, 1, 1]), TensorData::I64(vec![99])).unwrap();
+        let shape = Shape(vec![1, 2, 2, 1]);
+        let err = max_pool_grad_with(&pool, &dy, &arg, &shape, 2, 2, Padding::Valid).unwrap_err();
+        assert!(err.to_string().contains("argmax out of range"), "{err}");
     }
 
     #[test]

@@ -37,6 +37,8 @@ pub struct MemCounters {
     bytes_fresh: AtomicU64,
     forwards_taken: AtomicU64,
     bytes_forwarded: AtomicU64,
+    scratch_checkouts: AtomicU64,
+    scratch_bytes_fresh: AtomicU64,
 }
 
 /// Point-in-time copy of [`MemCounters`].
@@ -56,6 +58,11 @@ pub struct MemSnapshot {
     /// In-place kernel forwards taken (output aliased its dying input).
     pub forwards_taken: u64,
     pub bytes_forwarded: u64,
+    /// Kernel scratch checkouts (GEMM packing panels, im2col patches).
+    pub scratch_checkouts: u64,
+    /// Scratch checkouts that had to allocate (the rest reused a pooled
+    /// buffer already big enough).
+    pub scratch_bytes_fresh: u64,
 }
 
 impl MemSnapshot {
@@ -72,6 +79,10 @@ impl MemSnapshot {
             bytes_fresh: self.bytes_fresh.saturating_sub(earlier.bytes_fresh),
             forwards_taken: self.forwards_taken.saturating_sub(earlier.forwards_taken),
             bytes_forwarded: self.bytes_forwarded.saturating_sub(earlier.bytes_forwarded),
+            scratch_checkouts: self.scratch_checkouts.saturating_sub(earlier.scratch_checkouts),
+            scratch_bytes_fresh: self
+                .scratch_bytes_fresh
+                .saturating_sub(earlier.scratch_bytes_fresh),
         }
     }
 }
@@ -87,6 +98,8 @@ impl MemCounters {
             bytes_fresh: self.bytes_fresh.load(Ordering::Relaxed),
             forwards_taken: self.forwards_taken.load(Ordering::Relaxed),
             bytes_forwarded: self.bytes_forwarded.load(Ordering::Relaxed),
+            scratch_checkouts: self.scratch_checkouts.load(Ordering::Relaxed),
+            scratch_bytes_fresh: self.scratch_bytes_fresh.load(Ordering::Relaxed),
         }
     }
 
@@ -121,9 +134,18 @@ impl BufRecycler for SlotRecycler {
     }
 }
 
+/// Scratch buffers retained per arena (GEMM packing panels, im2col
+/// patches); beyond this, returned scratch is freed.
+const MAX_SCRATCH_PER_ARENA: usize = 4;
+
 /// Slot-structured storage for one executing step.
 pub struct StepArena {
     slots: Vec<Slot>,
+    /// Side pool for kernel-internal scratch that is not a planned
+    /// endpoint (packing panels, im2col patches). Arenas are pooled per
+    /// compiled step, so steady-state steps reuse the same scratch
+    /// allocations the way slots reuse endpoint storage.
+    scratch: Mutex<Vec<Vec<f32>>>,
     counters: Arc<MemCounters>,
     /// Guard: a pooled arena must never serve two steps at once.
     in_use: AtomicBool,
@@ -139,6 +161,7 @@ impl StepArena {
                     recycler: Arc::new(SlotRecycler { arena: weak.clone(), slot }),
                 })
                 .collect(),
+            scratch: Mutex::new(Vec::new()),
             counters,
             in_use: AtomicBool::new(false),
         })
@@ -243,6 +266,35 @@ impl StepArena {
         let mut v = self.checkout_f64(slot, n);
         v.resize(n, 0.0);
         v
+    }
+
+    /// Check out a scratch `Vec<f32>` with capacity ≥ `n` (length 0) for
+    /// kernel-internal buffers that are not planned endpoints — GEMM
+    /// packing panels, im2col patches. Return it with
+    /// [`StepArena::give_scratch_f32`] so the next node (or next step on
+    /// this pooled arena) reuses the allocation.
+    pub fn take_scratch_f32(&self, n: usize) -> Vec<f32> {
+        self.counters.scratch_checkouts.fetch_add(1, Ordering::Relaxed);
+        let mut pool = self.scratch.lock().unwrap();
+        if let Some(pos) = pool.iter().position(|v| v.capacity() >= n) {
+            let mut v = pool.swap_remove(pos);
+            v.clear();
+            return v;
+        }
+        drop(pool);
+        self.counters.scratch_bytes_fresh.fetch_add((n * 4) as u64, Ordering::Relaxed);
+        Vec::with_capacity(n)
+    }
+
+    /// Return a vector checked out with [`StepArena::take_scratch_f32`].
+    pub fn give_scratch_f32(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < MAX_SCRATCH_PER_ARENA {
+            pool.push(v);
+        }
     }
 
     /// The recycler to attach to tensors built over `slot`'s storage.
@@ -390,6 +442,24 @@ mod tests {
         let v = arena.checkout_f32(0, 2);
         assert!(v.capacity() >= 2);
         assert_eq!(pool.counters().snapshot().reuse_hits, 0);
+    }
+
+    #[test]
+    fn scratch_checkout_reuses_capacity() {
+        let pool = ArenaPool::new(1);
+        let arena = pool.checkout();
+        let mut v = arena.take_scratch_f32(64);
+        assert!(v.is_empty());
+        assert!(v.capacity() >= 64);
+        v.resize(64, 1.0);
+        let ptr = v.as_ptr();
+        arena.give_scratch_f32(v);
+        let v2 = arena.take_scratch_f32(32);
+        assert!(v2.is_empty());
+        assert_eq!(v2.as_ptr(), ptr, "smaller request reuses the pooled scratch");
+        let snap = pool.counters().snapshot();
+        assert_eq!(snap.scratch_checkouts, 2);
+        assert_eq!(snap.scratch_bytes_fresh, 64 * 4);
     }
 
     #[test]

@@ -78,10 +78,15 @@ impl CostModel {
                     node.attrs.get("ops").and_then(|a| a.as_list_str().ok()).map_or(1, |s| s.len());
                 5.0 + 3.0 * steps as f64
             }
-            "Convolution2D" | "Conv2DBackpropInput" | "Conv2DBackpropFilter" => 500.0,
+            // Conv2D lowers to im2col + the packed GEMM, so its cost tracks
+            // MatMul's but with the extra pack/gather pass on top.
+            "Convolution2D" | "Conv2DBackpropInput" | "Conv2DBackpropFilter" => 350.0,
             "XlaCall" => 1000.0,
             "MatrixInverse" | "MatrixDeterminant" => 150.0,
             "SoftmaxCrossEntropyWithLogits" | "SoftMax" | "LogSoftmax" => 30.0,
+            // Window scans: one read per (window × output) pair — heavier
+            // than elementwise, far lighter than a conv's GEMM.
+            "MaxPool" | "MaxPoolGrad" => 40.0,
             _ => match category {
                 Category::ElementWise | Category::NeuralNet => 10.0,
                 Category::Array => 5.0,
@@ -198,6 +203,23 @@ mod tests {
         assert!(
             cm.static_node_cost_us(g.node(mm.node)) > cm.static_node_cost_us(g.node(add.node))
         );
+    }
+
+    #[test]
+    fn nn_kernel_costs_ordered_sensibly() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(1.0);
+        let add = b.add(x, x);
+        let mm = b.matmul(x, x);
+        let mp = b.op("MaxPool", "mp", vec![x], vec![]).unwrap();
+        let cv = b.op("Convolution2D", "cv", vec![x, x], vec![]).unwrap();
+        let cm = CostModel::new();
+        let g = &b.graph;
+        let cost = |n: NodeId| cm.static_node_cost_us(g.node(n));
+        // elementwise < window scan < GEMM < im2col conv.
+        assert!(cost(add.node) < cost(mp));
+        assert!(cost(mp) < cost(mm.node));
+        assert!(cost(mm.node) < cost(cv));
     }
 
     #[test]

@@ -455,7 +455,9 @@ impl StepStats {
                     .set("bytes_reused", m.runtime.bytes_reused)
                     .set("bytes_fresh", m.runtime.bytes_fresh)
                     .set("forwards_taken", m.runtime.forwards_taken)
-                    .set("bytes_forwarded", m.runtime.bytes_forwarded),
+                    .set("bytes_forwarded", m.runtime.bytes_forwarded)
+                    .set("scratch_checkouts", m.runtime.scratch_checkouts)
+                    .set("scratch_bytes_fresh", m.runtime.scratch_bytes_fresh),
             );
         }
         Json::obj()
@@ -501,6 +503,8 @@ impl StepStats {
             rep.runtime.bytes_fresh = u(m.get("bytes_fresh"));
             rep.runtime.forwards_taken = u(m.get("forwards_taken"));
             rep.runtime.bytes_forwarded = u(m.get("bytes_forwarded"));
+            rep.runtime.scratch_checkouts = u(m.get("scratch_checkouts"));
+            rep.runtime.scratch_bytes_fresh = u(m.get("scratch_bytes_fresh"));
             out.memory.push(rep);
         }
         Ok(out)

@@ -78,6 +78,163 @@ fn matmul_bit_identical_all_transposes_odd_dims() {
 }
 
 #[test]
+fn matmul_m1_row_vector_bit_identical() {
+    // m == 1 skips the panel loop for the GEMV paths of the packed GEMM
+    // (per-column dot when B is transposed, ascending-k axpy otherwise);
+    // both must keep the same every-thread-count byte contract.
+    let (k, n) = (219usize, 87usize);
+    for tb in [false, true] {
+        let b_dims = if tb { vec![n, k] } else { vec![k, n] };
+        let a = Tensor::from_f32(vec![1, k], fill(k, 9)).unwrap();
+        let feeds = [("a", a)];
+        let build = |b: &mut GraphBuilder| {
+            let x = b.placeholder("a", rustflow::DType::F32).unwrap();
+            let w = b.constant(Tensor::from_f32(b_dims.clone(), fill(k * n, 10)).unwrap());
+            let mm = b.matmul_t(x, w, false, tb);
+            vec![format!("{}:0", b.graph.node(mm.node).name)]
+        };
+        assert_bit_identical(build, &feeds, &format!("matmul m=1 tb={tb}"));
+    }
+}
+
+#[test]
+fn conv_relu_maxpool_net_and_gradients_bit_identical() {
+    // A conv stack through autodiff: Convolution2D → BiasAdd → ReLU →
+    // MaxPool, a scalar loss, and gradients w.r.t. input, filter and
+    // bias — covering the im2col forward, Conv2DBackpropInput/Filter,
+    // the MaxPoolGrad gather, ReluGrad and BiasAddGrad parallel paths.
+    let (n, h, w, ic, kh, oc) = (2usize, 9, 8, 3, 3, 8);
+    let x = Tensor::from_f32(vec![n, h, w, ic], fill(n * h * w * ic, 11)).unwrap();
+    let feeds = [("x", x)];
+    let build = |b: &mut GraphBuilder| {
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let f = b.constant(
+            Tensor::from_f32(vec![kh, kh, ic, oc], fill(kh * kh * ic * oc, 12)).unwrap(),
+        );
+        let bias = b.constant(Tensor::from_f32(vec![oc], fill(oc, 13)).unwrap());
+        let conv = b
+            .op1(
+                "Convolution2D",
+                "conv",
+                vec![x, f],
+                vec![("stride", 1i64.into()), ("padding", "SAME".into())],
+            )
+            .unwrap();
+        let ba = b.bias_add(conv, bias);
+        let r = b.relu(ba);
+        let mp = b
+            .op1(
+                "MaxPool",
+                "mp",
+                vec![r],
+                vec![("ksize", 2i64.into()), ("stride", 2i64.into()), ("padding", "VALID".into())],
+            )
+            .unwrap();
+        let loss = b.reduce_sum(mp, None);
+        let grads = rustflow::autodiff::gradients(b, loss, &[x, f, bias]).unwrap();
+        let mut fetches = vec![
+            format!("{}:0", b.graph.node(mp.node).name),
+            format!("{}:0", b.graph.node(loss.node).name),
+        ];
+        for g in grads {
+            let g = g.expect("conv-net gradient exists");
+            fetches.push(format!("{}:{}", b.graph.node(g.node).name, g.port));
+        }
+        fetches
+    };
+    assert_bit_identical(build, &feeds, "conv/relu/maxpool net + gradients");
+}
+
+#[test]
+fn softmax_xent_fused_bit_identical() {
+    // The fused loss+backprop xent kernel: both outputs, plus the
+    // gradient of the summed loss w.r.t. the logits.
+    let (rows, cols) = (53usize, 31usize);
+    let x = Tensor::from_f32(vec![rows, cols], fill(rows * cols, 14)).unwrap();
+    // Rows of positive weights summing to 1, so labels are
+    // distribution-shaped (values don't matter for the byte contract).
+    let raw = fill(rows * cols, 15);
+    let mut lab = vec![0f32; rows * cols];
+    for r in 0..rows {
+        let row = &raw[r * cols..(r + 1) * cols];
+        let sum: f32 = row.iter().map(|v| v.abs() + 0.01).sum();
+        for c in 0..cols {
+            lab[r * cols + c] = (row[c].abs() + 0.01) / sum;
+        }
+    }
+    let feeds = [("x", x)];
+    let build = |b: &mut GraphBuilder| {
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let labels = b.constant(Tensor::from_f32(vec![rows, cols], lab.clone()).unwrap());
+        let (loss, backprop) = b.softmax_xent(x, labels).unwrap();
+        let total = b.reduce_sum(loss, None);
+        let grads = rustflow::autodiff::gradients(b, total, &[x]).unwrap();
+        let g = grads[0].expect("dloss/dlogits exists");
+        vec![
+            format!("{}:0", b.graph.node(loss.node).name),
+            format!("{}:{}", b.graph.node(backprop.node).name, backprop.port),
+            format!("{}:{}", b.graph.node(g.node).name, g.port),
+        ]
+    };
+    assert_bit_identical(build, &feeds, "fused softmax xent");
+}
+
+#[test]
+fn shared_session_concurrent_steps_bit_identical() {
+    // Many threads drive the SAME session — one intra-op pool, so chunks
+    // from concurrent steps mix in the worker deques and get stolen
+    // across jobs (the serving fan-in shape). Every step must still
+    // produce its serial bytes.
+    let dim = 96usize;
+    let build = |b: &mut GraphBuilder| -> Vec<String> {
+        let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+        let w = b.constant(Tensor::from_f32(vec![dim, dim], fill(dim * dim, 90)).unwrap());
+        let mm = b.matmul(x, w);
+        let t = b.tanh(mm);
+        let sm = b.softmax(t);
+        vec![format!("{}:0", b.graph.node(sm.node).name)]
+    };
+    let make = |intra: usize| {
+        let mut b = GraphBuilder::new();
+        let fetches = build(&mut b);
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions { intra_op_threads: intra, ..Default::default() },
+        );
+        (sess, fetches)
+    };
+    let (serial, fetches) = make(1);
+    let expected: Vec<Vec<f32>> = (0..8u32)
+        .map(|t| {
+            let x = Tensor::from_f32(vec![dim, dim], fill(dim * dim, 100 + t)).unwrap();
+            let fr: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+            serial.run(&[("x", x)], &fr, &[]).unwrap()[0].as_f32().unwrap().to_vec()
+        })
+        .collect();
+    let (shared, fetches) = make(4);
+    let shared = Arc::new(shared);
+    std::thread::scope(|s| {
+        for (t, want) in expected.iter().enumerate() {
+            let shared = Arc::clone(&shared);
+            let fetches = &fetches;
+            s.spawn(move || {
+                let fr: Vec<&str> = fetches.iter().map(|s| s.as_str()).collect();
+                for round in 0..10 {
+                    let x =
+                        Tensor::from_f32(vec![dim, dim], fill(dim * dim, 100 + t as u32)).unwrap();
+                    let got = shared.run(&[("x", x)], &fr, &[]).unwrap();
+                    assert_eq!(
+                        got[0].as_f32().unwrap(),
+                        &want[..],
+                        "thread {t} round {round} diverged from serial bytes"
+                    );
+                }
+            });
+        }
+    });
+}
+
+#[test]
 fn fused_broadcast_chain_bit_identical() {
     // tanh(x * scale + row_bias): fuses into one FusedElementwise with a
     // scalar extra and a row-broadcast ([cols] vs [rows, cols]) extra —

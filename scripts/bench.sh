@@ -13,8 +13,9 @@
 # The optimizer bench asserts its acceptance bar (full pipeline ≥ 1.3x
 # over passes-disabled), the memory bench asserts planning-on allocates
 # ≥ 2x fewer heap bytes per step than planning-off, the parallel bench
-# asserts ≥ 2x matmul throughput at 4 intra-op threads (when the machine
-# has ≥ 4 cores) with no 1-thread regression, the serving_net bench
+# asserts the packed GEMM gives ≥ 2x the old blocked kernel and the
+# im2col conv ≥ 3x the direct loop at 4 intra-op threads (≥ 4 cores)
+# with no 1-thread regression, the serving_net bench
 # asserts a mid-run model hot-swap costs < 20% of one throughput window
 # (≥ 4 cores), the dist_train bench asserts bf16 gradient/param
 # compression cuts wire bytes ≥ 40% at unchanged convergence, the

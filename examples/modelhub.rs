@@ -52,6 +52,17 @@ fn main() -> rustflow::Result<()> {
     let addr = server.addr().to_string();
     println!("model hub serving on {addr}");
 
+    // Optional debug surface: MODELHUB_DEBUG_ADDR=127.0.0.1:18080 mounts
+    // /healthz /varz /statusz /tracez next to the serving port.
+    let debug = match std::env::var("MODELHUB_DEBUG_ADDR") {
+        Ok(debug_addr) => {
+            let dbg = NetServer::serve_debug(&manager, &debug_addr)?;
+            println!("debug surface on http://{}", dbg.addr());
+            Some(dbg)
+        }
+        Err(_) => None,
+    };
+
     manager.deploy("mnist", 1, &v1.spec)?;
     println!("deployed mnist v1 (live: {:?})", manager.live_version("mnist"));
 
@@ -125,6 +136,18 @@ fn main() -> rustflow::Result<()> {
         pinned.expect_err("v1 is retired; the pin must fail")
     );
 
+    // Keep the surfaces up for external probes (CI curls the debug
+    // endpoints while the example holds).
+    if let Ok(secs) = std::env::var("MODELHUB_HOLD_SECS") {
+        if let Ok(secs) = secs.parse::<u64>() {
+            println!("holding for {secs}s…");
+            std::thread::sleep(Duration::from_secs(secs));
+        }
+    }
+
+    if let Some(dbg) = debug {
+        dbg.shutdown();
+    }
     server.shutdown();
     manager.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

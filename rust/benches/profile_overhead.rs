@@ -1,0 +1,115 @@
+//! Continuous-profiler overhead bench: steps/sec through the same
+//! matmul/bias/tanh stack with `SessionOptions::profile_window` 0 (no
+//! profiling, no tracing) vs the default 32 (per-step trace collection,
+//! StepStats distillation, ring insert — the always-on `/statusz` feed).
+//!
+//! Acceptance bar: profiling stays within 10% of the unprofiled run on
+//! real kernels. That is what justifies shipping it on by default.
+//!
+//!     cargo bench --bench profile_overhead
+//!
+//! Writes BENCH_profile_overhead.json (path from
+//! $BENCH_PROFILE_OVERHEAD_JSON, set by scripts/bench.sh).
+
+use rustflow::util::json::Json;
+use rustflow::util::stats;
+use rustflow::{GraphBuilder, Session, SessionOptions, Tensor};
+use std::time::Duration;
+
+fn filled(r: usize, c: usize, seed: u32) -> Tensor {
+    let v: Vec<f32> = (0..r * c)
+        .map(|i| {
+            let h = (i as u32).wrapping_mul(2654435761).wrapping_add(seed);
+            ((h % 1000) as f32) * 0.002 - 1.0
+        })
+        .collect();
+    Tensor::from_f32(vec![r, c], v).unwrap()
+}
+
+/// Steps/sec (and the fetched output for bit-identity checks) through a
+/// `depth`-layer matmul/bias/tanh stack at width `dim`, with the
+/// profiler keeping `window` steps (0 = off).
+fn stack_steps_per_sec(dim: usize, depth: u32, window: usize) -> (f64, Tensor) {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", rustflow::DType::F32).unwrap();
+    let mut h = x;
+    for l in 0..depth {
+        let w = b.constant(filled(dim, dim, 100 + l));
+        let bias = b.constant(filled(1, dim, 200 + l));
+        let mm = b.matmul(h, w);
+        let s = b.add(mm, bias);
+        h = b.tanh(s);
+    }
+    let fetch = format!("{}:0", b.graph.node(h.node).name);
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { profile_window: window, ..Default::default() },
+    );
+    let feed = filled(dim, dim, 7);
+    let run = || sess.run(&[("x", feed.clone())], &[&fetch], &[]).unwrap().remove(0);
+    let out = run(); // warm: compile + fill arena pool
+    let s = stats::bench_for(3, Duration::from_secs(2), || {
+        run();
+    });
+    if window > 0 {
+        let p = sess.profiler().expect("profiling enabled");
+        assert!(p.steps_observed() > 0, "profiled run observed no steps");
+        assert!(
+            p.node_rollups().iter().any(|r| r.total_us > 0),
+            "rollups must show nonzero self-times"
+        );
+    } else {
+        assert!(sess.profiler().is_none(), "window 0 must disable profiling");
+    }
+    (1.0 / s.mean.as_secs_f64(), out)
+}
+
+fn main() {
+    // The production shape: 6 layers of 256x256. The profiler's per-step
+    // cost (span records + StepStats fold + Arc push) is amortized over
+    // ~180 MFLOP/step.
+    let (off, out_off) = stack_steps_per_sec(256, 6, 0);
+    let (on, out_on) = stack_steps_per_sec(256, 6, 32);
+    assert_eq!(
+        out_off.as_f32().unwrap(),
+        out_on.as_f32().unwrap(),
+        "profiling must not change results"
+    );
+    let overhead = off / on - 1.0;
+    println!(
+        "profile_overhead/stack 6x256: {off:.1} steps/s off, {on:.1} steps/s window=32 \
+         ({:.1}% overhead)",
+        overhead * 100.0
+    );
+
+    // Worst case: 48 layers of 16x16 — per-step distillation cost over
+    // hundreds of tiny kernels. Reported, not asserted.
+    let (tiny_off, _) = stack_steps_per_sec(16, 48, 0);
+    let (tiny_on, _) = stack_steps_per_sec(16, 48, 32);
+    let tiny_overhead = tiny_off / tiny_on - 1.0;
+    println!(
+        "profile_overhead/tiny 48x16: {tiny_off:.1} steps/s off, {tiny_on:.1} steps/s window=32 \
+         ({:.1}% overhead)",
+        tiny_overhead * 100.0
+    );
+
+    assert!(
+        overhead <= 0.10,
+        "continuous profiling on real kernels must stay within 10%, got {:.1}%",
+        overhead * 100.0
+    );
+
+    let out = Json::obj()
+        .set("bench", "profile_overhead")
+        .set("stack_steps_per_sec_off", off)
+        .set("stack_steps_per_sec_on", on)
+        .set("stack_overhead", overhead)
+        .set("tiny_steps_per_sec_off", tiny_off)
+        .set("tiny_steps_per_sec_on", tiny_on)
+        .set("tiny_overhead", tiny_overhead);
+    let path = std::env::var("BENCH_PROFILE_OVERHEAD_JSON")
+        .unwrap_or_else(|_| "BENCH_profile_overhead.json".to_string());
+    std::fs::write(&path, out.render() + "\n").expect("write bench json");
+    println!("wrote {path}");
+    println!("profile_overhead: OK ({:.1}% on real kernels)", overhead * 100.0);
+}

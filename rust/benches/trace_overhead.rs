@@ -41,7 +41,13 @@ fn stack_steps_per_sec(dim: usize, depth: u32, trace: bool) -> (f64, Tensor) {
         h = b.tanh(s);
     }
     let fetch = format!("{}:0", b.graph.node(h.node).name);
-    let sess = Session::new(b.into_graph(), SessionOptions { trace, ..Default::default() });
+    // profile_window: 0 keeps the continuous profiler (which implies
+    // per-step tracing) out of both arms — this bench isolates the trace
+    // flag itself; benches/profile_overhead.rs measures the profiler.
+    let sess = Session::new(
+        b.into_graph(),
+        SessionOptions { trace, profile_window: 0, ..Default::default() },
+    );
     let feed = filled(dim, dim, 7);
     let run = || sess.run(&[("x", feed.clone())], &[&fetch], &[]).unwrap().remove(0);
     let out = run(); // warm: compile + fill arena pool

@@ -364,7 +364,8 @@ impl PsPullReply {
 /// `MSG_TRACE_REPLY`: a drained [`TraceFragment`] from the serving
 /// process. The request (`MSG_TRACE_PULL`) carries an empty payload.
 /// Layout: status, process name, dropped count, u32 event count, then
-/// per event name/op/device strings + thread/start_us/dur_us/step u64s.
+/// per event name/op/device strings +
+/// thread/start_us/dur_us/step/out_bytes u64s.
 pub struct TraceReply {
     pub status: Result<()>,
     pub fragment: crate::tracing_tools::TraceFragment,
@@ -385,6 +386,7 @@ impl TraceReply {
             put_u64(&mut out, ev.start_us);
             put_u64(&mut out, ev.dur_us);
             put_u64(&mut out, ev.step);
+            put_u64(&mut out, ev.out_bytes);
         }
         out
     }
@@ -404,6 +406,7 @@ impl TraceReply {
             let start_us = get_u64(buf, &mut pos)?;
             let dur_us = get_u64(buf, &mut pos)?;
             let step = get_u64(buf, &mut pos)?;
+            let out_bytes = get_u64(buf, &mut pos)?;
             events.push(crate::tracing_tools::Event {
                 name,
                 op,
@@ -412,6 +415,7 @@ impl TraceReply {
                 start_us,
                 dur_us,
                 step,
+                out_bytes,
             });
         }
         Ok(TraceReply {
@@ -656,6 +660,7 @@ mod tests {
             start_us: start,
             dur_us: 15,
             step: 6,
+            out_bytes: 4096,
         };
         let msg = TraceReply {
             status: Ok(()),
@@ -687,6 +692,7 @@ mod tests {
                     start_us: 10,
                     dur_us: 20,
                     step: 1,
+                    out_bytes: 0,
                 }],
                 dropped: 0,
             },

@@ -50,6 +50,8 @@ use super::proto::{
 use crate::compress;
 use crate::error::{Code, Result, Status};
 use crate::kernels::math::binary_elementwise;
+use crate::obs::httpz::{DebugServer, Response, Routes};
+use crate::obs::profiler::{straggler_report, Profiler};
 use crate::obs::{Counter, MetricsRegistry};
 use crate::optim::{Optimizer, SlotMap};
 use crate::rendezvous::{recv_blocking_timeout, LocalRendezvous, Rendezvous};
@@ -60,7 +62,7 @@ use std::collections::{BTreeMap, BTreeSet, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Server-side configuration for one parameter-server shard.
 #[derive(Clone)]
@@ -126,6 +128,14 @@ pub struct ParamServer {
     pulls: Arc<Counter>,
     /// Present when [`PsOptions::trace`]: spans drained by `MSG_TRACE_PULL`.
     trace: Option<Arc<TraceCollector>>,
+    /// Phase rollups (recv / barrier-wait / apply) for `/statusz` —
+    /// always on; feeding it is one histogram record per phase.
+    profiler: Arc<Profiler>,
+    /// Sync mode: `(step, first-arrival time)` of the in-flight step, so
+    /// each replica's barrier *arrival lag* (its arrival minus the
+    /// step's earliest) can be attributed. One slot suffices — the
+    /// staleness contract admits exactly one step at a time.
+    sync_first_arrival: Mutex<Option<(u64, Instant)>>,
     shutdown: AtomicBool,
 }
 
@@ -157,6 +167,8 @@ impl ParamServer {
             pushes,
             pulls,
             trace,
+            profiler: Profiler::new(16),
+            sync_first_arrival: Mutex::new(None),
             shutdown: AtomicBool::new(false),
         })
     }
@@ -217,6 +229,52 @@ impl ParamServer {
     /// `"metrics"`.
     pub fn metrics(&self) -> &Arc<MetricsRegistry> {
         &self.registry
+    }
+
+    /// Phase profiler (recv / barrier-wait / apply rollups) — what
+    /// `/statusz` renders.
+    pub fn profiler(&self) -> &Arc<Profiler> {
+        &self.profiler
+    }
+
+    /// Mount the debug surface for this shard:
+    ///
+    /// | path       | serves                                             |
+    /// |------------|----------------------------------------------------|
+    /// | `/healthz` | `ok` (200) or `shutting down` (503)                |
+    /// | `/varz`    | the registry in Prometheus text exposition         |
+    /// | `/statusz` | phase rollups + barrier-arrival straggler report   |
+    /// | `/tracez`  | chrome trace JSON of collected spans (404 if off)  |
+    pub fn serve_httpz(self: &Arc<Self>, addr: &str) -> Result<DebugServer> {
+        let (h, v, s, t) =
+            (Arc::clone(self), Arc::clone(self), Arc::clone(self), Arc::clone(self));
+        let routes = Routes::new()
+            .add("/healthz", move || {
+                if h.shutdown.load(Ordering::SeqCst) {
+                    Response::text(503, "shutting down\n")
+                } else {
+                    Response::text(200, "ok\n")
+                }
+            })
+            .add("/varz", move || Response::text(200, v.registry.export_text()))
+            .add("/statusz", move || {
+                let mut body = format!(
+                    "== parameter server v{} (sync_replicas={}) ==\n",
+                    s.version(),
+                    s.options.sync_replicas.unwrap_or(0)
+                );
+                body.push_str(&s.profiler.report_text(10));
+                match straggler_report(&s.registry) {
+                    Some(r) => body.push_str(&r.render_text()),
+                    None => body.push_str("no sync pushes yet\n"),
+                }
+                Response::text(200, body)
+            })
+            .add("/tracez", move || match &t.trace {
+                Some(tc) => Response::json(200, tc.to_chrome_trace()),
+                None => Response::text(404, "tracing disabled\n"),
+            });
+        DebugServer::serve(routes, addr)
     }
 
     /// Current parameter version (test support).
@@ -384,6 +442,7 @@ impl ParamServer {
         // back to f32 before any state is touched.
         let recv =
             self.trace.as_ref().map(|t| t.begin_step("ps/recv", "PsRecv", "ps", push.step));
+        let recv_start = Instant::now();
         // Decompress by dtype before validation: the codec self-describes,
         // so compressed entries from any client are transparently widened.
         let mut decompress = Ok(());
@@ -393,6 +452,7 @@ impl ParamServer {
                 break;
             }
         }
+        self.profiler.observe_span("ps/recv", "PsRecv", recv_start.elapsed());
         if let Some(s) = recv {
             s.end();
         }
@@ -419,7 +479,9 @@ impl ParamServer {
         }
         let span =
             self.trace.as_ref().map(|t| t.begin_step("ps/apply", "PsApply", "ps", push.step));
+        let apply_start = Instant::now();
         let applied = apply_entries(&mut st, &self.options.opt, &push.grads, 1.0);
+        self.profiler.observe_span("ps/apply", "PsApply", apply_start.elapsed());
         if let Some(s) = span {
             s.end();
         }
@@ -489,6 +551,10 @@ impl ParamServer {
             Ok(t) => t,
             Err(e) => return PsPushReply { status: Err(e), version: 0 },
         };
+        // Attribute this replica's barrier *arrival lag* — how far behind
+        // the step's earliest arrival it showed up — before parking, so
+        // the straggler surface is fed even if the group later fails.
+        self.record_arrival_lag(step, push.replica);
         if let Err(e) = self.barrier.send(&barrier_key(step, push.replica), parked) {
             let status = if e.code == Code::Internal {
                 Status::failed_precondition(format!(
@@ -508,11 +574,34 @@ impl ParamServer {
             .trace
             .as_ref()
             .map(|t| t.begin_step("ps/barrier_wait", "PsBarrierWait", "ps", step));
+        let wait_start = Instant::now();
         let reply = self.wait_for_applied(step);
+        self.profiler.observe_span("ps/barrier_wait", "PsBarrierWait", wait_start.elapsed());
         if let Some(s) = wait {
             s.end();
         }
         reply
+    }
+
+    /// Record the replica's arrival lag for `step` into the
+    /// `ps/replica<i>/barrier_wait_us` histogram. The first replica to
+    /// arrive defines the step's epoch (lag 0); everyone after records
+    /// their distance from it. One slot is enough: the staleness checks
+    /// above guarantee only one step's pushes are in flight at a time.
+    fn record_arrival_lag(&self, step: u64, replica: u32) {
+        let now = Instant::now();
+        let first = {
+            let mut slot = self.sync_first_arrival.lock().unwrap();
+            match *slot {
+                Some((s, t)) if s == step => t,
+                _ => {
+                    *slot = Some((step, now));
+                    now
+                }
+            }
+        };
+        let lag = now.duration_since(first);
+        self.registry.histogram(&format!("ps/replica{replica}/barrier_wait_us")).record(lag);
     }
 
     /// Park until `step` has been applied, the group failed, or shutdown.
@@ -580,9 +669,11 @@ impl ParamServer {
             }
             let span =
                 self.trace.as_ref().map(|t| t.begin_step("ps/apply", "PsApply", "ps", step));
+            let apply_start = Instant::now();
             let mut st = self.state.lock().unwrap();
             let scale = 1.0 / n as f32;
             let applied = apply_sync_step(&mut st, &self.options.opt, &pushes, scale);
+            self.profiler.observe_span("ps/apply", "PsApply", apply_start.elapsed());
             if applied.is_ok() {
                 // Bump under the same lock as the apply: a pull must never
                 // observe new parameters at the old version.
@@ -1220,5 +1311,90 @@ mod tests {
         let c = PsClient::connect(&addr, true).unwrap();
         assert!(!c.compressed(), "server must negotiate compression away");
         ps.shutdown();
+    }
+
+    #[test]
+    fn sync_arrival_lag_names_the_straggler() {
+        let ps = ParamServer::new(PsOptions {
+            opt: Optimizer::sgd(0.1),
+            sync_replicas: Some(2),
+            ..Default::default()
+        });
+        let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+        let c0 = PsClient::connect(&addr, false).unwrap();
+        assert!(c0.init(&[("w".into(), Tensor::scalar_f32(1.0))]).unwrap());
+        // Replica 1 sleeps before each push: the injected straggler.
+        for step in 0..3u64 {
+            let slow_addr = addr.clone();
+            let slow = std::thread::spawn(move || {
+                let c1 = PsClient::connect(&slow_addr, false).unwrap();
+                std::thread::sleep(Duration::from_millis(25));
+                let g = Tensor::scalar_f32(0.5);
+                c1.push(step, 1, vec![("w".into(), GradEntry::Dense(g))]).unwrap()
+            });
+            let g = Tensor::scalar_f32(0.5);
+            assert_eq!(
+                c0.push(step, 0, vec![("w".into(), GradEntry::Dense(g))]).unwrap(),
+                step + 1
+            );
+            assert_eq!(slow.join().unwrap(), step + 1);
+        }
+        // The straggler must be identifiable from the arrival-lag
+        // histograms alone — no trace, no clocks shared with the client.
+        let report = straggler_report(ps.metrics()).expect("lag histograms after sync pushes");
+        assert_eq!(report.replicas.len(), 2);
+        assert_eq!(report.slowest, 1);
+        let slow = report.slowest_wait().unwrap();
+        assert_eq!(slow.count, 3);
+        assert!(
+            slow.p95_us >= 20_000,
+            "injected 25ms sleep must dominate the lag: {} us",
+            slow.p95_us
+        );
+        let fast = report.replicas.iter().find(|r| r.replica == 0).unwrap();
+        assert!(
+            fast.p95_us < slow.p95_us / 2,
+            "fast replica p95 {} us should be far below slow {} us",
+            fast.p95_us,
+            slow.p95_us
+        );
+        ps.shutdown();
+    }
+
+    #[test]
+    fn httpz_surface_serves_health_varz_statusz() {
+        let ps = ParamServer::new(PsOptions {
+            opt: Optimizer::sgd(0.5),
+            trace: true,
+            ..Default::default()
+        });
+        let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+        let dbg = ps.serve_httpz("127.0.0.1:0").unwrap();
+        let dbg_addr = dbg.addr();
+
+        let c = PsClient::connect(&addr, false).unwrap();
+        c.init(&[("w".into(), Tensor::scalar_f32(1.0))]).unwrap();
+        let g = Tensor::scalar_f32(1.0);
+        c.push(0, 0, vec![("w".into(), GradEntry::Dense(g))]).unwrap();
+
+        let (code, body) = crate::obs::httpz::get(dbg_addr, "/healthz").unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+        let (code, body) = crate::obs::httpz::get(dbg_addr, "/varz").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("ps_push_wire_bytes") || body.contains("# TYPE"));
+        let (code, body) = crate::obs::httpz::get(dbg_addr, "/statusz").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("parameter server v1"));
+        assert!(body.contains("ps/recv"), "statusz must name the recv phase: {body}");
+        assert!(body.contains("ps/apply"), "statusz must name the apply phase: {body}");
+        let (code, body) = crate::obs::httpz::get(dbg_addr, "/tracez").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.trim_start().starts_with('['), "chrome trace is array-form: {body}");
+        assert!(body.contains("ps/recv"), "trace must hold the recv span: {body}");
+
+        ps.shutdown();
+        let (code, _) = crate::obs::httpz::get(dbg_addr, "/healthz").unwrap();
+        assert_eq!(code, 503, "healthz flips once the server is shutting down");
+        dbg.shutdown();
     }
 }

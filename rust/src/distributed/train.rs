@@ -42,6 +42,7 @@ use crate::session::{Session, SessionOptions};
 use crate::tensor::{DType, Tensor};
 use crate::tracing_tools::{merge_fragments, TraceCollector, TraceFragment};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Replica-side knobs.
 #[derive(Debug, Clone)]
@@ -248,7 +249,9 @@ impl DistTrainer {
         let me = format!("replica:{}", self.replica);
         let span =
             self.trace.as_ref().map(|t| t.begin_step("replica/pull", "DistPull", &me, step_no));
+        let phase_start = Instant::now();
         let pulled = self.pull();
+        self.observe_phase("replica/pull", "DistPull", phase_start);
         if let Some(s) = span {
             s.end();
         }
@@ -260,7 +263,9 @@ impl DistTrainer {
             .trace
             .as_ref()
             .map(|t| t.begin_step("replica/compute", "DistCompute", &me, step_no));
+        let phase_start = Instant::now();
         let out = self.sess.run(feeds, &fetches, &[]);
+        self.observe_phase("replica/compute", "DistCompute", phase_start);
         if let Some(s) = span {
             s.end();
         }
@@ -311,6 +316,7 @@ impl DistTrainer {
         // versions advance in lockstep.
         let span =
             self.trace.as_ref().map(|t| t.begin_step("replica/push", "DistPush", &me, step_no));
+        let phase_start = Instant::now();
         let mut pushed = Ok(());
         for (s, grads) in per_shard.into_iter().enumerate() {
             pushed = self.clients[s].push(self.shard_version[s], self.replica, grads).map(|_| ());
@@ -318,12 +324,22 @@ impl DistTrainer {
                 break;
             }
         }
+        self.observe_phase("replica/push", "DistPush", phase_start);
         if let Some(s) = span {
             s.end();
         }
         pushed?;
         self.steps += 1;
         Ok(loss)
+    }
+
+    /// Feed a pull/compute/push phase duration into the session's
+    /// profiler, so the replica's `/statusz` shows where the step goes —
+    /// a no-op when profiling is off (`profile_window: 0`).
+    fn observe_phase(&self, name: &str, op: &str, start: Instant) {
+        if let Some(p) = self.sess.profiler() {
+            p.observe_span(name, op, start.elapsed());
+        }
     }
 
     /// Steps completed by this replica.

@@ -14,12 +14,15 @@ use crate::error::{Result, Status};
 use crate::executor::{CompiledGraph, Executor, RunContext};
 use crate::kernels::StepState;
 use crate::rendezvous::{recv_blocking, Rendezvous};
+use crate::obs::httpz::{DebugServer, Response, Routes};
+use crate::obs::profiler::Profiler;
 use crate::resources::ResourceMgr;
-use crate::tracing_tools::{TraceCollector, TraceFragment};
+use crate::tracing_tools::{StepStats, TraceCollector, TraceFragment};
 use std::collections::HashMap;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Per-worker runtime knobs, the worker-process mirror of the
 /// thread-related `SessionOptions` fields: remote partitions run on this
@@ -72,6 +75,9 @@ pub struct Worker {
     /// Present when [`WorkerOptions::trace`]: accumulates every run's
     /// per-kernel spans until a `MSG_TRACE_PULL` drains them.
     trace: Option<Arc<TraceCollector>>,
+    /// Always-on partition-run rollups for `/statusz`; per-kernel node
+    /// rollups additionally flow in when tracing is enabled.
+    profiler: Arc<Profiler>,
 }
 
 impl Worker {
@@ -111,12 +117,45 @@ impl Worker {
             shutdown: AtomicBool::new(false),
             options,
             trace,
+            profiler: Profiler::new(16),
         })
     }
 
     /// The worker's span accumulator (when [`WorkerOptions::trace`]).
     pub fn trace(&self) -> Option<&Arc<TraceCollector>> {
         self.trace.as_ref()
+    }
+
+    /// Partition-run rollups — what this worker's `/statusz` renders.
+    pub fn profiler(&self) -> &Arc<Profiler> {
+        &self.profiler
+    }
+
+    /// Mount the worker's debug surface: `/healthz` (flips to 503 once
+    /// `Shutdown` arrives), `/varz` (the process-global registry),
+    /// `/statusz` (partition-run + per-node rollups), `/tracez` (chrome
+    /// trace of accumulated spans; 404 when tracing is off).
+    pub fn serve_httpz(self: &Arc<Self>, addr: &str) -> Result<DebugServer> {
+        let (h, s, t) = (Arc::clone(self), Arc::clone(self), Arc::clone(self));
+        let routes = Routes::new()
+            .add("/healthz", move || {
+                if h.shutdown.load(Ordering::SeqCst) {
+                    Response::text(503, "shutting down\n")
+                } else {
+                    Response::text(200, "ok\n")
+                }
+            })
+            .add("/varz", move || Response::text(200, crate::obs::global().export_text()))
+            .add("/statusz", move || {
+                let mut body = format!("== worker {} ==\n", s.task);
+                body.push_str(&s.profiler.report_text(10));
+                Response::text(200, body)
+            })
+            .add("/tracez", move || match &t.trace {
+                Some(tc) => Response::json(200, tc.to_chrome_trace()),
+                None => Response::text(404, "tracing disabled\n"),
+            });
+        DebugServer::serve(routes, addr)
     }
 
     pub fn resources(&self) -> &Arc<ResourceMgr> {
@@ -274,9 +313,15 @@ impl Worker {
             step: Arc::clone(&step),
             trace: run_trace.clone(),
         };
+        let run_start = Instant::now();
         let status = Executor::new(compiled).run(ctx);
+        self.profiler.observe_span("worker/run_partition", "RunPartition", run_start.elapsed());
         if let (Some(acc), Some(child)) = (&self.trace, run_trace) {
-            acc.absorb(child.drain());
+            let evs = child.drain();
+            // Per-kernel rollups for /statusz ride the same spans the
+            // trace accumulator gets.
+            self.profiler.observe(Arc::new(StepStats::from_events(run.step_id, &evs, Vec::new())));
+            acc.absorb(evs);
         }
         let fetches = step.take_fetches().into_iter().collect();
         RunReply { status, fetches }

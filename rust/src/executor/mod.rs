@@ -547,7 +547,12 @@ impl Inner {
                             )))
                         });
                         if let Some(sp) = trace_span {
-                            sp.end();
+                            // Attribute output bytes to the span so
+                            // StepStats can report per-node peak memory.
+                            let bytes = result.as_ref().map_or(0, |outs| {
+                                outs.iter().map(|t| t.size_bytes() as u64).sum()
+                            });
+                            sp.end_with_bytes(bytes);
                         }
                         if let Ok(outs) = &result {
                             for t in outs {
@@ -562,7 +567,10 @@ impl Inner {
                         let tag = s.tag;
                         let done: DoneFn = Box::new(move |result| {
                             if let Some(sp) = trace_span {
-                                sp.end();
+                                let bytes = result.as_ref().map_or(0, |outs| {
+                                    outs.iter().map(|t| t.size_bytes() as u64).sum()
+                                });
+                                sp.end_with_bytes(bytes);
                             }
                             if let Ok(outs) = &result {
                                 for t in outs {

@@ -39,6 +39,31 @@ pub struct MemCounters {
     bytes_forwarded: AtomicU64,
     scratch_checkouts: AtomicU64,
     scratch_bytes_fresh: AtomicU64,
+    // High-watermarks: the largest single-step byte totals any arena of
+    // this pool has seen (folded in at `end_step`), split by source.
+    hw_planned_bytes: AtomicU64,
+    hw_dynamic_bytes: AtomicU64,
+    hw_scratch_bytes: AtomicU64,
+}
+
+/// The largest single-step byte totals any arena of a pool has served,
+/// split by where the storage came from: pooled plan slots (`planned`),
+/// fresh heap fallbacks (`dynamic` — empty slot, wrong dtype, or storage
+/// still referenced), and kernel scratch (`scratch`). The memory half of
+/// the §9.2 EEG story: "what does one step of this signature cost at
+/// peak", per device.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ArenaHighWater {
+    pub planned_bytes: u64,
+    pub dynamic_bytes: u64,
+    pub scratch_bytes: u64,
+}
+
+impl ArenaHighWater {
+    /// Sum of all three watermarks — a step's peak arena-served bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.planned_bytes + self.dynamic_bytes + self.scratch_bytes
+    }
 }
 
 /// Point-in-time copy of [`MemCounters`].
@@ -107,6 +132,15 @@ impl MemCounters {
         self.forwards_taken.fetch_add(1, Ordering::Relaxed);
         self.bytes_forwarded.fetch_add(bytes as u64, Ordering::Relaxed);
     }
+
+    /// The pool's per-step high-watermark so far.
+    pub fn high_water(&self) -> ArenaHighWater {
+        ArenaHighWater {
+            planned_bytes: self.hw_planned_bytes.load(Ordering::Relaxed),
+            dynamic_bytes: self.hw_dynamic_bytes.load(Ordering::Relaxed),
+            scratch_bytes: self.hw_scratch_bytes.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// One slot's pooled storage plus its shared recycler handle.
@@ -149,6 +183,11 @@ pub struct StepArena {
     counters: Arc<MemCounters>,
     /// Guard: a pooled arena must never serve two steps at once.
     in_use: AtomicBool,
+    // This step's running byte totals, reset at `begin_step` and folded
+    // into the pool-wide high-watermark at `end_step`.
+    step_planned: AtomicU64,
+    step_dynamic: AtomicU64,
+    step_scratch: AtomicU64,
 }
 
 impl StepArena {
@@ -164,6 +203,9 @@ impl StepArena {
             scratch: Mutex::new(Vec::new()),
             counters,
             in_use: AtomicBool::new(false),
+            step_planned: AtomicU64::new(0),
+            step_dynamic: AtomicU64::new(0),
+            step_scratch: AtomicU64::new(0),
         })
     }
 
@@ -185,6 +227,7 @@ impl StepArena {
             Some(TensorData::F32(mut v)) if v.capacity() >= n => {
                 self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_reused.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                self.step_planned.fetch_add((n * 4) as u64, Ordering::Relaxed);
                 v.clear();
                 v
             }
@@ -194,6 +237,7 @@ impl StepArena {
                 // size from what comes back.)
                 self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_fresh.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                self.step_dynamic.fetch_add((n * 4) as u64, Ordering::Relaxed);
                 Vec::with_capacity(n)
             }
         }
@@ -214,12 +258,14 @@ impl StepArena {
             Some(TensorData::I32(mut v)) if v.capacity() >= n => {
                 self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_reused.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                self.step_planned.fetch_add((n * 4) as u64, Ordering::Relaxed);
                 v.clear();
                 v
             }
             _ => {
                 self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_fresh.fetch_add((n * 4) as u64, Ordering::Relaxed);
+                self.step_dynamic.fetch_add((n * 4) as u64, Ordering::Relaxed);
                 Vec::with_capacity(n)
             }
         }
@@ -232,12 +278,14 @@ impl StepArena {
             Some(TensorData::I64(mut v)) if v.capacity() >= n => {
                 self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_reused.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                self.step_planned.fetch_add((n * 8) as u64, Ordering::Relaxed);
                 v.clear();
                 v
             }
             _ => {
                 self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_fresh.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                self.step_dynamic.fetch_add((n * 8) as u64, Ordering::Relaxed);
                 Vec::with_capacity(n)
             }
         }
@@ -250,12 +298,14 @@ impl StepArena {
             Some(TensorData::F64(mut v)) if v.capacity() >= n => {
                 self.counters.reuse_hits.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_reused.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                self.step_planned.fetch_add((n * 8) as u64, Ordering::Relaxed);
                 v.clear();
                 v
             }
             _ => {
                 self.counters.reuse_misses.fetch_add(1, Ordering::Relaxed);
                 self.counters.bytes_fresh.fetch_add((n * 8) as u64, Ordering::Relaxed);
+                self.step_dynamic.fetch_add((n * 8) as u64, Ordering::Relaxed);
                 Vec::with_capacity(n)
             }
         }
@@ -275,6 +325,8 @@ impl StepArena {
     /// this pooled arena) reuses the allocation.
     pub fn take_scratch_f32(&self, n: usize) -> Vec<f32> {
         self.counters.scratch_checkouts.fetch_add(1, Ordering::Relaxed);
+        // The watermark tracks scratch *usage*, pooled or fresh.
+        self.step_scratch.fetch_add((n * 4) as u64, Ordering::Relaxed);
         let mut pool = self.scratch.lock().unwrap();
         if let Some(pos) = pool.iter().position(|v| v.capacity() >= n) {
             let mut v = pool.swap_remove(pos);
@@ -307,9 +359,16 @@ impl StepArena {
             !self.in_use.swap(true, Ordering::SeqCst),
             "StepArena checked out by two concurrent steps"
         );
+        self.step_planned.store(0, Ordering::Relaxed);
+        self.step_dynamic.store(0, Ordering::Relaxed);
+        self.step_scratch.store(0, Ordering::Relaxed);
     }
 
     fn end_step(&self) {
+        let c = &self.counters;
+        c.hw_planned_bytes.fetch_max(self.step_planned.load(Ordering::Relaxed), Ordering::Relaxed);
+        c.hw_dynamic_bytes.fetch_max(self.step_dynamic.load(Ordering::Relaxed), Ordering::Relaxed);
+        c.hw_scratch_bytes.fetch_max(self.step_scratch.load(Ordering::Relaxed), Ordering::Relaxed);
         self.in_use.store(false, Ordering::SeqCst);
     }
 }
@@ -460,6 +519,42 @@ mod tests {
         let snap = pool.counters().snapshot();
         assert_eq!(snap.scratch_checkouts, 2);
         assert_eq!(snap.scratch_bytes_fresh, 64 * 4);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_step_not_sum() {
+        let pool = ArenaPool::new(2);
+        // Step 1: one fresh 8-element f32 checkout (32 dynamic bytes) and
+        // 64 scratch bytes.
+        let a = pool.checkout();
+        let _v = a.checkout_f32(0, 8);
+        a.give_scratch_f32(a.take_scratch_f32(16));
+        pool.checkin(a);
+        let hw = pool.counters().high_water();
+        assert_eq!(hw.dynamic_bytes, 32);
+        assert_eq!(hw.scratch_bytes, 64);
+        assert_eq!(hw.planned_bytes, 0);
+        // Step 2 is smaller: the watermark must not move (max, not sum).
+        let a = pool.checkout();
+        let _v = a.checkout_f32(0, 2);
+        pool.checkin(a);
+        let hw2 = pool.counters().high_water();
+        assert_eq!(hw2.dynamic_bytes, 32);
+        assert_eq!(hw2.scratch_bytes, 64);
+        assert_eq!(hw2.total_bytes(), 96);
+        // Step 3 with a pooled hit: recycled storage counts as planned.
+        let a = pool.checkout();
+        let mut v = a.checkout_f32(1, 4);
+        v.resize(4, 0.0);
+        let t = Tensor::with_buffer(
+            vec![4],
+            TensorBuffer::recycled(TensorData::F32(v), a.recycler(1)),
+        )
+        .unwrap();
+        drop(t);
+        let _reused = a.checkout_f32(1, 4);
+        pool.checkin(a);
+        assert_eq!(pool.counters().high_water().planned_bytes, 16);
     }
 
     #[test]

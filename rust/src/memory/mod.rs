@@ -42,16 +42,20 @@ pub mod arena;
 pub mod liveness;
 pub mod plan;
 
-pub use arena::{ArenaPool, MemCounters, MemSnapshot, StepArena};
+pub use arena::{ArenaHighWater, ArenaPool, MemCounters, MemSnapshot, StepArena};
 pub use plan::{plan_partition, MemoryPlan, MemoryPlanStats};
 
 /// One executor's memory report: the build-time plan stats plus the
 /// runtime arena counters accumulated across every run of the cached
-/// step. Returned by `Session::memory_stats`.
+/// step, and the pool's per-step byte high-watermark. Returned by
+/// `Session::memory_stats` / `Session::memory_profile`.
 #[derive(Debug, Clone, Default)]
 pub struct MemoryReport {
     /// Device the partition runs on.
     pub device: String,
     pub plan: MemoryPlanStats,
     pub runtime: MemSnapshot,
+    /// Peak single-step bytes served by this executor's arena pool,
+    /// split planned / dynamic / scratch.
+    pub high_water: ArenaHighWater,
 }

@@ -1,0 +1,366 @@
+//! A zero-dependency debug/status HTTP listener ("/healthz, /varz,
+//! /statusz, /tracez" — the classic production-server status surface).
+//!
+//! This is deliberately *not* a web framework: a hand-rolled HTTP/1.0
+//! GET responder sufficient for `curl` and load-balancer health checks.
+//! One handler thread per connection, one request per connection
+//! (`Connection: close`), bounded request heads, and a read timeout so a
+//! silent client cannot park a thread. The accept loop copies the
+//! hardening contract of `serving::net::NetServer`: transient accept
+//! errors back off and continue, thread-spawn failure sheds the
+//! connection, and only the shutdown flag (poked awake by a loopback
+//! connection) ends the loop.
+//!
+//! Servers mount it by building a [`Routes`] table of path → handler
+//! closures and calling [`DebugServer::serve`]. Handlers return a
+//! [`Response`]; state (a metrics registry, a profiler, a
+//! shutting-down flag) is captured by the closures, so `httpz` itself
+//! depends on none of it. Malformed requests get `400`, unknown paths
+//! `404` (listing the mounted routes), non-GET methods `405` — never a
+//! panic, whatever the peer sends.
+
+use crate::error::{Result, Status};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Largest request head we will buffer before answering 400.
+const MAX_HEAD_BYTES: usize = 8192;
+/// A client gets this long to produce its request head.
+const READ_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// One HTTP response: status, content type, body.
+pub struct Response {
+    pub status: u16,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16, content_type: &str, body: impl Into<Vec<u8>>) -> Response {
+        Response { status, content_type: content_type.to_string(), body: body.into() }
+    }
+
+    /// `text/plain` response.
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status, "text/plain; charset=utf-8", body.into().into_bytes())
+    }
+
+    /// `application/json` response.
+    pub fn json(status: u16, body: impl Into<String>) -> Response {
+        Response::new(status, "application/json", body.into().into_bytes())
+    }
+}
+
+type HandlerFn = Box<dyn Fn() -> Response + Send + Sync>;
+
+/// Path → handler table. Paths are matched exactly after stripping any
+/// query string.
+#[derive(Default)]
+pub struct Routes {
+    routes: BTreeMap<String, HandlerFn>,
+}
+
+impl Routes {
+    pub fn new() -> Routes {
+        Routes::default()
+    }
+
+    /// Mount `handler` at `path` (e.g. `"/healthz"`). Builder-style.
+    pub fn add(
+        mut self,
+        path: &str,
+        handler: impl Fn() -> Response + Send + Sync + 'static,
+    ) -> Routes {
+        self.routes.insert(path.to_string(), Box::new(handler));
+        self
+    }
+
+    pub fn paths(&self) -> Vec<String> {
+        self.routes.keys().cloned().collect()
+    }
+
+    fn dispatch(&self, path: &str) -> Response {
+        match self.routes.get(path) {
+            Some(h) => h(),
+            None => {
+                let mut body = format!("404: no handler for {path:?}\nmounted routes:\n");
+                for p in self.routes.keys() {
+                    body.push_str("  ");
+                    body.push_str(p);
+                    body.push('\n');
+                }
+                Response::text(404, body)
+            }
+        }
+    }
+}
+
+/// A running debug listener. Dropping it (or calling
+/// [`DebugServer::shutdown`]) stops accepting; in-flight handlers finish
+/// their single response and close.
+pub struct DebugServer {
+    addr: SocketAddr,
+    shutting_down: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl DebugServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and serve `routes` until
+    /// shutdown. Returns once the listener is bound.
+    pub fn serve(routes: Routes, addr: &str) -> Result<DebugServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Status::unavailable(format!("bind {addr}: {e}")))?;
+        let local = listener.local_addr()?;
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutting_down);
+        let routes = Arc::new(routes);
+        let accept = std::thread::Builder::new()
+            .name("httpz-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match conn {
+                        Ok(stream) => {
+                            let routes = Arc::clone(&routes);
+                            let spawned = std::thread::Builder::new()
+                                .name("httpz-conn".to_string())
+                                .spawn(move || handle_connection(&routes, stream));
+                            if spawned.is_err() {
+                                // Out of threads: shed the connection
+                                // rather than dying.
+                                continue;
+                            }
+                        }
+                        // Transient accept failures must not kill the
+                        // listener; back off and keep accepting.
+                        Err(_) => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                    }
+                }
+            })
+            .expect("spawn httpz accept thread");
+        Ok(DebugServer { addr: local, shutting_down, accept_thread: Mutex::new(Some(accept)) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. Idempotent.
+    pub fn shutdown(&self) {
+        if self.shutting_down.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection to our own
+        // port. A wildcard bind address is not connectable; target
+        // loopback on the same port instead.
+        let mut wake_addr = self.addr;
+        if wake_addr.ip().is_unspecified() {
+            wake_addr.set_ip(match wake_addr {
+                SocketAddr::V4(_) => std::net::Ipv4Addr::LOCALHOST.into(),
+                SocketAddr::V6(_) => std::net::Ipv6Addr::LOCALHOST.into(),
+            });
+        }
+        let woke = TcpStream::connect(wake_addr).is_ok();
+        if let Some(h) = self.accept_thread.lock().unwrap().take() {
+            if woke {
+                let _ = h.join();
+            }
+            // If the wake failed the thread stays parked until the next
+            // connection; joining would block the caller indefinitely.
+        }
+    }
+}
+
+impl Drop for DebugServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Serve exactly one request on `stream`, whatever its quality.
+fn handle_connection(routes: &Routes, mut stream: TcpStream) {
+    stream.set_read_timeout(Some(READ_TIMEOUT)).ok();
+    stream.set_nodelay(true).ok();
+    let head = match read_head(&mut stream) {
+        Ok(h) => h,
+        Err(_) => {
+            let _ = write_response(&mut stream, &Response::text(400, "400: bad request\n"));
+            return;
+        }
+    };
+    let response = match parse_request_line(&head) {
+        Some(("GET", path)) => routes.dispatch(path),
+        Some((_, _)) => Response::text(405, "405: only GET is supported\n"),
+        None => Response::text(400, "400: malformed request line\n"),
+    };
+    let _ = write_response(&mut stream, &response);
+}
+
+/// Read until the blank line ending the request head, EOF, or the size
+/// cap. Errors on oversized heads and transport failures; a truncated
+/// head (EOF first) is returned as-is for the parser to reject.
+fn read_head(stream: &mut TcpStream) -> std::io::Result<String> {
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+        if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n") {
+            break;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request head too large",
+            ));
+        }
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+/// `"GET /statusz?k=5 HTTP/1.0" → ("GET", "/statusz")`. `None` when the
+/// first line isn't `METHOD TARGET ...` with an absolute-path target.
+fn parse_request_line(head: &str) -> Option<(&str, &str)> {
+    let line = head.lines().next()?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?;
+    let target = parts.next()?;
+    let path = target.split('?').next().unwrap_or(target);
+    if !path.starts_with('/') {
+        return None;
+    }
+    Some((method, path))
+}
+
+fn write_response(stream: &mut TcpStream, r: &Response) -> std::io::Result<()> {
+    let reason = match r.status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Status",
+    };
+    let head = format!(
+        "HTTP/1.0 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        r.status,
+        reason,
+        r.content_type,
+        r.body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(&r.body)?;
+    stream.flush()
+}
+
+/// Minimal blocking GET for tests and in-process probes: one request,
+/// returns `(status, body)`.
+pub fn get(addr: SocketAddr, path: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Status::unavailable(format!("connect {addr}: {e}")))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    stream
+        .write_all(format!("GET {path} HTTP/1.0\r\nHost: localhost\r\n\r\n").as_bytes())
+        .map_err(|e| Status::unavailable(format!("write: {e}")))?;
+    let mut raw = Vec::new();
+    stream
+        .read_to_end(&mut raw)
+        .map_err(|e| Status::unavailable(format!("read: {e}")))?;
+    let text = String::from_utf8_lossy(&raw).into_owned();
+    let (head, body) = match text.find("\r\n\r\n") {
+        Some(i) => (&text[..i], &text[i + 4..]),
+        None => return Err(Status::internal("response missing head/body separator")),
+    };
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Status::internal(format!("bad status line: {head:?}")))?;
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_server() -> DebugServer {
+        let healthy = Arc::new(AtomicBool::new(true));
+        let h = Arc::clone(&healthy);
+        let routes = Routes::new()
+            .add("/healthz", move || {
+                if h.load(Ordering::SeqCst) {
+                    Response::text(200, "ok\n")
+                } else {
+                    Response::text(503, "shutting down\n")
+                }
+            })
+            .add("/varz", || Response::text(200, "# TYPE x counter\nx 1\n"));
+        DebugServer::serve(routes, "127.0.0.1:0").unwrap()
+    }
+
+    #[test]
+    fn routes_serve_and_miss() {
+        let srv = test_server();
+        let (code, body) = get(srv.addr(), "/healthz").unwrap();
+        assert_eq!((code, body.as_str()), (200, "ok\n"));
+        let (code, body) = get(srv.addr(), "/varz?verbose=1").unwrap();
+        assert_eq!(code, 200);
+        assert!(body.contains("x 1"), "{body}");
+        // Unknown path: 404 listing the mounted routes.
+        let (code, body) = get(srv.addr(), "/nope").unwrap();
+        assert_eq!(code, 404);
+        assert!(body.contains("/healthz"), "{body}");
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        assert!(get(srv.addr(), "/healthz").is_err(), "accept loop still alive");
+    }
+
+    #[test]
+    fn hostile_requests_get_errors_not_panics() {
+        let srv = test_server();
+        let raw = |bytes: &[u8]| -> String {
+            let mut s = TcpStream::connect(srv.addr()).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(5))).ok();
+            s.write_all(bytes).unwrap();
+            let mut out = Vec::new();
+            s.read_to_end(&mut out).ok();
+            String::from_utf8_lossy(&out).into_owned()
+        };
+        // Non-GET method.
+        assert!(raw(b"POST /healthz HTTP/1.0\r\n\r\n").starts_with("HTTP/1.0 405"));
+        // Garbage request line.
+        assert!(raw(b"garbage\r\n\r\n").starts_with("HTTP/1.0 400"));
+        // Truncated head (EOF before the blank line).
+        assert!(raw(b"GET /healthz").starts_with("HTTP/1.0 400"));
+        // Oversized head.
+        let mut big = Vec::from(&b"GET /healthz HTTP/1.0\r\n"[..]);
+        big.extend(vec![b'a'; MAX_HEAD_BYTES + 1024]);
+        let reply = raw(&big);
+        // Either a 400 or a reset once the server bails — never a hang.
+        assert!(reply.is_empty() || reply.starts_with("HTTP/1.0 400"), "{reply}");
+        // The server still works afterwards.
+        assert_eq!(get(srv.addr(), "/healthz").unwrap().0, 200);
+    }
+
+    #[test]
+    fn drop_stops_accepting() {
+        let addr = {
+            let srv = test_server();
+            srv.addr()
+        };
+        assert!(get(addr, "/healthz").is_err());
+    }
+}

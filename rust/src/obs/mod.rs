@@ -20,6 +20,9 @@
 //! exported twice) and bumps `obs/kind_conflicts` so the bug is visible
 //! in the dump itself.
 
+pub mod httpz;
+pub mod profiler;
+
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 use std::collections::BTreeMap;
@@ -198,29 +201,81 @@ impl MetricsRegistry {
         self.to_json().render()
     }
 
-    /// The dump as `name value` lines (one metric per line, histograms as
-    /// `name{quantile} value`), for logs and humans.
+    /// Every registered histogram as `(name, handle)` pairs in name
+    /// order — for exporters that need the raw buckets (the profiler's
+    /// straggler scan, the `/varz` endpoint).
+    pub fn histograms(&self) -> Vec<(String, Arc<LatencyHistogram>)> {
+        let m = self.metrics.lock().unwrap();
+        m.iter()
+            .filter_map(|(name, metric)| match metric {
+                Metric::Histogram(h) => Some((name.clone(), Arc::clone(h))),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The dump in Prometheus exposition format: `# TYPE` lines, counters
+    /// and gauges as `name value`, histograms as cumulative
+    /// `name_bucket{le="..."}` lines (µs bounds from the log2 buckets;
+    /// all-zero buckets elided, `+Inf` always present) plus `name_sum` /
+    /// `name_count`. Slash-separated registry names are sanitized to
+    /// `[a-zA-Z0-9_:]` for the metric-name grammar.
     pub fn export_text(&self) -> String {
-        let us = |d: std::time::Duration| d.as_micros() as u64;
         let mut out = String::new();
         let m = self.metrics.lock().unwrap();
         for (name, metric) in m.iter() {
+            let name = sanitize_metric_name(name);
             match metric {
-                Metric::Counter(c) => out.push_str(&format!("{name} {}\n", c.get())),
-                Metric::Gauge(g) => out.push_str(&format!("{name} {}\n", g.get())),
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()))
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()))
+                }
                 Metric::Histogram(h) => {
-                    let s = h.summary();
-                    out.push_str(&format!("{name}{{count}} {}\n", s.count));
-                    out.push_str(&format!("{name}{{mean_us}} {}\n", us(s.mean)));
-                    out.push_str(&format!("{name}{{p50_us}} {}\n", us(s.p50)));
-                    out.push_str(&format!("{name}{{p95_us}} {}\n", us(s.p95)));
-                    out.push_str(&format!("{name}{{p99_us}} {}\n", us(s.p99)));
-                    out.push_str(&format!("{name}{{max_us}} {}\n", us(s.max)));
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    let counts = h.bucket_counts();
+                    let mut cum = 0u64;
+                    for (i, &c) in counts.iter().enumerate() {
+                        if c == 0 {
+                            continue;
+                        }
+                        cum += c;
+                        // The final catch-all bucket folds into +Inf below.
+                        if let Some(le) = LatencyHistogram::bucket_upper_micros(i) {
+                            out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                        }
+                    }
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {cum}\n"));
+                    out.push_str(&format!("{name}_sum {}\n", h.sum_micros()));
+                    out.push_str(&format!("{name}_count {}\n", h.count()));
                 }
             }
         }
         out
     }
+}
+
+/// Map a slash-separated registry name onto the Prometheus metric-name
+/// grammar `[a-zA-Z_:][a-zA-Z0-9_:]*`: invalid characters become `_`, a
+/// leading digit gets a `_` prefix.
+fn sanitize_metric_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, ch) in name.chars().enumerate() {
+        let ok = ch.is_ascii_alphabetic()
+            || ch == '_'
+            || ch == ':'
+            || (ch.is_ascii_digit() && i > 0);
+        if ch.is_ascii_digit() && i == 0 {
+            out.push('_');
+            out.push(ch);
+        } else if ok {
+            out.push(ch);
+        } else {
+            out.push('_');
+        }
+    }
+    out
 }
 
 /// The process-wide default registry: for code without a natural owning
@@ -280,9 +335,56 @@ mod tests {
         r.gauge("g").set(-2);
         r.histogram("h").record(std::time::Duration::from_micros(10));
         let t = r.export_text();
-        assert!(t.contains("c 1\n"), "{t}");
-        assert!(t.contains("g -2\n"), "{t}");
-        assert!(t.contains("h{count} 1\n"), "{t}");
+        assert!(t.contains("# TYPE c counter\nc 1\n"), "{t}");
+        assert!(t.contains("# TYPE g gauge\ng -2\n"), "{t}");
+        assert!(t.contains("# TYPE h histogram\n"), "{t}");
+        assert!(t.contains("h_count 1\n"), "{t}");
+    }
+
+    #[test]
+    fn export_text_histograms_are_prometheus_compliant() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("ps/replica0/barrier_wait_us");
+        // 10µs → bucket 4 (le="15"); 300µs → bucket 9 (le="511").
+        h.record(std::time::Duration::from_micros(10));
+        h.record(std::time::Duration::from_micros(10));
+        h.record(std::time::Duration::from_micros(300));
+        let t = r.export_text();
+        // Names sanitized to the metric-name grammar.
+        assert!(t.contains("# TYPE ps_replica0_barrier_wait_us histogram\n"), "{t}");
+        assert!(t.contains("ps_replica0_barrier_wait_us_bucket{le=\"15\"} 2\n"), "{t}");
+        assert!(t.contains("ps_replica0_barrier_wait_us_bucket{le=\"511\"} 3\n"), "{t}");
+        assert!(t.contains("ps_replica0_barrier_wait_us_bucket{le=\"+Inf\"} 3\n"), "{t}");
+        assert!(t.contains("ps_replica0_barrier_wait_us_sum 320\n"), "{t}");
+        assert!(t.contains("ps_replica0_barrier_wait_us_count 3\n"), "{t}");
+        // Cumulative bucket counts are monotone non-decreasing and the
+        // +Inf bucket equals _count (the exposition-format contract).
+        let mut last = 0u64;
+        let mut inf = None;
+        for line in t.lines() {
+            if let Some(rest) = line.strip_prefix("ps_replica0_barrier_wait_us_bucket{le=") {
+                let v: u64 = rest.split("} ").nth(1).unwrap().parse().unwrap();
+                assert!(v >= last, "non-monotone bucket line: {line}");
+                last = v;
+                if rest.starts_with("\"+Inf\"") {
+                    inf = Some(v);
+                }
+            }
+        }
+        assert_eq!(inf, Some(3));
+    }
+
+    #[test]
+    fn histograms_accessor_lists_registered() {
+        let r = MetricsRegistry::new();
+        r.histogram("a").record(std::time::Duration::from_micros(1));
+        r.histogram("b").record(std::time::Duration::from_micros(2));
+        r.counter("c").inc();
+        let hs = r.histograms();
+        assert_eq!(hs.len(), 2);
+        assert_eq!(hs[0].0, "a");
+        assert_eq!(hs[1].0, "b");
+        assert_eq!(hs[0].1.count(), 1);
     }
 
     #[test]

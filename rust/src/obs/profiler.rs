@@ -1,0 +1,584 @@
+//! The continuous profiler (§9.2 EEG, "tfprof"-style rollups).
+//!
+//! The whitepaper's §9.2 tooling visualizes *one* step; production
+//! debugging needs the aggregate view — which nodes dominate self-time
+//! across the last N steps, how step latency is distributed, where the
+//! memory watermark sits, and (for synchronous data-parallel training,
+//! §4.4/Fig 7) which replica is the straggler. [`Profiler`] is that
+//! aggregate: a bounded ring of the last N [`StepStats`] folded on demand
+//! into per-node and per-op-type [`Rollup`]s, plus persistent phase
+//! rollups ([`Profiler::observe_span`]) for coarse non-step spans like
+//! the trainer's pull/compute/push phases.
+//!
+//! Everything is recomputed from the ring at report time, so reports are
+//! a pure function of the observed steps — deterministic and cheap to
+//! test. Feeding the profiler is O(1) per step (an `Arc` push plus one
+//! histogram record); nothing on the step path ever walks the ring.
+//!
+//! [`straggler_report`] closes the loop for distributed training: it
+//! scans a [`MetricsRegistry`] for the parameter server's per-replica
+//! `ps/replica<i>/barrier_wait_us` histograms (sync-mode barrier arrival
+//! lag — see `distributed::ps`) and names the replica whose p95 lag is
+//! largest. A straggler is identified from the histograms alone, with no
+//! cooperation from the slow worker.
+
+use crate::tracing_tools::StepStats;
+use crate::util::json::Json;
+use crate::util::stats::{LatencyHistogram, LatencySummary};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::MetricsRegistry;
+
+/// One aggregated row of the profile: a node, an op type, or a phase
+/// span, folded across the profiler's window.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Rollup {
+    /// Node name, op type, or span name depending on which report this
+    /// row came from.
+    pub name: String,
+    /// Op type of the row (equals `name` in the per-op report).
+    pub op: String,
+    /// Executions across the window.
+    pub count: u64,
+    /// Accumulated self-time, µs.
+    pub total_us: u64,
+    /// Median of the row's per-step mean self-times, µs.
+    pub p50_us: u64,
+    /// 95th percentile of the row's per-step mean self-times, µs.
+    pub p95_us: u64,
+    /// Peak output bytes seen for the row in any window step.
+    pub peak_bytes: u64,
+    /// This row's fraction of all self-time in the window, in [0, 1].
+    pub share: f64,
+}
+
+impl Rollup {
+    pub fn mean_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.total_us / self.count
+        }
+    }
+}
+
+/// Persistent (non-windowed) accumulator for one named phase span.
+struct SpanRollup {
+    op: String,
+    count: u64,
+    total_us: u64,
+    hist: LatencyHistogram,
+}
+
+/// Aggregating profiler: last-N-steps ring + step-latency histogram +
+/// persistent phase spans. Shared via `Arc`; every method takes `&self`.
+pub struct Profiler {
+    window: usize,
+    ring: Mutex<VecDeque<Arc<StepStats>>>,
+    steps_observed: AtomicU64,
+    step_latency: LatencyHistogram,
+    spans: Mutex<BTreeMap<String, SpanRollup>>,
+}
+
+impl Profiler {
+    /// A profiler keeping the last `window` steps (clamped to ≥ 1).
+    pub fn new(window: usize) -> Arc<Profiler> {
+        Arc::new(Profiler {
+            window: window.max(1),
+            ring: Mutex::new(VecDeque::new()),
+            steps_observed: AtomicU64::new(0),
+            step_latency: LatencyHistogram::new(),
+            spans: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Steps currently held in the ring (≤ `window`).
+    pub fn window_len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// Total steps ever observed (including evicted ones).
+    pub fn steps_observed(&self) -> u64 {
+        self.steps_observed.load(Ordering::Relaxed)
+    }
+
+    /// Fold one step's stats in. O(1): push + maybe evict + one
+    /// histogram record of the step's total self-time.
+    pub fn observe(&self, stats: Arc<StepStats>) {
+        self.step_latency.record(Duration::from_micros(stats.total_us()));
+        self.steps_observed.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.ring.lock().unwrap();
+        ring.push_back(stats);
+        while ring.len() > self.window {
+            ring.pop_front();
+        }
+    }
+
+    /// Record one execution of a named coarse phase (e.g. the trainer's
+    /// `replica/pull`). Phase rollups are persistent, not windowed: they
+    /// are few, cheap, and most useful as lifetime aggregates.
+    pub fn observe_span(&self, name: &str, op: &str, dur: Duration) {
+        let mut spans = self.spans.lock().unwrap();
+        let s = spans.entry(name.to_string()).or_insert_with(|| SpanRollup {
+            op: op.to_string(),
+            count: 0,
+            total_us: 0,
+            hist: LatencyHistogram::new(),
+        });
+        s.count += 1;
+        s.total_us += dur.as_micros().min(u64::MAX as u128) as u64;
+        s.hist.record(dur);
+    }
+
+    /// Distribution of per-step total self-time across everything ever
+    /// observed (histogram-backed, so percentiles are bucket-resolution).
+    pub fn step_latency(&self) -> LatencySummary {
+        self.step_latency.summary()
+    }
+
+    /// Per-node rollups across the window, sorted by total self-time
+    /// descending (ties broken by name for determinism).
+    pub fn node_rollups(&self) -> Vec<Rollup> {
+        self.rollups_by(|n| n.name.clone())
+    }
+
+    /// Per-op-type rollups across the window, sorted by total self-time
+    /// descending.
+    pub fn op_rollups(&self) -> Vec<Rollup> {
+        self.rollups_by(|n| n.op.clone())
+    }
+
+    fn rollups_by(&self, key: impl Fn(&crate::tracing_tools::NodeStats) -> String) -> Vec<Rollup> {
+        let ring = self.ring.lock().unwrap();
+        // (rollup, per-step mean samples) per key.
+        let mut acc: BTreeMap<String, (Rollup, Vec<u64>)> = BTreeMap::new();
+        let mut window_total = 0u64;
+        for step in ring.iter() {
+            for n in &step.nodes {
+                window_total += n.total_us;
+                let k = key(n);
+                let e = acc.entry(k.clone()).or_insert_with(|| {
+                    (Rollup { name: k, op: n.op.clone(), ..Rollup::default() }, Vec::new())
+                });
+                e.0.count += n.count;
+                e.0.total_us += n.total_us;
+                e.0.peak_bytes = e.0.peak_bytes.max(n.peak_bytes);
+                e.1.push(n.mean_us());
+            }
+        }
+        let mut out: Vec<Rollup> = acc
+            .into_values()
+            .map(|(mut r, mut samples)| {
+                samples.sort_unstable();
+                r.p50_us = nearest_rank(&samples, 0.50);
+                r.p95_us = nearest_rank(&samples, 0.95);
+                r.share = if window_total == 0 {
+                    0.0
+                } else {
+                    r.total_us as f64 / window_total as f64
+                };
+                r
+            })
+            .collect();
+        out.sort_by(|a, b| b.total_us.cmp(&a.total_us).then_with(|| a.name.cmp(&b.name)));
+        out
+    }
+
+    /// Top-k nodes by total self-time.
+    pub fn top_nodes(&self, k: usize) -> Vec<Rollup> {
+        let mut v = self.node_rollups();
+        v.truncate(k);
+        v
+    }
+
+    /// Top-k nodes by peak output bytes — the memory-attribution view.
+    pub fn top_bytes(&self, k: usize) -> Vec<Rollup> {
+        let mut v = self.node_rollups();
+        v.sort_by(|a, b| b.peak_bytes.cmp(&a.peak_bytes).then_with(|| a.name.cmp(&b.name)));
+        v.truncate(k);
+        v
+    }
+
+    /// Phase-span rollups (lifetime), sorted by total time descending.
+    pub fn span_rollups(&self) -> Vec<Rollup> {
+        let spans = self.spans.lock().unwrap();
+        let total: u64 = spans.values().map(|s| s.total_us).sum();
+        let mut out: Vec<Rollup> = spans
+            .iter()
+            .map(|(name, s)| Rollup {
+                name: name.clone(),
+                op: s.op.clone(),
+                count: s.count,
+                total_us: s.total_us,
+                p50_us: s.hist.quantile(0.50).as_micros() as u64,
+                p95_us: s.hist.quantile(0.95).as_micros() as u64,
+                peak_bytes: 0,
+                share: if total == 0 { 0.0 } else { s.total_us as f64 / total as f64 },
+            })
+            .collect();
+        out.sort_by(|a, b| b.total_us.cmp(&a.total_us).then_with(|| a.name.cmp(&b.name)));
+        out
+    }
+
+    /// Memory reports of the newest step in the window (device, planner
+    /// stats, arena counters, per-step byte high-watermark).
+    pub fn latest_memory(&self) -> Vec<crate::memory::MemoryReport> {
+        self.ring.lock().unwrap().back().map(|s| s.memory.clone()).unwrap_or_default()
+    }
+
+    /// tfprof-style text report: step-latency percentiles, top-k nodes by
+    /// self-time, top-k ops, top-k nodes by bytes, phase spans, and the
+    /// newest step's memory watermarks. This is what `/statusz` serves.
+    pub fn report_text(&self, k: usize) -> String {
+        let us = |d: Duration| d.as_micros() as u64;
+        let mut out = String::new();
+        let lat = self.step_latency();
+        out.push_str(&format!(
+            "== profile: window {} of {} observed steps ==\n",
+            self.window_len(),
+            self.steps_observed()
+        ));
+        out.push_str(&format!(
+            "step latency: count={} mean={}us p50={}us p95={}us p99={}us max={}us\n",
+            lat.count,
+            us(lat.mean),
+            us(lat.p50),
+            us(lat.p95),
+            us(lat.p99),
+            us(lat.max)
+        ));
+        let section = |out: &mut String, title: &str, rows: &[Rollup]| {
+            if rows.is_empty() {
+                return;
+            }
+            out.push_str(title);
+            out.push('\n');
+            for r in rows {
+                out.push_str(&format!(
+                    "  {} ({}) count={} total={}us mean={}us p50={}us p95={}us share={:.1}% peak={}B\n",
+                    r.name,
+                    r.op,
+                    r.count,
+                    r.total_us,
+                    r.mean_us(),
+                    r.p50_us,
+                    r.p95_us,
+                    r.share * 100.0,
+                    r.peak_bytes
+                ));
+            }
+        };
+        section(&mut out, "top nodes by self time:", &self.top_nodes(k));
+        section(&mut out, "top ops by self time:", &{
+            let mut v = self.op_rollups();
+            v.truncate(k);
+            v
+        });
+        section(&mut out, "top nodes by peak bytes:", &self.top_bytes(k));
+        section(&mut out, "phases:", &self.span_rollups());
+        let mem = self.latest_memory();
+        if !mem.is_empty() {
+            out.push_str("memory (per executor, peak step bytes):\n");
+            for m in &mem {
+                out.push_str(&format!(
+                    "  {}: planned={}B dynamic={}B scratch={}B total={}B\n",
+                    m.device,
+                    m.high_water.planned_bytes,
+                    m.high_water.dynamic_bytes,
+                    m.high_water.scratch_bytes,
+                    m.high_water.total_bytes()
+                ));
+            }
+        }
+        out
+    }
+
+    /// The same report as a [`Json`] object (for `/statusz?format=json`
+    /// and tests).
+    pub fn report_json(&self, k: usize) -> Json {
+        let us = |d: Duration| d.as_micros() as u64;
+        let lat = self.step_latency();
+        let rows = |rows: Vec<Rollup>| {
+            let mut arr = Json::arr();
+            for r in rows {
+                arr.push(
+                    Json::obj()
+                        .set("name", r.name.clone())
+                        .set("op", r.op.clone())
+                        .set("count", r.count)
+                        .set("total_us", r.total_us)
+                        .set("mean_us", r.mean_us())
+                        .set("p50_us", r.p50_us)
+                        .set("p95_us", r.p95_us)
+                        .set("share", r.share)
+                        .set("peak_bytes", r.peak_bytes),
+                );
+            }
+            arr
+        };
+        let mut mem = Json::arr();
+        for m in self.latest_memory() {
+            mem.push(
+                Json::obj()
+                    .set("device", m.device.clone())
+                    .set("hw_planned_bytes", m.high_water.planned_bytes)
+                    .set("hw_dynamic_bytes", m.high_water.dynamic_bytes)
+                    .set("hw_scratch_bytes", m.high_water.scratch_bytes),
+            );
+        }
+        Json::obj()
+            .set("window", self.window_len() as u64)
+            .set("steps_observed", self.steps_observed())
+            .set(
+                "step_latency",
+                Json::obj()
+                    .set("count", lat.count)
+                    .set("mean_us", us(lat.mean))
+                    .set("p50_us", us(lat.p50))
+                    .set("p95_us", us(lat.p95))
+                    .set("p99_us", us(lat.p99))
+                    .set("max_us", us(lat.max)),
+            )
+            .set("nodes", rows(self.top_nodes(k)))
+            .set("ops", rows({
+                let mut v = self.op_rollups();
+                v.truncate(k);
+                v
+            }))
+            .set("by_bytes", rows(self.top_bytes(k)))
+            .set("phases", rows(self.span_rollups()))
+            .set("memory", mem)
+    }
+}
+
+/// Nearest-rank percentile over pre-sorted samples.
+fn nearest_rank(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// One replica's barrier-arrival-lag distribution, from the parameter
+/// server's `ps/replica<i>/barrier_wait_us` histogram.
+#[derive(Debug, Clone)]
+pub struct ReplicaWait {
+    pub replica: usize,
+    /// The registry name the histogram was found under.
+    pub name: String,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+}
+
+/// Straggler verdict for one sync-training group: every replica's lag
+/// distribution plus the index of the slowest (largest p95 lag).
+#[derive(Debug, Clone)]
+pub struct StragglerReport {
+    /// Sorted by replica index.
+    pub replicas: Vec<ReplicaWait>,
+    /// Replica index with the largest p95 arrival lag.
+    pub slowest: usize,
+}
+
+impl StragglerReport {
+    pub fn slowest_wait(&self) -> Option<&ReplicaWait> {
+        self.replicas.iter().find(|r| r.replica == self.slowest)
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::from("sync replicas by barrier arrival lag:\n");
+        for r in &self.replicas {
+            let tag = if r.replica == self.slowest { "  <-- straggler" } else { "" };
+            out.push_str(&format!(
+                "  replica {}: count={} p50={}us p95={}us{}\n",
+                r.replica, r.count, r.p50_us, r.p95_us, tag
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut arr = Json::arr();
+        for r in &self.replicas {
+            arr.push(
+                Json::obj()
+                    .set("replica", r.replica as u64)
+                    .set("count", r.count)
+                    .set("p50_us", r.p50_us)
+                    .set("p95_us", r.p95_us),
+            );
+        }
+        Json::obj().set("slowest", self.slowest as u64).set("replicas", arr)
+    }
+}
+
+/// Scan a registry for `ps/replica<i>/barrier_wait_us` histograms and
+/// name the straggler — the replica whose p95 barrier arrival lag is
+/// largest (ties broken toward the lower index). `None` when no replica
+/// has recorded a lag yet.
+pub fn straggler_report(registry: &MetricsRegistry) -> Option<StragglerReport> {
+    let mut replicas: Vec<ReplicaWait> = registry
+        .histograms()
+        .into_iter()
+        .filter_map(|(name, h)| {
+            let idx: usize = name
+                .strip_prefix("ps/replica")?
+                .strip_suffix("/barrier_wait_us")?
+                .parse()
+                .ok()?;
+            if h.count() == 0 {
+                return None;
+            }
+            Some(ReplicaWait {
+                replica: idx,
+                name,
+                count: h.count(),
+                p50_us: h.quantile(0.50).as_micros() as u64,
+                p95_us: h.quantile(0.95).as_micros() as u64,
+            })
+        })
+        .collect();
+    if replicas.is_empty() {
+        return None;
+    }
+    replicas.sort_by_key(|r| r.replica);
+    let slowest = replicas
+        .iter()
+        .max_by(|a, b| a.p95_us.cmp(&b.p95_us).then(b.replica.cmp(&a.replica)))
+        .map(|r| r.replica)?;
+    Some(StragglerReport { replicas, slowest })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tracing_tools::NodeStats;
+
+    fn step(id: u64, rows: &[(&str, &str, u64, u64, u64)]) -> Arc<StepStats> {
+        let nodes = rows
+            .iter()
+            .map(|(name, op, total, count, bytes)| NodeStats {
+                name: name.to_string(),
+                op: op.to_string(),
+                device: "cpu:0".into(),
+                total_us: *total,
+                count: *count,
+                peak_bytes: *bytes,
+            })
+            .collect();
+        Arc::new(StepStats { step_id: id, nodes, memory: Vec::new() })
+    }
+
+    #[test]
+    fn rollups_fold_window_deterministically() {
+        let p = Profiler::new(8);
+        p.observe(step(1, &[("mm", "MatMul", 300, 1, 4096), ("add", "Add", 100, 2, 64)]));
+        p.observe(step(2, &[("mm", "MatMul", 500, 1, 8192), ("add", "Add", 100, 2, 64)]));
+        assert_eq!(p.steps_observed(), 2);
+        assert_eq!(p.window_len(), 2);
+
+        let nodes = p.node_rollups();
+        assert_eq!(nodes[0].name, "mm");
+        assert_eq!(nodes[0].total_us, 800);
+        assert_eq!(nodes[0].count, 2);
+        assert_eq!(nodes[0].peak_bytes, 8192);
+        // Per-step means 300 and 500 → p50 = 300, p95 = 500 (nearest rank).
+        assert_eq!(nodes[0].p50_us, 300);
+        assert_eq!(nodes[0].p95_us, 500);
+        assert!((nodes[0].share - 0.8).abs() < 1e-9, "{}", nodes[0].share);
+        assert_eq!(nodes[1].name, "add");
+        assert_eq!(nodes[1].total_us, 200);
+
+        // Identical reports on repeated calls (pure function of the ring).
+        assert_eq!(p.node_rollups(), nodes);
+        let ops = p.op_rollups();
+        assert_eq!(ops[0].name, "MatMul");
+        assert_eq!(ops[1].count, 4);
+
+        let by_bytes = p.top_bytes(1);
+        assert_eq!(by_bytes[0].name, "mm");
+
+        let text = p.report_text(5);
+        assert!(text.contains("mm (MatMul)"), "{text}");
+        assert!(text.contains("share=80.0%"), "{text}");
+        let j = p.report_json(5);
+        assert_eq!(j.get("steps_observed").and_then(Json::as_i64), Some(2));
+        assert_eq!(
+            j.get("nodes").and_then(Json::as_array).unwrap()[0].get("name").and_then(Json::as_str),
+            Some("mm")
+        );
+    }
+
+    #[test]
+    fn ring_evicts_beyond_window() {
+        let p = Profiler::new(2);
+        for i in 0..5 {
+            p.observe(step(i, &[("n", "Op", 10 * (i + 1), 1, 0)]));
+        }
+        assert_eq!(p.steps_observed(), 5);
+        assert_eq!(p.window_len(), 2);
+        // Only steps 3 and 4 remain: totals 40 + 50.
+        assert_eq!(p.node_rollups()[0].total_us, 90);
+        // Step latency is lifetime, not windowed.
+        assert_eq!(p.step_latency().count, 5);
+    }
+
+    #[test]
+    fn span_rollups_accumulate() {
+        let p = Profiler::new(4);
+        p.observe_span("replica/pull", "phase", Duration::from_micros(100));
+        p.observe_span("replica/pull", "phase", Duration::from_micros(300));
+        p.observe_span("replica/push", "phase", Duration::from_micros(50));
+        let spans = p.span_rollups();
+        assert_eq!(spans[0].name, "replica/pull");
+        assert_eq!(spans[0].count, 2);
+        assert_eq!(spans[0].total_us, 400);
+        assert_eq!(spans[1].name, "replica/push");
+        assert!(p.report_text(5).contains("replica/pull"), "{}", p.report_text(5));
+    }
+
+    #[test]
+    fn straggler_named_from_histograms_alone() {
+        let r = MetricsRegistry::new();
+        for i in 0..3usize {
+            let h = r.histogram(&format!("ps/replica{i}/barrier_wait_us"));
+            // Replica 1 lags ~20ms behind; the others arrive promptly.
+            let lag = if i == 1 { 20_000 } else { 50 };
+            for _ in 0..10 {
+                h.record(Duration::from_micros(lag));
+            }
+        }
+        // Unrelated histograms don't confuse the scan.
+        r.histogram("wire/PUSH/lat_us").record(Duration::from_micros(1_000_000));
+        let rep = straggler_report(&r).unwrap();
+        assert_eq!(rep.replicas.len(), 3);
+        assert_eq!(rep.slowest, 1);
+        let slow = rep.slowest_wait().unwrap();
+        let fast = &rep.replicas[0];
+        assert!(
+            slow.p95_us > 10 * fast.p95_us.max(1),
+            "straggler p95 {} must dwarf fast p95 {}",
+            slow.p95_us,
+            fast.p95_us
+        );
+        assert!(rep.render_text().contains("replica 1"), "{}", rep.render_text());
+        assert!(rep.render_text().contains("<-- straggler"), "{}", rep.render_text());
+    }
+
+    #[test]
+    fn empty_profiler_reports_cleanly() {
+        let p = Profiler::new(4);
+        assert_eq!(p.node_rollups(), Vec::new());
+        assert!(p.report_text(5).contains("window 0 of 0"));
+        assert!(straggler_report(&MetricsRegistry::new()).is_none());
+    }
+}

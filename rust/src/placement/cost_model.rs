@@ -259,6 +259,7 @@ mod tests {
             start_us: 0,
             dur_us: 12345,
             step: 0,
+            out_bytes: 0,
         }]);
         assert!(cm.has_measurements());
         assert_eq!(cm.node_cost_us(b.graph.node(mm.node), "/d"), 12345.0);
@@ -279,6 +280,7 @@ mod tests {
             start_us: 0,
             dur_us: dur,
             step: 1,
+            out_bytes: 0,
         };
         // Two executions of the node in one step: the model takes the mean.
         let ss = StepStats::from_events(1, &[ev(100), ev(300)], Vec::new());

@@ -513,6 +513,34 @@ impl ModelManager {
         self.submit(model, version, feeds, fetches)?.wait()
     }
 
+    /// True once [`ModelManager::shutdown`] has begun — the `/healthz`
+    /// liveness signal for the debug surface.
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutting_down.load(Ordering::SeqCst)
+    }
+
+    /// Every live version's Session as `(model, version, session)`,
+    /// ordered by model name — the debug surface reads their profilers
+    /// for `/statusz` and their traces for `/tracez`.
+    pub fn live_sessions(&self) -> Vec<(String, u64, Arc<Session>)> {
+        let models: Vec<Arc<Model>> = {
+            let map = self.models.read().unwrap();
+            let mut ms: Vec<Arc<Model>> = map.values().cloned().collect();
+            ms.sort_by(|a, b| a.name.cmp(&b.name));
+            ms
+        };
+        let mut out = Vec::new();
+        for model in models {
+            let st = model.state.read().unwrap();
+            if let Some(v) = st.live {
+                if let Some(entry) = st.versions.get(&v) {
+                    out.push((model.name.clone(), v, Arc::clone(entry.server.session())));
+                }
+            }
+        }
+        out
+    }
+
     /// The version "latest" currently routes to, if any.
     pub fn live_version(&self, model: &str) -> Option<u64> {
         let model_arc = self.models.read().unwrap().get(model).cloned()?;

@@ -25,6 +25,7 @@
 
 use super::manager::ModelManager;
 use crate::error::{Result, Status};
+use crate::obs::httpz::{DebugServer, Response, Routes};
 use crate::tensor::Tensor;
 use crate::wire::{self, WireMetrics};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -171,6 +172,14 @@ impl NetServer {
         self.addr
     }
 
+    /// Mount the standard debug/status surface for a serving hub on its
+    /// own listener (`debug_addr`, e.g. `"127.0.0.1:0"`): `/healthz`,
+    /// `/varz`, `/statusz`, `/tracez` — see [`debug_routes`]. Serve it
+    /// beside the frame protocol; shut it down independently.
+    pub fn serve_debug(manager: &Arc<ModelManager>, debug_addr: &str) -> Result<DebugServer> {
+        DebugServer::serve(debug_routes(manager), debug_addr)
+    }
+
     /// Stop accepting connections and join the accept loop. Idempotent.
     pub fn shutdown(&self) {
         if self.shutting_down.swap(true, Ordering::SeqCst) {
@@ -204,6 +213,53 @@ impl Drop for NetServer {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// The serving hub's debug-route table:
+///
+/// | path | body |
+/// |------|------|
+/// | `/healthz` | `ok` (200), or `shutting down` (503) once the manager drains |
+/// | `/varz` | the manager registry in Prometheus exposition format |
+/// | `/statusz` | per-live-version profiler report (top-k nodes/ops/bytes, step latency, memory watermarks) |
+/// | `/tracez` | the newest live version's last traced step as chrome://tracing JSON |
+pub fn debug_routes(manager: &Arc<ModelManager>) -> Routes {
+    let m_health = Arc::clone(manager);
+    let m_varz = Arc::clone(manager);
+    let m_statusz = Arc::clone(manager);
+    let m_tracez = Arc::clone(manager);
+    Routes::new()
+        .add("/healthz", move || {
+            if m_health.is_shutting_down() {
+                Response::text(503, "shutting down\n")
+            } else {
+                Response::text(200, "ok\n")
+            }
+        })
+        .add("/varz", move || Response::text(200, m_varz.metrics().export_text()))
+        .add("/statusz", move || {
+            let mut body = String::new();
+            for (model, version, session) in m_statusz.live_sessions() {
+                body.push_str(&format!("== model {model:?} v{version} ==\n"));
+                match session.profiler() {
+                    Some(p) => body.push_str(&p.report_text(10)),
+                    None => body.push_str("(profiling disabled: profile_window = 0)\n"),
+                }
+                body.push('\n');
+            }
+            if body.is_empty() {
+                body.push_str("no live model versions\n");
+            }
+            Response::text(200, body)
+        })
+        .add("/tracez", move || {
+            for (_, _, session) in m_tracez.live_sessions() {
+                if let Some(t) = session.last_trace() {
+                    return Response::json(200, t.to_chrome_trace());
+                }
+            }
+            Response::text(404, "no traced step yet\n")
+        })
 }
 
 /// One connection's request loop: read a frame, serve it, reply, repeat

@@ -16,6 +16,7 @@ use crate::error::{Result, Status};
 use crate::executor::{CompiledGraph, Executor, RunContext};
 use crate::graph::{AttrValue, Endpoint, Graph, Node, NodeId, TensorName};
 use crate::kernels::StepState;
+use crate::obs::profiler::Profiler;
 use crate::partition::{partition, PartitionOptions, PartitionStats};
 use crate::passes;
 use crate::placement::{place, CostModel, PlacementStats};
@@ -58,6 +59,12 @@ pub struct SessionOptions {
     pub cost_model: CostModel,
     /// Collect §9.2 traces for every step.
     pub trace: bool,
+    /// Continuous profiling: fold the last N steps' `StepStats` into the
+    /// session's [`crate::obs::profiler::Profiler`] (rollups, step-latency
+    /// percentiles, top-k reports for `/statusz`). 0 disables the
+    /// profiler; any nonzero window implies per-step trace collection
+    /// even when `trace` is off (the profiler is fed from spans).
+    pub profile_window: usize,
 }
 
 impl Default for SessionOptions {
@@ -75,6 +82,7 @@ impl Default for SessionOptions {
             partition: PartitionOptions::default(),
             cost_model: CostModel::new(),
             trace: false,
+            profile_window: 32,
         }
     }
 }
@@ -136,6 +144,9 @@ pub struct Session {
     last_trace: Mutex<Option<Arc<TraceCollector>>>,
     /// Per-node timings + arena deltas of the most recent traced step.
     last_step_stats: Mutex<Option<Arc<StepStats>>>,
+    /// Continuous profiler fed every traced step (see
+    /// `SessionOptions::profile_window`).
+    profiler: Option<Arc<Profiler>>,
 }
 
 impl Session {
@@ -149,6 +160,10 @@ impl Session {
     }
 
     pub fn with_devices(graph: Graph, devices: DeviceSet, options: SessionOptions) -> Session {
+        let profiler = match options.profile_window {
+            0 => None,
+            n => Some(Profiler::new(n)),
+        };
         Session {
             graph: Mutex::new(graph),
             devices,
@@ -158,6 +173,7 @@ impl Session {
             cache: Mutex::new(HashMap::new()),
             last_trace: Mutex::new(None),
             last_step_stats: Mutex::new(None),
+            profiler,
         }
     }
 
@@ -235,7 +251,9 @@ impl Session {
         for ((_, tensor), key) in feeds.iter().zip(&cached.feed_keys) {
             rendezvous.send(key, tensor.clone())?;
         }
-        let trace = if self.options.trace {
+        // The profiler is fed from the same spans as explicit tracing, so
+        // a live profile window implies per-step collection too.
+        let trace = if self.options.trace || self.profiler.is_some() {
             Some(TraceCollector::for_step("local", step_id))
         } else {
             None
@@ -301,10 +319,18 @@ impl Session {
                         .map(|p| p.counters().snapshot())
                         .unwrap_or_default()
                         .delta_since(before),
+                    high_water: cg
+                        .arena_pool
+                        .as_ref()
+                        .map(|p| p.counters().high_water())
+                        .unwrap_or_default(),
                 })
                 .collect();
-            let stats = StepStats::from_events(step_id, &t.events(), memory);
-            *self.last_step_stats.lock().unwrap() = Some(Arc::new(stats));
+            let stats = Arc::new(StepStats::from_events(step_id, &t.events(), memory));
+            if let Some(p) = &self.profiler {
+                p.observe(Arc::clone(&stats));
+            }
+            *self.last_step_stats.lock().unwrap() = Some(stats);
             *self.last_trace.lock().unwrap() = Some(t);
         }
         if let Some(e) = errors.into_iter().next() {
@@ -377,9 +403,52 @@ impl Session {
                             .as_ref()
                             .map(|p| p.counters().snapshot())
                             .unwrap_or_default(),
+                        high_water: cg
+                            .arena_pool
+                            .as_ref()
+                            .map(|p| p.counters().high_water())
+                            .unwrap_or_default(),
                     })
                     .collect()
             })
+    }
+
+    /// The session's continuous profiler (`None` when
+    /// `SessionOptions::profile_window` is 0). `/statusz` renders its
+    /// report; `memory_profile` complements it with arena watermarks.
+    pub fn profiler(&self) -> Option<&Arc<Profiler>> {
+        self.profiler.as_ref()
+    }
+
+    /// Memory attribution across *every* cached step signature: one
+    /// `MemoryReport` per partition executor per cached step, each
+    /// carrying the plan stats, lifetime arena counters, and the
+    /// per-step byte high-watermark.
+    pub fn memory_profile(&self) -> Vec<crate::memory::MemoryReport> {
+        self.cache
+            .lock()
+            .unwrap()
+            .values()
+            .flat_map(|c| {
+                c.executors
+                    .iter()
+                    .map(|cg| crate::memory::MemoryReport {
+                        device: cg.device.name(),
+                        plan: cg.plan.as_ref().map(|p| p.stats.clone()).unwrap_or_default(),
+                        runtime: cg
+                            .arena_pool
+                            .as_ref()
+                            .map(|p| p.counters().snapshot())
+                            .unwrap_or_default(),
+                        high_water: cg
+                            .arena_pool
+                            .as_ref()
+                            .map(|p| p.counters().high_water())
+                            .unwrap_or_default(),
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .collect()
     }
 
     /// Stats of the cached step for a signature (experiments use this).
@@ -893,5 +962,32 @@ mod tests {
         // A second traced run replaces the profile with the new step id.
         sess.run(&[], &[&name], &[]).unwrap();
         assert!(sess.last_step_stats().unwrap().step_id > ss.step_id);
+    }
+
+    #[test]
+    fn profiler_window_feeds_without_explicit_trace() {
+        let mut b = GraphBuilder::new();
+        let x = b.scalar(2.0);
+        let y = b.neg(x);
+        let name = b.graph.node(y.node).name.clone();
+        // trace: false, but a nonzero profile_window still collects
+        // per-step stats — the continuous-profiling contract.
+        let sess = Session::new(
+            b.into_graph(),
+            SessionOptions { trace: false, profile_window: 4, ..Default::default() },
+        );
+        for _ in 0..6 {
+            sess.run(&[], &[&name], &[]).unwrap();
+        }
+        let p = sess.profiler().expect("profiler on when profile_window > 0");
+        assert_eq!(p.steps_observed(), 6);
+        assert_eq!(p.window_len(), 4, "ring bounded by the window");
+        let rollups = p.node_rollups();
+        assert!(
+            rollups.iter().any(|r| r.name == name),
+            "fetched node rolled up: {rollups:?}"
+        );
+        assert!(!sess.memory_profile().is_empty(), "memory attribution per executor");
+        assert!(p.report_text(5).contains(&name), "{}", p.report_text(5));
     }
 }

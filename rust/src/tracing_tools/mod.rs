@@ -81,6 +81,9 @@ pub struct Event {
     pub dur_us: u64,
     /// The distributed step this span belongs to (0 when untracked).
     pub step: u64,
+    /// Total bytes of the span's output tensors (0 when unknown — phase
+    /// and control spans, or spans ended without byte attribution).
+    pub out_bytes: u64,
 }
 
 /// Collects events for one (or more) steps, on behalf of one process
@@ -155,6 +158,7 @@ impl TraceCollector {
             evs.push(ev);
         } else {
             self.dropped.fetch_add(1, Ordering::Relaxed);
+            dropped_events_counter().inc();
         }
     }
 
@@ -167,6 +171,7 @@ impl TraceCollector {
                 evs.push(ev);
             } else {
                 self.dropped.fetch_add(1, Ordering::Relaxed);
+                dropped_events_counter().inc();
             }
         }
     }
@@ -208,8 +213,14 @@ impl TraceCollector {
     }
 
     /// Render chrome://tracing JSON ("trace event format", array form).
+    /// A capped collector leads with a metadata record announcing how
+    /// many events were dropped, so the gap is visible in the viewer.
     pub fn to_chrome_trace(&self) -> String {
         let mut arr = Json::arr();
+        let dropped = self.dropped();
+        if dropped > 0 {
+            arr.push(dropped_metadata(&self.process, dropped));
+        }
         for ev in self.events.lock().unwrap().iter() {
             arr.push(chrome_event(ev, &ev.device));
         }
@@ -241,6 +252,24 @@ impl TraceCollector {
     }
 }
 
+/// Process-wide count of events rejected at any collector's cap, in the
+/// global metrics registry — truncation shows up in `/varz`, not just as
+/// a mystery gap in the timeline.
+fn dropped_events_counter() -> &'static Arc<crate::obs::Counter> {
+    static COUNTER: OnceLock<Arc<crate::obs::Counter>> = OnceLock::new();
+    COUNTER.get_or_init(|| crate::obs::global().counter("trace/dropped_events"))
+}
+
+/// chrome://tracing metadata record announcing `dropped` cap-rejected
+/// events: the timeline is explicitly incomplete.
+fn dropped_metadata(pid: &str, dropped: u64) -> Json {
+    Json::obj()
+        .set("name", "trace_dropped_events")
+        .set("ph", "M")
+        .set("pid", pid)
+        .set("args", Json::obj().set("dropped", dropped))
+}
+
 fn chrome_event(ev: &Event, pid: &str) -> Json {
     Json::obj()
         .set("name", ev.name.clone())
@@ -267,6 +296,13 @@ pub struct Span {
 
 impl Span {
     pub fn end(self) {
+        self.end_with_bytes(0);
+    }
+
+    /// End the span attributing `out_bytes` of output-tensor bytes to it
+    /// (the executor's per-node memory attribution; feeds
+    /// [`NodeStats::peak_bytes`]).
+    pub fn end_with_bytes(self, out_bytes: u64) {
         let dur_us = self.start.elapsed().as_micros() as u64;
         let thread = thread_id();
         self.collector.record(Event {
@@ -277,6 +313,7 @@ impl Span {
             start_us: self.start_us,
             dur_us,
             step: self.step,
+            out_bytes,
         });
     }
 }
@@ -333,9 +370,13 @@ pub fn merge_fragments(parts: Vec<(TraceFragment, i64)>) -> MergedTrace {
 }
 
 impl MergedTrace {
-    /// chrome://tracing JSON with one `pid` lane per process.
+    /// chrome://tracing JSON with one `pid` lane per process; leads with
+    /// a metadata record when any source fragment dropped events.
     pub fn to_chrome_trace(&self) -> String {
         let mut arr = Json::arr();
+        if self.dropped > 0 {
+            arr.push(dropped_metadata("merged", self.dropped));
+        }
         for (process, ev) in &self.events {
             arr.push(chrome_event(ev, process));
         }
@@ -363,6 +404,9 @@ pub struct NodeStats {
     pub device: String,
     pub total_us: u64,
     pub count: u64,
+    /// Peak output-tensor bytes across the node's executions this step
+    /// (0 for spans without byte attribution).
+    pub peak_bytes: u64,
 }
 
 impl NodeStats {
@@ -406,9 +450,11 @@ impl StepStats {
                 device: ev.device.clone(),
                 total_us: 0,
                 count: 0,
+                peak_bytes: 0,
             });
             e.total_us += ev.dur_us;
             e.count += 1;
+            e.peak_bytes = e.peak_bytes.max(ev.out_bytes);
         }
         let mut nodes: Vec<NodeStats> = per_node.into_values().collect();
         nodes.sort_by(|a, b| b.total_us.cmp(&a.total_us).then_with(|| a.name.cmp(&b.name)));
@@ -433,7 +479,8 @@ impl StepStats {
                     .set("op", n.op.clone())
                     .set("device", n.device.clone())
                     .set("total_us", n.total_us)
-                    .set("count", n.count),
+                    .set("count", n.count)
+                    .set("peak_bytes", n.peak_bytes),
             );
         }
         let mut memory = Json::arr();
@@ -457,7 +504,10 @@ impl StepStats {
                     .set("forwards_taken", m.runtime.forwards_taken)
                     .set("bytes_forwarded", m.runtime.bytes_forwarded)
                     .set("scratch_checkouts", m.runtime.scratch_checkouts)
-                    .set("scratch_bytes_fresh", m.runtime.scratch_bytes_fresh),
+                    .set("scratch_bytes_fresh", m.runtime.scratch_bytes_fresh)
+                    .set("hw_planned_bytes", m.high_water.planned_bytes)
+                    .set("hw_dynamic_bytes", m.high_water.dynamic_bytes)
+                    .set("hw_scratch_bytes", m.high_water.scratch_bytes),
             );
         }
         Json::obj()
@@ -481,6 +531,7 @@ impl StepStats {
                 device: n.get("device").and_then(Json::as_str).unwrap_or("").to_string(),
                 total_us: u(n.get("total_us")),
                 count: u(n.get("count")),
+                peak_bytes: u(n.get("peak_bytes")),
             });
         }
         for m in j.get("memory").and_then(Json::as_array).unwrap_or(&[]) {
@@ -505,6 +556,9 @@ impl StepStats {
             rep.runtime.bytes_forwarded = u(m.get("bytes_forwarded"));
             rep.runtime.scratch_checkouts = u(m.get("scratch_checkouts"));
             rep.runtime.scratch_bytes_fresh = u(m.get("scratch_bytes_fresh"));
+            rep.high_water.planned_bytes = u(m.get("hw_planned_bytes"));
+            rep.high_water.dynamic_bytes = u(m.get("hw_dynamic_bytes"));
+            rep.high_water.scratch_bytes = u(m.get("hw_scratch_bytes"));
             out.memory.push(rep);
         }
         Ok(out)
@@ -572,6 +626,13 @@ mod tests {
         }
         assert_eq!(c.len(), 2);
         assert_eq!(c.dropped(), 3);
+        // Truncation is surfaced: the global registry counter moved and
+        // the chrome trace leads with a metadata record.
+        assert!(crate::obs::global().counter_value("trace/dropped_events").unwrap_or(0) >= 3);
+        let j = c.to_chrome_trace();
+        assert!(j.contains("\"trace_dropped_events\""), "{j}");
+        assert!(j.contains("\"ph\":\"M\""), "{j}");
+        assert!(j.contains("\"dropped\":3"), "{j}");
         // drain resets the buffer but keeps the dropped count (it is a
         // lifetime total, not a per-fragment one).
         let frag = c.take_fragment();
@@ -616,6 +677,7 @@ mod tests {
             start_us: start,
             dur_us: 10,
             step,
+            out_bytes: 0,
         };
         let local = TraceFragment {
             process: "replica:0".into(),
@@ -640,9 +702,13 @@ mod tests {
         let j = merged.to_chrome_trace();
         let parsed = Json::parse(&j).unwrap();
         let arr = parsed.as_array().unwrap();
-        assert_eq!(arr.len(), 2);
-        assert_eq!(arr[1].get("pid").and_then(Json::as_str), Some("ps"));
-        assert_eq!(arr[1].get("args").unwrap().get("step").and_then(Json::as_i64), Some(3));
+        // Dropped events from the ps fragment surface as a leading
+        // metadata record, then the two duration events.
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("ph").and_then(Json::as_str), Some("M"));
+        assert_eq!(arr[0].get("args").unwrap().get("dropped").and_then(Json::as_i64), Some(2));
+        assert_eq!(arr[2].get("pid").and_then(Json::as_str), Some("ps"));
+        assert_eq!(arr[2].get("args").unwrap().get("step").and_then(Json::as_i64), Some(3));
         assert_eq!(merged.events_of("ps").len(), 1);
     }
 
@@ -656,6 +722,7 @@ mod tests {
             start_us: 0,
             dur_us: dur,
             step: 4,
+            out_bytes: dur * 100,
         };
         let ss = StepStats::from_events(4, &[ev("a", 10), ev("b", 50), ev("a", 30)], Vec::new());
         assert_eq!(ss.step_id, 4);
@@ -664,6 +731,8 @@ mod tests {
         assert_eq!(ss.node("a").unwrap().total_us, 40);
         assert_eq!(ss.node("a").unwrap().count, 2);
         assert_eq!(ss.node("a").unwrap().mean_us(), 20);
+        assert_eq!(ss.node("a").unwrap().peak_bytes, 3000); // max, not sum
+        assert_eq!(ss.node("b").unwrap().peak_bytes, 5000);
         assert_eq!(ss.total_us(), 90);
         let back = StepStats::from_json(&ss.to_json()).unwrap();
         assert_eq!(back.step_id, 4);

@@ -80,6 +80,9 @@ impl Default for LatencyHistogram {
 }
 
 impl LatencyHistogram {
+    /// Number of log2 buckets, for exposition-format exporters.
+    pub const NUM_BUCKETS: usize = LATENCY_BUCKETS;
+
     pub fn new() -> LatencyHistogram {
         LatencyHistogram::default()
     }
@@ -103,6 +106,32 @@ impl LatencyHistogram {
 
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
+    }
+
+    /// Total of every recorded value, in microseconds. Together with
+    /// [`LatencyHistogram::bucket_counts`] this is everything a
+    /// Prometheus-style exposition of the histogram needs.
+    pub fn sum_micros(&self) -> u64 {
+        self.sum_micros.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the raw per-bucket counts
+    /// (length [`LatencyHistogram::NUM_BUCKETS`]). Approximate under
+    /// concurrent recorders, never torn per bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Inclusive upper bound of bucket `i` in microseconds: bucket 0
+    /// holds only 0µs values, bucket `i ≥ 1` covers `[2^(i-1), 2^i)` µs
+    /// so its inclusive bound is `2^i - 1`. Returns `None` for the final
+    /// catch-all bucket (and any out-of-range index) — i.e. `+Inf`.
+    pub fn bucket_upper_micros(i: usize) -> Option<u64> {
+        match i {
+            0 => Some(0),
+            _ if i < LATENCY_BUCKETS - 1 => Some((1u64 << i) - 1),
+            _ => None,
+        }
     }
 
     /// Estimated quantile `q ∈ [0, 1]`; `Duration::ZERO` when empty.
@@ -276,6 +305,30 @@ mod tests {
         assert_eq!(LatencyHistogram::bucket_of(3), 2);
         assert_eq!(LatencyHistogram::bucket_of(4), 3);
         assert_eq!(LatencyHistogram::bucket_of(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_accessors_expose_raw_shape() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(3));
+        let counts = h.bucket_counts();
+        assert_eq!(counts.len(), LatencyHistogram::NUM_BUCKETS);
+        assert_eq!(counts[0], 1);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[2], 1);
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_micros(), 4);
+        assert_eq!(LatencyHistogram::bucket_upper_micros(0), Some(0));
+        assert_eq!(LatencyHistogram::bucket_upper_micros(1), Some(1));
+        assert_eq!(LatencyHistogram::bucket_upper_micros(2), Some(3));
+        assert_eq!(LatencyHistogram::bucket_upper_micros(3), Some(7));
+        assert_eq!(
+            LatencyHistogram::bucket_upper_micros(LatencyHistogram::NUM_BUCKETS - 1),
+            None
+        );
+        assert_eq!(LatencyHistogram::bucket_upper_micros(LatencyHistogram::NUM_BUCKETS), None);
     }
 
     #[test]

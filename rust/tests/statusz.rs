@@ -1,0 +1,222 @@
+//! Integration tests for the observability surface: the httpz debug
+//! endpoints mounted on the serving front end and the parameter server,
+//! the continuous profiler feeding `/statusz`, Prometheus exposition on
+//! `/varz`, and straggler identification from barrier-arrival-lag
+//! histograms alone.
+
+use rustflow::distributed::ps::{ParamServer, PsOptions};
+use rustflow::distributed::train::{DistTrainer, DistTrainerOptions};
+use rustflow::obs::httpz;
+use rustflow::obs::profiler::straggler_report;
+use rustflow::optim::Optimizer;
+use rustflow::serving::{ManagerOptions, ModelManager, ModelSpec, NetServer, WarmupRequest};
+use rustflow::{models, DType, GraphBuilder, Session, SessionOptions, Tensor};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("rustflow-statusz-{tag}-{}", std::process::id()));
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Export one MLP version to disk (GraphDef + checkpoint) and return the
+/// spec plus its logits fetch name.
+fn export_mlp(dir: &Path, tag: &str, seed: u64) -> (ModelSpec, String) {
+    let mut b = GraphBuilder::new();
+    let x = b.placeholder("x", DType::F32).unwrap();
+    let (logits, vars) = models::mlp(&mut b, x, &[8, 16, 4], seed).unwrap();
+    let fetch = format!("{}:0", b.graph.node(logits.node).name);
+    let inits: Vec<String> = b.init_ops.iter().map(|&i| b.graph.node(i).name.clone()).collect();
+    let var_names: Vec<String> = vars.iter().map(|v| b.graph.node(v.node).name.clone()).collect();
+    let graph = b.graph.clone();
+
+    let sess = Session::new(b.into_graph(), SessionOptions::default());
+    sess.run_targets(&inits.iter().map(String::as_str).collect::<Vec<_>>()).unwrap();
+    let values =
+        sess.run(&[], &var_names.iter().map(String::as_str).collect::<Vec<_>>(), &[]).unwrap();
+    let pairs: Vec<(String, Tensor)> = var_names.into_iter().zip(values).collect();
+    let ckpt = dir.join(format!("{tag}.ckpt"));
+    rustflow::checkpoint::save_bundle(&ckpt, &pairs).unwrap();
+    let gdf = dir.join(format!("{tag}.graphdef"));
+    rustflow::graph::serde::write_graphdef(&gdf, &graph).unwrap();
+
+    let spec = ModelSpec {
+        graph_path: gdf,
+        checkpoint_path: Some(ckpt),
+        init_targets: vec![],
+        warmup: vec![WarmupRequest {
+            feeds: vec![("x".to_string(), Tensor::fill_f32(vec![1, 8], 0.1))],
+            fetches: vec![fetch.clone()],
+        }],
+    };
+    (spec, fetch)
+}
+
+/// The serving front end's debug surface end to end: health, Prometheus
+/// metrics, a profiler report naming real graph nodes with nonzero
+/// self-times and memory watermarks, a chrome trace — and the health
+/// flip once the manager begins shutting down.
+#[test]
+fn serving_debug_surface_round_trips() {
+    let dir = tmpdir("serving");
+    let manager = Arc::new(ModelManager::new(ManagerOptions::default()));
+    let server = NetServer::serve(Arc::clone(&manager), "127.0.0.1:0").unwrap();
+    let dbg = NetServer::serve_debug(&manager, "127.0.0.1:0").unwrap();
+    let dbg_addr = dbg.addr();
+
+    // Healthy before any model exists; statusz says so too.
+    let (code, body) = httpz::get(dbg_addr, "/healthz").unwrap();
+    assert_eq!((code, body.as_str()), (200, "ok\n"));
+    let (code, body) = httpz::get(dbg_addr, "/statusz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("no live model versions"), "{body}");
+
+    // Deploy and serve a few predictions so the session profiler has a
+    // window of steps to roll up.
+    let (spec, fetch) = export_mlp(&dir, "v1", 7);
+    manager.deploy("mlp", 1, &spec).unwrap();
+    for i in 0..4 {
+        let probe = Tensor::fill_f32(vec![2, 8], 0.1 * (i + 1) as f32);
+        manager.run("mlp", None, &[("x", probe)], &[&fetch]).unwrap();
+    }
+
+    let (code, body) = httpz::get(dbg_addr, "/statusz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("== model \"mlp\" v1 =="), "{body}");
+    assert!(!body.contains("of 0 observed"), "profiler must have observed steps: {body}");
+    // Real graph nodes with self-time shares, and the arena watermarks.
+    assert!(body.contains("MatMul"), "top-k must name real nodes: {body}");
+    assert!(body.contains("share="), "{body}");
+    assert!(body.contains("memory (per executor"), "memory attribution missing: {body}");
+
+    let (code, body) = httpz::get(dbg_addr, "/varz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("# TYPE"), "Prometheus exposition expected: {body}");
+
+    let (code, body) = httpz::get(dbg_addr, "/tracez").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.trim_start().starts_with('['), "chrome trace array: {body}");
+    assert!(body.contains("MatMul"), "trace must hold kernel spans: {body}");
+
+    // Unknown path: 404 listing the mounted routes, server stays up.
+    let (code, body) = httpz::get(dbg_addr, "/nope").unwrap();
+    assert_eq!(code, 404);
+    assert!(body.contains("/statusz"), "404 should list routes: {body}");
+
+    // Shutdown flips health while the surface itself keeps serving.
+    manager.shutdown();
+    let (code, _) = httpz::get(dbg_addr, "/healthz").unwrap();
+    assert_eq!(code, 503);
+
+    server.shutdown();
+    dbg.shutdown();
+}
+
+/// Hostile bytes at the debug port get clean HTTP errors, never a hang
+/// or a panic, and the listener keeps serving afterwards.
+#[test]
+fn hostile_requests_answered_with_errors() {
+    let manager = Arc::new(ModelManager::new(ManagerOptions::default()));
+    let dbg = NetServer::serve_debug(&manager, "127.0.0.1:0").unwrap();
+    let addr = dbg.addr();
+
+    let raw = |req: &[u8]| -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req).unwrap();
+        s.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut out = String::new();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    assert!(raw(b"POST /healthz HTTP/1.0\r\n\r\n").starts_with("HTTP/1.0 405"));
+    assert!(raw(b"complete garbage\r\n\r\n").starts_with("HTTP/1.0 400"));
+    assert!(raw(b"\r\n\r\n").starts_with("HTTP/1.0 400"));
+
+    // Still healthy after the abuse.
+    let (code, _) = httpz::get(addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    dbg.shutdown();
+}
+
+/// The acceptance scenario: two synchronous replicas train against one
+/// shard; replica 1 sleeps before every step. The parameter server's
+/// per-replica barrier-arrival-lag histograms — with no trace, no shared
+/// clocks, nothing but metric names — must identify it, and the lag must
+/// show up in Prometheus form on the shard's `/varz`.
+#[test]
+fn straggler_identified_from_barrier_wait_histograms_alone() {
+    const STEPS: usize = 4;
+    const SLEEP: Duration = Duration::from_millis(25);
+
+    let ps = ParamServer::new(PsOptions {
+        opt: Optimizer::sgd(0.1),
+        sync_replicas: Some(2),
+        ..Default::default()
+    });
+    let addr = ps.serve("127.0.0.1:0").unwrap().to_string();
+    let dbg = ps.serve_httpz("127.0.0.1:0").unwrap();
+
+    std::thread::scope(|scope| {
+        for r in 0..2u32 {
+            let addr = addr.clone();
+            scope.spawn(move || {
+                let mut b = GraphBuilder::new();
+                let w = b.variable("w", Tensor::scalar_f32(0.5)).unwrap();
+                let x = b.placeholder("x", DType::F32).unwrap();
+                let d = b.sub(w, x);
+                let loss = b.square(d);
+                let mut t = DistTrainer::new(
+                    b,
+                    loss,
+                    &[w],
+                    r,
+                    &[addr],
+                    DistTrainerOptions { compress: false, ..Default::default() },
+                    SessionOptions::default(),
+                )
+                .unwrap();
+                t.init_params().unwrap();
+                for s in 0..STEPS {
+                    if r == 1 {
+                        std::thread::sleep(SLEEP);
+                    }
+                    let feeds = [("x", Tensor::scalar_f32(0.25 * s as f32))];
+                    t.step(&feeds).unwrap();
+                }
+            });
+        }
+    });
+
+    let report = straggler_report(ps.metrics()).expect("lag histograms after sync training");
+    assert_eq!(report.replicas.len(), 2);
+    assert_eq!(report.slowest, 1, "injected sleep must name replica 1: {report:?}");
+    let slow = report.slowest_wait().unwrap();
+    assert_eq!(slow.count as usize, STEPS);
+    assert!(slow.p95_us >= 20_000, "25ms sleep must dominate the lag: {} us", slow.p95_us);
+    let fast = report.replicas.iter().find(|w| w.replica == 0).unwrap();
+    assert!(
+        fast.p95_us < slow.p95_us / 2,
+        "fast p95 {} us vs slow {} us",
+        fast.p95_us,
+        slow.p95_us
+    );
+    assert!(report.render_text().contains("<-- straggler"));
+
+    // The same histograms ride `/varz` in Prometheus exposition, and
+    // `/statusz` renders the report for humans.
+    let (code, body) = httpz::get(dbg.addr(), "/varz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("ps_replica1_barrier_wait_us_bucket"), "{body}");
+    let (code, body) = httpz::get(dbg.addr(), "/statusz").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("straggler"), "{body}");
+
+    ps.shutdown();
+    dbg.shutdown();
+}

@@ -20,9 +20,10 @@
 # (≥ 4 cores), the dist_train bench asserts bf16 gradient/param
 # compression cuts wire bytes ≥ 40% at unchanged convergence, the
 # trace_overhead bench asserts step tracing costs ≤ 25% on real kernels,
-# and the embeddings bench asserts the native IndexedSlices wire path
-# sustains ≥ 2x dense steps/s at ≤ 10% touched rows, so this script
-# fails on a perf regression.
+# the embeddings bench asserts the native IndexedSlices wire path
+# sustains ≥ 2x dense steps/s at ≤ 10% touched rows, and the
+# profile_overhead bench asserts the always-on continuous profiler costs
+# ≤ 10% on real kernels, so this script fails on a perf regression.
 set -eu
 cd "$(dirname "$0")/.."
 
@@ -33,6 +34,7 @@ export BENCH_SERVING_NET_JSON="$(pwd)/BENCH_serving_net.json"
 export BENCH_DIST_TRAIN_JSON="$(pwd)/BENCH_dist_train.json"
 export BENCH_TRACE_OVERHEAD_JSON="$(pwd)/BENCH_trace_overhead.json"
 export BENCH_EMBEDDINGS_JSON="$(pwd)/BENCH_embeddings.json"
+export BENCH_PROFILE_OVERHEAD_JSON="$(pwd)/BENCH_profile_overhead.json"
 
 echo "== cargo bench --bench optimizer (writes $BENCH_OPTIMIZER_JSON)"
 cargo bench --bench optimizer
@@ -57,5 +59,8 @@ cargo bench --bench trace_overhead
 
 echo "== cargo bench --bench embeddings (writes $BENCH_EMBEDDINGS_JSON)"
 cargo bench --bench embeddings
+
+echo "== cargo bench --bench profile_overhead (writes $BENCH_PROFILE_OVERHEAD_JSON)"
+cargo bench --bench profile_overhead
 
 echo "bench: OK"
